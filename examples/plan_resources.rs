@@ -1,0 +1,67 @@
+//! Resource planning demo (paper §4.3): search device splits / instance
+//! sizes / micro-batches for several cluster sizes and report the chosen
+//! configuration, comparing against naive 50/50 splits.
+//!
+//! ```sh
+//! cargo run --release --example plan_resources
+//! ```
+
+use asyncflow::benchkit::Table;
+use asyncflow::planner::{
+    plan, CostModel, DeviceSpec, LlmSpec, PlanRequest,
+};
+use asyncflow::simulator::{simulate, Mode, SimConfig};
+
+fn main() {
+    for model in [LlmSpec::qwen_7b(), LlmSpec::qwen_32b()] {
+        let cost = CostModel::new(DeviceSpec::ascend_910b(), model.clone());
+        println!("\n== planning for {} ==", model.name);
+        let mut table = Table::new(&[
+            "NPUs",
+            "rollout frac",
+            "inst (r/t)",
+            "micro-batch",
+            "planned samp/s",
+            "naive 50/50 samp/s",
+            "gain",
+        ]);
+        for devices in [64usize, 128, 256, 512] {
+            if devices / 2 < cost.model.min_devices() {
+                continue;
+            }
+            let req = PlanRequest::new(devices);
+            let p = plan(&req, &cost);
+
+            // naive baseline: 50/50 split, 8-device instances, mb=16
+            let mut naive =
+                SimConfig::defaults(devices, Mode::SeparatedAsync);
+            naive.iterations = req.sim_iterations;
+            naive.global_batch = req.global_batch;
+            naive.rollout_instance_devices =
+                cost.model.min_devices().next_power_of_two().max(8);
+            naive.train_instance_devices = naive.rollout_instance_devices;
+            let naive_result = simulate(&naive, &cost);
+            let naive_thr = naive_result.throughput_samples_per_s();
+
+            table.row(&[
+                devices.to_string(),
+                format!("{:.3}", p.best.rollout_fraction),
+                format!(
+                    "{}/{}",
+                    p.best.rollout_instance_devices,
+                    p.best.train_instance_devices
+                ),
+                p.best.micro_batch.to_string(),
+                format!("{:.2}", p.best.throughput_samples_per_s),
+                format!("{naive_thr:.2}"),
+                format!(
+                    "{:+.1}%",
+                    100.0
+                        * (p.best.throughput_samples_per_s / naive_thr
+                            - 1.0)
+                ),
+            ]);
+        }
+        print!("{}", table.render());
+    }
+}

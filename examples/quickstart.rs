@@ -1,0 +1,67 @@
+//! Quickstart: the smallest end-to-end AsyncFlow run.
+//!
+//! Uses the real three-layer stack if `make artifacts` has been run
+//! (tiny preset), otherwise falls back to the mock backend. Runs a few
+//! GRPO iterations through the full TransferQueue pipeline and prints
+//! the reward curve.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use asyncflow::config::RlConfig;
+use asyncflow::coordinator::Trainer;
+use asyncflow::launcher::build_engines;
+use asyncflow::runtime::{default_artifact_dir, Manifest};
+
+fn main() -> Result<()> {
+    // Prefer the real PJRT backend when artifacts exist.
+    let have_artifacts = Manifest::load(default_artifact_dir()).is_ok();
+    let cfg = RlConfig {
+        iterations: if have_artifacts { 3 } else { 5 },
+        global_batch: 16,
+        group_size: 4,
+        rollout_workers: 2,
+        staleness: 1,
+        ..RlConfig::default()
+    };
+    println!(
+        "== AsyncFlow quickstart ({} backend) ==",
+        if have_artifacts { "xla-pjrt" } else { "mock" }
+    );
+    let (engines, batch) = build_engines(&cfg, !have_artifacts)?;
+    println!(
+        "engine batch={batch}, {} rollout workers, staleness={}",
+        cfg.rollout_workers, cfg.staleness
+    );
+
+    let report = Trainer::new(cfg, engines)?.run()?;
+
+    println!("\niterations      : {}", report.iterations);
+    println!("samples trained : {}", report.samples_trained);
+    println!("tokens trained  : {}", report.tokens_trained);
+    println!("wall time       : {:.2}s", report.wall_time_s);
+    println!(
+        "throughput      : {:.2} samples/s, {:.0} tokens/s",
+        report.throughput_samples_per_s(),
+        report.throughput_tokens_per_s()
+    );
+    if let Some(s) = report.metrics.series("reward") {
+        println!(
+            "reward          : mean {:.3}, tail-25% {:.3} (n={})",
+            s.mean(),
+            report.final_reward,
+            s.points.len()
+        );
+    }
+    println!("\nworker utilization over the run:");
+    let horizon = report.timeline.horizon();
+    for w in report.timeline.workers() {
+        println!(
+            "  {w:<12} {:.0}%",
+            100.0 * report.timeline.utilization(&w, horizon)
+        );
+    }
+    Ok(())
+}

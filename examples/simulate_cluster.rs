@@ -1,0 +1,65 @@
+//! Cluster-scale scalability study (the paper's Fig. 10 workflow):
+//! sweep cluster sizes for both models and both paradigms, print the
+//! throughput table, speedups, and scaling linearity.
+//!
+//! ```sh
+//! cargo run --release --example simulate_cluster
+//! ```
+
+use asyncflow::benchkit::Table;
+use asyncflow::planner::{CostModel, DeviceSpec, LlmSpec};
+use asyncflow::simulator::{simulate, Mode, SimConfig};
+use asyncflow::util::stats::linreg_slope;
+
+fn main() {
+    let clusters = [32usize, 64, 128, 256, 512, 1024];
+    for model in [LlmSpec::qwen_7b(), LlmSpec::qwen_32b()] {
+        let cost = CostModel::new(DeviceSpec::ascend_910b(), model.clone());
+        println!("\n== {} ==", model.name);
+        let mut table = Table::new(&[
+            "NPUs",
+            "verl (samp/s)",
+            "AsyncFlow (samp/s)",
+            "speedup",
+        ]);
+        let mut log_devs = Vec::new();
+        let mut log_thr = Vec::new();
+        for &devices in &clusters {
+            if devices / 2 < cost.model.min_devices() {
+                continue; // model does not fit a split this small
+            }
+            let mut verl_cfg = SimConfig::defaults(devices, Mode::Colocated);
+            let mut af_cfg =
+                SimConfig::defaults(devices, Mode::SeparatedAsync);
+            for c in [&mut verl_cfg, &mut af_cfg] {
+                c.iterations = 10;
+                c.rollout_instance_devices =
+                    cost.model.min_devices().next_power_of_two().max(8);
+                c.train_instance_devices = c.rollout_instance_devices;
+            }
+            let verl = simulate(&verl_cfg, &cost);
+            let af = simulate(&af_cfg, &cost);
+            let sv = verl.throughput_samples_per_s();
+            let sa = af.throughput_samples_per_s();
+            table.row(&[
+                devices.to_string(),
+                format!("{sv:.2}"),
+                format!("{sa:.2}"),
+                format!("{:.2}x", sa / sv),
+            ]);
+            log_devs.push((devices as f64).ln());
+            log_thr.push(sa.ln());
+        }
+        print!("{}", table.render());
+        if log_devs.len() >= 2 {
+            println!(
+                "AsyncFlow scaling linearity (log-log slope): {:.2}",
+                linreg_slope(&log_devs, &log_thr)
+            );
+        }
+    }
+    println!(
+        "\nPaper reference: avg 1.59x over verl, peak 2.03x (7B@256), \
+         linearity 0.65/0.88 at 16x growth."
+    );
+}

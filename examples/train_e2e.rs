@@ -1,0 +1,116 @@
+//! End-to-end training driver — the repo's headline validation run.
+//!
+//! Trains the AOT-compiled transformer (see `python/compile/model.py`,
+//! presets `tiny`/`small`) with GRPO on synthetic verifiable math tasks
+//! for a configurable number of iterations, through the full AsyncFlow
+//! stack: TransferQueue streaming, multi-worker rollout, delayed
+//! parameter updates with one-step staleness, and the Adam train_step
+//! artifact executed via PJRT. Logs the reward/loss curves and writes
+//! them to `target/e2e_metrics.json` + CSVs for EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts                      # tiny preset (default)
+//! cargo run --release --example train_e2e -- --iterations 40
+//! # larger model:
+//! #   (cd python && python -m compile.aot --preset small --out ../artifacts)
+//! #   cargo run --release --example train_e2e -- --iterations 200
+//! ```
+
+use anyhow::{Context, Result};
+use asyncflow::config::RlConfig;
+use asyncflow::coordinator::Trainer;
+use asyncflow::launcher::build_engines;
+use asyncflow::planner::ProfileReport;
+
+fn flag(args: &[String], key: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let iterations: usize = flag(&args, "--iterations")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--iterations")?
+        .unwrap_or(40);
+    let staleness: u64 = flag(&args, "--staleness")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--staleness")?
+        .unwrap_or(1);
+
+    let cfg = RlConfig {
+        iterations,
+        global_batch: 32,
+        group_size: 4,
+        rollout_workers: 3,
+        staleness,
+        storage_units: 4,
+        policy: "token_balanced".into(),
+        lr: 1e-3,
+        temperature: 0.9,
+        top_k: 24,
+        ..RlConfig::default()
+    };
+    let (engines, batch) = build_engines(&cfg, false)
+        .context("run `make artifacts` first")?;
+    println!(
+        "== train_e2e: {iterations} iterations, global_batch={}, \
+         engine_batch={batch}, staleness={staleness} ==",
+        cfg.global_batch
+    );
+
+    let report = Trainer::new(cfg, engines)?.run()?;
+
+    println!("\n-- results --");
+    println!("iterations        : {}", report.iterations);
+    println!("samples trained   : {}", report.samples_trained);
+    println!("wall time         : {:.1}s", report.wall_time_s);
+    println!(
+        "throughput        : {:.2} samples/s, {:.0} tokens/s",
+        report.throughput_samples_per_s(),
+        report.throughput_tokens_per_s()
+    );
+    for name in ["reward", "loss", "kl", "nll", "response_len"] {
+        if let Some(s) = report.metrics.series(name) {
+            let head =
+                &s.points[..(s.points.len() / 4).max(1)];
+            let head_mean: f64 =
+                head.iter().map(|p| p.1).sum::<f64>() / head.len() as f64;
+            println!(
+                "{name:<18}: start {head_mean:+.4} -> tail {:+.4}",
+                s.tail_mean(0.25)
+            );
+        }
+    }
+
+    // Per-phase profile (feeds the hybrid cost model calibration).
+    let profile = ProfileReport::from_timeline(&report.timeline);
+    println!("\n-- phase means (s) --");
+    for (phase, mean) in &profile.phase_means {
+        println!(
+            "{phase:<14}: {mean:.4}  (n={})",
+            profile.phase_counts[phase]
+        );
+    }
+
+    // Export curves for EXPERIMENTS.md.
+    std::fs::create_dir_all("target").ok();
+    std::fs::write(
+        "target/e2e_metrics.json",
+        report.metrics.to_json().to_string_pretty(),
+    )?;
+    for name in ["reward", "loss", "response_len"] {
+        std::fs::write(
+            format!("target/e2e_{name}.csv"),
+            report.metrics.series_csv(name),
+        )?;
+    }
+    println!(
+        "\nwrote target/e2e_metrics.json, target/e2e_{{reward,loss,\
+         response_len}}.csv"
+    );
+    Ok(())
+}

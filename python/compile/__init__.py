@@ -1,0 +1,6 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package is imported at runtime — ``aot.py`` runs once under
+``make artifacts`` and writes HLO text + manifest + initial parameters to
+``artifacts/``; the Rust coordinator is self-contained afterwards.
+"""

@@ -1,0 +1,189 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run once per preset (``make artifacts``):
+
+    cd python && python -m compile.aot --preset tiny --out ../artifacts
+
+Outputs:
+    <out>/prefill.hlo.txt      (params..., prompt_ids)               -> (last_logits, kv)
+    <out>/decode_step.hlo.txt  (params..., kv, pos, token)           -> (logits, kv')
+    <out>/logprobs.hlo.txt     (params..., ids)                      -> (logp,)
+    <out>/train_step.hlo.txt   (params..., m..., v..., step, ids,
+                                adv, old_logp, ref_logp, mask, lr)   -> (params'..., m'..., v'..., step', metrics...)
+    <out>/manifest.json        artifact arg/result specs + model config
+    <out>/params.bin           initial parameters (ref model == init actor)
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import params_io
+
+METRIC_NAMES = ["loss", "policy_loss", "kl", "nll", "grad_norm"]
+
+# Top-k is baked into the rollout artifact (temperature stays a runtime
+# input); EOS/PAD conventions are shared with rust/src/data/mod.rs.
+TOP_K = 32
+
+# GRPO/Adam hyper-parameters baked into the train_step HLO (lr stays a
+# runtime input so the Rust side can run schedules).
+HYPERS = dict(clip_eps=0.2, kl_coef=0.05, beta1=0.9, beta2=0.95,
+              eps=1e-8, grad_clip=1.0)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _shape_struct(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all(cfg: M.ModelConfig):
+    """Lower the four entry points; returns {name: (hlo_text, arg_specs, res_specs)}."""
+    names = M.canonical_names(cfg)
+    shapes = M.param_shapes(cfg)
+    p_structs = tuple(_shape_struct(shapes[n]) for n in names)
+    B, P, T, V = cfg.batch, cfg.prompt_len, cfg.max_len, cfg.vocab
+    kv_shape = (cfg.n_layers, 2, B, cfg.n_heads, T, cfg.d_head)
+
+    param_specs = [_spec(shapes[n]) for n in names]
+    out = {}
+
+    # -- prefill ----------------------------------------------------------
+    fn = functools.partial(M.prefill, cfg=cfg)
+    low = jax.jit(fn).lower(p_structs, _shape_struct((B, P), jnp.int32))
+    out["prefill"] = (
+        to_hlo_text(low),
+        param_specs + [_spec((B, P), "i32")],
+        [_spec((B, V)), _spec(kv_shape)],
+    )
+
+    # -- rollout (fused generation loop) ----------------------------------
+    fn = functools.partial(M.rollout, cfg=cfg, top_k=TOP_K)
+    low = jax.jit(fn).lower(
+        p_structs, _shape_struct((B, P), jnp.int32),
+        _shape_struct((), jnp.int32), _shape_struct(()))
+    out["rollout"] = (
+        to_hlo_text(low),
+        param_specs + [_spec((B, P), "i32"), _spec((), "i32"), _spec(())],
+        [_spec((B, T), "i32"), _spec((B, T - P))],
+    )
+
+    # -- decode_step ------------------------------------------------------
+    fn = functools.partial(M.decode_step, cfg=cfg)
+    low = jax.jit(fn).lower(
+        p_structs, _shape_struct(kv_shape),
+        _shape_struct((), jnp.int32), _shape_struct((B,), jnp.int32))
+    out["decode_step"] = (
+        to_hlo_text(low),
+        param_specs + [_spec(kv_shape), _spec((), "i32"), _spec((B,), "i32")],
+        [_spec((B, V)), _spec(kv_shape)],
+    )
+
+    # -- logprobs ---------------------------------------------------------
+    fn = functools.partial(M.token_logprobs, cfg=cfg)
+    low = jax.jit(fn).lower(p_structs, _shape_struct((B, T), jnp.int32))
+    out["logprobs"] = (
+        to_hlo_text(low),
+        param_specs + [_spec((B, T), "i32")],
+        [_spec((B, T - 1))],
+    )
+
+    # -- train_step -------------------------------------------------------
+    fn = functools.partial(M.train_step, cfg=cfg, **HYPERS)
+    low = jax.jit(fn).lower(
+        p_structs, p_structs, p_structs, _shape_struct(()),
+        _shape_struct((B, T), jnp.int32), _shape_struct((B,)),
+        _shape_struct((B, T - 1)), _shape_struct((B, T - 1)),
+        _shape_struct((B, T - 1)), _shape_struct(()))
+    batch_specs = [
+        _spec((B, T), "i32"), _spec((B,)), _spec((B, T - 1)),
+        _spec((B, T - 1)), _spec((B, T - 1)), _spec(())]
+    out["train_step"] = (
+        to_hlo_text(low),
+        param_specs * 3 + [_spec(())] + batch_specs,
+        param_specs * 3 + [_spec(())] + [_spec(()) for _ in METRIC_NAMES],
+    )
+    return out
+
+
+def build(preset: str, out_dir: str, seed: int = 0) -> None:
+    cfg = M.PRESETS[preset]
+    cfg.validate()
+    os.makedirs(out_dir, exist_ok=True)
+    names = M.canonical_names(cfg)
+    shapes = M.param_shapes(cfg)
+
+    print(f"[aot] preset={preset} params={cfg.param_count():,}")
+    artifacts = lower_all(cfg)
+    manifest = {
+        "preset": preset,
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff, "prompt_len": cfg.prompt_len,
+            "max_len": cfg.max_len, "batch": cfg.batch,
+            "d_head": cfg.d_head, "param_count": cfg.param_count(),
+        },
+        "hypers": HYPERS,
+        "sampling": {"top_k": TOP_K, "eos": M.EOS_ID, "pad": M.PAD_ID},
+        "metric_names": METRIC_NAMES,
+        "param_names": names,
+        "param_shapes": {n: list(shapes[n]) for n in names},
+        "artifacts": {},
+    }
+    for name, (hlo, arg_specs, res_specs) in artifacts.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": arg_specs,
+            "results": res_specs,
+        }
+        print(f"[aot] wrote {path} ({len(hlo):,} chars, "
+              f"{len(arg_specs)} args -> {len(res_specs)} results)")
+
+    params = M.init_params(cfg, seed=seed)
+    params_io.write_params(os.path.join(out_dir, "params.bin"), params)
+    print(f"[aot] wrote {out_dir}/params.bin ({len(params)} tensors)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {out_dir}/manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build(args.preset, args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .grpo_loss import grpo_token_loss
+from . import ref
+
+__all__ = ["decode_attention", "flash_attention", "grpo_token_loss", "ref"]

@@ -1,0 +1,95 @@
+"""Pallas single-query (decode-step) attention kernel (L1).
+
+The autoregressive rollout hot-spot: one query token per sequence attends
+to a KV cache of fixed capacity T, with positions > ``pos`` masked out.
+This is the TPU analogue of a paged/decode attention kernel — the KV cache
+streams through VMEM in blocks while a single query row sits resident; the
+online-softmax carry makes the pass single-sweep.
+
+``pos`` arrives as a [1] int32 array placed in scalar-friendly memory so
+the mask is computed inside the kernel (no host-side remasking per step).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+DEFAULT_BLOCK_K = 32
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, scale, block_k,
+                   seq_len):
+    """One grid step: one (batch*head)'s query row against its KV cache.
+
+    Refs:
+      pos_ref: [1] int32 — current position (keys 0..pos valid).
+      q_ref:   [1, d]    — the query row.
+      k_ref:   [seq_len, d]
+      v_ref:   [seq_len, d]
+      o_ref:   [1, d]
+    """
+    d = q_ref.shape[-1]
+    pos = pos_ref[0]
+    q = q_ref[...] * scale  # [1, d]
+    num_kb = seq_len // block_k
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k_blk = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        s = q @ k_blk.T  # [1, block_k]
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1
+        )
+        s = jnp.where(k_pos <= pos, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v_blk
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((1, d), dtype=jnp.float32)
+    m0 = jnp.full((1, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((1, 1), dtype=jnp.float32)
+    # Only blocks covering positions <= pos contribute.
+    upper = jnp.minimum(pos // block_k + 1, num_kb)
+    acc, m_i, l_i = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l_i).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, pos, block_k=DEFAULT_BLOCK_K, interpret=True):
+    """Decode-step attention.
+
+    Args:
+      q: [N, D] current-position queries (N = batch*heads merged).
+      k, v: [N, T, D] KV caches.
+      pos: [] or [1] int32 — the current position.
+    Returns:
+      [N, D]
+    """
+    n, t, d = k.shape
+    assert t % block_k == 0, (t, block_k)
+    scale = 1.0 / (d ** 0.5)
+    pos_arr = jnp.asarray(pos, dtype=jnp.int32).reshape((1,))
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, seq_len=t
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((None, 1, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1, d), q.dtype),
+        interpret=interpret,
+    )(pos_arr, q[:, None, :], k, v)
+    return out[:, 0, :]

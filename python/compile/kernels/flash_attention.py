@@ -1,0 +1,122 @@
+"""Pallas flash-attention kernel (L1) — the model's compute hot-spot.
+
+TPU-oriented structure (see DESIGN.md §Hardware-Adaptation): queries are
+tiled into VMEM-sized blocks via BlockSpec; the kernel streams KV blocks
+through an online-softmax accumulator (running max `m`, running normalizer
+`l`, unnormalized accumulator `acc`), so the full [T, T] score matrix never
+materializes. On a real TPU the per-block matmuls map onto the MXU systolic
+array; here we lower with ``interpret=True`` so the kernel executes as plain
+HLO on the CPU PJRT plugin (real-TPU lowering emits a Mosaic custom-call the
+CPU client cannot run).
+
+Backward pass: the kernel is wrapped in ``jax.custom_vjp``; the VJP
+recomputes attention with the pure-jnp reference (flash-style
+rematerialization — the standard trade of extra FLOPs for O(T) memory).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF, ref_causal_attention
+
+# Block sizes: sized so q/k/v blocks + accumulators fit comfortably in a
+# ~16 MiB VMEM budget at d_head <= 128 (see DESIGN.md §Perf for the
+# footprint arithmetic).
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, seq_len):
+    """One grid step: one query block against all causal KV blocks.
+
+    Refs (VMEM blocks):
+      q_ref: [block_q, d]    — this grid step's query tile.
+      k_ref: [seq_len, d]    — full K for this (batch*head).
+      v_ref: [seq_len, d]    — full V for this (batch*head).
+      o_ref: [block_q, d]    — output tile.
+    """
+    block_q, d = q_ref.shape
+    qb = pl.program_id(1)  # query-block index
+    q = q_ref[...] * scale
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    num_kb = seq_len // block_k
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k_blk = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        s = q @ k_blk.T  # [block_q, block_k]
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1
+        )
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v_blk
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    m0 = jnp.full((block_q, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    # Causality: query block qb covers positions up to (qb+1)*block_q - 1,
+    # so only kv blocks through ceil((qb+1)*block_q / block_k) can
+    # contribute — this is the triangular-schedule FLOP saving real flash
+    # attention gets (handles block_q != block_k).
+    block_q_dim = q_ref.shape[0]
+    upper = jnp.minimum(
+        ((qb + 1) * block_q_dim + block_k - 1) // block_k, num_kb
+    )
+    acc, m_i, l_i = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l_i).astype(o_ref.dtype)
+
+
+def _flash_forward(q, k, v, *, block_q, block_k, interpret=True):
+    n, t, d = q.shape
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_k=block_k, seq_len=t
+    )
+    grid = (n, t // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, t, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, t, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Causal flash attention over [N, T, D] (N = batch*heads merged).
+
+    Forward runs the Pallas kernel; backward rematerializes through the
+    jnp reference (see module docstring).
+    """
+    return _flash_forward(q, k, v, block_q=block_q, block_k=block_k)
+
+
+def _fa_fwd(q, k, v, block_q, block_k):
+    out = _flash_forward(q, k, v, block_q=block_q, block_k=block_k)
+    return out, (q, k, v)
+
+
+def _fa_bwd(block_q, block_k, residuals, g):
+    q, k, v = residuals
+    _, vjp = jax.vjp(ref_causal_attention, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

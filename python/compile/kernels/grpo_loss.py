@@ -1,0 +1,105 @@
+"""Pallas fused GRPO token-loss kernel (L1).
+
+Fuses the per-token GRPO arithmetic — importance ratio, PPO-style clipping,
+k3 KL estimator, masking — into a single elementwise kernel, so the lowered
+HLO performs one pass over the [B, T] token grid instead of materializing
+five intermediates (ratio, clipped, surrogate, log_r, kl). On TPU this is a
+pure-VPU kernel (no MXU); its value is memory-bandwidth: 5 reads + 2 writes
+per token instead of ~14 with unfused intermediates.
+
+The kernel emits per-token (surrogate, kl) grids; the scalar reduction to
+masked means stays in jnp (XLA fuses the reduce with the kernel output).
+Backward: ``jax.custom_vjp`` — forward runs the Pallas kernel, backward
+differentiates the pure-jnp elementwise form (rematerialization, same
+pattern as the flash-attention kernel).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _grpo_kernel(logp_ref, old_ref, refp_ref, adv_ref, mask_ref,
+                 surr_ref, kl_ref, *, clip_eps):
+    logp = logp_ref[...]
+    old = old_ref[...]
+    refp = refp_ref[...]
+    adv = adv_ref[...]  # [B, 1] broadcast over tokens
+    mask = mask_ref[...]
+
+    ratio = jnp.exp(logp - old)
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    surr = jnp.minimum(ratio * adv, clipped * adv) * mask
+    log_r = refp - logp
+    kl = (jnp.exp(log_r) - log_r - 1.0) * mask
+    surr_ref[...] = surr
+    kl_ref[...] = kl
+
+
+def _grpo_tokens_jnp(logp, old, refp, adv2d, mask, clip_eps):
+    """Elementwise reference form — backward path + test oracle."""
+    ratio = jnp.exp(logp - old)
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    surr = jnp.minimum(ratio * adv2d, clipped * adv2d) * mask
+    log_r = refp - logp
+    kl = (jnp.exp(log_r) - log_r - 1.0) * mask
+    return surr, kl
+
+
+def _grpo_tokens_pallas(logp, old, refp, adv2d, mask, clip_eps, interpret):
+    b, t = logp.shape
+    kernel = functools.partial(_grpo_kernel, clip_eps=clip_eps)
+    full = pl.BlockSpec((b, t), lambda: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[full, full, full,
+                  pl.BlockSpec((b, 1), lambda: (0, 0)),
+                  full],
+        out_specs=[full, full],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t), logp.dtype),
+            jax.ShapeDtypeStruct((b, t), logp.dtype),
+        ],
+        interpret=interpret,
+    )(logp, old, refp, adv2d, mask)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _grpo_tokens(logp, old, refp, adv2d, mask, clip_eps, interpret):
+    return _grpo_tokens_pallas(logp, old, refp, adv2d, mask, clip_eps,
+                               interpret)
+
+
+def _gt_fwd(logp, old, refp, adv2d, mask, clip_eps, interpret):
+    out = _grpo_tokens_pallas(logp, old, refp, adv2d, mask, clip_eps,
+                              interpret)
+    return out, (logp, old, refp, adv2d, mask)
+
+
+def _gt_bwd(clip_eps, interpret, residuals, g):
+    logp, old, refp, adv2d, mask = residuals
+    _, vjp = jax.vjp(
+        lambda *a: _grpo_tokens_jnp(*a, clip_eps), logp, old, refp, adv2d,
+        mask)
+    return vjp(g)
+
+
+_grpo_tokens.defvjp(_gt_fwd, _gt_bwd)
+
+
+def grpo_token_loss(logp, old_logp, ref_logp, adv, mask,
+                    clip_eps=0.2, kl_coef=0.05, interpret=True):
+    """Fused GRPO loss. Shapes: logp/old/ref/mask [B, T]; adv [B].
+
+    Returns (loss, policy_loss, kl_mean) scalars — identical semantics to
+    ``ref.ref_grpo_token_loss``.
+    """
+    surr, kl = _grpo_tokens(logp, old_logp, ref_logp, adv[:, None], mask,
+                            clip_eps, interpret)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    policy_loss = -surr.sum() / denom
+    kl_mean = kl.sum() / denom
+    return policy_loss + kl_coef * kl_mean, policy_loss, kl_mean

@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here. pytest + hypothesis sweep shapes/dtypes and assert
+``allclose(kernel(...), ref(...))`` — this is the core L1 correctness signal.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_causal_attention(q, k, v, scale=None):
+    """Causal self-attention, full sequence.
+
+    Args:
+      q, k, v: [N, T, D] (N = batch * heads, already merged).
+      scale: optional softmax scale; defaults to 1/sqrt(D).
+    Returns:
+      [N, T, D] attention output.
+    """
+    n, t, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=q.dtype))
+    logits = jnp.einsum("ntd,nsd->nts", q, k) * scale
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(causal[None, :, :], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("nts,nsd->ntd", probs, v)
+
+
+def ref_decode_attention(q, k, v, pos, scale=None):
+    """Single-query attention against a KV cache of max length T.
+
+    Args:
+      q: [N, D] query for the current position.
+      k, v: [N, T, D] KV cache (positions > pos are garbage and must be
+        masked out).
+      pos: scalar int32 — the current position; keys 0..pos inclusive are
+        valid.
+    Returns:
+      [N, D] attention output.
+    """
+    n, t, d = k.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=q.dtype))
+    logits = jnp.einsum("nd,ntd->nt", q, k) * scale
+    valid = jnp.arange(t) <= pos
+    logits = jnp.where(valid[None, :], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("nt,ntd->nd", probs, v)
+
+
+def ref_grpo_token_loss(logp, old_logp, ref_logp, adv, mask,
+                        clip_eps=0.2, kl_coef=0.05):
+    """Per-token GRPO loss (clipped surrogate + k3 KL penalty).
+
+    Args:
+      logp, old_logp, ref_logp: [B, T] per-token log-probabilities under the
+        current policy, the behaviour (rollout-time) policy, and the frozen
+        reference policy.
+      adv: [B] group-relative advantage, broadcast over response tokens.
+      mask: [B, T] 1.0 on response tokens, 0.0 on prompt/padding.
+    Returns:
+      (loss_scalar, policy_loss_scalar, kl_scalar) — all masked means.
+    """
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    adv_b = adv[:, None]
+    surrogate = jnp.minimum(ratio * adv_b, clipped * adv_b)
+    # k3 KL estimator: exp(ref - logp) - (ref - logp) - 1  (>= 0)
+    log_r = ref_logp - logp
+    kl = jnp.exp(log_r) - log_r - 1.0
+    denom = jnp.maximum(mask.sum(), 1.0)
+    policy_loss = -(surrogate * mask).sum() / denom
+    kl_mean = (kl * mask).sum() / denom
+    return policy_loss + kl_coef * kl_mean, policy_loss, kl_mean

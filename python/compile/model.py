@@ -1,0 +1,418 @@
+"""L2 — the GRPO actor model: a decoder-only transformer in pure JAX.
+
+Four entry points get AOT-lowered to HLO text (see ``aot.py``), matching the
+four compute phases of the AsyncFlow RL workflow:
+
+  * ``prefill``      — rollout prompt phase: full forward over the padded
+                       prompt, emitting last-position logits + a KV cache.
+  * ``decode_step``  — rollout decode phase: one token in, logits + updated
+                       KV cache out (the Pallas decode-attention hot path).
+  * ``logprobs``     — reference / behaviour-policy scoring: per-token
+                       log-probabilities over a full trajectory.
+  * ``train_step``   — actor update: GRPO clipped-surrogate + KL loss
+                       (Pallas fused token-loss kernel), Adam update.
+
+Parameters are a flat dict name -> f32 array; the canonical cross-language
+ordering is ``sorted(params)`` and is recorded in the artifact manifest so
+the Rust runtime can thread parameter literals positionally.
+
+All attention goes through the L1 Pallas kernels (flash_attention /
+decode_attention) so they lower into the same HLO modules.
+"""
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import decode_attention, flash_attention, grpo_token_loss
+
+# Flash-attention tile sizes used for every lowering in this repo. 16 keeps
+# all preset sequence lengths (multiples of 16) tileable; see DESIGN.md §Perf
+# for the VMEM-footprint arithmetic behind the choice.
+BLOCK_Q = 16
+BLOCK_K = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + batch geometry baked into each artifact."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    prompt_len: int  # P — prompts are padded to exactly this length
+    max_len: int     # T — KV-cache capacity / trajectory length
+    batch: int       # B — rollout & train micro-batch baked into the HLO
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def max_new_tokens(self) -> int:
+        return self.max_len - self.prompt_len
+
+    def validate(self) -> None:
+        assert self.d_model % self.n_heads == 0
+        assert self.prompt_len % BLOCK_Q == 0, "prompt_len must tile"
+        assert self.max_len % BLOCK_Q == 0, "max_len must tile"
+
+    def param_count(self) -> int:
+        per_layer = (
+            2 * self.d_model                      # norms
+            + 4 * self.d_model * self.d_model     # wq wk wv wo
+            + 2 * self.d_model * self.d_ff        # w1 w2
+        )
+        return (
+            2 * self.vocab * self.d_model         # embed + lm_head
+            + self.d_model                        # final norm
+            + self.n_layers * per_layer
+        )
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # ~0.72M params — unit tests / quickstart; everything runs in seconds.
+    "tiny": ModelConfig("tiny", vocab=256, d_model=128, n_heads=4,
+                        n_layers=4, d_ff=384, prompt_len=32, max_len=96,
+                        batch=8),
+    # ~11M params — the end-to-end training example (examples/train_e2e.rs).
+    "small": ModelConfig("small", vocab=256, d_model=384, n_heads=6,
+                         n_layers=6, d_ff=1536, prompt_len=32, max_len=128,
+                         batch=8),
+    # ~124M params — GPT-2-small-class geometry; artifact generation works
+    # but real CPU training is slow; used for analytic/planner work and
+    # compile-only validation.
+    "base": ModelConfig("base", vocab=4096, d_model=768, n_heads=12,
+                        n_layers=12, d_ff=3072, prompt_len=64, max_len=192,
+                        batch=4),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    shapes: Dict[str, Tuple[int, ...]] = {
+        "embed": (v, d),
+        "final_norm": (d,),
+        "lm_head": (d, v),
+    }
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        shapes[p + "attn_norm"] = (d,)
+        shapes[p + "wq"] = (d, d)
+        shapes[p + "wk"] = (d, d)
+        shapes[p + "wv"] = (d, d)
+        shapes[p + "wo"] = (d, d)
+        shapes[p + "mlp_norm"] = (d,)
+        shapes[p + "w1"] = (d, ff)
+        shapes[p + "w2"] = (ff, d)
+    return shapes
+
+
+def canonical_names(cfg: ModelConfig) -> List[str]:
+    """The one true cross-language parameter ordering."""
+    return sorted(param_shapes(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Scaled-normal init (GPT-2 style: residual projections down-scaled)."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    resid_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    for name, shape in param_shapes(cfg).items():
+        if name.endswith("norm"):
+            out[name] = np.ones(shape, dtype=np.float32)
+        else:
+            std = 0.02
+            if name.endswith(("wo", "w2")):
+                std *= resid_scale
+            out[name] = rng.normal(0.0, std, size=shape).astype(np.float32)
+    return out
+
+
+def params_to_tuple(params: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    return tuple(params[n] for n in canonical_names(cfg))
+
+
+def tuple_to_params(tup, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    return dict(zip(canonical_names(cfg), tup))
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope_angles(positions, d_head):
+    """RoPE angle table: positions [...,], returns (cos, sin) [..., d_head/2]."""
+    half = d_head // 2
+    inv_freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions):
+    """x: [..., T, d_head] (positions [T]) or [..., d_head] (scalar pos)."""
+    d_head = x.shape[-1]
+    cos, sin = _rope_angles(positions, d_head)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def _split_heads(x, cfg):
+    # [B, T, d_model] -> [B, H, T, d_head]
+    b, t, _ = x.shape
+    return x.reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x, cfg):
+    # [B, H, T, d_head] -> [B, T, d_model]
+    b, h, t, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * d)
+
+
+def forward_full(params: Dict[str, jnp.ndarray], ids: jnp.ndarray,
+                 cfg: ModelConfig, collect_kv: bool = False):
+    """Full-sequence causal forward.
+
+    Args:
+      ids: [B, T] int32 token ids.
+      collect_kv: also return the per-layer K/V tensors, padded to
+        cfg.max_len, stacked as [L, 2, B, H, max_len, d_head].
+    Returns:
+      logits [B, T, vocab] (and the KV stack when requested).
+    """
+    b, t = ids.shape
+    x = params["embed"][ids]  # [B, T, d]
+    positions = jnp.arange(t)
+    kv_stack = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        h = rmsnorm(x, params[p + "attn_norm"])
+        q = _split_heads(h @ params[p + "wq"], cfg)
+        k = _split_heads(h @ params[p + "wk"], cfg)
+        v = _split_heads(h @ params[p + "wv"], cfg)
+        q = apply_rope(q, positions)
+        k = apply_rope(k, positions)
+        n = b * cfg.n_heads
+        attn = flash_attention(
+            q.reshape(n, t, cfg.d_head),
+            k.reshape(n, t, cfg.d_head),
+            v.reshape(n, t, cfg.d_head),
+            BLOCK_Q, BLOCK_K,
+        ).reshape(b, cfg.n_heads, t, cfg.d_head)
+        x = x + _merge_heads(attn, cfg) @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "mlp_norm"])
+        x = x + jax.nn.gelu(h @ params[p + "w1"]) @ params[p + "w2"]
+        if collect_kv:
+            pad = cfg.max_len - t
+            k_pad = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            kv_stack.append(jnp.stack([k_pad, v_pad], axis=0))
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    if collect_kv:
+        return logits, jnp.stack(kv_stack, axis=0)
+    return logits
+
+
+# --------------------------------------------------------------------------
+# AOT entry points
+# --------------------------------------------------------------------------
+
+def prefill(param_tup, prompt_ids, cfg: ModelConfig):
+    """Prompt phase. prompt_ids [B, P] -> (last_logits [B, V], kv stack)."""
+    params = tuple_to_params(param_tup, cfg)
+    logits, kv = forward_full(params, prompt_ids, cfg, collect_kv=True)
+    return logits[:, -1, :], kv
+
+
+def decode_step(param_tup, kv, pos, token, cfg: ModelConfig):
+    """One autoregressive step.
+
+    Args:
+      kv: [L, 2, B, H, max_len, d_head] cache; positions > pos-1 invalid.
+      pos: [] int32 — the position the incoming token occupies.
+      token: [B] int32 — tokens sampled at position pos (fed back in).
+    Returns:
+      (logits [B, V] for position pos, updated kv).
+    """
+    params = tuple_to_params(param_tup, cfg)
+    return _decode_core(params, kv, pos, token, cfg)
+
+
+def _decode_core(params, kv, pos, token, cfg: ModelConfig):
+    b = token.shape[0]
+    x = params["embed"][token][:, None, :]  # [B, 1, d]
+    new_kv = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        h = rmsnorm(x, params[p + "attn_norm"])
+        q = _split_heads(h @ params[p + "wq"], cfg)[:, :, 0, :]  # [B,H,dh]
+        k = _split_heads(h @ params[p + "wk"], cfg)[:, :, 0, :]
+        v = _split_heads(h @ params[p + "wv"], cfg)[:, :, 0, :]
+        q = apply_rope(q, pos)
+        k = apply_rope(k, pos)
+        k_cache = jax.lax.dynamic_update_slice(
+            kv[i, 0], k[:, :, None, :], (0, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            kv[i, 1], v[:, :, None, :], (0, 0, pos, 0))
+        n = b * cfg.n_heads
+        attn = decode_attention(
+            q.reshape(n, cfg.d_head),
+            k_cache.reshape(n, cfg.max_len, cfg.d_head),
+            v_cache.reshape(n, cfg.max_len, cfg.d_head),
+            pos, BLOCK_K,
+        ).reshape(b, 1 * cfg.n_heads * cfg.d_head)
+        x = x + (attn @ params[p + "wo"])[:, None, :]
+        h = rmsnorm(x, params[p + "mlp_norm"])
+        x = x + jax.nn.gelu(h @ params[p + "w1"]) @ params[p + "w2"]
+        new_kv.append(jnp.stack([k_cache, v_cache], axis=0))
+    x = rmsnorm(x, params["final_norm"])
+    logits = (x @ params["lm_head"])[:, 0, :]
+    return logits, jnp.stack(new_kv, axis=0)
+
+
+# Token conventions shared with the Rust side (rust/src/data/mod.rs).
+PAD_ID = 0
+EOS_ID = 10  # '\n'
+
+
+def _sample_token(logits, key, temperature, top_k):
+    """Gumbel-max top-k sampling with a greedy fallback at temperature<=0.
+
+    Args:
+      logits: [B, V]; key: PRNG key; temperature: [] f32 (traced).
+    Returns:
+      (token [B] i32, logp [B] — log-prob of the chosen token under the
+      FULL softmax, i.e. the behaviour-policy logprob GRPO needs).
+    """
+    # Top-k via threshold masking (NOT lax.top_k: jax lowers that to a
+    # `TopK` HLO attribute form the bundled xla_extension 0.5.1 parser
+    # rejects; Sort lowers cleanly).
+    kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+    masked = jnp.where(logits >= kth, logits, -1e30)
+    g = jax.random.gumbel(key, logits.shape)
+    greedy = jnp.argmax(logits, axis=-1)
+    sampled = jnp.argmax(
+        masked / jnp.maximum(temperature, 1e-6) + g, axis=-1)
+    tok = jnp.where(temperature <= 0.0, greedy, sampled)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tok_logit = jnp.take_along_axis(logits, tok[:, None], axis=-1)[:, 0]
+    return tok.astype(jnp.int32), tok_logit - logz
+
+
+def rollout(param_tup, prompt_ids, seed, temperature, cfg: ModelConfig,
+            top_k=32):
+    """Fused on-device generation loop — the rollout hot path.
+
+    Prefill + `lax.scan` over all decode positions with in-graph
+    sampling, so the Rust engine issues ONE execution per generation
+    batch instead of one per token (see EXPERIMENTS.md §Perf). Also emits
+    the behaviour-policy ("old") logprobs for free — they are exactly the
+    sampling-time logprobs.
+
+    Args:
+      prompt_ids: [B, P] int32 (fixed-width prompts).
+      seed: [] int32 sampling seed; temperature: [] f32 (<=0 = greedy).
+    Returns:
+      (ids [B, T] int32 — prompt + response + PAD padding after EOS,
+       old_logp [B, T-P] f32 — logp of each generated token; 0 after EOS).
+    """
+    params = tuple_to_params(param_tup, cfg)
+    b, p = prompt_ids.shape
+    logits, kv = forward_full(params, prompt_ids, cfg, collect_kv=True)
+    last_logits = logits[:, -1, :]
+    key0 = jax.random.PRNGKey(seed)
+
+    def step(carry, pos):
+        logits, kv, key, done = carry
+        key, sub = jax.random.split(key)
+        tok, logp = _sample_token(logits, sub, temperature, top_k)
+        tok = jnp.where(done, PAD_ID, tok)
+        logp = jnp.where(done, 0.0, logp)
+        done = done | (tok == EOS_ID)
+        logits, kv = _decode_core(params, kv, pos, tok, cfg)
+        return (logits, kv, key, done), (tok, logp)
+
+    init = (last_logits, kv, key0, jnp.zeros((b,), dtype=bool))
+    _, (toks, logps) = jax.lax.scan(
+        step, init, jnp.arange(p, cfg.max_len))
+    ids = jnp.concatenate([prompt_ids, toks.T], axis=1)
+    return ids, logps.T
+
+
+def token_logprobs(param_tup, ids, cfg: ModelConfig):
+    """Per-token log-probabilities. ids [B, T] -> logp [B, T-1].
+
+    logp[b, t] = log P(ids[b, t+1] | ids[b, :t+1]).
+    """
+    params = tuple_to_params(param_tup, cfg)
+    logits = forward_full(params, ids, cfg)  # [B, T, V]
+    logz = jax.nn.logsumexp(logits[:, :-1, :], axis=-1)
+    tgt = jnp.take_along_axis(
+        logits[:, :-1, :], ids[:, 1:, None], axis=-1)[..., 0]
+    return tgt - logz
+
+
+def grpo_loss(param_tup, ids, adv, old_logp, ref_logp, mask,
+              cfg: ModelConfig, clip_eps=0.2, kl_coef=0.05):
+    """GRPO objective over one micro-batch of trajectories."""
+    logp = token_logprobs(param_tup, ids, cfg)
+    loss, policy_loss, kl = grpo_token_loss(
+        logp, old_logp, ref_logp, adv, mask,
+        clip_eps=clip_eps, kl_coef=kl_coef)
+    # Masked mean entropy proxy: -logp of taken tokens over response region.
+    denom = jnp.maximum(mask.sum(), 1.0)
+    nll = -(logp * mask).sum() / denom
+    return loss, (policy_loss, kl, nll)
+
+
+def train_step(param_tup, m_tup, v_tup, step, ids, adv, old_logp, ref_logp,
+               mask, lr, cfg: ModelConfig, clip_eps=0.2, kl_coef=0.05,
+               beta1=0.9, beta2=0.95, eps=1e-8, grad_clip=1.0):
+    """One Adam update on the GRPO objective.
+
+    All state is threaded positionally (params / first moment / second
+    moment in canonical order, then the scalar Adam step counter) so the
+    Rust runtime can persist it between executions.
+
+    Returns (params', m', v', step', loss, policy_loss, kl, nll, grad_norm).
+    """
+    (loss, (policy_loss, kl, nll)), grads = jax.value_and_grad(
+        grpo_loss, has_aux=True)(
+            param_tup, ids, adv, old_logp, ref_logp, mask, cfg,
+            clip_eps=clip_eps, kl_coef=kl_coef)
+    # Global-norm gradient clipping.
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+    grads = tuple(g * scale for g in grads)
+
+    step_new = step + 1.0
+    bc1 = 1.0 - beta1 ** step_new
+    bc2 = 1.0 - beta2 ** step_new
+    new_p, new_m, new_v = [], [], []
+    for p, m, v, g in zip(param_tup, m_tup, v_tup, grads):
+        m = beta1 * m + (1.0 - beta1) * g
+        v = beta2 * v + (1.0 - beta2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        new_p.append(p - lr * upd)
+        new_m.append(m)
+        new_v.append(v)
+    return (tuple(new_p), tuple(new_m), tuple(new_v), step_new,
+            loss, policy_loss, kl, nll, gnorm)

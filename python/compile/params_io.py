@@ -1,0 +1,61 @@
+"""Writer for ``artifacts/params.bin`` — the cross-language tensor bundle.
+
+Format (little-endian; mirrored by ``rust/src/runtime/artifacts.rs``):
+
+    magic   b"AFPB"            4 bytes
+    version u32                = 1
+    count   u32
+    per tensor:
+      name_len u32, name utf-8 bytes
+      dtype    u8   (0 = f32, 1 = i32)
+      ndim     u32
+      dims     u64 * ndim
+      nbytes   u64
+      data     raw bytes (C-contiguous, little-endian)
+"""
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"AFPB"
+VERSION = 1
+DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_params(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = DTYPE_CODES[arr.dtype]
+            raw = arr.tobytes()
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BI", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_params(path: str) -> Dict[str, np.ndarray]:
+    """Round-trip reader (used by tests only; Rust has its own reader)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            code, ndim = struct.unpack("<BI", f.read(5))
+            dims = [struct.unpack("<Q", f.read(8))[0] for _ in range(ndim)]
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(nbytes)
+            dtype = {0: np.float32, 1: np.int32}[code]
+            out[name] = np.frombuffer(raw, dtype=dtype).reshape(dims).copy()
+    return out

@@ -1,0 +1,87 @@
+"""AOT pipeline: manifest/arg-spec integrity + params.bin round-trip.
+
+The lowering itself (``lower_all``) is exercised once on the tiny preset —
+it is the exact code path ``make artifacts`` runs.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M, params_io
+
+CFG = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return aot.lower_all(CFG)
+
+
+def test_all_artifacts_present(lowered):
+    assert set(lowered) == {"prefill", "rollout", "decode_step", "logprobs",
+                            "train_step"}
+
+
+def test_hlo_text_is_parseable_hlo(lowered):
+    for name, (hlo, _, _) in lowered.items():
+        assert hlo.startswith("HloModule"), name
+        assert "ENTRY" in hlo, name
+
+
+def test_arg_counts(lowered):
+    n = len(M.canonical_names(CFG))
+    assert len(lowered["prefill"][1]) == n + 1
+    assert len(lowered["rollout"][1]) == n + 3
+    assert len(lowered["decode_step"][1]) == n + 3
+    assert len(lowered["logprobs"][1]) == n + 1
+    assert len(lowered["train_step"][1]) == 3 * n + 1 + 6
+    assert len(lowered["train_step"][2]) == 3 * n + 1 + len(aot.METRIC_NAMES)
+
+
+def test_hlo_entry_arity_matches_manifest(lowered):
+    """The HLO ENTRY signature must declare exactly the manifest's args —
+    this is the contract the Rust runtime relies on positionally."""
+    for name, (hlo, args, _) in lowered.items():
+        # Parameters of the ENTRY computation appear as `parameter(i)`
+        # instructions after the ENTRY line (ENTRY is the last computation
+        # in jax-emitted HLO text).
+        entry_at = hlo.index("\nENTRY ")
+        n_params = hlo[entry_at:].count(" parameter(")
+        assert n_params == len(args), (name, n_params, len(args))
+
+
+def test_params_bin_roundtrip(tmp_path):
+    params = M.init_params(CFG, seed=3)
+    path = os.path.join(tmp_path, "p.bin")
+    params_io.write_params(path, params)
+    back = params_io.read_params(path)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(params[k], back[k])
+
+
+def test_init_params_deterministic():
+    a = M.init_params(CFG, seed=0)
+    b = M.init_params(CFG, seed=0)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = M.init_params(CFG, seed=1)
+    assert any(not np.array_equal(a[k], c[k]) for k in a)
+
+
+def test_build_writes_manifest(tmp_path):
+    out = str(tmp_path / "art")
+    aot.build("tiny", out)
+    with open(os.path.join(out, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["preset"] == "tiny"
+    assert man["model"]["param_count"] == CFG.param_count()
+    assert man["param_names"] == M.canonical_names(CFG)
+    for art in ["prefill", "decode_step", "logprobs", "train_step"]:
+        meta = man["artifacts"][art]
+        assert os.path.exists(os.path.join(out, meta["file"]))
+        assert len(meta["args"]) > 0 and len(meta["results"]) > 0
+    assert os.path.exists(os.path.join(out, "params.bin"))

@@ -1,0 +1,190 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/positions/seeds; every case asserts allclose
+against ``kernels.ref``. This is the core kernel-correctness signal —
+the AOT artifacts embed exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (decode_attention, flash_attention,
+                             grpo_token_loss)
+from compile.kernels.grpo_loss import _grpo_tokens_jnp
+from compile.kernels.ref import (ref_causal_attention, ref_decode_attention,
+                                 ref_grpo_token_loss)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 6),
+    t_blocks=st.integers(1, 6),
+    d=st.sampled_from([8, 16, 32, 64]),
+    block=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(n, t_blocks, d, block, seed):
+    t = t_blocks * block
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, n, t, d) for _ in range(3))
+    out = flash_attention(q, k, v, block, block)
+    ref = ref_causal_attention(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_mixed_blocks():
+    rng = np.random.default_rng(0)
+    q, k, v = (_rand(rng, 2, 64, 16) for _ in range(3))
+    ref = ref_causal_attention(q, k, v)
+    for bq, bk in [(16, 32), (32, 16), (64, 16), (16, 64)]:
+        out = flash_attention(q, k, v, bq, bk)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_grad_matches_ref():
+    rng = np.random.default_rng(7)
+    q, k, v = (_rand(rng, 3, 32, 16) for _ in range(3))
+    g = jax.grad(lambda *a: flash_attention(*a).sum(), argnums=(0, 1, 2))(
+        q, k, v)
+    gr = jax.grad(lambda *a: ref_causal_attention(*a).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_under_jit():
+    rng = np.random.default_rng(3)
+    q, k, v = (_rand(rng, 2, 48, 16) for _ in range(3))
+    out = jax.jit(lambda q, k, v: flash_attention(q, k, v, 16, 16))(q, k, v)
+    np.testing.assert_allclose(out, ref_causal_attention(q, k, v),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_rejects_untileable():
+    rng = np.random.default_rng(0)
+    q, k, v = (_rand(rng, 1, 33, 8) for _ in range(3))
+    with pytest.raises(AssertionError):
+        flash_attention(q, k, v, 16, 16)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 6),
+    t_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    pos_frac=st.floats(0.0, 1.0),
+)
+def test_decode_attention_matches_ref(n, t_blocks, d, seed, pos_frac):
+    t = t_blocks * 32
+    pos = min(int(pos_frac * t), t - 1)
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, n, d)
+    k, v = (_rand(rng, n, t, d) for _ in range(2))
+    out = decode_attention(q, k, v, pos)
+    ref = ref_decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_ignores_garbage_tail():
+    """Cache positions beyond pos must not leak into the output."""
+    rng = np.random.default_rng(1)
+    q = _rand(rng, 2, 16)
+    k, v = (_rand(rng, 2, 64, 16) for _ in range(2))
+    pos = 10
+    out1 = decode_attention(q, k, v, pos)
+    k2 = k.at[:, pos + 1:, :].set(1e6)  # poison the tail
+    v2 = v.at[:, pos + 1:, :].set(-1e6)
+    out2 = decode_attention(q, k2, v2, pos)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_matches_flash_last_row():
+    """Decode at pos=T-1 equals the last row of full causal attention."""
+    rng = np.random.default_rng(5)
+    n, t, d = 4, 32, 16
+    q_full, k, v = (_rand(rng, n, t, d) for _ in range(3))
+    full = ref_causal_attention(q_full, k, v)
+    out = decode_attention(q_full[:, -1, :], k, v, t - 1)
+    np.testing.assert_allclose(out, full[:, -1, :], rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# grpo_token_loss
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 8),
+    t=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+    clip_eps=st.sampled_from([0.1, 0.2, 0.3]),
+    kl_coef=st.sampled_from([0.0, 0.05, 0.5]),
+)
+def test_grpo_loss_matches_ref(b, t, seed, clip_eps, kl_coef):
+    rng = np.random.default_rng(seed)
+    logp, old, refp = (0.2 * _rand(rng, b, t) - 1.0 for _ in range(3))
+    adv = _rand(rng, b)
+    mask = jnp.asarray((rng.random((b, t)) > 0.3).astype(np.float32))
+    got = grpo_token_loss(logp, old, refp, adv, mask, clip_eps, kl_coef)
+    want = ref_grpo_token_loss(logp, old, refp, adv, mask, clip_eps, kl_coef)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-6)
+
+
+def test_grpo_loss_grad_matches_ref():
+    rng = np.random.default_rng(11)
+    b, t = 4, 24
+    logp, old, refp = (0.2 * _rand(rng, b, t) - 1.0 for _ in range(3))
+    adv = _rand(rng, b)
+    mask = jnp.ones((b, t), dtype=jnp.float32)
+    g = jax.grad(lambda lp: grpo_token_loss(lp, old, refp, adv, mask)[0])(
+        logp)
+    gr = jax.grad(lambda lp: ref_grpo_token_loss(lp, old, refp, adv,
+                                                 mask)[0])(logp)
+    np.testing.assert_allclose(g, gr, rtol=2e-5, atol=2e-6)
+
+
+def test_grpo_loss_zero_mask_is_finite():
+    b, t = 2, 8
+    z = jnp.zeros((b, t), dtype=jnp.float32)
+    loss, pl_, kl = grpo_token_loss(z, z, z, jnp.zeros((b,)), z)
+    assert np.isfinite(float(loss)) and float(pl_) == 0.0 and float(kl) == 0.0
+
+
+def test_grpo_kl_nonnegative():
+    rng = np.random.default_rng(13)
+    b, t = 4, 16
+    logp, refp = (0.5 * _rand(rng, b, t) - 1.0 for _ in range(2))
+    mask = jnp.ones((b, t), dtype=jnp.float32)
+    _, kl = _grpo_tokens_jnp(logp, logp, refp, jnp.ones((b, 1)), mask, 0.2)
+    assert float(kl.min()) >= 0.0
+
+
+def test_grpo_onpolicy_loss_equals_negative_advantage():
+    """With logp == old_logp == ref_logp, loss = -mean(adv broadcast)."""
+    rng = np.random.default_rng(17)
+    b, t = 4, 16
+    logp = 0.2 * _rand(rng, b, t)
+    adv = _rand(rng, b)
+    mask = jnp.ones((b, t), dtype=jnp.float32)
+    loss, pl_, kl = grpo_token_loss(logp, logp, logp, adv, mask, 0.2, 0.05)
+    assert abs(float(kl)) < 1e-7
+    np.testing.assert_allclose(float(pl_), -float(adv.mean()), rtol=1e-5)

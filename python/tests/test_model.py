@@ -1,0 +1,143 @@
+"""L2 correctness: model entry points, decode/prefill consistency, GRPO
+training dynamics, parameter bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = {k: jnp.asarray(v) for k, v in M.init_params(CFG).items()}
+    tup = M.params_to_tuple(params, CFG)
+    rng = np.random.default_rng(42)
+    ids = jnp.asarray(rng.integers(
+        0, CFG.vocab, size=(CFG.batch, CFG.max_len), dtype=np.int32))
+    return params, tup, ids, rng
+
+
+def test_param_count_matches_analytic(setup):
+    params, _, _, _ = setup
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    assert total == CFG.param_count()
+
+
+def test_canonical_names_sorted_and_complete(setup):
+    params, _, _, _ = setup
+    names = M.canonical_names(CFG)
+    assert names == sorted(names)
+    assert set(names) == set(params)
+
+
+def test_presets_validate():
+    for cfg in M.PRESETS.values():
+        cfg.validate()
+
+
+def test_prefill_shapes(setup):
+    _, tup, ids, _ = setup
+    logits, kv = M.prefill(tup, ids[:, :CFG.prompt_len], CFG)
+    assert logits.shape == (CFG.batch, CFG.vocab)
+    assert kv.shape == (CFG.n_layers, 2, CFG.batch, CFG.n_heads,
+                        CFG.max_len, CFG.d_head)
+
+
+def test_prefill_matches_full_forward(setup):
+    params, tup, ids, _ = setup
+    prompt = ids[:, :CFG.prompt_len]
+    last, _ = M.prefill(tup, prompt, CFG)
+    full = M.forward_full(params, prompt, CFG)
+    np.testing.assert_allclose(last, full[:, -1, :], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_chain_matches_full_forward(setup):
+    """Prefill + N decode steps must reproduce teacher-forced logits."""
+    params, tup, ids, _ = setup
+    upto = CFG.prompt_len + 16
+    sub = ids[:, :upto]
+    full = M.forward_full(params, sub, CFG)
+    _, kv = M.prefill(tup, ids[:, :CFG.prompt_len], CFG)
+    for t in range(CFG.prompt_len, upto):
+        step_logits, kv = M.decode_step(tup, kv, jnp.int32(t), ids[:, t],
+                                        CFG)
+        np.testing.assert_allclose(step_logits, full[:, t, :],
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_logprobs_shape_and_range(setup):
+    _, tup, ids, _ = setup
+    lp = M.token_logprobs(tup, ids, CFG)
+    assert lp.shape == (CFG.batch, CFG.max_len - 1)
+    assert float(lp.max()) <= 1e-5  # log-probabilities are <= 0
+    assert np.isfinite(np.asarray(lp)).all()
+
+
+def test_logprobs_sum_to_one(setup):
+    """exp(logprobs) over the vocab axis must be a distribution."""
+    params, _, ids, _ = setup
+    logits = M.forward_full(params, ids[:, :CFG.prompt_len], CFG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_train_step_moves_params_and_reduces_loss(setup):
+    """A few steps on a fixed batch with positive advantage must increase
+    the trajectory log-likelihood (the GRPO surrogate pushes it up)."""
+    _, tup, ids, rng = setup
+    m = tuple(jnp.zeros_like(p) for p in tup)
+    v = tuple(jnp.zeros_like(p) for p in tup)
+    step = jnp.float32(0.0)
+    adv = jnp.ones((CFG.batch,), dtype=jnp.float32)
+    mask = jnp.ones((CFG.batch, CFG.max_len - 1), dtype=jnp.float32)
+    old = M.token_logprobs(tup, ids, CFG)
+    ref = old
+    lp0 = float((old * mask).sum() / mask.sum())
+    cur = tup
+    for _ in range(3):
+        out = M.train_step(cur, m, v, step, ids, adv, old, ref, mask,
+                           jnp.float32(3e-4), CFG)
+        cur, m, v, step = out[0], out[1], out[2], out[3]
+        assert np.isfinite(float(out[4]))
+    lp1 = float((M.token_logprobs(cur, ids, CFG) * mask).sum() / mask.sum())
+    assert lp1 > lp0, (lp0, lp1)
+    assert float(step) == 3.0
+
+
+def test_train_step_zero_lr_is_identity(setup):
+    _, tup, ids, _ = setup
+    m = tuple(jnp.zeros_like(p) for p in tup)
+    v = tuple(jnp.zeros_like(p) for p in tup)
+    adv = jnp.ones((CFG.batch,), dtype=jnp.float32)
+    mask = jnp.ones((CFG.batch, CFG.max_len - 1), dtype=jnp.float32)
+    old = M.token_logprobs(tup, ids, CFG)
+    out = M.train_step(tup, m, v, jnp.float32(0.0), ids, adv, old, old,
+                       mask, jnp.float32(0.0), CFG)
+    for a, b in zip(out[0], tup):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 4, 8, 16)).astype(np.float32))
+    y = M.apply_rope(x, jnp.arange(8))
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE dot products depend only on relative position."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 16)).astype(np.float32))
+    def dot(pq, pk):
+        qr = M.apply_rope(q, jnp.int32(pq))
+        kr = M.apply_rope(k, jnp.int32(pk))
+        return float((qr * kr).sum())
+    np.testing.assert_allclose(dot(5, 3), dot(9, 7), rtol=1e-4)
+    np.testing.assert_allclose(dot(10, 0), dot(15, 5), rtol=1e-4)

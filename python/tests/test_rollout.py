@@ -1,0 +1,109 @@
+"""Fused on-device rollout (model.rollout): sampling semantics, EOS
+handling, and behaviour-logprob consistency with token_logprobs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = {k: jnp.asarray(v) for k, v in M.init_params(CFG).items()}
+    tup = M.params_to_tuple(params, CFG)
+    rng = np.random.default_rng(5)
+    prompt = jnp.asarray(rng.integers(
+        32, 120, size=(CFG.batch, CFG.prompt_len), dtype=np.int32))
+    return tup, prompt
+
+
+def test_rollout_shapes_and_prompt_preserved(setup):
+    tup, prompt = setup
+    ids, logp = M.rollout(tup, prompt, jnp.int32(7), jnp.float32(1.0), CFG)
+    assert ids.shape == (CFG.batch, CFG.max_len)
+    assert logp.shape == (CFG.batch, CFG.max_new_tokens)
+    np.testing.assert_array_equal(
+        np.asarray(ids[:, :CFG.prompt_len]), np.asarray(prompt))
+
+
+def test_rollout_greedy_ignores_seed(setup):
+    tup, prompt = setup
+    a, _ = M.rollout(tup, prompt, jnp.int32(1), jnp.float32(0.0), CFG)
+    b, _ = M.rollout(tup, prompt, jnp.int32(999), jnp.float32(0.0), CFG)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rollout_seed_changes_samples(setup):
+    tup, prompt = setup
+    a, _ = M.rollout(tup, prompt, jnp.int32(1), jnp.float32(1.0), CFG)
+    b, _ = M.rollout(tup, prompt, jnp.int32(2), jnp.float32(1.0), CFG)
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rollout_pad_after_eos(setup):
+    tup, prompt = setup
+    ids, logp = M.rollout(tup, prompt, jnp.int32(3), jnp.float32(1.2), CFG)
+    ids = np.asarray(ids)
+    logp = np.asarray(logp)
+    p = CFG.prompt_len
+    for r in range(CFG.batch):
+        resp = ids[r, p:]
+        eos_pos = np.where(resp == M.EOS_ID)[0]
+        if eos_pos.size:
+            after = resp[eos_pos[0] + 1:]
+            assert (after == M.PAD_ID).all(), f"row {r}: junk after EOS"
+            assert (logp[r, eos_pos[0] + 1:] == 0.0).all()
+
+
+def test_rollout_logp_matches_token_logprobs(setup):
+    """Sampling-time logps must equal the scoring path's logps — this is
+    the contract that lets the Rust engine skip the extra behaviour-policy
+    forward (EXPERIMENTS.md §Perf)."""
+    tup, prompt = setup
+    ids, logp = M.rollout(tup, prompt, jnp.int32(11), jnp.float32(1.0), CFG)
+    full = np.asarray(M.token_logprobs(tup, ids, CFG))
+    roll = np.asarray(logp)
+    ids = np.asarray(ids)
+    p = CFG.prompt_len
+    for r in range(CFG.batch):
+        for j in range(CFG.max_new_tokens):
+            tok = ids[r, p + j]
+            if tok == M.PAD_ID:
+                break
+            np.testing.assert_allclose(
+                full[r, p - 1 + j], roll[r, j], rtol=1e-3, atol=1e-4)
+            if tok == M.EOS_ID:
+                break
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       temp=st.sampled_from([0.5, 1.0, 2.0]))
+def test_sample_token_stays_in_topk(seed, temp):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32) * 3)
+    key = jax.random.PRNGKey(seed)
+    top_k = 8
+    tok, logp = M._sample_token(logits, key, jnp.float32(temp), top_k)
+    sorted_logits = np.sort(np.asarray(logits), axis=-1)
+    kth = sorted_logits[:, -top_k]
+    chosen = np.take_along_axis(
+        np.asarray(logits), np.asarray(tok)[:, None], axis=-1)[:, 0]
+    assert (chosen >= kth - 1e-6).all(), "sampled outside top-k"
+    # logp really is the full-softmax logprob
+    ref = chosen - np.log(np.exp(np.asarray(logits)).sum(axis=-1))
+    np.testing.assert_allclose(np.asarray(logp), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_sample_token_greedy_is_argmax():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    tok, _ = M._sample_token(logits, key, jnp.float32(0.0), 8)
+    np.testing.assert_array_equal(
+        np.asarray(tok), np.asarray(jnp.argmax(logits, axis=-1)))

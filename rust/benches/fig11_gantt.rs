@@ -1,0 +1,59 @@
+//! Fig. 11 reproduction: execution timeline (Gantt chart) of training
+//! and inference instances — 32B model, 512 NPUs, iterations 0–3 — plus
+//! the Fig. 7/8 illustrations at small scale (streaming overlap and the
+//! delayed-parameter-update pipelines).
+//!
+//! The paper's observation to reproduce: under the optimized async
+//! dataflow, RL tasks overlap substantially with minimal inter-task idle
+//! time; the sequential baseline shows large warm-up/cool-down bubbles.
+//!
+//! ```sh
+//! cargo bench --bench fig11_gantt
+//! ```
+
+use asyncflow::planner::{CostModel, DeviceSpec, LlmSpec};
+use asyncflow::simulator::{simulate, Mode, SimConfig};
+
+fn render(devices: usize, model: LlmSpec, mode: Mode, iters: usize) -> f64 {
+    let cost = CostModel::new(DeviceSpec::ascend_910b(), model);
+    let mut cfg = SimConfig::defaults(devices, mode);
+    cfg.iterations = iters;
+    cfg.rollout_instance_devices =
+        cost.model.min_devices().next_power_of_two().max(8);
+    cfg.train_instance_devices = cfg.rollout_instance_devices;
+    let r = simulate(&cfg, &cost);
+    println!(
+        "{} — {} devices, {} iterations, utilization {:.1}%:",
+        mode.label(),
+        devices,
+        iters,
+        100.0 * r.utilization
+    );
+    println!("{}", r.timeline.render_ascii(96));
+    r.utilization
+}
+
+fn main() {
+    println!("== Fig. 11: AsyncFlow workflow Gantt, 32B @ 512 NPUs ==\n");
+    let async_util =
+        render(512, LlmSpec::qwen_32b(), Mode::SeparatedAsync, 4);
+
+    println!("== Fig. 7 analogue: sequential vs streaming (7B @ 64) ==\n");
+    let seq_util =
+        render(64, LlmSpec::qwen_7b(), Mode::SeparatedSequential, 3);
+    render(64, LlmSpec::qwen_7b(), Mode::SeparatedStreaming, 3);
+
+    println!("== Fig. 8 analogue: on-policy vs one-step-async (7B @ 64) ==\n");
+    render(64, LlmSpec::qwen_7b(), Mode::SeparatedAsync, 3);
+
+    assert!(
+        async_util > seq_util,
+        "async overlap must beat sequential utilization"
+    );
+    println!(
+        "async utilization {:.1}% > sequential {:.1}% — minimal inter-task \
+         idling as in the paper's Fig. 11.",
+        100.0 * async_util,
+        100.0 * seq_util
+    );
+}

@@ -1,0 +1,67 @@
+//! Table 1 reproduction: performance-improvement breakdown for the 7B
+//! model on 512 NPUs.
+//!
+//! Paper: baseline (task-separated, sequential) = 1.0; + TransferQueue
+//! streaming = 2.01; + asynchronous workflow optimization = 2.74.
+//! We reproduce the same ablation ladder on the simulator and report
+//! normalized throughput; expected shape: monotone increase with a large
+//! TQ jump and a further async gain.
+//!
+//! ```sh
+//! cargo bench --bench table1_ablation
+//! ```
+
+use asyncflow::benchkit::Table;
+use asyncflow::planner::{plan, CostModel, DeviceSpec, LlmSpec, PlanRequest};
+use asyncflow::simulator::{simulate, Mode, SimConfig};
+
+fn main() {
+    println!("== Table 1: ablation, 7B @ 512 NPUs (simulated) ==\n");
+    let cost = CostModel::new(DeviceSpec::ascend_910b(), LlmSpec::qwen_7b());
+    let modes = [
+        ("1  Baseline (sequential task-separated)", Mode::SeparatedSequential),
+        ("2  w/ TransferQueue", Mode::SeparatedStreaming),
+        ("3  (2) + w/ Async.Opt", Mode::SeparatedAsync),
+    ];
+    // The paper's row 3 ("Asyn.Opt") bundles the delayed parameter
+    // update, overlapping, AND the task-resource-allocation strategy
+    // (§6.3) — so row 3 runs under the planner-chosen configuration
+    // while rows 1–2 use the default 50/50-class split.
+    let mut planned = PlanRequest::new(512);
+    planned.sim_iterations = 8;
+    let best = plan(&planned, &cost).best;
+    let mut rows = Vec::new();
+    for (label, mode) in modes {
+        let mut cfg = SimConfig::defaults(512, mode);
+        cfg.iterations = 12;
+        if mode == Mode::SeparatedAsync {
+            cfg.rollout_fraction = best.rollout_fraction;
+            cfg.rollout_instance_devices = best.rollout_instance_devices;
+            cfg.train_instance_devices = best.train_instance_devices;
+            cfg.micro_batch = best.micro_batch;
+        }
+        let r = simulate(&cfg, &cost);
+        rows.push((label, r.throughput_samples_per_s(), r.bubble_fraction()));
+    }
+    let base = rows[0].1;
+    let mut table = Table::new(&[
+        "No. Setting",
+        "samp/s",
+        "normalized",
+        "bubble frac",
+        "paper",
+    ]);
+    let paper = ["1.00", "2.01", "2.74"];
+    for (i, (label, thr, bubble)) in rows.iter().enumerate() {
+        table.row(&[
+            label.to_string(),
+            format!("{thr:.2}"),
+            format!("{:.2}", thr / base),
+            format!("{:.2}", bubble),
+            paper[i].to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    assert!(rows[1].1 > rows[0].1 && rows[2].1 > rows[1].1,
+        "ablation ladder must be monotone");
+}

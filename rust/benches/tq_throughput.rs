@@ -1,0 +1,160 @@
+//! TransferQueue micro-benchmarks (paper §3.5 high-concurrency design):
+//! ingest throughput, metadata-scan/assembly latency, storage-unit
+//! scaling, policy overhead, and multi-threaded producer/consumer
+//! throughput. This is the L3 hot path the §Perf pass optimizes.
+//!
+//! ```sh
+//! cargo bench --bench tq_throughput
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use asyncflow::benchkit::{bench, render_results, BenchResult};
+use asyncflow::transfer_queue::{
+    Column, TaskSpec, TokenBalanced, TransferQueue, Value,
+};
+use asyncflow::util::rng::Rng;
+
+fn tq(units: usize, policy_tb: bool) -> Arc<TransferQueue> {
+    let mut spec = TaskSpec::new("t", vec![Column::Responses]);
+    if policy_tb {
+        spec = spec.policy(Box::new(TokenBalanced));
+    }
+    TransferQueue::builder().storage_units(units).task(spec).build()
+}
+
+fn bench_ingest(units: usize) -> BenchResult {
+    let q = tq(units, false);
+    let payload: Vec<i32> = vec![7; 256];
+    bench(&format!("put_row 256-token row ({units} units)"), 100, 2000, || {
+        q.put_row(vec![(Column::Responses, Value::I32s(payload.clone()))])
+            .unwrap();
+    })
+}
+
+fn bench_assemble(units: usize, depth: usize) -> BenchResult {
+    let q = tq(units, false);
+    for _ in 0..depth {
+        q.put_row(vec![(Column::Responses, Value::I32s(vec![1; 64]))])
+            .unwrap();
+    }
+    let loader = q.loader("t", 0, vec![Column::Responses], 16, 16);
+    // Refill what each batch consumes so depth stays constant.
+    bench(
+        &format!("assemble+fetch b=16 (depth {depth}, {units} units)"),
+        10,
+        500,
+        || {
+            let batch = loader.try_next_batch().unwrap();
+            for _ in 0..batch.len() {
+                q.put_row(vec![(
+                    Column::Responses,
+                    Value::I32s(vec![1; 64]),
+                )])
+                .unwrap();
+            }
+        },
+    )
+}
+
+fn bench_policy_overhead() -> Vec<BenchResult> {
+    let mut out = Vec::new();
+    for (name, tb) in [("fcfs", false), ("token_balanced", true)] {
+        let q = tq(4, tb);
+        let mut rng = Rng::new(0);
+        for _ in 0..4096 {
+            let len = (rng.lognormal(4.0, 0.8) as usize).clamp(4, 512);
+            q.put_row(vec![(Column::Responses, Value::I32s(vec![1; len]))])
+                .unwrap();
+        }
+        let loader = q.loader("t", 0, vec![Column::Responses], 32, 32);
+        out.push(bench(
+            &format!("assemble b=32 from 4096 ready ({name})"),
+            5,
+            100,
+            || {
+                let batch = loader.try_next_batch().unwrap();
+                for row in &batch.rows {
+                    let len = row[0].as_i32s().unwrap().len();
+                    q.put_row(vec![(
+                        Column::Responses,
+                        Value::I32s(vec![1; len]),
+                    )])
+                    .unwrap();
+                }
+            },
+        ));
+    }
+    out
+}
+
+/// Multi-threaded end-to-end: P producers, C consumer groups, measure
+/// samples/s through the queue.
+fn concurrent_throughput(producers: usize, consumers: usize) -> f64 {
+    const PER_PRODUCER: usize = 4_000;
+    let total = producers * PER_PRODUCER;
+    let q = TransferQueue::builder()
+        .storage_units(4)
+        .task(TaskSpec::new("t", vec![Column::Responses]))
+        .build();
+    let consumed = Arc::new(AtomicUsize::new(0));
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let q = q.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(p as u64);
+            for _ in 0..PER_PRODUCER {
+                let len = (rng.lognormal(3.5, 0.6) as usize).clamp(4, 128);
+                q.put_row(vec![(
+                    Column::Responses,
+                    Value::I32s(vec![1; len]),
+                )])
+                .unwrap();
+            }
+        }));
+    }
+    let mut consumer_handles = Vec::new();
+    for g in 0..consumers {
+        let q = q.clone();
+        let consumed = consumed.clone();
+        consumer_handles.push(std::thread::spawn(move || {
+            let loader = q.loader("t", g, vec![Column::Responses], 32, 1);
+            while let Some(batch) = loader.next_batch() {
+                consumed.fetch_add(batch.len(), Ordering::Relaxed);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    while q.controller("t").consumed_count() < total {
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+    q.close();
+    for h in consumer_handles {
+        h.join().unwrap();
+    }
+    assert_eq!(consumed.load(Ordering::Relaxed), total);
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("== TransferQueue micro-benchmarks ==\n");
+    let mut results = Vec::new();
+    for units in [1usize, 2, 4, 8] {
+        results.push(bench_ingest(units));
+    }
+    for depth in [64usize, 1024, 8192] {
+        results.push(bench_assemble(4, depth));
+    }
+    results.extend(bench_policy_overhead());
+    print!("{}", render_results(&results));
+
+    println!("\nconcurrent streaming throughput (samples/s):");
+    for (p, c) in [(1, 1), (2, 2), (4, 4), (8, 4)] {
+        let thr = concurrent_throughput(p, c);
+        println!("  {p} producers x {c} consumer groups: {thr:>10.0}");
+    }
+}

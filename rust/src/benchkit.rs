@@ -1,0 +1,169 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations with mean/p50/p99 reporting, plus table rendering for the
+//! paper-reproduction benches.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_second(&self) -> f64 {
+        1.0 / self.mean_s.max(1e-12)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: s.len(),
+        mean_s: s.mean(),
+        p50_s: s.p50(),
+        p99_s: s.p99(),
+        std_s: s.std(),
+    }
+}
+
+/// Pretty duration.
+pub fn fmt_dur(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Render bench results as an aligned table.
+pub fn render_results(results: &[BenchResult]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<42} {:>8} {:>10} {:>10} {:>10}\n",
+        "benchmark", "iters", "mean", "p50", "p99"
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:<42} {:>8} {:>10} {:>10} {:>10}\n",
+            r.name,
+            r.iters,
+            fmt_dur(r.mean_s),
+            fmt_dur(r.p50_s),
+            fmt_dur(r.p99_s),
+        ));
+    }
+    out
+}
+
+/// Simple aligned table builder for paper-table reproduction output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:>w$}  "));
+            }
+            line.trim_end().to_string() + "\n"
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push_str(&format!(
+            "{}\n",
+            "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len())
+        ));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12, "warmup + iters executed");
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0 && r.p99_s >= r.p50_s);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(5e-9).ends_with("ns"));
+        assert!(fmt_dur(5e-6).ends_with("µs"));
+        assert!(fmt_dur(5e-3).ends_with("ms"));
+        assert!(fmt_dur(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["config", "throughput"]);
+        t.row(&["a".into(), "1.0".into()]);
+        t.row(&["long-config-name".into(), "2.0".into()]);
+        let s = t.render();
+        assert!(s.contains("long-config-name"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,181 @@
+//! Config system: typed run configs + a TOML-subset file format.
+//!
+//! The launcher (`asyncflow` CLI) reads `*.toml`-style files with
+//! `[section]` headers and `key = value` lines (strings, ints, floats,
+//! bools, flat arrays) — the subset needed for run configs, parsed by the
+//! hand-rolled parser in this module (serde/toml unavailable offline).
+
+mod parser;
+
+pub use parser::{ConfigDoc, ConfigError, ConfigValue};
+
+use anyhow::{bail, Result};
+
+/// Top-level RL run configuration (user-level knobs; paper §5.1/§6.1).
+#[derive(Debug, Clone)]
+pub struct RlConfig {
+    /// Artifact preset name (must match `make artifacts`).
+    pub preset: String,
+    /// Training iterations (actor updates) to run.
+    pub iterations: usize,
+    /// Samples per global batch (must be a multiple of engine batch).
+    pub global_batch: usize,
+    /// GRPO group size G (responses per prompt).
+    pub group_size: usize,
+    pub lr: f32,
+    pub temperature: f32,
+    pub top_k: usize,
+    /// Async off-policy mode: max version lag between rollout and update
+    /// (paper §4.2: 1). `0` = strict on-policy synchronous.
+    pub staleness: u64,
+    /// Number of rollout (producer) workers.
+    pub rollout_workers: usize,
+    /// TransferQueue storage units.
+    pub storage_units: usize,
+    /// Load-balancing policy: "fcfs" | "token_balanced" | "shortest_first".
+    pub policy: String,
+    pub seed: u64,
+}
+
+impl Default for RlConfig {
+    fn default() -> Self {
+        RlConfig {
+            preset: "tiny".into(),
+            iterations: 10,
+            global_batch: 32,
+            group_size: 4,
+            lr: 3e-4,
+            temperature: 1.0,
+            top_k: 32,
+            staleness: 1,
+            rollout_workers: 2,
+            storage_units: 2,
+            policy: "fcfs".into(),
+            seed: 0,
+        }
+    }
+}
+
+impl RlConfig {
+    /// Validate internal consistency against an engine batch size.
+    pub fn validate(&self, engine_batch: usize) -> Result<()> {
+        if self.global_batch == 0 || self.iterations == 0 {
+            bail!("global_batch and iterations must be positive");
+        }
+        if self.global_batch % engine_batch != 0 {
+            bail!(
+                "global_batch {} must be a multiple of engine batch {}",
+                self.global_batch,
+                engine_batch
+            );
+        }
+        if self.group_size == 0 {
+            bail!("group_size must be >= 1");
+        }
+        if engine_batch % self.group_size != 0
+            && self.group_size % engine_batch != 0
+            && self.global_batch % self.group_size != 0
+        {
+            bail!(
+                "group_size {} must divide global_batch {}",
+                self.group_size,
+                self.global_batch
+            );
+        }
+        if self.rollout_workers == 0 {
+            bail!("need at least one rollout worker");
+        }
+        match self.policy.as_str() {
+            "fcfs" | "token_balanced" | "shortest_first" => {}
+            p => bail!("unknown policy {p:?}"),
+        }
+        Ok(())
+    }
+
+    /// Load from a parsed config document ([rl] section).
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self> {
+        let mut c = RlConfig::default();
+        if let Some(s) = doc.section("rl") {
+            if let Some(v) = s.get("preset") {
+                c.preset = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("iterations") {
+                c.iterations = v.as_usize()?;
+            }
+            if let Some(v) = s.get("global_batch") {
+                c.global_batch = v.as_usize()?;
+            }
+            if let Some(v) = s.get("group_size") {
+                c.group_size = v.as_usize()?;
+            }
+            if let Some(v) = s.get("lr") {
+                c.lr = v.as_f64()? as f32;
+            }
+            if let Some(v) = s.get("temperature") {
+                c.temperature = v.as_f64()? as f32;
+            }
+            if let Some(v) = s.get("top_k") {
+                c.top_k = v.as_usize()?;
+            }
+            if let Some(v) = s.get("staleness") {
+                c.staleness = v.as_usize()? as u64;
+            }
+            if let Some(v) = s.get("rollout_workers") {
+                c.rollout_workers = v.as_usize()?;
+            }
+            if let Some(v) = s.get("storage_units") {
+                c.storage_units = v.as_usize()?;
+            }
+            if let Some(v) = s.get("policy") {
+                c.policy = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("seed") {
+                c.seed = v.as_usize()? as u64;
+            }
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        RlConfig::default().validate(8).unwrap();
+    }
+
+    #[test]
+    fn batch_divisibility_enforced() {
+        let mut c = RlConfig::default();
+        c.global_batch = 30;
+        assert!(c.validate(8).is_err());
+        c.global_batch = 32;
+        assert!(c.validate(8).is_ok());
+    }
+
+    #[test]
+    fn unknown_policy_rejected() {
+        let mut c = RlConfig::default();
+        c.policy = "random".into();
+        assert!(c.validate(8).is_err());
+    }
+
+    #[test]
+    fn from_doc_overrides_defaults() {
+        let doc = ConfigDoc::parse(
+            "[rl]\npreset = \"small\"\niterations = 42\nlr = 0.001\n\
+             policy = \"token_balanced\"\nstaleness = 0\n",
+        )
+        .unwrap();
+        let c = RlConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.preset, "small");
+        assert_eq!(c.iterations, 42);
+        assert!((c.lr - 0.001).abs() < 1e-9);
+        assert_eq!(c.policy, "token_balanced");
+        assert_eq!(c.staleness, 0);
+        // untouched default
+        assert_eq!(c.group_size, 4);
+    }
+}

@@ -1,0 +1,233 @@
+//! TOML-subset parser: `[section]` headers, `key = value` entries,
+//! `#` comments. Values: quoted strings, booleans, integers, floats, and
+//! flat arrays of those.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("config error on line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A scalar or flat-array config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<ConfigValue>),
+}
+
+impl ConfigValue {
+    pub fn as_str(&self) -> anyhow::Result<&str> {
+        match self {
+            ConfigValue::Str(s) => Ok(s),
+            v => anyhow::bail!("expected string, got {v:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> anyhow::Result<usize> {
+        match self {
+            ConfigValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            v => anyhow::bail!("expected non-negative integer, got {v:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> anyhow::Result<f64> {
+        match self {
+            ConfigValue::Float(f) => Ok(*f),
+            ConfigValue::Int(i) => Ok(*i as f64),
+            v => anyhow::bail!("expected number, got {v:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> anyhow::Result<bool> {
+        match self {
+            ConfigValue::Bool(b) => Ok(*b),
+            v => anyhow::bail!("expected bool, got {v:?}"),
+        }
+    }
+}
+
+/// A parsed config document: section -> key -> value.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigDoc {
+    sections: BTreeMap<String, BTreeMap<String, ConfigValue>>,
+}
+
+impl ConfigDoc {
+    pub fn parse(src: &str) -> Result<ConfigDoc, ConfigError> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = match raw.find('#') {
+                // Only strip comments outside quotes (quick scan).
+                Some(pos) if !in_quotes(raw, pos) => &raw[..pos],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ConfigError {
+                line: lineno + 1,
+                msg: msg.to_string(),
+            };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header"))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|m| err(&m))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<ConfigDoc> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, ConfigValue>> {
+        self.sections.get(name)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&ConfigValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+}
+
+fn in_quotes(line: &str, pos: usize) -> bool {
+    line[..pos].bytes().filter(|&b| b == b'"').count() % 2 == 1
+}
+
+fn parse_value(s: &str) -> Result<ConfigValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(ConfigValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(ConfigValue::Arr(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(ConfigValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(ConfigValue::Bool(true)),
+        "false" => return Ok(ConfigValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(ConfigValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(ConfigValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = ConfigDoc::parse(
+            "# run config\n\
+             [rl]\n\
+             preset = \"tiny\"  # inline comment\n\
+             iterations = 5\n\
+             lr = 3e-4\n\
+             async = true\n\
+             sizes = [1, 2, 3]\n\
+             \n\
+             [cluster]\n\
+             npus = 32\n",
+        )
+        .unwrap();
+        assert_eq!(
+            doc.get("rl", "preset").unwrap().as_str().unwrap(),
+            "tiny"
+        );
+        assert_eq!(doc.get("rl", "iterations").unwrap().as_usize().unwrap(), 5);
+        assert!((doc.get("rl", "lr").unwrap().as_f64().unwrap() - 3e-4).abs()
+            < 1e-12);
+        assert!(doc.get("rl", "async").unwrap().as_bool().unwrap());
+        assert_eq!(
+            doc.get("rl", "sizes").unwrap(),
+            &ConfigValue::Arr(vec![
+                ConfigValue::Int(1),
+                ConfigValue::Int(2),
+                ConfigValue::Int(3)
+            ])
+        );
+        assert_eq!(doc.get("cluster", "npus").unwrap().as_usize().unwrap(), 32);
+        assert_eq!(doc.sections().count(), 2);
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = ConfigDoc::parse("[s]\nname = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s", "name").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = ConfigDoc::parse("[ok]\nkey value\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = ConfigDoc::parse("[bad\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(ConfigDoc::parse("[s]\nk = \n").is_err());
+        assert!(ConfigDoc::parse("[s]\nk = \"open\n").is_err());
+        assert!(ConfigDoc::parse("[s]\nk = zzz\n").is_err());
+    }
+
+    #[test]
+    fn keys_before_any_section_go_to_root() {
+        let doc = ConfigDoc::parse("x = 1\n[a]\ny = 2\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(doc.get("a", "y").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn type_coercion_errors() {
+        let doc = ConfigDoc::parse("[s]\ni = 3\nf = 1.5\n").unwrap();
+        assert!(doc.get("s", "i").unwrap().as_str().is_err());
+        assert!(doc.get("s", "f").unwrap().as_usize().is_err());
+        // int coerces to f64
+        assert_eq!(doc.get("s", "i").unwrap().as_f64().unwrap(), 3.0);
+    }
+}

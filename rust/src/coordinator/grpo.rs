@@ -1,0 +1,155 @@
+//! GRPO (Group Relative Policy Optimization) algorithm pieces that live
+//! in the coordinator: group-relative advantage estimation and group
+//! assembly. The token-level loss itself is the L1 Pallas kernel inside
+//! the `train_step` artifact.
+
+use std::collections::HashMap;
+
+use crate::transfer_queue::GlobalIndex;
+
+/// Group-relative advantages: (r_i - mean(r)) / (std(r) + eps).
+///
+/// GRPO's critic-free advantage signal (paper §6.1): every prompt is
+/// rolled out G times; rewards are normalized within the group.
+pub fn group_advantages(rewards: &[f32]) -> Vec<f32> {
+    let n = rewards.len();
+    if n == 0 {
+        return vec![];
+    }
+    let mean = rewards.iter().sum::<f32>() / n as f32;
+    if n == 1 {
+        return vec![0.0];
+    }
+    let var = rewards.iter().map(|r| (r - mean).powi(2)).sum::<f32>()
+        / n as f32;
+    let std = var.sqrt();
+    let denom = std + 1e-6;
+    rewards.iter().map(|r| (r - mean) / denom).collect()
+}
+
+/// Accumulates per-sample rewards until a group of size G completes, then
+/// releases the whole group for advantage computation. This is the
+/// group-assembly stage of the streaming pipeline: it deliberately holds
+/// *only* reward scalars + indices (metadata-scale state), never payloads.
+pub struct GroupAssembler {
+    group_size: usize,
+    pending: HashMap<u64, Vec<(GlobalIndex, f32)>>,
+}
+
+impl GroupAssembler {
+    pub fn new(group_size: usize) -> Self {
+        assert!(group_size >= 1);
+        GroupAssembler { group_size, pending: HashMap::new() }
+    }
+
+    /// Add one graded sample; if its group is now complete, returns the
+    /// group's `(index, advantage)` pairs.
+    pub fn add(
+        &mut self,
+        group: u64,
+        index: GlobalIndex,
+        reward: f32,
+    ) -> Option<Vec<(GlobalIndex, f32)>> {
+        let entry = self.pending.entry(group).or_default();
+        entry.push((index, reward));
+        if entry.len() < self.group_size {
+            return None;
+        }
+        let members = self.pending.remove(&group).unwrap();
+        let rewards: Vec<f32> = members.iter().map(|m| m.1).collect();
+        let advs = group_advantages(&rewards);
+        Some(
+            members
+                .into_iter()
+                .zip(advs)
+                .map(|((idx, _), a)| (idx, a))
+                .collect(),
+        )
+    }
+
+    /// Number of groups still waiting for members.
+    pub fn pending_groups(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Flush incomplete groups (end of stream) — advantages computed over
+    /// whatever members arrived.
+    pub fn flush(&mut self) -> Vec<Vec<(GlobalIndex, f32)>> {
+        let groups: Vec<u64> = self.pending.keys().copied().collect();
+        groups
+            .into_iter()
+            .map(|g| {
+                let members = self.pending.remove(&g).unwrap();
+                let rewards: Vec<f32> = members.iter().map(|m| m.1).collect();
+                let advs = group_advantages(&rewards);
+                members
+                    .into_iter()
+                    .zip(advs)
+                    .map(|((idx, _), a)| (idx, a))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advantages_are_zero_mean_unit_scale() {
+        let adv = group_advantages(&[1.0, 0.0, 1.0, 0.0]);
+        let mean: f32 = adv.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!(adv[0] > 0.0 && adv[1] < 0.0);
+        assert!((adv[0] + adv[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn uniform_rewards_give_zero_advantage() {
+        for adv in group_advantages(&[0.5; 8]) {
+            assert!(adv.abs() < 1e-3, "adv={adv}");
+        }
+    }
+
+    #[test]
+    fn degenerate_groups() {
+        assert!(group_advantages(&[]).is_empty());
+        assert_eq!(group_advantages(&[1.0]), vec![0.0]);
+    }
+
+    #[test]
+    fn assembler_releases_complete_groups() {
+        let mut ga = GroupAssembler::new(3);
+        assert!(ga.add(7, GlobalIndex(0), 1.0).is_none());
+        assert!(ga.add(7, GlobalIndex(1), 0.0).is_none());
+        let group = ga.add(7, GlobalIndex(2), 1.0).unwrap();
+        assert_eq!(group.len(), 3);
+        assert_eq!(ga.pending_groups(), 0);
+        // positive-reward members get positive advantage
+        let adv0 = group.iter().find(|(i, _)| i.0 == 0).unwrap().1;
+        let adv1 = group.iter().find(|(i, _)| i.0 == 1).unwrap().1;
+        assert!(adv0 > 0.0 && adv1 < 0.0);
+    }
+
+    #[test]
+    fn assembler_interleaves_groups() {
+        let mut ga = GroupAssembler::new(2);
+        assert!(ga.add(0, GlobalIndex(0), 1.0).is_none());
+        assert!(ga.add(1, GlobalIndex(2), 0.0).is_none());
+        assert_eq!(ga.pending_groups(), 2);
+        assert!(ga.add(1, GlobalIndex(3), 1.0).is_some());
+        assert!(ga.add(0, GlobalIndex(1), 0.0).is_some());
+        assert_eq!(ga.pending_groups(), 0);
+    }
+
+    #[test]
+    fn flush_releases_partials() {
+        let mut ga = GroupAssembler::new(4);
+        ga.add(0, GlobalIndex(0), 1.0);
+        ga.add(1, GlobalIndex(1), 0.5);
+        let flushed = ga.flush();
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(ga.pending_groups(), 0);
+    }
+}

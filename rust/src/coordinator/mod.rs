@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the paper's §4 producer–consumer asynchronous
+//! workflow over TransferQueue, plus the §5.1 user-level `Trainer`
+//! controller.
+//!
+//! * [`grpo`] — group-relative advantages + streaming group assembly.
+//! * [`param_update`] — WeightSender/WeightReceiver, delayed parameter
+//!   update, iteration staleness gate.
+//! * [`timeline`] — Gantt-chart span capture (Fig. 11).
+//! * [`trainer`] — the single algorithm controller wiring the task graph.
+
+pub mod grpo;
+pub mod param_update;
+pub mod timeline;
+pub mod trainer;
+
+pub use grpo::{group_advantages, GroupAssembler};
+pub use param_update::{
+    IterationGate, ParamStore, WeightReceiver, WeightSender,
+};
+pub use timeline::{Span, Timeline};
+pub use trainer::{EngineSet, TrainReport, Trainer};

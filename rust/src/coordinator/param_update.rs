@@ -1,0 +1,284 @@
+//! Parameter-update machinery (paper §4.2.2–§4.2.3).
+//!
+//! * [`ParamStore`] — the versioned host-memory staging area between the
+//!   training and inference "clusters": WeightSender publishes snapshots
+//!   (the D2H offload + host-network transfer), WeightReceivers read them.
+//! * [`WeightSender`] / [`WeightReceiver`] — the two ends. The receiver
+//!   implements the *delayed parameter update*: it never interrupts an
+//!   ongoing generation; the swap happens at a generation boundary via
+//!   [`WeightReceiver::maybe_swap`], exposing only the (cheap) pointer
+//!   swap — the paper's H2D load — on the rollout critical path.
+//! * [`IterationGate`] — the producer–consumer staleness control (§4.2.1):
+//!   data for global batch `j` may only be produced once iteration
+//!   `j - staleness` has completed. `staleness = 0` reproduces strict
+//!   on-policy synchronization; `staleness = 1` is the paper's
+//!   one-step-asynchronous workflow.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::runtime::{ParamSet, PolicyEngine};
+
+/// Versioned parameter staging area ("host memory" between clusters).
+pub struct ParamStore {
+    inner: Mutex<ParamSet>,
+    cv: Condvar,
+}
+
+impl ParamStore {
+    pub fn new(initial: ParamSet) -> Arc<Self> {
+        Arc::new(ParamStore {
+            inner: Mutex::new(initial),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Publish a new snapshot (monotonically increasing version).
+    pub fn publish(&self, params: ParamSet) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(
+            params.version >= g.version,
+            "parameter version must not regress ({} < {})",
+            params.version,
+            g.version
+        );
+        *g = params;
+        self.cv.notify_all();
+    }
+
+    /// Latest snapshot (cheap: Arc clone of tensors).
+    pub fn latest(&self) -> ParamSet {
+        self.inner.lock().unwrap().clone()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    /// Block until `version >= v` (sync-mode receiver barrier).
+    pub fn wait_for_version(&self, v: u64) -> ParamSet {
+        let mut g = self.inner.lock().unwrap();
+        while g.version < v {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.clone()
+    }
+}
+
+/// Training-cluster side: exports and publishes snapshots.
+pub struct WeightSender {
+    store: Arc<ParamStore>,
+}
+
+impl WeightSender {
+    pub fn new(store: Arc<ParamStore>) -> Self {
+        WeightSender { store }
+    }
+
+    /// Publish a snapshot exported from the train engine. In the paper's
+    /// async mode this models D2H offload + host-network transfer; the
+    /// `ParamSet` is already host-resident here so publish is the
+    /// transfer.
+    pub fn send(&self, params: ParamSet) {
+        self.store.publish(params);
+    }
+}
+
+/// Inference-cluster side: holds the rollout engine's current version and
+/// performs deferred swaps.
+pub struct WeightReceiver {
+    store: Arc<ParamStore>,
+    current_version: u64,
+}
+
+impl WeightReceiver {
+    pub fn new(store: Arc<ParamStore>) -> Self {
+        WeightReceiver { store, current_version: 0 }
+    }
+
+    pub fn current_version(&self) -> u64 {
+        self.current_version
+    }
+
+    /// Delayed update: called at a generation boundary. If a newer
+    /// snapshot is available, swap it into the engine (the paper's
+    /// "write to host memory while generating, load to NPU when the
+    /// current generation iteration completes"). Returns the new version
+    /// if a swap happened.
+    pub fn maybe_swap(&mut self, engine: &mut dyn PolicyEngine) -> Option<u64> {
+        let latest = self.store.latest();
+        if latest.version > self.current_version {
+            engine.set_params(latest.clone());
+            self.current_version = latest.version;
+            Some(latest.version)
+        } else {
+            None
+        }
+    }
+
+    /// Sync-mode swap: block until `version >= v`, then swap.
+    pub fn swap_to_at_least(
+        &mut self,
+        engine: &mut dyn PolicyEngine,
+        v: u64,
+    ) -> u64 {
+        if self.current_version >= v {
+            return self.current_version;
+        }
+        let params = self.store.wait_for_version(v);
+        self.current_version = params.version;
+        engine.set_params(params);
+        self.current_version
+    }
+}
+
+/// Producer–consumer staleness gate over training iterations.
+pub struct IterationGate {
+    done: Mutex<u64>,
+    cv: Condvar,
+    staleness: u64,
+}
+
+impl IterationGate {
+    pub fn new(staleness: u64) -> Arc<Self> {
+        Arc::new(IterationGate {
+            done: Mutex::new(0),
+            cv: Condvar::new(),
+            staleness,
+        })
+    }
+
+    pub fn staleness(&self) -> u64 {
+        self.staleness
+    }
+
+    /// Iterations completed so far.
+    pub fn completed(&self) -> u64 {
+        *self.done.lock().unwrap()
+    }
+
+    /// Mark iteration complete (monotone counter).
+    pub fn complete_iteration(&self) {
+        let mut g = self.done.lock().unwrap();
+        *g += 1;
+        self.cv.notify_all();
+    }
+
+    /// Block until producing data for global batch `iter` (0-based) is
+    /// admissible: `iter <= completed + staleness`. Returns `false` if
+    /// `abort` flips while waiting.
+    pub fn wait_to_produce(
+        &self,
+        iter: u64,
+        abort: &crate::exec::Shutdown,
+    ) -> bool {
+        let mut g = self.done.lock().unwrap();
+        while iter > *g + self.staleness {
+            if abort.is_triggered() {
+                return false;
+            }
+            let (next, _) = self
+                .cv
+                .wait_timeout(g, Duration::from_millis(20))
+                .unwrap();
+            g = next;
+        }
+        !abort.is_triggered()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Shutdown;
+    use crate::runtime::MockEngine;
+
+    fn params(v: u64) -> ParamSet {
+        ParamSet::new(v, vec![])
+    }
+
+    #[test]
+    fn store_publish_and_latest() {
+        let store = ParamStore::new(params(0));
+        assert_eq!(store.version(), 0);
+        WeightSender::new(store.clone()).send(params(1));
+        assert_eq!(store.version(), 1);
+        assert_eq!(store.latest().version, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "must not regress")]
+    fn store_rejects_version_regression() {
+        let store = ParamStore::new(params(5));
+        store.publish(params(3));
+    }
+
+    #[test]
+    fn receiver_delayed_swap_at_boundary() {
+        let store = ParamStore::new(params(0));
+        let mut engine = MockEngine::new(2, 4, 8);
+        let mut rx = WeightReceiver::new(store.clone());
+        // nothing new -> no swap
+        assert_eq!(rx.maybe_swap(&mut engine), None);
+        store.publish(params(1));
+        store.publish(params(2)); // receiver only sees the latest
+        assert_eq!(rx.maybe_swap(&mut engine), Some(2));
+        assert_eq!(engine.params_version(), 2);
+        assert_eq!(rx.maybe_swap(&mut engine), None);
+    }
+
+    #[test]
+    fn receiver_sync_swap_blocks_until_version() {
+        let store = ParamStore::new(params(0));
+        let store2 = store.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            store2.publish(params(3));
+        });
+        let mut engine = MockEngine::new(2, 4, 8);
+        let mut rx = WeightReceiver::new(store.clone());
+        let v = rx.swap_to_at_least(&mut engine, 3);
+        assert_eq!(v, 3);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn gate_sync_blocks_next_iteration() {
+        let gate = IterationGate::new(0);
+        let abort = Shutdown::new();
+        assert!(gate.wait_to_produce(0, &abort), "iter 0 always admissible");
+        let gate2 = gate.clone();
+        let abort2 = abort.clone();
+        let h = std::thread::spawn(move || gate2.wait_to_produce(1, &abort2));
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!h.is_finished(), "iter 1 must block in sync mode");
+        gate.complete_iteration();
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn gate_async_allows_one_step_ahead() {
+        let gate = IterationGate::new(1);
+        let abort = Shutdown::new();
+        assert!(gate.wait_to_produce(1, &abort), "one step ahead ok");
+        let gate2 = gate.clone();
+        let abort2 = abort.clone();
+        let h = std::thread::spawn(move || gate2.wait_to_produce(2, &abort2));
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!h.is_finished(), "two steps ahead must block");
+        gate.complete_iteration();
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn gate_abort_unblocks() {
+        let gate = IterationGate::new(0);
+        let abort = Shutdown::new();
+        let gate2 = gate.clone();
+        let abort2 = abort.clone();
+        let h = std::thread::spawn(move || gate2.wait_to_produce(5, &abort2));
+        std::thread::sleep(Duration::from_millis(20));
+        abort.trigger();
+        assert!(!h.join().unwrap(), "aborted wait returns false");
+    }
+}

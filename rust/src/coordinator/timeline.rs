@@ -1,0 +1,206 @@
+//! Execution-timeline capture: every worker records (phase, start, end)
+//! spans; the result renders as the paper's Fig. 11 Gantt chart and backs
+//! the bubble-fraction measurements in EXPERIMENTS.md.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One recorded span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub worker: String,
+    pub phase: String,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+impl Span {
+    pub fn duration(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// Thread-safe span recorder with a shared epoch.
+pub struct Timeline {
+    start: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline { start: Instant::now(), spans: Mutex::new(Vec::new()) }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Record a closed span with explicit times (used by the simulator,
+    /// which has its own virtual clock).
+    pub fn record(&self, worker: &str, phase: &str, t0: f64, t1: f64) {
+        assert!(t1 >= t0, "span ends before it starts: {t0} > {t1}");
+        self.spans.lock().unwrap().push(Span {
+            worker: worker.to_string(),
+            phase: phase.to_string(),
+            t0,
+            t1,
+        });
+    }
+
+    /// Time a closure against the wall clock.
+    pub fn time<T>(
+        &self,
+        worker: &str,
+        phase: &str,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        let t0 = self.now();
+        let out = f();
+        self.record(worker, phase, t0, self.now());
+        out
+    }
+
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    pub fn workers(&self) -> Vec<String> {
+        let mut ws: Vec<String> = self
+            .spans
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.worker.clone())
+            .collect();
+        ws.sort();
+        ws.dedup();
+        ws
+    }
+
+    /// Busy fraction of one worker over [0, horizon].
+    pub fn utilization(&self, worker: &str, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self
+            .spans
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.worker == worker)
+            .map(Span::duration)
+            .sum();
+        (busy / horizon).min(1.0)
+    }
+
+    /// Latest span end (makespan).
+    pub fn horizon(&self) -> f64 {
+        self.spans
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.t1)
+            .fold(0.0, f64::max)
+    }
+
+    /// ASCII Gantt chart (Fig. 11 rendering): one row per worker, `width`
+    /// character cells across the makespan; cells show the phase initial.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let horizon = self.horizon();
+        if horizon <= 0.0 {
+            return String::from("(empty timeline)\n");
+        }
+        let spans = self.spans();
+        let mut out = String::new();
+        let name_w = self
+            .workers()
+            .iter()
+            .map(String::len)
+            .max()
+            .unwrap_or(0)
+            .max(8);
+        for worker in self.workers() {
+            let mut row = vec![' '; width];
+            for s in spans.iter().filter(|s| s.worker == worker) {
+                let a = ((s.t0 / horizon) * width as f64) as usize;
+                let b = (((s.t1 / horizon) * width as f64).ceil() as usize)
+                    .min(width);
+                let ch = s.phase.chars().next().unwrap_or('#');
+                for cell in row.iter_mut().take(b).skip(a.min(width)) {
+                    *cell = ch;
+                }
+            }
+            out.push_str(&format!(
+                "{worker:>name_w$} |{}|\n",
+                row.iter().collect::<String>()
+            ));
+        }
+        out.push_str(&format!(
+            "{:>name_w$}  0.0s{:>w$}\n",
+            "",
+            format!("{horizon:.2}s"),
+            w = width
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let tl = Timeline::new();
+        tl.record("w0", "generate", 0.0, 1.0);
+        tl.record("w0", "idle", 1.0, 1.5);
+        tl.record("w1", "train", 0.5, 2.0);
+        assert_eq!(tl.spans().len(), 3);
+        assert_eq!(tl.workers(), vec!["w0", "w1"]);
+        assert!((tl.horizon() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        let tl = Timeline::new();
+        tl.record("w", "a", 0.0, 1.0);
+        tl.record("w", "a", 3.0, 4.0);
+        assert!((tl.utilization("w", 4.0) - 0.5).abs() < 1e-12);
+        assert_eq!(tl.utilization("none", 4.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ends before it starts")]
+    fn negative_span_rejected() {
+        let tl = Timeline::new();
+        tl.record("w", "a", 2.0, 1.0);
+    }
+
+    #[test]
+    fn time_closure_records() {
+        let tl = Timeline::new();
+        let v = tl.time("w", "op", || 42);
+        assert_eq!(v, 42);
+        let spans = tl.spans();
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].t1 >= spans[0].t0);
+    }
+
+    #[test]
+    fn ascii_render_has_one_row_per_worker() {
+        let tl = Timeline::new();
+        tl.record("rollout-0", "generate", 0.0, 2.0);
+        tl.record("train-0", "train", 1.0, 3.0);
+        let s = tl.render_ascii(40);
+        assert!(s.contains("rollout-0"));
+        assert!(s.contains("train-0"));
+        assert!(s.contains('g'));
+        assert!(s.contains('t'));
+    }
+}

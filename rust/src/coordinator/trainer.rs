@@ -1,0 +1,772 @@
+//! The user-level `Trainer` (paper §5.1): the single algorithm controller
+//! that wires the GRPO task graph through TransferQueue and runs the
+//! producer–consumer asynchronous workflow.
+//!
+//! Task graph (one worker thread per box; R rollout producers):
+//!
+//! ```text
+//!  feeder ──Prompts──▶ rollout(×R) ──Responses,OldLogp──▶ reference ──RefLogp──▶
+//!                                   └─▶ reward ──Rewards──▶ advantage ──Advantages──▶ update
+//! ```
+//!
+//! Every edge is a TransferQueue column; every consumer pulls ready
+//! samples at micro-batch granularity, which is what makes the stages
+//! overlap (paper §4.1, Fig. 7). The update worker completes an iteration
+//! every `global_batch / B` steps, publishes new weights through the
+//! WeightSender, and bumps the IterationGate; the feeder blocks on the
+//! gate so rollout never runs more than `staleness` iterations ahead
+//! (§4.2).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::RlConfig;
+use crate::data::{self, MathTaskGen, EOS, PAD};
+use crate::exec::{Shutdown, WorkerPool};
+use crate::metrics::Registry;
+use crate::runtime::{
+    ParamSet, PolicyEngine, Sampler, TrainBatch, TrainEngine,
+};
+use crate::transfer_queue::{
+    Column, Fcfs, Policy, ShortestFirst, TaskSpec, TokenBalanced,
+    TransferQueue, Value,
+};
+
+use super::grpo::GroupAssembler;
+use super::param_update::{
+    IterationGate, ParamStore, WeightReceiver, WeightSender,
+};
+use super::timeline::Timeline;
+
+/// Factory constructing a policy engine *inside* its worker thread. The
+/// PJRT client types are not `Send`, so engines are thread-confined: the
+/// factory captures only plain data (artifact paths, geometry) and each
+/// worker builds its own engine + PJRT client.
+pub type PolicyFactory =
+    Box<dyn FnOnce() -> Result<Box<dyn PolicyEngine>> + Send>;
+/// Factory for the train engine (same thread-confinement rule).
+pub type TrainFactory =
+    Box<dyn FnOnce() -> Result<Box<dyn TrainEngine>> + Send>;
+
+/// Engine bundle the Trainer orchestrates (backend-agnostic: any
+/// [`PolicyEngine`]/[`TrainEngine`] impls — paper §5.2).
+pub struct EngineSet {
+    /// One policy-engine factory per rollout worker (same initial
+    /// weights).
+    pub rollout: Vec<PolicyFactory>,
+    /// Frozen-reference scorer factory.
+    pub reference: PolicyFactory,
+    /// The single train engine factory (owns master weights + optimizer).
+    pub train: TrainFactory,
+    /// Initial parameter snapshot (version 0).
+    pub initial_params: ParamSet,
+    /// Engine geometry (identical across all engines of the set).
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub max_len: usize,
+}
+
+/// Result of a training run.
+pub struct TrainReport {
+    pub iterations: u64,
+    pub wall_time_s: f64,
+    pub samples_trained: u64,
+    pub tokens_trained: u64,
+    pub final_reward: f64,
+    pub metrics: Arc<Registry>,
+    pub timeline: Arc<Timeline>,
+}
+
+impl TrainReport {
+    pub fn throughput_samples_per_s(&self) -> f64 {
+        self.samples_trained as f64 / self.wall_time_s.max(1e-9)
+    }
+
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        self.tokens_trained as f64 / self.wall_time_s.max(1e-9)
+    }
+}
+
+fn policy_by_name(name: &str) -> Box<dyn Policy> {
+    match name {
+        "token_balanced" => Box::new(TokenBalanced),
+        "shortest_first" => Box::new(ShortestFirst),
+        _ => Box::new(Fcfs),
+    }
+}
+
+fn col(name: &str) -> Column {
+    Column::Custom(name.to_string())
+}
+
+/// The single-controller GRPO trainer.
+pub struct Trainer {
+    cfg: RlConfig,
+    engines: EngineSet,
+}
+
+impl Trainer {
+    pub fn new(cfg: RlConfig, engines: EngineSet) -> Result<Self> {
+        cfg.validate(engines.batch)?;
+        if engines.rollout.is_empty() {
+            anyhow::bail!("need at least one rollout engine");
+        }
+        Ok(Trainer { cfg, engines })
+    }
+
+    /// Build the TransferQueue for the GRPO task graph.
+    fn build_tq(cfg: &RlConfig) -> Arc<TransferQueue> {
+        TransferQueue::builder()
+            .storage_units(cfg.storage_units)
+            .task(
+                TaskSpec::new("rollout", vec![Column::Prompts])
+                    .policy(policy_by_name(&cfg.policy)),
+            )
+            .task(TaskSpec::new("reference", vec![Column::Responses]))
+            .task(TaskSpec::new("reward", vec![Column::Responses]))
+            .task(TaskSpec::new("advantage", vec![Column::Rewards]))
+            .task(
+                TaskSpec::new(
+                    "train",
+                    vec![
+                        Column::Responses,
+                        Column::OldLogp,
+                        Column::RefLogp,
+                        Column::Advantages,
+                    ],
+                )
+                .policy(policy_by_name(&cfg.policy)),
+            )
+            .build()
+    }
+
+    /// Run the full workflow; returns when `cfg.iterations` actor updates
+    /// have completed.
+    pub fn run(self) -> Result<TrainReport> {
+        let Trainer { cfg, engines } = self;
+        let b = engines.batch;
+        let t_len = engines.max_len;
+        let p_len = engines.prompt_len;
+        let steps_per_iter = (cfg.global_batch / b) as u64;
+
+        let tq = Self::build_tq(&cfg);
+        let metrics = Arc::new(Registry::new());
+        let timeline = Arc::new(Timeline::new());
+        let shutdown = Shutdown::new();
+        let gate = IterationGate::new(cfg.staleness);
+        let store = ParamStore::new(engines.initial_params.clone());
+
+        let mut pool = WorkerPool::new();
+
+        // A failed worker must not stall the pipeline silently: trip the
+        // shutdown flag and close the queue so every stage drains.
+        let supervised = |shutdown: Shutdown,
+                          tq: Arc<TransferQueue>,
+                          f: Box<dyn FnOnce() -> Result<()> + Send>|
+         -> Box<dyn FnOnce() -> Result<()> + Send> {
+            Box::new(move || {
+                // Catch panics HERE (not only in WorkerPool): a panic
+                // that unwound past this wrapper would skip the
+                // queue-close below and leave every other stage blocked.
+                let result = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(f),
+                )
+                .unwrap_or_else(|panic| {
+                    let msg = panic
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| {
+                            panic
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                        })
+                        .unwrap_or_else(|| "<non-string panic>".into());
+                    Err(anyhow::anyhow!("worker panicked: {msg}"))
+                });
+                if result.is_err() {
+                    shutdown.trigger();
+                    tq.close();
+                }
+                result
+            })
+        };
+
+        // Fail fast on workload/geometry mismatches before spawning.
+        let feeder_gen = MathTaskGen::new(cfg.seed, p_len);
+        feeder_gen.validate()?;
+
+        // ------------------------------------------------------------------
+        // Feeder: ingests G-replicated prompts, gated on iteration staleness.
+        // ------------------------------------------------------------------
+        {
+            let tq = tq.clone();
+            let gate = gate.clone();
+            let shutdown = shutdown.clone();
+            let cfg2 = cfg.clone();
+            let timeline = timeline.clone();
+            let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
+                let mut gen = feeder_gen;
+                let prompts_per_iter = cfg2.global_batch / cfg2.group_size;
+                for iter in 0..cfg2.iterations as u64 {
+                    if !gate.wait_to_produce(iter, &shutdown) {
+                        break;
+                    }
+                    let t0 = timeline.now();
+                    for i in 0..prompts_per_iter {
+                        let task = gen.next_task();
+                        let group =
+                            iter * prompts_per_iter as u64 + i as u64;
+                        for _ in 0..cfg2.group_size {
+                            tq.put_row(vec![
+                                (
+                                    Column::Prompts,
+                                    Value::I32s(task.prompt_tokens.clone()),
+                                ),
+                                (
+                                    col("answer"),
+                                    Value::Text(task.answer.to_string()),
+                                ),
+                                (col("group"), Value::U64(group)),
+                                (col("iter"), Value::U64(iter)),
+                            ])?;
+                        }
+                    }
+                    timeline.record("feeder", "ingest", t0, timeline.now());
+                }
+                Ok(())
+            }));
+            pool.spawn("feeder", body);
+        }
+
+        // ------------------------------------------------------------------
+        // Rollout producers: generate + behaviour-policy logprobs.
+        // ------------------------------------------------------------------
+        for (r, factory) in engines.rollout.into_iter().enumerate() {
+            let tq = tq.clone();
+            let shutdown = shutdown.clone();
+            let timeline = timeline.clone();
+            let metrics = metrics.clone();
+            let store2 = store.clone();
+            let cfg2 = cfg.clone();
+            let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
+                let worker = format!("rollout-{r}");
+                let mut engine = factory()?;
+                let mut receiver = WeightReceiver::new(store2);
+                let mut sampler = Sampler::new(
+                    cfg2.temperature,
+                    cfg2.top_k,
+                    cfg2.seed ^ (r as u64 + 1).wrapping_mul(0x9E37),
+                );
+                let loader =
+                    tq.loader("rollout", r, vec![Column::Prompts], b, b);
+                while !shutdown.is_triggered() {
+                    let Some(batch) = loader.next_batch() else { break };
+                    // Delayed parameter update: swap only at the
+                    // generation boundary (paper §4.2.2).
+                    if receiver.maybe_swap(engine.as_mut()).is_some() {
+                        metrics.inc("weight_swaps", 1);
+                    }
+                    let prompts: Vec<Vec<i32>> = batch
+                        .rows
+                        .iter()
+                        .map(|row| row[0].as_i32s().unwrap().to_vec())
+                        .collect();
+                    let t0 = timeline.now();
+                    let trajs =
+                        engine.generate(&prompts, &mut sampler, EOS, PAD)?;
+                    timeline.record(&worker, "generate", t0, timeline.now());
+
+                    // Behaviour-policy ("old") logprobs over the full
+                    // trajectories — same engine, same weights.
+                    let ids: Vec<Vec<i32>> =
+                        trajs.iter().map(|t| t.ids.clone()).collect();
+                    let t0 = timeline.now();
+                    let old_logp = engine.logprobs(&ids)?;
+                    timeline.record(&worker, "old_logp", t0, timeline.now());
+
+                    for ((idx, traj), lp) in batch
+                        .indices
+                        .iter()
+                        .zip(&trajs)
+                        .zip(&old_logp)
+                    {
+                        let resp = traj.ids
+                            [p_len..p_len + traj.response_len]
+                            .to_vec();
+                        // Store only the response-region slice of the
+                        // logp grid (variable length — no padding,
+                        // paper §3.5). Grid index P-1+k scores response
+                        // token k.
+                        let lp_slice = lp
+                            [p_len - 1..p_len - 1 + traj.response_len]
+                            .to_vec();
+                        metrics.inc("rollout_samples", 1);
+                        metrics
+                            .inc("rollout_tokens", traj.response_len as u64);
+                        tq.put(*idx, Column::Responses, Value::I32s(resp))?;
+                        tq.put(*idx, Column::OldLogp, Value::F32s(lp_slice))?;
+                        tq.put(
+                            *idx,
+                            col("version"),
+                            Value::U64(traj.policy_version),
+                        )?;
+                    }
+                }
+                Ok(())
+            }));
+            pool.spawn(format!("rollout-{r}"), body);
+        }
+
+        // ------------------------------------------------------------------
+        // Reference scorer.
+        // ------------------------------------------------------------------
+        {
+            let tq = tq.clone();
+            let timeline = timeline.clone();
+            let factory = engines.reference;
+            let shutdown = shutdown.clone();
+            let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
+                let mut engine = factory()?;
+                let loader = tq.loader(
+                    "reference",
+                    0,
+                    vec![Column::Prompts, Column::Responses],
+                    b,
+                    b,
+                );
+                while !shutdown.is_triggered() {
+                    let Some(batch) = loader.next_batch() else { break };
+                    let mut ids = Vec::with_capacity(batch.len());
+                    let mut resp_lens = Vec::with_capacity(batch.len());
+                    for row in &batch.rows {
+                        let prompt = row[0].as_i32s().unwrap();
+                        let resp = row[1].as_i32s().unwrap();
+                        let mut full = prompt.to_vec();
+                        full.extend_from_slice(resp);
+                        full.resize(t_len, PAD);
+                        resp_lens.push(resp.len());
+                        ids.push(full);
+                    }
+                    let t0 = timeline.now();
+                    let ref_logp = engine.logprobs(&ids)?;
+                    timeline.record("reference", "ref_logp", t0,
+                                    timeline.now());
+                    for ((idx, lp), rl) in batch
+                        .indices
+                        .iter()
+                        .zip(&ref_logp)
+                        .zip(&resp_lens)
+                    {
+                        let lp_slice =
+                            lp[p_len - 1..p_len - 1 + rl].to_vec();
+                        tq.put(*idx, Column::RefLogp, Value::F32s(lp_slice))?;
+                    }
+                }
+                Ok(())
+            }));
+            pool.spawn("reference", body);
+        }
+
+        // ------------------------------------------------------------------
+        // Reward grader (rule-based answer check).
+        // ------------------------------------------------------------------
+        {
+            let tq = tq.clone();
+            let timeline = timeline.clone();
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
+                let loader = tq.loader(
+                    "reward",
+                    0,
+                    vec![Column::Responses, col("answer")],
+                    b,
+                    1,
+                );
+                while !shutdown.is_triggered() {
+                    let Some(batch) = loader.next_batch() else { break };
+                    let t0 = timeline.now();
+                    for (idx, row) in
+                        batch.indices.iter().zip(&batch.rows)
+                    {
+                        let resp = row[0].as_i32s().unwrap();
+                        let answer: i64 = row[1]
+                            .as_text()
+                            .unwrap()
+                            .parse()
+                            .context("bad answer metadata")?;
+                        let reward = data::grade_response(resp, answer);
+                        metrics.record_now("reward", reward as f64);
+                        metrics
+                            .record_now("response_len", resp.len() as f64);
+                        tq.put(*idx, Column::Rewards, Value::F32(reward))?;
+                    }
+                    timeline.record("reward", "grade", t0, timeline.now());
+                }
+                Ok(())
+            }));
+            pool.spawn("reward", body);
+        }
+
+        // ------------------------------------------------------------------
+        // Advantage (GRPO group assembly + normalization).
+        // ------------------------------------------------------------------
+        {
+            let tq = tq.clone();
+            let shutdown = shutdown.clone();
+            let group_size = cfg.group_size;
+            let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
+                let loader = tq.loader(
+                    "advantage",
+                    0,
+                    vec![Column::Rewards, col("group")],
+                    b,
+                    1,
+                );
+                let mut assembler = GroupAssembler::new(group_size);
+                while !shutdown.is_triggered() {
+                    let Some(batch) = loader.next_batch() else { break };
+                    for (idx, row) in
+                        batch.indices.iter().zip(&batch.rows)
+                    {
+                        let reward = row[0].as_f32().unwrap();
+                        let group = row[1].as_u64().unwrap();
+                        if let Some(done) =
+                            assembler.add(group, *idx, reward)
+                        {
+                            for (midx, adv) in done {
+                                tq.put(
+                                    midx,
+                                    Column::Advantages,
+                                    Value::F32(adv),
+                                )?;
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            }));
+            pool.spawn("advantage", body);
+        }
+
+        // ------------------------------------------------------------------
+        // Update worker: the training loop + WeightSender + gate.
+        // ------------------------------------------------------------------
+        let update_handle = {
+            let tq = tq.clone();
+            let timeline = timeline.clone();
+            let metrics = metrics.clone();
+            let gate = gate.clone();
+            let sender = WeightSender::new(store.clone());
+            let factory = engines.train;
+            let cfg2 = cfg.clone();
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("update".into())
+                .spawn(move || -> Result<(u64, u64, u64)> {
+                    let mut engine = factory()?;
+                    let loader = tq.loader(
+                        "train",
+                        0,
+                        vec![
+                            Column::Prompts,
+                            Column::Responses,
+                            Column::OldLogp,
+                            Column::RefLogp,
+                            Column::Advantages,
+                        ],
+                        b,
+                        b,
+                    );
+                    let mut samples = 0u64;
+                    let mut tokens = 0u64;
+                    let mut iters_done = 0u64;
+                    let mut steps_in_iter = 0u64;
+                    'outer: while iters_done < cfg2.iterations as u64 {
+                        let Some(batch) = loader.next_batch() else {
+                            break 'outer;
+                        };
+                        let tb = build_train_batch(
+                            &batch, b, t_len, p_len, cfg2.lr,
+                        )?;
+                        let t0 = timeline.now();
+                        let tm = engine.train_step(&tb)?;
+                        timeline.record(
+                            "update", "train_step", t0, timeline.now(),
+                        );
+                        samples += b as u64;
+                        tokens += tb
+                            .mask
+                            .iter()
+                            .map(|row| {
+                                row.iter().sum::<f32>() as u64
+                            })
+                            .sum::<u64>();
+                        metrics.record_now("loss", tm.loss as f64);
+                        metrics.record_now("kl", tm.kl as f64);
+                        metrics.record_now("nll", tm.nll as f64);
+                        metrics
+                            .record_now("grad_norm", tm.grad_norm as f64);
+                        // Evict consumed rows (global-batch GC).
+                        tq.evict(&batch.indices);
+
+                        steps_in_iter += 1;
+                        if steps_in_iter == steps_per_iter {
+                            steps_in_iter = 0;
+                            iters_done += 1;
+                            // Publish weights BEFORE releasing the gate so
+                            // newly admitted prompts can only be rolled
+                            // out with version >= iters_done (on-policy
+                            // in sync mode).
+                            let t0 = timeline.now();
+                            sender.send(engine.export_params());
+                            timeline.record(
+                                "update",
+                                "weight_sync",
+                                t0,
+                                timeline.now(),
+                            );
+                            gate.complete_iteration();
+                            metrics.record_now(
+                                "iteration",
+                                iters_done as f64,
+                            );
+                        }
+                        if shutdown.is_triggered() {
+                            break;
+                        }
+                    }
+                    Ok((iters_done, samples, tokens))
+                })
+                .expect("spawning update worker")
+        };
+
+        // Wait for the update worker to finish all iterations, then tear
+        // down the streaming pipeline.
+        let update_result = update_handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("update worker panicked"));
+        // Tear the pipeline down before propagating any error so no
+        // worker is left blocked on the queue.
+        shutdown.trigger();
+        tq.close();
+        let (iters_done, samples, tokens) = update_result??;
+        pool.join()?;
+
+        let wall = timeline.now();
+        let reward_series = metrics.series("reward");
+        let final_reward = reward_series
+            .map(|s| s.tail_mean(0.25))
+            .unwrap_or(f64::NAN);
+        Ok(TrainReport {
+            iterations: iters_done,
+            wall_time_s: wall,
+            samples_trained: samples,
+            tokens_trained: tokens,
+            final_reward,
+            metrics,
+            timeline,
+        })
+    }
+}
+
+/// Assemble the fixed-geometry [`TrainBatch`] from variable-length TQ
+/// rows (restoring geometry from lengths — the receive side of the
+/// paper's no-padding transfer, §3.5).
+fn build_train_batch(
+    batch: &crate::transfer_queue::Batch,
+    b: usize,
+    t_len: usize,
+    p_len: usize,
+    lr: f32,
+) -> Result<TrainBatch> {
+    let mut ids = Vec::with_capacity(b);
+    let mut advantages = Vec::with_capacity(b);
+    let mut old_logp = Vec::with_capacity(b);
+    let mut ref_logp = Vec::with_capacity(b);
+    let mut mask = Vec::with_capacity(b);
+    for row in &batch.rows {
+        let prompt = row[0].as_i32s().context("prompts column")?;
+        let resp = row[1].as_i32s().context("responses column")?;
+        let old = row[2].as_f32s().context("old_logp column")?;
+        let rlp = row[3].as_f32s().context("ref_logp column")?;
+        let adv = row[4].as_f32(). context("advantages column")?;
+        let rl = resp.len();
+        anyhow::ensure!(old.len() == rl && rlp.len() == rl,
+            "logp slice length mismatch: resp={rl} old={} ref={}",
+            old.len(), rlp.len());
+
+        let mut full = prompt.to_vec();
+        full.extend_from_slice(resp);
+        full.resize(t_len, PAD);
+        ids.push(full);
+        advantages.push(adv);
+
+        let mut o = vec![0.0f32; t_len - 1];
+        let mut rf = vec![0.0f32; t_len - 1];
+        let mut m = vec![0.0f32; t_len - 1];
+        o[p_len - 1..p_len - 1 + rl].copy_from_slice(old);
+        rf[p_len - 1..p_len - 1 + rl].copy_from_slice(rlp);
+        for v in m.iter_mut().skip(p_len - 1).take(rl) {
+            *v = 1.0;
+        }
+        old_logp.push(o);
+        ref_logp.push(rf);
+        mask.push(m);
+    }
+    Ok(TrainBatch { ids, advantages, old_logp, ref_logp, mask, lr })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockEngine;
+
+    fn mock_engines(r: usize, b: usize, p: usize, t: usize) -> EngineSet {
+        EngineSet {
+            rollout: (0..r)
+                .map(|_| {
+                    Box::new(move || {
+                        Ok(Box::new(MockEngine::new(b, p, t))
+                            as Box<dyn PolicyEngine>)
+                    }) as PolicyFactory
+                })
+                .collect(),
+            reference: Box::new(move || {
+                Ok(Box::new(MockEngine::new(b, p, t))
+                    as Box<dyn PolicyEngine>)
+            }),
+            train: Box::new(move || {
+                Ok(Box::new(MockEngine::new(b, p, t))
+                    as Box<dyn TrainEngine>)
+            }),
+            initial_params: ParamSet::new(0, vec![]),
+            batch: b,
+            prompt_len: p,
+            max_len: t,
+        }
+    }
+
+    fn quick_cfg(iterations: usize, staleness: u64) -> RlConfig {
+        RlConfig {
+            iterations,
+            global_batch: 16,
+            group_size: 4,
+            rollout_workers: 2,
+            staleness,
+            storage_units: 2,
+            ..RlConfig::default()
+        }
+    }
+
+    #[test]
+    fn full_pipeline_runs_to_completion_async() {
+        let cfg = quick_cfg(3, 1);
+        let engines = mock_engines(2, 8, 16, 48);
+        let report = Trainer::new(cfg, engines).unwrap().run().unwrap();
+        assert_eq!(report.iterations, 3);
+        assert_eq!(report.samples_trained, 48);
+        assert!(report.tokens_trained > 0);
+        assert!(report.metrics.series("loss").unwrap().points.len() == 6);
+    }
+
+    #[test]
+    fn full_pipeline_runs_sync_mode() {
+        let cfg = quick_cfg(2, 0);
+        let engines = mock_engines(1, 8, 16, 48);
+        let report = Trainer::new(cfg, engines).unwrap().run().unwrap();
+        assert_eq!(report.iterations, 2);
+        assert_eq!(report.samples_trained, 32);
+    }
+
+    #[test]
+    fn weight_swaps_happen_in_async_mode() {
+        let cfg = quick_cfg(4, 1);
+        let engines = mock_engines(2, 8, 16, 48);
+        let report = Trainer::new(cfg, engines).unwrap().run().unwrap();
+        assert!(
+            report.metrics.counter("weight_swaps") > 0,
+            "rollout workers must pick up published weights"
+        );
+    }
+
+    #[test]
+    fn timeline_captures_all_stages() {
+        let cfg = quick_cfg(2, 1);
+        let engines = mock_engines(2, 8, 16, 48);
+        let report = Trainer::new(cfg, engines).unwrap().run().unwrap();
+        let workers = report.timeline.workers();
+        for expected in
+            ["feeder", "reference", "reward", "rollout-0", "update"]
+        {
+            assert!(
+                workers.iter().any(|w| w == expected),
+                "missing {expected} in {workers:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut cfg = quick_cfg(1, 1);
+        cfg.global_batch = 13; // not a multiple of 8
+        assert!(Trainer::new(cfg, mock_engines(1, 8, 16, 48)).is_err());
+    }
+
+    #[test]
+    fn build_train_batch_geometry() {
+        use crate::transfer_queue::{Batch, GlobalIndex};
+        let batch = Batch {
+            indices: vec![GlobalIndex(0)],
+            columns: vec![
+                Column::Prompts,
+                Column::Responses,
+                Column::OldLogp,
+                Column::RefLogp,
+                Column::Advantages,
+            ],
+            rows: vec![vec![
+                Value::I32s(vec![65, 66, 67, 68]), // prompt P=4
+                Value::I32s(vec![49, 10]),         // "1\n"
+                Value::F32s(vec![-0.5, -0.25]),
+                Value::F32s(vec![-0.5, -0.3]),
+                Value::F32(0.75),
+            ]],
+        };
+        let tb = build_train_batch(&batch, 1, 12, 4, 1e-4).unwrap();
+        assert_eq!(tb.ids[0].len(), 12);
+        assert_eq!(tb.ids[0][..6], [65, 66, 67, 68, 49, 10]);
+        assert_eq!(tb.ids[0][6..], [PAD; 6]);
+        assert_eq!(tb.mask[0].len(), 11);
+        // mask 1.0 exactly on grid indices 3,4 (scoring tokens 4,5)
+        let ones: Vec<usize> = tb.mask[0]
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v == 1.0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(ones, vec![3, 4]);
+        assert_eq!(tb.old_logp[0][3], -0.5);
+        assert_eq!(tb.old_logp[0][4], -0.25);
+        assert_eq!(tb.old_logp[0][0], 0.0);
+        assert_eq!(tb.advantages[0], 0.75);
+    }
+
+    #[test]
+    fn mismatched_logp_slice_rejected() {
+        use crate::transfer_queue::{Batch, GlobalIndex};
+        let batch = Batch {
+            indices: vec![GlobalIndex(0)],
+            columns: vec![],
+            rows: vec![vec![
+                Value::I32s(vec![65; 4]),
+                Value::I32s(vec![49, 10]),
+                Value::F32s(vec![-0.5]), // wrong length
+                Value::F32s(vec![-0.5, -0.3]),
+                Value::F32(0.75),
+            ]],
+        };
+        assert!(build_train_batch(&batch, 1, 12, 4, 1e-4).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Workload substrate: synthetic verifiable math tasks + byte tokenizer.
+//!
+//! Stand-in for the paper's DeepScaleR dataset (see DESIGN.md
+//! §Substitutions): GRPO needs prompts with *programmatically verifiable*
+//! answers, which integer arithmetic provides exactly — the reward path
+//! (parse the generated answer, compare) is the same rule-based check the
+//! paper's math workload uses.
+//!
+//! Prompts are rendered to a fixed width (left-padded) so the AOT prefill
+//! artifact's static `[B, P]` geometry holds, and answers terminate with
+//! a newline EOS.
+
+use crate::util::rng::Rng;
+
+/// Byte-level tokenizer: token id == byte value. PAD=0, EOS='\n'.
+pub const PAD: i32 = 0;
+pub const EOS: i32 = b'\n' as i32;
+
+/// Encode text to byte tokens.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+/// Decode tokens to text, stopping at PAD/EOS; non-ASCII bytes map to '?'.
+pub fn decode(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .take_while(|&&t| t != PAD && t != EOS)
+        .map(|&t| {
+            if (1..=255).contains(&t) {
+                t as u8 as char
+            } else {
+                '?'
+            }
+        })
+        .collect()
+}
+
+/// One verifiable task: fixed-width prompt tokens + ground-truth answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MathTask {
+    pub prompt_text: String,
+    pub prompt_tokens: Vec<i32>,
+    pub answer: i64,
+}
+
+/// Arithmetic task generator.
+#[derive(Debug, Clone)]
+pub struct MathTaskGen {
+    rng: Rng,
+    prompt_len: usize,
+    max_operand: u64,
+    ops: Vec<char>,
+}
+
+impl MathTaskGen {
+    pub fn new(seed: u64, prompt_len: usize) -> Self {
+        MathTaskGen {
+            rng: Rng::new(seed),
+            prompt_len,
+            max_operand: 99,
+            ops: vec!['+', '-'],
+        }
+    }
+
+    /// Minimum prompt width the current difficulty needs:
+    /// `"Q:" + operand + op + operand + "=? A:"`.
+    pub fn min_prompt_len(&self) -> usize {
+        2 * self.max_operand.to_string().len() + 8
+    }
+
+    /// Check the configured prompt width fits the task format.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.prompt_len >= self.min_prompt_len(),
+            "prompt_len {} too small for math tasks (need >= {})",
+            self.prompt_len,
+            self.min_prompt_len()
+        );
+        Ok(())
+    }
+
+    pub fn with_difficulty(mut self, max_operand: u64, mul: bool) -> Self {
+        self.max_operand = max_operand;
+        if mul && !self.ops.contains(&'*') {
+            self.ops.push('*');
+        }
+        self
+    }
+
+    /// Generate the next task. Prompt format (before left-padding):
+    /// `Q:047+012=? A:` — operands zero-padded to the max-operand width.
+    pub fn next_task(&mut self) -> MathTask {
+        let width = self.max_operand.to_string().len();
+        let a = self.rng.range_u64(0, self.max_operand) as i64;
+        let b = self.rng.range_u64(0, self.max_operand) as i64;
+        let op = self.ops[self.rng.below(self.ops.len())];
+        let answer = match op {
+            '+' => a + b,
+            '-' => a - b,
+            '*' => a * b,
+            _ => unreachable!(),
+        };
+        let body = format!("Q:{a:0width$}{op}{b:0width$}=? A:");
+        assert!(
+            body.len() <= self.prompt_len,
+            "prompt_len {} too small for task body {:?}",
+            self.prompt_len,
+            body
+        );
+        let prompt_text =
+            format!("{}{}", " ".repeat(self.prompt_len - body.len()), body);
+        let prompt_tokens = encode(&prompt_text);
+        debug_assert_eq!(prompt_tokens.len(), self.prompt_len);
+        MathTask { prompt_text, prompt_tokens, answer }
+    }
+}
+
+/// Rule-based reward for a generated response (paper: verifiable-answer
+/// scoring), with dense shaping so GRPO groups don't collapse to
+/// all-zero advantage when the policy starts from scratch:
+///
+/// * up to 0.2 — fraction of (trimmed) response characters that are
+///   numeric (`0-9` or a leading `-`);
+/// * +0.3 — the response parses as an integer;
+/// * +0.5 — the parsed integer equals the ground truth
+///   (total 1.0 for an exact well-formed answer).
+pub fn grade_response(response_tokens: &[i32], answer: i64) -> f32 {
+    let text = decode(response_tokens);
+    let trimmed = text.trim();
+    if trimmed.is_empty() {
+        return 0.0;
+    }
+    let numeric = trimmed
+        .chars()
+        .enumerate()
+        .filter(|(i, c)| c.is_ascii_digit() || (*i == 0 && *c == '-'))
+        .count();
+    let mut reward = 0.2 * numeric as f32 / trimmed.len() as f32;
+    if let Ok(v) = trimmed.parse::<i64>() {
+        reward += 0.3;
+        if v == answer {
+            reward += 0.5;
+        }
+    }
+    reward
+}
+
+/// Render an answer the way the target policy should produce it.
+pub fn render_answer(answer: i64) -> Vec<i32> {
+    let mut toks = encode(&answer.to_string());
+    toks.push(EOS);
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let toks = encode("Q:12+34=? A:");
+        assert_eq!(decode(&toks), "Q:12+34=? A:");
+    }
+
+    #[test]
+    fn decode_stops_at_eos_and_pad() {
+        let mut toks = encode("42");
+        toks.push(EOS);
+        toks.extend_from_slice(&[PAD, PAD]);
+        assert_eq!(decode(&toks), "42");
+    }
+
+    #[test]
+    fn prompts_have_fixed_width() {
+        let mut g = MathTaskGen::new(0, 32);
+        for _ in 0..100 {
+            let t = g.next_task();
+            assert_eq!(t.prompt_tokens.len(), 32);
+            assert!(t.prompt_text.ends_with("=? A:"));
+        }
+    }
+
+    #[test]
+    fn answers_are_correct() {
+        let mut g = MathTaskGen::new(1, 32);
+        for _ in 0..100 {
+            let t = g.next_task();
+            // Re-parse the prompt and check the arithmetic.
+            let body = t.prompt_text.trim_start();
+            let expr = &body[2..body.len() - 5]; // strip "Q:" and "=? A:"
+            let (a, op, b) = if let Some(p) = expr.find('+') {
+                (&expr[..p], '+', &expr[p + 1..])
+            } else {
+                let p = expr.rfind('-').unwrap();
+                (&expr[..p], '-', &expr[p + 1..])
+            };
+            let a: i64 = a.parse().unwrap();
+            let b: i64 = b.parse().unwrap();
+            let want = if op == '+' { a + b } else { a - b };
+            assert_eq!(t.answer, want, "prompt {:?}", t.prompt_text);
+        }
+    }
+
+    #[test]
+    fn grading_tiers() {
+        // exact, well-formed
+        assert_eq!(grade_response(&render_answer(46), 46), 1.0);
+        assert_eq!(grade_response(&encode(" 46 "), 46), 1.0);
+        assert_eq!(grade_response(&render_answer(-3), -3), 1.0);
+        // parseable but wrong: 0.2 (all digits) + 0.3 (parses)
+        assert!((grade_response(&render_answer(45), 46) - 0.5).abs() < 1e-6);
+        // non-numeric garbage
+        assert_eq!(grade_response(&encode("banana"), 46), 0.0);
+        assert_eq!(grade_response(&[], 46), 0.0);
+        // partial digit credit, no parse
+        let partial = grade_response(&encode("4x6b"), 46);
+        assert!(partial > 0.0 && partial < 0.2, "partial={partial}");
+        // shaping is monotone toward well-formedness
+        assert!(
+            grade_response(&render_answer(45), 46)
+                > grade_response(&encode("4x6b"), 46)
+        );
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mut a = MathTaskGen::new(7, 32);
+        let mut b = MathTaskGen::new(7, 32);
+        for _ in 0..10 {
+            assert_eq!(a.next_task(), b.next_task());
+        }
+    }
+
+    #[test]
+    fn difficulty_widens_operands() {
+        let mut g = MathTaskGen::new(0, 32).with_difficulty(999, true);
+        let mut saw_mul = false;
+        for _ in 0..200 {
+            let t = g.next_task();
+            saw_mul |= t.prompt_text.contains('*');
+        }
+        assert!(saw_mul);
+    }
+}

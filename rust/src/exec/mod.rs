@@ -1,0 +1,169 @@
+//! Execution substrate: worker pool + scoped process topology.
+//!
+//! The paper uses Ray for resource management; here the same roles
+//! (named long-running workers, graceful shutdown, join-with-error
+//! propagation) are provided over std threads (see DESIGN.md
+//! §Substitutions).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+/// Cooperative shutdown flag shared by all workers of a workflow.
+#[derive(Clone, Default)]
+pub struct Shutdown {
+    flag: Arc<AtomicBool>,
+}
+
+impl Shutdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn trigger(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_triggered(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// A named set of worker threads with error propagation on join.
+pub struct WorkerPool {
+    handles: Vec<(String, JoinHandle<Result<()>>)>,
+}
+
+impl WorkerPool {
+    pub fn new() -> Self {
+        WorkerPool { handles: Vec::new() }
+    }
+
+    /// Spawn a named worker.
+    pub fn spawn<F>(&mut self, name: impl Into<String>, f: F)
+    where
+        F: FnOnce() -> Result<()> + Send + 'static,
+    {
+        let name = name.into();
+        let name2 = name.clone();
+        let handle = std::thread::Builder::new()
+            .name(name.clone())
+            .spawn(move || {
+                // Convert panics into errors so a crashing worker is
+                // reported like any other failure.
+                let result = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(f),
+                )
+                .unwrap_or_else(|panic| {
+                    let msg = panic
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| {
+                            panic
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                        })
+                        .unwrap_or_else(|| "<non-string panic>".into());
+                    Err(anyhow::anyhow!("panicked: {msg}"))
+                });
+                if let Err(e) = &result {
+                    // Surface failures immediately — a silently dead
+                    // worker stalls the streaming pipeline.
+                    eprintln!("worker {name2:?} failed: {e:#}");
+                }
+                result
+            })
+            .expect("spawning worker thread");
+        self.handles.push((name, handle));
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Join all workers; returns the first error (with the worker name).
+    pub fn join(self) -> Result<()> {
+        let mut first_err: Option<anyhow::Error> = None;
+        for (name, h) in self.handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err =
+                            Some(e.context(format!("worker {name:?} failed")));
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!(
+                            "worker {name:?} panicked"
+                        ));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e).context("worker pool join"),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_run_and_join() {
+        let counter = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let mut pool = WorkerPool::new();
+        for i in 0..4 {
+            let c = counter.clone();
+            pool.spawn(format!("w{i}"), move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            });
+        }
+        pool.join().unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn worker_error_is_propagated_with_name() {
+        let mut pool = WorkerPool::new();
+        pool.spawn("ok", || Ok(()));
+        pool.spawn("bad", || anyhow::bail!("boom"));
+        let err = pool.join().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bad"), "missing worker name: {msg}");
+        assert!(msg.contains("boom"));
+    }
+
+    #[test]
+    fn panic_is_converted_to_error() {
+        let mut pool = WorkerPool::new();
+        pool.spawn("panicker", || panic!("aieee"));
+        assert!(pool.join().is_err());
+    }
+
+    #[test]
+    fn shutdown_flag_is_shared() {
+        let s = Shutdown::new();
+        let s2 = s.clone();
+        assert!(!s.is_triggered());
+        s2.trigger();
+        assert!(s.is_triggered());
+    }
+}

@@ -1,0 +1,132 @@
+//! Launcher: engine construction shared by the CLI, examples, and
+//! benches. Builds either the real PJRT engine set from the AOT artifact
+//! bundle, or the deterministic mock backend.
+//!
+//! Engines are produced as *factories* (see
+//! [`crate::coordinator::trainer::PolicyFactory`]): the xla crate's PJRT
+//! handles are not `Send`, so every worker thread constructs its own
+//! engine — its own PJRT client + compiled executables — from plain-data
+//! inputs captured by the factory closure.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::RlConfig;
+use crate::coordinator::trainer::{PolicyFactory, TrainFactory};
+use crate::coordinator::EngineSet;
+use crate::runtime::{
+    default_artifact_dir, Manifest, MockEngine, ParamSet, PolicyEngine,
+    TrainEngine, XlaArtifacts, XlaPolicyEngine, XlaRuntime, XlaTrainEngine,
+};
+
+/// Geometry of the mock backend (small enough that coordinator tests and
+/// scheduling benches are instant).
+pub const MOCK_BATCH: usize = 8;
+pub const MOCK_PROMPT: usize = 16;
+pub const MOCK_MAXLEN: usize = 48;
+
+fn xla_policy_factory(dir: PathBuf, initial: ParamSet) -> PolicyFactory {
+    Box::new(move || {
+        let manifest = Manifest::load(&dir)?;
+        let rt = XlaRuntime::cpu()?;
+        let arts = XlaArtifacts::load(&rt, manifest)?;
+        Ok(Box::new(XlaPolicyEngine::new(arts, initial))
+            as Box<dyn PolicyEngine>)
+    })
+}
+
+fn xla_train_factory(dir: PathBuf, initial: ParamSet) -> TrainFactory {
+    Box::new(move || {
+        let manifest = Manifest::load(&dir)?;
+        let rt = XlaRuntime::cpu()?;
+        let arts = XlaArtifacts::load(&rt, manifest)?;
+        Ok(Box::new(XlaTrainEngine::new(arts, &initial))
+            as Box<dyn TrainEngine>)
+    })
+}
+
+/// Build the engine set for a run. Returns (engines, engine batch size).
+pub fn build_engines(cfg: &RlConfig, mock: bool) -> Result<(EngineSet, usize)> {
+    if mock {
+        return Ok((build_mock_engines(cfg.rollout_workers), MOCK_BATCH));
+    }
+    let dir = default_artifact_dir();
+    // Load the manifest once up front for geometry + initial params
+    // (factories re-load it in their own threads).
+    let manifest = Manifest::load(&dir)?;
+    if manifest.preset != cfg.preset {
+        eprintln!(
+            "warning: artifacts are preset {:?}, config wants {:?} — \
+             using artifacts",
+            manifest.preset, cfg.preset
+        );
+    }
+    let initial = ParamSet::new(0, manifest.load_params()?);
+    let b = manifest.model.batch;
+    let engines = EngineSet {
+        rollout: (0..cfg.rollout_workers)
+            .map(|_| xla_policy_factory(dir.clone(), initial.clone()))
+            .collect(),
+        reference: xla_policy_factory(dir.clone(), initial.clone()),
+        train: xla_train_factory(dir.clone(), initial.clone()),
+        initial_params: initial,
+        batch: b,
+        prompt_len: manifest.model.prompt_len,
+        max_len: manifest.model.max_len,
+    };
+    Ok((engines, b))
+}
+
+/// Deterministic mock backend (no artifacts required).
+pub fn build_mock_engines(rollout_workers: usize) -> EngineSet {
+    let mk_policy = || -> PolicyFactory {
+        Box::new(|| {
+            Ok(Box::new(MockEngine::new(
+                MOCK_BATCH,
+                MOCK_PROMPT,
+                MOCK_MAXLEN,
+            )) as Box<dyn PolicyEngine>)
+        })
+    };
+    EngineSet {
+        rollout: (0..rollout_workers.max(1)).map(|_| mk_policy()).collect(),
+        reference: mk_policy(),
+        train: Box::new(|| {
+            Ok(Box::new(MockEngine::new(
+                MOCK_BATCH,
+                MOCK_PROMPT,
+                MOCK_MAXLEN,
+            )) as Box<dyn TrainEngine>)
+        }),
+        initial_params: ParamSet::new(0, vec![]),
+        batch: MOCK_BATCH,
+        prompt_len: MOCK_PROMPT,
+        max_len: MOCK_MAXLEN,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_engines_match_declared_geometry() {
+        let e = build_mock_engines(3);
+        assert_eq!(e.rollout.len(), 3);
+        assert_eq!(e.batch, MOCK_BATCH);
+        assert_eq!(e.prompt_len, MOCK_PROMPT);
+        assert_eq!(e.max_len, MOCK_MAXLEN);
+        // factories actually construct working engines
+        let engine = (e.reference)().unwrap();
+        assert_eq!(engine.batch_size(), MOCK_BATCH);
+    }
+
+    #[test]
+    fn build_engines_mock_path() {
+        let cfg = RlConfig::default();
+        let (e, b) = build_engines(&cfg, true).unwrap();
+        assert_eq!(b, MOCK_BATCH);
+        assert_eq!(e.rollout.len(), cfg.rollout_workers);
+    }
+}

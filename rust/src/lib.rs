@@ -1,0 +1,37 @@
+//! AsyncFlow — asynchronous streaming RL post-training framework.
+//!
+//! Reproduction of *AsyncFlow: An Asynchronous Streaming RL Framework for
+//! Efficient LLM Post-Training* (Han, You, et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack. This crate is Layer 3: the coordinator that
+//! owns the event loop, the TransferQueue streaming dataloader, the
+//! producer–consumer asynchronous workflow, the resource planner, and the
+//! cluster simulator used for the paper's large-scale experiments.
+//!
+//! Layers 2 (JAX model) and 1 (Pallas kernels) live in `python/compile/`
+//! and are AOT-lowered once into `artifacts/*.hlo.txt`; the [`runtime`]
+//! module loads and executes them via the PJRT C API. Python is never on
+//! the request path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! * [`transfer_queue`] — §3 TransferQueue: control plane + data plane.
+//! * [`coordinator`] — §4 async workflow, delayed parameter update, GRPO.
+//! * [`runtime`] — PJRT execution of the AOT artifacts; Engine adapters.
+//! * [`planner`] — §4.3 hybrid cost model + resource search.
+//! * [`simulator`] — discrete-event cluster simulator (Fig 10/11, Table 1).
+//! * [`service`] — §5 service-oriented user interface.
+//! * [`data`] — synthetic verifiable math workload + tokenizer.
+
+pub mod benchkit;
+pub mod config;
+
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod launcher;
+pub mod metrics;
+pub mod planner;
+pub mod runtime;
+pub mod service;
+pub mod simulator;
+pub mod transfer_queue;
+pub mod util;

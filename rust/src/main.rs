@@ -1,0 +1,250 @@
+//! `asyncflow` — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//! * `train`    — run GRPO post-training on the real three-layer stack
+//!   (AOT artifacts via PJRT) or the mock backend.
+//! * `simulate` — cluster-scale simulation (Fig. 10 / Table 1 modes).
+//! * `plan`     — resource planner (paper §4.3).
+//! * `gantt`    — simulated execution timeline (Fig. 11).
+//! * `info`     — artifact bundle + PJRT platform info.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use asyncflow::config::{ConfigDoc, RlConfig};
+use asyncflow::coordinator::Trainer;
+use asyncflow::launcher::build_engines;
+use asyncflow::planner::{plan, CostModel, DeviceSpec, LlmSpec, PlanRequest};
+use asyncflow::runtime::{default_artifact_dir, Manifest, XlaRuntime};
+use asyncflow::simulator::{simulate, Mode, SimConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` and `--flag` pairs after the
+/// subcommand.
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let value = if i + 1 < args.len()
+                && !args[i + 1].starts_with("--")
+            {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), value);
+        }
+        i += 1;
+    }
+    flags
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "train" => cmd_train(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "plan" => cmd_plan(&flags),
+        "gantt" => cmd_gantt(&flags),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `asyncflow help`)"),
+    }
+}
+
+const HELP: &str = "\
+asyncflow — asynchronous streaming RL post-training (paper reproduction)
+
+USAGE: asyncflow <command> [--flags]
+
+COMMANDS:
+  train     --iterations N --global-batch N --staleness {0|1} --mock
+            --rollout-workers N --policy {fcfs|token_balanced|shortest_first}
+            --config file.toml
+  simulate  --devices N --model {7b|32b} --mode {colocated|sequential|streaming|async|substep}
+            --iterations N
+  plan      --devices N --model {7b|32b}
+  gantt     --devices N --model {7b|32b} --mode ... --width N
+  info
+";
+
+fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize)
+    -> Result<usize>
+{
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+    }
+}
+
+fn model_by_name(name: &str) -> Result<LlmSpec> {
+    Ok(match name {
+        "7b" => LlmSpec::qwen_7b(),
+        "32b" => LlmSpec::qwen_32b(),
+        other => bail!("unknown model {other:?} (7b|32b)"),
+    })
+}
+
+fn mode_by_name(name: &str) -> Result<Mode> {
+    Ok(match name {
+        "colocated" => Mode::Colocated,
+        "sequential" => Mode::SeparatedSequential,
+        "streaming" => Mode::SeparatedStreaming,
+        "async" => Mode::SeparatedAsync,
+        "substep" => Mode::SeparatedSubStep,
+        other => bail!("unknown mode {other:?}"),
+    })
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => RlConfig::from_doc(&ConfigDoc::load(path)?)?,
+        None => RlConfig::default(),
+    };
+    cfg.iterations = get_usize(flags, "iterations", cfg.iterations)?;
+    cfg.global_batch = get_usize(flags, "global-batch", cfg.global_batch)?;
+    cfg.staleness =
+        get_usize(flags, "staleness", cfg.staleness as usize)? as u64;
+    cfg.rollout_workers =
+        get_usize(flags, "rollout-workers", cfg.rollout_workers)?;
+    if let Some(p) = flags.get("policy") {
+        cfg.policy = p.clone();
+    }
+    let mock = flags.contains_key("mock");
+    let (engines, _b) = build_engines(&cfg, mock)?;
+    println!(
+        "[train] iterations={} global_batch={} staleness={} workers={} \
+         backend={}",
+        cfg.iterations,
+        cfg.global_batch,
+        cfg.staleness,
+        cfg.rollout_workers,
+        if mock { "mock" } else { "xla-pjrt" }
+    );
+    let report = Trainer::new(cfg, engines)?.run()?;
+    println!(
+        "[train] done: {} iterations, {} samples, {:.1} samples/s, \
+         {:.0} tokens/s, final reward {:.3}",
+        report.iterations,
+        report.samples_trained,
+        report.throughput_samples_per_s(),
+        report.throughput_tokens_per_s(),
+        report.final_reward,
+    );
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let devices = get_usize(flags, "devices", 256)?;
+    let model = model_by_name(
+        flags.get("model").map(String::as_str).unwrap_or("7b"),
+    )?;
+    let mode = mode_by_name(
+        flags.get("mode").map(String::as_str).unwrap_or("async"),
+    )?;
+    let mut cfg = SimConfig::defaults(devices, mode);
+    cfg.iterations = get_usize(flags, "iterations", cfg.iterations)?;
+    let cost = CostModel::new(DeviceSpec::ascend_910b(), model.clone());
+    let r = simulate(&cfg, &cost);
+    println!(
+        "[simulate] {} devices={} model={} -> {:.2} samples/s, \
+         {:.0} tokens/s, utilization {:.1}%, makespan {:.1}s",
+        mode.label(),
+        devices,
+        model.name,
+        r.throughput_samples_per_s(),
+        r.throughput_tokens_per_s(),
+        100.0 * r.utilization,
+        r.makespan_s
+    );
+    Ok(())
+}
+
+fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
+    let devices = get_usize(flags, "devices", 256)?;
+    let model = model_by_name(
+        flags.get("model").map(String::as_str).unwrap_or("7b"),
+    )?;
+    let cost = CostModel::new(DeviceSpec::ascend_910b(), model.clone());
+    let req = PlanRequest::new(devices);
+    let p = plan(&req, &cost);
+    println!(
+        "[plan] {} on {} devices: rollout_fraction={:.3} \
+         rollout_inst={} train_inst={} micro_batch={} -> {:.2} samples/s \
+         ({} candidates evaluated)",
+        model.name,
+        devices,
+        p.best.rollout_fraction,
+        p.best.rollout_instance_devices,
+        p.best.train_instance_devices,
+        p.best.micro_batch,
+        p.best.throughput_samples_per_s,
+        p.evaluated.len()
+    );
+    Ok(())
+}
+
+fn cmd_gantt(flags: &HashMap<String, String>) -> Result<()> {
+    let devices = get_usize(flags, "devices", 512)?;
+    let width = get_usize(flags, "width", 100)?;
+    let model = model_by_name(
+        flags.get("model").map(String::as_str).unwrap_or("32b"),
+    )?;
+    let mode = mode_by_name(
+        flags.get("mode").map(String::as_str).unwrap_or("async"),
+    )?;
+    let mut cfg = SimConfig::defaults(devices, mode);
+    cfg.iterations = get_usize(flags, "iterations", 4)?;
+    let cost = CostModel::new(DeviceSpec::ascend_910b(), model);
+    let r = simulate(&cfg, &cost);
+    println!("{}", r.timeline.render_ascii(width));
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = default_artifact_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "artifacts: preset={} params={} batch={} prompt={} max={}",
+                m.preset,
+                m.model.param_count,
+                m.model.batch,
+                m.model.prompt_len,
+                m.model.max_len
+            );
+            for (name, a) in &m.artifacts {
+                println!(
+                    "  {name}: {} args -> {} results ({})",
+                    a.args.len(),
+                    a.results.len(),
+                    a.path.display()
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    match XlaRuntime::cpu() {
+        Ok(rt) => println!(
+            "pjrt: platform={} devices={}",
+            rt.platform(),
+            rt.device_count()
+        ),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,224 @@
+//! Metrics: counters, timers, time-series recording, CSV/JSON emit.
+//!
+//! The trainer, TransferQueue, and benches all log through a [`Registry`];
+//! series are exported for EXPERIMENTS.md plots (reward curves, Gantt
+//! rows, throughput tables).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// A named time-series of (x, value) points.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        self.points.iter().map(|p| p.1).sum::<f64>()
+            / self.points.len() as f64
+    }
+
+    /// Mean of the tail fraction (e.g. last 25% — steady-state metrics).
+    pub fn tail_mean(&self, frac: f64) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let skip = ((1.0 - frac) * self.points.len() as f64) as usize;
+        let tail = &self.points[skip.min(self.points.len() - 1)..];
+        tail.iter().map(|p| p.1).sum::<f64>() / tail.len() as f64
+    }
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, u64>,
+    series: BTreeMap<String, Series>,
+}
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+    start: Option<Instant>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { inner: Mutex::default(), start: Some(Instant::now()) }
+    }
+
+    /// Seconds since registry creation (x-axis for wall-clock series).
+    pub fn elapsed(&self) -> f64 {
+        self.start.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn record(&self, name: &str, x: f64, y: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.series.entry(name.to_string()).or_default().push(x, y);
+    }
+
+    /// Record against wall-clock x-axis.
+    pub fn record_now(&self, name: &str, y: f64) {
+        self.record(name, self.elapsed(), y);
+    }
+
+    pub fn series(&self, name: &str) -> Option<Series> {
+        self.inner.lock().unwrap().series.get(name).cloned()
+    }
+
+    pub fn series_names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().series.keys().cloned().collect()
+    }
+
+    /// Export everything as JSON (for EXPERIMENTS.md artifacts).
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let counters = Json::Obj(
+            g.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let series = Json::Obj(
+            g.series
+                .iter()
+                .map(|(k, s)| {
+                    (
+                        k.clone(),
+                        Json::Arr(
+                            s.points
+                                .iter()
+                                .map(|(x, y)| {
+                                    Json::Arr(vec![
+                                        Json::Num(*x),
+                                        Json::Num(*y),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("series", series)])
+    }
+
+    /// Export one series as CSV text.
+    pub fn series_csv(&self, name: &str) -> String {
+        let mut out = String::from("x,y\n");
+        if let Some(s) = self.series(name) {
+            for (x, y) in s.points {
+                out.push_str(&format!("{x},{y}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// RAII timer recording elapsed seconds into a series on drop.
+pub struct Timer<'a> {
+    registry: &'a Registry,
+    name: String,
+    start: Instant,
+}
+
+impl<'a> Timer<'a> {
+    pub fn start(registry: &'a Registry, name: impl Into<String>) -> Self {
+        Timer { registry, name: name.into(), start: Instant::now() }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.registry
+            .record_now(&self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = Registry::new();
+        r.inc("a", 2);
+        r.inc("a", 3);
+        assert_eq!(r.counter("a"), 5);
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn series_record_and_stats() {
+        let r = Registry::new();
+        for i in 0..10 {
+            r.record("loss", i as f64, 10.0 - i as f64);
+        }
+        let s = r.series("loss").unwrap();
+        assert_eq!(s.points.len(), 10);
+        assert_eq!(s.last(), Some(1.0));
+        assert!((s.mean() - 5.5).abs() < 1e-12);
+        // tail 20% = last 2 points: (8,2),(9,1) -> mean 1.5
+        assert!((s.tail_mean(0.2) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let r = Registry::new();
+        r.inc("n", 1);
+        r.record("s", 0.0, 1.0);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.path(&["counters", "n"]).unwrap().as_i64(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn csv_export() {
+        let r = Registry::new();
+        r.record("s", 1.0, 2.0);
+        assert_eq!(r.series_csv("s"), "x,y\n1,2\n");
+        assert_eq!(r.series_csv("none"), "x,y\n");
+    }
+
+    #[test]
+    fn timer_records_on_drop() {
+        let r = Registry::new();
+        {
+            let _t = Timer::start(&r, "op");
+        }
+        assert_eq!(r.series("op").unwrap().points.len(), 1);
+    }
+}

@@ -1,0 +1,355 @@
+//! Analytic cost model (paper §4.3, the "analytical-based method").
+//!
+//! Estimates phase execution times from hardware specs and theoretical
+//! compute/communication volumes. The numbers are Ascend-910B-class by
+//! default; [`CostModel::calibrated`] rescales them from real measured
+//! block times (the paper's hybrid analytic+profiling approach — see
+//! `profile.rs`).
+//!
+//! All times are seconds; all sizes are counts/bytes; throughput shapes
+//! (who wins, crossovers) matter more than absolute values — see
+//! EXPERIMENTS.md for the paper-vs-measured comparison.
+
+/// Per-device hardware description.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Dense bf16 FLOP/s per device.
+    pub flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Intra-cluster collective link bandwidth per device, bytes/s
+    /// (HCCL-class).
+    pub link_bw: f64,
+    /// Host network path bandwidth per node, bytes/s (async weight path).
+    pub host_bw: f64,
+    /// Devices per node.
+    pub node_size: usize,
+}
+
+impl DeviceSpec {
+    /// Ascend 910B-class accelerator (paper's testbed; 16 NPUs/node).
+    pub fn ascend_910b() -> Self {
+        DeviceSpec {
+            flops: 376e12,
+            mem_bw: 1.6e12,
+            link_bw: 56e9,
+            host_bw: 25e9,
+            node_size: 16,
+        }
+    }
+}
+
+/// Model described analytically (for the 7B/32B scalability study).
+#[derive(Debug, Clone)]
+pub struct LlmSpec {
+    pub name: String,
+    /// Total parameter count.
+    pub params: f64,
+    pub n_layers: usize,
+    pub hidden: usize,
+    /// Bytes per parameter for weights in the inference engine (bf16).
+    pub weight_bytes: f64,
+}
+
+impl LlmSpec {
+    pub fn qwen_7b() -> Self {
+        LlmSpec {
+            name: "Qwen2.5-7B".into(),
+            params: 7.6e9,
+            n_layers: 28,
+            hidden: 3584,
+            weight_bytes: 2.0,
+        }
+    }
+
+    pub fn qwen_32b() -> Self {
+        LlmSpec {
+            name: "Qwen2.5-32B".into(),
+            params: 32.8e9,
+            n_layers: 64,
+            hidden: 5120,
+            weight_bytes: 2.0,
+        }
+    }
+
+    pub fn weight_size_bytes(&self) -> f64 {
+        self.params * self.weight_bytes
+    }
+
+    /// Minimum devices needed just to hold weights + activations with
+    /// ~64 GB/device (drives the parallelism floor in the planner).
+    pub fn min_devices(&self) -> usize {
+        let need = self.weight_size_bytes() * 2.5; // weights+opt+activations
+        ((need / 64e9).ceil() as usize).max(1)
+    }
+}
+
+/// Model-FLOPs-utilization assumptions per phase. Colocated engines pay a
+/// penalty (memory pressure from co-resident weights + offload traffic —
+/// paper §1 "memory inefficiency").
+#[derive(Debug, Clone)]
+pub struct MfuProfile {
+    pub prefill: f64,
+    pub decode: f64,
+    pub train: f64,
+    /// Multiplier (< 1) applied to colocated-mode train MFU (memory
+    /// pressure from co-resident inference weights + offload traffic).
+    pub colocated_factor: f64,
+    /// Multiplier (< 1) on colocated decode throughput: KV-cache memory
+    /// is shared with training states, shrinking the effective decode
+    /// batch (paper §1 "memory inefficiency").
+    pub colocated_decode_factor: f64,
+    /// Collective efficiency decay per 2x cluster growth beyond one node
+    /// (network contention at scale).
+    pub comm_scale_decay: f64,
+}
+
+impl Default for MfuProfile {
+    fn default() -> Self {
+        MfuProfile {
+            prefill: 0.45,
+            decode: 0.08,
+            train: 0.40,
+            colocated_factor: 0.85,
+            colocated_decode_factor: 0.62,
+            comm_scale_decay: 0.88,
+        }
+    }
+}
+
+/// The analytic cost model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub device: DeviceSpec,
+    pub model: LlmSpec,
+    pub mfu: MfuProfile,
+    /// Global multipliers from profiling calibration (1.0 = pure
+    /// analytic).
+    pub calib_rollout: f64,
+    pub calib_train: f64,
+}
+
+impl CostModel {
+    pub fn new(device: DeviceSpec, model: LlmSpec) -> Self {
+        CostModel {
+            device,
+            model,
+            mfu: MfuProfile::default(),
+            calib_rollout: 1.0,
+            calib_train: 1.0,
+        }
+    }
+
+    /// Apply profiling-derived multipliers (hybrid cost model).
+    pub fn calibrated(mut self, rollout: f64, train: f64) -> Self {
+        assert!(rollout > 0.0 && train > 0.0);
+        self.calib_rollout = rollout;
+        self.calib_train = train;
+        self
+    }
+
+    /// Collective efficiency for a group of `n` devices.
+    pub fn comm_efficiency(&self, n: usize) -> f64 {
+        let nodes =
+            (n as f64 / self.device.node_size as f64).max(1.0);
+        self.mfu.comm_scale_decay.powf(nodes.log2().max(0.0))
+    }
+
+    /// Prefill time for one micro-batch on an instance of `n` devices.
+    pub fn prefill_time(
+        &self,
+        n: usize,
+        batch: usize,
+        prompt_len: usize,
+    ) -> f64 {
+        let flops =
+            2.0 * self.model.params * batch as f64 * prompt_len as f64;
+        self.calib_rollout * flops
+            / (n as f64 * self.device.flops * self.mfu.prefill)
+    }
+
+    /// Autoregressive decode time: per token the instance reads all
+    /// weights (memory-bound) or does 2*P*B FLOPs (compute-bound at large
+    /// batch) — take the max (roofline).
+    pub fn decode_time(
+        &self,
+        n: usize,
+        batch: usize,
+        new_tokens: usize,
+    ) -> f64 {
+        let t_compute = 2.0 * self.model.params * batch as f64
+            / (n as f64 * self.device.flops * self.mfu.decode);
+        let t_memory = self.model.weight_size_bytes()
+            / (n as f64 * self.device.mem_bw);
+        self.calib_rollout * new_tokens as f64 * t_compute.max(t_memory)
+    }
+
+    /// Rollout of one micro-batch: prefill + decode.
+    pub fn rollout_time(
+        &self,
+        n: usize,
+        batch: usize,
+        prompt_len: usize,
+        new_tokens: usize,
+    ) -> f64 {
+        self.prefill_time(n, batch, prompt_len)
+            + self.decode_time(n, batch, new_tokens)
+    }
+
+    /// Reference / reward forward pass over full trajectories.
+    pub fn ref_time(&self, n: usize, batch: usize, seq: usize) -> f64 {
+        let flops = 2.0 * self.model.params * batch as f64 * seq as f64;
+        self.calib_train * flops
+            / (n as f64 * self.device.flops * self.mfu.prefill)
+    }
+
+    /// Train micro-step (fwd+bwd ≈ 6 FLOPs/param/token), compute only —
+    /// gradients accumulate locally; the DP collective happens once per
+    /// optimizer step (see [`Self::optimizer_sync_time`]).
+    pub fn train_time(&self, n: usize, batch: usize, seq: usize) -> f64 {
+        let flops = 6.0 * self.model.params * batch as f64 * seq as f64;
+        self.calib_train * flops
+            / (n as f64 * self.device.flops * self.mfu.train)
+    }
+
+    /// Gradient all-reduce + optimizer update at the global-batch
+    /// boundary, over an `n`-device data-parallel group (ring: ~2×
+    /// gradient bytes per device, degraded by collective efficiency at
+    /// scale).
+    pub fn optimizer_sync_time(&self, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let grads = self.model.params * 2.0; // bf16 grads
+        self.calib_train * 2.0 * grads
+            / (self.device.link_bw * self.comm_efficiency(n))
+    }
+
+    /// Synchronous weight broadcast train->infer over collective links.
+    pub fn weight_sync_time(&self, n_src: usize, n_dst: usize) -> f64 {
+        let bytes = self.model.weight_size_bytes();
+        let eff = self.comm_efficiency(n_src + n_dst);
+        bytes / (self.device.link_bw * eff)
+    }
+
+    /// Asynchronous weight path: D2H + host network + H2D. Returns
+    /// (total transfer latency, exposed H2D swap time) — only the swap is
+    /// on the rollout critical path in async mode (paper §4.2.2).
+    pub fn weight_async_times(&self) -> (f64, f64) {
+        let bytes = self.model.weight_size_bytes();
+        let d2h = bytes / self.device.mem_bw.min(64e9); // PCIe-class D2H
+        let net = bytes / self.device.host_bw;
+        let h2d = bytes / self.device.mem_bw.min(64e9);
+        (d2h + net + h2d, h2d)
+    }
+
+    /// Colocated resharding between rollout and train parallel layouts
+    /// (verl 3D-HybridEngine reduces but does not eliminate this). The
+    /// all-to-all moves ~weights/n per device, but pays a per-switch
+    /// latency floor (engine teardown/bring-up + optimizer-state
+    /// offload) that does *not* shrink with cluster size — this is what
+    /// erodes colocated efficiency as iterations get shorter at scale
+    /// (paper §1 "resharding overhead", §6.2 scaling gap).
+    pub fn reshard_time(&self, n: usize) -> f64 {
+        let bytes = self.model.weight_size_bytes();
+        let transfer = 2.0 * bytes
+            / (n as f64 * self.device.link_bw * self.comm_efficiency(n));
+        transfer + self.reshard_latency_floor()
+    }
+
+    /// Fixed per-phase-switch latency (memory offload/onload + engine
+    /// switch) for colocated engines.
+    pub fn reshard_latency_floor(&self) -> f64 {
+        // Optimizer/grad state offload over a PCIe-class path, amortized
+        // by overlap: ~weights/16 effective bytes at 64 GB/s.
+        (self.model.weight_size_bytes() / 16.0) / 64e9 + 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CostModel {
+        CostModel::new(DeviceSpec::ascend_910b(), LlmSpec::qwen_7b())
+    }
+
+    #[test]
+    fn times_are_positive_and_finite() {
+        let m = cm();
+        for t in [
+            m.prefill_time(8, 32, 1024),
+            m.decode_time(8, 32, 512),
+            m.ref_time(8, 32, 1536),
+            m.train_time(8, 32, 1536),
+            m.weight_sync_time(16, 16),
+            m.reshard_time(32),
+        ] {
+            assert!(t.is_finite() && t > 0.0, "t={t}");
+        }
+    }
+
+    #[test]
+    fn more_devices_is_faster() {
+        let m = cm();
+        assert!(m.train_time(64, 32, 1536) < m.train_time(8, 32, 1536));
+        assert!(m.decode_time(64, 32, 512) < m.decode_time(8, 32, 512));
+    }
+
+    #[test]
+    fn decode_is_memory_bound_at_small_batch() {
+        let m = cm();
+        // batch 1: memory roofline dominates => time ~ weight_bytes/mem_bw
+        let per_tok = m.decode_time(1, 1, 1);
+        let mem_floor = m.model.weight_size_bytes() / m.device.mem_bw;
+        assert!((per_tok - mem_floor).abs() / mem_floor < 0.5);
+        // huge batch: compute-bound, time grows with batch
+        assert!(
+            m.decode_time(1, 512, 1) > m.decode_time(1, 1, 1) * 10.0
+        );
+    }
+
+    #[test]
+    fn comm_efficiency_decays_with_scale() {
+        let m = cm();
+        assert!(m.comm_efficiency(16) > m.comm_efficiency(256));
+        assert!(m.comm_efficiency(16) <= 1.0);
+    }
+
+    #[test]
+    fn bigger_model_costs_more() {
+        let m7 = cm();
+        let m32 = CostModel::new(
+            DeviceSpec::ascend_910b(),
+            LlmSpec::qwen_32b(),
+        );
+        assert!(
+            m32.train_time(64, 32, 1536) > m7.train_time(64, 32, 1536)
+        );
+        assert!(m32.reshard_time(64) > m7.reshard_time(64));
+    }
+
+    #[test]
+    fn calibration_scales_linearly() {
+        let base = cm();
+        let cal = cm().calibrated(2.0, 0.5);
+        assert!(
+            (cal.rollout_time(8, 32, 1024, 512)
+                - 2.0 * base.rollout_time(8, 32, 1024, 512))
+            .abs()
+                < 1e-9
+        );
+        assert!(
+            (cal.ref_time(8, 32, 1536) - 0.5 * base.ref_time(8, 32, 1536))
+                .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn async_exposed_swap_is_cheap() {
+        let m = cm();
+        let (total, exposed) = m.weight_async_times();
+        assert!(exposed < total / 2.0, "H2D must be a fraction of total");
+    }
+}

@@ -1,0 +1,11 @@
+//! Task resource planning (paper §4.3): hybrid analytic+profiled cost
+//! model and the configuration search that picks device splits, instance
+//! sizes, and micro-batch sizes minimizing end-to-end iteration time.
+
+pub mod cost_model;
+pub mod profile;
+pub mod search;
+
+pub use cost_model::{CostModel, DeviceSpec, LlmSpec, MfuProfile};
+pub use profile::{calibrate, Calibration, ProfileReport};
+pub use search::{plan, Plan, PlanCandidate, PlanRequest};

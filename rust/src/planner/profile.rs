@@ -1,0 +1,122 @@
+//! Profiling-based calibration (the second half of the paper's hybrid
+//! cost model, §4.3): measured block times from a real run rescale the
+//! analytic estimates.
+//!
+//! The real three-layer stack (tiny/small presets on CPU PJRT) measures
+//! per-phase times through the coordinator's [`crate::coordinator::Timeline`];
+//! [`ProfileReport::from_timeline`] extracts per-phase means, and
+//! [`calibrate`] computes the analytic-vs-measured multipliers to feed
+//! [`CostModel::calibrated`].
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::Timeline;
+
+use super::cost_model::CostModel;
+
+/// Mean measured duration per phase label.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileReport {
+    pub phase_means: BTreeMap<String, f64>,
+    pub phase_counts: BTreeMap<String, usize>,
+}
+
+impl ProfileReport {
+    /// Aggregate a coordinator timeline by phase.
+    pub fn from_timeline(tl: &Timeline) -> Self {
+        let mut sums: BTreeMap<String, f64> = BTreeMap::new();
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+        for span in tl.spans() {
+            *sums.entry(span.phase.clone()).or_default() +=
+                span.duration();
+            *counts.entry(span.phase).or_default() += 1;
+        }
+        let phase_means = sums
+            .iter()
+            .map(|(k, v)| (k.clone(), v / counts[k] as f64))
+            .collect();
+        ProfileReport { phase_means, phase_counts: counts }
+    }
+
+    pub fn mean(&self, phase: &str) -> Option<f64> {
+        self.phase_means.get(phase).copied()
+    }
+}
+
+/// Calibration result: multipliers for the analytic model.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    pub rollout_factor: f64,
+    pub train_factor: f64,
+}
+
+/// Derive calibration multipliers by comparing measured phase means with
+/// the analytic predictions for the *same* workload geometry.
+///
+/// `measured_*` are seconds per micro-batch on an `n_dev`-device instance
+/// with the given batch/sequence geometry.
+pub fn calibrate(
+    cost: &CostModel,
+    n_dev: usize,
+    batch: usize,
+    prompt_len: usize,
+    new_tokens: usize,
+    seq: usize,
+    measured_rollout: f64,
+    measured_train: f64,
+) -> Calibration {
+    let pred_rollout =
+        cost.rollout_time(n_dev, batch, prompt_len, new_tokens);
+    let pred_train =
+        cost.ref_time(n_dev, batch, seq) + cost.train_time(n_dev, batch, seq);
+    Calibration {
+        rollout_factor: (measured_rollout / pred_rollout).max(1e-6),
+        train_factor: (measured_train / pred_train).max(1e-6),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::cost_model::{DeviceSpec, LlmSpec};
+
+    fn cost() -> CostModel {
+        CostModel::new(DeviceSpec::ascend_910b(), LlmSpec::qwen_7b())
+    }
+
+    #[test]
+    fn report_aggregates_phases() {
+        let tl = Timeline::new();
+        tl.record("w0", "generate", 0.0, 1.0);
+        tl.record("w1", "generate", 0.0, 3.0);
+        tl.record("w0", "train_step", 1.0, 1.5);
+        let rep = ProfileReport::from_timeline(&tl);
+        assert!((rep.mean("generate").unwrap() - 2.0).abs() < 1e-12);
+        assert_eq!(rep.phase_counts["generate"], 2);
+        assert_eq!(rep.mean("missing"), None);
+    }
+
+    #[test]
+    fn calibration_recovers_known_factor() {
+        let cost = cost();
+        let pred = cost.rollout_time(8, 16, 512, 1024);
+        let pred_t =
+            cost.ref_time(8, 16, 1536) + cost.train_time(8, 16, 1536);
+        // Pretend reality is 3x slower on rollout, 0.5x on train.
+        let cal = calibrate(
+            &cost, 8, 16, 512, 1024, 1536, 3.0 * pred, 0.5 * pred_t,
+        );
+        assert!((cal.rollout_factor - 3.0).abs() < 1e-9);
+        assert!((cal.train_factor - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibrated_model_predicts_measured() {
+        let base = cost();
+        let cal = calibrate(&base, 8, 16, 512, 1024, 1536, 10.0, 4.0);
+        let hybrid =
+            base.clone().calibrated(cal.rollout_factor, cal.train_factor);
+        let pred = hybrid.rollout_time(8, 16, 512, 1024);
+        assert!((pred - 10.0).abs() / 10.0 < 1e-9);
+    }
+}

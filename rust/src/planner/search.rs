@@ -1,0 +1,178 @@
+//! Graph-based resource planner (paper §4.3): search the configuration
+//! space (rollout/train device split, instance sizes, micro-batch) by
+//! simulating candidate configurations with the hybrid cost model and
+//! picking the end-to-end minimum.
+//!
+//! The analytic model prunes the space (fast evaluation), then the
+//! discrete-event simulator scores the surviving candidates exactly as
+//! the paper's "execution time simulator" does.
+
+use crate::simulator::{simulate, Mode, SimConfig, WorkloadSpec};
+
+use super::cost_model::CostModel;
+
+/// One evaluated candidate.
+#[derive(Debug, Clone)]
+pub struct PlanCandidate {
+    pub rollout_fraction: f64,
+    pub rollout_instance_devices: usize,
+    pub train_instance_devices: usize,
+    pub micro_batch: usize,
+    pub throughput_samples_per_s: f64,
+    pub utilization: f64,
+}
+
+/// Planner output: the chosen config + the top alternatives.
+#[derive(Debug)]
+pub struct Plan {
+    pub best: PlanCandidate,
+    pub evaluated: Vec<PlanCandidate>,
+}
+
+/// Planner inputs.
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    pub devices: usize,
+    pub mode: Mode,
+    pub global_batch: usize,
+    pub workload: WorkloadSpec,
+    /// Simulated iterations per candidate (more = less sampling noise).
+    pub sim_iterations: usize,
+}
+
+impl PlanRequest {
+    pub fn new(devices: usize) -> Self {
+        PlanRequest {
+            devices,
+            mode: Mode::SeparatedAsync,
+            global_batch: (devices * 8).max(32),
+            workload: WorkloadSpec::reasoning(),
+            sim_iterations: 6,
+        }
+    }
+}
+
+/// Enumerate feasible configurations and simulate each.
+pub fn plan(req: &PlanRequest, cost: &CostModel) -> Plan {
+    // Analytic pruning: instance must hold the model (min_devices) and
+    // the split must leave at least one instance on each side.
+    let min_inst = cost.model.min_devices();
+    let inst_sizes: Vec<usize> = [4usize, 8, 16, 32, 64]
+        .into_iter()
+        .filter(|&s| s >= min_inst && s <= req.devices / 2)
+        .collect();
+    let fractions = [0.25, 0.375, 0.5, 0.625, 0.75];
+    let micro_batches = [8usize, 16, 32];
+
+    let mut evaluated = Vec::new();
+    for &fr in &fractions {
+        for &ri in &inst_sizes {
+            for &ti in &inst_sizes {
+                let rollout_devs =
+                    ((req.devices as f64 * fr) as usize).max(1);
+                let train_devs = req.devices - rollout_devs;
+                if rollout_devs < ri || train_devs < ti {
+                    continue;
+                }
+                for &mb in &micro_batches {
+                    if req.global_batch % mb != 0 {
+                        continue;
+                    }
+                    let cfg = SimConfig {
+                        devices: req.devices,
+                        mode: req.mode,
+                        rollout_fraction: fr,
+                        rollout_instance_devices: ri,
+                        train_instance_devices: ti,
+                        global_batch: req.global_batch,
+                        micro_batch: mb,
+                        iterations: req.sim_iterations,
+                        workload: req.workload.clone(),
+                        seed: 7,
+                    };
+                    let result = simulate(&cfg, cost);
+                    evaluated.push(PlanCandidate {
+                        rollout_fraction: fr,
+                        rollout_instance_devices: ri,
+                        train_instance_devices: ti,
+                        micro_batch: mb,
+                        throughput_samples_per_s: result
+                            .throughput_samples_per_s(),
+                        utilization: result.utilization,
+                    });
+                }
+            }
+        }
+    }
+    assert!(
+        !evaluated.is_empty(),
+        "no feasible configuration for {} devices (model needs >= {})",
+        req.devices,
+        min_inst
+    );
+    let best = evaluated
+        .iter()
+        .max_by(|a, b| {
+            a.throughput_samples_per_s
+                .partial_cmp(&b.throughput_samples_per_s)
+                .unwrap()
+        })
+        .unwrap()
+        .clone();
+    Plan { best, evaluated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::cost_model::{DeviceSpec, LlmSpec};
+
+    fn cost() -> CostModel {
+        CostModel::new(DeviceSpec::ascend_910b(), LlmSpec::qwen_7b())
+    }
+
+    #[test]
+    fn plan_returns_feasible_best() {
+        let req = PlanRequest::new(128);
+        let plan = plan(&req, &cost());
+        let b = &plan.best;
+        assert!(b.throughput_samples_per_s > 0.0);
+        let rollout_devs = (128.0 * b.rollout_fraction) as usize;
+        assert!(rollout_devs >= b.rollout_instance_devices);
+        assert!(128 - rollout_devs >= b.train_instance_devices);
+    }
+
+    #[test]
+    fn best_is_argmax_of_evaluated() {
+        let req = PlanRequest::new(64);
+        let plan = plan(&req, &cost());
+        for c in &plan.evaluated {
+            assert!(
+                c.throughput_samples_per_s
+                    <= plan.best.throughput_samples_per_s + 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn larger_cluster_plans_higher_throughput() {
+        let small = plan(&PlanRequest::new(64), &cost());
+        let large = plan(&PlanRequest::new(256), &cost());
+        assert!(
+            large.best.throughput_samples_per_s
+                > small.best.throughput_samples_per_s
+        );
+    }
+
+    #[test]
+    fn bigger_model_respects_instance_floor() {
+        let cost32 =
+            CostModel::new(DeviceSpec::ascend_910b(), LlmSpec::qwen_32b());
+        let req = PlanRequest::new(256);
+        let p = plan(&req, &cost32);
+        assert!(
+            p.best.rollout_instance_devices
+                >= cost32.model.min_devices()
+        );
+    }
+}

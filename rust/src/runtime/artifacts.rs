@@ -1,0 +1,383 @@
+//! AOT artifact bundle: `manifest.json`, `params.bin`, and the HLO-text
+//! module files emitted by `python/compile/aot.py` (`make artifacts`).
+//!
+//! The manifest is the cross-language contract: per-artifact positional
+//! argument/result specs, the canonical parameter ordering, and the model
+//! geometry. The Rust side never re-derives any of this — it trusts the
+//! manifest and validates tensors against it.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::{DType, HostTensor, TensorSpec};
+
+/// Model geometry baked into the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub prompt_len: usize,
+    pub max_len: usize,
+    pub batch: usize,
+    pub d_head: usize,
+    pub param_count: usize,
+}
+
+impl ModelMeta {
+    pub fn max_new_tokens(&self) -> usize {
+        self.max_len - self.prompt_len
+    }
+}
+
+/// One AOT-lowered HLO module plus its positional interface.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub args: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+}
+
+/// The parsed artifact bundle.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub model: ModelMeta,
+    pub param_names: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub metric_names: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+fn parse_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("spec missing shape")?
+        .iter()
+        .map(|v| v.as_usize().context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::from_str_name(
+        j.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+    )?;
+    Ok(TensorSpec { shape, dtype })
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("manifest missing {key}"))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json — run `make artifacts` first",
+                    dir.display()
+                )
+            })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let m = j.get("model").context("manifest missing model")?;
+        let model = ModelMeta {
+            vocab: get_usize(m, "vocab")?,
+            d_model: get_usize(m, "d_model")?,
+            n_heads: get_usize(m, "n_heads")?,
+            n_layers: get_usize(m, "n_layers")?,
+            d_ff: get_usize(m, "d_ff")?,
+            prompt_len: get_usize(m, "prompt_len")?,
+            max_len: get_usize(m, "max_len")?,
+            batch: get_usize(m, "batch")?,
+            d_head: get_usize(m, "d_head")?,
+            param_count: get_usize(m, "param_count")?,
+        };
+
+        let param_names = j
+            .get("param_names")
+            .and_then(Json::as_arr)
+            .context("manifest missing param_names")?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string).context("bad name"))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut param_shapes = BTreeMap::new();
+        if let Some(obj) = j.get("param_shapes").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                let dims = v
+                    .as_arr()
+                    .context("bad shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("bad dim"))
+                    .collect::<Result<Vec<_>>>()?;
+                param_shapes.insert(k.clone(), dims);
+            }
+        }
+
+        let metric_names = j
+            .get("metric_names")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing artifacts")?;
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .context("artifact missing file")?;
+            let args = meta
+                .get("args")
+                .and_then(Json::as_arr)
+                .context("artifact missing args")?
+                .iter()
+                .map(parse_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let results = meta
+                .get("results")
+                .and_then(Json::as_arr)
+                .context("artifact missing results")?
+                .iter()
+                .map(parse_spec)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    path: dir.join(file),
+                    args,
+                    results,
+                },
+            );
+        }
+
+        let preset = j
+            .get("preset")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+
+        Ok(Manifest {
+            preset,
+            model,
+            param_names,
+            param_shapes,
+            metric_names,
+            artifacts,
+            dir,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_names.len()
+    }
+
+    /// Load `params.bin` and return tensors in canonical (manifest) order.
+    pub fn load_params(&self) -> Result<Vec<HostTensor>> {
+        let by_name = read_params_bin(self.dir.join("params.bin"))?;
+        let mut out = Vec::with_capacity(self.param_names.len());
+        for name in &self.param_names {
+            let t = by_name
+                .get(name)
+                .with_context(|| format!("params.bin missing {name:?}"))?;
+            if let Some(shape) = self.param_shapes.get(name) {
+                if &t.shape != shape {
+                    bail!(
+                        "param {name:?} shape {:?} != manifest {:?}",
+                        t.shape,
+                        shape
+                    );
+                }
+            }
+            out.push(t.clone());
+        }
+        Ok(out)
+    }
+}
+
+/// Read an `AFPB` tensor bundle (see `python/compile/params_io.py`).
+pub fn read_params_bin(
+    path: impl AsRef<Path>,
+) -> Result<BTreeMap<String, HostTensor>> {
+    let mut f = std::fs::File::open(path.as_ref()).with_context(|| {
+        format!("opening {}", path.as_ref().display())
+    })?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_params_bin(&buf)
+}
+
+fn parse_params_bin(buf: &[u8]) -> Result<BTreeMap<String, HostTensor>> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > buf.len() {
+            bail!("params.bin truncated at byte {}", *pos);
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let take_u32 = |pos: &mut usize| -> Result<u32> {
+        let b = take(pos, 4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    };
+    let take_u64 = |pos: &mut usize| -> Result<u64> {
+        let b = take(pos, 8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    };
+
+    if take(&mut pos, 4)? != b"AFPB" {
+        bail!("params.bin: bad magic");
+    }
+    let version = take_u32(&mut pos)?;
+    if version != 1 {
+        bail!("params.bin: unsupported version {version}");
+    }
+    let count = take_u32(&mut pos)? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = take_u32(&mut pos)? as usize;
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+            .context("bad tensor name")?;
+        let code = take(&mut pos, 1)?[0];
+        let dtype = DType::from_code(code)?;
+        let ndim = take_u32(&mut pos)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(take_u64(&mut pos)? as usize);
+        }
+        let nbytes = take_u64(&mut pos)? as usize;
+        let data = take(&mut pos, nbytes)?.to_vec();
+        out.insert(name.clone(), HostTensor::new(dtype, shape, data)?);
+    }
+    if pos != buf.len() {
+        bail!("params.bin: {} trailing bytes", buf.len() - pos);
+    }
+    Ok(out)
+}
+
+/// Write an `AFPB` tensor bundle (checkpointing from the Rust side).
+pub fn write_params_bin(
+    path: impl AsRef<Path>,
+    tensors: &[(String, HostTensor)],
+) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"AFPB");
+    buf.extend_from_slice(&1u32.to_le_bytes());
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
+        buf.push(t.dtype.code());
+        buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for d in &t.shape {
+            buf.extend_from_slice(&(*d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&t.data);
+    }
+    std::fs::write(path, buf)?;
+    Ok(())
+}
+
+/// Default artifact directory: `$ASYNCFLOW_ARTIFACTS` or `artifacts/`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("ASYNCFLOW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("af_test_params_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let tensors = vec![
+            (
+                "b.weight".to_string(),
+                HostTensor::from_f32(vec![2, 3], &[1., 2., 3., 4., 5., 6.])
+                    .unwrap(),
+            ),
+            (
+                "a.ids".to_string(),
+                HostTensor::from_i32(vec![4], &[9, -1, 0, 7]).unwrap(),
+            ),
+        ];
+        write_params_bin(&path, &tensors).unwrap();
+        let back = read_params_bin(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back["b.weight"], tensors[0].1);
+        assert_eq!(back["a.ids"], tensors[1].1);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(parse_params_bin(b"XXXX\x01\x00\x00\x00\x00\x00\x00\x00")
+            .is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"AFPB");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes()); // claims 1 tensor
+        assert!(parse_params_bin(&buf).is_err());
+    }
+
+    #[test]
+    fn manifest_parses_real_artifacts_if_present() {
+        // Integration-style: only runs when `make artifacts` has been run.
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.param_names.len(), m.n_params());
+        assert!(m.artifacts.contains_key("train_step"));
+        let ts = m.artifact("train_step").unwrap();
+        assert_eq!(
+            ts.args.len(),
+            3 * m.n_params() + 1 + 6,
+            "train_step arg count contract"
+        );
+        let params = m.load_params().unwrap();
+        assert_eq!(params.len(), m.n_params());
+        let total: usize =
+            params.iter().map(HostTensor::element_count).sum();
+        assert_eq!(total, m.model.param_count);
+    }
+}

@@ -1,0 +1,213 @@
+//! PJRT execution of AOT artifacts: HLO text → compile once → execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API). One [`XlaRuntime`] per process holds
+//! the CPU client; each [`CompiledArtifact`] is an HLO module compiled into
+//! a `PjRtLoadedExecutable` plus the positional arg/result specs from the
+//! manifest, so every call is shape/dtype-checked before it reaches XLA.
+//!
+//! jax lowers with `return_tuple=True`, so every execution returns one
+//! tuple literal; [`CompiledArtifact::run`] decomposes it into per-result
+//! [`HostTensor`]s validated against the manifest specs.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::ArtifactMeta;
+use super::tensor::{DType, HostTensor, TensorSpec};
+
+/// Process-wide PJRT client handle (cheaply clonable).
+#[derive(Clone)]
+pub struct XlaRuntime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile_artifact(
+        &self,
+        meta: &ArtifactMeta,
+    ) -> Result<CompiledArtifact> {
+        self.compile_hlo_file(&meta.path, &meta.args, &meta.results, &meta.name)
+    }
+
+    /// Lower-level entry used by tests: compile any HLO text file with
+    /// explicit specs.
+    pub fn compile_hlo_file(
+        &self,
+        path: &Path,
+        args: &[TensorSpec],
+        results: &[TensorSpec],
+        name: &str,
+    ) -> Result<CompiledArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledArtifact {
+            name: name.to_string(),
+            exe: Arc::new(exe),
+            args: args.to_vec(),
+            results: results.to_vec(),
+            exec_count: Arc::new(AtomicU64::new(0)),
+        })
+    }
+}
+
+/// A compiled HLO module ready for repeated execution.
+#[derive(Clone)]
+pub struct CompiledArtifact {
+    pub name: String,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub args: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+    exec_count: Arc<AtomicU64>,
+}
+
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let ty = match t.dtype {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+    };
+    let dims: Vec<usize> = t.shape.clone();
+    xla::Literal::create_from_shape_and_untyped_data(ty, &dims, &t.data)
+        .context("building literal")
+}
+
+fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+    let mut data = vec![0u8; spec.element_count() * spec.dtype.size_bytes()];
+    match spec.dtype {
+        DType::F32 => {
+            let mut tmp = vec![0f32; spec.element_count()];
+            lit.copy_raw_to::<f32>(&mut tmp).context("copy f32")?;
+            for (i, v) in tmp.iter().enumerate() {
+                data[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        DType::I32 => {
+            let mut tmp = vec![0i32; spec.element_count()];
+            lit.copy_raw_to::<i32>(&mut tmp).context("copy i32")?;
+            for (i, v) in tmp.iter().enumerate() {
+                data[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    HostTensor::new(spec.dtype, spec.shape.clone(), data)
+}
+
+impl CompiledArtifact {
+    /// Execute with host tensors; returns results in manifest order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.args.len() {
+            bail!(
+                "{}: got {} args, expected {}",
+                self.name,
+                inputs.len(),
+                self.args.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.args).enumerate() {
+            if !spec.matches(t) {
+                bail!(
+                    "{}: arg {i} mismatch: got {:?}{:?}, want {:?}{:?}",
+                    self.name,
+                    t.dtype,
+                    t.shape,
+                    spec.dtype,
+                    spec.shape
+                );
+            }
+        }
+        let literals = inputs
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+        let result = out[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // return_tuple=True => single tuple literal with one element per
+        // manifest result.
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.results.len() {
+            bail!(
+                "{}: got {} results, expected {}",
+                self.name,
+                parts.len(),
+                self.results.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.results)
+            .map(|(lit, spec)| from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Number of completed executions (perf accounting).
+    pub fn executions(&self) -> u64 {
+        self.exec_count.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Execution against real HLO artifacts is covered by
+    // rust/tests/runtime_xla.rs (needs `make artifacts`); unit tests here
+    // cover the literal conversion helpers via a synthetic XlaBuilder
+    // computation, which exercises to_literal/from_literal without
+    // artifacts on disk.
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_via_identity_computation() {
+        let rt = match XlaRuntime::cpu() {
+            Ok(rt) => rt,
+            Err(_) => return, // PJRT unavailable in this environment
+        };
+        let builder = xla::XlaBuilder::new("ident");
+        let x = builder
+            .parameter(0, xla::ElementType::F32, &[2, 2], "x")
+            .unwrap();
+        let one = builder.c0(1.0f32).unwrap();
+        let y = (x + one).unwrap();
+        let comp = y.build().unwrap();
+        let exe = rt.client.compile(&comp).unwrap();
+
+        let input =
+            HostTensor::from_f32(vec![2, 2], &[1., 2., 3., 4.]).unwrap();
+        let lit = to_literal(&input).unwrap();
+        let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let spec = TensorSpec { shape: vec![2, 2], dtype: DType::F32 };
+        let t = from_literal(&out, &spec).unwrap();
+        assert_eq!(t.as_f32().unwrap(), vec![2., 3., 4., 5.]);
+    }
+}

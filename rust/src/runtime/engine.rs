@@ -1,0 +1,702 @@
+//! Backend-level interface — the paper's §5.2 `Adapter` layer.
+//!
+//! AsyncFlow's algorithm logic never touches an execution backend
+//! directly: rollout workers drive a [`PolicyEngine`] (prefill / decode /
+//! logprobs / weight swap-in) and the update worker drives a
+//! [`TrainEngine`] (train_step / weight export). Two adapters are
+//! provided:
+//!
+//! * [`XlaEngine`] — the real backend: executes the AOT-compiled HLO
+//!   artifacts via PJRT (the MindSpeed/vLLM analogue in this repo).
+//! * [`MockEngine`] — a deterministic, dependency-free backend for
+//!   coordinator/TransferQueue tests and large-scale scheduling tests.
+//!
+//! Custom engines implement the same traits (the paper's industrial
+//! integration story).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+use super::artifacts::Manifest;
+use super::client::{CompiledArtifact, XlaRuntime};
+use super::tensor::HostTensor;
+
+/// An immutable, versioned parameter snapshot — the unit the
+/// WeightSender/WeightReceiver move between engines (paper §4.2.3).
+#[derive(Clone)]
+pub struct ParamSet {
+    pub version: u64,
+    pub tensors: Arc<Vec<HostTensor>>,
+}
+
+impl ParamSet {
+    pub fn new(version: u64, tensors: Vec<HostTensor>) -> Self {
+        ParamSet { version, tensors: Arc::new(tensors) }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.tensors.iter().map(HostTensor::size_bytes).sum()
+    }
+}
+
+/// Token sampling policy used during rollout.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    pub temperature: f32,
+    pub top_k: usize,
+    pub rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(temperature: f32, top_k: usize, seed: u64) -> Self {
+        Sampler { temperature, top_k, rng: Rng::new(seed) }
+    }
+
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        self.rng.sample_logits(logits, self.temperature, self.top_k) as i32
+    }
+}
+
+/// One generated trajectory (prompt + response, all post-rollout data).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trajectory {
+    /// Full token sequence padded to `max_len`: prompt, response, padding.
+    pub ids: Vec<i32>,
+    /// Number of real response tokens (excludes padding, includes EOS).
+    pub response_len: usize,
+    /// Parameter version that generated this trajectory.
+    pub policy_version: u64,
+}
+
+/// A training micro-batch in manifest geometry ([B, T] etc.).
+#[derive(Debug, Clone)]
+pub struct TrainBatch {
+    pub ids: Vec<Vec<i32>>,       // [B][T]
+    pub advantages: Vec<f32>,     // [B]
+    pub old_logp: Vec<Vec<f32>>,  // [B][T-1]
+    pub ref_logp: Vec<Vec<f32>>,  // [B][T-1]
+    pub mask: Vec<Vec<f32>>,      // [B][T-1]
+    pub lr: f32,
+}
+
+/// Scalar metrics from one train step (manifest `metric_names` order).
+#[derive(Debug, Clone, Default)]
+pub struct TrainMetrics {
+    pub loss: f32,
+    pub policy_loss: f32,
+    pub kl: f32,
+    pub nll: f32,
+    pub grad_norm: f32,
+    pub step: u64,
+}
+
+/// Inference-side adapter: generation + trajectory scoring.
+pub trait PolicyEngine {
+    /// Fixed micro-batch size baked into the backend.
+    fn batch_size(&self) -> usize;
+    /// Max trajectory length (prompt + response).
+    fn max_len(&self) -> usize;
+    fn prompt_len(&self) -> usize;
+    /// Generate one batch of trajectories from fixed-length prompts.
+    fn generate(
+        &mut self,
+        prompts: &[Vec<i32>],
+        sampler: &mut Sampler,
+        eos: i32,
+        pad: i32,
+    ) -> Result<Vec<Trajectory>>;
+    /// Per-token log-probs for full trajectories ([B][T] -> [B][T-1]).
+    fn logprobs(&mut self, ids: &[Vec<i32>]) -> Result<Vec<Vec<f32>>>;
+    /// Swap in a new parameter snapshot (WeightReceiver H2D load).
+    fn set_params(&mut self, params: ParamSet);
+    fn params_version(&self) -> u64;
+}
+
+/// Training-side adapter: parameter updates + weight export.
+pub trait TrainEngine {
+    fn batch_size(&self) -> usize;
+    fn max_len(&self) -> usize;
+    fn train_step(&mut self, batch: &TrainBatch) -> Result<TrainMetrics>;
+    /// Export the current parameters (WeightSender D2H offload).
+    fn export_params(&self) -> ParamSet;
+    fn version(&self) -> u64;
+}
+
+// ===========================================================================
+// XlaEngine — the real PJRT backend
+// ===========================================================================
+
+/// Shared compiled artifacts (compile once, share across engine instances).
+/// Lazily-compiled artifact bundle. Compilation is the dominant startup
+/// cost (the fused rollout module alone takes seconds), so each artifact
+/// compiles on first use and is cached — a rollout engine never pays for
+/// `train_step`, the train engine never pays for `rollout`
+/// (EXPERIMENTS.md §Perf, L3 iteration 2). Thread-confined (the engines
+/// already are, because PJRT handles are not `Send`); `Clone` shares the
+/// cache within the thread.
+#[derive(Clone)]
+pub struct XlaArtifacts {
+    pub manifest: Arc<Manifest>,
+    rt: XlaRuntime,
+    cache: std::rc::Rc<std::cell::RefCell<
+        std::collections::HashMap<String, CompiledArtifact>>>,
+}
+
+impl XlaArtifacts {
+    /// Parse the manifest and prepare lazy slots — no compilation yet.
+    pub fn load(rt: &XlaRuntime, manifest: Manifest) -> Result<Self> {
+        Ok(XlaArtifacts {
+            manifest: Arc::new(manifest),
+            rt: rt.clone(),
+            cache: Default::default(),
+        })
+    }
+
+    /// Compile-on-first-use accessor.
+    pub fn get(&self, name: &str) -> Result<CompiledArtifact> {
+        if let Some(c) = self.cache.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let compiled =
+            self.rt.compile_artifact(self.manifest.artifact(name)?)?;
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    pub fn initial_params(&self) -> Result<ParamSet> {
+        Ok(ParamSet::new(0, self.manifest.load_params()?))
+    }
+}
+
+fn ids_tensor(ids: &[Vec<i32>], rows: usize, cols: usize) -> Result<HostTensor> {
+    if ids.len() != rows {
+        bail!("expected {rows} rows, got {}", ids.len());
+    }
+    let mut flat = Vec::with_capacity(rows * cols);
+    for row in ids {
+        if row.len() != cols {
+            bail!("expected row length {cols}, got {}", row.len());
+        }
+        flat.extend_from_slice(row);
+    }
+    HostTensor::from_i32(vec![rows, cols], &flat)
+}
+
+fn f32_tensor(rows_data: &[Vec<f32>], rows: usize, cols: usize) -> Result<HostTensor> {
+    if rows_data.len() != rows {
+        bail!("expected {rows} rows, got {}", rows_data.len());
+    }
+    let mut flat = Vec::with_capacity(rows * cols);
+    for row in rows_data {
+        if row.len() != cols {
+            bail!("expected row length {cols}, got {}", row.len());
+        }
+        flat.extend_from_slice(row);
+    }
+    HostTensor::from_f32(vec![rows, cols], &flat)
+}
+
+/// Sampling-time logprobs captured by the last fused rollout.
+struct RolloutLogps {
+    ids: Vec<Vec<i32>>,
+    /// [B][T-P] logp of each generated token (0.0 after EOS).
+    logps: Vec<Vec<f32>>,
+    prompt_len: usize,
+    grid_len: usize,
+}
+
+/// PJRT-backed [`PolicyEngine`].
+pub struct XlaPolicyEngine {
+    arts: XlaArtifacts,
+    params: ParamSet,
+    last_rollout: Option<RolloutLogps>,
+}
+
+impl XlaPolicyEngine {
+    pub fn new(arts: XlaArtifacts, params: ParamSet) -> Self {
+        XlaPolicyEngine { arts, params, last_rollout: None }
+    }
+}
+
+impl PolicyEngine for XlaPolicyEngine {
+    fn batch_size(&self) -> usize {
+        self.arts.manifest.model.batch
+    }
+
+    fn max_len(&self) -> usize {
+        self.arts.manifest.model.max_len
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.arts.manifest.model.prompt_len
+    }
+
+    fn generate(
+        &mut self,
+        prompts: &[Vec<i32>],
+        sampler: &mut Sampler,
+        eos: i32,
+        pad: i32,
+    ) -> Result<Vec<Trajectory>> {
+        let m = &self.arts.manifest.model;
+        let (b, p, t) = (m.batch, m.prompt_len, m.max_len);
+        let _ = pad;
+        // Fused on-device generation: one execution per batch. The seed
+        // comes from the sampler's RNG stream; temperature is a runtime
+        // input (<= 0 selects greedy argmax in-graph).
+        let mut inputs: Vec<HostTensor> =
+            self.params.tensors.iter().cloned().collect();
+        inputs.push(ids_tensor(prompts, b, p)?);
+        inputs.push(HostTensor::scalar_i32(
+            (sampler.rng.next_u64() & 0x7FFF_FFFF) as i32,
+        ));
+        inputs.push(HostTensor::scalar_f32(sampler.temperature));
+        let out = self.arts.get("rollout")?.run(&inputs)?;
+        let ids_t = &out[0];
+        let logp_t = &out[1];
+
+        let mut trajs = Vec::with_capacity(b);
+        for row in 0..b {
+            let start = row * t;
+            let ids: Vec<i32> = (start..start + t)
+                .map(|j| {
+                    let o = j * 4;
+                    i32::from_le_bytes([
+                        ids_t.data[o],
+                        ids_t.data[o + 1],
+                        ids_t.data[o + 2],
+                        ids_t.data[o + 3],
+                    ])
+                })
+                .collect();
+            // response_len: tokens until (and including) EOS, else all.
+            let resp = &ids[p..];
+            let response_len = resp
+                .iter()
+                .position(|&tok| tok == eos)
+                .map(|pos| pos + 1)
+                .unwrap_or(t - p);
+            let _ = logp_t; // behaviour logp fetched via rollout_logps
+            trajs.push(Trajectory {
+                ids,
+                response_len,
+                policy_version: self.params.version,
+            });
+        }
+        // Stash the sampling-time logprobs so the next `logprobs` call
+        // for these exact trajectories is free (behaviour-policy logps
+        // come out of the fused rollout).
+        self.last_rollout = Some(RolloutLogps {
+            ids: trajs.iter().map(|t| t.ids.clone()).collect(),
+            logps: (0..b)
+                .map(|row| logp_t.f32_row(row))
+                .collect::<Result<Vec<_>>>()?,
+            prompt_len: p,
+            grid_len: t - 1,
+        });
+        Ok(trajs)
+    }
+
+    fn logprobs(&mut self, ids: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        // Fast path: the behaviour-policy logps of the trajectories we
+        // just generated were captured in-graph by the fused rollout —
+        // no extra forward pass needed.
+        if let Some(stash) = &self.last_rollout {
+            if stash.ids.as_slice() == ids {
+                let mut out = Vec::with_capacity(ids.len());
+                for row in &stash.logps {
+                    let mut grid = vec![0.0f32; stash.grid_len];
+                    grid[stash.prompt_len - 1
+                        ..stash.prompt_len - 1 + row.len()]
+                        .copy_from_slice(row);
+                    out.push(grid);
+                }
+                return Ok(out);
+            }
+        }
+        let m = &self.arts.manifest.model;
+        let (b, t) = (m.batch, m.max_len);
+        let mut inputs: Vec<HostTensor> =
+            self.params.tensors.iter().cloned().collect();
+        inputs.push(ids_tensor(ids, b, t)?);
+        let out = self.arts.get("logprobs")?.run(&inputs)?;
+        let lp = &out[0];
+        (0..b).map(|i| lp.f32_row(i)).collect()
+    }
+
+    fn set_params(&mut self, params: ParamSet) {
+        self.params = params;
+        // Sampling-time logps are only valid under the weights that
+        // produced them.
+        self.last_rollout = None;
+    }
+
+    fn params_version(&self) -> u64 {
+        self.params.version
+    }
+}
+
+/// PJRT-backed [`TrainEngine`] — owns the master params + Adam state.
+pub struct XlaTrainEngine {
+    arts: XlaArtifacts,
+    params: Vec<HostTensor>,
+    m: Vec<HostTensor>,
+    v: Vec<HostTensor>,
+    step: HostTensor,
+    version: u64,
+}
+
+impl XlaTrainEngine {
+    pub fn new(arts: XlaArtifacts, initial: &ParamSet) -> Self {
+        let params: Vec<HostTensor> = initial.tensors.iter().cloned().collect();
+        let m = params
+            .iter()
+            .map(|p| HostTensor::zeros(p.dtype, p.shape.clone()))
+            .collect::<Vec<_>>();
+        let v = m.clone();
+        XlaTrainEngine {
+            arts,
+            params,
+            m,
+            v,
+            step: HostTensor::scalar_f32(0.0),
+            version: initial.version,
+        }
+    }
+}
+
+impl XlaTrainEngine {
+    /// Checkpoint the full training state (params + Adam moments + step
+    /// counter + version) to an `AFPB` bundle. Resumable with
+    /// [`XlaTrainEngine::from_checkpoint`].
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let names = &self.arts.manifest.param_names;
+        let mut pairs: Vec<(String, HostTensor)> = Vec::new();
+        for (kind, tensors) in
+            [("param", &self.params), ("adam_m", &self.m), ("adam_v", &self.v)]
+        {
+            for (name, t) in names.iter().zip(tensors) {
+                pairs.push((format!("{kind}/{name}"), t.clone()));
+            }
+        }
+        pairs.push(("step".into(), self.step.clone()));
+        pairs.push((
+            "version".into(),
+            HostTensor::from_i32(vec![1], &[self.version as i32])?,
+        ));
+        super::artifacts::write_params_bin(path, &pairs)
+    }
+
+    /// Restore a checkpointed engine (inverse of `save_checkpoint`).
+    pub fn from_checkpoint(
+        arts: XlaArtifacts,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<Self> {
+        let bundle = super::artifacts::read_params_bin(path)?;
+        let names = arts.manifest.param_names.clone();
+        let fetch = |kind: &str| -> Result<Vec<HostTensor>> {
+            names
+                .iter()
+                .map(|n| {
+                    bundle
+                        .get(&format!("{kind}/{n}"))
+                        .cloned()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("checkpoint missing {kind}/{n}")
+                        })
+                })
+                .collect()
+        };
+        let params = fetch("param")?;
+        let m = fetch("adam_m")?;
+        let v = fetch("adam_v")?;
+        let step = bundle
+            .get("step")
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing step"))?;
+        let version = bundle
+            .get("version")
+            .and_then(|t| t.as_i32().ok())
+            .and_then(|v| v.first().copied())
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing version"))?
+            as u64;
+        Ok(XlaTrainEngine { arts, params, m, v, step, version })
+    }
+}
+
+impl TrainEngine for XlaTrainEngine {
+    fn batch_size(&self) -> usize {
+        self.arts.manifest.model.batch
+    }
+
+    fn max_len(&self) -> usize {
+        self.arts.manifest.model.max_len
+    }
+
+    fn train_step(&mut self, batch: &TrainBatch) -> Result<TrainMetrics> {
+        let m = &self.arts.manifest.model;
+        let (b, t) = (m.batch, m.max_len);
+        let n = self.params.len();
+
+        let mut inputs: Vec<HostTensor> =
+            Vec::with_capacity(3 * n + 1 + 6);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.push(self.step.clone());
+        inputs.push(ids_tensor(&batch.ids, b, t)?);
+        inputs.push(HostTensor::from_f32(vec![b], &batch.advantages)?);
+        inputs.push(f32_tensor(&batch.old_logp, b, t - 1)?);
+        inputs.push(f32_tensor(&batch.ref_logp, b, t - 1)?);
+        inputs.push(f32_tensor(&batch.mask, b, t - 1)?);
+        inputs.push(HostTensor::scalar_f32(batch.lr));
+
+        let mut out = self.arts.get("train_step")?.run(&inputs)?;
+        // Results: params'(n), m'(n), v'(n), step', metrics(5).
+        let metrics_at = 3 * n + 1;
+        let metric = |out: &[HostTensor], i: usize| -> Result<f32> {
+            out[metrics_at + i].scalar_f32_value()
+        };
+        let tm = TrainMetrics {
+            loss: metric(&out, 0)?,
+            policy_loss: metric(&out, 1)?,
+            kl: metric(&out, 2)?,
+            nll: metric(&out, 3)?,
+            grad_norm: metric(&out, 4)?,
+            step: out[3 * n].scalar_f32_value()? as u64,
+        };
+        self.step = out[3 * n].clone();
+        self.v = out.drain(2 * n..3 * n).collect();
+        self.m = out.drain(n..2 * n).collect();
+        self.params = out.drain(..n).collect();
+        self.version += 1;
+        Ok(tm)
+    }
+
+    fn export_params(&self) -> ParamSet {
+        ParamSet::new(self.version, self.params.clone())
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+}
+
+// ===========================================================================
+// MockEngine — deterministic fake backend for coordinator tests
+// ===========================================================================
+
+/// Deterministic mock implementing both engine traits. Generation emits a
+/// hash-derived token stream whose length depends on the prompt, so tests
+/// exercise variable-length behaviour; logprobs/metrics are hash-derived
+/// and reproducible.
+pub struct MockEngine {
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub max_len: usize,
+    pub vocab: i32,
+    params_version: u64,
+    train_version: u64,
+    step: u64,
+    /// Synthetic per-call latency knob for scheduling tests (no sleeping
+    /// unless nonzero).
+    pub generate_delay: std::time::Duration,
+}
+
+impl MockEngine {
+    pub fn new(batch: usize, prompt_len: usize, max_len: usize) -> Self {
+        MockEngine {
+            batch,
+            prompt_len,
+            max_len,
+            vocab: 256,
+            params_version: 0,
+            train_version: 0,
+            step: 0,
+            generate_delay: std::time::Duration::ZERO,
+        }
+    }
+
+    fn hash(&self, xs: &[i32], salt: u64) -> u64 {
+        let mut h = 0xcbf29ce484222325u64 ^ salt;
+        for &x in xs {
+            h ^= x as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+impl PolicyEngine for MockEngine {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    fn generate(
+        &mut self,
+        prompts: &[Vec<i32>],
+        _sampler: &mut Sampler,
+        eos: i32,
+        pad: i32,
+    ) -> Result<Vec<Trajectory>> {
+        if !self.generate_delay.is_zero() {
+            std::thread::sleep(self.generate_delay);
+        }
+        if prompts.len() != self.batch {
+            bail!("mock: want {} prompts, got {}", self.batch, prompts.len());
+        }
+        let budget = self.max_len - self.prompt_len;
+        Ok(prompts
+            .iter()
+            .map(|prompt| {
+                let h = self.hash(prompt, self.params_version);
+                let resp = 1 + (h % budget as u64) as usize;
+                let mut ids = prompt.clone();
+                for j in 0..budget {
+                    if j + 1 < resp {
+                        ids.push((self.hash(prompt, j as u64) % 200) as i32 + 1);
+                    } else if j + 1 == resp {
+                        ids.push(eos);
+                    } else {
+                        ids.push(pad);
+                    }
+                }
+                Trajectory {
+                    ids,
+                    response_len: resp,
+                    policy_version: self.params_version,
+                }
+            })
+            .collect())
+    }
+
+    fn logprobs(&mut self, ids: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(ids
+            .iter()
+            .map(|row| {
+                (0..self.max_len - 1)
+                    .map(|j| {
+                        let h = self.hash(row, j as u64);
+                        -0.5 - (h % 1000) as f32 / 500.0
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    fn set_params(&mut self, params: ParamSet) {
+        self.params_version = params.version;
+    }
+
+    fn params_version(&self) -> u64 {
+        self.params_version
+    }
+}
+
+impl TrainEngine for MockEngine {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    fn train_step(&mut self, batch: &TrainBatch) -> Result<TrainMetrics> {
+        self.step += 1;
+        self.train_version += 1;
+        let h = self.hash(&batch.ids[0], self.step) % 1000;
+        Ok(TrainMetrics {
+            loss: 1.0 / self.step as f32 + h as f32 * 1e-6,
+            policy_loss: -0.01,
+            kl: 0.001,
+            nll: 2.0 / self.step as f32,
+            grad_norm: 1.0,
+            step: self.step,
+        })
+    }
+
+    fn export_params(&self) -> ParamSet {
+        ParamSet::new(self.train_version, vec![])
+    }
+
+    fn version(&self) -> u64 {
+        self.train_version
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompts(n: usize, p: usize) -> Vec<Vec<i32>> {
+        (0..n).map(|i| vec![i as i32 + 1; p]).collect()
+    }
+
+    #[test]
+    fn mock_generate_is_deterministic_per_version() {
+        let mut e = MockEngine::new(4, 8, 24);
+        let mut s = Sampler::new(1.0, 8, 0);
+        let a = e.generate(&prompts(4, 8), &mut s, 10, 0).unwrap();
+        let b = e.generate(&prompts(4, 8), &mut s, 10, 0).unwrap();
+        assert_eq!(a, b);
+        e.set_params(ParamSet::new(5, vec![]));
+        let c = e.generate(&prompts(4, 8), &mut s, 10, 0).unwrap();
+        assert_ne!(a, c, "new params version must change rollouts");
+    }
+
+    #[test]
+    fn mock_trajectories_are_well_formed() {
+        let mut e = MockEngine::new(4, 8, 24);
+        let mut s = Sampler::new(1.0, 8, 0);
+        for tr in e.generate(&prompts(4, 8), &mut s, 10, 0).unwrap() {
+            assert_eq!(tr.ids.len(), 24);
+            assert!(tr.response_len >= 1 && tr.response_len <= 16);
+            // EOS sits at prompt_len + response_len - 1
+            assert_eq!(tr.ids[8 + tr.response_len - 1], 10);
+            // everything after EOS is padding
+            for &t in &tr.ids[8 + tr.response_len..] {
+                assert_eq!(t, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn mock_wrong_batch_rejected() {
+        let mut e = MockEngine::new(4, 8, 24);
+        let mut s = Sampler::new(1.0, 8, 0);
+        assert!(e.generate(&prompts(3, 8), &mut s, 10, 0).is_err());
+    }
+
+    #[test]
+    fn mock_train_versions_advance() {
+        let mut e = MockEngine::new(2, 4, 8);
+        let batch = TrainBatch {
+            ids: vec![vec![1; 8]; 2],
+            advantages: vec![0.5; 2],
+            old_logp: vec![vec![-1.0; 7]; 2],
+            ref_logp: vec![vec![-1.0; 7]; 2],
+            mask: vec![vec![1.0; 7]; 2],
+            lr: 1e-4,
+        };
+        assert_eq!(TrainEngine::version(&e), 0);
+        let m1 = e.train_step(&batch).unwrap();
+        let m2 = e.train_step(&batch).unwrap();
+        assert_eq!(TrainEngine::version(&e), 2);
+        assert!(m2.loss < m1.loss, "mock loss decreases");
+        assert_eq!(e.export_params().version, 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! Model runtime: PJRT execution of the AOT artifacts and the
+//! backend-level engine adapters (paper §5.2).
+//!
+//! The compile path (`python/compile/aot.py`) runs once; this module loads
+//! its outputs — `manifest.json`, `params.bin`, `*.hlo.txt` — compiles the
+//! HLO modules on the PJRT CPU client, and exposes them behind the
+//! [`engine::PolicyEngine`] / [`engine::TrainEngine`] traits that the rest
+//! of the coordinator programs against.
+
+pub mod artifacts;
+pub mod client;
+pub mod engine;
+pub mod tensor;
+
+pub use artifacts::{default_artifact_dir, Manifest};
+pub use client::{CompiledArtifact, XlaRuntime};
+pub use engine::{
+    MockEngine, ParamSet, PolicyEngine, Sampler, TrainBatch, TrainEngine,
+    TrainMetrics, Trajectory, XlaArtifacts, XlaPolicyEngine, XlaTrainEngine,
+};
+pub use tensor::{DType, HostTensor, TensorSpec};

@@ -1,0 +1,244 @@
+//! Host-side tensor type bridging the coordinator's data structures and
+//! XLA `Literal`s. Deliberately simple: dtype + shape + contiguous
+//! little-endian bytes, exactly matching the `params.bin` on-disk format
+//! and the manifest's artifact arg specs.
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`HostTensor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => DType::F32,
+            1 => DType::I32,
+            c => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn from_str_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            s => bail!("unknown dtype name {s:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// A dense host tensor (C-contiguous, little-endian bytes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn new(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+        let want = shape.iter().product::<usize>() * dtype.size_bytes();
+        if data.len() != want {
+            bail!(
+                "tensor data length {} != expected {} for shape {:?}",
+                data.len(),
+                want,
+                shape
+            );
+        }
+        Ok(HostTensor { dtype, shape, data })
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Self {
+        let n = shape.iter().product::<usize>() * dtype.size_bytes();
+        HostTensor { dtype, shape, data: vec![0u8; n] }
+    }
+
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Result<Self> {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor::new(DType::F32, shape, data)
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Result<Self> {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor::new(DType::I32, shape, data)
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::from_f32(vec![], &[v]).unwrap()
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::from_i32(vec![], &[v]).unwrap()
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not I32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn f32_at(&self, idx: usize) -> f32 {
+        let o = idx * 4;
+        f32::from_le_bytes([
+            self.data[o],
+            self.data[o + 1],
+            self.data[o + 2],
+            self.data[o + 3],
+        ])
+    }
+
+    pub fn scalar_f32_value(&self) -> Result<f32> {
+        if self.element_count() != 1 {
+            bail!("not a scalar: shape {:?}", self.shape);
+        }
+        Ok(self.f32_at(0))
+    }
+
+    /// Row `i` of a rank-2 f32 tensor, as a fresh Vec.
+    pub fn f32_row(&self, i: usize) -> Result<Vec<f32>> {
+        if self.shape.len() != 2 {
+            bail!("f32_row on rank-{} tensor", self.shape.len());
+        }
+        let cols = self.shape[1];
+        let start = i * cols;
+        Ok((start..start + cols).map(|j| self.f32_at(j)).collect())
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Spec for one artifact argument/result (from the manifest).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn matches(&self, t: &HostTensor) -> bool {
+        self.dtype == t.dtype && self.shape == t.shape
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::from_f32(vec![2, 2], &[1.0, -2.5, 3.0, 0.0])
+            .unwrap();
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.5, 3.0, 0.0]);
+        assert_eq!(t.element_count(), 4);
+        assert_eq!(t.f32_at(1), -2.5);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = HostTensor::from_i32(vec![3], &[1, -7, 42]).unwrap();
+        assert_eq!(t.as_i32().unwrap(), vec![1, -7, 42]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::new(DType::F32, vec![3], vec![0u8; 8]).is_err());
+        assert!(HostTensor::from_f32(vec![2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_view_rejected() {
+        let t = HostTensor::from_i32(vec![1], &[3]).unwrap();
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(
+            HostTensor::scalar_f32(2.5).scalar_f32_value().unwrap(),
+            2.5
+        );
+        let t = HostTensor::scalar_i32(-1);
+        assert_eq!(t.as_i32().unwrap(), vec![-1]);
+        assert_eq!(t.shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn f32_rows() {
+        let t =
+            HostTensor::from_f32(vec![2, 3], &[0., 1., 2., 3., 4., 5.])
+                .unwrap();
+        assert_eq!(t.f32_row(1).unwrap(), vec![3., 4., 5.]);
+    }
+
+    #[test]
+    fn spec_match() {
+        let spec = TensorSpec { shape: vec![2, 2], dtype: DType::F32 };
+        let ok = HostTensor::zeros(DType::F32, vec![2, 2]);
+        let bad = HostTensor::zeros(DType::I32, vec![2, 2]);
+        assert!(spec.matches(&ok));
+        assert!(!spec.matches(&bad));
+    }
+
+    #[test]
+    fn dtype_codes_roundtrip() {
+        for d in [DType::F32, DType::I32] {
+            assert_eq!(DType::from_code(d.code()).unwrap(), d);
+            assert_eq!(DType::from_str_name(d.name()).unwrap(), d);
+        }
+        assert!(DType::from_code(9).is_err());
+    }
+}

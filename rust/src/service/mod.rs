@@ -1,0 +1,229 @@
+//! Service-oriented user interface (paper §5, Fig. 9).
+//!
+//! The user-level API exposes the paper's five workflow verbs over an
+//! in-process service session, so industrial callers can drive the
+//! post-training system without touching the coordinator internals:
+//!
+//! * [`Session::init_engines`]      — register backend engines.
+//! * [`Session::put_prompts_data`]  — load prompt data.
+//! * [`Session::put_experience_data`] / [`Session::get_experience_data`]
+//!   — exchange experience between training and inference engines.
+//! * [`Session::weight_sync_notify`] — propagate new model weights.
+//!
+//! The backend-level interface (the `Adapter` layer of §5.2) is the
+//! [`crate::runtime::PolicyEngine`]/[`crate::runtime::TrainEngine`] trait
+//! pair; [`Session`] is deliberately engine-agnostic.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::ParamStore;
+use crate::runtime::ParamSet;
+use crate::transfer_queue::{
+    Column, GlobalIndex, TaskSpec, TransferQueue, Value,
+};
+
+/// Declarative description of the RL task graph for a session.
+pub struct SessionSpec {
+    pub storage_units: usize,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl SessionSpec {
+    /// The standard GRPO graph (same wiring as the Trainer).
+    pub fn grpo() -> Self {
+        SessionSpec {
+            storage_units: 2,
+            tasks: vec![
+                TaskSpec::new("rollout", vec![Column::Prompts]),
+                TaskSpec::new("reference", vec![Column::Responses]),
+                TaskSpec::new("reward", vec![Column::Responses]),
+                TaskSpec::new("advantage", vec![Column::Rewards]),
+                TaskSpec::new(
+                    "train",
+                    vec![
+                        Column::Responses,
+                        Column::OldLogp,
+                        Column::RefLogp,
+                        Column::Advantages,
+                    ],
+                ),
+            ],
+        }
+    }
+}
+
+/// A live post-training service session.
+pub struct Session {
+    tq: Arc<TransferQueue>,
+    store: Option<Arc<ParamStore>>,
+    engines_initialized: bool,
+}
+
+impl Session {
+    /// `init_engines`: bring up the data fabric and register the engine
+    /// topology. Engines themselves are owned by the caller (they are
+    /// backend-specific); the session tracks the parameter store that
+    /// links them.
+    pub fn init_engines(
+        spec: SessionSpec,
+        initial_params: ParamSet,
+    ) -> Result<Session> {
+        if spec.tasks.is_empty() {
+            bail!("session needs at least one task");
+        }
+        let mut builder =
+            TransferQueue::builder().storage_units(spec.storage_units);
+        for t in spec.tasks {
+            builder = builder.task(t);
+        }
+        Ok(Session {
+            tq: builder.build(),
+            store: Some(ParamStore::new(initial_params)),
+            engines_initialized: true,
+        })
+    }
+
+    pub fn transfer_queue(&self) -> Arc<TransferQueue> {
+        self.tq.clone()
+    }
+
+    pub fn param_store(&self) -> Arc<ParamStore> {
+        self.store.as_ref().expect("init_engines first").clone()
+    }
+
+    /// `put_prompts_data`: load a prompt dataset into the system.
+    /// Returns the assigned global indices.
+    pub fn put_prompts_data(
+        &self,
+        prompts: &[Vec<i32>],
+    ) -> Result<Vec<GlobalIndex>> {
+        self.ensure_init()?;
+        prompts
+            .iter()
+            .map(|p| {
+                self.tq.put_row(vec![(
+                    Column::Prompts,
+                    Value::I32s(p.clone()),
+                )])
+            })
+            .collect()
+    }
+
+    /// `put_experience_data`: write one experience column for a sample.
+    pub fn put_experience_data(
+        &self,
+        index: GlobalIndex,
+        column: Column,
+        value: Value,
+    ) -> Result<()> {
+        self.ensure_init()?;
+        self.tq.put(index, column, value)
+    }
+
+    /// `get_experience_data`: pull a ready micro-batch for a task.
+    pub fn get_experience_data(
+        &self,
+        task: &str,
+        group: usize,
+        columns: Vec<Column>,
+        count: usize,
+    ) -> Option<crate::transfer_queue::Batch> {
+        self.tq
+            .loader(task, group, columns, count, 1)
+            .try_next_batch()
+    }
+
+    /// `weight_sync_notify`: publish a new weight snapshot to all
+    /// inference engines (they observe it via their WeightReceivers).
+    pub fn weight_sync_notify(&self, params: ParamSet) -> Result<()> {
+        self.ensure_init()?;
+        self.param_store().publish(params);
+        Ok(())
+    }
+
+    /// Graceful teardown: close the queue so consumers drain.
+    pub fn shutdown(&self) {
+        self.tq.close();
+    }
+
+    fn ensure_init(&self) -> Result<()> {
+        if !self.engines_initialized {
+            bail!("call init_engines first");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session() -> Session {
+        Session::init_engines(SessionSpec::grpo(), ParamSet::new(0, vec![]))
+            .unwrap()
+    }
+
+    #[test]
+    fn init_builds_grpo_graph() {
+        let s = session();
+        let tq = s.transfer_queue();
+        for task in ["rollout", "reference", "reward", "advantage", "train"]
+        {
+            assert!(tq.has_task(task), "missing {task}");
+        }
+    }
+
+    #[test]
+    fn empty_spec_rejected() {
+        let spec = SessionSpec { storage_units: 1, tasks: vec![] };
+        assert!(
+            Session::init_engines(spec, ParamSet::new(0, vec![])).is_err()
+        );
+    }
+
+    #[test]
+    fn prompt_and_experience_flow() {
+        let s = session();
+        let idx = s
+            .put_prompts_data(&[vec![1, 2, 3], vec![4, 5, 6]])
+            .unwrap();
+        assert_eq!(idx.len(), 2);
+        // rollout task sees both prompts
+        let got = s
+            .get_experience_data("rollout", 0, vec![Column::Prompts], 8)
+            .unwrap();
+        assert_eq!(got.len(), 2);
+        // write responses back; reward task sees them
+        for i in &idx {
+            s.put_experience_data(
+                *i,
+                Column::Responses,
+                Value::I32s(vec![9]),
+            )
+            .unwrap();
+        }
+        let got = s
+            .get_experience_data("reward", 0, vec![Column::Responses], 8)
+            .unwrap();
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn weight_sync_updates_store() {
+        let s = session();
+        assert_eq!(s.param_store().version(), 0);
+        s.weight_sync_notify(ParamSet::new(3, vec![])).unwrap();
+        assert_eq!(s.param_store().version(), 3);
+    }
+
+    #[test]
+    fn shutdown_drains_consumers() {
+        let s = session();
+        s.shutdown();
+        assert!(s
+            .get_experience_data("rollout", 0, vec![Column::Prompts], 4)
+            .is_none());
+    }
+}

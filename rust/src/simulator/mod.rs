@@ -1,0 +1,10 @@
+//! Cluster simulator — reproduces the paper's large-scale evaluation
+//! (Fig. 10 scalability, Table 1 ablation, Fig. 11 Gantt) by executing
+//! the coordinator's scheduling policies over the §4.3 analytic cost
+//! model at 32–1024-NPU scale. See DESIGN.md §Substitutions.
+
+pub mod sim;
+pub mod workload;
+
+pub use sim::{simulate, Mode, SimConfig, SimResult};
+pub use workload::{generate_iteration, MicroBatch, SimSample, WorkloadSpec};

@@ -1,0 +1,512 @@
+//! Discrete-event cluster simulator: executes the *same scheduling
+//! policies* as the real coordinator over the analytic cost model, at
+//! cluster scales this testbed cannot host (32–1024 NPUs). Reproduces the
+//! paper's large-scale evaluation: Fig. 10 (scalability), Table 1
+//! (ablation), Fig. 11 (Gantt).
+//!
+//! The simulation is micro-batch-granular list scheduling on a virtual
+//! clock: rollout instances produce micro-batches (dynamic pull when
+//! TransferQueue is enabled, static pre-assignment otherwise), the train
+//! cluster consumes them through a reference-scoring + update path, and
+//! iteration boundaries apply the configured synchronization rule
+//! (sequential / on-policy streaming / one-step-async delayed update).
+
+use crate::coordinator::Timeline;
+use crate::planner::cost_model::CostModel;
+use crate::util::rng::Rng;
+
+use super::workload::{generate_iteration, WorkloadSpec};
+
+/// Execution paradigm under simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// verl-like task-colocated baseline: every phase uses all devices
+    /// sequentially, with resharding between rollout and train layouts.
+    Colocated,
+    /// Task-separated, no TransferQueue: stage barriers within an
+    /// iteration, static sample pre-assignment (Table 1 row 1).
+    SeparatedSequential,
+    /// + TransferQueue streaming overlap, on-policy sync (Table 1 row 2).
+    SeparatedStreaming,
+    /// + asynchronous workflow: one-step staleness, delayed parameter
+    /// update, overlapped weight transfer (Table 1 row 3 / AsyncFlow).
+    SeparatedAsync,
+    /// Paper §4.2.2 / Fig. 8(d) future-work mechanism: rollout instances
+    /// swap weights *sequentially* (staggered), so generation capacity
+    /// never drops to zero at a version boundary and staleness falls
+    /// below one full step.
+    SeparatedSubStep,
+}
+
+impl Mode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Mode::Colocated => "verl-colocated",
+            Mode::SeparatedSequential => "separated-sequential",
+            Mode::SeparatedStreaming => "separated+TQ",
+            Mode::SeparatedAsync => "separated+TQ+async",
+            Mode::SeparatedSubStep => "separated+TQ+substep",
+        }
+    }
+}
+
+/// Full simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub devices: usize,
+    pub mode: Mode,
+    /// Fraction of devices assigned to rollout (separated modes).
+    pub rollout_fraction: f64,
+    /// Devices per rollout instance (inference TP/PP group).
+    pub rollout_instance_devices: usize,
+    /// Devices per train DP group.
+    pub train_instance_devices: usize,
+    pub global_batch: usize,
+    pub micro_batch: usize,
+    pub iterations: usize,
+    pub workload: WorkloadSpec,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn defaults(devices: usize, mode: Mode) -> Self {
+        SimConfig {
+            devices,
+            mode,
+            rollout_fraction: 0.65,
+            rollout_instance_devices: 8,
+            train_instance_devices: 8,
+            global_batch: 2048,
+            micro_batch: 16,
+            iterations: 8,
+            workload: WorkloadSpec::reasoning(),
+            seed: 0,
+        }
+    }
+
+    pub fn rollout_devices(&self) -> usize {
+        ((self.devices as f64 * self.rollout_fraction) as usize).max(1)
+    }
+
+    pub fn train_devices(&self) -> usize {
+        (self.devices - self.rollout_devices()).max(1)
+    }
+
+    pub fn n_rollout_instances(&self) -> usize {
+        (self.rollout_devices() / self.rollout_instance_devices).max(1)
+    }
+
+    pub fn n_train_instances(&self) -> usize {
+        (self.train_devices() / self.train_instance_devices).max(1)
+    }
+}
+
+/// Simulation outcome.
+pub struct SimResult {
+    pub mode: Mode,
+    pub devices: usize,
+    pub makespan_s: f64,
+    pub samples: usize,
+    pub tokens: usize,
+    pub timeline: Timeline,
+    /// Mean busy fraction across all instances over the makespan.
+    pub utilization: f64,
+}
+
+impl SimResult {
+    pub fn throughput_samples_per_s(&self) -> f64 {
+        self.samples as f64 / self.makespan_s.max(1e-12)
+    }
+
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.makespan_s.max(1e-12)
+    }
+
+    pub fn bubble_fraction(&self) -> f64 {
+        1.0 - self.utilization
+    }
+}
+
+/// Run one simulation.
+pub fn simulate(cfg: &SimConfig, cost: &CostModel) -> SimResult {
+    match cfg.mode {
+        Mode::Colocated => simulate_colocated(cfg, cost),
+        _ => simulate_separated(cfg, cost),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Colocated (verl-like) baseline
+// ---------------------------------------------------------------------------
+
+fn simulate_colocated(cfg: &SimConfig, cost: &CostModel) -> SimResult {
+    let timeline = Timeline::new();
+    let mut rng = Rng::new(cfg.seed);
+    let n = cfg.devices;
+    // Colocated engines pay memory-pressure penalties: train MFU drops
+    // (offload traffic), and decode throughput drops harder (KV-cache
+    // memory shared with resident training states).
+    let mut roll_cost = cost.clone();
+    roll_cost.calib_rollout /= cost.mfu.colocated_decode_factor;
+    let mut train_cost = cost.clone();
+    train_cost.calib_train /= cost.mfu.colocated_factor;
+    let cost_reshard = cost;
+    let seq = cfg.workload.prompt_len + cfg.workload.median_response;
+
+    // Rollout inside the colocated allocation still runs as TP-bounded
+    // inference instances (verl's hybrid engine), not one giant TP group.
+    let inst_dev = cfg.rollout_instance_devices.min(n).max(1);
+    let n_inst = (n / inst_dev).max(1);
+
+    let mut clock = 0.0f64;
+    let mut samples = 0usize;
+    let mut tokens = 0usize;
+    for iter in 0..cfg.iterations {
+        let mbs = generate_iteration(
+            &cfg.workload,
+            cfg.global_batch,
+            cfg.micro_batch,
+            &mut rng,
+        );
+        let it = format!("i{iter}");
+        // reshard train layout -> inference layout
+        let t = cost_reshard.reshard_time(n) * 0.3; // 3D-HybridEngine
+        timeline.record("cluster", &format!("{it}:reshard"), clock,
+                        clock + t);
+        clock += t;
+        // rollout: micro-batches spread over the inference instances;
+        // the phase ends when the slowest instance finishes (all devices
+        // are held until then — colocated phases are exclusive).
+        let mut inst_busy = vec![0.0f64; n_inst];
+        for (k, mb) in mbs.iter().enumerate() {
+            let t = roll_cost.rollout_time(
+                inst_dev,
+                mb.len(),
+                cfg.workload.prompt_len,
+                mb.max_response(),
+            );
+            inst_busy[k % n_inst] += t;
+            samples += mb.len();
+            tokens += mb.total_tokens();
+        }
+        let gen_time =
+            inst_busy.iter().copied().fold(0.0f64, f64::max);
+        timeline.record("cluster", &format!("{it}:gen"), clock,
+                        clock + gen_time);
+        clock += gen_time;
+        let cost = &train_cost;
+        // reshard back
+        let t = cost.reshard_time(n) * 0.3;
+        timeline.record("cluster", &format!("{it}:reshard"), clock,
+                        clock + t);
+        clock += t;
+        // reference + update over the global batch
+        for mb in &mbs {
+            let t = cost.ref_time(n, mb.len(), seq)
+                + cost.train_time(n, mb.len(), seq);
+            timeline.record("cluster", &format!("{it}:train"), clock,
+                            clock + t);
+            clock += t;
+        }
+        // DP gradient all-reduce + optimizer step over the full cluster.
+        let t = cost.optimizer_sync_time(n);
+        timeline.record("cluster", &format!("{it}:opt"), clock, clock + t);
+        clock += t;
+    }
+    let utilization = timeline.utilization("cluster", clock);
+    SimResult {
+        mode: cfg.mode,
+        devices: cfg.devices,
+        makespan_s: clock,
+        samples,
+        tokens,
+        timeline,
+        utilization,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task-separated modes
+// ---------------------------------------------------------------------------
+
+fn simulate_separated(cfg: &SimConfig, cost: &CostModel) -> SimResult {
+    let timeline = Timeline::new();
+    let mut rng = Rng::new(cfg.seed);
+    let n_r = cfg.n_rollout_instances();
+    let n_t = cfg.n_train_instances();
+    let dev_r = cfg.rollout_instance_devices;
+    let dev_t = cfg.train_instance_devices;
+    let seq = cfg.workload.prompt_len + cfg.workload.median_response;
+    let dynamic_pull = cfg.mode != Mode::SeparatedSequential;
+
+    // Weight-sync cost at the iteration boundary.
+    let sync_exposed = match cfg.mode {
+        // blocking broadcast over collective links
+        Mode::SeparatedSequential | Mode::SeparatedStreaming => {
+            cost.weight_sync_time(cfg.train_devices(), cfg.rollout_devices())
+        }
+        // async path: only the H2D swap is exposed (delayed update)
+        Mode::SeparatedAsync | Mode::SeparatedSubStep => {
+            cost.weight_async_times().1
+        }
+        Mode::Colocated => unreachable!(),
+    };
+
+    let mut roll_free = vec![0.0f64; n_r];
+    let mut train_free = vec![0.0f64; n_t];
+    let mut samples = 0usize;
+    let mut tokens = 0usize;
+    // Completion bookkeeping for iteration gating.
+    let mut rollout_all_done = vec![0.0f64; cfg.iterations];
+    let mut iter_done = vec![0.0f64; cfg.iterations];
+
+    for iter in 0..cfg.iterations {
+        let mbs = generate_iteration(
+            &cfg.workload,
+            cfg.global_batch,
+            cfg.micro_batch,
+            &mut rng,
+        );
+        // When may rollout for this iteration start? (staleness gate)
+        let release = match cfg.mode {
+            Mode::SeparatedSequential | Mode::SeparatedStreaming => {
+                // on-policy: after the previous update + weight sync
+                if iter == 0 {
+                    0.0
+                } else {
+                    iter_done[iter - 1] + sync_exposed
+                }
+            }
+            Mode::SeparatedAsync => {
+                // one-step staleness: iteration j may roll out once
+                // iteration j-2 has trained (gate: j <= done + 1) and the
+                // previous rollout finished; swap cost is the exposed H2D.
+                let gate = if iter >= 2 { iter_done[iter - 2] } else { 0.0 };
+                let prev_roll =
+                    if iter >= 1 { rollout_all_done[iter - 1] } else { 0.0 };
+                gate.max(prev_roll)
+                    + if iter > 0 { sync_exposed } else { 0.0 }
+            }
+            Mode::SeparatedSubStep => {
+                // Sub-step asynchrony: no global rollout barrier at all —
+                // each instance swaps individually (handled below), so
+                // iteration j is release-gated only by training progress.
+                if iter >= 2 { iter_done[iter - 2] } else { 0.0 }
+            }
+            Mode::Colocated => unreachable!(),
+        };
+
+        // --- rollout phase -------------------------------------------------
+        let mut mb_ready = Vec::with_capacity(mbs.len());
+        for (k, mb) in mbs.iter().enumerate() {
+            let inst = if dynamic_pull {
+                // TransferQueue pull model: earliest-free instance.
+                (0..n_r)
+                    .min_by(|&a, &b| {
+                        roll_free[a].partial_cmp(&roll_free[b]).unwrap()
+                    })
+                    .unwrap()
+            } else {
+                // static pre-assignment (no TQ): round-robin.
+                k % n_r
+            };
+            let mut start = roll_free[inst].max(release);
+            // Sub-step mode: the first micro-batch an instance takes in a
+            // new iteration pays its own (staggered) swap; other modes pay
+            // the swap inside `release`.
+            if cfg.mode == Mode::SeparatedSubStep
+                && iter > 0
+                && roll_free[inst] <= release
+            {
+                start += sync_exposed;
+            }
+            let dur = cost.rollout_time(
+                dev_r,
+                mb.len(),
+                cfg.workload.prompt_len,
+                mb.max_response(),
+            );
+            let end = start + dur;
+            timeline.record(
+                &format!("rollout-{inst}"),
+                &format!("i{iter}:gen"),
+                start,
+                end,
+            );
+            roll_free[inst] = end;
+            mb_ready.push(end);
+            samples += mb.len();
+            tokens += mb.total_tokens();
+        }
+        let all_rolled =
+            mb_ready.iter().copied().fold(0.0f64, f64::max);
+        rollout_all_done[iter] = all_rolled;
+
+        // --- train path (reference + update) ------------------------------
+        let mut done_max = 0.0f64;
+        for (k, mb) in mbs.iter().enumerate() {
+            // Sequential mode: the train cluster may only start after the
+            // whole global batch is rolled out (no streaming).
+            let ready = if cfg.mode == Mode::SeparatedSequential {
+                all_rolled
+            } else {
+                mb_ready[k]
+            };
+            let inst = (0..n_t)
+                .min_by(|&a, &b| {
+                    train_free[a].partial_cmp(&train_free[b]).unwrap()
+                })
+                .unwrap();
+            let start = train_free[inst].max(ready);
+            let t_ref = cost.ref_time(dev_t, mb.len(), seq);
+            let t_upd = cost.train_time(dev_t, mb.len(), seq);
+            timeline.record(
+                &format!("train-{inst}"),
+                &format!("i{iter}:ref"),
+                start,
+                start + t_ref,
+            );
+            timeline.record(
+                &format!("train-{inst}"),
+                &format!("i{iter}:upd"),
+                start + t_ref,
+                start + t_ref + t_upd,
+            );
+            train_free[inst] = start + t_ref + t_upd;
+            done_max = done_max.max(train_free[inst]);
+        }
+        // Optimizer boundary: DP all-reduce across the train cluster.
+        let opt = cost.optimizer_sync_time(cfg.train_devices());
+        if opt > 0.0 {
+            timeline.record(
+                "train-0",
+                &format!("i{iter}:opt"),
+                done_max,
+                done_max + opt,
+            );
+        }
+        let done_max = done_max + opt;
+        iter_done[iter] = done_max;
+        if cfg.mode != Mode::SeparatedAsync {
+            timeline.record(
+                "weights",
+                &format!("i{iter}:sync"),
+                done_max,
+                done_max + sync_exposed,
+            );
+        }
+    }
+
+    let makespan = timeline.horizon();
+    let mut util_sum = 0.0;
+    let mut util_n = 0;
+    for w in timeline.workers() {
+        if w.starts_with("rollout-") || w.starts_with("train-") {
+            util_sum += timeline.utilization(&w, makespan);
+            util_n += 1;
+        }
+    }
+    SimResult {
+        mode: cfg.mode,
+        devices: cfg.devices,
+        makespan_s: makespan,
+        samples,
+        tokens,
+        timeline,
+        utilization: if util_n > 0 { util_sum / util_n as f64 } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::cost_model::{DeviceSpec, LlmSpec};
+
+    fn cost() -> CostModel {
+        CostModel::new(DeviceSpec::ascend_910b(), LlmSpec::qwen_7b())
+    }
+
+    fn run(devices: usize, mode: Mode) -> SimResult {
+        let mut cfg = SimConfig::defaults(devices, mode);
+        cfg.iterations = 6;
+        simulate(&cfg, &cost())
+    }
+
+    #[test]
+    fn all_modes_complete_all_samples() {
+        for mode in [
+            Mode::Colocated,
+            Mode::SeparatedSequential,
+            Mode::SeparatedStreaming,
+            Mode::SeparatedAsync,
+            Mode::SeparatedSubStep,
+        ] {
+            let r = run(64, mode);
+            assert_eq!(r.samples, 6 * SimConfig::defaults(64, mode).global_batch);
+            assert!(r.makespan_s > 0.0);
+            assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn table1_ordering_holds() {
+        // Table 1: baseline < +TransferQueue < +Async.
+        let base = run(512, Mode::SeparatedSequential);
+        let tq = run(512, Mode::SeparatedStreaming);
+        let asy = run(512, Mode::SeparatedAsync);
+        let t0 = base.throughput_samples_per_s();
+        let t1 = tq.throughput_samples_per_s();
+        let t2 = asy.throughput_samples_per_s();
+        assert!(t1 > t0 * 1.2, "TQ streaming must beat sequential: {t1} vs {t0}");
+        assert!(t2 > t1 * 1.05, "async must beat sync streaming: {t2} vs {t1}");
+    }
+
+    #[test]
+    fn asyncflow_beats_colocated_at_scale() {
+        let verl = run(256, Mode::Colocated);
+        let af = run(256, Mode::SeparatedAsync);
+        assert!(
+            af.throughput_samples_per_s() > verl.throughput_samples_per_s(),
+            "AsyncFlow {} <= verl {}",
+            af.throughput_samples_per_s(),
+            verl.throughput_samples_per_s()
+        );
+    }
+
+    #[test]
+    fn async_reduces_bubbles_vs_sequential() {
+        let seq = run(128, Mode::SeparatedSequential);
+        let asy = run(128, Mode::SeparatedAsync);
+        assert!(asy.bubble_fraction() < seq.bubble_fraction());
+    }
+
+    #[test]
+    fn substep_not_slower_than_async() {
+        // Fig. 8(d): removing the global swap barrier can only help.
+        let asy = run(256, Mode::SeparatedAsync);
+        let sub = run(256, Mode::SeparatedSubStep);
+        assert!(
+            sub.throughput_samples_per_s()
+                >= asy.throughput_samples_per_s() * 0.999,
+            "substep {} < async {}",
+            sub.throughput_samples_per_s(),
+            asy.throughput_samples_per_s()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(64, Mode::SeparatedAsync);
+        let b = run(64, Mode::SeparatedAsync);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn gantt_has_rollout_and_train_rows() {
+        let r = run(64, Mode::SeparatedAsync);
+        let workers = r.timeline.workers();
+        assert!(workers.iter().any(|w| w.starts_with("rollout-")));
+        assert!(workers.iter().any(|w| w.starts_with("train-")));
+    }
+}

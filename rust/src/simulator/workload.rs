@@ -1,0 +1,139 @@
+//! Workload model: RL post-training sample streams with long-tailed
+//! response lengths (the skew that motivates TransferQueue's dynamic
+//! load balancing — paper §3.3/§7.3).
+
+use crate::util::rng::Rng;
+
+/// Distribution of one iteration's samples.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub prompt_len: usize,
+    /// Median response length (lognormal median = exp(mu)).
+    pub median_response: usize,
+    /// Log-space sigma (tail heaviness). 0.0 = deterministic lengths.
+    pub sigma: f64,
+    pub max_response: usize,
+    pub min_response: usize,
+}
+
+impl WorkloadSpec {
+    /// Reasoning-RL workload in the DeepScaleR regime.
+    pub fn reasoning() -> Self {
+        WorkloadSpec {
+            prompt_len: 512,
+            median_response: 1024,
+            sigma: 0.9,
+            max_response: 6144,
+            min_response: 32,
+        }
+    }
+
+    pub fn sample_response_len(&self, rng: &mut Rng) -> usize {
+        if self.sigma == 0.0 {
+            return self.median_response;
+        }
+        let mu = (self.median_response as f64).ln();
+        let len = rng.lognormal(mu, self.sigma);
+        (len as usize).clamp(self.min_response, self.max_response)
+    }
+}
+
+/// One simulated sample.
+#[derive(Debug, Clone, Copy)]
+pub struct SimSample {
+    pub response_len: usize,
+}
+
+/// A micro-batch of samples; rollout time is governed by the *longest*
+/// member (batched decode runs until the last sequence finishes).
+#[derive(Debug, Clone)]
+pub struct MicroBatch {
+    pub samples: Vec<SimSample>,
+}
+
+impl MicroBatch {
+    pub fn max_response(&self) -> usize {
+        self.samples.iter().map(|s| s.response_len).max().unwrap_or(0)
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.samples.iter().map(|s| s.response_len).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// Generate one iteration's micro-batches.
+pub fn generate_iteration(
+    spec: &WorkloadSpec,
+    global_batch: usize,
+    micro_batch: usize,
+    rng: &mut Rng,
+) -> Vec<MicroBatch> {
+    assert!(micro_batch > 0 && global_batch % micro_batch == 0);
+    (0..global_batch / micro_batch)
+        .map(|_| MicroBatch {
+            samples: (0..micro_batch)
+                .map(|_| SimSample {
+                    response_len: spec.sample_response_len(rng),
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lengths_respect_bounds() {
+        let spec = WorkloadSpec::reasoning();
+        let mut rng = Rng::new(0);
+        for _ in 0..1000 {
+            let l = spec.sample_response_len(&mut rng);
+            assert!((spec.min_response..=spec.max_response).contains(&l));
+        }
+    }
+
+    #[test]
+    fn zero_sigma_is_deterministic() {
+        let spec = WorkloadSpec { sigma: 0.0, ..WorkloadSpec::reasoning() };
+        let mut rng = Rng::new(1);
+        assert_eq!(spec.sample_response_len(&mut rng), 1024);
+    }
+
+    #[test]
+    fn distribution_is_long_tailed() {
+        let spec = WorkloadSpec::reasoning();
+        let mut rng = Rng::new(2);
+        let lens: Vec<usize> =
+            (0..5000).map(|_| spec.sample_response_len(&mut rng)).collect();
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        let mut sorted = lens.clone();
+        sorted.sort_unstable();
+        let median = sorted[lens.len() / 2] as f64;
+        assert!(mean > median, "lognormal: mean {mean} > median {median}");
+        assert!(*sorted.last().unwrap() > 3000, "tail exists");
+    }
+
+    #[test]
+    fn iteration_partitioning() {
+        let spec = WorkloadSpec::reasoning();
+        let mut rng = Rng::new(3);
+        let mbs = generate_iteration(&spec, 64, 16, &mut rng);
+        assert_eq!(mbs.len(), 4);
+        assert!(mbs.iter().all(|m| m.len() == 16));
+        assert!(mbs[0].max_response() >= mbs[0].samples[0].response_len);
+        assert_eq!(
+            mbs[0].total_tokens(),
+            mbs[0].samples.iter().map(|s| s.response_len).sum::<usize>()
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Streaming dataloader client handle (paper §3.4, Code 1).
+//!
+//! The PyTorch-DataLoader analogue: a task worker (one per DP group)
+//! constructs a [`StreamDataLoader`] naming its task and required
+//! columns, then iterates `next_batch`. Each call goes metadata-first —
+//! the task's controller assembles a micro-batch of ready row indices —
+//! and then fetches the payloads from the data plane, mirroring the
+//! paper's control-plane/data-plane split. `write_back` stores computed
+//! columns and triggers the metadata broadcast to downstream controllers.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::column::{Column, GlobalIndex, Value};
+use super::TransferQueue;
+
+/// One assembled micro-batch: indices + the requested column payloads.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub indices: Vec<GlobalIndex>,
+    /// `rows[i][j]` = value of `columns[j]` for `indices[i]`.
+    pub rows: Vec<Vec<Value>>,
+    pub columns: Vec<Column>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Column values down the batch, by column name.
+    pub fn column(&self, col: &Column) -> Option<Vec<&Value>> {
+        let j = self.columns.iter().position(|c| c == col)?;
+        Some(self.rows.iter().map(|r| &r[j]).collect())
+    }
+}
+
+/// Per-(task, DP-group) streaming dataloader.
+pub struct StreamDataLoader {
+    tq: Arc<TransferQueue>,
+    task: String,
+    group: usize,
+    columns: Vec<Column>,
+    batch_size: usize,
+    /// Minimum rows per batch; `batch_size` for fixed-shape consumers
+    /// (XLA artifacts), 1 for elastic consumers.
+    min_batch: usize,
+}
+
+impl StreamDataLoader {
+    pub(super) fn new(
+        tq: Arc<TransferQueue>,
+        task: String,
+        group: usize,
+        columns: Vec<Column>,
+        batch_size: usize,
+        min_batch: usize,
+    ) -> Self {
+        StreamDataLoader { tq, task, group, columns, batch_size, min_batch }
+    }
+
+    pub fn task(&self) -> &str {
+        &self.task
+    }
+
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    /// Blocking: next micro-batch, or `None` once the queue is closed and
+    /// drained. This is the iterator body of the paper's Code 1.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let meta = self.tq.controller(&self.task).request(
+            self.group,
+            self.batch_size,
+            self.min_batch,
+        )?;
+        Some(self.tq.fetch(&meta.indices, &self.columns))
+    }
+
+    /// Non-blocking variant.
+    pub fn try_next_batch(&self) -> Option<Batch> {
+        let meta = self.tq.controller(&self.task).try_request(
+            self.group,
+            self.batch_size,
+            self.min_batch,
+        )?;
+        Some(self.tq.fetch(&meta.indices, &self.columns))
+    }
+
+    /// Write computed columns back (paper: `collect_transfer_queue_data`).
+    pub fn write_back(
+        &self,
+        index: GlobalIndex,
+        values: Vec<(Column, Value)>,
+    ) -> Result<()> {
+        for (col, val) in values {
+            self.tq.put(index, col, val)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfer_queue::policies::Fcfs;
+    use crate::transfer_queue::TaskSpec;
+
+    fn tq_with_two_stages() -> Arc<TransferQueue> {
+        TransferQueue::builder()
+            .storage_units(2)
+            .task(TaskSpec::new("rollout", vec![Column::Prompts]))
+            .task(
+                TaskSpec::new("score", vec![Column::Responses])
+                    .policy(Box::new(Fcfs)),
+            )
+            .build()
+    }
+
+    #[test]
+    fn streaming_pipeline_two_stages() {
+        let tq = tq_with_two_stages();
+        // producer: 4 prompts
+        for i in 0..4 {
+            tq.put_row(vec![(
+                Column::Prompts,
+                Value::I32s(vec![i as i32; 4]),
+            )])
+            .unwrap();
+        }
+        let rollout = tq.loader("rollout", 0, vec![Column::Prompts], 2, 1);
+        let score = tq.loader("score", 0, vec![Column::Responses], 2, 1);
+
+        // stage 1 consumes prompts, writes responses
+        let mut seen = 0;
+        while let Some(batch) = rollout.try_next_batch() {
+            for (i, idx) in batch.indices.iter().enumerate() {
+                let prompt = batch.rows[i][0].as_i32s().unwrap().to_vec();
+                let mut resp = prompt.clone();
+                resp.push(99);
+                rollout
+                    .write_back(*idx, vec![(
+                        Column::Responses,
+                        Value::I32s(resp),
+                    )])
+                    .unwrap();
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 4);
+
+        // stage 2 sees all four responses
+        let mut scored = 0;
+        while let Some(batch) = score.try_next_batch() {
+            for row in &batch.rows {
+                assert_eq!(*row[0].as_i32s().unwrap().last().unwrap(), 99);
+                scored += 1;
+            }
+        }
+        assert_eq!(scored, 4);
+    }
+
+    #[test]
+    fn batch_column_accessor() {
+        let tq = tq_with_two_stages();
+        tq.put_row(vec![
+            (Column::Prompts, Value::I32s(vec![7])),
+        ])
+        .unwrap();
+        let loader = tq.loader("rollout", 0, vec![Column::Prompts], 1, 1);
+        let b = loader.try_next_batch().unwrap();
+        let col = b.column(&Column::Prompts).unwrap();
+        assert_eq!(col[0].as_i32s().unwrap(), &[7]);
+        assert!(b.column(&Column::Rewards).is_none());
+    }
+
+    #[test]
+    fn closed_queue_yields_none_after_drain() {
+        let tq = tq_with_two_stages();
+        tq.put_row(vec![(Column::Prompts, Value::I32s(vec![1]))]).unwrap();
+        tq.close();
+        let loader = tq.loader("rollout", 0, vec![Column::Prompts], 4, 4);
+        // drain: one row served despite batch_size=4
+        assert_eq!(loader.next_batch().unwrap().len(), 1);
+        assert!(loader.next_batch().is_none());
+    }
+}

@@ -1,0 +1,184 @@
+//! The 2D columnar data model (paper §3.2.1, Fig. 4).
+//!
+//! Rows are complete training samples addressed by a [`GlobalIndex`];
+//! columns are task-specific components (`prompts`, `responses`,
+//! `ref_logp`, ...). Values are variable-length — TransferQueue never pads
+//! (paper §3.5): a token row stores exactly its tokens, and consumers
+//! restore geometry from length metadata.
+
+use std::fmt;
+
+/// Globally unique sample address (assigned once at ingest, valid across
+/// every storage unit and controller).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GlobalIndex(pub u64);
+
+impl fmt::Display for GlobalIndex {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{}", self.0)
+    }
+}
+
+/// Column identifier. Interned as a small enum for the standard GRPO
+/// dataflow plus an escape hatch for custom algorithms.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Column {
+    Prompts,
+    PromptMeta,
+    Responses,
+    OldLogp,
+    RefLogp,
+    Rewards,
+    Advantages,
+    Custom(String),
+}
+
+impl Column {
+    pub fn name(&self) -> &str {
+        match self {
+            Column::Prompts => "prompts",
+            Column::PromptMeta => "prompt_meta",
+            Column::Responses => "responses",
+            Column::OldLogp => "old_logp",
+            Column::RefLogp => "ref_logp",
+            Column::Rewards => "rewards",
+            Column::Advantages => "advantages",
+            Column::Custom(s) => s,
+        }
+    }
+
+    pub fn from_name(s: &str) -> Column {
+        match s {
+            "prompts" => Column::Prompts,
+            "prompt_meta" => Column::PromptMeta,
+            "responses" => Column::Responses,
+            "old_logp" => Column::OldLogp,
+            "ref_logp" => Column::RefLogp,
+            "rewards" => Column::Rewards,
+            "advantages" => Column::Advantages,
+            other => Column::Custom(other.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for Column {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A cell value. Variable-length by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Token ids (prompts, responses).
+    I32s(Vec<i32>),
+    /// Per-token floats (logprobs, masks).
+    F32s(Vec<f32>),
+    /// Scalar float (reward, advantage).
+    F32(f32),
+    /// Scalar integer metadata (group id, policy version, lengths).
+    U64(u64),
+    /// Small structured metadata (answer strings etc.).
+    Text(String),
+}
+
+impl Value {
+    /// Approximate payload size — drives bandwidth accounting and the
+    /// no-padding transfer claims in the TQ bench.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Value::I32s(v) => v.len() * 4,
+            Value::F32s(v) => v.len() * 4,
+            Value::F32(_) => 4,
+            Value::U64(_) => 8,
+            Value::Text(s) => s.len(),
+        }
+    }
+
+    /// Token count hint for load-balancing policies.
+    pub fn token_len(&self) -> Option<usize> {
+        match self {
+            Value::I32s(v) => Some(v.len()),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32s(&self) -> Option<&[i32]> {
+        match self {
+            Value::I32s(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32s(&self) -> Option<&[f32]> {
+        match self {
+            Value::F32s(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<f32> {
+        match self {
+            Value::F32(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::U64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_text(&self) -> Option<&str> {
+        match self {
+            Value::Text(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_name_roundtrip() {
+        for c in [
+            Column::Prompts,
+            Column::Responses,
+            Column::OldLogp,
+            Column::RefLogp,
+            Column::Rewards,
+            Column::Advantages,
+            Column::PromptMeta,
+            Column::Custom("value_head".into()),
+        ] {
+            assert_eq!(Column::from_name(c.name()), c);
+        }
+    }
+
+    #[test]
+    fn value_sizes() {
+        assert_eq!(Value::I32s(vec![1, 2, 3]).size_bytes(), 12);
+        assert_eq!(Value::F32s(vec![0.0; 5]).size_bytes(), 20);
+        assert_eq!(Value::F32(1.0).size_bytes(), 4);
+        assert_eq!(Value::U64(9).size_bytes(), 8);
+        assert_eq!(Value::Text("abc".into()).size_bytes(), 3);
+    }
+
+    #[test]
+    fn token_len_only_for_tokens() {
+        assert_eq!(Value::I32s(vec![1, 2]).token_len(), Some(2));
+        assert_eq!(Value::F32s(vec![1.0]).token_len(), None);
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(Value::F32(2.5).as_f32(), Some(2.5));
+        assert_eq!(Value::F32(2.5).as_u64(), None);
+        assert_eq!(Value::U64(3).as_u64(), Some(3));
+        assert_eq!(Value::Text("t".into()).as_text(), Some("t"));
+    }
+}

@@ -1,0 +1,347 @@
+//! Control plane: per-task controllers (paper §3.3, Fig. 6).
+//!
+//! Each RL task (actor_rollout, ref_inference, reward, actor_update, ...)
+//! gets a dedicated [`Controller`] holding *metadata only*: per-row
+//! readiness of the task's required columns, and consumption records
+//! ensuring each sample is handed to exactly one DP group of the task.
+//!
+//! On a read request the controller scans for rows whose required columns
+//! are all ready (status 1) and that no DP group of this task has
+//! consumed, packs up to a micro-batch under the configured
+//! load-balancing policy, marks them consumed, and returns their indices
+//! — the requester then fetches payloads from the data plane. The scan /
+//! consume step is atomic under the controller lock, which is exactly the
+//! no-duplication guarantee the paper requires.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::column::{Column, GlobalIndex};
+use super::data_plane::WriteNotification;
+use super::policies::{Candidate, GroupStats, Policy};
+
+/// Row-scoped readiness metadata.
+#[derive(Debug, Default, Clone)]
+struct RowStatus {
+    ready: HashSet<Column>,
+    token_len: usize,
+}
+
+struct ControllerState {
+    rows: BTreeMap<GlobalIndex, RowStatus>,
+    /// Rows whose required columns are ALL ready and that are not yet
+    /// consumed, with their token lengths — maintained incrementally on
+    /// notify/consume so batch assembly never scans the full metadata
+    /// table (EXPERIMENTS.md §Perf, L3 iteration 3).
+    ready: BTreeMap<GlobalIndex, usize>,
+    consumed: HashSet<GlobalIndex>,
+    group_stats: HashMap<usize, GroupStats>,
+    closed: bool,
+}
+
+/// Metadata handed back to a DP group for one assembled micro-batch.
+#[derive(Debug, Clone)]
+pub struct BatchMeta {
+    pub indices: Vec<GlobalIndex>,
+    pub task: String,
+}
+
+/// Per-task metadata controller.
+pub struct Controller {
+    pub task: String,
+    pub required: Vec<Column>,
+    policy: Box<dyn Policy>,
+    state: Mutex<ControllerState>,
+    ready_cv: Condvar,
+}
+
+impl Controller {
+    pub fn new(
+        task: impl Into<String>,
+        required: Vec<Column>,
+        policy: Box<dyn Policy>,
+    ) -> Self {
+        Controller {
+            task: task.into(),
+            required,
+            policy,
+            state: Mutex::new(ControllerState {
+                rows: BTreeMap::new(),
+                ready: BTreeMap::new(),
+                consumed: HashSet::new(),
+                group_stats: HashMap::new(),
+                closed: false,
+            }),
+            ready_cv: Condvar::new(),
+        }
+    }
+
+    /// Ingest a data-plane write notification (paper Fig. 5 broadcast).
+    pub fn notify(&self, n: &WriteNotification) {
+        // Irrelevant columns are ignored — controllers are task-scoped.
+        if !self.required.contains(&n.column) {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let required = self.required.len();
+        let (all_ready, token_len) = {
+            let row = st.rows.entry(n.index).or_default();
+            row.ready.insert(n.column.clone());
+            if let Some(l) = n.token_len {
+                row.token_len += l;
+            }
+            (row.ready.len() == required, row.token_len)
+        };
+        if all_ready && !st.consumed.contains(&n.index) {
+            st.ready.insert(n.index, token_len);
+            self.ready_cv.notify_all();
+        }
+    }
+
+    fn ready_candidates(st: &ControllerState) -> Vec<Candidate> {
+        st.ready
+            .iter()
+            .map(|(idx, len)| Candidate { index: *idx, token_len: *len })
+            .collect()
+    }
+
+    /// Non-blocking batch assembly. Returns `None` when fewer than `min`
+    /// samples are ready.
+    pub fn try_request(
+        &self,
+        group: usize,
+        count: usize,
+        min: usize,
+    ) -> Option<BatchMeta> {
+        let mut st = self.state.lock().unwrap();
+        self.assemble(&mut st, group, count, min)
+    }
+
+    /// Blocking batch assembly: waits until at least `min` samples are
+    /// ready, or the queue is closed (drains remaining rows first, then
+    /// returns `None`).
+    pub fn request(
+        &self,
+        group: usize,
+        count: usize,
+        min: usize,
+    ) -> Option<BatchMeta> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(batch) = self.assemble(&mut st, group, count, min) {
+                return Some(batch);
+            }
+            if st.closed {
+                // Drain: serve whatever is left even if below `min`.
+                return self.assemble(&mut st, group, count, 1);
+            }
+            let (next, _timeout) = self
+                .ready_cv
+                .wait_timeout(st, Duration::from_millis(50))
+                .unwrap();
+            st = next;
+        }
+    }
+
+    fn assemble(
+        &self,
+        st: &mut ControllerState,
+        group: usize,
+        count: usize,
+        min: usize,
+    ) -> Option<BatchMeta> {
+        if st.ready.len() < min.max(1) {
+            return None;
+        }
+        // FCFS fast path: the ready map is already in index order — take
+        // the head without materializing the full candidate list.
+        let picked: Vec<GlobalIndex> = if self.policy.is_fcfs() {
+            st.ready.keys().take(count).copied().collect()
+        } else {
+            let candidates = Self::ready_candidates(st);
+            self.policy.select(&candidates, count, group, &st.group_stats)
+        };
+        if picked.len() < min.max(1) {
+            return None;
+        }
+        let mut tokens = 0u64;
+        for idx in &picked {
+            st.consumed.insert(*idx);
+            tokens += st.ready.remove(idx).unwrap_or(0) as u64;
+        }
+        let entry = st.group_stats.entry(group).or_default();
+        entry.samples += picked.len() as u64;
+        entry.tokens += tokens;
+        Some(BatchMeta { indices: picked, task: self.task.clone() })
+    }
+
+    /// Close the stream: blocked requesters drain remaining rows and then
+    /// receive `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.ready_cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Rows ready-but-unconsumed (queue depth for backpressure/metrics).
+    pub fn ready_depth(&self) -> usize {
+        self.state.lock().unwrap().ready.len()
+    }
+
+    /// Total samples consumed by all DP groups of this task.
+    pub fn consumed_count(&self) -> usize {
+        self.state.lock().unwrap().consumed.len()
+    }
+
+    pub fn group_stats(&self) -> HashMap<usize, GroupStats> {
+        self.state.lock().unwrap().group_stats.clone()
+    }
+
+    /// Forget metadata for rows that have been evicted from the data
+    /// plane (GC).
+    pub fn forget(&self, indices: &[GlobalIndex]) {
+        let mut st = self.state.lock().unwrap();
+        for idx in indices {
+            st.rows.remove(idx);
+            st.ready.remove(idx);
+            st.consumed.remove(idx);
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfer_queue::column::Value;
+    use crate::transfer_queue::policies::Fcfs;
+
+    fn notif(idx: u64, col: Column, tokens: Option<usize>) -> WriteNotification {
+        WriteNotification {
+            index: GlobalIndex(idx),
+            column: col,
+            token_len: tokens,
+        }
+    }
+
+    fn rollout_controller() -> Controller {
+        Controller::new("rollout", vec![Column::Prompts], Box::new(Fcfs))
+    }
+
+    fn train_controller() -> Controller {
+        Controller::new(
+            "train",
+            vec![Column::Responses, Column::Advantages],
+            Box::new(Fcfs),
+        )
+    }
+
+    #[test]
+    fn batch_requires_all_columns_ready() {
+        let c = train_controller();
+        c.notify(&notif(0, Column::Responses, Some(4)));
+        assert!(c.try_request(0, 1, 1).is_none(), "advantages missing");
+        c.notify(&notif(0, Column::Advantages, None));
+        let b = c.try_request(0, 1, 1).unwrap();
+        assert_eq!(b.indices, vec![GlobalIndex(0)]);
+    }
+
+    #[test]
+    fn no_duplicate_consumption_across_groups() {
+        let c = rollout_controller();
+        for i in 0..4 {
+            c.notify(&notif(i, Column::Prompts, Some(8)));
+        }
+        let b0 = c.try_request(0, 2, 1).unwrap();
+        let b1 = c.try_request(1, 2, 1).unwrap();
+        let all: HashSet<_> =
+            b0.indices.iter().chain(&b1.indices).collect();
+        assert_eq!(all.len(), 4, "no overlap between groups");
+        assert!(c.try_request(0, 2, 1).is_none(), "pool exhausted");
+    }
+
+    #[test]
+    fn irrelevant_columns_ignored() {
+        let c = rollout_controller();
+        c.notify(&notif(0, Column::Rewards, None));
+        assert!(c.try_request(0, 1, 1).is_none());
+        assert_eq!(c.ready_depth(), 0);
+    }
+
+    #[test]
+    fn min_threshold_respected() {
+        let c = rollout_controller();
+        c.notify(&notif(0, Column::Prompts, Some(8)));
+        assert!(c.try_request(0, 4, 2).is_none(), "below min");
+        c.notify(&notif(1, Column::Prompts, Some(8)));
+        let b = c.try_request(0, 4, 2).unwrap();
+        assert_eq!(b.indices.len(), 2);
+    }
+
+    #[test]
+    fn blocking_request_wakes_on_notify() {
+        let c = std::sync::Arc::new(rollout_controller());
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || c2.request(0, 1, 1));
+        std::thread::sleep(Duration::from_millis(20));
+        c.notify(&notif(9, Column::Prompts, Some(3)));
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got.indices, vec![GlobalIndex(9)]);
+    }
+
+    #[test]
+    fn close_drains_then_returns_none() {
+        let c = std::sync::Arc::new(rollout_controller());
+        c.notify(&notif(0, Column::Prompts, Some(3)));
+        c.close();
+        // Drain: one row left, below typical batch, still served.
+        let b = c.request(0, 4, 4).unwrap();
+        assert_eq!(b.indices.len(), 1);
+        assert!(c.request(0, 4, 1).is_none(), "empty + closed -> None");
+    }
+
+    #[test]
+    fn group_stats_track_tokens() {
+        let c = rollout_controller();
+        c.notify(&notif(0, Column::Prompts, Some(10)));
+        c.notify(&notif(1, Column::Prompts, Some(30)));
+        c.try_request(7, 2, 1).unwrap();
+        let stats = c.group_stats();
+        assert_eq!(stats[&7].samples, 2);
+        assert_eq!(stats[&7].tokens, 40);
+    }
+
+    #[test]
+    fn forget_releases_metadata() {
+        let c = rollout_controller();
+        c.notify(&notif(0, Column::Prompts, Some(1)));
+        c.try_request(0, 1, 1).unwrap();
+        assert_eq!(c.consumed_count(), 1);
+        c.forget(&[GlobalIndex(0)]);
+        assert_eq!(c.consumed_count(), 0);
+        assert_eq!(c.ready_depth(), 0);
+    }
+
+    #[test]
+    fn token_len_accumulates_across_columns() {
+        let c = Controller::new(
+            "train",
+            vec![Column::Prompts, Column::Responses],
+            Box::new(Fcfs),
+        );
+        c.notify(&notif(0, Column::Prompts, Some(8)));
+        c.notify(&notif(0, Column::Responses, Some(24)));
+        c.try_request(0, 1, 1).unwrap();
+        assert_eq!(c.group_stats()[&0].tokens, 32);
+        // silence unused import warning for Value in this test module
+        let _ = Value::F32(0.0);
+    }
+}

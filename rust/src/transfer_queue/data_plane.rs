@@ -1,0 +1,265 @@
+//! Data plane: distributed storage units (paper §3.2).
+//!
+//! Each [`StorageUnit`] owns a shard of the global sample space (rows are
+//! assigned by `global_index % n_units`, amortizing I/O and bandwidth
+//! across units — §3.2.1). Units store variable-length cell values and
+//! report every committed write so the facade can broadcast metadata
+//! notifications to the controllers (§3.2.2).
+//!
+//! Writes are atomic per (row, column): a cell becomes visible to readers
+//! only after the value is fully stored, and the notification is emitted
+//! after visibility — consumers can never observe a notified-but-absent
+//! cell.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use anyhow::{bail, Result};
+
+use super::column::{Column, GlobalIndex, Value};
+
+/// A write that became visible — broadcast payload for the control plane.
+#[derive(Debug, Clone)]
+pub struct WriteNotification {
+    pub index: GlobalIndex,
+    pub column: Column,
+    /// Token count, when the value carries tokens (for token-balancing).
+    pub token_len: Option<usize>,
+}
+
+/// One storage shard.
+pub struct StorageUnit {
+    pub unit_id: usize,
+    rows: RwLock<HashMap<GlobalIndex, HashMap<Column, Value>>>,
+    bytes_written: AtomicU64,
+    bytes_read: AtomicU64,
+}
+
+impl StorageUnit {
+    pub fn new(unit_id: usize) -> Self {
+        StorageUnit {
+            unit_id,
+            rows: RwLock::new(HashMap::new()),
+            bytes_written: AtomicU64::new(0),
+            bytes_read: AtomicU64::new(0),
+        }
+    }
+
+    /// Store one cell; returns the notification to broadcast.
+    pub fn put(
+        &self,
+        index: GlobalIndex,
+        column: Column,
+        value: Value,
+    ) -> Result<WriteNotification> {
+        let token_len = value.token_len();
+        let size = value.size_bytes() as u64;
+        {
+            let mut rows = self.rows.write().unwrap();
+            let row = rows.entry(index).or_default();
+            if row.contains_key(&column) {
+                bail!(
+                    "storage unit {}: duplicate write to {index}/{column}",
+                    self.unit_id
+                );
+            }
+            row.insert(column.clone(), value);
+        }
+        self.bytes_written.fetch_add(size, Ordering::Relaxed);
+        Ok(WriteNotification { index, column, token_len })
+    }
+
+    /// Fetch one cell (None if the row or column is absent).
+    pub fn get(&self, index: GlobalIndex, column: &Column) -> Option<Value> {
+        let rows = self.rows.read().unwrap();
+        let v = rows.get(&index)?.get(column)?.clone();
+        self.bytes_read.fetch_add(v.size_bytes() as u64, Ordering::Relaxed);
+        Some(v)
+    }
+
+    /// Fetch several columns of one row at once (single lock acquisition).
+    pub fn get_row(
+        &self,
+        index: GlobalIndex,
+        columns: &[Column],
+    ) -> Option<Vec<Value>> {
+        let rows = self.rows.read().unwrap();
+        let row = rows.get(&index)?;
+        let mut out = Vec::with_capacity(columns.len());
+        let mut bytes = 0u64;
+        for c in columns {
+            let v = row.get(c)?.clone();
+            bytes += v.size_bytes() as u64;
+            out.push(v);
+        }
+        self.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+        Some(out)
+    }
+
+    /// Drop a row entirely (GC after a global batch completes).
+    pub fn evict(&self, index: GlobalIndex) -> bool {
+        self.rows.write().unwrap().remove(&index).is_some()
+    }
+
+    pub fn row_count(&self) -> usize {
+        self.rows.read().unwrap().len()
+    }
+
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+}
+
+/// The sharded data plane: routes rows to units by index.
+pub struct DataPlane {
+    units: Vec<StorageUnit>,
+}
+
+impl DataPlane {
+    pub fn new(n_units: usize) -> Self {
+        assert!(n_units > 0, "need at least one storage unit");
+        DataPlane {
+            units: (0..n_units).map(StorageUnit::new).collect(),
+        }
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn unit_for(&self, index: GlobalIndex) -> &StorageUnit {
+        &self.units[(index.0 % self.units.len() as u64) as usize]
+    }
+
+    pub fn put(
+        &self,
+        index: GlobalIndex,
+        column: Column,
+        value: Value,
+    ) -> Result<WriteNotification> {
+        self.unit_for(index).put(index, column, value)
+    }
+
+    pub fn get(&self, index: GlobalIndex, column: &Column) -> Option<Value> {
+        self.unit_for(index).get(index, column)
+    }
+
+    pub fn get_row(
+        &self,
+        index: GlobalIndex,
+        columns: &[Column],
+    ) -> Option<Vec<Value>> {
+        self.unit_for(index).get_row(index, columns)
+    }
+
+    pub fn evict(&self, index: GlobalIndex) -> bool {
+        self.unit_for(index).evict(index)
+    }
+
+    pub fn units(&self) -> &[StorageUnit] {
+        &self.units
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.units.iter().map(StorageUnit::row_count).sum()
+    }
+
+    pub fn total_bytes_written(&self) -> u64 {
+        self.units.iter().map(StorageUnit::bytes_written).sum()
+    }
+
+    pub fn total_bytes_read(&self) -> u64 {
+        self.units.iter().map(StorageUnit::bytes_read).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let dp = DataPlane::new(4);
+        let idx = GlobalIndex(7);
+        dp.put(idx, Column::Prompts, Value::I32s(vec![1, 2, 3])).unwrap();
+        dp.put(idx, Column::Rewards, Value::F32(0.5)).unwrap();
+        assert_eq!(
+            dp.get(idx, &Column::Prompts),
+            Some(Value::I32s(vec![1, 2, 3]))
+        );
+        let row = dp
+            .get_row(idx, &[Column::Prompts, Column::Rewards])
+            .unwrap();
+        assert_eq!(row[1], Value::F32(0.5));
+    }
+
+    #[test]
+    fn missing_column_is_none() {
+        let dp = DataPlane::new(2);
+        let idx = GlobalIndex(0);
+        dp.put(idx, Column::Prompts, Value::I32s(vec![1])).unwrap();
+        assert_eq!(dp.get(idx, &Column::Responses), None);
+        assert!(dp.get_row(idx, &[Column::Prompts, Column::Responses])
+            .is_none());
+        assert_eq!(dp.get(GlobalIndex(99), &Column::Prompts), None);
+    }
+
+    #[test]
+    fn duplicate_write_rejected() {
+        let dp = DataPlane::new(2);
+        let idx = GlobalIndex(3);
+        dp.put(idx, Column::Rewards, Value::F32(1.0)).unwrap();
+        assert!(dp.put(idx, Column::Rewards, Value::F32(2.0)).is_err());
+        // value unchanged
+        assert_eq!(dp.get(idx, &Column::Rewards), Some(Value::F32(1.0)));
+    }
+
+    #[test]
+    fn rows_shard_across_units() {
+        let dp = DataPlane::new(4);
+        for i in 0..16 {
+            dp.put(GlobalIndex(i), Column::Rewards, Value::F32(0.0))
+                .unwrap();
+        }
+        for u in dp.units() {
+            assert_eq!(u.row_count(), 4, "even sharding");
+        }
+        assert_eq!(dp.total_rows(), 16);
+    }
+
+    #[test]
+    fn notification_carries_token_len() {
+        let dp = DataPlane::new(1);
+        let n = dp
+            .put(GlobalIndex(0), Column::Responses, Value::I32s(vec![5; 9]))
+            .unwrap();
+        assert_eq!(n.token_len, Some(9));
+        let n2 =
+            dp.put(GlobalIndex(0), Column::Rewards, Value::F32(1.0)).unwrap();
+        assert_eq!(n2.token_len, None);
+    }
+
+    #[test]
+    fn eviction_frees_rows() {
+        let dp = DataPlane::new(2);
+        dp.put(GlobalIndex(1), Column::Rewards, Value::F32(1.0)).unwrap();
+        assert!(dp.evict(GlobalIndex(1)));
+        assert!(!dp.evict(GlobalIndex(1)));
+        assert_eq!(dp.total_rows(), 0);
+    }
+
+    #[test]
+    fn byte_accounting_tracks_traffic() {
+        let dp = DataPlane::new(1);
+        dp.put(GlobalIndex(0), Column::Prompts, Value::I32s(vec![0; 10]))
+            .unwrap();
+        assert_eq!(dp.total_bytes_written(), 40);
+        dp.get(GlobalIndex(0), &Column::Prompts);
+        assert_eq!(dp.total_bytes_read(), 40);
+    }
+}

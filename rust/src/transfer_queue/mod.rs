@@ -1,0 +1,350 @@
+//! TransferQueue — the paper's §3 contribution: a high-performance
+//! asynchronous streaming dataloader with a centralized metadata view
+//! (control plane) over distributed storage (data plane).
+//!
+//! Topology (paper Fig. 3): every RL task has a dedicated [`Controller`]
+//! holding readiness/consumption metadata for exactly the columns it
+//! needs; payloads live in sharded [`data_plane::StorageUnit`]s. Writes
+//! go value-first into a storage unit, then the metadata notification is
+//! broadcast to *all* controllers (Fig. 5); reads go metadata-first
+//! (controller assembles a micro-batch under a load-balancing policy)
+//! then fetch payloads by global index.
+//!
+//! This pull-based design is what enables streaming pipeline overlap
+//! (§4.1) — downstream tasks start as soon as *any* sample is ready — and
+//! dynamic load balancing (§3.3) without a pre-declared cross-task
+//! dataflow graph.
+
+pub mod client;
+pub mod column;
+pub mod control_plane;
+pub mod data_plane;
+pub mod policies;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+pub use client::{Batch, StreamDataLoader};
+pub use column::{Column, GlobalIndex, Value};
+pub use control_plane::{BatchMeta, Controller};
+pub use data_plane::DataPlane;
+pub use policies::{Fcfs, Policy, ShortestFirst, TokenBalanced};
+
+/// Declaration of one RL task's data interface.
+pub struct TaskSpec {
+    pub name: String,
+    pub required: Vec<Column>,
+    pub policy: Box<dyn Policy>,
+}
+
+impl TaskSpec {
+    pub fn new(name: impl Into<String>, required: Vec<Column>) -> Self {
+        TaskSpec {
+            name: name.into(),
+            required,
+            policy: Box::new(Fcfs),
+        }
+    }
+
+    pub fn policy(mut self, policy: Box<dyn Policy>) -> Self {
+        self.policy = policy;
+        self
+    }
+}
+
+/// Builder for a [`TransferQueue`].
+#[derive(Default)]
+pub struct TransferQueueBuilder {
+    n_units: usize,
+    tasks: Vec<TaskSpec>,
+}
+
+impl TransferQueueBuilder {
+    pub fn storage_units(mut self, n: usize) -> Self {
+        self.n_units = n;
+        self
+    }
+
+    pub fn task(mut self, spec: TaskSpec) -> Self {
+        self.tasks.push(spec);
+        self
+    }
+
+    pub fn build(self) -> Arc<TransferQueue> {
+        let controllers = self
+            .tasks
+            .into_iter()
+            .map(|t| {
+                (
+                    t.name.clone(),
+                    Arc::new(Controller::new(t.name, t.required, t.policy)),
+                )
+            })
+            .collect();
+        Arc::new(TransferQueue {
+            data: DataPlane::new(self.n_units.max(1)),
+            controllers,
+            next_index: AtomicU64::new(0),
+        })
+    }
+}
+
+/// The queue facade: data plane + controllers + index allocation.
+pub struct TransferQueue {
+    data: DataPlane,
+    controllers: BTreeMap<String, Arc<Controller>>,
+    next_index: AtomicU64,
+}
+
+impl TransferQueue {
+    pub fn builder() -> TransferQueueBuilder {
+        TransferQueueBuilder::default()
+    }
+
+    /// Allocate a fresh global index (ingest path).
+    pub fn alloc_index(&self) -> GlobalIndex {
+        GlobalIndex(self.next_index.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Ingest a new sample row: allocate an index, store all columns,
+    /// broadcast notifications.
+    pub fn put_row(
+        &self,
+        values: Vec<(Column, Value)>,
+    ) -> Result<GlobalIndex> {
+        let idx = self.alloc_index();
+        for (col, val) in values {
+            self.put(idx, col, val)?;
+        }
+        Ok(idx)
+    }
+
+    /// Store one cell and broadcast the metadata notification to every
+    /// controller (paper Fig. 5).
+    pub fn put(
+        &self,
+        index: GlobalIndex,
+        column: Column,
+        value: Value,
+    ) -> Result<()> {
+        let notification = self.data.put(index, column, value)?;
+        for c in self.controllers.values() {
+            c.notify(&notification);
+        }
+        Ok(())
+    }
+
+    /// Fetch payload columns for a batch of indices.
+    pub fn fetch(&self, indices: &[GlobalIndex], columns: &[Column]) -> Batch {
+        let rows = indices
+            .iter()
+            .map(|idx| {
+                self.data
+                    .get_row(*idx, columns)
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "TransferQueue invariant violated: controller \
+                             served {idx} but data plane lacks {columns:?}"
+                        )
+                    })
+            })
+            .collect();
+        Batch {
+            indices: indices.to_vec(),
+            rows,
+            columns: columns.to_vec(),
+        }
+    }
+
+    pub fn controller(&self, task: &str) -> &Arc<Controller> {
+        self.controllers
+            .get(task)
+            .with_context(|| format!("unknown TransferQueue task {task:?}"))
+            .unwrap()
+    }
+
+    pub fn has_task(&self, task: &str) -> bool {
+        self.controllers.contains_key(task)
+    }
+
+    pub fn tasks(&self) -> impl Iterator<Item = &str> {
+        self.controllers.keys().map(String::as_str)
+    }
+
+    /// Construct a streaming dataloader handle for (task, DP group).
+    pub fn loader(
+        self: &Arc<Self>,
+        task: &str,
+        group: usize,
+        columns: Vec<Column>,
+        batch_size: usize,
+        min_batch: usize,
+    ) -> StreamDataLoader {
+        assert!(self.has_task(task), "unknown task {task:?}");
+        StreamDataLoader::new(
+            self.clone(),
+            task.to_string(),
+            group,
+            columns,
+            batch_size,
+            min_batch,
+        )
+    }
+
+    /// Close every controller: blocked consumers drain and exit.
+    pub fn close(&self) {
+        for c in self.controllers.values() {
+            c.close();
+        }
+    }
+
+    /// Evict rows from the data plane and all controllers (global-batch
+    /// GC).
+    pub fn evict(&self, indices: &[GlobalIndex]) {
+        for idx in indices {
+            self.data.evict(*idx);
+        }
+        for c in self.controllers.values() {
+            c.forget(indices);
+        }
+    }
+
+    pub fn data_plane(&self) -> &DataPlane {
+        &self.data
+    }
+
+    /// Rows currently resident in the data plane.
+    pub fn resident_rows(&self) -> usize {
+        self.data.total_rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grpo_tq(units: usize) -> Arc<TransferQueue> {
+        TransferQueue::builder()
+            .storage_units(units)
+            .task(TaskSpec::new("rollout", vec![Column::Prompts]))
+            .task(TaskSpec::new("reward", vec![Column::Responses]))
+            .task(TaskSpec::new(
+                "train",
+                vec![Column::Responses, Column::Rewards],
+            ))
+            .build()
+    }
+
+    #[test]
+    fn indices_are_unique_and_dense() {
+        let tq = grpo_tq(2);
+        let a = tq.alloc_index();
+        let b = tq.alloc_index();
+        assert_ne!(a, b);
+        assert_eq!(b.0, a.0 + 1);
+    }
+
+    #[test]
+    fn put_row_notifies_all_interested_controllers() {
+        let tq = grpo_tq(3);
+        let idx = tq
+            .put_row(vec![(Column::Prompts, Value::I32s(vec![1, 2]))])
+            .unwrap();
+        assert_eq!(tq.controller("rollout").ready_depth(), 1);
+        assert_eq!(tq.controller("reward").ready_depth(), 0);
+        tq.put(idx, Column::Responses, Value::I32s(vec![3])).unwrap();
+        assert_eq!(tq.controller("reward").ready_depth(), 1);
+        // train needs rewards too
+        assert_eq!(tq.controller("train").ready_depth(), 0);
+        tq.put(idx, Column::Rewards, Value::F32(1.0)).unwrap();
+        assert_eq!(tq.controller("train").ready_depth(), 1);
+    }
+
+    #[test]
+    fn fetch_returns_requested_columns_in_order() {
+        let tq = grpo_tq(2);
+        let idx = tq
+            .put_row(vec![
+                (Column::Responses, Value::I32s(vec![9, 9])),
+                (Column::Rewards, Value::F32(0.25)),
+            ])
+            .unwrap();
+        let b =
+            tq.fetch(&[idx], &[Column::Rewards, Column::Responses]);
+        assert_eq!(b.rows[0][0], Value::F32(0.25));
+        assert_eq!(b.rows[0][1], Value::I32s(vec![9, 9]));
+    }
+
+    #[test]
+    #[should_panic(expected = "invariant violated")]
+    fn fetch_of_absent_column_panics() {
+        let tq = grpo_tq(1);
+        let idx = tq
+            .put_row(vec![(Column::Prompts, Value::I32s(vec![1]))])
+            .unwrap();
+        tq.fetch(&[idx], &[Column::Rewards]);
+    }
+
+    #[test]
+    fn eviction_clears_everywhere() {
+        let tq = grpo_tq(2);
+        let idx = tq
+            .put_row(vec![(Column::Prompts, Value::I32s(vec![1]))])
+            .unwrap();
+        assert_eq!(tq.resident_rows(), 1);
+        tq.evict(&[idx]);
+        assert_eq!(tq.resident_rows(), 0);
+        assert_eq!(tq.controller("rollout").ready_depth(), 0);
+    }
+
+    #[test]
+    fn multi_threaded_producers_consumers_conserve_samples() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let tq = grpo_tq(4);
+        let total = 64usize;
+        let consumed = Arc::new(AtomicUsize::new(0));
+
+        // 2 producers ingest prompts
+        let mut handles = Vec::new();
+        for p in 0..2 {
+            let tq = tq.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..total / 2 {
+                    tq.put_row(vec![(
+                        Column::Prompts,
+                        Value::I32s(vec![(p * 1000 + i) as i32; 3]),
+                    )])
+                    .unwrap();
+                }
+            }));
+        }
+        // 3 consumer DP groups pull batches of 4
+        let mut consumers = Vec::new();
+        for g in 0..3 {
+            let tq = tq.clone();
+            let consumed = consumed.clone();
+            consumers.push(std::thread::spawn(move || {
+                let loader =
+                    tq.loader("rollout", g, vec![Column::Prompts], 4, 1);
+                while let Some(batch) = loader.next_batch() {
+                    consumed.fetch_add(batch.len(), Ordering::SeqCst);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Wait for all samples to be consumed, then close.
+        while tq.controller("rollout").consumed_count() < total {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        tq.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(consumed.load(Ordering::SeqCst), total);
+    }
+}

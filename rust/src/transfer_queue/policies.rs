@@ -1,0 +1,216 @@
+//! Load-balancing policies for micro-batch assembly (paper §3.3).
+//!
+//! When a controller has more ready samples than a requester asked for, a
+//! policy decides *which* samples go to *which* DP group. The paper calls
+//! out two strategies this module implements beyond FCFS: letting faster
+//! instances pull more work (inherent in the pull model), and proactively
+//! equalizing processed tokens across DP groups to minimize actor-update
+//! idling.
+
+use std::collections::HashMap;
+
+use super::column::GlobalIndex;
+
+/// A ready, unconsumed sample the policy can pick.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub index: GlobalIndex,
+    /// Total token count of the sample (0 when unknown).
+    pub token_len: usize,
+}
+
+/// Per-DP-group consumption statistics the controller maintains.
+#[derive(Debug, Clone, Default)]
+pub struct GroupStats {
+    pub samples: u64,
+    pub tokens: u64,
+}
+
+/// Batch-assembly policy.
+pub trait Policy: Send + Sync {
+    /// Pick up to `count` candidates for `group`. Candidates arrive in
+    /// ascending index order.
+    fn select(
+        &self,
+        candidates: &[Candidate],
+        count: usize,
+        group: usize,
+        stats: &HashMap<usize, GroupStats>,
+    ) -> Vec<GlobalIndex>;
+
+    fn name(&self) -> &'static str;
+
+    /// FCFS policies admit an O(count) fast path in the controller.
+    fn is_fcfs(&self) -> bool {
+        false
+    }
+}
+
+/// First-come-first-served: lowest global index first. The default; keeps
+/// streaming order and is the paper's implicit baseline policy.
+pub struct Fcfs;
+
+impl Policy for Fcfs {
+    fn select(
+        &self,
+        candidates: &[Candidate],
+        count: usize,
+        _group: usize,
+        _stats: &HashMap<usize, GroupStats>,
+    ) -> Vec<GlobalIndex> {
+        candidates.iter().take(count).map(|c| c.index).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn is_fcfs(&self) -> bool {
+        true
+    }
+}
+
+/// Token-balancing: when this group is ahead of the fleet in consumed
+/// tokens, hand it the shortest ready samples; when behind, the longest —
+/// equalizing cumulative token load across DP groups (paper §3.3:
+/// "proactive load-balancing ... equitable distribution of processed
+/// tokens across DP groups").
+pub struct TokenBalanced;
+
+impl Policy for TokenBalanced {
+    fn select(
+        &self,
+        candidates: &[Candidate],
+        count: usize,
+        group: usize,
+        stats: &HashMap<usize, GroupStats>,
+    ) -> Vec<GlobalIndex> {
+        let my_tokens =
+            stats.get(&group).map(|s| s.tokens).unwrap_or(0) as f64;
+        let mean_tokens = if stats.is_empty() {
+            0.0
+        } else {
+            stats.values().map(|s| s.tokens).sum::<u64>() as f64
+                / stats.len() as f64
+        };
+        let mut sorted: Vec<Candidate> = candidates.to_vec();
+        if my_tokens > mean_tokens {
+            // ahead -> take short samples
+            sorted.sort_by_key(|c| (c.token_len, c.index));
+        } else {
+            // behind (or at par) -> take long samples
+            sorted.sort_by_key(|c| (std::cmp::Reverse(c.token_len), c.index));
+        }
+        sorted.into_iter().take(count).map(|c| c.index).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "token_balanced"
+    }
+}
+
+/// Shortest-sample-first: prioritizes quick turnaround to keep downstream
+/// pipelines primed during warm-up.
+pub struct ShortestFirst;
+
+impl Policy for ShortestFirst {
+    fn select(
+        &self,
+        candidates: &[Candidate],
+        count: usize,
+        _group: usize,
+        _stats: &HashMap<usize, GroupStats>,
+    ) -> Vec<GlobalIndex> {
+        let mut sorted: Vec<Candidate> = candidates.to_vec();
+        sorted.sort_by_key(|c| (c.token_len, c.index));
+        sorted.into_iter().take(count).map(|c| c.index).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "shortest_first"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cands(lens: &[usize]) -> Vec<Candidate> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &l)| Candidate {
+                index: GlobalIndex(i as u64),
+                token_len: l,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fcfs_takes_lowest_indices() {
+        let sel = Fcfs.select(&cands(&[5, 1, 9, 2]), 2, 0, &HashMap::new());
+        assert_eq!(sel, vec![GlobalIndex(0), GlobalIndex(1)]);
+    }
+
+    #[test]
+    fn fcfs_caps_at_available() {
+        let sel = Fcfs.select(&cands(&[5]), 4, 0, &HashMap::new());
+        assert_eq!(sel.len(), 1);
+    }
+
+    #[test]
+    fn shortest_first_orders_by_len() {
+        let sel =
+            ShortestFirst.select(&cands(&[5, 1, 9, 2]), 3, 0, &HashMap::new());
+        assert_eq!(
+            sel,
+            vec![GlobalIndex(1), GlobalIndex(3), GlobalIndex(0)]
+        );
+    }
+
+    #[test]
+    fn token_balanced_gives_short_to_ahead_group() {
+        let mut stats = HashMap::new();
+        stats.insert(0, GroupStats { samples: 10, tokens: 1000 });
+        stats.insert(1, GroupStats { samples: 10, tokens: 100 });
+        // group 0 is ahead -> shortest samples
+        let sel = TokenBalanced.select(&cands(&[5, 1, 9]), 1, 0, &stats);
+        assert_eq!(sel, vec![GlobalIndex(1)]);
+        // group 1 is behind -> longest samples
+        let sel = TokenBalanced.select(&cands(&[5, 1, 9]), 1, 1, &stats);
+        assert_eq!(sel, vec![GlobalIndex(2)]);
+    }
+
+    #[test]
+    fn token_balanced_reduces_spread() {
+        // Simulate 2 groups pulling from a long-tailed pool and check the
+        // final token totals are closer than FCFS would leave them.
+        let mut lens: Vec<usize> = (0..40)
+            .map(|i| if i % 10 == 0 { 100 } else { 5 })
+            .collect();
+        lens.sort_unstable();
+        let pool = cands(&lens);
+        let mut remaining: Vec<Candidate> = pool.clone();
+        let mut stats: HashMap<usize, GroupStats> = HashMap::new();
+        stats.insert(0, GroupStats::default());
+        stats.insert(1, GroupStats::default());
+        let policy = TokenBalanced;
+        let mut g = 0;
+        while !remaining.is_empty() {
+            let picked = policy.select(&remaining, 2, g, &stats);
+            for idx in &picked {
+                let c = remaining.iter().find(|c| c.index == *idx).unwrap();
+                let e = stats.get_mut(&g).unwrap();
+                e.samples += 1;
+                e.tokens += c.token_len as u64;
+            }
+            remaining.retain(|c| !picked.contains(&c.index));
+            g = 1 - g;
+        }
+        let t0 = stats[&0].tokens as i64;
+        let t1 = stats[&1].tokens as i64;
+        assert!(
+            (t0 - t1).abs() <= 110,
+            "token-balanced spread too wide: {t0} vs {t1}"
+        );
+    }
+}

@@ -1,0 +1,7 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! JSON, deterministic RNG, statistics, and a seeded property-test harness.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,112 @@
+//! Seeded property-test harness (proptest is unavailable offline).
+//!
+//! A property test runs a closure over many deterministically generated
+//! cases; on failure it reports the case seed so the exact case can be
+//! replayed with `check_one`. Shrinking is approximated by re-running the
+//! failing seed with progressively smaller size hints.
+
+use super::rng::Rng;
+
+/// Controls the generated "size" of a case (e.g. number of samples,
+/// number of operations in an interleaving).
+#[derive(Debug, Clone, Copy)]
+pub struct Case {
+    pub seed: u64,
+    pub size: usize,
+}
+
+/// Run `f` over `iters` generated cases. Panics with the failing seed.
+pub fn check(name: &str, iters: usize, f: impl Fn(&mut Rng, Case)) {
+    check_sized(name, iters, 64, f)
+}
+
+/// As [`check`] with an explicit max size hint.
+pub fn check_sized(
+    name: &str,
+    iters: usize,
+    max_size: usize,
+    f: impl Fn(&mut Rng, Case),
+) {
+    // Base seed is fixed for reproducibility; every case derives its own.
+    let mut meta = Rng::new(0xA5F1_0000 ^ name.len() as u64);
+    for i in 0..iters {
+        let seed = meta.next_u64() ^ (i as u64) << 32;
+        // Ramp size up over the run: early cases small, later cases large.
+        let size = 1 + (max_size.saturating_sub(1)) * i / iters.max(1);
+        let case = Case { seed, size };
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let mut rng = Rng::new(seed);
+                f(&mut rng, case);
+            }),
+        );
+        if let Err(panic) = result {
+            // Try to find a smaller failing size for the same seed.
+            let mut min_fail = case.size;
+            for s in 1..case.size {
+                let shrunk = Case { seed, size: s };
+                let r = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        let mut rng = Rng::new(seed);
+                        f(&mut rng, shrunk);
+                    }),
+                );
+                if r.is_err() {
+                    min_fail = s;
+                    break;
+                }
+            }
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    panic.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at iter {i} \
+                 (seed={seed:#x}, size={}, min_fail_size={min_fail}): {msg}",
+                case.size
+            );
+        }
+    }
+}
+
+/// Replay a single case — paste the seed from a failure report.
+pub fn check_one(seed: u64, size: usize, f: impl Fn(&mut Rng, Case)) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng, Case { seed, size });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |rng, _case| {
+            let a = rng.next_u64() >> 32;
+            let b = rng.next_u64() >> 32;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 5, |_rng, _case| {
+            panic!("nope");
+        });
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut seen = Vec::new();
+        let sizes = std::sync::Mutex::new(&mut seen);
+        check_sized("size-ramp", 10, 100, |_rng, case| {
+            sizes.lock().unwrap().push(case.size);
+        });
+        assert!(seen.first().unwrap() < seen.last().unwrap());
+        assert!(seen.iter().all(|&s| (1..=100).contains(&s)));
+    }
+}

@@ -1,0 +1,75 @@
+//! Sync-vs-async trainer parity + real-stack trainer smoke (Fig. 12's
+//! correctness claim at test scale).
+
+use asyncflow::config::RlConfig;
+use asyncflow::coordinator::Trainer;
+use asyncflow::launcher::{build_engines, build_mock_engines};
+use asyncflow::runtime::{default_artifact_dir, Manifest};
+
+fn cfg(staleness: u64, iterations: usize) -> RlConfig {
+    RlConfig {
+        iterations,
+        global_batch: 16,
+        group_size: 4,
+        rollout_workers: 2,
+        staleness,
+        seed: 11,
+        ..RlConfig::default()
+    }
+}
+
+#[test]
+fn sync_and_async_train_identical_sample_counts() {
+    let sync = Trainer::new(cfg(0, 3), build_mock_engines(2))
+        .unwrap()
+        .run()
+        .unwrap();
+    let asy = Trainer::new(cfg(1, 3), build_mock_engines(2))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(sync.samples_trained, asy.samples_trained);
+    assert_eq!(sync.iterations, asy.iterations);
+    // both produce full metric series
+    assert_eq!(
+        sync.metrics.series("loss").unwrap().points.len(),
+        asy.metrics.series("loss").unwrap().points.len()
+    );
+}
+
+#[test]
+fn staleness_two_also_completes() {
+    let r = Trainer::new(cfg(2, 3), build_mock_engines(2))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(r.iterations, 3);
+}
+
+#[test]
+fn real_stack_trainer_one_iteration() {
+    // Skips when artifacts are absent.
+    if Manifest::load(default_artifact_dir()).is_err() {
+        return;
+    }
+    let cfg = RlConfig {
+        iterations: 1,
+        global_batch: 8,
+        group_size: 4,
+        rollout_workers: 1,
+        staleness: 1,
+        ..RlConfig::default()
+    };
+    let (engines, b) = build_engines(&cfg, false).unwrap();
+    let report = Trainer::new(cfg, engines).unwrap().run().unwrap();
+    assert_eq!(report.iterations, 1);
+    assert_eq!(report.samples_trained, b as u64);
+    assert!(report.metrics.series("reward").is_some());
+    assert!(report
+        .metrics
+        .series("loss")
+        .unwrap()
+        .points
+        .iter()
+        .all(|p| p.1.is_finite()));
+}

@@ -1,0 +1,255 @@
+//! Property tests on TransferQueue invariants (paper §3 correctness
+//! claims), using the seeded harness in `asyncflow::util::prop`:
+//!
+//! * exactly-once consumption per task, across arbitrary interleavings;
+//! * batches only ever contain rows whose required columns are ready;
+//! * conservation: everything written is eventually consumed, once;
+//! * policies never duplicate or invent indices;
+//! * per-task isolation: each task sees every row independently.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use asyncflow::transfer_queue::{
+    Column, Fcfs, GlobalIndex, Policy, ShortestFirst, TaskSpec,
+    TokenBalanced, TransferQueue, Value,
+};
+use asyncflow::util::prop::{check, check_sized};
+use asyncflow::util::rng::Rng;
+
+fn rand_policy(rng: &mut Rng) -> (&'static str, Box<dyn Policy>) {
+    match rng.below(3) {
+        0 => ("fcfs", Box::new(Fcfs)),
+        1 => ("token_balanced", Box::new(TokenBalanced)),
+        _ => ("shortest_first", Box::new(ShortestFirst)),
+    }
+}
+
+#[test]
+fn prop_exactly_once_consumption_under_interleaving() {
+    check_sized("exactly-once", 60, 120, |rng, case| {
+        let (_, policy) = rand_policy(rng);
+        let tq = TransferQueue::builder()
+            .storage_units(1 + rng.below(4))
+            .task(TaskSpec::new("t", vec![Column::Prompts]).policy(policy))
+            .build();
+        let n_groups = 1 + rng.below(4);
+        let total = case.size;
+        let mut written = 0usize;
+        let mut seen: HashSet<GlobalIndex> = HashSet::new();
+        // Random interleaving of writes and reads from random groups.
+        while seen.len() < total {
+            if written < total && (rng.bool(0.5) || written == seen.len()) {
+                let len = 1 + rng.below(64);
+                tq.put_row(vec![(
+                    Column::Prompts,
+                    Value::I32s(vec![1; len]),
+                )])
+                .unwrap();
+                written += 1;
+            } else {
+                let group = rng.below(n_groups);
+                let count = 1 + rng.below(8);
+                if let Some(batch) = tq
+                    .loader("t", group, vec![Column::Prompts], count, 1)
+                    .try_next_batch()
+                {
+                    for idx in batch.indices {
+                        assert!(
+                            seen.insert(idx),
+                            "index {idx} served twice"
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len(), total);
+        // fully drained: no more batches
+        assert!(tq
+            .loader("t", 0, vec![Column::Prompts], 8, 1)
+            .try_next_batch()
+            .is_none());
+    });
+}
+
+#[test]
+fn prop_batches_only_contain_fully_ready_rows() {
+    check_sized("ready-only", 40, 80, |rng, case| {
+        let tq = TransferQueue::builder()
+            .storage_units(2)
+            .task(TaskSpec::new(
+                "t",
+                vec![Column::Responses, Column::Rewards],
+            ))
+            .build();
+        let n = case.size;
+        let mut half_written = Vec::new();
+        for _ in 0..n {
+            let idx = tq
+                .put_row(vec![(
+                    Column::Responses,
+                    Value::I32s(vec![1; 1 + rng.below(16)]),
+                )])
+                .unwrap();
+            half_written.push(idx);
+        }
+        // Nothing should be servable yet (Rewards missing everywhere).
+        assert!(tq
+            .loader("t", 0, vec![Column::Responses, Column::Rewards], 4, 1)
+            .try_next_batch()
+            .is_none());
+        // Complete a random subset.
+        let mut completed = HashSet::new();
+        for &idx in &half_written {
+            if rng.bool(0.5) {
+                tq.put(idx, Column::Rewards, Value::F32(1.0)).unwrap();
+                completed.insert(idx);
+            }
+        }
+        let loader =
+            tq.loader("t", 0, vec![Column::Responses, Column::Rewards], 8, 1);
+        let mut served = 0;
+        while let Some(batch) = loader.try_next_batch() {
+            for idx in &batch.indices {
+                assert!(
+                    completed.contains(idx),
+                    "served row {idx} lacking Rewards"
+                );
+                served += 1;
+            }
+        }
+        assert_eq!(served, completed.len(), "all complete rows served");
+    });
+}
+
+#[test]
+fn prop_tasks_are_isolated() {
+    check("task-isolation", 40, |rng, _case| {
+        let tq = TransferQueue::builder()
+            .storage_units(2)
+            .task(TaskSpec::new("a", vec![Column::Prompts]))
+            .task(TaskSpec::new("b", vec![Column::Prompts]))
+            .build();
+        let n = 1 + rng.below(32);
+        for _ in 0..n {
+            tq.put_row(vec![(Column::Prompts, Value::I32s(vec![1]))])
+                .unwrap();
+        }
+        // Task a consumes everything; task b must still see all rows.
+        let la = tq.loader("a", 0, vec![Column::Prompts], 64, 1);
+        let mut a_total = 0;
+        while let Some(batch) = la.try_next_batch() {
+            a_total += batch.len();
+        }
+        let lb = tq.loader("b", 0, vec![Column::Prompts], 64, 1);
+        let mut b_total = 0;
+        while let Some(batch) = lb.try_next_batch() {
+            b_total += batch.len();
+        }
+        assert_eq!(a_total, n);
+        assert_eq!(b_total, n, "task b unaffected by task a's consumption");
+    });
+}
+
+#[test]
+fn prop_concurrent_conservation() {
+    // Multi-threaded: P producers, C consumers; every sample consumed
+    // exactly once, none lost, none duplicated.
+    check_sized("concurrent-conservation", 12, 200, |rng, case| {
+        let producers = 1 + rng.below(3);
+        let consumers = 1 + rng.below(3);
+        let per_producer = case.size;
+        let total = producers * per_producer;
+        let tq = TransferQueue::builder()
+            .storage_units(1 + rng.below(4))
+            .task(TaskSpec::new("t", vec![Column::Prompts]))
+            .build();
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let tq = tq.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    tq.put_row(vec![(
+                        Column::Prompts,
+                        Value::I32s(vec![(p * 10_000 + i) as i32]),
+                    )])
+                    .unwrap();
+                }
+            }));
+        }
+        let seen = Arc::new(std::sync::Mutex::new(HashSet::new()));
+        let mut consumer_handles = Vec::new();
+        for g in 0..consumers {
+            let tq = tq.clone();
+            let seen = seen.clone();
+            consumer_handles.push(std::thread::spawn(move || {
+                let loader = tq.loader("t", g, vec![Column::Prompts], 8, 1);
+                while let Some(batch) = loader.next_batch() {
+                    let mut s = seen.lock().unwrap();
+                    for idx in batch.indices {
+                        assert!(s.insert(idx), "duplicate {idx}");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        while tq.controller("t").consumed_count() < total {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        tq.close();
+        for h in consumer_handles {
+            h.join().unwrap();
+        }
+        assert_eq!(seen.lock().unwrap().len(), total);
+    });
+}
+
+#[test]
+fn prop_policies_return_valid_subsets() {
+    use asyncflow::transfer_queue::policies::{Candidate, GroupStats};
+    use std::collections::HashMap;
+    check_sized("policy-valid-subset", 80, 200, |rng, case| {
+        let candidates: Vec<Candidate> = (0..case.size)
+            .map(|i| Candidate {
+                index: GlobalIndex(i as u64 * 3), // sparse indices
+                token_len: rng.below(512),
+            })
+            .collect();
+        let count = 1 + rng.below(case.size.max(1));
+        let mut stats: HashMap<usize, GroupStats> = HashMap::new();
+        for g in 0..rng.below(4) {
+            stats.insert(
+                g,
+                GroupStats {
+                    samples: rng.below(100) as u64,
+                    tokens: rng.below(10_000) as u64,
+                },
+            );
+        }
+        let group = rng.below(4);
+        let policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(Fcfs),
+            Box::new(TokenBalanced),
+            Box::new(ShortestFirst),
+        ];
+        let valid: HashSet<GlobalIndex> =
+            candidates.iter().map(|c| c.index).collect();
+        for p in &policies {
+            let picked = p.select(&candidates, count, group, &stats);
+            assert!(picked.len() <= count, "{}: over-selected", p.name());
+            assert_eq!(
+                picked.len(),
+                count.min(candidates.len()),
+                "{}: under-selected",
+                p.name()
+            );
+            let uniq: HashSet<_> = picked.iter().collect();
+            assert_eq!(uniq.len(), picked.len(), "{}: duplicates", p.name());
+            for idx in &picked {
+                assert!(valid.contains(idx), "{}: invented index", p.name());
+            }
+        }
+    });
+}
