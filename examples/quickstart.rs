@@ -1,13 +1,18 @@
-//! Quickstart: the smallest end-to-end AsyncFlow run.
+//! Quickstart: the smallest end-to-end AsyncFlow run, driven through the
+//! service API.
 //!
 //! Uses the real three-layer stack if `make artifacts` has been run
 //! (tiny preset), otherwise falls back to the mock backend. Runs a few
-//! GRPO iterations through the full TransferQueue pipeline and prints
-//! the reward curve.
+//! GRPO iterations through the full TransferQueue pipeline — every data
+//! exchange goes through a `ServiceClient` over the in-process transport
+//! (the same verbs remote workers use against `asyncflow serve`) — and
+//! prints live queue stats plus the reward curve.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+
+use std::time::Duration;
 
 use anyhow::Result;
 use asyncflow::config::RlConfig;
@@ -27,7 +32,7 @@ fn main() -> Result<()> {
         ..RlConfig::default()
     };
     println!(
-        "== AsyncFlow quickstart ({} backend) ==",
+        "== AsyncFlow quickstart ({} backend, service API) ==",
         if have_artifacts { "xla-pjrt" } else { "mock" }
     );
     let (engines, batch) = build_engines(&cfg, !have_artifacts)?;
@@ -36,7 +41,30 @@ fn main() -> Result<()> {
         cfg.rollout_workers, cfg.staleness
     );
 
-    let report = Trainer::new(cfg, engines)?.run()?;
+    // The Trainer's workers exchange all data through ServiceClient over
+    // the in-process transport; grab our own client on the same session
+    // to watch the run live — exactly what a remote monitor would do
+    // against `asyncflow serve`.
+    let trainer = Trainer::new(cfg, engines)?;
+    let client = trainer.client();
+    let run = std::thread::spawn(move || trainer.run());
+    while !run.is_finished() {
+        std::thread::sleep(Duration::from_millis(200));
+        if let Ok(stats) = client.stats() {
+            let depths: Vec<String> = stats
+                .tasks
+                .iter()
+                .map(|t| format!("{}:{}", t.name, t.ready))
+                .collect();
+            println!(
+                "[stats] weights v{} | resident {} | ready {}",
+                stats.param_version,
+                stats.resident_rows,
+                depths.join(" ")
+            );
+        }
+    }
+    let report = run.join().expect("trainer thread panicked")?;
 
     println!("\niterations      : {}", report.iterations);
     println!("samples trained : {}", report.samples_trained);

@@ -3,10 +3,12 @@
 //! Trains the AOT-compiled transformer (see `python/compile/model.py`,
 //! presets `tiny`/`small`) with GRPO on synthetic verifiable math tasks
 //! for a configurable number of iterations, through the full AsyncFlow
-//! stack: TransferQueue streaming, multi-worker rollout, delayed
+//! stack: TransferQueue streaming via the service API (`ServiceClient`
+//! over the in-process transport), multi-worker rollout, delayed
 //! parameter updates with one-step staleness, and the Adam train_step
-//! artifact executed via PJRT. Logs the reward/loss curves and writes
-//! them to `target/e2e_metrics.json` + CSVs for EXPERIMENTS.md.
+//! artifact executed via PJRT. A monitor thread polls the service
+//! `stats` verb for live queue depths. Logs the reward/loss curves and
+//! writes them to `target/e2e_metrics.json` + CSVs for EXPERIMENTS.md.
 //!
 //! ```sh
 //! make artifacts                      # tiny preset (default)
@@ -62,7 +64,31 @@ fn main() -> Result<()> {
         cfg.global_batch
     );
 
-    let report = Trainer::new(cfg, engines)?.run()?;
+    // All worker data exchange goes through the service API; keep one
+    // client for ourselves and poll live queue stats while training.
+    let trainer = Trainer::new(cfg, engines)?;
+    let client = trainer.client();
+    let run = std::thread::spawn(move || trainer.run());
+    while !run.is_finished() {
+        std::thread::sleep(std::time::Duration::from_secs(2));
+        if run.is_finished() {
+            break;
+        }
+        if let Ok(stats) = client.stats() {
+            let depths: Vec<String> = stats
+                .tasks
+                .iter()
+                .map(|t| format!("{}:{}/{}", t.name, t.ready, t.consumed))
+                .collect();
+            println!(
+                "[stats] weights v{} | resident {} | ready/consumed {}",
+                stats.param_version,
+                stats.resident_rows,
+                depths.join(" ")
+            );
+        }
+    }
+    let report = run.join().expect("trainer thread panicked")?;
 
     println!("\n-- results --");
     println!("iterations        : {}", report.iterations);

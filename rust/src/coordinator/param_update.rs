@@ -15,7 +15,9 @@
 //!   one-step-asynchronous workflow.
 
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
 
 use crate::runtime::{ParamSet, PolicyEngine};
 
@@ -34,16 +36,26 @@ impl ParamStore {
     }
 
     /// Publish a new snapshot (monotonically increasing version).
+    /// Panics on version regression — regression inside the coordinator
+    /// is a bug, not an input error.
     pub fn publish(&self, params: ParamSet) {
+        self.try_publish(params).unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    /// Fallible publish for the service boundary: a misbehaving remote
+    /// client must get an error response, not crash the server.
+    pub fn try_publish(&self, params: ParamSet) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
-        assert!(
-            params.version >= g.version,
-            "parameter version must not regress ({} < {})",
-            params.version,
-            g.version
-        );
+        if params.version < g.version {
+            anyhow::bail!(
+                "parameter version must not regress ({} < {})",
+                params.version,
+                g.version
+            );
+        }
         *g = params;
         self.cv.notify_all();
+        Ok(())
     }
 
     /// Latest snapshot (cheap: Arc clone of tensors).
@@ -60,6 +72,29 @@ impl ParamStore {
         let mut g = self.inner.lock().unwrap();
         while g.version < v {
             g = self.cv.wait(g).unwrap();
+        }
+        g.clone()
+    }
+
+    /// Long-poll: wait up to `timeout` for a snapshot *newer* than
+    /// `min_version`, then return the latest snapshot either way (the
+    /// caller inspects `.version` to see whether anything new arrived).
+    /// This is the server side of the `subscribe_weights` verb.
+    pub fn wait_for_newer(
+        &self,
+        min_version: u64,
+        timeout: Duration,
+    ) -> ParamSet {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        while g.version <= min_version {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (next, _) =
+                self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = next;
         }
         g.clone()
     }
@@ -211,6 +246,29 @@ mod tests {
     fn store_rejects_version_regression() {
         let store = ParamStore::new(params(5));
         store.publish(params(3));
+    }
+
+    #[test]
+    fn try_publish_rejects_regression_without_panicking() {
+        let store = ParamStore::new(params(5));
+        assert!(store.try_publish(params(3)).is_err());
+        assert_eq!(store.version(), 5, "store unchanged after rejection");
+        assert!(store.try_publish(params(5)).is_ok(), "equal version ok");
+    }
+
+    #[test]
+    fn wait_for_newer_times_out_with_current_snapshot() {
+        let store = ParamStore::new(params(2));
+        let got = store.wait_for_newer(2, Duration::from_millis(30));
+        assert_eq!(got.version, 2, "timeout returns current snapshot");
+        // And a publish unblocks the long-poll early.
+        let store2 = store.clone();
+        let h = std::thread::spawn(move || {
+            store2.wait_for_newer(2, Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        store.publish(params(3));
+        assert_eq!(h.join().unwrap().version, 3);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The user-level `Trainer` (paper §5.1): the single algorithm controller
-//! that wires the GRPO task graph through TransferQueue and runs the
+//! that wires the GRPO task graph through the service API and runs the
 //! producer–consumer asynchronous workflow.
 //!
 //! Task graph (one worker thread per box; R rollout producers):
@@ -9,13 +9,17 @@
 //!                                   └─▶ reward ──Rewards──▶ advantage ──Advantages──▶ update
 //! ```
 //!
-//! Every edge is a TransferQueue column; every consumer pulls ready
-//! samples at micro-batch granularity, which is what makes the stages
-//! overlap (paper §4.1, Fig. 7). The update worker completes an iteration
-//! every `global_batch / B` steps, publishes new weights through the
-//! WeightSender, and bumps the IterationGate; the feeder blocks on the
-//! gate so rollout never runs more than `staleness` iterations ahead
-//! (§4.2).
+//! Every edge is a TransferQueue column; every worker exchanges data
+//! through a [`ServiceClient`] over the in-process transport — the same
+//! verbs (`put_batch`, `get_batch`, `subscribe_weights`,
+//! `weight_sync_notify`) a remote worker would use against `asyncflow
+//! serve`, so the service API is the proven path, not a parallel one.
+//! Consumers pull ready samples at micro-batch granularity, which is what
+//! makes the stages overlap (paper §4.1, Fig. 7). The update worker
+//! completes an iteration every `global_batch / B` steps, publishes new
+//! weights through `weight_sync_notify`, and bumps the IterationGate; the
+//! feeder blocks on the gate so rollout never runs more than `staleness`
+//! iterations ahead (§4.2).
 
 use std::sync::Arc;
 
@@ -28,15 +32,13 @@ use crate::metrics::Registry;
 use crate::runtime::{
     ParamSet, PolicyEngine, Sampler, TrainBatch, TrainEngine,
 };
-use crate::transfer_queue::{
-    Column, Fcfs, Policy, ShortestFirst, TaskSpec, TokenBalanced,
-    TransferQueue, Value,
+use crate::service::{
+    GetBatchSpec, PutRow, ServiceClient, Session, SessionSpec,
 };
+use crate::transfer_queue::{Column, TransferQueue, Value};
 
 use super::grpo::GroupAssembler;
-use super::param_update::{
-    IterationGate, ParamStore, WeightReceiver, WeightSender,
-};
+use super::param_update::IterationGate;
 use super::timeline::Timeline;
 
 /// Factory constructing a policy engine *inside* its worker thread. The
@@ -88,22 +90,19 @@ impl TrainReport {
     }
 }
 
-fn policy_by_name(name: &str) -> Box<dyn Policy> {
-    match name {
-        "token_balanced" => Box::new(TokenBalanced),
-        "shortest_first" => Box::new(ShortestFirst),
-        _ => Box::new(Fcfs),
-    }
-}
-
 fn col(name: &str) -> Column {
     Column::Custom(name.to_string())
 }
+
+/// Long-poll interval for worker pulls: long enough to park the thread,
+/// short enough that shutdown is observed promptly.
+const PULL_TIMEOUT_MS: u64 = 50;
 
 /// The single-controller GRPO trainer.
 pub struct Trainer {
     cfg: RlConfig,
     engines: EngineSet,
+    session: Arc<Session>,
 }
 
 impl Trainer {
@@ -112,50 +111,42 @@ impl Trainer {
         if engines.rollout.is_empty() {
             anyhow::bail!("need at least one rollout engine");
         }
-        Ok(Trainer { cfg, engines })
+        // `init_engines`: the GRPO task graph + initial weights, through
+        // the same service entry point external integrations use.
+        let session = Arc::new(Session::init_engines(
+            SessionSpec::grpo_with_policy(cfg.storage_units, &cfg.policy),
+            engines.initial_params.clone(),
+        )?);
+        Ok(Trainer { cfg, engines, session })
     }
 
-    /// Build the TransferQueue for the GRPO task graph.
-    fn build_tq(cfg: &RlConfig) -> Arc<TransferQueue> {
-        TransferQueue::builder()
-            .storage_units(cfg.storage_units)
-            .task(
-                TaskSpec::new("rollout", vec![Column::Prompts])
-                    .policy(policy_by_name(&cfg.policy)),
-            )
-            .task(TaskSpec::new("reference", vec![Column::Responses]))
-            .task(TaskSpec::new("reward", vec![Column::Responses]))
-            .task(TaskSpec::new("advantage", vec![Column::Rewards]))
-            .task(
-                TaskSpec::new(
-                    "train",
-                    vec![
-                        Column::Responses,
-                        Column::OldLogp,
-                        Column::RefLogp,
-                        Column::Advantages,
-                    ],
-                )
-                .policy(policy_by_name(&cfg.policy)),
-            )
-            .build()
+    /// The live service session (server side of the run).
+    pub fn session(&self) -> Arc<Session> {
+        self.session.clone()
+    }
+
+    /// A zero-copy in-process client on this run's session — the same
+    /// interface `asyncflow serve` exposes over TCP, usable concurrently
+    /// with the run (e.g. for live `stats`).
+    pub fn client(&self) -> ServiceClient {
+        ServiceClient::in_proc(self.session.clone())
     }
 
     /// Run the full workflow; returns when `cfg.iterations` actor updates
     /// have completed.
     pub fn run(self) -> Result<TrainReport> {
-        let Trainer { cfg, engines } = self;
+        let Trainer { cfg, engines, session } = self;
         let b = engines.batch;
         let t_len = engines.max_len;
         let p_len = engines.prompt_len;
         let steps_per_iter = (cfg.global_batch / b) as u64;
 
-        let tq = Self::build_tq(&cfg);
+        let tq = session.transfer_queue()?;
+        let client = ServiceClient::in_proc(session.clone());
         let metrics = Arc::new(Registry::new());
         let timeline = Arc::new(Timeline::new());
         let shutdown = Shutdown::new();
         let gate = IterationGate::new(cfg.staleness);
-        let store = ParamStore::new(engines.initial_params.clone());
 
         let mut pool = WorkerPool::new();
 
@@ -198,13 +189,15 @@ impl Trainer {
 
         // ------------------------------------------------------------------
         // Feeder: ingests G-replicated prompts, gated on iteration staleness.
+        // One batch-first `put_batch` per prompt group keeps ingest
+        // streaming while amortizing the service round-trip.
         // ------------------------------------------------------------------
         {
-            let tq = tq.clone();
             let gate = gate.clone();
             let shutdown = shutdown.clone();
             let cfg2 = cfg.clone();
             let timeline = timeline.clone();
+            let client2 = client.clone();
             let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
                 let mut gen = feeder_gen;
                 let prompts_per_iter = cfg2.global_batch / cfg2.group_size;
@@ -217,20 +210,27 @@ impl Trainer {
                         let task = gen.next_task();
                         let group =
                             iter * prompts_per_iter as u64 + i as u64;
-                        for _ in 0..cfg2.group_size {
-                            tq.put_row(vec![
-                                (
-                                    Column::Prompts,
-                                    Value::I32s(task.prompt_tokens.clone()),
-                                ),
-                                (
-                                    col("answer"),
-                                    Value::Text(task.answer.to_string()),
-                                ),
-                                (col("group"), Value::U64(group)),
-                                (col("iter"), Value::U64(iter)),
-                            ])?;
-                        }
+                        let rows: Vec<PutRow> = (0..cfg2.group_size)
+                            .map(|_| {
+                                PutRow::new(vec![
+                                    (
+                                        Column::Prompts,
+                                        Value::I32s(
+                                            task.prompt_tokens.clone(),
+                                        ),
+                                    ),
+                                    (
+                                        col("answer"),
+                                        Value::Text(
+                                            task.answer.to_string(),
+                                        ),
+                                    ),
+                                    (col("group"), Value::U64(group)),
+                                    (col("iter"), Value::U64(iter)),
+                                ])
+                            })
+                            .collect();
+                        client2.put_batch(rows)?;
                     }
                     timeline.record("feeder", "ingest", t0, timeline.now());
                 }
@@ -243,28 +243,44 @@ impl Trainer {
         // Rollout producers: generate + behaviour-policy logprobs.
         // ------------------------------------------------------------------
         for (r, factory) in engines.rollout.into_iter().enumerate() {
-            let tq = tq.clone();
             let shutdown = shutdown.clone();
             let timeline = timeline.clone();
             let metrics = metrics.clone();
-            let store2 = store.clone();
             let cfg2 = cfg.clone();
+            let client2 = client.clone();
             let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
                 let worker = format!("rollout-{r}");
                 let mut engine = factory()?;
-                let mut receiver = WeightReceiver::new(store2);
+                let mut current_version = 0u64;
                 let mut sampler = Sampler::new(
                     cfg2.temperature,
                     cfg2.top_k,
                     cfg2.seed ^ (r as u64 + 1).wrapping_mul(0x9E37),
                 );
-                let loader =
-                    tq.loader("rollout", r, vec![Column::Prompts], b, b);
+                let spec = GetBatchSpec {
+                    task: "rollout".into(),
+                    group: r,
+                    columns: vec![Column::Prompts],
+                    count: b,
+                    min: b,
+                    timeout_ms: PULL_TIMEOUT_MS,
+                };
                 while !shutdown.is_triggered() {
-                    let Some(batch) = loader.next_batch() else { break };
+                    let Some(batch) = client2.get_batch_blocking_until(
+                        &spec,
+                        || shutdown.is_triggered(),
+                    )?
+                    else {
+                        break;
+                    };
                     // Delayed parameter update: swap only at the
-                    // generation boundary (paper §4.2.2).
-                    if receiver.maybe_swap(engine.as_mut()).is_some() {
+                    // generation boundary (paper §4.2.2), via the
+                    // subscribe_weights verb (None = nothing newer).
+                    if let Some(latest) =
+                        client2.subscribe_weights(current_version, 0)?
+                    {
+                        current_version = latest.version;
+                        engine.set_params(latest);
                         metrics.inc("weight_swaps", 1);
                     }
                     let prompts: Vec<Vec<i32>> = batch
@@ -285,6 +301,7 @@ impl Trainer {
                     let old_logp = engine.logprobs(&ids)?;
                     timeline.record(&worker, "old_logp", t0, timeline.now());
 
+                    let mut rows = Vec::with_capacity(batch.len());
                     for ((idx, traj), lp) in batch
                         .indices
                         .iter()
@@ -304,14 +321,17 @@ impl Trainer {
                         metrics.inc("rollout_samples", 1);
                         metrics
                             .inc("rollout_tokens", traj.response_len as u64);
-                        tq.put(*idx, Column::Responses, Value::I32s(resp))?;
-                        tq.put(*idx, Column::OldLogp, Value::F32s(lp_slice))?;
-                        tq.put(
-                            *idx,
-                            col("version"),
-                            Value::U64(traj.policy_version),
-                        )?;
+                        rows.push(PutRow::at(*idx, vec![
+                            (Column::Responses, Value::I32s(resp)),
+                            (Column::OldLogp, Value::F32s(lp_slice)),
+                            (
+                                col("version"),
+                                Value::U64(traj.policy_version),
+                            ),
+                        ]));
                     }
+                    // Batch-first write-back: one round-trip per batch.
+                    client2.put_batch(rows)?;
                 }
                 Ok(())
             }));
@@ -322,21 +342,28 @@ impl Trainer {
         // Reference scorer.
         // ------------------------------------------------------------------
         {
-            let tq = tq.clone();
             let timeline = timeline.clone();
             let factory = engines.reference;
             let shutdown = shutdown.clone();
+            let client2 = client.clone();
             let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
                 let mut engine = factory()?;
-                let loader = tq.loader(
-                    "reference",
-                    0,
-                    vec![Column::Prompts, Column::Responses],
-                    b,
-                    b,
-                );
+                let spec = GetBatchSpec {
+                    task: "reference".into(),
+                    group: 0,
+                    columns: vec![Column::Prompts, Column::Responses],
+                    count: b,
+                    min: b,
+                    timeout_ms: PULL_TIMEOUT_MS,
+                };
                 while !shutdown.is_triggered() {
-                    let Some(batch) = loader.next_batch() else { break };
+                    let Some(batch) = client2.get_batch_blocking_until(
+                        &spec,
+                        || shutdown.is_triggered(),
+                    )?
+                    else {
+                        break;
+                    };
                     let mut ids = Vec::with_capacity(batch.len());
                     let mut resp_lens = Vec::with_capacity(batch.len());
                     for row in &batch.rows {
@@ -352,6 +379,7 @@ impl Trainer {
                     let ref_logp = engine.logprobs(&ids)?;
                     timeline.record("reference", "ref_logp", t0,
                                     timeline.now());
+                    let mut rows = Vec::with_capacity(batch.len());
                     for ((idx, lp), rl) in batch
                         .indices
                         .iter()
@@ -360,8 +388,12 @@ impl Trainer {
                     {
                         let lp_slice =
                             lp[p_len - 1..p_len - 1 + rl].to_vec();
-                        tq.put(*idx, Column::RefLogp, Value::F32s(lp_slice))?;
+                        rows.push(PutRow::at(*idx, vec![(
+                            Column::RefLogp,
+                            Value::F32s(lp_slice),
+                        )]));
                     }
+                    client2.put_batch(rows)?;
                 }
                 Ok(())
             }));
@@ -372,21 +404,29 @@ impl Trainer {
         // Reward grader (rule-based answer check).
         // ------------------------------------------------------------------
         {
-            let tq = tq.clone();
             let timeline = timeline.clone();
             let metrics = metrics.clone();
             let shutdown = shutdown.clone();
+            let client2 = client.clone();
             let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
-                let loader = tq.loader(
-                    "reward",
-                    0,
-                    vec![Column::Responses, col("answer")],
-                    b,
-                    1,
-                );
+                let spec = GetBatchSpec {
+                    task: "reward".into(),
+                    group: 0,
+                    columns: vec![Column::Responses, col("answer")],
+                    count: b,
+                    min: 1,
+                    timeout_ms: PULL_TIMEOUT_MS,
+                };
                 while !shutdown.is_triggered() {
-                    let Some(batch) = loader.next_batch() else { break };
+                    let Some(batch) = client2.get_batch_blocking_until(
+                        &spec,
+                        || shutdown.is_triggered(),
+                    )?
+                    else {
+                        break;
+                    };
                     let t0 = timeline.now();
+                    let mut rows = Vec::with_capacity(batch.len());
                     for (idx, row) in
                         batch.indices.iter().zip(&batch.rows)
                     {
@@ -400,8 +440,12 @@ impl Trainer {
                         metrics.record_now("reward", reward as f64);
                         metrics
                             .record_now("response_len", resp.len() as f64);
-                        tq.put(*idx, Column::Rewards, Value::F32(reward))?;
+                        rows.push(PutRow::at(*idx, vec![(
+                            Column::Rewards,
+                            Value::F32(reward),
+                        )]));
                     }
+                    client2.put_batch(rows)?;
                     timeline.record("reward", "grade", t0, timeline.now());
                 }
                 Ok(())
@@ -413,20 +457,28 @@ impl Trainer {
         // Advantage (GRPO group assembly + normalization).
         // ------------------------------------------------------------------
         {
-            let tq = tq.clone();
             let shutdown = shutdown.clone();
             let group_size = cfg.group_size;
+            let client2 = client.clone();
             let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
-                let loader = tq.loader(
-                    "advantage",
-                    0,
-                    vec![Column::Rewards, col("group")],
-                    b,
-                    1,
-                );
+                let spec = GetBatchSpec {
+                    task: "advantage".into(),
+                    group: 0,
+                    columns: vec![Column::Rewards, col("group")],
+                    count: b,
+                    min: 1,
+                    timeout_ms: PULL_TIMEOUT_MS,
+                };
                 let mut assembler = GroupAssembler::new(group_size);
                 while !shutdown.is_triggered() {
-                    let Some(batch) = loader.next_batch() else { break };
+                    let Some(batch) = client2.get_batch_blocking_until(
+                        &spec,
+                        || shutdown.is_triggered(),
+                    )?
+                    else {
+                        break;
+                    };
+                    let mut rows = Vec::new();
                     for (idx, row) in
                         batch.indices.iter().zip(&batch.rows)
                     {
@@ -436,13 +488,15 @@ impl Trainer {
                             assembler.add(group, *idx, reward)
                         {
                             for (midx, adv) in done {
-                                tq.put(
-                                    midx,
+                                rows.push(PutRow::at(midx, vec![(
                                     Column::Advantages,
                                     Value::F32(adv),
-                                )?;
+                                )]));
                             }
                         }
+                    }
+                    if !rows.is_empty() {
+                        client2.put_batch(rows)?;
                     }
                 }
                 Ok(())
@@ -451,40 +505,44 @@ impl Trainer {
         }
 
         // ------------------------------------------------------------------
-        // Update worker: the training loop + WeightSender + gate.
+        // Update worker: the training loop + weight_sync_notify + gate.
         // ------------------------------------------------------------------
         let update_handle = {
-            let tq = tq.clone();
             let timeline = timeline.clone();
             let metrics = metrics.clone();
             let gate = gate.clone();
-            let sender = WeightSender::new(store.clone());
             let factory = engines.train;
             let cfg2 = cfg.clone();
             let shutdown = shutdown.clone();
+            let client2 = client.clone();
             std::thread::Builder::new()
                 .name("update".into())
                 .spawn(move || -> Result<(u64, u64, u64)> {
                     let mut engine = factory()?;
-                    let loader = tq.loader(
-                        "train",
-                        0,
-                        vec![
+                    let spec = GetBatchSpec {
+                        task: "train".into(),
+                        group: 0,
+                        columns: vec![
                             Column::Prompts,
                             Column::Responses,
                             Column::OldLogp,
                             Column::RefLogp,
                             Column::Advantages,
                         ],
-                        b,
-                        b,
-                    );
+                        count: b,
+                        min: b,
+                        timeout_ms: PULL_TIMEOUT_MS,
+                    };
                     let mut samples = 0u64;
                     let mut tokens = 0u64;
                     let mut iters_done = 0u64;
                     let mut steps_in_iter = 0u64;
                     'outer: while iters_done < cfg2.iterations as u64 {
-                        let Some(batch) = loader.next_batch() else {
+                        let Some(batch) = client2
+                            .get_batch_blocking_until(&spec, || {
+                                shutdown.is_triggered()
+                            })?
+                        else {
                             break 'outer;
                         };
                         let tb = build_train_batch(
@@ -509,7 +567,7 @@ impl Trainer {
                         metrics
                             .record_now("grad_norm", tm.grad_norm as f64);
                         // Evict consumed rows (global-batch GC).
-                        tq.evict(&batch.indices);
+                        client2.evict(&batch.indices)?;
 
                         steps_in_iter += 1;
                         if steps_in_iter == steps_per_iter {
@@ -520,7 +578,9 @@ impl Trainer {
                             // out with version >= iters_done (on-policy
                             // in sync mode).
                             let t0 = timeline.now();
-                            sender.send(engine.export_params());
+                            client2.weight_sync_notify(
+                                engine.export_params(),
+                            )?;
                             timeline.record(
                                 "update",
                                 "weight_sync",
@@ -705,6 +765,25 @@ mod tests {
                 "missing {expected} in {workers:?}"
             );
         }
+    }
+
+    #[test]
+    fn service_stats_visible_during_and_after_run() {
+        let cfg = quick_cfg(2, 1);
+        let engines = mock_engines(2, 8, 16, 48);
+        let trainer = Trainer::new(cfg, engines).unwrap();
+        let client = trainer.client();
+        // Service verbs work before the run starts...
+        assert_eq!(client.stats().unwrap().param_version, 0);
+        let report = trainer.run().unwrap();
+        assert_eq!(report.iterations, 2);
+        // ...and after it completes: the queue reports itself closed and
+        // the final published weights are visible through the API
+        // (MockEngine bumps its version every train step: 2 iterations
+        // x 2 steps -> version 4).
+        let stats = client.stats().unwrap();
+        assert!(stats.closed);
+        assert_eq!(stats.param_version, 4);
     }
 
     #[test]

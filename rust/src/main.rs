@@ -3,12 +3,16 @@
 //! Subcommands:
 //! * `train`    — run GRPO post-training on the real three-layer stack
 //!   (AOT artifacts via PJRT) or the mock backend.
+//! * `serve`    — expose a TransferQueue/ParamStore session as a TCP
+//!   JSON-lines service (paper §5: the service-oriented interface, made
+//!   a real process boundary).
 //! * `simulate` — cluster-scale simulation (Fig. 10 / Table 1 modes).
 //! * `plan`     — resource planner (paper §4.3).
 //! * `gantt`    — simulated execution timeline (Fig. 11).
 //! * `info`     — artifact bundle + PJRT platform info.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -16,7 +20,8 @@ use asyncflow::config::{ConfigDoc, RlConfig};
 use asyncflow::coordinator::Trainer;
 use asyncflow::launcher::build_engines;
 use asyncflow::planner::{plan, CostModel, DeviceSpec, LlmSpec, PlanRequest};
-use asyncflow::runtime::{default_artifact_dir, Manifest, XlaRuntime};
+use asyncflow::runtime::{default_artifact_dir, Manifest, ParamSet, XlaRuntime};
+use asyncflow::service::{Session, SessionSpec, TcpJsonlServer};
 use asyncflow::simulator::{simulate, Mode, SimConfig};
 
 fn main() {
@@ -27,22 +32,38 @@ fn main() {
     }
 }
 
-/// Tiny flag parser: `--key value` and `--flag` pairs after the
-/// subcommand.
+/// A token counts as a flag only if it is `--` followed by something
+/// that is not a number — so negative values (`--offset -3`, or even the
+/// degenerate `--3`) are always treated as values, never swallowed as
+/// flags.
+fn is_flag_token(tok: &str) -> bool {
+    match tok.strip_prefix("--") {
+        Some(rest) => !rest.is_empty() && rest.parse::<f64>().is_err(),
+        None => false,
+    }
+}
+
+/// Tiny flag parser: `--key value`, `--key=value`, and bare `--flag`
+/// pairs after the subcommand.
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            let value = if i + 1 < args.len()
-                && !args[i + 1].starts_with("--")
-            {
-                i += 1;
-                args[i].clone()
+        if is_flag_token(&args[i]) {
+            let body = args[i].strip_prefix("--").unwrap();
+            if let Some((key, value)) = body.split_once('=') {
+                flags.insert(key.to_string(), value.to_string());
             } else {
-                "true".to_string()
-            };
-            flags.insert(key.to_string(), value);
+                let value = if i + 1 < args.len()
+                    && !is_flag_token(&args[i + 1])
+                {
+                    i += 1;
+                    args[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(body.to_string(), value);
+            }
         }
         i += 1;
     }
@@ -54,6 +75,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let flags = parse_flags(&args[1.min(args.len())..]);
     match cmd {
         "train" => cmd_train(&flags),
+        "serve" => cmd_serve(&flags),
         "simulate" => cmd_simulate(&flags),
         "plan" => cmd_plan(&flags),
         "gantt" => cmd_gantt(&flags),
@@ -75,6 +97,9 @@ COMMANDS:
   train     --iterations N --global-batch N --staleness {0|1} --mock
             --rollout-workers N --policy {fcfs|token_balanced|shortest_first}
             --config file.toml
+  serve     --port N --storage-units N
+            --policy {fcfs|token_balanced|shortest_first} --uninit
+            (JSON-lines service; clients attach with ServiceClient)
   simulate  --devices N --model {7b|32b} --mode {colocated|sequential|streaming|async|substep}
             --iterations N
   plan      --devices N --model {7b|32b}
@@ -145,6 +170,36 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         report.throughput_tokens_per_s(),
         report.final_reward,
     );
+    Ok(())
+}
+
+/// `asyncflow serve`: front a TransferQueue/ParamStore session with the
+/// TCP JSON-lines transport so external trainers and rollout workers can
+/// attach from other processes/hosts (paper §5 made literal).
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let port = get_usize(flags, "port", 7740)? as u16;
+    let session = if flags.contains_key("uninit") {
+        // Empty session: the first client sends the init_engines verb.
+        Arc::new(Session::new())
+    } else {
+        let storage_units = get_usize(flags, "storage-units", 2)?;
+        let policy = flags
+            .get("policy")
+            .map(String::as_str)
+            .unwrap_or("fcfs");
+        Arc::new(Session::init_engines(
+            SessionSpec::grpo_with_policy(storage_units, policy),
+            ParamSet::new(0, vec![]),
+        )?)
+    };
+    let server =
+        TcpJsonlServer::bind(session, ("0.0.0.0", port))?;
+    println!(
+        "[serve] asyncflow service listening on {} (JSONL protocol; \
+         see DESIGN.md §Wire protocol)",
+        server.local_addr()
+    );
+    server.join();
     Ok(())
 }
 
@@ -247,4 +302,63 @@ fn cmd_info() -> Result<()> {
         Err(e) => println!("pjrt: unavailable ({e})"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_key_value_pairs_and_booleans() {
+        let f = parse_flags(&args(&[
+            "--iterations", "5", "--mock", "--policy", "fcfs",
+        ]));
+        assert_eq!(f.get("iterations").unwrap(), "5");
+        assert_eq!(f.get("mock").unwrap(), "true");
+        assert_eq!(f.get("policy").unwrap(), "fcfs");
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn parse_flags_accepts_negative_values() {
+        let f = parse_flags(&args(&["--offset", "-3", "--lr", "-1.5e-4"]));
+        assert_eq!(f.get("offset").unwrap(), "-3");
+        assert_eq!(f.get("lr").unwrap(), "-1.5e-4");
+        // a numeric token is never mis-parsed as a flag key
+        assert!(!f.contains_key("3"));
+    }
+
+    #[test]
+    fn parse_flags_equals_syntax() {
+        let f = parse_flags(&args(&["--offset=-3", "--name=x=y"]));
+        assert_eq!(f.get("offset").unwrap(), "-3");
+        // split on the FIRST '=' only
+        assert_eq!(f.get("name").unwrap(), "x=y");
+    }
+
+    #[test]
+    fn parse_flags_trailing_flag_is_boolean() {
+        let f = parse_flags(&args(&["--port", "7740", "--uninit"]));
+        assert_eq!(f.get("port").unwrap(), "7740");
+        assert_eq!(f.get("uninit").unwrap(), "true");
+    }
+
+    #[test]
+    fn parse_flags_numeric_like_flag_treated_as_value() {
+        // `--3` parses as a number, so it is a value, not a flag key.
+        let f = parse_flags(&args(&["--offset", "--3"]));
+        assert_eq!(f.get("offset").unwrap(), "--3");
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn parse_flags_ignores_loose_positional_tokens() {
+        let f = parse_flags(&args(&["stray", "--k", "v", "loose"]));
+        assert_eq!(f.get("k").unwrap(), "v");
+        assert_eq!(f.len(), 1);
+    }
 }

@@ -40,6 +40,21 @@ impl ParamSet {
     pub fn size_bytes(&self) -> usize {
         self.tensors.iter().map(HostTensor::size_bytes).sum()
     }
+
+    pub fn tensor_count(&self) -> usize {
+        self.tensors.len()
+    }
+}
+
+impl std::fmt::Debug for ParamSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Weight payloads can be megabytes — log shape, never contents.
+        f.debug_struct("ParamSet")
+            .field("version", &self.version)
+            .field("tensors", &self.tensors.len())
+            .field("bytes", &self.size_bytes())
+            .finish()
+    }
 }
 
 /// Token sampling policy used during rollout.

@@ -1,0 +1,205 @@
+//! `ServiceClient` — the typed, transport-agnostic client for the
+//! service API. Mirrors the wire verbs 1:1 as methods; every method is
+//! exactly one [`Transport::call`] round-trip. Works identically over
+//! [`InProcTransport`] (same process, zero copy) and
+//! [`TcpJsonlTransport`] (remote service).
+
+use std::sync::Arc;
+use std::net::ToSocketAddrs;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::ParamSet;
+use crate::transfer_queue::{Batch, Column, GlobalIndex, Value};
+
+use super::protocol::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceRequest, ServiceResponse,
+    ServiceStats, SpecDecl, TaskDecl,
+};
+use super::transport::{InProcTransport, TcpJsonlTransport, Transport};
+use super::Session;
+
+/// Typed client over any [`Transport`].
+#[derive(Clone)]
+pub struct ServiceClient {
+    transport: Arc<dyn Transport>,
+}
+
+impl ServiceClient {
+    pub fn new(transport: Arc<dyn Transport>) -> Self {
+        ServiceClient { transport }
+    }
+
+    /// Client bound to an in-process session (the zero-copy fast path).
+    pub fn in_proc(session: Arc<Session>) -> Self {
+        ServiceClient::new(Arc::new(InProcTransport::new(session)))
+    }
+
+    /// Client connected to a remote `asyncflow serve` instance.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        Ok(ServiceClient::new(Arc::new(TcpJsonlTransport::connect(
+            addr,
+        )?)))
+    }
+
+    fn call(&self, req: ServiceRequest) -> Result<ServiceResponse> {
+        match self.transport.call(req)? {
+            ServiceResponse::Err(msg) => bail!("service error: {msg}"),
+            resp => Ok(resp),
+        }
+    }
+
+    fn call_ok(&self, req: ServiceRequest) -> Result<()> {
+        match self.call(req)? {
+            ServiceResponse::Ok => Ok(()),
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    fn call_indices(
+        &self,
+        req: ServiceRequest,
+    ) -> Result<Vec<GlobalIndex>> {
+        match self.call(req)? {
+            ServiceResponse::Indices(idx) => Ok(idx),
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    // ---- verbs ------------------------------------------------------------
+
+    /// `init_engines`: install the task graph + initial weights on an
+    /// uninitialized session (e.g. a freshly started `asyncflow serve
+    /// --uninit` instance).
+    pub fn init_engines(
+        &self,
+        spec: SpecDecl,
+        params: ParamSet,
+    ) -> Result<()> {
+        self.call_ok(ServiceRequest::InitEngines { spec, params })
+    }
+
+    /// Register one more task on a live session.
+    pub fn register_task(&self, task: TaskDecl) -> Result<()> {
+        self.call_ok(ServiceRequest::RegisterTask { task })
+    }
+
+    /// `put_prompts_data`: batch prompt ingest; returns assigned indices.
+    pub fn put_prompts_data(
+        &self,
+        prompts: &[Vec<i32>],
+    ) -> Result<Vec<GlobalIndex>> {
+        self.call_indices(ServiceRequest::PutPrompts {
+            prompts: prompts.to_vec(),
+        })
+    }
+
+    /// `put_experience_data`: single-cell write.
+    pub fn put_experience_data(
+        &self,
+        index: GlobalIndex,
+        column: Column,
+        value: Value,
+    ) -> Result<()> {
+        self.call_ok(ServiceRequest::PutExperience {
+            index,
+            column,
+            value,
+        })
+    }
+
+    /// Batch-first write: many rows (new or existing) per round-trip.
+    /// Returns one index per row, in order.
+    pub fn put_batch(
+        &self,
+        rows: Vec<PutRow>,
+    ) -> Result<Vec<GlobalIndex>> {
+        self.call_indices(ServiceRequest::PutBatch { rows })
+    }
+
+    /// `get_experience_data`, batch-first, with deadline semantics:
+    /// `NotReady` means retry, `Closed` means the stream is drained.
+    pub fn get_batch(&self, spec: &GetBatchSpec) -> Result<GetBatchReply> {
+        match self.call(ServiceRequest::GetBatch(spec.clone()))? {
+            ServiceResponse::Batch(reply) => Ok(reply),
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    /// Convenience loop over [`ServiceClient::get_batch`]: blocks until a
+    /// batch is ready (`Some`) or the queue closes (`None`). Each retry
+    /// long-polls for `spec.timeout_ms` (uses 50ms when the spec says 0,
+    /// so the loop never spins hot).
+    pub fn get_batch_blocking(
+        &self,
+        spec: &GetBatchSpec,
+    ) -> Result<Option<Batch>> {
+        self.get_batch_blocking_until(spec, || false)
+    }
+
+    /// Like [`ServiceClient::get_batch_blocking`] but aborts (returning
+    /// `Ok(None)`) as soon as `abort()` turns true — the shutdown-aware
+    /// worker loop.
+    pub fn get_batch_blocking_until(
+        &self,
+        spec: &GetBatchSpec,
+        abort: impl Fn() -> bool,
+    ) -> Result<Option<Batch>> {
+        let mut spec = spec.clone();
+        if spec.timeout_ms == 0 {
+            spec.timeout_ms = 50;
+        }
+        loop {
+            if abort() {
+                return Ok(None);
+            }
+            match self.get_batch(&spec)? {
+                GetBatchReply::Ready(b) => return Ok(Some(b)),
+                GetBatchReply::NotReady => continue,
+                GetBatchReply::Closed => return Ok(None),
+            }
+        }
+    }
+
+    /// Long-poll for a weight snapshot newer than `min_version`.
+    /// `Ok(None)` means nothing newer arrived before the timeout — the
+    /// server elides the payload for "no change" answers, so polling is
+    /// cheap even over TCP.
+    pub fn subscribe_weights(
+        &self,
+        min_version: u64,
+        timeout_ms: u64,
+    ) -> Result<Option<ParamSet>> {
+        match self.call(ServiceRequest::SubscribeWeights {
+            min_version,
+            timeout_ms,
+        })? {
+            ServiceResponse::Weights(p) => Ok(Some(p)),
+            ServiceResponse::WeightsNotNewer { .. } => Ok(None),
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    /// `weight_sync_notify`: publish a new weight snapshot.
+    pub fn weight_sync_notify(&self, params: ParamSet) -> Result<()> {
+        self.call_ok(ServiceRequest::WeightSync { params })
+    }
+
+    /// Queue/param introspection.
+    pub fn stats(&self) -> Result<ServiceStats> {
+        match self.call(ServiceRequest::Stats)? {
+            ServiceResponse::Stats(s) => Ok(s),
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    /// Global-batch GC of fully consumed rows.
+    pub fn evict(&self, indices: &[GlobalIndex]) -> Result<()> {
+        self.call_ok(ServiceRequest::Evict { indices: indices.to_vec() })
+    }
+
+    /// Close the queue; consumers drain and observe `Closed`.
+    pub fn shutdown(&self) -> Result<()> {
+        self.call_ok(ServiceRequest::Shutdown)
+    }
+}

@@ -1,27 +1,57 @@
-//! Service-oriented user interface (paper §5, Fig. 9).
+//! Service-oriented user interface (paper §5, Fig. 9) — now an explicit
+//! request/response service rather than an in-process facade.
 //!
-//! The user-level API exposes the paper's five workflow verbs over an
-//! in-process service session, so industrial callers can drive the
-//! post-training system without touching the coordinator internals:
+//! Layering:
 //!
-//! * [`Session::init_engines`]      — register backend engines.
-//! * [`Session::put_prompts_data`]  — load prompt data.
-//! * [`Session::put_experience_data`] / [`Session::get_experience_data`]
-//!   — exchange experience between training and inference engines.
-//! * [`Session::weight_sync_notify`] — propagate new model weights.
+//! ```text
+//!  ServiceClient ──(typed verbs)──▶ Transport ──(ServiceRequest IR)──▶
+//!      Session::handle ──▶ TransferQueue + ParamStore
+//! ```
 //!
-//! The backend-level interface (the `Adapter` layer of §5.2) is the
+//! * [`protocol`] — the [`protocol::ServiceRequest`] /
+//!   [`protocol::ServiceResponse`] IR: the paper's five workflow verbs
+//!   (`init_engines`, `put_prompts_data`, `put_experience_data`,
+//!   `get_experience_data`, `weight_sync_notify`) plus `register_task`,
+//!   batch-first `put_batch`/`get_batch` with deadline semantics,
+//!   `subscribe_weights`, `stats`, `evict`, and `shutdown`.
+//! * [`transport`] — [`transport::InProcTransport`] (zero-copy fast
+//!   path) and [`transport::TcpJsonlTransport`] /
+//!   [`transport::TcpJsonlServer`] (JSON-lines over TCP — the
+//!   multi-process / multi-client boundary, `asyncflow serve`).
+//! * [`client`] — [`client::ServiceClient`], the typed client mirroring
+//!   every verb.
+//! * [`Session`] — the server-side dispatcher. Owns the
+//!   [`TransferQueue`] and [`ParamStore`] and translates each request
+//!   into queue/store operations. Task graphs are *dynamic*: tasks can
+//!   be registered after `init_engines` and replay resident rows.
+//!
+//! The backend-level interface (the `Adapter` layer of §5.2) remains the
 //! [`crate::runtime::PolicyEngine`]/[`crate::runtime::TrainEngine`] trait
-//! pair; [`Session`] is deliberately engine-agnostic.
+//! pair; the service layer never touches an engine directly.
 
-use std::sync::Arc;
+pub mod client;
+pub mod protocol;
+pub mod transport;
+
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+pub use client::ServiceClient;
+pub use protocol::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceRequest, ServiceResponse,
+    ServiceStats, SpecDecl, TaskDecl, TaskStats,
+};
+pub use transport::{
+    InProcTransport, TcpJsonlServer, TcpJsonlTransport, Transport,
+};
 
 use crate::coordinator::ParamStore;
 use crate::runtime::ParamSet;
 use crate::transfer_queue::{
-    Column, GlobalIndex, TaskSpec, TransferQueue, Value,
+    policy_by_name, Column, GlobalIndex, RequestOutcome, TaskSpec,
+    TransferQueue, Value,
 };
 
 /// Declarative description of the RL task graph for a session.
@@ -33,10 +63,17 @@ pub struct SessionSpec {
 impl SessionSpec {
     /// The standard GRPO graph (same wiring as the Trainer).
     pub fn grpo() -> Self {
+        Self::grpo_with_policy(2, "fcfs")
+    }
+
+    /// GRPO graph with explicit storage-unit count and batching policy
+    /// on the two batch-shaped stages (rollout, train).
+    pub fn grpo_with_policy(storage_units: usize, policy: &str) -> Self {
         SessionSpec {
-            storage_units: 2,
+            storage_units,
             tasks: vec![
-                TaskSpec::new("rollout", vec![Column::Prompts]),
+                TaskSpec::new("rollout", vec![Column::Prompts])
+                    .policy(policy_by_name(policy)),
                 TaskSpec::new("reference", vec![Column::Responses]),
                 TaskSpec::new("reward", vec![Column::Responses]),
                 TaskSpec::new("advantage", vec![Column::Rewards]),
@@ -48,20 +85,60 @@ impl SessionSpec {
                         Column::RefLogp,
                         Column::Advantages,
                     ],
-                ),
+                )
+                .policy(policy_by_name(policy)),
             ],
         }
     }
+
+    fn from_decl(decl: SpecDecl) -> Result<Self> {
+        if decl.tasks.is_empty() {
+            bail!("session needs at least one task");
+        }
+        Ok(SessionSpec {
+            storage_units: decl.storage_units,
+            tasks: decl
+                .tasks
+                .into_iter()
+                .map(|t| {
+                    TaskSpec::new(t.name, t.columns)
+                        .policy(policy_by_name(&t.policy))
+                })
+                .collect(),
+        })
+    }
 }
 
-/// A live post-training service session.
-pub struct Session {
+/// The initialized guts of a session (data fabric + weight store).
+#[derive(Clone)]
+struct SessionState {
     tq: Arc<TransferQueue>,
-    store: Option<Arc<ParamStore>>,
-    engines_initialized: bool,
+    store: Arc<ParamStore>,
+}
+
+/// A live post-training service session: the server-side dispatcher.
+///
+/// Construct either initialized ([`Session::init_engines`]) for embedded
+/// use, or empty ([`Session::new`]) for a served instance whose first
+/// client sends the `init_engines` verb. Every verb is available both as
+/// a typed method and through [`Session::handle`] (the transport path).
+pub struct Session {
+    state: RwLock<Option<SessionState>>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Session {
+    /// An uninitialized session: every data verb fails with "call
+    /// init_engines first" until `init_engines` arrives.
+    pub fn new() -> Session {
+        Session { state: RwLock::new(None) }
+    }
+
     /// `init_engines`: bring up the data fabric and register the engine
     /// topology. Engines themselves are owned by the caller (they are
     /// backend-specific); the session tracks the parameter store that
@@ -70,6 +147,18 @@ impl Session {
         spec: SessionSpec,
         initial_params: ParamSet,
     ) -> Result<Session> {
+        let s = Session::new();
+        s.initialize(spec, initial_params)?;
+        Ok(s)
+    }
+
+    /// The verb form of [`Session::init_engines`] for a pre-constructed
+    /// (served) session. Exactly-once: re-initialization is an error.
+    pub fn initialize(
+        &self,
+        spec: SessionSpec,
+        initial_params: ParamSet,
+    ) -> Result<()> {
         if spec.tasks.is_empty() {
             bail!("session needs at least one task");
         }
@@ -78,19 +167,42 @@ impl Session {
         for t in spec.tasks {
             builder = builder.task(t);
         }
-        Ok(Session {
+        let mut guard = self.state.write().unwrap();
+        if guard.is_some() {
+            bail!("session already initialized");
+        }
+        *guard = Some(SessionState {
             tq: builder.build(),
-            store: Some(ParamStore::new(initial_params)),
-            engines_initialized: true,
-        })
+            store: ParamStore::new(initial_params),
+        });
+        Ok(())
     }
 
-    pub fn transfer_queue(&self) -> Arc<TransferQueue> {
-        self.tq.clone()
+    pub fn is_initialized(&self) -> bool {
+        self.state.read().unwrap().is_some()
     }
 
-    pub fn param_store(&self) -> Arc<ParamStore> {
-        self.store.as_ref().expect("init_engines first").clone()
+    fn state(&self) -> Result<SessionState> {
+        self.state
+            .read()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("call init_engines first"))
+    }
+
+    pub fn transfer_queue(&self) -> Result<Arc<TransferQueue>> {
+        Ok(self.state()?.tq)
+    }
+
+    pub fn param_store(&self) -> Result<Arc<ParamStore>> {
+        Ok(self.state()?.store)
+    }
+
+    /// Register one more RL task on the live graph. The new task replays
+    /// rows already resident in the data plane, so it observes the same
+    /// stream an at-init task would (minus evicted rows).
+    pub fn register_task(&self, spec: TaskSpec) -> Result<()> {
+        self.state()?.tq.register_task(spec)
     }
 
     /// `put_prompts_data`: load a prompt dataset into the system.
@@ -99,11 +211,11 @@ impl Session {
         &self,
         prompts: &[Vec<i32>],
     ) -> Result<Vec<GlobalIndex>> {
-        self.ensure_init()?;
+        let st = self.state()?;
         prompts
             .iter()
             .map(|p| {
-                self.tq.put_row(vec![(
+                st.tq.put_row(vec![(
                     Column::Prompts,
                     Value::I32s(p.clone()),
                 )])
@@ -112,47 +224,240 @@ impl Session {
     }
 
     /// `put_experience_data`: write one experience column for a sample.
+    /// The index must have been allocated by this session (forged
+    /// indices would pre-seed rows that future ingests merge into).
     pub fn put_experience_data(
         &self,
         index: GlobalIndex,
         column: Column,
         value: Value,
     ) -> Result<()> {
-        self.ensure_init()?;
-        self.tq.put(index, column, value)
+        let st = self.state()?;
+        if !st.tq.index_allocated(index) {
+            bail!(
+                "unknown row index {index}: rows are created via \
+                 put_prompts_data / put_batch allocation"
+            );
+        }
+        st.tq.put(index, column, value)
     }
 
-    /// `get_experience_data`: pull a ready micro-batch for a task.
+    /// Batch-first write: each row either allocates a fresh index
+    /// (`index: None`) or extends an existing row. Returns one index per
+    /// row, in order.
+    ///
+    /// The batch is validated up front (indices allocated, no duplicate
+    /// cells) so a rejected batch leaves no partial state — a remote
+    /// client's natural recovery is to resend the whole batch.
+    /// Concurrent writers racing on the same cell can still fail
+    /// mid-apply; that is a protocol misuse, not a retry path.
+    pub fn put_batch(
+        &self,
+        rows: Vec<PutRow>,
+    ) -> Result<Vec<GlobalIndex>> {
+        let st = self.state()?;
+        for row in &rows {
+            let Some(idx) = row.index else { continue };
+            if !st.tq.index_allocated(idx) {
+                bail!(
+                    "unknown row index {idx}: rows are created via \
+                     put_prompts_data / put_batch allocation"
+                );
+            }
+            for (col, _) in &row.cells {
+                if st.tq.data_plane().has_cell(idx, col) {
+                    bail!(
+                        "duplicate write to {idx}/{col}: batch rejected \
+                         before any row was applied"
+                    );
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(rows.len());
+        for row in rows {
+            match row.index {
+                Some(idx) => {
+                    for (col, val) in row.cells {
+                        st.tq.put(idx, col, val)?;
+                    }
+                    out.push(idx);
+                }
+                None => out.push(st.tq.put_row(row.cells)?),
+            }
+        }
+        Ok(out)
+    }
+
+    /// `get_experience_data`: poll a ready micro-batch for a task.
+    /// `Closed` means drained-and-done; `NotReady` means retry.
     pub fn get_experience_data(
         &self,
         task: &str,
         group: usize,
         columns: Vec<Column>,
         count: usize,
-    ) -> Option<crate::transfer_queue::Batch> {
-        self.tq
-            .loader(task, group, columns, count, 1)
-            .try_next_batch()
+    ) -> Result<GetBatchReply> {
+        self.get_batch(&GetBatchSpec {
+            task: task.to_string(),
+            group,
+            columns,
+            count,
+            min: 1,
+            timeout_ms: 0,
+        })
+    }
+
+    /// Batch-first pull with deadline semantics (`timeout_ms = 0` polls).
+    ///
+    /// Requesting columns the task's readiness contract does not cover
+    /// is an error (not a panic); note the assembled rows count as
+    /// consumed in that case — declare the columns the task needs on
+    /// the task itself.
+    pub fn get_batch(&self, spec: &GetBatchSpec) -> Result<GetBatchReply> {
+        let st = self.state()?;
+        let Some(controller) = st.tq.try_controller(&spec.task) else {
+            bail!("unknown task {:?}", spec.task);
+        };
+        let deadline = if spec.timeout_ms == 0 {
+            Instant::now()
+        } else {
+            Instant::now() + Duration::from_millis(spec.timeout_ms)
+        };
+        let outcome = controller.request_deadline(
+            spec.group,
+            spec.count,
+            spec.min.max(1),
+            Some(deadline),
+        );
+        Ok(match outcome {
+            RequestOutcome::Ready(meta) => GetBatchReply::Ready(
+                st.tq.try_fetch(&meta.indices, &spec.columns)?,
+            ),
+            RequestOutcome::NotReady => GetBatchReply::NotReady,
+            RequestOutcome::Closed => GetBatchReply::Closed,
+        })
     }
 
     /// `weight_sync_notify`: publish a new weight snapshot to all
-    /// inference engines (they observe it via their WeightReceivers).
+    /// inference engines (they observe it via `subscribe_weights` or
+    /// their WeightReceivers).
     pub fn weight_sync_notify(&self, params: ParamSet) -> Result<()> {
-        self.ensure_init()?;
-        self.param_store().publish(params);
+        self.state()?.store.try_publish(params)
+    }
+
+    /// Long-poll for weights newer than `min_version`. Returns `None`
+    /// when nothing newer arrived before the timeout — crucially, the
+    /// snapshot payload is only shipped when there is something new, so
+    /// remote pollers don't re-download the full model on every "no
+    /// change" answer.
+    pub fn subscribe_weights(
+        &self,
+        min_version: u64,
+        timeout_ms: u64,
+    ) -> Result<Option<ParamSet>> {
+        let latest = self
+            .state()?
+            .store
+            .wait_for_newer(min_version, Duration::from_millis(timeout_ms));
+        Ok((latest.version > min_version).then_some(latest))
+    }
+
+    /// Queue/param introspection snapshot.
+    pub fn stats(&self) -> Result<ServiceStats> {
+        let st = self.state()?;
+        let tasks = st
+            .tq
+            .controllers()
+            .into_iter()
+            .map(|c| TaskStats {
+                name: c.task.clone(),
+                ready: c.ready_depth(),
+                consumed: c.consumed_count(),
+                policy: c.policy_name().to_string(),
+            })
+            .collect();
+        Ok(ServiceStats {
+            tasks,
+            resident_rows: st.tq.resident_rows(),
+            param_version: st.store.version(),
+            closed: st.tq.is_closed(),
+        })
+    }
+
+    /// Global-batch GC of fully consumed rows.
+    pub fn evict(&self, indices: &[GlobalIndex]) -> Result<()> {
+        self.state()?.tq.evict(indices);
         Ok(())
     }
 
     /// Graceful teardown: close the queue so consumers drain.
-    pub fn shutdown(&self) {
-        self.tq.close();
+    pub fn shutdown(&self) -> Result<()> {
+        self.state()?.tq.close();
+        Ok(())
     }
 
-    fn ensure_init(&self) -> Result<()> {
-        if !self.engines_initialized {
-            bail!("call init_engines first");
+    // ---- dispatcher -------------------------------------------------------
+
+    /// Dispatch one request — the single entry point every transport
+    /// funnels through. Never panics on bad input; errors become
+    /// [`ServiceResponse::Err`].
+    pub fn handle(&self, req: ServiceRequest) -> ServiceResponse {
+        match self.dispatch(req) {
+            Ok(resp) => resp,
+            Err(e) => ServiceResponse::Err(format!("{e:#}")),
         }
-        Ok(())
+    }
+
+    fn dispatch(&self, req: ServiceRequest) -> Result<ServiceResponse> {
+        Ok(match req {
+            ServiceRequest::InitEngines { spec, params } => {
+                self.initialize(SessionSpec::from_decl(spec)?, params)?;
+                ServiceResponse::Ok
+            }
+            ServiceRequest::RegisterTask { task } => {
+                self.register_task(
+                    TaskSpec::new(task.name, task.columns)
+                        .policy(policy_by_name(&task.policy)),
+                )?;
+                ServiceResponse::Ok
+            }
+            ServiceRequest::PutPrompts { prompts } => {
+                ServiceResponse::Indices(self.put_prompts_data(&prompts)?)
+            }
+            ServiceRequest::PutExperience { index, column, value } => {
+                self.put_experience_data(index, column, value)?;
+                ServiceResponse::Ok
+            }
+            ServiceRequest::PutBatch { rows } => {
+                ServiceResponse::Indices(self.put_batch(rows)?)
+            }
+            ServiceRequest::GetBatch(spec) => {
+                ServiceResponse::Batch(self.get_batch(&spec)?)
+            }
+            ServiceRequest::SubscribeWeights { min_version, timeout_ms } => {
+                match self.subscribe_weights(min_version, timeout_ms)? {
+                    Some(p) => ServiceResponse::Weights(p),
+                    None => ServiceResponse::WeightsNotNewer {
+                        version: self.param_store()?.version(),
+                    },
+                }
+            }
+            ServiceRequest::WeightSync { params } => {
+                self.weight_sync_notify(params)?;
+                ServiceResponse::Ok
+            }
+            ServiceRequest::Stats => {
+                ServiceResponse::Stats(self.stats()?)
+            }
+            ServiceRequest::Evict { indices } => {
+                self.evict(&indices)?;
+                ServiceResponse::Ok
+            }
+            ServiceRequest::Shutdown => {
+                self.shutdown()?;
+                ServiceResponse::Ok
+            }
+        })
     }
 }
 
@@ -168,7 +473,7 @@ mod tests {
     #[test]
     fn init_builds_grpo_graph() {
         let s = session();
-        let tq = s.transfer_queue();
+        let tq = s.transfer_queue().unwrap();
         for task in ["rollout", "reference", "reward", "advantage", "train"]
         {
             assert!(tq.has_task(task), "missing {task}");
@@ -184,6 +489,28 @@ mod tests {
     }
 
     #[test]
+    fn uninitialized_session_errors_instead_of_panicking() {
+        let s = Session::new();
+        assert!(!s.is_initialized());
+        assert!(s.param_store().is_err());
+        assert!(s.transfer_queue().is_err());
+        assert!(s.put_prompts_data(&[vec![1]]).is_err());
+        assert!(s
+            .get_experience_data("rollout", 0, vec![Column::Prompts], 4)
+            .is_err());
+        assert!(s.stats().is_err());
+        assert!(s.shutdown().is_err());
+    }
+
+    #[test]
+    fn double_initialize_rejected() {
+        let s = session();
+        assert!(s
+            .initialize(SessionSpec::grpo(), ParamSet::new(0, vec![]))
+            .is_err());
+    }
+
+    #[test]
     fn prompt_and_experience_flow() {
         let s = session();
         let idx = s
@@ -193,6 +520,8 @@ mod tests {
         // rollout task sees both prompts
         let got = s
             .get_experience_data("rollout", 0, vec![Column::Prompts], 8)
+            .unwrap()
+            .into_option()
             .unwrap();
         assert_eq!(got.len(), 2);
         // write responses back; reward task sees them
@@ -206,24 +535,236 @@ mod tests {
         }
         let got = s
             .get_experience_data("reward", 0, vec![Column::Responses], 8)
+            .unwrap()
+            .into_option()
             .unwrap();
         assert_eq!(got.len(), 2);
     }
 
     #[test]
+    fn put_batch_mixes_new_and_existing_rows() {
+        let s = session();
+        let idx = s
+            .put_batch(vec![PutRow::new(vec![(
+                Column::Prompts,
+                Value::I32s(vec![1, 2]),
+            )])])
+            .unwrap();
+        let idx2 = s
+            .put_batch(vec![
+                PutRow::at(
+                    idx[0],
+                    vec![(Column::Responses, Value::I32s(vec![9]))],
+                ),
+                PutRow::new(vec![(
+                    Column::Prompts,
+                    Value::I32s(vec![3]),
+                )]),
+            ])
+            .unwrap();
+        assert_eq!(idx2[0], idx[0], "existing row echoes its index");
+        assert_ne!(idx2[1], idx[0]);
+        let got = s
+            .get_experience_data("reward", 0, vec![Column::Responses], 8)
+            .unwrap()
+            .into_option()
+            .unwrap();
+        assert_eq!(got.len(), 1);
+    }
+
+    #[test]
+    fn get_batch_distinguishes_not_ready_from_closed() {
+        let s = session();
+        let reply = s
+            .get_experience_data("rollout", 0, vec![Column::Prompts], 4)
+            .unwrap();
+        assert!(matches!(reply, GetBatchReply::NotReady));
+        s.shutdown().unwrap();
+        let reply = s
+            .get_experience_data("rollout", 0, vec![Column::Prompts], 4)
+            .unwrap();
+        assert!(matches!(reply, GetBatchReply::Closed));
+    }
+
+    #[test]
+    fn get_batch_unknown_task_is_an_error() {
+        let s = session();
+        assert!(s
+            .get_experience_data("nope", 0, vec![Column::Prompts], 4)
+            .is_err());
+    }
+
+    #[test]
+    fn register_task_mid_stream_sees_resident_rows() {
+        let s = session();
+        let idx = s.put_prompts_data(&[vec![1], vec![2]]).unwrap();
+        s.register_task(TaskSpec::new(
+            "audit",
+            vec![Column::Prompts],
+        ))
+        .unwrap();
+        let got = s
+            .get_experience_data("audit", 0, vec![Column::Prompts], 8)
+            .unwrap()
+            .into_option()
+            .unwrap();
+        assert_eq!(got.len(), idx.len(), "replayed rows visible");
+    }
+
+    #[test]
     fn weight_sync_updates_store() {
         let s = session();
-        assert_eq!(s.param_store().version(), 0);
+        assert_eq!(s.param_store().unwrap().version(), 0);
         s.weight_sync_notify(ParamSet::new(3, vec![])).unwrap();
-        assert_eq!(s.param_store().version(), 3);
+        assert_eq!(s.param_store().unwrap().version(), 3);
+        // regression is an error, not a panic (remote clients misbehave)
+        assert!(s.weight_sync_notify(ParamSet::new(1, vec![])).is_err());
+    }
+
+    #[test]
+    fn subscribe_weights_long_polls() {
+        let s = Arc::new(session());
+        // Nothing newer than the current version -> None, payload
+        // elided (cheap "no change" answer for remote pollers).
+        assert!(s.subscribe_weights(0, 0).unwrap().is_none());
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || {
+            s2.subscribe_weights(0, 5000).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        s.weight_sync_notify(ParamSet::new(1, vec![])).unwrap();
+        assert_eq!(h.join().unwrap().unwrap().version, 1);
+    }
+
+    #[test]
+    fn put_rejects_forged_indices() {
+        let s = session();
+        // No row was ever allocated, so index 5 is forged.
+        assert!(s
+            .put_experience_data(
+                GlobalIndex(5),
+                Column::Responses,
+                Value::I32s(vec![1]),
+            )
+            .is_err());
+        assert!(s
+            .put_batch(vec![PutRow::at(
+                GlobalIndex(5),
+                vec![(Column::Responses, Value::I32s(vec![1]))],
+            )])
+            .is_err());
+        assert_eq!(s.stats().unwrap().resident_rows, 0, "no side effects");
+    }
+
+    #[test]
+    fn put_batch_rejects_duplicates_without_partial_apply() {
+        let s = session();
+        let idx = s.put_prompts_data(&[vec![1]]).unwrap();
+        // Second row duplicates the already-written Prompts cell; the
+        // whole batch (including the fresh first row) must be rejected.
+        let before = s.stats().unwrap().resident_rows;
+        let res = s.put_batch(vec![
+            PutRow::new(vec![(Column::Prompts, Value::I32s(vec![2]))]),
+            PutRow::at(
+                idx[0],
+                vec![(Column::Prompts, Value::I32s(vec![3]))],
+            ),
+        ]);
+        assert!(res.is_err());
+        assert_eq!(
+            s.stats().unwrap().resident_rows,
+            before,
+            "rejected batch left no partial state"
+        );
+    }
+
+    #[test]
+    fn get_batch_with_unavailable_columns_is_an_error_not_a_panic() {
+        let s = session();
+        s.put_prompts_data(&[vec![1]]).unwrap();
+        // rollout only guarantees Prompts; asking it for Advantages must
+        // come back as a service error, not a TransferQueue panic.
+        let res = s.get_experience_data(
+            "rollout",
+            0,
+            vec![Column::Advantages],
+            4,
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn stats_reflect_queue_state() {
+        let s = session();
+        s.put_prompts_data(&[vec![1], vec![2]]).unwrap();
+        let stats = s.stats().unwrap();
+        assert_eq!(stats.resident_rows, 2);
+        assert!(!stats.closed);
+        let rollout = stats
+            .tasks
+            .iter()
+            .find(|t| t.name == "rollout")
+            .unwrap();
+        assert_eq!(rollout.ready, 2);
+        assert_eq!(rollout.consumed, 0);
+        s.shutdown().unwrap();
+        assert!(s.stats().unwrap().closed);
+    }
+
+    #[test]
+    fn dispatcher_turns_errors_into_responses() {
+        let s = Session::new();
+        match s.handle(ServiceRequest::Stats) {
+            ServiceResponse::Err(m) => {
+                assert!(m.contains("init_engines"), "got {m}")
+            }
+            _ => panic!("uninitialized stats must error"),
+        }
+    }
+
+    #[test]
+    fn dispatcher_init_then_flow() {
+        let s = Session::new();
+        let decl = SpecDecl {
+            storage_units: 1,
+            tasks: vec![TaskDecl::new("rollout", vec![Column::Prompts])],
+        };
+        assert!(matches!(
+            s.handle(ServiceRequest::InitEngines {
+                spec: decl,
+                params: ParamSet::new(0, vec![]),
+            }),
+            ServiceResponse::Ok
+        ));
+        match s.handle(ServiceRequest::PutPrompts {
+            prompts: vec![vec![1, 2]],
+        }) {
+            ServiceResponse::Indices(idx) => assert_eq!(idx.len(), 1),
+            _ => panic!("expected indices"),
+        }
+        match s.handle(ServiceRequest::GetBatch(GetBatchSpec {
+            task: "rollout".into(),
+            group: 0,
+            columns: vec![Column::Prompts],
+            count: 4,
+            min: 1,
+            timeout_ms: 100,
+        })) {
+            ServiceResponse::Batch(GetBatchReply::Ready(b)) => {
+                assert_eq!(b.len(), 1)
+            }
+            _ => panic!("expected a ready batch"),
+        }
     }
 
     #[test]
     fn shutdown_drains_consumers() {
         let s = session();
-        s.shutdown();
-        assert!(s
-            .get_experience_data("rollout", 0, vec![Column::Prompts], 4)
-            .is_none());
+        s.shutdown().unwrap();
+        assert!(matches!(
+            s.get_experience_data("rollout", 0, vec![Column::Prompts], 4)
+                .unwrap(),
+            GetBatchReply::Closed
+        ));
     }
 }

@@ -1,0 +1,1032 @@
+//! Wire IR for the service API (paper §5: "service-oriented user
+//! interfaces", made transport-agnostic).
+//!
+//! Every verb the service understands is a [`ServiceRequest`] variant;
+//! every answer is a [`ServiceResponse`]. The IR is the *canonical* form:
+//! the in-process transport passes these enums by value (zero copy), the
+//! TCP transport serializes them as one JSON object per line via
+//! [`crate::util::json`]. Keeping one IR for both paths is what makes the
+//! `Session` dispatcher and `ServiceClient` oblivious to where the peer
+//! lives — the Laminar/SPEAR "canonical IR + capability routing" shape.
+//!
+//! Conventions:
+//! * Requests are `{"op": <verb>, ...}` objects; responses are
+//!   `{"ok": true, ...}` or `{"ok": false, "error": msg}`.
+//! * Columns travel by name ([`Column::name`]); cell values as tagged
+//!   objects `{"t": "i32s"|"f32s"|"f32"|"u64"|"text", "v": ...}`.
+//! * `u64` payloads ride JSON numbers and are validated to be exact
+//!   (|n| < 2^53) on decode — versions and group ids are tiny.
+//! * Weight snapshots serialize tensor contents as number arrays; that is
+//!   deliberate (correct and dependency-free, §3.5-style no-padding). The
+//!   in-proc fast path never serializes at all.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{DType, HostTensor, ParamSet};
+use crate::transfer_queue::{Batch, Column, GlobalIndex, Value};
+use crate::util::json::Json;
+
+// ===========================================================================
+// Request side
+// ===========================================================================
+
+/// Declaration of one task in wire form (policy travels by name).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDecl {
+    pub name: String,
+    pub columns: Vec<Column>,
+    pub policy: String,
+}
+
+impl TaskDecl {
+    pub fn new(name: impl Into<String>, columns: Vec<Column>) -> Self {
+        TaskDecl { name: name.into(), columns, policy: "fcfs".into() }
+    }
+}
+
+/// Declaration of a whole session task graph in wire form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecDecl {
+    pub storage_units: usize,
+    pub tasks: Vec<TaskDecl>,
+}
+
+/// One row in a `put_batch` request: new row (`index: None` — the server
+/// allocates a global index) or additional columns for an existing row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PutRow {
+    pub index: Option<GlobalIndex>,
+    pub cells: Vec<(Column, Value)>,
+}
+
+impl PutRow {
+    pub fn new(cells: Vec<(Column, Value)>) -> Self {
+        PutRow { index: None, cells }
+    }
+
+    pub fn at(index: GlobalIndex, cells: Vec<(Column, Value)>) -> Self {
+        PutRow { index: Some(index), cells }
+    }
+}
+
+/// Parameters of a `get_batch` request. `timeout_ms = 0` is a pure poll;
+/// a positive timeout long-polls server-side until a batch is ready, the
+/// queue closes, or the deadline passes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetBatchSpec {
+    pub task: String,
+    pub group: usize,
+    pub columns: Vec<Column>,
+    pub count: usize,
+    pub min: usize,
+    pub timeout_ms: u64,
+}
+
+/// The service verbs (paper's five, plus registration, batch-first data
+/// verbs, weight subscription, stats, and lifecycle).
+pub enum ServiceRequest {
+    /// `init_engines`: install the task graph + initial weights.
+    InitEngines { spec: SpecDecl, params: ParamSet },
+    /// Register one more task after init (dynamic task graph).
+    RegisterTask { task: TaskDecl },
+    /// `put_prompts_data`: batch prompt ingest.
+    PutPrompts { prompts: Vec<Vec<i32>> },
+    /// `put_experience_data`: one cell write.
+    PutExperience { index: GlobalIndex, column: Column, value: Value },
+    /// Batch-first write: many rows / many cells in one round-trip.
+    PutBatch { rows: Vec<PutRow> },
+    /// `get_experience_data`, batch-first with deadline semantics.
+    GetBatch(GetBatchSpec),
+    /// Long-poll for weights newer than `min_version`.
+    SubscribeWeights { min_version: u64, timeout_ms: u64 },
+    /// `weight_sync_notify`: publish a new weight snapshot.
+    WeightSync { params: ParamSet },
+    /// Queue/param introspection.
+    Stats,
+    /// Global-batch GC.
+    Evict { indices: Vec<GlobalIndex> },
+    /// Close the queue; consumers drain.
+    Shutdown,
+}
+
+// ===========================================================================
+// Response side
+// ===========================================================================
+
+/// Outcome of a `get_batch` call. `NotReady` and `Closed` are distinct on
+/// purpose: a remote consumer must know whether to retry (starvation) or
+/// stop (drain) — collapsing both into "no batch" breaks retry semantics.
+#[derive(Debug, Clone)]
+pub enum GetBatchReply {
+    Ready(Batch),
+    NotReady,
+    Closed,
+}
+
+impl GetBatchReply {
+    pub fn into_option(self) -> Option<Batch> {
+        match self {
+            GetBatchReply::Ready(b) => Some(b),
+            GetBatchReply::NotReady | GetBatchReply::Closed => None,
+        }
+    }
+}
+
+/// Per-task queue statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskStats {
+    pub name: String,
+    pub ready: usize,
+    pub consumed: usize,
+    pub policy: String,
+}
+
+/// Whole-service statistics snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceStats {
+    pub tasks: Vec<TaskStats>,
+    pub resident_rows: usize,
+    pub param_version: u64,
+    pub closed: bool,
+}
+
+/// The service answers.
+pub enum ServiceResponse {
+    Ok,
+    Indices(Vec<GlobalIndex>),
+    Batch(GetBatchReply),
+    Weights(ParamSet),
+    /// `subscribe_weights` timed out with nothing newer than the asked
+    /// version — the payload is deliberately elided so "no change"
+    /// polls stay tiny on the wire.
+    WeightsNotNewer { version: u64 },
+    Stats(ServiceStats),
+    Err(String),
+}
+
+// ===========================================================================
+// JSON codec — values
+// ===========================================================================
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).with_context(|| format!("missing field {key:?}"))
+}
+
+fn field_str(j: &Json, key: &str) -> Result<String> {
+    Ok(field(j, key)?
+        .as_str()
+        .with_context(|| format!("field {key:?} must be a string"))?
+        .to_string())
+}
+
+fn field_u64(j: &Json, key: &str) -> Result<u64> {
+    let v = field(j, key)?
+        .as_i64()
+        .with_context(|| format!("field {key:?} must be an integer"))?;
+    u64::try_from(v)
+        .with_context(|| format!("field {key:?} must be non-negative"))
+}
+
+fn field_usize(j: &Json, key: &str) -> Result<usize> {
+    field(j, key)?
+        .as_usize()
+        .with_context(|| format!("field {key:?} must be a usize"))
+}
+
+fn field_arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    field(j, key)?
+        .as_arr()
+        .with_context(|| format!("field {key:?} must be an array"))
+}
+
+/// JSON has no inf/NaN literals, but logprobs legitimately hit -inf
+/// (top-k-masked tokens) and diverged weights can go NaN — encode
+/// non-finite floats as tagged strings so the line stays parseable.
+fn f32_to_json(x: f32) -> Json {
+    if x.is_finite() {
+        Json::Num(x as f64)
+    } else if x.is_nan() {
+        Json::Str("nan".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn json_to_f32(j: &Json) -> Result<f32> {
+    match j {
+        Json::Num(n) => Ok(*n as f32),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f32::NAN),
+            "inf" => Ok(f32::INFINITY),
+            "-inf" => Ok(f32::NEG_INFINITY),
+            other => bail!("bad float literal {other:?}"),
+        },
+        _ => bail!("float must be a number or inf/nan literal"),
+    }
+}
+
+fn arr_f32_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| f32_to_json(x)).collect())
+}
+
+fn value_to_json(v: &Value) -> Json {
+    match v {
+        Value::I32s(xs) => Json::obj(vec![
+            ("t", Json::Str("i32s".into())),
+            ("v", Json::arr_i32(xs)),
+        ]),
+        Value::F32s(xs) => Json::obj(vec![
+            ("t", Json::Str("f32s".into())),
+            ("v", arr_f32_json(xs)),
+        ]),
+        Value::F32(x) => Json::obj(vec![
+            ("t", Json::Str("f32".into())),
+            ("v", f32_to_json(*x)),
+        ]),
+        Value::U64(x) => Json::obj(vec![
+            ("t", Json::Str("u64".into())),
+            ("v", Json::Num(*x as f64)),
+        ]),
+        Value::Text(s) => Json::obj(vec![
+            ("t", Json::Str("text".into())),
+            ("v", Json::Str(s.clone())),
+        ]),
+    }
+}
+
+fn value_from_json(j: &Json) -> Result<Value> {
+    let tag = field_str(j, "t")?;
+    let v = field(j, "v")?;
+    Ok(match tag.as_str() {
+        "i32s" => Value::I32s(
+            v.as_arr()
+                .context("i32s payload must be an array")?
+                .iter()
+                .map(|x| {
+                    x.as_i64()
+                        .and_then(|n| i32::try_from(n).ok())
+                        .context("i32s element out of range")
+                })
+                .collect::<Result<_>>()?,
+        ),
+        "f32s" => Value::F32s(
+            v.as_arr()
+                .context("f32s payload must be an array")?
+                .iter()
+                .map(json_to_f32)
+                .collect::<Result<_>>()?,
+        ),
+        "f32" => Value::F32(json_to_f32(v)?),
+        "u64" => Value::U64(
+            v.as_i64()
+                .and_then(|n| u64::try_from(n).ok())
+                .context("u64 payload must be a non-negative integer")?,
+        ),
+        "text" => Value::Text(
+            v.as_str().context("text payload must be a string")?.into(),
+        ),
+        other => bail!("unknown value tag {other:?}"),
+    })
+}
+
+fn columns_to_json(cols: &[Column]) -> Json {
+    Json::Arr(cols.iter().map(|c| Json::Str(c.name().into())).collect())
+}
+
+fn columns_from_json(j: &[Json]) -> Result<Vec<Column>> {
+    j.iter()
+        .map(|c| {
+            Ok(Column::from_name(
+                c.as_str().context("column must be a string")?,
+            ))
+        })
+        .collect()
+}
+
+fn indices_to_json(idx: &[GlobalIndex]) -> Json {
+    Json::Arr(idx.iter().map(|i| Json::Num(i.0 as f64)).collect())
+}
+
+fn indices_from_json(j: &[Json]) -> Result<Vec<GlobalIndex>> {
+    j.iter()
+        .map(|x| {
+            x.as_i64()
+                .and_then(|n| u64::try_from(n).ok())
+                .map(GlobalIndex)
+                .context("index must be a non-negative integer")
+        })
+        .collect()
+}
+
+// ===========================================================================
+// JSON codec — weights
+// ===========================================================================
+
+fn tensor_to_json(t: &HostTensor) -> Result<Json> {
+    let data = match t.dtype {
+        DType::F32 => arr_f32_json(&t.as_f32()?),
+        DType::I32 => Json::arr_i32(&t.as_i32()?),
+    };
+    Ok(Json::obj(vec![
+        ("dtype", Json::Str(t.dtype.name().into())),
+        ("shape", Json::arr_usize(&t.shape)),
+        ("data", data),
+    ]))
+}
+
+fn tensor_from_json(j: &Json) -> Result<HostTensor> {
+    let dtype = DType::from_str_name(&field_str(j, "dtype")?)?;
+    let shape = field_arr(j, "shape")?
+        .iter()
+        .map(|x| x.as_usize().context("shape element must be a usize"))
+        .collect::<Result<Vec<_>>>()?;
+    let data = field_arr(j, "data")?;
+    match dtype {
+        DType::F32 => {
+            let vals = data
+                .iter()
+                .map(json_to_f32)
+                .collect::<Result<Vec<_>>>()?;
+            HostTensor::from_f32(shape, &vals)
+        }
+        DType::I32 => {
+            let vals = data
+                .iter()
+                .map(|x| {
+                    x.as_i64()
+                        .and_then(|n| i32::try_from(n).ok())
+                        .context("i32 tensor element out of range")
+                })
+                .collect::<Result<Vec<_>>>()?;
+            HostTensor::from_i32(shape, &vals)
+        }
+    }
+}
+
+pub fn param_set_to_json(p: &ParamSet) -> Result<Json> {
+    Ok(Json::obj(vec![
+        ("version", Json::Num(p.version as f64)),
+        (
+            "tensors",
+            Json::Arr(
+                p.tensors
+                    .iter()
+                    .map(tensor_to_json)
+                    .collect::<Result<_>>()?,
+            ),
+        ),
+    ]))
+}
+
+pub fn param_set_from_json(j: &Json) -> Result<ParamSet> {
+    let version = field_u64(j, "version")?;
+    let tensors = field_arr(j, "tensors")?
+        .iter()
+        .map(tensor_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ParamSet::new(version, tensors))
+}
+
+// ===========================================================================
+// JSON codec — batches
+// ===========================================================================
+
+fn batch_to_json(b: &Batch) -> Json {
+    Json::obj(vec![
+        ("indices", indices_to_json(&b.indices)),
+        ("columns", columns_to_json(&b.columns)),
+        (
+            "rows",
+            Json::Arr(
+                b.rows
+                    .iter()
+                    .map(|row| {
+                        Json::Arr(row.iter().map(value_to_json).collect())
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn batch_from_json(j: &Json) -> Result<Batch> {
+    let indices = indices_from_json(field_arr(j, "indices")?)?;
+    let columns = columns_from_json(field_arr(j, "columns")?)?;
+    let rows = field_arr(j, "rows")?
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .context("batch row must be an array")?
+                .iter()
+                .map(value_from_json)
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if rows.len() != indices.len() {
+        bail!(
+            "batch row count {} != index count {}",
+            rows.len(),
+            indices.len()
+        );
+    }
+    Ok(Batch { indices, rows, columns })
+}
+
+// ===========================================================================
+// JSON codec — requests
+// ===========================================================================
+
+fn task_decl_to_json(t: &TaskDecl) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(t.name.clone())),
+        ("columns", columns_to_json(&t.columns)),
+        ("policy", Json::Str(t.policy.clone())),
+    ])
+}
+
+fn task_decl_from_json(j: &Json) -> Result<TaskDecl> {
+    Ok(TaskDecl {
+        name: field_str(j, "name")?,
+        columns: columns_from_json(field_arr(j, "columns")?)?,
+        policy: field_str(j, "policy")?,
+    })
+}
+
+impl ServiceRequest {
+    pub fn to_json(&self) -> Result<Json> {
+        Ok(match self {
+            ServiceRequest::InitEngines { spec, params } => Json::obj(vec![
+                ("op", Json::Str("init_engines".into())),
+                ("storage_units", Json::Num(spec.storage_units as f64)),
+                (
+                    "tasks",
+                    Json::Arr(
+                        spec.tasks.iter().map(task_decl_to_json).collect(),
+                    ),
+                ),
+                ("params", param_set_to_json(params)?),
+            ]),
+            ServiceRequest::RegisterTask { task } => Json::obj(vec![
+                ("op", Json::Str("register_task".into())),
+                ("task", task_decl_to_json(task)),
+            ]),
+            ServiceRequest::PutPrompts { prompts } => Json::obj(vec![
+                ("op", Json::Str("put_prompts".into())),
+                (
+                    "prompts",
+                    Json::Arr(
+                        prompts.iter().map(|p| Json::arr_i32(p)).collect(),
+                    ),
+                ),
+            ]),
+            ServiceRequest::PutExperience { index, column, value } => {
+                Json::obj(vec![
+                    ("op", Json::Str("put_experience".into())),
+                    ("index", Json::Num(index.0 as f64)),
+                    ("column", Json::Str(column.name().into())),
+                    ("value", value_to_json(value)),
+                ])
+            }
+            ServiceRequest::PutBatch { rows } => Json::obj(vec![
+                ("op", Json::Str("put_batch".into())),
+                (
+                    "rows",
+                    Json::Arr(
+                        rows.iter()
+                            .map(|r| {
+                                let mut pairs = vec![(
+                                    "cells",
+                                    Json::Arr(
+                                        r.cells
+                                            .iter()
+                                            .map(|(c, v)| {
+                                                Json::obj(vec![
+                                                    (
+                                                        "column",
+                                                        Json::Str(
+                                                            c.name().into(),
+                                                        ),
+                                                    ),
+                                                    (
+                                                        "value",
+                                                        value_to_json(v),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                )];
+                                if let Some(idx) = r.index {
+                                    pairs.push((
+                                        "index",
+                                        Json::Num(idx.0 as f64),
+                                    ));
+                                }
+                                Json::obj(pairs)
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            ServiceRequest::GetBatch(spec) => Json::obj(vec![
+                ("op", Json::Str("get_batch".into())),
+                ("task", Json::Str(spec.task.clone())),
+                ("group", Json::Num(spec.group as f64)),
+                ("columns", columns_to_json(&spec.columns)),
+                ("count", Json::Num(spec.count as f64)),
+                ("min", Json::Num(spec.min as f64)),
+                ("timeout_ms", Json::Num(spec.timeout_ms as f64)),
+            ]),
+            ServiceRequest::SubscribeWeights { min_version, timeout_ms } => {
+                Json::obj(vec![
+                    ("op", Json::Str("subscribe_weights".into())),
+                    ("min_version", Json::Num(*min_version as f64)),
+                    ("timeout_ms", Json::Num(*timeout_ms as f64)),
+                ])
+            }
+            ServiceRequest::WeightSync { params } => Json::obj(vec![
+                ("op", Json::Str("weight_sync".into())),
+                ("params", param_set_to_json(params)?),
+            ]),
+            ServiceRequest::Stats => {
+                Json::obj(vec![("op", Json::Str("stats".into()))])
+            }
+            ServiceRequest::Evict { indices } => Json::obj(vec![
+                ("op", Json::Str("evict".into())),
+                ("indices", indices_to_json(indices)),
+            ]),
+            ServiceRequest::Shutdown => {
+                Json::obj(vec![("op", Json::Str("shutdown".into()))])
+            }
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServiceRequest> {
+        let op = field_str(j, "op")?;
+        Ok(match op.as_str() {
+            "init_engines" => ServiceRequest::InitEngines {
+                spec: SpecDecl {
+                    storage_units: field_usize(j, "storage_units")?,
+                    tasks: field_arr(j, "tasks")?
+                        .iter()
+                        .map(task_decl_from_json)
+                        .collect::<Result<_>>()?,
+                },
+                params: param_set_from_json(field(j, "params")?)?,
+            },
+            "register_task" => ServiceRequest::RegisterTask {
+                task: task_decl_from_json(field(j, "task")?)?,
+            },
+            "put_prompts" => ServiceRequest::PutPrompts {
+                prompts: field_arr(j, "prompts")?
+                    .iter()
+                    .map(|p| {
+                        p.as_arr()
+                            .context("prompt must be an array")?
+                            .iter()
+                            .map(|t| {
+                                t.as_i64()
+                                    .and_then(|n| i32::try_from(n).ok())
+                                    .context("token out of i32 range")
+                            })
+                            .collect::<Result<Vec<_>>>()
+                    })
+                    .collect::<Result<_>>()?,
+            },
+            "put_experience" => ServiceRequest::PutExperience {
+                index: GlobalIndex(field_u64(j, "index")?),
+                column: Column::from_name(&field_str(j, "column")?),
+                value: value_from_json(field(j, "value")?)?,
+            },
+            "put_batch" => ServiceRequest::PutBatch {
+                rows: field_arr(j, "rows")?
+                    .iter()
+                    .map(|r| {
+                        let index = match r.get("index") {
+                            Some(x) => Some(GlobalIndex(
+                                x.as_i64()
+                                    .and_then(|n| u64::try_from(n).ok())
+                                    .context("row index must be u64")?,
+                            )),
+                            None => None,
+                        };
+                        let cells = r
+                            .get("cells")
+                            .and_then(Json::as_arr)
+                            .context("row needs a cells array")?
+                            .iter()
+                            .map(|c| {
+                                Ok((
+                                    Column::from_name(&field_str(
+                                        c, "column",
+                                    )?),
+                                    value_from_json(field(c, "value")?)?,
+                                ))
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                        Ok(PutRow { index, cells })
+                    })
+                    .collect::<Result<_>>()?,
+            },
+            "get_batch" => ServiceRequest::GetBatch(GetBatchSpec {
+                task: field_str(j, "task")?,
+                group: field_usize(j, "group")?,
+                columns: columns_from_json(field_arr(j, "columns")?)?,
+                count: field_usize(j, "count")?,
+                min: field_usize(j, "min")?,
+                timeout_ms: field_u64(j, "timeout_ms")?,
+            }),
+            "subscribe_weights" => ServiceRequest::SubscribeWeights {
+                min_version: field_u64(j, "min_version")?,
+                timeout_ms: field_u64(j, "timeout_ms")?,
+            },
+            "weight_sync" => ServiceRequest::WeightSync {
+                params: param_set_from_json(field(j, "params")?)?,
+            },
+            "stats" => ServiceRequest::Stats,
+            "evict" => ServiceRequest::Evict {
+                indices: indices_from_json(field_arr(j, "indices")?)?,
+            },
+            "shutdown" => ServiceRequest::Shutdown,
+            other => bail!("unknown op {other:?}"),
+        })
+    }
+
+    /// One JSONL wire line (no trailing newline).
+    pub fn to_line(&self) -> Result<String> {
+        Ok(self.to_json()?.to_string())
+    }
+
+    pub fn parse_line(line: &str) -> Result<ServiceRequest> {
+        let j = Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
+        ServiceRequest::from_json(&j)
+    }
+}
+
+// ===========================================================================
+// JSON codec — responses
+// ===========================================================================
+
+impl ServiceResponse {
+    pub fn to_json(&self) -> Result<Json> {
+        Ok(match self {
+            ServiceResponse::Ok => {
+                Json::obj(vec![("ok", Json::Bool(true))])
+            }
+            ServiceResponse::Indices(idx) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("indices", indices_to_json(idx)),
+            ]),
+            ServiceResponse::Batch(GetBatchReply::Ready(b)) => {
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("batch", batch_to_json(b)),
+                ])
+            }
+            ServiceResponse::Batch(GetBatchReply::NotReady) => {
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("not_ready", Json::Bool(true)),
+                ])
+            }
+            ServiceResponse::Batch(GetBatchReply::Closed) => {
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("closed", Json::Bool(true)),
+                ])
+            }
+            ServiceResponse::Weights(p) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("params", param_set_to_json(p)?),
+            ]),
+            ServiceResponse::WeightsNotNewer { version } => {
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("weights_not_newer", Json::Bool(true)),
+                    ("version", Json::Num(*version as f64)),
+                ])
+            }
+            ServiceResponse::Stats(s) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "stats",
+                    Json::obj(vec![
+                        (
+                            "tasks",
+                            Json::Arr(
+                                s.tasks
+                                    .iter()
+                                    .map(|t| {
+                                        Json::obj(vec![
+                                            (
+                                                "name",
+                                                Json::Str(t.name.clone()),
+                                            ),
+                                            (
+                                                "ready",
+                                                Json::Num(t.ready as f64),
+                                            ),
+                                            (
+                                                "consumed",
+                                                Json::Num(
+                                                    t.consumed as f64,
+                                                ),
+                                            ),
+                                            (
+                                                "policy",
+                                                Json::Str(
+                                                    t.policy.clone(),
+                                                ),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "resident_rows",
+                            Json::Num(s.resident_rows as f64),
+                        ),
+                        (
+                            "param_version",
+                            Json::Num(s.param_version as f64),
+                        ),
+                        ("closed", Json::Bool(s.closed)),
+                    ]),
+                ),
+            ]),
+            ServiceResponse::Err(msg) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(msg.clone())),
+            ]),
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServiceResponse> {
+        let ok = field(j, "ok")?
+            .as_bool()
+            .context("field \"ok\" must be a bool")?;
+        if !ok {
+            return Ok(ServiceResponse::Err(field_str(j, "error")?));
+        }
+        if let Some(idx) = j.get("indices") {
+            return Ok(ServiceResponse::Indices(indices_from_json(
+                idx.as_arr().context("indices must be an array")?,
+            )?));
+        }
+        if let Some(b) = j.get("batch") {
+            return Ok(ServiceResponse::Batch(GetBatchReply::Ready(
+                batch_from_json(b)?,
+            )));
+        }
+        if j.get("not_ready").is_some() {
+            return Ok(ServiceResponse::Batch(GetBatchReply::NotReady));
+        }
+        if j.get("closed").is_some() {
+            return Ok(ServiceResponse::Batch(GetBatchReply::Closed));
+        }
+        if j.get("weights_not_newer").is_some() {
+            return Ok(ServiceResponse::WeightsNotNewer {
+                version: field_u64(j, "version")?,
+            });
+        }
+        if let Some(p) = j.get("params") {
+            return Ok(ServiceResponse::Weights(param_set_from_json(p)?));
+        }
+        if let Some(s) = j.get("stats") {
+            let tasks = field_arr(s, "tasks")?
+                .iter()
+                .map(|t| {
+                    Ok(TaskStats {
+                        name: field_str(t, "name")?,
+                        ready: field_usize(t, "ready")?,
+                        consumed: field_usize(t, "consumed")?,
+                        policy: field_str(t, "policy")?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            return Ok(ServiceResponse::Stats(ServiceStats {
+                tasks,
+                resident_rows: field_usize(s, "resident_rows")?,
+                param_version: field_u64(s, "param_version")?,
+                closed: field(s, "closed")?
+                    .as_bool()
+                    .context("closed must be a bool")?,
+            }));
+        }
+        Ok(ServiceResponse::Ok)
+    }
+
+    /// One JSONL wire line (no trailing newline).
+    pub fn to_line(&self) -> Result<String> {
+        Ok(self.to_json()?.to_string())
+    }
+
+    pub fn parse_line(line: &str) -> Result<ServiceResponse> {
+        let j = Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("bad response JSON: {e}"))?;
+        ServiceResponse::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: ServiceRequest) -> ServiceRequest {
+        let line = req.to_line().unwrap();
+        ServiceRequest::parse_line(&line).unwrap()
+    }
+
+    fn roundtrip_resp(resp: ServiceResponse) -> ServiceResponse {
+        let line = resp.to_line().unwrap();
+        ServiceResponse::parse_line(&line).unwrap()
+    }
+
+    #[test]
+    fn value_codec_roundtrips_all_variants() {
+        for v in [
+            Value::I32s(vec![-3, 0, 7]),
+            Value::F32s(vec![-0.5, 2.25]),
+            Value::F32(1.5),
+            Value::U64(42),
+            Value::Text("x\ny\"z".into()),
+        ] {
+            let j = value_to_json(&v);
+            assert_eq!(value_from_json(&j).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn non_finite_floats_survive_the_wire() {
+        let v = Value::F32s(vec![
+            -0.5,
+            f32::NEG_INFINITY,
+            f32::INFINITY,
+            f32::NAN,
+        ]);
+        let got = value_from_json(&value_to_json(&v)).unwrap();
+        let Value::F32s(xs) = got else { panic!("wrong variant") };
+        assert_eq!(xs[0], -0.5);
+        assert_eq!(xs[1], f32::NEG_INFINITY);
+        assert_eq!(xs[2], f32::INFINITY);
+        assert!(xs[3].is_nan());
+        // ...and the encoded form is real JSON.
+        assert!(Json::parse(&value_to_json(&v).to_string()).is_ok());
+    }
+
+    #[test]
+    fn weights_not_newer_response_roundtrips() {
+        match roundtrip_resp(ServiceResponse::WeightsNotNewer {
+            version: 9,
+        }) {
+            ServiceResponse::WeightsNotNewer { version } => {
+                assert_eq!(version, 9)
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn get_batch_request_roundtrips() {
+        let spec = GetBatchSpec {
+            task: "rollout".into(),
+            group: 3,
+            columns: vec![Column::Prompts, Column::Custom("extra".into())],
+            count: 8,
+            min: 2,
+            timeout_ms: 250,
+        };
+        match roundtrip_req(ServiceRequest::GetBatch(spec.clone())) {
+            ServiceRequest::GetBatch(got) => assert_eq!(got, spec),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn put_batch_request_roundtrips_with_and_without_index() {
+        let rows = vec![
+            PutRow::new(vec![(Column::Prompts, Value::I32s(vec![1, 2]))]),
+            PutRow::at(
+                GlobalIndex(9),
+                vec![
+                    (Column::Responses, Value::I32s(vec![3])),
+                    (Column::Rewards, Value::F32(0.5)),
+                ],
+            ),
+        ];
+        match roundtrip_req(ServiceRequest::PutBatch { rows: rows.clone() })
+        {
+            ServiceRequest::PutBatch { rows: got } => {
+                assert_eq!(got, rows)
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn init_engines_request_roundtrips_params() {
+        let params = ParamSet::new(
+            7,
+            vec![
+                HostTensor::from_f32(vec![2, 2], &[1.0, -2.5, 0.0, 3.0])
+                    .unwrap(),
+                HostTensor::from_i32(vec![3], &[1, -7, 42]).unwrap(),
+            ],
+        );
+        let spec = SpecDecl {
+            storage_units: 4,
+            tasks: vec![TaskDecl::new(
+                "rollout",
+                vec![Column::Prompts],
+            )],
+        };
+        match roundtrip_req(ServiceRequest::InitEngines {
+            spec: spec.clone(),
+            params: params.clone(),
+        }) {
+            ServiceRequest::InitEngines { spec: s, params: p } => {
+                assert_eq!(s, spec);
+                assert_eq!(p.version, 7);
+                assert_eq!(*p.tensors, *params.tensors);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn batch_response_roundtrips() {
+        let batch = Batch {
+            indices: vec![GlobalIndex(0), GlobalIndex(5)],
+            columns: vec![Column::Prompts, Column::Rewards],
+            rows: vec![
+                vec![Value::I32s(vec![1]), Value::F32(0.25)],
+                vec![Value::I32s(vec![2, 3]), Value::F32(-1.0)],
+            ],
+        };
+        match roundtrip_resp(ServiceResponse::Batch(GetBatchReply::Ready(
+            batch.clone(),
+        ))) {
+            ServiceResponse::Batch(GetBatchReply::Ready(got)) => {
+                assert_eq!(got.indices, batch.indices);
+                assert_eq!(got.columns, batch.columns);
+                assert_eq!(got.rows, batch.rows);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn not_ready_and_closed_are_distinct_on_the_wire() {
+        let nr = roundtrip_resp(ServiceResponse::Batch(
+            GetBatchReply::NotReady,
+        ));
+        assert!(matches!(
+            nr,
+            ServiceResponse::Batch(GetBatchReply::NotReady)
+        ));
+        let cl =
+            roundtrip_resp(ServiceResponse::Batch(GetBatchReply::Closed));
+        assert!(matches!(
+            cl,
+            ServiceResponse::Batch(GetBatchReply::Closed)
+        ));
+    }
+
+    #[test]
+    fn stats_and_error_responses_roundtrip() {
+        let stats = ServiceStats {
+            tasks: vec![TaskStats {
+                name: "rollout".into(),
+                ready: 3,
+                consumed: 9,
+                policy: "fcfs".into(),
+            }],
+            resident_rows: 12,
+            param_version: 2,
+            closed: false,
+        };
+        match roundtrip_resp(ServiceResponse::Stats(stats.clone())) {
+            ServiceResponse::Stats(got) => assert_eq!(got, stats),
+            _ => panic!("wrong variant"),
+        }
+        match roundtrip_resp(ServiceResponse::Err("boom".into())) {
+            ServiceResponse::Err(m) => assert_eq!(m, "boom"),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected() {
+        assert!(ServiceRequest::parse_line("not json").is_err());
+        assert!(ServiceRequest::parse_line("{\"op\":\"nope\"}").is_err());
+        assert!(
+            ServiceRequest::parse_line("{\"op\":\"get_batch\"}").is_err(),
+            "missing fields"
+        );
+        assert!(ServiceResponse::parse_line("{}").is_err(), "missing ok");
+    }
+}

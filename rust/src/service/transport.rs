@@ -1,0 +1,196 @@
+//! Transport boundary for the service API.
+//!
+//! A [`Transport`] moves one [`ServiceRequest`] to a [`Session`] and one
+//! [`ServiceResponse`] back. Two implementations:
+//!
+//! * [`InProcTransport`] — the zero-copy fast path: requests are handed
+//!   to the dispatcher by value, no serialization, no syscalls. This is
+//!   what the `Trainer` uses, so the service API costs nothing over the
+//!   old direct `TransferQueue` calls.
+//! * [`TcpJsonlTransport`] — newline-delimited JSON over TCP: one request
+//!   object per line, one response line per request, strictly in order.
+//!   This is the boundary that lets external trainers / rollout workers
+//!   attach from other processes or hosts.
+//!
+//! The server side is [`TcpJsonlServer`]: a thread-per-connection accept
+//! loop dispatching every parsed line through [`Session::handle`]. A
+//! malformed line gets an `{"ok":false,...}` response and the connection
+//! stays usable — framing is per-line, so one bad request cannot poison
+//! the stream.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use super::protocol::{ServiceRequest, ServiceResponse};
+use super::Session;
+
+/// A bidirectional request/response channel to a service session.
+pub trait Transport: Send + Sync {
+    fn call(&self, req: ServiceRequest) -> Result<ServiceResponse>;
+}
+
+/// Same-process transport: dispatches directly into the session.
+pub struct InProcTransport {
+    session: Arc<Session>,
+}
+
+impl InProcTransport {
+    pub fn new(session: Arc<Session>) -> Self {
+        InProcTransport { session }
+    }
+}
+
+impl Transport for InProcTransport {
+    fn call(&self, req: ServiceRequest) -> Result<ServiceResponse> {
+        Ok(self.session.handle(req))
+    }
+}
+
+/// TCP client transport speaking one JSON object per line.
+///
+/// A `Mutex` serializes request/response pairs so the transport is safe
+/// to share across threads; clients that want pipelining open one
+/// connection per worker instead (connections are cheap and the server
+/// is thread-per-connection).
+pub struct TcpJsonlTransport {
+    io: Mutex<(BufReader<TcpStream>, TcpStream)>,
+    peer: SocketAddr,
+}
+
+impl TcpJsonlTransport {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .context("connecting to asyncflow service")?;
+        stream.set_nodelay(true).ok();
+        let peer = stream.peer_addr()?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(TcpJsonlTransport { io: Mutex::new((reader, stream)), peer })
+    }
+
+    pub fn peer_addr(&self) -> SocketAddr {
+        self.peer
+    }
+}
+
+impl Transport for TcpJsonlTransport {
+    fn call(&self, req: ServiceRequest) -> Result<ServiceResponse> {
+        let line = req.to_line()?;
+        let mut io = self.io.lock().unwrap();
+        let (reader, writer) = &mut *io;
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        let mut buf = String::new();
+        let n = reader.read_line(&mut buf)?;
+        if n == 0 {
+            bail!("service connection closed by peer");
+        }
+        ServiceResponse::parse_line(&buf)
+    }
+}
+
+/// Accept-loop server: JSONL over TCP, one handler thread per client.
+pub struct TcpJsonlServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpJsonlServer {
+    /// Bind and start serving `session` on `addr` (use port 0 for an
+    /// ephemeral port; read it back with [`TcpJsonlServer::port`]).
+    pub fn bind(
+        session: Arc<Session>,
+        addr: impl ToSocketAddrs,
+    ) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).context("binding service port")?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("svc-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let session = session.clone();
+                    // Thread-per-connection: clients are long-lived
+                    // workers, not request-per-connection web traffic.
+                    let _ = std::thread::Builder::new()
+                        .name("svc-conn".into())
+                        .spawn(move || serve_connection(session, stream));
+                }
+            })
+            .expect("spawning service accept thread");
+        Ok(TcpJsonlServer {
+            local_addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn port(&self) -> u16 {
+        self.local_addr.port()
+    }
+
+    /// Stop accepting new connections and join the accept loop. Already
+    /// established connections keep running until their clients hang up.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept() by poking our own listener.
+        TcpStream::connect(self.local_addr).ok();
+        if let Some(h) = self.accept_thread.take() {
+            h.join().ok();
+        }
+    }
+
+    /// Block on the accept loop forever (the `asyncflow serve` path).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            h.join().ok();
+        }
+    }
+}
+
+fn serve_connection(session: Arc<Session>, stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { return };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match ServiceRequest::parse_line(&line) {
+            Ok(req) => session.handle(req),
+            Err(e) => ServiceResponse::Err(format!("bad request: {e:#}")),
+        };
+        let out = match resp.to_line() {
+            Ok(s) => s,
+            Err(e) => ServiceResponse::Err(format!(
+                "response encoding failed: {e:#}"
+            ))
+            .to_line()
+            .unwrap_or_else(|_| "{\"ok\":false,\"error\":\"encode\"}".into()),
+        };
+        let wrote = writer
+            .write_all(out.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush());
+        if wrote.is_err() {
+            return;
+        }
+    }
+}

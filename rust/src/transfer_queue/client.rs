@@ -9,10 +9,12 @@
 //! columns and triggers the metadata broadcast to downstream controllers.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::column::{Column, GlobalIndex, Value};
+use super::control_plane::RequestOutcome;
 use super::TransferQueue;
 
 /// One assembled micro-batch: indices + the requested column payloads.
@@ -37,6 +39,30 @@ impl Batch {
     pub fn column(&self, col: &Column) -> Option<Vec<&Value>> {
         let j = self.columns.iter().position(|c| c == col)?;
         Some(self.rows.iter().map(|r| &r[j]).collect())
+    }
+}
+
+/// Result of a non-blocking or deadline-bounded batch poll. Unlike the
+/// `Option<Batch>` API, this distinguishes "queue closed and drained —
+/// stop" from "batch not ready yet — retry", which remote clients need
+/// for correct retry semantics.
+#[derive(Debug, Clone)]
+pub enum BatchPoll {
+    Ready(Batch),
+    /// Queue open but fewer than `min_batch` rows ready.
+    NotReady,
+    /// Queue closed and fully drained; no more data will ever arrive.
+    Closed,
+}
+
+impl BatchPoll {
+    /// Collapse into the legacy `Option` view (loses the
+    /// closed/not-ready distinction).
+    pub fn into_option(self) -> Option<Batch> {
+        match self {
+            BatchPoll::Ready(b) => Some(b),
+            BatchPoll::NotReady | BatchPoll::Closed => None,
+        }
     }
 }
 
@@ -91,6 +117,37 @@ impl StreamDataLoader {
             self.min_batch,
         )?;
         Some(self.tq.fetch(&meta.indices, &self.columns))
+    }
+
+    /// Non-blocking poll distinguishing drain from starvation.
+    pub fn poll_batch(&self) -> BatchPoll {
+        self.outcome_to_poll(self.tq.controller(&self.task).poll(
+            self.group,
+            self.batch_size,
+            self.min_batch,
+        ))
+    }
+
+    /// Deadline-bounded pull: blocks up to `timeout` for a ready batch.
+    pub fn next_batch_timeout(&self, timeout: Duration) -> BatchPoll {
+        self.outcome_to_poll(
+            self.tq.controller(&self.task).request_deadline(
+                self.group,
+                self.batch_size,
+                self.min_batch,
+                Some(Instant::now() + timeout),
+            ),
+        )
+    }
+
+    fn outcome_to_poll(&self, outcome: RequestOutcome) -> BatchPoll {
+        match outcome {
+            RequestOutcome::Ready(meta) => {
+                BatchPoll::Ready(self.tq.fetch(&meta.indices, &self.columns))
+            }
+            RequestOutcome::NotReady => BatchPoll::NotReady,
+            RequestOutcome::Closed => BatchPoll::Closed,
+        }
     }
 
     /// Write computed columns back (paper: `collect_transfer_queue_data`).
@@ -178,6 +235,26 @@ mod tests {
         let col = b.column(&Column::Prompts).unwrap();
         assert_eq!(col[0].as_i32s().unwrap(), &[7]);
         assert!(b.column(&Column::Rewards).is_none());
+    }
+
+    #[test]
+    fn poll_batch_disambiguates_drain_from_starvation() {
+        let tq = tq_with_two_stages();
+        let loader = tq.loader("rollout", 0, vec![Column::Prompts], 4, 1);
+        assert!(matches!(loader.poll_batch(), BatchPoll::NotReady));
+        tq.put_row(vec![(Column::Prompts, Value::I32s(vec![1]))]).unwrap();
+        assert!(matches!(loader.poll_batch(), BatchPoll::Ready(_)));
+        tq.close();
+        assert!(matches!(loader.poll_batch(), BatchPoll::Closed));
+    }
+
+    #[test]
+    fn next_batch_timeout_returns_not_ready_when_starved() {
+        let tq = tq_with_two_stages();
+        let loader = tq.loader("rollout", 0, vec![Column::Prompts], 4, 1);
+        let out =
+            loader.next_batch_timeout(Duration::from_millis(30));
+        assert!(matches!(out, BatchPoll::NotReady));
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::column::{Column, GlobalIndex};
 use super::data_plane::WriteNotification;
@@ -45,6 +45,19 @@ struct ControllerState {
 pub struct BatchMeta {
     pub indices: Vec<GlobalIndex>,
     pub task: String,
+}
+
+/// Outcome of a deadline-bounded batch request. Distinguishes "not ready
+/// yet, retry" from "stream closed and drained, stop" — the ambiguity a
+/// plain `Option<BatchMeta>` cannot express (and that remote clients need
+/// for correct retry semantics).
+#[derive(Debug, Clone)]
+pub enum RequestOutcome {
+    Ready(BatchMeta),
+    /// Fewer than `min` samples ready before the deadline; queue open.
+    NotReady,
+    /// Queue closed and every remaining row already served.
+    Closed,
 }
 
 /// Per-task metadata controller.
@@ -87,9 +100,13 @@ impl Controller {
         let required = self.required.len();
         let (all_ready, token_len) = {
             let row = st.rows.entry(n.index).or_default();
-            row.ready.insert(n.column.clone());
-            if let Some(l) = n.token_len {
-                row.token_len += l;
+            // Idempotent: a column may be re-notified when a controller
+            // registered mid-stream replays resident rows that race with
+            // live writes — count its tokens exactly once.
+            if row.ready.insert(n.column.clone()) {
+                if let Some(l) = n.token_len {
+                    row.token_len += l;
+                }
             }
             (row.ready.len() == required, row.token_len)
         };
@@ -107,15 +124,18 @@ impl Controller {
     }
 
     /// Non-blocking batch assembly. Returns `None` when fewer than `min`
-    /// samples are ready.
+    /// samples are ready (see [`Controller::poll`] for the disambiguated
+    /// variant).
     pub fn try_request(
         &self,
         group: usize,
         count: usize,
         min: usize,
     ) -> Option<BatchMeta> {
-        let mut st = self.state.lock().unwrap();
-        self.assemble(&mut st, group, count, min)
+        match self.poll(group, count, min) {
+            RequestOutcome::Ready(b) => Some(b),
+            RequestOutcome::NotReady | RequestOutcome::Closed => None,
+        }
     }
 
     /// Blocking batch assembly: waits until at least `min` samples are
@@ -127,19 +147,72 @@ impl Controller {
         count: usize,
         min: usize,
     ) -> Option<BatchMeta> {
+        match self.request_deadline(group, count, min, None) {
+            RequestOutcome::Ready(b) => Some(b),
+            RequestOutcome::NotReady | RequestOutcome::Closed => None,
+        }
+    }
+
+    /// Non-blocking batch assembly with closed/not-ready disambiguation.
+    pub fn poll(
+        &self,
+        group: usize,
+        count: usize,
+        min: usize,
+    ) -> RequestOutcome {
+        let mut st = self.state.lock().unwrap();
+        self.poll_locked(&mut st, group, count, min)
+    }
+
+    fn poll_locked(
+        &self,
+        st: &mut ControllerState,
+        group: usize,
+        count: usize,
+        min: usize,
+    ) -> RequestOutcome {
+        if let Some(batch) = self.assemble(st, group, count, min) {
+            return RequestOutcome::Ready(batch);
+        }
+        if st.closed {
+            // Drain: serve whatever is left even if below `min`.
+            return match self.assemble(st, group, count, 1) {
+                Some(batch) => RequestOutcome::Ready(batch),
+                None => RequestOutcome::Closed,
+            };
+        }
+        RequestOutcome::NotReady
+    }
+
+    /// Deadline-bounded batch assembly: waits until at least `min`
+    /// samples are ready, the queue closes (drain, then `Closed`), or the
+    /// deadline passes (`NotReady`). `deadline = None` waits forever.
+    pub fn request_deadline(
+        &self,
+        group: usize,
+        count: usize,
+        min: usize,
+        deadline: Option<Instant>,
+    ) -> RequestOutcome {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(batch) = self.assemble(&mut st, group, count, min) {
-                return Some(batch);
+            match self.poll_locked(&mut st, group, count, min) {
+                RequestOutcome::NotReady => {}
+                done => return done,
             }
-            if st.closed {
-                // Drain: serve whatever is left even if below `min`.
-                return self.assemble(&mut st, group, count, 1);
-            }
-            let (next, _timeout) = self
-                .ready_cv
-                .wait_timeout(st, Duration::from_millis(50))
-                .unwrap();
+            // Short slices so a missed notify can never wedge a waiter.
+            let wait = match deadline {
+                None => Duration::from_millis(50),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return RequestOutcome::NotReady;
+                    }
+                    (dl - now).min(Duration::from_millis(50))
+                }
+            };
+            let (next, _timeout) =
+                self.ready_cv.wait_timeout(st, wait).unwrap();
             st = next;
         }
     }
@@ -328,6 +401,49 @@ mod tests {
         c.forget(&[GlobalIndex(0)]);
         assert_eq!(c.consumed_count(), 0);
         assert_eq!(c.ready_depth(), 0);
+    }
+
+    #[test]
+    fn poll_disambiguates_closed_from_not_ready() {
+        let c = rollout_controller();
+        assert!(matches!(c.poll(0, 1, 1), RequestOutcome::NotReady));
+        c.notify(&notif(0, Column::Prompts, Some(2)));
+        assert!(matches!(c.poll(0, 1, 1), RequestOutcome::Ready(_)));
+        c.close();
+        assert!(matches!(c.poll(0, 1, 1), RequestOutcome::Closed));
+    }
+
+    #[test]
+    fn closed_poll_drains_below_min() {
+        let c = rollout_controller();
+        c.notify(&notif(0, Column::Prompts, Some(2)));
+        c.close();
+        // One row left, min 4: drain still serves it, then Closed.
+        assert!(matches!(c.poll(0, 4, 4), RequestOutcome::Ready(_)));
+        assert!(matches!(c.poll(0, 4, 4), RequestOutcome::Closed));
+    }
+
+    #[test]
+    fn request_deadline_times_out_as_not_ready() {
+        let c = rollout_controller();
+        let t0 = Instant::now();
+        let out = c.request_deadline(
+            0,
+            1,
+            1,
+            Some(Instant::now() + Duration::from_millis(40)),
+        );
+        assert!(matches!(out, RequestOutcome::NotReady));
+        assert!(t0.elapsed() >= Duration::from_millis(35));
+    }
+
+    #[test]
+    fn replayed_notify_is_idempotent() {
+        let c = rollout_controller();
+        c.notify(&notif(0, Column::Prompts, Some(8)));
+        c.notify(&notif(0, Column::Prompts, Some(8))); // replay duplicate
+        c.try_request(0, 1, 1).unwrap();
+        assert_eq!(c.group_stats()[&0].tokens, 8, "tokens counted once");
     }
 
     #[test]

@@ -70,6 +70,16 @@ impl StorageUnit {
         Ok(WriteNotification { index, column, token_len })
     }
 
+    /// Whether a cell exists, without cloning it (service-boundary
+    /// duplicate-write validation).
+    pub fn has_cell(&self, index: GlobalIndex, column: &Column) -> bool {
+        self.rows
+            .read()
+            .unwrap()
+            .get(&index)
+            .map_or(false, |row| row.contains_key(column))
+    }
+
     /// Fetch one cell (None if the row or column is absent).
     pub fn get(&self, index: GlobalIndex, column: &Column) -> Option<Value> {
         let rows = self.rows.read().unwrap();
@@ -100,6 +110,21 @@ impl StorageUnit {
     /// Drop a row entirely (GC after a global batch completes).
     pub fn evict(&self, index: GlobalIndex) -> bool {
         self.rows.write().unwrap().remove(&index).is_some()
+    }
+
+    /// Visit every resident cell as a [`WriteNotification`] — the replay
+    /// path for controllers registered after data started flowing.
+    pub fn for_each_cell(&self, f: &mut dyn FnMut(WriteNotification)) {
+        let rows = self.rows.read().unwrap();
+        for (idx, row) in rows.iter() {
+            for (col, val) in row.iter() {
+                f(WriteNotification {
+                    index: *idx,
+                    column: col.clone(),
+                    token_len: val.token_len(),
+                });
+            }
+        }
     }
 
     pub fn row_count(&self) -> usize {
@@ -161,8 +186,19 @@ impl DataPlane {
         self.unit_for(index).evict(index)
     }
 
+    pub fn has_cell(&self, index: GlobalIndex, column: &Column) -> bool {
+        self.unit_for(index).has_cell(index, column)
+    }
+
     pub fn units(&self) -> &[StorageUnit] {
         &self.units
+    }
+
+    /// Visit every resident cell across all units (controller replay).
+    pub fn for_each_cell(&self, mut f: impl FnMut(WriteNotification)) {
+        for u in &self.units {
+            u.for_each_cell(&mut f);
+        }
     }
 
     pub fn total_rows(&self) -> usize {

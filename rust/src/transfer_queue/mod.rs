@@ -22,16 +22,18 @@ pub mod data_plane;
 pub mod policies;
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Result};
 
-pub use client::{Batch, StreamDataLoader};
+pub use client::{Batch, BatchPoll, StreamDataLoader};
 pub use column::{Column, GlobalIndex, Value};
-pub use control_plane::{BatchMeta, Controller};
+pub use control_plane::{BatchMeta, Controller, RequestOutcome};
 pub use data_plane::DataPlane;
-pub use policies::{Fcfs, Policy, ShortestFirst, TokenBalanced};
+pub use policies::{
+    policy_by_name, Fcfs, Policy, ShortestFirst, TokenBalanced,
+};
 
 /// Declaration of one RL task's data interface.
 pub struct TaskSpec {
@@ -86,17 +88,24 @@ impl TransferQueueBuilder {
             .collect();
         Arc::new(TransferQueue {
             data: DataPlane::new(self.n_units.max(1)),
-            controllers,
+            controllers: RwLock::new(controllers),
             next_index: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
         })
     }
 }
 
 /// The queue facade: data plane + controllers + index allocation.
+///
+/// Controllers sit behind a `RwLock` so RL tasks can be registered
+/// dynamically after construction ([`TransferQueue::register_task`]) —
+/// the service API's `register_task` verb. The write path only ever takes
+/// the read lock, so registration never blocks steady-state streaming.
 pub struct TransferQueue {
     data: DataPlane,
-    controllers: BTreeMap<String, Arc<Controller>>,
+    controllers: RwLock<BTreeMap<String, Arc<Controller>>>,
     next_index: AtomicU64,
+    closed: AtomicBool,
 }
 
 impl TransferQueue {
@@ -131,10 +140,72 @@ impl TransferQueue {
         value: Value,
     ) -> Result<()> {
         let notification = self.data.put(index, column, value)?;
-        for c in self.controllers.values() {
+        for c in self.controllers.read().unwrap().values() {
             c.notify(&notification);
         }
         Ok(())
+    }
+
+    /// Register a new RL task after construction (service-API
+    /// `register_task` verb). The new controller replays every cell
+    /// already resident in the data plane, so a task registered
+    /// mid-stream observes exactly the same samples an
+    /// at-construction task would (minus rows already evicted).
+    pub fn register_task(&self, spec: TaskSpec) -> Result<()> {
+        if self.closed.load(Ordering::SeqCst) {
+            bail!("cannot register task {:?}: queue is closed", spec.name);
+        }
+        let controller = Arc::new(Controller::new(
+            spec.name.clone(),
+            spec.required,
+            spec.policy,
+        ));
+        {
+            let mut cs = self.controllers.write().unwrap();
+            if cs.contains_key(&spec.name) {
+                bail!("task {:?} already registered", spec.name);
+            }
+            cs.insert(spec.name, controller.clone());
+        }
+        // Install-then-replay: writes racing with the replay notify the
+        // controller through the broadcast path; `Controller::notify` is
+        // idempotent so the overlap is harmless.
+        self.data.for_each_cell(|n| controller.notify(&n));
+        Ok(())
+    }
+
+    /// Whether `idx` has been handed out by the allocator. The service
+    /// boundary uses this to reject writes to forged indices (which
+    /// would otherwise pre-seed rows that future `put_row` calls merge
+    /// into).
+    pub fn index_allocated(&self, idx: GlobalIndex) -> bool {
+        idx.0 < self.next_index.load(Ordering::Relaxed)
+    }
+
+    /// Non-panicking fetch for the service boundary: a client may name
+    /// columns its task's controller does not track, so a served row is
+    /// not guaranteed to hold them — that is a request error, not a
+    /// TransferQueue invariant violation.
+    pub fn try_fetch(
+        &self,
+        indices: &[GlobalIndex],
+        columns: &[Column],
+    ) -> Result<Batch> {
+        let mut rows = Vec::with_capacity(indices.len());
+        for idx in indices {
+            match self.data.get_row(*idx, columns) {
+                Some(r) => rows.push(r),
+                None => bail!(
+                    "row {idx} lacks one of the requested columns \
+                     {columns:?}"
+                ),
+            }
+        }
+        Ok(Batch {
+            indices: indices.to_vec(),
+            rows,
+            columns: columns.to_vec(),
+        })
     }
 
     /// Fetch payload columns for a batch of indices.
@@ -159,19 +230,34 @@ impl TransferQueue {
         }
     }
 
-    pub fn controller(&self, task: &str) -> &Arc<Controller> {
+    pub fn controller(&self, task: &str) -> Arc<Controller> {
         self.controllers
-            .get(task)
-            .with_context(|| format!("unknown TransferQueue task {task:?}"))
+            .read()
             .unwrap()
+            .get(task)
+            .cloned()
+            .unwrap_or_else(|| {
+                panic!("unknown TransferQueue task {task:?}")
+            })
+    }
+
+    /// Fallible controller lookup (service dispatch path — a remote
+    /// client naming an unknown task must get an error, not a panic).
+    pub fn try_controller(&self, task: &str) -> Option<Arc<Controller>> {
+        self.controllers.read().unwrap().get(task).cloned()
     }
 
     pub fn has_task(&self, task: &str) -> bool {
-        self.controllers.contains_key(task)
+        self.controllers.read().unwrap().contains_key(task)
     }
 
-    pub fn tasks(&self) -> impl Iterator<Item = &str> {
-        self.controllers.keys().map(String::as_str)
+    pub fn tasks(&self) -> Vec<String> {
+        self.controllers.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Snapshot of every controller (stats/introspection).
+    pub fn controllers(&self) -> Vec<Arc<Controller>> {
+        self.controllers.read().unwrap().values().cloned().collect()
     }
 
     /// Construct a streaming dataloader handle for (task, DP group).
@@ -196,9 +282,14 @@ impl TransferQueue {
 
     /// Close every controller: blocked consumers drain and exit.
     pub fn close(&self) {
-        for c in self.controllers.values() {
+        self.closed.store(true, Ordering::SeqCst);
+        for c in self.controllers.read().unwrap().values() {
             c.close();
         }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
     }
 
     /// Evict rows from the data plane and all controllers (global-batch
@@ -207,7 +298,7 @@ impl TransferQueue {
         for idx in indices {
             self.data.evict(*idx);
         }
-        for c in self.controllers.values() {
+        for c in self.controllers.read().unwrap().values() {
             c.forget(indices);
         }
     }
@@ -298,6 +389,40 @@ mod tests {
         tq.evict(&[idx]);
         assert_eq!(tq.resident_rows(), 0);
         assert_eq!(tq.controller("rollout").ready_depth(), 0);
+    }
+
+    #[test]
+    fn register_task_after_build_replays_resident_rows() {
+        let tq = grpo_tq(2);
+        let a = tq
+            .put_row(vec![(Column::Prompts, Value::I32s(vec![1, 2]))])
+            .unwrap();
+        tq.put(a, Column::Responses, Value::I32s(vec![3])).unwrap();
+        // Late-registered task over an already-written column sees the
+        // resident row immediately.
+        tq.register_task(TaskSpec::new(
+            "late_scorer",
+            vec![Column::Responses],
+        ))
+        .unwrap();
+        assert!(tq.has_task("late_scorer"));
+        assert_eq!(tq.controller("late_scorer").ready_depth(), 1);
+        // ...and future writes flow to it like any other controller.
+        tq.put_row(vec![(Column::Responses, Value::I32s(vec![9]))])
+            .unwrap();
+        assert_eq!(tq.controller("late_scorer").ready_depth(), 2);
+    }
+
+    #[test]
+    fn register_task_rejects_duplicates_and_closed_queue() {
+        let tq = grpo_tq(1);
+        assert!(tq
+            .register_task(TaskSpec::new("rollout", vec![Column::Prompts]))
+            .is_err());
+        tq.close();
+        assert!(tq
+            .register_task(TaskSpec::new("x", vec![Column::Prompts]))
+            .is_err());
     }
 
     #[test]

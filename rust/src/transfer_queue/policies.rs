@@ -109,6 +109,17 @@ impl Policy for TokenBalanced {
     }
 }
 
+/// Construct a policy from its config/wire name. Unknown names fall back
+/// to FCFS (the permissive behavior the Trainer has always had; strict
+/// validation happens at the `RlConfig` layer).
+pub fn policy_by_name(name: &str) -> Box<dyn Policy> {
+    match name {
+        "token_balanced" => Box::new(TokenBalanced),
+        "shortest_first" => Box::new(ShortestFirst),
+        _ => Box::new(Fcfs),
+    }
+}
+
 /// Shortest-sample-first: prioritizes quick turnaround to keep downstream
 /// pipelines primed during warm-up.
 pub struct ShortestFirst;

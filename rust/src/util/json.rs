@@ -111,6 +111,19 @@ impl Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// i32 array (token ids on the service wire — exact in f64).
+    pub fn arr_i32(xs: &[i32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    /// f32 array (f32→f64 widening is exact, so finite values
+    /// round-trip losslessly). Callers must not pass non-finite values:
+    /// the writer would emit `inf`/`NaN`, which is not valid JSON — the
+    /// service protocol encodes those as tagged strings instead.
+    pub fn arr_f32(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
     // ---- serialization ----------------------------------------------------
 
     pub fn to_string(&self) -> String {

@@ -1,0 +1,334 @@
+//! Service-API integration tests: the full GRPO experience flow over the
+//! TCP JSON-lines transport (the acceptance path for `asyncflow serve`),
+//! plus concurrent multi-client producer/consumer runs over BOTH
+//! transports asserting conservation (no sample lost or double-served).
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use asyncflow::runtime::{HostTensor, ParamSet};
+use asyncflow::service::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec, SpecDecl, TaskDecl, TcpJsonlServer,
+};
+use asyncflow::transfer_queue::{Column, GlobalIndex, Value};
+
+fn grpo_session() -> Arc<Session> {
+    Arc::new(
+        Session::init_engines(
+            SessionSpec::grpo(),
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    )
+}
+
+fn spec(task: &str, columns: Vec<Column>, count: usize) -> GetBatchSpec {
+    GetBatchSpec {
+        task: task.into(),
+        group: 0,
+        columns,
+        count,
+        min: 1,
+        timeout_ms: 2000,
+    }
+}
+
+/// Acceptance: `asyncflow serve` + ServiceClient over TcpJsonlTransport
+/// round-trips the full GRPO experience flow — put prompts → rollout get
+/// → put responses → reward get → weight notify (with a real tensor
+/// payload) — across a real socket.
+#[test]
+fn tcp_round_trips_full_grpo_experience_flow() {
+    let server =
+        TcpJsonlServer::bind(grpo_session(), ("127.0.0.1", 0)).unwrap();
+    let client =
+        ServiceClient::connect(("127.0.0.1", server.port())).unwrap();
+
+    // put prompts
+    let idx = client
+        .put_prompts_data(&[vec![1, 2, 3], vec![4, 5, 6]])
+        .unwrap();
+    assert_eq!(idx.len(), 2);
+
+    // rollout get
+    let batch = client
+        .get_batch(&spec("rollout", vec![Column::Prompts], 8))
+        .unwrap()
+        .into_option()
+        .unwrap();
+    assert_eq!(batch.len(), 2);
+    assert_eq!(
+        batch.rows[0][0].as_i32s().unwrap().len(),
+        3,
+        "prompt payload survives the wire"
+    );
+
+    // put responses (+ per-token logps) batch-first
+    client
+        .put_batch(
+            batch
+                .indices
+                .iter()
+                .map(|i| {
+                    PutRow::at(*i, vec![
+                        (Column::Responses, Value::I32s(vec![9, 10])),
+                        (Column::OldLogp, Value::F32s(vec![-0.5, -0.25])),
+                    ])
+                })
+                .collect(),
+        )
+        .unwrap();
+
+    // reward get
+    let scored = client
+        .get_batch(&spec("reward", vec![Column::Responses], 8))
+        .unwrap()
+        .into_option()
+        .unwrap();
+    assert_eq!(scored.len(), 2);
+    assert_eq!(
+        scored.rows[1][0],
+        Value::I32s(vec![9, 10]),
+        "response payload survives the wire"
+    );
+
+    // weight notify with real tensor payloads, then subscribe
+    let tensors = vec![
+        HostTensor::from_f32(vec![2, 2], &[1.0, -2.5, 0.5, 0.0]).unwrap(),
+        HostTensor::from_i32(vec![3], &[7, -8, 9]).unwrap(),
+    ];
+    client
+        .weight_sync_notify(ParamSet::new(1, tensors.clone()))
+        .unwrap();
+    let got = client.subscribe_weights(0, 2000).unwrap().unwrap();
+    assert_eq!(got.version, 1);
+    assert_eq!(*got.tensors, tensors, "weights survive the wire");
+    assert!(
+        client.subscribe_weights(1, 0).unwrap().is_none(),
+        "no-change poll elides the snapshot payload"
+    );
+    // A version regression from a misbehaving client is an error
+    // response, not a server crash.
+    assert!(client
+        .weight_sync_notify(ParamSet::new(0, vec![]))
+        .is_err());
+
+    // stats over the wire
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.param_version, 1);
+    assert_eq!(stats.resident_rows, 2);
+    let rollout =
+        stats.tasks.iter().find(|t| t.name == "rollout").unwrap();
+    assert_eq!(rollout.consumed, 2);
+
+    // shutdown: consumers observe Closed (not NotReady) from now on
+    client.shutdown().unwrap();
+    let reply = client
+        .get_batch(&GetBatchSpec {
+            timeout_ms: 0,
+            ..spec("rollout", vec![Column::Prompts], 8)
+        })
+        .unwrap();
+    assert!(matches!(reply, GetBatchReply::Closed));
+
+    server.stop();
+}
+
+/// A served empty session is initialized remotely via the init_engines
+/// verb, and tasks can be registered over the wire afterwards.
+#[test]
+fn tcp_remote_init_and_register_task() {
+    let server = TcpJsonlServer::bind(
+        Arc::new(Session::new()),
+        ("127.0.0.1", 0),
+    )
+    .unwrap();
+    let client =
+        ServiceClient::connect(("127.0.0.1", server.port())).unwrap();
+
+    // Data verbs fail before init...
+    assert!(client.put_prompts_data(&[vec![1]]).is_err());
+    // ...then init remotely.
+    client
+        .init_engines(
+            SpecDecl {
+                storage_units: 2,
+                tasks: vec![TaskDecl::new(
+                    "rollout",
+                    vec![Column::Prompts],
+                )],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap();
+    let idx = client.put_prompts_data(&[vec![1], vec![2]]).unwrap();
+    assert_eq!(idx.len(), 2);
+    // Double init is a service error, not a crash.
+    assert!(client
+        .init_engines(
+            SpecDecl {
+                storage_units: 1,
+                tasks: vec![TaskDecl::new("x", vec![Column::Prompts])],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .is_err());
+    // Dynamic registration over the wire replays resident rows.
+    client
+        .register_task(TaskDecl::new("audit", vec![Column::Prompts]))
+        .unwrap();
+    let audit = client
+        .get_batch(&spec("audit", vec![Column::Prompts], 8))
+        .unwrap()
+        .into_option()
+        .unwrap();
+    assert_eq!(audit.len(), 2);
+
+    server.stop();
+}
+
+/// A malformed request line must produce an error response and leave the
+/// connection usable — per-line framing means one bad request cannot
+/// poison the stream.
+#[test]
+fn tcp_malformed_line_gets_error_and_connection_survives() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let server =
+        TcpJsonlServer::bind(grpo_session(), ("127.0.0.1", 0)).unwrap();
+    let mut stream =
+        std::net::TcpStream::connect(("127.0.0.1", server.port()))
+            .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    stream.write_all(b"this is not json\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "got: {line}");
+
+    // Same connection still serves valid requests.
+    stream.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    stream.flush().unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "got: {line}");
+
+    server.stop();
+}
+
+/// Concurrency harness: `producers` threads ingest `per_producer` prompts
+/// each while `consumers` threads drain them through `get_batch`;
+/// asserts every sample is served exactly once.
+fn run_concurrent_clients(
+    make_client: &(dyn Fn() -> ServiceClient + Sync),
+    shutdown_client: ServiceClient,
+) {
+    const PRODUCERS: usize = 2;
+    const CONSUMERS: usize = 2;
+    const PER_PRODUCER: usize = 32;
+    const TOTAL: usize = PRODUCERS * PER_PRODUCER;
+
+    std::thread::scope(|scope| {
+        for p in 0..PRODUCERS {
+            let client = make_client();
+            scope.spawn(move || {
+                // Batch-first ingest: 4 rows per round-trip.
+                for chunk in 0..PER_PRODUCER / 4 {
+                    let rows = (0..4)
+                        .map(|k| {
+                            let tag =
+                                (p * 1000 + chunk * 4 + k) as i32;
+                            PutRow::new(vec![(
+                                Column::Prompts,
+                                Value::I32s(vec![tag; 3]),
+                            )])
+                        })
+                        .collect();
+                    client.put_batch(rows).unwrap();
+                }
+            });
+        }
+
+        let mut consumer_handles = Vec::new();
+        for g in 0..CONSUMERS {
+            let client = make_client();
+            consumer_handles.push(scope.spawn(move || {
+                let spec = GetBatchSpec {
+                    task: "rollout".into(),
+                    group: g,
+                    columns: vec![Column::Prompts],
+                    count: 4,
+                    min: 1,
+                    timeout_ms: 50,
+                };
+                let mut seen: Vec<GlobalIndex> = Vec::new();
+                loop {
+                    match client.get_batch(&spec).unwrap() {
+                        GetBatchReply::Ready(b) => {
+                            seen.extend(b.indices)
+                        }
+                        GetBatchReply::NotReady => continue,
+                        GetBatchReply::Closed => return seen,
+                    }
+                }
+            }));
+        }
+
+        // Close once every sample has been consumed so the consumers
+        // observe the drain → Closed transition.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let stats = shutdown_client.stats().unwrap();
+            let consumed = stats
+                .tasks
+                .iter()
+                .find(|t| t.name == "rollout")
+                .unwrap()
+                .consumed;
+            if consumed >= TOTAL {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "consumers stalled at {consumed}/{TOTAL}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        shutdown_client.shutdown().unwrap();
+
+        let mut all: Vec<GlobalIndex> = Vec::new();
+        for h in consumer_handles {
+            all.extend(h.join().unwrap());
+        }
+        assert_eq!(all.len(), TOTAL, "no sample lost");
+        let unique: HashSet<_> = all.iter().copied().collect();
+        assert_eq!(unique.len(), TOTAL, "no sample double-consumed");
+    });
+}
+
+#[test]
+fn concurrent_multi_client_in_proc() {
+    let session = grpo_session();
+    let make = {
+        let session = session.clone();
+        move || ServiceClient::in_proc(session.clone())
+    };
+    run_concurrent_clients(&make, ServiceClient::in_proc(session));
+}
+
+#[test]
+fn concurrent_multi_client_tcp() {
+    let server =
+        TcpJsonlServer::bind(grpo_session(), ("127.0.0.1", 0)).unwrap();
+    let port = server.port();
+    let make =
+        move || ServiceClient::connect(("127.0.0.1", port)).unwrap();
+    run_concurrent_clients(
+        &make,
+        ServiceClient::connect(("127.0.0.1", port)).unwrap(),
+    );
+    server.stop();
+}
