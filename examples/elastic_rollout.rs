@@ -1,0 +1,171 @@
+//! Elastic streaming rollout demo: two rollout workers — one in-process,
+//! one attached over the real TCP transport — lease prompts from the
+//! same session and stream chunked generations back. Mid-run the TCP
+//! worker is killed; its lease expires and the survivor inherits the
+//! unfinished prompts (requeued exactly once), so the run still drains
+//! every sample. Downstream consumption starts on the first finished
+//! row, long before the slowest generation completes.
+//!
+//! ```sh
+//! cargo run --release --example elastic_rollout
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use asyncflow::rollout::{run_worker, WorkerOptions, WorkerReport};
+use asyncflow::runtime::{MockEngine, ParamSet, Sampler};
+use asyncflow::service::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec, TcpJsonlServer,
+};
+use asyncflow::transfer_queue::{Column, TaskSpec, Value};
+
+const PROMPTS: usize = 64;
+const BATCH: usize = 8;
+const PROMPT_LEN: usize = 8;
+const MAX_LEN: usize = 72;
+
+fn worker_opts(name: &str) -> WorkerOptions {
+    let mut opts = WorkerOptions::new(name);
+    opts.chunk_tokens = 8;
+    opts.ttl_ms = 150;
+    opts
+}
+
+fn main() -> Result<()> {
+    let session = Arc::new(Session::init_engines(
+        SessionSpec {
+            storage_units: 4,
+            tasks: vec![
+                TaskSpec::new("rollout", vec![Column::Prompts]),
+                TaskSpec::new(
+                    "collect",
+                    vec![Column::Responses, Column::OldLogp],
+                ),
+            ],
+        },
+        ParamSet::new(0, vec![]),
+    )?);
+    let server = TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0))?;
+    println!(
+        "== elastic rollout: {PROMPTS} prompts, 1 local + 1 TCP worker \
+         (killed mid-run), service on {} ==",
+        server.local_addr()
+    );
+
+    // Ingest prompts (varying content -> varying response lengths).
+    let feeder = ServiceClient::in_proc(session.clone());
+    feeder.put_batch(
+        (0..PROMPTS)
+            .map(|i| {
+                PutRow::new(vec![(
+                    Column::Prompts,
+                    Value::I32s(vec![i as i32 + 1; PROMPT_LEN]),
+                )])
+            })
+            .collect(),
+    )?;
+
+    // Local worker: steady, survives the whole run.
+    let survivor = {
+        let client = ServiceClient::in_proc(session.clone());
+        std::thread::spawn(move || -> Result<WorkerReport> {
+            let mut engine = MockEngine::new(BATCH, PROMPT_LEN, MAX_LEN);
+            engine.token_delay = Duration::from_micros(300);
+            let mut sampler = Sampler::new(1.0, 32, 1);
+            run_worker(
+                &client,
+                &mut engine,
+                &mut sampler,
+                &worker_opts("local-0"),
+                None,
+                None,
+                &|| false,
+            )
+        })
+    };
+
+    // TCP worker: a straggler that gets killed mid-generation.
+    let killed = Arc::new(AtomicBool::new(false));
+    let victim = {
+        let addr = server.local_addr();
+        let killed = killed.clone();
+        std::thread::spawn(move || -> Result<WorkerReport> {
+            let client = ServiceClient::connect(addr)?;
+            let mut engine = MockEngine::new(BATCH, PROMPT_LEN, MAX_LEN);
+            engine.token_delay = Duration::from_micros(900);
+            let mut sampler = Sampler::new(1.0, 32, 2);
+            run_worker(
+                &client,
+                &mut engine,
+                &mut sampler,
+                &worker_opts("tcp-victim"),
+                None,
+                None,
+                &|| killed.load(Ordering::SeqCst),
+            )
+        })
+    };
+
+    // Kill the TCP worker once it is mid-flight.
+    {
+        let killed = killed.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            killed.store(true, Ordering::SeqCst);
+        });
+    }
+
+    // Drain finished rows as they stream in.
+    let consumer = ServiceClient::in_proc(session.clone());
+    let spec = GetBatchSpec {
+        task: "collect".into(),
+        group: 0,
+        columns: vec![Column::Responses],
+        count: 16,
+        min: 1,
+        timeout_ms: 50,
+    };
+    let t0 = Instant::now();
+    let mut first: Option<Duration> = None;
+    let mut seen = std::collections::HashSet::new();
+    while seen.len() < PROMPTS {
+        if let GetBatchReply::Ready(batch) = consumer.get_batch(&spec)? {
+            first.get_or_insert_with(|| t0.elapsed());
+            for idx in batch.indices {
+                assert!(seen.insert(idx), "row {idx} served twice");
+            }
+        }
+    }
+    let total = t0.elapsed();
+    consumer.shutdown()?;
+
+    let s = survivor.join().unwrap()?;
+    let v = victim.join().unwrap()?;
+    println!(
+        "first trainable sample after {:.1}ms; all {PROMPTS} after \
+         {:.1}ms (exactly once)",
+        first.unwrap().as_secs_f64() * 1e3,
+        total.as_secs_f64() * 1e3
+    );
+    println!(
+        "survivor: {} samples, {} chunks; victim before kill: {} samples",
+        s.samples, s.chunks, v.samples
+    );
+    for w in consumer.worker_stats()? {
+        println!(
+            "worker {:<10} completed={:<3} requeued={:<3} tokens={}",
+            w.worker, w.completed_rows, w.requeued_rows, w.generated_tokens
+        );
+    }
+    assert_eq!(
+        s.samples + v.samples,
+        PROMPTS as u64,
+        "conservation: every prompt generated exactly once"
+    );
+    server.stop();
+    Ok(())
+}

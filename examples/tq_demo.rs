@@ -1,92 +1,131 @@
-//! TransferQueue standalone demo: many concurrent producers and
-//! consumers streaming through the columnar queue, exercising the
-//! §3 design — metadata-first reads, write-notification broadcast,
-//! per-task consumption isolation, and the token-balancing policy.
+//! TransferQueue demo, driven entirely through the service API: many
+//! concurrent producers and consumers streaming through the columnar
+//! queue over `ServiceClient` — the same verbs (`put_batch`,
+//! `get_batch`, `stats`) a remote process would use against
+//! `asyncflow serve`, here on the zero-copy in-process transport.
+//! Exercises the §3 design: metadata-first reads, write-notification
+//! broadcast, per-task consumption isolation, the token-balancing
+//! policy, and per-storage-unit occupancy observability.
 //!
 //! ```sh
 //! cargo run --release --example tq_demo
 //! ```
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
-use asyncflow::transfer_queue::{
-    Column, TaskSpec, TokenBalanced, TransferQueue, Value,
+use asyncflow::runtime::ParamSet;
+use asyncflow::service::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec,
 };
+use asyncflow::transfer_queue::{Column, TaskSpec, TokenBalanced, Value};
 use asyncflow::util::rng::Rng;
 
 fn main() -> Result<()> {
     const SAMPLES: usize = 2_000;
     const PRODUCERS: usize = 4;
     const CONSUMER_GROUPS: usize = 3;
+    const PUT_CHUNK: usize = 16;
 
-    let tq = TransferQueue::builder()
-        .storage_units(4)
-        .task(
-            TaskSpec::new("score", vec![Column::Responses])
-                .policy(Box::new(TokenBalanced)),
-        )
-        .build();
+    let session = Arc::new(Session::init_engines(
+        SessionSpec {
+            storage_units: 4,
+            tasks: vec![TaskSpec::new("score", vec![Column::Responses])
+                .policy(Box::new(TokenBalanced))],
+        },
+        ParamSet::new(0, vec![]),
+    )?);
 
     println!(
-        "== TransferQueue demo: {PRODUCERS} producers -> \
+        "== TransferQueue demo (service API): {PRODUCERS} producers -> \
          {CONSUMER_GROUPS} DP groups, {SAMPLES} samples =="
     );
 
-    // Producers write variable-length "responses" (long-tailed lengths).
+    // Producers write variable-length "responses" (long-tailed lengths),
+    // batch-first: one put_batch round-trip per PUT_CHUNK rows.
     let mut producers = Vec::new();
     for p in 0..PRODUCERS {
-        let tq = tq.clone();
+        let client = ServiceClient::in_proc(session.clone());
         producers.push(std::thread::spawn(move || -> Result<()> {
             let mut rng = Rng::new(p as u64);
+            let mut pending = Vec::with_capacity(PUT_CHUNK);
             for _ in 0..SAMPLES / PRODUCERS {
                 let len = (rng.lognormal(4.0, 0.8) as usize).clamp(4, 512);
-                tq.put_row(vec![(
+                pending.push(PutRow::new(vec![(
                     Column::Responses,
                     Value::I32s(vec![1; len]),
-                )])?;
+                )]));
+                if pending.len() == PUT_CHUNK {
+                    client.put_batch(std::mem::take(&mut pending))?;
+                }
+            }
+            if !pending.is_empty() {
+                client.put_batch(pending)?;
             }
             Ok(())
         }));
     }
 
-    // Consumers pull with the token-balanced policy.
-    let consumed = Arc::new(AtomicUsize::new(0));
+    // Consumers pull with the token-balanced policy through get_batch.
     let mut consumers = Vec::new();
     for g in 0..CONSUMER_GROUPS {
-        let tq = tq.clone();
-        let consumed = consumed.clone();
-        consumers.push(std::thread::spawn(move || -> (usize, usize) {
-            let loader =
-                tq.loader("score", g, vec![Column::Responses], 16, 1);
-            let (mut n, mut tokens) = (0usize, 0usize);
-            while let Some(batch) = loader.next_batch() {
-                for row in &batch.rows {
-                    tokens += row[0].as_i32s().unwrap().len();
-                    n += 1;
+        let client = ServiceClient::in_proc(session.clone());
+        consumers.push(std::thread::spawn(
+            move || -> Result<(usize, usize)> {
+                let spec = GetBatchSpec {
+                    task: "score".into(),
+                    group: g,
+                    columns: vec![Column::Responses],
+                    count: 16,
+                    min: 1,
+                    timeout_ms: 50,
+                };
+                let (mut n, mut tokens) = (0usize, 0usize);
+                loop {
+                    match client.get_batch(&spec)? {
+                        GetBatchReply::Ready(batch) => {
+                            for row in &batch.rows {
+                                tokens += row[0].as_i32s().unwrap().len();
+                                n += 1;
+                            }
+                        }
+                        GetBatchReply::NotReady => continue,
+                        GetBatchReply::Closed => return Ok((n, tokens)),
+                    }
                 }
-                consumed.fetch_add(batch.len(), Ordering::SeqCst);
-            }
-            (n, tokens)
-        }));
+            },
+        ));
     }
 
     for h in producers {
         h.join().unwrap()?;
     }
-    while tq.controller("score").consumed_count() < SAMPLES {
+    // Close once every sample has been served (visible via `stats`).
+    let monitor = ServiceClient::in_proc(session.clone());
+    loop {
+        let stats = monitor.stats()?;
+        let consumed = stats
+            .tasks
+            .iter()
+            .find(|t| t.name == "score")
+            .map_or(0, |t| t.consumed);
+        if consumed >= SAMPLES {
+            break;
+        }
         std::thread::sleep(std::time::Duration::from_millis(2));
     }
-    tq.close();
+    monitor.shutdown()?;
 
     let mut totals = Vec::new();
+    let mut served = 0usize;
     for (g, h) in consumers.into_iter().enumerate() {
-        let (n, tokens) = h.join().unwrap();
+        let (n, tokens) = h.join().unwrap()?;
         println!("group {g}: {n} samples, {tokens} tokens");
+        served += n;
         totals.push(tokens as f64);
     }
-    assert_eq!(consumed.load(Ordering::SeqCst), SAMPLES);
+    assert_eq!(served, SAMPLES, "every sample served exactly once");
     let mean = totals.iter().sum::<f64>() / totals.len() as f64;
     let spread = totals
         .iter()
@@ -97,11 +136,14 @@ fn main() -> Result<()> {
          (token_balanced policy)",
         100.0 * spread
     );
-    println!(
-        "data plane: {} bytes written, {} bytes read, {} rows resident",
-        tq.data_plane().total_bytes_written(),
-        tq.data_plane().total_bytes_read(),
-        tq.resident_rows()
-    );
+    // Per-storage-unit occupancy/traffic over the service boundary.
+    let stats = monitor.stats()?;
+    for u in &stats.units {
+        println!(
+            "unit {}: {} rows resident, {}B written, {}B read",
+            u.unit, u.rows, u.bytes_written, u.bytes_read
+        );
+    }
+    println!("resident rows: {}", stats.resident_rows);
     Ok(())
 }

@@ -30,6 +30,12 @@ pub struct RlConfig {
     pub staleness: u64,
     /// Number of rollout (producer) workers.
     pub rollout_workers: usize,
+    /// Streaming rollout: decode chunk size (tokens per sequence per
+    /// incremental step; finished rows commit at chunk boundaries).
+    pub chunk_tokens: usize,
+    /// Streaming rollout: lease TTL in ms — a worker silent for this
+    /// long loses its in-flight prompts to the pool.
+    pub lease_ttl_ms: u64,
     /// TransferQueue storage units.
     pub storage_units: usize,
     /// Load-balancing policy: "fcfs" | "token_balanced" | "shortest_first".
@@ -49,6 +55,8 @@ impl Default for RlConfig {
             top_k: 32,
             staleness: 1,
             rollout_workers: 2,
+            chunk_tokens: 8,
+            lease_ttl_ms: 1000,
             storage_units: 2,
             policy: "fcfs".into(),
             seed: 0,
@@ -84,6 +92,12 @@ impl RlConfig {
         }
         if self.rollout_workers == 0 {
             bail!("need at least one rollout worker");
+        }
+        if self.chunk_tokens == 0 {
+            bail!("chunk_tokens must be >= 1");
+        }
+        if self.lease_ttl_ms == 0 {
+            bail!("lease_ttl_ms must be >= 1");
         }
         match self.policy.as_str() {
             "fcfs" | "token_balanced" | "shortest_first" => {}
@@ -122,6 +136,12 @@ impl RlConfig {
             }
             if let Some(v) = s.get("rollout_workers") {
                 c.rollout_workers = v.as_usize()?;
+            }
+            if let Some(v) = s.get("chunk_tokens") {
+                c.chunk_tokens = v.as_usize()?;
+            }
+            if let Some(v) = s.get("lease_ttl_ms") {
+                c.lease_ttl_ms = v.as_usize()? as u64;
             }
             if let Some(v) = s.get("storage_units") {
                 c.storage_units = v.as_usize()?;

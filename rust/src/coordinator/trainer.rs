@@ -14,6 +14,11 @@
 //! verbs (`put_batch`, `get_batch`, `subscribe_weights`,
 //! `weight_sync_notify`) a remote worker would use against `asyncflow
 //! serve`, so the service API is the proven path, not a parallel one.
+//! The rollout stage runs on the elastic lease verbs (`lease_prompts`,
+//! `put_chunk`, ...) via [`crate::rollout::run_worker`]: generations
+//! stream in bounded chunks, finished rows unlock downstream stages
+//! while their group's long tail is still decoding, and additional
+//! workers can join this run's session over TCP mid-run.
 //! Consumers pull ready samples at micro-batch granularity, which is what
 //! makes the stages overlap (paper §4.1, Fig. 7). The update worker
 //! completes an iteration every `global_batch / B` steps, publishes new
@@ -29,6 +34,7 @@ use crate::config::RlConfig;
 use crate::data::{self, MathTaskGen, EOS, PAD};
 use crate::exec::{Shutdown, WorkerPool};
 use crate::metrics::Registry;
+use crate::rollout::{run_worker, WorkerOptions};
 use crate::runtime::{
     ParamSet, PolicyEngine, Sampler, TrainBatch, TrainEngine,
 };
@@ -240,7 +246,14 @@ impl Trainer {
         }
 
         // ------------------------------------------------------------------
-        // Rollout producers: generate + behaviour-policy logprobs.
+        // Rollout producers: elastic lease-based workers. Each drives its
+        // engine through the incremental decode API and streams chunks
+        // over the same lease verbs a remote `asyncflow rollout-worker`
+        // uses, so extra workers can attach to this run's session over
+        // TCP mid-run — and a crashed worker's prompts are requeued to
+        // the pool after `lease_ttl_ms` (exactly once). Weight swaps now
+        // happen at chunk boundaries (§4.2.2 at sub-batch granularity),
+        // still inside the IterationGate staleness bound.
         // ------------------------------------------------------------------
         for (r, factory) in engines.rollout.into_iter().enumerate() {
             let shutdown = shutdown.clone();
@@ -249,90 +262,31 @@ impl Trainer {
             let cfg2 = cfg.clone();
             let client2 = client.clone();
             let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
-                let worker = format!("rollout-{r}");
                 let mut engine = factory()?;
-                let mut current_version = 0u64;
                 let mut sampler = Sampler::new(
                     cfg2.temperature,
                     cfg2.top_k,
                     cfg2.seed ^ (r as u64 + 1).wrapping_mul(0x9E37),
                 );
-                let spec = GetBatchSpec {
+                let opts = WorkerOptions {
+                    name: format!("rollout-{r}"),
                     task: "rollout".into(),
-                    group: r,
-                    columns: vec![Column::Prompts],
-                    count: b,
-                    min: b,
-                    timeout_ms: PULL_TIMEOUT_MS,
+                    lease_rows: b,
+                    chunk_tokens: cfg2.chunk_tokens,
+                    ttl_ms: cfg2.lease_ttl_ms,
+                    poll_ms: PULL_TIMEOUT_MS,
+                    eos: EOS,
+                    pad: PAD,
                 };
-                while !shutdown.is_triggered() {
-                    let Some(batch) = client2.get_batch_blocking_until(
-                        &spec,
-                        || shutdown.is_triggered(),
-                    )?
-                    else {
-                        break;
-                    };
-                    // Delayed parameter update: swap only at the
-                    // generation boundary (paper §4.2.2), via the
-                    // subscribe_weights verb (None = nothing newer).
-                    if let Some(latest) =
-                        client2.subscribe_weights(current_version, 0)?
-                    {
-                        current_version = latest.version;
-                        engine.set_params(latest);
-                        metrics.inc("weight_swaps", 1);
-                    }
-                    let prompts: Vec<Vec<i32>> = batch
-                        .rows
-                        .iter()
-                        .map(|row| row[0].as_i32s().unwrap().to_vec())
-                        .collect();
-                    let t0 = timeline.now();
-                    let trajs =
-                        engine.generate(&prompts, &mut sampler, EOS, PAD)?;
-                    timeline.record(&worker, "generate", t0, timeline.now());
-
-                    // Behaviour-policy ("old") logprobs over the full
-                    // trajectories — same engine, same weights.
-                    let ids: Vec<Vec<i32>> =
-                        trajs.iter().map(|t| t.ids.clone()).collect();
-                    let t0 = timeline.now();
-                    let old_logp = engine.logprobs(&ids)?;
-                    timeline.record(&worker, "old_logp", t0, timeline.now());
-
-                    let mut rows = Vec::with_capacity(batch.len());
-                    for ((idx, traj), lp) in batch
-                        .indices
-                        .iter()
-                        .zip(&trajs)
-                        .zip(&old_logp)
-                    {
-                        let resp = traj.ids
-                            [p_len..p_len + traj.response_len]
-                            .to_vec();
-                        // Store only the response-region slice of the
-                        // logp grid (variable length — no padding,
-                        // paper §3.5). Grid index P-1+k scores response
-                        // token k.
-                        let lp_slice = lp
-                            [p_len - 1..p_len - 1 + traj.response_len]
-                            .to_vec();
-                        metrics.inc("rollout_samples", 1);
-                        metrics
-                            .inc("rollout_tokens", traj.response_len as u64);
-                        rows.push(PutRow::at(*idx, vec![
-                            (Column::Responses, Value::I32s(resp)),
-                            (Column::OldLogp, Value::F32s(lp_slice)),
-                            (
-                                col("version"),
-                                Value::U64(traj.policy_version),
-                            ),
-                        ]));
-                    }
-                    // Batch-first write-back: one round-trip per batch.
-                    client2.put_batch(rows)?;
-                }
+                run_worker(
+                    &client2,
+                    engine.as_mut(),
+                    &mut sampler,
+                    &opts,
+                    Some(&*metrics),
+                    Some(&*timeline),
+                    &|| shutdown.is_triggered(),
+                )?;
                 Ok(())
             }));
             pool.spawn(format!("rollout-{r}"), body);

@@ -78,6 +78,25 @@ pub fn build_engines(cfg: &RlConfig, mock: bool) -> Result<(EngineSet, usize)> {
     Ok((engines, b))
 }
 
+/// Build one standalone policy engine — the `asyncflow rollout-worker`
+/// path, where the process owns a single engine and attaches to a remote
+/// session for everything else (prompts, weights).
+pub fn build_policy_engine(mock: bool) -> Result<Box<dyn PolicyEngine>> {
+    if mock {
+        return Ok(Box::new(MockEngine::new(
+            MOCK_BATCH,
+            MOCK_PROMPT,
+            MOCK_MAXLEN,
+        )));
+    }
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir)?;
+    let rt = XlaRuntime::cpu()?;
+    let initial = ParamSet::new(0, manifest.load_params()?);
+    let arts = XlaArtifacts::load(&rt, manifest)?;
+    Ok(Box::new(XlaPolicyEngine::new(arts, initial)))
+}
+
 /// Deterministic mock backend (no artifacts required).
 pub fn build_mock_engines(rollout_workers: usize) -> EngineSet {
     let mk_policy = || -> PolicyFactory {

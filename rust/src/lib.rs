@@ -15,6 +15,8 @@
 //! Module map (see DESIGN.md for the full inventory):
 //! * [`transfer_queue`] — §3 TransferQueue: control plane + data plane.
 //! * [`coordinator`] — §4 async workflow, delayed parameter update, GRPO.
+//! * [`rollout`] — elastic streaming rollout: lease-based dispatch,
+//!   chunked generation, exactly-once requeue of crashed workers' rows.
 //! * [`runtime`] — PJRT execution of the AOT artifacts; Engine adapters.
 //! * [`planner`] — §4.3 hybrid cost model + resource search.
 //! * [`simulator`] — discrete-event cluster simulator (Fig 10/11, Table 1).
@@ -30,6 +32,7 @@ pub mod exec;
 pub mod launcher;
 pub mod metrics;
 pub mod planner;
+pub mod rollout;
 pub mod runtime;
 pub mod service;
 pub mod simulator;

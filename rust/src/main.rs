@@ -6,10 +6,14 @@
 //! * `serve`    — expose a TransferQueue/ParamStore session as a TCP
 //!   JSON-lines service (paper §5: the service-oriented interface, made
 //!   a real process boundary).
+//! * `rollout-worker` — attach an elastic rollout worker to a served
+//!   session (`--connect host:port`): lease prompts, stream chunked
+//!   generations, refresh weights at chunk boundaries.
 //! * `simulate` — cluster-scale simulation (Fig. 10 / Table 1 modes).
 //! * `plan`     — resource planner (paper §4.3).
 //! * `gantt`    — simulated execution timeline (Fig. 11).
-//! * `info`     — artifact bundle + PJRT platform info.
+//! * `info`     — artifact bundle + PJRT platform info, or (with
+//!   `--connect`) a live service's queue/unit/worker statistics.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -18,10 +22,15 @@ use anyhow::{bail, Context, Result};
 
 use asyncflow::config::{ConfigDoc, RlConfig};
 use asyncflow::coordinator::Trainer;
-use asyncflow::launcher::build_engines;
+use asyncflow::launcher::{build_engines, build_policy_engine};
 use asyncflow::planner::{plan, CostModel, DeviceSpec, LlmSpec, PlanRequest};
-use asyncflow::runtime::{default_artifact_dir, Manifest, ParamSet, XlaRuntime};
-use asyncflow::service::{Session, SessionSpec, TcpJsonlServer};
+use asyncflow::rollout::{run_worker, WorkerOptions};
+use asyncflow::runtime::{
+    default_artifact_dir, Manifest, ParamSet, Sampler, XlaRuntime,
+};
+use asyncflow::service::{
+    ServiceClient, Session, SessionSpec, TcpJsonlServer,
+};
 use asyncflow::simulator::{simulate, Mode, SimConfig};
 
 fn main() {
@@ -76,10 +85,11 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd {
         "train" => cmd_train(&flags),
         "serve" => cmd_serve(&flags),
+        "rollout-worker" => cmd_rollout_worker(&flags),
         "simulate" => cmd_simulate(&flags),
         "plan" => cmd_plan(&flags),
         "gantt" => cmd_gantt(&flags),
-        "info" => cmd_info(),
+        "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -100,11 +110,14 @@ COMMANDS:
   serve     --port N --storage-units N
             --policy {fcfs|token_balanced|shortest_first} --uninit
             (JSON-lines service; clients attach with ServiceClient)
+  rollout-worker --connect HOST:PORT [--name ID] [--mock] [--task T]
+            [--chunk-tokens N] [--ttl-ms N] [--lease-rows N] [--seed N]
+            (elastic worker: lease prompts, stream chunked generations)
   simulate  --devices N --model {7b|32b} --mode {colocated|sequential|streaming|async|substep}
             --iterations N
   plan      --devices N --model {7b|32b}
   gantt     --devices N --model {7b|32b} --mode ... --width N
-  info
+  info      [--connect HOST:PORT]  (live queue/unit/worker stats)
 ";
 
 fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize)
@@ -203,6 +216,62 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `asyncflow rollout-worker`: join a served session's elastic rollout
+/// pool from another process/host. The worker leases prompt groups,
+/// decodes them in bounded chunks, streams partial generations back, and
+/// picks up published weights at chunk boundaries. If it crashes or
+/// stalls, the coordinator requeues its prompts after the lease TTL.
+fn cmd_rollout_worker(flags: &HashMap<String, String>) -> Result<()> {
+    let addr = flags
+        .get("connect")
+        .context("--connect HOST:PORT is required")?;
+    let mock = flags.contains_key("mock");
+    let name = flags
+        .get("name")
+        .cloned()
+        .unwrap_or_else(|| format!("worker-{}", std::process::id()));
+    let mut engine = build_policy_engine(mock)?;
+    let mut opts = WorkerOptions::new(name.clone());
+    if let Some(task) = flags.get("task") {
+        opts.task = task.clone();
+    }
+    opts.chunk_tokens =
+        get_usize(flags, "chunk-tokens", opts.chunk_tokens)?;
+    opts.ttl_ms = get_usize(flags, "ttl-ms", opts.ttl_ms as usize)? as u64;
+    opts.lease_rows =
+        get_usize(flags, "lease-rows", engine.batch_size())?;
+    let seed =
+        get_usize(flags, "seed", std::process::id() as usize)? as u64;
+    let mut sampler = Sampler::new(1.0, 32, seed);
+    let client = ServiceClient::connect(addr.as_str())?;
+    println!(
+        "[rollout-worker] {name}: attached to {addr} (backend={}, \
+         chunk={} tokens, ttl={}ms)",
+        if mock { "mock" } else { "xla-pjrt" },
+        opts.chunk_tokens,
+        opts.ttl_ms
+    );
+    let report = run_worker(
+        &client,
+        engine.as_mut(),
+        &mut sampler,
+        &opts,
+        None,
+        None,
+        &|| false,
+    )?;
+    println!(
+        "[rollout-worker] {name}: stream closed — {} samples, {} tokens, \
+         {} chunks, {} weight swaps, {} leases lost",
+        report.samples,
+        report.tokens,
+        report.chunks,
+        report.weight_swaps,
+        report.leases_lost
+    );
+    Ok(())
+}
+
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let devices = get_usize(flags, "devices", 256)?;
     let model = model_by_name(
@@ -270,7 +339,43 @@ fn cmd_gantt(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    // With --connect, report a live service instead of local artifacts:
+    // per-task queue depths, per-storage-unit occupancy/traffic (load
+    // imbalance is visible over the wire), and per-rollout-worker load.
+    if let Some(addr) = flags.get("connect") {
+        let client = ServiceClient::connect(addr.as_str())?;
+        let stats = client.stats()?;
+        println!(
+            "service {addr}: param_version={} resident_rows={} closed={}",
+            stats.param_version, stats.resident_rows, stats.closed
+        );
+        for t in &stats.tasks {
+            println!(
+                "  task {:<12} ready={:<6} consumed={:<8} policy={}",
+                t.name, t.ready, t.consumed, t.policy
+            );
+        }
+        for u in &stats.units {
+            println!(
+                "  unit {:<3} rows={:<6} written={}B read={}B",
+                u.unit, u.rows, u.bytes_written, u.bytes_read
+            );
+        }
+        for w in &client.worker_stats()? {
+            println!(
+                "  worker {:<12} leases={} in_flight={} completed={} \
+                 tokens={} requeued={}",
+                w.worker,
+                w.active_leases,
+                w.in_flight_rows,
+                w.completed_rows,
+                w.generated_tokens,
+                w.requeued_rows
+            );
+        }
+        return Ok(());
+    }
     let dir = default_artifact_dir();
     match Manifest::load(&dir) {
         Ok(m) => {

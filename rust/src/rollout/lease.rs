@@ -1,0 +1,468 @@
+//! Lease table: the bookkeeping heart of elastic rollout.
+//!
+//! Every batch of prompt rows handed to a worker travels under a *lease*
+//! — an id, an owner, a source task, an expiry, and the partial-row
+//! state (tokens/logps accumulated so far) for each row. Workers keep a
+//! lease alive by streaming chunks (`put_chunk` is an implicit
+//! heartbeat) or renewing explicitly; a lease that misses its deadline
+//! is swept, and its *incomplete* rows are requeued — exactly once,
+//! because sweep and append are mutually exclusive under the table lock
+//! and a swept lease id is dead forever (a zombie worker's late chunks
+//! are rejected, never committed).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::transfer_queue::GlobalIndex;
+
+use super::manager::ChunkRow;
+
+/// Opaque lease handle (nonzero; never reused within a session).
+pub type LeaseId = u64;
+
+/// Per-worker statistics (the `worker_stats` verb payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStat {
+    pub worker: String,
+    /// Live leases currently held.
+    pub active_leases: usize,
+    /// Leased rows not yet finished (the load-balancing signal).
+    pub in_flight_rows: usize,
+    /// Rows generated to completion and committed.
+    pub completed_rows: u64,
+    /// Response tokens streamed (finished or not).
+    pub generated_tokens: u64,
+    /// Rows taken from this worker's expired leases and requeued.
+    pub requeued_rows: u64,
+}
+
+/// Partial-row state: what a worker has streamed for one leased row.
+struct RowState {
+    tokens: Vec<i32>,
+    logps: Vec<f32>,
+    done: bool,
+}
+
+struct Lease {
+    worker: String,
+    /// Task whose controller the rows were popped from (and are
+    /// requeued to on expiry).
+    task: String,
+    expires_at: Instant,
+    ttl: Duration,
+    rows: HashMap<GlobalIndex, RowState>,
+}
+
+impl Lease {
+    fn in_flight(&self) -> usize {
+        self.rows.values().filter(|r| !r.done).count()
+    }
+}
+
+#[derive(Default)]
+struct WorkerInfo {
+    completed: u64,
+    tokens: u64,
+    requeued: u64,
+}
+
+#[derive(Default)]
+struct TableInner {
+    next_id: u64,
+    leases: HashMap<LeaseId, Lease>,
+    workers: HashMap<String, WorkerInfo>,
+}
+
+/// Thread-safe lease registry.
+#[derive(Default)]
+pub struct LeaseTable {
+    inner: Mutex<TableInner>,
+}
+
+impl LeaseTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Keep the per-worker stats registry bounded: once this many
+    /// distinct worker names have been seen, registering a new one
+    /// evicts the cumulative stats of workers with no live lease
+    /// (elastic pools churn through `worker-<pid>` names forever).
+    const MAX_WORKER_STATS: usize = 1024;
+
+    /// Grant a new lease on `indices` (popped from `task`) to `worker`.
+    pub fn grant(
+        &self,
+        worker: &str,
+        task: &str,
+        indices: &[GlobalIndex],
+        ttl: Duration,
+    ) -> LeaseId {
+        let mut g = self.inner.lock().unwrap();
+        g.next_id += 1;
+        let id = g.next_id;
+        if g.workers.len() >= Self::MAX_WORKER_STATS
+            && !g.workers.contains_key(worker)
+        {
+            let live: HashSet<String> =
+                g.leases.values().map(|l| l.worker.clone()).collect();
+            g.workers.retain(|name, _| live.contains(name));
+        }
+        g.workers.entry(worker.to_string()).or_default();
+        let rows = indices
+            .iter()
+            .map(|idx| {
+                (
+                    *idx,
+                    RowState {
+                        tokens: Vec::new(),
+                        logps: Vec::new(),
+                        done: false,
+                    },
+                )
+            })
+            .collect();
+        g.leases.insert(
+            id,
+            Lease {
+                worker: worker.to_string(),
+                task: task.to_string(),
+                expires_at: Instant::now() + ttl,
+                ttl,
+                rows,
+            },
+        );
+        id
+    }
+
+    /// Heartbeat: extend a live lease. `ttl = None` reuses the lease's
+    /// own TTL. Unknown ids (including swept ones) are an error — the
+    /// worker must drop its in-flight batch and re-lease.
+    pub fn renew(&self, id: LeaseId, ttl: Option<Duration>) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let Some(lease) = g.leases.get_mut(&id) else {
+            bail!("lease {id} is unknown or expired");
+        };
+        if let Some(t) = ttl {
+            lease.ttl = t;
+        }
+        lease.expires_at = Instant::now() + lease.ttl;
+        Ok(())
+    }
+
+    /// Atomically append a batch of chunks to a live lease — one lock
+    /// acquisition, so a sweep can never interleave mid-batch, and the
+    /// whole batch is validated before any row is touched: a rejected
+    /// request leaves no partial state (what the client observes as an
+    /// error matches what the server applied — nothing). Implicit
+    /// heartbeat. Returns `(index, tokens, logps)` for each row this
+    /// batch finished, in input order; a lease whose rows are all done
+    /// is retired automatically.
+    #[allow(clippy::type_complexity)]
+    pub fn append_rows(
+        &self,
+        id: LeaseId,
+        rows: &[ChunkRow],
+    ) -> Result<Vec<(GlobalIndex, Vec<i32>, Vec<f32>)>> {
+        let mut g = self.inner.lock().unwrap();
+        let Some(lease) = g.leases.get_mut(&id) else {
+            bail!("lease {id} is unknown or expired");
+        };
+        lease.expires_at = Instant::now() + lease.ttl;
+        // Validate everything first — no partial application.
+        let mut seen = HashSet::new();
+        for r in rows {
+            if r.tokens.len() != r.logps.len() {
+                bail!(
+                    "chunk for {}: {} tokens but {} logps",
+                    r.index,
+                    r.tokens.len(),
+                    r.logps.len()
+                );
+            }
+            if !seen.insert(r.index) {
+                bail!("row {} appears twice in one chunk batch", r.index);
+            }
+            let Some(row) = lease.rows.get(&r.index) else {
+                bail!("row {} is not part of lease {id}", r.index);
+            };
+            if row.done {
+                bail!("row {} already finished under lease {id}", r.index);
+            }
+            if r.finished && row.tokens.is_empty() && r.tokens.is_empty() {
+                bail!("row {} finished with zero tokens", r.index);
+            }
+        }
+        // Apply.
+        let worker = lease.worker.clone();
+        let mut out = Vec::new();
+        let mut tokens_total = 0u64;
+        let mut finished_total = 0u64;
+        for r in rows {
+            let row = lease.rows.get_mut(&r.index).unwrap();
+            row.tokens.extend_from_slice(&r.tokens);
+            row.logps.extend_from_slice(&r.logps);
+            tokens_total += r.tokens.len() as u64;
+            if r.finished {
+                row.done = true;
+                finished_total += 1;
+                out.push((
+                    r.index,
+                    std::mem::take(&mut row.tokens),
+                    std::mem::take(&mut row.logps),
+                ));
+            }
+        }
+        if lease.rows.values().all(|r| r.done) {
+            g.leases.remove(&id);
+        }
+        let info = g.workers.entry(worker).or_default();
+        info.tokens += tokens_total;
+        info.completed += finished_total;
+        Ok(out)
+    }
+
+    /// Single-row convenience over [`LeaseTable::append_rows`]. Returns
+    /// the accumulated `(tokens, logps)` when `finished` completes the
+    /// row, `None` on a partial append.
+    pub fn append(
+        &self,
+        id: LeaseId,
+        index: GlobalIndex,
+        tokens: &[i32],
+        logps: &[f32],
+        finished: bool,
+    ) -> Result<Option<(Vec<i32>, Vec<f32>)>> {
+        let row = ChunkRow {
+            index,
+            tokens: tokens.to_vec(),
+            logps: logps.to_vec(),
+            finished,
+        };
+        let mut out = self.append_rows(id, std::slice::from_ref(&row))?;
+        Ok(out.pop().map(|(_, t, l)| (t, l)))
+    }
+
+    /// Remove expired leases; returns `(source task, incomplete rows)`
+    /// per expired lease, for requeue onto the right controller.
+    /// Completed rows were already committed and are left alone.
+    pub fn sweep_expired(&self) -> Vec<(String, Vec<GlobalIndex>)> {
+        let now = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        let expired: Vec<LeaseId> = g
+            .leases
+            .iter()
+            .filter(|(_, l)| l.expires_at <= now)
+            .map(|(id, _)| *id)
+            .collect();
+        let mut requeue = Vec::new();
+        for id in expired {
+            let lease = g.leases.remove(&id).unwrap();
+            let mut lost: Vec<GlobalIndex> = lease
+                .rows
+                .iter()
+                .filter(|(_, r)| !r.done)
+                .map(|(idx, _)| *idx)
+                .collect();
+            lost.sort_unstable(); // deterministic (oldest row first)
+            let info = g.workers.entry(lease.worker).or_default();
+            info.requeued += lost.len() as u64;
+            if !lost.is_empty() {
+                requeue.push((lease.task, lost));
+            }
+        }
+        requeue
+    }
+
+    /// Leased rows not yet finished, across all live leases.
+    pub fn in_flight(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.leases.values().map(Lease::in_flight).sum()
+    }
+
+    /// Leased-and-unfinished rows popped from `task` (drain barrier for
+    /// one prompt stream).
+    pub fn in_flight_for(&self, task: &str) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.leases
+            .values()
+            .filter(|l| l.task == task)
+            .map(Lease::in_flight)
+            .sum()
+    }
+
+    /// Per-worker snapshot, sorted by worker name.
+    pub fn stats(&self) -> Vec<WorkerStat> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<WorkerStat> = g
+            .workers
+            .iter()
+            .map(|(name, info)| {
+                let (mut leases, mut in_flight) = (0usize, 0usize);
+                for l in g.leases.values() {
+                    if l.worker == *name {
+                        leases += 1;
+                        in_flight += l.in_flight();
+                    }
+                }
+                WorkerStat {
+                    worker: name.clone(),
+                    active_leases: leases,
+                    in_flight_rows: in_flight,
+                    completed_rows: info.completed,
+                    generated_tokens: info.tokens,
+                    requeued_rows: info.requeued,
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| a.worker.cmp(&b.worker));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx(n: u64) -> GlobalIndex {
+        GlobalIndex(n)
+    }
+
+    fn chunk(n: u64, tokens: Vec<i32>, finished: bool) -> ChunkRow {
+        let logps = tokens.iter().map(|&t| -(t as f32) / 10.0).collect();
+        ChunkRow { index: idx(n), tokens, logps, finished }
+    }
+
+    #[test]
+    fn append_accumulates_and_commits_on_finish() {
+        let t = LeaseTable::new();
+        let id =
+            t.grant("w", "rollout", &[idx(0), idx(1)], Duration::from_secs(5));
+        assert!(t
+            .append(id, idx(0), &[1, 2], &[-0.1, -0.2], false)
+            .unwrap()
+            .is_none());
+        let (tokens, logps) = t
+            .append(id, idx(0), &[3], &[-0.3], true)
+            .unwrap()
+            .unwrap();
+        assert_eq!(tokens, vec![1, 2, 3]);
+        assert_eq!(logps, vec![-0.1, -0.2, -0.3]);
+        // finished row cannot be appended to again
+        assert!(t.append(id, idx(0), &[9], &[-0.9], true).is_err());
+        assert_eq!(t.in_flight(), 1);
+        assert_eq!(t.in_flight_for("rollout"), 1);
+        assert_eq!(t.in_flight_for("other"), 0);
+        // finishing the last row retires the lease
+        t.append(id, idx(1), &[7], &[-0.7], true).unwrap().unwrap();
+        assert!(t.renew(id, None).is_err(), "lease retired");
+        let stats = t.stats();
+        assert_eq!(stats[0].completed_rows, 2);
+        assert_eq!(stats[0].generated_tokens, 4);
+        assert_eq!(stats[0].active_leases, 0);
+    }
+
+    #[test]
+    fn append_rows_is_all_or_nothing() {
+        let t = LeaseTable::new();
+        let id =
+            t.grant("w", "rollout", &[idx(0), idx(1)], Duration::from_secs(5));
+        // Second row is invalid (not part of the lease): the whole batch
+        // must be rejected with no partial state.
+        let bad = t.append_rows(
+            id,
+            &[chunk(0, vec![1, 2], true), chunk(9, vec![3], false)],
+        );
+        assert!(bad.is_err());
+        assert_eq!(t.in_flight(), 2, "row 0 not marked done");
+        // Duplicate index in one batch is rejected up front too.
+        assert!(t
+            .append_rows(
+                id,
+                &[chunk(0, vec![1], false), chunk(0, vec![2], true)],
+            )
+            .is_err());
+        // The valid batch then commits both rows atomically.
+        let done = t
+            .append_rows(
+                id,
+                &[chunk(0, vec![1, 2], true), chunk(1, vec![3], true)],
+            )
+            .unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].0, idx(0));
+        assert_eq!(done[0].1, vec![1, 2]);
+        assert_eq!(done[1].0, idx(1));
+        assert_eq!(t.in_flight(), 0);
+    }
+
+    #[test]
+    fn append_guards_bad_input() {
+        let t = LeaseTable::new();
+        let id = t.grant("w", "rollout", &[idx(0)], Duration::from_secs(5));
+        assert!(t.append(id, idx(0), &[1], &[], false).is_err(), "len");
+        assert!(t.append(id, idx(9), &[1], &[-0.1], false).is_err());
+        assert!(t.append(id + 1, idx(0), &[1], &[-0.1], false).is_err());
+        assert!(
+            t.append(id, idx(0), &[], &[], true).is_err(),
+            "empty finish"
+        );
+    }
+
+    #[test]
+    fn sweep_requeues_only_incomplete_rows_exactly_once() {
+        let t = LeaseTable::new();
+        let id = t.grant(
+            "w",
+            "rollout",
+            &[idx(3), idx(4), idx(5)],
+            Duration::from_millis(30),
+        );
+        t.append(id, idx(3), &[1], &[-0.1], true).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let lost = t.sweep_expired();
+        assert_eq!(
+            lost,
+            vec![("rollout".to_string(), vec![idx(4), idx(5)])],
+            "finished row not requeued; source task reported"
+        );
+        assert!(t.sweep_expired().is_empty(), "second sweep finds nothing");
+        // the zombie's late chunk is rejected, never committed
+        assert!(t.append(id, idx(4), &[2], &[-0.2], true).is_err());
+        let stats = t.stats();
+        assert_eq!(stats[0].requeued_rows, 2);
+        assert_eq!(stats[0].completed_rows, 1);
+    }
+
+    #[test]
+    fn heartbeats_keep_leases_alive() {
+        let t = LeaseTable::new();
+        let id = t.grant("w", "rollout", &[idx(0)], Duration::from_millis(50));
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(25));
+            t.renew(id, None).unwrap();
+            assert!(t.sweep_expired().is_empty());
+        }
+        // appends heartbeat too
+        std::thread::sleep(Duration::from_millis(25));
+        t.append(id, idx(0), &[1], &[-0.5], false).unwrap();
+        assert!(t.sweep_expired().is_empty());
+        assert_eq!(t.in_flight(), 1);
+    }
+
+    #[test]
+    fn stats_track_load_per_worker() {
+        let t = LeaseTable::new();
+        t.grant("a", "rollout", &[idx(0), idx(1)], Duration::from_secs(5));
+        t.grant("b", "rollout", &[idx(2)], Duration::from_secs(5));
+        let stats = t.stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].worker, "a");
+        assert_eq!(stats[0].in_flight_rows, 2);
+        assert_eq!(stats[1].worker, "b");
+        assert_eq!(stats[1].in_flight_rows, 1);
+    }
+}

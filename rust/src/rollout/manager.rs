@@ -1,0 +1,554 @@
+//! Coordinator-side rollout manager: leases prompt groups to an elastic
+//! pool of workers and streams their partial generations into the
+//! TransferQueue.
+//!
+//! The manager sits between the service dispatcher and the queue:
+//!
+//! ```text
+//!  lease_prompts ─▶ task controller (exactly-once pop, long-poll) ─▶ Lease
+//!  put_chunk     ─▶ LeaseTable partial-row state ─┬─(row finished)──▶
+//!                                                 └▶ Responses+OldLogp
+//!  (lease expires) ─▶ Controller::unconsume ─▶ next lease_prompts
+//! ```
+//!
+//! Load balancing is pull-based (the paper's §3.3 dynamic view): a worker
+//! asks for work exactly when it has capacity, so requeued rows land on
+//! the least-loaded peer — the one polling — without any push-side
+//! placement logic. Expiry is detected lazily: every verb sweeps the
+//! lease table first, so a crashed worker's rows reappear as soon as any
+//! peer asks for more work (bounded by the peers' long-poll timeout).
+//! Downstream stages that key on `Responses` (reference, reward) unlock
+//! per row the moment that row's final chunk lands, while the long tail
+//! of its group is still decoding — the streaming-overlap claim made
+//! concrete.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::transfer_queue::{
+    Batch, Column, GlobalIndex, RequestOutcome, TransferQueue, Value,
+};
+
+use super::lease::{LeaseId, LeaseTable, WorkerStat};
+
+/// One row's increment in a `put_chunk` request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkRow {
+    pub index: GlobalIndex,
+    /// Response tokens decoded since the last chunk (may be empty when
+    /// only flushing a `finished` marker).
+    pub tokens: Vec<i32>,
+    /// Sampling-time logp per token in `tokens`.
+    pub logps: Vec<f32>,
+    /// Final chunk for this row: commit the accumulated response.
+    pub finished: bool,
+}
+
+/// Parameters of a `lease_prompts` request (mirrors `GetBatchSpec`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeaseSpec {
+    /// Task whose controller feeds this worker (usually `"rollout"`).
+    pub task: String,
+    /// Lease owner (stats key; load-balancing group).
+    pub worker: String,
+    /// Max rows per lease.
+    pub count: usize,
+    /// Lease TTL in ms (must be >= 1).
+    pub ttl_ms: u64,
+    /// Server-side long-poll budget: `0` is a pure poll; otherwise the
+    /// request waits until at least one row is ready, the queue closes,
+    /// or the deadline passes.
+    pub timeout_ms: u64,
+    /// Columns to fetch for each leased row.
+    pub columns: Vec<Column>,
+}
+
+impl LeaseSpec {
+    /// A spec for `worker` with the standard defaults (task `rollout`,
+    /// 1s TTL, 50ms long-poll, prompts column).
+    pub fn new(worker: impl Into<String>, count: usize) -> Self {
+        LeaseSpec {
+            task: "rollout".into(),
+            worker: worker.into(),
+            count,
+            ttl_ms: 1000,
+            timeout_ms: 50,
+            columns: vec![Column::Prompts],
+        }
+    }
+}
+
+/// Reply to `lease_prompts`.
+#[derive(Debug, Clone)]
+pub struct LeaseReply {
+    /// `None` when no rows were available (retry unless `closed`).
+    pub lease: Option<LeaseId>,
+    /// The leased rows (empty iff `lease` is `None`).
+    pub batch: Batch,
+    /// The prompt stream is closed AND nothing from this task is in
+    /// flight anywhere — the worker can exit. While other workers still
+    /// hold leases this stays `false`: their rows may yet be requeued
+    /// to this worker.
+    pub closed: bool,
+}
+
+/// Column the finished policy version is committed under (same cell the
+/// in-process rollout stage historically wrote).
+fn version_column() -> Column {
+    Column::Custom("version".into())
+}
+
+/// Coordinator-side dispatcher for the elastic rollout pool.
+pub struct RolloutManager {
+    tq: Arc<TransferQueue>,
+    table: LeaseTable,
+}
+
+impl RolloutManager {
+    pub fn new(tq: Arc<TransferQueue>) -> Self {
+        RolloutManager { tq, table: LeaseTable::new() }
+    }
+
+    /// Requeue rows of expired leases back onto their source controller.
+    /// Called at the top of every verb, so detection needs no timer
+    /// thread — liveness comes from peers polling for work.
+    fn sweep(&self) {
+        for (task, rows) in self.table.sweep_expired() {
+            if let Some(ctrl) = self.tq.try_controller(&task) {
+                ctrl.unconsume(&rows);
+            }
+        }
+    }
+
+    /// Stable DP-group id for a worker (feeds the controller's
+    /// load-balancing policy and per-group stats).
+    fn group_of(worker: &str) -> usize {
+        worker
+            .bytes()
+            .fold(0usize, |a, b| a.wrapping_mul(31).wrapping_add(b as usize))
+            % 1024
+    }
+
+    /// `lease_prompts`: pop up to `spec.count` ready prompt rows under a
+    /// fresh lease, long-polling up to `spec.timeout_ms`. An empty reply
+    /// means poll again (or exit, when `closed`).
+    pub fn lease_prompts(&self, spec: &LeaseSpec) -> Result<LeaseReply> {
+        if spec.worker.is_empty() {
+            bail!("worker name must be non-empty");
+        }
+        if spec.count == 0 {
+            bail!("lease count must be >= 1");
+        }
+        if spec.ttl_ms == 0 {
+            // A zero TTL would expire before the first heartbeat and
+            // livelock the pool on requeue — reject loudly instead.
+            bail!("lease ttl_ms must be >= 1");
+        }
+        self.sweep();
+        let Some(ctrl) = self.tq.try_controller(&spec.task) else {
+            bail!("unknown task {:?}", spec.task);
+        };
+        let empty = || Batch {
+            indices: vec![],
+            rows: vec![],
+            columns: spec.columns.clone(),
+        };
+        let group = Self::group_of(&spec.worker);
+        // Prefer FULL leases — fixed-geometry engines pad partial
+        // batches to their whole width, so sub-batch leases waste
+        // decode — but never require them: a requeued remainder (a
+        // crashed worker's tail) can be smaller than any batch and
+        // would starve forever behind min = count (the feeder only
+        // tops the pool up between iterations). So: long-poll for a
+        // full batch, then take whatever is ready at the deadline.
+        let outcome = if spec.timeout_ms == 0 {
+            ctrl.poll(group, spec.count, 1)
+        } else {
+            let deadline =
+                Instant::now() + Duration::from_millis(spec.timeout_ms);
+            match ctrl.request_deadline(
+                group,
+                spec.count,
+                spec.count,
+                Some(deadline),
+            ) {
+                RequestOutcome::NotReady => ctrl.poll(group, spec.count, 1),
+                done => done,
+            }
+        };
+        match outcome {
+            RequestOutcome::Ready(meta) => {
+                let batch =
+                    match self.tq.try_fetch(&meta.indices, &spec.columns) {
+                        Ok(b) => b,
+                        Err(e) => {
+                            // Never strand rows on a failed fetch (e.g. a
+                            // column the rollout graph does not carry).
+                            ctrl.unconsume(&meta.indices);
+                            return Err(e);
+                        }
+                    };
+                let id = self.table.grant(
+                    &spec.worker,
+                    &spec.task,
+                    &meta.indices,
+                    Duration::from_millis(spec.ttl_ms),
+                );
+                Ok(LeaseReply { lease: Some(id), batch, closed: false })
+            }
+            RequestOutcome::NotReady => {
+                Ok(LeaseReply { lease: None, batch: empty(), closed: false })
+            }
+            RequestOutcome::Closed => Ok(LeaseReply {
+                lease: None,
+                batch: empty(),
+                closed: self.table.in_flight_for(&spec.task) == 0,
+            }),
+        }
+    }
+
+    /// `put_chunk`: stream partial generations. Rows flagged `finished`
+    /// are committed to the queue (Responses + OldLogp + policy version)
+    /// — at that instant downstream readiness fires for the row. The
+    /// batch is validated and applied atomically against the lease
+    /// table, so a rejected request leaves no partial lease state and
+    /// the client's accounting matches the server's.
+    pub fn put_chunk(
+        &self,
+        lease: LeaseId,
+        version: u64,
+        rows: &[ChunkRow],
+    ) -> Result<()> {
+        self.sweep();
+        // Lease liveness FIRST: a zombie whose rows were requeued and
+        // recommitted by an inheritor must get the (recoverable) "lease
+        // unknown" error, not be misdiagnosed by the cell pre-flight
+        // below. Doubles as the heartbeat.
+        self.table.renew(lease, None)?;
+        // Pre-flight: a finishing row commits three cells; if a foreign
+        // writer already squatted any of them, fail BEFORE the lease
+        // marks rows done — nothing is stranded, and the rows remain
+        // requeueable when the lease eventually expires.
+        let dp = self.tq.data_plane();
+        for r in rows.iter().filter(|r| r.finished) {
+            for col in
+                [Column::Responses, Column::OldLogp, version_column()]
+            {
+                if dp.has_cell(r.index, &col) {
+                    bail!(
+                        "row {} already has a {col} cell — refusing to \
+                         double-commit",
+                        r.index
+                    );
+                }
+            }
+        }
+        let committed = self.table.append_rows(lease, rows)?;
+        for (index, tokens, logps) in committed {
+            self.tq.put(index, Column::Responses, Value::I32s(tokens))?;
+            self.tq.put(index, Column::OldLogp, Value::F32s(logps))?;
+            self.tq.put(index, version_column(), Value::U64(version))?;
+        }
+        Ok(())
+    }
+
+    /// `renew_lease`: explicit heartbeat for chunks that take long to
+    /// produce. `ttl = None` keeps the lease's granted TTL.
+    pub fn renew_lease(
+        &self,
+        lease: LeaseId,
+        ttl: Option<Duration>,
+    ) -> Result<()> {
+        self.sweep();
+        self.table.renew(lease, ttl)
+    }
+
+    /// `worker_stats`: per-worker load/progress snapshot.
+    pub fn worker_stats(&self) -> Vec<WorkerStat> {
+        self.sweep();
+        self.table.stats()
+    }
+
+    /// Rows currently leased and unfinished (drain barrier).
+    pub fn in_flight(&self) -> usize {
+        self.table.in_flight()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transfer_queue::TaskSpec;
+
+    fn tq_with(prompts: usize) -> Arc<TransferQueue> {
+        let tq = TransferQueue::builder()
+            .storage_units(2)
+            .task(TaskSpec::new("rollout", vec![Column::Prompts]))
+            .task(TaskSpec::new("reward", vec![Column::Responses]))
+            .task(TaskSpec::new(
+                "train",
+                vec![Column::Responses, Column::OldLogp],
+            ))
+            .build();
+        for i in 0..prompts {
+            tq.put_row(vec![(Column::Prompts, Value::I32s(vec![i as i32; 4]))])
+                .unwrap();
+        }
+        tq
+    }
+
+    fn spec(worker: &str, ttl_ms: u64) -> LeaseSpec {
+        LeaseSpec {
+            ttl_ms,
+            timeout_ms: 0,
+            ..LeaseSpec::new(worker, 8)
+        }
+    }
+
+    #[test]
+    fn lease_then_stream_then_commit_unlocks_downstream() {
+        let tq = tq_with(2);
+        let m = RolloutManager::new(tq.clone());
+        let reply = m.lease_prompts(&spec("w0", 5000)).unwrap();
+        let lease = reply.lease.unwrap();
+        assert_eq!(reply.batch.len(), 2);
+        let a = reply.batch.indices[0];
+        let b = reply.batch.indices[1];
+
+        // Partial chunk: nothing visible downstream yet.
+        m.put_chunk(
+            lease,
+            3,
+            &[ChunkRow {
+                index: a,
+                tokens: vec![1, 2],
+                logps: vec![-0.1, -0.2],
+                finished: false,
+            }],
+        )
+        .unwrap();
+        assert_eq!(tq.controller("reward").ready_depth(), 0);
+
+        // Finishing row `a` commits it while `b` is still decoding.
+        m.put_chunk(
+            lease,
+            3,
+            &[ChunkRow {
+                index: a,
+                tokens: vec![3],
+                logps: vec![-0.3],
+                finished: true,
+            }],
+        )
+        .unwrap();
+        assert_eq!(tq.controller("reward").ready_depth(), 1);
+        assert_eq!(tq.controller("train").ready_depth(), 1);
+        assert_eq!(
+            tq.data_plane().get(a, &Column::Responses),
+            Some(Value::I32s(vec![1, 2, 3]))
+        );
+        assert_eq!(
+            tq.data_plane().get(a, &version_column()),
+            Some(Value::U64(3))
+        );
+        assert_eq!(m.in_flight(), 1);
+
+        m.put_chunk(
+            lease,
+            3,
+            &[ChunkRow {
+                index: b,
+                tokens: vec![9],
+                logps: vec![-0.9],
+                finished: true,
+            }],
+        )
+        .unwrap();
+        assert_eq!(m.in_flight(), 0);
+        assert_eq!(tq.controller("reward").ready_depth(), 2);
+    }
+
+    #[test]
+    fn lease_long_poll_waits_for_prompts() {
+        let tq = tq_with(0);
+        let m = Arc::new(RolloutManager::new(tq.clone()));
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || {
+            let s = LeaseSpec {
+                timeout_ms: 2000,
+                ..LeaseSpec::new("w", 1)
+            };
+            m2.lease_prompts(&s).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        tq.put_row(vec![(Column::Prompts, Value::I32s(vec![7; 4]))])
+            .unwrap();
+        let reply = h.join().unwrap();
+        assert!(reply.lease.is_some(), "long-poll woken by ingest");
+        assert_eq!(reply.batch.len(), 1);
+    }
+
+    #[test]
+    fn sub_batch_remainder_leases_after_the_full_batch_deadline() {
+        // 3 ready rows, count 8: the full-batch preference waits out the
+        // timeout, then the fallback takes what is there — a requeued
+        // remainder can never starve behind min = count.
+        let tq = tq_with(3);
+        let m = RolloutManager::new(tq);
+        let s = LeaseSpec {
+            timeout_ms: 30,
+            ..LeaseSpec::new("w", 8)
+        };
+        let reply = m.lease_prompts(&s).unwrap();
+        assert!(reply.lease.is_some());
+        assert_eq!(reply.batch.len(), 3);
+    }
+
+    #[test]
+    fn expired_lease_requeues_and_rejects_zombie() {
+        let tq = tq_with(2);
+        let m = RolloutManager::new(tq.clone());
+        let first = m.lease_prompts(&spec("dead", 30)).unwrap();
+        let dead_lease = first.lease.unwrap();
+        assert_eq!(first.batch.len(), 2);
+        // Pool exhausted while the lease is alive.
+        assert!(m.lease_prompts(&spec("live", 30)).unwrap().lease.is_none());
+
+        std::thread::sleep(Duration::from_millis(60));
+        // The next poll sweeps and re-serves the same rows.
+        let second = m.lease_prompts(&spec("live", 5000)).unwrap();
+        assert_eq!(second.batch.indices, first.batch.indices);
+
+        // Zombie chunks for the dead lease are rejected...
+        let zombie = m.put_chunk(
+            dead_lease,
+            1,
+            &[ChunkRow {
+                index: first.batch.indices[0],
+                tokens: vec![5],
+                logps: vec![-0.5],
+                finished: true,
+            }],
+        );
+        assert!(zombie.is_err());
+        // ...so the survivor's commit is the only one.
+        for idx in &second.batch.indices {
+            m.put_chunk(
+                second.lease.unwrap(),
+                1,
+                &[ChunkRow {
+                    index: *idx,
+                    tokens: vec![7],
+                    logps: vec![-0.7],
+                    finished: true,
+                }],
+            )
+            .unwrap();
+        }
+        assert_eq!(tq.controller("reward").ready_depth(), 2);
+        let stats = m.worker_stats();
+        let dead = stats.iter().find(|s| s.worker == "dead").unwrap();
+        assert_eq!(dead.requeued_rows, 2);
+        assert_eq!(dead.completed_rows, 0);
+        let live = stats.iter().find(|s| s.worker == "live").unwrap();
+        assert_eq!(live.completed_rows, 2);
+    }
+
+    #[test]
+    fn closed_reply_waits_for_in_flight_rows() {
+        let tq = tq_with(1);
+        let m = RolloutManager::new(tq.clone());
+        let reply = m.lease_prompts(&spec("a", 40)).unwrap();
+        assert_eq!(reply.batch.len(), 1);
+        tq.close();
+        // Queue closed but a's row is in flight: b must keep polling
+        // (it may inherit the row if a dies).
+        let b = m.lease_prompts(&spec("b", 40)).unwrap();
+        assert!(b.lease.is_none() && !b.closed);
+        std::thread::sleep(Duration::from_millis(80));
+        // a expired -> requeued -> b gets the row even post-close (drain).
+        let b2 = m.lease_prompts(&spec("b", 5000)).unwrap();
+        assert_eq!(b2.batch.len(), 1);
+        m.put_chunk(
+            b2.lease.unwrap(),
+            0,
+            &[ChunkRow {
+                index: b2.batch.indices[0],
+                tokens: vec![1],
+                logps: vec![-0.1],
+                finished: true,
+            }],
+        )
+        .unwrap();
+        // Everything committed: now the pool reports closed.
+        let done = m.lease_prompts(&spec("b", 40)).unwrap();
+        assert!(done.lease.is_none() && done.closed);
+    }
+
+    #[test]
+    fn lease_rejects_bad_requests() {
+        let m = RolloutManager::new(tq_with(1));
+        assert!(m.lease_prompts(&spec("", 100)).is_err(), "empty worker");
+        assert!(
+            m.lease_prompts(&LeaseSpec {
+                timeout_ms: 0,
+                ..LeaseSpec::new("w", 0)
+            })
+            .is_err(),
+            "zero count"
+        );
+        assert!(
+            m.lease_prompts(&spec("w", 0)).is_err(),
+            "zero ttl would livelock on requeue"
+        );
+        // Unknown task -> error, not panic.
+        assert!(m
+            .lease_prompts(&LeaseSpec {
+                task: "nope".into(),
+                timeout_ms: 0,
+                ..LeaseSpec::new("w", 8)
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn failed_fetch_does_not_strand_rows() {
+        let tq = tq_with(1);
+        let m = RolloutManager::new(tq.clone());
+        // Ask for a column the row does not carry: fetch fails...
+        let bad = LeaseSpec {
+            columns: vec![Column::Rewards],
+            timeout_ms: 0,
+            ..LeaseSpec::new("w", 8)
+        };
+        assert!(m.lease_prompts(&bad).is_err());
+        // ...but the row is immediately leasable again.
+        let ok = m.lease_prompts(&spec("w", 100)).unwrap();
+        assert_eq!(ok.batch.len(), 1);
+    }
+
+    #[test]
+    fn put_chunk_refuses_to_double_commit_squatted_cells() {
+        let tq = tq_with(1);
+        let m = RolloutManager::new(tq.clone());
+        let reply = m.lease_prompts(&spec("w", 5000)).unwrap();
+        let idx = reply.batch.indices[0];
+        // A foreign writer commits Responses behind the manager's back.
+        tq.put(idx, Column::Responses, Value::I32s(vec![42])).unwrap();
+        let res = m.put_chunk(
+            reply.lease.unwrap(),
+            0,
+            &[ChunkRow {
+                index: idx,
+                tokens: vec![1],
+                logps: vec![-0.1],
+                finished: true,
+            }],
+        );
+        assert!(res.is_err(), "pre-flight catches the squatted cell");
+        // The row was NOT marked done, so it stays requeueable.
+        assert_eq!(m.in_flight(), 1);
+    }
+}

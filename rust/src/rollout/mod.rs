@@ -1,0 +1,36 @@
+//! Elastic streaming rollout subsystem.
+//!
+//! A new layer between the service API and the engines: prompt groups
+//! are *leased* to an elastic pool of rollout workers (local threads or
+//! remote processes attached over TCP), generations stream back in
+//! bounded chunks, and crashed or straggling workers lose their leases —
+//! whose rows are requeued exactly once to whichever peer polls next.
+//!
+//! ```text
+//!            coordinator side                         worker side
+//!  ┌───────────────────────────────┐       ┌──────────────────────────┐
+//!  │ RolloutManager                │◀──────│ run_worker(ServiceClient)│
+//!  │  ├ LeaseTable (partial rows,  │ lease │  ├ PolicyEngine::        │
+//!  │  │  heartbeats, expiry)       │ chunk │  │   begin_generate/step │
+//!  │  └ rollout Controller         │ renew │  └ subscribe_weights at  │
+//!  │     (exactly-once pop/requeue)│ stats │     chunk boundaries     │
+//!  └──────────────┬────────────────┘       └──────────────────────────┘
+//!                 ▼ per-row commit (Responses + OldLogp + version)
+//!            TransferQueue  → downstream stages start on finished rows
+//!                             while the long tail is still decoding
+//! ```
+//!
+//! * [`manager`] — [`RolloutManager`]: serves the `lease_prompts` /
+//!   `put_chunk` / `renew_lease` / `worker_stats` verbs.
+//! * [`lease`] — [`LeaseTable`]: lease ids, TTLs, partial-row state,
+//!   exactly-once requeue on expiry.
+//! * [`worker`] — [`run_worker`]: the transport-agnostic worker loop
+//!   (used by the Trainer's local pool and `asyncflow rollout-worker`).
+
+pub mod lease;
+pub mod manager;
+pub mod worker;
+
+pub use lease::{LeaseId, LeaseTable, WorkerStat};
+pub use manager::{ChunkRow, LeaseReply, LeaseSpec, RolloutManager};
+pub use worker::{run_worker, WorkerOptions, WorkerReport};

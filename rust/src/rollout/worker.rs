@@ -1,0 +1,283 @@
+//! Client-side rollout worker: lease → chunked decode → streamed chunks.
+//!
+//! A worker drives any [`PolicyEngine`] through the incremental decode
+//! API and talks to the coordinator purely through [`ServiceClient`]
+//! verbs, so the same loop runs in-process (the Trainer's local pool),
+//! or in another process attached over TCP (`asyncflow rollout-worker
+//! --connect host:port`) — the elastic part of the subsystem. Weight
+//! refreshes happen at *chunk* boundaries via `subscribe_weights` (the
+//! delayed parameter update of §4.2.2 at sub-batch granularity), still
+//! bounded by the IterationGate's staleness control on the feeder side.
+//!
+//! Liveness vs crash detection: a background heartbeat thread renews the
+//! active lease every `ttl_ms / 3`, so the TTL bounds how fast a *dead*
+//! worker's rows are requeued — it does NOT bound how long a chunk (or
+//! the first buffered whole-sequence decode of a fixed-geometry backend)
+//! may take. The heartbeat dies with the worker, which is exactly the
+//! crash signal the coordinator keys on.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Timeline;
+use crate::metrics::Registry;
+use crate::runtime::{PolicyEngine, Sampler};
+use crate::service::ServiceClient;
+use crate::transfer_queue::Column;
+
+use super::manager::{ChunkRow, LeaseSpec};
+
+/// Tuning knobs for one rollout worker.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Worker name (lease owner; timeline row; stats key).
+    pub name: String,
+    /// Task whose controller feeds this worker.
+    pub task: String,
+    /// Rows requested per lease (clamped to the engine batch).
+    pub lease_rows: usize,
+    /// Decode chunk size: tokens per sequence per `step`.
+    pub chunk_tokens: usize,
+    /// Lease TTL — how long after the worker's last heartbeat the
+    /// coordinator requeues its in-flight rows. A background thread
+    /// heartbeats at `ttl_ms / 3`, so this bounds crash detection
+    /// latency, not chunk duration.
+    pub ttl_ms: u64,
+    /// Server-side long-poll budget per `lease_prompts` when the pool
+    /// is empty (0 = pure poll with a 1ms client-side backoff).
+    pub poll_ms: u64,
+    pub eos: i32,
+    pub pad: i32,
+}
+
+impl WorkerOptions {
+    pub fn new(name: impl Into<String>) -> Self {
+        WorkerOptions {
+            name: name.into(),
+            task: "rollout".into(),
+            lease_rows: usize::MAX, // clamped to the engine batch
+            chunk_tokens: 8,
+            ttl_ms: 1000,
+            poll_ms: 50,
+            eos: crate::data::EOS,
+            pad: crate::data::PAD,
+        }
+    }
+}
+
+/// What one worker did over its lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerReport {
+    /// Rows generated to completion and accepted by the coordinator.
+    pub samples: u64,
+    /// Response tokens accepted (across finished and partial rows).
+    pub tokens: u64,
+    /// Chunk round-trips made.
+    pub chunks: u64,
+    /// Weight snapshots swapped in at chunk boundaries.
+    pub weight_swaps: u64,
+    /// Leases lost to expiry mid-generation (work abandoned + requeued).
+    pub leases_lost: u64,
+}
+
+fn swap_weights(
+    client: &ServiceClient,
+    engine: &mut dyn PolicyEngine,
+    version: &mut u64,
+    metrics: Option<&Registry>,
+    report: &mut WorkerReport,
+) -> Result<()> {
+    if let Some(latest) = client.subscribe_weights(*version, 0)? {
+        *version = latest.version;
+        engine.set_params(latest);
+        report.weight_swaps += 1;
+        if let Some(m) = metrics {
+            m.inc("weight_swaps", 1);
+        }
+    }
+    Ok(())
+}
+
+/// Run the worker loop until the prompt stream closes or `abort` trips.
+///
+/// Losing a lease (expiry while a chunk was in flight) is *recoverable*:
+/// the coordinator has already requeued the rows, so the worker abandons
+/// the batch and leases afresh. Transport/service failures on the lease
+/// path propagate as errors.
+pub fn run_worker(
+    client: &ServiceClient,
+    engine: &mut dyn PolicyEngine,
+    sampler: &mut Sampler,
+    opts: &WorkerOptions,
+    metrics: Option<&Registry>,
+    timeline: Option<&Timeline>,
+    abort: &dyn Fn() -> bool,
+) -> Result<WorkerReport> {
+    // Heartbeat thread: renews whatever lease id is currently active
+    // (0 = none). Keeps arbitrarily long decodes alive; dies with us.
+    let hb_lease = Arc::new(AtomicU64::new(0));
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let heartbeat = {
+        let client = client.clone();
+        let lease = hb_lease.clone();
+        let stop = hb_stop.clone();
+        // Renew at ttl/3 (the documented cadence), but sleep in short
+        // slices so worker shutdown never waits a full tick.
+        let tick = Duration::from_millis((opts.ttl_ms / 3).max(1));
+        std::thread::spawn(move || loop {
+            let mut slept = Duration::ZERO;
+            while slept < tick {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let slice = (tick - slept).min(Duration::from_millis(20));
+                std::thread::sleep(slice);
+                slept += slice;
+            }
+            let id = lease.load(Ordering::SeqCst);
+            if id != 0 {
+                // A failed renew means the lease was swept; the main
+                // loop learns that from its next put_chunk.
+                let _ = client.renew_lease(id, 0);
+            }
+        })
+    };
+    let result = run_worker_inner(
+        client, engine, sampler, opts, metrics, timeline, abort, &hb_lease,
+    );
+    hb_stop.store(true, Ordering::SeqCst);
+    hb_lease.store(0, Ordering::SeqCst);
+    let _ = heartbeat.join();
+    result
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_worker_inner(
+    client: &ServiceClient,
+    engine: &mut dyn PolicyEngine,
+    sampler: &mut Sampler,
+    opts: &WorkerOptions,
+    metrics: Option<&Registry>,
+    timeline: Option<&Timeline>,
+    abort: &dyn Fn() -> bool,
+    hb_lease: &AtomicU64,
+) -> Result<WorkerReport> {
+    let mut report = WorkerReport::default();
+    let mut version = engine.params_version();
+    let chunk = opts.chunk_tokens.max(1);
+    let spec = LeaseSpec {
+        task: opts.task.clone(),
+        worker: opts.name.clone(),
+        count: opts.lease_rows.clamp(1, engine.batch_size()),
+        ttl_ms: opts.ttl_ms,
+        timeout_ms: opts.poll_ms,
+        columns: vec![Column::Prompts],
+    };
+    'outer: while !abort() {
+        // Delayed parameter update between leases...
+        swap_weights(client, engine, &mut version, metrics, &mut report)?;
+        let reply = client.lease_prompts(&spec)?;
+        let Some(lease) = reply.lease else {
+            if reply.closed {
+                break;
+            }
+            if spec.timeout_ms == 0 {
+                // Pure-poll mode: back off so the loop never spins hot.
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            continue;
+        };
+        hb_lease.store(lease, Ordering::SeqCst);
+        let batch = reply.batch;
+        let mut prompts = Vec::with_capacity(batch.len());
+        for row in &batch.rows {
+            let p = row
+                .first()
+                .and_then(|v| v.as_i32s())
+                .ok_or_else(|| anyhow!("leased row lacks a prompt"))?;
+            prompts.push(p.to_vec());
+        }
+        let t0 = timeline.map(|t| t.now());
+        let gen_version = engine.params_version();
+        engine.begin_generate(&prompts, sampler, opts.eos, opts.pad)?;
+        loop {
+            let step = engine.step(chunk)?;
+            let done = step.done;
+            let rows: Vec<ChunkRow> = step
+                .seqs
+                .into_iter()
+                .enumerate()
+                .filter(|(_, s)| !s.tokens.is_empty() || s.finished)
+                .map(|(i, s)| ChunkRow {
+                    index: batch.indices[i],
+                    tokens: s.tokens,
+                    logps: s.logps,
+                    finished: s.finished,
+                })
+                .collect();
+            let finished =
+                rows.iter().filter(|r| r.finished).count() as u64;
+            let tokens: u64 =
+                rows.iter().map(|r| r.tokens.len() as u64).sum();
+            let sent = if rows.is_empty() {
+                client.renew_lease(lease, opts.ttl_ms)
+            } else {
+                client.put_chunk(lease, gen_version, rows)
+            };
+            if let Err(e) = sent {
+                // Only a lost lease is recoverable: the coordinator
+                // requeued our rows to a peer, so abandon the batch —
+                // regeneration elsewhere is the exactly-once path.
+                // Anything else (transport death, a protocol violation
+                // like an externally squatted cell) must fail loudly,
+                // not silently retry-loop.
+                if !format!("{e:#}").contains("lease") {
+                    return Err(e);
+                }
+                report.leases_lost += 1;
+                if let Some(m) = metrics {
+                    m.inc("leases_lost", 1);
+                }
+                hb_lease.store(0, Ordering::SeqCst);
+                let _ = engine.finish_generate();
+                continue 'outer;
+            }
+            report.chunks += 1;
+            report.samples += finished;
+            report.tokens += tokens;
+            if let Some(m) = metrics {
+                if finished > 0 {
+                    m.inc("rollout_samples", finished);
+                }
+                if tokens > 0 {
+                    m.inc("rollout_tokens", tokens);
+                }
+            }
+            // ...and at every chunk boundary (never mid-chunk: engines
+            // keep in-flight sequences on their begin-time weights).
+            swap_weights(client, engine, &mut version, metrics, &mut report)?;
+            if done {
+                break;
+            }
+            if abort() {
+                // Killed mid-generation: leave the lease to expire; the
+                // coordinator will requeue whatever we did not finish.
+                break 'outer;
+            }
+        }
+        hb_lease.store(0, Ordering::SeqCst);
+        let _ = engine.finish_generate();
+        if let (Some(tl), Some(start)) = (timeline, t0) {
+            tl.record(&opts.name, "generate", start, tl.now());
+        }
+    }
+    // An abort mid-generation leaves buffered decode state; clear it so
+    // the engine is reusable if the caller restarts the loop.
+    if engine.gen_state().is_some() {
+        let _ = engine.finish_generate();
+    }
+    Ok(report)
+}

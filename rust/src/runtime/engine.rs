@@ -86,6 +86,80 @@ pub struct Trajectory {
     pub policy_version: u64,
 }
 
+/// One sequence's increment from an incremental decode step.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SeqChunk {
+    /// Response tokens decoded this step (empty once the sequence has
+    /// finished in an earlier step).
+    pub tokens: Vec<i32>,
+    /// Sampling-time logprob of each token in `tokens` (behaviour
+    /// policy — what the rollout stage stores as `old_logp`).
+    pub logps: Vec<f32>,
+    /// True exactly once: on the step where the sequence reaches EOS or
+    /// its budget.
+    pub finished: bool,
+}
+
+/// Outcome of one [`PolicyEngine::step`] over the in-flight batch.
+#[derive(Debug, Clone)]
+pub struct GenStep {
+    /// One entry per prompt passed to `begin_generate`, in order.
+    pub seqs: Vec<SeqChunk>,
+    /// Every sequence has finished; `finish_generate` may be called.
+    pub done: bool,
+}
+
+/// Buffered state between `begin_generate` and `finish_generate`.
+///
+/// Engines that cannot decode truly incrementally (the fused-rollout XLA
+/// artifact generates whole sequences on device) buffer one full batch
+/// here and dole it out in bounded chunks; engines that can (MockEngine)
+/// may fill it lazily. Opaque outside this module — external
+/// [`PolicyEngine`] impls only need to hold an `Option<GenState>` field.
+pub struct GenState {
+    trajs: Vec<Trajectory>,
+    /// Per-sequence response-region sampling logps (`len == response_len`).
+    logps: Vec<Vec<f32>>,
+    emitted: Vec<usize>,
+    prompt_len: usize,
+    /// Leading prompts that are real; the rest are padding replicas.
+    live: usize,
+}
+
+/// Emit up to `n_tokens` more response tokens per live sequence from a
+/// buffered [`GenState`] — shared by the default trait impl and engine
+/// overrides that only customize how the buffer is produced.
+fn step_buffered(
+    state: &mut Option<GenState>,
+    n_tokens: usize,
+) -> Result<GenStep> {
+    let st = state
+        .as_mut()
+        .ok_or_else(|| anyhow::anyhow!("step called before begin_generate"))?;
+    let n = n_tokens.max(1);
+    let mut seqs = Vec::with_capacity(st.live);
+    let mut done = true;
+    for i in 0..st.live {
+        let traj = &st.trajs[i];
+        let already = st.emitted[i];
+        let remaining = traj.response_len - already;
+        let take = remaining.min(n);
+        let start = st.prompt_len + already;
+        let tokens = traj.ids[start..start + take].to_vec();
+        let logps = st.logps[i][already..already + take].to_vec();
+        st.emitted[i] = already + take;
+        if st.emitted[i] < traj.response_len {
+            done = false;
+        }
+        seqs.push(SeqChunk {
+            tokens,
+            logps,
+            finished: remaining > 0 && take == remaining,
+        });
+    }
+    Ok(GenStep { seqs, done })
+}
+
 /// A training micro-batch in manifest geometry ([B, T] etc.).
 #[derive(Debug, Clone)]
 pub struct TrainBatch {
@@ -126,8 +200,84 @@ pub trait PolicyEngine {
     /// Per-token log-probs for full trajectories ([B][T] -> [B][T-1]).
     fn logprobs(&mut self, ids: &[Vec<i32>]) -> Result<Vec<Vec<f32>>>;
     /// Swap in a new parameter snapshot (WeightReceiver H2D load).
+    /// In-flight incremental generations keep their begin-time weights
+    /// (the paper's delayed parameter update, at chunk granularity).
     fn set_params(&mut self, params: ParamSet);
     fn params_version(&self) -> u64;
+
+    // ---- incremental decode (streaming rollout) ---------------------------
+
+    /// Storage slot for the in-flight incremental generation. Engines add
+    /// an `Option<GenState>` field and return it here; everything else is
+    /// provided.
+    fn gen_state(&mut self) -> &mut Option<GenState>;
+
+    /// Start an incremental generation over 1..=`batch_size` prompts.
+    /// Fewer prompts than the engine batch are padded internally with
+    /// replicas of the last prompt (fixed-geometry backends); only the
+    /// real sequences are reported by `step`/`finish_generate`.
+    ///
+    /// The default implementation buffers one whole-sequence `generate`
+    /// (plus its sampling logps) and serves it in chunks — correct for
+    /// any backend; engines with true incremental decode override it.
+    fn begin_generate(
+        &mut self,
+        prompts: &[Vec<i32>],
+        sampler: &mut Sampler,
+        eos: i32,
+        pad: i32,
+    ) -> Result<()> {
+        let b = self.batch_size();
+        let p_len = self.prompt_len();
+        if prompts.is_empty() || prompts.len() > b {
+            bail!(
+                "begin_generate wants 1..={b} prompts, got {}",
+                prompts.len()
+            );
+        }
+        if self.gen_state().is_some() {
+            bail!("begin_generate while a generation is in flight");
+        }
+        let live = prompts.len();
+        let mut padded = prompts.to_vec();
+        while padded.len() < b {
+            padded.push(prompts[live - 1].clone());
+        }
+        let trajs = self.generate(&padded, sampler, eos, pad)?;
+        let ids: Vec<Vec<i32>> =
+            trajs.iter().map(|t| t.ids.clone()).collect();
+        // Behaviour-policy logps: for the XLA engine this hits the fused
+        // rollout's in-graph capture, so chunking adds no forward pass.
+        let grids = self.logprobs(&ids)?;
+        let logps = trajs
+            .iter()
+            .zip(&grids)
+            .map(|(t, g)| {
+                g[p_len - 1..p_len - 1 + t.response_len].to_vec()
+            })
+            .collect();
+        *self.gen_state() = Some(GenState {
+            emitted: vec![0; trajs.len()],
+            logps,
+            trajs,
+            prompt_len: p_len,
+            live,
+        });
+        Ok(())
+    }
+
+    /// Decode up to `n_tokens` more response tokens per sequence.
+    fn step(&mut self, n_tokens: usize) -> Result<GenStep> {
+        step_buffered(self.gen_state(), n_tokens)
+    }
+
+    /// Close the in-flight generation and return the (real) trajectories.
+    fn finish_generate(&mut self) -> Result<Vec<Trajectory>> {
+        let st = self.gen_state().take().ok_or_else(|| {
+            anyhow::anyhow!("finish_generate without begin_generate")
+        })?;
+        Ok(st.trajs.into_iter().take(st.live).collect())
+    }
 }
 
 /// Training-side adapter: parameter updates + weight export.
@@ -230,11 +380,12 @@ pub struct XlaPolicyEngine {
     arts: XlaArtifacts,
     params: ParamSet,
     last_rollout: Option<RolloutLogps>,
+    gen: Option<GenState>,
 }
 
 impl XlaPolicyEngine {
     pub fn new(arts: XlaArtifacts, params: ParamSet) -> Self {
-        XlaPolicyEngine { arts, params, last_rollout: None }
+        XlaPolicyEngine { arts, params, last_rollout: None, gen: None }
     }
 }
 
@@ -347,12 +498,17 @@ impl PolicyEngine for XlaPolicyEngine {
     fn set_params(&mut self, params: ParamSet) {
         self.params = params;
         // Sampling-time logps are only valid under the weights that
-        // produced them.
+        // produced them. The buffered incremental generation (if any)
+        // stays valid: it was fully decoded under its begin-time weights.
         self.last_rollout = None;
     }
 
     fn params_version(&self) -> u64 {
         self.params.version
+    }
+
+    fn gen_state(&mut self) -> &mut Option<GenState> {
+        &mut self.gen
     }
 }
 
@@ -521,6 +677,13 @@ pub struct MockEngine {
     /// Synthetic per-call latency knob for scheduling tests (no sleeping
     /// unless nonzero).
     pub generate_delay: std::time::Duration,
+    /// Synthetic per-decoded-token latency. `generate` sleeps
+    /// `token_delay × max(response_len)` (a batch decodes in lockstep);
+    /// the incremental path sleeps per chunk — so whole-sequence and
+    /// chunked decodes of the same batch cost the same wall time, and
+    /// streaming gains come purely from overlap.
+    pub token_delay: std::time::Duration,
+    gen: Option<GenState>,
 }
 
 impl MockEngine {
@@ -534,6 +697,8 @@ impl MockEngine {
             train_version: 0,
             step: 0,
             generate_delay: std::time::Duration::ZERO,
+            token_delay: std::time::Duration::ZERO,
+            gen: None,
         }
     }
 
@@ -544,6 +709,37 @@ impl MockEngine {
             h = h.wrapping_mul(0x100000001b3);
         }
         h
+    }
+
+    /// Deterministic trajectory content (shared by the whole-sequence and
+    /// incremental paths, so both decode modes agree token-for-token).
+    fn synth(&self, prompt: &[i32], eos: i32, pad: i32) -> Trajectory {
+        let budget = self.max_len - self.prompt_len;
+        let h = self.hash(prompt, self.params_version);
+        let resp = 1 + (h % budget as u64) as usize;
+        let mut ids = prompt.to_vec();
+        for j in 0..budget {
+            if j + 1 < resp {
+                ids.push((self.hash(prompt, j as u64) % 200) as i32 + 1);
+            } else if j + 1 == resp {
+                ids.push(eos);
+            } else {
+                ids.push(pad);
+            }
+        }
+        Trajectory {
+            ids,
+            response_len: resp,
+            policy_version: self.params_version,
+        }
+    }
+
+    /// Deterministic sampling-time logp of response token `j` — depends
+    /// only on the prompt and position, so it is computable the moment
+    /// the token is decoded (unlike `logprobs`, which scores full rows).
+    fn synth_logp(&self, prompt: &[i32], j: usize) -> f32 {
+        let h = self.hash(prompt, 0x5EED_0000 ^ j as u64);
+        -0.5 - (h % 1000) as f32 / 500.0
     }
 }
 
@@ -573,29 +769,17 @@ impl PolicyEngine for MockEngine {
         if prompts.len() != self.batch {
             bail!("mock: want {} prompts, got {}", self.batch, prompts.len());
         }
-        let budget = self.max_len - self.prompt_len;
-        Ok(prompts
+        let trajs: Vec<Trajectory> = prompts
             .iter()
-            .map(|prompt| {
-                let h = self.hash(prompt, self.params_version);
-                let resp = 1 + (h % budget as u64) as usize;
-                let mut ids = prompt.clone();
-                for j in 0..budget {
-                    if j + 1 < resp {
-                        ids.push((self.hash(prompt, j as u64) % 200) as i32 + 1);
-                    } else if j + 1 == resp {
-                        ids.push(eos);
-                    } else {
-                        ids.push(pad);
-                    }
-                }
-                Trajectory {
-                    ids,
-                    response_len: resp,
-                    policy_version: self.params_version,
-                }
-            })
-            .collect())
+            .map(|prompt| self.synth(prompt, eos, pad))
+            .collect();
+        if !self.token_delay.is_zero() {
+            // Lockstep batch decode: cost is set by the longest response.
+            let steps =
+                trajs.iter().map(|t| t.response_len).max().unwrap_or(0);
+            std::thread::sleep(self.token_delay * steps as u32);
+        }
+        Ok(trajs)
     }
 
     fn logprobs(&mut self, ids: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
@@ -618,6 +802,69 @@ impl PolicyEngine for MockEngine {
 
     fn params_version(&self) -> u64 {
         self.params_version
+    }
+
+    fn gen_state(&mut self) -> &mut Option<GenState> {
+        &mut self.gen
+    }
+
+    /// True incremental decode: the hash-derived stream is computable
+    /// token-by-token, so no whole-sequence buffering delay — chunked
+    /// callers see their first tokens after one `step`, not after the
+    /// full batch decode. Accepts partial batches (elastic leases).
+    fn begin_generate(
+        &mut self,
+        prompts: &[Vec<i32>],
+        _sampler: &mut Sampler,
+        eos: i32,
+        pad: i32,
+    ) -> Result<()> {
+        if prompts.is_empty() || prompts.len() > self.batch {
+            bail!(
+                "mock: begin_generate wants 1..={} prompts, got {}",
+                self.batch,
+                prompts.len()
+            );
+        }
+        if self.gen.is_some() {
+            bail!("begin_generate while a generation is in flight");
+        }
+        let trajs: Vec<Trajectory> = prompts
+            .iter()
+            .map(|prompt| self.synth(prompt, eos, pad))
+            .collect();
+        let logps = prompts
+            .iter()
+            .zip(&trajs)
+            .map(|(prompt, t)| {
+                (0..t.response_len)
+                    .map(|j| self.synth_logp(prompt, j))
+                    .collect()
+            })
+            .collect();
+        let live = trajs.len();
+        self.gen = Some(GenState {
+            emitted: vec![0; live],
+            logps,
+            trajs,
+            prompt_len: self.prompt_len,
+            live,
+        });
+        Ok(())
+    }
+
+    fn step(&mut self, n_tokens: usize) -> Result<GenStep> {
+        let delay = self.token_delay;
+        let step = step_buffered(&mut self.gen, n_tokens)?;
+        if !delay.is_zero() {
+            // Lockstep decode cost for this chunk.
+            let decoded =
+                step.seqs.iter().map(|s| s.tokens.len()).max().unwrap_or(0);
+            if decoded > 0 {
+                std::thread::sleep(delay * decoded as u32);
+            }
+        }
+        Ok(step)
     }
 }
 
@@ -694,6 +941,75 @@ mod tests {
         let mut e = MockEngine::new(4, 8, 24);
         let mut s = Sampler::new(1.0, 8, 0);
         assert!(e.generate(&prompts(3, 8), &mut s, 10, 0).is_err());
+    }
+
+    #[test]
+    fn chunked_decode_matches_whole_sequence() {
+        let mut whole = MockEngine::new(4, 8, 24);
+        let mut s = Sampler::new(1.0, 8, 0);
+        let expect = whole.generate(&prompts(4, 8), &mut s, 10, 0).unwrap();
+
+        let mut chunked = MockEngine::new(4, 8, 24);
+        chunked.begin_generate(&prompts(4, 8), &mut s, 10, 0).unwrap();
+        let mut got: Vec<Vec<i32>> = vec![Vec::new(); 4];
+        let mut finishes = vec![0usize; 4];
+        loop {
+            let step = chunked.step(3).unwrap();
+            assert_eq!(step.seqs.len(), 4);
+            for (i, sc) in step.seqs.iter().enumerate() {
+                assert_eq!(sc.tokens.len(), sc.logps.len());
+                got[i].extend_from_slice(&sc.tokens);
+                if sc.finished {
+                    finishes[i] += 1;
+                }
+            }
+            if step.done {
+                break;
+            }
+        }
+        let trajs = chunked.finish_generate().unwrap();
+        assert_eq!(trajs, expect, "chunked == whole-sequence content");
+        for (i, t) in expect.iter().enumerate() {
+            assert_eq!(finishes[i], 1, "finished reported exactly once");
+            assert_eq!(
+                got[i],
+                t.ids[8..8 + t.response_len].to_vec(),
+                "streamed tokens reassemble the response"
+            );
+        }
+        // a drained-but-unfinished engine still steps (empty, done)
+        chunked.begin_generate(&prompts(4, 8), &mut s, 10, 0).unwrap();
+        while !chunked.step(64).unwrap().done {}
+        let extra = chunked.step(4).unwrap();
+        assert!(extra.done);
+        assert!(extra.seqs.iter().all(|s| s.tokens.is_empty()));
+        assert!(extra.seqs.iter().all(|s| !s.finished));
+    }
+
+    #[test]
+    fn chunked_decode_accepts_partial_batches() {
+        let mut e = MockEngine::new(4, 8, 24);
+        let mut s = Sampler::new(1.0, 8, 0);
+        e.begin_generate(&prompts(2, 8), &mut s, 10, 0).unwrap();
+        let step = e.step(64).unwrap();
+        assert_eq!(step.seqs.len(), 2, "only live sequences reported");
+        assert!(step.done);
+        assert_eq!(e.finish_generate().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn chunked_decode_guards_misuse() {
+        let mut e = MockEngine::new(2, 4, 8);
+        let mut s = Sampler::new(1.0, 8, 0);
+        assert!(e.step(4).is_err(), "step before begin");
+        assert!(e.finish_generate().is_err(), "finish before begin");
+        e.begin_generate(&prompts(2, 4), &mut s, 10, 0).unwrap();
+        assert!(
+            e.begin_generate(&prompts(2, 4), &mut s, 10, 0).is_err(),
+            "double begin"
+        );
+        e.finish_generate().unwrap();
+        assert!(e.step(4).is_err(), "state cleared by finish");
     }
 
     #[test]

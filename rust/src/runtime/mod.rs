@@ -15,7 +15,8 @@ pub mod tensor;
 pub use artifacts::{default_artifact_dir, Manifest};
 pub use client::{CompiledArtifact, XlaRuntime};
 pub use engine::{
-    MockEngine, ParamSet, PolicyEngine, Sampler, TrainBatch, TrainEngine,
-    TrainMetrics, Trajectory, XlaArtifacts, XlaPolicyEngine, XlaTrainEngine,
+    GenState, GenStep, MockEngine, ParamSet, PolicyEngine, Sampler,
+    SeqChunk, TrainBatch, TrainEngine, TrainMetrics, Trajectory,
+    XlaArtifacts, XlaPolicyEngine, XlaTrainEngine,
 };
 pub use tensor::{DType, HostTensor, TensorSpec};

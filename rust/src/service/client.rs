@@ -9,6 +9,7 @@ use std::net::ToSocketAddrs;
 
 use anyhow::{bail, Result};
 
+use crate::rollout::{ChunkRow, LeaseId, LeaseReply, LeaseSpec, WorkerStat};
 use crate::runtime::ParamSet;
 use crate::transfer_queue::{Batch, Column, GlobalIndex, Value};
 
@@ -183,6 +184,44 @@ impl ServiceClient {
     /// `weight_sync_notify`: publish a new weight snapshot.
     pub fn weight_sync_notify(&self, params: ParamSet) -> Result<()> {
         self.call_ok(ServiceRequest::WeightSync { params })
+    }
+
+    /// `lease_prompts`: lease ready prompt rows for an elastic rollout
+    /// worker (server-side long-poll up to `spec.timeout_ms`). A reply
+    /// without a lease means "nothing available right now" — poll
+    /// again, unless `closed` says the stream is drained and nothing is
+    /// in flight anywhere.
+    pub fn lease_prompts(&self, spec: &LeaseSpec) -> Result<LeaseReply> {
+        match self.call(ServiceRequest::LeasePrompts(spec.clone()))? {
+            ServiceResponse::Lease(reply) => Ok(reply),
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    /// `put_chunk`: stream partial generations for leased rows (implicit
+    /// heartbeat). Rows flagged `finished` commit to the queue.
+    pub fn put_chunk(
+        &self,
+        lease: LeaseId,
+        version: u64,
+        rows: Vec<ChunkRow>,
+    ) -> Result<()> {
+        self.call_ok(ServiceRequest::PutChunk { lease, version, rows })
+    }
+
+    /// `renew_lease`: explicit heartbeat. `ttl_ms = 0` keeps the TTL
+    /// granted at lease time. An error means the lease expired — drop
+    /// the in-flight batch and lease afresh.
+    pub fn renew_lease(&self, lease: LeaseId, ttl_ms: u64) -> Result<()> {
+        self.call_ok(ServiceRequest::RenewLease { lease, ttl_ms })
+    }
+
+    /// `worker_stats`: per-rollout-worker load/progress snapshot.
+    pub fn worker_stats(&self) -> Result<Vec<WorkerStat>> {
+        match self.call(ServiceRequest::WorkerStats)? {
+            ServiceResponse::Workers(ws) => Ok(ws),
+            _ => bail!("service returned an unexpected response kind"),
+        }
     }
 
     /// Queue/param introspection.

@@ -13,7 +13,10 @@
 //!   (`init_engines`, `put_prompts_data`, `put_experience_data`,
 //!   `get_experience_data`, `weight_sync_notify`) plus `register_task`,
 //!   batch-first `put_batch`/`get_batch` with deadline semantics,
-//!   `subscribe_weights`, `stats`, `evict`, and `shutdown`.
+//!   `subscribe_weights`, the elastic rollout verbs (`lease_prompts`,
+//!   `put_chunk`, `renew_lease`, `worker_stats` — served by
+//!   [`crate::rollout::RolloutManager`]), `stats`, `evict`, and
+//!   `shutdown`.
 //! * [`transport`] — [`transport::InProcTransport`] (zero-copy fast
 //!   path) and [`transport::TcpJsonlTransport`] /
 //!   [`transport::TcpJsonlServer`] (JSON-lines over TCP — the
@@ -41,13 +44,16 @@ use anyhow::{bail, Result};
 pub use client::ServiceClient;
 pub use protocol::{
     GetBatchReply, GetBatchSpec, PutRow, ServiceRequest, ServiceResponse,
-    ServiceStats, SpecDecl, TaskDecl, TaskStats,
+    ServiceStats, SpecDecl, TaskDecl, TaskStats, UnitStats,
 };
 pub use transport::{
     InProcTransport, TcpJsonlServer, TcpJsonlTransport, Transport,
 };
 
 use crate::coordinator::ParamStore;
+use crate::rollout::{
+    ChunkRow, LeaseReply, LeaseSpec, RolloutManager, WorkerStat,
+};
 use crate::runtime::ParamSet;
 use crate::transfer_queue::{
     policy_by_name, Column, GlobalIndex, RequestOutcome, TaskSpec,
@@ -109,11 +115,13 @@ impl SessionSpec {
     }
 }
 
-/// The initialized guts of a session (data fabric + weight store).
+/// The initialized guts of a session (data fabric + weight store +
+/// elastic rollout dispatcher).
 #[derive(Clone)]
 struct SessionState {
     tq: Arc<TransferQueue>,
     store: Arc<ParamStore>,
+    rollout: Arc<RolloutManager>,
 }
 
 /// A live post-training service session: the server-side dispatcher.
@@ -171,8 +179,10 @@ impl Session {
         if guard.is_some() {
             bail!("session already initialized");
         }
+        let tq = builder.build();
         *guard = Some(SessionState {
-            tq: builder.build(),
+            rollout: Arc::new(RolloutManager::new(tq.clone())),
+            tq,
             store: ParamStore::new(initial_params),
         });
         Ok(())
@@ -362,6 +372,43 @@ impl Session {
         Ok((latest.version > min_version).then_some(latest))
     }
 
+    /// The elastic rollout dispatcher behind the lease verbs.
+    pub fn rollout_manager(&self) -> Result<Arc<RolloutManager>> {
+        Ok(self.state()?.rollout)
+    }
+
+    /// `lease_prompts`: pop ready prompt rows for an elastic rollout
+    /// worker under a heartbeat lease (long-polls up to
+    /// `spec.timeout_ms`).
+    pub fn lease_prompts(&self, spec: &LeaseSpec) -> Result<LeaseReply> {
+        self.state()?.rollout.lease_prompts(spec)
+    }
+
+    /// `put_chunk`: stream partial generations; finished rows commit.
+    pub fn put_chunk(
+        &self,
+        lease: u64,
+        version: u64,
+        rows: &[ChunkRow],
+    ) -> Result<()> {
+        self.state()?.rollout.put_chunk(lease, version, rows)
+    }
+
+    /// `renew_lease`: explicit heartbeat (`ttl_ms = 0` keeps the TTL).
+    pub fn renew_lease(&self, lease: u64, ttl_ms: u64) -> Result<()> {
+        let ttl = if ttl_ms > 0 {
+            Some(Duration::from_millis(ttl_ms))
+        } else {
+            None
+        };
+        self.state()?.rollout.renew_lease(lease, ttl)
+    }
+
+    /// `worker_stats`: per-rollout-worker load/progress snapshot.
+    pub fn worker_stats(&self) -> Result<Vec<WorkerStat>> {
+        Ok(self.state()?.rollout.worker_stats())
+    }
+
     /// Queue/param introspection snapshot.
     pub fn stats(&self) -> Result<ServiceStats> {
         let st = self.state()?;
@@ -376,8 +423,21 @@ impl Session {
                 policy: c.policy_name().to_string(),
             })
             .collect();
+        let units = st
+            .tq
+            .data_plane()
+            .units()
+            .iter()
+            .map(|u| UnitStats {
+                unit: u.unit_id,
+                rows: u.row_count(),
+                bytes_written: u.bytes_written(),
+                bytes_read: u.bytes_read(),
+            })
+            .collect();
         Ok(ServiceStats {
             tasks,
+            units,
             resident_rows: st.tq.resident_rows(),
             param_version: st.store.version(),
             closed: st.tq.is_closed(),
@@ -445,6 +505,20 @@ impl Session {
             ServiceRequest::WeightSync { params } => {
                 self.weight_sync_notify(params)?;
                 ServiceResponse::Ok
+            }
+            ServiceRequest::LeasePrompts(spec) => {
+                ServiceResponse::Lease(self.lease_prompts(&spec)?)
+            }
+            ServiceRequest::PutChunk { lease, version, rows } => {
+                self.put_chunk(lease, version, &rows)?;
+                ServiceResponse::Ok
+            }
+            ServiceRequest::RenewLease { lease, ttl_ms } => {
+                self.renew_lease(lease, ttl_ms)?;
+                ServiceResponse::Ok
+            }
+            ServiceRequest::WorkerStats => {
+                ServiceResponse::Workers(self.worker_stats()?)
             }
             ServiceRequest::Stats => {
                 ServiceResponse::Stats(self.stats()?)
@@ -691,6 +765,68 @@ mod tests {
             4,
         );
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn lease_verbs_flow_through_the_session() {
+        let s = session();
+        let idx = s.put_prompts_data(&[vec![1, 2], vec![3, 4]]).unwrap();
+        let reply = s
+            .lease_prompts(&LeaseSpec {
+                ttl_ms: 5000,
+                timeout_ms: 0,
+                ..LeaseSpec::new("w0", 8)
+            })
+            .unwrap();
+        let lease = reply.lease.unwrap();
+        assert_eq!(reply.batch.indices, idx);
+        // Stream one row to completion; reward unlocks for it alone.
+        s.put_chunk(
+            lease,
+            0,
+            &[ChunkRow {
+                index: idx[0],
+                tokens: vec![9, 10],
+                logps: vec![-0.5, -0.25],
+                finished: true,
+            }],
+        )
+        .unwrap();
+        let got = s
+            .get_experience_data("reward", 0, vec![Column::Responses], 8)
+            .unwrap()
+            .into_option()
+            .unwrap();
+        assert_eq!(got.len(), 1);
+        s.renew_lease(lease, 0).unwrap();
+        let ws = s.worker_stats().unwrap();
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].worker, "w0");
+        assert_eq!(ws[0].completed_rows, 1);
+        assert_eq!(ws[0].in_flight_rows, 1);
+        // Uninitialized sessions reject the verbs with errors.
+        let empty = Session::new();
+        assert!(empty
+            .lease_prompts(&LeaseSpec {
+                timeout_ms: 0,
+                ..LeaseSpec::new("w", 1)
+            })
+            .is_err());
+        assert!(empty.worker_stats().is_err());
+    }
+
+    #[test]
+    fn stats_expose_per_unit_occupancy() {
+        let s = session();
+        s.put_prompts_data(&[vec![1, 2, 3], vec![4, 5], vec![6]])
+            .unwrap();
+        let stats = s.stats().unwrap();
+        assert_eq!(stats.units.len(), 2, "grpo() uses 2 storage units");
+        let rows: usize = stats.units.iter().map(|u| u.rows).sum();
+        assert_eq!(rows, 3);
+        let written: u64 =
+            stats.units.iter().map(|u| u.bytes_written).sum();
+        assert!(written > 0);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::rollout::{ChunkRow, LeaseReply, LeaseSpec, WorkerStat};
 use crate::runtime::{DType, HostTensor, ParamSet};
 use crate::transfer_queue::{Batch, Column, GlobalIndex, Value};
 use crate::util::json::Json;
@@ -101,6 +102,16 @@ pub enum ServiceRequest {
     SubscribeWeights { min_version: u64, timeout_ms: u64 },
     /// `weight_sync_notify`: publish a new weight snapshot.
     WeightSync { params: ParamSet },
+    /// Lease ready prompt rows to an elastic rollout worker (long-polls
+    /// up to `timeout_ms`; an empty reply means poll again).
+    LeasePrompts(LeaseSpec),
+    /// Stream partial generations for leased rows; `finished` rows are
+    /// committed to the queue. Implicit lease heartbeat.
+    PutChunk { lease: u64, version: u64, rows: Vec<ChunkRow> },
+    /// Explicit lease heartbeat (`ttl_ms = 0` keeps the granted TTL).
+    RenewLease { lease: u64, ttl_ms: u64 },
+    /// Per-rollout-worker load/progress snapshot.
+    WorkerStats,
     /// Queue/param introspection.
     Stats,
     /// Global-batch GC.
@@ -141,10 +152,21 @@ pub struct TaskStats {
     pub policy: String,
 }
 
+/// Per-storage-unit occupancy and traffic (load-imbalance observability
+/// over the wire — `DataPlane` tracks these natively).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnitStats {
+    pub unit: usize,
+    pub rows: usize,
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+}
+
 /// Whole-service statistics snapshot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServiceStats {
     pub tasks: Vec<TaskStats>,
+    pub units: Vec<UnitStats>,
     pub resident_rows: usize,
     pub param_version: u64,
     pub closed: bool,
@@ -161,6 +183,10 @@ pub enum ServiceResponse {
     /// polls stay tiny on the wire.
     WeightsNotNewer { version: u64 },
     Stats(ServiceStats),
+    /// `lease_prompts` outcome (lease id + rows, or empty + closed flag).
+    Lease(LeaseReply),
+    /// `worker_stats` snapshot.
+    Workers(Vec<WorkerStat>),
     Err(String),
 }
 
@@ -435,6 +461,93 @@ fn batch_from_json(j: &Json) -> Result<Batch> {
 }
 
 // ===========================================================================
+// JSON codec — rollout leases
+// ===========================================================================
+
+fn field_bool(j: &Json, key: &str) -> Result<bool> {
+    field(j, key)?
+        .as_bool()
+        .with_context(|| format!("field {key:?} must be a bool"))
+}
+
+fn chunk_row_to_json(r: &ChunkRow) -> Json {
+    Json::obj(vec![
+        ("index", Json::Num(r.index.0 as f64)),
+        ("tokens", Json::arr_i32(&r.tokens)),
+        ("logps", arr_f32_json(&r.logps)),
+        ("finished", Json::Bool(r.finished)),
+    ])
+}
+
+fn chunk_row_from_json(j: &Json) -> Result<ChunkRow> {
+    Ok(ChunkRow {
+        index: GlobalIndex(field_u64(j, "index")?),
+        tokens: field_arr(j, "tokens")?
+            .iter()
+            .map(|x| {
+                x.as_i64()
+                    .and_then(|n| i32::try_from(n).ok())
+                    .context("chunk token out of i32 range")
+            })
+            .collect::<Result<_>>()?,
+        logps: field_arr(j, "logps")?
+            .iter()
+            .map(json_to_f32)
+            .collect::<Result<_>>()?,
+        finished: field_bool(j, "finished")?,
+    })
+}
+
+fn lease_reply_to_json(r: &LeaseReply) -> Json {
+    let mut pairs = vec![
+        ("batch", batch_to_json(&r.batch)),
+        ("closed", Json::Bool(r.closed)),
+    ];
+    if let Some(id) = r.lease {
+        pairs.push(("id", Json::Num(id as f64)));
+    }
+    Json::obj(pairs)
+}
+
+fn lease_reply_from_json(j: &Json) -> Result<LeaseReply> {
+    let lease = match j.get("id") {
+        Some(x) => Some(
+            x.as_i64()
+                .and_then(|n| u64::try_from(n).ok())
+                .context("lease id must be a non-negative integer")?,
+        ),
+        None => None,
+    };
+    Ok(LeaseReply {
+        lease,
+        batch: batch_from_json(field(j, "batch")?)?,
+        closed: field_bool(j, "closed")?,
+    })
+}
+
+fn worker_stat_to_json(w: &WorkerStat) -> Json {
+    Json::obj(vec![
+        ("worker", Json::Str(w.worker.clone())),
+        ("active_leases", Json::Num(w.active_leases as f64)),
+        ("in_flight_rows", Json::Num(w.in_flight_rows as f64)),
+        ("completed_rows", Json::Num(w.completed_rows as f64)),
+        ("generated_tokens", Json::Num(w.generated_tokens as f64)),
+        ("requeued_rows", Json::Num(w.requeued_rows as f64)),
+    ])
+}
+
+fn worker_stat_from_json(j: &Json) -> Result<WorkerStat> {
+    Ok(WorkerStat {
+        worker: field_str(j, "worker")?,
+        active_leases: field_usize(j, "active_leases")?,
+        in_flight_rows: field_usize(j, "in_flight_rows")?,
+        completed_rows: field_u64(j, "completed_rows")?,
+        generated_tokens: field_u64(j, "generated_tokens")?,
+        requeued_rows: field_u64(j, "requeued_rows")?,
+    })
+}
+
+// ===========================================================================
 // JSON codec — requests
 // ===========================================================================
 
@@ -550,6 +663,38 @@ impl ServiceRequest {
                 ("op", Json::Str("weight_sync".into())),
                 ("params", param_set_to_json(params)?),
             ]),
+            ServiceRequest::LeasePrompts(spec) => Json::obj(vec![
+                ("op", Json::Str("lease_prompts".into())),
+                ("task", Json::Str(spec.task.clone())),
+                ("worker", Json::Str(spec.worker.clone())),
+                ("count", Json::Num(spec.count as f64)),
+                ("ttl_ms", Json::Num(spec.ttl_ms as f64)),
+                ("timeout_ms", Json::Num(spec.timeout_ms as f64)),
+                ("columns", columns_to_json(&spec.columns)),
+            ]),
+            ServiceRequest::PutChunk { lease, version, rows } => {
+                Json::obj(vec![
+                    ("op", Json::Str("put_chunk".into())),
+                    ("lease", Json::Num(*lease as f64)),
+                    ("version", Json::Num(*version as f64)),
+                    (
+                        "rows",
+                        Json::Arr(
+                            rows.iter().map(chunk_row_to_json).collect(),
+                        ),
+                    ),
+                ])
+            }
+            ServiceRequest::RenewLease { lease, ttl_ms } => {
+                Json::obj(vec![
+                    ("op", Json::Str("renew_lease".into())),
+                    ("lease", Json::Num(*lease as f64)),
+                    ("ttl_ms", Json::Num(*ttl_ms as f64)),
+                ])
+            }
+            ServiceRequest::WorkerStats => {
+                Json::obj(vec![("op", Json::Str("worker_stats".into()))])
+            }
             ServiceRequest::Stats => {
                 Json::obj(vec![("op", Json::Str("stats".into()))])
             }
@@ -645,6 +790,27 @@ impl ServiceRequest {
             "weight_sync" => ServiceRequest::WeightSync {
                 params: param_set_from_json(field(j, "params")?)?,
             },
+            "lease_prompts" => ServiceRequest::LeasePrompts(LeaseSpec {
+                task: field_str(j, "task")?,
+                worker: field_str(j, "worker")?,
+                count: field_usize(j, "count")?,
+                ttl_ms: field_u64(j, "ttl_ms")?,
+                timeout_ms: field_u64(j, "timeout_ms")?,
+                columns: columns_from_json(field_arr(j, "columns")?)?,
+            }),
+            "put_chunk" => ServiceRequest::PutChunk {
+                lease: field_u64(j, "lease")?,
+                version: field_u64(j, "version")?,
+                rows: field_arr(j, "rows")?
+                    .iter()
+                    .map(chunk_row_from_json)
+                    .collect::<Result<_>>()?,
+            },
+            "renew_lease" => ServiceRequest::RenewLease {
+                lease: field_u64(j, "lease")?,
+                ttl_ms: field_u64(j, "ttl_ms")?,
+            },
+            "worker_stats" => ServiceRequest::WorkerStats,
             "stats" => ServiceRequest::Stats,
             "evict" => ServiceRequest::Evict {
                 indices: indices_from_json(field_arr(j, "indices")?)?,
@@ -747,6 +913,38 @@ impl ServiceResponse {
                             ),
                         ),
                         (
+                            "units",
+                            Json::Arr(
+                                s.units
+                                    .iter()
+                                    .map(|u| {
+                                        Json::obj(vec![
+                                            (
+                                                "unit",
+                                                Json::Num(u.unit as f64),
+                                            ),
+                                            (
+                                                "rows",
+                                                Json::Num(u.rows as f64),
+                                            ),
+                                            (
+                                                "bytes_written",
+                                                Json::Num(
+                                                    u.bytes_written as f64,
+                                                ),
+                                            ),
+                                            (
+                                                "bytes_read",
+                                                Json::Num(
+                                                    u.bytes_read as f64,
+                                                ),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        (
                             "resident_rows",
                             Json::Num(s.resident_rows as f64),
                         ),
@@ -756,6 +954,17 @@ impl ServiceResponse {
                         ),
                         ("closed", Json::Bool(s.closed)),
                     ]),
+                ),
+            ]),
+            ServiceResponse::Lease(reply) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("lease", lease_reply_to_json(reply)),
+            ]),
+            ServiceResponse::Workers(ws) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "workers",
+                    Json::Arr(ws.iter().map(worker_stat_to_json).collect()),
                 ),
             ]),
             ServiceResponse::Err(msg) => Json::obj(vec![
@@ -796,6 +1005,18 @@ impl ServiceResponse {
         if let Some(p) = j.get("params") {
             return Ok(ServiceResponse::Weights(param_set_from_json(p)?));
         }
+        if let Some(l) = j.get("lease") {
+            return Ok(ServiceResponse::Lease(lease_reply_from_json(l)?));
+        }
+        if let Some(w) = j.get("workers") {
+            return Ok(ServiceResponse::Workers(
+                w.as_arr()
+                    .context("workers must be an array")?
+                    .iter()
+                    .map(worker_stat_from_json)
+                    .collect::<Result<_>>()?,
+            ));
+        }
         if let Some(s) = j.get("stats") {
             let tasks = field_arr(s, "tasks")?
                 .iter()
@@ -808,8 +1029,26 @@ impl ServiceResponse {
                     })
                 })
                 .collect::<Result<_>>()?;
+            // `units` is optional on decode (older peers elide it).
+            let units = match s.get("units") {
+                None => vec![],
+                Some(u) => u
+                    .as_arr()
+                    .context("units must be an array")?
+                    .iter()
+                    .map(|u| {
+                        Ok(UnitStats {
+                            unit: field_usize(u, "unit")?,
+                            rows: field_usize(u, "rows")?,
+                            bytes_written: field_u64(u, "bytes_written")?,
+                            bytes_read: field_u64(u, "bytes_read")?,
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+            };
             return Ok(ServiceResponse::Stats(ServiceStats {
                 tasks,
+                units,
                 resident_rows: field_usize(s, "resident_rows")?,
                 param_version: field_u64(s, "param_version")?,
                 closed: field(s, "closed")?
@@ -1005,6 +1244,20 @@ mod tests {
                 consumed: 9,
                 policy: "fcfs".into(),
             }],
+            units: vec![
+                UnitStats {
+                    unit: 0,
+                    rows: 7,
+                    bytes_written: 1024,
+                    bytes_read: 512,
+                },
+                UnitStats {
+                    unit: 1,
+                    rows: 5,
+                    bytes_written: 768,
+                    bytes_read: 0,
+                },
+            ],
             resident_rows: 12,
             param_version: 2,
             closed: false,
@@ -1015,6 +1268,139 @@ mod tests {
         }
         match roundtrip_resp(ServiceResponse::Err("boom".into())) {
             ServiceResponse::Err(m) => assert_eq!(m, "boom"),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn lease_prompts_request_roundtrips() {
+        let spec = LeaseSpec {
+            task: "rollout".into(),
+            worker: "w-7".into(),
+            count: 8,
+            ttl_ms: 1500,
+            timeout_ms: 40,
+            columns: vec![Column::Prompts, Column::Custom("meta".into())],
+        };
+        match roundtrip_req(ServiceRequest::LeasePrompts(spec.clone())) {
+            ServiceRequest::LeasePrompts(got) => assert_eq!(got, spec),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn put_chunk_request_roundtrips_with_non_finite_logps() {
+        let rows = vec![
+            crate::rollout::ChunkRow {
+                index: GlobalIndex(4),
+                tokens: vec![1, 2, 3],
+                logps: vec![-0.5, f32::NEG_INFINITY, -0.25],
+                finished: false,
+            },
+            crate::rollout::ChunkRow {
+                index: GlobalIndex(9),
+                tokens: vec![7],
+                logps: vec![-1.5],
+                finished: true,
+            },
+        ];
+        match roundtrip_req(ServiceRequest::PutChunk {
+            lease: 11,
+            version: 3,
+            rows: rows.clone(),
+        }) {
+            ServiceRequest::PutChunk { lease, version, rows: got } => {
+                assert_eq!(lease, 11);
+                assert_eq!(version, 3);
+                assert_eq!(got.len(), 2);
+                assert_eq!(got[0].tokens, rows[0].tokens);
+                assert_eq!(got[0].logps[1], f32::NEG_INFINITY);
+                assert!(!got[0].finished);
+                assert!(got[1].finished);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn renew_and_worker_stats_requests_roundtrip() {
+        match roundtrip_req(ServiceRequest::RenewLease {
+            lease: 5,
+            ttl_ms: 250,
+        }) {
+            ServiceRequest::RenewLease { lease, ttl_ms } => {
+                assert_eq!((lease, ttl_ms), (5, 250));
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert!(matches!(
+            roundtrip_req(ServiceRequest::WorkerStats),
+            ServiceRequest::WorkerStats
+        ));
+    }
+
+    #[test]
+    fn lease_reply_roundtrips_granted_and_empty() {
+        let batch = Batch {
+            indices: vec![GlobalIndex(3)],
+            columns: vec![Column::Prompts],
+            rows: vec![vec![Value::I32s(vec![1, 2])]],
+        };
+        let granted = crate::rollout::LeaseReply {
+            lease: Some(42),
+            batch: batch.clone(),
+            closed: false,
+        };
+        match roundtrip_resp(ServiceResponse::Lease(granted)) {
+            ServiceResponse::Lease(got) => {
+                assert_eq!(got.lease, Some(42));
+                assert_eq!(got.batch.indices, batch.indices);
+                assert!(!got.closed);
+            }
+            _ => panic!("wrong variant"),
+        }
+        let empty = crate::rollout::LeaseReply {
+            lease: None,
+            batch: Batch {
+                indices: vec![],
+                columns: vec![Column::Prompts],
+                rows: vec![],
+            },
+            closed: true,
+        };
+        match roundtrip_resp(ServiceResponse::Lease(empty)) {
+            ServiceResponse::Lease(got) => {
+                assert_eq!(got.lease, None);
+                assert!(got.batch.is_empty());
+                assert!(got.closed);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn worker_stats_response_roundtrips() {
+        let ws = vec![crate::rollout::WorkerStat {
+            worker: "tcp-0".into(),
+            active_leases: 1,
+            in_flight_rows: 8,
+            completed_rows: 40,
+            generated_tokens: 1234,
+            requeued_rows: 2,
+        }];
+        match roundtrip_resp(ServiceResponse::Workers(ws.clone())) {
+            ServiceResponse::Workers(got) => assert_eq!(got, ws),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn stats_without_units_field_decodes_leniently() {
+        let line = "{\"ok\":true,\"stats\":{\"tasks\":[],\
+                    \"resident_rows\":0,\"param_version\":0,\
+                    \"closed\":false}}";
+        match ServiceResponse::parse_line(line).unwrap() {
+            ServiceResponse::Stats(s) => assert!(s.units.is_empty()),
             _ => panic!("wrong variant"),
         }
     }

@@ -275,6 +275,40 @@ impl Controller {
         self.state.lock().unwrap().group_stats.clone()
     }
 
+    /// Return consumed-but-unfinished rows to the ready pool — the lease
+    /// bookkeeping primitive behind elastic rollout: when a worker's
+    /// lease expires, its in-flight rows are requeued here so the next
+    /// requester picks them up (FCFS orders by index, so requeued rows —
+    /// the oldest — are served first). Exactly-once by construction: a
+    /// row re-enters `ready` only if it was in `consumed`, atomically
+    /// under the controller lock, so no interleaving can serve it twice.
+    /// Rows already forgotten (evicted) are skipped. Returns how many
+    /// rows were requeued. Historical `group_stats` are deliberately not
+    /// rewound — they record work handed out, not work completed.
+    pub fn unconsume(&self, indices: &[GlobalIndex]) -> usize {
+        let mut st = self.state.lock().unwrap();
+        let required = self.required.len();
+        let mut n = 0;
+        for idx in indices {
+            if !st.consumed.remove(idx) {
+                continue;
+            }
+            let restore = st
+                .rows
+                .get(idx)
+                .filter(|row| row.ready.len() == required)
+                .map(|row| row.token_len);
+            if let Some(token_len) = restore {
+                st.ready.insert(*idx, token_len);
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.ready_cv.notify_all();
+        }
+        n
+    }
+
     /// Forget metadata for rows that have been evicted from the data
     /// plane (GC).
     pub fn forget(&self, indices: &[GlobalIndex]) {
@@ -435,6 +469,52 @@ mod tests {
         );
         assert!(matches!(out, RequestOutcome::NotReady));
         assert!(t0.elapsed() >= Duration::from_millis(35));
+    }
+
+    #[test]
+    fn unconsume_requeues_exactly_once() {
+        let c = rollout_controller();
+        for i in 0..3 {
+            c.notify(&notif(i, Column::Prompts, Some(8)));
+        }
+        c.try_request(0, 3, 3).unwrap();
+        assert_eq!(c.ready_depth(), 0);
+        // Requeue two of the three; the double-requeue of #0 is a no-op
+        // (it is no longer in `consumed` after the first call).
+        assert_eq!(
+            c.unconsume(&[GlobalIndex(0), GlobalIndex(1)]),
+            2
+        );
+        assert_eq!(c.unconsume(&[GlobalIndex(0)]), 0, "exactly once");
+        assert_eq!(c.ready_depth(), 2);
+        assert_eq!(c.consumed_count(), 1);
+        // FCFS re-serves the requeued (oldest) rows first.
+        let again = c.try_request(1, 8, 1).unwrap();
+        assert_eq!(again.indices, vec![GlobalIndex(0), GlobalIndex(1)]);
+    }
+
+    #[test]
+    fn unconsume_skips_unknown_and_forgotten_rows() {
+        let c = rollout_controller();
+        c.notify(&notif(0, Column::Prompts, Some(4)));
+        c.try_request(0, 1, 1).unwrap();
+        c.forget(&[GlobalIndex(0)]);
+        assert_eq!(c.unconsume(&[GlobalIndex(0)]), 0, "evicted row");
+        assert_eq!(c.unconsume(&[GlobalIndex(9)]), 0, "never-seen row");
+        assert_eq!(c.ready_depth(), 0);
+    }
+
+    #[test]
+    fn unconsume_wakes_blocked_requesters() {
+        let c = std::sync::Arc::new(rollout_controller());
+        c.notify(&notif(0, Column::Prompts, Some(4)));
+        c.try_request(0, 1, 1).unwrap();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || c2.request(1, 1, 1));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(c.unconsume(&[GlobalIndex(0)]), 1);
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got.indices, vec![GlobalIndex(0)]);
     }
 
     #[test]
