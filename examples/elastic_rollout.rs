@@ -1,32 +1,50 @@
-//! Elastic streaming rollout demo: two rollout workers — one in-process,
-//! one attached over the real TCP transport — lease prompts from the
-//! same session and stream chunked generations back. Mid-run the TCP
-//! worker is killed; its lease expires and the survivor inherits the
-//! unfinished prompts (requeued exactly once), so the run still drains
-//! every sample. Downstream consumption starts on the first finished
-//! row, long before the slowest generation completes.
+//! Elastic streaming rollout over a distributed data plane.
+//!
+//! Topology of the demo (paper §3.2 + §3.3 made literal):
+//! * a served session with 4 storage-unit slots;
+//! * slots 0 and 1 hosted by **separate storage-unit processes** (this
+//!   example re-execs itself twice as unit hosts, same code path as
+//!   `asyncflow storage-unit --connect`), slots 2 and 3 stay
+//!   coordinator-local — so both the direct-unit path and the
+//!   via-coordinator fallback are exercised;
+//! * a feeder attached over TCP writes prompt payloads value-first
+//!   straight to the owning units (binary frames), then notifies the
+//!   metadata-only control plane;
+//! * two rollout workers — one in-process, one over TCP — lease
+//!   prompts and stream chunked generations; the TCP worker is killed
+//!   mid-run and the survivor inherits its requeued prompts;
+//! * a TCP consumer drains finished rows with `get_batch_meta` +
+//!   direct binary fetches, payload bytes bypassing the coordinator
+//!   socket.
 //!
 //! ```sh
 //! cargo run --release --example elastic_rollout
 //! ```
 
+use std::process::{Child, Command};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 use asyncflow::rollout::{run_worker, WorkerOptions, WorkerReport};
 use asyncflow::runtime::{MockEngine, ParamSet, Sampler};
 use asyncflow::service::{
     GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
     SessionSpec, TcpJsonlServer,
 };
-use asyncflow::transfer_queue::{Column, TaskSpec, Value};
+use asyncflow::transfer_queue::{
+    Column, StorageUnit, TaskSpec, UnitServer, Value,
+};
 
 const PROMPTS: usize = 64;
 const BATCH: usize = 8;
 const PROMPT_LEN: usize = 8;
 const MAX_LEN: usize = 72;
+const REMOTE_UNITS: usize = 2;
+
+const COORD_ENV: &str = "ELASTIC_ROLLOUT_UNIT_COORD";
+const SLOT_ENV: &str = "ELASTIC_ROLLOUT_UNIT_SLOT";
 
 fn worker_opts(name: &str) -> WorkerOptions {
     let mut opts = WorkerOptions::new(name);
@@ -35,7 +53,49 @@ fn worker_opts(name: &str) -> WorkerOptions {
     opts
 }
 
+/// Child mode: host one storage-unit shard and serve until killed —
+/// the same flow as `asyncflow storage-unit --connect`.
+fn run_unit_host(coordinator: &str, slot: usize) -> Result<()> {
+    let client = ServiceClient::connect_relay(coordinator)?;
+    let store = Arc::new(StorageUnit::new(slot));
+    let server = UnitServer::bind(store, ("127.0.0.1", 0))?;
+    client
+        .attach_unit(slot, &format!("127.0.0.1:{}", server.port()))
+        .context("registering with the coordinator")?;
+    server.join();
+    Ok(())
+}
+
+/// Spawn this example again as a unit-host process for `slot`.
+fn spawn_unit_host(coordinator: &str, slot: usize) -> Result<Child> {
+    Command::new(std::env::current_exe()?)
+        .env(COORD_ENV, coordinator)
+        .env(SLOT_ENV, slot.to_string())
+        .spawn()
+        .context("spawning storage-unit host process")
+}
+
+/// Kill-on-drop guard so the unit-host children never outlive the demo,
+/// whichever way it exits (assert, bail, or clean return).
+struct UnitHosts(Vec<Child>);
+
+impl Drop for UnitHosts {
+    fn drop(&mut self) {
+        for child in &mut self.0 {
+            child.kill().ok();
+            child.wait().ok();
+        }
+    }
+}
+
 fn main() -> Result<()> {
+    if let Ok(coordinator) = std::env::var(COORD_ENV) {
+        let slot: usize = std::env::var(SLOT_ENV)
+            .context("unit host needs a slot")?
+            .parse()?;
+        return run_unit_host(&coordinator, slot);
+    }
+
     let session = Arc::new(Session::init_engines(
         SessionSpec {
             storage_units: 4,
@@ -50,14 +110,51 @@ fn main() -> Result<()> {
         ParamSet::new(0, vec![]),
     )?);
     let server = TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0))?;
+    let addr = server.local_addr();
     println!(
-        "== elastic rollout: {PROMPTS} prompts, 1 local + 1 TCP worker \
-         (killed mid-run), service on {} ==",
-        server.local_addr()
+        "== elastic rollout on a distributed data plane: {PROMPTS} \
+         prompts, {REMOTE_UNITS} storage-unit processes + 2 local \
+         slots, 1 local + 1 TCP worker (killed mid-run), service on \
+         {addr} =="
     );
 
-    // Ingest prompts (varying content -> varying response lengths).
-    let feeder = ServiceClient::in_proc(session.clone());
+    // Separate storage-unit processes claim slots 0 and 1.
+    let unit_hosts = UnitHosts(
+        (0..REMOTE_UNITS)
+            .map(|slot| spawn_unit_host(&addr.to_string(), slot))
+            .collect::<Result<_>>()?,
+    );
+    let admin = ServiceClient::in_proc(session.clone());
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let attached = admin
+            .stats()?
+            .units
+            .iter()
+            .filter(|u| u.endpoint.is_some())
+            .count();
+        if attached >= REMOTE_UNITS {
+            break;
+        }
+        if Instant::now() > deadline {
+            bail!("storage-unit processes failed to attach in time");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    println!(
+        "   storage units attached: {:?}",
+        admin
+            .stats()?
+            .units
+            .iter()
+            .map(|u| u.endpoint.clone().unwrap_or_else(|| "local".into()))
+            .collect::<Vec<_>>()
+    );
+
+    // Feeder over TCP in direct mode: prompt payloads go value-first
+    // to the owning units; the coordinator socket sees metadata only.
+    let feeder = ServiceClient::connect(addr)?;
+    feeder.refresh_topology()?;
     feeder.put_batch(
         (0..PROMPTS)
             .map(|i| {
@@ -91,7 +188,6 @@ fn main() -> Result<()> {
     // TCP worker: a straggler that gets killed mid-generation.
     let killed = Arc::new(AtomicBool::new(false));
     let victim = {
-        let addr = server.local_addr();
         let killed = killed.clone();
         std::thread::spawn(move || -> Result<WorkerReport> {
             let client = ServiceClient::connect(addr)?;
@@ -119,8 +215,11 @@ fn main() -> Result<()> {
         });
     }
 
-    // Drain finished rows as they stream in.
-    let consumer = ServiceClient::in_proc(session.clone());
+    // Drain finished rows as they stream in — a TCP consumer in direct
+    // mode: `get_batch_meta` for placement, payload bytes off the unit
+    // sockets, coordinator fallback for the local slots.
+    let consumer = ServiceClient::connect(addr)?;
+    consumer.refresh_topology()?;
     let spec = GetBatchSpec {
         task: "collect".into(),
         group: 0,
@@ -161,11 +260,45 @@ fn main() -> Result<()> {
             w.worker, w.completed_rows, w.requeued_rows, w.generated_tokens
         );
     }
+    let stats = consumer.stats()?;
+    let mut remote_written = 0u64;
+    let mut remote_read = 0u64;
+    for u in &stats.units {
+        let place = u
+            .endpoint
+            .clone()
+            .map(|e| format!("unit-process@{e}"))
+            .unwrap_or_else(|| "coordinator-local".into());
+        println!(
+            "unit {:<2} {place:<28} rows={:<4} remote_written={}B \
+             remote_read={}B",
+            u.unit, u.rows, u.remote_bytes_written, u.remote_bytes_read
+        );
+        remote_written += u.remote_bytes_written;
+        remote_read += u.remote_bytes_read;
+    }
+    if let Some((sent, received)) = consumer.wire_bytes() {
+        println!(
+            "consumer coordinator socket: {}B out / {}B in (metadata + \
+             fallback only)",
+            sent, received
+        );
+    }
     assert_eq!(
         s.samples + v.samples,
         PROMPTS as u64,
         "conservation: every prompt generated exactly once"
     );
+    assert!(
+        remote_written > 0,
+        "prompt/response payloads must land on the unit processes"
+    );
+    assert!(
+        remote_read > 0,
+        "payload reads must flow over the unit sockets"
+    );
+
+    drop(unit_hosts);
     server.stop();
     Ok(())
 }

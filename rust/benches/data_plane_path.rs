@@ -1,0 +1,163 @@
+//! Data-plane path bench: direct-unit binary payload fetch vs the
+//! via-coordinator JSONL relay (the bottleneck ISSUE 3 removes).
+//!
+//! Same workload on identical topologies — a served session with both
+//! storage units hosted behind real TCP unit servers — drained once by
+//! a relay client (payloads ride the coordinator socket as JSON number
+//! arrays) and once by a direct client (`get_batch_meta` + binary
+//! frames from the owning units; the coordinator socket carries
+//! metadata only). Reports samples/s and bytes over the coordinator
+//! socket for each leg.
+//!
+//! ```sh
+//! cargo bench --bench data_plane_path
+//! ```
+
+use std::sync::Arc;
+
+use asyncflow::benchkit::Table;
+use asyncflow::runtime::ParamSet;
+use asyncflow::service::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec, TcpJsonlServer,
+};
+use asyncflow::transfer_queue::{
+    Column, StorageUnit, TaskSpec, UnitServer, Value,
+};
+
+const ROWS: usize = 1024;
+const TOKENS: usize = 256;
+const BATCH: usize = 32;
+
+struct LegResult {
+    samples_per_s: f64,
+    coordinator_bytes: u64,
+    unit_bytes_read: u64,
+}
+
+fn run_leg(direct: bool) -> LegResult {
+    let session = Arc::new(
+        Session::init_engines(
+            SessionSpec {
+                storage_units: 2,
+                tasks: vec![TaskSpec::new(
+                    "bench",
+                    vec![Column::Responses],
+                )],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    );
+    let server =
+        TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0)).unwrap();
+    let admin = ServiceClient::in_proc(session.clone());
+    let mut units = Vec::new();
+    for slot in 0..2 {
+        let store = Arc::new(StorageUnit::new(slot));
+        let unit_server =
+            UnitServer::bind(store, ("127.0.0.1", 0)).unwrap();
+        admin
+            .attach_unit(slot, &format!("127.0.0.1:{}", unit_server.port()))
+            .unwrap();
+        units.push(unit_server);
+    }
+
+    // Ingest 256-token rows through the in-proc feeder (value-first to
+    // the units, mirrored locally) in batched round-trips.
+    let feeder = ServiceClient::in_proc(session.clone());
+    for chunk_start in (0..ROWS).step_by(64) {
+        let rows: Vec<PutRow> = (chunk_start..chunk_start + 64)
+            .map(|i| {
+                PutRow::new(vec![(
+                    Column::Responses,
+                    Value::I32s(vec![i as i32; TOKENS]),
+                )])
+            })
+            .collect();
+        feeder.put_batch(rows).unwrap();
+    }
+
+    let addr = ("127.0.0.1", server.port());
+    let client = if direct {
+        ServiceClient::connect(addr).unwrap()
+    } else {
+        ServiceClient::connect_relay(addr).unwrap()
+    };
+    client.refresh_topology().unwrap();
+    let spec = GetBatchSpec {
+        task: "bench".into(),
+        group: 0,
+        columns: vec![Column::Responses],
+        count: BATCH,
+        min: 1,
+        timeout_ms: 2000,
+    };
+    let t0 = std::time::Instant::now();
+    let mut drained = 0usize;
+    while drained < ROWS {
+        match client.get_batch(&spec).unwrap() {
+            GetBatchReply::Ready(b) => drained += b.len(),
+            GetBatchReply::NotReady => continue,
+            GetBatchReply::Closed => break,
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(drained, ROWS, "bench must drain the whole stream");
+    let (sent, received) = client.wire_bytes().unwrap();
+    let unit_bytes_read: u64 =
+        units.iter().map(|u| u.store().bytes_read()).sum();
+    for u in units {
+        u.stop();
+    }
+    server.stop();
+    LegResult {
+        samples_per_s: ROWS as f64 / dt,
+        coordinator_bytes: sent + received,
+        unit_bytes_read,
+    }
+}
+
+fn main() {
+    println!(
+        "== data-plane path: {ROWS} rows x {TOKENS} tokens, batch \
+         {BATCH}, 2 remote units ==\n"
+    );
+    let relay = run_leg(false);
+    let direct = run_leg(true);
+
+    let mut table = Table::new(&[
+        "path",
+        "samples/s",
+        "coordinator bytes",
+        "unit bytes read",
+    ]);
+    table.row(&[
+        "via-coordinator JSONL relay".into(),
+        format!("{:.0}", relay.samples_per_s),
+        format!("{}", relay.coordinator_bytes),
+        format!("{}", relay.unit_bytes_read),
+    ]);
+    table.row(&[
+        "direct-unit binary fetch".into(),
+        format!("{:.0}", direct.samples_per_s),
+        format!("{}", direct.coordinator_bytes),
+        format!("{}", direct.unit_bytes_read),
+    ]);
+    print!("{}", table.render());
+    println!(
+        "\nspeedup: {:.2}x samples/s; coordinator socket carries {:.1}% \
+         of the relay bytes",
+        direct.samples_per_s / relay.samples_per_s.max(1e-9),
+        100.0 * direct.coordinator_bytes as f64
+            / relay.coordinator_bytes.max(1) as f64
+    );
+    assert!(
+        direct.coordinator_bytes < relay.coordinator_bytes / 4,
+        "direct path must take payload bytes off the coordinator socket"
+    );
+    assert!(
+        direct.unit_bytes_read > 0,
+        "direct path must read payloads from the units"
+    );
+}

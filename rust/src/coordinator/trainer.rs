@@ -741,6 +741,29 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_runs_with_remote_storage_unit_attached() {
+        use crate::transfer_queue::{StorageUnit, UnitServer};
+        let cfg = quick_cfg(2, 1);
+        let engines = mock_engines(1, 8, 16, 48);
+        let trainer = Trainer::new(cfg, engines).unwrap();
+        let store = Arc::new(StorageUnit::new(0));
+        let server =
+            UnitServer::bind(store.clone(), ("127.0.0.1", 0)).unwrap();
+        trainer
+            .client()
+            .attach_unit(0, &format!("127.0.0.1:{}", server.port()))
+            .unwrap();
+        let report = trainer.run().unwrap();
+        assert_eq!(report.iterations, 2);
+        assert!(
+            store.bytes_written() > 0,
+            "half the shard's payloads must route through the attached \
+             unit"
+        );
+        server.stop();
+    }
+
+    #[test]
     fn invalid_config_rejected() {
         let mut cfg = quick_cfg(1, 1);
         cfg.global_batch = 13; // not a multiple of 8

@@ -9,6 +9,11 @@
 //! * `rollout-worker` — attach an elastic rollout worker to a served
 //!   session (`--connect host:port`): lease prompts, stream chunked
 //!   generations, refresh weights at chunk boundaries.
+//! * `storage-unit` — host one data-plane shard in this process and
+//!   register it with a served session (`--connect host:port`): payload
+//!   bytes then flow between clients and this unit over the binary
+//!   frame codec, bypassing the coordinator socket (paper §3.2's
+//!   distributed storage made a real process boundary).
 //! * `simulate` — cluster-scale simulation (Fig. 10 / Table 1 modes).
 //! * `plan`     — resource planner (paper §4.3).
 //! * `gantt`    — simulated execution timeline (Fig. 11).
@@ -32,6 +37,7 @@ use asyncflow::service::{
     ServiceClient, Session, SessionSpec, TcpJsonlServer,
 };
 use asyncflow::simulator::{simulate, Mode, SimConfig};
+use asyncflow::transfer_queue::{StorageUnit, UnitServer};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -86,6 +92,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "train" => cmd_train(&flags),
         "serve" => cmd_serve(&flags),
         "rollout-worker" => cmd_rollout_worker(&flags),
+        "storage-unit" => cmd_storage_unit(&flags),
         "simulate" => cmd_simulate(&flags),
         "plan" => cmd_plan(&flags),
         "gantt" => cmd_gantt(&flags),
@@ -113,6 +120,11 @@ COMMANDS:
   rollout-worker --connect HOST:PORT [--name ID] [--mock] [--task T]
             [--chunk-tokens N] [--ttl-ms N] [--lease-rows N] [--seed N]
             (elastic worker: lease prompts, stream chunked generations)
+  storage-unit --connect HOST:PORT [--slot N] [--listen HOST:PORT]
+            [--advertise HOST:PORT]
+            (host a data-plane shard: payload bytes bypass the
+             coordinator socket; --slot defaults to the first
+             unattached unit)
   simulate  --devices N --model {7b|32b} --mode {colocated|sequential|streaming|async|substep}
             --iterations N
   plan      --devices N --model {7b|32b}
@@ -272,6 +284,59 @@ fn cmd_rollout_worker(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `asyncflow storage-unit`: host one data-plane shard in this process.
+/// Binds a binary-frame payload server, registers it with the served
+/// session (`attach_unit`), and serves until killed. Resident shard
+/// payloads are migrated over by the coordinator on attach; if this
+/// process dies, the coordinator detaches the slot and serves its local
+/// replica (clients fall back through the coordinator transparently).
+fn cmd_storage_unit(flags: &HashMap<String, String>) -> Result<()> {
+    let addr = flags
+        .get("connect")
+        .context("--connect HOST:PORT is required")?;
+    let listen = flags
+        .get("listen")
+        .cloned()
+        .unwrap_or_else(|| "0.0.0.0:0".to_string());
+    let client = ServiceClient::connect_relay(addr.as_str())?;
+    let slot = match flags.get("slot") {
+        Some(s) => s.parse().with_context(|| format!("--slot {s:?}"))?,
+        None => {
+            // First unit without an attached endpoint. Racing
+            // storage-unit processes resolve via attach_unit failing
+            // for the loser — rerun with an explicit --slot.
+            let stats = client.stats()?;
+            stats
+                .units
+                .iter()
+                .find(|u| u.endpoint.is_none())
+                .map(|u| u.unit)
+                .context("no unattached storage-unit slot left")?
+        }
+    };
+    let store = Arc::new(StorageUnit::new(slot));
+    let server = UnitServer::bind(store, listen.as_str())?;
+    let advertise = flags.get("advertise").cloned().unwrap_or_else(|| {
+        // 0.0.0.0 binds are not dialable; advertise loopback for the
+        // single-host default.
+        let ip = server.local_addr().ip();
+        if ip.is_unspecified() {
+            format!("127.0.0.1:{}", server.port())
+        } else {
+            server.local_addr().to_string()
+        }
+    });
+    client.attach_unit(slot, &advertise)?;
+    println!(
+        "[storage-unit] slot {slot}: payload shard on {} (advertised \
+         {advertise}, coordinator {addr}; binary frame codec — see \
+         DESIGN.md §Payload wire)",
+        server.local_addr()
+    );
+    server.join();
+    Ok(())
+}
+
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let devices = get_usize(flags, "devices", 256)?;
     let model = model_by_name(
@@ -357,10 +422,22 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
             );
         }
         for u in &stats.units {
-            println!(
-                "  unit {:<3} rows={:<6} written={}B read={}B",
-                u.unit, u.rows, u.bytes_written, u.bytes_read
-            );
+            match &u.endpoint {
+                Some(ep) => println!(
+                    "  unit {:<3} rows={:<6} written={}B read={}B \
+                     attached@{ep} remote_written={}B remote_read={}B",
+                    u.unit,
+                    u.rows,
+                    u.bytes_written,
+                    u.bytes_read,
+                    u.remote_bytes_written,
+                    u.remote_bytes_read
+                ),
+                None => println!(
+                    "  unit {:<3} rows={:<6} written={}B read={}B local",
+                    u.unit, u.rows, u.bytes_written, u.bytes_read
+                ),
+            }
         }
         for w in &client.worker_stats()? {
             println!(

@@ -14,7 +14,11 @@
 //! worker's rows are requeued — it does NOT bound how long a chunk (or
 //! the first buffered whole-sequence decode of a fixed-geometry backend)
 //! may take. The heartbeat dies with the worker, which is exactly the
-//! crash signal the coordinator keys on.
+//! crash signal the coordinator keys on. The heartbeat shares this
+//! worker's `ServiceClient`, which routes the long-poll verbs
+//! (`lease_prompts`, `subscribe_weights`) over a dedicated sibling
+//! connection — a parked lease poll can never delay a heartbeat or a
+//! chunk upload behind the transport's stream mutex.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;

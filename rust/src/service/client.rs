@@ -1,50 +1,160 @@
 //! `ServiceClient` — the typed, transport-agnostic client for the
-//! service API. Mirrors the wire verbs 1:1 as methods; every method is
-//! exactly one [`Transport::call`] round-trip. Works identically over
-//! [`InProcTransport`] (same process, zero copy) and
+//! service API. Mirrors the wire verbs 1:1 as methods. Works identically
+//! over [`InProcTransport`] (same process, zero copy) and
 //! [`TcpJsonlTransport`] (remote service).
+//!
+//! Two client-side routing layers sit on top of the raw verbs:
+//!
+//! * **Dedicated long-poll channel.** `lease_prompts` and
+//!   `subscribe_weights` park server-side; running them on the shared
+//!   connection would serialize every other verb behind the stream
+//!   mutex for the length of the poll. The client lazily opens a
+//!   sibling transport ([`Transport::open_sibling`]) and routes the
+//!   long-poll verbs there.
+//! * **Direct data-plane fetch.** A TCP client ([`ServiceClient::connect`])
+//!   learns the unit placement view and, when remote storage units are
+//!   attached, exchanges *payloads* with them directly over the binary
+//!   frame codec: reads go `get_batch_meta` → per-unit binary fetch,
+//!   writes go `alloc_rows` → per-unit binary put → `notify_cells`.
+//!   The coordinator socket carries metadata only. Rows on unattached
+//!   or unreachable units fall back through the coordinator
+//!   (`fetch_rows` / `put_batch`), so a dead unit degrades to the
+//!   relay path instead of failing the stream.
 
-use std::sync::Arc;
+use std::collections::{BTreeMap, HashMap};
 use std::net::ToSocketAddrs;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::rollout::{ChunkRow, LeaseId, LeaseReply, LeaseSpec, WorkerStat};
 use crate::runtime::ParamSet;
-use crate::transfer_queue::{Batch, Column, GlobalIndex, Value};
+use crate::transfer_queue::{
+    Batch, Column, GlobalIndex, RemoteUnit, UnitCallError, UnitHandle,
+    Value,
+};
 
 use super::protocol::{
-    GetBatchReply, GetBatchSpec, PutRow, ServiceRequest, ServiceResponse,
-    ServiceStats, SpecDecl, TaskDecl,
+    CellNote, GetBatchMetaReply, GetBatchReply, GetBatchSpec, PutRow,
+    ServiceRequest, ServiceResponse, ServiceStats, SpecDecl, TaskDecl,
 };
 use super::transport::{InProcTransport, TcpJsonlTransport, Transport};
 use super::Session;
+
+/// How long a unit observed dead stays quarantined: placement views
+/// adopted from server replies cannot resurrect it within this window,
+/// so a stale server view (the coordinator detaches lazily, on its own
+/// call failures) does not make every batch re-dial a dead endpoint.
+/// An explicit [`ServiceClient::refresh_topology`] clears quarantine.
+const UNIT_QUARANTINE: Duration = Duration::from_secs(5);
+
+/// Cached data-plane placement: unit endpoints plus lazily dialed
+/// binary connections.
+#[derive(Default)]
+struct Topology {
+    endpoints: Vec<Option<String>>,
+    conns: HashMap<usize, Arc<RemoteUnit>>,
+    /// Units observed dead, with their quarantine deadline.
+    quarantine: HashMap<usize, Instant>,
+}
+
+struct DirectDataPlane {
+    /// Whether this client is allowed to exchange payloads with units
+    /// directly (TCP clients; in-proc clients already have zero-copy
+    /// access through the session).
+    enabled: bool,
+    topo: Mutex<Option<Topology>>,
+}
 
 /// Typed client over any [`Transport`].
 #[derive(Clone)]
 pub struct ServiceClient {
     transport: Arc<dyn Transport>,
+    /// Sibling channel for long-poll verbs, opened on first use.
+    slow: Arc<Mutex<Option<Arc<dyn Transport>>>>,
+    data_plane: Arc<DirectDataPlane>,
 }
 
 impl ServiceClient {
+    fn with_direct(transport: Arc<dyn Transport>, direct: bool) -> Self {
+        ServiceClient {
+            transport,
+            slow: Arc::new(Mutex::new(None)),
+            data_plane: Arc::new(DirectDataPlane {
+                enabled: direct,
+                topo: Mutex::new(None),
+            }),
+        }
+    }
+
     pub fn new(transport: Arc<dyn Transport>) -> Self {
-        ServiceClient { transport }
+        Self::with_direct(transport, false)
     }
 
     /// Client bound to an in-process session (the zero-copy fast path).
     pub fn in_proc(session: Arc<Session>) -> Self {
-        ServiceClient::new(Arc::new(InProcTransport::new(session)))
+        Self::new(Arc::new(InProcTransport::new(session)))
     }
 
-    /// Client connected to a remote `asyncflow serve` instance.
+    /// Client connected to a remote `asyncflow serve` instance. Payload
+    /// traffic goes directly to attached storage units when the
+    /// topology has any ([`ServiceClient::connect_relay`] opts out).
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
-        Ok(ServiceClient::new(Arc::new(TcpJsonlTransport::connect(
-            addr,
-        )?)))
+        Ok(Self::with_direct(
+            Arc::new(TcpJsonlTransport::connect(addr)?),
+            true,
+        ))
+    }
+
+    /// Like [`ServiceClient::connect`] but payloads always relay
+    /// through the coordinator socket — the pre-placement behavior
+    /// (and the baseline leg of the data-plane bench).
+    pub fn connect_relay(addr: impl ToSocketAddrs) -> Result<Self> {
+        Ok(Self::with_direct(
+            Arc::new(TcpJsonlTransport::connect(addr)?),
+            false,
+        ))
+    }
+
+    /// `(sent, received)` bytes over this client's coordinator socket
+    /// (metadata + any relayed payloads; `None` for in-proc).
+    pub fn wire_bytes(&self) -> Option<(u64, u64)> {
+        let main = self.transport.wire_bytes()?;
+        let slow = self
+            .slow
+            .lock()
+            .unwrap()
+            .as_ref()
+            .and_then(|t| t.wire_bytes())
+            .unwrap_or((0, 0));
+        Some((main.0 + slow.0, main.1 + slow.1))
     }
 
     fn call(&self, req: ServiceRequest) -> Result<ServiceResponse> {
         match self.transport.call(req)? {
+            ServiceResponse::Err(msg) => bail!("service error: {msg}"),
+            resp => Ok(resp),
+        }
+    }
+
+    /// Route a verb over the dedicated long-poll channel (falls back to
+    /// the main transport when the sibling cannot be opened).
+    fn slow_call(&self, req: ServiceRequest) -> Result<ServiceResponse> {
+        let transport = {
+            let mut slow = self.slow.lock().unwrap();
+            match &*slow {
+                Some(t) => t.clone(),
+                None => match self.transport.open_sibling() {
+                    Ok(t) => {
+                        *slow = Some(t.clone());
+                        t
+                    }
+                    Err(_) => self.transport.clone(),
+                },
+            }
+        };
+        match transport.call(req)? {
             ServiceResponse::Err(msg) => bail!("service error: {msg}"),
             resp => Ok(resp),
         }
@@ -67,6 +177,111 @@ impl ServiceClient {
         }
     }
 
+    // ---- data-plane topology ----------------------------------------------
+
+    /// Re-learn the unit placement view from the coordinator (call
+    /// after attaching units mid-session). Connections to unchanged
+    /// endpoints are kept; quarantined units get a fresh chance.
+    pub fn refresh_topology(&self) -> Result<()> {
+        if !self.data_plane.enabled {
+            return Ok(());
+        }
+        let endpoints: Vec<Option<String>> = self
+            .stats()?
+            .units
+            .iter()
+            .map(|u| u.endpoint.clone())
+            .collect();
+        if let Some(t) = self.data_plane.topo.lock().unwrap().as_mut() {
+            t.quarantine.clear();
+        }
+        self.install_endpoints(&endpoints);
+        Ok(())
+    }
+
+    fn install_endpoints(&self, fresh: &[Option<String>]) {
+        if !self.data_plane.enabled {
+            return;
+        }
+        let mut topo = self.data_plane.topo.lock().unwrap();
+        let t = topo.get_or_insert_with(Topology::default);
+        if t.endpoints.as_slice() != fresh {
+            let old = std::mem::replace(&mut t.endpoints, fresh.to_vec());
+            // Keep only connections whose endpoint is unchanged.
+            t.conns.retain(|u, _| {
+                old.get(*u).and_then(|e| e.as_ref())
+                    == fresh.get(*u).and_then(|e| e.as_ref())
+            });
+        }
+        // A server view cannot resurrect a unit this client just saw
+        // die — keep it on the fallback path until quarantine expires.
+        let now = Instant::now();
+        t.quarantine.retain(|_, until| *until > now);
+        let quarantined: Vec<usize> =
+            t.quarantine.keys().copied().collect();
+        for unit in quarantined {
+            if let Some(slot) = t.endpoints.get_mut(unit) {
+                *slot = None;
+            }
+            t.conns.remove(&unit);
+        }
+    }
+
+    /// The cached placement view, fetching it on first use. `Some` only
+    /// when direct mode is on AND at least one unit is attached —
+    /// otherwise callers take the plain relay path.
+    fn direct_endpoints(&self) -> Option<Vec<Option<String>>> {
+        if !self.data_plane.enabled {
+            return None;
+        }
+        {
+            let topo = self.data_plane.topo.lock().unwrap();
+            if let Some(t) = &*topo {
+                return if t.endpoints.iter().any(Option::is_some) {
+                    Some(t.endpoints.clone())
+                } else {
+                    None
+                };
+            }
+        }
+        // First use: learn the topology. Errors (e.g. an uninitialized
+        // session) leave the cache empty so the next call retries.
+        let endpoints: Vec<Option<String>> = match self.stats() {
+            Ok(s) => s.units.iter().map(|u| u.endpoint.clone()).collect(),
+            Err(_) => return None,
+        };
+        self.install_endpoints(&endpoints);
+        if endpoints.iter().any(Option::is_some) {
+            Some(endpoints)
+        } else {
+            None
+        }
+    }
+
+    fn unit_conn(&self, unit: usize, endpoint: &str) -> Arc<RemoteUnit> {
+        let mut topo = self.data_plane.topo.lock().unwrap();
+        let t = topo.get_or_insert_with(Topology::default);
+        t.conns
+            .entry(unit)
+            .or_insert_with(|| Arc::new(RemoteUnit::new(endpoint)))
+            .clone()
+    }
+
+    /// Forget a unit after a transport failure: payloads for its shard
+    /// relay through the coordinator until the quarantine expires or an
+    /// explicit `refresh_topology` clears it.
+    fn mark_unit_dead(&self, unit: usize) {
+        let mut topo = self.data_plane.topo.lock().unwrap();
+        if let Some(t) = topo.as_mut() {
+            t.conns.remove(&unit);
+            if let Some(slot) = t.endpoints.get_mut(unit) {
+                *slot = None;
+            }
+            t.quarantine
+                .insert(unit, Instant::now() + UNIT_QUARANTINE);
+        }
+    }
+
     // ---- verbs ------------------------------------------------------------
 
     /// `init_engines`: install the task graph + initial weights on an
@@ -83,6 +298,30 @@ impl ServiceClient {
     /// Register one more task on a live session.
     pub fn register_task(&self, task: TaskDecl) -> Result<()> {
         self.call_ok(ServiceRequest::RegisterTask { task })
+    }
+
+    /// Register a remote storage unit as payload authority for
+    /// placement slot `unit` (`asyncflow storage-unit` announcing
+    /// itself).
+    pub fn attach_unit(&self, unit: usize, endpoint: &str) -> Result<()> {
+        self.call_ok(ServiceRequest::AttachUnit {
+            unit,
+            endpoint: endpoint.to_string(),
+        })
+    }
+
+    /// Reserve `count` fresh global indices (the direct-write path
+    /// allocates addresses before pushing payloads to units).
+    pub fn alloc_rows(&self, count: usize) -> Result<Vec<GlobalIndex>> {
+        self.call_indices(ServiceRequest::AllocRows { count })
+    }
+
+    /// Metadata-only write notification: the payloads named here must
+    /// already be stored on their owning units (value-first).
+    pub fn notify_cells(&self, cells: &[CellNote]) -> Result<()> {
+        self.call_ok(ServiceRequest::NotifyCells {
+            cells: cells.to_vec(),
+        })
     }
 
     /// `put_prompts_data`: batch prompt ingest; returns assigned indices.
@@ -111,20 +350,234 @@ impl ServiceClient {
 
     /// Batch-first write: many rows (new or existing) per round-trip.
     /// Returns one index per row, in order.
+    ///
+    /// With remote units attached (direct mode), payloads go value-first
+    /// to their owning units over the binary codec and only metadata
+    /// touches the coordinator; rows on unattached/unreachable units
+    /// relay as before. Unlike the relay path, the direct path is not
+    /// atomic across units: on an error some sub-batches may already be
+    /// applied and notified, so a retry of the same logical rows can
+    /// duplicate samples — treat a direct put_batch error as fatal for
+    /// the stream, or use [`ServiceClient::connect_relay`] where
+    /// all-or-nothing ingest matters.
     pub fn put_batch(
         &self,
         rows: Vec<PutRow>,
     ) -> Result<Vec<GlobalIndex>> {
+        if let Some(units) = self.direct_endpoints() {
+            return self.put_batch_direct(rows, units);
+        }
         self.call_indices(ServiceRequest::PutBatch { rows })
+    }
+
+    fn put_batch_direct(
+        &self,
+        rows: Vec<PutRow>,
+        units: Vec<Option<String>>,
+    ) -> Result<Vec<GlobalIndex>> {
+        let n = units.len().max(1);
+        let need = rows.iter().filter(|r| r.index.is_none()).count();
+        let fresh = if need > 0 {
+            self.alloc_rows(need)?
+        } else {
+            Vec::new()
+        };
+        let mut fresh = fresh.into_iter();
+        let mut out = Vec::with_capacity(rows.len());
+        let mut direct: BTreeMap<usize, Vec<(GlobalIndex, Column, Value)>> =
+            BTreeMap::new();
+        let mut relay: Vec<PutRow> = Vec::new();
+        for row in rows {
+            let idx = match row.index {
+                Some(i) => i,
+                None => fresh.next().expect("allocated above"),
+            };
+            out.push(idx);
+            let unit = (idx.0 % n as u64) as usize;
+            if units.get(unit).map_or(false, Option::is_some) {
+                let cells = direct.entry(unit).or_default();
+                for (col, val) in row.cells {
+                    cells.push((idx, col, val));
+                }
+            } else {
+                relay.push(PutRow::at(idx, row.cells));
+            }
+        }
+        let mut notes: Vec<CellNote> = Vec::new();
+        for (unit, cells) in direct {
+            let endpoint =
+                units[unit].clone().expect("attached unit has endpoint");
+            let conn = self.unit_conn(unit, &endpoint);
+            match conn.put_cells(&cells) {
+                Ok(()) => {
+                    notes.extend(cells.iter().map(|(idx, col, val)| {
+                        CellNote {
+                            index: *idx,
+                            column: col.clone(),
+                            token_len: val.token_len(),
+                        }
+                    }));
+                }
+                Err(UnitCallError::Rejected(m)) => {
+                    bail!("storage unit {unit} rejected the write: {m}")
+                }
+                Err(UnitCallError::Transport(_)) => {
+                    // Dead unit: relay its cells through the
+                    // coordinator instead (which fails over on its own
+                    // side too).
+                    self.mark_unit_dead(unit);
+                    let mut by_row: BTreeMap<u64, Vec<(Column, Value)>> =
+                        BTreeMap::new();
+                    for (idx, col, val) in cells {
+                        by_row.entry(idx.0).or_default().push((col, val));
+                    }
+                    for (raw, cs) in by_row {
+                        relay.push(PutRow::at(GlobalIndex(raw), cs));
+                    }
+                }
+            }
+        }
+        if !notes.is_empty() {
+            self.notify_cells(&notes)?;
+        }
+        if !relay.is_empty() {
+            self.call_indices(ServiceRequest::PutBatch { rows: relay })?;
+        }
+        Ok(out)
     }
 
     /// `get_experience_data`, batch-first, with deadline semantics:
     /// `NotReady` means retry, `Closed` means the stream is drained.
+    ///
+    /// In direct mode this is `get_batch_meta` + payload fetch straight
+    /// from the owning units, with a via-coordinator fallback for rows
+    /// on unattached or unreachable units.
     pub fn get_batch(&self, spec: &GetBatchSpec) -> Result<GetBatchReply> {
+        if self.direct_endpoints().is_some() {
+            return self.get_batch_direct(spec);
+        }
         match self.call(ServiceRequest::GetBatch(spec.clone()))? {
             ServiceResponse::Batch(reply) => Ok(reply),
             _ => bail!("service returned an unexpected response kind"),
         }
+    }
+
+    /// `get_batch` minus payloads: consumed indices + placement view.
+    pub fn get_batch_meta(
+        &self,
+        spec: &GetBatchSpec,
+    ) -> Result<GetBatchMetaReply> {
+        match self.call(ServiceRequest::GetBatchMeta(spec.clone()))? {
+            ServiceResponse::BatchMeta { indices, units } => {
+                Ok(GetBatchMetaReply::Ready { indices, units })
+            }
+            ServiceResponse::Batch(GetBatchReply::NotReady) => {
+                Ok(GetBatchMetaReply::NotReady)
+            }
+            ServiceResponse::Batch(GetBatchReply::Closed) => {
+                Ok(GetBatchMetaReply::Closed)
+            }
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    /// Payload fetch by explicit indices through the coordinator (the
+    /// relay/fallback path; no consumption).
+    pub fn fetch_rows(
+        &self,
+        indices: &[GlobalIndex],
+        columns: &[Column],
+    ) -> Result<Batch> {
+        match self.call(ServiceRequest::FetchRows {
+            indices: indices.to_vec(),
+            columns: columns.to_vec(),
+        })? {
+            ServiceResponse::Batch(GetBatchReply::Ready(b)) => Ok(b),
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    fn get_batch_direct(
+        &self,
+        spec: &GetBatchSpec,
+    ) -> Result<GetBatchReply> {
+        let (indices, units) = match self.get_batch_meta(spec)? {
+            GetBatchMetaReply::NotReady => {
+                return Ok(GetBatchReply::NotReady)
+            }
+            GetBatchMetaReply::Closed => return Ok(GetBatchReply::Closed),
+            GetBatchMetaReply::Ready { indices, units } => {
+                (indices, units)
+            }
+        };
+        // The reply carries the authoritative placement — adopt it.
+        self.install_endpoints(&units);
+        let n = units.len().max(1);
+        let mut rows: Vec<Option<Vec<Value>>> =
+            (0..indices.len()).map(|_| None).collect();
+        let mut by_unit: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (pos, idx) in indices.iter().enumerate() {
+            by_unit
+                .entry((idx.0 % n as u64) as usize)
+                .or_default()
+                .push(pos);
+        }
+        let mut fallback: Vec<usize> = Vec::new();
+        for (unit, positions) in by_unit {
+            let Some(endpoint) =
+                units.get(unit).and_then(|e| e.clone())
+            else {
+                fallback.extend(positions);
+                continue;
+            };
+            let conn = self.unit_conn(unit, &endpoint);
+            let idxs: Vec<GlobalIndex> =
+                positions.iter().map(|&p| indices[p]).collect();
+            match conn.fetch_rows(&idxs, &spec.columns) {
+                Ok(fetched) => {
+                    for (&pos, row) in positions.iter().zip(fetched) {
+                        match row {
+                            Some(vals) => rows[pos] = Some(vals),
+                            // The unit lacks a column (e.g. a cell that
+                            // relayed through the coordinator before
+                            // the unit attached): relay the row.
+                            None => fallback.push(pos),
+                        }
+                    }
+                }
+                Err(UnitCallError::Rejected(_)) => {
+                    fallback.extend(positions)
+                }
+                Err(UnitCallError::Transport(_)) => {
+                    // Dead unit: reads fall back through the
+                    // coordinator, which serves its replica.
+                    self.mark_unit_dead(unit);
+                    fallback.extend(positions);
+                }
+            }
+        }
+        if !fallback.is_empty() {
+            let idxs: Vec<GlobalIndex> =
+                fallback.iter().map(|&p| indices[p]).collect();
+            let relayed = self.fetch_rows(&idxs, &spec.columns)?;
+            for (&pos, row) in fallback.iter().zip(relayed.rows) {
+                rows[pos] = Some(row);
+            }
+        }
+        let rows: Vec<Vec<Value>> = rows
+            .into_iter()
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| {
+                anyhow!(
+                    "payload fetch incomplete: a row is missing from \
+                     both its unit and the coordinator"
+                )
+            })?;
+        Ok(GetBatchReply::Ready(Batch {
+            indices,
+            rows,
+            columns: spec.columns.clone(),
+        }))
     }
 
     /// Convenience loop over [`ServiceClient::get_batch`]: blocks until a
@@ -165,13 +618,13 @@ impl ServiceClient {
     /// Long-poll for a weight snapshot newer than `min_version`.
     /// `Ok(None)` means nothing newer arrived before the timeout — the
     /// server elides the payload for "no change" answers, so polling is
-    /// cheap even over TCP.
+    /// cheap even over TCP. Runs on the dedicated long-poll channel.
     pub fn subscribe_weights(
         &self,
         min_version: u64,
         timeout_ms: u64,
     ) -> Result<Option<ParamSet>> {
-        match self.call(ServiceRequest::SubscribeWeights {
+        match self.slow_call(ServiceRequest::SubscribeWeights {
             min_version,
             timeout_ms,
         })? {
@@ -190,9 +643,10 @@ impl ServiceClient {
     /// worker (server-side long-poll up to `spec.timeout_ms`). A reply
     /// without a lease means "nothing available right now" — poll
     /// again, unless `closed` says the stream is drained and nothing is
-    /// in flight anywhere.
+    /// in flight anywhere. Runs on the dedicated long-poll channel so a
+    /// parked poll never blocks heartbeats or chunk uploads.
     pub fn lease_prompts(&self, spec: &LeaseSpec) -> Result<LeaseReply> {
-        match self.call(ServiceRequest::LeasePrompts(spec.clone()))? {
+        match self.slow_call(ServiceRequest::LeasePrompts(spec.clone()))? {
             ServiceResponse::Lease(reply) => Ok(reply),
             _ => bail!("service returned an unexpected response kind"),
         }

@@ -43,8 +43,9 @@ use anyhow::{bail, Result};
 
 pub use client::ServiceClient;
 pub use protocol::{
-    GetBatchReply, GetBatchSpec, PutRow, ServiceRequest, ServiceResponse,
-    ServiceStats, SpecDecl, TaskDecl, TaskStats, UnitStats,
+    CellNote, GetBatchMetaReply, GetBatchReply, GetBatchSpec, PutRow,
+    ServiceRequest, ServiceResponse, ServiceStats, SpecDecl, TaskDecl,
+    TaskStats, UnitStats,
 };
 pub use transport::{
     InProcTransport, TcpJsonlServer, TcpJsonlTransport, Transport,
@@ -56,7 +57,7 @@ use crate::rollout::{
 };
 use crate::runtime::ParamSet;
 use crate::transfer_queue::{
-    policy_by_name, Column, GlobalIndex, RequestOutcome, TaskSpec,
+    policy_by_name, Batch, Column, GlobalIndex, RequestOutcome, TaskSpec,
     TransferQueue, Value,
 };
 
@@ -317,14 +318,12 @@ impl Session {
         })
     }
 
-    /// Batch-first pull with deadline semantics (`timeout_ms = 0` polls).
-    ///
-    /// Requesting columns the task's readiness contract does not cover
-    /// is an error (not a panic); note the assembled rows count as
-    /// consumed in that case — declare the columns the task needs on
-    /// the task itself.
-    pub fn get_batch(&self, spec: &GetBatchSpec) -> Result<GetBatchReply> {
-        let st = self.state()?;
+    /// Shared deadline-bounded controller pop behind `get_batch` and
+    /// `get_batch_meta`.
+    fn consume_ready(
+        st: &SessionState,
+        spec: &GetBatchSpec,
+    ) -> Result<RequestOutcome> {
         let Some(controller) = st.tq.try_controller(&spec.task) else {
             bail!("unknown task {:?}", spec.task);
         };
@@ -333,19 +332,100 @@ impl Session {
         } else {
             Instant::now() + Duration::from_millis(spec.timeout_ms)
         };
-        let outcome = controller.request_deadline(
+        Ok(controller.request_deadline(
             spec.group,
             spec.count,
             spec.min.max(1),
             Some(deadline),
-        );
-        Ok(match outcome {
-            RequestOutcome::Ready(meta) => GetBatchReply::Ready(
-                st.tq.try_fetch(&meta.indices, &spec.columns)?,
-            ),
+        ))
+    }
+
+    /// Batch-first pull with deadline semantics (`timeout_ms = 0` polls).
+    ///
+    /// Requesting columns the task's readiness contract does not cover
+    /// is an error (not a panic), and a failed payload fetch — bad
+    /// columns, or a shadow cell whose unit died — returns the rows to
+    /// the ready pool instead of stranding them as consumed (the same
+    /// conservation rule the rollout lease path applies).
+    pub fn get_batch(&self, spec: &GetBatchSpec) -> Result<GetBatchReply> {
+        let st = self.state()?;
+        Ok(match Self::consume_ready(&st, spec)? {
+            RequestOutcome::Ready(meta) => {
+                match st.tq.try_fetch(&meta.indices, &spec.columns) {
+                    Ok(batch) => GetBatchReply::Ready(batch),
+                    Err(e) => {
+                        if let Some(ctrl) =
+                            st.tq.try_controller(&spec.task)
+                        {
+                            ctrl.unconsume(&meta.indices);
+                        }
+                        return Err(e);
+                    }
+                }
+            }
             RequestOutcome::NotReady => GetBatchReply::NotReady,
             RequestOutcome::Closed => GetBatchReply::Closed,
         })
+    }
+
+    /// `get_batch` minus the payloads: consume a ready micro-batch and
+    /// return its indices plus the data-plane placement view, so the
+    /// caller can fetch payload bytes straight from the owning units
+    /// (with [`Session::fetch_rows`] as the via-coordinator fallback).
+    pub fn get_batch_meta(
+        &self,
+        spec: &GetBatchSpec,
+    ) -> Result<GetBatchMetaReply> {
+        let st = self.state()?;
+        Ok(match Self::consume_ready(&st, spec)? {
+            RequestOutcome::Ready(meta) => GetBatchMetaReply::Ready {
+                indices: meta.indices,
+                units: st.tq.data_plane().endpoints(),
+            },
+            RequestOutcome::NotReady => GetBatchMetaReply::NotReady,
+            RequestOutcome::Closed => GetBatchMetaReply::Closed,
+        })
+    }
+
+    /// Payload fetch by explicit indices, without consuming anything —
+    /// the relay path for rows whose owning unit is unattached (the
+    /// coordinator holds them locally) or unreachable (the coordinator
+    /// serves its replica).
+    pub fn fetch_rows(
+        &self,
+        indices: &[GlobalIndex],
+        columns: &[Column],
+    ) -> Result<Batch> {
+        self.state()?.tq.try_fetch(indices, columns)
+    }
+
+    /// `attach_unit`: register a remote storage unit as the payload
+    /// authority for placement slot `unit`. Resident shard payloads are
+    /// migrated to the unit; the coordinator keeps a replica for
+    /// failover.
+    pub fn attach_unit(&self, unit: usize, endpoint: &str) -> Result<()> {
+        self.state()?.tq.attach_unit(unit, endpoint)
+    }
+
+    /// `alloc_rows`: reserve fresh global indices so a client can write
+    /// payloads straight to the owning units before notifying the
+    /// control plane.
+    pub fn alloc_rows(&self, count: usize) -> Result<Vec<GlobalIndex>> {
+        if count == 0 || count > 1_000_000 {
+            bail!("alloc_rows count must be in 1..=1000000, got {count}");
+        }
+        Ok(self.state()?.tq.alloc_indices(count))
+    }
+
+    /// `notify_cells`: metadata-only write notification for payloads a
+    /// client already stored on the owning units (value-first across
+    /// processes).
+    pub fn notify_cells(&self, cells: &[CellNote]) -> Result<()> {
+        let tuples: Vec<(GlobalIndex, Column, Option<usize>)> = cells
+            .iter()
+            .map(|c| (c.index, c.column.clone(), c.token_len))
+            .collect();
+        self.state()?.tq.notify_remote_cells(&tuples)
     }
 
     /// `weight_sync_notify`: publish a new weight snapshot to all
@@ -426,13 +506,16 @@ impl Session {
         let units = st
             .tq
             .data_plane()
-            .units()
-            .iter()
-            .map(|u| UnitStats {
-                unit: u.unit_id,
-                rows: u.row_count(),
-                bytes_written: u.bytes_written(),
-                bytes_read: u.bytes_read(),
+            .unit_views()
+            .into_iter()
+            .map(|v| UnitStats {
+                unit: v.unit,
+                rows: v.rows,
+                bytes_written: v.bytes_written,
+                bytes_read: v.bytes_read,
+                endpoint: v.endpoint,
+                remote_bytes_written: v.remote_bytes_written,
+                remote_bytes_read: v.remote_bytes_read,
             })
             .collect();
         Ok(ServiceStats {
@@ -519,6 +602,35 @@ impl Session {
             }
             ServiceRequest::WorkerStats => {
                 ServiceResponse::Workers(self.worker_stats()?)
+            }
+            ServiceRequest::AttachUnit { unit, endpoint } => {
+                self.attach_unit(unit, &endpoint)?;
+                ServiceResponse::Ok
+            }
+            ServiceRequest::AllocRows { count } => {
+                ServiceResponse::Indices(self.alloc_rows(count)?)
+            }
+            ServiceRequest::NotifyCells { cells } => {
+                self.notify_cells(&cells)?;
+                ServiceResponse::Ok
+            }
+            ServiceRequest::GetBatchMeta(spec) => {
+                match self.get_batch_meta(&spec)? {
+                    GetBatchMetaReply::Ready { indices, units } => {
+                        ServiceResponse::BatchMeta { indices, units }
+                    }
+                    GetBatchMetaReply::NotReady => {
+                        ServiceResponse::Batch(GetBatchReply::NotReady)
+                    }
+                    GetBatchMetaReply::Closed => {
+                        ServiceResponse::Batch(GetBatchReply::Closed)
+                    }
+                }
+            }
+            ServiceRequest::FetchRows { indices, columns } => {
+                ServiceResponse::Batch(GetBatchReply::Ready(
+                    self.fetch_rows(&indices, &columns)?,
+                ))
             }
             ServiceRequest::Stats => {
                 ServiceResponse::Stats(self.stats()?)
@@ -827,6 +939,79 @@ mod tests {
         let written: u64 =
             stats.units.iter().map(|u| u.bytes_written).sum();
         assert!(written > 0);
+    }
+
+    #[test]
+    fn placement_verbs_flow_through_the_session() {
+        use crate::transfer_queue::{StorageUnit, UnitServer};
+        let s = session();
+        let store = Arc::new(StorageUnit::new(0));
+        let server =
+            UnitServer::bind(store.clone(), ("127.0.0.1", 0)).unwrap();
+        s.attach_unit(0, &format!("127.0.0.1:{}", server.port()))
+            .unwrap();
+        // Double attach is a service error.
+        assert!(s
+            .attach_unit(0, &format!("127.0.0.1:{}", server.port()))
+            .is_err());
+        // Direct-write flow: reserve indices, push payloads to the
+        // unit, then notify the control plane.
+        let idx = s.alloc_rows(2).unwrap();
+        assert!(s.alloc_rows(0).is_err());
+        // grpo() has 2 units: route each index to its owner; only even
+        // indices live on the attached unit 0.
+        for i in &idx {
+            if i.0 % 2 == 0 {
+                store
+                    .put(*i, Column::Prompts, Value::I32s(vec![5; 3]))
+                    .unwrap();
+                s.notify_cells(&[CellNote {
+                    index: *i,
+                    column: Column::Prompts,
+                    token_len: Some(3),
+                }])
+                .unwrap();
+            } else {
+                s.put_experience_data(
+                    *i,
+                    Column::Prompts,
+                    Value::I32s(vec![5; 3]),
+                )
+                .unwrap();
+            }
+        }
+        // The rollout task sees both rows; meta + placement agree.
+        match s
+            .get_batch_meta(&GetBatchSpec {
+                task: "rollout".into(),
+                group: 0,
+                columns: vec![Column::Prompts],
+                count: 8,
+                min: 2,
+                timeout_ms: 1000,
+            })
+            .unwrap()
+        {
+            GetBatchMetaReply::Ready { indices, units } => {
+                assert_eq!(indices.len(), 2);
+                assert!(units[0].is_some());
+                assert!(units[1].is_none());
+                // The fallback path serves every row, including the
+                // shadow cell whose payload lives only on the unit.
+                let batch = s
+                    .fetch_rows(&indices, &[Column::Prompts])
+                    .unwrap();
+                for row in &batch.rows {
+                    assert_eq!(row[0], Value::I32s(vec![5; 3]));
+                }
+            }
+            other => panic!("expected a ready meta batch, got {other:?}"),
+        }
+        let stats = s.stats().unwrap();
+        assert!(stats.units[0].endpoint.is_some());
+        assert!(stats.units[0].remote_bytes_written > 0);
+        assert!(stats.units[1].endpoint.is_none());
+        server.stop();
     }
 
     #[test]

@@ -83,8 +83,30 @@ pub struct GetBatchSpec {
     pub timeout_ms: u64,
 }
 
+/// Metadata for one cell a client wrote directly to the owning storage
+/// unit — the payload-free half of a value-first write.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellNote {
+    pub index: GlobalIndex,
+    pub column: Column,
+    /// Token count when the value carries tokens (load balancing).
+    pub token_len: Option<usize>,
+}
+
+/// Outcome of a `get_batch_meta` call: the placement view. `indices`
+/// are the consumed rows; `units[k]` is unit `k`'s payload endpoint
+/// (`None` = fetch via the coordinator). Ownership is
+/// `index % units.len()`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GetBatchMetaReply {
+    Ready { indices: Vec<GlobalIndex>, units: Vec<Option<String>> },
+    NotReady,
+    Closed,
+}
+
 /// The service verbs (paper's five, plus registration, batch-first data
-/// verbs, weight subscription, stats, and lifecycle).
+/// verbs, weight subscription, the data-plane placement verbs, stats,
+/// and lifecycle).
 pub enum ServiceRequest {
     /// `init_engines`: install the task graph + initial weights.
     InitEngines { spec: SpecDecl, params: ParamSet },
@@ -112,6 +134,21 @@ pub enum ServiceRequest {
     RenewLease { lease: u64, ttl_ms: u64 },
     /// Per-rollout-worker load/progress snapshot.
     WorkerStats,
+    /// Register a remote storage unit as payload authority for slot
+    /// `unit` (`asyncflow storage-unit` announcing itself).
+    AttachUnit { unit: usize, endpoint: String },
+    /// Reserve `count` fresh global indices (direct-writing clients
+    /// allocate addresses before pushing payloads to the units).
+    AllocRows { count: usize },
+    /// Metadata-only write notification: the payloads already landed on
+    /// the owning units, value-first.
+    NotifyCells { cells: Vec<CellNote> },
+    /// `get_batch` minus the payloads: consume a ready micro-batch and
+    /// return its indices plus the unit placement view.
+    GetBatchMeta(GetBatchSpec),
+    /// Payload fetch by explicit indices (no consumption) — the
+    /// via-coordinator fallback for rows on unattached or dead units.
+    FetchRows { indices: Vec<GlobalIndex>, columns: Vec<Column> },
     /// Queue/param introspection.
     Stats,
     /// Global-batch GC.
@@ -152,14 +189,21 @@ pub struct TaskStats {
     pub policy: String,
 }
 
-/// Per-storage-unit occupancy and traffic (load-imbalance observability
-/// over the wire — `DataPlane` tracks these natively).
+/// Per-storage-unit occupancy, traffic, and placement (load-imbalance
+/// and topology observability over the wire — `DataPlane` tracks these
+/// natively).
 #[derive(Debug, Clone, PartialEq)]
 pub struct UnitStats {
     pub unit: usize,
     pub rows: usize,
     pub bytes_written: u64,
     pub bytes_read: u64,
+    /// Payload endpoint of the attached remote unit (`None` = the
+    /// shard is coordinator-local).
+    pub endpoint: Option<String>,
+    /// The attached unit's own traffic counters (0 when local).
+    pub remote_bytes_written: u64,
+    pub remote_bytes_read: u64,
 }
 
 /// Whole-service statistics snapshot.
@@ -183,6 +227,9 @@ pub enum ServiceResponse {
     /// polls stay tiny on the wire.
     WeightsNotNewer { version: u64 },
     Stats(ServiceStats),
+    /// `get_batch_meta` outcome: consumed indices + unit endpoints.
+    /// (`NotReady`/`Closed` reuse the [`ServiceResponse::Batch`] forms.)
+    BatchMeta { indices: Vec<GlobalIndex>, units: Vec<Option<String>> },
     /// `lease_prompts` outcome (lease id + rows, or empty + closed flag).
     Lease(LeaseReply),
     /// `worker_stats` snapshot.
@@ -695,6 +742,63 @@ impl ServiceRequest {
             ServiceRequest::WorkerStats => {
                 Json::obj(vec![("op", Json::Str("worker_stats".into()))])
             }
+            ServiceRequest::AttachUnit { unit, endpoint } => {
+                Json::obj(vec![
+                    ("op", Json::Str("attach_unit".into())),
+                    ("unit", Json::Num(*unit as f64)),
+                    ("endpoint", Json::Str(endpoint.clone())),
+                ])
+            }
+            ServiceRequest::AllocRows { count } => Json::obj(vec![
+                ("op", Json::Str("alloc_rows".into())),
+                ("count", Json::Num(*count as f64)),
+            ]),
+            ServiceRequest::NotifyCells { cells } => Json::obj(vec![
+                ("op", Json::Str("notify_cells".into())),
+                (
+                    "cells",
+                    Json::Arr(
+                        cells
+                            .iter()
+                            .map(|c| {
+                                let mut pairs = vec![
+                                    (
+                                        "index",
+                                        Json::Num(c.index.0 as f64),
+                                    ),
+                                    (
+                                        "column",
+                                        Json::Str(c.column.name().into()),
+                                    ),
+                                ];
+                                if let Some(l) = c.token_len {
+                                    pairs.push((
+                                        "token_len",
+                                        Json::Num(l as f64),
+                                    ));
+                                }
+                                Json::obj(pairs)
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            ServiceRequest::GetBatchMeta(spec) => Json::obj(vec![
+                ("op", Json::Str("get_batch_meta".into())),
+                ("task", Json::Str(spec.task.clone())),
+                ("group", Json::Num(spec.group as f64)),
+                ("columns", columns_to_json(&spec.columns)),
+                ("count", Json::Num(spec.count as f64)),
+                ("min", Json::Num(spec.min as f64)),
+                ("timeout_ms", Json::Num(spec.timeout_ms as f64)),
+            ]),
+            ServiceRequest::FetchRows { indices, columns } => {
+                Json::obj(vec![
+                    ("op", Json::Str("fetch_rows".into())),
+                    ("indices", indices_to_json(indices)),
+                    ("columns", columns_to_json(columns)),
+                ])
+            }
             ServiceRequest::Stats => {
                 Json::obj(vec![("op", Json::Str("stats".into()))])
             }
@@ -811,6 +915,48 @@ impl ServiceRequest {
                 ttl_ms: field_u64(j, "ttl_ms")?,
             },
             "worker_stats" => ServiceRequest::WorkerStats,
+            "attach_unit" => ServiceRequest::AttachUnit {
+                unit: field_usize(j, "unit")?,
+                endpoint: field_str(j, "endpoint")?,
+            },
+            "alloc_rows" => ServiceRequest::AllocRows {
+                count: field_usize(j, "count")?,
+            },
+            "notify_cells" => ServiceRequest::NotifyCells {
+                cells: field_arr(j, "cells")?
+                    .iter()
+                    .map(|c| {
+                        let token_len = match c.get("token_len") {
+                            None => None,
+                            Some(x) => Some(
+                                x.as_usize()
+                                    .context("token_len must be a usize")?,
+                            ),
+                        };
+                        Ok(CellNote {
+                            index: GlobalIndex(field_u64(c, "index")?),
+                            column: Column::from_name(&field_str(
+                                c, "column",
+                            )?),
+                            token_len,
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+            },
+            "get_batch_meta" => {
+                ServiceRequest::GetBatchMeta(GetBatchSpec {
+                    task: field_str(j, "task")?,
+                    group: field_usize(j, "group")?,
+                    columns: columns_from_json(field_arr(j, "columns")?)?,
+                    count: field_usize(j, "count")?,
+                    min: field_usize(j, "min")?,
+                    timeout_ms: field_u64(j, "timeout_ms")?,
+                })
+            }
+            "fetch_rows" => ServiceRequest::FetchRows {
+                indices: indices_from_json(field_arr(j, "indices")?)?,
+                columns: columns_from_json(field_arr(j, "columns")?)?,
+            },
             "stats" => ServiceRequest::Stats,
             "evict" => ServiceRequest::Evict {
                 indices: indices_from_json(field_arr(j, "indices")?)?,
@@ -918,7 +1064,7 @@ impl ServiceResponse {
                                 s.units
                                     .iter()
                                     .map(|u| {
-                                        Json::obj(vec![
+                                        let mut pairs = vec![
                                             (
                                                 "unit",
                                                 Json::Num(u.unit as f64),
@@ -939,7 +1085,28 @@ impl ServiceResponse {
                                                     u.bytes_read as f64,
                                                 ),
                                             ),
-                                        ])
+                                        ];
+                                        if let Some(ep) = &u.endpoint {
+                                            pairs.push((
+                                                "endpoint",
+                                                Json::Str(ep.clone()),
+                                            ));
+                                            pairs.push((
+                                                "remote_bytes_written",
+                                                Json::Num(
+                                                    u.remote_bytes_written
+                                                        as f64,
+                                                ),
+                                            ));
+                                            pairs.push((
+                                                "remote_bytes_read",
+                                                Json::Num(
+                                                    u.remote_bytes_read
+                                                        as f64,
+                                                ),
+                                            ));
+                                        }
+                                        Json::obj(pairs)
                                     })
                                     .collect(),
                             ),
@@ -956,6 +1123,31 @@ impl ServiceResponse {
                     ]),
                 ),
             ]),
+            ServiceResponse::BatchMeta { indices, units } => {
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "batch_meta",
+                        Json::obj(vec![
+                            ("indices", indices_to_json(indices)),
+                            (
+                                "units",
+                                Json::Arr(
+                                    units
+                                        .iter()
+                                        .map(|u| match u {
+                                            Some(ep) => {
+                                                Json::Str(ep.clone())
+                                            }
+                                            None => Json::Null,
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    ),
+                ])
+            }
             ServiceResponse::Lease(reply) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("lease", lease_reply_to_json(reply)),
@@ -990,6 +1182,20 @@ impl ServiceResponse {
             return Ok(ServiceResponse::Batch(GetBatchReply::Ready(
                 batch_from_json(b)?,
             )));
+        }
+        if let Some(m) = j.get("batch_meta") {
+            let indices = indices_from_json(field_arr(m, "indices")?)?;
+            let units = field_arr(m, "units")?
+                .iter()
+                .map(|u| match u {
+                    Json::Null => Ok(None),
+                    Json::Str(s) => Ok(Some(s.clone())),
+                    _ => {
+                        anyhow::bail!("unit endpoint must be string|null")
+                    }
+                })
+                .collect::<Result<_>>()?;
+            return Ok(ServiceResponse::BatchMeta { indices, units });
         }
         if j.get("not_ready").is_some() {
             return Ok(ServiceResponse::Batch(GetBatchReply::NotReady));
@@ -1037,11 +1243,34 @@ impl ServiceResponse {
                     .context("units must be an array")?
                     .iter()
                     .map(|u| {
+                        // Topology fields are optional on decode (older
+                        // peers elide them).
+                        let endpoint = match u.get("endpoint") {
+                            None => None,
+                            Some(e) => Some(
+                                e.as_str()
+                                    .context("endpoint must be a string")?
+                                    .to_string(),
+                            ),
+                        };
+                        let opt_u64 = |key: &str| -> Result<u64> {
+                            match u.get(key) {
+                                None => Ok(0),
+                                Some(_) => field_u64(u, key),
+                            }
+                        };
                         Ok(UnitStats {
                             unit: field_usize(u, "unit")?,
                             rows: field_usize(u, "rows")?,
                             bytes_written: field_u64(u, "bytes_written")?,
                             bytes_read: field_u64(u, "bytes_read")?,
+                            endpoint,
+                            remote_bytes_written: opt_u64(
+                                "remote_bytes_written",
+                            )?,
+                            remote_bytes_read: opt_u64(
+                                "remote_bytes_read",
+                            )?,
                         })
                     })
                     .collect::<Result<_>>()?,
@@ -1250,12 +1479,18 @@ mod tests {
                     rows: 7,
                     bytes_written: 1024,
                     bytes_read: 512,
+                    endpoint: Some("127.0.0.1:7741".into()),
+                    remote_bytes_written: 2048,
+                    remote_bytes_read: 99,
                 },
                 UnitStats {
                     unit: 1,
                     rows: 5,
                     bytes_written: 768,
                     bytes_read: 0,
+                    endpoint: None,
+                    remote_bytes_written: 0,
+                    remote_bytes_read: 0,
                 },
             ],
             resident_rows: 12,
@@ -1390,6 +1625,87 @@ mod tests {
         }];
         match roundtrip_resp(ServiceResponse::Workers(ws.clone())) {
             ServiceResponse::Workers(got) => assert_eq!(got, ws),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn data_plane_requests_roundtrip() {
+        match roundtrip_req(ServiceRequest::AttachUnit {
+            unit: 3,
+            endpoint: "10.0.0.5:7741".into(),
+        }) {
+            ServiceRequest::AttachUnit { unit, endpoint } => {
+                assert_eq!(unit, 3);
+                assert_eq!(endpoint, "10.0.0.5:7741");
+            }
+            _ => panic!("wrong variant"),
+        }
+        match roundtrip_req(ServiceRequest::AllocRows { count: 16 }) {
+            ServiceRequest::AllocRows { count } => assert_eq!(count, 16),
+            _ => panic!("wrong variant"),
+        }
+        let cells = vec![
+            CellNote {
+                index: GlobalIndex(4),
+                column: Column::Responses,
+                token_len: Some(12),
+            },
+            CellNote {
+                index: GlobalIndex(9),
+                column: Column::Rewards,
+                token_len: None,
+            },
+        ];
+        match roundtrip_req(ServiceRequest::NotifyCells {
+            cells: cells.clone(),
+        }) {
+            ServiceRequest::NotifyCells { cells: got } => {
+                assert_eq!(got, cells)
+            }
+            _ => panic!("wrong variant"),
+        }
+        let spec = GetBatchSpec {
+            task: "rollout".into(),
+            group: 1,
+            columns: vec![Column::Prompts],
+            count: 8,
+            min: 1,
+            timeout_ms: 50,
+        };
+        match roundtrip_req(ServiceRequest::GetBatchMeta(spec.clone())) {
+            ServiceRequest::GetBatchMeta(got) => assert_eq!(got, spec),
+            _ => panic!("wrong variant"),
+        }
+        match roundtrip_req(ServiceRequest::FetchRows {
+            indices: vec![GlobalIndex(1), GlobalIndex(5)],
+            columns: vec![Column::Prompts, Column::Responses],
+        }) {
+            ServiceRequest::FetchRows { indices, columns } => {
+                assert_eq!(indices, vec![GlobalIndex(1), GlobalIndex(5)]);
+                assert_eq!(columns.len(), 2);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn batch_meta_response_roundtrips_mixed_placement() {
+        let resp = ServiceResponse::BatchMeta {
+            indices: vec![GlobalIndex(0), GlobalIndex(3)],
+            units: vec![Some("127.0.0.1:9001".into()), None],
+        };
+        match roundtrip_resp(resp) {
+            ServiceResponse::BatchMeta { indices, units } => {
+                assert_eq!(
+                    indices,
+                    vec![GlobalIndex(0), GlobalIndex(3)]
+                );
+                assert_eq!(
+                    units,
+                    vec![Some("127.0.0.1:9001".to_string()), None]
+                );
+            }
             _ => panic!("wrong variant"),
         }
     }

@@ -20,7 +20,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -32,6 +32,23 @@ use super::Session;
 /// A bidirectional request/response channel to a service session.
 pub trait Transport: Send + Sync {
     fn call(&self, req: ServiceRequest) -> Result<ServiceResponse>;
+
+    /// Open an *independent* channel to the same peer. Long-poll verbs
+    /// (`lease_prompts`, `subscribe_weights`) run on a sibling so a
+    /// request parked server-side never serializes the fast verbs
+    /// behind the connection mutex. Transports without a peer to
+    /// re-dial may decline.
+    fn open_sibling(&self) -> Result<Arc<dyn Transport>> {
+        bail!("transport does not support sibling channels")
+    }
+
+    /// `(bytes sent, bytes received)` over the wire, when the transport
+    /// meters them (`None` for in-process channels). This is what the
+    /// data-plane bench uses to show payloads leaving the coordinator
+    /// socket.
+    fn wire_bytes(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// Same-process transport: dispatches directly into the session.
@@ -49,6 +66,12 @@ impl Transport for InProcTransport {
     fn call(&self, req: ServiceRequest) -> Result<ServiceResponse> {
         Ok(self.session.handle(req))
     }
+
+    fn open_sibling(&self) -> Result<Arc<dyn Transport>> {
+        // No connection state to contend on, but honoring the request
+        // keeps client behavior uniform across transports.
+        Ok(Arc::new(InProcTransport::new(self.session.clone())))
+    }
 }
 
 /// TCP client transport speaking one JSON object per line.
@@ -60,6 +83,8 @@ impl Transport for InProcTransport {
 pub struct TcpJsonlTransport {
     io: Mutex<(BufReader<TcpStream>, TcpStream)>,
     peer: SocketAddr,
+    bytes_sent: AtomicU64,
+    bytes_received: AtomicU64,
 }
 
 impl TcpJsonlTransport {
@@ -69,7 +94,12 @@ impl TcpJsonlTransport {
         stream.set_nodelay(true).ok();
         let peer = stream.peer_addr()?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(TcpJsonlTransport { io: Mutex::new((reader, stream)), peer })
+        Ok(TcpJsonlTransport {
+            io: Mutex::new((reader, stream)),
+            peer,
+            bytes_sent: AtomicU64::new(0),
+            bytes_received: AtomicU64::new(0),
+        })
     }
 
     pub fn peer_addr(&self) -> SocketAddr {
@@ -85,12 +115,26 @@ impl Transport for TcpJsonlTransport {
         writer.write_all(line.as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
+        self.bytes_sent
+            .fetch_add(line.len() as u64 + 1, Ordering::Relaxed);
         let mut buf = String::new();
         let n = reader.read_line(&mut buf)?;
         if n == 0 {
             bail!("service connection closed by peer");
         }
+        self.bytes_received.fetch_add(n as u64, Ordering::Relaxed);
         ServiceResponse::parse_line(&buf)
+    }
+
+    fn open_sibling(&self) -> Result<Arc<dyn Transport>> {
+        Ok(Arc::new(TcpJsonlTransport::connect(self.peer)?))
+    }
+
+    fn wire_bytes(&self) -> Option<(u64, u64)> {
+        Some((
+            self.bytes_sent.load(Ordering::Relaxed),
+            self.bytes_received.load(Ordering::Relaxed),
+        ))
     }
 }
 

@@ -1,26 +1,42 @@
 //! Data plane: distributed storage units (paper §3.2).
 //!
-//! Each [`StorageUnit`] owns a shard of the global sample space (rows are
-//! assigned by `global_index % n_units`, amortizing I/O and bandwidth
-//! across units — §3.2.1). Units store variable-length cell values and
-//! report every committed write so the facade can broadcast metadata
+//! Each unit owns a shard of the global sample space (rows are assigned
+//! by `global_index % n_units`, amortizing I/O and bandwidth across
+//! units — §3.2.1). Units store variable-length cell values and report
+//! every committed write so the facade can broadcast metadata
 //! notifications to the controllers (§3.2.2).
 //!
-//! Writes are atomic per (row, column): a cell becomes visible to readers
-//! only after the value is fully stored, and the notification is emitted
-//! after visibility — consumers can never observe a notified-but-absent
-//! cell.
+//! Placement: every slot always has a coordinator-local [`StorageUnit`];
+//! a slot can additionally have a [`RemoteUnit`] *attached* (an
+//! `asyncflow storage-unit` process that registered itself). While
+//! attached, the remote unit is the payload authority for the shard —
+//! writes go **value-first** to it, then mirror into the local store,
+//! which doubles as a warm replica: if the unit's transport dies the
+//! slot detaches and every relayed payload is still servable locally
+//! (the "reads fall back through the coordinator" guarantee).
+//! Payloads written *directly* to a unit by a remote client are known
+//! here only as shadow metadata (index, column, token length) recorded
+//! by the `notify_cells` verb — the control plane stays metadata-only
+//! for them, and reads resolve through the attached unit.
+//!
+//! Writes are atomic per (row, column): a cell becomes visible to
+//! readers only after the value is fully stored, and the notification is
+//! emitted after visibility — consumers can never observe a
+//! notified-but-absent cell. That ordering holds across processes: a
+//! remote put is acknowledged by the unit before the local mirror lands
+//! and before any controller hears about the cell.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Result};
 
 use super::column::{Column, GlobalIndex, Value};
+use super::unit::{RemoteUnit, UnitCallError, UnitHandle};
 
 /// A write that became visible — broadcast payload for the control plane.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WriteNotification {
     pub index: GlobalIndex,
     pub column: Column,
@@ -80,6 +96,11 @@ impl StorageUnit {
             .map_or(false, |row| row.contains_key(column))
     }
 
+    /// Whether any cell of the row is resident.
+    pub fn has_row(&self, index: GlobalIndex) -> bool {
+        self.rows.read().unwrap().contains_key(&index)
+    }
+
     /// Fetch one cell (None if the row or column is absent).
     pub fn get(&self, index: GlobalIndex, column: &Column) -> Option<Value> {
         let rows = self.rows.read().unwrap();
@@ -112,6 +133,19 @@ impl StorageUnit {
         self.rows.write().unwrap().remove(&index).is_some()
     }
 
+    /// Every resident cell with its value — the shard-migration path
+    /// when a remote unit attaches to a slot that already holds data.
+    pub fn export_cells(&self) -> Vec<(GlobalIndex, Column, Value)> {
+        let rows = self.rows.read().unwrap();
+        let mut out = Vec::new();
+        for (idx, row) in rows.iter() {
+            for (col, val) in row.iter() {
+                out.push((*idx, col.clone(), val.clone()));
+            }
+        }
+        out
+    }
+
     /// Visit every resident cell as a [`WriteNotification`] — the replay
     /// path for controllers registered after data started flowing.
     pub fn for_each_cell(&self, f: &mut dyn FnMut(WriteNotification)) {
@@ -140,83 +174,370 @@ impl StorageUnit {
     }
 }
 
+/// Per-unit placement + occupancy view (the `stats` verb's topology
+/// report).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnitView {
+    pub unit: usize,
+    /// Rows with at least one cell known to this slot (local or shadow).
+    pub rows: usize,
+    /// Coordinator-local replica traffic.
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    /// Payload endpoint of the attached remote unit (`None` = local).
+    pub endpoint: Option<String>,
+    /// Remote unit's own counters (0 when unattached or unreachable).
+    pub remote_bytes_written: u64,
+    pub remote_bytes_read: u64,
+}
+
+/// Shadow metadata for cells whose payload lives only on the attached
+/// remote unit (direct client writes): column → token length.
+type ShadowRow = HashMap<Column, Option<usize>>;
+
+/// One placement slot of the sharded data plane.
+struct Slot {
+    local: Arc<StorageUnit>,
+    remote: RwLock<Option<Arc<RemoteUnit>>>,
+    shadow: RwLock<HashMap<GlobalIndex, ShadowRow>>,
+}
+
+impl Slot {
+    fn new(unit_id: usize) -> Self {
+        Slot {
+            local: Arc::new(StorageUnit::new(unit_id)),
+            remote: RwLock::new(None),
+            shadow: RwLock::new(HashMap::new()),
+        }
+    }
+
+    fn remote(&self) -> Option<Arc<RemoteUnit>> {
+        self.remote.read().unwrap().clone()
+    }
+
+    fn shadow_has(&self, index: GlobalIndex, column: &Column) -> bool {
+        self.shadow
+            .read()
+            .unwrap()
+            .get(&index)
+            .map_or(false, |row| row.contains_key(column))
+    }
+}
+
 /// The sharded data plane: routes rows to units by index.
 pub struct DataPlane {
-    units: Vec<StorageUnit>,
+    slots: Vec<Slot>,
 }
 
 impl DataPlane {
     pub fn new(n_units: usize) -> Self {
         assert!(n_units > 0, "need at least one storage unit");
-        DataPlane {
-            units: (0..n_units).map(StorageUnit::new).collect(),
-        }
+        DataPlane { slots: (0..n_units).map(Slot::new).collect() }
     }
 
     pub fn n_units(&self) -> usize {
-        self.units.len()
+        self.slots.len()
     }
 
-    pub fn unit_for(&self, index: GlobalIndex) -> &StorageUnit {
-        &self.units[(index.0 % self.units.len() as u64) as usize]
+    /// Which unit owns `index` (`global_index % n_units`, §3.2.1).
+    pub fn unit_id_for(&self, index: GlobalIndex) -> usize {
+        (index.0 % self.slots.len() as u64) as usize
     }
 
+    fn slot_for(&self, index: GlobalIndex) -> &Slot {
+        &self.slots[self.unit_id_for(index)]
+    }
+
+    /// Detach a remote unit after a transport failure: the slot reverts
+    /// to its coordinator-local replica. Payloads that were written
+    /// directly to the dead unit (shadow cells) become unreachable until
+    /// a unit re-attaches and re-serves them; everything that relayed
+    /// through the coordinator keeps being served locally.
+    fn detach_for_error(&self, unit: usize, err: &UnitCallError) {
+        let mut guard = self.slots[unit].remote.write().unwrap();
+        if let Some(r) = guard.take() {
+            eprintln!(
+                "[data-plane] unit {unit} at {} detached after {err}; \
+                 serving the shard from the coordinator-local replica",
+                r.endpoint().unwrap_or_default()
+            );
+        }
+    }
+
+    /// Attach a remote unit to slot `unit`. Resident payloads of the
+    /// shard are migrated (copied) to the unit first, so it owns its
+    /// shard from the moment it is visible; the local copy is retained
+    /// as the failover replica. An empty shard is validated with a
+    /// stats ping so a bad endpoint fails here, not on the hot path.
+    pub fn attach_remote(&self, unit: usize, endpoint: &str) -> Result<()> {
+        let Some(slot) = self.slots.get(unit) else {
+            bail!(
+                "unit {unit} out of range (data plane has {} units)",
+                self.slots.len()
+            );
+        };
+        if slot.remote.read().unwrap().is_some() {
+            bail!("unit {unit} already has an attached storage unit");
+        }
+        let remote = Arc::new(RemoteUnit::new(endpoint));
+        let cells = slot.local.export_cells();
+        if cells.is_empty() {
+            remote.stats().map_err(|e| {
+                anyhow::anyhow!("validating unit {unit} at {endpoint}: {e}")
+            })?;
+        } else {
+            for chunk in cells.chunks(64) {
+                remote.put_cells(chunk).map_err(|e| {
+                    anyhow::anyhow!(
+                        "migrating shard {unit} to {endpoint}: {e}"
+                    )
+                })?;
+            }
+        }
+        let mut guard = slot.remote.write().unwrap();
+        if guard.is_some() {
+            bail!("unit {unit} already has an attached storage unit");
+        }
+        *guard = Some(remote);
+        Ok(())
+    }
+
+    /// Payload endpoints by unit id (`None` = coordinator-local) — the
+    /// placement view `get_batch_meta` hands to direct-fetching clients.
+    pub fn endpoints(&self) -> Vec<Option<String>> {
+        self.slots
+            .iter()
+            .map(|s| s.remote().and_then(|r| r.endpoint()))
+            .collect()
+    }
+
+    /// Store one cell value-first and return the notification to
+    /// broadcast. With a remote attached, the unit acknowledges the
+    /// payload before the local mirror lands; a transport failure
+    /// detaches the unit and the write completes locally (availability
+    /// over placement purity).
     pub fn put(
         &self,
         index: GlobalIndex,
         column: Column,
         value: Value,
     ) -> Result<WriteNotification> {
-        self.unit_for(index).put(index, column, value)
+        let unit = self.unit_id_for(index);
+        let slot = &self.slots[unit];
+        // Duplicate validation up front: covers cells that exist only as
+        // shadow metadata (payload on the remote unit) and spares the
+        // remote a round-trip for local duplicates. `local.put` below
+        // still re-checks atomically.
+        if slot.shadow_has(index, &column)
+            || slot.local.has_cell(index, &column)
+        {
+            bail!(
+                "storage unit {unit}: duplicate write to {index}/{column}"
+            );
+        }
+        if let Some(remote) = slot.remote() {
+            match remote
+                .put_cells(&[(index, column.clone(), value.clone())])
+            {
+                Ok(()) => {}
+                Err(e @ UnitCallError::Rejected(_)) => {
+                    bail!("storage unit {unit}: {e}")
+                }
+                Err(e @ UnitCallError::Transport(_)) => {
+                    self.detach_for_error(unit, &e);
+                }
+            }
+        }
+        slot.local.put(index, column, value)
+    }
+
+    /// Record metadata for a cell whose payload a client wrote directly
+    /// to the owning unit (`notify_cells`). Returns the notification to
+    /// broadcast. Rejects duplicates against both the local replica and
+    /// previously notified cells.
+    pub fn record_remote_cell(
+        &self,
+        index: GlobalIndex,
+        column: Column,
+        token_len: Option<usize>,
+    ) -> Result<WriteNotification> {
+        let unit = self.unit_id_for(index);
+        let slot = &self.slots[unit];
+        if slot.local.has_cell(index, &column) {
+            bail!(
+                "storage unit {unit}: duplicate write to {index}/{column}"
+            );
+        }
+        let mut shadow = slot.shadow.write().unwrap();
+        let row = shadow.entry(index).or_default();
+        if row.contains_key(&column) {
+            bail!(
+                "storage unit {unit}: duplicate write to {index}/{column}"
+            );
+        }
+        row.insert(column.clone(), token_len);
+        Ok(WriteNotification { index, column, token_len })
     }
 
     pub fn get(&self, index: GlobalIndex, column: &Column) -> Option<Value> {
-        self.unit_for(index).get(index, column)
+        self.get_row(index, std::slice::from_ref(column))
+            .map(|mut vals| vals.pop().expect("one column requested"))
     }
 
+    /// Fetch several columns of one row, merging the local replica with
+    /// the attached remote unit (a row can be split when some cells were
+    /// relayed and some written directly to the unit).
     pub fn get_row(
         &self,
         index: GlobalIndex,
         columns: &[Column],
     ) -> Option<Vec<Value>> {
-        self.unit_for(index).get_row(index, columns)
+        let unit = self.unit_id_for(index);
+        let slot = &self.slots[unit];
+        // Fast path: everything local (always true when unattached).
+        if let Some(vals) = slot.local.get_row(index, columns) {
+            return Some(vals);
+        }
+        let mut out: Vec<Option<Value>> = Vec::with_capacity(columns.len());
+        let mut missing: Vec<Column> = Vec::new();
+        for col in columns {
+            match slot.local.get(index, col) {
+                Some(v) => out.push(Some(v)),
+                None => {
+                    // Only cells the control plane knows about are worth
+                    // a remote round-trip.
+                    if !slot.shadow_has(index, col) {
+                        return None;
+                    }
+                    missing.push(col.clone());
+                    out.push(None);
+                }
+            }
+        }
+        let remote = slot.remote()?;
+        let fetched = match remote.fetch_rows(&[index], &missing) {
+            Ok(mut rows) => rows.pop().flatten()?,
+            Err(e @ UnitCallError::Transport(_)) => {
+                self.detach_for_error(unit, &e);
+                return None;
+            }
+            Err(UnitCallError::Rejected(_)) => return None,
+        };
+        let mut fetched = fetched.into_iter();
+        let merged: Option<Vec<Value>> = out
+            .into_iter()
+            .map(|slot_val| slot_val.or_else(|| fetched.next()))
+            .collect();
+        merged
     }
 
+    /// Drop a row everywhere: local replica, shadow metadata, and (best
+    /// effort) the attached remote unit.
     pub fn evict(&self, index: GlobalIndex) -> bool {
-        self.unit_for(index).evict(index)
+        let unit = self.unit_id_for(index);
+        let slot = &self.slots[unit];
+        let local_removed = slot.local.evict(index);
+        let shadow_removed =
+            slot.shadow.write().unwrap().remove(&index).is_some();
+        if let Some(remote) = slot.remote() {
+            if let Err(e @ UnitCallError::Transport(_)) =
+                remote.evict(&[index])
+            {
+                self.detach_for_error(unit, &e);
+            }
+        }
+        local_removed || shadow_removed
     }
 
     pub fn has_cell(&self, index: GlobalIndex, column: &Column) -> bool {
-        self.unit_for(index).has_cell(index, column)
+        let slot = self.slot_for(index);
+        slot.local.has_cell(index, column)
+            || slot.shadow_has(index, column)
     }
 
-    pub fn units(&self) -> &[StorageUnit] {
-        &self.units
-    }
-
-    /// Visit every resident cell across all units (controller replay).
+    /// Visit every cell the control plane knows about (local payloads
+    /// plus shadow metadata for direct remote writes) — controller
+    /// replay.
     pub fn for_each_cell(&self, mut f: impl FnMut(WriteNotification)) {
-        for u in &self.units {
-            u.for_each_cell(&mut f);
+        for slot in &self.slots {
+            slot.local.for_each_cell(&mut f);
+            let shadow = slot.shadow.read().unwrap();
+            for (idx, row) in shadow.iter() {
+                for (col, token_len) in row.iter() {
+                    f(WriteNotification {
+                        index: *idx,
+                        column: col.clone(),
+                        token_len: *token_len,
+                    });
+                }
+            }
         }
     }
 
+    /// Per-unit placement/occupancy snapshot. Remote counters are
+    /// fetched best-effort (zeros when unreachable — introspection never
+    /// fails the caller). Each attached unit costs one payload-socket
+    /// round-trip, serialized with that unit's writes — fine for the
+    /// `stats`/`info` cadence, not for per-sample polling.
+    pub fn unit_views(&self) -> Vec<UnitView> {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(unit, slot)| {
+                let shadow_only = {
+                    let shadow = slot.shadow.read().unwrap();
+                    shadow
+                        .keys()
+                        .filter(|idx| !slot.local.has_row(**idx))
+                        .count()
+                };
+                let remote = slot.remote();
+                let endpoint =
+                    remote.as_ref().and_then(|r| r.endpoint());
+                let (remote_bytes_written, remote_bytes_read) = remote
+                    .and_then(|r| r.stats().ok())
+                    .map_or((0, 0), |s| (s.bytes_written, s.bytes_read));
+                UnitView {
+                    unit,
+                    rows: slot.local.row_count() + shadow_only,
+                    bytes_written: slot.local.bytes_written(),
+                    bytes_read: slot.local.bytes_read(),
+                    endpoint,
+                    remote_bytes_written,
+                    remote_bytes_read,
+                }
+            })
+            .collect()
+    }
+
+    /// Rows with at least one known cell, across all units.
     pub fn total_rows(&self) -> usize {
-        self.units.iter().map(StorageUnit::row_count).sum()
+        self.slots
+            .iter()
+            .map(|slot| {
+                let shadow = slot.shadow.read().unwrap();
+                slot.local.row_count()
+                    + shadow
+                        .keys()
+                        .filter(|idx| !slot.local.has_row(**idx))
+                        .count()
+            })
+            .sum()
     }
 
     pub fn total_bytes_written(&self) -> u64 {
-        self.units.iter().map(StorageUnit::bytes_written).sum()
+        self.slots.iter().map(|s| s.local.bytes_written()).sum()
     }
 
     pub fn total_bytes_read(&self) -> u64 {
-        self.units.iter().map(StorageUnit::bytes_read).sum()
+        self.slots.iter().map(|s| s.local.bytes_read()).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transfer_queue::unit::UnitServer;
 
     #[test]
     fn put_get_roundtrip() {
@@ -262,8 +583,9 @@ mod tests {
             dp.put(GlobalIndex(i), Column::Rewards, Value::F32(0.0))
                 .unwrap();
         }
-        for u in dp.units() {
-            assert_eq!(u.row_count(), 4, "even sharding");
+        for view in dp.unit_views() {
+            assert_eq!(view.rows, 4, "even sharding");
+            assert!(view.endpoint.is_none(), "no unit attached");
         }
         assert_eq!(dp.total_rows(), 16);
     }
@@ -297,5 +619,151 @@ mod tests {
         assert_eq!(dp.total_bytes_written(), 40);
         dp.get(GlobalIndex(0), &Column::Prompts);
         assert_eq!(dp.total_bytes_read(), 40);
+    }
+
+    #[test]
+    fn attach_routes_writes_value_first_and_mirrors_locally() {
+        let dp = DataPlane::new(2);
+        let store = Arc::new(StorageUnit::new(0));
+        let server =
+            UnitServer::bind(store.clone(), ("127.0.0.1", 0)).unwrap();
+        dp.attach_remote(0, &format!("127.0.0.1:{}", server.port()))
+            .unwrap();
+        assert!(dp.endpoints()[0].is_some());
+        assert!(dp.endpoints()[1].is_none());
+
+        // Index 0 -> unit 0 (attached); index 1 -> unit 1 (local).
+        dp.put(GlobalIndex(0), Column::Prompts, Value::I32s(vec![7; 4]))
+            .unwrap();
+        dp.put(GlobalIndex(1), Column::Prompts, Value::I32s(vec![8; 4]))
+            .unwrap();
+        assert_eq!(
+            store.get(GlobalIndex(0), &Column::Prompts),
+            Some(Value::I32s(vec![7; 4])),
+            "payload landed on the remote unit"
+        );
+        assert!(!store.has_row(GlobalIndex(1)), "unit 1 rows stay local");
+        // Reads prefer the local mirror (no remote round-trip needed).
+        assert_eq!(
+            dp.get(GlobalIndex(0), &Column::Prompts),
+            Some(Value::I32s(vec![7; 4]))
+        );
+        let views = dp.unit_views();
+        assert!(views[0].endpoint.is_some());
+        assert!(views[0].remote_bytes_written > 0);
+        server.stop();
+    }
+
+    #[test]
+    fn attach_migrates_resident_shard() {
+        let dp = DataPlane::new(2);
+        dp.put(GlobalIndex(0), Column::Prompts, Value::I32s(vec![1]))
+            .unwrap();
+        dp.put(GlobalIndex(2), Column::Prompts, Value::I32s(vec![2]))
+            .unwrap();
+        dp.put(GlobalIndex(1), Column::Prompts, Value::I32s(vec![3]))
+            .unwrap();
+        let store = Arc::new(StorageUnit::new(0));
+        let server =
+            UnitServer::bind(store.clone(), ("127.0.0.1", 0)).unwrap();
+        dp.attach_remote(0, &format!("127.0.0.1:{}", server.port()))
+            .unwrap();
+        // Unit 0's shard (indices 0, 2) migrated; unit 1's did not.
+        assert_eq!(store.row_count(), 2);
+        assert!(store.has_cell(GlobalIndex(0), &Column::Prompts));
+        assert!(store.has_cell(GlobalIndex(2), &Column::Prompts));
+        assert!(!store.has_row(GlobalIndex(1)));
+        server.stop();
+    }
+
+    #[test]
+    fn attach_rejects_double_attach_and_bad_endpoints() {
+        let dp = DataPlane::new(1);
+        assert!(
+            dp.attach_remote(3, "127.0.0.1:1").is_err(),
+            "slot out of range"
+        );
+        // Nothing listens on port 1: the stats ping fails the attach.
+        assert!(dp.attach_remote(0, "127.0.0.1:1").is_err());
+        let store = Arc::new(StorageUnit::new(0));
+        let server = UnitServer::bind(store, ("127.0.0.1", 0)).unwrap();
+        let ep = format!("127.0.0.1:{}", server.port());
+        dp.attach_remote(0, &ep).unwrap();
+        assert!(dp.attach_remote(0, &ep).is_err(), "double attach");
+        server.stop();
+    }
+
+    #[test]
+    fn dead_unit_detaches_and_replica_serves_reads() {
+        let dp = DataPlane::new(1);
+        let store = Arc::new(StorageUnit::new(0));
+        let server =
+            UnitServer::bind(store.clone(), ("127.0.0.1", 0)).unwrap();
+        dp.attach_remote(0, &format!("127.0.0.1:{}", server.port()))
+            .unwrap();
+        dp.put(GlobalIndex(0), Column::Prompts, Value::I32s(vec![1; 8]))
+            .unwrap();
+        server.stop();
+        // Post-mortem write: transport failure detaches, local succeeds.
+        dp.put(GlobalIndex(1), Column::Prompts, Value::I32s(vec![2; 8]))
+            .unwrap();
+        assert!(dp.endpoints()[0].is_none(), "slot reverted to local");
+        // Both rows — the pre-kill relayed one and the post-kill one —
+        // are served from the replica.
+        assert_eq!(
+            dp.get(GlobalIndex(0), &Column::Prompts),
+            Some(Value::I32s(vec![1; 8]))
+        );
+        assert_eq!(
+            dp.get(GlobalIndex(1), &Column::Prompts),
+            Some(Value::I32s(vec![2; 8]))
+        );
+    }
+
+    #[test]
+    fn shadow_cells_resolve_through_the_remote_unit() {
+        let dp = DataPlane::new(1);
+        let store = Arc::new(StorageUnit::new(0));
+        let server =
+            UnitServer::bind(store.clone(), ("127.0.0.1", 0)).unwrap();
+        dp.attach_remote(0, &format!("127.0.0.1:{}", server.port()))
+            .unwrap();
+        // A direct client write: payload goes straight to the unit...
+        store
+            .put(GlobalIndex(0), Column::Responses, Value::I32s(vec![9; 5]))
+            .unwrap();
+        // ...and the control plane only records shadow metadata.
+        let note = dp
+            .record_remote_cell(GlobalIndex(0), Column::Responses, Some(5))
+            .unwrap();
+        assert_eq!(note.token_len, Some(5));
+        assert!(dp.has_cell(GlobalIndex(0), &Column::Responses));
+        assert_eq!(dp.total_rows(), 1, "shadow-only row is resident");
+        // Duplicate notifications are rejected.
+        assert!(dp
+            .record_remote_cell(GlobalIndex(0), Column::Responses, Some(5))
+            .is_err());
+        // Reads resolve the payload through the unit.
+        assert_eq!(
+            dp.get(GlobalIndex(0), &Column::Responses),
+            Some(Value::I32s(vec![9; 5]))
+        );
+        // Mixed row: a relayed cell + a shadow cell merge on fetch.
+        dp.put(GlobalIndex(0), Column::Rewards, Value::F32(1.5)).unwrap();
+        let row = dp
+            .get_row(GlobalIndex(0), &[Column::Responses, Column::Rewards])
+            .unwrap();
+        assert_eq!(row[0], Value::I32s(vec![9; 5]));
+        assert_eq!(row[1], Value::F32(1.5));
+        // Replay sees both the local and the shadow cell.
+        let mut seen = Vec::new();
+        dp.for_each_cell(|n| seen.push(n.column.clone()));
+        assert!(seen.contains(&Column::Responses));
+        assert!(seen.contains(&Column::Rewards));
+        // Eviction clears the shadow row too.
+        assert!(dp.evict(GlobalIndex(0)));
+        assert_eq!(dp.total_rows(), 0);
+        assert!(!dp.has_cell(GlobalIndex(0), &Column::Responses));
+        server.stop();
     }
 }

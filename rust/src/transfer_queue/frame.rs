@@ -1,0 +1,617 @@
+//! Length-prefixed binary frame codec for storage-unit payload traffic.
+//!
+//! The JSONL service protocol stays the *metadata* wire (verbs, indices,
+//! readiness); this codec is the *payload* wire between clients and
+//! storage units (paper §3.2: payloads live in distributed units, the
+//! coordinator keeps metadata only). Token arrays ride as raw
+//! little-endian bytes — no JSON number parsing on the hot path, and
+//! f32 bit patterns survive exactly.
+//!
+//! Framing: every message is `u32 LE length ‖ payload`; the payload is
+//! one encoded [`UnitRequest`] or [`UnitReply`], tag byte first. One
+//! reply per request, strictly in order per connection.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use super::column::{Column, GlobalIndex, Value};
+use super::data_plane::WriteNotification;
+
+/// Upper bound on a single frame. Generous (a 256-token row is ~1 KiB)
+/// but finite, so a corrupt length prefix cannot trigger an unbounded
+/// allocation.
+pub const MAX_FRAME_BYTES: usize = 256 * 1024 * 1024;
+
+/// Write one frame: `u32 LE length` then the payload, flushed.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME_BYTES {
+        bail!("frame of {} bytes exceeds the cap", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())
+        .context("writing frame length")?;
+    w.write_all(payload).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame body (the length prefix is consumed and validated).
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).context("reading frame length")?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame length {len} exceeds the cap");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("reading frame body")?;
+    Ok(buf)
+}
+
+// ===========================================================================
+// Byte-level encode/decode
+// ===========================================================================
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_column(buf: &mut Vec<u8>, c: &Column) {
+    put_str(buf, c.name());
+}
+
+fn put_value(buf: &mut Vec<u8>, v: &Value) {
+    match v {
+        Value::I32s(xs) => {
+            buf.push(0);
+            put_u32(buf, xs.len() as u32);
+            for x in xs {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Value::F32s(xs) => {
+            buf.push(1);
+            put_u32(buf, xs.len() as u32);
+            for x in xs {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Value::F32(x) => {
+            buf.push(2);
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        Value::U64(x) => {
+            buf.push(3);
+            put_u64(buf, *x);
+        }
+        Value::Text(s) => {
+            buf.push(4);
+            put_str(buf, s);
+        }
+    }
+}
+
+/// Decoding cursor over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated frame: wanted {n} bytes at offset {}, frame is \
+                 {} bytes",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A length that will be used to size an allocation: bounded by the
+    /// bytes actually remaining in the frame so a corrupt count cannot
+    /// reserve gigabytes.
+    fn count(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n > self.buf.len().saturating_sub(self.pos) {
+            bail!("corrupt element count {n}");
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count()?;
+        Ok(std::str::from_utf8(self.take(n)?)
+            .context("frame string is not UTF-8")?
+            .to_string())
+    }
+
+    fn column(&mut self) -> Result<Column> {
+        Ok(Column::from_name(&self.str()?))
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        Ok(match self.u8()? {
+            0 => {
+                let n = self.count()?;
+                let mut xs = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    xs.push(self.i32()?);
+                }
+                Value::I32s(xs)
+            }
+            1 => {
+                let n = self.count()?;
+                let mut xs = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    xs.push(self.f32()?);
+                }
+                Value::F32s(xs)
+            }
+            2 => Value::F32(self.f32()?),
+            3 => Value::U64(self.u64()?),
+            4 => Value::Text(self.str()?),
+            t => bail!("unknown value tag {t}"),
+        })
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "trailing garbage: {} of {} bytes consumed",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+// ===========================================================================
+// Unit protocol messages
+// ===========================================================================
+
+/// One storage-unit operation (the request side of the payload wire).
+#[derive(Debug, Clone, PartialEq)]
+pub enum UnitRequest {
+    /// Batched value-first write. All-or-error per cell, applied in
+    /// order; the unit rejects duplicate cells.
+    Put { cells: Vec<(GlobalIndex, Column, Value)> },
+    /// Batched payload fetch: one entry per index, `None` when the row
+    /// lacks any of the requested columns on this unit.
+    Fetch { indices: Vec<GlobalIndex>, columns: Vec<Column> },
+    /// Cell-existence probe (duplicate-write validation).
+    Has { index: GlobalIndex, column: Column },
+    /// Drop rows entirely (global-batch GC).
+    Evict { indices: Vec<GlobalIndex> },
+    /// Metadata-only inventory of every resident cell (controller
+    /// replay / attach reconciliation).
+    Scan,
+    /// Occupancy and traffic counters.
+    Stats,
+}
+
+/// Per-unit occupancy/traffic snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct UnitStatsSnapshot {
+    pub rows: u64,
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+}
+
+/// The storage-unit answers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum UnitReply {
+    Ok,
+    Bool(bool),
+    /// One entry per requested index, in request order.
+    Rows(Vec<Option<Vec<Value>>>),
+    /// Cell inventory (payloads elided — metadata only).
+    Cells(Vec<WriteNotification>),
+    Stats(UnitStatsSnapshot),
+    /// The unit rejected the operation (application error, e.g. a
+    /// duplicate write) — distinct from a transport failure.
+    Err(String),
+}
+
+const REQ_PUT: u8 = 1;
+const REQ_FETCH: u8 = 2;
+const REQ_HAS: u8 = 3;
+const REQ_EVICT: u8 = 4;
+const REQ_SCAN: u8 = 5;
+const REQ_STATS: u8 = 6;
+
+const REP_OK: u8 = 1;
+const REP_BOOL: u8 = 2;
+const REP_ROWS: u8 = 3;
+const REP_CELLS: u8 = 4;
+const REP_STATS: u8 = 5;
+const REP_ERR: u8 = 6;
+
+fn put_indices(buf: &mut Vec<u8>, indices: &[GlobalIndex]) {
+    put_u32(buf, indices.len() as u32);
+    for i in indices {
+        put_u64(buf, i.0);
+    }
+}
+
+fn read_indices(c: &mut Cursor) -> Result<Vec<GlobalIndex>> {
+    let n = c.count()?;
+    let mut out = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        out.push(GlobalIndex(c.u64()?));
+    }
+    Ok(out)
+}
+
+impl UnitRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            UnitRequest::Put { cells } => {
+                buf.push(REQ_PUT);
+                put_u32(&mut buf, cells.len() as u32);
+                for (idx, col, val) in cells {
+                    put_u64(&mut buf, idx.0);
+                    put_column(&mut buf, col);
+                    put_value(&mut buf, val);
+                }
+            }
+            UnitRequest::Fetch { indices, columns } => {
+                buf.push(REQ_FETCH);
+                put_indices(&mut buf, indices);
+                put_u32(&mut buf, columns.len() as u32);
+                for c in columns {
+                    put_column(&mut buf, c);
+                }
+            }
+            UnitRequest::Has { index, column } => {
+                buf.push(REQ_HAS);
+                put_u64(&mut buf, index.0);
+                put_column(&mut buf, column);
+            }
+            UnitRequest::Evict { indices } => {
+                buf.push(REQ_EVICT);
+                put_indices(&mut buf, indices);
+            }
+            UnitRequest::Scan => buf.push(REQ_SCAN),
+            UnitRequest::Stats => buf.push(REQ_STATS),
+        }
+        buf
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<UnitRequest> {
+        let mut c = Cursor::new(frame);
+        let req = match c.u8()? {
+            REQ_PUT => {
+                let n = c.count()?;
+                let mut cells = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let idx = GlobalIndex(c.u64()?);
+                    let col = c.column()?;
+                    let val = c.value()?;
+                    cells.push((idx, col, val));
+                }
+                UnitRequest::Put { cells }
+            }
+            REQ_FETCH => {
+                let indices = read_indices(&mut c)?;
+                let n = c.count()?;
+                let mut columns = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    columns.push(c.column()?);
+                }
+                UnitRequest::Fetch { indices, columns }
+            }
+            REQ_HAS => UnitRequest::Has {
+                index: GlobalIndex(c.u64()?),
+                column: c.column()?,
+            },
+            REQ_EVICT => UnitRequest::Evict { indices: read_indices(&mut c)? },
+            REQ_SCAN => UnitRequest::Scan,
+            REQ_STATS => UnitRequest::Stats,
+            t => bail!("unknown unit request tag {t}"),
+        };
+        c.done()?;
+        Ok(req)
+    }
+}
+
+impl UnitReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            UnitReply::Ok => buf.push(REP_OK),
+            UnitReply::Bool(b) => {
+                buf.push(REP_BOOL);
+                buf.push(u8::from(*b));
+            }
+            UnitReply::Rows(rows) => {
+                buf.push(REP_ROWS);
+                put_u32(&mut buf, rows.len() as u32);
+                for row in rows {
+                    match row {
+                        None => buf.push(0),
+                        Some(vals) => {
+                            buf.push(1);
+                            put_u32(&mut buf, vals.len() as u32);
+                            for v in vals {
+                                put_value(&mut buf, v);
+                            }
+                        }
+                    }
+                }
+            }
+            UnitReply::Cells(cells) => {
+                buf.push(REP_CELLS);
+                put_u32(&mut buf, cells.len() as u32);
+                for n in cells {
+                    put_u64(&mut buf, n.index.0);
+                    put_column(&mut buf, &n.column);
+                    match n.token_len {
+                        None => buf.push(0),
+                        Some(l) => {
+                            buf.push(1);
+                            put_u64(&mut buf, l as u64);
+                        }
+                    }
+                }
+            }
+            UnitReply::Stats(s) => {
+                buf.push(REP_STATS);
+                put_u64(&mut buf, s.rows);
+                put_u64(&mut buf, s.bytes_written);
+                put_u64(&mut buf, s.bytes_read);
+            }
+            UnitReply::Err(msg) => {
+                buf.push(REP_ERR);
+                put_str(&mut buf, msg);
+            }
+        }
+        buf
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<UnitReply> {
+        let mut c = Cursor::new(frame);
+        let rep = match c.u8()? {
+            REP_OK => UnitReply::Ok,
+            REP_BOOL => UnitReply::Bool(c.u8()? != 0),
+            REP_ROWS => {
+                let n = c.count()?;
+                let mut rows = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    match c.u8()? {
+                        0 => rows.push(None),
+                        1 => {
+                            let k = c.count()?;
+                            let mut vals = Vec::with_capacity(k.min(4096));
+                            for _ in 0..k {
+                                vals.push(c.value()?);
+                            }
+                            rows.push(Some(vals));
+                        }
+                        t => bail!("bad row presence tag {t}"),
+                    }
+                }
+                UnitReply::Rows(rows)
+            }
+            REP_CELLS => {
+                let n = c.count()?;
+                let mut cells = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let index = GlobalIndex(c.u64()?);
+                    let column = c.column()?;
+                    let token_len = match c.u8()? {
+                        0 => None,
+                        1 => Some(c.u64()? as usize),
+                        t => bail!("bad token_len presence tag {t}"),
+                    };
+                    cells.push(WriteNotification { index, column, token_len });
+                }
+                UnitReply::Cells(cells)
+            }
+            REP_STATS => UnitReply::Stats(UnitStatsSnapshot {
+                rows: c.u64()?,
+                bytes_written: c.u64()?,
+                bytes_read: c.u64()?,
+            }),
+            REP_ERR => UnitReply::Err(c.str()?),
+            t => bail!("unknown unit reply tag {t}"),
+        };
+        c.done()?;
+        Ok(rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: UnitRequest) -> UnitRequest {
+        UnitRequest::decode(&req.encode()).unwrap()
+    }
+
+    fn roundtrip_rep(rep: UnitReply) -> UnitReply {
+        UnitReply::decode(&rep.encode()).unwrap()
+    }
+
+    #[test]
+    fn frame_io_roundtrips() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        let mut r = wire.as_slice();
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), b"");
+        assert!(read_frame(&mut r).is_err(), "stream exhausted");
+    }
+
+    #[test]
+    fn oversized_frame_length_rejected() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_frame(&mut wire.as_slice()).is_err());
+    }
+
+    #[test]
+    fn value_codec_roundtrips_all_variants_bit_exactly() {
+        for v in [
+            Value::I32s(vec![-3, 0, i32::MAX, i32::MIN]),
+            Value::F32s(vec![
+                -0.5,
+                f32::NAN,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                f32::MIN_POSITIVE,
+            ]),
+            Value::F32(1.5),
+            Value::U64(u64::MAX),
+            Value::Text("x\ny\u{1F600}".into()),
+        ] {
+            let mut buf = Vec::new();
+            put_value(&mut buf, &v);
+            let mut c = Cursor::new(&buf);
+            let got = c.value().unwrap();
+            c.done().unwrap();
+            // Compare bit patterns (PartialEq fails on NaN).
+            match (&v, &got) {
+                (Value::F32s(a), Value::F32s(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+                _ => assert_eq!(v, got),
+            }
+        }
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        let put = UnitRequest::Put {
+            cells: vec![
+                (
+                    GlobalIndex(7),
+                    Column::Prompts,
+                    Value::I32s(vec![1, 2, 3]),
+                ),
+                (
+                    GlobalIndex(9),
+                    Column::Custom("extra".into()),
+                    Value::Text("meta".into()),
+                ),
+            ],
+        };
+        assert_eq!(roundtrip_req(put.clone()), put);
+        let fetch = UnitRequest::Fetch {
+            indices: vec![GlobalIndex(0), GlobalIndex(4)],
+            columns: vec![Column::Responses, Column::OldLogp],
+        };
+        assert_eq!(roundtrip_req(fetch.clone()), fetch);
+        let has = UnitRequest::Has {
+            index: GlobalIndex(3),
+            column: Column::Rewards,
+        };
+        assert_eq!(roundtrip_req(has.clone()), has);
+        let evict = UnitRequest::Evict {
+            indices: vec![GlobalIndex(1)],
+        };
+        assert_eq!(roundtrip_req(evict.clone()), evict);
+        assert_eq!(roundtrip_req(UnitRequest::Scan), UnitRequest::Scan);
+        assert_eq!(roundtrip_req(UnitRequest::Stats), UnitRequest::Stats);
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        assert_eq!(roundtrip_rep(UnitReply::Ok), UnitReply::Ok);
+        assert_eq!(
+            roundtrip_rep(UnitReply::Bool(true)),
+            UnitReply::Bool(true)
+        );
+        let rows = UnitReply::Rows(vec![
+            Some(vec![Value::I32s(vec![1]), Value::F32(0.5)]),
+            None,
+        ]);
+        assert_eq!(roundtrip_rep(rows.clone()), rows);
+        let stats = UnitReply::Stats(UnitStatsSnapshot {
+            rows: 3,
+            bytes_written: 1024,
+            bytes_read: 42,
+        });
+        assert_eq!(roundtrip_rep(stats.clone()), stats);
+        match roundtrip_rep(UnitReply::Err("boom".into())) {
+            UnitReply::Err(m) => assert_eq!(m, "boom"),
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Cells carry metadata (WriteNotification has no PartialEq —
+        // compare fields).
+        let cells = UnitReply::Cells(vec![WriteNotification {
+            index: GlobalIndex(5),
+            column: Column::Responses,
+            token_len: Some(12),
+        }]);
+        match roundtrip_rep(cells) {
+            UnitReply::Cells(got) => {
+                assert_eq!(got.len(), 1);
+                assert_eq!(got[0].index, GlobalIndex(5));
+                assert_eq!(got[0].column, Column::Responses);
+                assert_eq!(got[0].token_len, Some(12));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_frames_rejected_without_panicking() {
+        assert!(UnitRequest::decode(&[]).is_err());
+        assert!(UnitRequest::decode(&[99]).is_err());
+        assert!(UnitReply::decode(&[REP_ROWS, 1, 0, 0, 0, 7]).is_err());
+        // Truncated Put: claims one cell, body missing.
+        assert!(UnitRequest::decode(&[REQ_PUT, 1, 0, 0, 0]).is_err());
+        // Trailing garbage after a valid message.
+        let mut buf = UnitReply::Ok.encode();
+        buf.push(0);
+        assert!(UnitReply::decode(&buf).is_err());
+        // Corrupt element count cannot drive a huge allocation.
+        let mut fetch = vec![REQ_FETCH];
+        fetch.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(UnitRequest::decode(&fetch).is_err());
+    }
+}

@@ -19,9 +19,11 @@ pub mod client;
 pub mod column;
 pub mod control_plane;
 pub mod data_plane;
+pub mod frame;
 pub mod policies;
+pub mod unit;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
@@ -30,9 +32,13 @@ use anyhow::{bail, Result};
 pub use client::{Batch, BatchPoll, StreamDataLoader};
 pub use column::{Column, GlobalIndex, Value};
 pub use control_plane::{BatchMeta, Controller, RequestOutcome};
-pub use data_plane::DataPlane;
+pub use data_plane::{DataPlane, StorageUnit, UnitView, WriteNotification};
+pub use frame::{UnitReply, UnitRequest, UnitStatsSnapshot};
 pub use policies::{
     policy_by_name, Fcfs, Policy, ShortestFirst, TokenBalanced,
+};
+pub use unit::{
+    LocalUnit, RemoteUnit, UnitCallError, UnitHandle, UnitServer,
 };
 
 /// Declaration of one RL task's data interface.
@@ -116,6 +122,64 @@ impl TransferQueue {
     /// Allocate a fresh global index (ingest path).
     pub fn alloc_index(&self) -> GlobalIndex {
         GlobalIndex(self.next_index.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Allocate a dense run of fresh indices in one step (the
+    /// `alloc_rows` verb: a direct-writing client reserves addresses
+    /// before pushing payloads straight to the owning storage units).
+    pub fn alloc_indices(&self, count: usize) -> Vec<GlobalIndex> {
+        let start = self.next_index.fetch_add(count as u64, Ordering::Relaxed);
+        (start..start + count as u64).map(GlobalIndex).collect()
+    }
+
+    /// Attach a remote storage unit to placement slot `unit` (the
+    /// `attach_unit` verb — `asyncflow storage-unit` registration).
+    pub fn attach_unit(&self, unit: usize, endpoint: &str) -> Result<()> {
+        if self.closed.load(Ordering::SeqCst) {
+            bail!("cannot attach unit {unit}: queue is closed");
+        }
+        self.data.attach_remote(unit, endpoint)
+    }
+
+    /// Ingest metadata for cells whose payloads a client already wrote
+    /// directly to the owning storage units (the `notify_cells` verb).
+    /// The value-first invariant holds across processes: the unit
+    /// acknowledged the payload before the client sent this
+    /// notification, so no controller can observe a notified-but-absent
+    /// cell. The batch is validated up front (indices allocated, no
+    /// duplicates) so a rejected batch broadcasts nothing.
+    pub fn notify_remote_cells(
+        &self,
+        cells: &[(GlobalIndex, Column, Option<usize>)],
+    ) -> Result<()> {
+        let mut seen: HashSet<(GlobalIndex, &Column)> = HashSet::new();
+        for (idx, col, _) in cells {
+            if !self.index_allocated(*idx) {
+                bail!(
+                    "unknown row index {idx}: reserve indices via \
+                     alloc_rows / put_prompts_data first"
+                );
+            }
+            // Duplicates against resident state AND within this batch —
+            // either would partially record before failing.
+            if self.data.has_cell(*idx, col) || !seen.insert((*idx, col)) {
+                bail!(
+                    "duplicate notification for {idx}/{col}: batch \
+                     rejected before any cell was recorded"
+                );
+            }
+        }
+        for (idx, col, token_len) in cells {
+            let note = self.data.record_remote_cell(
+                *idx,
+                col.clone(),
+                *token_len,
+            )?;
+            for c in self.controllers.read().unwrap().values() {
+                c.notify(&note);
+            }
+        }
+        Ok(())
     }
 
     /// Ingest a new sample row: allocate an index, store all columns,
@@ -209,6 +273,12 @@ impl TransferQueue {
     }
 
     /// Fetch payload columns for a batch of indices.
+    ///
+    /// Panics if a row lacks a requested column. With remote units in
+    /// play that can happen outside invariant violations (a shadow cell
+    /// whose unit died is known-but-unfetchable) — any path that can
+    /// observe remote cells must use [`TransferQueue::try_fetch`]; this
+    /// stays the local-only fast path.
     pub fn fetch(&self, indices: &[GlobalIndex], columns: &[Column]) -> Batch {
         let rows = indices
             .iter()
@@ -422,6 +492,60 @@ mod tests {
         tq.close();
         assert!(tq
             .register_task(TaskSpec::new("x", vec![Column::Prompts]))
+            .is_err());
+    }
+
+    #[test]
+    fn alloc_indices_are_dense_and_disjoint() {
+        let tq = grpo_tq(2);
+        let a = tq.alloc_indices(3);
+        let b = tq.alloc_indices(2);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[2].0, a[0].0 + 2);
+        assert!(b[0].0 >= a[2].0 + 1);
+        for idx in a.iter().chain(&b) {
+            assert!(tq.index_allocated(*idx));
+        }
+    }
+
+    #[test]
+    fn notify_remote_cells_broadcasts_like_a_put() {
+        let tq = grpo_tq(2);
+        let idx = tq.alloc_indices(1)[0];
+        // Payload lives "elsewhere"; only metadata arrives here.
+        tq.notify_remote_cells(&[(idx, Column::Prompts, Some(6))])
+            .unwrap();
+        assert_eq!(tq.controller("rollout").ready_depth(), 1);
+        assert_eq!(tq.resident_rows(), 1);
+        // Duplicate and forged-index notifications are rejected whole.
+        assert!(tq
+            .notify_remote_cells(&[(idx, Column::Prompts, Some(6))])
+            .is_err());
+        // ...including duplicates WITHIN one batch: nothing may be
+        // recorded or broadcast for a rejected batch.
+        let idx2 = tq.alloc_indices(1)[0];
+        assert!(tq
+            .notify_remote_cells(&[
+                (idx2, Column::Prompts, Some(2)),
+                (idx2, Column::Prompts, Some(2)),
+            ])
+            .is_err());
+        assert_eq!(
+            tq.controller("rollout").ready_depth(),
+            1,
+            "rejected batch recorded nothing (only the earlier row is \
+             ready)"
+        );
+        assert!(tq
+            .notify_remote_cells(&[(
+                GlobalIndex(99),
+                Column::Prompts,
+                None,
+            )])
+            .is_err());
+        // A put to a notified cell is a duplicate too.
+        assert!(tq
+            .put(idx, Column::Prompts, Value::I32s(vec![1]))
             .is_err());
     }
 

@@ -1,0 +1,634 @@
+//! Storage-unit handles: the placement boundary of the data plane.
+//!
+//! The paper's §3.2 topology puts sample payloads in *distributed*
+//! storage units behind a metadata-only control plane. A [`UnitHandle`]
+//! is one such unit as seen by a peer: [`LocalUnit`] is the in-process
+//! fast path (what the Trainer uses — zero copy, no syscalls), and
+//! [`RemoteUnit`] speaks the length-prefixed binary frame codec
+//! ([`crate::transfer_queue::frame`]) to a [`UnitServer`] hosted in
+//! another process (`asyncflow storage-unit --connect`).
+//!
+//! Errors are two-tier on purpose: [`UnitCallError::Rejected`] is the
+//! unit saying "no" (duplicate write, protocol misuse) and must
+//! propagate; [`UnitCallError::Transport`] is the *path* to the unit
+//! failing, which callers treat as a failover signal (the coordinator
+//! detaches the unit and serves from its local replica).
+
+use std::fmt;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::column::{Column, GlobalIndex, Value};
+use super::data_plane::{StorageUnit, WriteNotification};
+use super::frame::{
+    read_frame, write_frame, UnitReply, UnitRequest, UnitStatsSnapshot,
+};
+
+/// How a storage-unit call failed.
+#[derive(Debug)]
+pub enum UnitCallError {
+    /// The unit processed the request and rejected it (application
+    /// error — e.g. a duplicate cell write). Propagate.
+    Rejected(String),
+    /// The unit could not be reached or the connection died mid-call.
+    /// Failover material.
+    Transport(String),
+}
+
+impl fmt::Display for UnitCallError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            UnitCallError::Rejected(m) => write!(f, "unit rejected: {m}"),
+            UnitCallError::Transport(m) => {
+                write!(f, "unit transport failed: {m}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for UnitCallError {}
+
+/// One storage unit as seen by a peer (the coordinator's router or a
+/// direct-fetching client).
+pub trait UnitHandle: Send + Sync {
+    /// Where the unit serves its payload socket; `None` in-process.
+    fn endpoint(&self) -> Option<String>;
+
+    /// Batched value-first write. Cells are applied in order; the first
+    /// rejected cell aborts the rest (duplicates are rejected).
+    fn put_cells(
+        &self,
+        cells: &[(GlobalIndex, Column, Value)],
+    ) -> Result<(), UnitCallError>;
+
+    /// Batched payload fetch: one entry per index, in request order;
+    /// `None` when the row lacks any requested column on this unit.
+    fn fetch_rows(
+        &self,
+        indices: &[GlobalIndex],
+        columns: &[Column],
+    ) -> Result<Vec<Option<Vec<Value>>>, UnitCallError>;
+
+    fn has_cell(
+        &self,
+        index: GlobalIndex,
+        column: &Column,
+    ) -> Result<bool, UnitCallError>;
+
+    fn evict(&self, indices: &[GlobalIndex]) -> Result<(), UnitCallError>;
+
+    /// Metadata-only inventory of resident cells.
+    fn scan(&self) -> Result<Vec<WriteNotification>, UnitCallError>;
+
+    fn stats(&self) -> Result<UnitStatsSnapshot, UnitCallError>;
+}
+
+// ===========================================================================
+// LocalUnit — the in-process fast path
+// ===========================================================================
+
+/// In-process unit handle: today's zero-copy path, now behind the same
+/// trait the remote path uses.
+pub struct LocalUnit {
+    store: Arc<StorageUnit>,
+}
+
+impl LocalUnit {
+    pub fn new(store: Arc<StorageUnit>) -> Self {
+        LocalUnit { store }
+    }
+
+    pub fn store(&self) -> &Arc<StorageUnit> {
+        &self.store
+    }
+}
+
+impl UnitHandle for LocalUnit {
+    fn endpoint(&self) -> Option<String> {
+        None
+    }
+
+    fn put_cells(
+        &self,
+        cells: &[(GlobalIndex, Column, Value)],
+    ) -> Result<(), UnitCallError> {
+        for (idx, col, val) in cells {
+            self.store
+                .put(*idx, col.clone(), val.clone())
+                .map_err(|e| UnitCallError::Rejected(format!("{e:#}")))?;
+        }
+        Ok(())
+    }
+
+    fn fetch_rows(
+        &self,
+        indices: &[GlobalIndex],
+        columns: &[Column],
+    ) -> Result<Vec<Option<Vec<Value>>>, UnitCallError> {
+        Ok(indices
+            .iter()
+            .map(|idx| self.store.get_row(*idx, columns))
+            .collect())
+    }
+
+    fn has_cell(
+        &self,
+        index: GlobalIndex,
+        column: &Column,
+    ) -> Result<bool, UnitCallError> {
+        Ok(self.store.has_cell(index, column))
+    }
+
+    fn evict(&self, indices: &[GlobalIndex]) -> Result<(), UnitCallError> {
+        for idx in indices {
+            self.store.evict(*idx);
+        }
+        Ok(())
+    }
+
+    fn scan(&self) -> Result<Vec<WriteNotification>, UnitCallError> {
+        let mut out = Vec::new();
+        self.store.for_each_cell(&mut |n| out.push(n));
+        Ok(out)
+    }
+
+    fn stats(&self) -> Result<UnitStatsSnapshot, UnitCallError> {
+        Ok(UnitStatsSnapshot {
+            rows: self.store.row_count() as u64,
+            bytes_written: self.store.bytes_written(),
+            bytes_read: self.store.bytes_read(),
+        })
+    }
+}
+
+// ===========================================================================
+// RemoteUnit — binary frames over TCP
+// ===========================================================================
+
+type FrameConn = (BufReader<TcpStream>, TcpStream);
+
+/// Client handle to a [`UnitServer`] in another process. Connects
+/// lazily; a dropped connection is re-dialed exactly once per call, so a
+/// unit restart is transparent while a dead unit fails fast.
+pub struct RemoteUnit {
+    endpoint: String,
+    conn: Mutex<Option<FrameConn>>,
+}
+
+impl RemoteUnit {
+    /// A handle for `endpoint` (`host:port`). No I/O happens until the
+    /// first call.
+    pub fn new(endpoint: impl Into<String>) -> Self {
+        RemoteUnit { endpoint: endpoint.into(), conn: Mutex::new(None) }
+    }
+
+    fn dial(&self) -> Result<FrameConn, UnitCallError> {
+        let stream = TcpStream::connect(&self.endpoint).map_err(|e| {
+            UnitCallError::Transport(format!(
+                "connecting to unit {}: {e}",
+                self.endpoint
+            ))
+        })?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone().map_err(|e| {
+            UnitCallError::Transport(format!("cloning unit stream: {e}"))
+        })?);
+        Ok((reader, stream))
+    }
+
+    /// One request/response round-trip. Holds the connection lock for
+    /// the duration, so concurrent callers serialize per unit (open one
+    /// handle per worker for pipelining, as with the JSONL transport).
+    pub fn call(
+        &self,
+        req: &UnitRequest,
+    ) -> Result<UnitReply, UnitCallError> {
+        let payload = req.encode();
+        let mut guard = self.conn.lock().unwrap();
+        let mut last_err = None;
+        for _attempt in 0..2 {
+            if guard.is_none() {
+                match self.dial() {
+                    Ok(c) => *guard = Some(c),
+                    Err(e) => {
+                        last_err = Some(e);
+                        continue;
+                    }
+                }
+            }
+            let (reader, writer) = guard.as_mut().unwrap();
+            let sent = write_frame(writer, &payload)
+                .and_then(|_| read_frame(reader));
+            match sent {
+                Ok(frame) => {
+                    return UnitReply::decode(&frame).map_err(|e| {
+                        // A codec mismatch poisons the stream: drop it.
+                        *guard = None;
+                        UnitCallError::Transport(format!(
+                            "bad reply from unit {}: {e:#}",
+                            self.endpoint
+                        ))
+                    });
+                }
+                Err(e) => {
+                    // Connection died; retry once on a fresh dial.
+                    *guard = None;
+                    last_err = Some(UnitCallError::Transport(format!(
+                        "unit {}: {e:#}",
+                        self.endpoint
+                    )));
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            UnitCallError::Transport("unreachable".into())
+        }))
+    }
+
+    fn expect_ok(&self, req: &UnitRequest) -> Result<(), UnitCallError> {
+        match self.call(req)? {
+            UnitReply::Ok => Ok(()),
+            UnitReply::Err(m) => Err(UnitCallError::Rejected(m)),
+            other => Err(UnitCallError::Transport(format!(
+                "unit {} sent an unexpected reply {other:?}",
+                self.endpoint
+            ))),
+        }
+    }
+}
+
+impl UnitHandle for RemoteUnit {
+    fn endpoint(&self) -> Option<String> {
+        Some(self.endpoint.clone())
+    }
+
+    fn put_cells(
+        &self,
+        cells: &[(GlobalIndex, Column, Value)],
+    ) -> Result<(), UnitCallError> {
+        self.expect_ok(&UnitRequest::Put { cells: cells.to_vec() })
+    }
+
+    fn fetch_rows(
+        &self,
+        indices: &[GlobalIndex],
+        columns: &[Column],
+    ) -> Result<Vec<Option<Vec<Value>>>, UnitCallError> {
+        match self.call(&UnitRequest::Fetch {
+            indices: indices.to_vec(),
+            columns: columns.to_vec(),
+        })? {
+            UnitReply::Rows(rows) if rows.len() == indices.len() => Ok(rows),
+            UnitReply::Err(m) => Err(UnitCallError::Rejected(m)),
+            other => Err(UnitCallError::Transport(format!(
+                "unit {} sent an unexpected reply {other:?}",
+                self.endpoint
+            ))),
+        }
+    }
+
+    fn has_cell(
+        &self,
+        index: GlobalIndex,
+        column: &Column,
+    ) -> Result<bool, UnitCallError> {
+        match self.call(&UnitRequest::Has { index, column: column.clone() })?
+        {
+            UnitReply::Bool(b) => Ok(b),
+            UnitReply::Err(m) => Err(UnitCallError::Rejected(m)),
+            other => Err(UnitCallError::Transport(format!(
+                "unit {} sent an unexpected reply {other:?}",
+                self.endpoint
+            ))),
+        }
+    }
+
+    fn evict(&self, indices: &[GlobalIndex]) -> Result<(), UnitCallError> {
+        self.expect_ok(&UnitRequest::Evict { indices: indices.to_vec() })
+    }
+
+    fn scan(&self) -> Result<Vec<WriteNotification>, UnitCallError> {
+        match self.call(&UnitRequest::Scan)? {
+            UnitReply::Cells(cells) => Ok(cells),
+            UnitReply::Err(m) => Err(UnitCallError::Rejected(m)),
+            other => Err(UnitCallError::Transport(format!(
+                "unit {} sent an unexpected reply {other:?}",
+                self.endpoint
+            ))),
+        }
+    }
+
+    fn stats(&self) -> Result<UnitStatsSnapshot, UnitCallError> {
+        match self.call(&UnitRequest::Stats)? {
+            UnitReply::Stats(s) => Ok(s),
+            UnitReply::Err(m) => Err(UnitCallError::Rejected(m)),
+            other => Err(UnitCallError::Transport(format!(
+                "unit {} sent an unexpected reply {other:?}",
+                self.endpoint
+            ))),
+        }
+    }
+}
+
+// ===========================================================================
+// UnitServer — hosts a StorageUnit behind the binary frame codec
+// ===========================================================================
+
+/// TCP server exposing one [`StorageUnit`] over the binary frame codec
+/// (`asyncflow storage-unit`, tests, and the data-plane bench).
+///
+/// Thread-per-connection, like the JSONL service server; established
+/// connections are tracked so [`UnitServer::stop`] can sever them — the
+/// "kill a storage unit" path in tests is a real mid-stream disconnect,
+/// not just a closed listener.
+pub struct UnitServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    store: Arc<StorageUnit>,
+}
+
+impl UnitServer {
+    /// Bind and serve `store` on `addr` (port 0 for ephemeral).
+    pub fn bind(
+        store: Arc<StorageUnit>,
+        addr: impl ToSocketAddrs,
+    ) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).context("binding storage-unit port")?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let accept_thread = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let store = store.clone();
+            std::thread::Builder::new()
+                .name("unit-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        if let Ok(tracked) = stream.try_clone() {
+                            conns.lock().unwrap().push(tracked);
+                        }
+                        let store = store.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("unit-conn".into())
+                            .spawn(move || serve_unit_conn(store, stream));
+                    }
+                })
+                .expect("spawning storage-unit accept thread")
+        };
+        Ok(UnitServer {
+            local_addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            conns,
+            store,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn port(&self) -> u16 {
+        self.local_addr.port()
+    }
+
+    /// The served store (tests inspect its byte counters to prove
+    /// payloads flowed over the unit socket).
+    pub fn store(&self) -> Arc<StorageUnit> {
+        self.store.clone()
+    }
+
+    /// Sever established connections without stopping the listener —
+    /// simulates a connection blip (peers re-dial transparently).
+    pub fn sever_connections(&self) {
+        for c in self.conns.lock().unwrap().drain(..) {
+            c.shutdown(std::net::Shutdown::Both).ok();
+        }
+    }
+
+    /// Stop accepting AND sever established connections — peers observe
+    /// a hard transport failure, exactly what a crashed unit looks like.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        TcpStream::connect(self.local_addr).ok();
+        for c in self.conns.lock().unwrap().drain(..) {
+            c.shutdown(std::net::Shutdown::Both).ok();
+        }
+        if let Some(h) = self.accept_thread.take() {
+            h.join().ok();
+        }
+    }
+
+    /// Block on the accept loop forever (the CLI path).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            h.join().ok();
+        }
+    }
+}
+
+fn apply_unit_request(
+    store: &StorageUnit,
+    req: UnitRequest,
+) -> UnitReply {
+    match req {
+        UnitRequest::Put { cells } => {
+            for (idx, col, val) in cells {
+                // Idempotent re-send: the client retries a Put whose
+                // connection died between apply and ack. An identical
+                // existing value is that retry; a different one is a
+                // genuine duplicate write.
+                if store.has_cell(idx, &col) {
+                    if store.get(idx, &col).as_ref() == Some(&val) {
+                        continue;
+                    }
+                    return UnitReply::Err(format!(
+                        "storage unit {}: duplicate write to {idx}/{col}",
+                        store.unit_id
+                    ));
+                }
+                if let Err(e) = store.put(idx, col, val) {
+                    return UnitReply::Err(format!("{e:#}"));
+                }
+            }
+            UnitReply::Ok
+        }
+        UnitRequest::Fetch { indices, columns } => UnitReply::Rows(
+            indices
+                .iter()
+                .map(|idx| store.get_row(*idx, &columns))
+                .collect(),
+        ),
+        UnitRequest::Has { index, column } => {
+            UnitReply::Bool(store.has_cell(index, &column))
+        }
+        UnitRequest::Evict { indices } => {
+            for idx in indices {
+                store.evict(idx);
+            }
+            UnitReply::Ok
+        }
+        UnitRequest::Scan => {
+            let mut cells = Vec::new();
+            store.for_each_cell(&mut |n| cells.push(n));
+            UnitReply::Cells(cells)
+        }
+        UnitRequest::Stats => UnitReply::Stats(UnitStatsSnapshot {
+            rows: store.row_count() as u64,
+            bytes_written: store.bytes_written(),
+            bytes_read: store.bytes_read(),
+        }),
+    }
+}
+
+fn serve_unit_conn(store: Arc<StorageUnit>, stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let Ok(frame) = read_frame(&mut reader) else { return };
+        let reply = match UnitRequest::decode(&frame) {
+            Ok(req) => apply_unit_request(&store, req),
+            Err(e) => UnitReply::Err(format!("bad request frame: {e:#}")),
+        };
+        if write_frame(&mut writer, &reply.encode()).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn served_unit() -> (UnitServer, RemoteUnit) {
+        let store = Arc::new(StorageUnit::new(0));
+        let server = UnitServer::bind(store, ("127.0.0.1", 0)).unwrap();
+        let remote =
+            RemoteUnit::new(format!("127.0.0.1:{}", server.port()));
+        (server, remote)
+    }
+
+    #[test]
+    fn local_and_remote_handles_agree() {
+        let (server, remote) = served_unit();
+        let cells = vec![
+            (GlobalIndex(0), Column::Prompts, Value::I32s(vec![1, 2])),
+            (GlobalIndex(0), Column::Rewards, Value::F32(0.5)),
+            (GlobalIndex(4), Column::Prompts, Value::I32s(vec![9])),
+        ];
+        remote.put_cells(&cells).unwrap();
+
+        let local = LocalUnit::new(server.store());
+        assert_eq!(local.endpoint(), None);
+        assert!(remote.endpoint().is_some());
+
+        let cols = [Column::Prompts];
+        let via_remote = remote
+            .fetch_rows(&[GlobalIndex(0), GlobalIndex(4)], &cols)
+            .unwrap();
+        let via_local = local
+            .fetch_rows(&[GlobalIndex(0), GlobalIndex(4)], &cols)
+            .unwrap();
+        assert_eq!(via_remote, via_local);
+        assert_eq!(
+            via_remote[0],
+            Some(vec![Value::I32s(vec![1, 2])])
+        );
+
+        assert!(remote.has_cell(GlobalIndex(0), &Column::Rewards).unwrap());
+        assert!(!remote
+            .has_cell(GlobalIndex(0), &Column::Responses)
+            .unwrap());
+
+        let stats = remote.stats().unwrap();
+        assert_eq!(stats.rows, 2);
+        assert!(stats.bytes_written > 0);
+
+        let mut scanned = remote.scan().unwrap();
+        scanned.sort_by_key(|n| (n.index, n.column.name().to_string()));
+        assert_eq!(scanned.len(), 3);
+        assert_eq!(scanned[0].token_len, Some(2));
+
+        remote.evict(&[GlobalIndex(0)]).unwrap();
+        assert_eq!(remote.stats().unwrap().rows, 1);
+        server.stop();
+    }
+
+    #[test]
+    fn duplicate_write_is_rejected_not_transport() {
+        let (server, remote) = served_unit();
+        let cell =
+            (GlobalIndex(1), Column::Rewards, Value::F32(1.0));
+        remote.put_cells(std::slice::from_ref(&cell)).unwrap();
+        // An identical re-send is an at-least-once retry: accepted.
+        remote.put_cells(std::slice::from_ref(&cell)).unwrap();
+        // A different value for the same cell is a genuine duplicate.
+        match remote.put_cells(&[(
+            GlobalIndex(1),
+            Column::Rewards,
+            Value::F32(2.0),
+        )]) {
+            Err(UnitCallError::Rejected(m)) => {
+                assert!(m.contains("duplicate"), "got {m}")
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // The connection survives an application error, and the value
+        // is unchanged.
+        assert_eq!(
+            remote
+                .fetch_rows(&[GlobalIndex(1)], &[Column::Rewards])
+                .unwrap(),
+            vec![Some(vec![Value::F32(1.0)])]
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn stopped_server_turns_into_transport_errors() {
+        let (server, remote) = served_unit();
+        remote
+            .put_cells(&[(
+                GlobalIndex(0),
+                Column::Prompts,
+                Value::I32s(vec![1]),
+            )])
+            .unwrap();
+        server.stop();
+        match remote.stats() {
+            Err(UnitCallError::Transport(_)) => {}
+            other => panic!("expected transport error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn remote_redials_after_a_connection_blip() {
+        let (server, remote) = served_unit();
+        remote
+            .put_cells(&[(
+                GlobalIndex(0),
+                Column::Prompts,
+                Value::I32s(vec![1]),
+            )])
+            .unwrap();
+        // Server-side disconnect; the listener stays up, so the next
+        // call re-dials and succeeds.
+        server.sever_connections();
+        assert_eq!(remote.stats().unwrap().rows, 1);
+        server.stop();
+    }
+}

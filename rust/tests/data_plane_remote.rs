@@ -1,0 +1,355 @@
+//! Distributed data-plane integration tests: remote storage units
+//! serving payload bytes over the binary frame codec, with the
+//! coordinator as the metadata-only control plane.
+//!
+//! Covers the acceptance path for `asyncflow storage-unit`:
+//! * direct client reads/writes exchange payloads with the unit
+//!   sockets, not the coordinator socket;
+//! * killing a unit mid-stream degrades reads to the via-coordinator
+//!   fallback with conservation intact (mirrors the rollout kill
+//!   tests);
+//! * a property test pinning placement routing and the relay path to
+//!   byte-identical batches.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use asyncflow::runtime::ParamSet;
+use asyncflow::service::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec, TcpJsonlServer,
+};
+use asyncflow::transfer_queue::{
+    Column, GlobalIndex, RemoteUnit, StorageUnit, TaskSpec, UnitHandle,
+    UnitServer, Value,
+};
+use asyncflow::util::prop;
+use asyncflow::util::rng::Rng;
+
+/// Session + JSONL server + `attach` remote unit servers on the first
+/// `attach` placement slots (the rest stay coordinator-local).
+fn session_with_units(
+    storage_units: usize,
+    attach: usize,
+) -> (Arc<Session>, TcpJsonlServer, Vec<UnitServer>) {
+    let session = Arc::new(
+        Session::init_engines(
+            SessionSpec {
+                storage_units,
+                tasks: vec![
+                    TaskSpec::new("rollout", vec![Column::Prompts]),
+                    TaskSpec::new("collect", vec![Column::Responses]),
+                ],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    );
+    let server =
+        TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0)).unwrap();
+    let admin = ServiceClient::in_proc(session.clone());
+    let mut units = Vec::new();
+    for slot in 0..attach {
+        let store = Arc::new(StorageUnit::new(slot));
+        let unit_server =
+            UnitServer::bind(store, ("127.0.0.1", 0)).unwrap();
+        admin
+            .attach_unit(slot, &format!("127.0.0.1:{}", unit_server.port()))
+            .unwrap();
+        units.push(unit_server);
+    }
+    (session, server, units)
+}
+
+fn rollout_spec(count: usize, min: usize) -> GetBatchSpec {
+    GetBatchSpec {
+        task: "rollout".into(),
+        group: 0,
+        columns: vec![Column::Prompts],
+        count,
+        min,
+        timeout_ms: 2000,
+    }
+}
+
+#[test]
+fn direct_client_fetches_payloads_from_unit_sockets() {
+    const ROWS: usize = 24;
+    let (session, server, units) = session_with_units(3, 2);
+    let feeder = ServiceClient::in_proc(session.clone());
+    let idx = feeder
+        .put_batch(
+            (0..ROWS)
+                .map(|i| {
+                    PutRow::new(vec![(
+                        Column::Prompts,
+                        Value::I32s(vec![i as i32; 16]),
+                    )])
+                })
+                .collect(),
+        )
+        .unwrap();
+    let expected: HashMap<GlobalIndex, Value> = idx
+        .iter()
+        .enumerate()
+        .map(|(i, id)| (*id, Value::I32s(vec![i as i32; 16])))
+        .collect();
+
+    let consumer =
+        ServiceClient::connect(("127.0.0.1", server.port())).unwrap();
+    let spec = rollout_spec(8, 1);
+    let mut seen = HashSet::new();
+    while seen.len() < ROWS {
+        match consumer.get_batch(&spec).unwrap() {
+            GetBatchReply::Ready(b) => {
+                for (id, row) in b.indices.iter().zip(&b.rows) {
+                    assert_eq!(&row[0], expected.get(id).unwrap());
+                    assert!(seen.insert(*id), "row {id} served twice");
+                }
+            }
+            GetBatchReply::NotReady => continue,
+            GetBatchReply::Closed => panic!("premature close"),
+        }
+    }
+    // Units 0 and 1 are attached: two thirds of the payload bytes must
+    // have been read off the unit stores (unit 2's shard relays).
+    let unit_reads: u64 =
+        units.iter().map(|u| u.store().bytes_read()).sum();
+    assert!(
+        unit_reads > 0,
+        "direct fetch must read payloads from the unit stores"
+    );
+    for u in units {
+        u.stop();
+    }
+    server.stop();
+}
+
+#[test]
+fn direct_writes_are_value_first_and_visible_everywhere() {
+    const ROWS: usize = 16;
+    let (session, server, units) = session_with_units(2, 2);
+    let writer =
+        ServiceClient::connect(("127.0.0.1", server.port())).unwrap();
+    writer.refresh_topology().unwrap();
+    let payload =
+        |i: usize| Value::I32s(vec![i as i32 + 100; 32]);
+    let idx = writer
+        .put_batch(
+            (0..ROWS)
+                .map(|i| {
+                    PutRow::new(vec![(Column::Prompts, payload(i))])
+                })
+                .collect(),
+        )
+        .unwrap();
+    assert_eq!(idx.len(), ROWS);
+    let expected: HashMap<GlobalIndex, Value> = idx
+        .iter()
+        .enumerate()
+        .map(|(i, id)| (*id, payload(i)))
+        .collect();
+
+    // Payload bytes landed on the unit stores (value-first), and the
+    // control plane counts the rows as resident without holding their
+    // payloads.
+    let unit_written: u64 =
+        units.iter().map(|u| u.store().bytes_written()).sum();
+    assert!(
+        unit_written >= (ROWS * 32 * 4) as u64,
+        "all payload bytes must land on the units, got {unit_written}"
+    );
+    let stats = feeder_stats(&session);
+    assert_eq!(stats, ROWS);
+
+    // An in-proc reader sees every row: the coordinator resolves the
+    // shadow cells through the attached units.
+    let reader = ServiceClient::in_proc(session.clone());
+    let spec = rollout_spec(8, 1);
+    let mut seen = HashSet::new();
+    while seen.len() < ROWS {
+        match reader.get_batch(&spec).unwrap() {
+            GetBatchReply::Ready(b) => {
+                for (id, row) in b.indices.iter().zip(&b.rows) {
+                    assert_eq!(&row[0], expected.get(id).unwrap());
+                    assert!(seen.insert(*id));
+                }
+            }
+            GetBatchReply::NotReady => continue,
+            GetBatchReply::Closed => panic!("premature close"),
+        }
+    }
+    for u in units {
+        u.stop();
+    }
+    server.stop();
+}
+
+fn feeder_stats(session: &Arc<Session>) -> usize {
+    ServiceClient::in_proc(session.clone())
+        .stats()
+        .unwrap()
+        .resident_rows
+}
+
+/// The kill test (mirrors `rollout_elastic.rs`): payloads were relayed
+/// through the coordinator, so its replica holds everything; killing
+/// the unit mid-stream must degrade direct reads to the
+/// via-coordinator fallback with every row served exactly once.
+#[test]
+fn killed_unit_reads_fall_back_through_coordinator() {
+    const ROWS: usize = 20;
+    let (session, server, mut units) = session_with_units(2, 1);
+    let feeder = ServiceClient::in_proc(session.clone());
+    let idx = feeder
+        .put_batch(
+            (0..ROWS)
+                .map(|i| {
+                    PutRow::new(vec![(
+                        Column::Prompts,
+                        Value::I32s(vec![i as i32; 24]),
+                    )])
+                })
+                .collect(),
+        )
+        .unwrap();
+    let expected: HashMap<GlobalIndex, Value> = idx
+        .iter()
+        .enumerate()
+        .map(|(i, id)| (*id, Value::I32s(vec![i as i32; 24])))
+        .collect();
+
+    let consumer =
+        ServiceClient::connect(("127.0.0.1", server.port())).unwrap();
+    consumer.refresh_topology().unwrap();
+    let mut seen: HashSet<GlobalIndex> = HashSet::new();
+
+    // First batch flows while the unit is alive — payload bytes off the
+    // unit socket.
+    match consumer.get_batch(&rollout_spec(4, 4)).unwrap() {
+        GetBatchReply::Ready(b) => {
+            for (id, row) in b.indices.iter().zip(&b.rows) {
+                assert_eq!(&row[0], expected.get(id).unwrap());
+                assert!(seen.insert(*id));
+            }
+        }
+        other => panic!("expected a ready batch, got {other:?}"),
+    }
+    assert!(
+        units[0].store().bytes_read() > 0,
+        "pre-kill reads must hit the unit"
+    );
+
+    // Kill the storage unit: established connections sever, the
+    // listener dies.
+    units.remove(0).stop();
+
+    // The stream keeps draining through the coordinator fallback —
+    // conservation holds (no row lost, none double-served).
+    while seen.len() < ROWS {
+        match consumer.get_batch(&rollout_spec(4, 1)).unwrap() {
+            GetBatchReply::Ready(b) => {
+                for (id, row) in b.indices.iter().zip(&b.rows) {
+                    assert_eq!(
+                        &row[0],
+                        expected.get(id).unwrap(),
+                        "fallback payload must be byte-identical"
+                    );
+                    assert!(seen.insert(*id), "row {id} served twice");
+                }
+            }
+            GetBatchReply::NotReady => continue,
+            GetBatchReply::Closed => panic!("premature close"),
+        }
+    }
+    assert_eq!(seen.len(), ROWS, "conservation across the unit kill");
+
+    // Writes for the dead shard fail over too: the coordinator
+    // detaches the slot and serves locally.
+    feeder
+        .put_batch(vec![PutRow::new(vec![(
+            Column::Prompts,
+            Value::I32s(vec![7; 4]),
+        )])])
+        .unwrap();
+    let stats = ServiceClient::in_proc(session.clone()).stats().unwrap();
+    assert!(
+        stats.units[0].endpoint.is_none(),
+        "dead unit must be detached after the failed write"
+    );
+    server.stop();
+}
+
+fn random_value(rng: &mut Rng) -> Value {
+    match rng.below(5) {
+        0 => Value::I32s(
+            (0..1 + rng.below(64))
+                .map(|_| rng.next_u64() as i32)
+                .collect(),
+        ),
+        1 => Value::F32s(
+            (0..1 + rng.below(64)).map(|_| rng.f32() - 0.5).collect(),
+        ),
+        2 => Value::F32(rng.f32() * 10.0),
+        3 => Value::U64(rng.range_u64(0, 1 << 50)),
+        _ => Value::Text(format!("meta-{}", rng.below(100_000))),
+    }
+}
+
+/// Property: for every row, the direct placement path (binary fetch
+/// from the owning unit) and the via-coordinator relay path return the
+/// same bytes that were ingested.
+#[test]
+fn placement_and_relay_paths_return_identical_batches() {
+    let (session, server, units) = session_with_units(2, 1);
+    let feeder = ServiceClient::in_proc(session.clone());
+    let relay =
+        ServiceClient::connect_relay(("127.0.0.1", server.port()))
+            .unwrap();
+    let direct_unit =
+        RemoteUnit::new(format!("127.0.0.1:{}", units[0].port()));
+
+    prop::check_sized("placement-vs-relay", 16, 8, |rng, case| {
+        let n = 1 + case.size.min(8);
+        let mut values = Vec::with_capacity(n);
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = random_value(rng);
+            values.push(v.clone());
+            rows.push(PutRow::new(vec![(Column::Prompts, v)]));
+        }
+        let idx = feeder.put_batch(rows).unwrap();
+
+        // Relay path: payloads via the coordinator JSONL socket.
+        let relayed =
+            relay.fetch_rows(&idx, &[Column::Prompts]).unwrap();
+        assert_eq!(relayed.indices, idx);
+        for (row, want) in relayed.rows.iter().zip(&values) {
+            assert_eq!(&row[0], want, "relay path diverged");
+        }
+
+        // Placement path: unit 0 owns the even indices; fetch them
+        // over the binary codec straight from the unit.
+        let owned: Vec<usize> =
+            (0..n).filter(|&i| idx[i].0 % 2 == 0).collect();
+        if owned.is_empty() {
+            return;
+        }
+        let owned_idx: Vec<GlobalIndex> =
+            owned.iter().map(|&i| idx[i]).collect();
+        let fetched = direct_unit
+            .fetch_rows(&owned_idx, &[Column::Prompts])
+            .unwrap();
+        for (k, &i) in owned.iter().enumerate() {
+            let got = fetched[k]
+                .as_ref()
+                .unwrap_or_else(|| panic!("unit lacks row {}", idx[i]));
+            assert_eq!(&got[0], &values[i], "placement path diverged");
+        }
+    });
+
+    for u in units {
+        u.stop();
+    }
+    server.stop();
+}
