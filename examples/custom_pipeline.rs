@@ -1,0 +1,280 @@
+//! A custom RL dataflow on the stage-graph pipeline API: best-of-n
+//! rejection sampling with the reward stage running in a **separate
+//! process over TCP**.
+//!
+//! The graph (declared as a `PipelineSpec`, no bespoke worker wiring):
+//!
+//! ```text
+//!  feeder ─▶ rollout(×2, lease verbs) ─▶ reference ─▶ update(driver)
+//!                 └──▶ [reward: TCP-attached process] ─▶ filter(top-k)
+//! ```
+//!
+//! * The parent process runs feeder / rollout / reference / filter /
+//!   update through a `PipelineRunner` and serves the session over
+//!   TCP.
+//! * The **only** reward grader is a child process (this example
+//!   re-execs itself) attached with `run_remote_stage` — the exact
+//!   code path of `asyncflow stage --connect HOST:PORT --stage
+//!   reward`. If it never attached, the run could not finish: the
+//!   grading really happens out-of-process.
+//! * The filter keeps each group's top-k rollouts by reward and emits
+//!   `Advantages = 1.0` for survivors only, so the update driver
+//!   trains on k of G rollouts per prompt — rejection sampling as a
+//!   spec, not new plumbing.
+//!
+//! ```sh
+//! cargo run --release --example custom_pipeline
+//! ```
+
+use std::process::{Child, Command};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use asyncflow::coordinator::IterationGate;
+use asyncflow::data::MathTaskGen;
+use asyncflow::exec::Shutdown;
+use asyncflow::pipeline::{
+    builtin_stage, run_remote_stage, FilterTopK, PipelineRunner,
+    PipelineSpec, PromptFeeder, ReferenceLogp, RolloutNode, Stage,
+    StageNode, TrainPlan, TrainPublish,
+};
+use asyncflow::rollout::WorkerOptions;
+use asyncflow::runtime::{
+    MockEngine, ParamSet, PolicyEngine, TrainEngine,
+};
+use asyncflow::service::{
+    ServiceClient, Session, SessionSpec, TcpJsonlServer,
+};
+
+const ITERATIONS: usize = 2;
+const GLOBAL_BATCH: usize = 16;
+const GROUP_SIZE: usize = 4;
+const SURVIVORS: usize = 2;
+const BATCH: usize = 8;
+const PROMPT_LEN: usize = 16;
+const MAX_LEN: usize = 48;
+
+const ADDR_ENV: &str = "CUSTOM_PIPELINE_REWARD_ADDR";
+
+/// Child mode: the TCP-attached reward grader — the same flow as
+/// `asyncflow stage --connect HOST:PORT --stage reward`.
+fn run_reward_process(addr: &str) -> Result<()> {
+    let client = ServiceClient::connect(addr)?;
+    let (input, mut stage) =
+        builtin_stage("reward", GROUP_SIZE, SURVIVORS)?;
+    let metrics = run_remote_stage(
+        &client,
+        "reward-tcp",
+        Some(&input),
+        stage.as_mut(),
+        &Shutdown::new(),
+    )?;
+    // The reward series lives in this process, not the coordinator.
+    if let Some(s) = metrics.series("reward") {
+        println!(
+            "[reward-tcp] graded {} rollouts, mean reward {:.3}",
+            s.points.len(),
+            s.mean()
+        );
+    }
+    Ok(())
+}
+
+/// Kill-on-drop guard so the child never outlives the demo.
+struct RewardProcess(Child);
+
+impl Drop for RewardProcess {
+    fn drop(&mut self) {
+        self.0.kill().ok();
+        self.0.wait().ok();
+    }
+}
+
+fn mock_policy() -> Result<Box<dyn PolicyEngine>> {
+    Ok(Box::new(MockEngine::new(BATCH, PROMPT_LEN, MAX_LEN)))
+}
+
+fn main() -> Result<()> {
+    if let Ok(addr) = std::env::var(ADDR_ENV) {
+        return run_reward_process(&addr);
+    }
+
+    // The served session carries the standard task graph minus the
+    // GRPO advantage task (nothing consumes it in this graph — it
+    // would read as a stalled consumer in the liveness stats); the
+    // spec adds the best-of-n "filter" task on top.
+    let mut session_spec = SessionSpec::grpo();
+    session_spec.tasks.retain(|t| t.name != "advantage");
+    let session = Arc::new(Session::init_engines(
+        session_spec,
+        ParamSet::new(0, vec![]),
+    )?);
+    let server = TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0))?;
+    let addr = server.local_addr();
+    println!(
+        "== best-of-n rejection sampling as a PipelineSpec: \
+         {ITERATIONS} iterations, {GLOBAL_BATCH} rollouts/iter in \
+         groups of {GROUP_SIZE}, top-{SURVIVORS} survive; reward stage \
+         in a separate process via {addr} =="
+    );
+
+    let reward_child = RewardProcess(
+        Command::new(std::env::current_exe()?)
+            .env(ADDR_ENV, addr.to_string())
+            .spawn()
+            .context("spawning the reward stage process")?,
+    );
+
+    let gate = IterationGate::new(1);
+    // The filter's input contract carries its own task declaration
+    // (readiness gated on RefLogp so rejected rollouts can be GC'd).
+    let mut spec =
+        PipelineSpec::new().task(FilterTopK::input().task_decl());
+
+    // Feeder source (staleness-gated prompt ingest).
+    {
+        let gate = gate.clone();
+        spec = spec.node(StageNode::source(
+            "feeder",
+            Box::new(move || {
+                Ok(Box::new(PromptFeeder::new(
+                    MathTaskGen::new(0, PROMPT_LEN),
+                    gate,
+                    ITERATIONS,
+                    GLOBAL_BATCH,
+                    GROUP_SIZE,
+                )) as Box<dyn Stage>)
+            }),
+        ));
+    }
+    // Two elastic rollout workers on the lease verbs.
+    for r in 0..2u64 {
+        let mut opts = WorkerOptions::new(format!("rollout-{r}"));
+        opts.lease_rows = BATCH;
+        spec = spec.node(StageNode::rollout(
+            format!("rollout-{r}"),
+            RolloutNode {
+                build: Box::new(mock_policy),
+                temperature: 1.0,
+                top_k: 32,
+                seed: r + 1,
+                opts,
+            },
+        ));
+    }
+    // Reference scorer.
+    spec = spec.node(StageNode::stage(
+        "reference",
+        Some(ReferenceLogp::input(BATCH)),
+        Box::new(|| {
+            Ok(Box::new(ReferenceLogp::new(
+                mock_policy()?,
+                PROMPT_LEN,
+                MAX_LEN,
+            )) as Box<dyn Stage>)
+        }),
+    ));
+    // NOTE: no in-process reward node — grading happens only in the
+    // TCP-attached child process.
+    // Best-of-n filter.
+    spec = spec.node(StageNode::stage(
+        "filter",
+        Some(FilterTopK::input().with_batch(BATCH, 1)),
+        Box::new(|| {
+            Ok(Box::new(FilterTopK::new(GROUP_SIZE, SURVIVORS)?)
+                as Box<dyn Stage>)
+        }),
+    ));
+    // Update driver: one train step per iteration (the survivors of
+    // each iteration fill exactly one engine batch).
+    {
+        let gate = gate.clone();
+        spec = spec.node(StageNode::driver(
+            "update",
+            TrainPublish::input(BATCH),
+            Box::new(move || {
+                Ok(Box::new(TrainPublish::new(
+                    Box::new(MockEngine::new(BATCH, PROMPT_LEN, MAX_LEN))
+                        as Box<dyn TrainEngine>,
+                    gate,
+                    TrainPlan {
+                        iterations: ITERATIONS as u64,
+                        steps_per_iter: (GLOBAL_BATCH / GROUP_SIZE
+                            * SURVIVORS
+                            / BATCH)
+                            as u64,
+                        batch: BATCH,
+                        prompt_len: PROMPT_LEN,
+                        max_len: MAX_LEN,
+                        lr: 1e-3,
+                    },
+                )) as Box<dyn Stage>)
+            }),
+        ));
+    }
+
+    let runner = PipelineRunner::new(ServiceClient::in_proc(session.clone()));
+    // Watchdog: if the reward child never attaches the run cannot
+    // finish — drain instead of hanging CI forever.
+    {
+        let shutdown = runner.shutdown_handle();
+        let client = ServiceClient::in_proc(session.clone());
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_secs(120));
+            if !shutdown.is_triggered() {
+                eprintln!("watchdog: draining stalled run");
+                shutdown.trigger();
+                let _ = client.shutdown();
+            }
+        });
+    }
+    let report = runner.run(spec)?;
+
+    let trained = report.metrics.counter("samples_trained");
+    let groups = report.metrics.counter("filter_groups");
+    let survivors = report.metrics.counter("filter_survivors");
+    println!(
+        "trained {trained} samples in {:.1}ms: {groups} groups filtered \
+         to {survivors} survivors",
+        report.wall_time_s * 1e3
+    );
+    let stats = session.stats()?;
+    for t in &stats.tasks {
+        println!(
+            "  task {:<10} ready={:<4} consumed={:<4} waiting={} \
+             oldest_ready={}",
+            t.name,
+            t.ready,
+            t.consumed,
+            t.waiting_consumers,
+            t.oldest_ready_age_ms
+                .map(|ms| format!("{ms}ms"))
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+    assert_eq!(
+        trained as usize,
+        ITERATIONS * GLOBAL_BATCH / GROUP_SIZE * SURVIVORS,
+        "update trained exactly the survivors"
+    );
+    assert_eq!(survivors, trained, "filter passed exactly the survivors");
+    // The filter only ever sees rows that carry a `Rewards` cell, and
+    // this process runs NO reward stage — so every one of the
+    // 2x16 rollouts reaching the filter proves the TCP-attached child
+    // graded it.
+    assert_eq!(
+        groups as usize,
+        ITERATIONS * GLOBAL_BATCH / GROUP_SIZE,
+        "every group was fully graded by the TCP-attached reward process"
+    );
+    println!(
+        "OK: all {} rollouts graded out-of-process; top-{SURVIVORS} of \
+         each group trained",
+        ITERATIONS * GLOBAL_BATCH
+    );
+
+    drop(reward_child);
+    server.stop();
+    Ok(())
+}

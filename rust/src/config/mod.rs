@@ -40,6 +40,14 @@ pub struct RlConfig {
     pub storage_units: usize,
     /// Load-balancing policy: "fcfs" | "token_balanced" | "shortest_first".
     pub policy: String,
+    /// Algorithm graph: "grpo" (group-relative advantages) or
+    /// "best_of_n" (rejection sampling — train on the top `survivors`
+    /// of each G-sized group). Both are `PipelineSpec`s over the same
+    /// built-in stages; see `Trainer::run`.
+    pub pipeline: String,
+    /// best_of_n only: rollouts kept per prompt group (top-k by
+    /// reward).
+    pub survivors: usize,
     pub seed: u64,
 }
 
@@ -59,6 +67,8 @@ impl Default for RlConfig {
             lease_ttl_ms: 1000,
             storage_units: 2,
             policy: "fcfs".into(),
+            pipeline: "grpo".into(),
+            survivors: 2,
             seed: 0,
         }
     }
@@ -80,10 +90,10 @@ impl RlConfig {
         if self.group_size == 0 {
             bail!("group_size must be >= 1");
         }
-        if engine_batch % self.group_size != 0
-            && self.group_size % engine_batch != 0
-            && self.global_batch % self.group_size != 0
-        {
+        // A non-dividing group size would make the feeder emit fewer
+        // rows than the update driver expects per iteration and the
+        // run would park forever — reject it outright.
+        if self.global_batch % self.group_size != 0 {
             bail!(
                 "group_size {} must divide global_batch {}",
                 self.group_size,
@@ -102,6 +112,30 @@ impl RlConfig {
         match self.policy.as_str() {
             "fcfs" | "token_balanced" | "shortest_first" => {}
             p => bail!("unknown policy {p:?}"),
+        }
+        match self.pipeline.as_str() {
+            "grpo" => {}
+            "best_of_n" => {
+                if self.survivors == 0 || self.survivors > self.group_size
+                {
+                    bail!(
+                        "best_of_n needs 1 <= survivors <= group_size, \
+                         got {} of {}",
+                        self.survivors,
+                        self.group_size
+                    );
+                }
+                let per_iter = self.global_batch / self.group_size
+                    * self.survivors;
+                if per_iter == 0 || per_iter % engine_batch != 0 {
+                    bail!(
+                        "best_of_n trains {per_iter} survivors per \
+                         iteration, which must be a positive multiple \
+                         of engine batch {engine_batch}"
+                    );
+                }
+            }
+            p => bail!("unknown pipeline {p:?} (grpo|best_of_n)"),
         }
         Ok(())
     }
@@ -149,6 +183,12 @@ impl RlConfig {
             if let Some(v) = s.get("policy") {
                 c.policy = v.as_str()?.to_string();
             }
+            if let Some(v) = s.get("pipeline") {
+                c.pipeline = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("survivors") {
+                c.survivors = v.as_usize()?;
+            }
             if let Some(v) = s.get("seed") {
                 c.seed = v.as_usize()? as u64;
             }
@@ -176,10 +216,45 @@ mod tests {
     }
 
     #[test]
+    fn non_dividing_group_size_rejected() {
+        let mut c = RlConfig::default();
+        // 40 is a multiple of the engine batch but NOT of group 16:
+        // the feeder would emit 2 groups (32 rows) per iteration while
+        // the update driver waits for 40 — reject at validate time.
+        c.global_batch = 40;
+        c.group_size = 16;
+        assert!(c.validate(8).is_err());
+        c.group_size = 8;
+        assert!(c.validate(8).is_ok());
+    }
+
+    #[test]
     fn unknown_policy_rejected() {
         let mut c = RlConfig::default();
         c.policy = "random".into();
         assert!(c.validate(8).is_err());
+    }
+
+    #[test]
+    fn best_of_n_pipeline_validated() {
+        let mut c = RlConfig::default();
+        c.pipeline = "best_of_n".into();
+        // defaults: global_batch 32, group_size 4, survivors 2 ->
+        // 16 survivors/iter, a multiple of engine batch 8.
+        c.validate(8).unwrap();
+        c.survivors = 0;
+        assert!(c.validate(8).is_err());
+        c.survivors = 5; // > group_size
+        assert!(c.validate(8).is_err());
+        c.survivors = 3; // 24 survivors/iter % 8 == 0 -> fine
+        c.validate(8).unwrap();
+        c.survivors = 1; // 8 survivors/iter -> fine
+        c.validate(8).unwrap();
+        c.group_size = 8;
+        c.survivors = 3; // 12 survivors/iter % 8 != 0
+        assert!(c.validate(8).is_err());
+        c.pipeline = "ppo".into();
+        assert!(c.validate(8).is_err(), "unknown pipeline");
     }
 
     #[test]

@@ -1,51 +1,55 @@
-//! The user-level `Trainer` (paper §5.1): the single algorithm controller
-//! that wires the GRPO task graph through the service API and runs the
-//! producer–consumer asynchronous workflow.
+//! The user-level `Trainer` (paper §5.1): the single algorithm
+//! controller. Since the stage-graph redesign it no longer hand-wires
+//! worker closures — it *declares* the algorithm as a
+//! [`PipelineSpec`] over the built-in stages and hands it to the
+//! [`PipelineRunner`], which compiles the graph into supervised
+//! producer–consumer loops speaking only [`ServiceClient`] verbs.
 //!
-//! Task graph (one worker thread per box; R rollout producers):
+//! GRPO graph (one node per box; R rollout producers):
 //!
 //! ```text
 //!  feeder ──Prompts──▶ rollout(×R) ──Responses,OldLogp──▶ reference ──RefLogp──▶
 //!                                   └─▶ reward ──Rewards──▶ advantage ──Advantages──▶ update
 //! ```
 //!
-//! Every edge is a TransferQueue column; every worker exchanges data
-//! through a [`ServiceClient`] over the in-process transport — the same
-//! verbs (`put_batch`, `get_batch`, `subscribe_weights`,
-//! `weight_sync_notify`) a remote worker would use against `asyncflow
-//! serve`, so the service API is the proven path, not a parallel one.
-//! The rollout stage runs on the elastic lease verbs (`lease_prompts`,
-//! `put_chunk`, ...) via [`crate::rollout::run_worker`]: generations
-//! stream in bounded chunks, finished rows unlock downstream stages
-//! while their group's long tail is still decoding, and additional
-//! workers can join this run's session over TCP mid-run.
-//! Consumers pull ready samples at micro-batch granularity, which is what
-//! makes the stages overlap (paper §4.1, Fig. 7). The update worker
-//! completes an iteration every `global_batch / B` steps, publishes new
-//! weights through `weight_sync_notify`, and bumps the IterationGate; the
-//! feeder blocks on the gate so rollout never runs more than `staleness`
-//! iterations ahead (§4.2).
+//! Every edge is a TransferQueue column; every node exchanges data
+//! through the service API — the same verbs remote workers use against
+//! `asyncflow serve`, so out-of-process stages (`asyncflow stage`,
+//! `asyncflow rollout-worker`) can join any of these task queues over
+//! TCP mid-run. The rollout nodes run on the elastic lease verbs
+//! (`lease_prompts`, `put_chunk`, ...): generations stream in bounded
+//! chunks and finished rows unlock downstream stages while their
+//! group's long tail is still decoding (§4.1, Fig. 7). The update
+//! driver completes an iteration every `global_batch / B` steps,
+//! publishes weights, and bumps the IterationGate; the feeder blocks
+//! on the gate so rollout never runs more than `staleness` iterations
+//! ahead (§4.2).
+//!
+//! Scenario diversity is a config knob, not new plumbing:
+//! `cfg.pipeline = "best_of_n"` swaps the advantage stage for the
+//! rejection-sampling filter (train on the top `cfg.survivors` of each
+//! G-sized group) — a different `PipelineSpec` over the same stages.
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::RlConfig;
-use crate::data::{self, MathTaskGen, EOS, PAD};
-use crate::exec::{Shutdown, WorkerPool};
+use crate::data::{MathTaskGen, EOS, PAD};
 use crate::metrics::Registry;
-use crate::rollout::{run_worker, WorkerOptions};
-use crate::runtime::{
-    ParamSet, PolicyEngine, Sampler, TrainBatch, TrainEngine,
+use crate::pipeline::{
+    FilterTopK, GroupAdvantage, PipelineRunner, PipelineSpec,
+    PromptFeeder, ReferenceLogp, RolloutNode, RuleReward, Stage,
+    StageNode, TrainPlan, TrainPublish,
 };
-use crate::service::{
-    GetBatchSpec, PutRow, ServiceClient, Session, SessionSpec,
-};
-use crate::transfer_queue::{Column, TransferQueue, Value};
+use crate::rollout::WorkerOptions;
+use crate::runtime::{ParamSet, PolicyEngine, TrainEngine};
+use crate::service::{ServiceClient, Session, SessionSpec};
 
-use super::grpo::GroupAssembler;
 use super::param_update::IterationGate;
 use super::timeline::Timeline;
+
+pub use crate::pipeline::build_train_batch;
 
 /// Factory constructing a policy engine *inside* its worker thread. The
 /// PJRT client types are not `Send`, so engines are thread-confined: the
@@ -96,15 +100,8 @@ impl TrainReport {
     }
 }
 
-fn col(name: &str) -> Column {
-    Column::Custom(name.to_string())
-}
-
-/// Long-poll interval for worker pulls: long enough to park the thread,
-/// short enough that shutdown is observed promptly.
-const PULL_TIMEOUT_MS: u64 = 50;
-
-/// The single-controller GRPO trainer.
+/// The single-controller trainer: declares the algorithm graph and
+/// runs it through the pipeline layer.
 pub struct Trainer {
     cfg: RlConfig,
     engines: EngineSet,
@@ -117,10 +114,18 @@ impl Trainer {
         if engines.rollout.is_empty() {
             anyhow::bail!("need at least one rollout engine");
         }
-        // `init_engines`: the GRPO task graph + initial weights, through
+        // `init_engines`: the task graph + initial weights, through
         // the same service entry point external integrations use.
+        let mut session_spec =
+            SessionSpec::grpo_with_policy(cfg.storage_units, &cfg.policy);
+        if cfg.pipeline == "best_of_n" {
+            // The filter graph replaces group advantages: registering a
+            // task no node consumes would read as a stalled consumer in
+            // the liveness stats (and grow its ready set for nothing).
+            session_spec.tasks.retain(|t| t.name != "advantage");
+        }
         let session = Arc::new(Session::init_engines(
-            SessionSpec::grpo_with_policy(cfg.storage_units, &cfg.policy),
+            session_spec,
             engines.initial_params.clone(),
         )?);
         Ok(Trainer { cfg, engines, session })
@@ -138,504 +143,168 @@ impl Trainer {
         ServiceClient::in_proc(self.session.clone())
     }
 
-    /// Run the full workflow; returns when `cfg.iterations` actor updates
-    /// have completed.
+    /// Run the full workflow; returns when the configured number of
+    /// actor updates has completed (the update driver finishing tears
+    /// the graph down).
     pub fn run(self) -> Result<TrainReport> {
         let Trainer { cfg, engines, session } = self;
-        let b = engines.batch;
-        let t_len = engines.max_len;
-        let p_len = engines.prompt_len;
-        let steps_per_iter = (cfg.global_batch / b) as u64;
+        let spec = build_spec(&cfg, engines)?;
+        let runner =
+            PipelineRunner::new(ServiceClient::in_proc(session));
+        let report = runner.run(spec)?;
 
-        let tq = session.transfer_queue()?;
-        let client = ServiceClient::in_proc(session.clone());
-        let metrics = Arc::new(Registry::new());
-        let timeline = Arc::new(Timeline::new());
-        let shutdown = Shutdown::new();
-        let gate = IterationGate::new(cfg.staleness);
-
-        let mut pool = WorkerPool::new();
-
-        // A failed worker must not stall the pipeline silently: trip the
-        // shutdown flag and close the queue so every stage drains.
-        let supervised = |shutdown: Shutdown,
-                          tq: Arc<TransferQueue>,
-                          f: Box<dyn FnOnce() -> Result<()> + Send>|
-         -> Box<dyn FnOnce() -> Result<()> + Send> {
-            Box::new(move || {
-                // Catch panics HERE (not only in WorkerPool): a panic
-                // that unwound past this wrapper would skip the
-                // queue-close below and leave every other stage blocked.
-                let result = std::panic::catch_unwind(
-                    std::panic::AssertUnwindSafe(f),
-                )
-                .unwrap_or_else(|panic| {
-                    let msg = panic
-                        .downcast_ref::<String>()
-                        .cloned()
-                        .or_else(|| {
-                            panic
-                                .downcast_ref::<&str>()
-                                .map(|s| s.to_string())
-                        })
-                        .unwrap_or_else(|| "<non-string panic>".into());
-                    Err(anyhow::anyhow!("worker panicked: {msg}"))
-                });
-                if result.is_err() {
-                    shutdown.trigger();
-                    tq.close();
-                }
-                result
-            })
-        };
-
-        // Fail fast on workload/geometry mismatches before spawning.
-        let feeder_gen = MathTaskGen::new(cfg.seed, p_len);
-        feeder_gen.validate()?;
-
-        // ------------------------------------------------------------------
-        // Feeder: ingests G-replicated prompts, gated on iteration staleness.
-        // One batch-first `put_batch` per prompt group keeps ingest
-        // streaming while amortizing the service round-trip.
-        // ------------------------------------------------------------------
-        {
-            let gate = gate.clone();
-            let shutdown = shutdown.clone();
-            let cfg2 = cfg.clone();
-            let timeline = timeline.clone();
-            let client2 = client.clone();
-            let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
-                let mut gen = feeder_gen;
-                let prompts_per_iter = cfg2.global_batch / cfg2.group_size;
-                for iter in 0..cfg2.iterations as u64 {
-                    if !gate.wait_to_produce(iter, &shutdown) {
-                        break;
-                    }
-                    let t0 = timeline.now();
-                    for i in 0..prompts_per_iter {
-                        let task = gen.next_task();
-                        let group =
-                            iter * prompts_per_iter as u64 + i as u64;
-                        let rows: Vec<PutRow> = (0..cfg2.group_size)
-                            .map(|_| {
-                                PutRow::new(vec![
-                                    (
-                                        Column::Prompts,
-                                        Value::I32s(
-                                            task.prompt_tokens.clone(),
-                                        ),
-                                    ),
-                                    (
-                                        col("answer"),
-                                        Value::Text(
-                                            task.answer.to_string(),
-                                        ),
-                                    ),
-                                    (col("group"), Value::U64(group)),
-                                    (col("iter"), Value::U64(iter)),
-                                ])
-                            })
-                            .collect();
-                        client2.put_batch(rows)?;
-                    }
-                    timeline.record("feeder", "ingest", t0, timeline.now());
-                }
-                Ok(())
-            }));
-            pool.spawn("feeder", body);
-        }
-
-        // ------------------------------------------------------------------
-        // Rollout producers: elastic lease-based workers. Each drives its
-        // engine through the incremental decode API and streams chunks
-        // over the same lease verbs a remote `asyncflow rollout-worker`
-        // uses, so extra workers can attach to this run's session over
-        // TCP mid-run — and a crashed worker's prompts are requeued to
-        // the pool after `lease_ttl_ms` (exactly once). Weight swaps now
-        // happen at chunk boundaries (§4.2.2 at sub-batch granularity),
-        // still inside the IterationGate staleness bound.
-        // ------------------------------------------------------------------
-        for (r, factory) in engines.rollout.into_iter().enumerate() {
-            let shutdown = shutdown.clone();
-            let timeline = timeline.clone();
-            let metrics = metrics.clone();
-            let cfg2 = cfg.clone();
-            let client2 = client.clone();
-            let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
-                let mut engine = factory()?;
-                let mut sampler = Sampler::new(
-                    cfg2.temperature,
-                    cfg2.top_k,
-                    cfg2.seed ^ (r as u64 + 1).wrapping_mul(0x9E37),
-                );
-                let opts = WorkerOptions {
-                    name: format!("rollout-{r}"),
-                    task: "rollout".into(),
-                    lease_rows: b,
-                    chunk_tokens: cfg2.chunk_tokens,
-                    ttl_ms: cfg2.lease_ttl_ms,
-                    poll_ms: PULL_TIMEOUT_MS,
-                    eos: EOS,
-                    pad: PAD,
-                };
-                run_worker(
-                    &client2,
-                    engine.as_mut(),
-                    &mut sampler,
-                    &opts,
-                    Some(&*metrics),
-                    Some(&*timeline),
-                    &|| shutdown.is_triggered(),
-                )?;
-                Ok(())
-            }));
-            pool.spawn(format!("rollout-{r}"), body);
-        }
-
-        // ------------------------------------------------------------------
-        // Reference scorer.
-        // ------------------------------------------------------------------
-        {
-            let timeline = timeline.clone();
-            let factory = engines.reference;
-            let shutdown = shutdown.clone();
-            let client2 = client.clone();
-            let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
-                let mut engine = factory()?;
-                let spec = GetBatchSpec {
-                    task: "reference".into(),
-                    group: 0,
-                    columns: vec![Column::Prompts, Column::Responses],
-                    count: b,
-                    min: b,
-                    timeout_ms: PULL_TIMEOUT_MS,
-                };
-                while !shutdown.is_triggered() {
-                    let Some(batch) = client2.get_batch_blocking_until(
-                        &spec,
-                        || shutdown.is_triggered(),
-                    )?
-                    else {
-                        break;
-                    };
-                    let mut ids = Vec::with_capacity(batch.len());
-                    let mut resp_lens = Vec::with_capacity(batch.len());
-                    for row in &batch.rows {
-                        let prompt = row[0].as_i32s().unwrap();
-                        let resp = row[1].as_i32s().unwrap();
-                        let mut full = prompt.to_vec();
-                        full.extend_from_slice(resp);
-                        full.resize(t_len, PAD);
-                        resp_lens.push(resp.len());
-                        ids.push(full);
-                    }
-                    let t0 = timeline.now();
-                    let ref_logp = engine.logprobs(&ids)?;
-                    timeline.record("reference", "ref_logp", t0,
-                                    timeline.now());
-                    let mut rows = Vec::with_capacity(batch.len());
-                    for ((idx, lp), rl) in batch
-                        .indices
-                        .iter()
-                        .zip(&ref_logp)
-                        .zip(&resp_lens)
-                    {
-                        let lp_slice =
-                            lp[p_len - 1..p_len - 1 + rl].to_vec();
-                        rows.push(PutRow::at(*idx, vec![(
-                            Column::RefLogp,
-                            Value::F32s(lp_slice),
-                        )]));
-                    }
-                    client2.put_batch(rows)?;
-                }
-                Ok(())
-            }));
-            pool.spawn("reference", body);
-        }
-
-        // ------------------------------------------------------------------
-        // Reward grader (rule-based answer check).
-        // ------------------------------------------------------------------
-        {
-            let timeline = timeline.clone();
-            let metrics = metrics.clone();
-            let shutdown = shutdown.clone();
-            let client2 = client.clone();
-            let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
-                let spec = GetBatchSpec {
-                    task: "reward".into(),
-                    group: 0,
-                    columns: vec![Column::Responses, col("answer")],
-                    count: b,
-                    min: 1,
-                    timeout_ms: PULL_TIMEOUT_MS,
-                };
-                while !shutdown.is_triggered() {
-                    let Some(batch) = client2.get_batch_blocking_until(
-                        &spec,
-                        || shutdown.is_triggered(),
-                    )?
-                    else {
-                        break;
-                    };
-                    let t0 = timeline.now();
-                    let mut rows = Vec::with_capacity(batch.len());
-                    for (idx, row) in
-                        batch.indices.iter().zip(&batch.rows)
-                    {
-                        let resp = row[0].as_i32s().unwrap();
-                        let answer: i64 = row[1]
-                            .as_text()
-                            .unwrap()
-                            .parse()
-                            .context("bad answer metadata")?;
-                        let reward = data::grade_response(resp, answer);
-                        metrics.record_now("reward", reward as f64);
-                        metrics
-                            .record_now("response_len", resp.len() as f64);
-                        rows.push(PutRow::at(*idx, vec![(
-                            Column::Rewards,
-                            Value::F32(reward),
-                        )]));
-                    }
-                    client2.put_batch(rows)?;
-                    timeline.record("reward", "grade", t0, timeline.now());
-                }
-                Ok(())
-            }));
-            pool.spawn("reward", body);
-        }
-
-        // ------------------------------------------------------------------
-        // Advantage (GRPO group assembly + normalization).
-        // ------------------------------------------------------------------
-        {
-            let shutdown = shutdown.clone();
-            let group_size = cfg.group_size;
-            let client2 = client.clone();
-            let body = supervised(shutdown.clone(), tq.clone(), Box::new(move || {
-                let spec = GetBatchSpec {
-                    task: "advantage".into(),
-                    group: 0,
-                    columns: vec![Column::Rewards, col("group")],
-                    count: b,
-                    min: 1,
-                    timeout_ms: PULL_TIMEOUT_MS,
-                };
-                let mut assembler = GroupAssembler::new(group_size);
-                while !shutdown.is_triggered() {
-                    let Some(batch) = client2.get_batch_blocking_until(
-                        &spec,
-                        || shutdown.is_triggered(),
-                    )?
-                    else {
-                        break;
-                    };
-                    let mut rows = Vec::new();
-                    for (idx, row) in
-                        batch.indices.iter().zip(&batch.rows)
-                    {
-                        let reward = row[0].as_f32().unwrap();
-                        let group = row[1].as_u64().unwrap();
-                        if let Some(done) =
-                            assembler.add(group, *idx, reward)
-                        {
-                            for (midx, adv) in done {
-                                rows.push(PutRow::at(midx, vec![(
-                                    Column::Advantages,
-                                    Value::F32(adv),
-                                )]));
-                            }
-                        }
-                    }
-                    if !rows.is_empty() {
-                        client2.put_batch(rows)?;
-                    }
-                }
-                Ok(())
-            }));
-            pool.spawn("advantage", body);
-        }
-
-        // ------------------------------------------------------------------
-        // Update worker: the training loop + weight_sync_notify + gate.
-        // ------------------------------------------------------------------
-        let update_handle = {
-            let timeline = timeline.clone();
-            let metrics = metrics.clone();
-            let gate = gate.clone();
-            let factory = engines.train;
-            let cfg2 = cfg.clone();
-            let shutdown = shutdown.clone();
-            let client2 = client.clone();
-            std::thread::Builder::new()
-                .name("update".into())
-                .spawn(move || -> Result<(u64, u64, u64)> {
-                    let mut engine = factory()?;
-                    let spec = GetBatchSpec {
-                        task: "train".into(),
-                        group: 0,
-                        columns: vec![
-                            Column::Prompts,
-                            Column::Responses,
-                            Column::OldLogp,
-                            Column::RefLogp,
-                            Column::Advantages,
-                        ],
-                        count: b,
-                        min: b,
-                        timeout_ms: PULL_TIMEOUT_MS,
-                    };
-                    let mut samples = 0u64;
-                    let mut tokens = 0u64;
-                    let mut iters_done = 0u64;
-                    let mut steps_in_iter = 0u64;
-                    'outer: while iters_done < cfg2.iterations as u64 {
-                        let Some(batch) = client2
-                            .get_batch_blocking_until(&spec, || {
-                                shutdown.is_triggered()
-                            })?
-                        else {
-                            break 'outer;
-                        };
-                        let tb = build_train_batch(
-                            &batch, b, t_len, p_len, cfg2.lr,
-                        )?;
-                        let t0 = timeline.now();
-                        let tm = engine.train_step(&tb)?;
-                        timeline.record(
-                            "update", "train_step", t0, timeline.now(),
-                        );
-                        samples += b as u64;
-                        tokens += tb
-                            .mask
-                            .iter()
-                            .map(|row| {
-                                row.iter().sum::<f32>() as u64
-                            })
-                            .sum::<u64>();
-                        metrics.record_now("loss", tm.loss as f64);
-                        metrics.record_now("kl", tm.kl as f64);
-                        metrics.record_now("nll", tm.nll as f64);
-                        metrics
-                            .record_now("grad_norm", tm.grad_norm as f64);
-                        // Evict consumed rows (global-batch GC).
-                        client2.evict(&batch.indices)?;
-
-                        steps_in_iter += 1;
-                        if steps_in_iter == steps_per_iter {
-                            steps_in_iter = 0;
-                            iters_done += 1;
-                            // Publish weights BEFORE releasing the gate so
-                            // newly admitted prompts can only be rolled
-                            // out with version >= iters_done (on-policy
-                            // in sync mode).
-                            let t0 = timeline.now();
-                            client2.weight_sync_notify(
-                                engine.export_params(),
-                            )?;
-                            timeline.record(
-                                "update",
-                                "weight_sync",
-                                t0,
-                                timeline.now(),
-                            );
-                            gate.complete_iteration();
-                            metrics.record_now(
-                                "iteration",
-                                iters_done as f64,
-                            );
-                        }
-                        if shutdown.is_triggered() {
-                            break;
-                        }
-                    }
-                    Ok((iters_done, samples, tokens))
-                })
-                .expect("spawning update worker")
-        };
-
-        // Wait for the update worker to finish all iterations, then tear
-        // down the streaming pipeline.
-        let update_result = update_handle
-            .join()
-            .map_err(|_| anyhow::anyhow!("update worker panicked"));
-        // Tear the pipeline down before propagating any error so no
-        // worker is left blocked on the queue.
-        shutdown.trigger();
-        tq.close();
-        let (iters_done, samples, tokens) = update_result??;
-        pool.join()?;
-
-        let wall = timeline.now();
-        let reward_series = metrics.series("reward");
-        let final_reward = reward_series
+        let metrics = report.metrics;
+        let final_reward = metrics
+            .series("reward")
             .map(|s| s.tail_mean(0.25))
             .unwrap_or(f64::NAN);
         Ok(TrainReport {
-            iterations: iters_done,
-            wall_time_s: wall,
-            samples_trained: samples,
-            tokens_trained: tokens,
+            iterations: metrics.counter("iterations_done"),
+            wall_time_s: report.wall_time_s,
+            samples_trained: metrics.counter("samples_trained"),
+            tokens_trained: metrics.counter("tokens_trained"),
             final_reward,
             metrics,
-            timeline,
+            timeline: report.timeline,
         })
     }
 }
 
-/// Assemble the fixed-geometry [`TrainBatch`] from variable-length TQ
-/// rows (restoring geometry from lengths — the receive side of the
-/// paper's no-padding transfer, §3.5).
-fn build_train_batch(
-    batch: &crate::transfer_queue::Batch,
-    b: usize,
-    t_len: usize,
-    p_len: usize,
-    lr: f32,
-) -> Result<TrainBatch> {
-    let mut ids = Vec::with_capacity(b);
-    let mut advantages = Vec::with_capacity(b);
-    let mut old_logp = Vec::with_capacity(b);
-    let mut ref_logp = Vec::with_capacity(b);
-    let mut mask = Vec::with_capacity(b);
-    for row in &batch.rows {
-        let prompt = row[0].as_i32s().context("prompts column")?;
-        let resp = row[1].as_i32s().context("responses column")?;
-        let old = row[2].as_f32s().context("old_logp column")?;
-        let rlp = row[3].as_f32s().context("ref_logp column")?;
-        let adv = row[4].as_f32(). context("advantages column")?;
-        let rl = resp.len();
-        anyhow::ensure!(old.len() == rl && rlp.len() == rl,
-            "logp slice length mismatch: resp={rl} old={} ref={}",
-            old.len(), rlp.len());
+/// Declare the configured algorithm as a [`PipelineSpec`] — the whole
+/// GRPO (or best-of-n) workflow as data. The old 800-line `run()` of
+/// hand-supervised closures compiles down to this.
+fn build_spec(cfg: &RlConfig, engines: EngineSet) -> Result<PipelineSpec> {
+    let b = engines.batch;
+    let p_len = engines.prompt_len;
+    let t_len = engines.max_len;
+    let best_of_n = cfg.pipeline == "best_of_n";
+    // best_of_n trains only each group's top-k; GRPO trains everything.
+    let trained_per_iter = if best_of_n {
+        cfg.global_batch / cfg.group_size * cfg.survivors
+    } else {
+        cfg.global_batch
+    };
+    let gate = IterationGate::new(cfg.staleness);
 
-        let mut full = prompt.to_vec();
-        full.extend_from_slice(resp);
-        full.resize(t_len, PAD);
-        ids.push(full);
-        advantages.push(adv);
+    // Fail fast on workload/geometry mismatches before spawning.
+    let feeder_gen = MathTaskGen::new(cfg.seed, p_len);
+    feeder_gen.validate()?;
 
-        let mut o = vec![0.0f32; t_len - 1];
-        let mut rf = vec![0.0f32; t_len - 1];
-        let mut m = vec![0.0f32; t_len - 1];
-        o[p_len - 1..p_len - 1 + rl].copy_from_slice(old);
-        rf[p_len - 1..p_len - 1 + rl].copy_from_slice(rlp);
-        for v in m.iter_mut().skip(p_len - 1).take(rl) {
-            *v = 1.0;
-        }
-        old_logp.push(o);
-        ref_logp.push(rf);
-        mask.push(m);
+    let mut spec = PipelineSpec::new();
+
+    // Feeder: ingests G-replicated prompts, gated on staleness.
+    {
+        let gate = gate.clone();
+        let (iterations, gb, gs) =
+            (cfg.iterations, cfg.global_batch, cfg.group_size);
+        spec = spec.node(StageNode::source(
+            "feeder",
+            Box::new(move || {
+                Ok(Box::new(PromptFeeder::new(
+                    feeder_gen, gate, iterations, gb, gs,
+                )) as Box<dyn Stage>)
+            }),
+        ));
     }
-    Ok(TrainBatch { ids, advantages, old_logp, ref_logp, mask, lr })
+
+    // Rollout producers: elastic lease-based workers (chunked decode,
+    // weight swaps at chunk boundaries, crash requeue after TTL).
+    for (r, build) in engines.rollout.into_iter().enumerate() {
+        let mut opts = WorkerOptions::new(format!("rollout-{r}"));
+        opts.lease_rows = b;
+        opts.chunk_tokens = cfg.chunk_tokens;
+        opts.ttl_ms = cfg.lease_ttl_ms;
+        opts.eos = EOS;
+        opts.pad = PAD;
+        spec = spec.node(StageNode::rollout(
+            format!("rollout-{r}"),
+            RolloutNode {
+                build,
+                temperature: cfg.temperature,
+                top_k: cfg.top_k,
+                seed: cfg.seed ^ (r as u64 + 1).wrapping_mul(0x9E37),
+                opts,
+            },
+        ));
+    }
+
+    // Reference scorer.
+    {
+        let build = engines.reference;
+        spec = spec.node(StageNode::stage(
+            "reference",
+            Some(ReferenceLogp::input(b)),
+            Box::new(move || {
+                Ok(Box::new(ReferenceLogp::new(build()?, p_len, t_len))
+                    as Box<dyn Stage>)
+            }),
+        ));
+    }
+
+    // Reward grader (rule-based answer check).
+    spec = spec.node(StageNode::stage(
+        "reward",
+        Some(RuleReward::input().with_batch(b, 1)),
+        Box::new(|| Ok(Box::new(RuleReward::new()) as Box<dyn Stage>)),
+    ));
+
+    // Selection: GRPO group advantages, or best-of-n rejection
+    // sampling — the only structural difference between the graphs.
+    if best_of_n {
+        let (gs, k) = (cfg.group_size, cfg.survivors);
+        // The filter's readiness gates on RefLogp (see FilterTopK) so
+        // it can evict rejected rollouts without racing the reference
+        // stage's fetches.
+        spec = spec
+            .task(FilterTopK::input().task_decl())
+            .node(StageNode::stage(
+                "filter",
+                Some(FilterTopK::input().with_batch(b, 1)),
+                Box::new(move || {
+                    Ok(Box::new(FilterTopK::new(gs, k)?)
+                        as Box<dyn Stage>)
+                }),
+            ));
+    } else {
+        let gs = cfg.group_size;
+        spec = spec.node(StageNode::stage(
+            "advantage",
+            Some(GroupAdvantage::input().with_batch(b, 1)),
+            Box::new(move || {
+                Ok(Box::new(GroupAdvantage::new(gs)) as Box<dyn Stage>)
+            }),
+        ));
+    }
+
+    // Update driver: train + weight publish + gate release; its
+    // completion ends the run.
+    {
+        let build = engines.train;
+        let plan = TrainPlan {
+            iterations: cfg.iterations as u64,
+            steps_per_iter: (trained_per_iter / b) as u64,
+            batch: b,
+            prompt_len: p_len,
+            max_len: t_len,
+            lr: cfg.lr,
+        };
+        spec = spec.node(StageNode::driver(
+            "update",
+            TrainPublish::input(b),
+            Box::new(move || {
+                Ok(Box::new(TrainPublish::new(build()?, gate, plan))
+                    as Box<dyn Stage>)
+            }),
+        ));
+    }
+    Ok(spec)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::MockEngine;
+    use crate::transfer_queue::{Column, Value};
 
     fn mock_engines(r: usize, b: usize, p: usize, t: usize) -> EngineSet {
         EngineSet {
@@ -768,6 +437,46 @@ mod tests {
         let mut cfg = quick_cfg(1, 1);
         cfg.global_batch = 13; // not a multiple of 8
         assert!(Trainer::new(cfg, mock_engines(1, 8, 16, 48)).is_err());
+    }
+
+    #[test]
+    fn best_of_n_pipeline_trains_on_survivors_only() {
+        let mut cfg = quick_cfg(2, 1);
+        cfg.pipeline = "best_of_n".into();
+        cfg.survivors = 2;
+        // 16/iter rolled out in 4 groups of 4; top-2 of each group
+        // survive -> 8 trained per iteration (exactly one engine batch).
+        let engines = mock_engines(2, 8, 16, 48);
+        let trainer = Trainer::new(cfg, engines).unwrap();
+        let client = trainer.client();
+        // The never-consumed GRPO advantage task is not registered for
+        // this graph (it would read as a stalled consumer in stats).
+        assert!(!client
+            .stats()
+            .unwrap()
+            .tasks
+            .iter()
+            .any(|t| t.name == "advantage"));
+        let report = trainer.run().unwrap();
+        assert_eq!(report.iterations, 2);
+        assert_eq!(
+            report.samples_trained, 16,
+            "only survivors reach the train stage"
+        );
+        assert_eq!(report.metrics.counter("filter_groups"), 8);
+        assert_eq!(report.metrics.counter("filter_survivors"), 16);
+        // The rejected rollouts were still generated and graded...
+        let rewards =
+            report.metrics.series("reward").unwrap().points.len();
+        assert_eq!(rewards, 32, "all rollouts graded before selection");
+        // ...and then evicted: survivors GC'd by the update driver,
+        // rejects by the filter — nothing leaks across iterations.
+        assert_eq!(report.metrics.counter("filter_evicted"), 16);
+        assert_eq!(
+            client.stats().unwrap().resident_rows,
+            0,
+            "no rollout payload outlives its iteration"
+        );
     }
 
     #[test]

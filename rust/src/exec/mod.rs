@@ -11,6 +11,15 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
+    panic
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
 /// Cooperative shutdown flag shared by all workers of a workflow.
 #[derive(Clone, Default)]
 pub struct Shutdown {
@@ -57,16 +66,10 @@ impl WorkerPool {
                     std::panic::AssertUnwindSafe(f),
                 )
                 .unwrap_or_else(|panic| {
-                    let msg = panic
-                        .downcast_ref::<String>()
-                        .cloned()
-                        .or_else(|| {
-                            panic
-                                .downcast_ref::<&str>()
-                                .map(|s| s.to_string())
-                        })
-                        .unwrap_or_else(|| "<non-string panic>".into());
-                    Err(anyhow::anyhow!("panicked: {msg}"))
+                    Err(anyhow::anyhow!(
+                        "panicked: {}",
+                        panic_message(panic)
+                    ))
                 });
                 if let Err(e) = &result {
                     // Surface failures immediately — a silently dead
@@ -77,6 +80,43 @@ impl WorkerPool {
             })
             .expect("spawning worker thread");
         self.handles.push((name, handle));
+    }
+
+    /// Spawn a *supervised* worker: a failure (error **or** panic) trips
+    /// the shared shutdown flag and then runs `drain` — typically closing
+    /// the TransferQueue / service session — so no peer stage is ever
+    /// left blocked on a stream that will never fill. This is the
+    /// supervision wrapper every producer–consumer pipeline loop uses
+    /// (hoisted out of the Trainer).
+    pub fn spawn_supervised<F, D>(
+        &mut self,
+        name: impl Into<String>,
+        shutdown: Shutdown,
+        drain: D,
+        f: F,
+    ) where
+        F: FnOnce() -> Result<()> + Send + 'static,
+        D: FnOnce() + Send + 'static,
+    {
+        self.spawn(name, move || {
+            // Catch panics HERE (not only in `spawn`): a panic that
+            // unwound past this wrapper would skip the drain below and
+            // leave every other stage blocked.
+            let result = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(f),
+            )
+            .unwrap_or_else(|panic| {
+                Err(anyhow::anyhow!(
+                    "worker panicked: {}",
+                    panic_message(panic)
+                ))
+            });
+            if result.is_err() {
+                shutdown.trigger();
+                drain();
+            }
+            result
+        });
     }
 
     pub fn len(&self) -> usize {
@@ -165,5 +205,68 @@ mod tests {
         assert!(!s.is_triggered());
         s2.trigger();
         assert!(s.is_triggered());
+    }
+
+    fn one_task_queue() -> Arc<crate::transfer_queue::TransferQueue> {
+        use crate::transfer_queue::{Column, TaskSpec, TransferQueue};
+        TransferQueue::builder()
+            .storage_units(1)
+            .task(TaskSpec::new("rollout", vec![Column::Prompts]))
+            .build()
+    }
+
+    #[test]
+    fn supervised_panic_trips_shutdown_and_drains_the_queue() {
+        let tq = one_task_queue();
+        let shutdown = Shutdown::new();
+        let mut pool = WorkerPool::new();
+        let tq2 = tq.clone();
+        pool.spawn_supervised(
+            "boom",
+            shutdown.clone(),
+            move || tq2.close(),
+            || panic!("aieee"),
+        );
+        // A consumer blocked on the queue drains instead of hanging
+        // forever: request() returns None once the drain closed it.
+        let ctrl = tq.controller("rollout");
+        assert!(ctrl.request(0, 1, 1).is_none(), "closed queue drains");
+        assert!(shutdown.is_triggered());
+        let err = pool.join().unwrap_err();
+        assert!(format!("{err:#}").contains("aieee"));
+    }
+
+    #[test]
+    fn supervised_error_also_drains() {
+        let tq = one_task_queue();
+        let shutdown = Shutdown::new();
+        let mut pool = WorkerPool::new();
+        let tq2 = tq.clone();
+        pool.spawn_supervised(
+            "bad",
+            shutdown.clone(),
+            move || tq2.close(),
+            || anyhow::bail!("broken stage"),
+        );
+        assert!(pool.join().is_err());
+        assert!(shutdown.is_triggered());
+        assert!(tq.is_closed());
+    }
+
+    #[test]
+    fn supervised_success_leaves_the_queue_open() {
+        let tq = one_task_queue();
+        let shutdown = Shutdown::new();
+        let mut pool = WorkerPool::new();
+        let tq2 = tq.clone();
+        pool.spawn_supervised(
+            "fine",
+            shutdown.clone(),
+            move || tq2.close(),
+            || Ok(()),
+        );
+        pool.join().unwrap();
+        assert!(!shutdown.is_triggered());
+        assert!(!tq.is_closed());
     }
 }

@@ -18,6 +18,10 @@
 //! * [`rollout`] — elastic streaming rollout: lease-based dispatch,
 //!   chunked generation, exactly-once requeue of crashed workers' rows.
 //! * [`runtime`] — PJRT execution of the AOT artifacts; Engine adapters.
+//! * [`pipeline`] — §5 stage-graph pipeline API: declarative RL
+//!   dataflows (`Stage` + `PipelineSpec`) compiled by `PipelineRunner`
+//!   into supervised loops over the service verbs; stages attach
+//!   out-of-process via `asyncflow stage`.
 //! * [`planner`] — §4.3 hybrid cost model + resource search.
 //! * [`simulator`] — discrete-event cluster simulator (Fig 10/11, Table 1).
 //! * [`service`] — §5 service-oriented user interface.
@@ -31,6 +35,7 @@ pub mod data;
 pub mod exec;
 pub mod launcher;
 pub mod metrics;
+pub mod pipeline;
 pub mod planner;
 pub mod rollout;
 pub mod runtime;

@@ -9,6 +9,11 @@
 //! * `rollout-worker` — attach an elastic rollout worker to a served
 //!   session (`--connect host:port`): lease prompts, stream chunked
 //!   generations, refresh weights at chunk boundaries.
+//! * `stage` — attach one pipeline stage (reward grader, advantage,
+//!   best-of-n filter) to a served session (`--connect host:port`):
+//!   the stage loop speaks the same `get_batch`/`put_batch` verbs an
+//!   in-process node uses, so reward models and filters scale out (or
+//!   join mid-run) as separate processes.
 //! * `storage-unit` — host one data-plane shard in this process and
 //!   register it with a served session (`--connect host:port`): payload
 //!   bytes then flow between clients and this unit over the binary
@@ -27,7 +32,9 @@ use anyhow::{bail, Context, Result};
 
 use asyncflow::config::{ConfigDoc, RlConfig};
 use asyncflow::coordinator::Trainer;
+use asyncflow::exec::Shutdown;
 use asyncflow::launcher::{build_engines, build_policy_engine};
+use asyncflow::pipeline::{builtin_stage, run_remote_stage};
 use asyncflow::planner::{plan, CostModel, DeviceSpec, LlmSpec, PlanRequest};
 use asyncflow::rollout::{run_worker, WorkerOptions};
 use asyncflow::runtime::{
@@ -92,6 +99,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "train" => cmd_train(&flags),
         "serve" => cmd_serve(&flags),
         "rollout-worker" => cmd_rollout_worker(&flags),
+        "stage" => cmd_stage(&flags),
         "storage-unit" => cmd_storage_unit(&flags),
         "simulate" => cmd_simulate(&flags),
         "plan" => cmd_plan(&flags),
@@ -113,13 +121,18 @@ USAGE: asyncflow <command> [--flags]
 COMMANDS:
   train     --iterations N --global-batch N --staleness {0|1} --mock
             --rollout-workers N --policy {fcfs|token_balanced|shortest_first}
-            --config file.toml
+            --pipeline {grpo|best_of_n} --survivors K --config file.toml
   serve     --port N --storage-units N
             --policy {fcfs|token_balanced|shortest_first} --uninit
             (JSON-lines service; clients attach with ServiceClient)
   rollout-worker --connect HOST:PORT [--name ID] [--mock] [--task T]
             [--chunk-tokens N] [--ttl-ms N] [--lease-rows N] [--seed N]
             (elastic worker: lease prompts, stream chunked generations)
+  stage     --connect HOST:PORT --stage {reward|advantage|filter}
+            [--task T] [--batch N] [--group-size G] [--survivors K]
+            [--name ID]
+            (attach a pipeline stage to a live run over TCP; a new
+             input task is registered mid-run and replays resident rows)
   storage-unit --connect HOST:PORT [--slot N] [--listen HOST:PORT]
             [--advertise HOST:PORT]
             (host a data-plane shard: payload bytes bypass the
@@ -174,11 +187,16 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(p) = flags.get("policy") {
         cfg.policy = p.clone();
     }
+    if let Some(p) = flags.get("pipeline") {
+        cfg.pipeline = p.clone();
+    }
+    cfg.survivors = get_usize(flags, "survivors", cfg.survivors)?;
     let mock = flags.contains_key("mock");
     let (engines, _b) = build_engines(&cfg, mock)?;
     println!(
-        "[train] iterations={} global_batch={} staleness={} workers={} \
-         backend={}",
+        "[train] pipeline={} iterations={} global_batch={} staleness={} \
+         workers={} backend={}",
+        cfg.pipeline,
         cfg.iterations,
         cfg.global_batch,
         cfg.staleness,
@@ -280,6 +298,70 @@ fn cmd_rollout_worker(flags: &HashMap<String, String>) -> Result<()> {
         report.chunks,
         report.weight_swaps,
         report.leases_lost
+    );
+    Ok(())
+}
+
+/// `asyncflow stage`: attach one pipeline stage to a served session
+/// from another process/host. The stage pulls micro-batches from its
+/// input task, processes them, and writes result columns back — the
+/// byte-identical loop an in-process `PipelineRunner` node runs, over
+/// TCP. Attaching a stage whose input task the session lacks registers
+/// it mid-run (resident rows replay). Attaching `reward` to an
+/// existing task scales grading out (rows are consumed exactly once
+/// across all competing workers); `advantage`/`filter` hold
+/// per-instance group state, so run them only as the sole consumer of
+/// their task (competing instances would split groups and stall the
+/// graph). If the stage fails, the whole graph is drained before the
+/// error propagates.
+fn cmd_stage(flags: &HashMap<String, String>) -> Result<()> {
+    let addr = flags
+        .get("connect")
+        .context("--connect HOST:PORT is required")?;
+    let which = flags
+        .get("stage")
+        .context("--stage NAME is required (reward|advantage|filter)")?;
+    let group_size = get_usize(flags, "group-size", 4)?;
+    let survivors = get_usize(flags, "survivors", 1)?;
+    let (mut input, mut stage) =
+        builtin_stage(which, group_size, survivors)?;
+    input.count = get_usize(flags, "batch", input.count)?;
+    if let Some(task) = flags.get("task") {
+        input.task = task.clone();
+    }
+    let name = flags
+        .get("name")
+        .cloned()
+        .unwrap_or_else(|| format!("{which}-{}", std::process::id()));
+    let client = ServiceClient::connect(addr.as_str())?;
+    println!(
+        "[stage] {name}: attached to {addr} (stage {which}, task {:?}, \
+         batch {})",
+        input.task, input.count
+    );
+    let metrics = run_remote_stage(
+        &client,
+        &name,
+        Some(&input),
+        stage.as_mut(),
+        &Shutdown::new(),
+    )?;
+    // Stage metrics live in THIS process (the coordinator's report
+    // only covers its own nodes) — surface what this worker did.
+    let mut summary: Vec<String> = Vec::new();
+    for series in metrics.series_names() {
+        if let Some(s) = metrics.series(&series) {
+            summary.push(format!(
+                "{series}: n={} mean={:.4}",
+                s.points.len(),
+                s.mean()
+            ));
+        }
+    }
+    println!(
+        "[stage] {name}: stream closed, exiting{}{}",
+        if summary.is_empty() { "" } else { " — " },
+        summary.join(", ")
     );
     Ok(())
 }
@@ -417,8 +499,16 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
         );
         for t in &stats.tasks {
             println!(
-                "  task {:<12} ready={:<6} consumed={:<8} policy={}",
-                t.name, t.ready, t.consumed, t.policy
+                "  task {:<12} ready={:<6} consumed={:<8} policy={} \
+                 waiting={} oldest_ready={}",
+                t.name,
+                t.ready,
+                t.consumed,
+                t.policy,
+                t.waiting_consumers,
+                t.oldest_ready_age_ms
+                    .map(|ms| format!("{ms}ms"))
+                    .unwrap_or_else(|| "-".into()),
             );
         }
         for u in &stats.units {

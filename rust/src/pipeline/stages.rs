@@ -1,0 +1,786 @@
+//! Built-in pipeline stages: the GRPO workflow's six boxes (prompt
+//! feeder, lease rollout — see [`super::RolloutNode`] — reference
+//! logp, rule reward, group advantage, train+publish) plus the
+//! best-of-n rejection-sampling filter. Each is an ordinary [`Stage`]
+//! impl: algorithms compose them into a [`super::PipelineSpec`] instead
+//! of hand-writing worker loops, and any of them can attach to a live
+//! run out-of-process through `asyncflow stage`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{GroupAssembler, IterationGate};
+use crate::data::{self, MathTaskGen, PAD};
+use crate::runtime::{PolicyEngine, TrainBatch, TrainEngine};
+use crate::service::PutRow;
+use crate::transfer_queue::{Batch, Column, GlobalIndex, Value};
+
+use super::{Stage, StageCtx, StageInput};
+
+fn col(name: &str) -> Column {
+    Column::Custom(name.to_string())
+}
+
+// ===========================================================================
+// Prompt feeder (source)
+// ===========================================================================
+
+/// Source stage: ingests G-replicated prompts one *group* per call —
+/// each `process` emits a single prompt group's G rows, so rollout
+/// workers start leasing while the rest of the iteration is still
+/// being fed (streaming ingest, one `put_batch` round-trip per group).
+/// Gated on iteration staleness (§4.2.1): the feeder blocks at each
+/// iteration boundary so rollout never runs more than `staleness`
+/// iterations ahead.
+pub struct PromptFeeder {
+    gen: MathTaskGen,
+    gate: Arc<IterationGate>,
+    group_size: usize,
+    prompts_per_iter: usize,
+    iterations: u64,
+    next_iter: u64,
+    next_group: usize,
+}
+
+impl PromptFeeder {
+    pub fn new(
+        gen: MathTaskGen,
+        gate: Arc<IterationGate>,
+        iterations: usize,
+        global_batch: usize,
+        group_size: usize,
+    ) -> Self {
+        let prompts_per_iter = global_batch / group_size;
+        PromptFeeder {
+            gen,
+            gate,
+            group_size,
+            prompts_per_iter,
+            // A degenerate geometry (group larger than the global
+            // batch) has nothing to feed: finish immediately instead
+            // of looping.
+            iterations: if prompts_per_iter == 0 {
+                0
+            } else {
+                iterations as u64
+            },
+            next_iter: 0,
+            next_group: 0,
+        }
+    }
+}
+
+impl Stage for PromptFeeder {
+    fn process(
+        &mut self,
+        ctx: &StageCtx<'_>,
+        _batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        let iter = self.next_iter;
+        if iter >= self.iterations {
+            return Ok(vec![]);
+        }
+        if self.next_group == 0
+            && !self.gate.wait_to_produce(iter, ctx.shutdown)
+        {
+            // Aborted while gated: nothing more to produce.
+            self.next_iter = self.iterations;
+            return Ok(vec![]);
+        }
+        let t0 = ctx.timeline.now();
+        let task = self.gen.next_task();
+        let group =
+            iter * self.prompts_per_iter as u64 + self.next_group as u64;
+        let rows = (0..self.group_size)
+            .map(|_| {
+                PutRow::new(vec![
+                    (
+                        Column::Prompts,
+                        Value::I32s(task.prompt_tokens.clone()),
+                    ),
+                    (col("answer"), Value::Text(task.answer.to_string())),
+                    (col("group"), Value::U64(group)),
+                    (col("iter"), Value::U64(iter)),
+                ])
+            })
+            .collect();
+        self.next_group += 1;
+        if self.next_group == self.prompts_per_iter {
+            self.next_group = 0;
+            self.next_iter += 1;
+        }
+        ctx.timeline.record(ctx.worker, "ingest", t0, ctx.timeline.now());
+        Ok(rows)
+    }
+
+    fn finished(&self) -> bool {
+        self.next_iter >= self.iterations
+    }
+}
+
+// ===========================================================================
+// Reference scorer
+// ===========================================================================
+
+/// Frozen-reference logp scorer: rebuilds the fixed-geometry sequence
+/// from (Prompts, Responses), scores it, and emits the
+/// response-aligned `RefLogp` slice.
+pub struct ReferenceLogp {
+    engine: Box<dyn PolicyEngine>,
+    prompt_len: usize,
+    max_len: usize,
+}
+
+impl ReferenceLogp {
+    pub fn new(
+        engine: Box<dyn PolicyEngine>,
+        prompt_len: usize,
+        max_len: usize,
+    ) -> Self {
+        ReferenceLogp { engine, prompt_len, max_len }
+    }
+
+    /// Standard input contract (full engine batches).
+    pub fn input(batch: usize) -> StageInput {
+        StageInput::new(
+            "reference",
+            vec![Column::Prompts, Column::Responses],
+        )
+        .with_batch(batch, batch)
+    }
+}
+
+impl Stage for ReferenceLogp {
+    fn process(
+        &mut self,
+        ctx: &StageCtx<'_>,
+        batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        let mut ids = Vec::with_capacity(batch.len());
+        let mut resp_lens = Vec::with_capacity(batch.len());
+        for row in &batch.rows {
+            let prompt = row[0].as_i32s().context("prompts column")?;
+            let resp = row[1].as_i32s().context("responses column")?;
+            let mut full = prompt.to_vec();
+            full.extend_from_slice(resp);
+            full.resize(self.max_len, PAD);
+            resp_lens.push(resp.len());
+            ids.push(full);
+        }
+        let t0 = ctx.timeline.now();
+        let ref_logp = self.engine.logprobs(&ids)?;
+        ctx.timeline.record(
+            ctx.worker,
+            "ref_logp",
+            t0,
+            ctx.timeline.now(),
+        );
+        let p = self.prompt_len;
+        let mut rows = Vec::with_capacity(batch.len());
+        for ((idx, lp), rl) in
+            batch.indices.iter().zip(&ref_logp).zip(&resp_lens)
+        {
+            rows.push(PutRow::at(*idx, vec![(
+                Column::RefLogp,
+                Value::F32s(lp[p - 1..p - 1 + rl].to_vec()),
+            )]));
+        }
+        Ok(rows)
+    }
+}
+
+// ===========================================================================
+// Rule reward
+// ===========================================================================
+
+/// Rule-based reward grader: checks each response against the ground
+/// truth carried in the `answer` metadata column. Stateless — the
+/// canonical stage to scale out over TCP (`asyncflow stage --stage
+/// reward`): extra graders compete on the same task, each row graded
+/// exactly once.
+#[derive(Default)]
+pub struct RuleReward;
+
+impl RuleReward {
+    pub fn new() -> Self {
+        RuleReward
+    }
+
+    /// Standard input contract (streaming: min 1).
+    pub fn input() -> StageInput {
+        StageInput::new(
+            "reward",
+            vec![Column::Responses, col("answer")],
+        )
+    }
+}
+
+impl Stage for RuleReward {
+    fn process(
+        &mut self,
+        ctx: &StageCtx<'_>,
+        batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        let t0 = ctx.timeline.now();
+        let mut rows = Vec::with_capacity(batch.len());
+        for (idx, row) in batch.indices.iter().zip(&batch.rows) {
+            let resp = row[0].as_i32s().context("responses column")?;
+            let answer: i64 = row[1]
+                .as_text()
+                .context("answer column")?
+                .parse()
+                .context("bad answer metadata")?;
+            let reward = data::grade_response(resp, answer);
+            ctx.metrics.record_now("reward", reward as f64);
+            ctx.metrics.record_now("response_len", resp.len() as f64);
+            rows.push(PutRow::at(*idx, vec![(
+                Column::Rewards,
+                Value::F32(reward),
+            )]));
+        }
+        ctx.timeline.record(ctx.worker, "grade", t0, ctx.timeline.now());
+        Ok(rows)
+    }
+}
+
+// ===========================================================================
+// Group advantage (GRPO)
+// ===========================================================================
+
+/// GRPO group assembly + normalization: buffers reward scalars until a
+/// prompt group of size G completes, then emits the whole group's
+/// normalized `Advantages` (metadata-scale state only — never
+/// payloads).
+pub struct GroupAdvantage {
+    assembler: GroupAssembler,
+}
+
+impl GroupAdvantage {
+    pub fn new(group_size: usize) -> Self {
+        GroupAdvantage { assembler: GroupAssembler::new(group_size) }
+    }
+
+    /// Standard input contract (streaming: min 1).
+    pub fn input() -> StageInput {
+        StageInput::new("advantage", vec![Column::Rewards, col("group")])
+    }
+}
+
+impl Stage for GroupAdvantage {
+    fn process(
+        &mut self,
+        _ctx: &StageCtx<'_>,
+        batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        let mut rows = Vec::new();
+        for (idx, row) in batch.indices.iter().zip(&batch.rows) {
+            let reward = row[0].as_f32().context("rewards column")?;
+            let group = row[1].as_u64().context("group column")?;
+            if let Some(done) = self.assembler.add(group, *idx, reward) {
+                for (midx, adv) in done {
+                    rows.push(PutRow::at(midx, vec![(
+                        Column::Advantages,
+                        Value::F32(adv),
+                    )]));
+                }
+            }
+        }
+        Ok(rows)
+    }
+}
+
+// ===========================================================================
+// Best-of-n filter (rejection sampling)
+// ===========================================================================
+
+/// Best-of-n rejection sampling: collect each prompt group's G graded
+/// rollouts, keep the top-k by reward, and emit `Advantages = 1.0` for
+/// the survivors only. Losers never gain the `Advantages` column, so
+/// they never become train-ready — selection is expressed purely
+/// through column readiness, with zero bespoke plumbing between
+/// stages.
+///
+/// Rejected rollouts are evicted (GC) as their group completes —
+/// without this, every non-survivor's full payload would stay
+/// resident for the whole run. The default [`FilterTopK::input`]
+/// therefore gates readiness on `RefLogp` too: by the time a group is
+/// filterable, every stage that could still want a loser's payload
+/// has already run, so eviction cannot race a fetch. Graphs with no
+/// reference stage must override the gate AND set `evict_rejects =
+/// false`.
+///
+/// Holds per-instance group state: run exactly ONE filter per task
+/// (see the scale-out caveat on [`super::builtin_stage`]).
+pub struct FilterTopK {
+    group_size: usize,
+    survivors: usize,
+    /// GC rejected rollouts when their group completes (default true).
+    pub evict_rejects: bool,
+    pending: HashMap<u64, Vec<(GlobalIndex, f32)>>,
+}
+
+impl FilterTopK {
+    pub fn new(group_size: usize, survivors: usize) -> Result<Self> {
+        if group_size == 0 || survivors == 0 || survivors > group_size {
+            bail!(
+                "need 1 <= survivors <= group_size, got {survivors} of \
+                 {group_size}"
+            );
+        }
+        Ok(FilterTopK {
+            group_size,
+            survivors,
+            evict_rejects: true,
+            pending: HashMap::new(),
+        })
+    }
+
+    /// Standard input contract (streaming: min 1): fetches the reward
+    /// + group metadata, gated on `RefLogp` so loser eviction is safe
+    /// (see the type-level docs).
+    pub fn input() -> StageInput {
+        StageInput::new("filter", vec![Column::Rewards, col("group")])
+            .gate_on(vec![
+                Column::Rewards,
+                Column::RefLogp,
+                col("group"),
+            ])
+    }
+}
+
+impl Stage for FilterTopK {
+    fn process(
+        &mut self,
+        ctx: &StageCtx<'_>,
+        batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        let mut rows = Vec::new();
+        let mut rejects: Vec<GlobalIndex> = Vec::new();
+        for (idx, row) in batch.indices.iter().zip(&batch.rows) {
+            let reward = row[0].as_f32().context("rewards column")?;
+            let group = row[1].as_u64().context("group column")?;
+            let entry = self.pending.entry(group).or_default();
+            entry.push((*idx, reward));
+            if entry.len() < self.group_size {
+                continue;
+            }
+            let mut members = self.pending.remove(&group).unwrap();
+            // Highest reward first; ties resolve to the oldest row so
+            // selection is deterministic.
+            members.sort_by(|a, b| {
+                b.1.partial_cmp(&a.1)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.0 .0.cmp(&b.0 .0))
+            });
+            ctx.metrics.inc("filter_groups", 1);
+            for (rank, (midx, _)) in members.into_iter().enumerate() {
+                if rank < self.survivors {
+                    ctx.metrics.inc("filter_survivors", 1);
+                    rows.push(PutRow::at(midx, vec![(
+                        Column::Advantages,
+                        Value::F32(1.0),
+                    )]));
+                } else {
+                    rejects.push(midx);
+                }
+            }
+        }
+        if self.evict_rejects && !rejects.is_empty() {
+            ctx.client.evict(&rejects)?;
+            ctx.metrics.inc("filter_evicted", rejects.len() as u64);
+        }
+        Ok(rows)
+    }
+}
+
+// ===========================================================================
+// Train + publish (driver)
+// ===========================================================================
+
+/// Geometry + schedule for [`TrainPublish`].
+#[derive(Debug, Clone)]
+pub struct TrainPlan {
+    /// Actor updates to run before the stage finishes (and, as the
+    /// graph's driver, ends the run).
+    pub iterations: u64,
+    /// Train steps per iteration (trained samples per iteration /
+    /// engine batch).
+    pub steps_per_iter: u64,
+    /// Engine micro-batch B.
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub max_len: usize,
+    pub lr: f32,
+}
+
+/// The train-and-publish driver: pulls full train batches, runs
+/// `train_step`, evicts consumed rows (global-batch GC), and at every
+/// iteration boundary publishes weights (`weight_sync_notify`) *before*
+/// releasing the staleness gate — so newly admitted prompts can only
+/// roll out on weights at least as new as the iteration that admitted
+/// them. Its completion ends the run (spawn it as a driver node).
+pub struct TrainPublish {
+    engine: Box<dyn TrainEngine>,
+    gate: Arc<IterationGate>,
+    plan: TrainPlan,
+    iters_done: u64,
+    steps_in_iter: u64,
+}
+
+impl TrainPublish {
+    pub fn new(
+        engine: Box<dyn TrainEngine>,
+        gate: Arc<IterationGate>,
+        plan: TrainPlan,
+    ) -> Self {
+        TrainPublish {
+            engine,
+            gate,
+            plan,
+            iters_done: 0,
+            steps_in_iter: 0,
+        }
+    }
+
+    /// Standard input contract (full engine batches).
+    pub fn input(batch: usize) -> StageInput {
+        StageInput::new(
+            "train",
+            vec![
+                Column::Prompts,
+                Column::Responses,
+                Column::OldLogp,
+                Column::RefLogp,
+                Column::Advantages,
+            ],
+        )
+        .with_batch(batch, batch)
+    }
+}
+
+impl Stage for TrainPublish {
+    fn process(
+        &mut self,
+        ctx: &StageCtx<'_>,
+        batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        let tb = build_train_batch(
+            batch,
+            self.plan.batch,
+            self.plan.max_len,
+            self.plan.prompt_len,
+            self.plan.lr,
+        )?;
+        let t0 = ctx.timeline.now();
+        let tm = self.engine.train_step(&tb)?;
+        ctx.timeline.record(
+            ctx.worker,
+            "train_step",
+            t0,
+            ctx.timeline.now(),
+        );
+        ctx.metrics.inc("samples_trained", batch.len() as u64);
+        let tokens: u64 = tb
+            .mask
+            .iter()
+            .map(|row| row.iter().sum::<f32>() as u64)
+            .sum();
+        ctx.metrics.inc("tokens_trained", tokens);
+        ctx.metrics.record_now("loss", tm.loss as f64);
+        ctx.metrics.record_now("kl", tm.kl as f64);
+        ctx.metrics.record_now("nll", tm.nll as f64);
+        ctx.metrics.record_now("grad_norm", tm.grad_norm as f64);
+        // Evict consumed rows (global-batch GC).
+        ctx.client.evict(&batch.indices)?;
+
+        self.steps_in_iter += 1;
+        if self.steps_in_iter == self.plan.steps_per_iter {
+            self.steps_in_iter = 0;
+            self.iters_done += 1;
+            // Publish weights BEFORE releasing the gate (on-policy in
+            // sync mode; bounded staleness otherwise).
+            let t0 = ctx.timeline.now();
+            ctx.client.weight_sync_notify(self.engine.export_params())?;
+            ctx.timeline.record(
+                ctx.worker,
+                "weight_sync",
+                t0,
+                ctx.timeline.now(),
+            );
+            self.gate.complete_iteration();
+            ctx.metrics.inc("iterations_done", 1);
+            ctx.metrics.record_now("iteration", self.iters_done as f64);
+        }
+        Ok(vec![])
+    }
+
+    fn finished(&self) -> bool {
+        self.iters_done >= self.plan.iterations
+    }
+}
+
+// ===========================================================================
+// Train-batch assembly
+// ===========================================================================
+
+/// Assemble the fixed-geometry [`TrainBatch`] from variable-length TQ
+/// rows (restoring geometry from lengths — the receive side of the
+/// paper's no-padding transfer, §3.5).
+pub fn build_train_batch(
+    batch: &Batch,
+    b: usize,
+    t_len: usize,
+    p_len: usize,
+    lr: f32,
+) -> Result<TrainBatch> {
+    let mut ids = Vec::with_capacity(b);
+    let mut advantages = Vec::with_capacity(b);
+    let mut old_logp = Vec::with_capacity(b);
+    let mut ref_logp = Vec::with_capacity(b);
+    let mut mask = Vec::with_capacity(b);
+    for row in &batch.rows {
+        let prompt = row[0].as_i32s().context("prompts column")?;
+        let resp = row[1].as_i32s().context("responses column")?;
+        let old = row[2].as_f32s().context("old_logp column")?;
+        let rlp = row[3].as_f32s().context("ref_logp column")?;
+        let adv = row[4].as_f32().context("advantages column")?;
+        let rl = resp.len();
+        anyhow::ensure!(old.len() == rl && rlp.len() == rl,
+            "logp slice length mismatch: resp={rl} old={} ref={}",
+            old.len(), rlp.len());
+
+        let mut full = prompt.to_vec();
+        full.extend_from_slice(resp);
+        full.resize(t_len, PAD);
+        ids.push(full);
+        advantages.push(adv);
+
+        let mut o = vec![0.0f32; t_len - 1];
+        let mut rf = vec![0.0f32; t_len - 1];
+        let mut m = vec![0.0f32; t_len - 1];
+        o[p_len - 1..p_len - 1 + rl].copy_from_slice(old);
+        rf[p_len - 1..p_len - 1 + rl].copy_from_slice(rlp);
+        for v in m.iter_mut().skip(p_len - 1).take(rl) {
+            *v = 1.0;
+        }
+        old_logp.push(o);
+        ref_logp.push(rf);
+        mask.push(m);
+    }
+    Ok(TrainBatch { ids, advantages, old_logp, ref_logp, mask, lr })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Timeline;
+    use crate::exec::Shutdown;
+    use crate::metrics::Registry;
+    use crate::runtime::ParamSet;
+    use crate::service::{ServiceClient, Session, SessionSpec};
+
+    fn test_ctx_session() -> (Arc<Session>, ServiceClient) {
+        let session = Arc::new(
+            Session::init_engines(
+                SessionSpec::grpo(),
+                ParamSet::new(0, vec![]),
+            )
+            .unwrap(),
+        );
+        let client = ServiceClient::in_proc(session.clone());
+        (session, client)
+    }
+
+    fn batch_of(rows: Vec<(u64, Vec<Value>)>, columns: Vec<Column>) -> Batch {
+        Batch {
+            indices: rows.iter().map(|(i, _)| GlobalIndex(*i)).collect(),
+            rows: rows.into_iter().map(|(_, r)| r).collect(),
+            columns,
+        }
+    }
+
+    /// Drive a stage's process() directly with a synthetic context.
+    fn run_process(
+        stage: &mut dyn Stage,
+        batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        let (_session, client) = test_ctx_session();
+        let metrics = Registry::new();
+        let timeline = Timeline::new();
+        let shutdown = Shutdown::new();
+        let ctx = StageCtx {
+            worker: "test",
+            client: &client,
+            metrics: &metrics,
+            timeline: &timeline,
+            shutdown: &shutdown,
+        };
+        stage.process(&ctx, batch)
+    }
+
+    #[test]
+    fn rule_reward_grades_against_answer_metadata() {
+        let mut stage = RuleReward::new();
+        // "7\n" == answer 7 -> full reward; "9\n" parses but misses
+        // the ground truth -> partial shaping reward only.
+        let good = data::render_answer(7);
+        let bad = data::render_answer(9);
+        let batch = batch_of(
+            vec![
+                (0, vec![Value::I32s(good), Value::Text("7".into())]),
+                (1, vec![Value::I32s(bad), Value::Text("7".into())]),
+            ],
+            vec![Column::Responses, col("answer")],
+        );
+        let rows = run_process(&mut stage, &batch).unwrap();
+        assert_eq!(rows.len(), 2);
+        let reward_of = |r: &PutRow| match r.cells[0].1 {
+            Value::F32(v) => v,
+            ref other => panic!("expected a reward, got {other:?}"),
+        };
+        assert!((reward_of(&rows[0]) - 1.0).abs() < 1e-5);
+        let partial = reward_of(&rows[1]);
+        assert!(
+            partial < 0.9 && partial > 0.0,
+            "wrong answer earns shaping reward only: {partial}"
+        );
+    }
+
+    #[test]
+    fn rule_reward_rejects_malformed_answer() {
+        let mut stage = RuleReward::new();
+        let batch = batch_of(
+            vec![(
+                0,
+                vec![
+                    Value::I32s(vec![49]),
+                    Value::Text("not-a-number".into()),
+                ],
+            )],
+            vec![Column::Responses, col("answer")],
+        );
+        assert!(run_process(&mut stage, &batch).is_err());
+    }
+
+    #[test]
+    fn group_advantage_releases_complete_groups() {
+        let mut stage = GroupAdvantage::new(2);
+        let batch = batch_of(
+            vec![
+                (0, vec![Value::F32(1.0), Value::U64(5)]),
+                (1, vec![Value::F32(0.0), Value::U64(6)]),
+            ],
+            vec![Column::Rewards, col("group")],
+        );
+        assert!(run_process(&mut stage, &batch).unwrap().is_empty());
+        let batch2 = batch_of(
+            vec![
+                (2, vec![Value::F32(0.0), Value::U64(5)]),
+                (3, vec![Value::F32(1.0), Value::U64(6)]),
+            ],
+            vec![Column::Rewards, col("group")],
+        );
+        let rows = run_process(&mut stage, &batch2).unwrap();
+        assert_eq!(rows.len(), 4, "both groups complete");
+    }
+
+    #[test]
+    fn filter_keeps_top_k_by_reward() {
+        let mut stage = FilterTopK::new(4, 2).unwrap();
+        let batch = batch_of(
+            vec![
+                (0, vec![Value::F32(0.1), Value::U64(0)]),
+                (1, vec![Value::F32(0.9), Value::U64(0)]),
+                (2, vec![Value::F32(0.5), Value::U64(0)]),
+                (3, vec![Value::F32(0.9), Value::U64(0)]),
+            ],
+            vec![Column::Rewards, col("group")],
+        );
+        let rows = run_process(&mut stage, &batch).unwrap();
+        let survivors: Vec<u64> = rows
+            .iter()
+            .map(|r| r.index.unwrap().0)
+            .collect();
+        // Top-2 by reward; the 0.9 tie resolves to the older row (1).
+        assert_eq!(survivors, vec![1, 3]);
+        for r in &rows {
+            assert_eq!(r.cells[0].1, Value::F32(1.0));
+        }
+    }
+
+    #[test]
+    fn filter_streams_partial_groups() {
+        let mut stage = FilterTopK::new(3, 1).unwrap();
+        let b1 = batch_of(
+            vec![
+                (0, vec![Value::F32(0.2), Value::U64(0)]),
+                (1, vec![Value::F32(0.8), Value::U64(0)]),
+            ],
+            vec![Column::Rewards, col("group")],
+        );
+        assert!(run_process(&mut stage, &b1).unwrap().is_empty());
+        let b2 = batch_of(
+            vec![(2, vec![Value::F32(0.5), Value::U64(0)])],
+            vec![Column::Rewards, col("group")],
+        );
+        let rows = run_process(&mut stage, &b2).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].index.unwrap().0, 1, "argmax reward");
+    }
+
+    #[test]
+    fn feeder_streams_one_group_per_call_within_budget() {
+        let gen = MathTaskGen::new(0, 16);
+        let gate = IterationGate::new(1);
+        let mut stage = PromptFeeder::new(gen, gate, 2, 8, 4);
+        assert!(!stage.finished());
+        let empty = Batch { indices: vec![], columns: vec![], rows: vec![] };
+        let (_s, client) = test_ctx_session();
+        let metrics = Registry::new();
+        let timeline = Timeline::new();
+        let shutdown = Shutdown::new();
+        let ctx = StageCtx {
+            worker: "feeder",
+            client: &client,
+            metrics: &metrics,
+            timeline: &timeline,
+            shutdown: &shutdown,
+        };
+        // 2 iterations x 2 groups of 4: one group per call so rollout
+        // can start on group 0 while group 1 is still being fed.
+        let mut groups_seen = Vec::new();
+        for call in 0..4 {
+            let rows = stage.process(&ctx, &empty).unwrap();
+            assert_eq!(rows.len(), 4, "call {call} emits one group");
+            let group = rows[0]
+                .cells
+                .iter()
+                .find(|(c, _)| *c == col("group"))
+                .and_then(|(_, v)| v.as_u64())
+                .unwrap();
+            assert!(
+                rows.iter().all(|r| {
+                    r.cells.iter().any(|(c, v)| {
+                        *c == col("group") && v.as_u64() == Some(group)
+                    })
+                }),
+                "all rows of a call share one group id"
+            );
+            groups_seen.push(group);
+        }
+        assert_eq!(groups_seen, vec![0, 1, 2, 3], "distinct group ids");
+        assert!(stage.finished(), "budget of 2 iterations exhausted");
+        assert!(stage.process(&ctx, &empty).unwrap().is_empty());
+        // Degenerate geometry: nothing to feed, finished immediately.
+        let degenerate = PromptFeeder::new(
+            MathTaskGen::new(0, 16),
+            IterationGate::new(1),
+            2,
+            8,
+            16,
+        );
+        assert!(degenerate.finished());
+    }
+}

@@ -501,6 +501,8 @@ impl Session {
                 ready: c.ready_depth(),
                 consumed: c.consumed_count(),
                 policy: c.policy_name().to_string(),
+                waiting_consumers: c.waiting_consumers(),
+                oldest_ready_age_ms: c.oldest_ready_age_ms(),
             })
             .collect();
         let units = st
@@ -1012,6 +1014,66 @@ mod tests {
         assert!(stats.units[0].remote_bytes_written > 0);
         assert!(stats.units[1].endpoint.is_none());
         server.stop();
+    }
+
+    #[test]
+    fn stats_expose_consumer_liveness() {
+        let s = Arc::new(session());
+        s.put_prompts_data(&[vec![1, 2]]).unwrap();
+        std::thread::sleep(Duration::from_millis(15));
+        let stats = s.stats().unwrap();
+        let rollout =
+            stats.tasks.iter().find(|t| t.name == "rollout").unwrap();
+        assert!(
+            rollout.oldest_ready_age_ms.unwrap_or(0) >= 10,
+            "unconsumed row must age: {:?}",
+            rollout.oldest_ready_age_ms
+        );
+        assert_eq!(rollout.waiting_consumers, 0);
+        let train =
+            stats.tasks.iter().find(|t| t.name == "train").unwrap();
+        assert_eq!(train.oldest_ready_age_ms, None, "nothing ready");
+        // Park a consumer on the starved train task; stats see it live.
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || {
+            s2.get_batch(&GetBatchSpec {
+                task: "train".into(),
+                group: 0,
+                columns: vec![Column::Responses],
+                count: 4,
+                min: 1,
+                timeout_ms: 10_000,
+            })
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let waiting = s
+                .stats()
+                .unwrap()
+                .tasks
+                .iter()
+                .find(|t| t.name == "train")
+                .unwrap()
+                .waiting_consumers;
+            if waiting == 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "waiter never observed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Draining the queue releases (and deregisters) the waiter.
+        s.shutdown().unwrap();
+        assert!(matches!(
+            h.join().unwrap().unwrap(),
+            GetBatchReply::Closed
+        ));
+        let train_after = s.stats().unwrap();
+        let train_after = train_after
+            .tasks
+            .iter()
+            .find(|t| t.name == "train")
+            .unwrap();
+        assert_eq!(train_after.waiting_consumers, 0);
     }
 
     #[test]

@@ -180,13 +180,22 @@ impl GetBatchReply {
     }
 }
 
-/// Per-task queue statistics.
+/// Per-task queue statistics. The two liveness fields make a stalled
+/// graph diagnosable from outside the process: a task with
+/// `waiting_consumers > 0` and nothing ready is starved by its upstream;
+/// a growing `oldest_ready_age_ms` with zero waiters means its consumer
+/// died.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskStats {
     pub name: String,
     pub ready: usize,
     pub consumed: usize,
     pub policy: String,
+    /// Consumers currently parked in a deadline-bounded `get_batch` /
+    /// `lease_prompts` for this task.
+    pub waiting_consumers: usize,
+    /// Age of the oldest ready-but-unconsumed row (`None` = none ready).
+    pub oldest_ready_age_ms: Option<u64>,
 }
 
 /// Per-storage-unit occupancy, traffic, and placement (load-imbalance
@@ -1032,7 +1041,7 @@ impl ServiceResponse {
                                 s.tasks
                                     .iter()
                                     .map(|t| {
-                                        Json::obj(vec![
+                                        let mut pairs = vec![
                                             (
                                                 "name",
                                                 Json::Str(t.name.clone()),
@@ -1053,7 +1062,23 @@ impl ServiceResponse {
                                                     t.policy.clone(),
                                                 ),
                                             ),
-                                        ])
+                                            (
+                                                "waiting_consumers",
+                                                Json::Num(
+                                                    t.waiting_consumers
+                                                        as f64,
+                                                ),
+                                            ),
+                                        ];
+                                        if let Some(age) =
+                                            t.oldest_ready_age_ms
+                                        {
+                                            pairs.push((
+                                                "oldest_ready_age_ms",
+                                                Json::Num(age as f64),
+                                            ));
+                                        }
+                                        Json::obj(pairs)
                                     })
                                     .collect(),
                             ),
@@ -1227,11 +1252,27 @@ impl ServiceResponse {
             let tasks = field_arr(s, "tasks")?
                 .iter()
                 .map(|t| {
+                    // Liveness fields are optional on decode (older
+                    // peers elide them).
+                    let waiting_consumers = match t.get("waiting_consumers")
+                    {
+                        None => 0,
+                        Some(_) => field_usize(t, "waiting_consumers")?,
+                    };
+                    let oldest_ready_age_ms =
+                        match t.get("oldest_ready_age_ms") {
+                            None => None,
+                            Some(_) => {
+                                Some(field_u64(t, "oldest_ready_age_ms")?)
+                            }
+                        };
                     Ok(TaskStats {
                         name: field_str(t, "name")?,
                         ready: field_usize(t, "ready")?,
                         consumed: field_usize(t, "consumed")?,
                         policy: field_str(t, "policy")?,
+                        waiting_consumers,
+                        oldest_ready_age_ms,
                     })
                 })
                 .collect::<Result<_>>()?;
@@ -1467,12 +1508,24 @@ mod tests {
     #[test]
     fn stats_and_error_responses_roundtrip() {
         let stats = ServiceStats {
-            tasks: vec![TaskStats {
-                name: "rollout".into(),
-                ready: 3,
-                consumed: 9,
-                policy: "fcfs".into(),
-            }],
+            tasks: vec![
+                TaskStats {
+                    name: "rollout".into(),
+                    ready: 3,
+                    consumed: 9,
+                    policy: "fcfs".into(),
+                    waiting_consumers: 2,
+                    oldest_ready_age_ms: Some(1234),
+                },
+                TaskStats {
+                    name: "train".into(),
+                    ready: 0,
+                    consumed: 4,
+                    policy: "fcfs".into(),
+                    waiting_consumers: 1,
+                    oldest_ready_age_ms: None,
+                },
+            ],
             units: vec![
                 UnitStats {
                     unit: 0,
@@ -1717,6 +1770,22 @@ mod tests {
                     \"closed\":false}}";
         match ServiceResponse::parse_line(line).unwrap() {
             ServiceResponse::Stats(s) => assert!(s.units.is_empty()),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn task_stats_liveness_fields_are_optional_on_decode() {
+        // An older peer's task entry without the liveness fields.
+        let line = "{\"ok\":true,\"stats\":{\"tasks\":[{\
+                    \"name\":\"rollout\",\"ready\":1,\"consumed\":2,\
+                    \"policy\":\"fcfs\"}],\"resident_rows\":1,\
+                    \"param_version\":0,\"closed\":false}}";
+        match ServiceResponse::parse_line(line).unwrap() {
+            ServiceResponse::Stats(s) => {
+                assert_eq!(s.tasks[0].waiting_consumers, 0);
+                assert_eq!(s.tasks[0].oldest_ready_age_ms, None);
+            }
             _ => panic!("wrong variant"),
         }
     }

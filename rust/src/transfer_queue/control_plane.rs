@@ -28,15 +28,26 @@ struct RowStatus {
     token_len: usize,
 }
 
+/// A ready-but-unconsumed row: its token length (load balancing) and
+/// when it became ready (staleness observability — `oldest_ready_age_ms`
+/// in the `stats` verb).
+#[derive(Debug, Clone, Copy)]
+struct ReadyEntry {
+    token_len: usize,
+    since: Instant,
+}
+
 struct ControllerState {
     rows: BTreeMap<GlobalIndex, RowStatus>,
     /// Rows whose required columns are ALL ready and that are not yet
     /// consumed, with their token lengths — maintained incrementally on
     /// notify/consume so batch assembly never scans the full metadata
     /// table (EXPERIMENTS.md §Perf, L3 iteration 3).
-    ready: BTreeMap<GlobalIndex, usize>,
+    ready: BTreeMap<GlobalIndex, ReadyEntry>,
     consumed: HashSet<GlobalIndex>,
     group_stats: HashMap<usize, GroupStats>,
+    /// Consumers currently parked inside a deadline-bounded request.
+    waiters: usize,
     closed: bool,
 }
 
@@ -84,6 +95,7 @@ impl Controller {
                 ready: BTreeMap::new(),
                 consumed: HashSet::new(),
                 group_stats: HashMap::new(),
+                waiters: 0,
                 closed: false,
             }),
             ready_cv: Condvar::new(),
@@ -111,7 +123,10 @@ impl Controller {
             (row.ready.len() == required, row.token_len)
         };
         if all_ready && !st.consumed.contains(&n.index) {
-            st.ready.insert(n.index, token_len);
+            st.ready.insert(
+                n.index,
+                ReadyEntry { token_len, since: Instant::now() },
+            );
             self.ready_cv.notify_all();
         }
     }
@@ -119,7 +134,10 @@ impl Controller {
     fn ready_candidates(st: &ControllerState) -> Vec<Candidate> {
         st.ready
             .iter()
-            .map(|(idx, len)| Candidate { index: *idx, token_len: *len })
+            .map(|(idx, e)| Candidate {
+                index: *idx,
+                token_len: e.token_len,
+            })
             .collect()
     }
 
@@ -195,10 +213,14 @@ impl Controller {
         deadline: Option<Instant>,
     ) -> RequestOutcome {
         let mut st = self.state.lock().unwrap();
-        loop {
+        // Track parked consumers so `stats` can report liveness: a
+        // stalled graph shows waiters > 0 with nothing ready. Pure
+        // polls (deadline already passed) never register.
+        let mut registered = false;
+        let out = loop {
             match self.poll_locked(&mut st, group, count, min) {
                 RequestOutcome::NotReady => {}
-                done => return done,
+                done => break done,
             }
             // Short slices so a missed notify can never wedge a waiter.
             let wait = match deadline {
@@ -206,15 +228,23 @@ impl Controller {
                 Some(dl) => {
                     let now = Instant::now();
                     if now >= dl {
-                        return RequestOutcome::NotReady;
+                        break RequestOutcome::NotReady;
                     }
                     (dl - now).min(Duration::from_millis(50))
                 }
             };
+            if !registered {
+                registered = true;
+                st.waiters += 1;
+            }
             let (next, _timeout) =
                 self.ready_cv.wait_timeout(st, wait).unwrap();
             st = next;
+        };
+        if registered {
+            st.waiters -= 1;
         }
+        out
     }
 
     fn assemble(
@@ -241,7 +271,11 @@ impl Controller {
         let mut tokens = 0u64;
         for idx in &picked {
             st.consumed.insert(*idx);
-            tokens += st.ready.remove(idx).unwrap_or(0) as u64;
+            tokens += st
+                .ready
+                .remove(idx)
+                .map(|e| e.token_len)
+                .unwrap_or(0) as u64;
         }
         let entry = st.group_stats.entry(group).or_default();
         entry.samples += picked.len() as u64;
@@ -269,6 +303,27 @@ impl Controller {
     /// Total samples consumed by all DP groups of this task.
     pub fn consumed_count(&self) -> usize {
         self.state.lock().unwrap().consumed.len()
+    }
+
+    /// Consumers currently parked in a deadline-bounded request for this
+    /// task — the liveness half of the `stats` verb: a stalled graph
+    /// shows waiting consumers on a task with nothing ready.
+    pub fn waiting_consumers(&self) -> usize {
+        self.state.lock().unwrap().waiters
+    }
+
+    /// Age in milliseconds of the oldest ready-but-unconsumed row
+    /// (`None` when nothing is ready). A growing age means no consumer
+    /// is draining this task — together with `waiting_consumers` on the
+    /// *other* tasks it pinpoints the stalled stage from outside the
+    /// process.
+    pub fn oldest_ready_age_ms(&self) -> Option<u64> {
+        let st = self.state.lock().unwrap();
+        st.ready
+            .values()
+            .map(|e| e.since)
+            .min()
+            .map(|since| since.elapsed().as_millis() as u64)
     }
 
     pub fn group_stats(&self) -> HashMap<usize, GroupStats> {
@@ -299,7 +354,12 @@ impl Controller {
                 .filter(|row| row.ready.len() == required)
                 .map(|row| row.token_len);
             if let Some(token_len) = restore {
-                st.ready.insert(*idx, token_len);
+                // Requeue time, not original ready time: the age metric
+                // measures how long the row has been servable.
+                st.ready.insert(
+                    *idx,
+                    ReadyEntry { token_len, since: Instant::now() },
+                );
                 n += 1;
             }
         }
@@ -524,6 +584,48 @@ mod tests {
         c.notify(&notif(0, Column::Prompts, Some(8))); // replay duplicate
         c.try_request(0, 1, 1).unwrap();
         assert_eq!(c.group_stats()[&0].tokens, 8, "tokens counted once");
+    }
+
+    #[test]
+    fn waiting_consumers_tracks_parked_requests() {
+        let c = std::sync::Arc::new(rollout_controller());
+        assert_eq!(c.waiting_consumers(), 0);
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || c2.request(0, 1, 1));
+        // Give the requester time to park.
+        for _ in 0..100 {
+            if c.waiting_consumers() == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(c.waiting_consumers(), 1);
+        c.notify(&notif(0, Column::Prompts, Some(2)));
+        assert!(h.join().unwrap().is_some());
+        assert_eq!(c.waiting_consumers(), 0, "waiter deregistered");
+        // A pure poll (deadline in the past) never registers.
+        assert!(matches!(
+            c.request_deadline(0, 1, 1, Some(Instant::now())),
+            RequestOutcome::NotReady
+        ));
+        assert_eq!(c.waiting_consumers(), 0);
+    }
+
+    #[test]
+    fn oldest_ready_age_tracks_the_ready_pool() {
+        let c = rollout_controller();
+        assert_eq!(c.oldest_ready_age_ms(), None, "empty pool");
+        c.notify(&notif(0, Column::Prompts, Some(2)));
+        std::thread::sleep(Duration::from_millis(15));
+        c.notify(&notif(1, Column::Prompts, Some(2)));
+        let age = c.oldest_ready_age_ms().unwrap();
+        assert!(age >= 10, "oldest row dominates: {age}ms");
+        // Consuming everything empties the measurement.
+        c.try_request(0, 8, 1).unwrap();
+        assert_eq!(c.oldest_ready_age_ms(), None);
+        // A requeued row measures from its requeue time.
+        assert_eq!(c.unconsume(&[GlobalIndex(0)]), 1);
+        assert!(c.oldest_ready_age_ms().unwrap() < 10);
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Stage-graph pipeline integration tests: out-of-process stages
+//! attaching to a live graph over TCP (mid-run task registration +
+//! conservation), error propagation draining the whole graph on both
+//! transports, and the best-of-n rejection-sampling graph end-to-end.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use asyncflow::config::RlConfig;
+use asyncflow::coordinator::trainer::{PolicyFactory, TrainFactory};
+use asyncflow::coordinator::{EngineSet, Trainer};
+use asyncflow::exec::Shutdown;
+use asyncflow::pipeline::{
+    run_remote_stage, PipelineRunner, PipelineSpec, RuleReward, Stage,
+    StageCtx, StageInput, StageNode,
+};
+use asyncflow::runtime::{MockEngine, ParamSet, PolicyEngine, TrainEngine};
+use asyncflow::service::{
+    GetBatchSpec, PutRow, ServiceClient, Session, SessionSpec,
+    TcpJsonlServer,
+};
+use asyncflow::transfer_queue::{Batch, Column, TaskSpec, Value};
+
+fn xcol() -> Column {
+    Column::Custom("x".into())
+}
+
+fn ycol() -> Column {
+    Column::Custom("y".into())
+}
+
+/// Source: emits `total` rows carrying one `x` cell each.
+struct NumberSource {
+    next: i32,
+    total: i32,
+}
+
+impl Stage for NumberSource {
+    fn process(
+        &mut self,
+        _ctx: &StageCtx<'_>,
+        _batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        if self.next >= self.total {
+            return Ok(vec![]);
+        }
+        let v = self.next;
+        self.next += 1;
+        Ok(vec![PutRow::new(vec![(xcol(), Value::I32s(vec![v]))])])
+    }
+
+    fn finished(&self) -> bool {
+        self.next >= self.total
+    }
+}
+
+/// The custom out-of-process stage: y = 2x over the "double" task.
+struct Doubler;
+
+impl Stage for Doubler {
+    fn process(
+        &mut self,
+        ctx: &StageCtx<'_>,
+        batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        let mut out = Vec::with_capacity(batch.len());
+        for (idx, row) in batch.indices.iter().zip(&batch.rows) {
+            let x = row[0].as_i32s().unwrap()[0];
+            ctx.metrics.inc("doubled", 1);
+            out.push(PutRow::at(*idx, vec![(
+                ycol(),
+                Value::I32s(vec![2 * x]),
+            )]));
+        }
+        Ok(out)
+    }
+}
+
+/// Driver: collects `want` doubled rows exactly once, verifying edges.
+struct Collector {
+    want: usize,
+    got: std::collections::HashSet<u64>,
+}
+
+impl Stage for Collector {
+    fn process(
+        &mut self,
+        _ctx: &StageCtx<'_>,
+        batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        for (idx, row) in batch.indices.iter().zip(&batch.rows) {
+            let x = row[0].as_i32s().unwrap()[0];
+            let y = row[1].as_i32s().unwrap()[0];
+            anyhow::ensure!(y == 2 * x, "bad edge: {x} -> {y}");
+            anyhow::ensure!(
+                self.got.insert(idx.0),
+                "row {idx} served twice"
+            );
+        }
+        Ok(vec![])
+    }
+
+    fn finished(&self) -> bool {
+        self.got.len() >= self.want
+    }
+}
+
+#[test]
+fn tcp_stage_attached_mid_run_contributes_with_conservation() {
+    const TOTAL: i32 = 60;
+    // The session starts with ONLY the collect task: the "double" task
+    // the TCP stage consumes does not exist yet — attaching registers
+    // it mid-run and replays every resident row.
+    let session = Arc::new(
+        Session::init_engines(
+            SessionSpec {
+                storage_units: 2,
+                tasks: vec![TaskSpec::new("collect", vec![ycol()])],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    );
+    let server =
+        TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0)).unwrap();
+    let addr = server.local_addr();
+
+    // The out-of-process half: connect over TCP after the run is
+    // already in flight, then double every row the source produced.
+    let remote = std::thread::spawn(move || -> Result<u64> {
+        std::thread::sleep(Duration::from_millis(50));
+        let client = ServiceClient::connect(addr)?;
+        let input = StageInput::new("double", vec![xcol()])
+            .with_batch(8, 1);
+        let mut stage = Doubler;
+        run_remote_stage(
+            &client,
+            "doubler-tcp",
+            Some(&input),
+            &mut stage,
+            &Shutdown::new(),
+        )?;
+        Ok(0)
+    });
+
+    let runner =
+        PipelineRunner::new(ServiceClient::in_proc(session.clone()));
+    let spec = PipelineSpec::new()
+        .node(StageNode::source(
+            "numbers",
+            Box::new(|| {
+                Ok(Box::new(NumberSource { next: 0, total: TOTAL })
+                    as Box<dyn Stage>)
+            }),
+        ))
+        .node(StageNode::driver(
+            "collect",
+            StageInput::new("collect", vec![xcol(), ycol()])
+                .with_batch(8, 1),
+            Box::new(|| {
+                Ok(Box::new(Collector {
+                    want: TOTAL as usize,
+                    got: Default::default(),
+                }) as Box<dyn Stage>)
+            }),
+        ));
+    runner.run(spec).unwrap();
+
+    // Driver completion closed the stream, which drains the TCP stage.
+    remote.join().unwrap().unwrap();
+    let stats = session.stats().unwrap();
+    assert!(stats.closed);
+    let double =
+        stats.tasks.iter().find(|t| t.name == "double").unwrap();
+    assert_eq!(
+        double.consumed, TOTAL as usize,
+        "every row flowed through the TCP-attached stage exactly once"
+    );
+    server.stop();
+}
+
+#[test]
+fn remote_stage_error_drains_the_whole_graph_over_tcp() {
+    struct Exploder;
+    impl Stage for Exploder {
+        fn process(
+            &mut self,
+            _ctx: &StageCtx<'_>,
+            _batch: &Batch,
+        ) -> Result<Vec<PutRow>> {
+            anyhow::bail!("remote stage exploded")
+        }
+    }
+
+    let session = Arc::new(
+        Session::init_engines(
+            SessionSpec {
+                storage_units: 1,
+                tasks: vec![
+                    TaskSpec::new("double", vec![xcol()]),
+                    TaskSpec::new("collect", vec![ycol()]),
+                ],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    );
+    let server =
+        TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0)).unwrap();
+    let addr = server.local_addr();
+
+    // An in-proc consumer parked on a task nothing will ever feed: it
+    // must drain (not hang) once the failing remote stage closes the
+    // stream.
+    let parked = {
+        let client = ServiceClient::in_proc(session.clone());
+        std::thread::spawn(move || {
+            client.get_batch_blocking(&GetBatchSpec {
+                task: "collect".into(),
+                group: 0,
+                columns: vec![ycol()],
+                count: 4,
+                min: 1,
+                timeout_ms: 50,
+            })
+        })
+    };
+
+    // Feed rows so the remote stage has something to fail on.
+    let feeder = ServiceClient::in_proc(session.clone());
+    feeder
+        .put_batch(
+            (0..4)
+                .map(|i| {
+                    PutRow::new(vec![(xcol(), Value::I32s(vec![i]))])
+                })
+                .collect(),
+        )
+        .unwrap();
+
+    let client = ServiceClient::connect(addr).unwrap();
+    let input = StageInput::new("double", vec![xcol()]).with_batch(4, 1);
+    let mut stage = Exploder;
+    let err = run_remote_stage(
+        &client,
+        "exploder-tcp",
+        Some(&input),
+        &mut stage,
+        &Shutdown::new(),
+    )
+    .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("remote stage exploded"),
+        "got {err:#}"
+    );
+    // The failing stage drained the graph: session closed, parked
+    // consumer released with `None` instead of hanging.
+    assert!(session.stats().unwrap().closed);
+    assert!(parked.join().unwrap().unwrap().is_none());
+    server.stop();
+}
+
+fn mock_engines(r: usize, b: usize, p: usize, t: usize) -> EngineSet {
+    EngineSet {
+        rollout: (0..r)
+            .map(|_| {
+                Box::new(move || {
+                    Ok(Box::new(MockEngine::new(b, p, t))
+                        as Box<dyn PolicyEngine>)
+                }) as PolicyFactory
+            })
+            .collect(),
+        reference: Box::new(move || {
+            Ok(Box::new(MockEngine::new(b, p, t))
+                as Box<dyn PolicyEngine>)
+        }),
+        train: Box::new(move || {
+            Ok(Box::new(MockEngine::new(b, p, t)) as Box<dyn TrainEngine>)
+        }) as TrainFactory,
+        initial_params: ParamSet::new(0, vec![]),
+        batch: b,
+        prompt_len: p,
+        max_len: t,
+    }
+}
+
+#[test]
+fn best_of_n_graph_runs_with_tcp_reward_worker_competing() {
+    let cfg = RlConfig {
+        iterations: 2,
+        global_batch: 16,
+        group_size: 4,
+        rollout_workers: 2,
+        staleness: 1,
+        storage_units: 2,
+        pipeline: "best_of_n".into(),
+        survivors: 2,
+        ..RlConfig::default()
+    };
+    let trainer = Trainer::new(cfg, mock_engines(2, 8, 16, 48)).unwrap();
+    let server =
+        TcpJsonlServer::bind(trainer.session(), ("127.0.0.1", 0))
+            .unwrap();
+    let addr = server.local_addr();
+
+    // A second reward grader competes over TCP for the same task: rows
+    // are consumed exactly once across both workers, so the run's
+    // totals stay exact regardless of who grades what.
+    let remote = std::thread::spawn(move || -> Result<()> {
+        let client = ServiceClient::connect(addr)?;
+        let mut stage = RuleReward::new();
+        let input = RuleReward::input().with_batch(8, 1);
+        run_remote_stage(
+            &client,
+            "reward-tcp",
+            Some(&input),
+            &mut stage,
+            &Shutdown::new(),
+        )?;
+        Ok(())
+    });
+
+    let report = trainer.run().unwrap();
+    assert_eq!(report.iterations, 2);
+    assert_eq!(
+        report.samples_trained, 16,
+        "2 iterations x 4 groups x top-2 survivors"
+    );
+    assert_eq!(report.metrics.counter("filter_survivors"), 16);
+    // The run closing drains the TCP grader cleanly.
+    remote.join().unwrap().unwrap();
+    server.stop();
+}
