@@ -227,6 +227,7 @@ fn main() -> Result<()> {
         count: 16,
         min: 1,
         timeout_ms: 50,
+        consumer: None,
     };
     let t0 = Instant::now();
     let mut first: Option<Duration> = None;

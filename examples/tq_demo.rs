@@ -80,6 +80,7 @@ fn main() -> Result<()> {
                     count: 16,
                     min: 1,
                     timeout_ms: 50,
+                    consumer: None,
                 };
                 let (mut n, mut tokens) = (0usize, 0usize);
                 loop {
@@ -91,6 +92,9 @@ fn main() -> Result<()> {
                             }
                         }
                         GetBatchReply::NotReady => continue,
+                        GetBatchReply::Leased { .. } => {
+                            unreachable!("no consumer lease was requested")
+                        }
                         GetBatchReply::Closed => return Ok((n, tokens)),
                     }
                 }

@@ -92,6 +92,7 @@ fn run_leg(direct: bool) -> LegResult {
         count: BATCH,
         min: 1,
         timeout_ms: 2000,
+        consumer: None,
     };
     let t0 = std::time::Instant::now();
     let mut drained = 0usize;
@@ -99,6 +100,9 @@ fn run_leg(direct: bool) -> LegResult {
         match client.get_batch(&spec).unwrap() {
             GetBatchReply::Ready(b) => drained += b.len(),
             GetBatchReply::NotReady => continue,
+            GetBatchReply::Leased { .. } => {
+                unreachable!("no consumer lease was requested")
+            }
             GetBatchReply::Closed => break,
         }
     }

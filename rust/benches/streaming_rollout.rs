@@ -57,11 +57,15 @@ fn baseline_worker(client: ServiceClient, group: usize) {
         count: BATCH,
         min: BATCH,
         timeout_ms: 20,
+        consumer: None,
     };
     loop {
         let batch = match client.get_batch(&spec).unwrap() {
             GetBatchReply::Ready(b) => b,
             GetBatchReply::NotReady => continue,
+            GetBatchReply::Leased { .. } => {
+                unreachable!("no consumer lease was requested")
+            }
             GetBatchReply::Closed => return,
         };
         let prompts: Vec<Vec<i32>> = batch
@@ -160,6 +164,7 @@ fn run_mode(streaming: bool, workers: usize, n: usize) -> RunStats {
         count: BATCH,
         min: 1,
         timeout_ms: 20,
+        consumer: None,
     };
     let mut t_first = None;
     let mut seen = 0usize;

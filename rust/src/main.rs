@@ -130,9 +130,12 @@ COMMANDS:
             (elastic worker: lease prompts, stream chunked generations)
   stage     --connect HOST:PORT --stage {reward|advantage|filter}
             [--task T] [--batch N] [--group-size G] [--survivors K]
-            [--name ID]
+            [--name ID] [--lease-ttl-ms N]
             (attach a pipeline stage to a live run over TCP; a new
-             input task is registered mid-run and replays resident rows)
+             input task is registered mid-run and replays resident
+             rows. Batches are consumed under a consumer lease, so
+             killing the stage mid-batch requeues its rows — 0
+             disables leases)
   storage-unit --connect HOST:PORT [--slot N] [--listen HOST:PORT]
             [--advertise HOST:PORT]
             (host a data-plane shard: payload bytes bypass the
@@ -313,7 +316,10 @@ fn cmd_rollout_worker(flags: &HashMap<String, String>) -> Result<()> {
 /// per-instance group state, so run them only as the sole consumer of
 /// their task (competing instances would split groups and stall the
 /// graph). If the stage fails, the whole graph is drained before the
-/// error propagates.
+/// error propagates; if it is killed outright (`kill -9`), its
+/// consumer leases are revoked — on disconnect, or at `--lease-ttl-ms`
+/// as the backstop — and its in-flight rows requeue to the surviving
+/// consumers, so no data is ever stranded.
 fn cmd_stage(flags: &HashMap<String, String>) -> Result<()> {
     let addr = flags
         .get("connect")
@@ -329,6 +335,11 @@ fn cmd_stage(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(task) = flags.get("task") {
         input.task = task.clone();
     }
+    input.lease_ttl_ms = get_usize(
+        flags,
+        "lease-ttl-ms",
+        input.lease_ttl_ms as usize,
+    )? as u64;
     let name = flags
         .get("name")
         .cloned()
@@ -336,8 +347,8 @@ fn cmd_stage(flags: &HashMap<String, String>) -> Result<()> {
     let client = ServiceClient::connect(addr.as_str())?;
     println!(
         "[stage] {name}: attached to {addr} (stage {which}, task {:?}, \
-         batch {})",
-        input.task, input.count
+         batch {}, lease ttl {}ms)",
+        input.task, input.count, input.lease_ttl_ms
     );
     let metrics = run_remote_stage(
         &client,
@@ -499,10 +510,11 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
         );
         for t in &stats.tasks {
             println!(
-                "  task {:<12} ready={:<6} consumed={:<8} policy={} \
-                 waiting={} oldest_ready={}",
+                "  task {:<12} ready={:<6} leased={:<5} consumed={:<8} \
+                 policy={} waiting={} oldest_ready={}",
                 t.name,
                 t.ready,
+                t.leased,
                 t.consumed,
                 t.policy,
                 t.waiting_consumers,

@@ -23,7 +23,11 @@
 //! runs out-of-process: `asyncflow stage --connect HOST:PORT --stage
 //! <name>` attaches a reward model or filter to a live run over TCP
 //! ([`run_remote_stage`]), registering its input task mid-run if the
-//! session does not have it yet (resident rows replay).
+//! session does not have it yet (resident rows replay). Remote stages
+//! consume under **consumer leases** (`get_batch` → `process` →
+//! `put_batch` → `ack_batch`), so killing one mid-batch requeues its
+//! in-flight rows instead of stranding them — see
+//! [`run_service_stage`].
 
 pub mod stages;
 
@@ -43,13 +47,24 @@ use crate::metrics::Registry;
 use crate::rollout::{run_worker, WorkerOptions};
 use crate::runtime::{PolicyEngine, Sampler};
 use crate::service::{
-    GetBatchSpec, PutRow, ServiceClient, TaskDecl,
+    ConsumerSpec, GetBatchSpec, PutRow, ServiceClient, TaskDecl,
 };
 use crate::transfer_queue::{Batch, Column};
 
 /// Long-poll interval for stage pulls: long enough to park the thread,
 /// short enough that shutdown is observed promptly.
 const PULL_TIMEOUT_MS: u64 = 50;
+
+/// Default consumer-lease TTL for remote stages (`asyncflow stage`
+/// overrides it with `--lease-ttl-ms`). Size it above the stage's
+/// worst-case per-batch latency: there is no mid-batch heartbeat, so a
+/// live stage that outruns its TTL has its rows requeued to a peer and
+/// its own late work discarded at ack time — survivable (the loop
+/// continues, identical replays are absorbed, conservation holds) but
+/// wasted effort. Erring long costs only crash-detection latency,
+/// since a killed stage's rows requeue immediately on disconnect
+/// anyway; the TTL is the backstop for wedged-but-open sockets.
+pub const DEFAULT_STAGE_LEASE_TTL_MS: u64 = 10_000;
 
 /// Execution context handed to every [`Stage::process`] call: the
 /// service client (the only data path), shared metrics/timeline sinks,
@@ -68,6 +83,7 @@ pub struct StageCtx<'a> {
 /// it, the columns it reads, and its micro-batch geometry.
 #[derive(Debug, Clone)]
 pub struct StageInput {
+    /// Task whose controller feeds this stage.
     pub task: String,
     /// Columns fetched for each served row.
     pub columns: Vec<Column>,
@@ -80,9 +96,16 @@ pub struct StageInput {
     /// [`StageInput::gate_on`] when a row must not be served until
     /// columns the stage does not fetch exist.
     pub requires: Vec<Column>,
+    /// Consumer-lease TTL applied when this stage runs over a remote
+    /// transport (defaults to [`DEFAULT_STAGE_LEASE_TTL_MS`]; `0` opts
+    /// out of leases entirely). In-process stages never lease — they
+    /// share the coordinator's fate, so the fast path is safe.
+    pub lease_ttl_ms: u64,
 }
 
 impl StageInput {
+    /// An input contract fetching `columns` from `task` with default
+    /// geometry (8 rows per pull, streaming min 1).
     pub fn new(task: impl Into<String>, columns: Vec<Column>) -> Self {
         let requires = columns.clone();
         StageInput {
@@ -91,6 +114,7 @@ impl StageInput {
             count: 8,
             min: 1,
             requires,
+            lease_ttl_ms: DEFAULT_STAGE_LEASE_TTL_MS,
         }
     }
 
@@ -99,6 +123,13 @@ impl StageInput {
     pub fn with_batch(mut self, count: usize, min: usize) -> Self {
         self.count = count;
         self.min = min;
+        self
+    }
+
+    /// Override the remote consumer-lease TTL (`0` disables leases —
+    /// the pre-lease consume-is-final behavior).
+    pub fn with_lease_ttl(mut self, ttl_ms: u64) -> Self {
+        self.lease_ttl_ms = ttl_ms;
         self
     }
 
@@ -247,15 +278,18 @@ pub struct PipelineSpec {
 }
 
 impl PipelineSpec {
+    /// An empty spec (no tasks, no nodes).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add a task the graph consumes (registered at run start if missing).
     pub fn task(mut self, decl: TaskDecl) -> Self {
         self.tasks.push(decl);
         self
     }
 
+    /// Add a worker node.
     pub fn node(mut self, node: StageNode) -> Self {
         self.nodes.push(node);
         self
@@ -282,6 +316,7 @@ pub struct PipelineRunner {
 }
 
 impl PipelineRunner {
+    /// A runner over `client` with fresh metrics/timeline/shutdown state.
     pub fn new(client: ServiceClient) -> Self {
         PipelineRunner {
             client,
@@ -408,11 +443,22 @@ impl PipelineRunner {
 }
 
 /// Drive one stage loop against a service client: `get_batch` →
-/// `process` → `put_batch` (pure production for sources). Returns when
-/// the stream closes, the stage finishes, or `ctx.shutdown` trips.
-/// Shared by the in-process [`PipelineRunner`] and the out-of-process
-/// `asyncflow stage` attach path — the loops are byte-identical, only
-/// the transport differs.
+/// `process` → `put_batch` → `ack` (pure production for sources).
+/// Returns when the stream closes, the stage finishes, or
+/// `ctx.shutdown` trips. Shared by the in-process [`PipelineRunner`]
+/// and the out-of-process `asyncflow stage` attach path — the loops are
+/// byte-identical, only the transport differs.
+///
+/// Crash safety: when the client is remote ([`ServiceClient::is_remote`])
+/// and the input's `lease_ttl_ms` is nonzero, every pull runs under a
+/// consumer lease that is acked only *after* the stage's outputs were
+/// written back. Killing the stage process at any point — mid-`process`,
+/// mid-`put_batch`, before the ack — requeues its in-flight rows to the
+/// surviving consumers (immediately on disconnect, at TTL expiry as the
+/// backstop), and a replayed identical `put_batch` is absorbed
+/// server-side, so rows are processed effectively once. In-process
+/// stages keep the lease-free fast path: they cannot outlive the
+/// coordinator.
 pub fn run_service_stage(
     ctx: &StageCtx<'_>,
     input: Option<&StageInput>,
@@ -433,6 +479,12 @@ pub fn run_service_stage(
             }
         }
         Some(input) => {
+            let consumer = (ctx.client.is_remote()
+                && input.lease_ttl_ms > 0)
+                .then(|| ConsumerSpec {
+                    id: ctx.worker.to_string(),
+                    ttl_ms: input.lease_ttl_ms,
+                });
             let spec = GetBatchSpec {
                 task: input.task.clone(),
                 group: 0,
@@ -440,19 +492,33 @@ pub fn run_service_stage(
                 count: input.count,
                 min: input.min,
                 timeout_ms: PULL_TIMEOUT_MS,
+                consumer,
             };
             while !ctx.shutdown.is_triggered() && !stage.finished() {
-                let Some(batch) = ctx
+                let Some(leased) = ctx
                     .client
-                    .get_batch_blocking_until(&spec, || {
+                    .get_batch_leased_blocking_until(&spec, || {
                         ctx.shutdown.is_triggered()
                     })?
                 else {
                     break;
                 };
-                let rows = stage.process(ctx, &batch)?;
+                let rows = stage.process(ctx, &leased.batch)?;
                 if !rows.is_empty() {
                     ctx.client.put_batch(rows)?;
+                }
+                // Outputs are durable — only now is consumption final.
+                // An EXPIRED lease is survivable, not fatal: the server
+                // already requeued the rows (this stage outran its
+                // TTL), a peer will reprocess them, and our identical
+                // outputs were absorbed — so conservation holds and the
+                // loop keeps serving. Anything else (transport death,
+                // protocol error) still aborts the stage.
+                if let Err(e) = leased.ack() {
+                    if !format!("{e:#}").contains("unknown or expired") {
+                        return Err(e);
+                    }
+                    ctx.metrics.inc("lease_overrun_batches", 1);
                 }
             }
         }
@@ -486,9 +552,12 @@ fn ensure_task(client: &ServiceClient, decl: TaskDecl) -> Result<()> {
 /// attaching mid-run replays resident rows). On a stage error the
 /// whole graph is drained (shutdown verb) before the error propagates,
 /// so a failing out-of-process stage can never silently stall its
-/// peers. Returns the stage's metrics registry (anything the stage
-/// recorded — e.g. the reward series — lives in THIS process, not the
-/// coordinator's; callers should surface it).
+/// peers — and because remote pulls run under consumer leases (see
+/// [`run_service_stage`]), even a `kill -9` mid-batch just requeues the
+/// stage's in-flight rows to its surviving peers. Returns the stage's
+/// metrics registry (anything the stage recorded — e.g. the reward
+/// series — lives in THIS process, not the coordinator's; callers
+/// should surface it).
 pub fn run_remote_stage(
     client: &ServiceClient,
     name: &str,

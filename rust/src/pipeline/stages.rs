@@ -45,6 +45,7 @@ pub struct PromptFeeder {
 }
 
 impl PromptFeeder {
+    /// A feeder emitting `iterations x (global_batch/group_size)` groups.
     pub fn new(
         gen: MathTaskGen,
         gate: Arc<IterationGate>,
@@ -134,6 +135,7 @@ pub struct ReferenceLogp {
 }
 
 impl ReferenceLogp {
+    /// A scorer over `engine` with the given sequence geometry.
     pub fn new(
         engine: Box<dyn PolicyEngine>,
         prompt_len: usize,
@@ -204,6 +206,7 @@ impl Stage for ReferenceLogp {
 pub struct RuleReward;
 
 impl RuleReward {
+    /// A stateless rule grader.
     pub fn new() -> Self {
         RuleReward
     }
@@ -258,6 +261,7 @@ pub struct GroupAdvantage {
 }
 
 impl GroupAdvantage {
+    /// An assembler for prompt groups of size `group_size`.
     pub fn new(group_size: usize) -> Self {
         GroupAdvantage { assembler: GroupAssembler::new(group_size) }
     }
@@ -322,6 +326,7 @@ pub struct FilterTopK {
 }
 
 impl FilterTopK {
+    /// A filter keeping the top `survivors` of each `group_size` group.
     pub fn new(group_size: usize, survivors: usize) -> Result<Self> {
         if group_size == 0 || survivors == 0 || survivors > group_size {
             bail!(
@@ -430,6 +435,7 @@ pub struct TrainPublish {
 }
 
 impl TrainPublish {
+    /// A driver over `engine` gated by `gate`, following `plan`.
     pub fn new(
         engine: Box<dyn TrainEngine>,
         gate: Arc<IterationGate>,

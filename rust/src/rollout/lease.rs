@@ -1,4 +1,4 @@
-//! Lease table: the bookkeeping heart of elastic rollout.
+//! Rollout lease table: the bookkeeping heart of elastic rollout.
 //!
 //! Every batch of prompt rows handed to a worker travels under a *lease*
 //! — an id, an owner, a source task, an expiry, and the partial-row
@@ -9,23 +9,30 @@
 //! because sweep and append are mutually exclusive under the table lock
 //! and a swept lease id is dead forever (a zombie worker's late chunks
 //! are rejected, never committed).
+//!
+//! Since the consumer-lease generalization, lease lifecycle (ids, TTLs,
+//! expiry sweep, exactly-once revocation) lives in the shared
+//! [`LeaseRegistry`] on the control plane — the same mechanism that
+//! makes generic `get_batch` consumers crash-safe. This table is the
+//! rollout-specific layer on top: per-row decode buffers (tokens/logps)
+//! and cumulative per-worker statistics.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::transfer_queue::GlobalIndex;
+use crate::transfer_queue::{GlobalIndex, LeaseRegistry};
 
 use super::manager::ChunkRow;
 
-/// Opaque lease handle (nonzero; never reused within a session).
-pub type LeaseId = u64;
+pub use crate::transfer_queue::LeaseId;
 
 /// Per-worker statistics (the `worker_stats` verb payload).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerStat {
+    /// Worker name (the lease owner).
     pub worker: String,
     /// Live leases currently held.
     pub active_leases: usize,
@@ -39,27 +46,12 @@ pub struct WorkerStat {
     pub requeued_rows: u64,
 }
 
-/// Partial-row state: what a worker has streamed for one leased row.
-struct RowState {
+/// Partial-row decode state: what a worker has streamed for one leased
+/// row so far.
+#[derive(Default)]
+struct RowBuf {
     tokens: Vec<i32>,
     logps: Vec<f32>,
-    done: bool,
-}
-
-struct Lease {
-    worker: String,
-    /// Task whose controller the rows were popped from (and are
-    /// requeued to on expiry).
-    task: String,
-    expires_at: Instant,
-    ttl: Duration,
-    rows: HashMap<GlobalIndex, RowState>,
-}
-
-impl Lease {
-    fn in_flight(&self) -> usize {
-        self.rows.values().filter(|r| !r.done).count()
-    }
 }
 
 #[derive(Default)]
@@ -69,20 +61,16 @@ struct WorkerInfo {
     requeued: u64,
 }
 
-#[derive(Default)]
-struct TableInner {
-    next_id: u64,
-    leases: HashMap<LeaseId, Lease>,
-    workers: HashMap<String, WorkerInfo>,
-}
-
-/// Thread-safe lease registry.
+/// Thread-safe rollout lease registry: [`LeaseRegistry`] lifecycle plus
+/// partial-row buffers and per-worker stats.
 #[derive(Default)]
 pub struct LeaseTable {
-    inner: Mutex<TableInner>,
+    registry: LeaseRegistry<RowBuf>,
+    workers: Mutex<HashMap<String, WorkerInfo>>,
 }
 
 impl LeaseTable {
+    /// An empty table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -101,56 +89,24 @@ impl LeaseTable {
         indices: &[GlobalIndex],
         ttl: Duration,
     ) -> LeaseId {
-        let mut g = self.inner.lock().unwrap();
-        g.next_id += 1;
-        let id = g.next_id;
-        if g.workers.len() >= Self::MAX_WORKER_STATS
-            && !g.workers.contains_key(worker)
         {
-            let live: HashSet<String> =
-                g.leases.values().map(|l| l.worker.clone()).collect();
-            g.workers.retain(|name, _| live.contains(name));
+            let mut w = self.workers.lock().unwrap();
+            if w.len() >= Self::MAX_WORKER_STATS
+                && !w.contains_key(worker)
+            {
+                let live = self.registry.live_owners();
+                w.retain(|name, _| live.contains(name));
+            }
+            w.entry(worker.to_string()).or_default();
         }
-        g.workers.entry(worker.to_string()).or_default();
-        let rows = indices
-            .iter()
-            .map(|idx| {
-                (
-                    *idx,
-                    RowState {
-                        tokens: Vec::new(),
-                        logps: Vec::new(),
-                        done: false,
-                    },
-                )
-            })
-            .collect();
-        g.leases.insert(
-            id,
-            Lease {
-                worker: worker.to_string(),
-                task: task.to_string(),
-                expires_at: Instant::now() + ttl,
-                ttl,
-                rows,
-            },
-        );
-        id
+        self.registry.grant(worker, task, indices, ttl)
     }
 
     /// Heartbeat: extend a live lease. `ttl = None` reuses the lease's
     /// own TTL. Unknown ids (including swept ones) are an error — the
     /// worker must drop its in-flight batch and re-lease.
     pub fn renew(&self, id: LeaseId, ttl: Option<Duration>) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
-        let Some(lease) = g.leases.get_mut(&id) else {
-            bail!("lease {id} is unknown or expired");
-        };
-        if let Some(t) = ttl {
-            lease.ttl = t;
-        }
-        lease.expires_at = Instant::now() + lease.ttl;
-        Ok(())
+        self.registry.renew(id, ttl)
     }
 
     /// Atomically append a batch of chunks to a live lease — one lock
@@ -167,59 +123,64 @@ impl LeaseTable {
         id: LeaseId,
         rows: &[ChunkRow],
     ) -> Result<Vec<(GlobalIndex, Vec<i32>, Vec<f32>)>> {
-        let mut g = self.inner.lock().unwrap();
-        let Some(lease) = g.leases.get_mut(&id) else {
-            bail!("lease {id} is unknown or expired");
-        };
-        lease.expires_at = Instant::now() + lease.ttl;
-        // Validate everything first — no partial application.
-        let mut seen = HashSet::new();
-        for r in rows {
-            if r.tokens.len() != r.logps.len() {
-                bail!(
-                    "chunk for {}: {} tokens but {} logps",
-                    r.index,
-                    r.tokens.len(),
-                    r.logps.len()
-                );
-            }
-            if !seen.insert(r.index) {
-                bail!("row {} appears twice in one chunk batch", r.index);
-            }
-            let Some(row) = lease.rows.get(&r.index) else {
-                bail!("row {} is not part of lease {id}", r.index);
-            };
-            if row.done {
-                bail!("row {} already finished under lease {id}", r.index);
-            }
-            if r.finished && row.tokens.is_empty() && r.tokens.is_empty() {
-                bail!("row {} finished with zero tokens", r.index);
-            }
-        }
-        // Apply.
-        let worker = lease.worker.clone();
-        let mut out = Vec::new();
-        let mut tokens_total = 0u64;
-        let mut finished_total = 0u64;
-        for r in rows {
-            let row = lease.rows.get_mut(&r.index).unwrap();
-            row.tokens.extend_from_slice(&r.tokens);
-            row.logps.extend_from_slice(&r.logps);
-            tokens_total += r.tokens.len() as u64;
-            if r.finished {
-                row.done = true;
-                finished_total += 1;
-                out.push((
-                    r.index,
-                    std::mem::take(&mut row.tokens),
-                    std::mem::take(&mut row.logps),
-                ));
-            }
-        }
-        if lease.rows.values().all(|r| r.done) {
-            g.leases.remove(&id);
-        }
-        let info = g.workers.entry(worker).or_default();
+        let (worker, out, tokens_total, finished_total) =
+            self.registry.with_rows(id, |owner, table| {
+                // Validate everything first — no partial application.
+                let mut seen = HashSet::new();
+                for r in rows {
+                    if r.tokens.len() != r.logps.len() {
+                        bail!(
+                            "chunk for {}: {} tokens but {} logps",
+                            r.index,
+                            r.tokens.len(),
+                            r.logps.len()
+                        );
+                    }
+                    if !seen.insert(r.index) {
+                        bail!(
+                            "row {} appears twice in one chunk batch",
+                            r.index
+                        );
+                    }
+                    let Some(row) = table.get(&r.index) else {
+                        bail!("row {} is not part of lease {id}", r.index);
+                    };
+                    if row.done {
+                        bail!(
+                            "row {} already finished under lease {id}",
+                            r.index
+                        );
+                    }
+                    if r.finished
+                        && row.state.tokens.is_empty()
+                        && r.tokens.is_empty()
+                    {
+                        bail!("row {} finished with zero tokens", r.index);
+                    }
+                }
+                // Apply.
+                let mut out = Vec::new();
+                let mut tokens_total = 0u64;
+                let mut finished_total = 0u64;
+                for r in rows {
+                    let row = table.get_mut(&r.index).unwrap();
+                    row.state.tokens.extend_from_slice(&r.tokens);
+                    row.state.logps.extend_from_slice(&r.logps);
+                    tokens_total += r.tokens.len() as u64;
+                    if r.finished {
+                        row.done = true;
+                        finished_total += 1;
+                        out.push((
+                            r.index,
+                            std::mem::take(&mut row.state.tokens),
+                            std::mem::take(&mut row.state.logps),
+                        ));
+                    }
+                }
+                Ok((owner.to_string(), out, tokens_total, finished_total))
+            })?;
+        let mut w = self.workers.lock().unwrap();
+        let info = w.entry(worker).or_default();
         info.tokens += tokens_total;
         info.completed += finished_total;
         Ok(out)
@@ -250,28 +211,17 @@ impl LeaseTable {
     /// per expired lease, for requeue onto the right controller.
     /// Completed rows were already committed and are left alone.
     pub fn sweep_expired(&self) -> Vec<(String, Vec<GlobalIndex>)> {
-        let now = Instant::now();
-        let mut g = self.inner.lock().unwrap();
-        let expired: Vec<LeaseId> = g
-            .leases
-            .iter()
-            .filter(|(_, l)| l.expires_at <= now)
-            .map(|(id, _)| *id)
-            .collect();
+        let swept = self.registry.sweep_expired();
+        if swept.is_empty() {
+            return Vec::new();
+        }
+        let mut w = self.workers.lock().unwrap();
         let mut requeue = Vec::new();
-        for id in expired {
-            let lease = g.leases.remove(&id).unwrap();
-            let mut lost: Vec<GlobalIndex> = lease
-                .rows
-                .iter()
-                .filter(|(_, r)| !r.done)
-                .map(|(idx, _)| *idx)
-                .collect();
-            lost.sort_unstable(); // deterministic (oldest row first)
-            let info = g.workers.entry(lease.worker).or_default();
-            info.requeued += lost.len() as u64;
-            if !lost.is_empty() {
-                requeue.push((lease.task, lost));
+        for lease in swept {
+            let info = w.entry(lease.owner).or_default();
+            info.requeued += lease.rows.len() as u64;
+            if !lease.rows.is_empty() {
+                requeue.push((lease.task, lease.rows));
             }
         }
         requeue
@@ -279,35 +229,24 @@ impl LeaseTable {
 
     /// Leased rows not yet finished, across all live leases.
     pub fn in_flight(&self) -> usize {
-        let g = self.inner.lock().unwrap();
-        g.leases.values().map(Lease::in_flight).sum()
+        self.registry.in_flight()
     }
 
     /// Leased-and-unfinished rows popped from `task` (drain barrier for
-    /// one prompt stream).
+    /// one prompt stream, and the per-task leased stat).
     pub fn in_flight_for(&self, task: &str) -> usize {
-        let g = self.inner.lock().unwrap();
-        g.leases
-            .values()
-            .filter(|l| l.task == task)
-            .map(Lease::in_flight)
-            .sum()
+        self.registry.in_flight_for(task)
     }
 
     /// Per-worker snapshot, sorted by worker name.
     pub fn stats(&self) -> Vec<WorkerStat> {
-        let g = self.inner.lock().unwrap();
-        let mut out: Vec<WorkerStat> = g
-            .workers
+        let load = self.registry.owner_load();
+        let w = self.workers.lock().unwrap();
+        let mut out: Vec<WorkerStat> = w
             .iter()
             .map(|(name, info)| {
-                let (mut leases, mut in_flight) = (0usize, 0usize);
-                for l in g.leases.values() {
-                    if l.worker == *name {
-                        leases += 1;
-                        in_flight += l.in_flight();
-                    }
-                }
+                let (leases, in_flight) =
+                    load.get(name).copied().unwrap_or((0, 0));
                 WorkerStat {
                     worker: name.clone(),
                     active_leases: leases,

@@ -275,6 +275,22 @@ impl RolloutManager {
     pub fn in_flight(&self) -> usize {
         self.table.in_flight()
     }
+
+    /// Rows leased from `task` and unfinished — the rollout half of the
+    /// per-task `leased` stat in the `stats` verb. Pure read: callers
+    /// that need freshness sweep once via
+    /// [`RolloutManager::sweep_now`] first (not per task).
+    pub fn in_flight_for(&self, task: &str) -> usize {
+        self.table.in_flight_for(task)
+    }
+
+    /// Requeue expired leases now — the explicit form of the sweep
+    /// every verb performs, for snapshot paths (`stats`) that read
+    /// several per-task values and should pay for one sweep, not one
+    /// per task.
+    pub fn sweep_now(&self) {
+        self.sweep();
+    }
 }
 
 #[cfg(test)]

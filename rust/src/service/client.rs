@@ -88,6 +88,7 @@ impl ServiceClient {
         }
     }
 
+    /// Client over an arbitrary transport (payloads relay through it).
     pub fn new(transport: Arc<dyn Transport>) -> Self {
         Self::with_direct(transport, false)
     }
@@ -115,6 +116,15 @@ impl ServiceClient {
             Arc::new(TcpJsonlTransport::connect(addr)?),
             false,
         ))
+    }
+
+    /// Whether this client's transport crosses a process boundary.
+    /// Remote consumers should take batches under consumer leases
+    /// (their process can die mid-batch); in-process consumers share
+    /// the server's fate and keep the lease-free fast path — the
+    /// policy [`crate::pipeline::run_service_stage`] applies.
+    pub fn is_remote(&self) -> bool {
+        self.transport.is_remote()
     }
 
     /// `(sent, received)` bytes over this client's coordinator socket
@@ -462,14 +472,15 @@ impl ServiceClient {
         }
     }
 
-    /// `get_batch` minus payloads: consumed indices + placement view.
+    /// `get_batch` minus payloads: consumed indices + placement view
+    /// (+ the consumer lease when `spec.consumer` asked for one).
     pub fn get_batch_meta(
         &self,
         spec: &GetBatchSpec,
     ) -> Result<GetBatchMetaReply> {
         match self.call(ServiceRequest::GetBatchMeta(spec.clone()))? {
-            ServiceResponse::BatchMeta { indices, units } => {
-                Ok(GetBatchMetaReply::Ready { indices, units })
+            ServiceResponse::BatchMeta { indices, units, lease } => {
+                Ok(GetBatchMetaReply::Ready { indices, units, lease })
             }
             ServiceResponse::Batch(GetBatchReply::NotReady) => {
                 Ok(GetBatchMetaReply::NotReady)
@@ -501,13 +512,13 @@ impl ServiceClient {
         &self,
         spec: &GetBatchSpec,
     ) -> Result<GetBatchReply> {
-        let (indices, units) = match self.get_batch_meta(spec)? {
+        let (indices, units, lease) = match self.get_batch_meta(spec)? {
             GetBatchMetaReply::NotReady => {
                 return Ok(GetBatchReply::NotReady)
             }
             GetBatchMetaReply::Closed => return Ok(GetBatchReply::Closed),
-            GetBatchMetaReply::Ready { indices, units } => {
-                (indices, units)
+            GetBatchMetaReply::Ready { indices, units, lease } => {
+                (indices, units, lease)
             }
         };
         // The reply carries the authoritative placement — adopt it.
@@ -573,11 +584,18 @@ impl ServiceClient {
                      both its unit and the coordinator"
                 )
             })?;
-        Ok(GetBatchReply::Ready(Batch {
+        // A failed payload fetch above simply propagates: the lease
+        // (granted on the metadata pop) will expire and requeue the
+        // rows — the crash-safety story covers mid-fetch deaths too.
+        let batch = Batch {
             indices,
             rows,
             columns: spec.columns.clone(),
-        }))
+        };
+        Ok(match lease {
+            Some(lease) => GetBatchReply::Leased { batch, lease },
+            None => GetBatchReply::Ready(batch),
+        })
     }
 
     /// Convenience loop over [`ServiceClient::get_batch`]: blocks until a
@@ -594,11 +612,37 @@ impl ServiceClient {
     /// Like [`ServiceClient::get_batch_blocking`] but aborts (returning
     /// `Ok(None)`) as soon as `abort()` turns true — the shutdown-aware
     /// worker loop.
+    ///
+    /// This API has no ack step, so a lease granted by `spec.consumer`
+    /// is retired immediately — the classic fire-and-forget semantics.
+    /// Crash-safe consumers (ack only after outputs land) use
+    /// [`ServiceClient::get_batch_leased_blocking_until`] instead.
     pub fn get_batch_blocking_until(
         &self,
         spec: &GetBatchSpec,
         abort: impl Fn() -> bool,
     ) -> Result<Option<Batch>> {
+        Ok(
+            match self.get_batch_leased_blocking_until(spec, abort)? {
+                Some(leased) => Some(leased.into_batch()?),
+                None => None,
+            },
+        )
+    }
+
+    /// Leased variant of [`ServiceClient::get_batch_blocking_until`]:
+    /// the returned [`LeasedBatch`] carries the consumer lease (if
+    /// `spec.consumer` requested one) and acks it on
+    /// [`LeasedBatch::ack`] or drop — so the ONLY way rows stay
+    /// permanently consumed is this process surviving long enough to
+    /// say so. A kill -9 between here and the ack leaves the lease
+    /// un-acked, and the server requeues the rows on TTL expiry or
+    /// connection drop.
+    pub fn get_batch_leased_blocking_until(
+        &self,
+        spec: &GetBatchSpec,
+        abort: impl Fn() -> bool,
+    ) -> Result<Option<LeasedBatch>> {
         let mut spec = spec.clone();
         if spec.timeout_ms == 0 {
             spec.timeout_ms = 50;
@@ -608,11 +652,32 @@ impl ServiceClient {
                 return Ok(None);
             }
             match self.get_batch(&spec)? {
-                GetBatchReply::Ready(b) => return Ok(Some(b)),
+                GetBatchReply::Ready(batch) => {
+                    return Ok(Some(LeasedBatch {
+                        batch,
+                        lease: None,
+                        client: None,
+                    }))
+                }
+                GetBatchReply::Leased { batch, lease } => {
+                    return Ok(Some(LeasedBatch {
+                        batch,
+                        lease: Some(lease),
+                        client: Some(self.clone()),
+                    }))
+                }
                 GetBatchReply::NotReady => continue,
                 GetBatchReply::Closed => return Ok(None),
             }
         }
+    }
+
+    /// `ack_batch`: retire a consumer lease after the outputs derived
+    /// from its rows have been written back. An error means the lease
+    /// already expired — the rows were requeued to a peer and this
+    /// consumer's work for them is discarded.
+    pub fn ack_batch(&self, lease: LeaseId) -> Result<()> {
+        self.call_ok(ServiceRequest::AckBatch { lease })
     }
 
     /// Long-poll for a weight snapshot newer than `min_version`.
@@ -694,5 +759,69 @@ impl ServiceClient {
     /// Close the queue; consumers drain and observe `Closed`.
     pub fn shutdown(&self) -> Result<()> {
         self.call_ok(ServiceRequest::Shutdown)
+    }
+}
+
+/// A batch plus the consumer lease it was served under (if any) — the
+/// RAII face of crash-safe consumption.
+///
+/// The intended flow is *process → write outputs → [`LeasedBatch::ack`]*:
+/// the lease is retired only after the outputs are durable, so a
+/// process killed anywhere in between leaves an un-acked lease whose
+/// rows the server requeues (TTL expiry, or immediately when the
+/// connection drops). Dropping the handle without an explicit ack also
+/// acks, best-effort — drops happen on in-process teardown paths where
+/// the graph is already draining, and silently leaking a live lease
+/// from a *healthy* process would requeue rows that were in fact
+/// handled. A killed process never runs `Drop`; that is the point.
+pub struct LeasedBatch {
+    /// The served rows.
+    pub batch: Batch,
+    lease: Option<LeaseId>,
+    client: Option<ServiceClient>,
+}
+
+impl LeasedBatch {
+    /// The consumer lease id, when the batch was served under one.
+    pub fn lease(&self) -> Option<LeaseId> {
+        self.lease
+    }
+
+    /// Retire the lease (no-op for unleased batches). Call after the
+    /// outputs derived from this batch have been written back; an error
+    /// means the lease expired and the rows were requeued to a peer.
+    pub fn ack(mut self) -> Result<()> {
+        let lease = self.lease.take();
+        let client = self.client.take();
+        if let (Some(lease), Some(client)) = (lease, client) {
+            client.ack_batch(lease)?;
+        }
+        Ok(())
+    }
+
+    /// Ack (propagating errors) and return the batch — for callers that
+    /// want the old fire-and-forget semantics.
+    pub fn into_batch(mut self) -> Result<Batch> {
+        let batch = std::mem::replace(
+            &mut self.batch,
+            Batch { indices: vec![], rows: vec![], columns: vec![] },
+        );
+        let lease = self.lease.take();
+        let client = self.client.take();
+        drop(self);
+        if let (Some(lease), Some(client)) = (lease, client) {
+            client.ack_batch(lease)?;
+        }
+        Ok(batch)
+    }
+}
+
+impl Drop for LeasedBatch {
+    fn drop(&mut self) {
+        if let (Some(lease), Some(client)) =
+            (self.lease.take(), self.client.take())
+        {
+            let _ = client.ack_batch(lease);
+        }
     }
 }

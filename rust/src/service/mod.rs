@@ -36,16 +36,17 @@ pub mod client;
 pub mod protocol;
 pub mod transport;
 
-use std::sync::{Arc, RwLock};
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-pub use client::ServiceClient;
+pub use client::{LeasedBatch, ServiceClient};
 pub use protocol::{
-    CellNote, GetBatchMetaReply, GetBatchReply, GetBatchSpec, PutRow,
-    ServiceRequest, ServiceResponse, ServiceStats, SpecDecl, TaskDecl,
-    TaskStats, UnitStats,
+    CellNote, ConsumerSpec, GetBatchMetaReply, GetBatchReply,
+    GetBatchSpec, PutRow, ServiceRequest, ServiceResponse, ServiceStats,
+    SpecDecl, TaskDecl, TaskStats, UnitStats,
 };
 pub use transport::{
     InProcTransport, TcpJsonlServer, TcpJsonlTransport, Transport,
@@ -57,8 +58,8 @@ use crate::rollout::{
 };
 use crate::runtime::ParamSet;
 use crate::transfer_queue::{
-    policy_by_name, Batch, Column, GlobalIndex, RequestOutcome, TaskSpec,
-    TransferQueue, Value,
+    policy_by_name, Batch, Column, GlobalIndex, LeaseId, LeaseRegistry,
+    RequestOutcome, TaskSpec, TransferQueue, Value,
 };
 
 /// Declarative description of the RL task graph for a session.
@@ -117,12 +118,25 @@ impl SessionSpec {
 }
 
 /// The initialized guts of a session (data fabric + weight store +
-/// elastic rollout dispatcher).
+/// elastic rollout dispatcher + consumer-lease registry).
 #[derive(Clone)]
 struct SessionState {
     tq: Arc<TransferQueue>,
     store: Arc<ParamStore>,
     rollout: Arc<RolloutManager>,
+    /// Leases on rows consumed through `get_batch`/`get_batch_meta`
+    /// with a [`ConsumerSpec`] — the crash-safety mechanism shared with
+    /// the rollout path (see `transfer_queue::LeaseRegistry`).
+    consumers: Arc<LeaseRegistry>,
+    /// Serializes `put_batch`/`notify_cells` validate+apply so the
+    /// identical-replay check cannot race a concurrent writer into a
+    /// mid-apply "duplicate" failure: a stalled-but-alive zombie and
+    /// the stage that inherited its requeued rows may both submit the
+    /// same byte-identical batch, and both must observe a clean
+    /// absorb-or-reject decision. Writes through the binary unit path
+    /// are unaffected (units serialize per-connection and are
+    /// idempotent on identical re-sends already).
+    write_lock: Arc<Mutex<()>>,
 }
 
 /// A live post-training service session: the server-side dispatcher.
@@ -185,10 +199,13 @@ impl Session {
             rollout: Arc::new(RolloutManager::new(tq.clone())),
             tq,
             store: ParamStore::new(initial_params),
+            consumers: Arc::new(LeaseRegistry::new()),
+            write_lock: Arc::new(Mutex::new(())),
         });
         Ok(())
     }
 
+    /// Whether `init_engines` has run.
     pub fn is_initialized(&self) -> bool {
         self.state.read().unwrap().is_some()
     }
@@ -201,10 +218,12 @@ impl Session {
             .ok_or_else(|| anyhow::anyhow!("call init_engines first"))
     }
 
+    /// The underlying data fabric (embedded/coordinator-side use).
     pub fn transfer_queue(&self) -> Result<Arc<TransferQueue>> {
         Ok(self.state()?.tq)
     }
 
+    /// The parameter store linking train and inference engines.
     pub fn param_store(&self) -> Result<Arc<ParamStore>> {
         Ok(self.state()?.store)
     }
@@ -257,16 +276,32 @@ impl Session {
     /// (`index: None`) or extends an existing row. Returns one index per
     /// row, in order.
     ///
-    /// The batch is validated up front (indices allocated, no duplicate
-    /// cells) so a rejected batch leaves no partial state — a remote
-    /// client's natural recovery is to resend the whole batch.
-    /// Concurrent writers racing on the same cell can still fail
-    /// mid-apply; that is a protocol misuse, not a retry path.
+    /// The batch is validated up front (indices allocated, no
+    /// conflicting duplicate cells) so a rejected batch leaves no
+    /// partial state — a remote client's natural recovery is to resend
+    /// the whole batch. Concurrent writers racing on the same cell can
+    /// still fail mid-apply; that is a protocol misuse, not a retry
+    /// path.
+    ///
+    /// A re-write that is *byte-identical* to the resident cell is
+    /// absorbed as a no-op rather than rejected — the idempotency rule
+    /// that makes leased consumers effectively-once: a stage that
+    /// crashed between writing its outputs and `ack_batch` gets its
+    /// rows requeued, and the inheriting stage's identical replay lands
+    /// harmlessly. Writing a *different* value to an occupied cell is
+    /// still an error.
     pub fn put_batch(
         &self,
         rows: Vec<PutRow>,
     ) -> Result<Vec<GlobalIndex>> {
         let st = self.state()?;
+        // One writer at a time through this verb: the replay check
+        // below and the apply loop must be atomic with respect to
+        // other put_batch/notify_cells callers (see `write_lock`).
+        let _w = st.write_lock.lock().unwrap();
+        // Cells whose resident value already equals the incoming one:
+        // skipped at apply time (identical replay absorption).
+        let mut replays: HashSet<(GlobalIndex, Column)> = HashSet::new();
         for row in &rows {
             let Some(idx) = row.index else { continue };
             if !st.tq.index_allocated(idx) {
@@ -275,11 +310,18 @@ impl Session {
                      put_prompts_data / put_batch allocation"
                 );
             }
-            for (col, _) in &row.cells {
-                if st.tq.data_plane().has_cell(idx, col) {
+            for (col, val) in &row.cells {
+                if !st.tq.data_plane().has_cell(idx, col) {
+                    continue;
+                }
+                if st.tq.data_plane().get(idx, col).as_ref() == Some(val)
+                {
+                    replays.insert((idx, col.clone()));
+                } else {
                     bail!(
-                        "duplicate write to {idx}/{col}: batch rejected \
-                         before any row was applied"
+                        "conflicting write to {idx}/{col}: cell already \
+                         holds a different value; batch rejected before \
+                         any row was applied"
                     );
                 }
             }
@@ -289,6 +331,9 @@ impl Session {
             match row.index {
                 Some(idx) => {
                     for (col, val) in row.cells {
+                        if replays.contains(&(idx, col.clone())) {
+                            continue;
+                        }
                         st.tq.put(idx, col, val)?;
                     }
                     out.push(idx);
@@ -315,11 +360,30 @@ impl Session {
             count,
             min: 1,
             timeout_ms: 0,
+            consumer: None,
         })
     }
 
+    /// Requeue the rows of expired consumer leases onto their source
+    /// controllers. Exactly-once end to end: the registry hands each
+    /// lease out at most once ever, and `Controller::unconsume` only
+    /// requeues rows still marked consumed.
+    fn sweep_consumers(st: &SessionState) {
+        for lease in st.consumers.sweep_expired() {
+            if lease.rows.is_empty() {
+                continue;
+            }
+            if let Some(ctrl) = st.tq.try_controller(&lease.task) {
+                ctrl.unconsume(&lease.rows);
+            }
+        }
+    }
+
     /// Shared deadline-bounded controller pop behind `get_batch` and
-    /// `get_batch_meta`.
+    /// `get_batch_meta`. Waits in short slices, sweeping expired
+    /// consumer leases between them — so a requester blocked on a
+    /// starved task wakes on its own the moment a dead peer's lease TTL
+    /// lapses, without any other traffic arriving to trigger the sweep.
     fn consume_ready(
         st: &SessionState,
         spec: &GetBatchSpec,
@@ -327,17 +391,43 @@ impl Session {
         let Some(controller) = st.tq.try_controller(&spec.task) else {
             bail!("unknown task {:?}", spec.task);
         };
-        let deadline = if spec.timeout_ms == 0 {
-            Instant::now()
-        } else {
-            Instant::now() + Duration::from_millis(spec.timeout_ms)
-        };
-        Ok(controller.request_deadline(
-            spec.group,
-            spec.count,
-            spec.min.max(1),
-            Some(deadline),
-        ))
+        let deadline = Instant::now()
+            + Duration::from_millis(spec.timeout_ms);
+        loop {
+            Self::sweep_consumers(st);
+            let slice =
+                deadline.min(Instant::now() + Duration::from_millis(50));
+            let out = controller.request_deadline(
+                spec.group,
+                spec.count,
+                spec.min.max(1),
+                Some(slice),
+            );
+            match out {
+                RequestOutcome::NotReady
+                    if Instant::now() < deadline =>
+                {
+                    continue
+                }
+                done => return Ok(done),
+            }
+        }
+    }
+
+    /// Validate a request's consumer-lease parameters, if any.
+    fn check_consumer(spec: &GetBatchSpec) -> Result<()> {
+        if let Some(c) = &spec.consumer {
+            if c.id.is_empty() {
+                bail!("consumer id must be non-empty");
+            }
+            if c.ttl_ms == 0 {
+                // A zero TTL would expire before the first ack could
+                // arrive and livelock the task on requeue — reject
+                // loudly instead (same rule as `lease_prompts`).
+                bail!("consumer lease_ttl_ms must be >= 1");
+            }
+        }
+        Ok(())
     }
 
     /// Batch-first pull with deadline semantics (`timeout_ms = 0` polls).
@@ -347,12 +437,30 @@ impl Session {
     /// columns, or a shadow cell whose unit died — returns the rows to
     /// the ready pool instead of stranding them as consumed (the same
     /// conservation rule the rollout lease path applies).
+    ///
+    /// With `spec.consumer` set, the served rows travel under a
+    /// consumer lease ([`GetBatchReply::Leased`]): they stay in flight
+    /// until [`Session::ack_batch`] retires the lease, and requeue
+    /// exactly once if the TTL lapses or the granting connection drops
+    /// — so killing the consumer mid-batch can never strand data.
     pub fn get_batch(&self, spec: &GetBatchSpec) -> Result<GetBatchReply> {
         let st = self.state()?;
+        Self::check_consumer(spec)?;
         Ok(match Self::consume_ready(&st, spec)? {
             RequestOutcome::Ready(meta) => {
                 match st.tq.try_fetch(&meta.indices, &spec.columns) {
-                    Ok(batch) => GetBatchReply::Ready(batch),
+                    Ok(batch) => match &spec.consumer {
+                        Some(c) => GetBatchReply::Leased {
+                            lease: st.consumers.grant(
+                                &c.id,
+                                &spec.task,
+                                &meta.indices,
+                                Duration::from_millis(c.ttl_ms),
+                            ),
+                            batch,
+                        },
+                        None => GetBatchReply::Ready(batch),
+                    },
                     Err(e) => {
                         if let Some(ctrl) =
                             st.tq.try_controller(&spec.task)
@@ -372,19 +480,67 @@ impl Session {
     /// return its indices plus the data-plane placement view, so the
     /// caller can fetch payload bytes straight from the owning units
     /// (with [`Session::fetch_rows`] as the via-coordinator fallback).
+    ///
+    /// A consumer lease, when requested, is granted on the *metadata*
+    /// pop — before any payload moves — so a direct-mode client that
+    /// dies mid-fetch still gets its rows requeued at TTL expiry.
     pub fn get_batch_meta(
         &self,
         spec: &GetBatchSpec,
     ) -> Result<GetBatchMetaReply> {
         let st = self.state()?;
+        Self::check_consumer(spec)?;
         Ok(match Self::consume_ready(&st, spec)? {
-            RequestOutcome::Ready(meta) => GetBatchMetaReply::Ready {
-                indices: meta.indices,
-                units: st.tq.data_plane().endpoints(),
-            },
+            RequestOutcome::Ready(meta) => {
+                let lease = spec.consumer.as_ref().map(|c| {
+                    st.consumers.grant(
+                        &c.id,
+                        &spec.task,
+                        &meta.indices,
+                        Duration::from_millis(c.ttl_ms),
+                    )
+                });
+                GetBatchMetaReply::Ready {
+                    indices: meta.indices,
+                    units: st.tq.data_plane().endpoints(),
+                    lease,
+                }
+            }
             RequestOutcome::NotReady => GetBatchMetaReply::NotReady,
             RequestOutcome::Closed => GetBatchMetaReply::Closed,
         })
+    }
+
+    /// `ack_batch`: retire a consumer lease — the consumer's outputs
+    /// for the leased rows are durable, so they must never be requeued.
+    /// Erroring on an unknown/expired id is deliberate: the rows were
+    /// already requeued to a peer, and the late consumer must learn its
+    /// work was discarded rather than assume success.
+    pub fn ack_batch(&self, lease: LeaseId) -> Result<()> {
+        let st = self.state()?;
+        Self::sweep_consumers(&st);
+        st.consumers.ack(lease)?;
+        Ok(())
+    }
+
+    /// Revoke consumer leases whose owning connection died (the
+    /// transport layer calls this when a TCP peer disconnects): their
+    /// rows requeue immediately instead of waiting out the TTL. Unknown
+    /// ids — already acked or swept — are skipped. Returns how many
+    /// rows were requeued.
+    pub fn revoke_consumer_leases(&self, leases: &[LeaseId]) -> usize {
+        let Ok(st) = self.state() else { return 0 };
+        let mut requeued = 0;
+        for id in leases {
+            let Some(lease) = st.consumers.revoke(*id) else { continue };
+            if lease.rows.is_empty() {
+                continue;
+            }
+            if let Some(ctrl) = st.tq.try_controller(&lease.task) {
+                requeued += ctrl.unconsume(&lease.rows);
+            }
+        }
+        requeued
     }
 
     /// Payload fetch by explicit indices, without consuming anything —
@@ -419,13 +575,16 @@ impl Session {
 
     /// `notify_cells`: metadata-only write notification for payloads a
     /// client already stored on the owning units (value-first across
-    /// processes).
+    /// processes). Serialized with `put_batch` (see `write_lock`) so
+    /// replay absorption decisions cannot race.
     pub fn notify_cells(&self, cells: &[CellNote]) -> Result<()> {
+        let st = self.state()?;
+        let _w = st.write_lock.lock().unwrap();
         let tuples: Vec<(GlobalIndex, Column, Option<usize>)> = cells
             .iter()
             .map(|c| (c.index, c.column.clone(), c.token_len))
             .collect();
-        self.state()?.tq.notify_remote_cells(&tuples)
+        st.tq.notify_remote_cells(&tuples)
     }
 
     /// `weight_sync_notify`: publish a new weight snapshot to all
@@ -489,9 +648,13 @@ impl Session {
         Ok(self.state()?.rollout.worker_stats())
     }
 
-    /// Queue/param introspection snapshot.
+    /// Queue/param introspection snapshot. Sweeps both lease tables
+    /// once up front so `leased` never counts rows a dead consumer or
+    /// worker already forfeited.
     pub fn stats(&self) -> Result<ServiceStats> {
         let st = self.state()?;
+        Self::sweep_consumers(&st);
+        st.rollout.sweep_now();
         let tasks = st
             .tq
             .controllers()
@@ -501,6 +664,13 @@ impl Session {
                 ready: c.ready_depth(),
                 consumed: c.consumed_count(),
                 policy: c.policy_name().to_string(),
+                // In-flight rows under either lease mechanism: rollout
+                // workers mid-decode plus get_batch consumers that have
+                // not acked yet. The slice of `consumed` that is
+                // neither ready nor durably processed — without it the
+                // occupancy numbers don't add up during rollout.
+                leased: st.rollout.in_flight_for(&c.task)
+                    + st.consumers.in_flight_for(&c.task),
                 waiting_consumers: c.waiting_consumers(),
                 oldest_ready_age_ms: c.oldest_ready_age_ms(),
             })
@@ -579,6 +749,10 @@ impl Session {
             ServiceRequest::GetBatch(spec) => {
                 ServiceResponse::Batch(self.get_batch(&spec)?)
             }
+            ServiceRequest::AckBatch { lease } => {
+                self.ack_batch(lease)?;
+                ServiceResponse::Ok
+            }
             ServiceRequest::SubscribeWeights { min_version, timeout_ms } => {
                 match self.subscribe_weights(min_version, timeout_ms)? {
                     Some(p) => ServiceResponse::Weights(p),
@@ -618,9 +792,15 @@ impl Session {
             }
             ServiceRequest::GetBatchMeta(spec) => {
                 match self.get_batch_meta(&spec)? {
-                    GetBatchMetaReply::Ready { indices, units } => {
-                        ServiceResponse::BatchMeta { indices, units }
-                    }
+                    GetBatchMetaReply::Ready {
+                        indices,
+                        units,
+                        lease,
+                    } => ServiceResponse::BatchMeta {
+                        indices,
+                        units,
+                        lease,
+                    },
                     GetBatchMetaReply::NotReady => {
                         ServiceResponse::Batch(GetBatchReply::NotReady)
                     }
@@ -991,10 +1171,11 @@ mod tests {
                 count: 8,
                 min: 2,
                 timeout_ms: 1000,
+                consumer: None,
             })
             .unwrap()
         {
-            GetBatchMetaReply::Ready { indices, units } => {
+            GetBatchMetaReply::Ready { indices, units, .. } => {
                 assert_eq!(indices.len(), 2);
                 assert!(units[0].is_some());
                 assert!(units[1].is_none());
@@ -1043,6 +1224,7 @@ mod tests {
                 count: 4,
                 min: 1,
                 timeout_ms: 10_000,
+                consumer: None,
             })
         });
         let deadline = Instant::now() + Duration::from_secs(5);
@@ -1132,6 +1314,7 @@ mod tests {
             count: 4,
             min: 1,
             timeout_ms: 100,
+            consumer: None,
         })) {
             ServiceResponse::Batch(GetBatchReply::Ready(b)) => {
                 assert_eq!(b.len(), 1)
@@ -1149,5 +1332,149 @@ mod tests {
                 .unwrap(),
             GetBatchReply::Closed
         ));
+    }
+
+    fn leased_spec(ttl_ms: u64, timeout_ms: u64) -> GetBatchSpec {
+        GetBatchSpec {
+            task: "rollout".into(),
+            group: 0,
+            columns: vec![Column::Prompts],
+            count: 8,
+            min: 1,
+            timeout_ms,
+            consumer: Some(ConsumerSpec {
+                id: "grader".into(),
+                ttl_ms,
+            }),
+        }
+    }
+
+    #[test]
+    fn consumer_lease_acks_and_rejects_double_ack() {
+        let s = session();
+        s.put_prompts_data(&[vec![1], vec![2]]).unwrap();
+        let GetBatchReply::Leased { batch, lease } =
+            s.get_batch(&leased_spec(5000, 0)).unwrap()
+        else {
+            panic!("expected a leased batch")
+        };
+        assert_eq!(batch.len(), 2);
+        // Leased rows show up in stats as in-flight.
+        let stats = s.stats().unwrap();
+        let rollout =
+            stats.tasks.iter().find(|t| t.name == "rollout").unwrap();
+        assert_eq!(rollout.leased, 2);
+        assert_eq!(rollout.consumed, 2);
+        s.ack_batch(lease).unwrap();
+        assert!(s.ack_batch(lease).is_err(), "double ack is an error");
+        let stats = s.stats().unwrap();
+        let rollout =
+            stats.tasks.iter().find(|t| t.name == "rollout").unwrap();
+        assert_eq!(rollout.leased, 0, "acked rows no longer in flight");
+        assert_eq!(rollout.consumed, 2, "acked rows stay consumed");
+    }
+
+    #[test]
+    fn consumer_lease_expiry_wakes_blocked_requester_exactly_once() {
+        let s = Arc::new(session());
+        let idx = s.put_prompts_data(&[vec![1], vec![2]]).unwrap();
+        // A doomed consumer takes everything under a short lease and
+        // never acks (killed mid-batch).
+        let GetBatchReply::Leased { batch, lease } =
+            s.get_batch(&leased_spec(80, 0)).unwrap()
+        else {
+            panic!("expected a leased batch")
+        };
+        assert_eq!(batch.indices, idx);
+        // A second consumer blocks: nothing is ready. The slice loop
+        // sweeps expired leases itself, so THIS call must wake on the
+        // doomed lease's expiry without any other verb arriving.
+        let s2 = s.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || {
+            s2.get_batch(&GetBatchSpec {
+                consumer: None,
+                ..leased_spec(80, 10_000)
+            })
+        });
+        let reply = h.join().unwrap().unwrap();
+        let GetBatchReply::Ready(second) = reply else {
+            panic!("blocked requester must inherit the requeued rows")
+        };
+        assert_eq!(second.indices, idx, "requeued rows re-served");
+        assert!(
+            t0.elapsed() < Duration::from_secs(9),
+            "woken by expiry, not the request deadline"
+        );
+        // Exactly once: the pool is empty again.
+        assert!(matches!(
+            s.get_batch(&GetBatchSpec {
+                consumer: None,
+                ..leased_spec(80, 0)
+            })
+            .unwrap(),
+            GetBatchReply::NotReady
+        ));
+        // The zombie's late ack errors — its work was discarded.
+        assert!(s.ack_batch(lease).is_err());
+    }
+
+    #[test]
+    fn consumer_lease_validation() {
+        let s = session();
+        s.put_prompts_data(&[vec![1]]).unwrap();
+        assert!(
+            s.get_batch(&leased_spec(0, 0)).is_err(),
+            "zero TTL would livelock on requeue"
+        );
+        let mut spec = leased_spec(100, 0);
+        spec.consumer = Some(ConsumerSpec { id: "".into(), ttl_ms: 100 });
+        assert!(s.get_batch(&spec).is_err(), "empty consumer id");
+    }
+
+    #[test]
+    fn identical_replay_after_crash_before_ack_is_absorbed() {
+        // A leased consumer writes its outputs, then dies before the
+        // ack. The inheriting consumer re-processes the same rows and
+        // writes byte-identical outputs: absorbed, not rejected.
+        let s = session();
+        let idx = s.put_prompts_data(&[vec![7]]).unwrap();
+        let GetBatchReply::Leased { lease, .. } =
+            s.get_batch(&leased_spec(60, 0)).unwrap()
+        else {
+            panic!("expected a leased batch")
+        };
+        let outputs = vec![PutRow::at(
+            idx[0],
+            vec![(Column::Responses, Value::I32s(vec![9, 9]))],
+        )];
+        s.put_batch(outputs.clone()).unwrap();
+        // Crash before ack: lease expires, rows requeue.
+        std::thread::sleep(Duration::from_millis(90));
+        let GetBatchReply::Leased { lease: second, .. } =
+            s.get_batch(&leased_spec(5000, 1000)).unwrap()
+        else {
+            panic!("rows must requeue to the second consumer")
+        };
+        assert_ne!(second, lease);
+        // Identical replay: absorbed as a no-op...
+        s.put_batch(outputs).unwrap();
+        s.ack_batch(second).unwrap();
+        // ...and the downstream column exists exactly once with the
+        // replayed value.
+        let reward = s
+            .get_experience_data("reward", 0, vec![Column::Responses], 8)
+            .unwrap()
+            .into_option()
+            .unwrap();
+        assert_eq!(reward.len(), 1);
+        assert_eq!(reward.rows[0][0], Value::I32s(vec![9, 9]));
+        // A CONFLICTING rewrite is still rejected.
+        assert!(s
+            .put_batch(vec![PutRow::at(
+                idx[0],
+                vec![(Column::Responses, Value::I32s(vec![1]))],
+            )])
+            .is_err());
     }
 }

@@ -40,6 +40,7 @@ pub struct TaskDecl {
 }
 
 impl TaskDecl {
+    /// A declaration with the default FCFS policy.
     pub fn new(name: impl Into<String>, columns: Vec<Column>) -> Self {
         TaskDecl { name: name.into(), columns, policy: "fcfs".into() }
     }
@@ -61,13 +62,31 @@ pub struct PutRow {
 }
 
 impl PutRow {
+    /// A new row: the server allocates its global index.
     pub fn new(cells: Vec<(Column, Value)>) -> Self {
         PutRow { index: None, cells }
     }
 
+    /// Additional cells for the existing row `index`.
     pub fn at(index: GlobalIndex, cells: Vec<(Column, Value)>) -> Self {
         PutRow { index: Some(index), cells }
     }
+}
+
+/// Consumer identity + TTL for a crash-safe `get_batch`: when present,
+/// the served rows travel under a consumer lease — the server keeps
+/// them "in flight" until `ack_batch` retires the lease, and requeues
+/// them exactly once if the TTL lapses or the granting connection
+/// drops. The generalization of the rollout lease story to arbitrary
+/// service stages (reward graders, filters) so killing a TCP-attached
+/// consumer mid-batch can never strand data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConsumerSpec {
+    /// Consumer name (lease owner; shows up in requeue accounting).
+    pub id: String,
+    /// Lease TTL in ms (must be ≥ 1): how long the server waits for an
+    /// ack before treating the consumer as dead and requeueing.
+    pub ttl_ms: u64,
 }
 
 /// Parameters of a `get_batch` request. `timeout_ms = 0` is a pure poll;
@@ -75,12 +94,22 @@ impl PutRow {
 /// queue closes, or the deadline passes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GetBatchSpec {
+    /// Task whose controller feeds this consumer.
     pub task: String,
+    /// DP-group id (load-balancing / stats key).
     pub group: usize,
+    /// Columns fetched for each served row.
     pub columns: Vec<Column>,
+    /// Max rows per batch.
     pub count: usize,
+    /// Min ready rows before the request completes (drain serves fewer).
     pub min: usize,
+    /// Server-side long-poll budget (`0` = pure poll).
     pub timeout_ms: u64,
+    /// `Some` ⇒ serve the batch under a consumer lease (see
+    /// [`ConsumerSpec`]); `None` keeps the classic consume-is-final
+    /// fast path.
+    pub consumer: Option<ConsumerSpec>,
 }
 
 /// Metadata for one cell a client wrote directly to the owning storage
@@ -99,8 +128,19 @@ pub struct CellNote {
 /// `index % units.len()`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum GetBatchMetaReply {
-    Ready { indices: Vec<GlobalIndex>, units: Vec<Option<String>> },
+    /// A micro-batch was consumed; fetch payloads from the units.
+    Ready {
+        /// The consumed rows.
+        indices: Vec<GlobalIndex>,
+        /// Per-slot payload endpoints (`None` ⇒ via the coordinator).
+        units: Vec<Option<String>>,
+        /// Consumer lease covering `indices` when the request named a
+        /// [`ConsumerSpec`] — ack it (or crash and let it requeue).
+        lease: Option<u64>,
+    },
+    /// Fewer than `min` rows ready before the deadline; retry.
     NotReady,
+    /// Stream drained and closed; stop.
     Closed,
 }
 
@@ -119,7 +159,18 @@ pub enum ServiceRequest {
     /// Batch-first write: many rows / many cells in one round-trip.
     PutBatch { rows: Vec<PutRow> },
     /// `get_experience_data`, batch-first with deadline semantics.
+    /// With a [`ConsumerSpec`] the batch is served under a consumer
+    /// lease (crash-safe consumption).
     GetBatch(GetBatchSpec),
+    /// Retire a consumer lease: the owner's outputs for the leased rows
+    /// are durable, so nothing will ever be requeued for it. Errors on
+    /// an expired/unknown lease (the rows were already requeued — the
+    /// consumer must treat its work for them as discarded).
+    AckBatch {
+        /// The lease id returned by the leased `get_batch` /
+        /// `get_batch_meta`.
+        lease: u64,
+    },
     /// Long-poll for weights newer than `min_version`.
     SubscribeWeights { min_version: u64, timeout_ms: u64 },
     /// `weight_sync_notify`: publish a new weight snapshot.
@@ -166,15 +217,32 @@ pub enum ServiceRequest {
 /// stop (drain) — collapsing both into "no batch" breaks retry semantics.
 #[derive(Debug, Clone)]
 pub enum GetBatchReply {
+    /// A batch whose consumption is final (no lease was requested).
     Ready(Batch),
+    /// A batch held under a consumer lease: the rows stay in flight
+    /// server-side until `ack_batch` retires the lease; TTL expiry or
+    /// the granting connection dropping requeues them exactly once.
+    Leased {
+        /// The served rows.
+        batch: Batch,
+        /// Lease id to pass to `ack_batch`.
+        lease: u64,
+    },
+    /// Fewer than `min` rows ready before the deadline; retry.
     NotReady,
+    /// Stream drained and closed; stop.
     Closed,
 }
 
 impl GetBatchReply {
+    /// Collapse to the batch, if any. For a [`GetBatchReply::Leased`]
+    /// reply this DROPS the lease id — the server will requeue the rows
+    /// at TTL expiry as if the consumer died, so use this only on paths
+    /// that ack through other means (the leased client APIs).
     pub fn into_option(self) -> Option<Batch> {
         match self {
             GetBatchReply::Ready(b) => Some(b),
+            GetBatchReply::Leased { batch, .. } => Some(batch),
             GetBatchReply::NotReady | GetBatchReply::Closed => None,
         }
     }
@@ -187,10 +255,19 @@ impl GetBatchReply {
 /// died.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskStats {
+    /// Task name.
     pub name: String,
+    /// Rows ready-but-unconsumed (queue depth).
     pub ready: usize,
+    /// Rows handed out to consumers of this task so far.
     pub consumed: usize,
+    /// Batching policy name.
     pub policy: String,
+    /// Rows currently out under a live lease (rollout leases + consumer
+    /// leases) and not yet finished/acked. The in-flight slice of
+    /// `consumed`: without it, occupancy numbers don't add up during
+    /// rollout — a leased row is neither ready nor durably processed.
+    pub leased: usize,
     /// Consumers currently parked in a deadline-bounded `get_batch` /
     /// `lease_prompts` for this task.
     pub waiting_consumers: usize,
@@ -236,9 +313,17 @@ pub enum ServiceResponse {
     /// polls stay tiny on the wire.
     WeightsNotNewer { version: u64 },
     Stats(ServiceStats),
-    /// `get_batch_meta` outcome: consumed indices + unit endpoints.
+    /// `get_batch_meta` outcome: consumed indices + unit endpoints +
+    /// the consumer lease when one was requested.
     /// (`NotReady`/`Closed` reuse the [`ServiceResponse::Batch`] forms.)
-    BatchMeta { indices: Vec<GlobalIndex>, units: Vec<Option<String>> },
+    BatchMeta {
+        /// The consumed rows.
+        indices: Vec<GlobalIndex>,
+        /// Per-slot payload endpoints (`None` ⇒ via the coordinator).
+        units: Vec<Option<String>>,
+        /// Consumer lease covering `indices`, when requested.
+        lease: Option<u64>,
+    },
     /// `lease_prompts` outcome (lease id + rows, or empty + closed flag).
     Lease(LeaseReply),
     /// `worker_stats` snapshot.
@@ -447,6 +532,7 @@ fn tensor_from_json(j: &Json) -> Result<HostTensor> {
     }
 }
 
+/// Encode a weight snapshot as wire JSON.
 pub fn param_set_to_json(p: &ParamSet) -> Result<Json> {
     Ok(Json::obj(vec![
         ("version", Json::Num(p.version as f64)),
@@ -462,6 +548,7 @@ pub fn param_set_to_json(p: &ParamSet) -> Result<Json> {
     ]))
 }
 
+/// Decode a weight snapshot from wire JSON.
 pub fn param_set_from_json(j: &Json) -> Result<ParamSet> {
     let version = field_u64(j, "version")?;
     let tensors = field_arr(j, "tensors")?
@@ -623,7 +710,57 @@ fn task_decl_from_json(j: &Json) -> Result<TaskDecl> {
     })
 }
 
+/// Shared wire form of [`GetBatchSpec`] (the `get_batch` and
+/// `get_batch_meta` verbs differ only in their `op`). The consumer
+/// fields are elided when absent so legacy peers see the exact
+/// pre-lease encoding.
+fn get_batch_spec_to_json(op: &str, spec: &GetBatchSpec) -> Json {
+    let mut pairs = vec![
+        ("op", Json::Str(op.into())),
+        ("task", Json::Str(spec.task.clone())),
+        ("group", Json::Num(spec.group as f64)),
+        ("columns", columns_to_json(&spec.columns)),
+        ("count", Json::Num(spec.count as f64)),
+        ("min", Json::Num(spec.min as f64)),
+        ("timeout_ms", Json::Num(spec.timeout_ms as f64)),
+    ];
+    if let Some(c) = &spec.consumer {
+        pairs.push(("consumer", Json::Str(c.id.clone())));
+        pairs.push(("lease_ttl_ms", Json::Num(c.ttl_ms as f64)));
+    }
+    Json::obj(pairs)
+}
+
+fn get_batch_spec_from_json(j: &Json) -> Result<GetBatchSpec> {
+    // Consumer fields are optional on decode (older peers elide them;
+    // a consumer without a TTL defaults to 0, which the server rejects
+    // loudly rather than granting an instantly-expiring lease).
+    let consumer = match j.get("consumer") {
+        None => None,
+        Some(c) => Some(ConsumerSpec {
+            id: c
+                .as_str()
+                .context("field \"consumer\" must be a string")?
+                .to_string(),
+            ttl_ms: match j.get("lease_ttl_ms") {
+                None => 0,
+                Some(_) => field_u64(j, "lease_ttl_ms")?,
+            },
+        }),
+    };
+    Ok(GetBatchSpec {
+        task: field_str(j, "task")?,
+        group: field_usize(j, "group")?,
+        columns: columns_from_json(field_arr(j, "columns")?)?,
+        count: field_usize(j, "count")?,
+        min: field_usize(j, "min")?,
+        timeout_ms: field_u64(j, "timeout_ms")?,
+        consumer,
+    })
+}
+
 impl ServiceRequest {
+    /// Encode this request as one wire JSON object.
     pub fn to_json(&self) -> Result<Json> {
         Ok(match self {
             ServiceRequest::InitEngines { spec, params } => Json::obj(vec![
@@ -699,14 +836,12 @@ impl ServiceRequest {
                     ),
                 ),
             ]),
-            ServiceRequest::GetBatch(spec) => Json::obj(vec![
-                ("op", Json::Str("get_batch".into())),
-                ("task", Json::Str(spec.task.clone())),
-                ("group", Json::Num(spec.group as f64)),
-                ("columns", columns_to_json(&spec.columns)),
-                ("count", Json::Num(spec.count as f64)),
-                ("min", Json::Num(spec.min as f64)),
-                ("timeout_ms", Json::Num(spec.timeout_ms as f64)),
+            ServiceRequest::GetBatch(spec) => {
+                get_batch_spec_to_json("get_batch", spec)
+            }
+            ServiceRequest::AckBatch { lease } => Json::obj(vec![
+                ("op", Json::Str("ack_batch".into())),
+                ("lease", Json::Num(*lease as f64)),
             ]),
             ServiceRequest::SubscribeWeights { min_version, timeout_ms } => {
                 Json::obj(vec![
@@ -792,15 +927,9 @@ impl ServiceRequest {
                     ),
                 ),
             ]),
-            ServiceRequest::GetBatchMeta(spec) => Json::obj(vec![
-                ("op", Json::Str("get_batch_meta".into())),
-                ("task", Json::Str(spec.task.clone())),
-                ("group", Json::Num(spec.group as f64)),
-                ("columns", columns_to_json(&spec.columns)),
-                ("count", Json::Num(spec.count as f64)),
-                ("min", Json::Num(spec.min as f64)),
-                ("timeout_ms", Json::Num(spec.timeout_ms as f64)),
-            ]),
+            ServiceRequest::GetBatchMeta(spec) => {
+                get_batch_spec_to_json("get_batch_meta", spec)
+            }
             ServiceRequest::FetchRows { indices, columns } => {
                 Json::obj(vec![
                     ("op", Json::Str("fetch_rows".into())),
@@ -821,6 +950,7 @@ impl ServiceRequest {
         })
     }
 
+    /// Decode a request from its wire JSON object.
     pub fn from_json(j: &Json) -> Result<ServiceRequest> {
         let op = field_str(j, "op")?;
         Ok(match op.as_str() {
@@ -888,14 +1018,12 @@ impl ServiceRequest {
                     })
                     .collect::<Result<_>>()?,
             },
-            "get_batch" => ServiceRequest::GetBatch(GetBatchSpec {
-                task: field_str(j, "task")?,
-                group: field_usize(j, "group")?,
-                columns: columns_from_json(field_arr(j, "columns")?)?,
-                count: field_usize(j, "count")?,
-                min: field_usize(j, "min")?,
-                timeout_ms: field_u64(j, "timeout_ms")?,
-            }),
+            "get_batch" => {
+                ServiceRequest::GetBatch(get_batch_spec_from_json(j)?)
+            }
+            "ack_batch" => ServiceRequest::AckBatch {
+                lease: field_u64(j, "lease")?,
+            },
             "subscribe_weights" => ServiceRequest::SubscribeWeights {
                 min_version: field_u64(j, "min_version")?,
                 timeout_ms: field_u64(j, "timeout_ms")?,
@@ -952,16 +1080,9 @@ impl ServiceRequest {
                     })
                     .collect::<Result<_>>()?,
             },
-            "get_batch_meta" => {
-                ServiceRequest::GetBatchMeta(GetBatchSpec {
-                    task: field_str(j, "task")?,
-                    group: field_usize(j, "group")?,
-                    columns: columns_from_json(field_arr(j, "columns")?)?,
-                    count: field_usize(j, "count")?,
-                    min: field_usize(j, "min")?,
-                    timeout_ms: field_u64(j, "timeout_ms")?,
-                })
-            }
+            "get_batch_meta" => ServiceRequest::GetBatchMeta(
+                get_batch_spec_from_json(j)?,
+            ),
             "fetch_rows" => ServiceRequest::FetchRows {
                 indices: indices_from_json(field_arr(j, "indices")?)?,
                 columns: columns_from_json(field_arr(j, "columns")?)?,
@@ -980,6 +1101,7 @@ impl ServiceRequest {
         Ok(self.to_json()?.to_string())
     }
 
+    /// Parse one JSONL request line.
     pub fn parse_line(line: &str) -> Result<ServiceRequest> {
         let j = Json::parse(line.trim())
             .map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
@@ -992,6 +1114,7 @@ impl ServiceRequest {
 // ===========================================================================
 
 impl ServiceResponse {
+    /// Encode this response as one wire JSON object.
     pub fn to_json(&self) -> Result<Json> {
         Ok(match self {
             ServiceResponse::Ok => {
@@ -1007,6 +1130,14 @@ impl ServiceResponse {
                     ("batch", batch_to_json(b)),
                 ])
             }
+            ServiceResponse::Batch(GetBatchReply::Leased {
+                batch,
+                lease,
+            }) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("batch", batch_to_json(batch)),
+                ("lease_id", Json::Num(*lease as f64)),
+            ]),
             ServiceResponse::Batch(GetBatchReply::NotReady) => {
                 Json::obj(vec![
                     ("ok", Json::Bool(true)),
@@ -1054,6 +1185,12 @@ impl ServiceResponse {
                                                 "consumed",
                                                 Json::Num(
                                                     t.consumed as f64,
+                                                ),
+                                            ),
+                                            (
+                                                "leased",
+                                                Json::Num(
+                                                    t.leased as f64,
                                                 ),
                                             ),
                                             (
@@ -1148,29 +1285,28 @@ impl ServiceResponse {
                     ]),
                 ),
             ]),
-            ServiceResponse::BatchMeta { indices, units } => {
+            ServiceResponse::BatchMeta { indices, units, lease } => {
+                let mut meta = vec![
+                    ("indices", indices_to_json(indices)),
+                    (
+                        "units",
+                        Json::Arr(
+                            units
+                                .iter()
+                                .map(|u| match u {
+                                    Some(ep) => Json::Str(ep.clone()),
+                                    None => Json::Null,
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ];
+                if let Some(id) = lease {
+                    meta.push(("lease_id", Json::Num(*id as f64)));
+                }
                 Json::obj(vec![
                     ("ok", Json::Bool(true)),
-                    (
-                        "batch_meta",
-                        Json::obj(vec![
-                            ("indices", indices_to_json(indices)),
-                            (
-                                "units",
-                                Json::Arr(
-                                    units
-                                        .iter()
-                                        .map(|u| match u {
-                                            Some(ep) => {
-                                                Json::Str(ep.clone())
-                                            }
-                                            None => Json::Null,
-                                        })
-                                        .collect(),
-                                ),
-                            ),
-                        ]),
-                    ),
+                    ("batch_meta", Json::obj(meta)),
                 ])
             }
             ServiceResponse::Lease(reply) => Json::obj(vec![
@@ -1191,6 +1327,7 @@ impl ServiceResponse {
         })
     }
 
+    /// Decode a response from its wire JSON object.
     pub fn from_json(j: &Json) -> Result<ServiceResponse> {
         let ok = field(j, "ok")?
             .as_bool()
@@ -1204,9 +1341,14 @@ impl ServiceResponse {
             )?));
         }
         if let Some(b) = j.get("batch") {
-            return Ok(ServiceResponse::Batch(GetBatchReply::Ready(
-                batch_from_json(b)?,
-            )));
+            let batch = batch_from_json(b)?;
+            return Ok(ServiceResponse::Batch(match j.get("lease_id") {
+                Some(_) => GetBatchReply::Leased {
+                    batch,
+                    lease: field_u64(j, "lease_id")?,
+                },
+                None => GetBatchReply::Ready(batch),
+            }));
         }
         if let Some(m) = j.get("batch_meta") {
             let indices = indices_from_json(field_arr(m, "indices")?)?;
@@ -1220,7 +1362,15 @@ impl ServiceResponse {
                     }
                 })
                 .collect::<Result<_>>()?;
-            return Ok(ServiceResponse::BatchMeta { indices, units });
+            let lease = match m.get("lease_id") {
+                None => None,
+                Some(_) => Some(field_u64(m, "lease_id")?),
+            };
+            return Ok(ServiceResponse::BatchMeta {
+                indices,
+                units,
+                lease,
+            });
         }
         if j.get("not_ready").is_some() {
             return Ok(ServiceResponse::Batch(GetBatchReply::NotReady));
@@ -1266,11 +1416,17 @@ impl ServiceResponse {
                                 Some(field_u64(t, "oldest_ready_age_ms")?)
                             }
                         };
+                    // Optional on decode (older peers elide it).
+                    let leased = match t.get("leased") {
+                        None => 0,
+                        Some(_) => field_usize(t, "leased")?,
+                    };
                     Ok(TaskStats {
                         name: field_str(t, "name")?,
                         ready: field_usize(t, "ready")?,
                         consumed: field_usize(t, "consumed")?,
                         policy: field_str(t, "policy")?,
+                        leased,
                         waiting_consumers,
                         oldest_ready_age_ms,
                     })
@@ -1334,6 +1490,7 @@ impl ServiceResponse {
         Ok(self.to_json()?.to_string())
     }
 
+    /// Parse one JSONL response line.
     pub fn parse_line(line: &str) -> Result<ServiceResponse> {
         let j = Json::parse(line.trim())
             .map_err(|e| anyhow::anyhow!("bad response JSON: {e}"))?;
@@ -1408,9 +1565,72 @@ mod tests {
             count: 8,
             min: 2,
             timeout_ms: 250,
+            consumer: None,
         };
         match roundtrip_req(ServiceRequest::GetBatch(spec.clone())) {
             ServiceRequest::GetBatch(got) => assert_eq!(got, spec),
+            _ => panic!("wrong variant"),
+        }
+        // ...and the consumer-lease form.
+        let leased = GetBatchSpec {
+            consumer: Some(ConsumerSpec {
+                id: "grader-1".into(),
+                ttl_ms: 2500,
+            }),
+            ..spec
+        };
+        match roundtrip_req(ServiceRequest::GetBatch(leased.clone())) {
+            ServiceRequest::GetBatch(got) => assert_eq!(got, leased),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn get_batch_without_consumer_fields_decodes_leniently() {
+        // A pre-lease peer's encoding: no consumer/lease_ttl_ms.
+        let line = "{\"op\":\"get_batch\",\"task\":\"rollout\",\
+                    \"group\":0,\"columns\":[\"prompts\"],\"count\":4,\
+                    \"min\":1,\"timeout_ms\":50}";
+        match ServiceRequest::parse_line(line).unwrap() {
+            ServiceRequest::GetBatch(spec) => {
+                assert_eq!(spec.consumer, None)
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn ack_batch_request_roundtrips() {
+        match roundtrip_req(ServiceRequest::AckBatch { lease: 77 }) {
+            ServiceRequest::AckBatch { lease } => assert_eq!(lease, 77),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn leased_batch_response_roundtrips() {
+        let batch = Batch {
+            indices: vec![GlobalIndex(4)],
+            columns: vec![Column::Prompts],
+            rows: vec![vec![Value::I32s(vec![1, 2])]],
+        };
+        match roundtrip_resp(ServiceResponse::Batch(
+            GetBatchReply::Leased { batch: batch.clone(), lease: 9 },
+        )) {
+            ServiceResponse::Batch(GetBatchReply::Leased {
+                batch: got,
+                lease,
+            }) => {
+                assert_eq!(got.indices, batch.indices);
+                assert_eq!(lease, 9);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // A plain batch decodes as Ready, never Leased.
+        match roundtrip_resp(ServiceResponse::Batch(
+            GetBatchReply::Ready(batch),
+        )) {
+            ServiceResponse::Batch(GetBatchReply::Ready(_)) => {}
             _ => panic!("wrong variant"),
         }
     }
@@ -1514,6 +1734,7 @@ mod tests {
                     ready: 3,
                     consumed: 9,
                     policy: "fcfs".into(),
+                    leased: 5,
                     waiting_consumers: 2,
                     oldest_ready_age_ms: Some(1234),
                 },
@@ -1522,6 +1743,7 @@ mod tests {
                     ready: 0,
                     consumed: 4,
                     policy: "fcfs".into(),
+                    leased: 0,
                     waiting_consumers: 1,
                     oldest_ready_age_ms: None,
                 },
@@ -1725,9 +1947,22 @@ mod tests {
             count: 8,
             min: 1,
             timeout_ms: 50,
+            consumer: None,
         };
         match roundtrip_req(ServiceRequest::GetBatchMeta(spec.clone())) {
             ServiceRequest::GetBatchMeta(got) => assert_eq!(got, spec),
+            _ => panic!("wrong variant"),
+        }
+        let leased_spec = GetBatchSpec {
+            consumer: Some(ConsumerSpec { id: "w".into(), ttl_ms: 100 }),
+            ..spec
+        };
+        match roundtrip_req(ServiceRequest::GetBatchMeta(
+            leased_spec.clone(),
+        )) {
+            ServiceRequest::GetBatchMeta(got) => {
+                assert_eq!(got, leased_spec)
+            }
             _ => panic!("wrong variant"),
         }
         match roundtrip_req(ServiceRequest::FetchRows {
@@ -1747,9 +1982,10 @@ mod tests {
         let resp = ServiceResponse::BatchMeta {
             indices: vec![GlobalIndex(0), GlobalIndex(3)],
             units: vec![Some("127.0.0.1:9001".into()), None],
+            lease: None,
         };
         match roundtrip_resp(resp) {
-            ServiceResponse::BatchMeta { indices, units } => {
+            ServiceResponse::BatchMeta { indices, units, lease } => {
                 assert_eq!(
                     indices,
                     vec![GlobalIndex(0), GlobalIndex(3)]
@@ -1758,6 +1994,19 @@ mod tests {
                     units,
                     vec![Some("127.0.0.1:9001".to_string()), None]
                 );
+                assert_eq!(lease, None);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // Leased form: the id survives the wire.
+        let resp = ServiceResponse::BatchMeta {
+            indices: vec![GlobalIndex(1)],
+            units: vec![None],
+            lease: Some(12),
+        };
+        match roundtrip_resp(resp) {
+            ServiceResponse::BatchMeta { lease, .. } => {
+                assert_eq!(lease, Some(12))
             }
             _ => panic!("wrong variant"),
         }

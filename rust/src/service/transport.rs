@@ -18,6 +18,7 @@
 //! stays usable — framing is per-line, so one bad request cannot poison
 //! the stream.
 
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -26,7 +27,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
 
-use super::protocol::{ServiceRequest, ServiceResponse};
+use super::protocol::{GetBatchReply, ServiceRequest, ServiceResponse};
 use super::Session;
 
 /// A bidirectional request/response channel to a service session.
@@ -49,6 +50,14 @@ pub trait Transport: Send + Sync {
     fn wire_bytes(&self) -> Option<(u64, u64)> {
         None
     }
+
+    /// Whether this transport crosses a process boundary. Remote
+    /// consumers opt into crash-safe leased consumption (their process
+    /// can vanish mid-batch); in-process consumers share the server's
+    /// fate, so they keep the lease-free fast path.
+    fn is_remote(&self) -> bool {
+        false
+    }
 }
 
 /// Same-process transport: dispatches directly into the session.
@@ -57,6 +66,7 @@ pub struct InProcTransport {
 }
 
 impl InProcTransport {
+    /// A transport dispatching into `session` directly.
     pub fn new(session: Arc<Session>) -> Self {
         InProcTransport { session }
     }
@@ -88,6 +98,7 @@ pub struct TcpJsonlTransport {
 }
 
 impl TcpJsonlTransport {
+    /// Dial a served session (`asyncflow serve`).
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
         let stream = TcpStream::connect(addr)
             .context("connecting to asyncflow service")?;
@@ -102,6 +113,7 @@ impl TcpJsonlTransport {
         })
     }
 
+    /// The server address this transport is connected to.
     pub fn peer_addr(&self) -> SocketAddr {
         self.peer
     }
@@ -135,6 +147,10 @@ impl Transport for TcpJsonlTransport {
             self.bytes_sent.load(Ordering::Relaxed),
             self.bytes_received.load(Ordering::Relaxed),
         ))
+    }
+
+    fn is_remote(&self) -> bool {
+        true
     }
 }
 
@@ -181,10 +197,12 @@ impl TcpJsonlServer {
         })
     }
 
+    /// The bound address (resolves port 0 binds).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
     }
 
+    /// The bound port.
     pub fn port(&self) -> u16 {
         self.local_addr.port()
     }
@@ -212,13 +230,45 @@ fn serve_connection(session: Arc<Session>, stream: TcpStream) {
     stream.set_nodelay(true).ok();
     let Ok(mut writer) = stream.try_clone() else { return };
     let reader = BufReader::new(stream);
+    // Consumer leases granted over THIS connection and not yet acked.
+    // If the peer vanishes — process killed, cable pulled — the leases
+    // are revoked on the way out so their rows requeue immediately
+    // instead of waiting out the TTL (which stays the backstop for
+    // stalls that keep the socket open).
+    let mut granted: HashSet<u64> = HashSet::new();
     for line in reader.lines() {
-        let Ok(line) = line else { return };
+        let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
         let resp = match ServiceRequest::parse_line(&line) {
-            Ok(req) => session.handle(req),
+            Ok(req) => {
+                let acked = match &req {
+                    ServiceRequest::AckBatch { lease } => Some(*lease),
+                    _ => None,
+                };
+                let resp = session.handle(req);
+                match &resp {
+                    ServiceResponse::Batch(GetBatchReply::Leased {
+                        lease,
+                        ..
+                    }) => {
+                        granted.insert(*lease);
+                    }
+                    ServiceResponse::BatchMeta {
+                        lease: Some(id), ..
+                    } => {
+                        granted.insert(*id);
+                    }
+                    ServiceResponse::Ok => {
+                        if let Some(id) = acked {
+                            granted.remove(&id);
+                        }
+                    }
+                    _ => {}
+                }
+                resp
+            }
             Err(e) => ServiceResponse::Err(format!("bad request: {e:#}")),
         };
         let out = match resp.to_line() {
@@ -234,7 +284,11 @@ fn serve_connection(session: Arc<Session>, stream: TcpStream) {
             .and_then(|_| writer.write_all(b"\n"))
             .and_then(|_| writer.flush());
         if wrote.is_err() {
-            return;
+            break;
         }
+    }
+    if !granted.is_empty() {
+        let ids: Vec<u64> = granted.into_iter().collect();
+        session.revoke_consumer_leases(&ids);
     }
 }

@@ -27,10 +27,12 @@ pub struct Batch {
 }
 
 impl Batch {
+    /// Number of rows in the batch.
     pub fn len(&self) -> usize {
         self.indices.len()
     }
 
+    /// Whether the batch holds no rows.
     pub fn is_empty(&self) -> bool {
         self.indices.is_empty()
     }
@@ -90,10 +92,12 @@ impl StreamDataLoader {
         StreamDataLoader { tq, task, group, columns, batch_size, min_batch }
     }
 
+    /// The task this loader consumes.
     pub fn task(&self) -> &str {
         &self.task
     }
 
+    /// This loader's DP-group id.
     pub fn group(&self) -> usize {
         self.group
     }

@@ -34,6 +34,7 @@ pub enum Column {
 }
 
 impl Column {
+    /// Wire name of the column.
     pub fn name(&self) -> &str {
         match self {
             Column::Prompts => "prompts",
@@ -47,6 +48,7 @@ impl Column {
         }
     }
 
+    /// Column from its wire name (unknown names become custom columns).
     pub fn from_name(s: &str) -> Column {
         match s {
             "prompts" => Column::Prompts,
@@ -103,6 +105,7 @@ impl Value {
         }
     }
 
+    /// The token array, if this is an `I32s` value.
     pub fn as_i32s(&self) -> Option<&[i32]> {
         match self {
             Value::I32s(v) => Some(v),
@@ -110,6 +113,7 @@ impl Value {
         }
     }
 
+    /// The float array, if this is an `F32s` value.
     pub fn as_f32s(&self) -> Option<&[f32]> {
         match self {
             Value::F32s(v) => Some(v),
@@ -117,6 +121,7 @@ impl Value {
         }
     }
 
+    /// The scalar, if this is an `F32` value.
     pub fn as_f32(&self) -> Option<f32> {
         match self {
             Value::F32(v) => Some(*v),
@@ -124,6 +129,7 @@ impl Value {
         }
     }
 
+    /// The integer, if this is a `U64` value.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Value::U64(v) => Some(*v),
@@ -131,6 +137,7 @@ impl Value {
         }
     }
 
+    /// The string, if this is a `Text` value.
     pub fn as_text(&self) -> Option<&str> {
         match self {
             Value::Text(s) => Some(s),

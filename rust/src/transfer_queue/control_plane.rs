@@ -17,6 +17,8 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Result};
+
 use super::column::{Column, GlobalIndex};
 use super::data_plane::WriteNotification;
 use super::policies::{Candidate, GroupStats, Policy};
@@ -81,6 +83,7 @@ pub struct Controller {
 }
 
 impl Controller {
+    /// A controller for `task` requiring `required` columns, batching under `policy`.
     pub fn new(
         task: impl Into<String>,
         required: Vec<Column>,
@@ -291,6 +294,7 @@ impl Controller {
         self.ready_cv.notify_all();
     }
 
+    /// Whether the stream has been closed.
     pub fn is_closed(&self) -> bool {
         self.state.lock().unwrap().closed
     }
@@ -326,6 +330,7 @@ impl Controller {
             .map(|since| since.elapsed().as_millis() as u64)
     }
 
+    /// Per-DP-group consumption statistics snapshot.
     pub fn group_stats(&self) -> HashMap<usize, GroupStats> {
         self.state.lock().unwrap().group_stats.clone()
     }
@@ -380,8 +385,286 @@ impl Controller {
         }
     }
 
+    /// Name of the configured batching policy.
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+}
+
+// ===========================================================================
+// Consumer leases
+// ===========================================================================
+
+/// Opaque lease handle (nonzero; never reused within a session).
+pub type LeaseId = u64;
+
+/// What a lease gives back when it leaves the registry — on `ack`
+/// (retired by its owner), on TTL expiry (swept), or on explicit
+/// revocation (the owner's connection died). `rows` are the lease's
+/// not-yet-done rows in index order: for expiry/revocation they are
+/// exactly what the caller must requeue ([`Controller::unconsume`])
+/// so no sample is ever stranded by a dead consumer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RevokedLease {
+    /// The consumer/worker name the lease was granted to.
+    pub owner: String,
+    /// Task whose controller the rows were popped from (and are
+    /// requeued to on expiry/revocation).
+    pub task: String,
+    /// Rows not marked done when the lease left the registry, sorted.
+    pub rows: Vec<GlobalIndex>,
+}
+
+/// Per-row lease state: a caller-supplied payload `S` (partial decode
+/// buffers for rollout leases, `()` for plain consumer leases) plus the
+/// done flag that drives retirement and requeue decisions.
+pub struct LeaseRow<S> {
+    /// Caller-owned per-row state, mutated through
+    /// [`LeaseRegistry::with_rows`].
+    pub state: S,
+    /// A done row was completed by its owner: it is never requeued.
+    pub done: bool,
+}
+
+struct LeaseEntry<S> {
+    owner: String,
+    task: String,
+    expires_at: Instant,
+    ttl: Duration,
+    rows: BTreeMap<GlobalIndex, LeaseRow<S>>,
+}
+
+impl<S> LeaseEntry<S> {
+    fn undone(&self) -> Vec<GlobalIndex> {
+        self.rows
+            .iter()
+            .filter(|(_, r)| !r.done)
+            .map(|(idx, _)| *idx)
+            .collect()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.rows.values().filter(|r| !r.done).count()
+    }
+}
+
+struct RegistryInner<S> {
+    next_id: u64,
+    leases: HashMap<LeaseId, LeaseEntry<S>>,
+}
+
+/// Thread-safe consumer-lease registry — the crash-safety bookkeeping
+/// generalized out of the rollout subsystem so *any* consumer (a
+/// TCP-attached reward grader as much as a rollout worker) can take
+/// rows under a TTL.
+///
+/// The contract: every row handed to a consumer travels under a lease
+/// (an id, an owner, a source task, an expiry). The owner retires the
+/// lease when the rows' outputs are durable ([`LeaseRegistry::ack`], or
+/// implicitly when every row is marked done via
+/// [`LeaseRegistry::with_rows`]). A lease that misses its TTL is swept
+/// ([`LeaseRegistry::sweep_expired`]) and its undone rows are handed
+/// back for requeue — exactly once, because sweep and mutation are
+/// mutually exclusive under the registry lock and a swept id is dead
+/// forever (a zombie's late calls error, never commit).
+pub struct LeaseRegistry<S = ()> {
+    inner: Mutex<RegistryInner<S>>,
+}
+
+impl<S> Default for LeaseRegistry<S> {
+    fn default() -> Self {
+        LeaseRegistry {
+            inner: Mutex::new(RegistryInner {
+                next_id: 0,
+                leases: HashMap::new(),
+            }),
+        }
+    }
+}
+
+impl<S> LeaseRegistry<S> {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grant a new lease on `indices` (popped from `task`) to `owner`,
+    /// building each row's state with `init`.
+    pub fn grant_with(
+        &self,
+        owner: &str,
+        task: &str,
+        indices: &[GlobalIndex],
+        ttl: Duration,
+        init: impl Fn() -> S,
+    ) -> LeaseId {
+        let mut g = self.inner.lock().unwrap();
+        g.next_id += 1;
+        let id = g.next_id;
+        let rows = indices
+            .iter()
+            .map(|idx| (*idx, LeaseRow { state: init(), done: false }))
+            .collect();
+        g.leases.insert(
+            id,
+            LeaseEntry {
+                owner: owner.to_string(),
+                task: task.to_string(),
+                expires_at: Instant::now() + ttl,
+                ttl,
+                rows,
+            },
+        );
+        id
+    }
+
+    /// Heartbeat: extend a live lease. `ttl = None` reuses the lease's
+    /// own TTL. Unknown ids (including swept ones) are an error — the
+    /// owner must drop its in-flight batch and start over.
+    pub fn renew(&self, id: LeaseId, ttl: Option<Duration>) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let Some(lease) = g.leases.get_mut(&id) else {
+            bail!("lease {id} is unknown or expired");
+        };
+        if let Some(t) = ttl {
+            lease.ttl = t;
+        }
+        lease.expires_at = Instant::now() + lease.ttl;
+        Ok(())
+    }
+
+    /// Atomic read-modify access to a live lease's rows (implicit
+    /// heartbeat): `f` runs under the registry lock, so a sweep can
+    /// never interleave with it, and an `Err` from `f` leaves the lease
+    /// untouched beyond the heartbeat. If every row is done after `f`
+    /// returns `Ok`, the lease is retired automatically.
+    pub fn with_rows<T>(
+        &self,
+        id: LeaseId,
+        f: impl FnOnce(
+            &str,
+            &mut BTreeMap<GlobalIndex, LeaseRow<S>>,
+        ) -> Result<T>,
+    ) -> Result<T> {
+        let mut g = self.inner.lock().unwrap();
+        let Some(lease) = g.leases.get_mut(&id) else {
+            bail!("lease {id} is unknown or expired");
+        };
+        lease.expires_at = Instant::now() + lease.ttl;
+        let owner = lease.owner.clone();
+        let out = f(&owner, &mut lease.rows)?;
+        if lease.rows.values().all(|r| r.done) {
+            g.leases.remove(&id);
+        }
+        Ok(out)
+    }
+
+    /// Retire a live lease wholesale — the `ack_batch` verb: the owner
+    /// declares every row's outputs durable, so nothing will ever be
+    /// requeued for it. Errors on an unknown/expired id (the rows were
+    /// already requeued; the late ack must not be mistaken for success).
+    pub fn ack(&self, id: LeaseId) -> Result<RevokedLease> {
+        let mut g = self.inner.lock().unwrap();
+        let Some(lease) = g.leases.remove(&id) else {
+            bail!(
+                "lease {id} is unknown or expired — its rows were \
+                 requeued"
+            );
+        };
+        Ok(RevokedLease {
+            rows: lease.undone(),
+            owner: lease.owner,
+            task: lease.task,
+        })
+    }
+
+    /// Force a live lease out of the registry (the owner's transport
+    /// died): returns its undone rows for immediate requeue, or `None`
+    /// when the id is unknown — already acked, swept, or never granted —
+    /// which is a no-op, not an error (disconnect cleanup races the TTL
+    /// sweep by design).
+    pub fn revoke(&self, id: LeaseId) -> Option<RevokedLease> {
+        let mut g = self.inner.lock().unwrap();
+        let lease = g.leases.remove(&id)?;
+        Some(RevokedLease {
+            rows: lease.undone(),
+            owner: lease.owner,
+            task: lease.task,
+        })
+    }
+
+    /// Remove expired leases, returning each with its undone rows for
+    /// requeue. Exactly-once by construction: removal happens under the
+    /// lock, and a swept id can never be acked, renewed, or mutated
+    /// again.
+    pub fn sweep_expired(&self) -> Vec<RevokedLease> {
+        let now = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        let expired: Vec<LeaseId> = g
+            .leases
+            .iter()
+            .filter(|(_, l)| l.expires_at <= now)
+            .map(|(id, _)| *id)
+            .collect();
+        let mut out = Vec::new();
+        for id in expired {
+            let lease = g.leases.remove(&id).unwrap();
+            out.push(RevokedLease {
+                rows: lease.undone(),
+                owner: lease.owner,
+                task: lease.task,
+            });
+        }
+        out
+    }
+
+    /// Leased rows not yet done, across all live leases.
+    pub fn in_flight(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.leases.values().map(LeaseEntry::in_flight).sum()
+    }
+
+    /// Leased-and-undone rows popped from `task` — the per-task
+    /// leased-row stat (`stats` verb) and the drain barrier for one
+    /// stream.
+    pub fn in_flight_for(&self, task: &str) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.leases
+            .values()
+            .filter(|l| l.task == task)
+            .map(LeaseEntry::in_flight)
+            .sum()
+    }
+
+    /// Owners with at least one live lease.
+    pub fn live_owners(&self) -> HashSet<String> {
+        let g = self.inner.lock().unwrap();
+        g.leases.values().map(|l| l.owner.clone()).collect()
+    }
+
+    /// Per-owner `(live leases, in-flight rows)` snapshot.
+    pub fn owner_load(&self) -> HashMap<String, (usize, usize)> {
+        let g = self.inner.lock().unwrap();
+        let mut out: HashMap<String, (usize, usize)> = HashMap::new();
+        for l in g.leases.values() {
+            let e = out.entry(l.owner.clone()).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += l.in_flight();
+        }
+        out
+    }
+}
+
+impl<S: Default> LeaseRegistry<S> {
+    /// [`LeaseRegistry::grant_with`] using `S::default()` row state.
+    pub fn grant(
+        &self,
+        owner: &str,
+        task: &str,
+        indices: &[GlobalIndex],
+        ttl: Duration,
+    ) -> LeaseId {
+        self.grant_with(owner, task, indices, ttl, S::default)
     }
 }
 
@@ -641,5 +924,160 @@ mod tests {
         assert_eq!(c.group_stats()[&0].tokens, 32);
         // silence unused import warning for Value in this test module
         let _ = Value::F32(0.0);
+    }
+
+    // ---- LeaseRegistry ----------------------------------------------------
+
+    fn reg() -> LeaseRegistry {
+        LeaseRegistry::new()
+    }
+
+    fn idxs(ns: &[u64]) -> Vec<GlobalIndex> {
+        ns.iter().map(|&n| GlobalIndex(n)).collect()
+    }
+
+    #[test]
+    fn registry_grant_then_ack_retires_exactly_once() {
+        let r = reg();
+        let id = r.grant(
+            "grader",
+            "reward",
+            &idxs(&[3, 1, 2]),
+            Duration::from_secs(5),
+        );
+        assert_eq!(r.in_flight(), 3);
+        assert_eq!(r.in_flight_for("reward"), 3);
+        assert_eq!(r.in_flight_for("other"), 0);
+        let retired = r.ack(id).unwrap();
+        assert_eq!(retired.owner, "grader");
+        assert_eq!(retired.task, "reward");
+        assert_eq!(retired.rows, idxs(&[1, 2, 3]), "sorted undone rows");
+        assert_eq!(r.in_flight(), 0);
+        // A second ack (or any other verb) on the retired id errors.
+        assert!(r.ack(id).is_err());
+        assert!(r.renew(id, None).is_err());
+    }
+
+    #[test]
+    fn registry_sweep_requeues_undone_rows_exactly_once() {
+        let r = reg();
+        let id = r.grant(
+            "dead",
+            "reward",
+            &idxs(&[5, 6]),
+            Duration::from_millis(30),
+        );
+        // Mark one row done: it must never be requeued.
+        r.with_rows(id, |owner, rows| {
+            assert_eq!(owner, "dead");
+            rows.get_mut(&GlobalIndex(5)).unwrap().done = true;
+            Ok(())
+        })
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let swept = r.sweep_expired();
+        assert_eq!(swept.len(), 1);
+        assert_eq!(swept[0].rows, idxs(&[6]), "done row not requeued");
+        assert!(r.sweep_expired().is_empty(), "second sweep finds nothing");
+        // The zombie's late ack is an error, never a silent success.
+        assert!(r.ack(id).is_err());
+    }
+
+    #[test]
+    fn registry_with_rows_retires_when_all_done() {
+        let r = reg();
+        let id =
+            r.grant("w", "reward", &idxs(&[0]), Duration::from_secs(5));
+        r.with_rows(id, |_, rows| {
+            rows.get_mut(&GlobalIndex(0)).unwrap().done = true;
+            Ok(())
+        })
+        .unwrap();
+        assert!(r.renew(id, None).is_err(), "lease auto-retired");
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn registry_with_rows_error_leaves_lease_live() {
+        let r = reg();
+        let id =
+            r.grant("w", "reward", &idxs(&[0]), Duration::from_secs(5));
+        let res: Result<()> =
+            r.with_rows(id, |_, _| bail!("validation failed"));
+        assert!(res.is_err());
+        assert!(r.renew(id, None).is_ok(), "lease still live");
+        assert_eq!(r.in_flight(), 1);
+    }
+
+    #[test]
+    fn registry_revoke_is_idempotent_and_returns_undone_rows() {
+        let r = reg();
+        let id = r.grant(
+            "conn-7",
+            "reward",
+            &idxs(&[9, 4]),
+            Duration::from_secs(60),
+        );
+        let revoked = r.revoke(id).unwrap();
+        assert_eq!(revoked.rows, idxs(&[4, 9]));
+        assert!(r.revoke(id).is_none(), "second revoke is a no-op");
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn registry_heartbeats_keep_leases_alive() {
+        let r = reg();
+        let id =
+            r.grant("w", "reward", &idxs(&[0]), Duration::from_millis(50));
+        for _ in 0..3 {
+            std::thread::sleep(Duration::from_millis(25));
+            r.renew(id, None).unwrap();
+            assert!(r.sweep_expired().is_empty());
+        }
+        // with_rows heartbeats too.
+        std::thread::sleep(Duration::from_millis(25));
+        r.with_rows(id, |_, _| Ok(())).unwrap();
+        assert!(r.sweep_expired().is_empty());
+    }
+
+    #[test]
+    fn registry_owner_load_and_live_owners() {
+        let r = reg();
+        r.grant("a", "reward", &idxs(&[0, 1]), Duration::from_secs(5));
+        r.grant("a", "reward", &idxs(&[2]), Duration::from_secs(5));
+        r.grant("b", "train", &idxs(&[3]), Duration::from_secs(5));
+        let owners = r.live_owners();
+        assert!(owners.contains("a") && owners.contains("b"));
+        let load = r.owner_load();
+        assert_eq!(load["a"], (2, 3));
+        assert_eq!(load["b"], (1, 1));
+    }
+
+    #[test]
+    fn registry_expiry_unconsume_wakes_blocked_controller_requesters() {
+        // The end-to-end wake path: rows leased out, the consumer dies,
+        // a blocked requester on the same controller is woken by the
+        // sweep-driven unconsume.
+        let c = std::sync::Arc::new(rollout_controller());
+        for i in 0..2 {
+            c.notify(&notif(i, Column::Prompts, Some(4)));
+        }
+        let meta = c.try_request(0, 8, 1).unwrap();
+        let r = std::sync::Arc::new(reg());
+        let id = r.grant(
+            "doomed",
+            "rollout",
+            &meta.indices,
+            Duration::from_millis(40),
+        );
+        let _ = id;
+        let c2 = c.clone();
+        let waiter = std::thread::spawn(move || c2.request(1, 8, 1));
+        std::thread::sleep(Duration::from_millis(60));
+        for lease in r.sweep_expired() {
+            c.unconsume(&lease.rows);
+        }
+        let got = waiter.join().unwrap().unwrap();
+        assert_eq!(got.indices, meta.indices, "requeued rows re-served");
     }
 }

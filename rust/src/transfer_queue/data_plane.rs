@@ -53,6 +53,7 @@ pub struct StorageUnit {
 }
 
 impl StorageUnit {
+    /// An empty storage unit for placement slot `unit_id`.
     pub fn new(unit_id: usize) -> Self {
         StorageUnit {
             unit_id,
@@ -161,14 +162,17 @@ impl StorageUnit {
         }
     }
 
+    /// Rows with at least one resident cell.
     pub fn row_count(&self) -> usize {
         self.rows.read().unwrap().len()
     }
 
+    /// Cumulative payload bytes written to this unit.
     pub fn bytes_written(&self) -> u64 {
         self.bytes_written.load(Ordering::Relaxed)
     }
 
+    /// Cumulative payload bytes read from this unit.
     pub fn bytes_read(&self) -> u64 {
         self.bytes_read.load(Ordering::Relaxed)
     }
@@ -230,11 +234,13 @@ pub struct DataPlane {
 }
 
 impl DataPlane {
+    /// A data plane with `n_units` placement slots (all coordinator-local).
     pub fn new(n_units: usize) -> Self {
         assert!(n_units > 0, "need at least one storage unit");
         DataPlane { slots: (0..n_units).map(Slot::new).collect() }
     }
 
+    /// Number of placement slots.
     pub fn n_units(&self) -> usize {
         self.slots.len()
     }
@@ -379,6 +385,7 @@ impl DataPlane {
         Ok(WriteNotification { index, column, token_len })
     }
 
+    /// Fetch one cell's value (resolving shadow cells through their unit).
     pub fn get(&self, index: GlobalIndex, column: &Column) -> Option<Value> {
         self.get_row(index, std::slice::from_ref(column))
             .map(|mut vals| vals.pop().expect("one column requested"))
@@ -449,6 +456,22 @@ impl DataPlane {
         local_removed || shadow_removed
     }
 
+    /// Whether the cell is known only as shadow metadata — its payload
+    /// lives on the attached unit, which therefore vetted the bytes
+    /// (the unit rejects non-identical re-writes). Locally resident
+    /// (relayed) cells return `false`: the unit never saw those, so no
+    /// such vetting happened.
+    pub fn is_shadow_cell(
+        &self,
+        index: GlobalIndex,
+        column: &Column,
+    ) -> bool {
+        let slot = &self.slots[self.unit_id_for(index)];
+        !slot.local.has_cell(index, column)
+            && slot.shadow_has(index, column)
+    }
+
+    /// Whether the cell exists (resident or shadow).
     pub fn has_cell(&self, index: GlobalIndex, column: &Column) -> bool {
         let slot = self.slot_for(index);
         slot.local.has_cell(index, column)
@@ -525,10 +548,12 @@ impl DataPlane {
             .sum()
     }
 
+    /// Payload bytes written across all local units.
     pub fn total_bytes_written(&self) -> u64 {
         self.slots.iter().map(|s| s.local.bytes_written()).sum()
     }
 
+    /// Payload bytes read across all local units.
     pub fn total_bytes_read(&self) -> u64 {
         self.slots.iter().map(|s| s.local.bytes_read()).sum()
     }

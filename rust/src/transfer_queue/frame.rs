@@ -282,6 +282,7 @@ fn read_indices(c: &mut Cursor) -> Result<Vec<GlobalIndex>> {
 }
 
 impl UnitRequest {
+    /// Encode the request body (without the length prefix).
     pub fn encode(&self) -> Vec<u8> {
         let mut buf = Vec::new();
         match self {
@@ -317,6 +318,7 @@ impl UnitRequest {
         buf
     }
 
+    /// Decode a request body (bounded; never panics on corrupt input).
     pub fn decode(frame: &[u8]) -> Result<UnitRequest> {
         let mut c = Cursor::new(frame);
         let req = match c.u8()? {
@@ -355,6 +357,7 @@ impl UnitRequest {
 }
 
 impl UnitReply {
+    /// Encode the reply body (without the length prefix).
     pub fn encode(&self) -> Vec<u8> {
         let mut buf = Vec::new();
         match self {
@@ -408,6 +411,7 @@ impl UnitReply {
         buf
     }
 
+    /// Decode a reply body (bounded; never panics on corrupt input).
     pub fn decode(frame: &[u8]) -> Result<UnitReply> {
         let mut c = Cursor::new(frame);
         let rep = match c.u8()? {

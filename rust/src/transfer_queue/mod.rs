@@ -31,7 +31,10 @@ use anyhow::{bail, Result};
 
 pub use client::{Batch, BatchPoll, StreamDataLoader};
 pub use column::{Column, GlobalIndex, Value};
-pub use control_plane::{BatchMeta, Controller, RequestOutcome};
+pub use control_plane::{
+    BatchMeta, Controller, LeaseId, LeaseRegistry, LeaseRow,
+    RequestOutcome, RevokedLease,
+};
 pub use data_plane::{DataPlane, StorageUnit, UnitView, WriteNotification};
 pub use frame::{UnitReply, UnitRequest, UnitStatsSnapshot};
 pub use policies::{
@@ -49,6 +52,7 @@ pub struct TaskSpec {
 }
 
 impl TaskSpec {
+    /// A task spec with the default FCFS policy.
     pub fn new(name: impl Into<String>, required: Vec<Column>) -> Self {
         TaskSpec {
             name: name.into(),
@@ -57,6 +61,7 @@ impl TaskSpec {
         }
     }
 
+    /// Override the batching policy.
     pub fn policy(mut self, policy: Box<dyn Policy>) -> Self {
         self.policy = policy;
         self
@@ -71,16 +76,19 @@ pub struct TransferQueueBuilder {
 }
 
 impl TransferQueueBuilder {
+    /// Set the number of data-plane placement slots.
     pub fn storage_units(mut self, n: usize) -> Self {
         self.n_units = n;
         self
     }
 
+    /// Add a task (one controller per task).
     pub fn task(mut self, spec: TaskSpec) -> Self {
         self.tasks.push(spec);
         self
     }
 
+    /// Build the queue behind an `Arc` (shared across workers).
     pub fn build(self) -> Arc<TransferQueue> {
         let controllers = self
             .tasks
@@ -115,6 +123,7 @@ pub struct TransferQueue {
 }
 
 impl TransferQueue {
+    /// Start building a queue.
     pub fn builder() -> TransferQueueBuilder {
         TransferQueueBuilder::default()
     }
@@ -147,7 +156,17 @@ impl TransferQueue {
     /// acknowledged the payload before the client sent this
     /// notification, so no controller can observe a notified-but-absent
     /// cell. The batch is validated up front (indices allocated, no
-    /// duplicates) so a rejected batch broadcasts nothing.
+    /// intra-batch duplicates) so a rejected batch broadcasts nothing.
+    ///
+    /// A notification for an already-recorded *shadow* cell is absorbed
+    /// as a no-op instead of rejected: a leased consumer replaying a
+    /// value-first write after a crash-before-ack reaches this verb
+    /// only once the owning unit accepted the payload, and the unit
+    /// rejects non-identical re-writes — so a shadow duplicate here is
+    /// an identical replay, not a conflict. A duplicate against a
+    /// *locally resident* (relayed) cell stays a loud error: the unit
+    /// never vetted that payload, so the direct write may hold a
+    /// different value and absorbing it would silently diverge.
     pub fn notify_remote_cells(
         &self,
         cells: &[(GlobalIndex, Column, Option<usize>)],
@@ -160,16 +179,32 @@ impl TransferQueue {
                      alloc_rows / put_prompts_data first"
                 );
             }
-            // Duplicates against resident state AND within this batch —
-            // either would partially record before failing.
-            if self.data.has_cell(*idx, col) || !seen.insert((*idx, col)) {
+            // Duplicates within this batch would partially record
+            // before failing — still rejected whole. So would a
+            // conflict with a relayed local cell.
+            if !seen.insert((*idx, col)) {
                 bail!(
                     "duplicate notification for {idx}/{col}: batch \
                      rejected before any cell was recorded"
                 );
             }
+            if self.data.has_cell(*idx, col)
+                && !self.data.is_shadow_cell(*idx, col)
+            {
+                bail!(
+                    "duplicate notification for {idx}/{col}: the cell \
+                     is resident at the coordinator (relayed write), \
+                     so the unit never vetted this payload — batch \
+                     rejected before any cell was recorded"
+                );
+            }
         }
         for (idx, col, token_len) in cells {
+            if self.data.has_cell(*idx, col) {
+                // Shadow duplicate = identical replay (see above):
+                // already recorded and broadcast once.
+                continue;
+            }
             let note = self.data.record_remote_cell(
                 *idx,
                 col.clone(),
@@ -300,6 +335,7 @@ impl TransferQueue {
         }
     }
 
+    /// Controller lookup; panics on unknown tasks (internal call sites).
     pub fn controller(&self, task: &str) -> Arc<Controller> {
         self.controllers
             .read()
@@ -317,10 +353,12 @@ impl TransferQueue {
         self.controllers.read().unwrap().get(task).cloned()
     }
 
+    /// Whether `task` has a registered controller.
     pub fn has_task(&self, task: &str) -> bool {
         self.controllers.read().unwrap().contains_key(task)
     }
 
+    /// Registered task names.
     pub fn tasks(&self) -> Vec<String> {
         self.controllers.read().unwrap().keys().cloned().collect()
     }
@@ -358,6 +396,7 @@ impl TransferQueue {
         }
     }
 
+    /// Whether the queue has been closed.
     pub fn is_closed(&self) -> bool {
         self.closed.load(Ordering::SeqCst)
     }
@@ -373,6 +412,7 @@ impl TransferQueue {
         }
     }
 
+    /// The payload storage layer.
     pub fn data_plane(&self) -> &DataPlane {
         &self.data
     }
@@ -517,10 +557,12 @@ mod tests {
             .unwrap();
         assert_eq!(tq.controller("rollout").ready_depth(), 1);
         assert_eq!(tq.resident_rows(), 1);
-        // Duplicate and forged-index notifications are rejected whole.
-        assert!(tq
-            .notify_remote_cells(&[(idx, Column::Prompts, Some(6))])
-            .is_err());
+        // A resident duplicate is an identical replay (the owning unit
+        // already vetted the payload): absorbed as a no-op, broadcast
+        // exactly once. Forged indices stay rejected.
+        tq.notify_remote_cells(&[(idx, Column::Prompts, Some(6))])
+            .unwrap();
+        assert_eq!(tq.controller("rollout").ready_depth(), 1);
         // ...including duplicates WITHIN one batch: nothing may be
         // recorded or broadcast for a rejected batch.
         let idx2 = tq.alloc_indices(1)[0];

@@ -99,10 +99,12 @@ pub struct LocalUnit {
 }
 
 impl LocalUnit {
+    /// A handle over an in-process store.
     pub fn new(store: Arc<StorageUnit>) -> Self {
         LocalUnit { store }
     }
 
+    /// The wrapped store.
     pub fn store(&self) -> &Arc<StorageUnit> {
         &self.store
     }
@@ -397,10 +399,12 @@ impl UnitServer {
         })
     }
 
+    /// The bound address (resolves port 0 binds).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
     }
 
+    /// The bound port.
     pub fn port(&self) -> u16 {
         self.local_addr.port()
     }

@@ -69,6 +69,7 @@ fn rollout_spec(count: usize, min: usize) -> GetBatchSpec {
         count,
         min,
         timeout_ms: 2000,
+        consumer: None,
     }
 }
 
@@ -108,6 +109,9 @@ fn direct_client_fetches_payloads_from_unit_sockets() {
                 }
             }
             GetBatchReply::NotReady => continue,
+            GetBatchReply::Leased { .. } => {
+                unreachable!("no consumer lease was requested")
+            }
             GetBatchReply::Closed => panic!("premature close"),
         }
     }
@@ -176,6 +180,9 @@ fn direct_writes_are_value_first_and_visible_everywhere() {
                 }
             }
             GetBatchReply::NotReady => continue,
+            GetBatchReply::Leased { .. } => {
+                unreachable!("no consumer lease was requested")
+            }
             GetBatchReply::Closed => panic!("premature close"),
         }
     }
@@ -259,6 +266,9 @@ fn killed_unit_reads_fall_back_through_coordinator() {
                 }
             }
             GetBatchReply::NotReady => continue,
+            GetBatchReply::Leased { .. } => {
+                unreachable!("no consumer lease was requested")
+            }
             GetBatchReply::Closed => panic!("premature close"),
         }
     }

@@ -17,8 +17,8 @@ use asyncflow::pipeline::{
 };
 use asyncflow::runtime::{MockEngine, ParamSet, PolicyEngine, TrainEngine};
 use asyncflow::service::{
-    GetBatchSpec, PutRow, ServiceClient, Session, SessionSpec,
-    TcpJsonlServer,
+    ConsumerSpec, GetBatchReply, GetBatchSpec, PutRow, ServiceClient,
+    Session, SessionSpec, TcpJsonlServer,
 };
 use asyncflow::transfer_queue::{Batch, Column, TaskSpec, Value};
 
@@ -223,6 +223,7 @@ fn remote_stage_error_drains_the_whole_graph_over_tcp() {
                 count: 4,
                 min: 1,
                 timeout_ms: 50,
+                consumer: None,
             })
         })
     };
@@ -331,4 +332,252 @@ fn best_of_n_graph_runs_with_tcp_reward_worker_competing() {
     // The run closing drains the TCP grader cleanly.
     remote.join().unwrap().unwrap();
     server.stop();
+}
+
+fn answer_col() -> Column {
+    Column::Custom("answer".into())
+}
+
+/// Driver stage: collects `want` graded rows exactly once, asserting
+/// every reward is the full-credit 1.0 the correct answer earns.
+struct RewardCollector {
+    want: usize,
+    got: std::collections::HashSet<u64>,
+}
+
+impl Stage for RewardCollector {
+    fn process(
+        &mut self,
+        _ctx: &StageCtx<'_>,
+        batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        for (idx, row) in batch.indices.iter().zip(&batch.rows) {
+            let reward = row[0].as_f32().unwrap();
+            anyhow::ensure!(
+                (reward - 1.0).abs() < 1e-5,
+                "row {idx} graded {reward}, expected full credit"
+            );
+            anyhow::ensure!(
+                self.got.insert(idx.0),
+                "row {idx} graded twice"
+            );
+        }
+        Ok(vec![])
+    }
+
+    fn finished(&self) -> bool {
+        self.got.len() >= self.want
+    }
+}
+
+/// The headline crash-safety test: a TCP-attached reward consumer is
+/// killed mid-batch — it consumed rows under a lease and its
+/// connection then vanishes without an ack. The rows must requeue to
+/// a second TCP-attached reward stage, with conservation: every row
+/// graded exactly once, none stranded.
+#[test]
+fn killed_tcp_reward_consumer_requeues_rows_to_second_stage() {
+    const ROWS: usize = 12;
+    let session = Arc::new(
+        Session::init_engines(
+            SessionSpec {
+                storage_units: 2,
+                tasks: vec![
+                    TaskSpec::new(
+                        "reward",
+                        vec![Column::Responses, answer_col()],
+                    ),
+                    TaskSpec::new("collect", vec![Column::Rewards]),
+                ],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    );
+    let server =
+        TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0)).unwrap();
+    let addr = server.local_addr();
+
+    // Feed every row up front: correct-answer responses.
+    let feeder = ServiceClient::in_proc(session.clone());
+    feeder
+        .put_batch(
+            (0..ROWS)
+                .map(|_| {
+                    PutRow::new(vec![
+                        (
+                            Column::Responses,
+                            Value::I32s(asyncflow::data::render_answer(
+                                7,
+                            )),
+                        ),
+                        (answer_col(), Value::Text("7".into())),
+                    ])
+                })
+                .collect(),
+        )
+        .unwrap();
+
+    // The doomed consumer: leases a third of the stream over TCP with a
+    // TTL far longer than the test (only the disconnect can requeue),
+    // then "gets killed" — the connection drops with the lease unacked.
+    {
+        let doomed = ServiceClient::connect(addr).unwrap();
+        let GetBatchReply::Leased { batch, .. } = doomed
+            .get_batch(&GetBatchSpec {
+                task: "reward".into(),
+                group: 0,
+                columns: vec![Column::Responses, answer_col()],
+                count: 4,
+                min: 4,
+                timeout_ms: 2000,
+                consumer: Some(ConsumerSpec {
+                    id: "doomed".into(),
+                    ttl_ms: 60_000,
+                }),
+            })
+            .unwrap()
+        else {
+            panic!("expected a leased batch")
+        };
+        assert_eq!(batch.len(), 4);
+        // Mid-batch the rows are visibly in flight, not vanished:
+        // ready + leased accounts for the whole stream.
+        let stats = feeder.stats().unwrap();
+        let reward =
+            stats.tasks.iter().find(|t| t.name == "reward").unwrap();
+        assert_eq!(reward.leased, 4);
+        assert_eq!(reward.ready, ROWS - 4);
+        assert_eq!(reward.consumed, 4);
+        // kill -9: the scope ends — the client and its socket vanish
+        // with the lease unacked.
+    }
+
+    // The surviving grader attaches over TCP and must end up grading
+    // ALL rows — including the doomed consumer's requeued four.
+    let remote = std::thread::spawn(move || -> Result<()> {
+        let client = ServiceClient::connect(addr)?;
+        let mut stage = RuleReward::new();
+        let input = RuleReward::input().with_batch(4, 1);
+        run_remote_stage(
+            &client,
+            "reward-survivor",
+            Some(&input),
+            &mut stage,
+            &Shutdown::new(),
+        )?;
+        Ok(())
+    });
+
+    let runner =
+        PipelineRunner::new(ServiceClient::in_proc(session.clone()));
+    let spec = PipelineSpec::new().node(StageNode::driver(
+        "collect",
+        StageInput::new("collect", vec![Column::Rewards])
+            .with_batch(4, 1),
+        Box::new(|| {
+            Ok(Box::new(RewardCollector {
+                want: ROWS,
+                got: Default::default(),
+            }) as Box<dyn Stage>)
+        }),
+    ));
+    runner.run(spec).unwrap();
+    remote.join().unwrap().unwrap();
+
+    let stats = session.stats().unwrap();
+    let reward =
+        stats.tasks.iter().find(|t| t.name == "reward").unwrap();
+    assert_eq!(
+        reward.consumed, ROWS,
+        "all rows flowed through the reward task exactly once \
+         (requeued rows re-consumed by the survivor)"
+    );
+    assert_eq!(reward.leased, 0, "no lease left in flight");
+    assert_eq!(reward.ready, 0, "nothing stranded");
+    server.stop();
+}
+
+/// The same property on the in-process transport, where there is no
+/// connection to drop: the lease TTL is the kill detector. A consumer
+/// leases rows and goes silent; the pipeline's own blocked stage wakes
+/// on the expiry (the server sweeps between its wait slices) and
+/// processes everything exactly once.
+#[test]
+fn expired_in_proc_lease_requeues_rows_into_running_graph() {
+    const ROWS: i32 = 10;
+    let session = Arc::new(
+        Session::init_engines(
+            SessionSpec {
+                storage_units: 1,
+                tasks: vec![
+                    TaskSpec::new("double", vec![xcol()]),
+                    TaskSpec::new("collect", vec![ycol()]),
+                ],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    );
+    let feeder = ServiceClient::in_proc(session.clone());
+    feeder
+        .put_batch(
+            (0..ROWS)
+                .map(|i| {
+                    PutRow::new(vec![(xcol(), Value::I32s(vec![i]))])
+                })
+                .collect(),
+        )
+        .unwrap();
+
+    // Doomed consumer: takes 4 rows under a short lease, never acks.
+    let GetBatchReply::Leased { batch, lease } = session
+        .get_batch(&GetBatchSpec {
+            task: "double".into(),
+            group: 0,
+            columns: vec![xcol()],
+            count: 4,
+            min: 4,
+            timeout_ms: 1000,
+            consumer: Some(ConsumerSpec {
+                id: "doomed".into(),
+                ttl_ms: 150,
+            }),
+        })
+        .unwrap()
+    else {
+        panic!("expected a leased batch")
+    };
+    assert_eq!(batch.len(), 4);
+
+    // The graph must finish anyway: the doubler inherits the expired
+    // lease's rows without any external nudge.
+    let runner =
+        PipelineRunner::new(ServiceClient::in_proc(session.clone()));
+    let spec = PipelineSpec::new()
+        .node(StageNode::stage(
+            "double",
+            Some(StageInput::new("double", vec![xcol()]).with_batch(4, 1)),
+            Box::new(|| Ok(Box::new(Doubler) as Box<dyn Stage>)),
+        ))
+        .node(StageNode::driver(
+            "collect",
+            StageInput::new("collect", vec![xcol(), ycol()])
+                .with_batch(4, 1),
+            Box::new(|| {
+                Ok(Box::new(Collector {
+                    want: ROWS as usize,
+                    got: Default::default(),
+                }) as Box<dyn Stage>)
+            }),
+        ));
+    runner.run(spec).unwrap();
+
+    let stats = session.stats().unwrap();
+    let double =
+        stats.tasks.iter().find(|t| t.name == "double").unwrap();
+    assert_eq!(double.consumed, ROWS as usize, "exactly once each");
+    assert_eq!(double.leased, 0);
+    // The zombie's late ack errors — its rows were inherited.
+    assert!(session.ack_batch(lease).is_err());
 }

@@ -145,6 +145,7 @@ fn kill_conservation_case(
         count: 8,
         min: 1,
         timeout_ms: 50,
+        consumer: None,
     };
     let deadline = Instant::now() + Duration::from_secs(30);
     let mut seen = HashSet::new();
@@ -350,6 +351,7 @@ fn tcp_worker_streams_and_reports_stats() {
         count: 8,
         min: 1,
         timeout_ms: 100,
+        consumer: None,
     };
     let mut seen = 0;
     let deadline = Instant::now() + Duration::from_secs(20);

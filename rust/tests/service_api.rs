@@ -32,6 +32,7 @@ fn spec(task: &str, columns: Vec<Column>, count: usize) -> GetBatchSpec {
         count,
         min: 1,
         timeout_ms: 2000,
+        consumer: None,
     }
 }
 
@@ -263,6 +264,7 @@ fn run_concurrent_clients(
                     count: 4,
                     min: 1,
                     timeout_ms: 50,
+                    consumer: None,
                 };
                 let mut seen: Vec<GlobalIndex> = Vec::new();
                 loop {
@@ -271,6 +273,9 @@ fn run_concurrent_clients(
                             seen.extend(b.indices)
                         }
                         GetBatchReply::NotReady => continue,
+                        GetBatchReply::Leased { .. } => {
+                            unreachable!("no consumer lease was requested")
+                        }
                         GetBatchReply::Closed => return seen,
                     }
                 }
