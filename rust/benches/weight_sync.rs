@@ -1,0 +1,394 @@
+//! Weight-sync bench: the legacy full-JSONL `subscribe_weights` path vs
+//! the delta-binary weight plane (`subscribe_weights_meta` + storage-unit
+//! fan-out), at increasing worker counts.
+//!
+//! Same publish schedule on identical topologies — a served session over
+//! real TCP, one attached storage unit — synced once by workers that
+//! pull the full snapshot as JSONL text through the coordinator socket,
+//! and once by [`WeightMirror`]s that long-poll the tiny manifest and
+//! pull only the changed tensor as binary frames from the unit. Reports
+//! mean sync latency and coordinator-socket bytes per leg, asserts the
+//! delta path ships ≥4x fewer coordinator bytes, checks that an
+//! unchanged-tensor republish moves metadata only, and records
+//! everything as `BENCH_weights.json`.
+//!
+//! ```sh
+//! cargo bench --bench weight_sync            # full sweep
+//! cargo bench --bench weight_sync -- --smoke # CI smoke mode
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use asyncflow::runtime::{HostTensor, ParamSet};
+use asyncflow::service::{
+    ServiceClient, Session, SessionSpec, TcpJsonlServer,
+};
+use asyncflow::transfer_queue::{
+    Column, StorageUnit, TaskSpec, UnitServer,
+};
+use asyncflow::util::json::Json;
+use asyncflow::weights::WeightMirror;
+
+struct Scale {
+    mode: &'static str,
+    tensors: usize,
+    elems: usize,
+    iters: usize,
+    workers: Vec<usize>,
+}
+
+impl Scale {
+    fn pick() -> Scale {
+        let smoke = std::env::args().any(|a| a == "--smoke")
+            || std::env::var("ASYNCFLOW_BENCH_SMOKE").is_ok();
+        if smoke {
+            Scale {
+                mode: "smoke",
+                tensors: 8,
+                elems: 1024,
+                iters: 3,
+                workers: vec![1, 4],
+            }
+        } else {
+            Scale {
+                mode: "full",
+                tensors: 16,
+                elems: 16384,
+                iters: 5,
+                workers: vec![1, 2, 4, 8],
+            }
+        }
+    }
+
+    fn model_bytes(&self) -> u64 {
+        (self.tensors * self.elems * 4) as u64
+    }
+}
+
+/// Deterministic model state: publish `version` changes exactly one
+/// tensor (round-robin), so every publish past the first is a 1/T
+/// delta. `try_publish` rebases by byte equality, so plain
+/// `ParamSet::new` snapshots get correct content versions server-side.
+struct Model {
+    state: Vec<Vec<f32>>,
+}
+
+impl Model {
+    fn new(scale: &Scale) -> Model {
+        Model {
+            state: (0..scale.tensors)
+                .map(|t| {
+                    (0..scale.elems)
+                        .map(|i| (t * 31 + i) as f32 * 0.125)
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    fn publish(&mut self, version: u64, touch: bool) -> ParamSet {
+        if touch {
+            let t = version as usize % self.state.len();
+            for v in self.state[t].iter_mut() {
+                *v += 1.0;
+            }
+        }
+        ParamSet::new(
+            version,
+            self.state
+                .iter()
+                .map(|vals| {
+                    HostTensor::from_f32(vec![vals.len()], vals).unwrap()
+                })
+                .collect(),
+        )
+    }
+}
+
+struct Harness {
+    session: Arc<Session>,
+    server: TcpJsonlServer,
+    admin: ServiceClient,
+    unit: UnitServer,
+}
+
+impl Harness {
+    fn bind() -> Harness {
+        let session = Arc::new(
+            Session::init_engines(
+                SessionSpec {
+                    storage_units: 1,
+                    tasks: vec![TaskSpec::new(
+                        "rollout",
+                        vec![Column::Prompts],
+                    )],
+                },
+                ParamSet::new(0, vec![]),
+            )
+            .unwrap(),
+        );
+        let server =
+            TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0))
+                .unwrap();
+        let admin = ServiceClient::in_proc(session.clone());
+        let store = Arc::new(StorageUnit::new(0));
+        let unit =
+            UnitServer::bind(store, ("127.0.0.1", 0)).unwrap();
+        admin
+            .attach_unit(0, &format!("127.0.0.1:{}", unit.port()))
+            .unwrap();
+        Harness { session, server, admin, unit }
+    }
+
+    fn connect(&self) -> ServiceClient {
+        ServiceClient::connect(("127.0.0.1", self.server.port())).unwrap()
+    }
+
+    fn stop(self) {
+        self.unit.stop();
+        self.server.stop();
+        drop(self.session);
+    }
+}
+
+fn wire_total(clients: &[ServiceClient]) -> u64 {
+    clients
+        .iter()
+        .map(|c| c.wire_bytes().map(|(s, r)| s + r).unwrap_or(0))
+        .sum()
+}
+
+struct LegOut {
+    mean_latency_s: f64,
+    coordinator_bytes: u64,
+    unit_push_bytes: u64,
+}
+
+/// Legacy leg: every worker re-downloads the full snapshot as JSONL.
+fn run_full_leg(workers: usize, scale: &Scale) -> LegOut {
+    let h = Harness::bind();
+    let mut model = Model::new(scale);
+    h.admin.weight_sync_notify(model.publish(1, false)).unwrap();
+    let clients: Vec<ServiceClient> =
+        (0..workers).map(|_| h.connect()).collect();
+    let mut held = vec![0u64; workers];
+    // Warm pull of v1 (outside the measured window on both legs).
+    for (c, v) in clients.iter().zip(held.iter_mut()) {
+        let p = c.subscribe_weights(*v, 5000).unwrap().unwrap();
+        *v = p.version;
+    }
+    let base = wire_total(&clients);
+    let mut lat = 0.0;
+    for it in 0..scale.iters {
+        let version = 2 + it as u64;
+        h.admin
+            .weight_sync_notify(model.publish(version, true))
+            .unwrap();
+        let t0 = Instant::now();
+        for (c, v) in clients.iter().zip(held.iter_mut()) {
+            let p = c.subscribe_weights(*v, 5000).unwrap().unwrap();
+            assert_eq!(p.version, version);
+            *v = p.version;
+        }
+        lat += t0.elapsed().as_secs_f64();
+    }
+    let bytes = wire_total(&clients) - base;
+    h.stop();
+    LegOut {
+        mean_latency_s: lat / scale.iters as f64,
+        coordinator_bytes: bytes,
+        unit_push_bytes: 0,
+    }
+}
+
+struct DeltaOut {
+    leg: LegOut,
+    republish_coordinator_bytes: u64,
+    republish_tensor_payload_bytes: u64,
+}
+
+/// Delta leg: workers long-poll manifests and pull stale tensors as
+/// binary frames from the attached unit. Ends with an unchanged-tensor
+/// republish to prove the metadata-only property on the wire.
+fn run_delta_leg(workers: usize, scale: &Scale) -> DeltaOut {
+    let h = Harness::bind();
+    let mut model = Model::new(scale);
+    h.admin.weight_sync_notify(model.publish(1, false)).unwrap();
+    let clients: Vec<ServiceClient> =
+        (0..workers).map(|_| h.connect()).collect();
+    let mut mirrors: Vec<WeightMirror> = (0..workers)
+        .map(|i| WeightMirror::new(format!("w{i}")))
+        .collect();
+    // Warm sync of v1: the cold mirror pulls the whole model once,
+    // binary, from the unit.
+    for (c, m) in clients.iter().zip(mirrors.iter_mut()) {
+        let p = m.sync(c, 5000).unwrap().unwrap();
+        assert_eq!(p.version, 1);
+    }
+    let base = wire_total(&clients);
+    let mut lat = 0.0;
+    for it in 0..scale.iters {
+        let version = 2 + it as u64;
+        h.admin
+            .weight_sync_notify(model.publish(version, true))
+            .unwrap();
+        let t0 = Instant::now();
+        for (c, m) in clients.iter().zip(mirrors.iter_mut()) {
+            let p = m.sync(c, 5000).unwrap().unwrap();
+            assert_eq!(p.version, version);
+        }
+        lat += t0.elapsed().as_secs_f64();
+    }
+    let bytes = wire_total(&clients) - base;
+    let stats = h.admin.stats().unwrap().weights.unwrap();
+
+    // Unchanged-tensor republish: version moves, no payload does.
+    let payload_before =
+        stats.delta_payload_bytes + stats.unit_push_bytes;
+    let wire_before = wire_total(&clients);
+    let version = 2 + scale.iters as u64;
+    h.admin
+        .weight_sync_notify(model.publish(version, false))
+        .unwrap();
+    for (c, m) in clients.iter().zip(mirrors.iter_mut()) {
+        let p = m.sync(c, 5000).unwrap().unwrap();
+        assert_eq!(p.version, version);
+    }
+    let after = h.admin.stats().unwrap().weights.unwrap();
+    let republish_tensor_payload_bytes = after.delta_payload_bytes
+        + after.unit_push_bytes
+        - payload_before;
+    let republish_coordinator_bytes = wire_total(&clients) - wire_before;
+    h.stop();
+    DeltaOut {
+        leg: LegOut {
+            mean_latency_s: lat / scale.iters as f64,
+            coordinator_bytes: bytes,
+            unit_push_bytes: stats.unit_push_bytes,
+        },
+        republish_coordinator_bytes,
+        republish_tensor_payload_bytes,
+    }
+}
+
+fn main() {
+    let scale = Scale::pick();
+    println!(
+        "== weight sync: {} tensors x {} f32 ({} B model), {} publishes, \
+         1 tensor changed per publish, mode={} ==\n",
+        scale.tensors,
+        scale.elems,
+        scale.model_bytes(),
+        scale.iters,
+        scale.mode
+    );
+
+    let mut results = Vec::new();
+    let mut last_republish: Option<(u64, u64)> = None;
+    for &w in &scale.workers {
+        let full = run_full_leg(w, &scale);
+        let delta = run_delta_leg(w, &scale);
+        let ratio = full.coordinator_bytes as f64
+            / delta.leg.coordinator_bytes.max(1) as f64;
+        println!(
+            "workers={w}: full-jsonl {:.2}ms / {} B on coordinator; \
+             delta-binary {:.2}ms / {} B on coordinator ({} B pushed to \
+             units); {:.1}x fewer coordinator bytes",
+            full.mean_latency_s * 1e3,
+            full.coordinator_bytes,
+            delta.leg.mean_latency_s * 1e3,
+            delta.leg.coordinator_bytes,
+            delta.leg.unit_push_bytes,
+            ratio
+        );
+        assert!(
+            delta.leg.coordinator_bytes * 4 <= full.coordinator_bytes,
+            "delta path must ship >=4x fewer coordinator-socket bytes \
+             (workers={w}: {} vs {})",
+            delta.leg.coordinator_bytes,
+            full.coordinator_bytes
+        );
+        if w >= 4 {
+            assert!(
+                delta.leg.mean_latency_s < full.mean_latency_s,
+                "delta path must win on sync latency at {w} workers \
+                 ({:.4}s vs {:.4}s)",
+                delta.leg.mean_latency_s,
+                full.mean_latency_s
+            );
+        }
+        assert_eq!(
+            delta.republish_tensor_payload_bytes, 0,
+            "unchanged republish must ship zero tensor payload bytes"
+        );
+        last_republish = Some((
+            delta.republish_coordinator_bytes,
+            delta.republish_tensor_payload_bytes,
+        ));
+        results.push(Json::obj(vec![
+            ("workers", Json::Num(w as f64)),
+            (
+                "full_jsonl",
+                Json::obj(vec![
+                    (
+                        "mean_sync_latency_s",
+                        Json::Num(full.mean_latency_s),
+                    ),
+                    (
+                        "coordinator_bytes",
+                        Json::Num(full.coordinator_bytes as f64),
+                    ),
+                ]),
+            ),
+            (
+                "delta_binary",
+                Json::obj(vec![
+                    (
+                        "mean_sync_latency_s",
+                        Json::Num(delta.leg.mean_latency_s),
+                    ),
+                    (
+                        "coordinator_bytes",
+                        Json::Num(delta.leg.coordinator_bytes as f64),
+                    ),
+                    (
+                        "unit_push_bytes",
+                        Json::Num(delta.leg.unit_push_bytes as f64),
+                    ),
+                ]),
+            ),
+            ("coordinator_byte_ratio", Json::Num(ratio)),
+        ]));
+    }
+
+    let (repub_wire, repub_payload) = last_republish.unwrap();
+    let out = Json::obj(vec![
+        ("bench", Json::Str("weight_sync".into())),
+        ("mode", Json::Str(scale.mode.into())),
+        (
+            "model",
+            Json::obj(vec![
+                ("tensors", Json::Num(scale.tensors as f64)),
+                ("elements_per_tensor", Json::Num(scale.elems as f64)),
+                ("bytes", Json::Num(scale.model_bytes() as f64)),
+            ]),
+        ),
+        ("publishes", Json::Num(scale.iters as f64)),
+        ("delta_tensors_per_publish", Json::Num(1.0)),
+        ("results", Json::Arr(results)),
+        (
+            "unchanged_republish",
+            Json::obj(vec![
+                ("coordinator_bytes", Json::Num(repub_wire as f64)),
+                (
+                    "tensor_payload_bytes",
+                    Json::Num(repub_payload as f64),
+                ),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_weights.json", out.to_string_pretty())
+        .expect("write BENCH_weights.json");
+    println!("\nwrote BENCH_weights.json");
+}

@@ -44,6 +44,13 @@ impl ParamStore {
 
     /// Fallible publish for the service boundary: a misbehaving remote
     /// client must get an error response, not crash the server.
+    ///
+    /// The incoming snapshot is rebased onto the resident one
+    /// ([`ParamSet::rebase_onto`]): tensors whose bytes did not change
+    /// keep the resident allocation and content version, so the store's
+    /// snapshot always carries an accurate delta manifest for the
+    /// weight-distribution plane — and an unchanged-tensor republish
+    /// costs subscribers zero payload bytes.
     pub fn try_publish(&self, params: ParamSet) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
         if params.version < g.version {
@@ -53,7 +60,7 @@ impl ParamStore {
                 g.version
             );
         }
-        *g = params;
+        *g = params.rebase_onto(&g);
         self.cv.notify_all();
         Ok(())
     }
@@ -254,6 +261,43 @@ mod tests {
         assert!(store.try_publish(params(3)).is_err());
         assert_eq!(store.version(), 5, "store unchanged after rejection");
         assert!(store.try_publish(params(5)).is_ok(), "equal version ok");
+    }
+
+    #[test]
+    fn publish_rebases_and_shares_unchanged_tensors() {
+        use crate::runtime::HostTensor;
+        let t0 = HostTensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
+        let t1 = HostTensor::from_f32(vec![2], &[3.0, 4.0]).unwrap();
+        let store =
+            ParamStore::new(ParamSet::new(1, vec![t0.clone(), t1]));
+        let prev = store.latest();
+        // Republish with only tensor 1 changed: tensor 0 must share the
+        // resident allocation and keep its content version.
+        let t1b = HostTensor::from_f32(vec![2], &[9.0, 9.0]).unwrap();
+        store.publish(ParamSet::new(2, vec![t0.clone(), t1b.clone()]));
+        let latest = store.latest();
+        assert_eq!(latest.version, 2);
+        assert!(
+            Arc::ptr_eq(&latest.tensors[0], &prev.tensors[0]),
+            "unchanged tensor shares the resident allocation"
+        );
+        assert_eq!(latest.content_versions(), &[1, 2]);
+        assert_eq!(*latest.tensors[1], t1b);
+        // Byte-identical republish: version moves, no tensor goes stale.
+        store.publish(ParamSet::new(3, vec![t0, t1b]));
+        let l3 = store.latest();
+        assert_eq!(l3.version, 3);
+        assert_eq!(l3.content_versions(), &[1, 2]);
+    }
+
+    #[test]
+    fn publish_treats_tensor_count_change_as_full_update() {
+        use crate::runtime::HostTensor;
+        let t0 = HostTensor::from_f32(vec![1], &[1.0]).unwrap();
+        let store = ParamStore::new(ParamSet::new(1, vec![t0.clone()]));
+        let t1 = HostTensor::from_f32(vec![1], &[2.0]).unwrap();
+        store.publish(ParamSet::new(2, vec![t0, t1]));
+        assert_eq!(store.latest().content_versions(), &[2, 2]);
     }
 
     #[test]

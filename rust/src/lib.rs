@@ -25,6 +25,8 @@
 //! * [`planner`] — §4.3 hybrid cost model + resource search.
 //! * [`simulator`] — discrete-event cluster simulator (Fig 10/11, Table 1).
 //! * [`service`] — §5 service-oriented user interface.
+//! * [`weights`] — §4.2 weight distribution plane: delta manifests,
+//!   binary tensor fan-out through storage units, client mirrors.
 //! * [`data`] — synthetic verifiable math workload + tokenizer.
 
 pub mod benchkit;
@@ -43,3 +45,4 @@ pub mod service;
 pub mod simulator;
 pub mod transfer_queue;
 pub mod util;
+pub mod weights;

@@ -553,6 +553,25 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
                 w.requeued_rows
             );
         }
+        if let Some(w) = &stats.weights {
+            println!(
+                "  weights version={} tensors={} full={}B delta={}B \
+                 unit_push={}B",
+                w.published_version,
+                w.tensors,
+                w.full_payload_bytes,
+                w.delta_payload_bytes,
+                w.unit_push_bytes
+            );
+            for s in &w.subscribers {
+                println!(
+                    "    subscriber {:<12} at_version={} lag={}",
+                    s.id,
+                    s.version,
+                    w.published_version.saturating_sub(s.version)
+                );
+            }
+        }
         return Ok(());
     }
     let dir = default_artifact_dir();

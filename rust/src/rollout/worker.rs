@@ -5,9 +5,12 @@
 //! verbs, so the same loop runs in-process (the Trainer's local pool),
 //! or in another process attached over TCP (`asyncflow rollout-worker
 //! --connect host:port`) — the elastic part of the subsystem. Weight
-//! refreshes happen at *chunk* boundaries via `subscribe_weights` (the
-//! delayed parameter update of §4.2.2 at sub-batch granularity), still
-//! bounded by the IterationGate's staleness control on the feeder side.
+//! refreshes happen at *chunk* boundaries through a delta-aware
+//! [`WeightMirror`]: long-poll the manifest, pull only stale tensors
+//! (binary, from the storage-unit fan-out tier when attached), share
+//! the rest by `Arc` (the delayed parameter update of §4.2.2 at
+//! sub-batch granularity), still bounded by the IterationGate's
+//! staleness control on the feeder side.
 //!
 //! Liveness vs crash detection: a background heartbeat thread renews the
 //! active lease every `ttl_ms / 3`, so the TTL bounds how fast a *dead*
@@ -16,7 +19,7 @@
 //! may take. The heartbeat dies with the worker, which is exactly the
 //! crash signal the coordinator keys on. The heartbeat shares this
 //! worker's `ServiceClient`, which routes the long-poll verbs
-//! (`lease_prompts`, `subscribe_weights`) over a dedicated sibling
+//! (`lease_prompts`, `subscribe_weights_meta`) over a dedicated sibling
 //! connection — a parked lease poll can never delay a heartbeat or a
 //! chunk upload behind the transport's stream mutex.
 
@@ -31,6 +34,7 @@ use crate::metrics::Registry;
 use crate::runtime::{PolicyEngine, Sampler};
 use crate::service::ServiceClient;
 use crate::transfer_queue::Column;
+use crate::weights::WeightMirror;
 
 use super::manager::{ChunkRow, LeaseSpec};
 
@@ -90,12 +94,11 @@ pub struct WorkerReport {
 fn swap_weights(
     client: &ServiceClient,
     engine: &mut dyn PolicyEngine,
-    version: &mut u64,
+    mirror: &mut WeightMirror,
     metrics: Option<&Registry>,
     report: &mut WorkerReport,
 ) -> Result<()> {
-    if let Some(latest) = client.subscribe_weights(*version, 0)? {
-        *version = latest.version;
+    if let Some(latest) = mirror.sync(client, 0)? {
         engine.set_params(latest);
         report.weight_swaps += 1;
         if let Some(m) = metrics {
@@ -170,7 +173,10 @@ fn run_worker_inner(
     hb_lease: &AtomicU64,
 ) -> Result<WorkerReport> {
     let mut report = WorkerReport::default();
-    let mut version = engine.params_version();
+    // Delta-aware weight sync: the mirror starts at the engine's
+    // version, so only genuinely newer publishes trigger a swap.
+    let mut mirror = WeightMirror::new(opts.name.clone());
+    mirror.assume_version(engine.params_version());
     let chunk = opts.chunk_tokens.max(1);
     let spec = LeaseSpec {
         task: opts.task.clone(),
@@ -182,7 +188,7 @@ fn run_worker_inner(
     };
     'outer: while !abort() {
         // Delayed parameter update between leases...
-        swap_weights(client, engine, &mut version, metrics, &mut report)?;
+        swap_weights(client, engine, &mut mirror, metrics, &mut report)?;
         let reply = client.lease_prompts(&spec)?;
         let Some(lease) = reply.lease else {
             if reply.closed {
@@ -262,7 +268,7 @@ fn run_worker_inner(
             }
             // ...and at every chunk boundary (never mid-chunk: engines
             // keep in-flight sequences on their begin-time weights).
-            swap_weights(client, engine, &mut version, metrics, &mut report)?;
+            swap_weights(client, engine, &mut mirror, metrics, &mut report)?;
             if done {
                 break;
             }

@@ -120,6 +120,14 @@ fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
 impl CompiledArtifact {
     /// Execute with host tensors; returns results in manifest order.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Borrowed-input variant of [`CompiledArtifact::run`]: execution
+    /// only reads the host tensors, so callers holding shared (`Arc`)
+    /// parameter snapshots can execute without cloning tensor payloads.
+    pub fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         if inputs.len() != self.args.len() {
             bail!(
                 "{}: got {} args, expected {}",
@@ -128,7 +136,9 @@ impl CompiledArtifact {
                 self.args.len()
             );
         }
-        for (i, (t, spec)) in inputs.iter().zip(&self.args).enumerate() {
+        for (i, (t, spec)) in
+            inputs.iter().copied().zip(&self.args).enumerate()
+        {
             if !spec.matches(t) {
                 bail!(
                     "{}: arg {i} mismatch: got {:?}{:?}, want {:?}{:?}",
@@ -142,6 +152,7 @@ impl CompiledArtifact {
         }
         let literals = inputs
             .iter()
+            .copied()
             .map(to_literal)
             .collect::<Result<Vec<_>>>()?;
         let out = self

@@ -26,19 +26,100 @@ use super::tensor::HostTensor;
 
 /// An immutable, versioned parameter snapshot — the unit the
 /// WeightSender/WeightReceiver move between engines (paper §4.2.3).
+///
+/// Every tensor is individually reference-counted and carries a
+/// *content version*: the snapshot version at which its bytes last
+/// changed. Consecutive snapshots share unchanged tensors (no copies),
+/// and the weight-distribution plane ships only tensors whose content
+/// version moved — see [`ParamSet::rebase_onto`] and
+/// [`crate::weights`].
 #[derive(Clone)]
 pub struct ParamSet {
     pub version: u64,
-    pub tensors: Arc<Vec<HostTensor>>,
+    pub tensors: Arc<Vec<Arc<HostTensor>>>,
+    content_versions: Arc<Vec<u64>>,
 }
 
 impl ParamSet {
     pub fn new(version: u64, tensors: Vec<HostTensor>) -> Self {
-        ParamSet { version, tensors: Arc::new(tensors) }
+        let tensors: Vec<Arc<HostTensor>> =
+            tensors.into_iter().map(Arc::new).collect();
+        let content_versions = Arc::new(vec![version; tensors.len()]);
+        ParamSet { version, tensors: Arc::new(tensors), content_versions }
+    }
+
+    /// Assemble a snapshot from shared tensors with explicit per-tensor
+    /// content versions (the weight-plane delta-apply path).
+    ///
+    /// Panics if the two vectors disagree in length — both always come
+    /// from the same manifest, so a mismatch is a caller bug.
+    pub fn with_content_versions(
+        version: u64,
+        tensors: Vec<Arc<HostTensor>>,
+        content_versions: Vec<u64>,
+    ) -> Self {
+        assert_eq!(
+            tensors.len(),
+            content_versions.len(),
+            "one content version per tensor"
+        );
+        ParamSet {
+            version,
+            tensors: Arc::new(tensors),
+            content_versions: Arc::new(content_versions),
+        }
+    }
+
+    /// The snapshot version at which tensor `i`'s bytes last changed.
+    pub fn content_version(&self, i: usize) -> u64 {
+        self.content_versions[i]
+    }
+
+    /// Per-tensor content versions, parallel to `tensors`.
+    pub fn content_versions(&self) -> &[u64] {
+        &self.content_versions
+    }
+
+    /// Re-express this snapshot against a predecessor: tensors whose
+    /// bytes are identical to `prev`'s share its allocation *and keep
+    /// its content version*, so subscribers comparing content versions
+    /// can see exactly which tensors went stale. Changed (or newly
+    /// shaped) tensors get this snapshot's version. A tensor-count
+    /// mismatch means the model was re-architected — everything is
+    /// treated as changed.
+    pub fn rebase_onto(&self, prev: &ParamSet) -> ParamSet {
+        if prev.tensors.len() != self.tensors.len() {
+            return ParamSet {
+                version: self.version,
+                tensors: self.tensors.clone(),
+                content_versions: Arc::new(vec![
+                    self.version;
+                    self.tensors.len()
+                ]),
+            };
+        }
+        let mut tensors = Vec::with_capacity(self.tensors.len());
+        let mut cvs = Vec::with_capacity(self.tensors.len());
+        for (i, (t, p)) in
+            self.tensors.iter().zip(prev.tensors.iter()).enumerate()
+        {
+            if Arc::ptr_eq(t, p) || **t == **p {
+                tensors.push(p.clone());
+                cvs.push(prev.content_versions[i]);
+            } else {
+                tensors.push(t.clone());
+                cvs.push(self.version);
+            }
+        }
+        ParamSet {
+            version: self.version,
+            tensors: Arc::new(tensors),
+            content_versions: Arc::new(cvs),
+        }
     }
 
     pub fn size_bytes(&self) -> usize {
-        self.tensors.iter().map(HostTensor::size_bytes).sum()
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
     }
 
     pub fn tensor_count(&self) -> usize {
@@ -414,15 +495,19 @@ impl PolicyEngine for XlaPolicyEngine {
         let _ = pad;
         // Fused on-device generation: one execution per batch. The seed
         // comes from the sampler's RNG stream; temperature is a runtime
-        // input (<= 0 selects greedy argmax in-graph).
-        let mut inputs: Vec<HostTensor> =
-            self.params.tensors.iter().cloned().collect();
-        inputs.push(ids_tensor(prompts, b, p)?);
-        inputs.push(HostTensor::scalar_i32(
+        // input (<= 0 selects greedy argmax in-graph). Parameter tensors
+        // are borrowed from the shared snapshot — no per-call copies.
+        let ids = ids_tensor(prompts, b, p)?;
+        let seed = HostTensor::scalar_i32(
             (sampler.rng.next_u64() & 0x7FFF_FFFF) as i32,
-        ));
-        inputs.push(HostTensor::scalar_f32(sampler.temperature));
-        let out = self.arts.get("rollout")?.run(&inputs)?;
+        );
+        let temp = HostTensor::scalar_f32(sampler.temperature);
+        let mut inputs: Vec<&HostTensor> =
+            self.params.tensors.iter().map(Arc::as_ref).collect();
+        inputs.push(&ids);
+        inputs.push(&seed);
+        inputs.push(&temp);
+        let out = self.arts.get("rollout")?.run_refs(&inputs)?;
         let ids_t = &out[0];
         let logp_t = &out[1];
 
@@ -487,10 +572,11 @@ impl PolicyEngine for XlaPolicyEngine {
         }
         let m = &self.arts.manifest.model;
         let (b, t) = (m.batch, m.max_len);
-        let mut inputs: Vec<HostTensor> =
-            self.params.tensors.iter().cloned().collect();
-        inputs.push(ids_tensor(ids, b, t)?);
-        let out = self.arts.get("logprobs")?.run(&inputs)?;
+        let ids_t = ids_tensor(ids, b, t)?;
+        let mut inputs: Vec<&HostTensor> =
+            self.params.tensors.iter().map(Arc::as_ref).collect();
+        inputs.push(&ids_t);
+        let out = self.arts.get("logprobs")?.run_refs(&inputs)?;
         let lp = &out[0];
         (0..b).map(|i| lp.f32_row(i)).collect()
     }
@@ -524,7 +610,10 @@ pub struct XlaTrainEngine {
 
 impl XlaTrainEngine {
     pub fn new(arts: XlaArtifacts, initial: &ParamSet) -> Self {
-        let params: Vec<HostTensor> = initial.tensors.iter().cloned().collect();
+        // The train engine mutates its master copy in place every step,
+        // so it materializes owned tensors once, up front.
+        let params: Vec<HostTensor> =
+            initial.tensors.iter().map(|t| (**t).clone()).collect();
         let m = params
             .iter()
             .map(|p| HostTensor::zeros(p.dtype, p.shape.clone()))
@@ -614,20 +703,29 @@ impl TrainEngine for XlaTrainEngine {
         let (b, t) = (m.batch, m.max_len);
         let n = self.params.len();
 
-        let mut inputs: Vec<HostTensor> =
-            Vec::with_capacity(3 * n + 1 + 6);
-        inputs.extend(self.params.iter().cloned());
-        inputs.extend(self.m.iter().cloned());
-        inputs.extend(self.v.iter().cloned());
-        inputs.push(self.step.clone());
-        inputs.push(ids_tensor(&batch.ids, b, t)?);
-        inputs.push(HostTensor::from_f32(vec![b], &batch.advantages)?);
-        inputs.push(f32_tensor(&batch.old_logp, b, t - 1)?);
-        inputs.push(f32_tensor(&batch.ref_logp, b, t - 1)?);
-        inputs.push(f32_tensor(&batch.mask, b, t - 1)?);
-        inputs.push(HostTensor::scalar_f32(batch.lr));
+        let ids = ids_tensor(&batch.ids, b, t)?;
+        let adv = HostTensor::from_f32(vec![b], &batch.advantages)?;
+        let old_logp = f32_tensor(&batch.old_logp, b, t - 1)?;
+        let ref_logp = f32_tensor(&batch.ref_logp, b, t - 1)?;
+        let mask = f32_tensor(&batch.mask, b, t - 1)?;
+        let lr = HostTensor::scalar_f32(batch.lr);
 
-        let mut out = self.arts.get("train_step")?.run(&inputs)?;
+        // Params + Adam moments are borrowed, not cloned: the artifact
+        // reads them and returns fresh outputs.
+        let mut inputs: Vec<&HostTensor> =
+            Vec::with_capacity(3 * n + 1 + 6);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        inputs.push(&self.step);
+        inputs.push(&ids);
+        inputs.push(&adv);
+        inputs.push(&old_logp);
+        inputs.push(&ref_logp);
+        inputs.push(&mask);
+        inputs.push(&lr);
+
+        let mut out = self.arts.get("train_step")?.run_refs(&inputs)?;
         // Results: params'(n), m'(n), v'(n), step', metrics(5).
         let metrics_at = 3 * n + 1;
         let metric = |out: &[HostTensor], i: usize| -> Result<f32> {

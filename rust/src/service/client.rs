@@ -29,7 +29,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::rollout::{ChunkRow, LeaseId, LeaseReply, LeaseSpec, WorkerStat};
-use crate::runtime::ParamSet;
+use crate::runtime::{HostTensor, ParamSet};
+use crate::weights::WeightsMeta;
 use crate::transfer_queue::{
     Batch, Column, GlobalIndex, RemoteUnit, UnitCallError, UnitHandle,
     Value,
@@ -695,6 +696,49 @@ impl ServiceClient {
         })? {
             ServiceResponse::Weights(p) => Ok(Some(p)),
             ServiceResponse::WeightsNotNewer { .. } => Ok(None),
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    /// `subscribe_weights_meta`: long-poll the delta manifest of
+    /// weights newer than `min_version` — a few bytes per tensor
+    /// instead of the payloads. `Ok(None)` means nothing newer arrived
+    /// before the timeout. Runs on the dedicated long-poll channel.
+    /// The usual caller is [`crate::weights::WeightMirror::sync`],
+    /// which also handles the fetch + assemble half.
+    pub fn subscribe_weights_meta(
+        &self,
+        subscriber: &str,
+        min_version: u64,
+        timeout_ms: u64,
+    ) -> Result<Option<WeightsMeta>> {
+        match self.slow_call(ServiceRequest::SubscribeWeightsMeta {
+            subscriber: subscriber.to_string(),
+            min_version,
+            timeout_ms,
+        })? {
+            ServiceResponse::WeightsMeta(m) => Ok(Some(m)),
+            ServiceResponse::WeightsNotNewer { .. } => Ok(None),
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    /// `fetch_tensors`: pull tensor payloads by manifest index through
+    /// the coordinator — the fallback leg of the weight plane for slots
+    /// without a reachable storage unit. Entries come back as
+    /// `(index, content_version, tensor)`; the caller must check each
+    /// content version against its manifest (the server always serves
+    /// its latest snapshot).
+    pub fn fetch_tensors(
+        &self,
+        version: u64,
+        indices: &[u32],
+    ) -> Result<Vec<(u32, u64, Arc<HostTensor>)>> {
+        match self.call(ServiceRequest::FetchTensors {
+            version,
+            indices: indices.to_vec(),
+        })? {
+            ServiceResponse::Tensors { entries, .. } => Ok(entries),
             _ => bail!("service returned an unexpected response kind"),
         }
     }

@@ -56,11 +56,12 @@ use crate::coordinator::ParamStore;
 use crate::rollout::{
     ChunkRow, LeaseReply, LeaseSpec, RolloutManager, WorkerStat,
 };
-use crate::runtime::ParamSet;
+use crate::runtime::{HostTensor, ParamSet};
 use crate::transfer_queue::{
     policy_by_name, Batch, Column, GlobalIndex, LeaseId, LeaseRegistry,
-    RequestOutcome, TaskSpec, TransferQueue, Value,
+    RequestOutcome, TaskSpec, TransferQueue, UnitHandle, Value,
 };
+use crate::weights::{self, WeightPlane, WeightsMeta};
 
 /// Declarative description of the RL task graph for a session.
 pub struct SessionSpec {
@@ -137,6 +138,10 @@ struct SessionState {
     /// are unaffected (units serialize per-connection and are
     /// idempotent on identical re-sends already).
     write_lock: Arc<Mutex<()>>,
+    /// Weight-distribution-plane ledger: subscriber lag and tensor
+    /// bytes shipped per path. Fed by the weight verbs, read by
+    /// `stats` and `asyncflow info`.
+    weights: Arc<WeightPlane>,
 }
 
 /// A live post-training service session: the server-side dispatcher.
@@ -201,6 +206,7 @@ impl Session {
             store: ParamStore::new(initial_params),
             consumers: Arc::new(LeaseRegistry::new()),
             write_lock: Arc::new(Mutex::new(())),
+            weights: Arc::new(WeightPlane::new()),
         });
         Ok(())
     }
@@ -558,9 +564,38 @@ impl Session {
     /// `attach_unit`: register a remote storage unit as the payload
     /// authority for placement slot `unit`. Resident shard payloads are
     /// migrated to the unit; the coordinator keeps a replica for
-    /// failover.
+    /// failover. The unit is also seeded with the full published weight
+    /// snapshot so it can serve `fetch_tensors` immediately —
+    /// best-effort: a failed seed just means weight fetches fall back
+    /// through the coordinator until the next publish.
     pub fn attach_unit(&self, unit: usize, endpoint: &str) -> Result<()> {
-        self.state()?.tq.attach_unit(unit, endpoint)
+        let st = self.state()?;
+        st.tq.attach_unit(unit, endpoint)?;
+        let latest = st.store.latest();
+        let updates = weights::full_updates(&latest);
+        if updates.is_empty() {
+            return Ok(());
+        }
+        if let Some((_, remote)) = st
+            .tq
+            .data_plane()
+            .attached_remotes()
+            .into_iter()
+            .find(|(slot, _)| *slot == unit)
+        {
+            if remote
+                .put_tensors(
+                    latest.version,
+                    latest.tensors.len() as u32,
+                    &updates,
+                )
+                .is_ok()
+            {
+                st.weights
+                    .add_unit_push_bytes(latest.size_bytes() as u64);
+            }
+        }
+        Ok(())
     }
 
     /// `alloc_rows`: reserve fresh global indices so a client can write
@@ -588,10 +623,37 @@ impl Session {
     }
 
     /// `weight_sync_notify`: publish a new weight snapshot to all
-    /// inference engines (they observe it via `subscribe_weights` or
-    /// their WeightReceivers).
+    /// inference engines (they observe it via `subscribe_weights`,
+    /// `subscribe_weights_meta`, or their WeightReceivers).
+    ///
+    /// Publishing rebases the snapshot onto its predecessor (see
+    /// `ParamSet::rebase_onto`), then fans the *changed* tensors out to
+    /// every attached storage unit over the binary path. Unit pushes
+    /// are best-effort: a unit that misses a delta simply cannot answer
+    /// for the new content versions, and workers fall back through the
+    /// coordinator's `fetch_tensors`.
     pub fn weight_sync_notify(&self, params: ParamSet) -> Result<()> {
-        self.state()?.store.try_publish(params)
+        let st = self.state()?;
+        st.store.try_publish(params)?;
+        let latest = st.store.latest();
+        let updates = weights::delta_updates(&latest);
+        if updates.is_empty() {
+            return Ok(());
+        }
+        let delta_bytes: u64 = updates
+            .iter()
+            .map(|(_, _, t)| t.size_bytes() as u64)
+            .sum();
+        let total = latest.tensors.len() as u32;
+        for (_, remote) in st.tq.data_plane().attached_remotes() {
+            if remote
+                .put_tensors(latest.version, total, &updates)
+                .is_ok()
+            {
+                st.weights.add_unit_push_bytes(delta_bytes);
+            }
+        }
+        Ok(())
     }
 
     /// Long-poll for weights newer than `min_version`. Returns `None`
@@ -604,11 +666,66 @@ impl Session {
         min_version: u64,
         timeout_ms: u64,
     ) -> Result<Option<ParamSet>> {
-        let latest = self
-            .state()?
+        let st = self.state()?;
+        let latest = st
             .store
             .wait_for_newer(min_version, Duration::from_millis(timeout_ms));
-        Ok((latest.version > min_version).then_some(latest))
+        Ok((latest.version > min_version).then(|| {
+            st.weights.add_full_bytes(latest.size_bytes() as u64);
+            latest
+        }))
+    }
+
+    /// Long-poll the *manifest* of weights newer than `min_version`:
+    /// snapshot version, per-tensor content versions, and the
+    /// storage-unit endpoints serving binary payloads — a few bytes per
+    /// tensor, however large the model. The delta-aware entry point of
+    /// the weight plane: subscribers diff the manifest against what
+    /// they hold and fetch only stale tensors.
+    pub fn subscribe_weights_meta(
+        &self,
+        subscriber: &str,
+        min_version: u64,
+        timeout_ms: u64,
+    ) -> Result<Option<WeightsMeta>> {
+        let st = self.state()?;
+        st.weights.note_subscriber(subscriber, min_version);
+        let latest = st
+            .store
+            .wait_for_newer(min_version, Duration::from_millis(timeout_ms));
+        Ok((latest.version > min_version).then(|| {
+            WeightsMeta::describe(&latest, st.tq.data_plane().endpoints())
+        }))
+    }
+
+    /// Serve tensor payloads by manifest index — the via-coordinator
+    /// fallback of the weight plane (slot unattached, unit unreachable,
+    /// or a unit that missed a delta push). Always serves the *latest*
+    /// snapshot: content versions identify bytes, so the caller checks
+    /// each entry's content version against its manifest and discards
+    /// mismatches. Out-of-range indices are silently skipped (the
+    /// caller observes the miss and re-reads the manifest).
+    pub fn fetch_tensors(
+        &self,
+        indices: &[u32],
+    ) -> Result<(u64, Vec<(u32, u64, Arc<HostTensor>)>)> {
+        let st = self.state()?;
+        let latest = st.store.latest();
+        let mut entries = Vec::with_capacity(indices.len());
+        let mut bytes = 0u64;
+        for &i in indices {
+            let Some(t) = latest.tensors.get(i as usize) else {
+                continue;
+            };
+            bytes += t.size_bytes() as u64;
+            entries.push((
+                i,
+                latest.content_version(i as usize),
+                t.clone(),
+            ));
+        }
+        st.weights.add_delta_bytes(bytes);
+        Ok((latest.version, entries))
     }
 
     /// The elastic rollout dispatcher behind the lease verbs.
@@ -690,12 +807,16 @@ impl Session {
                 remote_bytes_read: v.remote_bytes_read,
             })
             .collect();
+        let latest = st.store.latest();
         Ok(ServiceStats {
             tasks,
             units,
             resident_rows: st.tq.resident_rows(),
-            param_version: st.store.version(),
+            param_version: latest.version,
             closed: st.tq.is_closed(),
+            weights: Some(
+                st.weights.stats(latest.version, latest.tensors.len()),
+            ),
         })
     }
 
@@ -760,6 +881,26 @@ impl Session {
                         version: self.param_store()?.version(),
                     },
                 }
+            }
+            ServiceRequest::SubscribeWeightsMeta {
+                subscriber,
+                min_version,
+                timeout_ms,
+            } => {
+                match self.subscribe_weights_meta(
+                    &subscriber,
+                    min_version,
+                    timeout_ms,
+                )? {
+                    Some(m) => ServiceResponse::WeightsMeta(m),
+                    None => ServiceResponse::WeightsNotNewer {
+                        version: self.param_store()?.version(),
+                    },
+                }
+            }
+            ServiceRequest::FetchTensors { version: _, indices } => {
+                let (version, entries) = self.fetch_tensors(&indices)?;
+                ServiceResponse::Tensors { version, entries }
             }
             ServiceRequest::WeightSync { params } => {
                 self.weight_sync_notify(params)?;
@@ -1002,6 +1143,61 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         s.weight_sync_notify(ParamSet::new(1, vec![])).unwrap();
         assert_eq!(h.join().unwrap().unwrap().version, 1);
+    }
+
+    #[test]
+    fn weight_plane_verbs_serve_manifests_and_tensors() {
+        let s = Session::init_engines(
+            SessionSpec::grpo(),
+            ParamSet::new(
+                1,
+                vec![
+                    HostTensor::from_f32(vec![2], &[1.0, 2.0]).unwrap(),
+                    HostTensor::from_f32(vec![1], &[3.0]).unwrap(),
+                ],
+            ),
+        )
+        .unwrap();
+        // A worker holding version 0 sees the full manifest.
+        let meta = s.subscribe_weights_meta("w0", 0, 0).unwrap().unwrap();
+        assert_eq!(meta.version, 1);
+        assert_eq!(meta.tensors.len(), 2);
+        assert_eq!(meta.endpoints.len(), 2, "grpo() has 2 unit slots");
+        // Nothing newer than what it now holds.
+        assert!(s.subscribe_weights_meta("w0", 1, 0).unwrap().is_none());
+        // Publish v2 changing only tensor 1: rebase keeps tensor 0's
+        // content version, so the manifest names exactly one stale slot.
+        s.weight_sync_notify(ParamSet::new(
+            2,
+            vec![
+                HostTensor::from_f32(vec![2], &[1.0, 2.0]).unwrap(),
+                HostTensor::from_f32(vec![1], &[9.0]).unwrap(),
+            ],
+        ))
+        .unwrap();
+        let meta2 = s.subscribe_weights_meta("w0", 1, 0).unwrap().unwrap();
+        assert_eq!(meta2.tensors[0].content_version, 1, "shared bytes");
+        assert_eq!(meta2.tensors[1].content_version, 2);
+        // Coordinator fallback serves payloads with content versions;
+        // out-of-range indices are skipped, not errors.
+        let (version, entries) = s.fetch_tensors(&[1, 99]).unwrap();
+        assert_eq!(version, 2);
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, 1);
+        assert_eq!(entries[0].1, 2);
+        assert_eq!(entries[0].2.as_f32().unwrap(), vec![9.0]);
+        // The ledger shows up in stats.
+        let w = s.stats().unwrap().weights.unwrap();
+        assert_eq!(w.published_version, 2);
+        assert_eq!(w.tensors, 2);
+        assert_eq!(w.delta_payload_bytes, 4);
+        assert_eq!(
+            w.subscribers,
+            vec![crate::weights::SubscriberLag {
+                id: "w0".into(),
+                version: 1,
+            }]
+        );
     }
 
     #[test]

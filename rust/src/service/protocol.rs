@@ -20,12 +20,17 @@
 //!   deliberate (correct and dependency-free, §3.5-style no-padding). The
 //!   in-proc fast path never serializes at all.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use crate::rollout::{ChunkRow, LeaseReply, LeaseSpec, WorkerStat};
 use crate::runtime::{DType, HostTensor, ParamSet};
 use crate::transfer_queue::{Batch, Column, GlobalIndex, Value};
 use crate::util::json::Json;
+use crate::weights::{
+    SubscriberLag, TensorMeta, WeightPlaneStats, WeightsMeta,
+};
 
 // ===========================================================================
 // Request side
@@ -173,6 +178,21 @@ pub enum ServiceRequest {
     },
     /// Long-poll for weights newer than `min_version`.
     SubscribeWeights { min_version: u64, timeout_ms: u64 },
+    /// Long-poll for a weight *manifest* newer than `min_version` — the
+    /// delta path's metadata leg (a few bytes per tensor; payloads are
+    /// fetched separately over the binary codec). `subscriber` keys the
+    /// coordinator's lag ledger.
+    SubscribeWeightsMeta {
+        subscriber: String,
+        min_version: u64,
+        timeout_ms: u64,
+    },
+    /// Tensor fetch by manifest index from the published snapshot — the
+    /// weight plane's via-coordinator fallback for unit misses.
+    /// `version` is the manifest the client is assembling (diagnostic;
+    /// the server always serves from its latest snapshot and labels
+    /// every entry with its content version, which identifies bytes).
+    FetchTensors { version: u64, indices: Vec<u32> },
     /// `weight_sync_notify`: publish a new weight snapshot.
     WeightSync { params: ParamSet },
     /// Lease ready prompt rows to an elastic rollout worker (long-polls
@@ -300,6 +320,8 @@ pub struct ServiceStats {
     pub resident_rows: usize,
     pub param_version: u64,
     pub closed: bool,
+    /// Weight-plane ledger (`None` from peers that predate it).
+    pub weights: Option<WeightPlaneStats>,
 }
 
 /// The service answers.
@@ -312,6 +334,17 @@ pub enum ServiceResponse {
     /// version — the payload is deliberately elided so "no change"
     /// polls stay tiny on the wire.
     WeightsNotNewer { version: u64 },
+    /// `subscribe_weights_meta` outcome: the delta manifest (per-tensor
+    /// content versions + fan-out endpoints, no payloads).
+    WeightsMeta(WeightsMeta),
+    /// `fetch_tensors` outcome: `(manifest index, content version,
+    /// tensor)` entries from the published snapshot, `version` being
+    /// the snapshot they were served from. Tensors ride behind `Arc`
+    /// so the in-proc transport shares payloads instead of cloning.
+    Tensors {
+        version: u64,
+        entries: Vec<(u32, u64, Arc<HostTensor>)>,
+    },
     Stats(ServiceStats),
     /// `get_batch_meta` outcome: consumed indices + unit endpoints +
     /// the consumer lease when one was requested.
@@ -541,7 +574,7 @@ pub fn param_set_to_json(p: &ParamSet) -> Result<Json> {
             Json::Arr(
                 p.tensors
                     .iter()
-                    .map(tensor_to_json)
+                    .map(|t| tensor_to_json(t))
                     .collect::<Result<_>>()?,
             ),
         ),
@@ -556,6 +589,130 @@ pub fn param_set_from_json(j: &Json) -> Result<ParamSet> {
         .map(tensor_from_json)
         .collect::<Result<Vec<_>>>()?;
     Ok(ParamSet::new(version, tensors))
+}
+
+fn field_u32(j: &Json, key: &str) -> Result<u32> {
+    u32::try_from(field_u64(j, key)?)
+        .with_context(|| format!("field {key:?} must fit u32"))
+}
+
+fn weights_meta_to_json(m: &WeightsMeta) -> Json {
+    Json::obj(vec![
+        ("version", Json::Num(m.version as f64)),
+        (
+            "tensors",
+            Json::Arr(
+                m.tensors
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("index", Json::Num(t.index as f64)),
+                            (
+                                "content_version",
+                                Json::Num(t.content_version as f64),
+                            ),
+                            ("dtype", Json::Str(t.dtype.name().into())),
+                            ("shape", Json::arr_usize(&t.shape)),
+                            ("bytes", Json::Num(t.bytes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "endpoints",
+            Json::Arr(
+                m.endpoints
+                    .iter()
+                    .map(|e| match e {
+                        Some(ep) => Json::Str(ep.clone()),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn weights_meta_from_json(j: &Json) -> Result<WeightsMeta> {
+    Ok(WeightsMeta {
+        version: field_u64(j, "version")?,
+        tensors: field_arr(j, "tensors")?
+            .iter()
+            .map(|t| {
+                Ok(TensorMeta {
+                    index: field_u32(t, "index")?,
+                    content_version: field_u64(t, "content_version")?,
+                    dtype: DType::from_str_name(&field_str(t, "dtype")?)?,
+                    shape: field_arr(t, "shape")?
+                        .iter()
+                        .map(|x| {
+                            x.as_usize()
+                                .context("shape element must be a usize")
+                        })
+                        .collect::<Result<_>>()?,
+                    bytes: field_u64(t, "bytes")?,
+                })
+            })
+            .collect::<Result<_>>()?,
+        endpoints: field_arr(j, "endpoints")?
+            .iter()
+            .map(|e| match e {
+                Json::Null => Ok(None),
+                Json::Str(s) => Ok(Some(s.clone())),
+                _ => bail!("unit endpoint must be string|null"),
+            })
+            .collect::<Result<_>>()?,
+    })
+}
+
+fn weight_plane_stats_to_json(w: &WeightPlaneStats) -> Json {
+    Json::obj(vec![
+        ("published_version", Json::Num(w.published_version as f64)),
+        ("tensors", Json::Num(w.tensors as f64)),
+        (
+            "full_payload_bytes",
+            Json::Num(w.full_payload_bytes as f64),
+        ),
+        (
+            "delta_payload_bytes",
+            Json::Num(w.delta_payload_bytes as f64),
+        ),
+        ("unit_push_bytes", Json::Num(w.unit_push_bytes as f64)),
+        (
+            "subscribers",
+            Json::Arr(
+                w.subscribers
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("id", Json::Str(s.id.clone())),
+                            ("version", Json::Num(s.version as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn weight_plane_stats_from_json(j: &Json) -> Result<WeightPlaneStats> {
+    Ok(WeightPlaneStats {
+        published_version: field_u64(j, "published_version")?,
+        tensors: field_usize(j, "tensors")?,
+        full_payload_bytes: field_u64(j, "full_payload_bytes")?,
+        delta_payload_bytes: field_u64(j, "delta_payload_bytes")?,
+        unit_push_bytes: field_u64(j, "unit_push_bytes")?,
+        subscribers: field_arr(j, "subscribers")?
+            .iter()
+            .map(|s| {
+                Ok(SubscriberLag {
+                    id: field_str(s, "id")?,
+                    version: field_u64(s, "version")?,
+                })
+            })
+            .collect::<Result<_>>()?,
+    })
 }
 
 // ===========================================================================
@@ -850,6 +1007,31 @@ impl ServiceRequest {
                     ("timeout_ms", Json::Num(*timeout_ms as f64)),
                 ])
             }
+            ServiceRequest::SubscribeWeightsMeta {
+                subscriber,
+                min_version,
+                timeout_ms,
+            } => Json::obj(vec![
+                ("op", Json::Str("subscribe_weights_meta".into())),
+                ("subscriber", Json::Str(subscriber.clone())),
+                ("min_version", Json::Num(*min_version as f64)),
+                ("timeout_ms", Json::Num(*timeout_ms as f64)),
+            ]),
+            ServiceRequest::FetchTensors { version, indices } => {
+                Json::obj(vec![
+                    ("op", Json::Str("fetch_tensors".into())),
+                    ("version", Json::Num(*version as f64)),
+                    (
+                        "indices",
+                        Json::Arr(
+                            indices
+                                .iter()
+                                .map(|&i| Json::Num(i as f64))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            }
             ServiceRequest::WeightSync { params } => Json::obj(vec![
                 ("op", Json::Str("weight_sync".into())),
                 ("params", param_set_to_json(params)?),
@@ -1028,6 +1210,24 @@ impl ServiceRequest {
                 min_version: field_u64(j, "min_version")?,
                 timeout_ms: field_u64(j, "timeout_ms")?,
             },
+            "subscribe_weights_meta" => {
+                ServiceRequest::SubscribeWeightsMeta {
+                    subscriber: field_str(j, "subscriber")?,
+                    min_version: field_u64(j, "min_version")?,
+                    timeout_ms: field_u64(j, "timeout_ms")?,
+                }
+            }
+            "fetch_tensors" => ServiceRequest::FetchTensors {
+                version: field_u64(j, "version")?,
+                indices: field_arr(j, "indices")?
+                    .iter()
+                    .map(|x| {
+                        x.as_i64()
+                            .and_then(|n| u32::try_from(n).ok())
+                            .context("tensor index must fit u32")
+                    })
+                    .collect::<Result<_>>()?,
+            },
             "weight_sync" => ServiceRequest::WeightSync {
                 params: param_set_from_json(field(j, "params")?)?,
             },
@@ -1161,11 +1361,47 @@ impl ServiceResponse {
                     ("version", Json::Num(*version as f64)),
                 ])
             }
-            ServiceResponse::Stats(s) => Json::obj(vec![
+            ServiceResponse::WeightsMeta(m) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
-                (
-                    "stats",
-                    Json::obj(vec![
+                ("weights_meta", weights_meta_to_json(m)),
+            ]),
+            ServiceResponse::Tensors { version, entries } => {
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "tensors",
+                        Json::obj(vec![
+                            ("version", Json::Num(*version as f64)),
+                            (
+                                "entries",
+                                Json::Arr(
+                                    entries
+                                        .iter()
+                                        .map(|(idx, cv, t)| {
+                                            Ok(Json::obj(vec![
+                                                (
+                                                    "index",
+                                                    Json::Num(*idx as f64),
+                                                ),
+                                                (
+                                                    "content_version",
+                                                    Json::Num(*cv as f64),
+                                                ),
+                                                (
+                                                    "tensor",
+                                                    tensor_to_json(t)?,
+                                                ),
+                                            ]))
+                                        })
+                                        .collect::<Result<_>>()?,
+                                ),
+                            ),
+                        ]),
+                    ),
+                ])
+            }
+            ServiceResponse::Stats(s) => {
+                let mut stats_pairs = vec![
                         (
                             "tasks",
                             Json::Arr(
@@ -1282,9 +1518,16 @@ impl ServiceResponse {
                             Json::Num(s.param_version as f64),
                         ),
                         ("closed", Json::Bool(s.closed)),
-                    ]),
-                ),
-            ]),
+                ];
+                if let Some(w) = &s.weights {
+                    stats_pairs
+                        .push(("weights", weight_plane_stats_to_json(w)));
+                }
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("stats", Json::obj(stats_pairs)),
+                ])
+            }
             ServiceResponse::BatchMeta { indices, units, lease } => {
                 let mut meta = vec![
                     ("indices", indices_to_json(indices)),
@@ -1383,6 +1626,28 @@ impl ServiceResponse {
                 version: field_u64(j, "version")?,
             });
         }
+        if let Some(m) = j.get("weights_meta") {
+            return Ok(ServiceResponse::WeightsMeta(
+                weights_meta_from_json(m)?,
+            ));
+        }
+        if let Some(t) = j.get("tensors") {
+            return Ok(ServiceResponse::Tensors {
+                version: field_u64(t, "version")?,
+                entries: field_arr(t, "entries")?
+                    .iter()
+                    .map(|e| {
+                        Ok((
+                            field_u32(e, "index")?,
+                            field_u64(e, "content_version")?,
+                            Arc::new(tensor_from_json(field(
+                                e, "tensor",
+                            )?)?),
+                        ))
+                    })
+                    .collect::<Result<_>>()?,
+            });
+        }
         if let Some(p) = j.get("params") {
             return Ok(ServiceResponse::Weights(param_set_from_json(p)?));
         }
@@ -1472,6 +1737,11 @@ impl ServiceResponse {
                     })
                     .collect::<Result<_>>()?,
             };
+            // Optional on decode (older peers elide the weight plane).
+            let weights = match s.get("weights") {
+                None => None,
+                Some(w) => Some(weight_plane_stats_from_json(w)?),
+            };
             return Ok(ServiceResponse::Stats(ServiceStats {
                 tasks,
                 units,
@@ -1480,6 +1750,7 @@ impl ServiceResponse {
                 closed: field(s, "closed")?
                     .as_bool()
                     .context("closed must be a bool")?,
+                weights,
             }));
         }
         Ok(ServiceResponse::Ok)
@@ -1771,13 +2042,113 @@ mod tests {
             resident_rows: 12,
             param_version: 2,
             closed: false,
+            weights: Some(WeightPlaneStats {
+                published_version: 2,
+                tensors: 6,
+                full_payload_bytes: 4096,
+                delta_payload_bytes: 128,
+                unit_push_bytes: 640,
+                subscribers: vec![SubscriberLag {
+                    id: "w0".into(),
+                    version: 1,
+                }],
+            }),
         };
         match roundtrip_resp(ServiceResponse::Stats(stats.clone())) {
             ServiceResponse::Stats(got) => assert_eq!(got, stats),
             _ => panic!("wrong variant"),
         }
+        // ...and a weight-plane-free snapshot stays decodable (older
+        // peers elide the ledger).
+        let bare = ServiceStats { weights: None, ..stats };
+        match roundtrip_resp(ServiceResponse::Stats(bare.clone())) {
+            ServiceResponse::Stats(got) => assert_eq!(got, bare),
+            _ => panic!("wrong variant"),
+        }
         match roundtrip_resp(ServiceResponse::Err("boom".into())) {
             ServiceResponse::Err(m) => assert_eq!(m, "boom"),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn weights_meta_roundtrips_manifest_and_endpoints() {
+        let meta = WeightsMeta {
+            version: 5,
+            tensors: vec![
+                TensorMeta {
+                    index: 0,
+                    content_version: 3,
+                    dtype: DType::F32,
+                    shape: vec![4, 4],
+                    bytes: 64,
+                },
+                TensorMeta {
+                    index: 1,
+                    content_version: 5,
+                    dtype: DType::I32,
+                    shape: vec![],
+                    bytes: 4,
+                },
+            ],
+            endpoints: vec![Some("127.0.0.1:7741".into()), None],
+        };
+        match roundtrip_resp(ServiceResponse::WeightsMeta(meta.clone())) {
+            ServiceResponse::WeightsMeta(got) => assert_eq!(got, meta),
+            _ => panic!("wrong variant"),
+        }
+        match roundtrip_req(ServiceRequest::SubscribeWeightsMeta {
+            subscriber: "w-3".into(),
+            min_version: 4,
+            timeout_ms: 250,
+        }) {
+            ServiceRequest::SubscribeWeightsMeta {
+                subscriber,
+                min_version,
+                timeout_ms,
+            } => {
+                assert_eq!(subscriber, "w-3");
+                assert_eq!(min_version, 4);
+                assert_eq!(timeout_ms, 250);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn fetch_tensors_roundtrips_bitwise() {
+        match roundtrip_req(ServiceRequest::FetchTensors {
+            version: 7,
+            indices: vec![0, 3, 9],
+        }) {
+            ServiceRequest::FetchTensors { version, indices } => {
+                assert_eq!(version, 7);
+                assert_eq!(indices, vec![0, 3, 9]);
+            }
+            _ => panic!("wrong variant"),
+        }
+        let t = Arc::new(
+            HostTensor::from_f32(
+                vec![3],
+                &[-0.0, f32::NEG_INFINITY, 1.5],
+            )
+            .unwrap(),
+        );
+        match roundtrip_resp(ServiceResponse::Tensors {
+            version: 7,
+            entries: vec![(3, 6, t.clone())],
+        }) {
+            ServiceResponse::Tensors { version, entries } => {
+                assert_eq!(version, 7);
+                assert_eq!(entries.len(), 1);
+                let (idx, cv, got) = &entries[0];
+                assert_eq!((*idx, *cv), (3, 6));
+                assert_eq!(got.shape, t.shape);
+                let xs = got.as_f32().unwrap();
+                assert_eq!(xs[0].to_bits(), (-0.0f32).to_bits());
+                assert_eq!(xs[1], f32::NEG_INFINITY);
+                assert_eq!(xs[2], 1.5);
+            }
             _ => panic!("wrong variant"),
         }
     }

@@ -28,12 +28,13 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Result};
 
 use super::column::{Column, GlobalIndex, Value};
 use super::unit::{RemoteUnit, UnitCallError, UnitHandle};
+use crate::runtime::HostTensor;
 
 /// A write that became visible — broadcast payload for the control plane.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -44,12 +45,29 @@ pub struct WriteNotification {
     pub token_len: Option<usize>,
 }
 
+/// Weight tensors fanned out to this unit by the coordinator
+/// (`UnitRequest::PutTensors`): manifest index → (content version,
+/// tensor). The cache is a *best-effort replica* of the published
+/// snapshot — workers that miss here fall back to the coordinator's
+/// `fetch_tensors` verb, so the cache may lag or be empty without
+/// affecting correctness, only coordinator load.
+#[derive(Default)]
+struct WeightCache {
+    /// Highest snapshot version pushed so far (guards reordered pushes).
+    version: u64,
+    /// Manifest tensor count of that snapshot (a change means the model
+    /// was re-architected; stale entries are dropped wholesale).
+    total: usize,
+    entries: HashMap<u32, (u64, Arc<HostTensor>)>,
+}
+
 /// One storage shard.
 pub struct StorageUnit {
     pub unit_id: usize,
     rows: RwLock<HashMap<GlobalIndex, HashMap<Column, Value>>>,
     bytes_written: AtomicU64,
     bytes_read: AtomicU64,
+    weights: Mutex<WeightCache>,
 }
 
 impl StorageUnit {
@@ -60,6 +78,7 @@ impl StorageUnit {
             rows: RwLock::new(HashMap::new()),
             bytes_written: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
+            weights: Mutex::new(WeightCache::default()),
         }
     }
 
@@ -175,6 +194,60 @@ impl StorageUnit {
     /// Cumulative payload bytes read from this unit.
     pub fn bytes_read(&self) -> u64 {
         self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    /// Merge a weight-plane push into the cache. Pushes for a snapshot
+    /// older than the cached one are dropped (fan-out can reorder);
+    /// a manifest-size change empties the cache first, because entry
+    /// indices from a differently shaped model are meaningless.
+    pub fn install_weights(
+        &self,
+        version: u64,
+        total: usize,
+        updates: Vec<(u32, u64, Arc<HostTensor>)>,
+    ) {
+        let mut g = self.weights.lock().unwrap();
+        if version < g.version {
+            return;
+        }
+        if total != g.total {
+            g.entries.clear();
+            g.total = total;
+        }
+        g.version = version;
+        for (idx, cv, t) in updates {
+            g.entries.insert(idx, (cv, t));
+        }
+    }
+
+    /// Serve cached weight tensors by `(manifest index, content
+    /// version)`. An entry answers only on an *exact* content-version
+    /// match — the content version identifies the bytes, so anything
+    /// else is a miss the caller resolves via coordinator fallback.
+    pub fn fetch_weights(
+        &self,
+        wants: &[(u32, u64)],
+    ) -> Vec<Option<Arc<HostTensor>>> {
+        let g = self.weights.lock().unwrap();
+        wants
+            .iter()
+            .map(|(idx, cv)| {
+                g.entries
+                    .get(idx)
+                    .filter(|(have, _)| have == cv)
+                    .map(|(_, t)| t.clone())
+            })
+            .collect()
+    }
+
+    /// Highest snapshot version pushed into the weight cache.
+    pub fn weights_version(&self) -> u64 {
+        self.weights.lock().unwrap().version
+    }
+
+    /// Number of cached weight tensors.
+    pub fn weights_cached(&self) -> usize {
+        self.weights.lock().unwrap().entries.len()
     }
 }
 
@@ -314,6 +387,17 @@ impl DataPlane {
         self.slots
             .iter()
             .map(|s| s.remote().and_then(|r| r.endpoint()))
+            .collect()
+    }
+
+    /// Remote units currently attached, with their slot ids. The
+    /// weight plane fans parameter pushes out over these; a slot with
+    /// no remote is simply skipped (its shard is coordinator-local).
+    pub fn attached_remotes(&self) -> Vec<(usize, Arc<RemoteUnit>)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.remote().map(|r| (i, r)))
             .collect()
     }
 

@@ -12,11 +12,13 @@
 //! reply per request, strictly in order per connection.
 
 use std::io::{Read, Write};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use super::column::{Column, GlobalIndex, Value};
 use super::data_plane::WriteNotification;
+use crate::runtime::{DType, HostTensor};
 
 /// Upper bound on a single frame. Generous (a 256-token row is ~1 KiB)
 /// but finite, so a corrupt length prefix cannot trigger an unbounded
@@ -98,6 +100,19 @@ fn put_value(buf: &mut Vec<u8>, v: &Value) {
             put_str(buf, s);
         }
     }
+}
+
+/// Encode one tensor: `u8 dtype code ‖ u32 rank ‖ u64 dims… ‖ u32
+/// data-len ‖ raw little-endian bytes`. The payload bytes ride verbatim,
+/// so f32 bit patterns (NaN payloads included) survive exactly.
+fn put_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
+    buf.push(t.dtype.code());
+    put_u32(buf, t.shape.len() as u32);
+    for d in &t.shape {
+        put_u64(buf, *d as u64);
+    }
+    put_u32(buf, t.data.len() as u32);
+    buf.extend_from_slice(&t.data);
 }
 
 /// Decoding cursor over a frame body.
@@ -192,6 +207,31 @@ impl<'a> Cursor<'a> {
         })
     }
 
+    /// Bounded tensor decode (inverse of [`put_tensor`]). Shape/length
+    /// consistency is verified with checked arithmetic *before* any
+    /// allocation-by-shape, so corrupt dims can neither overflow nor
+    /// reserve more than the frame actually carries.
+    fn tensor(&mut self) -> Result<HostTensor> {
+        let dtype = DType::from_code(self.u8()?)?;
+        let rank = self.count()?;
+        let mut shape = Vec::with_capacity(rank.min(64));
+        for _ in 0..rank {
+            shape.push(self.u64()? as usize);
+        }
+        let len = self.count()?;
+        let want = shape
+            .iter()
+            .try_fold(dtype.size_bytes(), |acc, &d| acc.checked_mul(d))
+            .filter(|&w| w == len)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "tensor shape {shape:?} disagrees with {len} data bytes"
+                )
+            })?;
+        let data = self.take(want)?.to_vec();
+        HostTensor::new(dtype, shape, data)
+    }
+
     fn done(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             bail!(
@@ -226,6 +266,21 @@ pub enum UnitRequest {
     Scan,
     /// Occupancy and traffic counters.
     Stats,
+    /// Weight-plane fan-out: the coordinator pushes the tensors that
+    /// changed in snapshot `version` (each tagged with its manifest
+    /// index and content version) into the unit's weight cache. `total`
+    /// is the full manifest tensor count, so the unit can detect a
+    /// re-architected model and drop stale entries.
+    PutTensors {
+        version: u64,
+        total: u32,
+        updates: Vec<(u32, u64, Arc<HostTensor>)>,
+    },
+    /// Weight-plane pull: a worker asks for tensors by `(manifest
+    /// index, content version)`. The unit answers each entry only on an
+    /// exact content-version hit — a content version *identifies* the
+    /// bytes, so there is no almost-right answer.
+    FetchTensors { wants: Vec<(u32, u64)> },
 }
 
 /// Per-unit occupancy/traffic snapshot.
@@ -246,6 +301,11 @@ pub enum UnitReply {
     /// Cell inventory (payloads elided — metadata only).
     Cells(Vec<WriteNotification>),
     Stats(UnitStatsSnapshot),
+    /// One entry per requested `(index, content version)`, in request
+    /// order; `None` when the cache has no exact-version match (the
+    /// caller falls back to the coordinator). `Arc`ed so serving and
+    /// receiving share tensors with caches instead of copying them.
+    Tensors(Vec<Option<Arc<HostTensor>>>),
     /// The unit rejected the operation (application error, e.g. a
     /// duplicate write) — distinct from a transport failure.
     Err(String),
@@ -257,6 +317,8 @@ const REQ_HAS: u8 = 3;
 const REQ_EVICT: u8 = 4;
 const REQ_SCAN: u8 = 5;
 const REQ_STATS: u8 = 6;
+const REQ_PUT_TENSORS: u8 = 7;
+const REQ_FETCH_TENSORS: u8 = 8;
 
 const REP_OK: u8 = 1;
 const REP_BOOL: u8 = 2;
@@ -264,6 +326,7 @@ const REP_ROWS: u8 = 3;
 const REP_CELLS: u8 = 4;
 const REP_STATS: u8 = 5;
 const REP_ERR: u8 = 6;
+const REP_TENSORS: u8 = 7;
 
 fn put_indices(buf: &mut Vec<u8>, indices: &[GlobalIndex]) {
     put_u32(buf, indices.len() as u32);
@@ -314,6 +377,25 @@ impl UnitRequest {
             }
             UnitRequest::Scan => buf.push(REQ_SCAN),
             UnitRequest::Stats => buf.push(REQ_STATS),
+            UnitRequest::PutTensors { version, total, updates } => {
+                buf.push(REQ_PUT_TENSORS);
+                put_u64(&mut buf, *version);
+                put_u32(&mut buf, *total);
+                put_u32(&mut buf, updates.len() as u32);
+                for (idx, cv, t) in updates {
+                    put_u32(&mut buf, *idx);
+                    put_u64(&mut buf, *cv);
+                    put_tensor(&mut buf, t);
+                }
+            }
+            UnitRequest::FetchTensors { wants } => {
+                buf.push(REQ_FETCH_TENSORS);
+                put_u32(&mut buf, wants.len() as u32);
+                for (idx, cv) in wants {
+                    put_u32(&mut buf, *idx);
+                    put_u64(&mut buf, *cv);
+                }
+            }
         }
         buf
     }
@@ -349,6 +431,27 @@ impl UnitRequest {
             REQ_EVICT => UnitRequest::Evict { indices: read_indices(&mut c)? },
             REQ_SCAN => UnitRequest::Scan,
             REQ_STATS => UnitRequest::Stats,
+            REQ_PUT_TENSORS => {
+                let version = c.u64()?;
+                let total = c.u32()?;
+                let n = c.count()?;
+                let mut updates = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let idx = c.u32()?;
+                    let cv = c.u64()?;
+                    updates.push((idx, cv, Arc::new(c.tensor()?)));
+                }
+                UnitRequest::PutTensors { version, total, updates }
+            }
+            REQ_FETCH_TENSORS => {
+                let n = c.count()?;
+                let mut wants = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let idx = c.u32()?;
+                    wants.push((idx, c.u64()?));
+                }
+                UnitRequest::FetchTensors { wants }
+            }
             t => bail!("unknown unit request tag {t}"),
         };
         c.done()?;
@@ -403,6 +506,19 @@ impl UnitReply {
                 put_u64(&mut buf, s.bytes_written);
                 put_u64(&mut buf, s.bytes_read);
             }
+            UnitReply::Tensors(items) => {
+                buf.push(REP_TENSORS);
+                put_u32(&mut buf, items.len() as u32);
+                for item in items {
+                    match item {
+                        None => buf.push(0),
+                        Some(t) => {
+                            buf.push(1);
+                            put_tensor(&mut buf, t);
+                        }
+                    }
+                }
+            }
             UnitReply::Err(msg) => {
                 buf.push(REP_ERR);
                 put_str(&mut buf, msg);
@@ -456,6 +572,18 @@ impl UnitReply {
                 bytes_written: c.u64()?,
                 bytes_read: c.u64()?,
             }),
+            REP_TENSORS => {
+                let n = c.count()?;
+                let mut items = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    match c.u8()? {
+                        0 => items.push(None),
+                        1 => items.push(Some(Arc::new(c.tensor()?))),
+                        t => bail!("bad tensor presence tag {t}"),
+                    }
+                }
+                UnitReply::Tensors(items)
+            }
             REP_ERR => UnitReply::Err(c.str()?),
             t => bail!("unknown unit reply tag {t}"),
         };
@@ -617,5 +745,73 @@ mod tests {
         let mut fetch = vec![REQ_FETCH];
         fetch.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(UnitRequest::decode(&fetch).is_err());
+    }
+
+    #[test]
+    fn tensor_messages_roundtrip_bit_exactly() {
+        let nan = f32::from_bits(0x7FC0_0001);
+        let t = HostTensor::from_f32(
+            vec![2, 2],
+            &[1.0, nan, f32::NEG_INFINITY, -0.0],
+        )
+        .unwrap();
+        let i =
+            HostTensor::from_i32(vec![3], &[i32::MIN, 0, i32::MAX]).unwrap();
+        let put = UnitRequest::PutTensors {
+            version: 9,
+            total: 3,
+            updates: vec![
+                (0, 7, Arc::new(t.clone())),
+                (2, 9, Arc::new(i.clone())),
+            ],
+        };
+        // HostTensor equality compares raw bytes, so this covers NaN
+        // payloads and the sign of -0.0 exactly.
+        assert_eq!(roundtrip_req(put.clone()), put);
+        let fetch =
+            UnitRequest::FetchTensors { wants: vec![(0, 7), (5, 2)] };
+        assert_eq!(roundtrip_req(fetch.clone()), fetch);
+        let rep = UnitReply::Tensors(vec![
+            Some(Arc::new(HostTensor::scalar_f32(0.5))),
+            None,
+            Some(Arc::new(i)),
+        ]);
+        assert_eq!(roundtrip_rep(rep.clone()), rep);
+    }
+
+    #[test]
+    fn malformed_tensor_frames_rejected_without_panicking() {
+        let header = |updates: u32| -> Vec<u8> {
+            let mut b = vec![REQ_PUT_TENSORS];
+            b.extend_from_slice(&1u64.to_le_bytes()); // version
+            b.extend_from_slice(&1u32.to_le_bytes()); // total
+            b.extend_from_slice(&updates.to_le_bytes());
+            b.extend_from_slice(&0u32.to_le_bytes()); // tensor index
+            b.extend_from_slice(&1u64.to_le_bytes()); // content version
+            b
+        };
+        // Unknown dtype code.
+        let mut bad = header(1);
+        bad.push(9);
+        assert!(UnitRequest::decode(&bad).is_err());
+        // Shape disagrees with the carried byte count.
+        let mut bad = header(1);
+        bad.push(0); // f32
+        bad.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+        bad.extend_from_slice(&3u64.to_le_bytes()); // dim 3 (wants 12 B)
+        bad.extend_from_slice(&4u32.to_le_bytes()); // but only 4 carried
+        bad.extend_from_slice(&[0; 4]);
+        assert!(UnitRequest::decode(&bad).is_err());
+        // Overflowing dims must fail cleanly, not wrap or allocate.
+        let mut bad = header(1);
+        bad.push(0);
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&u64::MAX.to_le_bytes());
+        bad.extend_from_slice(&u64::MAX.to_le_bytes());
+        bad.extend_from_slice(&4u32.to_le_bytes());
+        bad.extend_from_slice(&[0; 4]);
+        assert!(UnitRequest::decode(&bad).is_err());
+        // Truncated tensor list: claims one update, body missing.
+        assert!(UnitRequest::decode(&header(1)).is_err());
     }
 }

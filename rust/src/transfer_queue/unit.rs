@@ -23,6 +23,8 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
+use crate::runtime::HostTensor;
+
 use super::column::{Column, GlobalIndex, Value};
 use super::data_plane::{StorageUnit, WriteNotification};
 use super::frame::{
@@ -86,6 +88,23 @@ pub trait UnitHandle: Send + Sync {
     fn scan(&self) -> Result<Vec<WriteNotification>, UnitCallError>;
 
     fn stats(&self) -> Result<UnitStatsSnapshot, UnitCallError>;
+
+    /// Weight-plane push: install `updates` (manifest index, content
+    /// version, tensor) from snapshot `version` of a `total`-tensor
+    /// model into the unit's weight cache.
+    fn put_tensors(
+        &self,
+        version: u64,
+        total: u32,
+        updates: &[(u32, u64, Arc<HostTensor>)],
+    ) -> Result<(), UnitCallError>;
+
+    /// Weight-plane fetch: one entry per `(manifest index, content
+    /// version)` want, in request order; `None` on a cache miss.
+    fn fetch_tensors(
+        &self,
+        wants: &[(u32, u64)],
+    ) -> Result<Vec<Option<Arc<HostTensor>>>, UnitCallError>;
 }
 
 // ===========================================================================
@@ -165,6 +184,23 @@ impl UnitHandle for LocalUnit {
             bytes_written: self.store.bytes_written(),
             bytes_read: self.store.bytes_read(),
         })
+    }
+
+    fn put_tensors(
+        &self,
+        version: u64,
+        total: u32,
+        updates: &[(u32, u64, Arc<HostTensor>)],
+    ) -> Result<(), UnitCallError> {
+        self.store.install_weights(version, total as usize, updates.to_vec());
+        Ok(())
+    }
+
+    fn fetch_tensors(
+        &self,
+        wants: &[(u32, u64)],
+    ) -> Result<Vec<Option<Arc<HostTensor>>>, UnitCallError> {
+        Ok(self.store.fetch_weights(wants))
     }
 }
 
@@ -335,6 +371,39 @@ impl UnitHandle for RemoteUnit {
             ))),
         }
     }
+
+    fn put_tensors(
+        &self,
+        version: u64,
+        total: u32,
+        updates: &[(u32, u64, Arc<HostTensor>)],
+    ) -> Result<(), UnitCallError> {
+        // Cloning `updates` clones Arcs, not tensor payloads — the
+        // fan-out loop over N units stays O(model) total, not O(N·model).
+        self.expect_ok(&UnitRequest::PutTensors {
+            version,
+            total,
+            updates: updates.to_vec(),
+        })
+    }
+
+    fn fetch_tensors(
+        &self,
+        wants: &[(u32, u64)],
+    ) -> Result<Vec<Option<Arc<HostTensor>>>, UnitCallError> {
+        match self.call(&UnitRequest::FetchTensors {
+            wants: wants.to_vec(),
+        })? {
+            UnitReply::Tensors(items) if items.len() == wants.len() => {
+                Ok(items)
+            }
+            UnitReply::Err(m) => Err(UnitCallError::Rejected(m)),
+            other => Err(UnitCallError::Transport(format!(
+                "unit {} sent an unexpected reply {other:?}",
+                self.endpoint
+            ))),
+        }
+    }
 }
 
 // ===========================================================================
@@ -495,6 +564,13 @@ fn apply_unit_request(
             bytes_written: store.bytes_written(),
             bytes_read: store.bytes_read(),
         }),
+        UnitRequest::PutTensors { version, total, updates } => {
+            store.install_weights(version, total as usize, updates);
+            UnitReply::Ok
+        }
+        UnitRequest::FetchTensors { wants } => {
+            UnitReply::Tensors(store.fetch_weights(&wants))
+        }
     }
 }
 
@@ -569,6 +645,34 @@ mod tests {
 
         remote.evict(&[GlobalIndex(0)]).unwrap();
         assert_eq!(remote.stats().unwrap().rows, 1);
+        server.stop();
+    }
+
+    #[test]
+    fn weight_cache_round_trips_over_the_wire() {
+        let (server, remote) = served_unit();
+        let a = Arc::new(
+            HostTensor::from_f32(vec![2, 2], &[1.0, -0.0, 3.5, -7.25])
+                .unwrap(),
+        );
+        let b = Arc::new(HostTensor::from_i32(vec![3], &[-1, 0, 7]).unwrap());
+        remote
+            .put_tensors(3, 2, &[(0, 3, a.clone()), (1, 1, b.clone())])
+            .unwrap();
+
+        // Exact-content-version hits; a stale content version misses.
+        let got = remote.fetch_tensors(&[(0, 3), (1, 1), (1, 2)]).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].as_deref(), Some(&*a));
+        assert_eq!(got[1].as_deref(), Some(&*b));
+        assert!(got[2].is_none());
+
+        // A manifest-size change clears stale entries.
+        remote.put_tensors(4, 1, &[(0, 4, b.clone())]).unwrap();
+        let got = remote.fetch_tensors(&[(0, 4), (1, 1)]).unwrap();
+        assert_eq!(got[0].as_deref(), Some(&*b));
+        assert!(got[1].is_none());
+        assert_eq!(server.store().weights_version(), 4);
         server.stop();
     }
 

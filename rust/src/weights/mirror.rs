@@ -1,0 +1,301 @@
+//! Worker-side weight mirror: the poll → diff → fetch → assemble engine
+//! behind delta-aware parameter sync.
+//!
+//! A [`WeightMirror`] holds the worker's current [`ParamSet`] and, on
+//! [`WeightMirror::sync`], long-polls the coordinator for a newer
+//! manifest ([`super::WeightsMeta`] — a few bytes per tensor), computes
+//! which tensors are stale by content version, and pulls only those:
+//! binary frames from the storage-unit endpoints the manifest names,
+//! with a via-coordinator `fetch_tensors` fallback for misses and dead
+//! units. Unchanged tensors are shared by `Arc` from the previous
+//! snapshot — an unchanged-tensor republish costs metadata only.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{HostTensor, ParamSet};
+use crate::service::ServiceClient;
+use crate::transfer_queue::{RemoteUnit, UnitHandle};
+
+use super::{TensorMeta, WeightsMeta};
+
+/// Per-request payload budget when fetching from units: stale tensors
+/// are grouped so one round-trip carries at most this many bytes
+/// (groups rotate across endpoints, spreading a big delta over the
+/// whole fan-out tier).
+const FETCH_CHUNK_BYTES: u64 = 8 * 1024 * 1024;
+
+/// How many manifest re-reads a single sync tolerates before giving up:
+/// each retry means a publish landed mid-fetch (content versions moved
+/// under us), which converges fast or not at all.
+const MAX_VERSION_RACES: usize = 4;
+
+/// A worker's local replica of the published weights.
+pub struct WeightMirror {
+    id: String,
+    current: ParamSet,
+    /// Lazily dialed binary connections, by endpoint. A transport
+    /// failure drops the connection; the tensors fall back through the
+    /// coordinator and the endpoint is re-dialed on its next turn.
+    conns: HashMap<String, Arc<RemoteUnit>>,
+}
+
+impl WeightMirror {
+    /// An empty mirror (version 0, no tensors) identified as `id` in
+    /// the coordinator's subscriber ledger.
+    pub fn new(id: impl Into<String>) -> Self {
+        WeightMirror {
+            id: id.into(),
+            current: ParamSet::new(0, vec![]),
+            conns: HashMap::new(),
+        }
+    }
+
+    /// Treat an empty mirror as already holding snapshot `version`
+    /// (with no tensors). For engines constructed with weights at a
+    /// known version: the first sync then fires only on something
+    /// *newer* — like the legacy `subscribe_weights` path — at the
+    /// cost of a full fetch when it does (the tensor-count mismatch
+    /// marks everything stale). No-op once the mirror holds tensors.
+    pub fn assume_version(&mut self, version: u64) {
+        if self.current.tensors.is_empty()
+            && version > self.current.version
+        {
+            self.current = ParamSet::new(version, vec![]);
+        }
+    }
+
+    /// Snapshot version currently held.
+    pub fn version(&self) -> u64 {
+        self.current.version
+    }
+
+    /// The currently held snapshot.
+    pub fn current(&self) -> &ParamSet {
+        &self.current
+    }
+
+    /// Poll for weights newer than what the mirror holds, long-polling
+    /// up to `timeout_ms` (0 = pure poll). Returns the fresh snapshot
+    /// when one was installed, `None` when nothing newer exists.
+    pub fn sync(
+        &mut self,
+        client: &ServiceClient,
+        timeout_ms: u64,
+    ) -> Result<Option<ParamSet>> {
+        let Some(mut meta) = client.subscribe_weights_meta(
+            &self.id,
+            self.current.version,
+            timeout_ms,
+        )?
+        else {
+            return Ok(None);
+        };
+        for _race in 0..MAX_VERSION_RACES {
+            validate(&meta)?;
+            if let Some(fresh) = self.try_assemble(client, &meta)? {
+                self.current = fresh.clone();
+                return Ok(Some(fresh));
+            }
+            // A publish landed mid-fetch and some content version we
+            // wanted no longer exists anywhere — re-read the manifest
+            // (pure poll: it is strictly newer than what we hold).
+            match client.subscribe_weights_meta(
+                &self.id,
+                self.current.version,
+                0,
+            )? {
+                Some(m) => meta = m,
+                None => return Ok(None),
+            }
+        }
+        bail!(
+            "weight sync did not converge after {MAX_VERSION_RACES} \
+             manifest races (publishes are outpacing the fetch)"
+        );
+    }
+
+    /// One assembly attempt against a fixed manifest. `None` means a
+    /// wanted tensor was missing from both its unit and the coordinator
+    /// — a version race; the caller re-reads the manifest.
+    fn try_assemble(
+        &mut self,
+        client: &ServiceClient,
+        meta: &WeightsMeta,
+    ) -> Result<Option<ParamSet>> {
+        let n = meta.tensors.len();
+        let same_shape = self.current.tensors.len() == n;
+        let mut slots: Vec<Option<Arc<HostTensor>>> = vec![None; n];
+        let mut stale: Vec<&TensorMeta> = Vec::new();
+        for (i, m) in meta.tensors.iter().enumerate() {
+            if same_shape
+                && m.content_version == self.current.content_version(i)
+            {
+                slots[i] = Some(self.current.tensors[i].clone());
+            } else {
+                stale.push(m);
+            }
+        }
+
+        // Binary fetch from the fan-out tier, chunked by byte budget.
+        let endpoints: Vec<&String> =
+            meta.endpoints.iter().flatten().collect();
+        let mut missing: Vec<u32> = Vec::new();
+        for (k, wants) in chunk_wants(&stale).into_iter().enumerate() {
+            let mut served = false;
+            if let Some(ep) = endpoints
+                .get(k % endpoints.len().max(1))
+                .map(|e| e.as_str())
+            {
+                let conn = self
+                    .conns
+                    .entry(ep.to_string())
+                    .or_insert_with(|| Arc::new(RemoteUnit::new(ep)))
+                    .clone();
+                match conn.fetch_tensors(&wants) {
+                    Ok(items) => {
+                        served = true;
+                        for ((idx, _cv), item) in wants.iter().zip(items)
+                        {
+                            match item {
+                                Some(t) => {
+                                    slots[*idx as usize] = Some(t)
+                                }
+                                None => missing.push(*idx),
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        // Dead unit: drop the connection, relay this
+                        // chunk through the coordinator.
+                        self.conns.remove(ep);
+                    }
+                }
+            }
+            if !served {
+                missing.extend(wants.iter().map(|(i, _)| *i));
+            }
+        }
+
+        // Coordinator fallback. Content versions identify bytes, so an
+        // entry is usable iff its version matches the manifest — even
+        // when the server has already published past `meta.version`.
+        if !missing.is_empty() {
+            for (idx, cv, t) in
+                client.fetch_tensors(meta.version, &missing)?
+            {
+                let i = idx as usize;
+                if i < n && meta.tensors[i].content_version == cv {
+                    slots[i] = Some(t);
+                }
+            }
+        }
+
+        let Some(tensors) =
+            slots.into_iter().collect::<Option<Vec<_>>>()
+        else {
+            return Ok(None);
+        };
+        let cvs: Vec<u64> =
+            meta.tensors.iter().map(|m| m.content_version).collect();
+        Ok(Some(ParamSet::with_content_versions(
+            meta.version,
+            tensors,
+            cvs,
+        )))
+    }
+}
+
+/// Group stale tensors into ≤ [`FETCH_CHUNK_BYTES`] requests (a tensor
+/// bigger than the budget gets a chunk of its own).
+fn chunk_wants(stale: &[&TensorMeta]) -> Vec<Vec<(u32, u64)>> {
+    let mut groups: Vec<Vec<(u32, u64)>> = Vec::new();
+    let mut cur: Vec<(u32, u64)> = Vec::new();
+    let mut cur_bytes = 0u64;
+    for m in stale {
+        if !cur.is_empty()
+            && cur_bytes.saturating_add(m.bytes) > FETCH_CHUNK_BYTES
+        {
+            groups.push(std::mem::take(&mut cur));
+            cur_bytes = 0;
+        }
+        cur.push((m.index, m.content_version));
+        cur_bytes = cur_bytes.saturating_add(m.bytes);
+    }
+    if !cur.is_empty() {
+        groups.push(cur);
+    }
+    groups
+}
+
+/// Reject manifests whose indices do not match their positions — the
+/// mirror addresses slots by position, so a scrambled manifest would
+/// install tensors at the wrong offsets.
+fn validate(meta: &WeightsMeta) -> Result<()> {
+    for (i, m) in meta.tensors.iter().enumerate() {
+        if m.index as usize != i {
+            bail!(
+                "malformed weights manifest: tensor {} labeled index {}",
+                i,
+                m.index
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::DType;
+
+    fn meta(bytes: &[u64]) -> Vec<TensorMeta> {
+        bytes
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| TensorMeta {
+                index: i as u32,
+                content_version: 1,
+                dtype: DType::F32,
+                shape: vec![b as usize / 4],
+                bytes: b,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chunking_respects_the_byte_budget() {
+        let metas = meta(&[
+            FETCH_CHUNK_BYTES - 8,
+            16,
+            FETCH_CHUNK_BYTES + 1, // oversized: its own chunk
+            4,
+            4,
+        ]);
+        let refs: Vec<&TensorMeta> = metas.iter().collect();
+        let groups = chunk_wants(&refs);
+        assert_eq!(
+            groups,
+            vec![
+                vec![(0, 1)],
+                vec![(1, 1)],
+                vec![(2, 1)],
+                vec![(3, 1), (4, 1)],
+            ]
+        );
+    }
+
+    #[test]
+    fn scrambled_manifest_is_rejected() {
+        let mut m = WeightsMeta {
+            version: 1,
+            tensors: meta(&[4, 4]),
+            endpoints: vec![],
+        };
+        assert!(validate(&m).is_ok());
+        m.tensors[1].index = 5;
+        assert!(validate(&m).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Weight distribution plane — delta-aware, binary, fanned out.
+//!
+//! The paper's §4.2.2 deferred parameter update moves new policy weights
+//! from the Trainer to every rollout instance once per iteration; at
+//! scale that transfer is the single largest control-plane payload in
+//! the system. This module gives it a dedicated plane instead of riding
+//! the JSONL snapshot verb:
+//!
+//! * **Delta manifests.** [`crate::runtime::ParamSet`] tracks a *content
+//!   version* per tensor (`ParamSet::rebase_onto`, applied centrally by
+//!   `ParamStore::try_publish`). A publish therefore knows exactly which
+//!   tensors changed, and [`WeightsMeta`] describes the whole model in a
+//!   few bytes per tensor — subscribers long-poll the tiny manifest and
+//!   pull only stale tensors.
+//! * **Binary transport.** Tensor payloads travel over the storage-unit
+//!   frame codec (`transfer_queue::frame`): length-prefixed, bit-exact
+//!   f32s, bounded decode. JSON never touches a tensor on this path.
+//! * **Fan-out.** The coordinator pushes changed tensors to every
+//!   attached storage unit at publish time; workers fetch from the units
+//!   and fall back through the coordinator (`fetch_tensors` verb) for
+//!   misses — the same availability-over-purity failover the sample
+//!   data plane uses.
+//!
+//! [`WeightMirror`] is the worker-side engine (poll → diff → fetch →
+//! assemble); [`WeightPlane`] is the coordinator-side ledger
+//! (subscriber lag, bytes shipped full vs delta).
+
+pub mod mirror;
+pub mod plane;
+
+pub use mirror::WeightMirror;
+pub use plane::WeightPlane;
+
+use std::sync::Arc;
+
+use crate::runtime::{DType, HostTensor, ParamSet};
+
+/// Wire metadata for one tensor of the published manifest: everything a
+/// subscriber needs to decide staleness and budget the fetch, at a few
+/// dozen bytes per tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    /// Position in the manifest (== position in `ParamSet::tensors`).
+    pub index: u32,
+    /// Version of the publish that last changed this tensor's bytes.
+    pub content_version: u64,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Payload size (chunking budget; never trusted for allocation).
+    pub bytes: u64,
+}
+
+/// The delta manifest a `subscribe_weights_meta` long-poll returns:
+/// snapshot version, per-tensor content versions, and the storage-unit
+/// endpoints serving the binary payloads (`None` = slot has no attached
+/// unit; fetch via the coordinator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightsMeta {
+    pub version: u64,
+    pub tensors: Vec<TensorMeta>,
+    pub endpoints: Vec<Option<String>>,
+}
+
+impl WeightsMeta {
+    /// Describe `params` as a wire manifest.
+    pub fn describe(
+        params: &ParamSet,
+        endpoints: Vec<Option<String>>,
+    ) -> Self {
+        WeightsMeta {
+            version: params.version,
+            tensors: params
+                .tensors
+                .iter()
+                .enumerate()
+                .map(|(i, t)| TensorMeta {
+                    index: i as u32,
+                    content_version: params.content_version(i),
+                    dtype: t.dtype,
+                    shape: t.shape.clone(),
+                    bytes: t.size_bytes() as u64,
+                })
+                .collect(),
+            endpoints,
+        }
+    }
+
+    /// Indices a mirror holding `have` must refetch to reach this
+    /// manifest. A tensor-count mismatch (re-architected model) makes
+    /// everything stale.
+    pub fn stale_indices(&self, have: &ParamSet) -> Vec<u32> {
+        let full = have.tensors.len() != self.tensors.len();
+        self.tensors
+            .iter()
+            .filter(|m| {
+                full || m.content_version
+                    != have.content_version(m.index as usize)
+            })
+            .map(|m| m.index)
+            .collect()
+    }
+
+    /// Total payload bytes behind `indices` (fetch budgeting).
+    pub fn bytes_for(&self, indices: &[u32]) -> u64 {
+        indices
+            .iter()
+            .filter_map(|&i| self.tensors.get(i as usize))
+            .map(|m| m.bytes)
+            .sum()
+    }
+}
+
+/// The tensors of `params` that changed in its own publish (content
+/// version == snapshot version) — the delta the coordinator fans out to
+/// units. Arc clones only; payloads are shared.
+pub fn delta_updates(
+    params: &ParamSet,
+) -> Vec<(u32, u64, Arc<HostTensor>)> {
+    params
+        .tensors
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| params.content_version(*i) == params.version)
+        .map(|(i, t)| (i as u32, params.content_version(i), t.clone()))
+        .collect()
+}
+
+/// Every tensor of `params` (the at-attach seeding push: a fresh unit
+/// has no history, so it gets the whole snapshot).
+pub fn full_updates(
+    params: &ParamSet,
+) -> Vec<(u32, u64, Arc<HostTensor>)> {
+    params
+        .tensors
+        .iter()
+        .enumerate()
+        .map(|(i, t)| (i as u32, params.content_version(i), t.clone()))
+        .collect()
+}
+
+/// One subscriber's progress through the published snapshots (the
+/// version it reported holding on its latest meta poll).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubscriberLag {
+    pub id: String,
+    /// Snapshot version the subscriber last reported holding.
+    pub version: u64,
+}
+
+/// Weight-plane slice of the `stats` verb: published state, per-path
+/// byte ledgers, and subscriber lag.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WeightPlaneStats {
+    /// Latest published snapshot version.
+    pub published_version: u64,
+    /// Tensors in the published manifest.
+    pub tensors: usize,
+    /// Tensor-payload bytes shipped as full JSONL snapshots
+    /// (`subscribe_weights`, the legacy path).
+    pub full_payload_bytes: u64,
+    /// Tensor-payload bytes shipped through the coordinator's binary
+    /// fallback (`fetch_tensors` verb).
+    pub delta_payload_bytes: u64,
+    /// Tensor-payload bytes pushed to attached storage units at
+    /// publish/attach time (the fan-out legs).
+    pub unit_push_bytes: u64,
+    /// Known subscribers and the snapshot version each last reported.
+    pub subscribers: Vec<SubscriberLag>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(xs: &[f32]) -> HostTensor {
+        HostTensor::from_f32(vec![xs.len()], xs).unwrap()
+    }
+
+    #[test]
+    fn manifest_diff_finds_exactly_the_changed_tensors() {
+        let v1 = ParamSet::new(1, vec![t(&[1.0]), t(&[2.0]), t(&[3.0])]);
+        let v2 = ParamSet::new(2, vec![t(&[1.0]), t(&[9.0]), t(&[3.0])])
+            .rebase_onto(&v1);
+        let meta = WeightsMeta::describe(&v2, vec![None]);
+        assert_eq!(meta.version, 2);
+        assert_eq!(meta.stale_indices(&v1), vec![1]);
+        assert_eq!(meta.stale_indices(&v2), Vec::<u32>::new());
+        // Tensor-count change ⇒ everything is stale.
+        let reshaped = ParamSet::new(0, vec![t(&[0.0])]);
+        assert_eq!(meta.stale_indices(&reshaped), vec![0, 1, 2]);
+        assert_eq!(meta.bytes_for(&[1]), 4);
+    }
+
+    #[test]
+    fn delta_updates_carry_only_this_publishes_tensors() {
+        let v1 = ParamSet::new(1, vec![t(&[1.0]), t(&[2.0])]);
+        let v2 = ParamSet::new(2, vec![t(&[1.0]), t(&[5.0])])
+            .rebase_onto(&v1);
+        let delta = delta_updates(&v2);
+        assert_eq!(delta.len(), 1);
+        assert_eq!(delta[0].0, 1);
+        assert_eq!(delta[0].1, 2);
+        assert_eq!(full_updates(&v2).len(), 2);
+        // An untouched republish has an empty delta: metadata only.
+        let v3 = ParamSet::new(3, vec![t(&[1.0]), t(&[5.0])])
+            .rebase_onto(&v2);
+        assert!(delta_updates(&v3).is_empty());
+    }
+}

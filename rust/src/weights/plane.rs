@@ -1,0 +1,110 @@
+//! Coordinator-side weight-plane ledger: who is subscribed, how far
+//! behind each subscriber is, and how many tensor-payload bytes each
+//! distribution path has shipped. Pure bookkeeping — the dispatch code
+//! in `service::Session` feeds it; the `stats` verb and
+//! `asyncflow info` read it.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::{SubscriberLag, WeightPlaneStats};
+
+/// Shared ledger for the weight distribution plane. Cheap to update on
+/// the hot path: counters are atomics, the subscriber map is touched
+/// once per (long-poll) meta request.
+#[derive(Default)]
+pub struct WeightPlane {
+    /// subscriber id → snapshot version it last reported holding.
+    subscribers: Mutex<BTreeMap<String, u64>>,
+    full_payload_bytes: AtomicU64,
+    delta_payload_bytes: AtomicU64,
+    unit_push_bytes: AtomicU64,
+}
+
+impl WeightPlane {
+    pub fn new() -> Self {
+        WeightPlane::default()
+    }
+
+    /// Record that `id` polled the manifest while holding `version`.
+    pub fn note_subscriber(&self, id: &str, version: u64) {
+        self.subscribers
+            .lock()
+            .unwrap()
+            .insert(id.to_string(), version);
+    }
+
+    /// Account tensor bytes shipped as a full JSONL snapshot.
+    pub fn add_full_bytes(&self, n: u64) {
+        self.full_payload_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Account tensor bytes shipped through the coordinator's
+    /// `fetch_tensors` fallback.
+    pub fn add_delta_bytes(&self, n: u64) {
+        self.delta_payload_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Account tensor bytes pushed to attached storage units.
+    pub fn add_unit_push_bytes(&self, n: u64) {
+        self.unit_push_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Snapshot the ledger for the `stats` verb.
+    pub fn stats(
+        &self,
+        published_version: u64,
+        tensors: usize,
+    ) -> WeightPlaneStats {
+        WeightPlaneStats {
+            published_version,
+            tensors,
+            full_payload_bytes: self.full_payload_bytes.load(Ordering::Relaxed),
+            delta_payload_bytes: self
+                .delta_payload_bytes
+                .load(Ordering::Relaxed),
+            unit_push_bytes: self.unit_push_bytes.load(Ordering::Relaxed),
+            subscribers: self
+                .subscribers
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(id, v)| SubscriberLag {
+                    id: id.clone(),
+                    version: *v,
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_tracks_subscribers_and_bytes() {
+        let plane = WeightPlane::new();
+        plane.note_subscriber("w0", 0);
+        plane.note_subscriber("w1", 2);
+        plane.note_subscriber("w0", 3);
+        plane.add_full_bytes(100);
+        plane.add_delta_bytes(25);
+        plane.add_unit_push_bytes(50);
+        plane.add_delta_bytes(5);
+        let s = plane.stats(3, 4);
+        assert_eq!(s.published_version, 3);
+        assert_eq!(s.tensors, 4);
+        assert_eq!(s.full_payload_bytes, 100);
+        assert_eq!(s.delta_payload_bytes, 30);
+        assert_eq!(s.unit_push_bytes, 50);
+        assert_eq!(
+            s.subscribers,
+            vec![
+                SubscriberLag { id: "w0".into(), version: 3 },
+                SubscriberLag { id: "w1".into(), version: 2 },
+            ]
+        );
+    }
+}

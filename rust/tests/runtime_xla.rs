@@ -207,7 +207,7 @@ fn params_checkpoint_roundtrip_through_rust_writer() {
     let pairs: Vec<(String, HostTensor)> = names
         .iter()
         .cloned()
-        .zip(params.tensors.iter().cloned())
+        .zip(params.tensors.iter().map(|t| (**t).clone()))
         .collect();
     asyncflow::runtime::artifacts::write_params_bin(&path, &pairs).unwrap();
     let back = asyncflow::runtime::artifacts::read_params_bin(&path).unwrap();

@@ -105,7 +105,10 @@ fn tcp_round_trips_full_grpo_experience_flow() {
         .unwrap();
     let got = client.subscribe_weights(0, 2000).unwrap().unwrap();
     assert_eq!(got.version, 1);
-    assert_eq!(*got.tensors, tensors, "weights survive the wire");
+    assert_eq!(got.tensors.len(), tensors.len());
+    for (g, want) in got.tensors.iter().zip(&tensors) {
+        assert_eq!(**g, *want, "weights survive the wire");
+    }
     assert!(
         client.subscribe_weights(1, 0).unwrap().is_none(),
         "no-change poll elides the snapshot payload"

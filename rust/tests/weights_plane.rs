@@ -1,0 +1,259 @@
+//! Weight distribution plane, end to end: binary tensor codec
+//! robustness, delta manifests over the service boundary, storage-unit
+//! fan-out with kill-a-unit failover, and the metadata-only republish
+//! guarantee.
+
+use std::sync::Arc;
+
+use asyncflow::runtime::{HostTensor, ParamSet};
+use asyncflow::service::{
+    ServiceClient, Session, SessionSpec, TcpJsonlServer,
+};
+use asyncflow::transfer_queue::{
+    Column, StorageUnit, TaskSpec, UnitReply, UnitRequest, UnitServer,
+};
+use asyncflow::weights::WeightMirror;
+
+/// Deterministic xorshift so the property sweep is reproducible.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+}
+
+fn f32_tensor(shape: Vec<usize>, rng: &mut Rng) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let vals: Vec<f32> = (0..n)
+        .map(|i| match i % 5 {
+            // Exercise the bit patterns JSON cannot carry exactly.
+            0 => f32::from_bits(0x7fc0_0123), // NaN with payload
+            1 => -0.0,
+            2 => f32::NEG_INFINITY,
+            _ => (rng.next() as i32 as f32) * 1e-3,
+        })
+        .collect();
+    HostTensor::from_f32(shape, &vals).unwrap()
+}
+
+fn i32_tensor(shape: Vec<usize>, rng: &mut Rng) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let vals: Vec<i32> = (0..n).map(|_| rng.next() as i32).collect();
+    HostTensor::from_i32(shape, &vals).unwrap()
+}
+
+#[test]
+fn tensor_frames_roundtrip_across_dtypes_and_shapes() {
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![],
+        vec![1],
+        vec![7],
+        vec![2, 2],
+        vec![1, 2, 3],
+        vec![5, 1, 4],
+        vec![0],
+        vec![3, 0, 2],
+    ];
+    let mut rng = Rng(0x5eed_f00d);
+    let makers: [fn(Vec<usize>, &mut Rng) -> HostTensor; 2] =
+        [f32_tensor, i32_tensor];
+    for (cv, shape) in shapes.iter().enumerate() {
+        for make in makers {
+            let t = Arc::new(make(shape.clone(), &mut rng));
+            let req = UnitRequest::PutTensors {
+                version: 9,
+                total: shapes.len() as u32,
+                updates: vec![(cv as u32, cv as u64, t.clone())],
+            };
+            let back = UnitRequest::decode(&req.encode()).unwrap();
+            assert_eq!(back, req, "request roundtrip for shape {shape:?}");
+            let reply = UnitReply::Tensors(vec![Some(t), None]);
+            let back = UnitReply::decode(&reply.encode()).unwrap();
+            assert_eq!(back, reply, "reply roundtrip for shape {shape:?}");
+        }
+    }
+}
+
+#[test]
+fn corrupt_tensor_frames_are_rejected_not_panicked() {
+    let mut rng = Rng(42);
+    let t = Arc::new(f32_tensor(vec![4, 3], &mut rng));
+    let frame = UnitRequest::PutTensors {
+        version: 1,
+        total: 1,
+        updates: vec![(0, 1, t.clone())],
+    }
+    .encode();
+    // Every truncation either errors or never panics; it must not
+    // round-trip to the original (the full frame is consumed exactly).
+    for cut in 0..frame.len() {
+        assert!(
+            UnitRequest::decode(&frame[..cut]).is_err(),
+            "truncation at {cut}/{} must be rejected",
+            frame.len()
+        );
+    }
+    // Trailing garbage is rejected too (a frame is one message).
+    let mut long = frame.clone();
+    long.push(0);
+    assert!(UnitRequest::decode(&long).is_err());
+    // Single-byte corruption anywhere must never panic. (It may still
+    // decode — flipping a payload byte yields a different valid
+    // tensor — but sizes and counts are bounds-checked.)
+    for i in 0..frame.len() {
+        let mut bad = frame.clone();
+        bad[i] ^= 0xff;
+        let _ = UnitRequest::decode(&bad);
+    }
+    // Same sweep for the reply side.
+    let reply = UnitReply::Tensors(vec![Some(t)]).encode();
+    for cut in 0..reply.len() {
+        assert!(UnitReply::decode(&reply[..cut]).is_err());
+    }
+    for i in 0..reply.len() {
+        let mut bad = reply.clone();
+        bad[i] ^= 0xff;
+        let _ = UnitReply::decode(&bad);
+    }
+}
+
+fn weights_session() -> Arc<Session> {
+    Arc::new(
+        Session::init_engines(
+            SessionSpec {
+                storage_units: 1,
+                tasks: vec![TaskSpec::new(
+                    "rollout",
+                    vec![Column::Prompts],
+                )],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    )
+}
+
+fn params(version: u64, seed: u64) -> ParamSet {
+    let mut rng = Rng(seed);
+    ParamSet::new(
+        version,
+        vec![
+            f32_tensor(vec![8, 4], &mut rng),
+            i32_tensor(vec![16], &mut rng),
+            f32_tensor(vec![3], &mut rng),
+        ],
+    )
+}
+
+fn assert_same_tensors(a: &ParamSet, b: &ParamSet) {
+    assert_eq!(a.tensors.len(), b.tensors.len());
+    for (x, y) in a.tensors.iter().zip(b.tensors.iter()) {
+        assert_eq!(**x, **y, "tensor bytes must match");
+    }
+}
+
+#[test]
+fn weight_sync_fails_over_when_the_unit_dies() {
+    let session = weights_session();
+    let server =
+        TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0)).unwrap();
+    let admin = ServiceClient::in_proc(session.clone());
+
+    // One storage unit carries the fan-out tier.
+    let store = Arc::new(StorageUnit::new(0));
+    let unit = UnitServer::bind(store.clone(), ("127.0.0.1", 0)).unwrap();
+    admin
+        .attach_unit(0, &format!("127.0.0.1:{}", unit.port()))
+        .unwrap();
+
+    // Publish v1: the delta (here: everything) is pushed to the unit.
+    let v1 = params(1, 7);
+    admin.weight_sync_notify(v1.clone()).unwrap();
+    assert_eq!(store.weights_version(), 1, "publish fans out to the unit");
+    assert_eq!(store.weights_cached(), 3);
+
+    let client =
+        ServiceClient::connect(("127.0.0.1", server.port())).unwrap();
+    let mut mirror = WeightMirror::new("w0");
+    let got = mirror.sync(&client, 1000).unwrap().unwrap();
+    assert_eq!(got.version, 1);
+    assert_same_tensors(&got, &v1);
+
+    // Kill the unit, then publish v2 changing one tensor. The publish
+    // itself must survive the dead unit (push is best-effort), and the
+    // mirror must converge through the coordinator fallback.
+    unit.stop();
+    let mut tensors: Vec<Arc<HostTensor>> =
+        v1.tensors.iter().cloned().collect();
+    tensors[2] = Arc::new(
+        HostTensor::from_f32(vec![3], &[1.0, 2.0, 3.0]).unwrap(),
+    );
+    let v2 = ParamSet::with_content_versions(
+        2,
+        tensors,
+        vec![2, 2, 2], // try_publish rebases; inputs need no history
+    );
+    admin.weight_sync_notify(v2.clone()).unwrap();
+
+    let got = mirror.sync(&client, 1000).unwrap().unwrap();
+    assert_eq!(got.version, 2, "worker converges despite the dead unit");
+    assert_eq!(mirror.version(), 2);
+    assert_same_tensors(&got, &v2);
+    // Only the changed tensor was refetched; unchanged ones are shared
+    // with the previous snapshot by Arc.
+    let w = admin.stats().unwrap().weights.unwrap();
+    assert_eq!(w.published_version, 2);
+    assert!(
+        w.delta_payload_bytes > 0,
+        "fallback fetch rides the coordinator ledger"
+    );
+    server.stop();
+}
+
+#[test]
+fn unchanged_republish_ships_metadata_only() {
+    let session = weights_session();
+    let client = ServiceClient::in_proc(session.clone());
+
+    let v1 = params(1, 11);
+    client.weight_sync_notify(v1.clone()).unwrap();
+    let mut mirror = WeightMirror::new("w0");
+    let first = mirror.sync(&client, 0).unwrap().unwrap();
+    assert_eq!(first.version, 1);
+    let after_first =
+        client.stats().unwrap().weights.unwrap().delta_payload_bytes;
+    assert_eq!(
+        after_first,
+        v1.size_bytes() as u64,
+        "cold mirror pulls the full model once (no units attached: all \
+         bytes ride the coordinator fallback)"
+    );
+
+    // Republish byte-identical tensors at a new version: the manifest
+    // moves, the payload does not.
+    client.weight_sync_notify(params(2, 11)).unwrap();
+    let second = mirror.sync(&client, 0).unwrap().unwrap();
+    assert_eq!(second.version, 2);
+    assert_same_tensors(&second, &v1);
+    for (a, b) in first.tensors.iter().zip(second.tensors.iter()) {
+        assert!(
+            Arc::ptr_eq(a, b),
+            "unchanged tensors are shared, not recopied"
+        );
+    }
+    let w = client.stats().unwrap().weights.unwrap();
+    assert_eq!(
+        w.delta_payload_bytes, after_first,
+        "republish shipped zero tensor payload bytes"
+    );
+    assert_eq!(w.full_payload_bytes, 0, "legacy full path never used");
+    assert_eq!(w.subscribers.len(), 1);
+    assert_eq!(w.subscribers[0].id, "w0");
+    assert_eq!(w.subscribers[0].version, 1, "lag from the latest poll");
+}
