@@ -1,0 +1,188 @@
+//! A minimal traced run: a TCP rollout worker streams chunked
+//! responses into a served session while the driver grades and
+//! consumes them, then the merged telemetry snapshot is rendered as
+//! Chrome trace-event JSON — the scripted version of
+//! `asyncflow trace --connect HOST:PORT --out trace.json`.
+//!
+//! Open the output in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing` for the paper's Fig. 11 timeline built from
+//! live spans: one track per process, the lease→chunk→put chain
+//! linked by a shared trace id, and a complete per-sample lineage
+//! (leased → first/last chunk → reward → advantage → train).
+//!
+//! ```sh
+//! cargo run --release --example traced_run [trace.json]
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+use asyncflow::rollout::{run_worker, WorkerOptions};
+use asyncflow::runtime::{MockEngine, ParamSet, Sampler};
+use asyncflow::service::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec, TcpJsonlServer,
+};
+use asyncflow::telemetry::{self, chrome_trace, SpanLog};
+use asyncflow::transfer_queue::{Column, TaskSpec, Value};
+
+const N: usize = 16;
+const ENGINE_BATCH: usize = 4;
+const PROMPT_LEN: usize = 8;
+const MAX_LEN: usize = 24;
+
+fn main() -> Result<()> {
+    // The demo must trace regardless of ASYNCFLOW_TELEMETRY.
+    telemetry::set_enabled(Some(true));
+
+    let session = Arc::new(Session::init_engines(
+        SessionSpec {
+            storage_units: 1,
+            tasks: vec![
+                TaskSpec::new("rollout", vec![Column::Prompts]),
+                TaskSpec::new("grade", vec![Column::Responses]),
+                TaskSpec::new(
+                    "train_feed",
+                    vec![
+                        Column::Responses,
+                        Column::Rewards,
+                        Column::Advantages,
+                    ],
+                ),
+            ],
+        },
+        ParamSet::new(0, vec![]),
+    )?);
+    let server = TcpJsonlServer::bind(session, ("127.0.0.1", 0))?;
+    let port = server.port();
+    println!(
+        "== traced run: {N} prompts through a TCP worker on \
+         127.0.0.1:{port}, telemetry on =="
+    );
+
+    let coord = ServiceClient::connect(("127.0.0.1", port))?;
+    coord.put_batch(
+        (0..N)
+            .map(|i| {
+                PutRow::new(vec![(
+                    Column::Prompts,
+                    Value::I32s(vec![i as i32 + 1; PROMPT_LEN]),
+                )])
+            })
+            .collect(),
+    )?;
+
+    // The worker "process": its own span log, its own socket. The
+    // final `push_telemetry` inside `run_worker` ships its spans to
+    // the coordinator under the process name "w0".
+    let worker = std::thread::spawn(move || {
+        telemetry::install_thread_log(Some(Arc::new(
+            SpanLog::default(),
+        )));
+        let client = ServiceClient::connect(("127.0.0.1", port))?;
+        let mut engine =
+            MockEngine::new(ENGINE_BATCH, PROMPT_LEN, MAX_LEN);
+        let mut sampler = Sampler::new(1.0, 32, 11);
+        let mut opts = WorkerOptions::new("w0");
+        opts.chunk_tokens = 4;
+        let report = run_worker(
+            &client,
+            &mut engine,
+            &mut sampler,
+            &opts,
+            None,
+            None,
+            &|| false,
+        );
+        telemetry::install_thread_log(None);
+        report
+    });
+
+    // Driver loop: grade finished responses (reward + advantage cells
+    // complete the lineage chain), then consume `train_feed` — the
+    // train-side pop closes each row's lineage and feeds the
+    // staleness histogram.
+    let grade_spec = GetBatchSpec {
+        task: "grade".into(),
+        group: 0,
+        columns: vec![Column::Responses],
+        count: ENGINE_BATCH,
+        min: 1,
+        timeout_ms: 50,
+        consumer: None,
+    };
+    let train_spec = GetBatchSpec {
+        task: "train_feed".into(),
+        group: 0,
+        columns: vec![Column::Responses, Column::Advantages],
+        count: ENGINE_BATCH,
+        min: 1,
+        timeout_ms: 50,
+        consumer: None,
+    };
+    let mut trained = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while trained < N {
+        if Instant::now() >= deadline {
+            bail!("stalled at {trained}/{N} trained rows");
+        }
+        if let GetBatchReply::Ready(b) = coord.get_batch(&grade_spec)?
+        {
+            let rows = b
+                .indices
+                .iter()
+                .zip(&b.rows)
+                .map(|(idx, row)| {
+                    let len = row[0].as_i32s().unwrap().len() as f32;
+                    PutRow::at(*idx, vec![
+                        (Column::Rewards, Value::F32(len)),
+                        (Column::Advantages, Value::F32(len - 1.0)),
+                    ])
+                })
+                .collect();
+            coord.put_batch(rows)?;
+        }
+        match coord.get_batch(&train_spec)? {
+            GetBatchReply::Ready(b) => trained += b.indices.len(),
+            GetBatchReply::NotReady => {}
+            other => bail!("unexpected reply: {other:?}"),
+        }
+    }
+    coord.shutdown()?;
+    let report = worker.join().expect("worker thread")?;
+    println!(
+        "worker w0: {} samples, {} tokens in {} chunks",
+        report.samples, report.tokens, report.chunks
+    );
+
+    // `asyncflow trace --connect` in miniature: pull the merged
+    // snapshot and render it for Perfetto.
+    let snap = coord.export_telemetry(None)?;
+    telemetry::set_enabled(None);
+    let out = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "trace.json".into());
+    std::fs::write(&out, chrome_trace(&snap).to_string().as_bytes())
+        .with_context(|| format!("writing {out}"))?;
+
+    for p in &snap.procs {
+        println!("  process {:<12} {} spans", p.proc, p.spans.len());
+    }
+    let complete =
+        snap.lineage.iter().filter(|r| r.complete()).count();
+    println!(
+        "  lineage: {complete}/{} rows complete; wrote {out}",
+        snap.lineage.len()
+    );
+    assert!(
+        snap.procs
+            .iter()
+            .any(|p| p.proc == "w0" && !p.spans.is_empty()),
+        "worker process pushed no spans"
+    );
+    assert_eq!(complete, N, "every trained row has a complete chain");
+
+    server.stop();
+    Ok(())
+}

@@ -10,8 +10,14 @@
 //! still-decoding tail. Reported: time-to-first-trainable-sample and
 //! end-to-end makespan (decode + downstream consume).
 //!
+//! A final pair of streaming legs measures the telemetry plane's
+//! overhead — identical runs with span/lineage capture forced off and
+//! on — and records the samples/s regression as `BENCH_telemetry.json`
+//! (CI smoke-checks it at ≤5%).
+//!
 //! ```sh
-//! cargo bench --bench streaming_rollout
+//! cargo bench --bench streaming_rollout            # full sweep
+//! cargo bench --bench streaming_rollout -- --smoke # CI smoke mode
 //! ```
 
 use std::sync::Arc;
@@ -24,7 +30,9 @@ use asyncflow::service::{
     GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
     SessionSpec,
 };
+use asyncflow::telemetry;
 use asyncflow::transfer_queue::{Column, TaskSpec, Value};
+use asyncflow::util::json::Json;
 
 const BATCH: usize = 8;
 const PROMPT_LEN: usize = 8;
@@ -191,6 +199,8 @@ fn run_mode(streaming: bool, workers: usize, n: usize) -> RunStats {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("ASYNCFLOW_BENCH_SMOKE").is_ok();
     println!("== streaming rollout vs whole-sequence baseline ==");
     println!(
         "geometry: batch={BATCH}, budget={} tokens, decode {:?}/token, \
@@ -203,7 +213,9 @@ fn main() {
         "{:<26} {:>10} {:>10} {:>12} {:>12}",
         "case", "t_first", "e2e", "thr (rows/s)", "speedup"
     );
-    for (workers, n) in [(1usize, 32usize), (2, 64)] {
+    let cases: &[(usize, usize)] =
+        if smoke { &[(1, 32)] } else { &[(1, 32), (2, 64)] };
+    for &(workers, n) in cases {
         let base = run_mode(false, workers, n);
         let stream = run_mode(true, workers, n);
         let row = |label: &str, s: &RunStats, speedup: String| {
@@ -232,4 +244,43 @@ fn main() {
         );
         println!();
     }
+
+    // Telemetry overhead: the same streaming run with span/lineage
+    // capture forced off, then on. Spans land in the process-global
+    // ring and lineage rows in the session, so the delta is the whole
+    // bookkeeping cost on the hot path. Best-of-two per leg damps
+    // scheduler noise; CI smoke-checks the recorded regression at ≤5%.
+    let (workers, n) = if smoke { (1usize, 32usize) } else { (2, 64) };
+    let best_e2e = |on: bool| {
+        telemetry::set_enabled(Some(on));
+        (0..2)
+            .map(|_| run_mode(true, workers, n).e2e_s)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let off_s = best_e2e(false);
+    let on_s = best_e2e(true);
+    telemetry::set_enabled(None);
+    let thr_off = n as f64 / off_s;
+    let thr_on = n as f64 / on_s;
+    let regression_pct = 100.0 * (1.0 - thr_on / thr_off);
+    println!(
+        "telemetry overhead ({workers}w x {n} rows, streaming): \
+         off {thr_off:.1} rows/s, on {thr_on:.1} rows/s, \
+         regression {regression_pct:.2}%"
+    );
+    let out = Json::obj(vec![
+        ("bench", Json::Str("streaming_rollout_telemetry".into())),
+        (
+            "mode",
+            Json::Str(if smoke { "smoke" } else { "full" }.into()),
+        ),
+        ("workers", Json::Num(workers as f64)),
+        ("rows", Json::Num(n as f64)),
+        ("samples_per_s_off", Json::Num(thr_off)),
+        ("samples_per_s_on", Json::Num(thr_on)),
+        ("regression_pct", Json::Num(regression_pct)),
+    ]);
+    std::fs::write("BENCH_telemetry.json", out.to_string_pretty())
+        .expect("write BENCH_telemetry.json");
+    println!("wrote BENCH_telemetry.json");
 }

@@ -23,6 +23,11 @@ impl Span {
 /// Thread-safe span recorder with a shared epoch.
 pub struct Timeline {
     start: Instant,
+    /// Wall clock (µs since the UNIX epoch) at `start` — anchors
+    /// bridged spans onto the cross-process telemetry time axis.
+    epoch_us: u64,
+    /// Mirror recorded spans into the thread's telemetry span log.
+    bridge: bool,
     spans: Mutex<Vec<Span>>,
 }
 
@@ -34,7 +39,33 @@ impl Default for Timeline {
 
 impl Timeline {
     pub fn new() -> Self {
-        Timeline { start: Instant::now(), spans: Mutex::new(Vec::new()) }
+        Self::build(false)
+    }
+
+    /// A timeline that also mirrors every recorded span into this
+    /// thread's telemetry [`crate::telemetry::SpanLog`], anchored to
+    /// the wall clock at construction — live pipeline runs use this so
+    /// stage phases (`train_step`, `grade`, ...) land in `asyncflow
+    /// trace` without double bookkeeping at the call sites.
+    /// Virtual-clock users (the simulator) must stay on [`Timeline::new`]:
+    /// bridging would pin simulated times onto the real epoch.
+    pub fn anchored() -> Self {
+        Self::build(true)
+    }
+
+    fn build(bridge: bool) -> Self {
+        Timeline {
+            start: Instant::now(),
+            epoch_us: crate::telemetry::now_us(),
+            bridge,
+            spans: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Whether recorded spans are mirrored into the telemetry log
+    /// (instrumented code can skip recording the same span twice).
+    pub fn bridges_telemetry(&self) -> bool {
+        self.bridge
     }
 
     pub fn now(&self) -> f64 {
@@ -45,6 +76,15 @@ impl Timeline {
     /// which has its own virtual clock).
     pub fn record(&self, worker: &str, phase: &str, t0: f64, t1: f64) {
         assert!(t1 >= t0, "span ends before it starts: {t0} > {t1}");
+        if self.bridge {
+            crate::telemetry::record_span(
+                phase,
+                worker,
+                crate::telemetry::current_trace(),
+                self.epoch_us + (t0 * 1e6) as u64,
+                self.epoch_us + (t1 * 1e6) as u64,
+            );
+        }
         self.spans.lock().unwrap().push(Span {
             worker: worker.to_string(),
             phase: phase.to_string(),
@@ -190,6 +230,26 @@ mod tests {
         let spans = tl.spans();
         assert_eq!(spans.len(), 1);
         assert!(spans[0].t1 >= spans[0].t0);
+    }
+
+    #[test]
+    fn anchored_timeline_mirrors_spans_into_telemetry() {
+        let _g = crate::telemetry::test_enable_gate();
+        let log = std::sync::Arc::new(crate::telemetry::SpanLog::new(8));
+        crate::telemetry::install_thread_log(Some(log.clone()));
+        crate::telemetry::set_enabled(Some(true));
+        let tl = Timeline::anchored();
+        assert!(tl.bridges_telemetry());
+        tl.record("w0", "train_step", 0.5, 1.0);
+        crate::telemetry::set_enabled(None);
+        crate::telemetry::install_thread_log(None);
+        let spans = log.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "train_step");
+        assert_eq!(spans[0].track, "w0");
+        assert_eq!(spans[0].dur_us, 500_000);
+        assert!(spans[0].t0_us > 0, "anchored to the wall clock");
+        assert!(!Timeline::new().bridges_telemetry());
     }
 
     #[test]

@@ -88,6 +88,9 @@ pub struct TrainReport {
     pub final_reward: f64,
     pub metrics: Arc<Registry>,
     pub timeline: Arc<Timeline>,
+    /// Merged telemetry (spans, lineage, staleness histograms) drained
+    /// at run end — render with [`crate::telemetry::chrome_trace`].
+    pub telemetry: crate::telemetry::TelemetrySnapshot,
 }
 
 impl TrainReport {
@@ -150,8 +153,12 @@ impl Trainer {
         let Trainer { cfg, engines, session } = self;
         let spec = build_spec(&cfg, engines)?;
         let runner =
-            PipelineRunner::new(ServiceClient::in_proc(session));
+            PipelineRunner::new(ServiceClient::in_proc(session.clone()));
         let report = runner.run(spec)?;
+        // Drain the merged telemetry (bridged timeline spans, lineage,
+        // staleness histograms) into the report so in-process runs get
+        // a Perfetto-exportable trace without a server round-trip.
+        let telemetry = session.export_telemetry(None)?;
 
         let metrics = report.metrics;
         let final_reward = metrics
@@ -166,6 +173,7 @@ impl Trainer {
             final_reward,
             metrics,
             timeline: report.timeline,
+            telemetry,
         })
     }
 }
@@ -343,8 +351,13 @@ mod tests {
         }
     }
 
+    // Trainer::run drains the process-global span log at export time,
+    // so every test that runs a pipeline holds the telemetry gate —
+    // otherwise a concurrent run could steal the spans
+    // `telemetry_lineage_closes_for_every_trained_sample` asserts on.
     #[test]
     fn full_pipeline_runs_to_completion_async() {
+        let _g = crate::telemetry::test_enable_gate();
         let cfg = quick_cfg(3, 1);
         let engines = mock_engines(2, 8, 16, 48);
         let report = Trainer::new(cfg, engines).unwrap().run().unwrap();
@@ -356,6 +369,7 @@ mod tests {
 
     #[test]
     fn full_pipeline_runs_sync_mode() {
+        let _g = crate::telemetry::test_enable_gate();
         let cfg = quick_cfg(2, 0);
         let engines = mock_engines(1, 8, 16, 48);
         let report = Trainer::new(cfg, engines).unwrap().run().unwrap();
@@ -365,6 +379,7 @@ mod tests {
 
     #[test]
     fn weight_swaps_happen_in_async_mode() {
+        let _g = crate::telemetry::test_enable_gate();
         let cfg = quick_cfg(4, 1);
         let engines = mock_engines(2, 8, 16, 48);
         let report = Trainer::new(cfg, engines).unwrap().run().unwrap();
@@ -376,6 +391,7 @@ mod tests {
 
     #[test]
     fn timeline_captures_all_stages() {
+        let _g = crate::telemetry::test_enable_gate();
         let cfg = quick_cfg(2, 1);
         let engines = mock_engines(2, 8, 16, 48);
         let report = Trainer::new(cfg, engines).unwrap().run().unwrap();
@@ -391,7 +407,50 @@ mod tests {
     }
 
     #[test]
+    fn telemetry_lineage_closes_for_every_trained_sample() {
+        let _g = crate::telemetry::test_enable_gate();
+        crate::telemetry::set_enabled(Some(true));
+        let cfg = quick_cfg(2, 1);
+        let engines = mock_engines(2, 8, 16, 48);
+        let report = Trainer::new(cfg, engines).unwrap().run().unwrap();
+        crate::telemetry::set_enabled(None);
+        assert_eq!(report.samples_trained, 32);
+        let snap = &report.telemetry;
+        // Every trained sample's chain closed:
+        // leased → chunks → reward → advantage → train.
+        assert_eq!(snap.lineage.len(), 32);
+        assert!(snap.lineage.iter().all(|r| r.complete()));
+        assert!(snap.lineage.iter().all(|r| r.trace != 0));
+        let coord = &snap.procs[0];
+        assert_eq!(coord.proc, "coordinator");
+        assert_eq!(
+            coord
+                .counters
+                .iter()
+                .find(|(n, _)| n == "lineage.trained")
+                .map(|(_, v)| *v),
+            Some(32)
+        );
+        // The staleness histogram aggregated one sample per trained row.
+        let (_, stale) = coord
+            .hists
+            .iter()
+            .find(|(n, _)| n == "staleness_versions")
+            .expect("staleness histogram exported");
+        assert_eq!(stale.count, 32);
+        // Bridged timeline spans reached the span log (global log is
+        // process-shared under the parallel test runner, so assert
+        // presence, not exact counts).
+        assert!(coord
+            .spans
+            .iter()
+            .any(|s| s.name == "train_step" && s.track == "update"));
+        assert!(coord.spans.iter().any(|s| s.name == "generate"));
+    }
+
+    #[test]
     fn service_stats_visible_during_and_after_run() {
+        let _g = crate::telemetry::test_enable_gate();
         let cfg = quick_cfg(2, 1);
         let engines = mock_engines(2, 8, 16, 48);
         let trainer = Trainer::new(cfg, engines).unwrap();
@@ -412,6 +471,7 @@ mod tests {
     #[test]
     fn pipeline_runs_with_remote_storage_unit_attached() {
         use crate::transfer_queue::{StorageUnit, UnitServer};
+        let _g = crate::telemetry::test_enable_gate();
         let cfg = quick_cfg(2, 1);
         let engines = mock_engines(1, 8, 16, 48);
         let trainer = Trainer::new(cfg, engines).unwrap();
@@ -441,6 +501,7 @@ mod tests {
 
     #[test]
     fn best_of_n_pipeline_trains_on_survivors_only() {
+        let _g = crate::telemetry::test_enable_gate();
         let mut cfg = quick_cfg(2, 1);
         cfg.pipeline = "best_of_n".into();
         cfg.survivors = 2;

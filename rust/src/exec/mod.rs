@@ -74,7 +74,7 @@ impl WorkerPool {
                 if let Err(e) = &result {
                     // Surface failures immediately — a silently dead
                     // worker stalls the streaming pipeline.
-                    eprintln!("worker {name2:?} failed: {e:#}");
+                    crate::log_warn!(&name2, "worker failed: {e:#}");
                 }
                 result
             })

@@ -56,10 +56,12 @@ pub fn build_engines(cfg: &RlConfig, mock: bool) -> Result<(EngineSet, usize)> {
     // (factories re-load it in their own threads).
     let manifest = Manifest::load(&dir)?;
     if manifest.preset != cfg.preset {
-        eprintln!(
-            "warning: artifacts are preset {:?}, config wants {:?} — \
-             using artifacts",
-            manifest.preset, cfg.preset
+        crate::log_warn!(
+            "launcher",
+            "artifacts are preset {:?}, config wants {:?} — using \
+             artifacts",
+            manifest.preset,
+            cfg.preset
         );
     }
     let initial = ParamSet::new(0, manifest.load_params()?);

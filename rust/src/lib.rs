@@ -27,6 +27,8 @@
 //! * [`service`] — §5 service-oriented user interface.
 //! * [`weights`] — §4.2 weight distribution plane: delta manifests,
 //!   binary tensor fan-out through storage units, client mirrors.
+//! * [`telemetry`] — distributed telemetry plane: cross-process trace
+//!   spans, per-sample lineage, Chrome-trace export, leveled logging.
 //! * [`data`] — synthetic verifiable math workload + tokenizer.
 
 pub mod benchkit;
@@ -43,6 +45,7 @@ pub mod rollout;
 pub mod runtime;
 pub mod service;
 pub mod simulator;
+pub mod telemetry;
 pub mod transfer_queue;
 pub mod util;
 pub mod weights;

@@ -23,10 +23,16 @@
 //! * `plan`     — resource planner (paper §4.3).
 //! * `gantt`    — simulated execution timeline (Fig. 11).
 //! * `info`     — artifact bundle + PJRT platform info, or (with
-//!   `--connect`) a live service's queue/unit/worker statistics.
+//!   `--connect`) a live service's queue/unit/worker statistics plus
+//!   staleness/latency histograms and per-sample lineage counts.
+//! * `trace`    — drain a live service's merged telemetry (coordinator
+//!   spans + everything workers/stages/units pushed) as Chrome
+//!   trace-event JSON for Perfetto / `chrome://tracing` (Fig. 11 from
+//!   a real distributed run).
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -44,12 +50,14 @@ use asyncflow::service::{
     ServiceClient, Session, SessionSpec, TcpJsonlServer,
 };
 use asyncflow::simulator::{simulate, Mode, SimConfig};
+use asyncflow::telemetry::chrome_trace;
 use asyncflow::transfer_queue::{StorageUnit, UnitServer};
+use asyncflow::{log_info, log_warn};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = dispatch(&args) {
-        eprintln!("error: {e:#}");
+        log_warn!("cli", "{e:#}");
         std::process::exit(1);
     }
 }
@@ -105,6 +113,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "plan" => cmd_plan(&flags),
         "gantt" => cmd_gantt(&flags),
         "info" => cmd_info(&flags),
+        "trace" => cmd_trace(&flags),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -145,7 +154,11 @@ COMMANDS:
             --iterations N
   plan      --devices N --model {7b|32b}
   gantt     --devices N --model {7b|32b} --mode ... --width N
-  info      [--connect HOST:PORT]  (live queue/unit/worker stats)
+  info      [--connect HOST:PORT]  (live queue/unit/worker stats plus
+            staleness / time-to-first-chunk histograms and lineage)
+  trace     --connect HOST:PORT [--out FILE]
+            (drain merged telemetry as Chrome trace-event JSON; load
+             the output in Perfetto — one lane per process/stage)
 ";
 
 fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize)
@@ -196,8 +209,9 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     cfg.survivors = get_usize(flags, "survivors", cfg.survivors)?;
     let mock = flags.contains_key("mock");
     let (engines, _b) = build_engines(&cfg, mock)?;
-    println!(
-        "[train] pipeline={} iterations={} global_batch={} staleness={} \
+    log_info!(
+        "train",
+        "pipeline={} iterations={} global_batch={} staleness={} \
          workers={} backend={}",
         cfg.pipeline,
         cfg.iterations,
@@ -240,9 +254,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     };
     let server =
         TcpJsonlServer::bind(session, ("0.0.0.0", port))?;
-    println!(
-        "[serve] asyncflow service listening on {} (JSONL protocol; \
-         see DESIGN.md §Wire protocol)",
+    log_info!(
+        "serve",
+        "asyncflow service listening on {} (JSONL protocol; see \
+         DESIGN.md §Wire protocol)",
         server.local_addr()
     );
     server.join();
@@ -277,9 +292,9 @@ fn cmd_rollout_worker(flags: &HashMap<String, String>) -> Result<()> {
         get_usize(flags, "seed", std::process::id() as usize)? as u64;
     let mut sampler = Sampler::new(1.0, 32, seed);
     let client = ServiceClient::connect(addr.as_str())?;
-    println!(
-        "[rollout-worker] {name}: attached to {addr} (backend={}, \
-         chunk={} tokens, ttl={}ms)",
+    log_info!(
+        &name,
+        "attached to {addr} (backend={}, chunk={} tokens, ttl={}ms)",
         if mock { "mock" } else { "xla-pjrt" },
         opts.chunk_tokens,
         opts.ttl_ms
@@ -345,9 +360,10 @@ fn cmd_stage(flags: &HashMap<String, String>) -> Result<()> {
         .cloned()
         .unwrap_or_else(|| format!("{which}-{}", std::process::id()));
     let client = ServiceClient::connect(addr.as_str())?;
-    println!(
-        "[stage] {name}: attached to {addr} (stage {which}, task {:?}, \
-         batch {}, lease ttl {}ms)",
+    log_info!(
+        &name,
+        "attached to {addr} (stage {which}, task {:?}, batch {}, \
+         lease ttl {}ms)",
         input.task, input.count, input.lease_ttl_ms
     );
     let metrics = run_remote_stage(
@@ -420,12 +436,22 @@ fn cmd_storage_unit(flags: &HashMap<String, String>) -> Result<()> {
         }
     });
     client.attach_unit(slot, &advertise)?;
-    println!(
-        "[storage-unit] slot {slot}: payload shard on {} (advertised \
-         {advertise}, coordinator {addr}; binary frame codec — see \
-         DESIGN.md §Payload wire)",
+    log_info!(
+        "storage-unit",
+        "slot {slot}: payload shard on {} (advertised {advertise}, \
+         coordinator {addr}; binary frame codec — see DESIGN.md \
+         §Payload wire)",
         server.local_addr()
     );
+    // Ship this process's `unit_put` spans to the coordinator so the
+    // merged `asyncflow trace` timeline gets a storage-unit track.
+    // Best-effort on a slow cadence: push_telemetry drains our span
+    // log either way and swallows old-server errors.
+    let proc = format!("storage-unit-{slot}");
+    std::thread::spawn(move || loop {
+        std::thread::sleep(Duration::from_secs(5));
+        client.push_telemetry(&proc);
+    });
     server.join();
     Ok(())
 }
@@ -553,6 +579,34 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
                 w.requeued_rows
             );
         }
+        // Telemetry aggregates: staleness / latency histograms and the
+        // per-sample lineage table. Best-effort — an older coordinator
+        // without the export_telemetry verb just skips this section.
+        if let Ok(snap) = client.export_telemetry(None) {
+            if let Some(coord) =
+                snap.procs.iter().find(|p| p.proc == "coordinator")
+            {
+                for (name, h) in &coord.hists {
+                    println!(
+                        "  hist {name:<24} n={:<6} p50={:.1} p95={:.1} \
+                         p99={:.1} max={:.1}",
+                        h.count, h.p50, h.p95, h.p99, h.max
+                    );
+                }
+            }
+            if !snap.lineage.is_empty() {
+                let complete = snap
+                    .lineage
+                    .iter()
+                    .filter(|r| r.complete())
+                    .count();
+                println!(
+                    "  lineage rows={} complete={}",
+                    snap.lineage.len(),
+                    complete
+                );
+            }
+        }
         if let Some(w) = &stats.weights {
             println!(
                 "  weights version={} tensors={} full={}B delta={}B \
@@ -603,6 +657,37 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
             rt.device_count()
         ),
         Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+/// `asyncflow trace`: drain a live service's merged telemetry (the
+/// coordinator's spans plus everything workers, stages, and storage
+/// units pushed) and render it as Chrome trace-event JSON. Load the
+/// output in Perfetto or `chrome://tracing` for the paper's Fig. 11
+/// view of a real distributed run. Draining is destructive by design:
+/// a second call returns only spans recorded in between.
+fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
+    let addr = flags
+        .get("connect")
+        .context("--connect HOST:PORT is required")?;
+    let client = ServiceClient::connect(addr.as_str())?;
+    let snap = client.export_telemetry(None)?;
+    let spans: usize = snap.procs.iter().map(|p| p.spans.len()).sum();
+    let json = chrome_trace(&snap).to_string();
+    match flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, json.as_bytes())
+                .with_context(|| format!("writing {path}"))?;
+            log_info!(
+                "trace",
+                "wrote {spans} spans from {} processes ({} lineage \
+                 rows) to {path}",
+                snap.procs.len(),
+                snap.lineage.len()
+            );
+        }
+        None => println!("{json}"),
     }
     Ok(())
 }

@@ -1,8 +1,11 @@
-//! Metrics: counters, timers, time-series recording, CSV/JSON emit.
+//! Metrics: counters, histograms, timers, time-series, CSV/JSON emit.
 //!
 //! The trainer, TransferQueue, and benches all log through a [`Registry`];
 //! series are exported for EXPERIMENTS.md plots (reward curves, Gantt
-//! rows, throughput tables).
+//! rows, throughput tables). [`Histogram`]s aggregate per-sample
+//! distributions (staleness, queue age, time-to-first-sample) into
+//! fixed log-scale buckets with p50/p95/p99 summaries for the
+//! telemetry plane.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -10,15 +13,64 @@ use std::time::Instant;
 
 use crate::util::json::Json;
 
-/// A named time-series of (x, value) points.
-#[derive(Debug, Clone, Default)]
+/// Default per-series point cap ([`Series::push`] decimates beyond
+/// it). Large enough that benches and tests never hit it; small
+/// enough that a week-long serve holds ~1MB per series, not all of
+/// history.
+pub const SERIES_CAP: usize = 65536;
+
+/// A named time-series of (x, value) points with bounded memory.
+///
+/// Until [`SERIES_CAP`] points accumulate, every push is stored. At
+/// the cap the series halves itself (keeping every 2nd point) and
+/// doubles its keep-stride, so a long-running process stores an
+/// evenly spaced subsample of its full history — deterministic,
+/// order-preserving, ≤ `cap` points forever.
+#[derive(Debug, Clone)]
 pub struct Series {
     pub points: Vec<(f64, f64)>,
+    cap: usize,
+    stride: u64,
+    pending: u64,
+}
+
+impl Default for Series {
+    fn default() -> Self {
+        Series::with_cap(SERIES_CAP)
+    }
 }
 
 impl Series {
+    /// An empty series storing at most `cap` points.
+    pub fn with_cap(cap: usize) -> Self {
+        Series {
+            points: Vec::new(),
+            cap: cap.max(2),
+            stride: 1,
+            pending: 0,
+        }
+    }
+
     pub fn push(&mut self, x: f64, y: f64) {
+        self.pending += 1;
+        if self.pending % self.stride != 0 {
+            return;
+        }
+        if self.points.len() >= self.cap {
+            let mut i = 0usize;
+            self.points.retain(|_| {
+                let keep = i % 2 == 0;
+                i += 1;
+                keep
+            });
+            self.stride *= 2;
+        }
         self.points.push((x, y));
+    }
+
+    /// Total values ever pushed (stored or decimated away).
+    pub fn pushed(&self) -> u64 {
+        self.pending
     }
 
     pub fn last(&self) -> Option<f64> {
@@ -44,10 +96,155 @@ impl Series {
     }
 }
 
+/// Number of log-scale buckets per [`Histogram`].
+const HIST_BUCKETS: usize = 96;
+/// Doublings below 1.0 covered by bucket 1 (bucket 0 holds ≤ 0).
+const HIST_LOW_DOUBLINGS: f64 = 12.0;
+/// Buckets per doubling (2 ⇒ ~41% bucket width).
+const HIST_PER_DOUBLING: f64 = 2.0;
+
+/// Point-in-time summary of a [`Histogram`] — the wire/display form.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: f64,
+    /// Exact observed extremes (not bucket bounds).
+    pub min: f64,
+    pub max: f64,
+    /// Estimated percentiles (log-bucket interpolation, clamped to
+    /// the exact min/max).
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl HistSnapshot {
+    /// Mean of all observations (`NaN` when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+}
+
+/// Fixed log-scale-bucket histogram: O(1) observe, constant memory,
+/// percentile estimates within one bucket width (~41%) plus exact
+/// min/max/sum/count. Covers 2^-12 (~0.00024) to 2^36 (~6.9e10) —
+/// milliseconds to days when observing times, and any plausible
+/// version-staleness count; values ≤ 0 land in bucket 0.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    buckets: Vec<u64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+            buckets: vec![0; HIST_BUCKETS],
+        }
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v <= 0.0 || !v.is_finite() {
+            return 0;
+        }
+        let idx = ((v.log2() + HIST_LOW_DOUBLINGS) * HIST_PER_DOUBLING)
+            .floor();
+        (idx.max(0.0) as usize + 1).min(HIST_BUCKETS - 1)
+    }
+
+    /// Lower bound of bucket `i` (for interpolation).
+    fn bucket_lo(i: usize) -> f64 {
+        ((i as f64 - 1.0) / HIST_PER_DOUBLING - HIST_LOW_DOUBLINGS)
+            .exp2()
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        self.buckets[Self::bucket_of(v)] += 1;
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Estimated percentile (`q` in [0,1]): find the bucket holding
+    /// the rank, interpolate geometrically within it, clamp to the
+    /// exact extremes. `NaN` when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = q.clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let hi_rank = (seen + n) as f64 - 1.0;
+            if rank <= hi_rank {
+                if i == 0 {
+                    return self.min.min(0.0);
+                }
+                let frac = if n == 1 {
+                    0.5
+                } else {
+                    (rank - seen as f64) / (n - 1) as f64
+                };
+                let lo = Self::bucket_lo(i);
+                let est = lo * (frac / HIST_PER_DOUBLING).exp2();
+                return est.clamp(self.min, self.max);
+            }
+            seen += n;
+        }
+        self.max
+    }
+
+    /// Summarize for export/display.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count,
+            sum: self.sum,
+            min: if self.count == 0 { 0.0 } else { self.min },
+            max: if self.count == 0 { 0.0 } else { self.max },
+            p50: self.percentile(0.50),
+            p95: self.percentile(0.95),
+            p99: self.percentile(0.99),
+        }
+    }
+}
+
 #[derive(Default)]
 struct RegistryInner {
     counters: BTreeMap<String, u64>,
     series: BTreeMap<String, Series>,
+    hists: BTreeMap<String, Histogram>,
 }
 
 /// Thread-safe metrics registry.
@@ -100,6 +297,44 @@ impl Registry {
         self.inner.lock().unwrap().series.keys().cloned().collect()
     }
 
+    /// Record one observation into the named histogram.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.hists.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Summary of the named histogram (`None` if never observed).
+    pub fn hist(&self, name: &str) -> Option<HistSnapshot> {
+        self.inner
+            .lock()
+            .unwrap()
+            .hists
+            .get(name)
+            .map(Histogram::snapshot)
+    }
+
+    /// Every histogram's summary, sorted by name.
+    pub fn hist_snapshots(&self) -> Vec<(String, HistSnapshot)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .hists
+            .iter()
+            .map(|(k, h)| (k.clone(), h.snapshot()))
+            .collect()
+    }
+
+    /// Every counter's current value, sorted by name.
+    pub fn counter_snapshots(&self) -> Vec<(String, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
     /// Export everything as JSON (for EXPERIMENTS.md artifacts).
     pub fn to_json(&self) -> Json {
         let g = self.inner.lock().unwrap();
@@ -130,7 +365,31 @@ impl Registry {
                 })
                 .collect(),
         );
-        Json::obj(vec![("counters", counters), ("series", series)])
+        let hists = Json::Obj(
+            g.hists
+                .iter()
+                .map(|(k, h)| {
+                    let s = h.snapshot();
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(s.count as f64)),
+                            ("sum", Json::Num(s.sum)),
+                            ("min", Json::Num(s.min)),
+                            ("max", Json::Num(s.max)),
+                            ("p50", Json::Num(s.p50)),
+                            ("p95", Json::Num(s.p95)),
+                            ("p99", Json::Num(s.p99)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("series", series),
+            ("hists", hists),
+        ])
     }
 
     /// Export one series as CSV text.
@@ -220,5 +479,100 @@ mod tests {
             let _t = Timer::start(&r, "op");
         }
         assert_eq!(r.series("op").unwrap().points.len(), 1);
+    }
+
+    #[test]
+    fn series_cap_decimates_instead_of_growing() {
+        let mut s = Series::with_cap(8);
+        for i in 0..1000 {
+            s.push(i as f64, (i * 2) as f64);
+        }
+        assert!(s.points.len() <= 8, "bounded: {}", s.points.len());
+        assert_eq!(s.pushed(), 1000);
+        // Order and pairing survive decimation.
+        for w in s.points.windows(2) {
+            assert!(w[0].0 < w[1].0, "x stays sorted");
+        }
+        for (x, y) in &s.points {
+            assert_eq!(*y, x * 2.0, "points never mix");
+        }
+        // Coverage spans the whole history, not just a prefix.
+        let last_x = s.points.last().unwrap().0;
+        assert!(last_x >= 500.0, "tail retained: {last_x}");
+        // Stats still work on the subsample.
+        assert!(s.mean().is_finite());
+        assert!(s.last().is_some());
+    }
+
+    #[test]
+    fn series_below_cap_stores_everything() {
+        let mut s = Series::with_cap(100);
+        for i in 0..100 {
+            s.push(i as f64, 0.0);
+        }
+        assert_eq!(s.points.len(), 100, "no decimation below the cap");
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_the_data() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.observe(i as f64);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 1000.0);
+        assert!((s.mean() - 500.5).abs() < 1e-9);
+        // Log buckets are ~41% wide: accept that tolerance.
+        assert!(
+            s.p50 > 250.0 && s.p50 < 1000.0,
+            "p50 in range: {}",
+            s.p50
+        );
+        assert!(s.p95 >= s.p50 && s.p99 >= s.p95, "monotone");
+        assert!(s.p99 <= 1000.0, "clamped to max");
+    }
+
+    #[test]
+    fn histogram_handles_empty_zero_and_single() {
+        let h = Histogram::new();
+        assert!(h.percentile(0.5).is_nan());
+        assert_eq!(h.snapshot().count, 0);
+        let mut h = Histogram::new();
+        h.observe(0.0);
+        h.observe(-3.0);
+        let s = h.snapshot();
+        assert_eq!(s.min, -3.0);
+        assert!(s.p50 <= 0.0, "non-positive bucket: {}", s.p50);
+        let mut h = Histogram::new();
+        h.observe(42.0);
+        let s = h.snapshot();
+        assert_eq!((s.min, s.max), (42.0, 42.0));
+        assert_eq!(s.p50, 42.0, "single value is every percentile");
+    }
+
+    #[test]
+    fn registry_histograms_and_snapshots() {
+        let r = Registry::new();
+        for i in 0..100 {
+            r.observe("staleness", i as f64);
+        }
+        r.inc("n", 7);
+        let s = r.hist("staleness").unwrap();
+        assert_eq!(s.count, 100);
+        assert!(r.hist("missing").is_none());
+        let hists = r.hist_snapshots();
+        assert_eq!(hists.len(), 1);
+        assert_eq!(hists[0].0, "staleness");
+        assert_eq!(r.counter_snapshots(), vec![("n".to_string(), 7)]);
+        // Histograms ride the JSON export.
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(
+            j.path(&["hists", "staleness", "count"])
+                .unwrap()
+                .as_i64(),
+            Some(100)
+        );
     }
 }

@@ -321,7 +321,7 @@ impl PipelineRunner {
         PipelineRunner {
             client,
             metrics: Arc::new(Registry::new()),
-            timeline: Arc::new(Timeline::new()),
+            timeline: Arc::new(Timeline::anchored()),
             shutdown: Shutdown::new(),
         }
     }
@@ -503,10 +503,20 @@ pub fn run_service_stage(
                 else {
                     break;
                 };
+                // One span per micro-batch on this stage's track (a
+                // batch mixes rows from many traces, so it is untraced).
+                let span_t0 = crate::telemetry::now_us();
                 let rows = stage.process(ctx, &leased.batch)?;
                 if !rows.is_empty() {
                     ctx.client.put_batch(rows)?;
                 }
+                crate::telemetry::record_span(
+                    "process",
+                    ctx.worker,
+                    0,
+                    span_t0,
+                    crate::telemetry::now_us(),
+                );
                 // Outputs are durable — only now is consumption final.
                 // An EXPIRED lease is survivable, not fatal: the server
                 // already requeued the rows (this stage outran its
@@ -576,7 +586,7 @@ pub fn run_remote_stage(
         }
     }
     let metrics = Registry::new();
-    let timeline = Timeline::new();
+    let timeline = Timeline::anchored();
     let ctx = StageCtx {
         worker: name,
         client,
@@ -584,9 +594,18 @@ pub fn run_remote_stage(
         timeline: &timeline,
         shutdown,
     };
-    match run_service_stage(&ctx, input, stage) {
+    let result = run_service_stage(&ctx, input, stage);
+    // Hand this stage's span log to the coordinator for the merged
+    // `asyncflow trace` timeline (best-effort, error path included —
+    // the spans up to the failure are often the interesting ones).
+    client.push_telemetry(name);
+    match result {
         Ok(()) => Ok(metrics),
         Err(e) => {
+            crate::log_warn!(
+                name,
+                "stage failed; draining the graph: {e:#}"
+            );
             let _ = client.shutdown();
             Err(e)
         }

@@ -275,9 +275,10 @@ impl GroupAdvantage {
 impl Stage for GroupAdvantage {
     fn process(
         &mut self,
-        _ctx: &StageCtx<'_>,
+        ctx: &StageCtx<'_>,
         batch: &Batch,
     ) -> Result<Vec<PutRow>> {
+        let t0 = ctx.timeline.now();
         let mut rows = Vec::new();
         for (idx, row) in batch.indices.iter().zip(&batch.rows) {
             let reward = row[0].as_f32().context("rewards column")?;
@@ -290,6 +291,18 @@ impl Stage for GroupAdvantage {
                     )]));
                 }
             }
+        }
+        // Only completed groups make an "advantage" phase on the
+        // timeline (and, through an anchored timeline's telemetry
+        // bridge, a span on this stage's Fig. 11 track) — buffering a
+        // partial group is not normalization work.
+        if !rows.is_empty() {
+            ctx.timeline.record(
+                ctx.worker,
+                "advantage",
+                t0,
+                ctx.timeline.now(),
+            );
         }
         Ok(rows)
     }
@@ -361,6 +374,7 @@ impl Stage for FilterTopK {
         ctx: &StageCtx<'_>,
         batch: &Batch,
     ) -> Result<Vec<PutRow>> {
+        let t0 = ctx.timeline.now();
         let mut rows = Vec::new();
         let mut rejects: Vec<GlobalIndex> = Vec::new();
         for (idx, row) in batch.indices.iter().zip(&batch.rows) {
@@ -395,6 +409,16 @@ impl Stage for FilterTopK {
         if self.evict_rejects && !rejects.is_empty() {
             ctx.client.evict(&rejects)?;
             ctx.metrics.inc("filter_evicted", rejects.len() as u64);
+        }
+        // Same rule as GroupAdvantage: selection work (a group was
+        // ranked) earns a "filter" span; pure buffering does not.
+        if !rows.is_empty() || !rejects.is_empty() {
+            ctx.timeline.record(
+                ctx.worker,
+                "filter",
+                t0,
+                ctx.timeline.now(),
+            );
         }
         Ok(rows)
     }

@@ -22,7 +22,8 @@
 //! of its group is still decoding — the streaming-overlap claim made
 //! concrete.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -92,6 +93,10 @@ pub struct LeaseReply {
     /// hold leases this stays `false`: their rows may yet be requeued
     /// to this worker.
     pub closed: bool,
+    /// Trace id minted for this lease (0 = untraced / telemetry off).
+    /// The worker adopts it so generate/put_chunk spans on its side
+    /// join the coordinator's lease→chunk→commit chain.
+    pub trace: u64,
 }
 
 /// Column the finished policy version is committed under (same cell the
@@ -100,15 +105,26 @@ fn version_column() -> Column {
     Column::Custom("version".into())
 }
 
+/// Most recent leases whose trace ids are kept for
+/// [`RolloutManager::trace_of`]; older entries are evicted (lease ids
+/// are monotonic, so smallest = oldest).
+const LEASE_TRACE_CAP: usize = 4096;
+
 /// Coordinator-side dispatcher for the elastic rollout pool.
 pub struct RolloutManager {
     tq: Arc<TransferQueue>,
     table: LeaseTable,
+    /// Trace id per live-ish lease (bounded; see [`LEASE_TRACE_CAP`]).
+    traces: Mutex<BTreeMap<LeaseId, u64>>,
 }
 
 impl RolloutManager {
     pub fn new(tq: Arc<TransferQueue>) -> Self {
-        RolloutManager { tq, table: LeaseTable::new() }
+        RolloutManager {
+            tq,
+            table: LeaseTable::new(),
+            traces: Mutex::new(BTreeMap::new()),
+        }
     }
 
     /// Requeue rows of expired leases back onto their source controller.
@@ -196,17 +212,51 @@ impl RolloutManager {
                     &meta.indices,
                     Duration::from_millis(spec.ttl_ms),
                 );
-                Ok(LeaseReply { lease: Some(id), batch, closed: false })
+                // Every grant mints the trace the whole chain
+                // (lease→chunk→commit→train) will share; disabled
+                // telemetry mints nothing, keeping the wire byte-
+                // identical to the pre-telemetry encoding.
+                let trace = if crate::telemetry::enabled() {
+                    let t = crate::telemetry::mint_trace();
+                    let mut g = self.traces.lock().unwrap();
+                    g.insert(id, t);
+                    while g.len() > LEASE_TRACE_CAP {
+                        g.pop_first();
+                    }
+                    t
+                } else {
+                    0
+                };
+                Ok(LeaseReply {
+                    lease: Some(id),
+                    batch,
+                    closed: false,
+                    trace,
+                })
             }
-            RequestOutcome::NotReady => {
-                Ok(LeaseReply { lease: None, batch: empty(), closed: false })
-            }
+            RequestOutcome::NotReady => Ok(LeaseReply {
+                lease: None,
+                batch: empty(),
+                closed: false,
+                trace: 0,
+            }),
             RequestOutcome::Closed => Ok(LeaseReply {
                 lease: None,
                 batch: empty(),
                 closed: self.table.in_flight_for(&spec.task) == 0,
+                trace: 0,
             }),
         }
+    }
+
+    /// Trace id minted when `lease` was granted (0 = unknown/untraced).
+    pub fn trace_of(&self, lease: LeaseId) -> u64 {
+        self.traces
+            .lock()
+            .unwrap()
+            .get(&lease)
+            .copied()
+            .unwrap_or(0)
     }
 
     /// `put_chunk`: stream partial generations. Rows flagged `finished`
@@ -543,6 +593,36 @@ mod tests {
         // ...but the row is immediately leasable again.
         let ok = m.lease_prompts(&spec("w", 100)).unwrap();
         assert_eq!(ok.batch.len(), 1);
+    }
+
+    #[test]
+    fn granted_leases_mint_unique_traces() {
+        let _gate = crate::telemetry::test_enable_gate();
+        crate::telemetry::set_enabled(Some(true));
+        let tq = tq_with(2);
+        let m = RolloutManager::new(tq.clone());
+        let s = LeaseSpec {
+            ttl_ms: 5000,
+            timeout_ms: 0,
+            ..LeaseSpec::new("w", 1)
+        };
+        let a = m.lease_prompts(&s).unwrap();
+        let b = m.lease_prompts(&s).unwrap();
+        assert_ne!(a.trace, 0);
+        assert_ne!(b.trace, 0);
+        assert_ne!(a.trace, b.trace, "each lease gets its own trace");
+        assert!(a.trace <= crate::telemetry::TRACE_ID_MASK);
+        assert_eq!(m.trace_of(a.lease.unwrap()), a.trace);
+        assert_eq!(m.trace_of(b.lease.unwrap()), b.trace);
+        // Telemetry off: grants stop minting entirely.
+        crate::telemetry::set_enabled(Some(false));
+        tq.put_row(vec![(Column::Prompts, Value::I32s(vec![9; 4]))])
+            .unwrap();
+        let c = m.lease_prompts(&s).unwrap();
+        assert!(c.lease.is_some());
+        assert_eq!(c.trace, 0);
+        assert_eq!(m.trace_of(c.lease.unwrap()), 0);
+        crate::telemetry::set_enabled(None);
     }
 
     #[test]

@@ -158,6 +158,21 @@ pub fn run_worker(
     hb_stop.store(true, Ordering::SeqCst);
     hb_lease.store(0, Ordering::SeqCst);
     let _ = heartbeat.join();
+    // Hand our span log to the coordinator so `asyncflow trace` can
+    // merge this worker's timeline (best-effort; no-op when disabled).
+    client.push_telemetry(&opts.name);
+    if let Ok(r) = &result {
+        crate::log_debug!(
+            &opts.name,
+            "worker done: {} samples, {} tokens, {} chunks, {} swaps, \
+             {} leases lost",
+            r.samples,
+            r.tokens,
+            r.chunks,
+            r.weight_swaps,
+            r.leases_lost
+        );
+    }
     result
 }
 
@@ -201,6 +216,11 @@ fn run_worker_inner(
             continue;
         };
         hb_lease.store(lease, Ordering::SeqCst);
+        // Adopt the lease's trace id: every chunk upload (and the
+        // data-plane writes it triggers, all the way to remote storage
+        // units) now carries the trace minted at the grant.
+        let _trace_scope = crate::telemetry::scoped_trace(reply.trace);
+        let gen_span_t0 = crate::telemetry::now_us();
         let batch = reply.batch;
         let mut prompts = Vec::with_capacity(batch.len());
         for row in &batch.rows {
@@ -251,6 +271,11 @@ fn run_worker_inner(
                 if let Some(m) = metrics {
                     m.inc("leases_lost", 1);
                 }
+                crate::log_warn!(
+                    &opts.name,
+                    "lease {lease} lost mid-generation; abandoning the \
+                     batch (rows requeued to a peer)"
+                );
                 hb_lease.store(0, Ordering::SeqCst);
                 let _ = engine.finish_generate();
                 continue 'outer;
@@ -280,6 +305,18 @@ fn run_worker_inner(
         }
         hb_lease.store(0, Ordering::SeqCst);
         let _ = engine.finish_generate();
+        // An anchored timeline already mirrors this span into the
+        // telemetry log (with the ambient trace); record directly only
+        // when no timeline will do it for us.
+        if !timeline.is_some_and(|t| t.bridges_telemetry()) {
+            crate::telemetry::record_span(
+                "generate",
+                &opts.name,
+                reply.trace,
+                gen_span_t0,
+                crate::telemetry::now_us(),
+            );
+        }
         if let (Some(tl), Some(start)) = (timeline, t0) {
             tl.record(&opts.name, "generate", start, tl.now());
         }

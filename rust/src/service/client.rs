@@ -30,6 +30,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::rollout::{ChunkRow, LeaseId, LeaseReply, LeaseSpec, WorkerStat};
 use crate::runtime::{HostTensor, ParamSet};
+use crate::telemetry::{self, TelemetryReport, TelemetrySnapshot};
 use crate::weights::WeightsMeta;
 use crate::transfer_queue::{
     Batch, Column, GlobalIndex, RemoteUnit, UnitCallError, UnitHandle,
@@ -785,6 +786,50 @@ impl ServiceClient {
             ServiceResponse::Workers(ws) => Ok(ws),
             _ => bail!("service returned an unexpected response kind"),
         }
+    }
+
+    /// `export_telemetry`: push this process's drained telemetry
+    /// (`Some`) and/or fetch the coordinator's merged cross-process
+    /// snapshot. Fails with "unknown op" against pre-telemetry servers
+    /// — callers that must tolerate old peers should treat any error
+    /// as "telemetry unavailable".
+    pub fn export_telemetry(
+        &self,
+        report: Option<TelemetryReport>,
+    ) -> Result<TelemetrySnapshot> {
+        match self.call(ServiceRequest::ExportTelemetry { report })? {
+            ServiceResponse::Telemetry(snap) => Ok(snap),
+            _ => bail!("service returned an unexpected response kind"),
+        }
+    }
+
+    /// Drain this thread's active span log and push it to the
+    /// coordinator under `proc`. Best-effort: a no-op when telemetry
+    /// is disabled or there is nothing to push, and errors (e.g. an
+    /// old server without the verb) are swallowed — the spans were
+    /// drained either way, and telemetry must never fail a workload.
+    pub fn push_telemetry(&self, proc: &str) {
+        if !telemetry::enabled() {
+            return;
+        }
+        // In-process callers without their own thread log share the
+        // coordinator's global log; draining it here would relabel the
+        // coordinator's spans as this worker's. Those spans are
+        // exported under "coordinator" anyway.
+        if !self.is_remote() && !telemetry::thread_log_installed() {
+            return;
+        }
+        let spans = telemetry::active_log().drain();
+        if spans.is_empty() {
+            return;
+        }
+        let report = TelemetryReport {
+            proc: proc.to_string(),
+            spans,
+            counters: Vec::new(),
+            hists: Vec::new(),
+        };
+        let _ = self.export_telemetry(Some(report));
     }
 
     /// Queue/param introspection.

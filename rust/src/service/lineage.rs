@@ -1,0 +1,362 @@
+//! Coordinator-side session telemetry: per-sample lineage rows,
+//! staleness/latency histograms, and the report hub that the
+//! `export_telemetry` verb drains remote span logs into.
+//!
+//! [`SessionTelemetry`] hangs off the session state and is fed by the
+//! verb handlers in [`super::Session`]:
+//!
+//! * `lease_prompts` → [`SessionTelemetry::on_leased`] — the sample's
+//!   clock starts, stamped with the lease's trace id.
+//! * `put_chunk` → [`SessionTelemetry::on_chunk`] — first chunk closes
+//!   the time-to-first-sample window; the finishing chunk records the
+//!   generating policy version and the rollout duration.
+//! * `put_batch` / `put_experience_data` / `notify_cells` →
+//!   [`SessionTelemetry::on_cell`] — reward and advantage arrival.
+//! * `get_batch` / `get_batch_meta` on a `train*` task →
+//!   [`SessionTelemetry::on_consumed`] — the row enters a train batch;
+//!   staleness (trainer version minus generating version) and queue
+//!   age are observed.
+//!
+//! Every hook is a no-op while [`crate::telemetry::enabled`] is false,
+//! so the telemetry-off path costs one atomic load per verb.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::metrics::Registry;
+use crate::telemetry::{
+    self, LineageRow, TelemetryReport, TelemetrySnapshot,
+};
+use crate::transfer_queue::GlobalIndex;
+
+/// Most lineage rows retained; the oldest (smallest index) are evicted
+/// past this, bounding memory for arbitrarily long runs.
+pub const LINEAGE_CAP: usize = 4096;
+
+/// Most spans retained per remote process in the report hub.
+const HUB_SPAN_CAP: usize = 8192;
+
+/// Histogram: trainer version minus generating policy version at the
+/// moment a sample joins a train batch (paper §4.1 staleness bound).
+pub const HIST_STALENESS: &str = "staleness_versions";
+/// Histogram: lease grant → first generated chunk, milliseconds.
+pub const HIST_TTFS: &str = "time_to_first_chunk_ms";
+/// Histogram: lease grant → finishing chunk, milliseconds.
+pub const HIST_ROLLOUT: &str = "rollout_ms";
+/// Histogram: last lineage event → train consumption, milliseconds.
+pub const HIST_QUEUE_AGE: &str = "queue_age_ms";
+
+/// Per-session telemetry aggregation point (coordinator side).
+#[derive(Default)]
+pub struct SessionTelemetry {
+    registry: Registry,
+    /// Lineage keyed by global row index.
+    lineage: Mutex<BTreeMap<u64, LineageRow>>,
+    /// Latest report pushed per remote process name.
+    hub: Mutex<BTreeMap<String, TelemetryReport>>,
+}
+
+impl SessionTelemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The coordinator-side registry (histograms + counters exported
+    /// in the snapshot's `coordinator` report).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// The lineage row for `index`, if still retained.
+    pub fn lineage_row(&self, index: GlobalIndex) -> Option<LineageRow> {
+        self.lineage.lock().unwrap().get(&index.0).copied()
+    }
+
+    fn update_row(
+        &self,
+        index: GlobalIndex,
+        f: impl FnOnce(&mut LineageRow),
+    ) {
+        let mut g = self.lineage.lock().unwrap();
+        let row = g.entry(index.0).or_insert_with(|| LineageRow {
+            index: index.0,
+            ..LineageRow::default()
+        });
+        f(row);
+        while g.len() > LINEAGE_CAP {
+            g.pop_first();
+        }
+    }
+
+    /// Prompt rows granted to a rollout worker under `trace`.
+    pub fn on_leased(&self, indices: &[GlobalIndex], trace: u64) {
+        if !telemetry::enabled() {
+            return;
+        }
+        let now = telemetry::now_us();
+        for &idx in indices {
+            // A re-lease (previous holder crashed) restarts the clock:
+            // the timings describe the attempt that actually delivered.
+            self.update_row(idx, |r| {
+                r.trace = trace;
+                r.leased_us = now;
+                r.first_chunk_us = 0;
+                r.last_chunk_us = 0;
+            });
+        }
+        self.registry.inc("lineage.leased", indices.len() as u64);
+    }
+
+    /// A `put_chunk` increment for one row; `finished` commits it.
+    pub fn on_chunk(
+        &self,
+        index: GlobalIndex,
+        finished: bool,
+        gen_version: u64,
+    ) {
+        if !telemetry::enabled() {
+            return;
+        }
+        let now = telemetry::now_us();
+        let mut first_ms = None;
+        let mut rollout_ms = None;
+        self.update_row(index, |r| {
+            if r.first_chunk_us == 0 {
+                r.first_chunk_us = now;
+                if r.leased_us != 0 {
+                    first_ms =
+                        Some(us_to_ms(now.saturating_sub(r.leased_us)));
+                }
+            }
+            if finished {
+                r.last_chunk_us = now;
+                r.gen_version = gen_version;
+                if r.leased_us != 0 {
+                    rollout_ms =
+                        Some(us_to_ms(now.saturating_sub(r.leased_us)));
+                }
+            }
+        });
+        if let Some(ms) = first_ms {
+            self.registry.observe(HIST_TTFS, ms);
+        }
+        if let Some(ms) = rollout_ms {
+            self.registry.observe(HIST_ROLLOUT, ms);
+            self.registry.inc("lineage.generated", 1);
+        }
+    }
+
+    /// An experience cell landed for `index`; only reward and
+    /// advantage columns advance lineage.
+    pub fn on_cell(
+        &self,
+        index: GlobalIndex,
+        column: &crate::transfer_queue::Column,
+    ) {
+        use crate::transfer_queue::Column;
+        if !telemetry::enabled() {
+            return;
+        }
+        let now = telemetry::now_us();
+        match column {
+            Column::Rewards => self.update_row(index, |r| {
+                if r.reward_us == 0 {
+                    r.reward_us = now;
+                }
+            }),
+            Column::Advantages => self.update_row(index, |r| {
+                if r.advantage_us == 0 {
+                    r.advantage_us = now;
+                }
+            }),
+            _ => {}
+        }
+    }
+
+    /// Rows popped by a consumer of `task`. Only train-shaped tasks
+    /// (name starting with `train`) close lineage; `train_version` is
+    /// the parameter-store version the batch will be trained under.
+    pub fn on_consumed(
+        &self,
+        task: &str,
+        indices: &[GlobalIndex],
+        train_version: u64,
+    ) {
+        if !telemetry::enabled() || !task.starts_with("train") {
+            return;
+        }
+        let now = telemetry::now_us();
+        let mut staleness = Vec::new();
+        let mut queue_ages = Vec::new();
+        {
+            let mut g = self.lineage.lock().unwrap();
+            for idx in indices {
+                let Some(r) = g.get_mut(&idx.0) else { continue };
+                r.train_us = now;
+                r.train_version = train_version;
+                // Staleness is only meaningful for rows that actually
+                // went through generation (gen_version recorded).
+                if r.last_chunk_us != 0 {
+                    staleness.push(r.staleness() as f64);
+                }
+                let ready_us = r
+                    .advantage_us
+                    .max(r.reward_us)
+                    .max(r.last_chunk_us);
+                if ready_us != 0 && now > ready_us {
+                    queue_ages.push(us_to_ms(now - ready_us));
+                }
+            }
+        }
+        for s in staleness {
+            self.registry.observe(HIST_STALENESS, s);
+        }
+        for ms in queue_ages {
+            self.registry.observe(HIST_QUEUE_AGE, ms);
+        }
+        self.registry.inc("lineage.trained", indices.len() as u64);
+    }
+
+    /// Merge a remote process's pushed report into the hub: spans
+    /// accumulate (bounded), registry aggregates replace (they are
+    /// cumulative snapshots).
+    pub fn merge_report(&self, report: TelemetryReport) {
+        let mut g = self.hub.lock().unwrap();
+        let slot = g.entry(report.proc.clone()).or_insert_with(|| {
+            TelemetryReport { proc: report.proc.clone(), ..Default::default() }
+        });
+        slot.spans.extend(report.spans);
+        if slot.spans.len() > HUB_SPAN_CAP {
+            let excess = slot.spans.len() - HUB_SPAN_CAP;
+            slot.spans.drain(..excess);
+        }
+        slot.counters = report.counters;
+        slot.hists = report.hists;
+    }
+
+    /// Serve one `export_telemetry` call: absorb the caller's pushed
+    /// report (if any), drain the coordinator's own span log, and
+    /// return the merged snapshot.
+    pub fn export(
+        &self,
+        pushed: Option<TelemetryReport>,
+    ) -> TelemetrySnapshot {
+        if let Some(r) = pushed {
+            self.merge_report(r);
+        }
+        let coordinator = TelemetryReport {
+            proc: "coordinator".to_string(),
+            spans: telemetry::global().drain(),
+            counters: self.registry.counter_snapshots(),
+            hists: self.registry.hist_snapshots(),
+        };
+        let mut procs = vec![coordinator];
+        procs.extend(self.hub.lock().unwrap().values().cloned());
+        let lineage =
+            self.lineage.lock().unwrap().values().copied().collect();
+        TelemetrySnapshot { procs, lineage }
+    }
+}
+
+fn us_to_ms(us: u64) -> f64 {
+    us as f64 / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Span;
+
+    fn idx(i: u64) -> GlobalIndex {
+        GlobalIndex(i)
+    }
+
+    #[test]
+    fn lineage_chain_completes_and_observes_histograms() {
+        let _g = telemetry::test_enable_gate();
+        telemetry::set_enabled(Some(true));
+        let t = SessionTelemetry::new();
+        t.on_leased(&[idx(0), idx(1)], 77);
+        t.on_chunk(idx(0), false, 0);
+        t.on_chunk(idx(0), true, 3);
+        t.on_cell(idx(0), &crate::transfer_queue::Column::Rewards);
+        t.on_cell(idx(0), &crate::transfer_queue::Column::Advantages);
+        t.on_consumed("train", &[idx(0)], 5);
+
+        let row = t.lineage_row(idx(0)).unwrap();
+        assert!(row.complete(), "all six timestamps set: {row:?}");
+        assert_eq!(row.trace, 77);
+        assert_eq!(row.staleness(), 2);
+        let stale = t.registry().hist(HIST_STALENESS).unwrap();
+        assert_eq!(stale.count, 1);
+        assert_eq!(stale.max, 2.0);
+        assert!(t.registry().hist(HIST_TTFS).unwrap().count == 1);
+        // Row 1 never generated: no staleness sample, not complete.
+        t.on_consumed("train", &[idx(1)], 5);
+        assert!(!t.lineage_row(idx(1)).unwrap().complete());
+        assert_eq!(
+            t.registry().hist(HIST_STALENESS).unwrap().count,
+            1
+        );
+        // Non-train consumers never close lineage.
+        t.on_leased(&[idx(2)], 9);
+        t.on_consumed("reward", &[idx(2)], 5);
+        assert_eq!(t.lineage_row(idx(2)).unwrap().train_us, 0);
+        telemetry::set_enabled(None);
+    }
+
+    #[test]
+    fn hooks_are_inert_when_disabled() {
+        let _g = telemetry::test_enable_gate();
+        telemetry::set_enabled(Some(false));
+        let t = SessionTelemetry::new();
+        t.on_leased(&[idx(0)], 42);
+        t.on_chunk(idx(0), true, 1);
+        t.on_consumed("train", &[idx(0)], 2);
+        assert!(t.lineage_row(idx(0)).is_none());
+        assert!(t.registry().hist(HIST_STALENESS).is_none());
+        telemetry::set_enabled(None);
+    }
+
+    #[test]
+    fn lineage_is_bounded_by_evicting_oldest() {
+        let _g = telemetry::test_enable_gate();
+        telemetry::set_enabled(Some(true));
+        let t = SessionTelemetry::new();
+        for i in 0..(LINEAGE_CAP as u64 + 10) {
+            t.on_leased(&[idx(i)], 1);
+        }
+        assert!(t.lineage_row(idx(0)).is_none(), "oldest evicted");
+        assert!(t.lineage_row(idx(LINEAGE_CAP as u64 + 9)).is_some());
+        telemetry::set_enabled(None);
+    }
+
+    #[test]
+    fn hub_merges_reports_and_bounds_spans() {
+        // export() drains the process-global span log: serialize with
+        // tests that assert on that log's contents.
+        let _g = telemetry::test_enable_gate();
+        let t = SessionTelemetry::new();
+        let mk = |n: usize| TelemetryReport {
+            proc: "w0".into(),
+            spans: (0..n)
+                .map(|i| Span {
+                    name: format!("s{i}"),
+                    track: "w0".into(),
+                    trace: 0,
+                    t0_us: i as u64,
+                    dur_us: 1,
+                })
+                .collect(),
+            counters: vec![("c".into(), n as u64)],
+            hists: vec![],
+        };
+        t.merge_report(mk(3));
+        t.merge_report(mk(2));
+        let snap = t.export(None);
+        let w0 = snap.procs.iter().find(|p| p.proc == "w0").unwrap();
+        assert_eq!(w0.spans.len(), 5, "spans accumulate");
+        assert_eq!(w0.counters, vec![("c".to_string(), 2)]);
+        assert_eq!(snap.procs[0].proc, "coordinator");
+    }
+}

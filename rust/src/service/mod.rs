@@ -33,6 +33,7 @@
 //! pair; the service layer never touches an engine directly.
 
 pub mod client;
+pub mod lineage;
 pub mod protocol;
 pub mod transport;
 
@@ -43,6 +44,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 pub use client::{LeasedBatch, ServiceClient};
+pub use lineage::SessionTelemetry;
 pub use protocol::{
     CellNote, ConsumerSpec, GetBatchMetaReply, GetBatchReply,
     GetBatchSpec, PutRow, ServiceRequest, ServiceResponse, ServiceStats,
@@ -57,6 +59,7 @@ use crate::rollout::{
     ChunkRow, LeaseReply, LeaseSpec, RolloutManager, WorkerStat,
 };
 use crate::runtime::{HostTensor, ParamSet};
+use crate::telemetry::{self, TelemetryReport, TelemetrySnapshot};
 use crate::transfer_queue::{
     policy_by_name, Batch, Column, GlobalIndex, LeaseId, LeaseRegistry,
     RequestOutcome, TaskSpec, TransferQueue, UnitHandle, Value,
@@ -142,6 +145,10 @@ struct SessionState {
     /// bytes shipped per path. Fed by the weight verbs, read by
     /// `stats` and `asyncflow info`.
     weights: Arc<WeightPlane>,
+    /// Telemetry plane aggregation point: per-sample lineage rows,
+    /// staleness/latency histograms, and the hub that remote span
+    /// logs are drained into via `export_telemetry`.
+    telemetry: Arc<SessionTelemetry>,
 }
 
 /// A live post-training service session: the server-side dispatcher.
@@ -207,6 +214,7 @@ impl Session {
             consumers: Arc::new(LeaseRegistry::new()),
             write_lock: Arc::new(Mutex::new(())),
             weights: Arc::new(WeightPlane::new()),
+            telemetry: Arc::new(SessionTelemetry::new()),
         });
         Ok(())
     }
@@ -275,7 +283,10 @@ impl Session {
                  put_prompts_data / put_batch allocation"
             );
         }
-        st.tq.put(index, column, value)
+        let col = column.clone();
+        st.tq.put(index, column, value)?;
+        st.telemetry.on_cell(index, &col);
+        Ok(())
     }
 
     /// Batch-first write: each row either allocates a fresh index
@@ -340,7 +351,9 @@ impl Session {
                         if replays.contains(&(idx, col.clone())) {
                             continue;
                         }
+                        let tcol = col.clone();
                         st.tq.put(idx, col, val)?;
+                        st.telemetry.on_cell(idx, &tcol);
                     }
                     out.push(idx);
                 }
@@ -455,18 +468,25 @@ impl Session {
         Ok(match Self::consume_ready(&st, spec)? {
             RequestOutcome::Ready(meta) => {
                 match st.tq.try_fetch(&meta.indices, &spec.columns) {
-                    Ok(batch) => match &spec.consumer {
-                        Some(c) => GetBatchReply::Leased {
-                            lease: st.consumers.grant(
-                                &c.id,
-                                &spec.task,
-                                &meta.indices,
-                                Duration::from_millis(c.ttl_ms),
-                            ),
-                            batch,
-                        },
-                        None => GetBatchReply::Ready(batch),
-                    },
+                    Ok(batch) => {
+                        st.telemetry.on_consumed(
+                            &spec.task,
+                            &meta.indices,
+                            st.store.version(),
+                        );
+                        match &spec.consumer {
+                            Some(c) => GetBatchReply::Leased {
+                                lease: st.consumers.grant(
+                                    &c.id,
+                                    &spec.task,
+                                    &meta.indices,
+                                    Duration::from_millis(c.ttl_ms),
+                                ),
+                                batch,
+                            },
+                            None => GetBatchReply::Ready(batch),
+                        }
+                    }
                     Err(e) => {
                         if let Some(ctrl) =
                             st.tq.try_controller(&spec.task)
@@ -498,6 +518,11 @@ impl Session {
         Self::check_consumer(spec)?;
         Ok(match Self::consume_ready(&st, spec)? {
             RequestOutcome::Ready(meta) => {
+                st.telemetry.on_consumed(
+                    &spec.task,
+                    &meta.indices,
+                    st.store.version(),
+                );
                 let lease = spec.consumer.as_ref().map(|c| {
                     st.consumers.grant(
                         &c.id,
@@ -619,7 +644,11 @@ impl Session {
             .iter()
             .map(|c| (c.index, c.column.clone(), c.token_len))
             .collect();
-        st.tq.notify_remote_cells(&tuples)
+        st.tq.notify_remote_cells(&tuples)?;
+        for c in cells {
+            st.telemetry.on_cell(c.index, &c.column);
+        }
+        Ok(())
     }
 
     /// `weight_sync_notify`: publish a new weight snapshot to all
@@ -634,6 +663,7 @@ impl Session {
     /// coordinator's `fetch_tensors`.
     pub fn weight_sync_notify(&self, params: ParamSet) -> Result<()> {
         let st = self.state()?;
+        let _span = telemetry::span("weight_sync", "service");
         st.store.try_publish(params)?;
         let latest = st.store.latest();
         let updates = weights::delta_updates(&latest);
@@ -735,19 +765,53 @@ impl Session {
 
     /// `lease_prompts`: pop ready prompt rows for an elastic rollout
     /// worker under a heartbeat lease (long-polls up to
-    /// `spec.timeout_ms`).
+    /// `spec.timeout_ms`). A granted lease starts the leased rows'
+    /// lineage clocks under the lease's freshly minted trace id.
     pub fn lease_prompts(&self, spec: &LeaseSpec) -> Result<LeaseReply> {
-        self.state()?.rollout.lease_prompts(spec)
+        let st = self.state()?;
+        let t0 = telemetry::now_us();
+        let reply = st.rollout.lease_prompts(spec)?;
+        if reply.lease.is_some() {
+            st.telemetry.on_leased(&reply.batch.indices, reply.trace);
+            telemetry::record_span(
+                "lease_prompts",
+                "service",
+                reply.trace,
+                t0,
+                telemetry::now_us(),
+            );
+        }
+        Ok(reply)
     }
 
     /// `put_chunk`: stream partial generations; finished rows commit.
+    ///
+    /// Runs under the lease's trace id (see
+    /// [`crate::rollout::RolloutManager::trace_of`]) so the data-plane
+    /// writes it triggers — including remote `UnitRequest::Put` frames
+    /// — carry the same trace the prompts were leased under.
     pub fn put_chunk(
         &self,
         lease: u64,
         version: u64,
         rows: &[ChunkRow],
     ) -> Result<()> {
-        self.state()?.rollout.put_chunk(lease, version, rows)
+        let st = self.state()?;
+        let trace = st.rollout.trace_of(lease);
+        let _scope = telemetry::scoped_trace(trace);
+        let t0 = telemetry::now_us();
+        st.rollout.put_chunk(lease, version, rows)?;
+        for r in rows {
+            st.telemetry.on_chunk(r.index, r.finished, version);
+        }
+        telemetry::record_span(
+            "put_chunk",
+            "service",
+            trace,
+            t0,
+            telemetry::now_us(),
+        );
+        Ok(())
     }
 
     /// `renew_lease`: explicit heartbeat (`ttl_ms = 0` keeps the TTL).
@@ -818,6 +882,23 @@ impl Session {
                 st.weights.stats(latest.version, latest.tensors.len()),
             ),
         })
+    }
+
+    /// The session's telemetry aggregation point (embedded use: the
+    /// coordinator feeds lineage hooks / reads histograms directly).
+    pub fn session_telemetry(&self) -> Result<Arc<SessionTelemetry>> {
+        Ok(self.state()?.telemetry)
+    }
+
+    /// `export_telemetry`: absorb a remote process's drained span
+    /// log / registry aggregates (when `report` is `Some`) and return
+    /// the merged cross-process snapshot — the coordinator's own
+    /// spans, every pushed report, and the per-sample lineage table.
+    pub fn export_telemetry(
+        &self,
+        report: Option<TelemetryReport>,
+    ) -> Result<TelemetrySnapshot> {
+        Ok(self.state()?.telemetry.export(report))
     }
 
     /// Global-batch GC of fully consumed rows.
@@ -954,6 +1035,9 @@ impl Session {
                 ServiceResponse::Batch(GetBatchReply::Ready(
                     self.fetch_rows(&indices, &columns)?,
                 ))
+            }
+            ServiceRequest::ExportTelemetry { report } => {
+                ServiceResponse::Telemetry(self.export_telemetry(report)?)
             }
             ServiceRequest::Stats => {
                 ServiceResponse::Stats(self.stats()?)

@@ -24,8 +24,12 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::metrics::HistSnapshot;
 use crate::rollout::{ChunkRow, LeaseReply, LeaseSpec, WorkerStat};
 use crate::runtime::{DType, HostTensor, ParamSet};
+use crate::telemetry::{
+    LineageRow, Span, TelemetryReport, TelemetrySnapshot,
+};
 use crate::transfer_queue::{Batch, Column, GlobalIndex, Value};
 use crate::util::json::Json;
 use crate::weights::{
@@ -220,6 +224,10 @@ pub enum ServiceRequest {
     /// Payload fetch by explicit indices (no consumption) — the
     /// via-coordinator fallback for rows on unattached or dead units.
     FetchRows { indices: Vec<GlobalIndex>, columns: Vec<Column> },
+    /// Drain-and-merge telemetry: a remote process pushes its own
+    /// spans/counters/histograms (`report: Some`) and the coordinator
+    /// replies with the merged cluster snapshot; `None` just fetches.
+    ExportTelemetry { report: Option<TelemetryReport> },
     /// Queue/param introspection.
     Stats,
     /// Global-batch GC.
@@ -361,6 +369,8 @@ pub enum ServiceResponse {
     Lease(LeaseReply),
     /// `worker_stats` snapshot.
     Workers(Vec<WorkerStat>),
+    /// `export_telemetry` outcome: the merged cluster telemetry.
+    Telemetry(TelemetrySnapshot),
     Err(String),
 }
 
@@ -806,6 +816,11 @@ fn lease_reply_to_json(r: &LeaseReply) -> Json {
     if let Some(id) = r.lease {
         pairs.push(("id", Json::Num(id as f64)));
     }
+    // Elided when untraced so pre-telemetry peers see the exact old
+    // encoding.
+    if r.trace != 0 {
+        pairs.push(("trace", Json::Num(r.trace as f64)));
+    }
     Json::obj(pairs)
 }
 
@@ -818,10 +833,16 @@ fn lease_reply_from_json(j: &Json) -> Result<LeaseReply> {
         ),
         None => None,
     };
+    // Optional on decode (older peers elide it; 0 = untraced).
+    let trace = match j.get("trace") {
+        None => 0,
+        Some(_) => field_u64(j, "trace")?,
+    };
     Ok(LeaseReply {
         lease,
         batch: batch_from_json(field(j, "batch")?)?,
         closed: field_bool(j, "closed")?,
+        trace,
     })
 }
 
@@ -844,6 +865,200 @@ fn worker_stat_from_json(j: &Json) -> Result<WorkerStat> {
         completed_rows: field_u64(j, "completed_rows")?,
         generated_tokens: field_u64(j, "generated_tokens")?,
         requeued_rows: field_u64(j, "requeued_rows")?,
+    })
+}
+
+// ===========================================================================
+// JSON codec — telemetry
+// ===========================================================================
+
+/// `f64` sibling of [`f32_to_json`]: histogram extremes can be NaN if
+/// someone observes one, and the wire must stay real JSON regardless.
+fn f64_to_json(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("nan".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn json_to_f64(j: &Json) -> Result<f64> {
+    match j {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => bail!("bad f64 tag {other:?}"),
+        },
+        _ => bail!("f64 must be a number or tagged string"),
+    }
+}
+
+fn field_f64(j: &Json, key: &str) -> Result<f64> {
+    json_to_f64(field(j, key)?)
+        .with_context(|| format!("field {key:?} must be an f64"))
+}
+
+fn span_to_json(s: &Span) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(s.name.clone())),
+        ("track", Json::Str(s.track.clone())),
+        ("trace", Json::Num(s.trace as f64)),
+        ("t0_us", Json::Num(s.t0_us as f64)),
+        ("dur_us", Json::Num(s.dur_us as f64)),
+    ])
+}
+
+fn span_from_json(j: &Json) -> Result<Span> {
+    Ok(Span {
+        name: field_str(j, "name")?,
+        track: field_str(j, "track")?,
+        trace: field_u64(j, "trace")?,
+        t0_us: field_u64(j, "t0_us")?,
+        dur_us: field_u64(j, "dur_us")?,
+    })
+}
+
+fn hist_snapshot_to_json(h: &HistSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::Num(h.count as f64)),
+        ("sum", f64_to_json(h.sum)),
+        ("min", f64_to_json(h.min)),
+        ("max", f64_to_json(h.max)),
+        ("p50", f64_to_json(h.p50)),
+        ("p95", f64_to_json(h.p95)),
+        ("p99", f64_to_json(h.p99)),
+    ])
+}
+
+fn hist_snapshot_from_json(j: &Json) -> Result<HistSnapshot> {
+    Ok(HistSnapshot {
+        count: field_u64(j, "count")?,
+        sum: field_f64(j, "sum")?,
+        min: field_f64(j, "min")?,
+        max: field_f64(j, "max")?,
+        p50: field_f64(j, "p50")?,
+        p95: field_f64(j, "p95")?,
+        p99: field_f64(j, "p99")?,
+    })
+}
+
+fn telemetry_report_to_json(r: &TelemetryReport) -> Json {
+    Json::obj(vec![
+        ("proc", Json::Str(r.proc.clone())),
+        ("spans", Json::Arr(r.spans.iter().map(span_to_json).collect())),
+        (
+            "counters",
+            Json::Arr(
+                r.counters
+                    .iter()
+                    .map(|(name, value)| {
+                        Json::obj(vec![
+                            ("name", Json::Str(name.clone())),
+                            ("value", Json::Num(*value as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "hists",
+            Json::Arr(
+                r.hists
+                    .iter()
+                    .map(|(name, snap)| {
+                        Json::obj(vec![
+                            ("name", Json::Str(name.clone())),
+                            ("snap", hist_snapshot_to_json(snap)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn telemetry_report_from_json(j: &Json) -> Result<TelemetryReport> {
+    Ok(TelemetryReport {
+        proc: field_str(j, "proc")?,
+        spans: field_arr(j, "spans")?
+            .iter()
+            .map(span_from_json)
+            .collect::<Result<_>>()?,
+        counters: field_arr(j, "counters")?
+            .iter()
+            .map(|c| Ok((field_str(c, "name")?, field_u64(c, "value")?)))
+            .collect::<Result<_>>()?,
+        hists: field_arr(j, "hists")?
+            .iter()
+            .map(|h| {
+                Ok((
+                    field_str(h, "name")?,
+                    hist_snapshot_from_json(field(h, "snap")?)?,
+                ))
+            })
+            .collect::<Result<_>>()?,
+    })
+}
+
+fn lineage_row_to_json(r: &LineageRow) -> Json {
+    Json::obj(vec![
+        ("index", Json::Num(r.index as f64)),
+        ("trace", Json::Num(r.trace as f64)),
+        ("gen_version", Json::Num(r.gen_version as f64)),
+        ("train_version", Json::Num(r.train_version as f64)),
+        ("leased_us", Json::Num(r.leased_us as f64)),
+        ("first_chunk_us", Json::Num(r.first_chunk_us as f64)),
+        ("last_chunk_us", Json::Num(r.last_chunk_us as f64)),
+        ("reward_us", Json::Num(r.reward_us as f64)),
+        ("advantage_us", Json::Num(r.advantage_us as f64)),
+        ("train_us", Json::Num(r.train_us as f64)),
+    ])
+}
+
+fn lineage_row_from_json(j: &Json) -> Result<LineageRow> {
+    Ok(LineageRow {
+        index: field_u64(j, "index")?,
+        trace: field_u64(j, "trace")?,
+        gen_version: field_u64(j, "gen_version")?,
+        train_version: field_u64(j, "train_version")?,
+        leased_us: field_u64(j, "leased_us")?,
+        first_chunk_us: field_u64(j, "first_chunk_us")?,
+        last_chunk_us: field_u64(j, "last_chunk_us")?,
+        reward_us: field_u64(j, "reward_us")?,
+        advantage_us: field_u64(j, "advantage_us")?,
+        train_us: field_u64(j, "train_us")?,
+    })
+}
+
+fn telemetry_snapshot_to_json(s: &TelemetrySnapshot) -> Json {
+    Json::obj(vec![
+        (
+            "procs",
+            Json::Arr(s.procs.iter().map(telemetry_report_to_json).collect()),
+        ),
+        (
+            "lineage",
+            Json::Arr(s.lineage.iter().map(lineage_row_to_json).collect()),
+        ),
+    ])
+}
+
+fn telemetry_snapshot_from_json(j: &Json) -> Result<TelemetrySnapshot> {
+    Ok(TelemetrySnapshot {
+        procs: field_arr(j, "procs")?
+            .iter()
+            .map(telemetry_report_from_json)
+            .collect::<Result<_>>()?,
+        lineage: field_arr(j, "lineage")?
+            .iter()
+            .map(lineage_row_from_json)
+            .collect::<Result<_>>()?,
     })
 }
 
@@ -1119,6 +1334,14 @@ impl ServiceRequest {
                     ("columns", columns_to_json(columns)),
                 ])
             }
+            ServiceRequest::ExportTelemetry { report } => {
+                let mut pairs =
+                    vec![("op", Json::Str("export_telemetry".into()))];
+                if let Some(r) = report {
+                    pairs.push(("report", telemetry_report_to_json(r)));
+                }
+                Json::obj(pairs)
+            }
             ServiceRequest::Stats => {
                 Json::obj(vec![("op", Json::Str("stats".into()))])
             }
@@ -1287,6 +1510,12 @@ impl ServiceRequest {
                 indices: indices_from_json(field_arr(j, "indices")?)?,
                 columns: columns_from_json(field_arr(j, "columns")?)?,
             },
+            "export_telemetry" => ServiceRequest::ExportTelemetry {
+                report: match j.get("report") {
+                    None => None,
+                    Some(r) => Some(telemetry_report_from_json(r)?),
+                },
+            },
             "stats" => ServiceRequest::Stats,
             "evict" => ServiceRequest::Evict {
                 indices: indices_from_json(field_arr(j, "indices")?)?,
@@ -1301,11 +1530,38 @@ impl ServiceRequest {
         Ok(self.to_json()?.to_string())
     }
 
+    /// One JSONL wire line carrying a trace id. `trace = 0` elides the
+    /// field, producing the exact [`ServiceRequest::to_line`] bytes —
+    /// pre-telemetry peers never see anything new, and newer peers
+    /// that don't understand `trace` ignore unknown keys by
+    /// construction.
+    pub fn to_line_traced(&self, trace: u64) -> Result<String> {
+        let mut j = self.to_json()?;
+        if trace != 0 {
+            if let Json::Obj(pairs) = &mut j {
+                pairs.insert("trace".into(), Json::Num(trace as f64));
+            }
+        }
+        Ok(j.to_string())
+    }
+
     /// Parse one JSONL request line.
     pub fn parse_line(line: &str) -> Result<ServiceRequest> {
         let j = Json::parse(line.trim())
             .map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
         ServiceRequest::from_json(&j)
+    }
+
+    /// Parse one JSONL request line plus its trace id (`0` = the peer
+    /// sent none — old encoders, or an untraced call).
+    pub fn parse_line_traced(line: &str) -> Result<(ServiceRequest, u64)> {
+        let j = Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
+        let trace = match j.get("trace") {
+            None => 0,
+            Some(_) => field_u64(&j, "trace")?,
+        };
+        Ok((ServiceRequest::from_json(&j)?, trace))
     }
 }
 
@@ -1563,6 +1819,10 @@ impl ServiceResponse {
                     Json::Arr(ws.iter().map(worker_stat_to_json).collect()),
                 ),
             ]),
+            ServiceResponse::Telemetry(snap) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("telemetry", telemetry_snapshot_to_json(snap)),
+            ]),
             ServiceResponse::Err(msg) => Json::obj(vec![
                 ("ok", Json::Bool(false)),
                 ("error", Json::Str(msg.clone())),
@@ -1752,6 +2012,11 @@ impl ServiceResponse {
                     .context("closed must be a bool")?,
                 weights,
             }));
+        }
+        if let Some(t) = j.get("telemetry") {
+            return Ok(ServiceResponse::Telemetry(
+                telemetry_snapshot_from_json(t)?,
+            ));
         }
         Ok(ServiceResponse::Ok)
     }
@@ -2231,12 +2496,14 @@ mod tests {
             lease: Some(42),
             batch: batch.clone(),
             closed: false,
+            trace: 0xfeed,
         };
         match roundtrip_resp(ServiceResponse::Lease(granted)) {
             ServiceResponse::Lease(got) => {
                 assert_eq!(got.lease, Some(42));
                 assert_eq!(got.batch.indices, batch.indices);
                 assert!(!got.closed);
+                assert_eq!(got.trace, 0xfeed);
             }
             _ => panic!("wrong variant"),
         }
@@ -2248,12 +2515,155 @@ mod tests {
                 rows: vec![],
             },
             closed: true,
+            trace: 0,
         };
         match roundtrip_resp(ServiceResponse::Lease(empty)) {
             ServiceResponse::Lease(got) => {
                 assert_eq!(got.lease, None);
                 assert!(got.batch.is_empty());
                 assert!(got.closed);
+                assert_eq!(got.trace, 0);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn lease_reply_without_trace_decodes_leniently() {
+        // A pre-telemetry server's encoding: no trace field.
+        let line = "{\"ok\":true,\"lease\":{\"id\":7,\"closed\":false,\
+                    \"batch\":{\"indices\":[3],\"columns\":[\"prompts\"],\
+                    \"rows\":[[{\"t\":\"i32s\",\"v\":[1]}]]}}}";
+        match ServiceResponse::parse_line(line).unwrap() {
+            ServiceResponse::Lease(got) => {
+                assert_eq!(got.lease, Some(7));
+                assert_eq!(got.trace, 0);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // ...and an untraced reply encodes byte-identically to the old
+        // wire form (no "trace" key at all).
+        let reply = crate::rollout::LeaseReply {
+            lease: Some(7),
+            batch: Batch {
+                indices: vec![GlobalIndex(3)],
+                columns: vec![Column::Prompts],
+                rows: vec![vec![Value::I32s(vec![1])]],
+            },
+            closed: false,
+            trace: 0,
+        };
+        let enc =
+            ServiceResponse::Lease(reply).to_line().unwrap();
+        assert!(!enc.contains("trace"), "untraced reply grew a field");
+    }
+
+    #[test]
+    fn traced_request_lines_roundtrip_and_stay_compatible() {
+        let req = ServiceRequest::AckBatch { lease: 5 };
+        // trace = 0 elides the field: byte-identical to to_line().
+        assert_eq!(
+            req.to_line_traced(0).unwrap(),
+            req.to_line().unwrap()
+        );
+        let line = req.to_line_traced(0xbeef).unwrap();
+        // An old decoder ignores the trace key entirely...
+        match ServiceRequest::parse_line(&line).unwrap() {
+            ServiceRequest::AckBatch { lease } => assert_eq!(lease, 5),
+            _ => panic!("wrong variant"),
+        }
+        // ...while a new decoder extracts it.
+        let (got, trace) =
+            ServiceRequest::parse_line_traced(&line).unwrap();
+        assert!(matches!(got, ServiceRequest::AckBatch { lease: 5 }));
+        assert_eq!(trace, 0xbeef);
+        // An untraced line decodes with trace 0.
+        let (_, trace) = ServiceRequest::parse_line_traced(
+            &req.to_line().unwrap(),
+        )
+        .unwrap();
+        assert_eq!(trace, 0);
+    }
+
+    #[test]
+    fn export_telemetry_request_roundtrips() {
+        // Fetch-only form: no report.
+        match roundtrip_req(ServiceRequest::ExportTelemetry {
+            report: None,
+        }) {
+            ServiceRequest::ExportTelemetry { report } => {
+                assert!(report.is_none())
+            }
+            _ => panic!("wrong variant"),
+        }
+        // Push form: spans + counters + histograms survive the wire.
+        let report = crate::telemetry::TelemetryReport {
+            proc: "worker-0".into(),
+            spans: vec![crate::telemetry::Span {
+                name: "generate".into(),
+                track: "worker-0".into(),
+                trace: 0xabc,
+                t0_us: 1_700_000_000_000_000,
+                dur_us: 2500,
+            }],
+            counters: vec![("rollout.samples".into(), 12)],
+            hists: vec![(
+                "ttfs_ms".into(),
+                HistSnapshot {
+                    count: 3,
+                    sum: 30.0,
+                    min: 5.0,
+                    max: 15.0,
+                    p50: 10.0,
+                    p95: 14.0,
+                    p99: 15.0,
+                },
+            )],
+        };
+        match roundtrip_req(ServiceRequest::ExportTelemetry {
+            report: Some(report.clone()),
+        }) {
+            ServiceRequest::ExportTelemetry { report: Some(got) } => {
+                assert_eq!(got, report)
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn telemetry_response_roundtrips_spans_and_lineage() {
+        let snap = crate::telemetry::TelemetrySnapshot {
+            procs: vec![crate::telemetry::TelemetryReport {
+                proc: "coordinator".into(),
+                spans: vec![crate::telemetry::Span {
+                    name: "put_chunk".into(),
+                    track: "service".into(),
+                    trace: 9,
+                    t0_us: 100,
+                    dur_us: 50,
+                }],
+                counters: vec![],
+                hists: vec![],
+            }],
+            lineage: vec![crate::telemetry::LineageRow {
+                index: 4,
+                trace: 9,
+                gen_version: 2,
+                train_version: 3,
+                leased_us: 10,
+                first_chunk_us: 20,
+                last_chunk_us: 30,
+                reward_us: 40,
+                advantage_us: 50,
+                train_us: 60,
+            }],
+        };
+        match roundtrip_resp(ServiceResponse::Telemetry(snap.clone())) {
+            ServiceResponse::Telemetry(got) => {
+                assert_eq!(got.procs, snap.procs);
+                assert_eq!(got.lineage, snap.lineage);
+                assert!(got.lineage[0].complete());
+                assert_eq!(got.lineage[0].staleness(), 1);
             }
             _ => panic!("wrong variant"),
         }

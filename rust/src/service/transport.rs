@@ -121,7 +121,11 @@ impl TcpJsonlTransport {
 
 impl Transport for TcpJsonlTransport {
     fn call(&self, req: ServiceRequest) -> Result<ServiceResponse> {
-        let line = req.to_line()?;
+        // Trace propagation: the caller's ambient trace id rides the
+        // request line as an optional envelope field. Old servers
+        // parse and ignore it; `to_line_traced(0)` is byte-identical
+        // to the untraced encoding.
+        let line = req.to_line_traced(crate::telemetry::current_trace())?;
         let mut io = self.io.lock().unwrap();
         let (reader, writer) = &mut *io;
         writer.write_all(line.as_bytes())?;
@@ -241,12 +245,16 @@ fn serve_connection(session: Arc<Session>, stream: TcpStream) {
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match ServiceRequest::parse_line(&line) {
-            Ok(req) => {
+        let resp = match ServiceRequest::parse_line_traced(&line) {
+            Ok((req, trace)) => {
                 let acked = match &req {
                     ServiceRequest::AckBatch { lease } => Some(*lease),
                     _ => None,
                 };
+                // The peer's trace id becomes ambient for the dispatch
+                // so server-side spans and onward data-plane writes
+                // join the caller's trace.
+                let _scope = crate::telemetry::scoped_trace(trace);
                 let resp = session.handle(req);
                 match &resp {
                     ServiceResponse::Batch(GetBatchReply::Leased {

@@ -1,0 +1,142 @@
+//! Tiny leveled logger for operator-facing status lines.
+//!
+//! The scattered `eprintln!` status lines used to carry ad-hoc,
+//! clock-free prefixes; routing them through here gives every line a
+//! level, a target, and a timestamp on the *same wall clock* the
+//! telemetry spans use, so operator output and exported traces agree
+//! on time.
+//!
+//! Level selection: `ASYNCFLOW_LOG=debug|info|warn` (default `info`).
+//! Format: `[HH:MM:SS.mmm LEVEL target] message` (UTC), written to
+//! stderr so stdout stays parseable (CSV dumps, trace JSON).
+//!
+//! Use via the crate-level macros:
+//!
+//! ```
+//! asyncflow::log_info!("serve", "listening on {}", "127.0.0.1:9000");
+//! asyncflow::log_warn!("worker", "lease lost, re-leasing");
+//! asyncflow::log_debug!("stage", "batch of {} rows", 8);
+//! ```
+
+use std::sync::OnceLock;
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug,
+    Info,
+    Warn,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO",
+            Level::Warn => "WARN",
+        }
+    }
+}
+
+/// The minimum level that gets printed (from `ASYNCFLOW_LOG`,
+/// default [`Level::Info`]; unknown values fall back to the default).
+pub fn level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        match std::env::var("ASYNCFLOW_LOG").as_deref() {
+            Ok("debug") => Level::Debug,
+            Ok("warn") => Level::Warn,
+            _ => Level::Info,
+        }
+    })
+}
+
+/// Whether a message at `lvl` would be printed.
+pub fn enabled(lvl: Level) -> bool {
+    lvl >= level()
+}
+
+/// Format the wall clock as `HH:MM:SS.mmm` (UTC time of day — enough
+/// to correlate with span timestamps without a date library).
+fn clock() -> String {
+    let us = super::now_us();
+    let ms = (us / 1000) % 86_400_000;
+    format!(
+        "{:02}:{:02}:{:02}.{:03}",
+        ms / 3_600_000,
+        (ms / 60_000) % 60,
+        (ms / 1000) % 60,
+        ms % 1000
+    )
+}
+
+/// Print one line (the macro backend; call the macros instead).
+pub fn write(lvl: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    eprintln!("[{} {} {}] {}", clock(), lvl.tag(), target, args);
+}
+
+/// Log at debug level: `log_debug!("target", "fmt {}", args)`.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::telemetry::log::write(
+            $crate::telemetry::log::Level::Debug,
+            $target,
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at info level: `log_info!("target", "fmt {}", args)`.
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::telemetry::log::write(
+            $crate::telemetry::log::Level::Info,
+            $target,
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at warn level: `log_warn!("target", "fmt {}", args)`.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::telemetry::log::write(
+            $crate::telemetry::log::Level::Warn,
+            $target,
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_default_gate() {
+        assert!(Level::Debug < Level::Info && Level::Info < Level::Warn);
+        // Whatever ASYNCFLOW_LOG says, warn is never filtered out.
+        assert!(enabled(Level::Warn));
+    }
+
+    #[test]
+    fn clock_is_well_formed() {
+        let c = clock();
+        assert_eq!(c.len(), 12, "HH:MM:SS.mmm: {c}");
+        assert_eq!(&c[2..3], ":");
+        assert_eq!(&c[8..9], ".");
+    }
+
+    #[test]
+    fn macros_compile_and_respect_level() {
+        crate::log_debug!("test", "below default level {}", 1);
+        crate::log_info!("test", "info line");
+        crate::log_warn!("test", "warn line");
+    }
+}

@@ -1,0 +1,666 @@
+//! Distributed telemetry plane: cross-process trace spans.
+//!
+//! Every process in a run (coordinator, rollout workers, TCP stages,
+//! storage units) records named [`Span`]s into a ring-buffered
+//! [`SpanLog`] with wall-clock-aligned timestamps (microseconds since
+//! the UNIX epoch), so spans from different machines land on one shared
+//! time axis. A *trace id* stitches causally related spans together
+//! across processes: the coordinator mints one per rollout lease, the
+//! reply carries it to the worker, the worker's chunk uploads carry it
+//! back, and the data plane stamps it onto the binary `put` frames it
+//! fans out to storage units — a lease→chunk→put→ack chain shares one
+//! id end to end.
+//!
+//! Propagation is ambient, not positional: the current trace id lives
+//! in a thread-local ([`set_current_trace`] / [`current_trace`]), the
+//! TCP transport copies it into an optional `trace` field on the
+//! request envelope (lenient decode — old peers ignore it), and the
+//! server thread restores it before dispatch. Code that records spans
+//! never threads ids through call signatures.
+//!
+//! Collection is pull/push hybrid: remote processes push drained logs
+//! to the coordinator via the `export_telemetry` verb; `asyncflow
+//! trace --connect` merges everything into Chrome trace-event JSON
+//! ([`chrome_trace`]) that loads directly in Perfetto — one track per
+//! process/stage, the paper's Fig. 11 from a live distributed run.
+//!
+//! Overhead: recording a span is two `SystemTime` reads, one short
+//! mutex hold and one `VecDeque` push; when telemetry is disabled
+//! ([`enabled`] is `false`) recording is a single atomic load.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::metrics::HistSnapshot;
+use crate::util::json::Json;
+
+pub mod log;
+
+/// JSON numbers travel as `f64`, which is exact only below 2^53 —
+/// trace ids are minted under this mask so they survive the JSONL
+/// wire unchanged.
+pub const TRACE_ID_MASK: u64 = (1 << 53) - 1;
+
+/// One named interval on a process-local track, on the wall clock.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// What happened (`"generate"`, `"put_chunk"`, ...).
+    pub name: String,
+    /// Display track within the process (worker name, stage name,
+    /// `"service"` for coordinator verb handling, ...).
+    pub track: String,
+    /// Trace id shared across causally related spans (0 = untraced).
+    pub trace: u64,
+    /// Start, microseconds since the UNIX epoch.
+    pub t0_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+}
+
+struct LogInner {
+    spans: VecDeque<Span>,
+    dropped: u64,
+}
+
+/// Ring-buffered span sink: bounded memory, oldest spans evicted
+/// (counted in [`SpanLog::dropped`]) when a process records faster
+/// than it exports.
+pub struct SpanLog {
+    cap: usize,
+    inner: Mutex<LogInner>,
+}
+
+/// Default ring capacity of the process-global log.
+pub const SPAN_LOG_CAP: usize = 8192;
+
+impl SpanLog {
+    /// An empty log holding at most `cap` spans.
+    pub fn new(cap: usize) -> Self {
+        SpanLog {
+            cap: cap.max(1),
+            inner: Mutex::new(LogInner {
+                spans: VecDeque::new(),
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Append one span, evicting the oldest at capacity.
+    pub fn record(&self, span: Span) {
+        let mut g = self.inner.lock().unwrap();
+        if g.spans.len() >= self.cap {
+            g.spans.pop_front();
+            g.dropped += 1;
+        }
+        g.spans.push_back(span);
+    }
+
+    /// Take every buffered span (the export path — a second drain
+    /// returns only what was recorded in between).
+    pub fn drain(&self) -> Vec<Span> {
+        let mut g = self.inner.lock().unwrap();
+        g.spans.drain(..).collect()
+    }
+
+    /// Buffered spans (cheap peek for tests/stats).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().spans.len()
+    }
+
+    /// Whether nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans evicted unexported since the log was created.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+}
+
+impl Default for SpanLog {
+    fn default() -> Self {
+        SpanLog::new(SPAN_LOG_CAP)
+    }
+}
+
+/// The process-global span log (what real processes export).
+pub fn global() -> &'static Arc<SpanLog> {
+    static GLOBAL: OnceLock<Arc<SpanLog>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(SpanLog::default()))
+}
+
+thread_local! {
+    static THREAD_LOG: RefCell<Option<Arc<SpanLog>>> =
+        const { RefCell::new(None) };
+    static CURRENT_TRACE: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Redirect this thread's span recording to `log` (`None` restores
+/// the process-global log). Lets one OS process host several logical
+/// "processes" — each worker/stage thread of an in-process run or an
+/// e2e test keeps its own exportable log.
+pub fn install_thread_log(log: Option<Arc<SpanLog>>) {
+    THREAD_LOG.with(|l| *l.borrow_mut() = log);
+}
+
+/// The log this thread records into: the installed thread log, else
+/// the process-global one.
+pub fn active_log() -> Arc<SpanLog> {
+    THREAD_LOG.with(|l| {
+        l.borrow().clone().unwrap_or_else(|| global().clone())
+    })
+}
+
+/// Whether this thread has its own span log installed (so draining
+/// `active_log` takes only this logical process's spans, not the
+/// whole process-global log).
+pub fn thread_log_installed() -> bool {
+    THREAD_LOG.with(|l| l.borrow().is_some())
+}
+
+// Enable gate: 0 = follow ASYNCFLOW_TELEMETRY (default on),
+// 1 = forced on, 2 = forced off.
+static ENABLE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+fn env_enabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        !matches!(
+            std::env::var("ASYNCFLOW_TELEMETRY").as_deref(),
+            Ok("0") | Ok("off") | Ok("false")
+        )
+    })
+}
+
+/// Whether span recording is on (`ASYNCFLOW_TELEMETRY=off|0|false`
+/// disables it; [`set_enabled`] overrides the environment).
+pub fn enabled() -> bool {
+    match ENABLE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => env_enabled(),
+    }
+}
+
+/// Force telemetry on/off (`None` = back to the environment's say).
+/// The bench uses this to measure the enabled-vs-disabled delta in
+/// one process.
+pub fn set_enabled(on: Option<bool>) {
+    let v = match on {
+        None => 0,
+        Some(true) => 1,
+        Some(false) => 2,
+    };
+    ENABLE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// `set_enabled` is process-global; unit tests anywhere in the crate
+/// that flip it — or assert on state that depends on it — serialize
+/// through this gate so the parallel test runner can't interleave
+/// them.
+#[cfg(test)]
+pub(crate) fn test_enable_gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|poison| poison.into_inner())
+}
+
+/// Microseconds since the UNIX epoch — the shared time axis every
+/// process aligns spans to.
+pub fn now_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// Mint a fresh nonzero trace id, unique within this process and
+/// overwhelmingly likely unique across a run (seeded from the wall
+/// clock), always below 2^53 (see [`TRACE_ID_MASK`]).
+pub fn mint_trace() -> u64 {
+    static NEXT: OnceLock<AtomicU64> = OnceLock::new();
+    let next = NEXT.get_or_init(|| {
+        // Seed high bits from the clock so two processes minting
+        // concurrently do not collide on small counters.
+        AtomicU64::new((now_us() << 16) & TRACE_ID_MASK)
+    });
+    loop {
+        let id = next.fetch_add(1, Ordering::Relaxed) & TRACE_ID_MASK;
+        if id != 0 {
+            return id;
+        }
+    }
+}
+
+/// The trace id ambient on this thread (0 = none).
+pub fn current_trace() -> u64 {
+    CURRENT_TRACE.with(|t| t.get())
+}
+
+/// Set the ambient trace id for this thread, returning the previous
+/// one. Prefer [`scoped_trace`] where an RAII restore fits.
+pub fn set_current_trace(trace: u64) -> u64 {
+    CURRENT_TRACE.with(|t| t.replace(trace))
+}
+
+/// RAII: ambient trace set for the guard's lifetime, prior value
+/// restored on drop.
+pub struct TraceScope {
+    prev: u64,
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        set_current_trace(self.prev);
+    }
+}
+
+/// Make `trace` the ambient trace id until the returned guard drops.
+pub fn scoped_trace(trace: u64) -> TraceScope {
+    TraceScope { prev: set_current_trace(trace) }
+}
+
+/// Record a complete span into this thread's active log (no-op when
+/// telemetry is disabled).
+pub fn record_span(
+    name: impl Into<String>,
+    track: impl Into<String>,
+    trace: u64,
+    t0_us: u64,
+    t1_us: u64,
+) {
+    if !enabled() {
+        return;
+    }
+    active_log().record(Span {
+        name: name.into(),
+        track: track.into(),
+        trace,
+        t0_us,
+        dur_us: t1_us.saturating_sub(t0_us),
+    });
+}
+
+/// RAII span: times from construction to drop, stamped with the
+/// ambient trace id at construction.
+pub struct SpanGuard {
+    name: String,
+    track: String,
+    trace: u64,
+    t0_us: u64,
+    armed: bool,
+}
+
+impl SpanGuard {
+    /// Discard without recording (e.g. the guarded operation failed
+    /// and a span would misreport work done).
+    pub fn cancel(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            record_span(
+                std::mem::take(&mut self.name),
+                std::mem::take(&mut self.track),
+                self.trace,
+                self.t0_us,
+                now_us(),
+            );
+        }
+    }
+}
+
+/// Start an RAII span on `track` carrying the ambient trace id.
+pub fn span(
+    name: impl Into<String>,
+    track: impl Into<String>,
+) -> SpanGuard {
+    SpanGuard {
+        name: name.into(),
+        track: track.into(),
+        trace: current_trace(),
+        t0_us: now_us(),
+        armed: enabled(),
+    }
+}
+
+// ===========================================================================
+// Export types
+// ===========================================================================
+
+/// One process's drained telemetry: its spans plus registry
+/// aggregates, pushed to the coordinator via `export_telemetry`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TelemetryReport {
+    /// Logical process name (`"coordinator"`, worker/stage/unit name).
+    pub proc: String,
+    pub spans: Vec<Span>,
+    /// Counter snapshot from the process's [`crate::metrics::Registry`].
+    pub counters: Vec<(String, u64)>,
+    /// Histogram summaries from the same registry.
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+/// Per-sample lineage: wall-clock event timestamps (microseconds,
+/// 0 = event not yet observed) plus the policy versions on either
+/// side of the sample's life.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LineageRow {
+    /// The sample's global index.
+    pub index: u64,
+    /// Trace id minted when the prompt was leased (0 = untraced).
+    pub trace: u64,
+    /// Policy version that generated the response.
+    pub gen_version: u64,
+    /// Parameter version current when the sample entered a train batch.
+    pub train_version: u64,
+    /// Prompt leased to a rollout worker.
+    pub leased_us: u64,
+    /// First response chunk committed.
+    pub first_chunk_us: u64,
+    /// Final chunk committed (response complete).
+    pub last_chunk_us: u64,
+    /// Reward written.
+    pub reward_us: u64,
+    /// Advantage ready.
+    pub advantage_us: u64,
+    /// Consumed into a train batch.
+    pub train_us: u64,
+}
+
+impl LineageRow {
+    /// Whether every stage of the chain has been observed
+    /// (leased → chunks → reward → advantage → train).
+    pub fn complete(&self) -> bool {
+        self.leased_us != 0
+            && self.first_chunk_us != 0
+            && self.last_chunk_us != 0
+            && self.reward_us != 0
+            && self.advantage_us != 0
+            && self.train_us != 0
+    }
+
+    /// Version staleness at train time (paper §4.2.2): how many
+    /// publishes behind the trainer the generating policy was.
+    pub fn staleness(&self) -> u64 {
+        self.train_version.saturating_sub(self.gen_version)
+    }
+}
+
+/// The merged view the coordinator serves: one report per process
+/// plus the per-sample lineage table.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TelemetrySnapshot {
+    pub procs: Vec<TelemetryReport>,
+    pub lineage: Vec<LineageRow>,
+}
+
+// ===========================================================================
+// Chrome trace-event export
+// ===========================================================================
+
+fn event(
+    name: &str,
+    ph: &str,
+    ts: u64,
+    pid: usize,
+    tid: usize,
+    extra: Vec<(&str, Json)>,
+) -> Json {
+    let mut fields = vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str(ph.to_string())),
+        ("ts", Json::Num(ts as f64)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+/// Merge a snapshot into Chrome trace-event JSON (the array form):
+/// one `pid` per process report, one `tid` per track within it,
+/// complete (`"X"`) events in epoch microseconds, and metadata
+/// events naming each process. Loads directly in Perfetto /
+/// `chrome://tracing` — one lane per process/stage, the paper's
+/// Fig. 11 layout.
+pub fn chrome_trace(snap: &TelemetrySnapshot) -> Json {
+    let mut events = Vec::new();
+    for (pi, proc) in snap.procs.iter().enumerate() {
+        let pid = pi + 1;
+        events.push(event(
+            "process_name",
+            "M",
+            0,
+            pid,
+            0,
+            vec![(
+                "args",
+                Json::obj(vec![("name", Json::Str(proc.proc.clone()))]),
+            )],
+        ));
+        let mut tracks: Vec<&str> = Vec::new();
+        for s in &proc.spans {
+            let tid = match tracks.iter().position(|t| *t == s.track) {
+                Some(i) => i + 1,
+                None => {
+                    tracks.push(&s.track);
+                    events.push(event(
+                        "thread_name",
+                        "M",
+                        0,
+                        pid,
+                        tracks.len(),
+                        vec![(
+                            "args",
+                            Json::obj(vec![(
+                                "name",
+                                Json::Str(s.track.clone()),
+                            )]),
+                        )],
+                    ));
+                    tracks.len()
+                }
+            };
+            events.push(event(
+                &s.name,
+                "X",
+                s.t0_us,
+                pid,
+                tid,
+                vec![
+                    ("dur", Json::Num(s.dur_us as f64)),
+                    (
+                        "args",
+                        Json::obj(vec![("trace", Json::Num(s.trace as f64))]),
+                    ),
+                ],
+            ));
+        }
+    }
+    Json::Arr(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate() -> std::sync::MutexGuard<'static, ()> {
+        test_enable_gate()
+    }
+
+    #[test]
+    fn ring_buffer_evicts_oldest_and_counts_drops() {
+        let log = SpanLog::new(3);
+        for i in 0..5u64 {
+            log.record(Span {
+                name: format!("s{i}"),
+                track: "t".into(),
+                trace: 0,
+                t0_us: i,
+                dur_us: 1,
+            });
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped(), 2);
+        let spans = log.drain();
+        assert_eq!(spans[0].name, "s2", "oldest surviving span first");
+        assert_eq!(spans[2].name, "s4");
+        assert!(log.is_empty(), "drain empties the ring");
+    }
+
+    #[test]
+    fn mint_trace_is_nonzero_unique_and_json_safe() {
+        let a = mint_trace();
+        let b = mint_trace();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+        assert!(a <= TRACE_ID_MASK && b <= TRACE_ID_MASK);
+    }
+
+    #[test]
+    fn scoped_trace_restores_previous_id() {
+        let prev = set_current_trace(7);
+        {
+            let _g = scoped_trace(42);
+            assert_eq!(current_trace(), 42);
+            {
+                let _g2 = scoped_trace(43);
+                assert_eq!(current_trace(), 43);
+            }
+            assert_eq!(current_trace(), 42);
+        }
+        assert_eq!(current_trace(), 7);
+        set_current_trace(prev);
+    }
+
+    #[test]
+    fn span_guard_records_into_thread_log_with_ambient_trace() {
+        let _g = gate();
+        let log = Arc::new(SpanLog::new(16));
+        install_thread_log(Some(log.clone()));
+        set_enabled(Some(true));
+        {
+            let _t = scoped_trace(99);
+            let _s = span("work", "unit-0");
+        }
+        set_enabled(None);
+        install_thread_log(None);
+        let spans = log.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "work");
+        assert_eq!(spans[0].track, "unit-0");
+        assert_eq!(spans[0].trace, 99);
+        assert!(spans[0].t0_us > 0);
+    }
+
+    #[test]
+    fn disabled_telemetry_records_nothing() {
+        let _g = gate();
+        let log = Arc::new(SpanLog::new(16));
+        install_thread_log(Some(log.clone()));
+        set_enabled(Some(false));
+        {
+            let _s = span("work", "t");
+        }
+        record_span("x", "t", 0, 1, 2);
+        set_enabled(None);
+        install_thread_log(None);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn cancelled_span_guard_records_nothing() {
+        let _g = gate();
+        let log = Arc::new(SpanLog::new(16));
+        install_thread_log(Some(log.clone()));
+        set_enabled(Some(true));
+        span("aborted", "t").cancel();
+        set_enabled(None);
+        install_thread_log(None);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn lineage_row_completeness_and_staleness() {
+        let mut r = LineageRow {
+            index: 3,
+            trace: 5,
+            gen_version: 2,
+            train_version: 4,
+            leased_us: 1,
+            first_chunk_us: 2,
+            last_chunk_us: 3,
+            reward_us: 4,
+            advantage_us: 5,
+            train_us: 6,
+        };
+        assert!(r.complete());
+        assert_eq!(r.staleness(), 2);
+        r.reward_us = 0;
+        assert!(!r.complete());
+    }
+
+    #[test]
+    fn chrome_trace_emits_metadata_and_complete_events() {
+        let snap = TelemetrySnapshot {
+            procs: vec![TelemetryReport {
+                proc: "worker-0".into(),
+                spans: vec![
+                    Span {
+                        name: "generate".into(),
+                        track: "w0".into(),
+                        trace: 9,
+                        t0_us: 100,
+                        dur_us: 50,
+                    },
+                    Span {
+                        name: "put_chunk".into(),
+                        track: "w0".into(),
+                        trace: 9,
+                        t0_us: 160,
+                        dur_us: 5,
+                    },
+                ],
+                counters: vec![],
+                hists: vec![],
+            }],
+            lineage: vec![],
+        };
+        let Json::Arr(events) = chrome_trace(&snap) else {
+            panic!("trace must be a JSON array");
+        };
+        // process_name + thread_name + 2 X events.
+        assert_eq!(events.len(), 4);
+        let phases: Vec<String> = events
+            .iter()
+            .map(|e| {
+                e.get("ph").and_then(Json::as_str).unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(phases.iter().filter(|p| *p == "M").count(), 2);
+        assert_eq!(phases.iter().filter(|p| *p == "X").count(), 2);
+        for e in &events {
+            for key in ["name", "ph", "ts", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "event missing {key}");
+            }
+        }
+        // Both spans share one track -> one tid.
+        let x: Vec<&Json> = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("X")
+            })
+            .collect();
+        assert_eq!(
+            x[0].get("tid").unwrap().as_i64(),
+            x[1].get("tid").unwrap().as_i64()
+        );
+    }
+}

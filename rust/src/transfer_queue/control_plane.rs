@@ -609,11 +609,19 @@ impl<S> LeaseRegistry<S> {
         let mut out = Vec::new();
         for id in expired {
             let lease = g.leases.remove(&id).unwrap();
-            out.push(RevokedLease {
+            let revoked = RevokedLease {
                 rows: lease.undone(),
                 owner: lease.owner,
                 task: lease.task,
-            });
+            };
+            crate::log_warn!(
+                "lease-registry",
+                "lease {id} ({}/{}) expired; requeueing {} undone rows",
+                revoked.task,
+                revoked.owner,
+                revoked.rows.len()
+            );
+            out.push(revoked);
         }
         out
     }

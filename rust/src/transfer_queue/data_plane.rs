@@ -335,9 +335,10 @@ impl DataPlane {
     fn detach_for_error(&self, unit: usize, err: &UnitCallError) {
         let mut guard = self.slots[unit].remote.write().unwrap();
         if let Some(r) = guard.take() {
-            eprintln!(
-                "[data-plane] unit {unit} at {} detached after {err}; \
-                 serving the shard from the coordinator-local replica",
+            crate::log_warn!(
+                "data-plane",
+                "unit {unit} at {} detached after {err}; serving the \
+                 shard from the coordinator-local replica",
                 r.endpoint().unwrap_or_default()
             );
         }

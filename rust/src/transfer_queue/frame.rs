@@ -252,8 +252,12 @@ impl<'a> Cursor<'a> {
 #[derive(Debug, Clone, PartialEq)]
 pub enum UnitRequest {
     /// Batched value-first write. All-or-error per cell, applied in
-    /// order; the unit rejects duplicate cells.
-    Put { cells: Vec<(GlobalIndex, Column, Value)> },
+    /// order; the unit rejects duplicate cells. `trace` is the
+    /// telemetry trace id the write happened under (0 = untraced);
+    /// it rides the frame only when nonzero, and decoders tolerate
+    /// its absence, so untraced traffic is byte-identical to the
+    /// pre-telemetry format.
+    Put { cells: Vec<(GlobalIndex, Column, Value)>, trace: u64 },
     /// Batched payload fetch: one entry per index, `None` when the row
     /// lacks any of the requested columns on this unit.
     Fetch { indices: Vec<GlobalIndex>, columns: Vec<Column> },
@@ -349,13 +353,16 @@ impl UnitRequest {
     pub fn encode(&self) -> Vec<u8> {
         let mut buf = Vec::new();
         match self {
-            UnitRequest::Put { cells } => {
+            UnitRequest::Put { cells, trace } => {
                 buf.push(REQ_PUT);
                 put_u32(&mut buf, cells.len() as u32);
                 for (idx, col, val) in cells {
                     put_u64(&mut buf, idx.0);
                     put_column(&mut buf, col);
                     put_value(&mut buf, val);
+                }
+                if *trace != 0 {
+                    put_u64(&mut buf, *trace);
                 }
             }
             UnitRequest::Fetch { indices, columns } => {
@@ -413,7 +420,11 @@ impl UnitRequest {
                     let val = c.value()?;
                     cells.push((idx, col, val));
                 }
-                UnitRequest::Put { cells }
+                // Optional trace suffix (absent on pre-telemetry
+                // senders and on untraced writes).
+                let trace =
+                    if c.pos < c.buf.len() { c.u64()? } else { 0 };
+                UnitRequest::Put { cells, trace }
             }
             REQ_FETCH => {
                 let indices = read_indices(&mut c)?;
@@ -670,6 +681,7 @@ mod tests {
                     Value::Text("meta".into()),
                 ),
             ],
+            trace: 0,
         };
         assert_eq!(roundtrip_req(put.clone()), put);
         let fetch = UnitRequest::Fetch {
@@ -728,6 +740,32 @@ mod tests {
             }
             other => panic!("wrong variant {other:?}"),
         }
+    }
+
+    #[test]
+    fn put_trace_roundtrips_and_stays_wire_compatible() {
+        let cells = vec![(
+            GlobalIndex(7),
+            Column::Responses,
+            Value::I32s(vec![4, 5]),
+        )];
+        let traced = UnitRequest::Put { cells: cells.clone(), trace: 0xBEEF };
+        assert_eq!(roundtrip_req(traced.clone()), traced);
+        // An untraced Put encodes byte-identically to the
+        // pre-telemetry format: no trailing trace word at all.
+        let untraced = UnitRequest::Put { cells: cells.clone(), trace: 0 };
+        let legacy = {
+            // Hand-encode the old format (cells only).
+            let mut buf = vec![REQ_PUT];
+            put_u32(&mut buf, 1);
+            put_u64(&mut buf, 7);
+            put_column(&mut buf, &Column::Responses);
+            put_value(&mut buf, &Value::I32s(vec![4, 5]));
+            buf
+        };
+        assert_eq!(untraced.encode(), legacy);
+        // And a legacy frame decodes with trace 0.
+        assert_eq!(UnitRequest::decode(&legacy).unwrap(), untraced);
     }
 
     #[test]

@@ -147,7 +147,12 @@ impl TransferQueue {
         if self.closed.load(Ordering::SeqCst) {
             bail!("cannot attach unit {unit}: queue is closed");
         }
-        self.data.attach_remote(unit, endpoint)
+        self.data.attach_remote(unit, endpoint)?;
+        crate::log_info!(
+            "transfer-queue",
+            "storage unit {unit} attached at {endpoint}"
+        );
+        Ok(())
     }
 
     /// Ingest metadata for cells whose payloads a client already wrote

@@ -309,7 +309,12 @@ impl UnitHandle for RemoteUnit {
         &self,
         cells: &[(GlobalIndex, Column, Value)],
     ) -> Result<(), UnitCallError> {
-        self.expect_ok(&UnitRequest::Put { cells: cells.to_vec() })
+        // Stamp the caller's ambient trace id on the frame so the
+        // unit's `put` span joins the lease→chunk→put chain.
+        self.expect_ok(&UnitRequest::Put {
+            cells: cells.to_vec(),
+            trace: crate::telemetry::current_trace(),
+        })
     }
 
     fn fetch_rows(
@@ -436,6 +441,14 @@ impl UnitServer {
         let local_addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(Mutex::new(Vec::new()));
+        // The binder's span log follows the unit onto its connection
+        // threads: a unit embedded in a multi-"process" test (or any
+        // host that gave its thread a dedicated log) keeps `unit_put`
+        // spans in its own exportable log instead of leaking them into
+        // the host's process-global one. A standalone storage-unit
+        // process has no thread log and records globally, as before.
+        let span_log = crate::telemetry::thread_log_installed()
+            .then(crate::telemetry::active_log);
         let accept_thread = {
             let stop = stop.clone();
             let conns = conns.clone();
@@ -452,9 +465,15 @@ impl UnitServer {
                             conns.lock().unwrap().push(tracked);
                         }
                         let store = store.clone();
+                        let span_log = span_log.clone();
                         let _ = std::thread::Builder::new()
                             .name("unit-conn".into())
-                            .spawn(move || serve_unit_conn(store, stream));
+                            .spawn(move || {
+                                crate::telemetry::install_thread_log(
+                                    span_log,
+                                );
+                                serve_unit_conn(store, stream)
+                            });
                     }
                 })
                 .expect("spawning storage-unit accept thread")
@@ -518,7 +537,10 @@ fn apply_unit_request(
     req: UnitRequest,
 ) -> UnitReply {
     match req {
-        UnitRequest::Put { cells } => {
+        UnitRequest::Put { cells, trace } => {
+            // The span joins the trace the write was stamped with by
+            // the sending process (lease → chunk → unit put chain).
+            let t0 = crate::telemetry::now_us();
             for (idx, col, val) in cells {
                 // Idempotent re-send: the client retries a Put whose
                 // connection died between apply and ack. An identical
@@ -537,6 +559,13 @@ fn apply_unit_request(
                     return UnitReply::Err(format!("{e:#}"));
                 }
             }
+            crate::telemetry::record_span(
+                "unit_put",
+                format!("unit-{}", store.unit_id),
+                trace,
+                t0,
+                crate::telemetry::now_us(),
+            );
             UnitReply::Ok
         }
         UnitRequest::Fetch { indices, columns } => UnitReply::Rows(

@@ -71,6 +71,10 @@ impl Summary {
         self.percentile(0.50)
     }
 
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
     pub fn p99(&self) -> f64 {
         self.percentile(0.99)
     }
@@ -131,6 +135,7 @@ mod tests {
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 5.0);
         assert_eq!(s.p50(), 3.0);
+        assert!((s.p95() - 4.8).abs() < 1e-12);
         assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
     }
 

@@ -9,8 +9,9 @@ use std::time::{Duration, Instant};
 
 use asyncflow::runtime::{HostTensor, ParamSet};
 use asyncflow::service::{
-    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
-    SessionSpec, SpecDecl, TaskDecl, TcpJsonlServer,
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, ServiceRequest,
+    ServiceResponse, Session, SessionSpec, SpecDecl, TaskDecl,
+    TcpJsonlServer,
 };
 use asyncflow::transfer_queue::{Column, GlobalIndex, Value};
 
@@ -339,4 +340,274 @@ fn concurrent_multi_client_tcp() {
         ServiceClient::connect(("127.0.0.1", port)).unwrap(),
     );
     server.stop();
+}
+
+// ===========================================================================
+// Wire compatibility: the telemetry plane added an optional `trace` key
+// to request lines (and to the lease reply). Both directions must stay
+// compatible — a pre-telemetry client never sends the key, a traced
+// client sends it on every line, and the server must serve the exact
+// same verb surface either way. These tests drive EVERY service verb
+// over a raw socket with both encodings.
+// ===========================================================================
+
+/// A raw JSONL peer: the test controls the exact bytes on the wire, so
+/// it can pin what an old (untraced) or new (traced) client produces.
+struct RawWire {
+    stream: std::net::TcpStream,
+    reader: std::io::BufReader<std::net::TcpStream>,
+}
+
+impl RawWire {
+    fn connect(port: u16) -> Self {
+        let stream =
+            std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let reader =
+            std::io::BufReader::new(stream.try_clone().unwrap());
+        RawWire { stream, reader }
+    }
+
+    fn call(&mut self, line: String) -> ServiceResponse {
+        use std::io::{BufRead, Write};
+        assert!(!line.contains('\n'), "one request per line: {line}");
+        self.stream.write_all(line.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        ServiceResponse::parse_line(&reply).unwrap()
+    }
+}
+
+/// Drive every service verb over a raw socket, encoding each request
+/// with `encode`; panics on the first error response. The script walks
+/// a complete lifecycle so stateful verbs (leases, weights, placement)
+/// run against real state rather than trivially erroring.
+fn exercise_every_verb(encode: &dyn Fn(&ServiceRequest) -> String) {
+    use asyncflow::rollout::{ChunkRow, LeaseSpec};
+    use asyncflow::service::{CellNote, ConsumerSpec};
+    use asyncflow::transfer_queue::{StorageUnit, UnitServer};
+    use ServiceRequest as Req;
+    use ServiceResponse as Resp;
+
+    let server = TcpJsonlServer::bind(
+        Arc::new(Session::new()),
+        ("127.0.0.1", 0),
+    )
+    .unwrap();
+    let unit = UnitServer::bind(
+        Arc::new(StorageUnit::new(0)),
+        ("127.0.0.1", 0),
+    )
+    .unwrap();
+    let mut wire = RawWire::connect(server.port());
+    let mut call = |req: Req| -> Resp {
+        match wire.call(encode(&req)) {
+            Resp::Err(e) => panic!("verb failed on the wire: {e}"),
+            resp => resp,
+        }
+    };
+
+    // Lifecycle: remote init, then dynamic registration.
+    call(Req::InitEngines {
+        spec: SpecDecl {
+            storage_units: 1,
+            tasks: vec![
+                TaskDecl::new("rollout", vec![Column::Prompts]),
+                TaskDecl::new("reward", vec![Column::Responses]),
+            ],
+        },
+        params: ParamSet::new(0, vec![]),
+    });
+    call(Req::RegisterTask {
+        task: TaskDecl::new("audit", vec![Column::Prompts]),
+    });
+
+    // Ingest: prompt batch, single-cell write, batch-first rows.
+    let prompts = match call(Req::PutPrompts {
+        prompts: vec![vec![1, 2, 3], vec![4, 5, 6]],
+    }) {
+        Resp::Indices(idx) => idx,
+        _ => panic!("put_prompts must return indices"),
+    };
+    call(Req::PutExperience {
+        index: prompts[0],
+        column: Column::Rewards,
+        value: Value::F32(1.0),
+    });
+    call(Req::PutBatch {
+        rows: vec![
+            PutRow::new(vec![(
+                Column::Prompts,
+                Value::I32s(vec![7, 7, 7]),
+            )]),
+            PutRow::new(vec![(
+                Column::Prompts,
+                Value::I32s(vec![8, 8, 8]),
+            )]),
+        ],
+    });
+
+    // Rollout lease lifecycle: lease → chunk → renew → finish → stats.
+    let reply = match call(Req::LeasePrompts(LeaseSpec {
+        task: "rollout".into(),
+        worker: "legacy-worker".into(),
+        count: 2,
+        ttl_ms: 30_000,
+        timeout_ms: 2_000,
+        columns: vec![Column::Prompts],
+    })) {
+        Resp::Lease(r) => r,
+        _ => panic!("lease_prompts must return a lease reply"),
+    };
+    let lease = reply.lease.expect("two prompt rows were ready");
+    assert_eq!(reply.batch.len(), 2);
+    let leased = reply.batch.indices.clone();
+    call(Req::PutChunk {
+        lease,
+        version: 0,
+        rows: vec![ChunkRow {
+            index: leased[0],
+            tokens: vec![9, 10],
+            logps: vec![-0.1, -0.2],
+            finished: true,
+        }],
+    });
+    call(Req::RenewLease { lease, ttl_ms: 0 });
+    call(Req::PutChunk {
+        lease,
+        version: 0,
+        rows: vec![ChunkRow {
+            index: leased[1],
+            tokens: vec![11],
+            logps: vec![-0.3],
+            finished: true,
+        }],
+    });
+    call(Req::WorkerStats);
+
+    // Crash-safe consumer lease over the remaining rollout rows.
+    let consumer_lease = match call(Req::GetBatch(GetBatchSpec {
+        task: "rollout".into(),
+        group: 0,
+        columns: vec![Column::Prompts],
+        count: 2,
+        min: 1,
+        timeout_ms: 2_000,
+        consumer: Some(ConsumerSpec {
+            id: "legacy-consumer".into(),
+            ttl_ms: 30_000,
+        }),
+    })) {
+        Resp::Batch(GetBatchReply::Leased { batch, lease }) => {
+            assert_eq!(batch.len(), 2);
+            lease
+        }
+        _ => panic!("expected a leased batch"),
+    };
+    call(Req::AckBatch { lease: consumer_lease });
+
+    // Placement verbs: meta-only consume, explicit fetch, value-first
+    // row allocation + metadata notification.
+    match call(Req::GetBatchMeta(GetBatchSpec {
+        task: "audit".into(),
+        group: 0,
+        columns: vec![Column::Prompts],
+        count: 2,
+        min: 1,
+        timeout_ms: 2_000,
+        consumer: None,
+    })) {
+        Resp::BatchMeta { indices, units, .. } => {
+            assert_eq!(indices.len(), 2);
+            assert_eq!(units.len(), 1);
+        }
+        _ => panic!("get_batch_meta must return placement metadata"),
+    }
+    match call(Req::FetchRows {
+        indices: vec![prompts[0]],
+        columns: vec![Column::Prompts],
+    }) {
+        Resp::Batch(GetBatchReply::Ready(b)) => assert_eq!(b.len(), 1),
+        _ => panic!("fetch_rows must return the row"),
+    }
+    let alloc = match call(Req::AllocRows { count: 2 }) {
+        Resp::Indices(idx) => idx,
+        _ => panic!("alloc_rows must return indices"),
+    };
+    call(Req::NotifyCells {
+        cells: vec![CellNote {
+            index: alloc[0],
+            column: Column::Rewards,
+            token_len: None,
+        }],
+    });
+
+    // Weight plane: publish v1, then payload / manifest / tensor legs.
+    call(Req::WeightSync {
+        params: ParamSet::new(
+            1,
+            vec![HostTensor::from_f32(vec![2], &[0.5, -0.5]).unwrap()],
+        ),
+    });
+    match call(Req::SubscribeWeights { min_version: 0, timeout_ms: 2_000 })
+    {
+        Resp::Weights(p) => assert_eq!(p.version, 1),
+        _ => panic!("expected the v1 snapshot"),
+    }
+    match call(Req::SubscribeWeightsMeta {
+        subscriber: "legacy".into(),
+        min_version: 0,
+        timeout_ms: 2_000,
+    }) {
+        Resp::WeightsMeta(m) => assert_eq!(m.version, 1),
+        _ => panic!("expected the v1 manifest"),
+    }
+    match call(Req::FetchTensors { version: 1, indices: vec![0] }) {
+        Resp::Tensors { entries, .. } => assert_eq!(entries.len(), 1),
+        _ => panic!("expected one tensor entry"),
+    }
+
+    // Topology: attach a real storage unit (migrates the resident
+    // shard over the binary codec).
+    call(Req::AttachUnit {
+        unit: 0,
+        endpoint: format!("127.0.0.1:{}", unit.port()),
+    });
+
+    // Telemetry export must serve peers that push nothing.
+    match call(Req::ExportTelemetry { report: None }) {
+        Resp::Telemetry(snap) => {
+            assert!(snap.procs.iter().any(|p| p.proc == "coordinator"));
+        }
+        _ => panic!("expected a telemetry snapshot"),
+    }
+
+    // Introspection, GC, lifecycle end.
+    match call(Req::Stats) {
+        Resp::Stats(s) => assert_eq!(s.param_version, 1),
+        _ => panic!("expected service stats"),
+    }
+    call(Req::Evict { indices: vec![prompts[0]] });
+    call(Req::Shutdown);
+
+    server.stop();
+    unit.stop();
+}
+
+/// Old→new: a pre-telemetry client encodes every verb with no `trace`
+/// key anywhere (`to_line()` is pinned byte-identical to the legacy
+/// encoding by the protocol unit tests) and the server serves all of
+/// them.
+#[test]
+fn wire_compat_untraced_client_drives_every_verb() {
+    exercise_every_verb(&|req| req.to_line().unwrap());
+}
+
+/// New→new with tracing on: every request line carries a `trace` key
+/// and the server serves the identical verb surface — the key changes
+/// span attribution, never dispatch.
+#[test]
+fn wire_compat_traced_client_drives_every_verb() {
+    exercise_every_verb(&|req| req.to_line_traced(0x00ab_cdef).unwrap());
 }

@@ -1,0 +1,275 @@
+//! Distributed-telemetry acceptance: a coordinator served over TCP, a
+//! TCP rollout worker, a TCP grading stage and a remote storage unit —
+//! each logical process with its own span log — merge into one
+//! [`TelemetrySnapshot`] whose lineage chain is complete for every
+//! trained sample and whose lease→chunk→put chain shares one trace id
+//! across at least three processes (the paper's Fig. 11 timeline,
+//! reproduced from live spans instead of the simulator).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use asyncflow::exec::Shutdown;
+use asyncflow::pipeline::{run_remote_stage, Stage, StageCtx, StageInput};
+use asyncflow::rollout::{run_worker, WorkerOptions};
+use asyncflow::runtime::{MockEngine, ParamSet, Sampler};
+use asyncflow::service::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec, TcpJsonlServer,
+};
+use asyncflow::telemetry::{self, SpanLog, TelemetrySnapshot};
+use asyncflow::transfer_queue::{
+    Batch, Column, StorageUnit, TaskSpec, UnitServer, Value,
+};
+
+const N: usize = 8;
+const ENGINE_BATCH: usize = 4;
+const PROMPT_LEN: usize = 4;
+const MAX_LEN: usize = 12;
+
+/// Reward-model stand-in: scores each response and emits the reward
+/// and advantage cells that complete the lineage chain.
+struct Grader;
+
+impl Stage for Grader {
+    fn process(
+        &mut self,
+        _ctx: &StageCtx<'_>,
+        batch: &Batch,
+    ) -> Result<Vec<PutRow>> {
+        Ok(batch
+            .indices
+            .iter()
+            .zip(&batch.rows)
+            .map(|(idx, row)| {
+                let len = row[0].as_i32s().unwrap().len() as f32;
+                PutRow::at(*idx, vec![
+                    (Column::Rewards, Value::F32(len)),
+                    (Column::Advantages, Value::F32(len - 1.0)),
+                ])
+            })
+            .collect())
+    }
+}
+
+/// Trace ids of spans named `name` in the report for `proc`.
+fn traces_of(
+    snap: &TelemetrySnapshot,
+    proc: &str,
+    name: &str,
+) -> Vec<u64> {
+    snap.procs
+        .iter()
+        .filter(|p| p.proc == proc)
+        .flat_map(|p| &p.spans)
+        .filter(|s| s.name == name && s.trace != 0)
+        .map(|s| s.trace)
+        .collect()
+}
+
+#[test]
+fn tcp_worker_stage_and_unit_merge_into_one_traced_snapshot() {
+    telemetry::set_enabled(Some(true));
+
+    let session = Arc::new(
+        Session::init_engines(
+            SessionSpec {
+                storage_units: 1,
+                tasks: vec![
+                    TaskSpec::new("rollout", vec![Column::Prompts]),
+                    TaskSpec::new("grade", vec![Column::Responses]),
+                    TaskSpec::new(
+                        "train_feed",
+                        vec![
+                            Column::Responses,
+                            Column::Rewards,
+                            Column::Advantages,
+                        ],
+                    ),
+                ],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    );
+    let server =
+        TcpJsonlServer::bind(session, ("127.0.0.1", 0)).unwrap();
+    let port = server.port();
+
+    // Storage-unit "process": bind with its own span log installed so
+    // the connection threads record `unit_put` spans into it instead
+    // of this process's global log.
+    let unit_log = Arc::new(SpanLog::default());
+    telemetry::install_thread_log(Some(unit_log.clone()));
+    let unit_srv = UnitServer::bind(
+        Arc::new(StorageUnit::new(0)),
+        ("127.0.0.1", 0),
+    )
+    .unwrap();
+    telemetry::install_thread_log(None);
+
+    let coord = ServiceClient::connect(("127.0.0.1", port)).unwrap();
+    coord
+        .attach_unit(0, &format!("127.0.0.1:{}", unit_srv.port()))
+        .unwrap();
+
+    // Prompts land after the attach so payloads flow over the unit
+    // socket (and so do the finished chunks' response cells).
+    coord
+        .put_batch(
+            (0..N)
+                .map(|i| {
+                    PutRow::new(vec![(
+                        Column::Prompts,
+                        Value::I32s(vec![i as i32 + 1; PROMPT_LEN]),
+                    )])
+                })
+                .collect(),
+        )
+        .unwrap();
+
+    // Rollout-worker "process".
+    let worker = std::thread::spawn(move || {
+        telemetry::install_thread_log(Some(Arc::new(
+            SpanLog::default(),
+        )));
+        let client =
+            ServiceClient::connect(("127.0.0.1", port)).unwrap();
+        let mut engine =
+            MockEngine::new(ENGINE_BATCH, PROMPT_LEN, MAX_LEN);
+        let mut sampler = Sampler::new(1.0, 32, 7);
+        let mut opts = WorkerOptions::new("w0");
+        opts.chunk_tokens = 4;
+        opts.ttl_ms = 2000;
+        let report = run_worker(
+            &client,
+            &mut engine,
+            &mut sampler,
+            &opts,
+            None,
+            None,
+            &|| false,
+        )
+        .unwrap();
+        telemetry::install_thread_log(None);
+        report
+    });
+
+    // Grading-stage "process".
+    let stage = std::thread::spawn(move || {
+        telemetry::install_thread_log(Some(Arc::new(
+            SpanLog::default(),
+        )));
+        let client =
+            ServiceClient::connect(("127.0.0.1", port)).unwrap();
+        let input =
+            StageInput::new("grade", vec![Column::Responses])
+                .with_batch(ENGINE_BATCH, 1);
+        run_remote_stage(
+            &client,
+            "grader",
+            Some(&input),
+            &mut Grader,
+            &Shutdown::new(),
+        )
+        .unwrap();
+        telemetry::install_thread_log(None);
+    });
+
+    // Trainer-side consumer: popping `train_feed` rows closes their
+    // lineage (train timestamp + staleness observation).
+    let spec = GetBatchSpec {
+        task: "train_feed".into(),
+        group: 0,
+        columns: vec![Column::Responses, Column::Advantages],
+        count: ENGINE_BATCH,
+        min: 1,
+        timeout_ms: 200,
+        consumer: None,
+    };
+    let mut trained = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while trained.len() < N {
+        assert!(
+            Instant::now() < deadline,
+            "pipeline stalled at {}/{N} trained rows",
+            trained.len()
+        );
+        match coord.get_batch(&spec).unwrap() {
+            GetBatchReply::Ready(b) => trained.extend(b.indices),
+            GetBatchReply::NotReady => continue,
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    }
+    coord.shutdown().unwrap();
+    let report = worker.join().unwrap();
+    stage.join().unwrap();
+    assert_eq!(report.samples as usize, N);
+
+    // Ship the unit's spans under its own process name, then pull the
+    // merged snapshot.
+    telemetry::install_thread_log(Some(unit_log));
+    coord.push_telemetry("storage-unit-0");
+    telemetry::install_thread_log(None);
+    let snap = coord.export_telemetry(None).unwrap();
+    telemetry::set_enabled(None);
+
+    // Every trained sample has a complete, traced lineage chain.
+    for idx in &trained {
+        let row = snap
+            .lineage
+            .iter()
+            .find(|r| r.index == idx.0)
+            .unwrap_or_else(|| panic!("no lineage row for {idx:?}"));
+        assert!(
+            row.complete(),
+            "lineage chain incomplete for {idx:?}: {row:?}"
+        );
+        assert_ne!(row.trace, 0, "untraced lineage row for {idx:?}");
+    }
+
+    // The weights never advanced, so staleness must be pinned at 0 —
+    // the histogram exists and its max is within the (trivial) bound.
+    let coord_report = snap
+        .procs
+        .iter()
+        .find(|p| p.proc == "coordinator")
+        .expect("coordinator report present");
+    let (_, stale) = coord_report
+        .hists
+        .iter()
+        .find(|(n, _)| n == "staleness_versions")
+        .expect("staleness histogram exported");
+    assert_eq!(stale.count as usize, N);
+    assert!(stale.max <= 0.0, "stale samples trained: {stale:?}");
+
+    // One trace id from the lease→chunk→put chain is visible in three
+    // distinct processes: the worker's generate span, the
+    // coordinator's put_chunk span, and the storage unit's put span.
+    let worker_traces = traces_of(&snap, "w0", "generate");
+    let coord_traces = traces_of(&snap, "coordinator", "put_chunk");
+    let unit_traces = traces_of(&snap, "storage-unit-0", "unit_put");
+    assert!(!worker_traces.is_empty(), "worker pushed no traced spans");
+    let shared = worker_traces
+        .iter()
+        .copied()
+        .find(|t| coord_traces.contains(t) && unit_traces.contains(t));
+    assert!(
+        shared.is_some(),
+        "no trace spans all three processes: worker={worker_traces:?} \
+         coordinator={coord_traces:?} unit={unit_traces:?}"
+    );
+
+    // The grading stage contributed its own process report too —
+    // four logical processes on the merged timeline.
+    assert!(
+        snap.procs.iter().any(|p| p.proc == "grader"
+            && p.spans.iter().any(|s| s.name == "process")),
+        "stage report missing: {:?}",
+        snap.procs.iter().map(|p| &p.proc).collect::<Vec<_>>()
+    );
+
+    server.stop();
+    unit_srv.stop();
+}
