@@ -1,0 +1,285 @@
+//! Control-plane bench: verb throughput and p99 verb latency vs
+//! sustained client count — the fig10-style scaling curve for the
+//! service's TCP path.
+//!
+//! Three legs on identical sessions:
+//!
+//! * `threaded_jsonl` — the legacy baseline: thread-per-connection
+//!   server, strict-order JSONL, one verb in flight per connection.
+//! * `mux_jsonl` — the multiplexed reactor + worker pool with the
+//!   JSONL encoding, clients pipelining bursts of `seq`-tagged verbs.
+//! * `mux_binary` — the same server with negotiated binary control
+//!   frames.
+//!
+//! Every client hammers the cheap `worker_stats` verb so the numbers
+//! measure the control plane itself (framing, dispatch, scheduling),
+//! not payload movement. For pipelined legs each verb's latency is
+//! charged as its whole burst's wall time — an upper bound, so the
+//! p99 comparison never flatters the new path. Asserts the headline
+//! acceptance ratio (multiplexed binary >= 2x threaded JSONL verbs/sec
+//! at the highest client count) and writes `BENCH_control_plane.json`.
+//!
+//! ```sh
+//! cargo bench --bench control_plane            # full sweep
+//! cargo bench --bench control_plane -- --smoke # CI smoke mode
+//! ```
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use asyncflow::runtime::ParamSet;
+use asyncflow::service::{
+    ServiceRequest, ServiceResponse, Session, SessionSpec,
+    TcpJsonlServer, TcpJsonlTransport, TcpPipelinedTransport, Transport,
+};
+use asyncflow::util::json::Json;
+
+struct Scale {
+    mode: &'static str,
+    clients: Vec<usize>,
+    verbs_per_client: usize,
+    burst: usize,
+}
+
+impl Scale {
+    fn pick() -> Scale {
+        let smoke = std::env::args().any(|a| a == "--smoke")
+            || std::env::var("ASYNCFLOW_BENCH_SMOKE").is_ok();
+        if smoke {
+            // The 64-client point stays in smoke mode: it carries the
+            // acceptance gate.
+            Scale {
+                mode: "smoke",
+                clients: vec![4, 16, 64],
+                verbs_per_client: 96,
+                burst: 16,
+            }
+        } else {
+            Scale {
+                mode: "full",
+                clients: vec![4, 16, 64],
+                verbs_per_client: 512,
+                burst: 16,
+            }
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Leg {
+    ThreadedJsonl,
+    MuxJsonl,
+    MuxBinary,
+}
+
+impl Leg {
+    fn name(self) -> &'static str {
+        match self {
+            Leg::ThreadedJsonl => "threaded_jsonl",
+            Leg::MuxJsonl => "mux_jsonl",
+            Leg::MuxBinary => "mux_binary",
+        }
+    }
+}
+
+fn session() -> Arc<Session> {
+    Arc::new(
+        Session::init_engines(
+            SessionSpec::grpo(),
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    )
+}
+
+struct LegOut {
+    verbs_per_sec: f64,
+    p99_latency_s: f64,
+}
+
+fn expect_workers(resp: ServiceResponse) {
+    match resp {
+        ServiceResponse::Workers(_) => {}
+        other => {
+            panic!("unexpected response: {:?}", other.to_line())
+        }
+    }
+}
+
+/// One leg at one client count: `clients` threads issue
+/// `verbs_per_client` `worker_stats` calls each — sequentially on the
+/// threaded leg, in pipelined bursts on the mux legs — and every verb
+/// latency lands in one pool for the p99.
+fn run_leg(leg: Leg, clients: usize, scale: &Scale) -> LegOut {
+    let server = match leg {
+        Leg::ThreadedJsonl => {
+            TcpJsonlServer::bind_threaded(session(), ("127.0.0.1", 0))
+                .unwrap()
+        }
+        _ => TcpJsonlServer::bind(session(), ("127.0.0.1", 0)).unwrap(),
+    };
+    let port = server.port();
+    let start = Arc::new(Barrier::new(clients + 1));
+    let verbs = scale.verbs_per_client;
+    let burst = scale.burst;
+
+    let mut latencies: Vec<f64> = Vec::with_capacity(clients * verbs);
+    let wall = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..clients {
+            let start = start.clone();
+            handles.push(scope.spawn(move || {
+                let mut lat = Vec::with_capacity(verbs);
+                match leg {
+                    Leg::ThreadedJsonl => {
+                        let t = TcpJsonlTransport::connect((
+                            "127.0.0.1",
+                            port,
+                        ))
+                        .unwrap();
+                        start.wait();
+                        for _ in 0..verbs {
+                            let t0 = Instant::now();
+                            expect_workers(
+                                t.call(ServiceRequest::WorkerStats)
+                                    .unwrap(),
+                            );
+                            lat.push(t0.elapsed().as_secs_f64());
+                        }
+                    }
+                    Leg::MuxJsonl | Leg::MuxBinary => {
+                        let binary = leg == Leg::MuxBinary;
+                        let t = TcpPipelinedTransport::connect(
+                            ("127.0.0.1", port),
+                            binary,
+                        )
+                        .unwrap();
+                        assert!(t.pipelined());
+                        assert_eq!(
+                            t.encoding(),
+                            if binary { "binary" } else { "jsonl" }
+                        );
+                        start.wait();
+                        let mut left = verbs;
+                        while left > 0 {
+                            let n = left.min(burst);
+                            left -= n;
+                            let reqs = (0..n)
+                                .map(|_| ServiceRequest::WorkerStats)
+                                .collect();
+                            let t0 = Instant::now();
+                            let resps = t.call_many(reqs).unwrap();
+                            let dt = t0.elapsed().as_secs_f64();
+                            for resp in resps {
+                                expect_workers(resp);
+                                lat.push(dt);
+                            }
+                        }
+                    }
+                }
+                lat
+            }));
+        }
+        start.wait();
+        let t0 = Instant::now();
+        for h in handles {
+            latencies.extend(h.join().unwrap());
+        }
+        t0.elapsed().as_secs_f64()
+    });
+
+    let total = clients * verbs;
+    assert_eq!(latencies.len(), total);
+    let snap = server.metrics().snapshot();
+    assert!(
+        snap.verbs_total >= total as u64,
+        "metrics undercounted: {} < {total}",
+        snap.verbs_total
+    );
+    server.stop();
+
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    let p99 = latencies[(latencies.len() * 99 / 100)
+        .min(latencies.len() - 1)];
+    LegOut { verbs_per_sec: total as f64 / wall, p99_latency_s: p99 }
+}
+
+fn leg_json(out: &LegOut) -> Json {
+    Json::obj(vec![
+        ("verbs_per_sec", Json::Num(out.verbs_per_sec)),
+        ("p99_latency_s", Json::Num(out.p99_latency_s)),
+    ])
+}
+
+fn main() {
+    let scale = Scale::pick();
+    println!(
+        "== control plane: {} verbs/client, bursts of {}, mode={} ==\n",
+        scale.verbs_per_client, scale.burst, scale.mode
+    );
+
+    let legs =
+        [Leg::ThreadedJsonl, Leg::MuxJsonl, Leg::MuxBinary];
+    let mut results = Vec::new();
+    let mut gate: Option<f64> = None;
+    let top = *scale.clients.iter().max().unwrap();
+    for &n in &scale.clients {
+        let mut row: Vec<(&str, Json)> =
+            vec![("clients", Json::Num(n as f64))];
+        let mut threaded = 0.0;
+        let mut binary = 0.0;
+        for leg in legs {
+            let out = run_leg(leg, n, &scale);
+            println!(
+                "clients={n:>3} {:<14} {:>10.0} verbs/s  p99 {:>7.3} ms",
+                leg.name(),
+                out.verbs_per_sec,
+                out.p99_latency_s * 1e3
+            );
+            match leg {
+                Leg::ThreadedJsonl => threaded = out.verbs_per_sec,
+                Leg::MuxBinary => binary = out.verbs_per_sec,
+                Leg::MuxJsonl => {}
+            }
+            row.push((leg.name(), leg_json(&out)));
+        }
+        let speedup = binary / threaded.max(1e-9);
+        println!(
+            "clients={n:>3} multiplexed-binary speedup {speedup:.2}x\n"
+        );
+        row.push((
+            "speedup_binary_vs_threaded",
+            Json::Num(speedup),
+        ));
+        results.push(Json::obj(row));
+        if n == top {
+            gate = Some(speedup);
+        }
+    }
+
+    let speedup = gate.unwrap();
+    assert!(
+        speedup >= 2.0,
+        "multiplexed binary must sustain >=2x threaded-JSONL verbs/sec \
+         at {top} clients (got {speedup:.2}x)"
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("control_plane".into())),
+        ("mode", Json::Str(scale.mode.into())),
+        (
+            "verbs_per_client",
+            Json::Num(scale.verbs_per_client as f64),
+        ),
+        ("burst", Json::Num(scale.burst as f64)),
+        ("verb", Json::Str("worker_stats".into())),
+        ("results", Json::Arr(results)),
+        (
+            "speedup_binary_vs_threaded_at_max_clients",
+            Json::Num(speedup),
+        ),
+    ]);
+    std::fs::write("BENCH_control_plane.json", out.to_string_pretty())
+        .expect("write BENCH_control_plane.json");
+    println!("wrote BENCH_control_plane.json");
+}

@@ -25,6 +25,12 @@ use crate::runtime::{ParamSet, PolicyEngine};
 pub struct ParamStore {
     inner: Mutex<ParamSet>,
     cv: Condvar,
+    /// One-shot wakers registered by event-driven subscribers (the
+    /// multiplexed service reactor parks `subscribe_weights` here
+    /// instead of blocking a thread in [`ParamStore::wait_for_newer`]).
+    /// Drained on every publish. Callbacks run under the store lock and
+    /// must not call back into the store.
+    wakers: Mutex<Vec<crate::transfer_queue::WakeFn>>,
 }
 
 impl ParamStore {
@@ -32,7 +38,26 @@ impl ParamStore {
         Arc::new(ParamStore {
             inner: Mutex::new(initial),
             cv: Condvar::new(),
+            wakers: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Register a one-shot waker, but only if the store's version is
+    /// still `expected_version` — the version counter doubles as the
+    /// race-free park epoch (every publish moves it or rebases under the
+    /// same lock). Returns `false` (waker dropped) when a publish
+    /// slipped in since the caller polled; re-poll instead of parking.
+    pub fn park(
+        &self,
+        expected_version: u64,
+        waker: crate::transfer_queue::WakeFn,
+    ) -> bool {
+        let g = self.inner.lock().unwrap();
+        if g.version != expected_version {
+            return false;
+        }
+        self.wakers.lock().unwrap().push(waker);
+        true
     }
 
     /// Publish a new snapshot (monotonically increasing version).
@@ -61,6 +86,9 @@ impl ParamStore {
             );
         }
         *g = params.rebase_onto(&g);
+        for w in self.wakers.lock().unwrap().drain(..) {
+            w();
+        }
         self.cv.notify_all();
         Ok(())
     }

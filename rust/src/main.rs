@@ -607,6 +607,32 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
                 );
             }
         }
+        // Control-plane section: only servers running the multiplexed
+        // (or instrumented threaded) TCP front end report it.
+        if let Some(c) = &stats.control {
+            println!(
+                "  control connections={} verbs={} verbs/s={:.1} \
+                 parked_long_polls={}",
+                c.connections,
+                c.verbs_total,
+                c.verbs_per_sec,
+                c.parked_long_polls
+            );
+            for (op, n) in &c.verbs_by_op {
+                println!("    verb {op:<22} {n}");
+            }
+            let labels = ["1", "2", "4", "8", "16", "32", "33+"];
+            let depths: Vec<String> = c
+                .pipelined_depth
+                .iter()
+                .zip(labels.iter())
+                .filter(|(n, _)| **n > 0)
+                .map(|(n, l)| format!("<={l}:{n}"))
+                .collect();
+            if !depths.is_empty() {
+                println!("    pipelined depth {}", depths.join(" "));
+            }
+        }
         if let Some(w) = &stats.weights {
             println!(
                 "  weights version={} tensors={} full={}B delta={}B \

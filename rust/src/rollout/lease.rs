@@ -232,6 +232,18 @@ impl LeaseTable {
         self.registry.in_flight()
     }
 
+    /// Earliest lease expiry (`None` when no lease is live) — the wake
+    /// deadline for an expiry-driven sweeper.
+    pub fn next_expiry(&self) -> Option<std::time::Instant> {
+        self.registry.next_expiry()
+    }
+
+    /// Install the registry's expiry re-arm hook (called on grant/renew
+    /// so a sweeper can re-arm its timer instead of polling).
+    pub fn set_expiry_hook(&self, f: crate::transfer_queue::WakeFn) {
+        self.registry.set_expiry_hook(f);
+    }
+
     /// Leased-and-unfinished rows popped from `task` (drain barrier for
     /// one prompt stream, and the per-task leased stat).
     pub fn in_flight_for(&self, task: &str) -> usize {

@@ -341,6 +341,18 @@ impl RolloutManager {
     pub fn sweep_now(&self) {
         self.sweep();
     }
+
+    /// Earliest rollout-lease expiry (`None` = no lease live) — the
+    /// wake deadline for the session's expiry-driven sweeper thread.
+    pub fn next_expiry(&self) -> Option<std::time::Instant> {
+        self.table.next_expiry()
+    }
+
+    /// Install the lease table's expiry re-arm hook (fired on
+    /// grant/renew so the sweeper re-arms instead of polling).
+    pub fn set_expiry_hook(&self, f: crate::transfer_queue::WakeFn) {
+        self.table.set_expiry_hook(f);
+    }
 }
 
 #[cfg(test)]

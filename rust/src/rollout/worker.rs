@@ -18,10 +18,13 @@
 //! the first buffered whole-sequence decode of a fixed-geometry backend)
 //! may take. The heartbeat dies with the worker, which is exactly the
 //! crash signal the coordinator keys on. The heartbeat shares this
-//! worker's `ServiceClient`, which routes the long-poll verbs
-//! (`lease_prompts`, `subscribe_weights_meta`) over a dedicated sibling
-//! connection — a parked lease poll can never delay a heartbeat or a
-//! chunk upload behind the transport's stream mutex.
+//! worker's `ServiceClient`; on a pipelined transport a parked
+//! long-poll (`lease_prompts`, `subscribe_weights_meta`) is just
+//! another in-flight `seq` on the same connection, and on classic
+//! one-in-flight transports the client routes those verbs over a
+//! dedicated sibling connection — either way a parked lease poll can
+//! never delay a heartbeat or a chunk upload behind the transport's
+//! stream mutex.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -147,8 +150,10 @@ pub fn run_worker(
             let id = lease.load(Ordering::SeqCst);
             if id != 0 {
                 // A failed renew means the lease was swept; the main
-                // loop learns that from its next put_chunk.
-                let _ = client.renew_lease(id, 0);
+                // loop learns that from its next put_chunk. Heartbeats
+                // go out as a fire-and-forget burst — one write on a
+                // pipelined transport.
+                let _ = client.burst().renew_lease(id, 0).send();
             }
         })
     };

@@ -6,11 +6,14 @@
 //! Two client-side routing layers sit on top of the raw verbs:
 //!
 //! * **Dedicated long-poll channel.** `lease_prompts` and
-//!   `subscribe_weights` park server-side; running them on the shared
-//!   connection would serialize every other verb behind the stream
-//!   mutex for the length of the poll. The client lazily opens a
-//!   sibling transport ([`Transport::open_sibling`]) and routes the
-//!   long-poll verbs there.
+//!   `subscribe_weights` park server-side; on a one-in-flight transport
+//!   running them on the shared connection would serialize every other
+//!   verb behind the stream mutex for the length of the poll. Against a
+//!   pipelined transport ([`Transport::pipelined`]) the long-poll rides
+//!   the main connection as just another in-flight `seq` — the
+//!   multiplexed server parks it without blocking the stream. Only
+//!   non-pipelined transports lazily open a sibling
+//!   ([`Transport::open_sibling`]) and route the long-poll verbs there.
 //! * **Direct data-plane fetch.** A TCP client ([`ServiceClient::connect`])
 //!   learns the unit placement view and, when remote storage units are
 //!   attached, exchanges *payloads* with them directly over the binary
@@ -41,7 +44,9 @@ use super::protocol::{
     CellNote, GetBatchMetaReply, GetBatchReply, GetBatchSpec, PutRow,
     ServiceRequest, ServiceResponse, ServiceStats, SpecDecl, TaskDecl,
 };
-use super::transport::{InProcTransport, TcpJsonlTransport, Transport};
+use super::transport::{
+    InProcTransport, TcpJsonlTransport, TcpPipelinedTransport, Transport,
+};
 use super::Session;
 
 /// How long a unit observed dead stays quarantined: placement views
@@ -103,7 +108,22 @@ impl ServiceClient {
     /// Client connected to a remote `asyncflow serve` instance. Payload
     /// traffic goes directly to attached storage units when the
     /// topology has any ([`ServiceClient::connect_relay`] opts out).
+    ///
+    /// Negotiates the pipelined control channel (binary frames when the
+    /// server offers them); against an old server it degrades to
+    /// strict-order JSONL automatically. [`ServiceClient::connect_jsonl`]
+    /// keeps the classic one-in-flight JSONL transport for debugging.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        Ok(Self::with_direct(
+            Arc::new(TcpPipelinedTransport::connect(addr, true)?),
+            true,
+        ))
+    }
+
+    /// Like [`ServiceClient::connect`] but over the classic strict-order
+    /// JSONL transport: one request in flight, human-readable wire. The
+    /// debug surface, and the baseline leg of the control-plane bench.
+    pub fn connect_jsonl(addr: impl ToSocketAddrs) -> Result<Self> {
         Ok(Self::with_direct(
             Arc::new(TcpJsonlTransport::connect(addr)?),
             true,
@@ -150,9 +170,21 @@ impl ServiceClient {
         }
     }
 
-    /// Route a verb over the dedicated long-poll channel (falls back to
-    /// the main transport when the sibling cannot be opened).
+    /// Route a long-poll verb. On a pipelined transport it shares the
+    /// main connection — the multiplexed server parks it as a waker
+    /// registration, so it never blocks other in-flight verbs. On
+    /// one-in-flight transports it goes over a lazily opened sibling
+    /// connection (falling back to the main transport when the sibling
+    /// cannot be opened).
     fn slow_call(&self, req: ServiceRequest) -> Result<ServiceResponse> {
+        if self.transport.pipelined() {
+            return match self.transport.call(req)? {
+                ServiceResponse::Err(msg) => {
+                    bail!("service error: {msg}")
+                }
+                resp => Ok(resp),
+            };
+        }
         let transport = {
             let mut slow = self.slow.lock().unwrap();
             match &*slow {
@@ -449,11 +481,29 @@ impl ServiceClient {
                 }
             }
         }
+        // The metadata notification and the relay put are independent
+        // (they name disjoint rows' cells) — pipeline them as one burst
+        // instead of two sequential round-trips.
+        let mut reqs = Vec::new();
         if !notes.is_empty() {
-            self.notify_cells(&notes)?;
+            reqs.push(ServiceRequest::NotifyCells { cells: notes });
         }
         if !relay.is_empty() {
-            self.call_indices(ServiceRequest::PutBatch { rows: relay })?;
+            reqs.push(ServiceRequest::PutBatch { rows: relay });
+        }
+        if !reqs.is_empty() {
+            for resp in self.transport.call_many(reqs)? {
+                match resp {
+                    ServiceResponse::Ok
+                    | ServiceResponse::Indices(_) => {}
+                    ServiceResponse::Err(msg) => {
+                        bail!("service error: {msg}")
+                    }
+                    _ => bail!(
+                        "service returned an unexpected response kind"
+                    ),
+                }
+            }
         }
         Ok(out)
     }
@@ -848,6 +898,92 @@ impl ServiceClient {
     /// Close the queue; consumers drain and observe `Closed`.
     pub fn shutdown(&self) -> Result<()> {
         self.call_ok(ServiceRequest::Shutdown)
+    }
+
+    /// Start a burst of small fire-and-forget verbs (heartbeats, acks,
+    /// metadata notifications). On a pipelined transport the whole
+    /// burst goes out as one write and the replies stream back tagged
+    /// by `seq` — one round-trip instead of N. On one-in-flight
+    /// transports it degrades to sequential calls with identical
+    /// semantics.
+    pub fn burst(&self) -> Burst<'_> {
+        Burst { client: self, reqs: Vec::new() }
+    }
+}
+
+/// Builder for a pipelined burst of fire-and-forget verbs — see
+/// [`ServiceClient::burst`]. Every verb in the burst expects a bare
+/// `ok` reply; [`Burst::send`] reports the first failure by position.
+pub struct Burst<'a> {
+    client: &'a ServiceClient,
+    reqs: Vec<ServiceRequest>,
+}
+
+impl Burst<'_> {
+    /// Queue a `renew_lease` heartbeat.
+    pub fn renew_lease(mut self, lease: LeaseId, ttl_ms: u64) -> Self {
+        self.reqs.push(ServiceRequest::RenewLease { lease, ttl_ms });
+        self
+    }
+
+    /// Queue an `ack_batch` (consumer lease retirement).
+    pub fn ack_batch(mut self, lease: LeaseId) -> Self {
+        self.reqs.push(ServiceRequest::AckBatch { lease });
+        self
+    }
+
+    /// Queue a `notify_cells` metadata write notification.
+    pub fn notify_cells(mut self, cells: &[CellNote]) -> Self {
+        self.reqs.push(ServiceRequest::NotifyCells {
+            cells: cells.to_vec(),
+        });
+        self
+    }
+
+    /// Queue a `put_chunk` upload (implicit heartbeat).
+    pub fn put_chunk(
+        mut self,
+        lease: LeaseId,
+        version: u64,
+        rows: Vec<ChunkRow>,
+    ) -> Self {
+        self.reqs.push(ServiceRequest::PutChunk { lease, version, rows });
+        self
+    }
+
+    /// Number of queued verbs.
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    /// Whether the burst is empty (sending an empty burst is a no-op).
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    /// Send the burst and wait for every reply. All verbs are delivered
+    /// in order even on failure replies; the first non-`ok` reply is
+    /// reported (later verbs in the burst still executed server-side).
+    pub fn send(self) -> Result<()> {
+        if self.reqs.is_empty() {
+            return Ok(());
+        }
+        let ops: Vec<&'static str> =
+            self.reqs.iter().map(|r| r.op_name()).collect();
+        let resps = self.client.transport.call_many(self.reqs)?;
+        for (i, resp) in resps.iter().enumerate() {
+            let op = ops.get(i).copied().unwrap_or("?");
+            match resp {
+                ServiceResponse::Ok => {}
+                ServiceResponse::Err(msg) => {
+                    bail!("service error on burst verb {i} ({op}): {msg}")
+                }
+                _ => bail!(
+                    "unexpected response kind on burst verb {i} ({op})"
+                ),
+            }
+        }
+        Ok(())
     }
 }
 

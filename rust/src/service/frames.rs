@@ -1,0 +1,357 @@
+//! Binary control frames — the negotiated alternative to JSONL on the
+//! service port.
+//!
+//! Wire layout (little-endian throughout, mirroring the data-plane
+//! conventions of [`crate::transfer_queue::frame`]):
+//!
+//! ```text
+//! u32 len ‖ body                      len = body length, ≤ 256 MiB
+//! body    = tag u8 ‖ flags u8 ‖ seq u64 ‖ trace u64 ‖ payload
+//! ```
+//!
+//! `flags` bit 0 set means `seq` is meaningful — a pipelined request
+//! asking for out-of-order correlation, or a response echoing the tag.
+//! `trace` carries the telemetry trace id on requests (`0` = untraced);
+//! responses write `0`.
+//!
+//! Tags below [`TAG_RESP_BASE`] are requests, the rest responses. Tag
+//! `0x00` / `0x80` carry a JSON-encoded payload — the exact
+//! [`ServiceRequest::to_line`] / [`ServiceResponse::to_line`] text —
+//! so *every* verb works over binary framing from day one; the native
+//! tags are a fixed-layout fast path for the hot fire-and-forget verbs
+//! (lease heartbeats, batch acks) where JSON encode/parse dominates
+//! the verb's cost. Decoders reject unknown tags loudly: unlike JSONL
+//! (self-synchronizing on newlines), a binary stream that has lost
+//! framing cannot be resynchronized, so the connection must drop.
+//!
+//! Negotiation: a connection always starts in JSONL. A client that
+//! wants binary sends `hello {encodings: ["binary", ...]}` as its
+//! first verb and switches after reading the (JSONL) response whose
+//! first accepted encoding is `"binary"`. The switch is exact — no
+//! sniffing: bytes after the hello exchange are frames in the agreed
+//! encoding. JSONL remains the default and the debug surface
+//! (`asyncflow info --connect` speaks it).
+
+use anyhow::{bail, Result};
+
+use super::protocol::{ServiceRequest, ServiceResponse};
+use crate::transfer_queue::frame::MAX_FRAME_BYTES;
+
+/// Request: JSON payload (any verb).
+pub const TAG_REQ_JSON: u8 = 0x00;
+/// Request: `renew_lease` — payload `lease u64 ‖ ttl_ms u64`.
+pub const TAG_REQ_RENEW_LEASE: u8 = 0x01;
+/// Request: `ack_batch` — payload `lease u64`.
+pub const TAG_REQ_ACK_BATCH: u8 = 0x02;
+/// Request: `worker_stats` — empty payload.
+pub const TAG_REQ_WORKER_STATS: u8 = 0x03;
+/// First response tag.
+pub const TAG_RESP_BASE: u8 = 0x80;
+/// Response: JSON payload (any response).
+pub const TAG_RESP_JSON: u8 = 0x80;
+/// Response: `ok` — empty payload.
+pub const TAG_RESP_OK: u8 = 0x81;
+/// Response: error — payload `len u32 ‖ utf-8 message`.
+pub const TAG_RESP_ERR: u8 = 0x82;
+
+/// flags bit 0: the `seq` field is meaningful.
+const FLAG_SEQ: u8 = 0x01;
+
+/// Fixed header length inside the frame body.
+const HEADER: usize = 1 + 1 + 8 + 8;
+
+fn header(tag: u8, seq: Option<u64>, trace: u64, cap: usize) -> Vec<u8> {
+    let mut b = Vec::with_capacity(HEADER + cap);
+    b.push(tag);
+    b.push(if seq.is_some() { FLAG_SEQ } else { 0 });
+    b.extend_from_slice(&seq.unwrap_or(0).to_le_bytes());
+    b.extend_from_slice(&trace.to_le_bytes());
+    b
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    b.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    b.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "control frame truncated at byte {} (wanted {n} more)",
+                self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<&'a str> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)?)
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+}
+
+/// Encode a request as a frame *body* (no length prefix — the caller
+/// appends `u32 len` when writing, so bursts can share one buffer).
+pub fn encode_request(
+    req: &ServiceRequest,
+    trace: u64,
+    seq: Option<u64>,
+) -> Result<Vec<u8>> {
+    let mut b = match req {
+        ServiceRequest::RenewLease { lease, ttl_ms } => {
+            let mut b = header(TAG_REQ_RENEW_LEASE, seq, trace, 16);
+            put_u64(&mut b, *lease);
+            put_u64(&mut b, *ttl_ms);
+            b
+        }
+        ServiceRequest::AckBatch { lease } => {
+            let mut b = header(TAG_REQ_ACK_BATCH, seq, trace, 8);
+            put_u64(&mut b, *lease);
+            b
+        }
+        ServiceRequest::WorkerStats => {
+            header(TAG_REQ_WORKER_STATS, seq, trace, 0)
+        }
+        other => {
+            let line = other.to_line()?;
+            let mut b = header(TAG_REQ_JSON, seq, trace, line.len());
+            b.extend_from_slice(line.as_bytes());
+            b
+        }
+    };
+    if b.len() > MAX_FRAME_BYTES {
+        bail!("control frame of {} bytes exceeds the cap", b.len());
+    }
+    b.shrink_to_fit();
+    Ok(b)
+}
+
+/// Decode a request frame body into `(request, trace, seq)`.
+pub fn decode_request(
+    body: &[u8],
+) -> Result<(ServiceRequest, u64, Option<u64>)> {
+    let mut c = Cursor::new(body);
+    let tag = c.u8()?;
+    let flags = c.u8()?;
+    let seq_raw = c.u64()?;
+    let trace = c.u64()?;
+    let seq = (flags & FLAG_SEQ != 0).then_some(seq_raw);
+    let req = match tag {
+        TAG_REQ_JSON => {
+            let text = std::str::from_utf8(c.rest())?;
+            ServiceRequest::parse_line(text)?
+        }
+        TAG_REQ_RENEW_LEASE => ServiceRequest::RenewLease {
+            lease: c.u64()?,
+            ttl_ms: c.u64()?,
+        },
+        TAG_REQ_ACK_BATCH => {
+            ServiceRequest::AckBatch { lease: c.u64()? }
+        }
+        TAG_REQ_WORKER_STATS => ServiceRequest::WorkerStats,
+        other => bail!("unknown control frame tag {other:#04x}"),
+    };
+    Ok((req, trace, seq))
+}
+
+/// Encode a response as a frame body (no length prefix).
+pub fn encode_response(
+    resp: &ServiceResponse,
+    seq: Option<u64>,
+) -> Result<Vec<u8>> {
+    let mut b = match resp {
+        ServiceResponse::Ok => header(TAG_RESP_OK, seq, 0, 0),
+        ServiceResponse::Err(msg) => {
+            let mut b = header(TAG_RESP_ERR, seq, 0, 4 + msg.len());
+            put_str(&mut b, msg);
+            b
+        }
+        other => {
+            let line = other.to_line()?;
+            let mut b = header(TAG_RESP_JSON, seq, 0, line.len());
+            b.extend_from_slice(line.as_bytes());
+            b
+        }
+    };
+    if b.len() > MAX_FRAME_BYTES {
+        bail!("control frame of {} bytes exceeds the cap", b.len());
+    }
+    b.shrink_to_fit();
+    Ok(b)
+}
+
+/// Decode a response frame body into `(response, seq)`.
+pub fn decode_response(
+    body: &[u8],
+) -> Result<(ServiceResponse, Option<u64>)> {
+    let mut c = Cursor::new(body);
+    let tag = c.u8()?;
+    let flags = c.u8()?;
+    let seq_raw = c.u64()?;
+    let _trace = c.u64()?;
+    let seq = (flags & FLAG_SEQ != 0).then_some(seq_raw);
+    let resp = match tag {
+        TAG_RESP_JSON => {
+            let text = std::str::from_utf8(c.rest())?;
+            ServiceResponse::parse_line(text)?
+        }
+        TAG_RESP_OK => ServiceResponse::Ok,
+        TAG_RESP_ERR => ServiceResponse::Err(c.str()?.to_string()),
+        other => bail!("unknown control frame tag {other:#04x}"),
+    };
+    Ok((resp, seq))
+}
+
+/// Append one length-prefixed frame (`u32 LE len ‖ body`) to `out` —
+/// the writer-side composition point that lets a pipelined burst of
+/// frames leave in a single `write_all`.
+pub fn append_frame(out: &mut Vec<u8>, body: &[u8]) {
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_request_tags_roundtrip() {
+        for (req, tag) in [
+            (
+                ServiceRequest::RenewLease { lease: 7, ttl_ms: 1500 },
+                TAG_REQ_RENEW_LEASE,
+            ),
+            (ServiceRequest::AckBatch { lease: 42 }, TAG_REQ_ACK_BATCH),
+            (ServiceRequest::WorkerStats, TAG_REQ_WORKER_STATS),
+        ] {
+            let body = encode_request(&req, 99, Some(5)).unwrap();
+            assert_eq!(body[0], tag, "native tag for {}", req.op_name());
+            let (back, trace, seq) = decode_request(&body).unwrap();
+            assert_eq!(back.op_name(), req.op_name());
+            assert_eq!(trace, 99);
+            assert_eq!(seq, Some(5));
+        }
+    }
+
+    #[test]
+    fn json_fallback_covers_arbitrary_verbs() {
+        let req = ServiceRequest::PutPrompts {
+            prompts: vec![vec![1, 2, 3]],
+        };
+        let body = encode_request(&req, 0, None).unwrap();
+        assert_eq!(body[0], TAG_REQ_JSON);
+        let (back, trace, seq) = decode_request(&body).unwrap();
+        assert_eq!(trace, 0);
+        assert_eq!(seq, None);
+        match back {
+            ServiceRequest::PutPrompts { prompts } => {
+                assert_eq!(prompts, vec![vec![1, 2, 3]]);
+            }
+            _ => panic!("wrong verb"),
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip_with_and_without_seq() {
+        let ok = encode_response(&ServiceResponse::Ok, Some(9)).unwrap();
+        assert_eq!(ok[0], TAG_RESP_OK);
+        let (resp, seq) = decode_response(&ok).unwrap();
+        assert!(matches!(resp, ServiceResponse::Ok));
+        assert_eq!(seq, Some(9));
+
+        let err =
+            encode_response(&ServiceResponse::Err("boom".into()), None)
+                .unwrap();
+        let (resp, seq) = decode_response(&err).unwrap();
+        match resp {
+            ServiceResponse::Err(m) => assert_eq!(m, "boom"),
+            _ => panic!("wrong response"),
+        }
+        assert_eq!(seq, None);
+    }
+
+    #[test]
+    fn seq_zero_is_distinct_from_no_seq() {
+        // A pipelined client's first seq is often 0 — the flags bit,
+        // not the value, must carry presence.
+        let body =
+            encode_request(&ServiceRequest::WorkerStats, 0, Some(0))
+                .unwrap();
+        let (_, _, seq) = decode_request(&body).unwrap();
+        assert_eq!(seq, Some(0));
+        let body =
+            encode_request(&ServiceRequest::WorkerStats, 0, None).unwrap();
+        let (_, _, seq) = decode_request(&body).unwrap();
+        assert_eq!(seq, None);
+    }
+
+    #[test]
+    fn unknown_tags_and_truncation_error_loudly() {
+        assert!(decode_request(&[0x7f, 0, 0]).is_err(), "truncated");
+        let mut body = encode_request(&ServiceRequest::WorkerStats, 0, None)
+            .unwrap();
+        body[0] = 0x6e;
+        assert!(decode_request(&body).is_err(), "unknown tag");
+        let mut body =
+            encode_response(&ServiceResponse::Ok, None).unwrap();
+        body[0] = 0x10;
+        assert!(decode_response(&body).is_err(), "response tag space");
+    }
+
+    #[test]
+    fn framed_bursts_concatenate() {
+        let mut out = Vec::new();
+        let a = encode_request(&ServiceRequest::WorkerStats, 0, Some(1))
+            .unwrap();
+        let b = encode_request(
+            &ServiceRequest::AckBatch { lease: 3 },
+            0,
+            Some(2),
+        )
+        .unwrap();
+        append_frame(&mut out, &a);
+        append_frame(&mut out, &b);
+        // Parse back as length-prefixed stream.
+        let len = u32::from_le_bytes(out[0..4].try_into().unwrap()) as usize;
+        assert_eq!(&out[4..4 + len], &a[..]);
+        let second = &out[4 + len..];
+        let len2 =
+            u32::from_le_bytes(second[0..4].try_into().unwrap()) as usize;
+        assert_eq!(&second[4..4 + len2], &b[..]);
+    }
+}

@@ -33,25 +33,27 @@
 //! pair; the service layer never touches an engine directly.
 
 pub mod client;
+pub mod frames;
 pub mod lineage;
 pub mod protocol;
 pub mod transport;
 
 use std::collections::HashSet;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-pub use client::{LeasedBatch, ServiceClient};
+pub use client::{Burst, LeasedBatch, ServiceClient};
 pub use lineage::SessionTelemetry;
 pub use protocol::{
-    CellNote, ConsumerSpec, GetBatchMetaReply, GetBatchReply,
-    GetBatchSpec, PutRow, ServiceRequest, ServiceResponse, ServiceStats,
-    SpecDecl, TaskDecl, TaskStats, UnitStats,
+    CellNote, ConsumerSpec, ControlPlaneStats, GetBatchMetaReply,
+    GetBatchReply, GetBatchSpec, PutRow, ServiceRequest, ServiceResponse,
+    ServiceStats, SpecDecl, TaskDecl, TaskStats, UnitStats,
 };
 pub use transport::{
-    InProcTransport, TcpJsonlServer, TcpJsonlTransport, Transport,
+    ControlPlaneMetrics, InProcTransport, TcpJsonlServer,
+    TcpJsonlTransport, TcpPipelinedTransport, Transport,
 };
 
 use crate::coordinator::ParamStore;
@@ -159,6 +161,9 @@ struct SessionState {
 /// a typed method and through [`Session::handle`] (the transport path).
 pub struct Session {
     state: RwLock<Option<SessionState>>,
+    /// Control-plane metrics of the TCP server fronting this session
+    /// (`None` for embedded/in-proc sessions) — read by `stats`.
+    control: Mutex<Option<Arc<ControlPlaneMetrics>>>,
 }
 
 impl Default for Session {
@@ -171,7 +176,16 @@ impl Session {
     /// An uninitialized session: every data verb fails with "call
     /// init_engines first" until `init_engines` arrives.
     pub fn new() -> Session {
-        Session { state: RwLock::new(None) }
+        Session {
+            state: RwLock::new(None),
+            control: Mutex::new(None),
+        }
+    }
+
+    /// Attach the TCP server's control-plane metrics so the `stats`
+    /// verb can expose live connection/verb/parking counters.
+    pub fn attach_control_metrics(&self, m: Arc<ControlPlaneMetrics>) {
+        *self.control.lock().unwrap() = Some(m);
     }
 
     /// `init_engines`: bring up the data fabric and register the engine
@@ -207,7 +221,7 @@ impl Session {
             bail!("session already initialized");
         }
         let tq = builder.build();
-        *guard = Some(SessionState {
+        let st = SessionState {
             rollout: Arc::new(RolloutManager::new(tq.clone())),
             tq,
             store: ParamStore::new(initial_params),
@@ -215,8 +229,90 @@ impl Session {
             write_lock: Arc::new(Mutex::new(())),
             weights: Arc::new(WeightPlane::new()),
             telemetry: Arc::new(SessionTelemetry::new()),
-        });
+        };
+        Self::spawn_lease_sweeper(&st);
+        *guard = Some(st);
         Ok(())
+    }
+
+    /// Spawn the session's expiry-driven lease sweeper: a thread that
+    /// sleeps on a condvar until the earliest lease expiry (consumer or
+    /// rollout) and requeues expired leases' rows the moment their TTL
+    /// lapses. The requeue runs through `Controller::unconsume`, which
+    /// wakes blocked and parked requesters — so a consumer waiting on a
+    /// starved task wakes within milliseconds of a dead peer's TTL
+    /// lapsing instead of polling 50 ms slices. Grant/renew re-arm the
+    /// timer through the registries' expiry hooks. The thread holds only
+    /// weak references and exits shortly after the session is dropped.
+    fn spawn_lease_sweeper(st: &SessionState) {
+        let signal = Arc::new((Mutex::new(false), Condvar::new()));
+        let hook: crate::transfer_queue::WakeFn = {
+            let signal = signal.clone();
+            Arc::new(move || {
+                let (lock, cv) = &*signal;
+                *lock.lock().unwrap() = true;
+                cv.notify_all();
+            })
+        };
+        st.consumers.set_expiry_hook(hook.clone());
+        st.rollout.set_expiry_hook(hook);
+        let consumers = Arc::downgrade(&st.consumers);
+        let tq = Arc::downgrade(&st.tq);
+        let rollout = Arc::downgrade(&st.rollout);
+        let run = move || loop {
+            let next = {
+                let (Some(consumers), Some(tq), Some(rollout)) = (
+                    consumers.upgrade(),
+                    tq.upgrade(),
+                    rollout.upgrade(),
+                ) else {
+                    break;
+                };
+                let horizon = |c: &LeaseRegistry, r: &RolloutManager| {
+                    [c.next_expiry(), r.next_expiry()]
+                        .into_iter()
+                        .flatten()
+                        .min()
+                };
+                let mut next = horizon(&consumers, &rollout);
+                if next.is_some_and(|t| t <= Instant::now()) {
+                    for lease in consumers.sweep_expired() {
+                        if lease.rows.is_empty() {
+                            continue;
+                        }
+                        if let Some(ctrl) =
+                            tq.try_controller(&lease.task)
+                        {
+                            ctrl.unconsume(&lease.rows);
+                        }
+                    }
+                    rollout.sweep_now();
+                    next = horizon(&consumers, &rollout);
+                }
+                next
+                // Strong refs drop here: never hold them across the
+                // wait below, or the session could never be freed.
+            };
+            // Sleep until the horizon, a grant/renew re-arm, or the
+            // idle cap (which bounds how long the thread outlives its
+            // session). Not a polling loop: with live leases the wait
+            // ends exactly at the earliest expiry or on a re-arm.
+            let cap = Duration::from_millis(1000);
+            let wait = next
+                .map(|t| {
+                    t.saturating_duration_since(Instant::now()).min(cap)
+                })
+                .unwrap_or(cap);
+            let (lock, cv) = &*signal;
+            let mut rearmed = lock.lock().unwrap();
+            if !*rearmed && !wait.is_zero() {
+                rearmed = cv.wait_timeout(rearmed, wait).unwrap().0;
+            }
+            *rearmed = false;
+        };
+        let _ = std::thread::Builder::new()
+            .name("svc-lease-sweep".into())
+            .spawn(run);
     }
 
     /// Whether `init_engines` has run.
@@ -399,10 +495,11 @@ impl Session {
     }
 
     /// Shared deadline-bounded controller pop behind `get_batch` and
-    /// `get_batch_meta`. Waits in short slices, sweeping expired
-    /// consumer leases between them — so a requester blocked on a
-    /// starved task wakes on its own the moment a dead peer's lease TTL
-    /// lapses, without any other traffic arriving to trigger the sweep.
+    /// `get_batch_meta`. Sweeps expired consumer leases once up front,
+    /// then waits the full deadline on the controller's condvar. No
+    /// periodic re-sweep is needed: the session's expiry-driven sweeper
+    /// thread requeues rows (and thereby wakes this wait) the moment a
+    /// dead peer's lease TTL lapses.
     fn consume_ready(
         st: &SessionState,
         spec: &GetBatchSpec,
@@ -412,25 +509,13 @@ impl Session {
         };
         let deadline = Instant::now()
             + Duration::from_millis(spec.timeout_ms);
-        loop {
-            Self::sweep_consumers(st);
-            let slice =
-                deadline.min(Instant::now() + Duration::from_millis(50));
-            let out = controller.request_deadline(
-                spec.group,
-                spec.count,
-                spec.min.max(1),
-                Some(slice),
-            );
-            match out {
-                RequestOutcome::NotReady
-                    if Instant::now() < deadline =>
-                {
-                    continue
-                }
-                done => return Ok(done),
-            }
-        }
+        Self::sweep_consumers(st);
+        Ok(controller.request_deadline(
+            spec.group,
+            spec.count,
+            spec.min.max(1),
+            Some(deadline),
+        ))
     }
 
     /// Validate a request's consumer-lease parameters, if any.
@@ -829,6 +914,56 @@ impl Session {
         Ok(self.state()?.rollout.worker_stats())
     }
 
+    // ---- event-driven transport support -----------------------------------
+    //
+    // The multiplexed TCP server dispatches long-poll verbs in poll
+    // mode and, when nothing is ready, parks the request as a waker
+    // registration instead of blocking a worker thread. The poll →
+    // park handshake is race-free: the caller snapshots the epoch (or
+    // parameter version), polls, and registers the waker only if the
+    // epoch is unchanged — a `false` return means state moved in
+    // between and the caller must re-poll.
+
+    /// The wake epoch of `task`'s controller (`None` for unknown tasks
+    /// or an uninitialized session).
+    pub fn task_wake_epoch(&self, task: &str) -> Option<u64> {
+        let st = self.state().ok()?;
+        Some(st.tq.try_controller(task)?.wake_epoch())
+    }
+
+    /// Park `waker` on `task`'s controller if its epoch still equals
+    /// `epoch`. The waker fires (once) on the next readiness change —
+    /// rows becoming ready, an unconsume requeue, or close.
+    pub fn park_task(
+        &self,
+        task: &str,
+        epoch: u64,
+        waker: crate::transfer_queue::WakeFn,
+    ) -> bool {
+        let Ok(st) = self.state() else { return false };
+        let Some(ctrl) = st.tq.try_controller(task) else {
+            return false;
+        };
+        ctrl.park(epoch, waker)
+    }
+
+    /// Current parameter version (no tensor clone, unlike the full
+    /// snapshot behind `subscribe_weights`).
+    pub fn params_version(&self) -> Result<u64> {
+        Ok(self.state()?.store.version())
+    }
+
+    /// Park `waker` on the parameter store if its version still equals
+    /// `version`; fires on the next successful publish.
+    pub fn park_params(
+        &self,
+        version: u64,
+        waker: crate::transfer_queue::WakeFn,
+    ) -> bool {
+        let Ok(st) = self.state() else { return false };
+        st.store.park(version, waker)
+    }
+
     /// Queue/param introspection snapshot. Sweeps both lease tables
     /// once up front so `leased` never counts rows a dead consumer or
     /// worker already forfeited.
@@ -881,6 +1016,12 @@ impl Session {
             weights: Some(
                 st.weights.stats(latest.version, latest.tensors.len()),
             ),
+            control: self
+                .control
+                .lock()
+                .unwrap()
+                .as_ref()
+                .map(|m| m.snapshot()),
         })
     }
 
@@ -927,6 +1068,15 @@ impl Session {
 
     fn dispatch(&self, req: ServiceRequest) -> Result<ServiceResponse> {
         Ok(match req {
+            // Capability negotiation. The bare session is transport-
+            // agnostic, so it answers conservatively: JSONL only, one
+            // verb in flight. Transports that support more (the
+            // multiplexed TCP server) intercept `hello` before it
+            // reaches the session and advertise their own surface.
+            ServiceRequest::Hello { .. } => ServiceResponse::Hello {
+                encodings: vec!["jsonl".into()],
+                pipelined: false,
+            },
             ServiceRequest::InitEngines { spec, params } => {
                 self.initialize(SessionSpec::from_decl(spec)?, params)?;
                 ServiceResponse::Ok

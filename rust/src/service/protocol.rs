@@ -157,6 +157,14 @@ pub enum GetBatchMetaReply {
 /// verbs, weight subscription, the data-plane placement verbs, stats,
 /// and lifecycle).
 pub enum ServiceRequest {
+    /// Connection negotiation — the first verb a new-style client sends.
+    /// `encodings` lists the wire encodings the client can speak (e.g.
+    /// `["binary", "jsonl"]`, preferred first); `pipelined` advertises
+    /// that the client tags requests with `seq` and can handle
+    /// out-of-order responses. Old servers answer `Err("unknown op
+    /// ...")`, which a client must treat as "JSONL, strict order" —
+    /// negotiation degrades, it never fails.
+    Hello { encodings: Vec<String>, pipelined: bool },
     /// `init_engines`: install the task graph + initial weights.
     InitEngines { spec: SpecDecl, params: ParamSet },
     /// Register one more task after init (dynamic task graph).
@@ -320,6 +328,29 @@ pub struct UnitStats {
     pub remote_bytes_read: u64,
 }
 
+/// Control-plane traffic snapshot: what the multiplexed server is
+/// doing right now. Makes the `control_plane` bench numbers observable
+/// on a live run via `stats` / `asyncflow info --connect`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ControlPlaneStats {
+    /// Live TCP connections on the service port.
+    pub connections: usize,
+    /// Verbs served since the server started.
+    pub verbs_total: u64,
+    /// Verbs per second averaged over server uptime.
+    pub verbs_per_sec: f64,
+    /// Per-verb counts, sorted by op name.
+    pub verbs_by_op: Vec<(String, u64)>,
+    /// Long-poll verbs currently parked as waker registrations (zero
+    /// threads blocked on them).
+    pub parked_long_polls: usize,
+    /// Histogram of in-flight pipelined requests per connection,
+    /// sampled at dispatch. Bucket `i` counts dispatches that saw a
+    /// depth in `(2^(i-1), 2^i]` — i.e. upper bounds 1, 2, 4, 8, 16,
+    /// 32, and 33+ for the last bucket.
+    pub pipelined_depth: Vec<u64>,
+}
+
 /// Whole-service statistics snapshot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServiceStats {
@@ -330,11 +361,19 @@ pub struct ServiceStats {
     pub closed: bool,
     /// Weight-plane ledger (`None` from peers that predate it).
     pub weights: Option<WeightPlaneStats>,
+    /// Control-plane traffic (`None` from peers that predate it, and
+    /// from in-proc sessions with no TCP server attached).
+    pub control: Option<ControlPlaneStats>,
 }
 
 /// The service answers.
 pub enum ServiceResponse {
     Ok,
+    /// `hello` outcome: the encodings the server accepted (intersection
+    /// with what it supports, server preference first) and whether it
+    /// multiplexes `seq`-tagged pipelined requests. After this response
+    /// both sides switch to the first accepted encoding.
+    Hello { encodings: Vec<String>, pipelined: bool },
     Indices(Vec<GlobalIndex>),
     Batch(GetBatchReply),
     Weights(ParamSet),
@@ -720,6 +759,61 @@ fn weight_plane_stats_from_json(j: &Json) -> Result<WeightPlaneStats> {
                     id: field_str(s, "id")?,
                     version: field_u64(s, "version")?,
                 })
+            })
+            .collect::<Result<_>>()?,
+    })
+}
+
+fn control_plane_stats_to_json(c: &ControlPlaneStats) -> Json {
+    Json::obj(vec![
+        ("connections", Json::Num(c.connections as f64)),
+        ("verbs_total", Json::Num(c.verbs_total as f64)),
+        ("verbs_per_sec", Json::Num(c.verbs_per_sec)),
+        (
+            "verbs_by_op",
+            Json::Arr(
+                c.verbs_by_op
+                    .iter()
+                    .map(|(op, n)| {
+                        Json::obj(vec![
+                            ("op", Json::Str(op.clone())),
+                            ("count", Json::Num(*n as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("parked_long_polls", Json::Num(c.parked_long_polls as f64)),
+        (
+            "pipelined_depth",
+            Json::Arr(
+                c.pipelined_depth
+                    .iter()
+                    .map(|n| Json::Num(*n as f64))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn control_plane_stats_from_json(j: &Json) -> Result<ControlPlaneStats> {
+    Ok(ControlPlaneStats {
+        connections: field_usize(j, "connections")?,
+        verbs_total: field_u64(j, "verbs_total")?,
+        verbs_per_sec: field(j, "verbs_per_sec")?
+            .as_f64()
+            .context("verbs_per_sec must be a number")?,
+        verbs_by_op: field_arr(j, "verbs_by_op")?
+            .iter()
+            .map(|e| Ok((field_str(e, "op")?, field_u64(e, "count")?)))
+            .collect::<Result<_>>()?,
+        parked_long_polls: field_usize(j, "parked_long_polls")?,
+        pipelined_depth: field_arr(j, "pipelined_depth")?
+            .iter()
+            .map(|n| {
+                n.as_i64()
+                    .and_then(|v| u64::try_from(v).ok())
+                    .context("depth bucket must be a u64")
             })
             .collect::<Result<_>>()?,
     })
@@ -1135,6 +1229,21 @@ impl ServiceRequest {
     /// Encode this request as one wire JSON object.
     pub fn to_json(&self) -> Result<Json> {
         Ok(match self {
+            ServiceRequest::Hello { encodings, pipelined } => {
+                Json::obj(vec![
+                    ("op", Json::Str("hello".into())),
+                    (
+                        "encodings",
+                        Json::Arr(
+                            encodings
+                                .iter()
+                                .map(|e| Json::Str(e.clone()))
+                                .collect(),
+                        ),
+                    ),
+                    ("pipelined", Json::Bool(*pipelined)),
+                ])
+            }
             ServiceRequest::InitEngines { spec, params } => Json::obj(vec![
                 ("op", Json::Str("init_engines".into())),
                 ("storage_units", Json::Num(spec.storage_units as f64)),
@@ -1359,6 +1468,22 @@ impl ServiceRequest {
     pub fn from_json(j: &Json) -> Result<ServiceRequest> {
         let op = field_str(j, "op")?;
         Ok(match op.as_str() {
+            "hello" => ServiceRequest::Hello {
+                encodings: field_arr(j, "encodings")?
+                    .iter()
+                    .map(|e| {
+                        Ok(e.as_str()
+                            .context("encoding must be a string")?
+                            .to_string())
+                    })
+                    .collect::<Result<_>>()?,
+                pipelined: match j.get("pipelined") {
+                    None => false,
+                    Some(p) => p
+                        .as_bool()
+                        .context("pipelined must be a bool")?,
+                },
+            },
             "init_engines" => ServiceRequest::InitEngines {
                 spec: SpecDecl {
                     storage_units: field_usize(j, "storage_units")?,
@@ -1525,6 +1650,44 @@ impl ServiceRequest {
         })
     }
 
+    /// The wire `op` string for this verb (stable; used as the
+    /// per-verb stats key by [`super::transport::ControlPlaneMetrics`]).
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            ServiceRequest::Hello { .. } => "hello",
+            ServiceRequest::InitEngines { .. } => "init_engines",
+            ServiceRequest::RegisterTask { .. } => "register_task",
+            ServiceRequest::PutPrompts { .. } => "put_prompts",
+            ServiceRequest::PutExperience { .. } => "put_experience",
+            ServiceRequest::PutBatch { .. } => "put_batch",
+            ServiceRequest::GetBatch(_) => "get_batch",
+            ServiceRequest::AckBatch { .. } => "ack_batch",
+            ServiceRequest::SubscribeWeights { .. } => {
+                "subscribe_weights"
+            }
+            ServiceRequest::SubscribeWeightsMeta { .. } => {
+                "subscribe_weights_meta"
+            }
+            ServiceRequest::FetchTensors { .. } => "fetch_tensors",
+            ServiceRequest::WeightSync { .. } => "weight_sync",
+            ServiceRequest::LeasePrompts(_) => "lease_prompts",
+            ServiceRequest::PutChunk { .. } => "put_chunk",
+            ServiceRequest::RenewLease { .. } => "renew_lease",
+            ServiceRequest::WorkerStats => "worker_stats",
+            ServiceRequest::AttachUnit { .. } => "attach_unit",
+            ServiceRequest::AllocRows { .. } => "alloc_rows",
+            ServiceRequest::NotifyCells { .. } => "notify_cells",
+            ServiceRequest::GetBatchMeta(_) => "get_batch_meta",
+            ServiceRequest::FetchRows { .. } => "fetch_rows",
+            ServiceRequest::ExportTelemetry { .. } => {
+                "export_telemetry"
+            }
+            ServiceRequest::Stats => "stats",
+            ServiceRequest::Evict { .. } => "evict",
+            ServiceRequest::Shutdown => "shutdown",
+        }
+    }
+
     /// One JSONL wire line (no trailing newline).
     pub fn to_line(&self) -> Result<String> {
         Ok(self.to_json()?.to_string())
@@ -1536,10 +1699,28 @@ impl ServiceRequest {
     /// that don't understand `trace` ignore unknown keys by
     /// construction.
     pub fn to_line_traced(&self, trace: u64) -> Result<String> {
+        self.to_line_enveloped(trace, None)
+    }
+
+    /// One JSONL wire line carrying the full multiplexing envelope.
+    /// `trace = 0` and `seq = None` are both elided, so an untagged
+    /// call produces the exact [`ServiceRequest::to_line`] bytes —
+    /// old peers never see anything new. A `seq`-tagged request asks
+    /// the server to echo the tag on its response so one connection
+    /// can pipeline many in-flight verbs and correlate replies out of
+    /// order.
+    pub fn to_line_enveloped(
+        &self,
+        trace: u64,
+        seq: Option<u64>,
+    ) -> Result<String> {
         let mut j = self.to_json()?;
-        if trace != 0 {
-            if let Json::Obj(pairs) = &mut j {
+        if let Json::Obj(pairs) = &mut j {
+            if trace != 0 {
                 pairs.insert("trace".into(), Json::Num(trace as f64));
+            }
+            if let Some(s) = seq {
+                pairs.insert("seq".into(), Json::Num(s as f64));
             }
         }
         Ok(j.to_string())
@@ -1555,13 +1736,27 @@ impl ServiceRequest {
     /// Parse one JSONL request line plus its trace id (`0` = the peer
     /// sent none — old encoders, or an untraced call).
     pub fn parse_line_traced(line: &str) -> Result<(ServiceRequest, u64)> {
+        let (req, trace, _seq) = Self::parse_line_enveloped(line)?;
+        Ok((req, trace))
+    }
+
+    /// Parse one JSONL request line plus its full envelope: trace id
+    /// (`0` = none) and pipelining `seq` (`None` = an old-style peer
+    /// that expects strict-order responses).
+    pub fn parse_line_enveloped(
+        line: &str,
+    ) -> Result<(ServiceRequest, u64, Option<u64>)> {
         let j = Json::parse(line.trim())
             .map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
         let trace = match j.get("trace") {
             None => 0,
             Some(_) => field_u64(&j, "trace")?,
         };
-        Ok((ServiceRequest::from_json(&j)?, trace))
+        let seq = match j.get("seq") {
+            None => None,
+            Some(_) => Some(field_u64(&j, "seq")?),
+        };
+        Ok((ServiceRequest::from_json(&j)?, trace, seq))
     }
 }
 
@@ -1575,6 +1770,26 @@ impl ServiceResponse {
         Ok(match self {
             ServiceResponse::Ok => {
                 Json::obj(vec![("ok", Json::Bool(true))])
+            }
+            ServiceResponse::Hello { encodings, pipelined } => {
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "hello",
+                        Json::obj(vec![
+                            (
+                                "encodings",
+                                Json::Arr(
+                                    encodings
+                                        .iter()
+                                        .map(|e| Json::Str(e.clone()))
+                                        .collect(),
+                                ),
+                            ),
+                            ("pipelined", Json::Bool(*pipelined)),
+                        ]),
+                    ),
+                ])
             }
             ServiceResponse::Indices(idx) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -1779,6 +1994,10 @@ impl ServiceResponse {
                     stats_pairs
                         .push(("weights", weight_plane_stats_to_json(w)));
                 }
+                if let Some(c) = &s.control {
+                    stats_pairs
+                        .push(("control", control_plane_stats_to_json(c)));
+                }
                 Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("stats", Json::obj(stats_pairs)),
@@ -1837,6 +2056,24 @@ impl ServiceResponse {
             .context("field \"ok\" must be a bool")?;
         if !ok {
             return Ok(ServiceResponse::Err(field_str(j, "error")?));
+        }
+        if let Some(h) = j.get("hello") {
+            return Ok(ServiceResponse::Hello {
+                encodings: field_arr(h, "encodings")?
+                    .iter()
+                    .map(|e| {
+                        Ok(e.as_str()
+                            .context("encoding must be a string")?
+                            .to_string())
+                    })
+                    .collect::<Result<_>>()?,
+                pipelined: match h.get("pipelined") {
+                    None => false,
+                    Some(p) => p
+                        .as_bool()
+                        .context("pipelined must be a bool")?,
+                },
+            });
         }
         if let Some(idx) = j.get("indices") {
             return Ok(ServiceResponse::Indices(indices_from_json(
@@ -2002,6 +2239,11 @@ impl ServiceResponse {
                 None => None,
                 Some(w) => Some(weight_plane_stats_from_json(w)?),
             };
+            // Optional on decode (older peers elide the control plane).
+            let control = match s.get("control") {
+                None => None,
+                Some(c) => Some(control_plane_stats_from_json(c)?),
+            };
             return Ok(ServiceResponse::Stats(ServiceStats {
                 tasks,
                 units,
@@ -2011,6 +2253,7 @@ impl ServiceResponse {
                     .as_bool()
                     .context("closed must be a bool")?,
                 weights,
+                control,
             }));
         }
         if let Some(t) = j.get("telemetry") {
@@ -2026,11 +2269,38 @@ impl ServiceResponse {
         Ok(self.to_json()?.to_string())
     }
 
+    /// One JSONL wire line echoing a request's pipelining `seq`.
+    /// `None` is elided and produces the exact
+    /// [`ServiceResponse::to_line`] bytes; old decoders ignore the
+    /// extra key by construction (they dispatch on key presence of
+    /// known payload fields).
+    pub fn to_line_seq(&self, seq: Option<u64>) -> Result<String> {
+        let mut j = self.to_json()?;
+        if let (Some(s), Json::Obj(pairs)) = (seq, &mut j) {
+            pairs.insert("seq".into(), Json::Num(s as f64));
+        }
+        Ok(j.to_string())
+    }
+
     /// Parse one JSONL response line.
     pub fn parse_line(line: &str) -> Result<ServiceResponse> {
         let j = Json::parse(line.trim())
             .map_err(|e| anyhow::anyhow!("bad response JSON: {e}"))?;
         ServiceResponse::from_json(&j)
+    }
+
+    /// Parse one JSONL response line plus its pipelining `seq`
+    /// (`None` = the server answered in strict order).
+    pub fn parse_line_seq(
+        line: &str,
+    ) -> Result<(ServiceResponse, Option<u64>)> {
+        let j = Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("bad response JSON: {e}"))?;
+        let seq = match j.get("seq") {
+            None => None,
+            Some(_) => Some(field_u64(&j, "seq")?),
+        };
+        Ok((ServiceResponse::from_json(&j)?, seq))
     }
 }
 
@@ -2318,14 +2588,26 @@ mod tests {
                     version: 1,
                 }],
             }),
+            control: Some(ControlPlaneStats {
+                connections: 64,
+                verbs_total: 4096,
+                verbs_per_sec: 1250.5,
+                verbs_by_op: vec![
+                    ("get_batch".into(), 100),
+                    ("renew_lease".into(), 3996),
+                ],
+                parked_long_polls: 7,
+                pipelined_depth: vec![10, 5, 3, 1, 0, 0, 0],
+            }),
         };
         match roundtrip_resp(ServiceResponse::Stats(stats.clone())) {
             ServiceResponse::Stats(got) => assert_eq!(got, stats),
             _ => panic!("wrong variant"),
         }
         // ...and a weight-plane-free snapshot stays decodable (older
-        // peers elide the ledger).
-        let bare = ServiceStats { weights: None, ..stats };
+        // peers elide the ledger and the control plane).
+        let bare =
+            ServiceStats { weights: None, control: None, ..stats };
         match roundtrip_resp(ServiceResponse::Stats(bare.clone())) {
             ServiceResponse::Stats(got) => assert_eq!(got, bare),
             _ => panic!("wrong variant"),
@@ -2829,5 +3111,75 @@ mod tests {
             "missing fields"
         );
         assert!(ServiceResponse::parse_line("{}").is_err(), "missing ok");
+    }
+
+    #[test]
+    fn hello_roundtrips_both_ways() {
+        match roundtrip_req(ServiceRequest::Hello {
+            encodings: vec!["binary".into(), "jsonl".into()],
+            pipelined: true,
+        }) {
+            ServiceRequest::Hello { encodings, pipelined } => {
+                assert_eq!(encodings, vec!["binary", "jsonl"]);
+                assert!(pipelined);
+            }
+            _ => panic!("wrong variant"),
+        }
+        match roundtrip_resp(ServiceResponse::Hello {
+            encodings: vec!["binary".into()],
+            pipelined: true,
+        }) {
+            ServiceResponse::Hello { encodings, pipelined } => {
+                assert_eq!(encodings, vec!["binary"]);
+                assert!(pipelined);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn seq_envelope_is_elided_when_absent() {
+        let req = ServiceRequest::Stats;
+        // No trace, no seq -> byte-identical to the plain encoding, so
+        // old peers never see a new key.
+        assert_eq!(
+            req.to_line_enveloped(0, None).unwrap(),
+            req.to_line().unwrap()
+        );
+        let resp = ServiceResponse::Ok;
+        assert_eq!(
+            resp.to_line_seq(None).unwrap(),
+            resp.to_line().unwrap()
+        );
+    }
+
+    #[test]
+    fn seq_envelope_roundtrips_with_trace() {
+        let line = ServiceRequest::Stats
+            .to_line_enveloped(77, Some(42))
+            .unwrap();
+        let (req, trace, seq) =
+            ServiceRequest::parse_line_enveloped(&line).unwrap();
+        assert!(matches!(req, ServiceRequest::Stats));
+        assert_eq!(trace, 77);
+        assert_eq!(seq, Some(42));
+        // Old-style decode of a seq-tagged line still works (the key is
+        // simply ignored).
+        assert!(matches!(
+            ServiceRequest::parse_line(&line).unwrap(),
+            ServiceRequest::Stats
+        ));
+
+        let rline = ServiceResponse::Indices(vec![GlobalIndex(3)])
+            .to_line_seq(Some(42))
+            .unwrap();
+        let (resp, seq) =
+            ServiceResponse::parse_line_seq(&rline).unwrap();
+        assert!(matches!(resp, ServiceResponse::Indices(_)));
+        assert_eq!(seq, Some(42));
+        assert!(matches!(
+            ServiceResponse::parse_line(&rline).unwrap(),
+            ServiceResponse::Indices(_)
+        ));
     }
 }

@@ -1,44 +1,97 @@
 //! Transport boundary for the service API.
 //!
-//! A [`Transport`] moves one [`ServiceRequest`] to a [`Session`] and one
-//! [`ServiceResponse`] back. Two implementations:
+//! A [`Transport`] moves [`ServiceRequest`]s to a [`Session`] and
+//! [`ServiceResponse`]s back. Implementations:
 //!
 //! * [`InProcTransport`] — the zero-copy fast path: requests are handed
 //!   to the dispatcher by value, no serialization, no syscalls. This is
 //!   what the `Trainer` uses, so the service API costs nothing over the
 //!   old direct `TransferQueue` calls.
-//! * [`TcpJsonlTransport`] — newline-delimited JSON over TCP: one request
-//!   object per line, one response line per request, strictly in order.
-//!   This is the boundary that lets external trainers / rollout workers
-//!   attach from other processes or hosts.
+//! * [`TcpJsonlTransport`] — newline-delimited JSON over TCP: one
+//!   request object per line, one response line per request, strictly
+//!   in order, one verb in flight. The compatibility surface every old
+//!   peer speaks, and the debug surface (`asyncflow info --connect`).
+//! * [`TcpPipelinedTransport`] — the multiplexed client: negotiates
+//!   capabilities with `hello`, tags requests with `seq` so many verbs
+//!   can be in flight on one connection, correlates out-of-order
+//!   responses on a dedicated reader thread, and optionally switches
+//!   the wire to binary control frames (see [`super::frames`]).
 //!
-//! The server side is [`TcpJsonlServer`]: a thread-per-connection accept
-//! loop dispatching every parsed line through [`Session::handle`]. A
-//! malformed line gets an `{"ok":false,...}` response and the connection
-//! stays usable — framing is per-line, so one bad request cannot poison
-//! the stream.
+//! The server side is [`TcpJsonlServer`]. [`TcpJsonlServer::bind`]
+//! starts the *multiplexed* server: a readiness-polling reactor thread
+//! owns every socket non-blockingly, slices complete messages out of
+//! per-connection buffers, and feeds a bounded worker pool; long-poll
+//! verbs that find nothing ready park as waker registrations on the
+//! controller / parameter store instead of pinning a thread, so a
+//! parked consumer costs no CPU and wakes the moment readiness changes
+//! or its lease-expiry horizon passes. [`TcpJsonlServer::bind_threaded`]
+//! keeps the original thread-per-connection server as the baseline the
+//! `control_plane` bench compares against (now with graceful drain).
+//!
+//! Wire compatibility: a connection starts as strict-order JSONL. A
+//! `seq`-less request is processed in arrival order relative to other
+//! `seq`-less requests on the same connection and answered without a
+//! `seq` tag — old clients observe exactly the old contract, including
+//! head-of-line blocking on their own long-polls. `seq`-tagged
+//! requests opt out: they dispatch concurrently and their responses
+//! are written whenever ready, tagged for correlation.
 
-use std::collections::HashSet;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{
+    Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs,
+};
+use std::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::protocol::{GetBatchReply, ServiceRequest, ServiceResponse};
+use super::frames;
+use super::protocol::{
+    ControlPlaneStats, GetBatchReply, GetBatchSpec, ServiceRequest,
+    ServiceResponse,
+};
 use super::Session;
+use crate::rollout::LeaseSpec;
+use crate::transfer_queue::frame::MAX_FRAME_BYTES;
 
 /// A bidirectional request/response channel to a service session.
 pub trait Transport: Send + Sync {
     fn call(&self, req: ServiceRequest) -> Result<ServiceResponse>;
 
+    /// Pipeline a burst of requests and return the responses in
+    /// request order. The default issues them sequentially (one round
+    /// trip each); pipelined transports override this to put the whole
+    /// burst on the wire in a single write before collecting any
+    /// response — heartbeat-class verbs (`renew_lease`, `ack_batch`,
+    /// `notify_cells`) cost one round trip per *burst* instead of one
+    /// per verb.
+    fn call_many(
+        &self,
+        reqs: Vec<ServiceRequest>,
+    ) -> Result<Vec<ServiceResponse>> {
+        reqs.into_iter().map(|r| self.call(r)).collect()
+    }
+
+    /// Whether this transport multiplexes `seq`-tagged requests so
+    /// many can be in flight at once on one connection. When true,
+    /// long-poll verbs may ride the main connection — a parked request
+    /// no longer serializes the fast verbs behind the connection
+    /// mutex, so clients skip the sibling dial.
+    fn pipelined(&self) -> bool {
+        false
+    }
+
     /// Open an *independent* channel to the same peer. Long-poll verbs
-    /// (`lease_prompts`, `subscribe_weights`) run on a sibling so a
-    /// request parked server-side never serializes the fast verbs
-    /// behind the connection mutex. Transports without a peer to
-    /// re-dial may decline.
+    /// (`lease_prompts`, `subscribe_weights`) run on a sibling when the
+    /// transport is not [`Transport::pipelined`], so a request parked
+    /// server-side never serializes the fast verbs behind the
+    /// connection mutex. Transports without a peer to re-dial may
+    /// decline.
     fn open_sibling(&self) -> Result<Arc<dyn Transport>> {
         bail!("transport does not support sibling channels")
     }
@@ -84,14 +137,121 @@ impl Transport for InProcTransport {
     }
 }
 
-/// TCP client transport speaking one JSON object per line.
+// ===========================================================================
+// Control-plane metrics
+// ===========================================================================
+
+/// Live control-plane counters shared by the server's reactor and
+/// workers, surfaced through the `stats` verb (see
+/// [`ControlPlaneStats`]) and `asyncflow info --connect`.
+pub struct ControlPlaneMetrics {
+    started: Instant,
+    connections: AtomicUsize,
+    verbs_total: AtomicU64,
+    by_op: Mutex<HashMap<&'static str, u64>>,
+    parked: AtomicUsize,
+    // Histogram of per-connection in-flight depth sampled at dispatch;
+    // bucket upper bounds 1, 2, 4, 8, 16, 32, then 33+.
+    depth: [AtomicU64; 7],
+}
+
+impl Default for ControlPlaneMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ControlPlaneMetrics {
+    pub fn new() -> Self {
+        ControlPlaneMetrics {
+            started: Instant::now(),
+            connections: AtomicUsize::new(0),
+            verbs_total: AtomicU64::new(0),
+            by_op: Mutex::new(HashMap::new()),
+            parked: AtomicUsize::new(0),
+            depth: Default::default(),
+        }
+    }
+
+    fn conn_opened(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn conn_closed(&self) {
+        self.connections.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn record_verb(&self, op: &'static str, depth: usize) {
+        self.verbs_total.fetch_add(1, Ordering::Relaxed);
+        *self.by_op.lock().unwrap().entry(op).or_insert(0) += 1;
+        let bucket = match depth {
+            0..=1 => 0,
+            2 => 1,
+            3..=4 => 2,
+            5..=8 => 3,
+            9..=16 => 4,
+            17..=32 => 5,
+            _ => 6,
+        };
+        self.depth[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn park_begin(&self) {
+        self.parked.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn park_end(&self) {
+        self.parked.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot for the `stats` verb.
+    pub fn snapshot(&self) -> ControlPlaneStats {
+        let verbs_total = self.verbs_total.load(Ordering::Relaxed);
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        let mut verbs_by_op: Vec<(String, u64)> = self
+            .by_op
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect();
+        verbs_by_op.sort();
+        ControlPlaneStats {
+            connections: self.connections.load(Ordering::Relaxed),
+            verbs_total,
+            verbs_per_sec: verbs_total as f64 / uptime,
+            verbs_by_op,
+            parked_long_polls: self.parked.load(Ordering::Relaxed),
+            pipelined_depth: self
+                .depth
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+}
+
+// ===========================================================================
+// Strict-order JSONL client
+// ===========================================================================
+
+struct JsonlIo {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// Reused response-line buffer — `call` is the hottest client path
+    /// and must not allocate a fresh `String` per response.
+    resp: String,
+}
+
+/// TCP client transport speaking one JSON object per line, one verb in
+/// flight.
 ///
 /// A `Mutex` serializes request/response pairs so the transport is safe
-/// to share across threads; clients that want pipelining open one
-/// connection per worker instead (connections are cheap and the server
-/// is thread-per-connection).
+/// to share across threads; clients that want pipelining use
+/// [`TcpPipelinedTransport`] (or open one connection per worker —
+/// connections stay cheap).
 pub struct TcpJsonlTransport {
-    io: Mutex<(BufReader<TcpStream>, TcpStream)>,
+    io: Mutex<JsonlIo>,
     peer: SocketAddr,
     bytes_sent: AtomicU64,
     bytes_received: AtomicU64,
@@ -106,7 +266,11 @@ impl TcpJsonlTransport {
         let peer = stream.peer_addr()?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(TcpJsonlTransport {
-            io: Mutex::new((reader, stream)),
+            io: Mutex::new(JsonlIo {
+                reader,
+                writer: stream,
+                resp: String::new(),
+            }),
             peer,
             bytes_sent: AtomicU64::new(0),
             bytes_received: AtomicU64::new(0),
@@ -123,23 +287,26 @@ impl Transport for TcpJsonlTransport {
     fn call(&self, req: ServiceRequest) -> Result<ServiceResponse> {
         // Trace propagation: the caller's ambient trace id rides the
         // request line as an optional envelope field. Old servers
-        // parse and ignore it; `to_line_traced(0)` is byte-identical
-        // to the untraced encoding.
-        let line = req.to_line_traced(crate::telemetry::current_trace())?;
+        // parse and ignore it; trace 0 is byte-identical to the
+        // untraced encoding.
+        let mut line =
+            req.to_line_traced(crate::telemetry::current_trace())?;
+        // One buffered write for line + terminator: the old
+        // write_all/write_all/flush triple cost two extra syscalls per
+        // verb (and with TCP_NODELAY, an extra one-byte packet).
+        line.push('\n');
         let mut io = self.io.lock().unwrap();
-        let (reader, writer) = &mut *io;
-        writer.write_all(line.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        let io = &mut *io;
+        io.writer.write_all(line.as_bytes())?;
         self.bytes_sent
-            .fetch_add(line.len() as u64 + 1, Ordering::Relaxed);
-        let mut buf = String::new();
-        let n = reader.read_line(&mut buf)?;
+            .fetch_add(line.len() as u64, Ordering::Relaxed);
+        io.resp.clear();
+        let n = io.reader.read_line(&mut io.resp)?;
         if n == 0 {
             bail!("service connection closed by peer");
         }
         self.bytes_received.fetch_add(n as u64, Ordering::Relaxed);
-        ServiceResponse::parse_line(&buf)
+        ServiceResponse::parse_line(&io.resp)
     }
 
     fn open_sibling(&self) -> Result<Arc<dyn Transport>> {
@@ -158,47 +325,407 @@ impl Transport for TcpJsonlTransport {
     }
 }
 
-/// Accept-loop server: JSONL over TCP, one handler thread per client.
+// ===========================================================================
+// Pipelined / multiplexed client
+// ===========================================================================
+
+/// Routing table from `seq` to the waiting caller. Seq-less responses
+/// (a server that never learned to pipeline) correlate FIFO instead —
+/// strict-order servers answer in request order by contract.
+#[derive(Default)]
+struct PendingMap {
+    by_seq: HashMap<u64, mpsc::Sender<ServiceResponse>>,
+    fifo: VecDeque<mpsc::Sender<ServiceResponse>>,
+}
+
+struct PipelinedWriter {
+    stream: TcpStream,
+    /// Reused encode buffer for bursts.
+    buf: Vec<u8>,
+}
+
+/// One reply slot per request in a burst: the `seq` it was tagged with
+/// (None on strict-order fallback) and the receiver its response will
+/// arrive on.
+type BurstSlots = Vec<(Option<u64>, mpsc::Receiver<ServiceResponse>)>;
+
+/// The multiplexed TCP client: `hello`-negotiated, many verbs in
+/// flight on one connection, out-of-order correlation by `seq`,
+/// optionally binary-framed.
+///
+/// Degrades transparently: against an old strict-order server (one
+/// that answers `hello` with an error) it falls back to JSONL without
+/// `seq` tags and FIFO correlation — requests still pipeline on the
+/// wire (the old server reads them one at a time), but long-polls
+/// head-of-line block, so [`Transport::pipelined`] reports `false` and
+/// clients keep dialing siblings for those.
+pub struct TcpPipelinedTransport {
+    writer: Mutex<PipelinedWriter>,
+    pending: Arc<Mutex<PendingMap>>,
+    next_seq: AtomicU64,
+    peer: SocketAddr,
+    /// Negotiated: tag requests with `seq` (out-of-order server).
+    use_seq: bool,
+    /// Negotiated: binary control frames instead of JSONL.
+    binary: bool,
+    dead: Arc<AtomicBool>,
+    bytes_sent: AtomicU64,
+    bytes_received: Arc<AtomicU64>,
+    reader: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl TcpPipelinedTransport {
+    /// Dial and negotiate. `prefer_binary` puts `"binary"` first in
+    /// the offered encodings; the server picks.
+    pub fn connect(
+        addr: impl ToSocketAddrs,
+        prefer_binary: bool,
+    ) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .context("connecting to asyncflow service")?;
+        stream.set_nodelay(true).ok();
+        let peer = stream.peer_addr()?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream.try_clone()?;
+
+        // Negotiate in plain JSONL — `hello` must be the first verb on
+        // the connection and must complete before anything else is
+        // sent, because the encoding switches right behind its
+        // response.
+        let mut encodings = vec!["jsonl".to_string()];
+        if prefer_binary {
+            encodings.insert(0, "binary".to_string());
+        }
+        let mut line = ServiceRequest::Hello {
+            encodings,
+            pipelined: true,
+        }
+        .to_line()?;
+        line.push('\n');
+        writer.write_all(line.as_bytes())?;
+        let mut resp = String::new();
+        if reader.read_line(&mut resp)? == 0 {
+            bail!("service connection closed during hello");
+        }
+        let (use_seq, binary) = match ServiceResponse::parse_line(&resp)?
+        {
+            ServiceResponse::Hello { encodings, pipelined } => (
+                pipelined,
+                encodings.first().is_some_and(|e| e == "binary"),
+            ),
+            // An old server answers `Err("unknown op ...")`:
+            // negotiation degrades to strict-order JSONL, it never
+            // fails the connection.
+            ServiceResponse::Err(_) => (false, false),
+            other => bail!(
+                "unexpected hello response: {:?}",
+                other.to_line()
+            ),
+        };
+
+        let pending: Arc<Mutex<PendingMap>> = Arc::default();
+        let dead = Arc::new(AtomicBool::new(false));
+        let bytes_received = Arc::new(AtomicU64::new(0));
+        let reader_thread = {
+            let pending = pending.clone();
+            let dead = dead.clone();
+            let bytes_received = bytes_received.clone();
+            std::thread::Builder::new()
+                .name("svc-pipeline-rx".into())
+                .spawn(move || {
+                    reader_loop(
+                        reader,
+                        binary,
+                        &pending,
+                        &bytes_received,
+                    );
+                    dead.store(true, Ordering::SeqCst);
+                    // Dropping the senders fails every in-flight
+                    // `recv` so callers see "connection closed"
+                    // instead of hanging.
+                    let mut p = pending.lock().unwrap();
+                    p.by_seq.clear();
+                    p.fifo.clear();
+                })
+                .context("spawning pipeline reader")?
+        };
+
+        Ok(TcpPipelinedTransport {
+            writer: Mutex::new(PipelinedWriter {
+                stream,
+                buf: Vec::with_capacity(4096),
+            }),
+            pending,
+            next_seq: AtomicU64::new(0),
+            peer,
+            use_seq,
+            binary,
+            dead,
+            bytes_sent: AtomicU64::new(0),
+            bytes_received,
+            reader: Mutex::new(Some(reader_thread)),
+        })
+    }
+
+    /// The server address this transport is connected to.
+    pub fn peer_addr(&self) -> SocketAddr {
+        self.peer
+    }
+
+    /// The negotiated wire encoding (`"binary"` or `"jsonl"`).
+    pub fn encoding(&self) -> &'static str {
+        if self.binary {
+            "binary"
+        } else {
+            "jsonl"
+        }
+    }
+
+    fn encode_into(
+        &self,
+        buf: &mut Vec<u8>,
+        req: &ServiceRequest,
+        seq: Option<u64>,
+    ) -> Result<()> {
+        let trace = crate::telemetry::current_trace();
+        if self.binary {
+            let body = frames::encode_request(req, trace, seq)?;
+            frames::append_frame(buf, &body);
+        } else {
+            let line = req.to_line_enveloped(trace, seq)?;
+            buf.extend_from_slice(line.as_bytes());
+            buf.push(b'\n');
+        }
+        Ok(())
+    }
+
+    /// Register receivers and write the encoded burst while holding
+    /// the writer lock — registration-before-write means a response
+    /// can never arrive unroutable, and FIFO order matches write order
+    /// by construction.
+    fn send_burst(&self, reqs: &[ServiceRequest]) -> Result<BurstSlots> {
+        if self.dead.load(Ordering::SeqCst) {
+            bail!("service connection closed by peer");
+        }
+        let mut slots = Vec::with_capacity(reqs.len());
+        let mut w = self.writer.lock().unwrap();
+        let w = &mut *w;
+        w.buf.clear();
+        for req in reqs {
+            let seq = self
+                .use_seq
+                .then(|| self.next_seq.fetch_add(1, Ordering::Relaxed));
+            self.encode_into(&mut w.buf, req, seq)?;
+            let (tx, rx) = mpsc::channel();
+            let mut p = self.pending.lock().unwrap();
+            match seq {
+                Some(s) => {
+                    p.by_seq.insert(s, tx);
+                }
+                None => p.fifo.push_back(tx),
+            }
+            slots.push((seq, rx));
+        }
+        let res = w.stream.write_all(&w.buf);
+        if res.is_err() {
+            // Unregister so no receiver waits on a write that never
+            // happened.
+            let mut p = self.pending.lock().unwrap();
+            for (seq, _) in &slots {
+                match seq {
+                    Some(s) => {
+                        p.by_seq.remove(s);
+                    }
+                    None => {
+                        p.fifo.pop_back();
+                    }
+                }
+            }
+            res?;
+        }
+        self.bytes_sent
+            .fetch_add(w.buf.len() as u64, Ordering::Relaxed);
+        Ok(slots)
+    }
+}
+
+impl Transport for TcpPipelinedTransport {
+    fn call(&self, req: ServiceRequest) -> Result<ServiceResponse> {
+        let mut slots = self.send_burst(std::slice::from_ref(&req))?;
+        let (_, rx) = slots.pop().unwrap();
+        rx.recv()
+            .map_err(|_| {
+                anyhow::anyhow!("service connection closed by peer")
+            })
+    }
+
+    fn call_many(
+        &self,
+        reqs: Vec<ServiceRequest>,
+    ) -> Result<Vec<ServiceResponse>> {
+        let slots = self.send_burst(&reqs)?;
+        slots
+            .into_iter()
+            .map(|(_, rx)| {
+                rx.recv().map_err(|_| {
+                    anyhow::anyhow!(
+                        "service connection closed by peer"
+                    )
+                })
+            })
+            .collect()
+    }
+
+    fn pipelined(&self) -> bool {
+        self.use_seq
+    }
+
+    fn open_sibling(&self) -> Result<Arc<dyn Transport>> {
+        Ok(Arc::new(TcpPipelinedTransport::connect(
+            self.peer,
+            self.binary,
+        )?))
+    }
+
+    fn wire_bytes(&self) -> Option<(u64, u64)> {
+        Some((
+            self.bytes_sent.load(Ordering::Relaxed),
+            self.bytes_received.load(Ordering::Relaxed),
+        ))
+    }
+
+    fn is_remote(&self) -> bool {
+        true
+    }
+}
+
+impl Drop for TcpPipelinedTransport {
+    fn drop(&mut self) {
+        // Closing the socket unblocks the reader thread promptly.
+        if let Ok(w) = self.writer.lock() {
+            w.stream.shutdown(Shutdown::Both).ok();
+        }
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            h.join().ok();
+        }
+    }
+}
+
+fn reader_loop(
+    mut reader: BufReader<TcpStream>,
+    binary: bool,
+    pending: &Mutex<PendingMap>,
+    bytes_received: &AtomicU64,
+) {
+    let mut line = String::new();
+    loop {
+        let (resp, seq) = if binary {
+            let Ok(body) =
+                crate::transfer_queue::frame::read_frame(&mut reader)
+            else {
+                return;
+            };
+            bytes_received
+                .fetch_add(body.len() as u64 + 4, Ordering::Relaxed);
+            match frames::decode_response(&body) {
+                Ok(pair) => pair,
+                Err(_) => return, // framing lost; connection unusable
+            }
+        } else {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return,
+                Ok(n) => {
+                    bytes_received
+                        .fetch_add(n as u64, Ordering::Relaxed);
+                }
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            match ServiceResponse::parse_line_seq(&line) {
+                Ok(pair) => pair,
+                Err(_) => return,
+            }
+        };
+        let tx = {
+            let mut p = pending.lock().unwrap();
+            match seq {
+                Some(s) => p.by_seq.remove(&s),
+                None => p.fifo.pop_front(),
+            }
+        };
+        match tx {
+            // A dropped receiver (caller gave up) is fine; a response
+            // with no registration at all means the stream is
+            // desynchronized — bail out and let `dead` fail callers.
+            Some(tx) => {
+                tx.send(resp).ok();
+            }
+            None => return,
+        }
+    }
+}
+
+// ===========================================================================
+// Server
+// ===========================================================================
+
+/// The service's TCP server. [`TcpJsonlServer::bind`] runs the
+/// multiplexed reactor + worker-pool architecture;
+/// [`TcpJsonlServer::bind_threaded`] the legacy thread-per-connection
+/// loop (kept as the bench baseline and as a conservative fallback).
 pub struct TcpJsonlServer {
     local_addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    imp: ServerImpl,
+}
+
+enum ServerImpl {
+    Mux(MuxServer),
+    Threaded(ThreadedServer),
 }
 
 impl TcpJsonlServer {
-    /// Bind and start serving `session` on `addr` (use port 0 for an
-    /// ephemeral port; read it back with [`TcpJsonlServer::port`]).
+    /// Bind and start the multiplexed server for `session` on `addr`
+    /// (use port 0 for an ephemeral port; read it back with
+    /// [`TcpJsonlServer::port`]).
     pub fn bind(
+        session: Arc<Session>,
+        addr: impl ToSocketAddrs,
+    ) -> Result<Self> {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(2, 8);
+        Self::bind_mux(session, addr, workers)
+    }
+
+    /// [`TcpJsonlServer::bind`] with an explicit worker-pool size.
+    pub fn bind_mux(
+        session: Arc<Session>,
+        addr: impl ToSocketAddrs,
+        workers: usize,
+    ) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).context("binding service port")?;
+        let local_addr = listener.local_addr()?;
+        let mux = MuxServer::start(session, listener, workers.max(1))?;
+        Ok(TcpJsonlServer { local_addr, imp: ServerImpl::Mux(mux) })
+    }
+
+    /// Bind the legacy thread-per-connection server: strict-order
+    /// JSONL only, one OS thread per client. The `control_plane` bench
+    /// uses this as its baseline; everything else should prefer
+    /// [`TcpJsonlServer::bind`].
+    pub fn bind_threaded(
         session: Arc<Session>,
         addr: impl ToSocketAddrs,
     ) -> Result<Self> {
         let listener =
             TcpListener::bind(addr).context("binding service port")?;
         let local_addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name("svc-accept".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    if stop2.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let Ok(stream) = conn else { continue };
-                    let session = session.clone();
-                    // Thread-per-connection: clients are long-lived
-                    // workers, not request-per-connection web traffic.
-                    let _ = std::thread::Builder::new()
-                        .name("svc-conn".into())
-                        .spawn(move || serve_connection(session, stream));
-                }
-            })
-            .expect("spawning service accept thread");
-        Ok(TcpJsonlServer {
-            local_addr,
-            stop,
-            accept_thread: Some(accept_thread),
-        })
+        let t = ThreadedServer::start(session, listener, local_addr)?;
+        Ok(TcpJsonlServer { local_addr, imp: ServerImpl::Threaded(t) })
     }
 
     /// The bound address (resolves port 0 binds).
@@ -211,26 +738,145 @@ impl TcpJsonlServer {
         self.local_addr.port()
     }
 
-    /// Stop accepting new connections and join the accept loop. Already
-    /// established connections keep running until their clients hang up.
-    pub fn stop(mut self) {
+    /// The server's live control-plane metrics (also attached to the
+    /// session, so the `stats` verb reports them).
+    pub fn metrics(&self) -> Arc<ControlPlaneMetrics> {
+        match &self.imp {
+            ServerImpl::Mux(m) => m.shared.metrics.clone(),
+            ServerImpl::Threaded(t) => t.metrics.clone(),
+        }
+    }
+
+    /// Graceful drain: stop accepting, close every live connection,
+    /// revoke the consumer leases those connections held (their rows
+    /// requeue immediately), and join every server thread. Nothing is
+    /// abandoned: after `stop` returns, no server thread is running
+    /// and no lease granted over this server is still live.
+    pub fn stop(self) {
+        match self.imp {
+            ServerImpl::Mux(m) => m.stop(),
+            ServerImpl::Threaded(t) => t.stop(),
+        }
+    }
+
+    /// Block until the server is stopped from another thread (the
+    /// `asyncflow serve` foreground path).
+    pub fn join(self) {
+        match self.imp {
+            ServerImpl::Mux(m) => m.join(),
+            ServerImpl::Threaded(t) => t.join(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded server (legacy baseline)
+// ---------------------------------------------------------------------------
+
+struct ThreadedServer {
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    metrics: Arc<ControlPlaneMetrics>,
+    local_addr: SocketAddr,
+}
+
+impl ThreadedServer {
+    fn start(
+        session: Arc<Session>,
+        listener: TcpListener,
+        local_addr: SocketAddr,
+    ) -> Result<Self> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::default();
+        let handles: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::default();
+        let metrics = Arc::new(ControlPlaneMetrics::new());
+        session.attach_control_metrics(metrics.clone());
+        let accept_thread = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let handles = handles.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name("svc-accept".into())
+                .spawn(move || {
+                    let mut next_id = 0u64;
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        let id = next_id;
+                        next_id += 1;
+                        if let Ok(c) = stream.try_clone() {
+                            conns.lock().unwrap().insert(id, c);
+                        }
+                        let session = session.clone();
+                        let conns2 = conns.clone();
+                        let metrics = metrics.clone();
+                        // Thread-per-connection: clients are
+                        // long-lived workers, not request-per-
+                        // connection web traffic.
+                        let h = std::thread::Builder::new()
+                            .name("svc-conn".into())
+                            .spawn(move || {
+                                metrics.conn_opened();
+                                serve_connection_threaded(
+                                    session, stream, &metrics,
+                                );
+                                metrics.conn_closed();
+                                conns2.lock().unwrap().remove(&id);
+                            });
+                        if let Ok(h) = h {
+                            handles.lock().unwrap().push(h);
+                        }
+                    }
+                })
+                .context("spawning service accept thread")?
+        };
+        Ok(ThreadedServer {
+            stop,
+            accept_thread: Some(accept_thread),
+            conns,
+            handles,
+            metrics,
+            local_addr,
+        })
+    }
+
+    fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Unblock the accept() by poking our own listener.
         TcpStream::connect(self.local_addr).ok();
         if let Some(h) = self.accept_thread.take() {
             h.join().ok();
         }
+        // Close every live connection; each handler revokes its own
+        // granted leases on the way out, and joining the handlers
+        // guarantees that has happened before `stop` returns.
+        for (_, s) in self.conns.lock().unwrap().drain() {
+            s.shutdown(Shutdown::Both).ok();
+        }
+        let handles: Vec<_> =
+            std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            h.join().ok();
+        }
     }
 
-    /// Block on the accept loop forever (the `asyncflow serve` path).
-    pub fn join(mut self) {
+    fn join(mut self) {
         if let Some(h) = self.accept_thread.take() {
             h.join().ok();
         }
     }
 }
 
-fn serve_connection(session: Arc<Session>, stream: TcpStream) {
+fn serve_connection_threaded(
+    session: Arc<Session>,
+    stream: TcpStream,
+    metrics: &ControlPlaneMetrics,
+) {
     stream.set_nodelay(true).ok();
     let Ok(mut writer) = stream.try_clone() else { return };
     let reader = BufReader::new(stream);
@@ -240,6 +886,7 @@ fn serve_connection(session: Arc<Session>, stream: TcpStream) {
     // instead of waiting out the TTL (which stays the backstop for
     // stalls that keep the socket open).
     let mut granted: HashSet<u64> = HashSet::new();
+    let mut out = String::new();
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
@@ -247,6 +894,7 @@ fn serve_connection(session: Arc<Session>, stream: TcpStream) {
         }
         let resp = match ServiceRequest::parse_line_traced(&line) {
             Ok((req, trace)) => {
+                metrics.record_verb(req.op_name(), 1);
                 let acked = match &req {
                     ServiceRequest::AckBatch { lease } => Some(*lease),
                     _ => None,
@@ -256,42 +904,26 @@ fn serve_connection(session: Arc<Session>, stream: TcpStream) {
                 // join the caller's trace.
                 let _scope = crate::telemetry::scoped_trace(trace);
                 let resp = session.handle(req);
-                match &resp {
-                    ServiceResponse::Batch(GetBatchReply::Leased {
-                        lease,
-                        ..
-                    }) => {
-                        granted.insert(*lease);
-                    }
-                    ServiceResponse::BatchMeta {
-                        lease: Some(id), ..
-                    } => {
-                        granted.insert(*id);
-                    }
-                    ServiceResponse::Ok => {
-                        if let Some(id) = acked {
-                            granted.remove(&id);
-                        }
-                    }
-                    _ => {}
-                }
+                track_granted(&mut granted, &resp, acked);
                 resp
             }
             Err(e) => ServiceResponse::Err(format!("bad request: {e:#}")),
         };
-        let out = match resp.to_line() {
-            Ok(s) => s,
-            Err(e) => ServiceResponse::Err(format!(
-                "response encoding failed: {e:#}"
-            ))
-            .to_line()
-            .unwrap_or_else(|_| "{\"ok\":false,\"error\":\"encode\"}".into()),
-        };
-        let wrote = writer
-            .write_all(out.as_bytes())
-            .and_then(|_| writer.write_all(b"\n"))
-            .and_then(|_| writer.flush());
-        if wrote.is_err() {
+        out.clear();
+        match resp.to_line() {
+            Ok(s) => out.push_str(&s),
+            Err(e) => out.push_str(
+                &ServiceResponse::Err(format!(
+                    "response encoding failed: {e:#}"
+                ))
+                .to_line()
+                .unwrap_or_else(|_| {
+                    "{\"ok\":false,\"error\":\"encode\"}".into()
+                }),
+            ),
+        }
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() {
             break;
         }
     }
@@ -299,4 +931,910 @@ fn serve_connection(session: Arc<Session>, stream: TcpStream) {
         let ids: Vec<u64> = granted.into_iter().collect();
         session.revoke_consumer_leases(&ids);
     }
+}
+
+/// Maintain the per-connection granted-lease set from a dispatch
+/// result: leases appear on grant, disappear on a successful ack.
+fn track_granted(
+    granted: &mut HashSet<u64>,
+    resp: &ServiceResponse,
+    acked: Option<u64>,
+) {
+    match resp {
+        ServiceResponse::Batch(GetBatchReply::Leased {
+            lease, ..
+        }) => {
+            granted.insert(*lease);
+        }
+        ServiceResponse::BatchMeta { lease: Some(id), .. } => {
+            granted.insert(*id);
+        }
+        ServiceResponse::Ok => {
+            if let Some(id) = acked {
+                granted.remove(&id);
+            }
+        }
+        _ => {}
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multiplexed server
+// ---------------------------------------------------------------------------
+
+/// One verb's journey through the worker pool.
+struct Job {
+    conn: Arc<ConnShared>,
+    kind: JobKind,
+    trace: u64,
+    seq: Option<u64>,
+    /// Participates in the per-connection strict-order chain (seq-less
+    /// requests): processed one at a time in arrival order.
+    ordered: bool,
+    /// Long-poll deadline, set on first dispatch of a blocking verb.
+    deadline: Option<Instant>,
+    /// The job is resuming from a park (metrics bookkeeping).
+    was_parked: bool,
+}
+
+enum JobKind {
+    /// Dispatch once through the session.
+    Dispatch(ServiceRequest),
+    /// A long-poll verb rewritten to poll mode; re-dispatched on every
+    /// wake until ready or the deadline passes.
+    Poll(PollVerb),
+    /// Write a pre-made response (e.g. a parse error) without
+    /// touching the session.
+    Respond(ServiceResponse),
+}
+
+/// The re-dispatchable poll-mode form of each long-poll verb, plus
+/// where its waker parks.
+#[derive(Clone)]
+enum PollVerb {
+    GetBatch(GetBatchSpec),
+    GetBatchMeta(GetBatchSpec),
+    LeasePrompts(LeaseSpec),
+    Weights { min_version: u64 },
+    WeightsMeta { subscriber: String, min_version: u64 },
+}
+
+enum ParkTarget<'a> {
+    Task(&'a str),
+    Params,
+}
+
+impl PollVerb {
+    fn to_request(&self) -> ServiceRequest {
+        match self {
+            PollVerb::GetBatch(spec) => {
+                ServiceRequest::GetBatch(spec.clone())
+            }
+            PollVerb::GetBatchMeta(spec) => {
+                ServiceRequest::GetBatchMeta(spec.clone())
+            }
+            PollVerb::LeasePrompts(spec) => {
+                ServiceRequest::LeasePrompts(spec.clone())
+            }
+            PollVerb::Weights { min_version } => {
+                ServiceRequest::SubscribeWeights {
+                    min_version: *min_version,
+                    timeout_ms: 0,
+                }
+            }
+            PollVerb::WeightsMeta { subscriber, min_version } => {
+                ServiceRequest::SubscribeWeightsMeta {
+                    subscriber: subscriber.clone(),
+                    min_version: *min_version,
+                    timeout_ms: 0,
+                }
+            }
+        }
+    }
+
+    fn target(&self) -> ParkTarget<'_> {
+        match self {
+            PollVerb::GetBatch(s) | PollVerb::GetBatchMeta(s) => {
+                ParkTarget::Task(&s.task)
+            }
+            PollVerb::LeasePrompts(s) => ParkTarget::Task(&s.task),
+            PollVerb::Weights { .. } | PollVerb::WeightsMeta { .. } => {
+                ParkTarget::Params
+            }
+        }
+    }
+
+    /// Whether `resp` means "nothing yet — keep waiting".
+    fn not_ready(&self, resp: &ServiceResponse) -> bool {
+        match self {
+            PollVerb::GetBatch(_) | PollVerb::GetBatchMeta(_) => {
+                matches!(
+                    resp,
+                    ServiceResponse::Batch(GetBatchReply::NotReady)
+                )
+            }
+            PollVerb::LeasePrompts(_) => matches!(
+                resp,
+                ServiceResponse::Lease(r)
+                    if r.lease.is_none() && !r.closed
+            ),
+            PollVerb::Weights { .. } | PollVerb::WeightsMeta { .. } => {
+                matches!(
+                    resp,
+                    ServiceResponse::WeightsNotNewer { .. }
+                )
+            }
+        }
+    }
+}
+
+/// Rewrite a blocking verb to its poll-mode form. Returns `None` for
+/// verbs that never block (or that were already pure polls — those
+/// answer immediately either way).
+fn classify_long_poll(
+    req: ServiceRequest,
+) -> std::result::Result<(PollVerb, u64), ServiceRequest> {
+    match req {
+        ServiceRequest::GetBatch(mut spec) if spec.timeout_ms > 0 => {
+            let ms = spec.timeout_ms;
+            spec.timeout_ms = 0;
+            Ok((PollVerb::GetBatch(spec), ms))
+        }
+        ServiceRequest::GetBatchMeta(mut spec)
+            if spec.timeout_ms > 0 =>
+        {
+            let ms = spec.timeout_ms;
+            spec.timeout_ms = 0;
+            Ok((PollVerb::GetBatchMeta(spec), ms))
+        }
+        ServiceRequest::LeasePrompts(mut spec)
+            if spec.timeout_ms > 0 =>
+        {
+            let ms = spec.timeout_ms;
+            spec.timeout_ms = 0;
+            Ok((PollVerb::LeasePrompts(spec), ms))
+        }
+        ServiceRequest::SubscribeWeights { min_version, timeout_ms }
+            if timeout_ms > 0 =>
+        {
+            Ok((PollVerb::Weights { min_version }, timeout_ms))
+        }
+        ServiceRequest::SubscribeWeightsMeta {
+            subscriber,
+            min_version,
+            timeout_ms,
+        } if timeout_ms > 0 => Ok((
+            PollVerb::WeightsMeta { subscriber, min_version },
+            timeout_ms,
+        )),
+        other => Err(other),
+    }
+}
+
+/// Per-connection state shared between the reactor (reads) and the
+/// workers (dispatch + writes).
+struct ConnShared {
+    id: u64,
+    /// Write half; also the handle `stop` uses to shut the socket.
+    stream: TcpStream,
+    write: Mutex<()>,
+    /// Negotiated framing — flips to binary after a successful hello.
+    binary: AtomicBool,
+    /// Strict-order chain for seq-less requests.
+    ordered: Mutex<OrderedChain>,
+    /// Leases granted over this connection and not yet acked.
+    granted: Mutex<HashSet<u64>>,
+    /// Verbs accepted and not yet answered (pipelining depth).
+    in_flight: AtomicUsize,
+    dead: AtomicBool,
+}
+
+#[derive(Default)]
+struct OrderedChain {
+    busy: bool,
+    queue: VecDeque<Job>,
+}
+
+impl ConnShared {
+    /// Write one encoded message under the connection's write lock.
+    /// The socket is non-blocking (the reactor's read half shares the
+    /// open file description), so a full kernel send buffer surfaces
+    /// as `WouldBlock` — retry with a short sleep until the client
+    /// drains it, bounded by the connection dying.
+    fn write_bytes(&self, bytes: &[u8]) -> bool {
+        let _g = self.write.lock().unwrap();
+        let mut s = &self.stream;
+        let mut off = 0;
+        while off < bytes.len() {
+            if self.dead.load(Ordering::SeqCst) {
+                return false;
+            }
+            match s.write(&bytes[off..]) {
+                Ok(0) => return false,
+                Ok(n) => off += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        true
+    }
+}
+
+/// A parked long-poll: the job parked here resumes exactly once —
+/// through the waker (readiness changed) or the reactor's timer
+/// (deadline passed), whichever claims `fired` first.
+struct ParkSlot {
+    fired: AtomicBool,
+    job: Mutex<Option<Job>>,
+}
+
+/// Reactor ⇄ worker shared state.
+struct MuxShared {
+    session: Arc<Session>,
+    metrics: Arc<ControlPlaneMetrics>,
+    stop: AtomicBool,
+    queue: Mutex<VecDeque<Job>>,
+    queue_cv: Condvar,
+    conns: Mutex<HashMap<u64, Arc<ConnShared>>>,
+    /// Deadline timers for parked long-polls, fired by the reactor.
+    timers: Mutex<BinaryHeap<TimerEntry>>,
+}
+
+struct TimerEntry {
+    at: Instant,
+    slot: Arc<ParkSlot>,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other.at.cmp(&self.at)
+    }
+}
+
+impl MuxShared {
+    fn enqueue(&self, job: Job) {
+        self.queue.lock().unwrap().push_back(job);
+        self.queue_cv.notify_one();
+    }
+
+    /// Pop the next job, blocking; `None` once stopped.
+    fn dequeue(&self) -> Option<Job> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(job) = q.pop_front() {
+                return Some(job);
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                return None;
+            }
+            q = self.queue_cv.wait(q).unwrap();
+        }
+    }
+
+    /// Drain and revoke every lease this connection still holds.
+    fn revoke_conn_leases(&self, conn: &ConnShared) {
+        let ids: Vec<u64> =
+            conn.granted.lock().unwrap().drain().collect();
+        if !ids.is_empty() {
+            self.session.revoke_consumer_leases(&ids);
+        }
+    }
+}
+
+/// Reactor-private per-connection read state.
+struct ConnRead {
+    shared: Arc<ConnShared>,
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+struct MuxServer {
+    shared: Arc<MuxShared>,
+    reactor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl MuxServer {
+    fn start(
+        session: Arc<Session>,
+        listener: TcpListener,
+        workers: usize,
+    ) -> Result<Self> {
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let metrics = Arc::new(ControlPlaneMetrics::new());
+        session.attach_control_metrics(metrics.clone());
+        let shared = Arc::new(MuxShared {
+            session,
+            metrics,
+            stop: AtomicBool::new(false),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            conns: Mutex::new(HashMap::new()),
+            timers: Mutex::new(BinaryHeap::new()),
+        });
+        let reactor = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("svc-reactor".into())
+                .spawn(move || reactor_loop(&shared, listener))
+                .context("spawning service reactor")?
+        };
+        let worker_handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("svc-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = shared.dequeue() {
+                            process_job(&shared, job);
+                        }
+                    })
+                    .context("spawning service worker")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MuxServer {
+            shared,
+            reactor: Some(reactor),
+            workers: worker_handles,
+        })
+    }
+
+    fn stop(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Reactor notices within one poll tick, closes every socket,
+        // and exits.
+        if let Some(h) = self.reactor.take() {
+            h.join().ok();
+        }
+        // Workers drain the queue, then see the stop flag.
+        self.shared.queue_cv.notify_all();
+        for h in self.workers.drain(..) {
+            h.join().ok();
+        }
+        // With no worker left to grant anew, revoking here is exact:
+        // nothing this server handed out survives `stop`.
+        let conns: Vec<_> = {
+            let mut g = self.shared.conns.lock().unwrap();
+            g.drain().map(|(_, c)| c).collect()
+        };
+        for conn in conns {
+            self.shared.revoke_conn_leases(&conn);
+            self.shared.metrics.conn_closed();
+        }
+    }
+
+    fn join(mut self) {
+        if let Some(h) = self.reactor.take() {
+            h.join().ok();
+        }
+        for h in self.workers.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+/// How long the reactor sleeps when a full pass saw no activity.
+const REACTOR_IDLE_SLEEP: Duration = Duration::from_micros(500);
+
+fn reactor_loop(shared: &Arc<MuxShared>, listener: TcpListener) {
+    let mut conns: Vec<ConnRead> = Vec::new();
+    let mut next_id = 0u64;
+    let mut scratch = vec![0u8; 64 * 1024];
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut activity = false;
+
+        // Accept everything pending.
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    activity = true;
+                    if let Some(c) =
+                        setup_conn(shared, stream, next_id)
+                    {
+                        conns.push(c);
+                        next_id += 1;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+
+        // Fire due park timers.
+        {
+            let now = Instant::now();
+            let mut timers = shared.timers.lock().unwrap();
+            while timers.peek().is_some_and(|t| t.at <= now) {
+                let entry = timers.pop().unwrap();
+                if !entry.slot.fired.swap(true, Ordering::SeqCst) {
+                    if let Some(job) =
+                        entry.slot.job.lock().unwrap().take()
+                    {
+                        activity = true;
+                        shared.enqueue(job);
+                    }
+                }
+            }
+        }
+
+        // Pull bytes off every socket and slice out complete messages.
+        let mut k = 0;
+        while k < conns.len() {
+            let conn = &mut conns[k];
+            let mut dead = conn.shared.dead.load(Ordering::SeqCst);
+            while !dead {
+                match conn.stream.read(&mut scratch) {
+                    Ok(0) => dead = true,
+                    Ok(n) => {
+                        activity = true;
+                        conn.buf.extend_from_slice(&scratch[..n]);
+                        // Keep draining the socket before parsing so
+                        // one pass picks up a whole pipelined burst.
+                        if n == scratch.len() {
+                            continue;
+                        }
+                        break;
+                    }
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock =>
+                    {
+                        break;
+                    }
+                    Err(e)
+                        if e.kind() == ErrorKind::Interrupted =>
+                    {
+                        continue;
+                    }
+                    Err(_) => dead = true,
+                }
+            }
+            if !dead && !conn.buf.is_empty() {
+                dead = !drain_messages(shared, conn);
+            }
+            if dead {
+                let c = conns.swap_remove(k);
+                teardown_conn(shared, &c.shared);
+            } else {
+                k += 1;
+            }
+        }
+
+        if !activity {
+            std::thread::sleep(REACTOR_IDLE_SLEEP);
+        }
+    }
+    // Stop: close every socket so clients fail fast. Lease revocation
+    // happens after the workers join (see MuxServer::stop) so a job
+    // mid-dispatch cannot re-grant behind the sweep.
+    for c in &conns {
+        c.shared.dead.store(true, Ordering::SeqCst);
+        c.shared.stream.shutdown(Shutdown::Both).ok();
+    }
+}
+
+fn setup_conn(
+    shared: &Arc<MuxShared>,
+    stream: TcpStream,
+    id: u64,
+) -> Option<ConnRead> {
+    stream.set_nodelay(true).ok();
+    stream.set_nonblocking(true).ok();
+    let write_half = stream.try_clone().ok()?;
+    let conn = Arc::new(ConnShared {
+        id,
+        stream: write_half,
+        write: Mutex::new(()),
+        binary: AtomicBool::new(false),
+        ordered: Mutex::new(OrderedChain::default()),
+        granted: Mutex::new(HashSet::new()),
+        in_flight: AtomicUsize::new(0),
+        dead: AtomicBool::new(false),
+    });
+    shared.conns.lock().unwrap().insert(id, conn.clone());
+    shared.metrics.conn_opened();
+    Some(ConnRead { shared: conn, stream, buf: Vec::new() })
+}
+
+fn teardown_conn(shared: &Arc<MuxShared>, conn: &Arc<ConnShared>) {
+    conn.dead.store(true, Ordering::SeqCst);
+    conn.stream.shutdown(Shutdown::Both).ok();
+    if shared.conns.lock().unwrap().remove(&conn.id).is_some() {
+        shared.metrics.conn_closed();
+    }
+    // Drop any seq-less jobs still queued behind the ordered chain —
+    // nothing will pop them now that dispatch finishes early on dead
+    // connections.
+    conn.ordered.lock().unwrap().queue.clear();
+    shared.revoke_conn_leases(conn);
+}
+
+/// Slice complete messages out of `conn.buf` and enqueue jobs.
+/// Returns `false` when the connection must drop (framing lost).
+fn drain_messages(shared: &Arc<MuxShared>, conn: &mut ConnRead) -> bool {
+    loop {
+        let binary = conn.shared.binary.load(Ordering::SeqCst);
+        let msg = if binary {
+            match take_frame(&mut conn.buf) {
+                Ok(None) => return true,
+                Ok(Some(body)) => frames::decode_request(&body)
+                    .map_err(|e| (e, true)),
+                Err(_) => return false, // oversized frame
+            }
+        } else {
+            match take_line(&mut conn.buf) {
+                None if conn.buf.len() > MAX_FRAME_BYTES => {
+                    return false;
+                }
+                None => return true,
+                Some(line) if line.trim().is_empty() => continue,
+                Some(line) => {
+                    ServiceRequest::parse_line_enveloped(&line)
+                        .map_err(|e| (e, false))
+                }
+            }
+        };
+        let job = match msg {
+            Ok((req, trace, seq)) => {
+                shared.metrics.record_verb(
+                    req.op_name(),
+                    conn.shared
+                        .in_flight
+                        .fetch_add(1, Ordering::Relaxed)
+                        + 1,
+                );
+                Job {
+                    conn: conn.shared.clone(),
+                    kind: JobKind::Dispatch(req),
+                    trace,
+                    seq,
+                    ordered: seq.is_none(),
+                    deadline: None,
+                    was_parked: false,
+                }
+            }
+            // Binary framing is not self-synchronizing: a body that
+            // fails to decode means the stream is lost — drop it.
+            Err((_, true)) => return false,
+            Err((e, false)) => {
+                shared.metrics.record_verb(
+                    "invalid",
+                    conn.shared
+                        .in_flight
+                        .fetch_add(1, Ordering::Relaxed)
+                        + 1,
+                );
+                Job {
+                    conn: conn.shared.clone(),
+                    kind: JobKind::Respond(ServiceResponse::Err(
+                        format!("bad request: {e:#}"),
+                    )),
+                    trace: 0,
+                    seq: None,
+                    ordered: true,
+                    deadline: None,
+                    was_parked: false,
+                }
+            }
+        };
+        submit(shared, job);
+    }
+}
+
+/// Enqueue a job, honoring the per-connection strict-order chain for
+/// seq-less requests: at most one such job is dispatched at a time and
+/// they run in arrival order, so old-style clients keep exactly the
+/// old contract (including head-of-line blocking on their own
+/// long-polls).
+fn submit(shared: &Arc<MuxShared>, job: Job) {
+    if job.ordered {
+        let conn = job.conn.clone();
+        let mut chain = conn.ordered.lock().unwrap();
+        if chain.busy {
+            chain.queue.push_back(job);
+            return;
+        }
+        chain.busy = true;
+    }
+    shared.enqueue(job);
+}
+
+/// A job finished (response written or abandoned): release its
+/// strict-order slot and the pipelining-depth count.
+fn finish_job(shared: &Arc<MuxShared>, conn: &Arc<ConnShared>, ordered: bool) {
+    conn.in_flight.fetch_sub(1, Ordering::Relaxed);
+    if ordered {
+        let next = {
+            let mut chain = conn.ordered.lock().unwrap();
+            match chain.queue.pop_front() {
+                Some(job) => Some(job),
+                None => {
+                    chain.busy = false;
+                    None
+                }
+            }
+        };
+        if let Some(job) = next {
+            shared.enqueue(job);
+        }
+    }
+}
+
+fn process_job(shared: &Arc<MuxShared>, mut job: Job) {
+    if job.was_parked {
+        job.was_parked = false;
+        shared.metrics.park_end();
+    }
+    if job.conn.dead.load(Ordering::SeqCst) {
+        finish_job(shared, &job.conn.clone(), job.ordered);
+        return;
+    }
+    match job.kind {
+        JobKind::Respond(resp) => {
+            respond(shared, &job.conn.clone(), job.seq, &resp, None);
+            finish_job(shared, &job.conn, job.ordered);
+        }
+        JobKind::Dispatch(ServiceRequest::Hello {
+            encodings, ..
+        }) => {
+            // The transport, not the session, owns capability
+            // negotiation: this server multiplexes and speaks binary.
+            let binary =
+                encodings.iter().any(|e| e == "binary");
+            let mut accepted = vec!["jsonl".to_string()];
+            if binary {
+                accepted.insert(0, "binary".to_string());
+            }
+            let resp = ServiceResponse::Hello {
+                encodings: accepted,
+                pipelined: true,
+            };
+            // Order matters: arm binary *reads* before the response
+            // leaves (the client switches right after reading it), but
+            // encode this response itself in the current framing.
+            // `hello` must be the connection's first verb, so no other
+            // response can interleave with the switch.
+            let was_binary = job.conn.binary.load(Ordering::SeqCst);
+            let ok = write_response(
+                &job.conn, was_binary, job.seq, &resp,
+            );
+            if ok && binary {
+                job.conn.binary.store(true, Ordering::SeqCst);
+            }
+            if !ok {
+                mark_dead(shared, &job.conn);
+            }
+            finish_job(shared, &job.conn, job.ordered);
+        }
+        JobKind::Dispatch(req) => {
+            match classify_long_poll(req) {
+                Ok((verb, timeout_ms)) => {
+                    job.deadline = Some(
+                        Instant::now()
+                            + Duration::from_millis(timeout_ms),
+                    );
+                    job.kind = JobKind::Poll(verb.clone());
+                    poll_or_park(shared, job, verb);
+                }
+                Err(req) => {
+                    let acked = match &req {
+                        ServiceRequest::AckBatch { lease } => {
+                            Some(*lease)
+                        }
+                        _ => None,
+                    };
+                    let resp = {
+                        let _scope =
+                            crate::telemetry::scoped_trace(job.trace);
+                        shared.session.handle(req)
+                    };
+                    respond(
+                        shared,
+                        &job.conn.clone(),
+                        job.seq,
+                        &resp,
+                        acked,
+                    );
+                    finish_job(shared, &job.conn, job.ordered);
+                }
+            }
+        }
+        JobKind::Poll(ref verb) => {
+            let verb = verb.clone();
+            poll_or_park(shared, job, verb);
+        }
+    }
+}
+
+/// Dispatch a long-poll verb in poll mode; if nothing is ready and the
+/// deadline has not passed, park the job as a waker registration (plus
+/// a deadline timer) and free this worker. The snapshot → poll → park
+/// sequence is race-free: `park_*` refuses the registration when the
+/// epoch moved after the snapshot, and the loop re-polls.
+fn poll_or_park(shared: &Arc<MuxShared>, mut job: Job, verb: PollVerb) {
+    let deadline = job.deadline.expect("poll jobs carry a deadline");
+    loop {
+        if job.conn.dead.load(Ordering::SeqCst) {
+            finish_job(shared, &job.conn.clone(), job.ordered);
+            return;
+        }
+        let epoch = match verb.target() {
+            ParkTarget::Task(name) => {
+                shared.session.task_wake_epoch(name)
+            }
+            ParkTarget::Params => {
+                shared.session.params_version().ok()
+            }
+        };
+        let resp = {
+            let _scope = crate::telemetry::scoped_trace(job.trace);
+            shared.session.handle(verb.to_request())
+        };
+        let expired = Instant::now() >= deadline;
+        if !verb.not_ready(&resp) || expired {
+            respond(shared, &job.conn.clone(), job.seq, &resp, None);
+            finish_job(shared, &job.conn, job.ordered);
+            return;
+        }
+        // Park. Unknown task / uninitialized session never gets here
+        // (the dispatch would have answered with an error), but stay
+        // defensive: with no epoch to park on, answer NotReady.
+        let Some(epoch) = epoch else {
+            respond(shared, &job.conn.clone(), job.seq, &resp, None);
+            finish_job(shared, &job.conn, job.ordered);
+            return;
+        };
+        let slot = Arc::new(ParkSlot {
+            fired: AtomicBool::new(false),
+            job: Mutex::new(None),
+        });
+        job.was_parked = true;
+        *slot.job.lock().unwrap() = Some(job);
+        let waker: crate::transfer_queue::WakeFn = {
+            let slot = slot.clone();
+            let shared = Arc::downgrade(shared);
+            Arc::new(move || {
+                if slot.fired.swap(true, Ordering::SeqCst) {
+                    return;
+                }
+                let Some(shared) = shared.upgrade() else { return };
+                if let Some(job) = slot.job.lock().unwrap().take() {
+                    shared.enqueue(job);
+                }
+            })
+        };
+        let parked = match verb.target() {
+            ParkTarget::Task(name) => {
+                shared.session.park_task(name, epoch, waker)
+            }
+            ParkTarget::Params => {
+                shared.session.park_params(epoch, waker)
+            }
+        };
+        if parked {
+            shared.metrics.park_begin();
+            shared
+                .timers
+                .lock()
+                .unwrap()
+                .push(TimerEntry { at: deadline, slot });
+            return; // Worker freed; the waker or timer resumes us.
+        }
+        // Readiness moved between snapshot and park — reclaim the job
+        // and re-poll.
+        job = slot.job.lock().unwrap().take().expect(
+            "unparked slot cannot have been claimed",
+        );
+        job.was_parked = false;
+    }
+}
+
+/// Serialize and write one response; track lease grants/acks; handle
+/// write failure by tearing the connection down.
+fn respond(
+    shared: &Arc<MuxShared>,
+    conn: &Arc<ConnShared>,
+    seq: Option<u64>,
+    resp: &ServiceResponse,
+    acked: Option<u64>,
+) {
+    {
+        let mut granted = conn.granted.lock().unwrap();
+        track_granted(&mut granted, resp, acked);
+    }
+    let binary = conn.binary.load(Ordering::SeqCst);
+    if !write_response(conn, binary, seq, resp) {
+        mark_dead(shared, conn);
+    }
+}
+
+fn write_response(
+    conn: &Arc<ConnShared>,
+    binary: bool,
+    seq: Option<u64>,
+    resp: &ServiceResponse,
+) -> bool {
+    let bytes = if binary {
+        match frames::encode_response(resp, seq) {
+            Ok(body) => {
+                let mut out =
+                    Vec::with_capacity(body.len() + 4);
+                frames::append_frame(&mut out, &body);
+                out
+            }
+            Err(_) => return false,
+        }
+    } else {
+        let line = match resp.to_line_seq(seq) {
+            Ok(s) => s,
+            Err(e) => ServiceResponse::Err(format!(
+                "response encoding failed: {e:#}"
+            ))
+            .to_line_seq(seq)
+            .unwrap_or_else(|_| {
+                "{\"ok\":false,\"error\":\"encode\"}".into()
+            }),
+        };
+        let mut out = line.into_bytes();
+        out.push(b'\n');
+        out
+    };
+    conn.write_bytes(&bytes)
+}
+
+/// A write failed or the peer vanished mid-dispatch: close the socket
+/// and revoke this connection's leases. The reactor's own teardown is
+/// idempotent with this (the granted set drains exactly once).
+fn mark_dead(shared: &Arc<MuxShared>, conn: &Arc<ConnShared>) {
+    conn.dead.store(true, Ordering::SeqCst);
+    conn.stream.shutdown(Shutdown::Both).ok();
+    shared.revoke_conn_leases(conn);
+}
+
+/// Take one complete `\n`-terminated line off the front of `buf`.
+fn take_line(buf: &mut Vec<u8>) -> Option<String> {
+    let pos = buf.iter().position(|&b| b == b'\n')?;
+    let rest = buf.split_off(pos + 1);
+    let mut line = std::mem::replace(buf, rest);
+    line.pop(); // the newline
+    Some(String::from_utf8_lossy(&line).into_owned())
+}
+
+/// Take one complete length-prefixed frame body off the front of
+/// `buf`. `Ok(None)` = incomplete; `Err` = oversized (framing unsafe).
+fn take_frame(buf: &mut Vec<u8>) -> Result<Option<Vec<u8>>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len =
+        u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame length {len} exceeds the cap");
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    let rest = buf.split_off(4 + len);
+    let mut frame = std::mem::replace(buf, rest);
+    frame.drain(0..4);
+    Ok(Some(frame))
 }

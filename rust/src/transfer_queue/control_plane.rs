@@ -14,7 +14,7 @@
 //! no-duplication guarantee the paper requires.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -22,6 +22,14 @@ use anyhow::{bail, Result};
 use super::column::{Column, GlobalIndex};
 use super::data_plane::WriteNotification;
 use super::policies::{Candidate, GroupStats, Policy};
+
+/// A one-shot wake callback registered by an event-driven caller (the
+/// multiplexed service reactor) instead of parking an OS thread in
+/// [`Controller::request_deadline`]. Fired (and dropped) the next time
+/// the controller's readiness can have changed. The callback runs under
+/// the controller lock, so it must not call back into the controller —
+/// it should only flip a flag or enqueue work elsewhere.
+pub type WakeFn = Arc<dyn Fn() + Send + Sync>;
 
 /// Row-scoped readiness metadata.
 #[derive(Debug, Default, Clone)]
@@ -50,6 +58,13 @@ struct ControllerState {
     group_stats: HashMap<usize, GroupStats>,
     /// Consumers currently parked inside a deadline-bounded request.
     waiters: usize,
+    /// One-shot wakers registered by event-driven callers; drained on
+    /// every readiness change (see [`WakeFn`]).
+    wakers: Vec<WakeFn>,
+    /// Bumped on every readiness change. Lets a lock-free caller do a
+    /// race-free poll-then-park: read the epoch, poll, and register a
+    /// waker only if the epoch is unchanged ([`Controller::park`]).
+    epoch: u64,
     closed: bool,
 }
 
@@ -99,6 +114,8 @@ impl Controller {
                 consumed: HashSet::new(),
                 group_stats: HashMap::new(),
                 waiters: 0,
+                wakers: Vec::new(),
+                epoch: 0,
                 closed: false,
             }),
             ready_cv: Condvar::new(),
@@ -130,8 +147,40 @@ impl Controller {
                 n.index,
                 ReadyEntry { token_len, since: Instant::now() },
             );
-            self.ready_cv.notify_all();
+            self.wake(&mut st);
         }
+    }
+
+    /// Readiness changed: bump the epoch, fire one-shot wakers, wake
+    /// thread-parked waiters. Must be called with the state lock held.
+    fn wake(&self, st: &mut ControllerState) {
+        st.epoch = st.epoch.wrapping_add(1);
+        for w in st.wakers.drain(..) {
+            w();
+        }
+        self.ready_cv.notify_all();
+    }
+
+    /// Snapshot of the readiness epoch for a poll-then-park sequence:
+    /// read the epoch, poll without blocking, and if not ready call
+    /// [`Controller::park`] with this value — registration fails if any
+    /// readiness change slipped in between, in which case re-poll.
+    pub fn wake_epoch(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// Register a one-shot waker, but only if no readiness change has
+    /// happened since `expected_epoch` was read. Returns `false` (waker
+    /// dropped) when the epoch moved — the caller must re-poll instead
+    /// of parking, otherwise it could sleep through a wake that fired
+    /// before registration.
+    pub fn park(&self, expected_epoch: u64, waker: WakeFn) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.epoch != expected_epoch {
+            return false;
+        }
+        st.wakers.push(waker);
+        true
     }
 
     fn ready_candidates(st: &ControllerState) -> Vec<Candidate> {
@@ -225,24 +274,28 @@ impl Controller {
                 RequestOutcome::NotReady => {}
                 done => break done,
             }
-            // Short slices so a missed notify can never wedge a waiter.
+            // Full-deadline waits: every mutation that can change
+            // readiness (notify, unconsume, close) fires `wake` under
+            // this same mutex, so a parked waiter cannot miss a wake —
+            // no 50 ms polling slices needed.
             let wait = match deadline {
-                None => Duration::from_millis(50),
+                None => None,
                 Some(dl) => {
                     let now = Instant::now();
                     if now >= dl {
                         break RequestOutcome::NotReady;
                     }
-                    (dl - now).min(Duration::from_millis(50))
+                    Some(dl - now)
                 }
             };
             if !registered {
                 registered = true;
                 st.waiters += 1;
             }
-            let (next, _timeout) =
-                self.ready_cv.wait_timeout(st, wait).unwrap();
-            st = next;
+            st = match wait {
+                None => self.ready_cv.wait(st).unwrap(),
+                Some(w) => self.ready_cv.wait_timeout(st, w).unwrap().0,
+            };
         };
         if registered {
             st.waiters -= 1;
@@ -291,7 +344,7 @@ impl Controller {
     pub fn close(&self) {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
-        self.ready_cv.notify_all();
+        self.wake(&mut st);
     }
 
     /// Whether the stream has been closed.
@@ -369,7 +422,7 @@ impl Controller {
             }
         }
         if n > 0 {
-            self.ready_cv.notify_all();
+            self.wake(&mut st);
         }
         n
     }
@@ -469,6 +522,10 @@ struct RegistryInner<S> {
 /// forever (a zombie's late calls error, never commit).
 pub struct LeaseRegistry<S = ()> {
     inner: Mutex<RegistryInner<S>>,
+    /// Called (outside the registry lock) whenever a lease is granted or
+    /// renewed — i.e. whenever the earliest expiry may have moved — so
+    /// an expiry-driven sweeper can re-arm its timer instead of polling.
+    expiry_hook: Mutex<Option<WakeFn>>,
 }
 
 impl<S> Default for LeaseRegistry<S> {
@@ -478,6 +535,7 @@ impl<S> Default for LeaseRegistry<S> {
                 next_id: 0,
                 leases: HashMap::new(),
             }),
+            expiry_hook: Mutex::new(None),
         }
     }
 }
@@ -486,6 +544,27 @@ impl<S> LeaseRegistry<S> {
     /// An empty registry.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Install the expiry re-arm hook (see `expiry_hook`). At most one
+    /// hook; installing again replaces it.
+    pub fn set_expiry_hook(&self, f: WakeFn) {
+        *self.expiry_hook.lock().unwrap() = Some(f);
+    }
+
+    fn fire_expiry_hook(&self) {
+        let hook = self.expiry_hook.lock().unwrap().clone();
+        if let Some(f) = hook {
+            f();
+        }
+    }
+
+    /// Earliest expiry instant across live leases (`None` when the
+    /// registry is empty) — the wake deadline for an expiry-driven
+    /// sweeper.
+    pub fn next_expiry(&self) -> Option<Instant> {
+        let g = self.inner.lock().unwrap();
+        g.leases.values().map(|l| l.expires_at).min()
     }
 
     /// Grant a new lease on `indices` (popped from `task`) to `owner`,
@@ -498,23 +577,27 @@ impl<S> LeaseRegistry<S> {
         ttl: Duration,
         init: impl Fn() -> S,
     ) -> LeaseId {
-        let mut g = self.inner.lock().unwrap();
-        g.next_id += 1;
-        let id = g.next_id;
-        let rows = indices
-            .iter()
-            .map(|idx| (*idx, LeaseRow { state: init(), done: false }))
-            .collect();
-        g.leases.insert(
-            id,
-            LeaseEntry {
-                owner: owner.to_string(),
-                task: task.to_string(),
-                expires_at: Instant::now() + ttl,
-                ttl,
-                rows,
-            },
-        );
+        let id = {
+            let mut g = self.inner.lock().unwrap();
+            g.next_id += 1;
+            let id = g.next_id;
+            let rows = indices
+                .iter()
+                .map(|idx| (*idx, LeaseRow { state: init(), done: false }))
+                .collect();
+            g.leases.insert(
+                id,
+                LeaseEntry {
+                    owner: owner.to_string(),
+                    task: task.to_string(),
+                    expires_at: Instant::now() + ttl,
+                    ttl,
+                    rows,
+                },
+            );
+            id
+        };
+        self.fire_expiry_hook();
         id
     }
 
@@ -522,14 +605,17 @@ impl<S> LeaseRegistry<S> {
     /// own TTL. Unknown ids (including swept ones) are an error — the
     /// owner must drop its in-flight batch and start over.
     pub fn renew(&self, id: LeaseId, ttl: Option<Duration>) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
-        let Some(lease) = g.leases.get_mut(&id) else {
-            bail!("lease {id} is unknown or expired");
-        };
-        if let Some(t) = ttl {
-            lease.ttl = t;
+        {
+            let mut g = self.inner.lock().unwrap();
+            let Some(lease) = g.leases.get_mut(&id) else {
+                bail!("lease {id} is unknown or expired");
+            };
+            if let Some(t) = ttl {
+                lease.ttl = t;
+            }
+            lease.expires_at = Instant::now() + lease.ttl;
         }
-        lease.expires_at = Instant::now() + lease.ttl;
+        self.fire_expiry_hook();
         Ok(())
     }
 

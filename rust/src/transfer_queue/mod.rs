@@ -33,7 +33,7 @@ pub use client::{Batch, BatchPoll, StreamDataLoader};
 pub use column::{Column, GlobalIndex, Value};
 pub use control_plane::{
     BatchMeta, Controller, LeaseId, LeaseRegistry, LeaseRow,
-    RequestOutcome, RevokedLease,
+    RequestOutcome, RevokedLease, WakeFn,
 };
 pub use data_plane::{DataPlane, StorageUnit, UnitView, WriteNotification};
 pub use frame::{UnitReply, UnitRequest, UnitStatsSnapshot};

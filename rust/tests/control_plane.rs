@@ -1,0 +1,564 @@
+//! Control-plane integration tests: the multiplexed event-driven
+//! server, the pipelined client (`seq` envelopes, out-of-order
+//! correlation, binary control frames), wire compatibility for
+//! seq-less legacy peers, graceful drain, and the no-polling wakeup
+//! path for parked long-polls.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use asyncflow::rollout::LeaseSpec;
+use asyncflow::runtime::ParamSet;
+use asyncflow::service::{
+    CellNote, ConsumerSpec, GetBatchReply, GetBatchSpec, PutRow,
+    ServiceClient, ServiceRequest, ServiceResponse, Session,
+    SessionSpec, TcpJsonlServer, TcpPipelinedTransport, Transport,
+};
+use asyncflow::transfer_queue::{Column, GlobalIndex, Value};
+
+fn grpo_session() -> Arc<Session> {
+    Arc::new(
+        Session::init_engines(
+            SessionSpec::grpo(),
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    )
+}
+
+fn spec(task: &str, count: usize, timeout_ms: u64) -> GetBatchSpec {
+    GetBatchSpec {
+        task: task.into(),
+        group: 0,
+        columns: vec![Column::Prompts],
+        count,
+        min: 1,
+        timeout_ms,
+        consumer: None,
+    }
+}
+
+// ===========================================================================
+// Negotiation
+// ===========================================================================
+
+/// `hello` negotiation: the multiplexed server grants pipelining and
+/// picks the first encoding the client offers; a client that prefers
+/// JSONL keeps JSONL. Against the legacy threaded server (which has
+/// no `hello` verb) the pipelined transport degrades to strict-order
+/// JSONL instead of failing — and still serves verbs.
+#[test]
+fn hello_negotiation_and_degradation() {
+    let mux =
+        TcpJsonlServer::bind(grpo_session(), ("127.0.0.1", 0)).unwrap();
+    let bin =
+        TcpPipelinedTransport::connect(("127.0.0.1", mux.port()), true)
+            .unwrap();
+    assert_eq!(bin.encoding(), "binary");
+    assert!(bin.pipelined());
+    let jsonl =
+        TcpPipelinedTransport::connect(("127.0.0.1", mux.port()), false)
+            .unwrap();
+    assert_eq!(jsonl.encoding(), "jsonl");
+    assert!(jsonl.pipelined());
+    // Both negotiated connections serve verbs.
+    for t in [&bin, &jsonl] {
+        match t.call(ServiceRequest::Stats).unwrap() {
+            ServiceResponse::Stats(s) => {
+                assert!(
+                    s.control.is_some(),
+                    "served stats carry the control-plane section"
+                );
+            }
+            other => {
+                panic!("unexpected stats response: {:?}", other.to_line())
+            }
+        }
+    }
+    mux.stop();
+
+    let threaded =
+        TcpJsonlServer::bind_threaded(grpo_session(), ("127.0.0.1", 0))
+            .unwrap();
+    let degraded = TcpPipelinedTransport::connect(
+        ("127.0.0.1", threaded.port()),
+        true,
+    )
+    .unwrap();
+    assert_eq!(degraded.encoding(), "jsonl");
+    assert!(
+        !degraded.pipelined(),
+        "an old server downgrades the client to one-in-flight"
+    );
+    match degraded.call(ServiceRequest::Stats).unwrap() {
+        ServiceResponse::Stats(_) => {}
+        other => {
+            panic!("degraded call failed: {:?}", other.to_line())
+        }
+    }
+    threaded.stop();
+}
+
+// ===========================================================================
+// Out-of-order correlation on one connection
+// ===========================================================================
+
+/// One pipelined connection carries a parked long-poll AND fast verbs
+/// at the same time: the fast responses come back (out of order,
+/// correlated by `seq`) while the long-poll is parked server-side,
+/// and the long-poll wakes the moment a row arrives — long before its
+/// deadline. The parked request is visible in the server metrics and
+/// costs no worker thread.
+#[test]
+fn pipelined_connection_overlaps_long_poll_with_fast_verbs() {
+    let server =
+        TcpJsonlServer::bind(grpo_session(), ("127.0.0.1", 0)).unwrap();
+    let transport = Arc::new(
+        TcpPipelinedTransport::connect(("127.0.0.1", server.port()), true)
+            .unwrap(),
+    );
+
+    let done = Arc::new(AtomicBool::new(false));
+    let poller = {
+        let transport = transport.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let start = Instant::now();
+            let resp = transport
+                .call(ServiceRequest::GetBatch(spec("rollout", 1, 5000)))
+                .unwrap();
+            done.store(true, Ordering::SeqCst);
+            (resp, start.elapsed())
+        })
+    };
+
+    // Give the long-poll time to reach the server and park.
+    let deadline = Instant::now() + Duration::from_secs(2);
+    loop {
+        let parked = server.metrics().snapshot().parked_long_polls;
+        if parked >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "long-poll never parked");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // Fast verbs on the SAME connection complete while it is parked.
+    let t = Instant::now();
+    for _ in 0..8 {
+        match transport.call(ServiceRequest::Stats).unwrap() {
+            ServiceResponse::Stats(s) => {
+                let c = s.control.expect("control stats attached");
+                assert!(c.parked_long_polls >= 1);
+            }
+            other => {
+                panic!("unexpected response: {:?}", other.to_line())
+            }
+        }
+    }
+    assert!(
+        t.elapsed() < Duration::from_secs(2),
+        "fast verbs must not queue behind the parked long-poll"
+    );
+    assert!(
+        !done.load(Ordering::SeqCst),
+        "the long-poll must still be in flight"
+    );
+
+    // A row arriving wakes the parked request immediately.
+    match transport
+        .call(ServiceRequest::PutPrompts { prompts: vec![vec![1, 2]] })
+        .unwrap()
+    {
+        ServiceResponse::Indices(idx) => assert_eq!(idx.len(), 1),
+        other => panic!("unexpected response: {:?}", other.to_line()),
+    }
+    let (resp, elapsed) = poller.join().unwrap();
+    match resp {
+        ServiceResponse::Batch(GetBatchReply::Ready(b)) => {
+            assert_eq!(b.len(), 1)
+        }
+        other => panic!("unexpected response: {:?}", other.to_line()),
+    }
+    assert!(
+        elapsed < Duration::from_millis(2500),
+        "woken on readiness, not the 5 s deadline: {elapsed:?}"
+    );
+    server.stop();
+}
+
+// ===========================================================================
+// Legacy wire compatibility: seq-less strict order
+// ===========================================================================
+
+/// A seq-less peer (raw JSONL, no `hello`) gets exactly the old
+/// contract from the multiplexed server: responses in request order
+/// with no `seq` key, including head-of-line blocking behind its own
+/// long-poll — the second request's response is written only after
+/// the first's, even though the server could answer it instantly.
+#[test]
+fn seqless_raw_jsonl_keeps_strict_order() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let server =
+        TcpJsonlServer::bind(grpo_session(), ("127.0.0.1", 0)).unwrap();
+    let mut stream =
+        std::net::TcpStream::connect(("127.0.0.1", server.port()))
+            .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // Two requests in one write: a 400 ms long-poll on an empty queue,
+    // then an instant verb.
+    let mut burst = ServiceRequest::GetBatch(spec("rollout", 1, 400))
+        .to_line()
+        .unwrap();
+    burst.push('\n');
+    burst.push_str(&ServiceRequest::Stats.to_line().unwrap());
+    burst.push('\n');
+    let start = Instant::now();
+    stream.write_all(burst.as_bytes()).unwrap();
+    stream.flush().unwrap();
+
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(!line.contains("\"seq\""), "seq-less reply: {line}");
+    assert!(
+        matches!(
+            ServiceResponse::parse_line(&line).unwrap(),
+            ServiceResponse::Batch(GetBatchReply::NotReady)
+        ),
+        "first reply answers the first request: {line}"
+    );
+    assert!(
+        start.elapsed() >= Duration::from_millis(300),
+        "the long-poll honored its deadline"
+    );
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(!line.contains("\"seq\""), "seq-less reply: {line}");
+    assert!(
+        matches!(
+            ServiceResponse::parse_line(&line).unwrap(),
+            ServiceResponse::Stats(_)
+        ),
+        "second reply answers the second request: {line}"
+    );
+
+    // The connection stays usable afterwards.
+    let mut put = ServiceRequest::PutPrompts { prompts: vec![vec![7]] }
+        .to_line()
+        .unwrap();
+    put.push('\n');
+    stream.write_all(put.as_bytes()).unwrap();
+    stream.flush().unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(matches!(
+        ServiceResponse::parse_line(&line).unwrap(),
+        ServiceResponse::Indices(_)
+    ));
+    server.stop();
+}
+
+// ===========================================================================
+// 64 concurrent clients, mixed encodings, conservation
+// ===========================================================================
+
+/// 64 concurrent client connections — pipelined-binary, pipelined-
+/// JSONL, and classic one-in-flight JSONL, interleaved — hammer one
+/// multiplexed server with produce/consume traffic. Every sample must
+/// be served exactly once (no loss, no double-serve) regardless of
+/// which encoding carried it.
+#[test]
+fn mixed_transport_64_clients_conserve_batches() {
+    const PRODUCERS: usize = 16;
+    const CONSUMERS: usize = 48;
+    const PER_PRODUCER: usize = 32;
+    const TOTAL: usize = PRODUCERS * PER_PRODUCER;
+
+    let server =
+        TcpJsonlServer::bind(grpo_session(), ("127.0.0.1", 0)).unwrap();
+    let port = server.port();
+    let make_client = move |i: usize| -> ServiceClient {
+        match i % 3 {
+            0 => ServiceClient::connect(("127.0.0.1", port)).unwrap(),
+            1 => ServiceClient::connect_jsonl(("127.0.0.1", port))
+                .unwrap(),
+            _ => ServiceClient::new(Arc::new(
+                TcpPipelinedTransport::connect(("127.0.0.1", port), false)
+                    .unwrap(),
+            )),
+        }
+    };
+    let monitor = ServiceClient::connect(("127.0.0.1", port)).unwrap();
+
+    std::thread::scope(|scope| {
+        for p in 0..PRODUCERS {
+            let client = make_client(p);
+            scope.spawn(move || {
+                for chunk in 0..PER_PRODUCER / 8 {
+                    let rows = (0..8)
+                        .map(|k| {
+                            let tag =
+                                (p * 1000 + chunk * 8 + k) as i32;
+                            PutRow::new(vec![(
+                                Column::Prompts,
+                                Value::I32s(vec![tag; 3]),
+                            )])
+                        })
+                        .collect();
+                    client.put_batch(rows).unwrap();
+                }
+            });
+        }
+
+        let mut consumers = Vec::new();
+        for g in 0..CONSUMERS {
+            let client = make_client(PRODUCERS + g);
+            consumers.push(scope.spawn(move || {
+                let spec = GetBatchSpec {
+                    task: "rollout".into(),
+                    group: g,
+                    columns: vec![Column::Prompts],
+                    count: 4,
+                    min: 1,
+                    timeout_ms: 50,
+                    consumer: None,
+                };
+                let mut seen: Vec<GlobalIndex> = Vec::new();
+                loop {
+                    match client.get_batch(&spec).unwrap() {
+                        GetBatchReply::Ready(b) => {
+                            seen.extend(b.indices)
+                        }
+                        GetBatchReply::NotReady => continue,
+                        GetBatchReply::Leased { .. } => {
+                            unreachable!("no consumer lease requested")
+                        }
+                        GetBatchReply::Closed => return seen,
+                    }
+                }
+            }));
+        }
+
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let stats = monitor.stats().unwrap();
+            let consumed = stats
+                .tasks
+                .iter()
+                .find(|t| t.name == "rollout")
+                .unwrap()
+                .consumed;
+            if consumed >= TOTAL {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "consumers stalled at {consumed}/{TOTAL}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        monitor.shutdown().unwrap();
+
+        let mut all: Vec<GlobalIndex> = Vec::new();
+        for h in consumers {
+            all.extend(h.join().unwrap());
+        }
+        assert_eq!(all.len(), TOTAL, "no sample lost");
+        let unique: HashSet<_> = all.iter().copied().collect();
+        assert_eq!(unique.len(), TOTAL, "no sample double-consumed");
+    });
+
+    let snap = server.metrics().snapshot();
+    assert!(snap.verbs_total > 0);
+    assert!(
+        snap.verbs_by_op.iter().any(|(op, n)| op == "get_batch" && *n > 0),
+        "per-op accounting saw the consumer traffic"
+    );
+    server.stop();
+}
+
+// ===========================================================================
+// Graceful drain
+// ===========================================================================
+
+/// `stop()` revokes the consumer leases live connections still hold:
+/// after a drain, every leased-but-unacked row is immediately
+/// re-servable — no lease leaks past the server's lifetime, without
+/// waiting out any TTL.
+#[test]
+fn stop_revokes_unacked_consumer_leases() {
+    let session = grpo_session();
+    let server =
+        TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0)).unwrap();
+    let client =
+        ServiceClient::connect(("127.0.0.1", server.port())).unwrap();
+    let put = client
+        .put_prompts_data(&[vec![1], vec![2], vec![3], vec![4]])
+        .unwrap();
+
+    let leased = match client
+        .get_batch(&GetBatchSpec {
+            consumer: Some(ConsumerSpec {
+                id: "drain-test".into(),
+                ttl_ms: 60_000,
+            }),
+            ..spec("rollout", 8, 2000)
+        })
+        .unwrap()
+    {
+        GetBatchReply::Leased { batch, .. } => batch.indices,
+        other => panic!("expected a leased batch, got {other:?}"),
+    };
+    assert_eq!(leased.len(), 4);
+
+    // Stop with the client connection still open: revocation must come
+    // from the drain itself, not from a disconnect.
+    server.stop();
+
+    let local = ServiceClient::in_proc(session);
+    let requeued = match local
+        .get_batch(&spec("rollout", 8, 0))
+        .unwrap()
+    {
+        GetBatchReply::Ready(b) => b.indices,
+        other => panic!("rows not requeued by stop(): {other:?}"),
+    };
+    let want: HashSet<_> = put.iter().copied().collect();
+    let got: HashSet<_> = requeued.iter().copied().collect();
+    assert_eq!(got, want, "exactly the leased rows requeued");
+    drop(client);
+}
+
+// ===========================================================================
+// Expiry-driven wakeup (no 50 ms polling)
+// ===========================================================================
+
+/// A consumer parked in a blocked `get_batch` wakes the moment an
+/// abandoned lease's TTL expires — driven by the expiry-horizon
+/// condvar, not a fixed-period sweep. The wake delay beyond the TTL
+/// instant must be far below the old 50 ms sweep granularity.
+#[test]
+fn lease_expiry_wakes_parked_consumer_without_polling() {
+    const TRIALS: usize = 5;
+    const TTL_MS: u64 = 120;
+
+    let server =
+        TcpJsonlServer::bind(grpo_session(), ("127.0.0.1", 0)).unwrap();
+    let holder =
+        ServiceClient::connect(("127.0.0.1", server.port())).unwrap();
+    let waiter =
+        ServiceClient::connect(("127.0.0.1", server.port())).unwrap();
+
+    let mut delays_ms: Vec<f64> = Vec::new();
+    for trial in 0..TRIALS {
+        holder.put_prompts_data(&[vec![1], vec![2]]).unwrap();
+        // Lease both rows and abandon the lease (never ack, never
+        // renew): the rows requeue exactly at the TTL horizon.
+        let granted_at = Instant::now();
+        match holder
+            .get_batch(&GetBatchSpec {
+                consumer: Some(ConsumerSpec {
+                    id: format!("abandoner-{trial}"),
+                    ttl_ms: TTL_MS,
+                }),
+                ..spec("rollout", 2, 2000)
+            })
+            .unwrap()
+        {
+            GetBatchReply::Leased { batch, .. } => {
+                assert_eq!(batch.len(), 2)
+            }
+            other => panic!("expected a leased batch, got {other:?}"),
+        }
+
+        // Park on the now-empty queue; the requeue must wake us.
+        let reply = waiter
+            .get_batch(&GetBatchSpec {
+                min: 2,
+                ..spec("rollout", 2, 5000)
+            })
+            .unwrap();
+        let woke_at = Instant::now();
+        match reply {
+            GetBatchReply::Ready(b) => assert_eq!(b.len(), 2),
+            other => panic!("expected the requeued rows, got {other:?}"),
+        }
+        let since_grant = woke_at.duration_since(granted_at);
+        let delay = since_grant.as_secs_f64() * 1e3 - TTL_MS as f64;
+        assert!(
+            delay < 500.0,
+            "trial {trial}: wake {delay:.1} ms past the TTL horizon"
+        );
+        delays_ms.push(delay.max(0.0));
+    }
+
+    // A 50 ms-period sweep would average ~25 ms of extra latency; the
+    // condvar-driven sweeper wakes in single-digit milliseconds. Use
+    // the mean so one noisy-CI outlier cannot flake the test.
+    let mean = delays_ms.iter().sum::<f64>() / delays_ms.len() as f64;
+    assert!(
+        mean < 15.0,
+        "mean wake delay {mean:.1} ms suggests periodic polling \
+         (per-trial: {delays_ms:?})"
+    );
+    server.stop();
+}
+
+// ===========================================================================
+// Fire-and-forget bursts
+// ===========================================================================
+
+/// The client burst API pipelines heartbeat-class verbs into one
+/// round trip, and burst errors identify the failing verb by name and
+/// position.
+#[test]
+fn burst_pipelines_heartbeats_and_reports_failures() {
+    let server =
+        TcpJsonlServer::bind(grpo_session(), ("127.0.0.1", 0)).unwrap();
+    let client =
+        ServiceClient::connect(("127.0.0.1", server.port())).unwrap();
+
+    client.put_prompts_data(&[vec![1], vec![2]]).unwrap();
+    let reply = client
+        .lease_prompts(&LeaseSpec {
+            task: "rollout".into(),
+            worker: "burst-worker".into(),
+            count: 2,
+            ttl_ms: 30_000,
+            timeout_ms: 2_000,
+            columns: vec![Column::Prompts],
+        })
+        .unwrap();
+    let lease = reply.lease.expect("two rows were ready");
+    let cell = client.alloc_rows(1).unwrap()[0];
+
+    // Happy path: two independent verbs, one round trip.
+    client
+        .burst()
+        .renew_lease(lease, 0)
+        .notify_cells(&[CellNote {
+            index: cell,
+            column: Column::Rewards,
+            token_len: None,
+        }])
+        .send()
+        .unwrap();
+
+    // A failing verb inside a burst is reported by name and position.
+    let err = client
+        .burst()
+        .renew_lease(lease, 0)
+        .renew_lease(lease + 999_999, 0)
+        .send()
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("renew_lease") && err.contains("1"),
+        "burst error names the failing verb: {err}"
+    );
+    server.stop();
+}
