@@ -1,0 +1,230 @@
+//! Mixed engine fleet with hedge routing.
+//!
+//! Topology of the demo:
+//! * a served session with hedge routing configured
+//!   (`asyncflow serve --routing hedge` in CLI terms);
+//! * three rollout-worker **processes** attached over TCP (this example
+//!   re-execs itself, the same flow as `asyncflow rollout-worker
+//!   --connect host:port --engine-tags ...`): two fast engines tagged
+//!   `fast-cheap` and one straggler tagged `slow-accurate` decoding at
+//!   20ms/token;
+//! * the capability registry learns each engine's geometry and speed
+//!   class from the tags riding its lease polls;
+//! * once the straggler's silence exceeds the fleet's hedge budget, an
+//!   idle fast peer inherits its undone rows as a duplicate lease, the
+//!   first finisher commits, and the loser is revoked — every prompt
+//!   is served downstream exactly once.
+//!
+//! ```sh
+//! cargo run --release --example mixed_fleet
+//! ```
+
+use std::collections::HashSet;
+use std::process::{Child, Command};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+use asyncflow::fleet::{EngineSpec, FleetOptions, RoutingPolicy};
+use asyncflow::rollout::{run_worker, WorkerOptions};
+use asyncflow::runtime::{MockEngine, ParamSet, Sampler};
+use asyncflow::service::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec, TcpJsonlServer,
+};
+use asyncflow::transfer_queue::{Column, TaskSpec, Value};
+
+const PROMPTS: usize = 32;
+const PROMPT_LEN: usize = 12;
+const MAX_LEN: usize = 44;
+
+const COORD_ENV: &str = "MIXED_FLEET_COORD";
+const ROLE_ENV: &str = "MIXED_FLEET_ROLE";
+
+/// Child mode: one rollout-worker process, fast or slow, mirroring
+/// `asyncflow rollout-worker --connect <coord> --engine-tags <tags>`.
+fn run_fleet_worker(coordinator: &str, role: &str) -> Result<()> {
+    let client = ServiceClient::connect(coordinator)?;
+    let (batch, delay, tags) = match role {
+        "slow" => (4, Duration::from_millis(20), "slow-accurate,mock"),
+        _ => (8, Duration::ZERO, "fast-cheap,mock"),
+    };
+    let mut engine = MockEngine::new(batch, PROMPT_LEN, MAX_LEN);
+    engine.token_delay = delay;
+    let mut sampler = Sampler::new(1.0, 32, 3);
+    let mut opts = WorkerOptions::new(format!("{role}-{}", std::process::id()));
+    opts.chunk_tokens = 4;
+    opts.ttl_ms = 5000;
+    opts.poll_ms = 20;
+    opts.engine_tags = EngineSpec::parse_tags(tags);
+    run_worker(
+        &client,
+        &mut engine,
+        &mut sampler,
+        &opts,
+        None,
+        None,
+        &|| false,
+    )?;
+    Ok(())
+}
+
+fn spawn_fleet_worker(coordinator: &str, role: &str) -> Result<Child> {
+    Command::new(std::env::current_exe()?)
+        .env(COORD_ENV, coordinator)
+        .env(ROLE_ENV, role)
+        .spawn()
+        .context("spawning rollout-worker process")
+}
+
+/// Kill-on-drop guard so worker processes never outlive the demo.
+struct Fleet(Vec<Child>);
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for child in &mut self.0 {
+            child.kill().ok();
+            child.wait().ok();
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    if let Ok(coordinator) = std::env::var(COORD_ENV) {
+        let role = std::env::var(ROLE_ENV).unwrap_or_else(|_| "fast".into());
+        return run_fleet_worker(&coordinator, &role);
+    }
+
+    let session = Arc::new(Session::init_engines(
+        SessionSpec {
+            storage_units: 2,
+            tasks: vec![
+                TaskSpec::new("rollout", vec![Column::Prompts]),
+                TaskSpec::new(
+                    "collect",
+                    vec![Column::Responses, Column::OldLogp],
+                ),
+            ],
+        },
+        ParamSet::new(0, vec![]),
+    )?);
+    session.set_fleet_options(FleetOptions {
+        policy: RoutingPolicy::Hedge,
+        hedge_factor: 0.5,
+        hedge_min_ms: 25,
+        hedge_min_samples: 4,
+        ..FleetOptions::default()
+    });
+    let server = TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0))?;
+    let addr = server.local_addr();
+    println!(
+        "== mixed fleet under hedge routing: {PROMPTS} prompts, 2 fast \
+         + 1 slow worker processes, service on {addr} =="
+    );
+
+    let mut fleet = Fleet(Vec::new());
+    for role in ["fast", "fast", "slow"] {
+        fleet.0.push(spawn_fleet_worker(&addr.to_string(), role)?);
+    }
+
+    // The registry doubles as the readiness signal: every worker's
+    // first (empty) poll lands its capability spec.
+    let admin = ServiceClient::in_proc(session.clone());
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let f = admin.stats()?.fleet.expect("fleet stats");
+        if f.engines.iter().filter(|e| e.spec_reported).count() >= 3 {
+            break;
+        }
+        if Instant::now() > deadline {
+            bail!("worker processes failed to attach in time");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // All three workers are parked in long-polls now, so the straggler
+    // is guaranteed a share of the prompts when they land.
+    let feeder = ServiceClient::connect(addr)?;
+    feeder.put_batch(
+        (0..PROMPTS)
+            .map(|i| {
+                PutRow::new(vec![(
+                    Column::Prompts,
+                    Value::I32s(vec![i as i32 + 1; PROMPT_LEN]),
+                )])
+            })
+            .collect(),
+    )?;
+
+    let spec = GetBatchSpec {
+        task: "collect".into(),
+        group: 0,
+        columns: vec![Column::Responses],
+        count: 16,
+        min: 1,
+        timeout_ms: 50,
+        consumer: None,
+    };
+    let t0 = Instant::now();
+    let mut seen = HashSet::new();
+    while seen.len() < PROMPTS {
+        if let GetBatchReply::Ready(batch) = feeder.get_batch(&spec)? {
+            for idx in batch.indices {
+                assert!(seen.insert(idx), "row {idx:?} served twice");
+            }
+        }
+    }
+    let total = t0.elapsed();
+    feeder.shutdown()?;
+
+    // The closed prompt stream winds the worker processes down cleanly.
+    for child in &mut fleet.0 {
+        let status = child.wait()?;
+        if !status.success() {
+            bail!("worker process exited with {status}");
+        }
+    }
+
+    let f = admin.stats()?.fleet.expect("fleet stats");
+    println!(
+        "\nall {PROMPTS} prompts served exactly once in {:.1}ms under \
+         routing={} (hedge budget {:.1}ms, chunk p95 {:.1}ms)",
+        total.as_secs_f64() * 1e3,
+        f.routing,
+        f.hedge_budget_ms,
+        f.chunk_time_p95_ms
+    );
+    for e in &f.engines {
+        println!(
+            "engine {:<12} kind={:<5} speed={:<8} geometry={}x{}->{} \
+             tags=[{}] chunks={} tokens={}",
+            e.worker,
+            e.spec.kind,
+            e.spec.speed.name(),
+            e.spec.batch,
+            e.spec.prompt_len,
+            e.spec.max_len,
+            e.spec.tags.join(","),
+            e.chunks,
+            e.tokens
+        );
+    }
+    println!(
+        "hedges issued={} rows won by duplicate={} by primary={} \
+         duplicated tokens={}",
+        f.hedges_issued,
+        f.hedge_rows_won_by_duplicate,
+        f.hedge_rows_won_by_primary,
+        f.duplicated_tokens
+    );
+
+    assert!(f.hedges_issued >= 1, "the straggler was never hedged");
+    assert!(
+        f.engines.iter().any(|e| e.spec.speed.name() == "fast")
+            && f.engines.iter().any(|e| e.spec.speed.name() == "slow"),
+        "both speed classes visible in the registry"
+    );
+
+    server.stop();
+    Ok(())
+}

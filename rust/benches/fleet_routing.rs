@@ -1,0 +1,307 @@
+//! Fleet routing bench: time-to-last-sample for a mixed fleet with one
+//! straggler, load-balance vs hedge.
+//!
+//! The fleet is three fast engines plus one straggler decoding at
+//! 10ms/token (a 4-row lease stalls for up to ~320ms before its first
+//! chunk lands). Each round feeds 32 prompts and measures the wall
+//! time until the last row is served downstream. Under load-balance
+//! the straggler's lease sets the tail; under hedge routing an idle
+//! fast peer inherits the straggler's undone rows once its silence
+//! exceeds the budget derived from the fleet's observed chunk-interval
+//! distribution, so the tail collapses to roughly the hedge budget.
+//!
+//! Duplicated-token overhead is the routing layer's own accounting:
+//! tokens accepted from a lease that had already lost the row plus
+//! partial decode discarded when a duplicate takes a row over,
+//! relative to all committed response tokens. (Decode a loser throws
+//! away without delivering is invisible to the server and not
+//! counted.)
+//!
+//! Gates (asserted, and written to `BENCH_fleet.json`):
+//!   * hedge p99 time-to-last-sample >= 1.5x better than load-balance
+//!   * duplicated-token overhead <= 15% of committed tokens
+//!
+//! ```sh
+//! cargo bench --bench fleet_routing            # full sweep
+//! cargo bench --bench fleet_routing -- --smoke # CI smoke mode
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use asyncflow::fleet::{FleetOptions, RoutingPolicy};
+use asyncflow::rollout::{run_worker, WorkerOptions};
+use asyncflow::runtime::{MockEngine, ParamSet, Sampler};
+use asyncflow::service::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec, TcpJsonlServer,
+};
+use asyncflow::transfer_queue::{Column, TaskSpec, Value};
+use asyncflow::util::json::Json;
+
+const PROMPT_LEN: usize = 16;
+const MAX_LEN: usize = 48;
+const PROMPTS_PER_ROUND: usize = 32;
+const WARMUP_ROUNDS: usize = 2;
+
+struct Scale {
+    mode: &'static str,
+    rounds: usize,
+}
+
+impl Scale {
+    fn pick() -> Scale {
+        let smoke = std::env::args().any(|a| a == "--smoke")
+            || std::env::var("ASYNCFLOW_BENCH_SMOKE").is_ok();
+        if smoke {
+            Scale { mode: "smoke", rounds: 8 }
+        } else {
+            Scale { mode: "full", rounds: 24 }
+        }
+    }
+}
+
+fn fleet_session(options: FleetOptions) -> Arc<Session> {
+    let session = Arc::new(
+        Session::init_engines(
+            SessionSpec {
+                storage_units: 2,
+                tasks: vec![
+                    TaskSpec::new("rollout", vec![Column::Prompts]),
+                    TaskSpec::new(
+                        "collect",
+                        vec![Column::Responses, Column::OldLogp],
+                    ),
+                ],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    );
+    session.set_fleet_options(options);
+    session
+}
+
+fn spawn_worker(
+    port: u16,
+    name: String,
+    batch: usize,
+    token_delay: Duration,
+    tags: Vec<String>,
+    abort: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let client = ServiceClient::connect(("127.0.0.1", port)).unwrap();
+        let mut engine = MockEngine::new(batch, PROMPT_LEN, MAX_LEN);
+        engine.token_delay = token_delay;
+        let mut sampler = Sampler::new(1.0, 32, 11);
+        let mut opts = WorkerOptions::new(name);
+        opts.chunk_tokens = 4;
+        opts.ttl_ms = 10_000;
+        // Long-poll so every idle worker is parked server-side when a
+        // round's prompts land (and hedge checks run on each poll).
+        opts.poll_ms = 20;
+        opts.engine_tags = tags;
+        run_worker(
+            &client,
+            &mut engine,
+            &mut sampler,
+            &opts,
+            None,
+            None,
+            &|| abort.load(Ordering::SeqCst),
+        )
+        .unwrap();
+    })
+}
+
+/// Feed one round of prompts and wait until every row is served
+/// downstream. Returns (wall seconds, committed response tokens).
+fn run_round(monitor: &ServiceClient, tag: i32) -> (f64, u64) {
+    let rows: Vec<PutRow> = (0..PROMPTS_PER_ROUND)
+        .map(|i| {
+            PutRow::new(vec![(
+                Column::Prompts,
+                Value::I32s(vec![tag * 100 + i as i32 + 1; PROMPT_LEN]),
+            )])
+        })
+        .collect();
+    let spec = GetBatchSpec {
+        task: "collect".into(),
+        group: 0,
+        columns: vec![Column::Responses],
+        count: PROMPTS_PER_ROUND,
+        min: 1,
+        timeout_ms: 50,
+        consumer: None,
+    };
+    let t0 = Instant::now();
+    monitor.put_batch(rows).unwrap();
+    let mut seen = 0usize;
+    let mut tokens = 0u64;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while seen < PROMPTS_PER_ROUND {
+        assert!(Instant::now() < deadline, "round stalled at {seen} rows");
+        if let GetBatchReply::Ready(batch) = monitor.get_batch(&spec).unwrap()
+        {
+            seen += batch.len();
+            for row in &batch.rows {
+                tokens += row[0].as_i32s().unwrap().len() as u64;
+            }
+        }
+    }
+    (t0.elapsed().as_secs_f64(), tokens)
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let at = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[at.min(sorted.len() - 1)]
+}
+
+struct LegOut {
+    p50_ms: f64,
+    p99_ms: f64,
+    dup_token_overhead: f64,
+    hedges_issued: u64,
+}
+
+/// One leg: a 3-fast + 1-straggler fleet under `options`, `rounds`
+/// timed rounds (after warmup), cumulative fleet counters at the end.
+fn run_leg(options: FleetOptions, rounds: usize) -> LegOut {
+    let server =
+        TcpJsonlServer::bind(fleet_session(options), ("127.0.0.1", 0))
+            .unwrap();
+    let port = server.port();
+    let monitor = ServiceClient::connect(("127.0.0.1", port)).unwrap();
+
+    let abort = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for i in 0..3 {
+        workers.push(spawn_worker(
+            port,
+            format!("fast-{i}"),
+            8,
+            Duration::ZERO,
+            vec!["fast-cheap".into()],
+            abort.clone(),
+        ));
+    }
+    workers.push(spawn_worker(
+        port,
+        "straggler".into(),
+        4,
+        Duration::from_millis(10),
+        vec!["slow-accurate".into()],
+        abort.clone(),
+    ));
+
+    let mut times = Vec::with_capacity(rounds);
+    let mut committed_tokens = 0u64;
+    for round in 0..WARMUP_ROUNDS + rounds {
+        let (dt, tokens) = run_round(&monitor, 300 + round as i32);
+        committed_tokens += tokens;
+        if round >= WARMUP_ROUNDS {
+            times.push(dt);
+        }
+    }
+
+    let fleet = monitor.stats().unwrap().fleet.expect("fleet stats");
+    monitor.shutdown().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    server.stop();
+
+    times.sort_by(|a, b| a.total_cmp(b));
+    LegOut {
+        p50_ms: percentile(&times, 0.50) * 1e3,
+        p99_ms: percentile(&times, 0.99) * 1e3,
+        dup_token_overhead: fleet.duplicated_tokens as f64
+            / committed_tokens.max(1) as f64,
+        hedges_issued: fleet.hedges_issued,
+    }
+}
+
+fn leg_json(out: &LegOut) -> Json {
+    Json::obj(vec![
+        ("p50_time_to_last_sample_ms", Json::Num(out.p50_ms)),
+        ("p99_time_to_last_sample_ms", Json::Num(out.p99_ms)),
+        ("dup_token_overhead", Json::Num(out.dup_token_overhead)),
+        ("hedges_issued", Json::Num(out.hedges_issued as f64)),
+    ])
+}
+
+fn main() {
+    let scale = Scale::pick();
+    println!(
+        "== fleet routing: {} prompts/round, {} rounds, mode={} ==\n",
+        PROMPTS_PER_ROUND, scale.rounds, scale.mode
+    );
+
+    let lb = run_leg(
+        FleetOptions {
+            policy: RoutingPolicy::LoadBalance,
+            ..FleetOptions::default()
+        },
+        scale.rounds,
+    );
+    println!(
+        "lb     p50 {:>8.1} ms  p99 {:>8.1} ms",
+        lb.p50_ms, lb.p99_ms
+    );
+    let hedge = run_leg(
+        FleetOptions {
+            policy: RoutingPolicy::Hedge,
+            // A conservative factor with a 25ms floor: the straggler's
+            // 40ms inter-chunk silence always crosses it, fast engines
+            // (sub-millisecond chunks) never do.
+            hedge_factor: 0.5,
+            hedge_min_ms: 25,
+            hedge_min_samples: 8,
+            ..FleetOptions::default()
+        },
+        scale.rounds,
+    );
+    println!(
+        "hedge  p50 {:>8.1} ms  p99 {:>8.1} ms  dup {:>5.1}%  ({} hedges)",
+        hedge.p50_ms,
+        hedge.p99_ms,
+        hedge.dup_token_overhead * 100.0,
+        hedge.hedges_issued
+    );
+
+    let speedup = lb.p99_ms / hedge.p99_ms.max(1e-9);
+    println!("\np99 time-to-last-sample: hedge {speedup:.2}x better");
+
+    assert!(hedge.hedges_issued >= 1, "hedge leg never hedged");
+    assert!(
+        speedup >= 1.5,
+        "hedge must cut p99 time-to-last-sample >=1.5x vs load-balance \
+         (got {speedup:.2}x: lb {:.1}ms vs hedge {:.1}ms)",
+        lb.p99_ms,
+        hedge.p99_ms
+    );
+    assert!(
+        hedge.dup_token_overhead <= 0.15,
+        "hedging must stay <=15% duplicated decode (got {:.1}%)",
+        hedge.dup_token_overhead * 100.0
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("fleet_routing".into())),
+        ("mode", Json::Str(scale.mode.into())),
+        ("rounds", Json::Num(scale.rounds as f64)),
+        (
+            "prompts_per_round",
+            Json::Num(PROMPTS_PER_ROUND as f64),
+        ),
+        ("lb", leg_json(&lb)),
+        ("hedge", leg_json(&hedge)),
+        ("speedup_p99_hedge_vs_lb", Json::Num(speedup)),
+        ("dup_token_overhead", Json::Num(hedge.dup_token_overhead)),
+    ]);
+    std::fs::write("BENCH_fleet.json", out.to_string_pretty())
+        .expect("write BENCH_fleet.json");
+    println!("wrote BENCH_fleet.json");
+}

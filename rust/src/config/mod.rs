@@ -11,6 +11,71 @@ pub use parser::{ConfigDoc, ConfigError, ConfigValue};
 
 use anyhow::{bail, Result};
 
+use crate::fleet::{FleetOptions, RoutingPolicy};
+
+/// Engine-fleet routing knobs (`[fleet]` section): which policy the
+/// rollout dispatcher applies over lease grants, plus the hedge/mirror
+/// tunables. See `crate::fleet` for the policies themselves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Routing policy: "lb" | "fallback" | "hedge" | "mirror".
+    pub routing: String,
+    /// Hedge budget = `max(hedge_min_ms, hedge_factor × p95)` of
+    /// observed chunk intervals.
+    pub hedge_factor: f64,
+    /// Floor of the hedge budget in milliseconds.
+    pub hedge_min_ms: u64,
+    /// Observed chunk intervals required before hedging arms.
+    pub hedge_min_samples: usize,
+    /// Engines per row under mirror routing.
+    pub mirror_fanout: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        let o = FleetOptions::default();
+        FleetConfig {
+            routing: o.policy.name().into(),
+            hedge_factor: o.hedge_factor,
+            hedge_min_ms: o.hedge_min_ms,
+            hedge_min_samples: o.hedge_min_samples,
+            mirror_fanout: o.mirror_fanout,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Resolve into the router's option struct (validates `routing`).
+    pub fn to_options(&self) -> Result<FleetOptions> {
+        Ok(FleetOptions {
+            policy: RoutingPolicy::parse(&self.routing)?,
+            hedge_factor: self.hedge_factor,
+            hedge_min_ms: self.hedge_min_ms,
+            hedge_min_samples: self.hedge_min_samples,
+            mirror_fanout: self.mirror_fanout,
+            ..FleetOptions::default()
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        RoutingPolicy::parse(&self.routing)?;
+        if !(self.hedge_factor.is_finite() && self.hedge_factor >= 1.0) {
+            bail!(
+                "hedge_factor must be a finite multiplier >= 1.0, got {}",
+                self.hedge_factor
+            );
+        }
+        if self.mirror_fanout < 2 {
+            bail!(
+                "mirror_fanout must be >= 2 (primary plus duplicates), \
+                 got {}",
+                self.mirror_fanout
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Top-level RL run configuration (user-level knobs; paper §5.1/§6.1).
 #[derive(Debug, Clone)]
 pub struct RlConfig {
@@ -49,6 +114,8 @@ pub struct RlConfig {
     /// reward).
     pub survivors: usize,
     pub seed: u64,
+    /// Engine-fleet routing over lease dispatch (`[fleet]` section).
+    pub fleet: FleetConfig,
 }
 
 impl Default for RlConfig {
@@ -70,6 +137,7 @@ impl Default for RlConfig {
             pipeline: "grpo".into(),
             survivors: 2,
             seed: 0,
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -137,6 +205,7 @@ impl RlConfig {
             }
             p => bail!("unknown pipeline {p:?} (grpo|best_of_n)"),
         }
+        self.fleet.validate()?;
         Ok(())
     }
 
@@ -191,6 +260,23 @@ impl RlConfig {
             }
             if let Some(v) = s.get("seed") {
                 c.seed = v.as_usize()? as u64;
+            }
+        }
+        if let Some(s) = doc.section("fleet") {
+            if let Some(v) = s.get("routing") {
+                c.fleet.routing = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("hedge_factor") {
+                c.fleet.hedge_factor = v.as_f64()?;
+            }
+            if let Some(v) = s.get("hedge_min_ms") {
+                c.fleet.hedge_min_ms = v.as_usize()? as u64;
+            }
+            if let Some(v) = s.get("hedge_min_samples") {
+                c.fleet.hedge_min_samples = v.as_usize()?;
+            }
+            if let Some(v) = s.get("mirror_fanout") {
+                c.fleet.mirror_fanout = v.as_usize()?;
             }
         }
         Ok(c)
@@ -255,6 +341,35 @@ mod tests {
         assert!(c.validate(8).is_err());
         c.pipeline = "ppo".into();
         assert!(c.validate(8).is_err(), "unknown pipeline");
+    }
+
+    #[test]
+    fn fleet_section_parses_and_validates() {
+        let doc = ConfigDoc::parse(
+            "[fleet]\nrouting = \"hedge\"\nhedge_factor = 2.5\n\
+             hedge_min_ms = 10\nhedge_min_samples = 4\n\
+             mirror_fanout = 3\n",
+        )
+        .unwrap();
+        let c = RlConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.fleet.routing, "hedge");
+        assert_eq!(c.fleet.hedge_min_ms, 10);
+        assert_eq!(c.fleet.hedge_min_samples, 4);
+        assert_eq!(c.fleet.mirror_fanout, 3);
+        c.validate(8).unwrap();
+        let o = c.fleet.to_options().unwrap();
+        assert_eq!(o.policy, RoutingPolicy::Hedge);
+        assert!((o.hedge_factor - 2.5).abs() < 1e-12);
+        assert_eq!(o.mirror_fanout, 3);
+
+        let mut bad = RlConfig::default();
+        bad.fleet.routing = "coinflip".into();
+        assert!(bad.validate(8).is_err(), "unknown routing");
+        bad.fleet = FleetConfig::default();
+        bad.fleet.mirror_fanout = 1;
+        assert!(bad.validate(8).is_err(), "fanout below 2");
+        bad.fleet = FleetConfig { hedge_factor: 0.5, ..Default::default() };
+        assert!(bad.validate(8).is_err(), "sub-1 hedge factor");
     }
 
     #[test]

@@ -131,6 +131,13 @@ impl Trainer {
             session_spec,
             engines.initial_params.clone(),
         )?);
+        // Engine-fleet routing over lease dispatch (`[fleet]` config /
+        // `--routing`): validated by `cfg.validate` above, applied to
+        // the live rollout dispatcher here. Worker capability specs
+        // arrive at attach time via `lease_prompts`.
+        session
+            .rollout_manager()?
+            .configure_fleet(cfg.fleet.to_options()?);
         Ok(Trainer { cfg, engines, session })
     }
 

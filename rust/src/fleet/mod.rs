@@ -1,0 +1,35 @@
+//! Heterogeneous engine fleet: a capability-modeled backend registry
+//! plus routing policies over lease dispatch.
+//!
+//! AsyncFlow's rollout layer can scale workers, but a single statically
+//! chosen `PolicyEngine` backend per run leaves two gaps: mixed fleets
+//! (fast/cheap engines next to slow/accurate ones) and long-tail
+//! generations serializing behind whichever engine got unlucky. This
+//! module closes both:
+//!
+//! * [`EngineSpec`] models what an engine *is* — kind, compiled
+//!   geometry, speed class, tags — so the coordinator can reason about
+//!   which engines can stand in for which ([`EngineSpec::can_stand_in_for`]).
+//!   Specs register statically (config) or dynamically at worker attach
+//!   (the spec rides `lease_prompts` / `worker_stats`).
+//! * [`FleetRouter`] implements the routing policies
+//!   ([`RoutingPolicy`]): **load-balance** (least-outstanding capable
+//!   candidate), **fallback** (engine errors requeue the lease
+//!   immediately via `fail_lease` instead of waiting out the TTL),
+//!   **hedge** (duplicate a straggler's remaining rows to a second
+//!   engine once its silence exceeds a budget derived from the fleet's
+//!   observed chunk-time distribution; first finisher commits, the
+//!   loser's rows are revoked through the lease table so exactly-once
+//!   conservation holds), and **mirror** (duplicate to N engines and
+//!   compare outputs — the engine-correctness soak test).
+//!
+//! See DESIGN.md §Engine fleet for the state machines and the
+//! hedge-revocation sequence.
+
+pub mod router;
+pub mod spec;
+
+pub use router::{
+    DupMode, EngineStat, FleetOptions, FleetRouter, FleetStats, RowPlan,
+};
+pub use spec::{EngineSpec, RoutingPolicy, SpeedClass};

@@ -1,0 +1,1149 @@
+//! The fleet router: routing-policy state machine over lease dispatch.
+//!
+//! The router never owns leases or rows — `LeaseTable`/`LeaseRegistry`
+//! stay the single source of truth for exactly-once conservation. The
+//! router is a bookkeeping layer the `RolloutManager` consults at three
+//! points:
+//!
+//! * **poll time** (`lease_prompts`): defer a loaded worker's poll
+//!   (load-balance), or grant a straggler's remaining rows to a second
+//!   engine (hedge) / a fresh duplicate (mirror) when no queued rows are
+//!   ready.
+//! * **commit time** (`put_chunk`): [`FleetRouter::filter_chunk`]
+//!   atomically decides, per row, whether this lease commits the row,
+//!   drops it (a hedge loser), or compares it (a mirror duplicate) —
+//!   the winner of a duplicated row is chosen under the router lock, so
+//!   two engines racing the same row can never both commit.
+//! * **death time** (`fail_lease`, TTL sweep): decide which of a dead
+//!   lease's rows actually requeue — a row whose duplicate is still
+//!   live (or already committed) must not requeue, and a row whose
+//!   *both* copies died in one sweep must requeue exactly once.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::transfer_queue::{GlobalIndex, LeaseId, RevokedLease};
+
+use super::spec::{EngineSpec, RoutingPolicy};
+
+/// Tunables for the routing layer (the `[fleet]` config table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetOptions {
+    /// Active routing policy.
+    pub policy: RoutingPolicy,
+    /// Hedge latency budget = `max(hedge_min_ms, hedge_factor × p95)`
+    /// of the observed chunk-interval distribution.
+    pub hedge_factor: f64,
+    /// Floor of the hedge budget in milliseconds.
+    pub hedge_min_ms: u64,
+    /// Minimum observed chunk intervals before hedging arms.
+    pub hedge_min_samples: usize,
+    /// Engines per row under mirror routing (the primary plus
+    /// `mirror_fanout - 1` duplicates).
+    pub mirror_fanout: usize,
+    /// A peer counts as "actively polling" for load-balance deferral
+    /// if it polled within this window (milliseconds).
+    pub lb_window_ms: u64,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            policy: RoutingPolicy::LoadBalance,
+            hedge_factor: 3.0,
+            hedge_min_ms: 25,
+            hedge_min_samples: 8,
+            mirror_fanout: 2,
+            lb_window_ms: 1000,
+        }
+    }
+}
+
+/// How a duplicated row pair was created.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DupMode {
+    /// Straggler rescue: the loser's copy is revoked, its tokens
+    /// counted as duplicated decode work.
+    Hedge,
+    /// Correctness soak: the loser's copy is compared against the
+    /// winner's committed tokens before being discarded.
+    Mirror,
+}
+
+/// Per-row verdict from [`FleetRouter::filter_chunk`], parallel to the
+/// input rows.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RowPlan {
+    /// Commit through the normal `append_rows` path. For a finished
+    /// row that wins a duplicated pair, `losers` names the lease(s)
+    /// whose copy of this row must be discarded now (hedge
+    /// revocation).
+    Commit {
+        /// Leases whose copy of the row loses to this commit.
+        losers: Vec<LeaseId>,
+    },
+    /// Hedge-loser row (the duplicate already committed): drop the
+    /// chunk, discard the buffered copy if finished.
+    Drop,
+    /// Mirror-loser finished row: discard the buffered copy and hand
+    /// the full token sequence to [`FleetRouter::resolve_mirror`].
+    Compare,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Role {
+    Primary,
+    Hedge,
+    Mirror,
+}
+
+struct LeaseMeta {
+    worker: String,
+    task: String,
+    role: Role,
+    /// Duplicate leases granted against this one (primary side only).
+    partners: Vec<LeaseId>,
+    last_activity: Instant,
+}
+
+struct EngineEntry {
+    spec: EngineSpec,
+    spec_reported: bool,
+    source: &'static str,
+    last_poll: Option<Instant>,
+    first_chunk: Option<Instant>,
+    last_chunk: Option<Instant>,
+    chunks: u64,
+    tokens: u64,
+    errors: u64,
+    hedge_rows_won: u64,
+    hedge_rows_lost: u64,
+}
+
+impl EngineEntry {
+    fn placeholder() -> EngineEntry {
+        EngineEntry {
+            spec: EngineSpec::new("unreported", 0, 0, 0),
+            spec_reported: false,
+            source: "attach",
+            last_poll: None,
+            first_chunk: None,
+            last_chunk: None,
+            chunks: 0,
+            tokens: 0,
+            errors: 0,
+            hedge_rows_won: 0,
+            hedge_rows_lost: 0,
+        }
+    }
+
+    fn observed_tps(&self) -> f64 {
+        match (self.first_chunk, self.last_chunk) {
+            (Some(a), Some(b)) if b > a => {
+                self.tokens as f64 / (b - a).as_secs_f64()
+            }
+            _ => self.spec.observed_tps,
+        }
+    }
+}
+
+/// One duplicated row: the leases racing it and, once decided, the
+/// winner. `winner_tokens` / `pending` exist so a mirror comparison
+/// can resolve regardless of which side's `put_chunk` lands first.
+struct DupEntry {
+    mode: DupMode,
+    participants: Vec<LeaseId>,
+    winner: Option<LeaseId>,
+    winner_tokens: Option<Vec<i32>>,
+    pending: Vec<Vec<i32>>,
+}
+
+#[derive(Default)]
+struct Counters {
+    hedges_issued: u64,
+    hedge_rows_won_by_duplicate: u64,
+    hedge_rows_won_by_primary: u64,
+    duplicated_tokens: u64,
+    mirrors_issued: u64,
+    mirror_matches: u64,
+    mirror_divergences: u64,
+    lb_deferrals: u64,
+    fallback_requeues: u64,
+}
+
+struct Inner {
+    options: FleetOptions,
+    engines: HashMap<String, EngineEntry>,
+    leases: HashMap<LeaseId, LeaseMeta>,
+    rows: HashMap<GlobalIndex, DupEntry>,
+    /// Ring of observed chunk intervals (ms) across the fleet — the
+    /// distribution the hedge budget is derived from.
+    intervals: Vec<f64>,
+    interval_at: usize,
+    counters: Counters,
+}
+
+const INTERVAL_RING: usize = 512;
+
+/// Per-engine slice of [`FleetStats`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineStat {
+    pub worker: String,
+    pub spec: EngineSpec,
+    /// Whether a real capability report backs `spec` (old workers
+    /// never send one; they show up as an unreported placeholder).
+    pub spec_reported: bool,
+    /// `"config"` or `"attach"`.
+    pub source: String,
+    pub chunks: u64,
+    pub tokens: u64,
+    pub errors: u64,
+    pub hedge_rows_won: u64,
+    pub hedge_rows_lost: u64,
+    pub observed_tps: f64,
+}
+
+/// Snapshot of the routing layer (`stats.fleet`, rendered by
+/// `asyncflow info --connect`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetStats {
+    pub routing: String,
+    pub engines: Vec<EngineStat>,
+    pub chunk_time_p50_ms: f64,
+    pub chunk_time_p95_ms: f64,
+    /// Current hedge latency budget (0 until enough samples).
+    pub hedge_budget_ms: f64,
+    pub hedges_issued: u64,
+    pub hedge_rows_won_by_duplicate: u64,
+    pub hedge_rows_won_by_primary: u64,
+    pub duplicated_tokens: u64,
+    pub mirrors_issued: u64,
+    pub mirror_matches: u64,
+    pub mirror_divergences: u64,
+    pub lb_deferrals: u64,
+    pub fallback_requeues: u64,
+}
+
+/// What [`FleetRouter::filter_chunk`] decided for one row, before the
+/// shared counters are updated.
+enum Decision {
+    Plain,
+    Drop,
+    Compare,
+    Win { mode: DupMode, losers: Vec<LeaseId> },
+}
+
+/// Thread-safe fleet router. One per `RolloutManager`.
+pub struct FleetRouter {
+    inner: Mutex<Inner>,
+}
+
+impl Default for FleetRouter {
+    fn default() -> Self {
+        FleetRouter::new(FleetOptions::default())
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = ((sorted.len() as f64 * q) as usize).min(sorted.len() - 1);
+    sorted[pos]
+}
+
+impl FleetRouter {
+    pub fn new(options: FleetOptions) -> FleetRouter {
+        FleetRouter {
+            inner: Mutex::new(Inner {
+                options,
+                engines: HashMap::new(),
+                leases: HashMap::new(),
+                rows: HashMap::new(),
+                intervals: Vec::new(),
+                interval_at: 0,
+                counters: Counters::default(),
+            }),
+        }
+    }
+
+    /// Replace the routing options (a policy switch mid-run is allowed;
+    /// existing duplicated rows keep resolving under their own mode).
+    pub fn configure(&self, options: FleetOptions) {
+        self.inner.lock().unwrap().options = options;
+    }
+
+    /// The active routing policy.
+    pub fn policy(&self) -> RoutingPolicy {
+        self.inner.lock().unwrap().options.policy
+    }
+
+    /// Register (or refresh) an engine's capability spec.
+    pub fn register_engine(
+        &self,
+        worker: &str,
+        spec: EngineSpec,
+        source: &'static str,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g
+            .engines
+            .entry(worker.to_string())
+            .or_insert_with(EngineEntry::placeholder);
+        e.spec = spec;
+        e.spec_reported = true;
+        e.source = source;
+    }
+
+    /// A worker polled `lease_prompts`, optionally carrying its engine
+    /// spec (lenient: old workers send none and still participate).
+    pub fn note_poll(&self, worker: &str, spec: Option<&EngineSpec>) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g
+            .engines
+            .entry(worker.to_string())
+            .or_insert_with(EngineEntry::placeholder);
+        if let Some(s) = spec {
+            if !e.spec_reported || e.spec != *s {
+                e.spec = s.clone();
+            }
+            e.spec_reported = true;
+        }
+        e.last_poll = Some(Instant::now());
+    }
+
+    /// Load-balance deferral: should this worker's poll return empty
+    /// even though rows are ready? Only when a strictly-less-loaded
+    /// peer polled recently — the least-loaded active poller never
+    /// defers, so dispatch always makes progress.
+    pub fn should_defer(
+        &self,
+        worker: &str,
+        load: &HashMap<String, (usize, usize)>,
+    ) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if !matches!(
+            g.options.policy,
+            RoutingPolicy::LoadBalance | RoutingPolicy::Fallback
+        ) {
+            return false;
+        }
+        let mine = load.get(worker).copied().unwrap_or((0, 0));
+        if mine.1 == 0 {
+            return false;
+        }
+        let window = Duration::from_millis(g.options.lb_window_ms);
+        let now = Instant::now();
+        let defer = g.engines.iter().any(|(name, e)| {
+            name.as_str() != worker
+                && e.last_poll
+                    .is_some_and(|t| now.duration_since(t) <= window)
+                && load.get(name).copied().unwrap_or((0, 0)).1 < mine.1
+        });
+        if defer {
+            g.counters.lb_deferrals += 1;
+        }
+        defer
+    }
+
+    /// A primary lease was granted.
+    pub fn on_grant(&self, lease: LeaseId, worker: &str, task: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.leases.insert(
+            lease,
+            LeaseMeta {
+                worker: worker.to_string(),
+                task: task.to_string(),
+                role: Role::Primary,
+                partners: Vec::new(),
+                last_activity: Instant::now(),
+            },
+        );
+    }
+
+    fn budget_ms(g: &Inner) -> Option<f64> {
+        if g.intervals.len() < g.options.hedge_min_samples.max(1) {
+            return None;
+        }
+        let mut sorted = g.intervals.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let p95 = percentile(&sorted, 0.95);
+        Some(
+            (g.options.hedge_factor * p95)
+                .max(g.options.hedge_min_ms as f64),
+        )
+    }
+
+    /// Hedge: pick the most-overdue straggler lease whose remaining
+    /// rows `poller` should duplicate. Fires only once the fleet's
+    /// chunk-interval distribution has enough samples, and only
+    /// against a primary lease on a *different* worker with no
+    /// duplicate yet whose silence exceeds the latency budget.
+    pub fn hedge_candidate(
+        &self,
+        poller: &str,
+        task: &str,
+    ) -> Option<LeaseId> {
+        let g = self.inner.lock().unwrap();
+        if g.options.policy != RoutingPolicy::Hedge {
+            return None;
+        }
+        let budget_ms = Self::budget_ms(&g)?;
+        let poller_spec = match g.engines.get(poller) {
+            Some(e) if e.spec_reported => Some(e.spec.clone()),
+            _ => None,
+        };
+        let now = Instant::now();
+        let mut best: Option<(f64, LeaseId)> = None;
+        for (id, meta) in &g.leases {
+            if meta.role != Role::Primary
+                || !meta.partners.is_empty()
+                || meta.task != task
+                || meta.worker == poller
+            {
+                continue;
+            }
+            let silent_ms =
+                now.duration_since(meta.last_activity).as_secs_f64() * 1e3;
+            if silent_ms <= budget_ms {
+                continue;
+            }
+            if let Some(ps) = &poller_spec {
+                if let Some(e) = g.engines.get(&meta.worker) {
+                    if e.spec_reported && !ps.can_stand_in_for(&e.spec) {
+                        continue;
+                    }
+                }
+            }
+            let better = match best {
+                Some((s, _)) => silent_ms > s,
+                None => true,
+            };
+            if better {
+                best = Some((silent_ms, *id));
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Mirror: pick a primary lease on a different worker that still
+    /// has fewer than `mirror_fanout - 1` duplicates.
+    pub fn mirror_candidate(
+        &self,
+        poller: &str,
+        task: &str,
+    ) -> Option<LeaseId> {
+        let g = self.inner.lock().unwrap();
+        if g.options.policy != RoutingPolicy::Mirror {
+            return None;
+        }
+        let want = g.options.mirror_fanout.saturating_sub(1).max(1);
+        let poller_spec = match g.engines.get(poller) {
+            Some(e) if e.spec_reported => Some(e.spec.clone()),
+            _ => None,
+        };
+        for (id, meta) in &g.leases {
+            if meta.role != Role::Primary
+                || meta.partners.len() >= want
+                || meta.task != task
+                || meta.worker == poller
+            {
+                continue;
+            }
+            let poller_already_in = meta.partners.iter().any(|p| {
+                g.leases.get(p).is_some_and(|m| m.worker == poller)
+            });
+            if poller_already_in {
+                continue;
+            }
+            if let Some(ps) = &poller_spec {
+                if let Some(e) = g.engines.get(&meta.worker) {
+                    if e.spec_reported && !ps.can_stand_in_for(&e.spec) {
+                        continue;
+                    }
+                }
+            }
+            return Some(*id);
+        }
+        None
+    }
+
+    /// A duplicate lease `dup` was granted against `primary`, covering
+    /// `rows` (the primary's rows still undone at hedge/mirror time).
+    pub fn record_dup(
+        &self,
+        primary: LeaseId,
+        dup: LeaseId,
+        dup_worker: &str,
+        task: &str,
+        rows: &[GlobalIndex],
+        mode: DupMode,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        let role = match mode {
+            DupMode::Hedge => Role::Hedge,
+            DupMode::Mirror => Role::Mirror,
+        };
+        g.leases.insert(
+            dup,
+            LeaseMeta {
+                worker: dup_worker.to_string(),
+                task: task.to_string(),
+                role,
+                partners: vec![primary],
+                last_activity: Instant::now(),
+            },
+        );
+        if let Some(meta) = g.leases.get_mut(&primary) {
+            meta.partners.push(dup);
+        }
+        for idx in rows {
+            let entry = g.rows.entry(*idx).or_insert_with(|| DupEntry {
+                mode,
+                participants: vec![primary],
+                winner: None,
+                winner_tokens: None,
+                pending: Vec::new(),
+            });
+            if !entry.participants.contains(&dup) {
+                entry.participants.push(dup);
+            }
+        }
+        match mode {
+            DupMode::Hedge => g.counters.hedges_issued += 1,
+            DupMode::Mirror => g.counters.mirrors_issued += 1,
+        }
+    }
+
+    /// Atomic per-chunk routing decision (see module docs). `rows` is
+    /// `(index, finished, chunk_tokens)` in chunk order; the returned
+    /// plans are parallel to it. Also records the chunk interval into
+    /// the hedge-budget distribution and the engine's counters.
+    pub fn filter_chunk(
+        &self,
+        lease: LeaseId,
+        rows: &[(GlobalIndex, bool, usize)],
+    ) -> Vec<RowPlan> {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        let chunk_tokens: usize = rows.iter().map(|r| r.2).sum();
+
+        let mut activity: Option<(f64, String)> = None;
+        if let Some(meta) = g.leases.get_mut(&lease) {
+            let dt_ms =
+                now.duration_since(meta.last_activity).as_secs_f64() * 1e3;
+            meta.last_activity = now;
+            activity = Some((dt_ms, meta.worker.clone()));
+        }
+        if let Some((dt_ms, worker)) = activity {
+            if g.intervals.len() < INTERVAL_RING {
+                g.intervals.push(dt_ms);
+            } else {
+                let at = g.interval_at % INTERVAL_RING;
+                g.intervals[at] = dt_ms;
+            }
+            g.interval_at += 1;
+            let e = g
+                .engines
+                .entry(worker)
+                .or_insert_with(EngineEntry::placeholder);
+            e.chunks += 1;
+            e.tokens += chunk_tokens as u64;
+            if e.first_chunk.is_none() {
+                e.first_chunk = Some(now);
+            }
+            e.last_chunk = Some(now);
+        }
+
+        let mut plans = Vec::with_capacity(rows.len());
+        for (idx, finished, _) in rows {
+            // First pass, with the row entry borrowed: decide, and for
+            // a contested finish, claim the win under this same lock so
+            // the other side's racing chunk sees it and diverts.
+            let decision = match g.rows.get_mut(idx) {
+                None => Decision::Plain,
+                Some(entry) => match entry.winner {
+                    Some(w) if w == lease => Decision::Drop,
+                    Some(_) => match entry.mode {
+                        DupMode::Hedge => Decision::Drop,
+                        DupMode::Mirror if *finished => Decision::Compare,
+                        DupMode::Mirror => Decision::Drop,
+                    },
+                    None if *finished => {
+                        entry.winner = Some(lease);
+                        let losers: Vec<LeaseId> = entry
+                            .participants
+                            .iter()
+                            .copied()
+                            .filter(|p| *p != lease)
+                            .collect();
+                        Decision::Win { mode: entry.mode, losers }
+                    }
+                    None => Decision::Plain,
+                },
+            };
+            // Second pass, entry borrow released: account the win.
+            match decision {
+                Decision::Plain => {
+                    plans.push(RowPlan::Commit { losers: Vec::new() });
+                }
+                Decision::Drop => plans.push(RowPlan::Drop),
+                Decision::Compare => plans.push(RowPlan::Compare),
+                Decision::Win { mode: DupMode::Mirror, .. } => {
+                    // Mirror keeps the losers decoding so their
+                    // finished rows can be compared.
+                    plans.push(RowPlan::Commit { losers: Vec::new() });
+                }
+                Decision::Win { mode: DupMode::Hedge, losers } => {
+                    let winner_role = g
+                        .leases
+                        .get(&lease)
+                        .map(|m| m.role)
+                        .unwrap_or(Role::Primary);
+                    let winner_worker =
+                        g.leases.get(&lease).map(|m| m.worker.clone());
+                    let loser_workers: Vec<String> = losers
+                        .iter()
+                        .filter_map(|l| {
+                            g.leases.get(l).map(|m| m.worker.clone())
+                        })
+                        .collect();
+                    if winner_role == Role::Hedge {
+                        g.counters.hedge_rows_won_by_duplicate += 1;
+                    } else {
+                        g.counters.hedge_rows_won_by_primary += 1;
+                    }
+                    if let Some(w) = winner_worker {
+                        if let Some(e) = g.engines.get_mut(&w) {
+                            e.hedge_rows_won += 1;
+                        }
+                    }
+                    for w in loser_workers {
+                        if let Some(e) = g.engines.get_mut(&w) {
+                            e.hedge_rows_lost += 1;
+                        }
+                    }
+                    plans.push(RowPlan::Commit { losers });
+                }
+            }
+        }
+        plans
+    }
+
+    /// The winner's full token sequence for a committed mirror row —
+    /// resolves any comparison that arrived before the commit.
+    pub fn note_committed(
+        &self,
+        index: GlobalIndex,
+        lease: LeaseId,
+        tokens: &[i32],
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        let (matches, divergences) = {
+            let Some(entry) = g.rows.get_mut(&index) else {
+                return;
+            };
+            if entry.mode != DupMode::Mirror
+                || entry.winner != Some(lease)
+            {
+                return;
+            }
+            entry.winner_tokens = Some(tokens.to_vec());
+            let pending = std::mem::take(&mut entry.pending);
+            let mut matches = 0u64;
+            let mut divergences = 0u64;
+            for got in pending {
+                if got.as_slice() == tokens {
+                    matches += 1;
+                } else {
+                    divergences += 1;
+                }
+            }
+            (matches, divergences)
+        };
+        g.counters.mirror_matches += matches;
+        g.counters.mirror_divergences += divergences;
+    }
+
+    /// A mirror loser's full token sequence for `index`. Compared
+    /// against the winner's committed tokens immediately if available,
+    /// else parked until [`FleetRouter::note_committed`].
+    pub fn resolve_mirror(&self, index: GlobalIndex, tokens: Vec<i32>) {
+        let mut g = self.inner.lock().unwrap();
+        let outcome = {
+            let Some(entry) = g.rows.get_mut(&index) else {
+                return;
+            };
+            if entry.mode != DupMode::Mirror {
+                return;
+            }
+            match &entry.winner_tokens {
+                Some(expected) => {
+                    Some(expected.as_slice() == tokens.as_slice())
+                }
+                None => {
+                    entry.pending.push(tokens);
+                    None
+                }
+            }
+        };
+        match outcome {
+            Some(true) => g.counters.mirror_matches += 1,
+            Some(false) => g.counters.mirror_divergences += 1,
+            None => {}
+        }
+    }
+
+    /// Count decode tokens thrown away by hedge revocation / drops.
+    pub fn note_dropped(&self, tokens: usize) {
+        self.inner.lock().unwrap().counters.duplicated_tokens +=
+            tokens as u64;
+    }
+
+    /// A lease left the registry (retired or revoked) — drop its
+    /// routing metadata and resolve row entries it participated in.
+    pub fn forget_lease(&self, lease: LeaseId) {
+        let mut g = self.inner.lock().unwrap();
+        g.leases.remove(&lease);
+        let gone = HashSet::from([lease]);
+        Self::prune_rows(&mut g, &gone);
+    }
+
+    /// Drop row entries that can no longer affect routing: every
+    /// departed lease is removed from `participants`; an entry stays
+    /// only while more than one undecided participant remains, or a
+    /// decided winner still has a live loser whose chunks must keep
+    /// diverting.
+    fn prune_rows(g: &mut Inner, gone: &HashSet<LeaseId>) {
+        g.rows.retain(|_, entry| {
+            entry.participants.retain(|p| !gone.contains(p));
+            match entry.winner {
+                None => entry.participants.len() > 1,
+                Some(w) => {
+                    entry.participants.iter().any(|p| *p != w)
+                        || !entry.pending.is_empty()
+                }
+            }
+        });
+    }
+
+    /// A worker reported an engine failure for its lease (`fail_lease`
+    /// verb — the fallback path). Returns the subset of the revoked
+    /// lease's rows that must requeue (rows covered by a live
+    /// duplicate or an already-committed winner do not).
+    pub fn on_lease_failed(&self, revoked: &RevokedLease) -> Vec<GlobalIndex> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.engines.get_mut(&revoked.owner) {
+            e.errors += 1;
+        }
+        let dead = HashSet::from([revoked.id]);
+        let mut handled = HashSet::new();
+        let rows = Self::rows_to_requeue(
+            &mut g,
+            revoked.id,
+            &revoked.rows,
+            &dead,
+            &mut handled,
+        );
+        g.counters.fallback_requeues += rows.len() as u64;
+        g.leases.remove(&revoked.id);
+        Self::prune_rows(&mut g, &dead);
+        rows
+    }
+
+    /// TTL sweep resolution: for each swept lease, which rows requeue.
+    /// Dedup-safe when both sides of a duplicated pair expire in the
+    /// same sweep — the shared row requeues exactly once.
+    pub fn on_leases_swept(
+        &self,
+        swept: &[RevokedLease],
+    ) -> Vec<(String, Vec<GlobalIndex>)> {
+        let mut g = self.inner.lock().unwrap();
+        let dead: HashSet<LeaseId> =
+            swept.iter().map(|r| r.id).collect();
+        let mut handled: HashSet<GlobalIndex> = HashSet::new();
+        let mut out = Vec::new();
+        for revoked in swept {
+            let rows = Self::rows_to_requeue(
+                &mut g,
+                revoked.id,
+                &revoked.rows,
+                &dead,
+                &mut handled,
+            );
+            if !rows.is_empty() {
+                out.push((revoked.task.clone(), rows));
+            }
+        }
+        for id in &dead {
+            g.leases.remove(id);
+        }
+        Self::prune_rows(&mut g, &dead);
+        out
+    }
+
+    fn rows_to_requeue(
+        g: &mut Inner,
+        lease: LeaseId,
+        undone: &[GlobalIndex],
+        dead: &HashSet<LeaseId>,
+        handled: &mut HashSet<GlobalIndex>,
+    ) -> Vec<GlobalIndex> {
+        let mut out = Vec::new();
+        for idx in undone {
+            if handled.contains(idx) {
+                continue;
+            }
+            let requeue = match g.rows.get(idx) {
+                None => true,
+                Some(entry) => {
+                    if entry.winner.is_some() {
+                        // Already committed by the other side.
+                        false
+                    } else {
+                        // Requeue only if no other participant is both
+                        // alive and outside this death set.
+                        !entry.participants.iter().any(|p| {
+                            *p != lease
+                                && !dead.contains(p)
+                                && g.leases.contains_key(p)
+                        })
+                    }
+                }
+            };
+            if requeue {
+                handled.insert(*idx);
+                out.push(*idx);
+            }
+        }
+        out
+    }
+
+    /// Routing-layer snapshot for `stats.fleet`.
+    pub fn stats(&self) -> FleetStats {
+        let g = self.inner.lock().unwrap();
+        let mut sorted = g.intervals.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let mut engines: Vec<EngineStat> = g
+            .engines
+            .iter()
+            .map(|(worker, e)| EngineStat {
+                worker: worker.clone(),
+                spec: e.spec.clone(),
+                spec_reported: e.spec_reported,
+                source: e.source.to_string(),
+                chunks: e.chunks,
+                tokens: e.tokens,
+                errors: e.errors,
+                hedge_rows_won: e.hedge_rows_won,
+                hedge_rows_lost: e.hedge_rows_lost,
+                observed_tps: e.observed_tps(),
+            })
+            .collect();
+        engines.sort_by(|a, b| a.worker.cmp(&b.worker));
+        FleetStats {
+            routing: g.options.policy.name().to_string(),
+            engines,
+            chunk_time_p50_ms: percentile(&sorted, 0.50),
+            chunk_time_p95_ms: percentile(&sorted, 0.95),
+            hedge_budget_ms: Self::budget_ms(&g).unwrap_or(0.0),
+            hedges_issued: g.counters.hedges_issued,
+            hedge_rows_won_by_duplicate: g
+                .counters
+                .hedge_rows_won_by_duplicate,
+            hedge_rows_won_by_primary: g
+                .counters
+                .hedge_rows_won_by_primary,
+            duplicated_tokens: g.counters.duplicated_tokens,
+            mirrors_issued: g.counters.mirrors_issued,
+            mirror_matches: g.counters.mirror_matches,
+            mirror_divergences: g.counters.mirror_divergences,
+            lb_deferrals: g.counters.lb_deferrals,
+            fallback_requeues: g.counters.fallback_requeues,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx(v: u64) -> GlobalIndex {
+        GlobalIndex(v)
+    }
+
+    fn revoked(
+        id: LeaseId,
+        task: &str,
+        owner: &str,
+        rows: &[u64],
+    ) -> RevokedLease {
+        RevokedLease {
+            id,
+            owner: owner.into(),
+            task: task.into(),
+            rows: rows.iter().map(|v| idx(*v)).collect(),
+        }
+    }
+
+    fn hedge_router() -> FleetRouter {
+        FleetRouter::new(FleetOptions {
+            policy: RoutingPolicy::Hedge,
+            hedge_min_samples: 1,
+            hedge_min_ms: 0,
+            hedge_factor: 0.0,
+            ..FleetOptions::default()
+        })
+    }
+
+    #[test]
+    fn uncontested_rows_commit() {
+        let r = FleetRouter::default();
+        r.on_grant(1, "w0", "rollout");
+        let plans =
+            r.filter_chunk(1, &[(idx(0), false, 2), (idx(1), true, 3)]);
+        assert_eq!(
+            plans,
+            vec![
+                RowPlan::Commit { losers: vec![] },
+                RowPlan::Commit { losers: vec![] }
+            ]
+        );
+    }
+
+    #[test]
+    fn hedge_winner_takes_row_and_loser_diverts() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.record_dup(1, 2, "fast", "rollout", &[idx(7)], DupMode::Hedge);
+
+        // The duplicate finishes first: it commits and names the
+        // straggler as the loser to discard.
+        let plans = r.filter_chunk(2, &[(idx(7), true, 4)]);
+        assert_eq!(plans, vec![RowPlan::Commit { losers: vec![1] }]);
+
+        // The straggler's late chunks for the row — partial or
+        // finished — are dropped, never committed.
+        let plans = r.filter_chunk(1, &[(idx(7), false, 2)]);
+        assert_eq!(plans, vec![RowPlan::Drop]);
+        let plans = r.filter_chunk(1, &[(idx(7), true, 2)]);
+        assert_eq!(plans, vec![RowPlan::Drop]);
+
+        let s = r.stats();
+        assert_eq!(s.hedges_issued, 1);
+        assert_eq!(s.hedge_rows_won_by_duplicate, 1);
+        assert_eq!(s.hedge_rows_won_by_primary, 0);
+    }
+
+    #[test]
+    fn hedge_primary_can_still_win() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.record_dup(1, 2, "fast", "rollout", &[idx(3)], DupMode::Hedge);
+        let plans = r.filter_chunk(1, &[(idx(3), true, 4)]);
+        assert_eq!(plans, vec![RowPlan::Commit { losers: vec![2] }]);
+        assert_eq!(
+            r.filter_chunk(2, &[(idx(3), true, 4)]),
+            vec![RowPlan::Drop]
+        );
+        assert_eq!(r.stats().hedge_rows_won_by_primary, 1);
+    }
+
+    #[test]
+    fn hedge_candidate_requires_silence_and_other_worker() {
+        let r = hedge_router();
+        r.note_poll("slow", None);
+        r.on_grant(1, "slow", "rollout");
+        // Seed the interval distribution.
+        r.filter_chunk(1, &[(idx(0), false, 1)]);
+        std::thread::sleep(Duration::from_millis(5));
+        // Same worker never hedges itself.
+        assert_eq!(r.hedge_candidate("slow", "rollout"), None);
+        assert_eq!(r.hedge_candidate("fast", "rollout"), Some(1));
+        // Once duplicated, the lease is no longer a candidate.
+        r.record_dup(1, 2, "fast", "rollout", &[idx(0)], DupMode::Hedge);
+        assert_eq!(r.hedge_candidate("other", "rollout"), None);
+    }
+
+    #[test]
+    fn hedge_budget_needs_samples() {
+        let r = FleetRouter::new(FleetOptions {
+            policy: RoutingPolicy::Hedge,
+            hedge_min_samples: 4,
+            ..FleetOptions::default()
+        });
+        r.on_grant(1, "slow", "rollout");
+        r.filter_chunk(1, &[(idx(0), false, 1)]);
+        assert_eq!(
+            r.hedge_candidate("fast", "rollout"),
+            None,
+            "distribution not warm"
+        );
+        assert_eq!(r.stats().hedge_budget_ms, 0.0);
+    }
+
+    #[test]
+    fn sweep_requeues_shared_row_exactly_once() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.record_dup(1, 2, "fast", "rollout", &[idx(5)], DupMode::Hedge);
+        // Both sides of the pair die in one sweep: row 5 requeues once.
+        let out = r.on_leases_swept(&[
+            revoked(1, "rollout", "slow", &[5]),
+            revoked(2, "rollout", "fast", &[5]),
+        ]);
+        let total: usize = out.iter().map(|(_, rows)| rows.len()).sum();
+        assert_eq!(total, 1);
+    }
+
+    #[test]
+    fn sweep_skips_rows_covered_by_live_partner() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.record_dup(1, 2, "fast", "rollout", &[idx(5)], DupMode::Hedge);
+        // Only the straggler dies; the duplicate still decodes row 5.
+        let out =
+            r.on_leases_swept(&[revoked(1, "rollout", "slow", &[5])]);
+        assert!(out.is_empty(), "live duplicate covers the row: {out:?}");
+        // When the survivor later dies too, the row requeues.
+        let out =
+            r.on_leases_swept(&[revoked(2, "rollout", "fast", &[5])]);
+        assert_eq!(out, vec![("rollout".to_string(), vec![idx(5)])]);
+    }
+
+    #[test]
+    fn sweep_skips_rows_already_won() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.record_dup(1, 2, "fast", "rollout", &[idx(5)], DupMode::Hedge);
+        assert_eq!(
+            r.filter_chunk(2, &[(idx(5), true, 4)]),
+            vec![RowPlan::Commit { losers: vec![1] }]
+        );
+        // Straggler expires afterwards: its copy of row 5 must NOT
+        // requeue — the row already trained via the duplicate.
+        let out =
+            r.on_leases_swept(&[revoked(1, "rollout", "slow", &[5])]);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn fallback_requeues_unshared_rows_immediately() {
+        let r = FleetRouter::new(FleetOptions {
+            policy: RoutingPolicy::Fallback,
+            ..FleetOptions::default()
+        });
+        r.note_poll("w0", None);
+        r.on_grant(1, "w0", "rollout");
+        let rows =
+            r.on_lease_failed(&revoked(1, "rollout", "w0", &[1, 2]));
+        assert_eq!(rows, vec![idx(1), idx(2)]);
+        let s = r.stats();
+        assert_eq!(s.fallback_requeues, 2);
+        assert_eq!(s.engines[0].errors, 1);
+    }
+
+    #[test]
+    fn mirror_compare_resolves_in_either_order() {
+        let r = FleetRouter::new(FleetOptions {
+            policy: RoutingPolicy::Mirror,
+            ..FleetOptions::default()
+        });
+        r.on_grant(1, "a", "rollout");
+        r.record_dup(
+            1,
+            2,
+            "b",
+            "rollout",
+            &[idx(0), idx(1)],
+            DupMode::Mirror,
+        );
+
+        // Row 0: winner commits first, loser compares after — a match.
+        assert_eq!(
+            r.filter_chunk(1, &[(idx(0), true, 3)]),
+            vec![RowPlan::Commit { losers: vec![] }]
+        );
+        r.note_committed(idx(0), 1, &[10, 11, 12]);
+        assert_eq!(
+            r.filter_chunk(2, &[(idx(0), true, 3)]),
+            vec![RowPlan::Compare]
+        );
+        r.resolve_mirror(idx(0), vec![10, 11, 12]);
+
+        // Row 1: the loser's comparison arrives while the winner's
+        // commit is still in flight — parked, then resolved as a
+        // divergence.
+        assert_eq!(
+            r.filter_chunk(2, &[(idx(1), true, 3)]),
+            vec![RowPlan::Commit { losers: vec![] }]
+        );
+        assert_eq!(
+            r.filter_chunk(1, &[(idx(1), true, 3)]),
+            vec![RowPlan::Compare]
+        );
+        r.resolve_mirror(idx(1), vec![7, 7, 7]);
+        r.note_committed(idx(1), 2, &[8, 8, 8]);
+
+        let s = r.stats();
+        assert_eq!(s.mirrors_issued, 1);
+        assert_eq!(s.mirror_matches, 1);
+        assert_eq!(s.mirror_divergences, 1);
+    }
+
+    #[test]
+    fn mirror_candidate_respects_fanout() {
+        let r = FleetRouter::new(FleetOptions {
+            policy: RoutingPolicy::Mirror,
+            mirror_fanout: 2,
+            ..FleetOptions::default()
+        });
+        r.on_grant(1, "a", "rollout");
+        assert_eq!(
+            r.mirror_candidate("a", "rollout"),
+            None,
+            "same worker"
+        );
+        assert_eq!(r.mirror_candidate("b", "rollout"), Some(1));
+        r.record_dup(1, 2, "b", "rollout", &[idx(0)], DupMode::Mirror);
+        assert_eq!(
+            r.mirror_candidate("c", "rollout"),
+            None,
+            "fanout cap"
+        );
+    }
+
+    #[test]
+    fn lb_defers_only_loaded_workers_with_idler_peers() {
+        let r = FleetRouter::default();
+        r.note_poll("busy", None);
+        r.note_poll("idle", None);
+        let mut load = HashMap::new();
+        load.insert("busy".to_string(), (2usize, 16usize));
+        load.insert("idle".to_string(), (0usize, 0usize));
+        assert!(r.should_defer("busy", &load));
+        assert!(
+            !r.should_defer("idle", &load),
+            "least-loaded never defers"
+        );
+        let s = r.stats();
+        assert_eq!(s.lb_deferrals, 1);
+    }
+
+    #[test]
+    fn forget_lease_clears_row_entries() {
+        let r = hedge_router();
+        r.on_grant(1, "a", "rollout");
+        r.record_dup(1, 2, "b", "rollout", &[idx(9)], DupMode::Hedge);
+        r.filter_chunk(2, &[(idx(9), true, 1)]);
+        r.forget_lease(1);
+        r.forget_lease(2);
+        // Entry gone: a fresh lease on the same index commits normally.
+        r.on_grant(3, "c", "rollout");
+        assert_eq!(
+            r.filter_chunk(3, &[(idx(9), true, 1)]),
+            vec![RowPlan::Commit { losers: vec![] }]
+        );
+    }
+}

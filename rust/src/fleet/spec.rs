@@ -1,0 +1,247 @@
+//! Capability model: what an engine *is* — kind, geometry, relative
+//! speed class, free-form tags — independent of where it runs. The
+//! routing layer filters candidates on these specs, so a mixed fleet
+//! (fast/cheap mock next to slow/accurate XLA) is data, not plumbing.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::PolicyEngine;
+
+/// Relative speed class of an engine — a coarse routing hint, derived
+/// from the well-known tags (`fast-cheap`, `slow-accurate`) unless set
+/// explicitly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpeedClass {
+    Fast,
+    #[default]
+    Standard,
+    Slow,
+}
+
+impl SpeedClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpeedClass::Fast => "fast",
+            SpeedClass::Standard => "standard",
+            SpeedClass::Slow => "slow",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SpeedClass> {
+        Ok(match s {
+            "fast" => SpeedClass::Fast,
+            "standard" => SpeedClass::Standard,
+            "slow" => SpeedClass::Slow,
+            other => bail!("unknown speed class {other:?} (fast|standard|slow)"),
+        })
+    }
+
+    /// Infer the class from well-known tags (`fast-cheap` ⇒ fast,
+    /// `slow-accurate` ⇒ slow); anything else is standard.
+    pub fn from_tags(tags: &[String]) -> SpeedClass {
+        if tags.iter().any(|t| t == "fast-cheap" || t == "fast") {
+            SpeedClass::Fast
+        } else if tags.iter().any(|t| t == "slow-accurate" || t == "slow") {
+            SpeedClass::Slow
+        } else {
+            SpeedClass::Standard
+        }
+    }
+}
+
+/// Capability report for one engine: the registry's unit of modeling.
+///
+/// Specs enter the fleet registry two ways: statically from the
+/// `[fleet]` config table, or dynamically at worker attach — the worker
+/// builds one from its engine ([`EngineSpec::of_engine`]) and rides it
+/// on `lease_prompts`; the coordinator re-exports it through
+/// `worker_stats` so `asyncflow info --connect` can render the fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineSpec {
+    /// Backend kind (`"mock"`, `"xla"`, …) — [`PolicyEngine::kind`].
+    pub kind: String,
+    /// Fixed micro-batch width baked into the backend.
+    pub batch: usize,
+    /// Prompt length the backend was compiled for.
+    pub prompt_len: usize,
+    /// Max trajectory length (prompt + response).
+    pub max_len: usize,
+    /// Coarse routing hint (derived from tags unless set explicitly).
+    pub speed: SpeedClass,
+    /// Free-form capability tags (`fast-cheap`, `slow-accurate`,
+    /// `mock`, `xla`, …).
+    pub tags: Vec<String>,
+    /// Observed decode throughput in tokens/sec (0 = not yet measured).
+    /// Workers may report their own; the coordinator refines it from
+    /// committed chunks either way.
+    pub observed_tps: f64,
+}
+
+impl EngineSpec {
+    pub fn new(
+        kind: impl Into<String>,
+        batch: usize,
+        prompt_len: usize,
+        max_len: usize,
+    ) -> Self {
+        EngineSpec {
+            kind: kind.into(),
+            batch,
+            prompt_len,
+            max_len,
+            speed: SpeedClass::Standard,
+            tags: Vec::new(),
+            observed_tps: 0.0,
+        }
+    }
+
+    /// Capability report of a live engine, with operator-assigned tags.
+    pub fn of_engine(engine: &dyn PolicyEngine, tags: Vec<String>) -> Self {
+        EngineSpec::new(
+            engine.kind(),
+            engine.batch_size(),
+            engine.prompt_len(),
+            engine.max_len(),
+        )
+        .with_tags(tags)
+    }
+
+    /// Attach tags, re-deriving the speed class from them.
+    pub fn with_tags(mut self, tags: Vec<String>) -> Self {
+        self.speed = SpeedClass::from_tags(&tags);
+        self.tags = tags;
+        self
+    }
+
+    /// Whether this engine can take over work leased against `other`:
+    /// its compiled geometry must cover the other's prompts and decode
+    /// budget. The basis of hedge/mirror candidate filtering.
+    pub fn can_stand_in_for(&self, other: &EngineSpec) -> bool {
+        self.batch >= 1
+            && self.prompt_len >= other.prompt_len
+            && self.max_len >= other.max_len
+    }
+
+    /// Parse a comma-separated tag list (the `--engine-tags` form);
+    /// empty segments are dropped.
+    pub fn parse_tags(s: &str) -> Vec<String> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+}
+
+/// Routing policy over lease dispatch — how the coordinator uses the
+/// fleet registry when granting work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingPolicy {
+    /// Grant to the least-outstanding capable candidate: a loaded
+    /// worker's poll is deferred while a strictly less-loaded peer is
+    /// actively polling.
+    #[default]
+    LoadBalance,
+    /// Like load-balance, plus workers route engine errors through
+    /// `fail_lease` so a failed lease requeues to the next candidate
+    /// immediately instead of waiting out its TTL.
+    Fallback,
+    /// Duplicate a straggler lease's remaining rows to a second capable
+    /// engine once its decode exceeds the fleet's latency budget;
+    /// whichever engine finishes a row first commits it, the loser's
+    /// copy is revoked.
+    Hedge,
+    /// Duplicate every lease to a second engine and compare finished
+    /// outputs against the committed cells — the engine-correctness
+    /// soak-test mode.
+    Mirror,
+}
+
+impl RoutingPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutingPolicy::LoadBalance => "lb",
+            RoutingPolicy::Fallback => "fallback",
+            RoutingPolicy::Hedge => "hedge",
+            RoutingPolicy::Mirror => "mirror",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RoutingPolicy> {
+        Ok(match s {
+            "lb" | "load-balance" | "load_balance" => {
+                RoutingPolicy::LoadBalance
+            }
+            "fallback" => RoutingPolicy::Fallback,
+            "hedge" => RoutingPolicy::Hedge,
+            "mirror" => RoutingPolicy::Mirror,
+            other => {
+                bail!("unknown routing policy {other:?} (lb|fallback|hedge|mirror)")
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockEngine;
+
+    #[test]
+    fn speed_class_derives_from_tags() {
+        let fast = EngineSpec::new("mock", 8, 16, 48)
+            .with_tags(vec!["fast-cheap".into(), "mock".into()]);
+        assert_eq!(fast.speed, SpeedClass::Fast);
+        let slow = EngineSpec::new("xla", 8, 16, 48)
+            .with_tags(vec!["slow-accurate".into()]);
+        assert_eq!(slow.speed, SpeedClass::Slow);
+        let std = EngineSpec::new("xla", 8, 16, 48)
+            .with_tags(vec!["gpu".into()]);
+        assert_eq!(std.speed, SpeedClass::Standard);
+    }
+
+    #[test]
+    fn of_engine_reports_geometry_and_kind() {
+        let e = MockEngine::new(4, 8, 24);
+        let spec = EngineSpec::of_engine(&e, vec!["mock".into()]);
+        assert_eq!(spec.kind, "mock");
+        assert_eq!(spec.batch, 4);
+        assert_eq!(spec.prompt_len, 8);
+        assert_eq!(spec.max_len, 24);
+    }
+
+    #[test]
+    fn stand_in_requires_covering_geometry() {
+        let small = EngineSpec::new("mock", 8, 8, 24);
+        let big = EngineSpec::new("mock", 8, 16, 48);
+        assert!(big.can_stand_in_for(&small));
+        assert!(!small.can_stand_in_for(&big), "shorter geometry");
+        assert!(big.can_stand_in_for(&big));
+    }
+
+    #[test]
+    fn tags_parse_and_policy_parse() {
+        assert_eq!(
+            EngineSpec::parse_tags("fast-cheap, mock,,x"),
+            vec!["fast-cheap", "mock", "x"]
+        );
+        assert!(EngineSpec::parse_tags("").is_empty());
+        assert_eq!(
+            RoutingPolicy::parse("lb").unwrap(),
+            RoutingPolicy::LoadBalance
+        );
+        assert_eq!(
+            RoutingPolicy::parse("hedge").unwrap(),
+            RoutingPolicy::Hedge
+        );
+        assert!(RoutingPolicy::parse("coinflip").is_err());
+        for p in [
+            RoutingPolicy::LoadBalance,
+            RoutingPolicy::Fallback,
+            RoutingPolicy::Hedge,
+            RoutingPolicy::Mirror,
+        ] {
+            assert_eq!(RoutingPolicy::parse(p.name()).unwrap(), p);
+        }
+    }
+}

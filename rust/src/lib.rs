@@ -17,6 +17,9 @@
 //! * [`coordinator`] — §4 async workflow, delayed parameter update, GRPO.
 //! * [`rollout`] — elastic streaming rollout: lease-based dispatch,
 //!   chunked generation, exactly-once requeue of crashed workers' rows.
+//! * [`fleet`] — heterogeneous engine fleet: capability-modeled backend
+//!   registry (`EngineSpec`) + routing policies over lease dispatch
+//!   (load-balance / fallback / hedge / mirror).
 //! * [`runtime`] — PJRT execution of the AOT artifacts; Engine adapters.
 //! * [`pipeline`] — §5 stage-graph pipeline API: declarative RL
 //!   dataflows (`Stage` + `PipelineSpec`) compiled by `PipelineRunner`
@@ -37,6 +40,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exec;
+pub mod fleet;
 pub mod launcher;
 pub mod metrics;
 pub mod pipeline;

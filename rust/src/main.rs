@@ -39,6 +39,7 @@ use anyhow::{bail, Context, Result};
 use asyncflow::config::{ConfigDoc, RlConfig};
 use asyncflow::coordinator::Trainer;
 use asyncflow::exec::Shutdown;
+use asyncflow::fleet::{EngineSpec, FleetOptions, RoutingPolicy};
 use asyncflow::launcher::{build_engines, build_policy_engine};
 use asyncflow::pipeline::{builtin_stage, run_remote_stage};
 use asyncflow::planner::{plan, CostModel, DeviceSpec, LlmSpec, PlanRequest};
@@ -131,12 +132,18 @@ COMMANDS:
   train     --iterations N --global-batch N --staleness {0|1} --mock
             --rollout-workers N --policy {fcfs|token_balanced|shortest_first}
             --pipeline {grpo|best_of_n} --survivors K --config file.toml
+            --routing {lb|fallback|hedge|mirror}
   serve     --port N --storage-units N
             --policy {fcfs|token_balanced|shortest_first} --uninit
-            (JSON-lines service; clients attach with ServiceClient)
+            --routing {lb|fallback|hedge|mirror}
+            (JSON-lines service; clients attach with ServiceClient.
+             --routing picks the engine-fleet policy over lease grants)
   rollout-worker --connect HOST:PORT [--name ID] [--mock] [--task T]
             [--chunk-tokens N] [--ttl-ms N] [--lease-rows N] [--seed N]
-            (elastic worker: lease prompts, stream chunked generations)
+            [--engine-tags a,b,c]
+            (elastic worker: lease prompts, stream chunked generations;
+             --engine-tags labels this engine in the fleet registry,
+             e.g. fast-cheap or slow-accurate)
   stage     --connect HOST:PORT --stage {reward|advantage|filter}
             [--task T] [--batch N] [--group-size G] [--survivors K]
             [--name ID] [--lease-ttl-ms N]
@@ -154,8 +161,8 @@ COMMANDS:
             --iterations N
   plan      --devices N --model {7b|32b}
   gantt     --devices N --model {7b|32b} --mode ... --width N
-  info      [--connect HOST:PORT]  (live queue/unit/worker stats plus
-            staleness / time-to-first-chunk histograms and lineage)
+  info      [--connect HOST:PORT]  (live queue/unit/worker/fleet stats
+            plus staleness / time-to-first-chunk histograms and lineage)
   trace     --connect HOST:PORT [--out FILE]
             (drain merged telemetry as Chrome trace-event JSON; load
              the output in Perfetto — one lane per process/stage)
@@ -207,6 +214,9 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
         cfg.pipeline = p.clone();
     }
     cfg.survivors = get_usize(flags, "survivors", cfg.survivors)?;
+    if let Some(r) = flags.get("routing") {
+        cfg.fleet.routing = r.clone();
+    }
     let mock = flags.contains_key("mock");
     let (engines, _b) = build_engines(&cfg, mock)?;
     log_info!(
@@ -252,6 +262,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             ParamSet::new(0, vec![]),
         )?)
     };
+    if let Some(r) = flags.get("routing") {
+        session.set_fleet_options(FleetOptions {
+            policy: RoutingPolicy::parse(r)?,
+            ..FleetOptions::default()
+        });
+        log_info!("serve", "fleet routing policy: {r}");
+    }
     let server =
         TcpJsonlServer::bind(session, ("0.0.0.0", port))?;
     log_info!(
@@ -288,6 +305,9 @@ fn cmd_rollout_worker(flags: &HashMap<String, String>) -> Result<()> {
     opts.ttl_ms = get_usize(flags, "ttl-ms", opts.ttl_ms as usize)? as u64;
     opts.lease_rows =
         get_usize(flags, "lease-rows", engine.batch_size())?;
+    if let Some(tags) = flags.get("engine-tags") {
+        opts.engine_tags = EngineSpec::parse_tags(tags);
+    }
     let seed =
         get_usize(flags, "seed", std::process::id() as usize)? as u64;
     let mut sampler = Sampler::new(1.0, 32, seed);
@@ -578,6 +598,56 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
                 w.generated_tokens,
                 w.requeued_rows
             );
+        }
+        // Fleet section: the engine registry plus routing counters.
+        // Older coordinators elide it.
+        if let Some(f) = &stats.fleet {
+            println!(
+                "  fleet routing={} chunk_p50={:.1}ms chunk_p95={:.1}ms \
+                 hedge_budget={:.1}ms",
+                f.routing,
+                f.chunk_time_p50_ms,
+                f.chunk_time_p95_ms,
+                f.hedge_budget_ms
+            );
+            for e in &f.engines {
+                println!(
+                    "    engine {:<12} kind={:<8} speed={:<8} \
+                     geometry={}x{}->{} tags=[{}] src={} chunks={} \
+                     tokens={} errors={} tps={:.0}",
+                    e.worker,
+                    e.spec.kind,
+                    e.spec.speed.name(),
+                    e.spec.batch,
+                    e.spec.prompt_len,
+                    e.spec.max_len,
+                    e.spec.tags.join(","),
+                    e.source,
+                    e.chunks,
+                    e.tokens,
+                    e.errors,
+                    e.observed_tps
+                );
+            }
+            if f.hedges_issued + f.mirrors_issued + f.lb_deferrals
+                + f.fallback_requeues
+                > 0
+            {
+                println!(
+                    "    routing hedges={} (won_by_dup={} won_by_primary={} \
+                     dup_tokens={}) mirrors={} (match={} diverge={}) \
+                     lb_deferrals={} fallback_requeues={}",
+                    f.hedges_issued,
+                    f.hedge_rows_won_by_duplicate,
+                    f.hedge_rows_won_by_primary,
+                    f.duplicated_tokens,
+                    f.mirrors_issued,
+                    f.mirror_matches,
+                    f.mirror_divergences,
+                    f.lb_deferrals,
+                    f.fallback_requeues
+                );
+            }
         }
         // Telemetry aggregates: staleness / latency histograms and the
         // per-sample lineage table. Best-effort — an older coordinator

@@ -23,7 +23,8 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::transfer_queue::{GlobalIndex, LeaseRegistry};
+use crate::fleet::EngineSpec;
+use crate::transfer_queue::{GlobalIndex, LeaseRegistry, RevokedLease};
 
 use super::manager::ChunkRow;
 
@@ -42,8 +43,13 @@ pub struct WorkerStat {
     pub completed_rows: u64,
     /// Response tokens streamed (finished or not).
     pub generated_tokens: u64,
-    /// Rows taken from this worker's expired leases and requeued.
+    /// Rows taken from this worker's expired or failed leases and
+    /// handed back for requeue.
     pub requeued_rows: u64,
+    /// Capability report of the worker's engine, when known — attached
+    /// by the fleet registry, not tracked here. Old workers that never
+    /// report a spec simply leave this `None`.
+    pub engine: Option<EngineSpec>,
 }
 
 /// Partial-row decode state: what a worker has streamed for one leased
@@ -207,24 +213,81 @@ impl LeaseTable {
         Ok(out.pop().map(|(_, t, l)| (t, l)))
     }
 
-    /// Remove expired leases; returns `(source task, incomplete rows)`
-    /// per expired lease, for requeue onto the right controller.
-    /// Completed rows were already committed and are left alone.
-    pub fn sweep_expired(&self) -> Vec<(String, Vec<GlobalIndex>)> {
+    /// Remove expired leases; returns each revoked lease (id, owner,
+    /// source task, incomplete rows). Completed rows were already
+    /// committed and are left alone; which of the incomplete rows
+    /// actually requeue is the caller's call — under hedge/mirror
+    /// routing a row may be covered by a live duplicate.
+    pub fn sweep_expired(&self) -> Vec<RevokedLease> {
         let swept = self.registry.sweep_expired();
-        if swept.is_empty() {
-            return Vec::new();
-        }
-        let mut w = self.workers.lock().unwrap();
-        let mut requeue = Vec::new();
-        for lease in swept {
-            let info = w.entry(lease.owner).or_default();
-            info.requeued += lease.rows.len() as u64;
-            if !lease.rows.is_empty() {
-                requeue.push((lease.task, lease.rows));
+        if !swept.is_empty() {
+            let mut w = self.workers.lock().unwrap();
+            for lease in &swept {
+                let info = w.entry(lease.owner.clone()).or_default();
+                info.requeued += lease.rows.len() as u64;
             }
         }
-        requeue
+        swept
+    }
+
+    /// Force a live lease out of the table (the `fail_lease` verb — the
+    /// worker's engine errored and the rows should requeue now rather
+    /// than wait out the TTL). `None` when the id is unknown: already
+    /// retired, swept, or never granted.
+    pub fn revoke(&self, id: LeaseId) -> Option<RevokedLease> {
+        let revoked = self.registry.revoke(id)?;
+        let mut w = self.workers.lock().unwrap();
+        w.entry(revoked.owner.clone()).or_default().requeued +=
+            revoked.rows.len() as u64;
+        drop(w);
+        Some(revoked)
+    }
+
+    /// Whether `id` is still live (not retired, revoked, or swept).
+    pub fn is_live(&self, id: LeaseId) -> bool {
+        self.registry.is_live(id)
+    }
+
+    /// Not-yet-finished rows of a live lease, sorted — what a hedge
+    /// duplicates to a second engine. `None` when the id is unknown.
+    pub fn undone_rows(&self, id: LeaseId) -> Option<Vec<GlobalIndex>> {
+        self.registry.undone_rows(id)
+    }
+
+    /// Discard one row of a live lease: mark it done *without* counting
+    /// it as completed and hand back whatever partial decode had
+    /// accumulated (so the caller can account discarded work). Used to
+    /// retire the losing side of a hedged/mirrored row. Absorbs unknown
+    /// lease, unknown row, and already-done row as `None` — discard
+    /// races lease death by design. Retires the lease when this was its
+    /// last undone row.
+    pub fn take_row_discard(
+        &self,
+        id: LeaseId,
+        index: GlobalIndex,
+    ) -> Option<(Vec<i32>, Vec<f32>)> {
+        self.registry
+            .with_rows(id, |_, table| {
+                let Some(row) = table.get_mut(&index) else {
+                    return Ok(None);
+                };
+                if row.done {
+                    return Ok(None);
+                }
+                row.done = true;
+                Ok(Some((
+                    std::mem::take(&mut row.state.tokens),
+                    std::mem::take(&mut row.state.logps),
+                )))
+            })
+            .ok()
+            .flatten()
+    }
+
+    /// Per-owner `(live leases, unfinished rows)` — the load-balancing
+    /// input for the fleet router.
+    pub fn owner_load(&self) -> HashMap<String, (usize, usize)> {
+        self.registry.owner_load()
     }
 
     /// Leased rows not yet finished, across all live leases.
@@ -266,6 +329,7 @@ impl LeaseTable {
                     completed_rows: info.completed,
                     generated_tokens: info.tokens,
                     requeued_rows: info.requeued,
+                    engine: None,
                 }
             })
             .collect();
@@ -375,10 +439,13 @@ mod tests {
         t.append(id, idx(3), &[1], &[-0.1], true).unwrap();
         std::thread::sleep(Duration::from_millis(60));
         let lost = t.sweep_expired();
+        assert_eq!(lost.len(), 1);
+        assert_eq!(lost[0].id, id);
+        assert_eq!(lost[0].task, "rollout");
         assert_eq!(
-            lost,
-            vec![("rollout".to_string(), vec![idx(4), idx(5)])],
-            "finished row not requeued; source task reported"
+            lost[0].rows,
+            vec![idx(4), idx(5)],
+            "finished row not requeued"
         );
         assert!(t.sweep_expired().is_empty(), "second sweep finds nothing");
         // the zombie's late chunk is rejected, never committed
@@ -402,6 +469,39 @@ mod tests {
         t.append(id, idx(0), &[1], &[-0.5], false).unwrap();
         assert!(t.sweep_expired().is_empty());
         assert_eq!(t.in_flight(), 1);
+    }
+
+    #[test]
+    fn take_row_discard_skips_completed_and_retires_lease() {
+        let t = LeaseTable::new();
+        let id =
+            t.grant("w", "rollout", &[idx(0), idx(1)], Duration::from_secs(5));
+        t.append(id, idx(0), &[1, 2], &[-0.1, -0.2], false).unwrap();
+        // Discard hands back the partial decode without counting it.
+        let (tokens, logps) = t.take_row_discard(id, idx(0)).unwrap();
+        assert_eq!(tokens, vec![1, 2]);
+        assert_eq!(logps.len(), 2);
+        assert!(t.take_row_discard(id, idx(0)).is_none(), "already done");
+        assert!(t.take_row_discard(id, idx(9)).is_none(), "not in lease");
+        assert_eq!(t.undone_rows(id), Some(vec![idx(1)]));
+        // Finishing the last real row then retires the lease; nothing
+        // counts as completed for the discarded one.
+        t.append(id, idx(1), &[7], &[-0.7], true).unwrap().unwrap();
+        assert!(!t.is_live(id));
+        assert!(t.take_row_discard(id, idx(1)).is_none(), "dead lease");
+        assert_eq!(t.stats()[0].completed_rows, 1);
+    }
+
+    #[test]
+    fn revoke_counts_requeued_rows() {
+        let t = LeaseTable::new();
+        let id =
+            t.grant("w", "rollout", &[idx(0), idx(1)], Duration::from_secs(5));
+        let revoked = t.revoke(id).unwrap();
+        assert_eq!(revoked.rows, vec![idx(0), idx(1)]);
+        assert!(t.revoke(id).is_none(), "second revoke is a no-op");
+        assert!(!t.is_live(id));
+        assert_eq!(t.stats()[0].requeued_rows, 2);
     }
 
     #[test]

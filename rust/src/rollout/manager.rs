@@ -22,12 +22,16 @@
 //! of its group is still decoding — the streaming-overlap claim made
 //! concrete.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::fleet::{
+    DupMode, EngineSpec, FleetOptions, FleetRouter, FleetStats,
+    RoutingPolicy, RowPlan,
+};
 use crate::transfer_queue::{
     Batch, Column, GlobalIndex, RequestOutcome, TransferQueue, Value,
 };
@@ -64,6 +68,10 @@ pub struct LeaseSpec {
     pub timeout_ms: u64,
     /// Columns to fetch for each leased row.
     pub columns: Vec<Column>,
+    /// Capability report of the worker's engine, registered with the
+    /// fleet on every poll. Optional: old workers send none and still
+    /// participate in routing (with unknown capabilities).
+    pub engine: Option<EngineSpec>,
 }
 
 impl LeaseSpec {
@@ -77,6 +85,7 @@ impl LeaseSpec {
             ttl_ms: 1000,
             timeout_ms: 50,
             columns: vec![Column::Prompts],
+            engine: None,
         }
     }
 }
@@ -114,6 +123,10 @@ const LEASE_TRACE_CAP: usize = 4096;
 pub struct RolloutManager {
     tq: Arc<TransferQueue>,
     table: LeaseTable,
+    /// Routing policy layer over lease dispatch (load-balance /
+    /// fallback / hedge / mirror). Advisory bookkeeping only — the
+    /// lease table stays the single source of truth for exactly-once.
+    router: FleetRouter,
     /// Trace id per live-ish lease (bounded; see [`LEASE_TRACE_CAP`]).
     traces: Mutex<BTreeMap<LeaseId, u64>>,
 }
@@ -123,15 +136,46 @@ impl RolloutManager {
         RolloutManager {
             tq,
             table: LeaseTable::new(),
+            router: FleetRouter::default(),
             traces: Mutex::new(BTreeMap::new()),
         }
     }
 
+    /// Replace the fleet routing options (policy + hedge/mirror
+    /// tunables) — the `[fleet]` config table applied at serve time.
+    pub fn configure_fleet(&self, options: FleetOptions) {
+        crate::log_info!(
+            "rollout",
+            "fleet routing policy: {}",
+            options.policy.name()
+        );
+        self.router.configure(options);
+    }
+
+    /// Register a statically-configured engine spec (the `[fleet]`
+    /// config table's engine entries; workers that attach later refresh
+    /// their own via `lease_prompts`).
+    pub fn register_engine(&self, worker: &str, spec: EngineSpec) {
+        self.router.register_engine(worker, spec, "config");
+    }
+
+    /// Routing-layer snapshot (`stats.fleet`).
+    pub fn fleet_stats(&self) -> FleetStats {
+        self.sweep();
+        self.router.stats()
+    }
+
     /// Requeue rows of expired leases back onto their source controller.
     /// Called at the top of every verb, so detection needs no timer
-    /// thread — liveness comes from peers polling for work.
+    /// thread — liveness comes from peers polling for work. The router
+    /// decides which swept rows actually requeue: a row whose hedge /
+    /// mirror duplicate is still live (or already committed) must not.
     fn sweep(&self) {
-        for (task, rows) in self.table.sweep_expired() {
+        let swept = self.table.sweep_expired();
+        if swept.is_empty() {
+            return;
+        }
+        for (task, rows) in self.router.on_leases_swept(&swept) {
             if let Some(ctrl) = self.tq.try_controller(&task) {
                 ctrl.unconsume(&rows);
             }
@@ -171,6 +215,19 @@ impl RolloutManager {
             rows: vec![],
             columns: spec.columns.clone(),
         };
+        // Fleet routing, poll side: register the poll (and the engine
+        // spec riding it), then let the router defer a loaded worker in
+        // favor of an actively-polling idler (load-balance / fallback).
+        self.router.note_poll(&spec.worker, spec.engine.as_ref());
+        if self.router.should_defer(&spec.worker, &self.table.owner_load())
+        {
+            return Ok(LeaseReply {
+                lease: None,
+                batch: empty(),
+                closed: false,
+                trace: 0,
+            });
+        }
         let group = Self::group_of(&spec.worker);
         // Prefer FULL leases — fixed-geometry engines pad partial
         // batches to their whole width, so sub-batch leases waste
@@ -212,21 +269,12 @@ impl RolloutManager {
                     &meta.indices,
                     Duration::from_millis(spec.ttl_ms),
                 );
+                self.router.on_grant(id, &spec.worker, &spec.task);
                 // Every grant mints the trace the whole chain
                 // (lease→chunk→commit→train) will share; disabled
                 // telemetry mints nothing, keeping the wire byte-
                 // identical to the pre-telemetry encoding.
-                let trace = if crate::telemetry::enabled() {
-                    let t = crate::telemetry::mint_trace();
-                    let mut g = self.traces.lock().unwrap();
-                    g.insert(id, t);
-                    while g.len() > LEASE_TRACE_CAP {
-                        g.pop_first();
-                    }
-                    t
-                } else {
-                    0
-                };
+                let trace = self.mint_trace_for(id);
                 Ok(LeaseReply {
                     lease: Some(id),
                     batch,
@@ -234,12 +282,21 @@ impl RolloutManager {
                     trace,
                 })
             }
-            RequestOutcome::NotReady => Ok(LeaseReply {
-                lease: None,
-                batch: empty(),
-                closed: false,
-                trace: 0,
-            }),
+            RequestOutcome::NotReady => {
+                // No queued rows for an idle poller: under hedge /
+                // mirror routing this is the moment to duplicate a
+                // straggler's remaining rows instead of going home
+                // empty-handed.
+                if let Some(reply) = self.try_duplicate(spec) {
+                    return Ok(reply);
+                }
+                Ok(LeaseReply {
+                    lease: None,
+                    batch: empty(),
+                    closed: false,
+                    trace: 0,
+                })
+            }
             RequestOutcome::Closed => Ok(LeaseReply {
                 lease: None,
                 batch: empty(),
@@ -257,6 +314,86 @@ impl RolloutManager {
             .get(&lease)
             .copied()
             .unwrap_or(0)
+    }
+
+    fn mint_trace_for(&self, id: LeaseId) -> u64 {
+        if !crate::telemetry::enabled() {
+            return 0;
+        }
+        let t = crate::telemetry::mint_trace();
+        let mut g = self.traces.lock().unwrap();
+        g.insert(id, t);
+        while g.len() > LEASE_TRACE_CAP {
+            g.pop_first();
+        }
+        t
+    }
+
+    /// Hedge/mirror duplication: grant a straggler's remaining rows to
+    /// an idle poller as a *second* lease racing the first. Returns
+    /// `None` when the policy, the candidates, or the rows say no —
+    /// the caller then sends the ordinary empty reply.
+    fn try_duplicate(&self, spec: &LeaseSpec) -> Option<LeaseReply> {
+        let (primary, mode) = match self.router.policy() {
+            RoutingPolicy::Hedge => (
+                self.router.hedge_candidate(&spec.worker, &spec.task)?,
+                DupMode::Hedge,
+            ),
+            RoutingPolicy::Mirror => (
+                self.router.mirror_candidate(&spec.worker, &spec.task)?,
+                DupMode::Mirror,
+            ),
+            _ => return None,
+        };
+        let t0 = crate::telemetry::now_us();
+        let rows: Vec<GlobalIndex> = self
+            .table
+            .undone_rows(primary)?
+            .into_iter()
+            .take(spec.count)
+            .collect();
+        if rows.is_empty() {
+            return None;
+        }
+        // The straggler's prompt cells can be gone by now (won, trained
+        // and reclaimed since the candidate pick) — then there is
+        // simply nothing left worth duplicating.
+        let batch = self.tq.try_fetch(&rows, &spec.columns).ok()?;
+        let dup = self.table.grant(
+            &spec.worker,
+            &spec.task,
+            &rows,
+            Duration::from_millis(spec.ttl_ms),
+        );
+        self.router
+            .record_dup(primary, dup, &spec.worker, &spec.task, &rows, mode);
+        let trace = self.mint_trace_for(dup);
+        crate::telemetry::record_span(
+            match mode {
+                DupMode::Hedge => "hedge",
+                DupMode::Mirror => "mirror",
+            },
+            "fleet",
+            trace,
+            t0,
+            crate::telemetry::now_us(),
+        );
+        crate::log_info!(
+            "rollout",
+            "{} lease {primary} -> duplicate {dup} on {} ({} rows)",
+            match mode {
+                DupMode::Hedge => "hedging",
+                DupMode::Mirror => "mirroring",
+            },
+            spec.worker,
+            rows.len()
+        );
+        Some(LeaseReply {
+            lease: Some(dup),
+            batch,
+            closed: false,
+            trace,
+        })
     }
 
     /// `put_chunk`: stream partial generations. Rows flagged `finished`
@@ -277,12 +414,43 @@ impl RolloutManager {
         // unknown" error, not be misdiagnosed by the cell pre-flight
         // below. Doubles as the heartbeat.
         self.table.renew(lease, None)?;
-        // Pre-flight: a finishing row commits three cells; if a foreign
-        // writer already squatted any of them, fail BEFORE the lease
-        // marks rows done — nothing is stranded, and the rows remain
-        // requeueable when the lease eventually expires.
+        // Shape checks BEFORE the router sees the chunk: filter_chunk
+        // claims duplicated-row winners as a side effect, and a
+        // malformed batch must bounce without routing state changing.
+        let mut seen = HashSet::new();
+        for r in rows {
+            if r.tokens.len() != r.logps.len() {
+                bail!(
+                    "chunk for {}: {} tokens but {} logps",
+                    r.index,
+                    r.tokens.len(),
+                    r.logps.len()
+                );
+            }
+            if !seen.insert(r.index) {
+                bail!("row {} appears twice in one chunk batch", r.index);
+            }
+        }
+        // Routing decision, atomic per chunk: which rows this lease
+        // commits, which divert (this lease lost the row to a hedge /
+        // mirror duplicate), and which losers to revoke on a win.
+        let shape: Vec<(GlobalIndex, bool, usize)> = rows
+            .iter()
+            .map(|r| (r.index, r.finished, r.tokens.len()))
+            .collect();
+        let plans = self.router.filter_chunk(lease, &shape);
+        let commit: Vec<ChunkRow> = rows
+            .iter()
+            .zip(&plans)
+            .filter(|(_, p)| matches!(p, RowPlan::Commit { .. }))
+            .map(|(r, _)| r.clone())
+            .collect();
+        // Pre-flight commit rows: a finishing row commits three cells;
+        // if a foreign writer already squatted any of them, fail BEFORE
+        // the lease marks rows done — nothing is stranded, and the rows
+        // remain requeueable when the lease eventually expires.
         let dp = self.tq.data_plane();
-        for r in rows.iter().filter(|r| r.finished) {
+        for r in commit.iter().filter(|r| r.finished) {
             for col in
                 [Column::Responses, Column::OldLogp, version_column()]
             {
@@ -295,11 +463,86 @@ impl RolloutManager {
                 }
             }
         }
-        let committed = self.table.append_rows(lease, rows)?;
+        let committed = self.table.append_rows(lease, &commit)?;
         for (index, tokens, logps) in committed {
-            self.tq.put(index, Column::Responses, Value::I32s(tokens))?;
+            self.tq.put(
+                index,
+                Column::Responses,
+                Value::I32s(tokens.clone()),
+            )?;
             self.tq.put(index, Column::OldLogp, Value::F32s(logps))?;
             self.tq.put(index, version_column(), Value::U64(version))?;
+            self.router.note_committed(index, lease, &tokens);
+        }
+        // Resolve the duplicated rows this chunk decided: revoke the
+        // losers' copies of rows this lease just won, and fold this
+        // lease's own diverted rows (it lost them to the other engine)
+        // back into the router's accounting. A lease whose last undone
+        // row is discarded retires; its owner's next verb gets the
+        // recoverable "lease unknown" error and re-leases.
+        for (r, plan) in rows.iter().zip(&plans) {
+            match plan {
+                RowPlan::Commit { losers } => {
+                    for l in losers {
+                        if let Some((t, _)) =
+                            self.table.take_row_discard(*l, r.index)
+                        {
+                            self.router.note_dropped(t.len());
+                        }
+                        if !self.table.is_live(*l) {
+                            self.router.forget_lease(*l);
+                        }
+                    }
+                }
+                RowPlan::Drop => {
+                    if let Some((t, _)) =
+                        self.table.take_row_discard(lease, r.index)
+                    {
+                        self.router.note_dropped(t.len());
+                    }
+                    self.router.note_dropped(r.tokens.len());
+                }
+                RowPlan::Compare => {
+                    let mut full = self
+                        .table
+                        .take_row_discard(lease, r.index)
+                        .map(|(t, _)| t)
+                        .unwrap_or_default();
+                    full.extend_from_slice(&r.tokens);
+                    self.router.note_dropped(full.len());
+                    self.router.resolve_mirror(r.index, full);
+                }
+            }
+        }
+        if !self.table.is_live(lease) {
+            self.router.forget_lease(lease);
+        }
+        Ok(())
+    }
+
+    /// `fail_lease`: the worker's engine errored mid-generation —
+    /// revoke the lease and requeue its rows *now* instead of waiting
+    /// out the TTL (the fallback routing path; accepted under every
+    /// policy). Idempotent: an already-dead lease is a no-op, because
+    /// failure reports race the TTL sweep by design.
+    pub fn fail_lease(&self, lease: LeaseId, reason: &str) -> Result<()> {
+        self.sweep();
+        let Some(revoked) = self.table.revoke(lease) else {
+            return Ok(());
+        };
+        crate::log_warn!(
+            "rollout",
+            "lease {lease} failed on {} ({reason}); {} rows back to \
+             {}",
+            revoked.owner,
+            revoked.rows.len(),
+            revoked.task
+        );
+        let rows = self.router.on_lease_failed(&revoked);
+        if !rows.is_empty() {
+            if let Some(ctrl) = self.tq.try_controller(&revoked.task) {
+                ctrl.unconsume(&rows);
+            }
         }
         Ok(())
     }
@@ -315,10 +558,25 @@ impl RolloutManager {
         self.table.renew(lease, ttl)
     }
 
-    /// `worker_stats`: per-worker load/progress snapshot.
+    /// `worker_stats`: per-worker load/progress snapshot, with each
+    /// worker's engine spec (when the fleet registry knows one)
+    /// attached.
     pub fn worker_stats(&self) -> Vec<WorkerStat> {
         self.sweep();
-        self.table.stats()
+        let mut stats = self.table.stats();
+        let fleet = self.router.stats();
+        for s in &mut stats {
+            if let Some(e) =
+                fleet.engines.iter().find(|e| e.worker == s.worker)
+            {
+                if e.spec_reported {
+                    let mut spec = e.spec.clone();
+                    spec.observed_tps = e.observed_tps;
+                    s.engine = Some(spec);
+                }
+            }
+        }
+        stats
     }
 
     /// Rows currently leased and unfinished (drain barrier).
@@ -658,5 +916,166 @@ mod tests {
         assert!(res.is_err(), "pre-flight catches the squatted cell");
         // The row was NOT marked done, so it stays requeueable.
         assert_eq!(m.in_flight(), 1);
+    }
+
+    fn row(index: GlobalIndex, tokens: Vec<i32>, finished: bool) -> ChunkRow {
+        let logps = tokens.iter().map(|&t| -(t as f32) / 10.0).collect();
+        ChunkRow { index, tokens, logps, finished }
+    }
+
+    #[test]
+    fn fail_lease_requeues_rows_immediately() {
+        let tq = tq_with(2);
+        let m = RolloutManager::new(tq);
+        m.configure_fleet(FleetOptions {
+            policy: RoutingPolicy::Fallback,
+            ..FleetOptions::default()
+        });
+        let first = m.lease_prompts(&spec("w0", 30_000)).unwrap();
+        let lease = first.lease.unwrap();
+        assert_eq!(first.batch.len(), 2);
+        // The worker's engine died: rows requeue NOW despite the 30s
+        // TTL, and the report is idempotent.
+        m.fail_lease(lease, "mock: injected engine fault").unwrap();
+        m.fail_lease(lease, "duplicate report").unwrap();
+        let second = m.lease_prompts(&spec("w1", 30_000)).unwrap();
+        assert_eq!(second.batch.indices, first.batch.indices);
+        // The failed lease is dead; late chunks bounce.
+        let late = m.put_chunk(
+            lease,
+            0,
+            &[row(first.batch.indices[0], vec![1], true)],
+        );
+        assert!(late.is_err());
+        assert_eq!(m.fleet_stats().fallback_requeues, 2);
+    }
+
+    #[test]
+    fn hedge_duplicates_straggler_and_commits_exactly_once() {
+        let tq = tq_with(2);
+        let m = RolloutManager::new(tq.clone());
+        m.configure_fleet(FleetOptions {
+            policy: RoutingPolicy::Hedge,
+            hedge_factor: 0.0,
+            hedge_min_ms: 0,
+            hedge_min_samples: 1,
+            ..FleetOptions::default()
+        });
+        let slow = m.lease_prompts(&spec("slow", 30_000)).unwrap();
+        let slow_lease = slow.lease.unwrap();
+        let rows = slow.batch.indices.clone();
+        assert_eq!(rows.len(), 2);
+        // One partial chunk seeds the chunk-interval distribution.
+        m.put_chunk(slow_lease, 0, &[row(rows[0], vec![1], false)])
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        // An idle peer polls with nothing queued: it inherits the
+        // straggler's rows as a duplicate lease.
+        let fast = m.lease_prompts(&spec("fast", 30_000)).unwrap();
+        let fast_lease = fast.lease.unwrap();
+        assert_eq!(fast.batch.indices, rows);
+        assert_eq!(m.fleet_stats().hedges_issued, 1);
+        // The duplicate finishes both rows first and commits them.
+        for i in &rows {
+            m.put_chunk(fast_lease, 1, &[row(*i, vec![7, 8], true)])
+                .unwrap();
+        }
+        assert_eq!(tq.controller("reward").ready_depth(), 2);
+        assert_eq!(
+            tq.data_plane().get(rows[0], &Column::Responses),
+            Some(Value::I32s(vec![7, 8]))
+        );
+        // The straggler's copy was revoked with the last win, so its
+        // late chunk gets the recoverable lease error — and nothing
+        // double-commits.
+        let late =
+            m.put_chunk(slow_lease, 0, &[row(rows[0], vec![2], true)]);
+        assert!(late.unwrap_err().to_string().contains("lease"));
+        assert_eq!(tq.controller("reward").ready_depth(), 2);
+        let s = m.fleet_stats();
+        assert_eq!(s.hedge_rows_won_by_duplicate, 2);
+        assert_eq!(
+            s.duplicated_tokens, 1,
+            "straggler's discarded partial decode is accounted"
+        );
+        assert_eq!(m.in_flight(), 0);
+    }
+
+    #[test]
+    fn mirror_duplicates_and_detects_divergence() {
+        let tq = tq_with(1);
+        let m = RolloutManager::new(tq.clone());
+        m.configure_fleet(FleetOptions {
+            policy: RoutingPolicy::Mirror,
+            mirror_fanout: 2,
+            ..FleetOptions::default()
+        });
+        let a = m.lease_prompts(&spec("a", 30_000)).unwrap();
+        let a_lease = a.lease.unwrap();
+        let idx0 = a.batch.indices[0];
+        let b = m.lease_prompts(&spec("b", 30_000)).unwrap();
+        let b_lease = b.lease.unwrap();
+        assert_eq!(b.batch.indices, vec![idx0]);
+        assert_eq!(m.fleet_stats().mirrors_issued, 1);
+        // Primary commits; the mirror's differing copy is compared
+        // against the committed tokens, never committed itself.
+        m.put_chunk(a_lease, 1, &[row(idx0, vec![1, 2], true)]).unwrap();
+        m.put_chunk(b_lease, 1, &[row(idx0, vec![1, 9], true)]).unwrap();
+        assert_eq!(
+            tq.data_plane().get(idx0, &Column::Responses),
+            Some(Value::I32s(vec![1, 2]))
+        );
+        assert_eq!(tq.controller("reward").ready_depth(), 1);
+        let s = m.fleet_stats();
+        assert_eq!(s.mirror_divergences, 1);
+        assert_eq!(s.mirror_matches, 0);
+        assert_eq!(m.in_flight(), 0);
+    }
+
+    #[test]
+    fn load_balance_defers_loaded_worker_for_idle_peer() {
+        let tq = tq_with(2);
+        let m = RolloutManager::new(tq.clone());
+        // Default policy is load-balance.
+        let first = m.lease_prompts(&spec("loaded", 30_000)).unwrap();
+        assert_eq!(first.batch.len(), 2);
+        // The idle peer announces itself with an (empty) poll.
+        assert!(m.lease_prompts(&spec("idle", 30_000)).unwrap().lease.is_none());
+        tq.put_row(vec![(Column::Prompts, Value::I32s(vec![9; 4]))])
+            .unwrap();
+        // The loaded worker's poll is deferred in favor of the idler...
+        let deferred = m.lease_prompts(&spec("loaded", 30_000)).unwrap();
+        assert!(deferred.lease.is_none());
+        assert!(m.fleet_stats().lb_deferrals >= 1);
+        // ...who picks the row up on its next poll.
+        let got = m.lease_prompts(&spec("idle", 30_000)).unwrap();
+        assert_eq!(got.batch.len(), 1);
+    }
+
+    #[test]
+    fn worker_stats_carry_engine_specs() {
+        let tq = tq_with(1);
+        let m = RolloutManager::new(tq);
+        let eng = EngineSpec::new("mock", 8, 16, 48)
+            .with_tags(vec!["fast-cheap".into()]);
+        let s = LeaseSpec {
+            ttl_ms: 5000,
+            timeout_ms: 0,
+            engine: Some(eng.clone()),
+            ..LeaseSpec::new("w0", 8)
+        };
+        m.lease_prompts(&s).unwrap();
+        let stats = m.worker_stats();
+        let w = stats.iter().find(|w| w.worker == "w0").unwrap();
+        let got = w.engine.as_ref().unwrap();
+        assert_eq!(got.kind, "mock");
+        assert_eq!(got.tags, vec!["fast-cheap"]);
+        // Statically-registered engines surface in the fleet snapshot.
+        m.register_engine("xla-0", EngineSpec::new("xla", 8, 16, 48));
+        let fs = m.fleet_stats();
+        assert!(fs
+            .engines
+            .iter()
+            .any(|e| e.worker == "xla-0" && e.source == "config"));
     }
 }

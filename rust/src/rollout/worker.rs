@@ -33,12 +33,14 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::Timeline;
+use crate::fleet::EngineSpec;
 use crate::metrics::Registry;
 use crate::runtime::{PolicyEngine, Sampler};
 use crate::service::ServiceClient;
 use crate::transfer_queue::Column;
 use crate::weights::WeightMirror;
 
+use super::lease::LeaseId;
 use super::manager::{ChunkRow, LeaseSpec};
 
 /// Tuning knobs for one rollout worker.
@@ -62,6 +64,10 @@ pub struct WorkerOptions {
     pub poll_ms: u64,
     pub eos: i32,
     pub pad: i32,
+    /// Capability tags attached to this worker's engine spec
+    /// (`--engine-tags fast-cheap,mock`): the fleet registry derives
+    /// the speed class from them and `info --connect` displays them.
+    pub engine_tags: Vec<String>,
 }
 
 impl WorkerOptions {
@@ -75,6 +81,7 @@ impl WorkerOptions {
             poll_ms: 50,
             eos: crate::data::EOS,
             pad: crate::data::PAD,
+            engine_tags: Vec::new(),
         }
     }
 }
@@ -92,6 +99,9 @@ pub struct WorkerReport {
     pub weight_swaps: u64,
     /// Leases lost to expiry mid-generation (work abandoned + requeued).
     pub leases_lost: u64,
+    /// Engine faults survived: the batch was abandoned, the lease
+    /// failed over to a peer (`fail_lease`), and the loop carried on.
+    pub engine_errors: u64,
 }
 
 fn swap_weights(
@@ -109,6 +119,37 @@ fn swap_weights(
         }
     }
     Ok(())
+}
+
+/// Recover from an engine fault mid-batch: report the lease as failed
+/// so the coordinator requeues the rows *immediately* (the fallback
+/// routing path) instead of letting them ride out the TTL, clear the
+/// decode state, and count the event. The wire report is best-effort —
+/// if the coordinator is unreachable too, the TTL sweep remains the
+/// backstop.
+#[allow(clippy::too_many_arguments)]
+fn engine_fault(
+    client: &ServiceClient,
+    engine: &mut dyn PolicyEngine,
+    opts: &WorkerOptions,
+    metrics: Option<&Registry>,
+    hb_lease: &AtomicU64,
+    lease: LeaseId,
+    err: &anyhow::Error,
+    report: &mut WorkerReport,
+) {
+    report.engine_errors += 1;
+    if let Some(m) = metrics {
+        m.inc("engine_errors", 1);
+    }
+    crate::log_warn!(
+        &opts.name,
+        "engine fault mid-generation ({err:#}); failing lease {lease} \
+         over to the pool"
+    );
+    hb_lease.store(0, Ordering::SeqCst);
+    let _ = engine.finish_generate();
+    let _ = client.fail_lease(lease, &format!("{err:#}"));
 }
 
 /// Run the worker loop until the prompt stream closes or `abort` trips.
@@ -170,12 +211,13 @@ pub fn run_worker(
         crate::log_debug!(
             &opts.name,
             "worker done: {} samples, {} tokens, {} chunks, {} swaps, \
-             {} leases lost",
+             {} leases lost, {} engine faults",
             r.samples,
             r.tokens,
             r.chunks,
             r.weight_swaps,
-            r.leases_lost
+            r.leases_lost,
+            r.engine_errors
         );
     }
     result
@@ -205,7 +247,20 @@ fn run_worker_inner(
         ttl_ms: opts.ttl_ms,
         timeout_ms: opts.poll_ms,
         columns: vec![Column::Prompts],
+        // Capability report rides every poll: the coordinator's fleet
+        // registry learns what this engine is (and can route around or
+        // hedge onto it).
+        engine: Some(EngineSpec::of_engine(
+            &*engine,
+            opts.engine_tags.clone(),
+        )),
     };
+    // An engine fault (`begin_generate`/`step` erroring) is survivable:
+    // fail the lease so the rows requeue immediately, then keep
+    // serving. Only this many faults in a row are — a permanently
+    // broken engine must fail loudly, not spin.
+    const MAX_CONSECUTIVE_ENGINE_FAULTS: u32 = 3;
+    let mut consecutive_faults = 0u32;
     'outer: while !abort() {
         // Delayed parameter update between leases...
         swap_weights(client, engine, &mut mirror, metrics, &mut report)?;
@@ -237,9 +292,36 @@ fn run_worker_inner(
         }
         let t0 = timeline.map(|t| t.now());
         let gen_version = engine.params_version();
-        engine.begin_generate(&prompts, sampler, opts.eos, opts.pad)?;
+        if let Err(e) =
+            engine.begin_generate(&prompts, sampler, opts.eos, opts.pad)
+        {
+            engine_fault(
+                client, engine, opts, metrics, hb_lease, lease, &e,
+                &mut report,
+            );
+            consecutive_faults += 1;
+            if consecutive_faults >= MAX_CONSECUTIVE_ENGINE_FAULTS {
+                return Err(e);
+            }
+            continue 'outer;
+        }
         loop {
-            let step = engine.step(chunk)?;
+            let step = match engine.step(chunk) {
+                Ok(s) => s,
+                Err(e) => {
+                    engine_fault(
+                        client, engine, opts, metrics, hb_lease, lease,
+                        &e, &mut report,
+                    );
+                    consecutive_faults += 1;
+                    if consecutive_faults >= MAX_CONSECUTIVE_ENGINE_FAULTS
+                    {
+                        return Err(e);
+                    }
+                    continue 'outer;
+                }
+            };
+            consecutive_faults = 0;
             let done = step.done;
             let rows: Vec<ChunkRow> = step
                 .seqs

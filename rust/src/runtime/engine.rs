@@ -270,6 +270,12 @@ pub trait PolicyEngine {
     /// Max trajectory length (prompt + response).
     fn max_len(&self) -> usize;
     fn prompt_len(&self) -> usize;
+    /// Backend kind for the fleet registry's capability report
+    /// (`"mock"`, `"xla"`, ...). Purely informational: routing treats
+    /// it as a label, never a dispatch key.
+    fn kind(&self) -> &'static str {
+        "custom"
+    }
     /// Generate one batch of trajectories from fixed-length prompts.
     fn generate(
         &mut self,
@@ -481,6 +487,10 @@ impl PolicyEngine for XlaPolicyEngine {
 
     fn prompt_len(&self) -> usize {
         self.arts.manifest.model.prompt_len
+    }
+
+    fn kind(&self) -> &'static str {
+        "xla"
     }
 
     fn generate(
@@ -781,6 +791,10 @@ pub struct MockEngine {
     /// chunked decodes of the same batch cost the same wall time, and
     /// streaming gains come purely from overlap.
     pub token_delay: std::time::Duration,
+    /// Fault injection: after this many further `step` calls the engine
+    /// errors once (dropping its in-flight generation like a crashed
+    /// backend), then the knob clears. Drives the fallback-path tests.
+    pub fault_after_steps: Option<u32>,
     gen: Option<GenState>,
 }
 
@@ -796,6 +810,7 @@ impl MockEngine {
             step: 0,
             generate_delay: std::time::Duration::ZERO,
             token_delay: std::time::Duration::ZERO,
+            fault_after_steps: None,
             gen: None,
         }
     }
@@ -852,6 +867,10 @@ impl PolicyEngine for MockEngine {
 
     fn prompt_len(&self) -> usize {
         self.prompt_len
+    }
+
+    fn kind(&self) -> &'static str {
+        "mock"
     }
 
     fn generate(
@@ -952,6 +971,15 @@ impl PolicyEngine for MockEngine {
     }
 
     fn step(&mut self, n_tokens: usize) -> Result<GenStep> {
+        if let Some(n) = self.fault_after_steps {
+            if n == 0 {
+                self.fault_after_steps = None;
+                // A crashed backend loses its in-flight generation.
+                self.gen = None;
+                bail!("mock: injected engine fault during step");
+            }
+            self.fault_after_steps = Some(n - 1);
+        }
         let delay = self.token_delay;
         let step = step_buffered(&mut self.gen, n_tokens)?;
         if !delay.is_zero() {

@@ -830,6 +830,16 @@ impl ServiceClient {
         self.call_ok(ServiceRequest::RenewLease { lease, ttl_ms })
     }
 
+    /// `fail_lease`: surrender a lease after an engine fault so its
+    /// undone rows requeue immediately instead of waiting out the TTL
+    /// (fleet fallback routing). Idempotent on already-dead leases.
+    pub fn fail_lease(&self, lease: LeaseId, reason: &str) -> Result<()> {
+        self.call_ok(ServiceRequest::FailLease {
+            lease,
+            reason: reason.to_string(),
+        })
+    }
+
     /// `worker_stats`: per-rollout-worker load/progress snapshot.
     pub fn worker_stats(&self) -> Result<Vec<WorkerStat>> {
         match self.call(ServiceRequest::WorkerStats)? {

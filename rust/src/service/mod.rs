@@ -14,8 +14,8 @@
 //!   `get_experience_data`, `weight_sync_notify`) plus `register_task`,
 //!   batch-first `put_batch`/`get_batch` with deadline semantics,
 //!   `subscribe_weights`, the elastic rollout verbs (`lease_prompts`,
-//!   `put_chunk`, `renew_lease`, `worker_stats` — served by
-//!   [`crate::rollout::RolloutManager`]), `stats`, `evict`, and
+//!   `put_chunk`, `renew_lease`, `fail_lease`, `worker_stats` — served
+//!   by [`crate::rollout::RolloutManager`]), `stats`, `evict`, and
 //!   `shutdown`.
 //! * [`transport`] — [`transport::InProcTransport`] (zero-copy fast
 //!   path) and [`transport::TcpJsonlTransport`] /
@@ -57,6 +57,7 @@ pub use transport::{
 };
 
 use crate::coordinator::ParamStore;
+use crate::fleet::{EngineSpec, FleetOptions};
 use crate::rollout::{
     ChunkRow, LeaseReply, LeaseSpec, RolloutManager, WorkerStat,
 };
@@ -164,6 +165,12 @@ pub struct Session {
     /// Control-plane metrics of the TCP server fronting this session
     /// (`None` for embedded/in-proc sessions) — read by `stats`.
     control: Mutex<Option<Arc<ControlPlaneMetrics>>>,
+    /// Fleet configuration staged before `init_engines` (the served
+    /// path: `asyncflow serve --routing hedge` runs before any client
+    /// initializes the session). Routing options plus config-declared
+    /// engine specs; applied to the rollout dispatcher at
+    /// initialization, or immediately when the session is live.
+    fleet: Mutex<(Option<FleetOptions>, Vec<(String, EngineSpec)>)>,
 }
 
 impl Default for Session {
@@ -179,7 +186,28 @@ impl Session {
         Session {
             state: RwLock::new(None),
             control: Mutex::new(None),
+            fleet: Mutex::new((None, Vec::new())),
         }
+    }
+
+    /// Configure the fleet routing policy and tunables. Staged for
+    /// `init_engines` when the session is not yet initialized; applied
+    /// to the live rollout dispatcher immediately otherwise.
+    pub fn set_fleet_options(&self, options: FleetOptions) {
+        if let Ok(st) = self.state() {
+            st.rollout.configure_fleet(options.clone());
+        }
+        self.fleet.lock().unwrap().0 = Some(options);
+    }
+
+    /// Register a config-declared engine capability spec for `worker`
+    /// (the static half of the fleet registry; live workers report
+    /// their own specs at attach via `lease_prompts`).
+    pub fn register_fleet_engine(&self, worker: &str, spec: EngineSpec) {
+        if let Ok(st) = self.state() {
+            st.rollout.register_engine(worker, spec.clone());
+        }
+        self.fleet.lock().unwrap().1.push((worker.to_string(), spec));
     }
 
     /// Attach the TCP server's control-plane metrics so the `stats`
@@ -231,6 +259,15 @@ impl Session {
             telemetry: Arc::new(SessionTelemetry::new()),
         };
         Self::spawn_lease_sweeper(&st);
+        {
+            let staged = self.fleet.lock().unwrap();
+            if let Some(o) = &staged.0 {
+                st.rollout.configure_fleet(o.clone());
+            }
+            for (w, spec) in &staged.1 {
+                st.rollout.register_engine(w, spec.clone());
+            }
+        }
         *guard = Some(st);
         Ok(())
     }
@@ -909,6 +946,14 @@ impl Session {
         self.state()?.rollout.renew_lease(lease, ttl)
     }
 
+    /// `fail_lease`: worker-initiated surrender after an engine fault —
+    /// the lease's undone rows requeue immediately instead of waiting
+    /// out the TTL (the fleet's fallback path). Idempotent: failing an
+    /// already-dead lease is a no-op.
+    pub fn fail_lease(&self, lease: u64, reason: &str) -> Result<()> {
+        self.state()?.rollout.fail_lease(lease, reason)
+    }
+
     /// `worker_stats`: per-rollout-worker load/progress snapshot.
     pub fn worker_stats(&self) -> Result<Vec<WorkerStat>> {
         Ok(self.state()?.rollout.worker_stats())
@@ -1022,6 +1067,7 @@ impl Session {
                 .unwrap()
                 .as_ref()
                 .map(|m| m.snapshot()),
+            fleet: Some(st.rollout.fleet_stats()),
         })
     }
 
@@ -1146,6 +1192,10 @@ impl Session {
             }
             ServiceRequest::RenewLease { lease, ttl_ms } => {
                 self.renew_lease(lease, ttl_ms)?;
+                ServiceResponse::Ok
+            }
+            ServiceRequest::FailLease { lease, reason } => {
+                self.fail_lease(lease, &reason)?;
                 ServiceResponse::Ok
             }
             ServiceRequest::WorkerStats => {

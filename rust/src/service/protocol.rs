@@ -24,6 +24,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::fleet::{EngineSpec, EngineStat, FleetStats, SpeedClass};
 use crate::metrics::HistSnapshot;
 use crate::rollout::{ChunkRow, LeaseReply, LeaseSpec, WorkerStat};
 use crate::runtime::{DType, HostTensor, ParamSet};
@@ -215,6 +216,10 @@ pub enum ServiceRequest {
     PutChunk { lease: u64, version: u64, rows: Vec<ChunkRow> },
     /// Explicit lease heartbeat (`ttl_ms = 0` keeps the granted TTL).
     RenewLease { lease: u64, ttl_ms: u64 },
+    /// Surrender a lease because the worker's engine faulted: the
+    /// undone rows requeue immediately (fleet fallback routing)
+    /// instead of waiting out the lease TTL.
+    FailLease { lease: u64, reason: String },
     /// Per-rollout-worker load/progress snapshot.
     WorkerStats,
     /// Register a remote storage unit as payload authority for slot
@@ -364,6 +369,8 @@ pub struct ServiceStats {
     /// Control-plane traffic (`None` from peers that predate it, and
     /// from in-proc sessions with no TCP server attached).
     pub control: Option<ControlPlaneStats>,
+    /// Fleet routing snapshot (`None` from peers that predate it).
+    pub fleet: Option<FleetStats>,
 }
 
 /// The service answers.
@@ -941,14 +948,20 @@ fn lease_reply_from_json(j: &Json) -> Result<LeaseReply> {
 }
 
 fn worker_stat_to_json(w: &WorkerStat) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("worker", Json::Str(w.worker.clone())),
         ("active_leases", Json::Num(w.active_leases as f64)),
         ("in_flight_rows", Json::Num(w.in_flight_rows as f64)),
         ("completed_rows", Json::Num(w.completed_rows as f64)),
         ("generated_tokens", Json::Num(w.generated_tokens as f64)),
         ("requeued_rows", Json::Num(w.requeued_rows as f64)),
-    ])
+    ];
+    // Elided when absent so pre-fleet peers see the exact old
+    // encoding.
+    if let Some(e) = &w.engine {
+        pairs.push(("engine", engine_spec_to_json(e)));
+    }
+    Json::obj(pairs)
 }
 
 fn worker_stat_from_json(j: &Json) -> Result<WorkerStat> {
@@ -959,6 +972,160 @@ fn worker_stat_from_json(j: &Json) -> Result<WorkerStat> {
         completed_rows: field_u64(j, "completed_rows")?,
         generated_tokens: field_u64(j, "generated_tokens")?,
         requeued_rows: field_u64(j, "requeued_rows")?,
+        // Optional on decode (pre-fleet peers elide it).
+        engine: match j.get("engine") {
+            None => None,
+            Some(e) => Some(engine_spec_from_json(e)?),
+        },
+    })
+}
+
+// ===========================================================================
+// JSON codec — engine fleet
+// ===========================================================================
+
+fn engine_spec_to_json(s: &EngineSpec) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str(s.kind.clone())),
+        ("batch", Json::Num(s.batch as f64)),
+        ("prompt_len", Json::Num(s.prompt_len as f64)),
+        ("max_len", Json::Num(s.max_len as f64)),
+        ("speed", Json::Str(s.speed.name().into())),
+        (
+            "tags",
+            Json::Arr(
+                s.tags.iter().map(|t| Json::Str(t.clone())).collect(),
+            ),
+        ),
+        ("observed_tps", f64_to_json(s.observed_tps)),
+    ])
+}
+
+fn engine_spec_from_json(j: &Json) -> Result<EngineSpec> {
+    // Lenient decode: geometry is required, everything else degrades
+    // (an unknown speed class from a newer peer falls back to the
+    // tag-derived one rather than failing the verb).
+    let tags: Vec<String> = match j.get("tags") {
+        None => vec![],
+        Some(t) => t
+            .as_arr()
+            .context("tags must be an array")?
+            .iter()
+            .map(|x| {
+                Ok(x.as_str()
+                    .context("tag must be a string")?
+                    .to_string())
+            })
+            .collect::<Result<_>>()?,
+    };
+    let speed = match j.get("speed").and_then(Json::as_str) {
+        Some(s) => SpeedClass::parse(s)
+            .unwrap_or_else(|_| SpeedClass::from_tags(&tags)),
+        None => SpeedClass::from_tags(&tags),
+    };
+    let observed_tps = match j.get("observed_tps") {
+        None => 0.0,
+        Some(_) => field_f64(j, "observed_tps")?,
+    };
+    Ok(EngineSpec {
+        kind: field_str(j, "kind")?,
+        batch: field_usize(j, "batch")?,
+        prompt_len: field_usize(j, "prompt_len")?,
+        max_len: field_usize(j, "max_len")?,
+        speed,
+        tags,
+        observed_tps,
+    })
+}
+
+fn engine_stat_to_json(e: &EngineStat) -> Json {
+    Json::obj(vec![
+        ("worker", Json::Str(e.worker.clone())),
+        ("spec", engine_spec_to_json(&e.spec)),
+        ("spec_reported", Json::Bool(e.spec_reported)),
+        ("source", Json::Str(e.source.clone())),
+        ("chunks", Json::Num(e.chunks as f64)),
+        ("tokens", Json::Num(e.tokens as f64)),
+        ("errors", Json::Num(e.errors as f64)),
+        ("hedge_rows_won", Json::Num(e.hedge_rows_won as f64)),
+        ("hedge_rows_lost", Json::Num(e.hedge_rows_lost as f64)),
+        ("observed_tps", f64_to_json(e.observed_tps)),
+    ])
+}
+
+fn engine_stat_from_json(j: &Json) -> Result<EngineStat> {
+    Ok(EngineStat {
+        worker: field_str(j, "worker")?,
+        spec: engine_spec_from_json(field(j, "spec")?)?,
+        spec_reported: field_bool(j, "spec_reported")?,
+        source: field_str(j, "source")?,
+        chunks: field_u64(j, "chunks")?,
+        tokens: field_u64(j, "tokens")?,
+        errors: field_u64(j, "errors")?,
+        hedge_rows_won: field_u64(j, "hedge_rows_won")?,
+        hedge_rows_lost: field_u64(j, "hedge_rows_lost")?,
+        observed_tps: field_f64(j, "observed_tps")?,
+    })
+}
+
+fn fleet_stats_to_json(f: &FleetStats) -> Json {
+    Json::obj(vec![
+        ("routing", Json::Str(f.routing.clone())),
+        (
+            "engines",
+            Json::Arr(
+                f.engines.iter().map(engine_stat_to_json).collect(),
+            ),
+        ),
+        ("chunk_time_p50_ms", f64_to_json(f.chunk_time_p50_ms)),
+        ("chunk_time_p95_ms", f64_to_json(f.chunk_time_p95_ms)),
+        ("hedge_budget_ms", f64_to_json(f.hedge_budget_ms)),
+        ("hedges_issued", Json::Num(f.hedges_issued as f64)),
+        (
+            "hedge_rows_won_by_duplicate",
+            Json::Num(f.hedge_rows_won_by_duplicate as f64),
+        ),
+        (
+            "hedge_rows_won_by_primary",
+            Json::Num(f.hedge_rows_won_by_primary as f64),
+        ),
+        ("duplicated_tokens", Json::Num(f.duplicated_tokens as f64)),
+        ("mirrors_issued", Json::Num(f.mirrors_issued as f64)),
+        ("mirror_matches", Json::Num(f.mirror_matches as f64)),
+        (
+            "mirror_divergences",
+            Json::Num(f.mirror_divergences as f64),
+        ),
+        ("lb_deferrals", Json::Num(f.lb_deferrals as f64)),
+        ("fallback_requeues", Json::Num(f.fallback_requeues as f64)),
+    ])
+}
+
+fn fleet_stats_from_json(j: &Json) -> Result<FleetStats> {
+    Ok(FleetStats {
+        routing: field_str(j, "routing")?,
+        engines: field_arr(j, "engines")?
+            .iter()
+            .map(engine_stat_from_json)
+            .collect::<Result<_>>()?,
+        chunk_time_p50_ms: field_f64(j, "chunk_time_p50_ms")?,
+        chunk_time_p95_ms: field_f64(j, "chunk_time_p95_ms")?,
+        hedge_budget_ms: field_f64(j, "hedge_budget_ms")?,
+        hedges_issued: field_u64(j, "hedges_issued")?,
+        hedge_rows_won_by_duplicate: field_u64(
+            j,
+            "hedge_rows_won_by_duplicate",
+        )?,
+        hedge_rows_won_by_primary: field_u64(
+            j,
+            "hedge_rows_won_by_primary",
+        )?,
+        duplicated_tokens: field_u64(j, "duplicated_tokens")?,
+        mirrors_issued: field_u64(j, "mirrors_issued")?,
+        mirror_matches: field_u64(j, "mirror_matches")?,
+        mirror_divergences: field_u64(j, "mirror_divergences")?,
+        lb_deferrals: field_u64(j, "lb_deferrals")?,
+        fallback_requeues: field_u64(j, "fallback_requeues")?,
     })
 }
 
@@ -1360,15 +1527,23 @@ impl ServiceRequest {
                 ("op", Json::Str("weight_sync".into())),
                 ("params", param_set_to_json(params)?),
             ]),
-            ServiceRequest::LeasePrompts(spec) => Json::obj(vec![
-                ("op", Json::Str("lease_prompts".into())),
-                ("task", Json::Str(spec.task.clone())),
-                ("worker", Json::Str(spec.worker.clone())),
-                ("count", Json::Num(spec.count as f64)),
-                ("ttl_ms", Json::Num(spec.ttl_ms as f64)),
-                ("timeout_ms", Json::Num(spec.timeout_ms as f64)),
-                ("columns", columns_to_json(&spec.columns)),
-            ]),
+            ServiceRequest::LeasePrompts(spec) => {
+                let mut pairs = vec![
+                    ("op", Json::Str("lease_prompts".into())),
+                    ("task", Json::Str(spec.task.clone())),
+                    ("worker", Json::Str(spec.worker.clone())),
+                    ("count", Json::Num(spec.count as f64)),
+                    ("ttl_ms", Json::Num(spec.ttl_ms as f64)),
+                    ("timeout_ms", Json::Num(spec.timeout_ms as f64)),
+                    ("columns", columns_to_json(&spec.columns)),
+                ];
+                // Elided when absent so pre-fleet peers see the
+                // exact old encoding.
+                if let Some(e) = &spec.engine {
+                    pairs.push(("engine", engine_spec_to_json(e)));
+                }
+                Json::obj(pairs)
+            }
             ServiceRequest::PutChunk { lease, version, rows } => {
                 Json::obj(vec![
                     ("op", Json::Str("put_chunk".into())),
@@ -1387,6 +1562,13 @@ impl ServiceRequest {
                     ("op", Json::Str("renew_lease".into())),
                     ("lease", Json::Num(*lease as f64)),
                     ("ttl_ms", Json::Num(*ttl_ms as f64)),
+                ])
+            }
+            ServiceRequest::FailLease { lease, reason } => {
+                Json::obj(vec![
+                    ("op", Json::Str("fail_lease".into())),
+                    ("lease", Json::Num(*lease as f64)),
+                    ("reason", Json::Str(reason.clone())),
                 ])
             }
             ServiceRequest::WorkerStats => {
@@ -1586,6 +1768,11 @@ impl ServiceRequest {
                 ttl_ms: field_u64(j, "ttl_ms")?,
                 timeout_ms: field_u64(j, "timeout_ms")?,
                 columns: columns_from_json(field_arr(j, "columns")?)?,
+                // Optional on decode (pre-fleet workers elide it).
+                engine: match j.get("engine") {
+                    None => None,
+                    Some(e) => Some(engine_spec_from_json(e)?),
+                },
             }),
             "put_chunk" => ServiceRequest::PutChunk {
                 lease: field_u64(j, "lease")?,
@@ -1598,6 +1785,10 @@ impl ServiceRequest {
             "renew_lease" => ServiceRequest::RenewLease {
                 lease: field_u64(j, "lease")?,
                 ttl_ms: field_u64(j, "ttl_ms")?,
+            },
+            "fail_lease" => ServiceRequest::FailLease {
+                lease: field_u64(j, "lease")?,
+                reason: field_str(j, "reason")?,
             },
             "worker_stats" => ServiceRequest::WorkerStats,
             "attach_unit" => ServiceRequest::AttachUnit {
@@ -1673,6 +1864,7 @@ impl ServiceRequest {
             ServiceRequest::LeasePrompts(_) => "lease_prompts",
             ServiceRequest::PutChunk { .. } => "put_chunk",
             ServiceRequest::RenewLease { .. } => "renew_lease",
+            ServiceRequest::FailLease { .. } => "fail_lease",
             ServiceRequest::WorkerStats => "worker_stats",
             ServiceRequest::AttachUnit { .. } => "attach_unit",
             ServiceRequest::AllocRows { .. } => "alloc_rows",
@@ -1998,6 +2190,9 @@ impl ServiceResponse {
                     stats_pairs
                         .push(("control", control_plane_stats_to_json(c)));
                 }
+                if let Some(f) = &s.fleet {
+                    stats_pairs.push(("fleet", fleet_stats_to_json(f)));
+                }
                 Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("stats", Json::obj(stats_pairs)),
@@ -2244,6 +2439,11 @@ impl ServiceResponse {
                 None => None,
                 Some(c) => Some(control_plane_stats_from_json(c)?),
             };
+            // Optional on decode (older peers elide the fleet).
+            let fleet = match s.get("fleet") {
+                None => None,
+                Some(f) => Some(fleet_stats_from_json(f)?),
+            };
             return Ok(ServiceResponse::Stats(ServiceStats {
                 tasks,
                 units,
@@ -2254,6 +2454,7 @@ impl ServiceResponse {
                     .context("closed must be a bool")?,
                 weights,
                 control,
+                fleet,
             }));
         }
         if let Some(t) = j.get("telemetry") {
@@ -2599,15 +2800,47 @@ mod tests {
                 parked_long_polls: 7,
                 pipelined_depth: vec![10, 5, 3, 1, 0, 0, 0],
             }),
+            fleet: Some(FleetStats {
+                routing: "hedge".into(),
+                engines: vec![EngineStat {
+                    worker: "w-fast".into(),
+                    spec: EngineSpec::new("mock", 8, 16, 48)
+                        .with_tags(vec!["fast-cheap".into()]),
+                    spec_reported: true,
+                    source: "attach".into(),
+                    chunks: 12,
+                    tokens: 480,
+                    errors: 1,
+                    hedge_rows_won: 5,
+                    hedge_rows_lost: 2,
+                    observed_tps: 812.5,
+                }],
+                chunk_time_p50_ms: 4.0,
+                chunk_time_p95_ms: 11.0,
+                hedge_budget_ms: 33.0,
+                hedges_issued: 3,
+                hedge_rows_won_by_duplicate: 5,
+                hedge_rows_won_by_primary: 9,
+                duplicated_tokens: 120,
+                mirrors_issued: 0,
+                mirror_matches: 0,
+                mirror_divergences: 0,
+                lb_deferrals: 4,
+                fallback_requeues: 1,
+            }),
         };
         match roundtrip_resp(ServiceResponse::Stats(stats.clone())) {
             ServiceResponse::Stats(got) => assert_eq!(got, stats),
             _ => panic!("wrong variant"),
         }
         // ...and a weight-plane-free snapshot stays decodable (older
-        // peers elide the ledger and the control plane).
-        let bare =
-            ServiceStats { weights: None, control: None, ..stats };
+        // peers elide the ledger, the control plane, and the fleet).
+        let bare = ServiceStats {
+            weights: None,
+            control: None,
+            fleet: None,
+            ..stats
+        };
         match roundtrip_resp(ServiceResponse::Stats(bare.clone())) {
             ServiceResponse::Stats(got) => assert_eq!(got, bare),
             _ => panic!("wrong variant"),
@@ -2702,16 +2935,44 @@ mod tests {
 
     #[test]
     fn lease_prompts_request_roundtrips() {
-        let spec = LeaseSpec {
+        let mut spec = LeaseSpec {
             task: "rollout".into(),
             worker: "w-7".into(),
             count: 8,
             ttl_ms: 1500,
             timeout_ms: 40,
             columns: vec![Column::Prompts, Column::Custom("meta".into())],
+            engine: None,
         };
         match roundtrip_req(ServiceRequest::LeasePrompts(spec.clone())) {
             ServiceRequest::LeasePrompts(got) => assert_eq!(got, spec),
+            _ => panic!("wrong variant"),
+        }
+        // With a capability report riding along (fleet-aware worker).
+        spec.engine = Some(
+            EngineSpec::new("mock", 8, 16, 48)
+                .with_tags(vec!["fast-cheap".into(), "mock".into()]),
+        );
+        match roundtrip_req(ServiceRequest::LeasePrompts(spec.clone())) {
+            ServiceRequest::LeasePrompts(got) => {
+                assert_eq!(got, spec);
+                let e = got.engine.unwrap();
+                assert_eq!(e.speed, crate::fleet::SpeedClass::Fast);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn fail_lease_request_roundtrips() {
+        match roundtrip_req(ServiceRequest::FailLease {
+            lease: 9,
+            reason: "mock: injected engine fault during step".into(),
+        }) {
+            ServiceRequest::FailLease { lease, reason } => {
+                assert_eq!(lease, 9);
+                assert!(reason.contains("injected engine fault"));
+            }
             _ => panic!("wrong variant"),
         }
     }
@@ -2953,14 +3214,29 @@ mod tests {
 
     #[test]
     fn worker_stats_response_roundtrips() {
-        let ws = vec![crate::rollout::WorkerStat {
-            worker: "tcp-0".into(),
-            active_leases: 1,
-            in_flight_rows: 8,
-            completed_rows: 40,
-            generated_tokens: 1234,
-            requeued_rows: 2,
-        }];
+        let ws = vec![
+            crate::rollout::WorkerStat {
+                worker: "tcp-0".into(),
+                active_leases: 1,
+                in_flight_rows: 8,
+                completed_rows: 40,
+                generated_tokens: 1234,
+                requeued_rows: 2,
+                engine: None,
+            },
+            crate::rollout::WorkerStat {
+                worker: "tcp-1".into(),
+                active_leases: 0,
+                in_flight_rows: 0,
+                completed_rows: 7,
+                generated_tokens: 99,
+                requeued_rows: 0,
+                engine: Some(
+                    EngineSpec::new("xla", 8, 16, 48)
+                        .with_tags(vec!["slow-accurate".into()]),
+                ),
+            },
+        ];
         match roundtrip_resp(ServiceResponse::Workers(ws.clone())) {
             ServiceResponse::Workers(got) => assert_eq!(got, ws),
             _ => panic!("wrong variant"),

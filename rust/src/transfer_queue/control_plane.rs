@@ -459,6 +459,10 @@ pub type LeaseId = u64;
 /// so no sample is ever stranded by a dead consumer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RevokedLease {
+    /// The id the lease was granted under — dead by the time the caller
+    /// sees this struct, but routing layers key duplicate-tracking state
+    /// on it.
+    pub id: LeaseId,
     /// The consumer/worker name the lease was granted to.
     pub owner: String,
     /// Task whose controller the rows were popped from (and are
@@ -658,6 +662,7 @@ impl<S> LeaseRegistry<S> {
             );
         };
         Ok(RevokedLease {
+            id,
             rows: lease.undone(),
             owner: lease.owner,
             task: lease.task,
@@ -673,6 +678,7 @@ impl<S> LeaseRegistry<S> {
         let mut g = self.inner.lock().unwrap();
         let lease = g.leases.remove(&id)?;
         Some(RevokedLease {
+            id,
             rows: lease.undone(),
             owner: lease.owner,
             task: lease.task,
@@ -696,6 +702,7 @@ impl<S> LeaseRegistry<S> {
         for id in expired {
             let lease = g.leases.remove(&id).unwrap();
             let revoked = RevokedLease {
+                id,
                 rows: lease.undone(),
                 owner: lease.owner,
                 task: lease.task,
@@ -710,6 +717,22 @@ impl<S> LeaseRegistry<S> {
             out.push(revoked);
         }
         out
+    }
+
+    /// Whether `id` is still in the registry (not acked, revoked, or
+    /// swept). A routing layer uses this to tell "lease finished" from
+    /// "lease still decoding" without mutating anything.
+    pub fn is_live(&self, id: LeaseId) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.leases.contains_key(&id)
+    }
+
+    /// Not-yet-done rows of a live lease, sorted — `None` when the id
+    /// is unknown. A read-only peek (no heartbeat): hedging duplicates
+    /// exactly these rows to a second engine.
+    pub fn undone_rows(&self, id: LeaseId) -> Option<Vec<GlobalIndex>> {
+        let g = self.inner.lock().unwrap();
+        g.leases.get(&id).map(LeaseEntry::undone)
     }
 
     /// Leased rows not yet done, across all live leases.

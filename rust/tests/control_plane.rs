@@ -531,6 +531,7 @@ fn burst_pipelines_heartbeats_and_reports_failures() {
             ttl_ms: 30_000,
             timeout_ms: 2_000,
             columns: vec![Column::Prompts],
+            engine: None,
         })
         .unwrap();
     let lease = reply.lease.expect("two rows were ready");

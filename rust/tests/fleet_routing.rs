@@ -1,0 +1,441 @@
+//! Fleet routing acceptance tests over the TCP transport: hedge
+//! duplication with exactly-once commits, mirror comparison (match and
+//! divergence), and fallback fail-over after an injected engine fault.
+//!
+//! MockEngine's synth is deterministic in (prompt, params_version), so
+//! the prompt tags below are chosen to make the timing *certain*, not
+//! probabilistic: tag 26 yields response lengths [18, 18, 18, 12] at
+//! version 0 (a straggler decoding at 20ms/token holds its lease for
+//! hundreds of milliseconds — the hedge/mirror window cannot be
+//! missed) and every row's length changes at version 1 (a mirrored
+//! fleet with skewed weights must diverge on every row).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use asyncflow::data::{EOS, PAD};
+use asyncflow::fleet::{FleetOptions, FleetStats, RoutingPolicy};
+use asyncflow::rollout::{run_worker, WorkerOptions, WorkerReport};
+use asyncflow::runtime::{MockEngine, ParamSet, PolicyEngine, Sampler};
+use asyncflow::service::{
+    GetBatchReply, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec, TcpJsonlServer,
+};
+use asyncflow::transfer_queue::{Column, GlobalIndex, TaskSpec, Value};
+
+const BATCH: usize = 4;
+const PROMPT_LEN: usize = 6;
+const MAX_LEN: usize = 24;
+
+fn fleet_session(options: FleetOptions) -> Arc<Session> {
+    let session = Arc::new(
+        Session::init_engines(
+            SessionSpec {
+                storage_units: 2,
+                tasks: vec![
+                    TaskSpec::new("rollout", vec![Column::Prompts]),
+                    TaskSpec::new(
+                        "collect",
+                        vec![Column::Responses, Column::OldLogp],
+                    ),
+                ],
+            },
+            ParamSet::new(0, vec![]),
+        )
+        .unwrap(),
+    );
+    session.set_fleet_options(options);
+    session
+}
+
+/// Feed `n` prompts derived from `tag` and return index -> prompt.
+fn feed_prompts(
+    client: &ServiceClient,
+    n: usize,
+    tag: i32,
+) -> HashMap<GlobalIndex, Vec<i32>> {
+    let prompts: Vec<Vec<i32>> = (0..n)
+        .map(|i| vec![tag * 100 + i as i32 + 1; PROMPT_LEN])
+        .collect();
+    let indices = client
+        .put_batch(
+            prompts
+                .iter()
+                .map(|p| {
+                    PutRow::new(vec![(Column::Prompts, Value::I32s(p.clone()))])
+                })
+                .collect(),
+        )
+        .unwrap();
+    indices.into_iter().zip(prompts).collect()
+}
+
+/// Reference decode: what any version-`version` MockEngine of this
+/// geometry generates for `prompt` (tokens + sampling logps).
+fn reference(prompt: &[i32], version: u64) -> (Vec<i32>, Vec<f32>) {
+    let mut engine = MockEngine::new(BATCH, PROMPT_LEN, MAX_LEN);
+    if version > 0 {
+        engine.set_params(ParamSet::new(version, vec![]));
+    }
+    let mut sampler = Sampler::new(1.0, 32, 0);
+    engine
+        .begin_generate(&[prompt.to_vec()], &mut sampler, EOS, PAD)
+        .unwrap();
+    let (mut tokens, mut logps) = (Vec::new(), Vec::new());
+    loop {
+        let step = engine.step(8).unwrap();
+        tokens.extend_from_slice(&step.seqs[0].tokens);
+        logps.extend_from_slice(&step.seqs[0].logps);
+        if step.done {
+            break;
+        }
+    }
+    engine.finish_generate().unwrap();
+    (tokens, logps)
+}
+
+struct WorkerCfg {
+    name: &'static str,
+    token_delay: Duration,
+    version: u64,
+    fault_after_steps: Option<u32>,
+    tags: Vec<String>,
+    chunk_tokens: usize,
+    ttl_ms: u64,
+}
+
+impl WorkerCfg {
+    fn new(name: &'static str) -> Self {
+        WorkerCfg {
+            name,
+            token_delay: Duration::ZERO,
+            version: 0,
+            fault_after_steps: None,
+            tags: Vec::new(),
+            chunk_tokens: 2,
+            ttl_ms: 2000,
+        }
+    }
+}
+
+fn spawn_worker(
+    client: ServiceClient,
+    cfg: WorkerCfg,
+    abort: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<anyhow::Result<WorkerReport>> {
+    std::thread::spawn(move || {
+        let mut engine = MockEngine::new(BATCH, PROMPT_LEN, MAX_LEN);
+        engine.token_delay = cfg.token_delay;
+        engine.fault_after_steps = cfg.fault_after_steps;
+        if cfg.version > 0 {
+            engine.set_params(ParamSet::new(cfg.version, vec![]));
+        }
+        let mut sampler = Sampler::new(1.0, 32, 7);
+        let mut opts = WorkerOptions::new(cfg.name);
+        opts.chunk_tokens = cfg.chunk_tokens;
+        opts.ttl_ms = cfg.ttl_ms;
+        opts.poll_ms = 2;
+        opts.engine_tags = cfg.tags;
+        run_worker(
+            &client,
+            &mut engine,
+            &mut sampler,
+            &opts,
+            None,
+            None,
+            &|| abort.load(Ordering::SeqCst),
+        )
+    })
+}
+
+/// Drain `n` rows from the collect task, asserting each row is served
+/// exactly once. Returns index -> (response tokens, logps).
+fn drain(
+    monitor: &ServiceClient,
+    n: usize,
+) -> HashMap<GlobalIndex, (Vec<i32>, Vec<f32>)> {
+    let spec = GetBatchSpec {
+        task: "collect".into(),
+        group: 0,
+        columns: vec![Column::Responses, Column::OldLogp],
+        count: 8,
+        min: 1,
+        timeout_ms: 50,
+        consumer: None,
+    };
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut seen = HashMap::new();
+    while seen.len() < n {
+        assert!(
+            Instant::now() < deadline,
+            "stalled at {}/{n} rows — requeue not immediate?",
+            seen.len()
+        );
+        if let GetBatchReply::Ready(batch) = monitor.get_batch(&spec).unwrap()
+        {
+            for (idx, row) in batch.indices.iter().zip(&batch.rows) {
+                let resp = row[0].as_i32s().unwrap().to_vec();
+                let logps = row[1].as_f32s().unwrap().to_vec();
+                assert!(
+                    seen.insert(*idx, (resp, logps)).is_none(),
+                    "row {idx:?} served twice"
+                );
+            }
+        }
+    }
+    seen
+}
+
+fn fleet_of(monitor: &ServiceClient) -> FleetStats {
+    monitor.stats().unwrap().fleet.expect("stats carry fleet")
+}
+
+/// Hedge routing over TCP: a 20ms/token straggler takes every prompt;
+/// the idle fast peer inherits its undone rows as a duplicate lease and
+/// wins the race. Every row is served downstream exactly once, its
+/// content identical to the deterministic single-engine decode (the
+/// revoked copy leaked nothing), and the straggler survives revocation.
+#[test]
+fn hedge_duplicates_over_tcp_commit_exactly_once() {
+    let server = TcpJsonlServer::bind(
+        fleet_session(FleetOptions {
+            policy: RoutingPolicy::Hedge,
+            hedge_factor: 0.0,
+            hedge_min_ms: 0,
+            hedge_min_samples: 1,
+            ..FleetOptions::default()
+        }),
+        ("127.0.0.1", 0),
+    )
+    .unwrap();
+    let port = server.port();
+    let monitor = ServiceClient::connect(("127.0.0.1", port)).unwrap();
+    // Tag 26: response lengths [18, 18, 18, 12] at version 0, so the
+    // straggler's lease stays in flight for >= 12 x 20ms.
+    let prompts = feed_prompts(&monitor, BATCH, 26);
+
+    let never = Arc::new(AtomicBool::new(false));
+    let straggler = spawn_worker(
+        ServiceClient::connect(("127.0.0.1", port)).unwrap(),
+        WorkerCfg {
+            token_delay: Duration::from_millis(20),
+            chunk_tokens: 1,
+            tags: vec!["slow-accurate".into()],
+            ..WorkerCfg::new("straggler")
+        },
+        never.clone(),
+    );
+    // The straggler connects alone and leases the whole pool before the
+    // fast peer shows up to find it empty.
+    std::thread::sleep(Duration::from_millis(40));
+    let fast = spawn_worker(
+        ServiceClient::connect(("127.0.0.1", port)).unwrap(),
+        WorkerCfg {
+            tags: vec!["fast-cheap".into()],
+            ..WorkerCfg::new("fast")
+        },
+        never.clone(),
+    );
+
+    let rows = drain(&monitor, BATCH);
+    for (idx, prompt) in &prompts {
+        let (tokens, logps) = &rows[idx];
+        let (want_t, want_l) = reference(prompt, 0);
+        assert_eq!(tokens, &want_t, "row {idx:?} committed decode differs");
+        assert_eq!(logps, &want_l, "row {idx:?} committed logps differ");
+    }
+    let f = fleet_of(&monitor);
+    assert_eq!(f.routing, "hedge");
+    assert!(f.hedges_issued >= 1, "no hedge fired: {f:?}");
+    assert!(
+        f.hedge_rows_won_by_duplicate + f.hedge_rows_won_by_primary >= 1,
+        "hedged rows resolved a winner: {f:?}"
+    );
+    // Both engines surfaced their capability specs through the polls.
+    let specs: HashSet<String> =
+        f.engines.iter().map(|e| e.spec.kind.clone()).collect();
+    assert!(specs.contains("mock"), "worker engine specs registered");
+    assert!(
+        f.engines.iter().all(|e| e.spec_reported),
+        "capability reports rode the polls: {f:?}"
+    );
+
+    monitor.shutdown().unwrap();
+    straggler.join().unwrap().unwrap();
+    fast.join().unwrap().unwrap();
+    server.stop();
+}
+
+/// Mirror routing with a skewed replica: the duplicate runs at a
+/// different parameter version, so every compared row diverges — and
+/// the mirror's copy is never what downstream sees (the primary's
+/// version-0 decode is).
+#[test]
+fn mirror_detects_divergence_over_tcp() {
+    let server = TcpJsonlServer::bind(
+        fleet_session(FleetOptions {
+            policy: RoutingPolicy::Mirror,
+            mirror_fanout: 2,
+            ..FleetOptions::default()
+        }),
+        ("127.0.0.1", 0),
+    )
+    .unwrap();
+    let port = server.port();
+    let monitor = ServiceClient::connect(("127.0.0.1", port)).unwrap();
+    // Tag 26 again: long version-0 rows, and version 1 changes every
+    // row's response length — all mirrored comparisons must diverge.
+    let prompts = feed_prompts(&monitor, BATCH, 26);
+
+    let never = Arc::new(AtomicBool::new(false));
+    let primary = spawn_worker(
+        ServiceClient::connect(("127.0.0.1", port)).unwrap(),
+        WorkerCfg {
+            token_delay: Duration::from_millis(20),
+            chunk_tokens: 1,
+            ..WorkerCfg::new("primary")
+        },
+        never.clone(),
+    );
+    std::thread::sleep(Duration::from_millis(40));
+    let skewed = spawn_worker(
+        ServiceClient::connect(("127.0.0.1", port)).unwrap(),
+        WorkerCfg { version: 1, ..WorkerCfg::new("skewed") },
+        never.clone(),
+    );
+
+    let rows = drain(&monitor, BATCH);
+    for (idx, prompt) in &prompts {
+        let (want_t, _) = reference(prompt, 0);
+        assert_eq!(
+            rows[idx].0, want_t,
+            "downstream must see the primary's decode, never the mirror's"
+        );
+    }
+    // The mirror copy resolves asynchronously against the commit.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let f = loop {
+        let f = fleet_of(&monitor);
+        if f.mirror_divergences >= 1 || Instant::now() >= deadline {
+            break f;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert!(f.mirrors_issued >= 1, "no mirror issued: {f:?}");
+    assert!(f.mirror_divergences >= 1, "skewed replica diverges: {f:?}");
+
+    monitor.shutdown().unwrap();
+    primary.join().unwrap().unwrap();
+    skewed.join().unwrap().unwrap();
+    server.stop();
+}
+
+/// Mirror routing with identical replicas: comparisons match, none
+/// diverge.
+#[test]
+fn mirror_identical_replicas_match_over_tcp() {
+    let server = TcpJsonlServer::bind(
+        fleet_session(FleetOptions {
+            policy: RoutingPolicy::Mirror,
+            mirror_fanout: 2,
+            ..FleetOptions::default()
+        }),
+        ("127.0.0.1", 0),
+    )
+    .unwrap();
+    let port = server.port();
+    let monitor = ServiceClient::connect(("127.0.0.1", port)).unwrap();
+    // Tag 83: version-0 lengths [18, 16, 12, 12] — long flights again.
+    feed_prompts(&monitor, BATCH, 83);
+
+    let never = Arc::new(AtomicBool::new(false));
+    let a = spawn_worker(
+        ServiceClient::connect(("127.0.0.1", port)).unwrap(),
+        WorkerCfg {
+            token_delay: Duration::from_millis(20),
+            chunk_tokens: 1,
+            ..WorkerCfg::new("a")
+        },
+        never.clone(),
+    );
+    std::thread::sleep(Duration::from_millis(40));
+    let b = spawn_worker(
+        ServiceClient::connect(("127.0.0.1", port)).unwrap(),
+        WorkerCfg::new("b"),
+        never.clone(),
+    );
+
+    drain(&monitor, BATCH);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let f = loop {
+        let f = fleet_of(&monitor);
+        if f.mirror_matches >= 1 || Instant::now() >= deadline {
+            break f;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert!(f.mirrors_issued >= 1, "no mirror issued: {f:?}");
+    assert!(f.mirror_matches >= 1, "identical replicas agree: {f:?}");
+    assert_eq!(f.mirror_divergences, 0, "nothing diverged: {f:?}");
+
+    monitor.shutdown().unwrap();
+    a.join().unwrap().unwrap();
+    b.join().unwrap().unwrap();
+    server.stop();
+}
+
+/// Fallback routing: an injected engine fault fails the lease over the
+/// wire, so the rows requeue *immediately* — the drain below finishes
+/// in seconds against a 30s TTL that would otherwise gate the requeue —
+/// and the worker loop survives to regenerate them itself.
+#[test]
+fn engine_fault_fails_over_without_waiting_out_the_ttl() {
+    let server = TcpJsonlServer::bind(
+        fleet_session(FleetOptions {
+            policy: RoutingPolicy::Fallback,
+            ..FleetOptions::default()
+        }),
+        ("127.0.0.1", 0),
+    )
+    .unwrap();
+    let port = server.port();
+    let monitor = ServiceClient::connect(("127.0.0.1", port)).unwrap();
+    let prompts = feed_prompts(&monitor, BATCH, 29);
+
+    let never = Arc::new(AtomicBool::new(false));
+    // Faults on the very first decode step of the first lease: no
+    // partial chunk lands before the fail-over.
+    let worker = spawn_worker(
+        ServiceClient::connect(("127.0.0.1", port)).unwrap(),
+        WorkerCfg {
+            fault_after_steps: Some(0),
+            ttl_ms: 30_000,
+            ..WorkerCfg::new("flaky")
+        },
+        never.clone(),
+    );
+
+    let t0 = Instant::now();
+    let rows = drain(&monitor, BATCH);
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "requeue rode the fail_lease path, not the 30s TTL sweep"
+    );
+    for (idx, prompt) in &prompts {
+        let (want_t, _) = reference(prompt, 0);
+        assert_eq!(rows[idx].0, want_t, "regenerated row {idx:?} intact");
+    }
+    let f = fleet_of(&monitor);
+    assert!(f.fallback_requeues >= 1, "fail_lease counted: {f:?}");
+
+    monitor.shutdown().unwrap();
+    let report = worker.join().unwrap().unwrap();
+    assert_eq!(report.engine_errors, 1, "one survived fault");
+    assert_eq!(
+        report.samples, BATCH as u64,
+        "the same worker regenerated everything after failing over"
+    );
+    server.stop();
+}

@@ -456,6 +456,7 @@ fn exercise_every_verb(encode: &dyn Fn(&ServiceRequest) -> String) {
         ttl_ms: 30_000,
         timeout_ms: 2_000,
         columns: vec![Column::Prompts],
+        engine: None,
     })) {
         Resp::Lease(r) => r,
         _ => panic!("lease_prompts must return a lease reply"),
