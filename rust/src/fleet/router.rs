@@ -104,6 +104,12 @@ struct LeaseMeta {
     role: Role,
     /// Duplicate leases granted against this one (primary side only).
     partners: Vec<LeaseId>,
+    /// Duplicates promised but not yet recorded: a candidate pick
+    /// reserves the primary under the router lock so two concurrent
+    /// idle pollers can never both hedge (or over-fan a mirror of)
+    /// the same straggler. `record_dup` consumes the reservation;
+    /// a failed grant releases it.
+    reserved_dups: usize,
     last_activity: Instant,
 }
 
@@ -157,6 +163,12 @@ struct DupEntry {
     winner: Option<LeaseId>,
     winner_tokens: Option<Vec<i32>>,
     pending: Vec<Vec<i32>>,
+    /// The row's cells were committed outside the duplicated pair
+    /// (the primary raced `record_dup` and committed as a plain row,
+    /// or the row was revoked, requeued, and re-leased elsewhere).
+    /// Every participant's chunks divert, and no participant's death
+    /// requeues the row.
+    foreign_commit: bool,
 }
 
 #[derive(Default)]
@@ -316,7 +328,10 @@ impl FleetRouter {
     /// Load-balance deferral: should this worker's poll return empty
     /// even though rows are ready? Only when a strictly-less-loaded
     /// peer polled recently — the least-loaded active poller never
-    /// defers, so dispatch always makes progress.
+    /// defers, so dispatch always makes progress. Callers must only
+    /// consult this when rows are actually queued: a deferral both
+    /// counts in `lb_deferrals` and costs the worker its long-poll,
+    /// neither of which is right when there was nothing to defer.
     pub fn should_defer(
         &self,
         worker: &str,
@@ -357,6 +372,7 @@ impl FleetRouter {
                 task: task.to_string(),
                 role: Role::Primary,
                 partners: Vec::new(),
+                reserved_dups: 0,
                 last_activity: Instant::now(),
             },
         );
@@ -379,13 +395,17 @@ impl FleetRouter {
     /// rows `poller` should duplicate. Fires only once the fleet's
     /// chunk-interval distribution has enough samples, and only
     /// against a primary lease on a *different* worker with no
-    /// duplicate yet whose silence exceeds the latency budget.
+    /// duplicate yet whose silence exceeds the latency budget. The
+    /// pick *reserves* the primary under this same lock (see
+    /// [`LeaseMeta::reserved_dups`]); the caller must follow up with
+    /// [`FleetRouter::record_dup`] or
+    /// [`FleetRouter::release_duplicate`].
     pub fn hedge_candidate(
         &self,
         poller: &str,
         task: &str,
     ) -> Option<LeaseId> {
-        let g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
         if g.options.policy != RoutingPolicy::Hedge {
             return None;
         }
@@ -399,6 +419,7 @@ impl FleetRouter {
         for (id, meta) in &g.leases {
             if meta.role != Role::Primary
                 || !meta.partners.is_empty()
+                || meta.reserved_dups > 0
                 || meta.task != task
                 || meta.worker == poller
             {
@@ -424,17 +445,23 @@ impl FleetRouter {
                 best = Some((silent_ms, *id));
             }
         }
-        best.map(|(_, id)| id)
+        let id = best.map(|(_, id)| id)?;
+        if let Some(meta) = g.leases.get_mut(&id) {
+            meta.reserved_dups += 1;
+        }
+        Some(id)
     }
 
     /// Mirror: pick a primary lease on a different worker that still
-    /// has fewer than `mirror_fanout - 1` duplicates.
+    /// has fewer than `mirror_fanout - 1` duplicates (reservations
+    /// included — see [`FleetRouter::hedge_candidate`] for the
+    /// reserve/consume/release contract).
     pub fn mirror_candidate(
         &self,
         poller: &str,
         task: &str,
     ) -> Option<LeaseId> {
-        let g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
         if g.options.policy != RoutingPolicy::Mirror {
             return None;
         }
@@ -443,9 +470,10 @@ impl FleetRouter {
             Some(e) if e.spec_reported => Some(e.spec.clone()),
             _ => None,
         };
+        let mut picked = None;
         for (id, meta) in &g.leases {
             if meta.role != Role::Primary
-                || meta.partners.len() >= want
+                || meta.partners.len() + meta.reserved_dups >= want
                 || meta.task != task
                 || meta.worker == poller
             {
@@ -464,9 +492,26 @@ impl FleetRouter {
                     }
                 }
             }
-            return Some(*id);
+            picked = Some(*id);
+            break;
         }
-        None
+        let id = picked?;
+        if let Some(meta) = g.leases.get_mut(&id) {
+            meta.reserved_dups += 1;
+        }
+        Some(id)
+    }
+
+    /// Release a duplication reservation taken by
+    /// [`FleetRouter::hedge_candidate`] /
+    /// [`FleetRouter::mirror_candidate`] when the duplicate grant
+    /// could not go through (no undone rows left, fetch failed, the
+    /// primary died).
+    pub fn release_duplicate(&self, primary: LeaseId) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(meta) = g.leases.get_mut(&primary) {
+            meta.reserved_dups = meta.reserved_dups.saturating_sub(1);
+        }
     }
 
     /// A duplicate lease `dup` was granted against `primary`, covering
@@ -492,10 +537,12 @@ impl FleetRouter {
                 task: task.to_string(),
                 role,
                 partners: vec![primary],
+                reserved_dups: 0,
                 last_activity: Instant::now(),
             },
         );
         if let Some(meta) = g.leases.get_mut(&primary) {
+            meta.reserved_dups = meta.reserved_dups.saturating_sub(1);
             meta.partners.push(dup);
         }
         for idx in rows {
@@ -505,6 +552,7 @@ impl FleetRouter {
                 winner: None,
                 winner_tokens: None,
                 pending: Vec::new(),
+                foreign_commit: false,
             });
             if !entry.participants.contains(&dup) {
                 entry.participants.push(dup);
@@ -520,11 +568,20 @@ impl FleetRouter {
     /// `(index, finished, chunk_tokens)` in chunk order; the returned
     /// plans are parallel to it. Also records the chunk interval into
     /// the hedge-budget distribution and the engine's counters.
+    ///
+    /// The second return value lists the duplicated rows this call
+    /// *claimed* the win for. A claim is provisional: it is taken
+    /// under the router lock (so the partner's racing chunk diverts)
+    /// but the caller owes a [`FleetRouter::confirm_claim`] once the
+    /// row's cells are durably committed — or a
+    /// [`FleetRouter::rollback_claims`] if the commit fails, so the
+    /// row stays winnable (and requeueable) instead of stranding
+    /// behind a winner that never committed.
     pub fn filter_chunk(
         &self,
         lease: LeaseId,
         rows: &[(GlobalIndex, bool, usize)],
-    ) -> Vec<RowPlan> {
+    ) -> (Vec<RowPlan>, Vec<GlobalIndex>) {
         let mut g = self.inner.lock().unwrap();
         let now = Instant::now();
         let chunk_tokens: usize = rows.iter().map(|r| r.2).sum();
@@ -557,12 +614,26 @@ impl FleetRouter {
         }
 
         let mut plans = Vec::with_capacity(rows.len());
+        let mut claimed = Vec::new();
         for (idx, finished, _) in rows {
-            // First pass, with the row entry borrowed: decide, and for
-            // a contested finish, claim the win under this same lock so
-            // the other side's racing chunk sees it and diverts.
+            // Decide with the row entry borrowed; for a contested
+            // finish, claim the win under this same lock so the other
+            // side's racing chunk sees it and diverts. Accounting is
+            // deferred to `confirm_claim` — a claim only becomes a win
+            // once the caller's commit actually lands.
             let decision = match g.rows.get_mut(idx) {
                 None => Decision::Plain,
+                // A lease outside the duplicated pair never contends
+                // for the row: routing returns Plain and the lease
+                // table (which this lease does not own the row in)
+                // rejects the chunk. Without this, any worker that
+                // sent a stray index could steal the pair's win.
+                Some(entry) if !entry.participants.contains(&lease) => {
+                    Decision::Plain
+                }
+                // Committed outside the pair (a duplicate-grant race):
+                // every participant's copy just diverts.
+                Some(entry) if entry.foreign_commit => Decision::Drop,
                 Some(entry) => match entry.winner {
                     Some(w) if w == lease => Decision::Drop,
                     Some(_) => match entry.mode {
@@ -572,6 +643,7 @@ impl FleetRouter {
                     },
                     None if *finished => {
                         entry.winner = Some(lease);
+                        claimed.push(*idx);
                         let losers: Vec<LeaseId> = entry
                             .participants
                             .iter()
@@ -583,7 +655,6 @@ impl FleetRouter {
                     None => Decision::Plain,
                 },
             };
-            // Second pass, entry borrow released: account the win.
             match decision {
                 Decision::Plain => {
                     plans.push(RowPlan::Commit { losers: Vec::new() });
@@ -596,39 +667,98 @@ impl FleetRouter {
                     plans.push(RowPlan::Commit { losers: Vec::new() });
                 }
                 Decision::Win { mode: DupMode::Hedge, losers } => {
-                    let winner_role = g
-                        .leases
-                        .get(&lease)
-                        .map(|m| m.role)
-                        .unwrap_or(Role::Primary);
-                    let winner_worker =
-                        g.leases.get(&lease).map(|m| m.worker.clone());
-                    let loser_workers: Vec<String> = losers
-                        .iter()
-                        .filter_map(|l| {
-                            g.leases.get(l).map(|m| m.worker.clone())
-                        })
-                        .collect();
-                    if winner_role == Role::Hedge {
-                        g.counters.hedge_rows_won_by_duplicate += 1;
-                    } else {
-                        g.counters.hedge_rows_won_by_primary += 1;
-                    }
-                    if let Some(w) = winner_worker {
-                        if let Some(e) = g.engines.get_mut(&w) {
-                            e.hedge_rows_won += 1;
-                        }
-                    }
-                    for w in loser_workers {
-                        if let Some(e) = g.engines.get_mut(&w) {
-                            e.hedge_rows_lost += 1;
-                        }
-                    }
                     plans.push(RowPlan::Commit { losers });
                 }
             }
         }
-        plans
+        (plans, claimed)
+    }
+
+    /// A claimed row's cells committed durably: the claim is now a
+    /// win — account it (hedge won/lost counters; mirror wins carry no
+    /// counters of their own, comparison resolution does).
+    pub fn confirm_claim(&self, lease: LeaseId, index: GlobalIndex) {
+        let mut g = self.inner.lock().unwrap();
+        let losers = {
+            let Some(entry) = g.rows.get(&index) else { return };
+            if entry.winner != Some(lease)
+                || entry.mode != DupMode::Hedge
+            {
+                return;
+            }
+            entry
+                .participants
+                .iter()
+                .copied()
+                .filter(|p| *p != lease)
+                .collect::<Vec<_>>()
+        };
+        let winner_role = g
+            .leases
+            .get(&lease)
+            .map(|m| m.role)
+            .unwrap_or(Role::Primary);
+        let winner_worker = g.leases.get(&lease).map(|m| m.worker.clone());
+        let loser_workers: Vec<String> = losers
+            .iter()
+            .filter_map(|l| g.leases.get(l).map(|m| m.worker.clone()))
+            .collect();
+        if winner_role == Role::Hedge {
+            g.counters.hedge_rows_won_by_duplicate += 1;
+        } else {
+            g.counters.hedge_rows_won_by_primary += 1;
+        }
+        if let Some(w) = winner_worker {
+            if let Some(e) = g.engines.get_mut(&w) {
+                e.hedge_rows_won += 1;
+            }
+        }
+        for w in loser_workers {
+            if let Some(e) = g.engines.get_mut(&w) {
+                e.hedge_rows_lost += 1;
+            }
+        }
+    }
+
+    /// Undo provisional winner claims taken by
+    /// [`FleetRouter::filter_chunk`] whose commit never landed (the
+    /// chunk was rejected downstream). The rows become winnable again
+    /// — by either side — and a later sweep requeues them normally
+    /// instead of treating them as committed.
+    pub fn rollback_claims(&self, lease: LeaseId, rows: &[GlobalIndex]) {
+        let mut g = self.inner.lock().unwrap();
+        for idx in rows {
+            if let Some(entry) = g.rows.get_mut(idx) {
+                if entry.winner == Some(lease) {
+                    entry.winner = None;
+                }
+            }
+        }
+    }
+
+    /// A duplicated row turned out to be committed outside its pair
+    /// (its cells exist but no participant won it): clear any
+    /// provisional claim `lease` holds on it and mark the entry so
+    /// every participant's chunks divert and no participant's death
+    /// requeues it. Returns `false` when the row is not duplicated —
+    /// the caller then treats the squatted cell as the protocol
+    /// violation it is.
+    pub fn note_foreign_commit(
+        &self,
+        lease: LeaseId,
+        index: GlobalIndex,
+    ) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let Some(entry) = g.rows.get_mut(&index) else {
+            return false;
+        };
+        if entry.winner == Some(lease) {
+            entry.winner = None;
+        }
+        if entry.winner.is_none() {
+            entry.foreign_commit = true;
+        }
+        true
     }
 
     /// The winner's full token sequence for a committed mirror row —
@@ -707,17 +837,33 @@ impl FleetRouter {
         let mut g = self.inner.lock().unwrap();
         g.leases.remove(&lease);
         let gone = HashSet::from([lease]);
+        Self::scrub_partners(&mut g, &gone);
         Self::prune_rows(&mut g, &gone);
     }
 
+    /// Remove departed leases from every survivor's partner list, so a
+    /// primary whose hedge/mirror duplicate died becomes a candidate
+    /// again instead of looking duplicated forever.
+    fn scrub_partners(g: &mut Inner, gone: &HashSet<LeaseId>) {
+        for meta in g.leases.values_mut() {
+            meta.partners.retain(|p| !gone.contains(p));
+        }
+    }
+
     /// Drop row entries that can no longer affect routing: every
-    /// departed lease is removed from `participants`; an entry stays
-    /// only while more than one undecided participant remains, or a
-    /// decided winner still has a live loser whose chunks must keep
-    /// diverting.
+    /// departed (or no-longer-registered) lease is removed from
+    /// `participants`; an entry stays only while more than one
+    /// undecided participant remains, or a decided winner still has a
+    /// live loser whose chunks must keep diverting, or a foreign
+    /// commit still has participants whose chunks must divert.
     fn prune_rows(g: &mut Inner, gone: &HashSet<LeaseId>) {
-        g.rows.retain(|_, entry| {
-            entry.participants.retain(|p| !gone.contains(p));
+        let Inner { rows, leases, .. } = g;
+        rows.retain(|_, entry| {
+            entry.participants
+                .retain(|p| !gone.contains(p) && leases.contains_key(p));
+            if entry.foreign_commit {
+                return !entry.participants.is_empty();
+            }
             match entry.winner {
                 None => entry.participants.len() > 1,
                 Some(w) => {
@@ -748,6 +894,7 @@ impl FleetRouter {
         );
         g.counters.fallback_requeues += rows.len() as u64;
         g.leases.remove(&revoked.id);
+        Self::scrub_partners(&mut g, &dead);
         Self::prune_rows(&mut g, &dead);
         rows
     }
@@ -779,6 +926,7 @@ impl FleetRouter {
         for id in &dead {
             g.leases.remove(id);
         }
+        Self::scrub_partners(&mut g, &dead);
         Self::prune_rows(&mut g, &dead);
         out
     }
@@ -798,8 +946,9 @@ impl FleetRouter {
             let requeue = match g.rows.get(idx) {
                 None => true,
                 Some(entry) => {
-                    if entry.winner.is_some() {
-                        // Already committed by the other side.
+                    if entry.winner.is_some() || entry.foreign_commit {
+                        // Already committed — by the other side of the
+                        // pair, or by a foreign writer outside it.
                         false
                     } else {
                         // Requeue only if no other participant is both
@@ -901,7 +1050,7 @@ mod tests {
     fn uncontested_rows_commit() {
         let r = FleetRouter::default();
         r.on_grant(1, "w0", "rollout");
-        let plans =
+        let (plans, claimed) =
             r.filter_chunk(1, &[(idx(0), false, 2), (idx(1), true, 3)]);
         assert_eq!(
             plans,
@@ -910,6 +1059,7 @@ mod tests {
                 RowPlan::Commit { losers: vec![] }
             ]
         );
+        assert!(claimed.is_empty(), "plain rows claim nothing");
     }
 
     #[test]
@@ -920,14 +1070,16 @@ mod tests {
 
         // The duplicate finishes first: it commits and names the
         // straggler as the loser to discard.
-        let plans = r.filter_chunk(2, &[(idx(7), true, 4)]);
+        let (plans, claimed) = r.filter_chunk(2, &[(idx(7), true, 4)]);
         assert_eq!(plans, vec![RowPlan::Commit { losers: vec![1] }]);
+        assert_eq!(claimed, vec![idx(7)]);
+        r.confirm_claim(2, idx(7));
 
         // The straggler's late chunks for the row — partial or
         // finished — are dropped, never committed.
-        let plans = r.filter_chunk(1, &[(idx(7), false, 2)]);
+        let (plans, _) = r.filter_chunk(1, &[(idx(7), false, 2)]);
         assert_eq!(plans, vec![RowPlan::Drop]);
-        let plans = r.filter_chunk(1, &[(idx(7), true, 2)]);
+        let (plans, _) = r.filter_chunk(1, &[(idx(7), true, 2)]);
         assert_eq!(plans, vec![RowPlan::Drop]);
 
         let s = r.stats();
@@ -941,13 +1093,133 @@ mod tests {
         let r = hedge_router();
         r.on_grant(1, "slow", "rollout");
         r.record_dup(1, 2, "fast", "rollout", &[idx(3)], DupMode::Hedge);
-        let plans = r.filter_chunk(1, &[(idx(3), true, 4)]);
+        let (plans, claimed) = r.filter_chunk(1, &[(idx(3), true, 4)]);
         assert_eq!(plans, vec![RowPlan::Commit { losers: vec![2] }]);
+        assert_eq!(claimed, vec![idx(3)]);
+        r.confirm_claim(1, idx(3));
         assert_eq!(
-            r.filter_chunk(2, &[(idx(3), true, 4)]),
+            r.filter_chunk(2, &[(idx(3), true, 4)]).0,
             vec![RowPlan::Drop]
         );
         assert_eq!(r.stats().hedge_rows_won_by_primary, 1);
+    }
+
+    #[test]
+    fn rolled_back_claim_leaves_row_winnable_and_requeueable() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.record_dup(1, 2, "fast", "rollout", &[idx(7)], DupMode::Hedge);
+        // The duplicate claims the win, but its commit fails
+        // downstream: the claim is rolled back...
+        let (plans, claimed) = r.filter_chunk(2, &[(idx(7), true, 4)]);
+        assert_eq!(plans, vec![RowPlan::Commit { losers: vec![1] }]);
+        r.rollback_claims(2, &claimed);
+        // ...so the straggler can still win the row...
+        let (plans, claimed) = r.filter_chunk(1, &[(idx(7), true, 4)]);
+        assert_eq!(plans, vec![RowPlan::Commit { losers: vec![2] }]);
+        r.rollback_claims(1, &claimed);
+        // ...and with no commit landing anywhere, both deaths requeue
+        // the row exactly once — it is not stranded behind a phantom
+        // winner.
+        let out = r.on_leases_swept(&[
+            revoked(1, "rollout", "slow", &[7]),
+            revoked(2, "rollout", "fast", &[7]),
+        ]);
+        let total: usize = out.iter().map(|(_, rows)| rows.len()).sum();
+        assert_eq!(total, 1, "{out:?}");
+    }
+
+    #[test]
+    fn unconfirmed_claim_counts_nothing() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.record_dup(1, 2, "fast", "rollout", &[idx(7)], DupMode::Hedge);
+        r.filter_chunk(2, &[(idx(7), true, 4)]);
+        let s = r.stats();
+        assert_eq!(s.hedge_rows_won_by_duplicate, 0, "claim ≠ win");
+        r.confirm_claim(2, idx(7));
+        assert_eq!(r.stats().hedge_rows_won_by_duplicate, 1);
+    }
+
+    #[test]
+    fn non_participant_lease_cannot_steal_a_duplicated_row() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.record_dup(1, 2, "fast", "rollout", &[idx(7)], DupMode::Hedge);
+        // A third lease referencing the duplicated index gets Plain —
+        // the lease table will reject the foreign row — and must NOT
+        // take the winner slot.
+        r.on_grant(3, "rogue", "rollout");
+        let (plans, claimed) = r.filter_chunk(3, &[(idx(7), true, 4)]);
+        assert_eq!(plans, vec![RowPlan::Commit { losers: vec![] }]);
+        assert!(claimed.is_empty());
+        // The real pair is unaffected: the duplicate still wins.
+        let (plans, claimed) = r.filter_chunk(2, &[(idx(7), true, 4)]);
+        assert_eq!(plans, vec![RowPlan::Commit { losers: vec![1] }]);
+        assert_eq!(claimed, vec![idx(7)]);
+    }
+
+    #[test]
+    fn foreign_commit_diverts_pair_and_blocks_requeue() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.record_dup(1, 2, "fast", "rollout", &[idx(7)], DupMode::Hedge);
+        // Not a duplicated row -> the caller must treat the squatted
+        // cell as a protocol violation.
+        assert!(!r.note_foreign_commit(2, idx(99)));
+        // The duplicated row committed outside the pair: both sides'
+        // chunks divert...
+        assert!(r.note_foreign_commit(2, idx(7)));
+        assert_eq!(
+            r.filter_chunk(2, &[(idx(7), true, 4)]).0,
+            vec![RowPlan::Drop]
+        );
+        assert_eq!(
+            r.filter_chunk(1, &[(idx(7), false, 1)]).0,
+            vec![RowPlan::Drop]
+        );
+        // ...and neither side's death requeues the already-committed
+        // row.
+        let out = r.on_leases_swept(&[
+            revoked(1, "rollout", "slow", &[7]),
+            revoked(2, "rollout", "fast", &[7]),
+        ]);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn candidate_reservation_blocks_concurrent_duplicates() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.filter_chunk(1, &[(idx(0), false, 1)]);
+        std::thread::sleep(Duration::from_millis(5));
+        // First idle poller reserves the straggler...
+        assert_eq!(r.hedge_candidate("fast", "rollout"), Some(1));
+        // ...so a second concurrent poller cannot double-hedge it.
+        assert_eq!(r.hedge_candidate("other", "rollout"), None);
+        // A failed grant releases the reservation; the candidate is
+        // available again.
+        r.release_duplicate(1);
+        assert_eq!(r.hedge_candidate("other", "rollout"), Some(1));
+        // record_dup consumes the reservation for good.
+        r.record_dup(1, 2, "other", "rollout", &[idx(0)], DupMode::Hedge);
+        assert_eq!(r.hedge_candidate("fast", "rollout"), None);
+    }
+
+    #[test]
+    fn mirror_reservation_counts_toward_fanout() {
+        let r = FleetRouter::new(FleetOptions {
+            policy: RoutingPolicy::Mirror,
+            mirror_fanout: 2,
+            ..FleetOptions::default()
+        });
+        r.on_grant(1, "a", "rollout");
+        assert_eq!(r.mirror_candidate("b", "rollout"), Some(1));
+        // Reservation outstanding: a concurrent poller must not
+        // over-fan the mirror.
+        assert_eq!(r.mirror_candidate("c", "rollout"), None);
+        r.record_dup(1, 2, "b", "rollout", &[idx(0)], DupMode::Mirror);
+        assert_eq!(r.mirror_candidate("c", "rollout"), None, "fanout cap");
     }
 
     #[test]
@@ -1018,9 +1290,10 @@ mod tests {
         r.on_grant(1, "slow", "rollout");
         r.record_dup(1, 2, "fast", "rollout", &[idx(5)], DupMode::Hedge);
         assert_eq!(
-            r.filter_chunk(2, &[(idx(5), true, 4)]),
+            r.filter_chunk(2, &[(idx(5), true, 4)]).0,
             vec![RowPlan::Commit { losers: vec![1] }]
         );
+        r.confirm_claim(2, idx(5));
         // Straggler expires afterwards: its copy of row 5 must NOT
         // requeue — the row already trained via the duplicate.
         let out =
@@ -1062,12 +1335,12 @@ mod tests {
 
         // Row 0: winner commits first, loser compares after — a match.
         assert_eq!(
-            r.filter_chunk(1, &[(idx(0), true, 3)]),
+            r.filter_chunk(1, &[(idx(0), true, 3)]).0,
             vec![RowPlan::Commit { losers: vec![] }]
         );
         r.note_committed(idx(0), 1, &[10, 11, 12]);
         assert_eq!(
-            r.filter_chunk(2, &[(idx(0), true, 3)]),
+            r.filter_chunk(2, &[(idx(0), true, 3)]).0,
             vec![RowPlan::Compare]
         );
         r.resolve_mirror(idx(0), vec![10, 11, 12]);
@@ -1076,11 +1349,11 @@ mod tests {
         // commit is still in flight — parked, then resolved as a
         // divergence.
         assert_eq!(
-            r.filter_chunk(2, &[(idx(1), true, 3)]),
+            r.filter_chunk(2, &[(idx(1), true, 3)]).0,
             vec![RowPlan::Commit { losers: vec![] }]
         );
         assert_eq!(
-            r.filter_chunk(1, &[(idx(1), true, 3)]),
+            r.filter_chunk(1, &[(idx(1), true, 3)]).0,
             vec![RowPlan::Compare]
         );
         r.resolve_mirror(idx(1), vec![7, 7, 7]);
@@ -1115,6 +1388,19 @@ mod tests {
     }
 
     #[test]
+    fn dead_duplicate_reopens_primary_for_hedging() {
+        let r = hedge_router();
+        r.on_grant(1, "slow", "rollout");
+        r.record_dup(1, 2, "fast", "rollout", &[idx(5)], DupMode::Hedge);
+        // The duplicate dies alone; the straggler is still stuck — it
+        // must become hedge-able again, not look duplicated forever.
+        r.on_leases_swept(&[revoked(2, "rollout", "fast", &[5])]);
+        r.filter_chunk(1, &[(idx(5), false, 1)]);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(r.hedge_candidate("other", "rollout"), Some(1));
+    }
+
+    #[test]
     fn lb_defers_only_loaded_workers_with_idler_peers() {
         let r = FleetRouter::default();
         r.note_poll("busy", None);
@@ -1142,7 +1428,7 @@ mod tests {
         // Entry gone: a fresh lease on the same index commits normally.
         r.on_grant(3, "c", "rollout");
         assert_eq!(
-            r.filter_chunk(3, &[(idx(9), true, 1)]),
+            r.filter_chunk(3, &[(idx(9), true, 1)]).0,
             vec![RowPlan::Commit { losers: vec![] }]
         );
     }

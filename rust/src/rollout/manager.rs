@@ -218,8 +218,13 @@ impl RolloutManager {
         // Fleet routing, poll side: register the poll (and the engine
         // spec riding it), then let the router defer a loaded worker in
         // favor of an actively-polling idler (load-balance / fallback).
+        // Deferral is only consulted when rows are actually queued: an
+        // empty queue has nothing to defer, and eating the worker's
+        // long-poll (plus counting `lb_deferrals`) for it would just
+        // add dispatch latency and noise.
         self.router.note_poll(&spec.worker, spec.engine.as_ref());
-        if self.router.should_defer(&spec.worker, &self.table.owner_load())
+        if ctrl.ready_depth() > 0
+            && self.router.should_defer(&spec.worker, &self.table.owner_load())
         {
             return Ok(LeaseReply {
                 lease: None,
@@ -334,6 +339,10 @@ impl RolloutManager {
     /// `None` when the policy, the candidates, or the rows say no —
     /// the caller then sends the ordinary empty reply.
     fn try_duplicate(&self, spec: &LeaseSpec) -> Option<LeaseReply> {
+        // The candidate pick *reserves* the primary inside the router
+        // lock, so two idle pollers racing this path can never both
+        // duplicate the same straggler. Every bail-out before
+        // `record_dup` (which consumes the reservation) must release.
         let (primary, mode) = match self.router.policy() {
             RoutingPolicy::Hedge => (
                 self.router.hedge_candidate(&spec.worker, &spec.task)?,
@@ -346,19 +355,28 @@ impl RolloutManager {
             _ => return None,
         };
         let t0 = crate::telemetry::now_us();
-        let rows: Vec<GlobalIndex> = self
-            .table
-            .undone_rows(primary)?
-            .into_iter()
-            .take(spec.count)
-            .collect();
+        let rows: Vec<GlobalIndex> = match self.table.undone_rows(primary)
+        {
+            Some(v) => v.into_iter().take(spec.count).collect(),
+            None => {
+                self.router.release_duplicate(primary);
+                return None;
+            }
+        };
         if rows.is_empty() {
+            self.router.release_duplicate(primary);
             return None;
         }
         // The straggler's prompt cells can be gone by now (won, trained
         // and reclaimed since the candidate pick) — then there is
         // simply nothing left worth duplicating.
-        let batch = self.tq.try_fetch(&rows, &spec.columns).ok()?;
+        let batch = match self.tq.try_fetch(&rows, &spec.columns) {
+            Ok(b) => b,
+            Err(_) => {
+                self.router.release_duplicate(primary);
+                return None;
+            }
+        };
         let dup = self.table.grant(
             &spec.worker,
             &spec.task,
@@ -367,6 +385,37 @@ impl RolloutManager {
         );
         self.router
             .record_dup(primary, dup, &spec.worker, &spec.task, &rows, mode);
+        // Close the duplicate-grant race: a row the primary finished
+        // (or lost) between the `undone_rows` snapshot above and
+        // `record_dup` was committed as a *plain* row — no DupEntry
+        // existed to arbitrate, so the pair must never contend for it.
+        // Discard the duplicate's copy and mark the entry foreign so
+        // neither side's chunks commit it again or requeue it.
+        let still_undone: HashSet<GlobalIndex> = self
+            .table
+            .undone_rows(primary)
+            .map(|v| v.into_iter().collect())
+            .unwrap_or_default();
+        let stale: Vec<GlobalIndex> = rows
+            .iter()
+            .copied()
+            .filter(|i| !still_undone.contains(i))
+            .collect();
+        if !stale.is_empty() {
+            for idx in &stale {
+                if let Some((t, _)) = self.table.take_row_discard(dup, *idx)
+                {
+                    self.router.note_dropped(t.len());
+                }
+                self.router.note_foreign_commit(dup, *idx);
+            }
+            if stale.len() == rows.len() {
+                // Nothing left to race: discarding the last row retired
+                // the duplicate lease in the table already.
+                self.router.forget_lease(dup);
+                return None;
+            }
+        }
         let trace = self.mint_trace_for(dup);
         crate::telemetry::record_span(
             match mode {
@@ -433,28 +482,38 @@ impl RolloutManager {
         }
         // Routing decision, atomic per chunk: which rows this lease
         // commits, which divert (this lease lost the row to a hedge /
-        // mirror duplicate), and which losers to revoke on a win.
+        // mirror duplicate), and which losers to revoke on a win. The
+        // winner claims returned alongside the plans are PROVISIONAL:
+        // every failure path between here and the rows' cells landing
+        // must roll them back, or a claim whose commit never happened
+        // would strand the row — the partner's chunks divert against
+        // it and the sweep treats it as already committed.
         let shape: Vec<(GlobalIndex, bool, usize)> = rows
             .iter()
             .map(|r| (r.index, r.finished, r.tokens.len()))
             .collect();
-        let plans = self.router.filter_chunk(lease, &shape);
-        let commit: Vec<ChunkRow> = rows
-            .iter()
-            .zip(&plans)
-            .filter(|(_, p)| matches!(p, RowPlan::Commit { .. }))
-            .map(|(r, _)| r.clone())
-            .collect();
-        // Pre-flight commit rows: a finishing row commits three cells;
-        // if a foreign writer already squatted any of them, fail BEFORE
-        // the lease marks rows done — nothing is stranded, and the rows
-        // remain requeueable when the lease eventually expires.
+        let (mut plans, claimed) = self.router.filter_chunk(lease, &shape);
+        // Pre-flight commit rows: a finishing row commits three cells.
+        // A squatted cell on a *duplicated* row is the duplicate-grant
+        // race resolving against us (the row committed before the pair
+        // existed) — demote our copy to a drop and move on. On a plain
+        // row it is a real protocol violation: fail BEFORE the lease
+        // marks rows done, so nothing is stranded and the rows remain
+        // requeueable when the lease eventually expires.
         let dp = self.tq.data_plane();
-        for r in commit.iter().filter(|r| r.finished) {
+        for (r, plan) in rows.iter().zip(plans.iter_mut()) {
+            if !r.finished || !matches!(plan, RowPlan::Commit { .. }) {
+                continue;
+            }
             for col in
                 [Column::Responses, Column::OldLogp, version_column()]
             {
                 if dp.has_cell(r.index, &col) {
+                    if self.router.note_foreign_commit(lease, r.index) {
+                        *plan = RowPlan::Drop;
+                        break;
+                    }
+                    self.router.rollback_claims(lease, &claimed);
                     bail!(
                         "row {} already has a {col} cell — refusing to \
                          double-commit",
@@ -463,15 +522,48 @@ impl RolloutManager {
                 }
             }
         }
-        let committed = self.table.append_rows(lease, &commit)?;
+        let commit: Vec<ChunkRow> = rows
+            .iter()
+            .zip(&plans)
+            .filter(|(_, p)| matches!(p, RowPlan::Commit { .. }))
+            .map(|(r, _)| r.clone())
+            .collect();
+        let committed = match self.table.append_rows(lease, &commit) {
+            Ok(c) => c,
+            Err(e) => {
+                self.router.rollback_claims(lease, &claimed);
+                return Err(e);
+            }
+        };
+        let claimed_set: HashSet<GlobalIndex> =
+            claimed.iter().copied().collect();
+        let mut cells_done: HashSet<GlobalIndex> = HashSet::new();
         for (index, tokens, logps) in committed {
-            self.tq.put(
-                index,
-                Column::Responses,
-                Value::I32s(tokens.clone()),
-            )?;
-            self.tq.put(index, Column::OldLogp, Value::F32s(logps))?;
-            self.tq.put(index, version_column(), Value::U64(version))?;
+            let put = (|| -> Result<()> {
+                self.tq.put(
+                    index,
+                    Column::Responses,
+                    Value::I32s(tokens.clone()),
+                )?;
+                self.tq.put(index, Column::OldLogp, Value::F32s(logps))?;
+                self.tq.put(index, version_column(), Value::U64(version))
+            })();
+            if let Err(e) = put {
+                // Roll back only the claims whose cells never landed —
+                // rows already fully committed keep their (now
+                // confirmed) winner.
+                let unlanded: Vec<GlobalIndex> = claimed
+                    .iter()
+                    .copied()
+                    .filter(|i| !cells_done.contains(i))
+                    .collect();
+                self.router.rollback_claims(lease, &unlanded);
+                return Err(e);
+            }
+            cells_done.insert(index);
+            if claimed_set.contains(&index) {
+                self.router.confirm_claim(lease, index);
+            }
             self.router.note_committed(index, lease, &tokens);
         }
         // Resolve the duplicated rows this chunk decided: revoke the
@@ -999,6 +1091,148 @@ mod tests {
             "straggler's discarded partial decode is accounted"
         );
         assert_eq!(m.in_flight(), 0);
+    }
+
+    /// Hedge a 2-row straggler lease: returns
+    /// `(manager, tq, slow_lease, fast_lease, rows)` with the fast
+    /// duplicate holding both rows.
+    fn hedged_pair(
+    ) -> (RolloutManager, Arc<TransferQueue>, LeaseId, LeaseId, Vec<GlobalIndex>)
+    {
+        let tq = tq_with(2);
+        let m = RolloutManager::new(tq.clone());
+        m.configure_fleet(FleetOptions {
+            policy: RoutingPolicy::Hedge,
+            hedge_factor: 0.0,
+            hedge_min_ms: 0,
+            hedge_min_samples: 1,
+            ..FleetOptions::default()
+        });
+        let slow = m.lease_prompts(&spec("slow", 30_000)).unwrap();
+        let slow_lease = slow.lease.unwrap();
+        let rows = slow.batch.indices.clone();
+        m.put_chunk(slow_lease, 0, &[row(rows[0], vec![1], false)])
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let fast = m.lease_prompts(&spec("fast", 30_000)).unwrap();
+        let fast_lease = fast.lease.unwrap();
+        assert_eq!(fast.batch.indices, rows);
+        (m, tq, slow_lease, fast_lease, rows)
+    }
+
+    #[test]
+    fn failed_commit_rolls_back_hedge_claim() {
+        let (m, tq, slow_lease, fast_lease, rows) = hedged_pair();
+        // The duplicate's finishing chunk is rejected by the lease
+        // table (it smuggles a row outside the lease), AFTER the
+        // router provisionally claimed the hedged row for it.
+        let bad = m.put_chunk(
+            fast_lease,
+            1,
+            &[
+                row(rows[0], vec![7, 8], true),
+                row(GlobalIndex(u64::MAX), vec![9], true),
+            ],
+        );
+        assert!(bad.is_err());
+        assert_eq!(
+            tq.controller("reward").ready_depth(),
+            0,
+            "nothing committed"
+        );
+        // The claim was rolled back, so the row is NOT stranded: the
+        // straggler still commits it...
+        m.put_chunk(slow_lease, 0, &[row(rows[0], vec![2], true)])
+            .unwrap();
+        assert_eq!(
+            tq.data_plane().get(rows[0], &Column::Responses),
+            Some(Value::I32s(vec![1, 2]))
+        );
+        // ...and the duplicate's copy of it now diverts.
+        m.put_chunk(fast_lease, 1, &[row(rows[0], vec![7, 8], true)])
+            .unwrap();
+        assert_eq!(tq.controller("reward").ready_depth(), 1);
+        let s = m.fleet_stats();
+        assert_eq!(s.hedge_rows_won_by_primary, 1);
+        assert_eq!(s.hedge_rows_won_by_duplicate, 0);
+    }
+
+    #[test]
+    fn failed_commit_leaves_hedged_row_requeueable() {
+        let (m, _tq, slow_lease, fast_lease, rows) = hedged_pair();
+        // Claim + commit failure on the duplicate, as above.
+        assert!(m
+            .put_chunk(
+                fast_lease,
+                1,
+                &[
+                    row(rows[0], vec![7, 8], true),
+                    row(GlobalIndex(u64::MAX), vec![9], true),
+                ],
+            )
+            .is_err());
+        // Both sides die without ever committing the row: it must
+        // requeue (the rolled-back claim is not "already committed").
+        m.fail_lease(slow_lease, "test: straggler died").unwrap();
+        m.fail_lease(fast_lease, "test: duplicate died").unwrap();
+        let next = m.lease_prompts(&spec("heir", 30_000)).unwrap();
+        assert!(
+            next.batch.indices.contains(&rows[0]),
+            "hedged row requeued after both deaths: {:?}",
+            next.batch.indices
+        );
+    }
+
+    #[test]
+    fn squatted_duplicated_row_drops_instead_of_erroring() {
+        let (m, tq, slow_lease, fast_lease, rows) = hedged_pair();
+        // A commit landed outside the pair (the duplicate-grant race:
+        // the row's cells exist but no participant won it).
+        tq.put(rows[0], Column::Responses, Value::I32s(vec![42]))
+            .unwrap();
+        // Neither side errors out — the worker loop treats non-lease
+        // errors as fatal, and this is not the worker's fault. Both
+        // copies divert.
+        m.put_chunk(fast_lease, 1, &[row(rows[0], vec![7], true)])
+            .unwrap();
+        m.put_chunk(slow_lease, 0, &[row(rows[0], vec![2], true)])
+            .unwrap();
+        assert_eq!(
+            tq.data_plane().get(rows[0], &Column::Responses),
+            Some(Value::I32s(vec![42])),
+            "the squatting commit is untouched"
+        );
+        // The second row is uncontested for the pair and still races
+        // normally.
+        m.put_chunk(fast_lease, 1, &[row(rows[1], vec![5], true)])
+            .unwrap();
+        assert_eq!(m.in_flight(), 0);
+    }
+
+    #[test]
+    fn empty_queue_poll_is_not_a_deferral() {
+        let tq = tq_with(2);
+        let m = RolloutManager::new(tq.clone());
+        let first = m.lease_prompts(&spec("loaded", 30_000)).unwrap();
+        assert_eq!(first.batch.len(), 2);
+        assert!(m.lease_prompts(&spec("idle", 30_000)).unwrap().lease.is_none());
+        // The loaded worker polls an EMPTY queue: nothing to defer, so
+        // nothing is counted (and a long-poll would not be cut short).
+        assert!(m
+            .lease_prompts(&spec("loaded", 30_000))
+            .unwrap()
+            .lease
+            .is_none());
+        assert_eq!(m.fleet_stats().lb_deferrals, 0);
+        // With a row actually queued the deferral fires as before.
+        tq.put_row(vec![(Column::Prompts, Value::I32s(vec![9; 4]))])
+            .unwrap();
+        assert!(m
+            .lease_prompts(&spec("loaded", 30_000))
+            .unwrap()
+            .lease
+            .is_none());
+        assert_eq!(m.fleet_stats().lb_deferrals, 1);
     }
 
     #[test]
