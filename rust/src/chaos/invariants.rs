@@ -1,0 +1,433 @@
+//! Live invariant checking for chaos runs.
+//!
+//! Every check is a pure function over snapshot data (the `stats` verb
+//! reply, the trainer's consumption ledger, plain numbers), so the
+//! supervisor can poll them between kill events and tests can feed
+//! hand-built snapshots that *must* trip each invariant (mutation-style
+//! negative tests — see below).
+//!
+//! The four invariants, from DESIGN.md §Chaos harness:
+//!
+//! 1. **Lease conservation** — per task, every row ever granted under a
+//!    lease is exactly one of: done (committed), acked, requeued, or
+//!    still in flight. `granted = done + acked + requeued + in_flight`,
+//!    checked from the `lease_*_rows` books the coordinator maintains
+//!    under its registry locks.
+//! 2. **Exactly-once consumption** — the trainer's acked rows never
+//!    contain a duplicate global index, and after the drain every fed
+//!    row has been trained exactly once.
+//! 3. **Weight convergence** — bounded time after a publish, every
+//!    *live* subscriber has caught up to within `max_weight_lag`
+//!    versions. (Dead subscribers keep their last reported version in
+//!    the ledger forever; the supervisor passes the live set.)
+//! 4. **Throughput floor** — the disturbed run sustains at least
+//!    `throughput_floor` of the undisturbed warmup window's samples/s.
+
+use std::collections::HashSet;
+use std::fmt;
+
+use crate::service::ServiceStats;
+use crate::transfer_queue::GlobalIndex;
+use crate::weights::WeightPlaneStats;
+
+/// Invariant identifiers, used verbatim in reports and CI gating.
+pub const INV_LEASE_CONSERVATION: &str = "lease-conservation";
+pub const INV_EXACTLY_ONCE: &str = "exactly-once";
+pub const INV_WEIGHT_CONVERGENCE: &str = "weight-convergence";
+pub const INV_THROUGHPUT_FLOOR: &str = "throughput-floor";
+
+/// Tunables for the checker.
+#[derive(Debug, Clone)]
+pub struct InvariantConfig {
+    /// Max acceptable `published_version - subscriber_version` for a
+    /// live subscriber once the grace window has passed.
+    pub max_weight_lag: u64,
+    /// Time after a publish (or a subscriber spawn) during which lag is
+    /// not judged — distribution is asynchronous by design.
+    pub convergence_grace_ms: u64,
+    /// Disturbed-over-undisturbed samples/s ratio that must survive.
+    pub throughput_floor: f64,
+}
+
+impl Default for InvariantConfig {
+    fn default() -> Self {
+        InvariantConfig {
+            max_weight_lag: 1,
+            convergence_grace_ms: 3_000,
+            throughput_floor: 0.5,
+        }
+    }
+}
+
+/// One tripped invariant: which law, where, and what the books said.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// One of the `INV_*` identifiers.
+    pub invariant: &'static str,
+    /// Task the violation is scoped to, when per-task.
+    pub task: Option<String>,
+    /// Offending lease owner / subscriber / row, when identifiable.
+    pub subject: Option<String>,
+    /// Human-readable account of the broken equation.
+    pub detail: String,
+    /// Label of the chaos event that preceded the failing check
+    /// ([`super::trace::ChaosEvent::label`]), when inside a chaos run.
+    pub after_event: Option<String>,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}]", self.invariant)?;
+        if let Some(t) = &self.task {
+            write!(f, " task={t}")?;
+        }
+        if let Some(s) = &self.subject {
+            write!(f, " subject={s}")?;
+        }
+        write!(f, ": {}", self.detail)?;
+        if let Some(e) = &self.after_event {
+            write!(f, " (after {e})")?;
+        }
+        Ok(())
+    }
+}
+
+/// Lease conservation: for every task with lease traffic,
+/// `granted = done + acked + requeued + leased`. The four books and the
+/// in-flight gauge all come from one `stats` reply, whose per-registry
+/// snapshot is taken under the registry lock — an imbalance is a real
+/// leak (or double count), not a race.
+pub fn check_lease_conservation(
+    stats: &ServiceStats,
+    after_event: Option<&str>,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for t in &stats.tasks {
+        if t.lease_granted_rows == 0 {
+            continue;
+        }
+        let accounted = t.lease_done_rows
+            + t.lease_acked_rows
+            + t.lease_requeued_rows
+            + t.leased as u64;
+        if accounted != t.lease_granted_rows {
+            out.push(Violation {
+                invariant: INV_LEASE_CONSERVATION,
+                task: Some(t.name.clone()),
+                subject: None,
+                detail: format!(
+                    "granted {} != done {} + acked {} + requeued {} + \
+                     in-flight {} (= {})",
+                    t.lease_granted_rows,
+                    t.lease_done_rows,
+                    t.lease_acked_rows,
+                    t.lease_requeued_rows,
+                    t.leased,
+                    accounted
+                ),
+                after_event: after_event.map(str::to_string),
+            });
+        }
+    }
+    out
+}
+
+/// Exactly-once ledger the trainer feeds as it acks batches. Duplicate
+/// observations trip immediately; [`ExactlyOnceLedger::check_complete`]
+/// closes the books at drain time.
+#[derive(Debug, Default)]
+pub struct ExactlyOnceLedger {
+    seen: HashSet<u64>,
+}
+
+impl ExactlyOnceLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rows trained so far (unique).
+    pub fn count(&self) -> usize {
+        self.seen.len()
+    }
+
+    /// Record a trained (served-and-acked) batch; a global index seen
+    /// twice is a double-trained row.
+    pub fn observe(
+        &mut self,
+        indices: &[GlobalIndex],
+        after_event: Option<&str>,
+    ) -> Vec<Violation> {
+        let mut out = Vec::new();
+        for idx in indices {
+            if !self.seen.insert(idx.0) {
+                out.push(Violation {
+                    invariant: INV_EXACTLY_ONCE,
+                    task: None,
+                    subject: Some(format!("row {}", idx.0)),
+                    detail: format!(
+                        "global index {} trained twice",
+                        idx.0
+                    ),
+                    after_event: after_event.map(str::to_string),
+                });
+            }
+        }
+        out
+    }
+
+    /// Drain-time closure: every fed row must have been trained.
+    pub fn check_complete(&self, rows_fed: usize) -> Vec<Violation> {
+        if self.seen.len() >= rows_fed {
+            return Vec::new();
+        }
+        vec![Violation {
+            invariant: INV_EXACTLY_ONCE,
+            task: None,
+            subject: None,
+            detail: format!(
+                "{} of {} fed rows trained — {} rows lost",
+                self.seen.len(),
+                rows_fed,
+                rows_fed - self.seen.len()
+            ),
+            after_event: None,
+        }]
+    }
+}
+
+/// Weight convergence: once `convergence_grace_ms` has passed since the
+/// last publish, every live subscriber must be within `max_weight_lag`
+/// versions of the published snapshot. `live` is the supervisor's list
+/// of subscriber ids currently running (killed processes legitimately
+/// freeze in the ledger and are skipped).
+pub fn check_weight_convergence(
+    weights: &WeightPlaneStats,
+    live: &[String],
+    ms_since_publish: u64,
+    cfg: &InvariantConfig,
+    after_event: Option<&str>,
+) -> Vec<Violation> {
+    if weights.published_version == 0
+        || ms_since_publish < cfg.convergence_grace_ms
+    {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for sub in &weights.subscribers {
+        if !live.iter().any(|l| l == &sub.id) {
+            continue;
+        }
+        let lag = weights.published_version.saturating_sub(sub.version);
+        if lag > cfg.max_weight_lag {
+            out.push(Violation {
+                invariant: INV_WEIGHT_CONVERGENCE,
+                task: None,
+                subject: Some(sub.id.clone()),
+                detail: format!(
+                    "subscriber stuck at v{} while v{} published \
+                     {}ms ago (lag {} > {})",
+                    sub.version,
+                    weights.published_version,
+                    ms_since_publish,
+                    lag,
+                    cfg.max_weight_lag
+                ),
+                after_event: after_event.map(str::to_string),
+            });
+        }
+    }
+    out
+}
+
+/// Throughput floor: disturbed samples/s must hold `throughput_floor`
+/// of the undisturbed baseline. A non-positive baseline means the
+/// warmup produced nothing to compare against — reported as its own
+/// violation rather than silently passing.
+pub fn check_throughput_floor(
+    baseline_sps: f64,
+    disturbed_sps: f64,
+    cfg: &InvariantConfig,
+) -> Vec<Violation> {
+    if baseline_sps <= 0.0 {
+        return vec![Violation {
+            invariant: INV_THROUGHPUT_FLOOR,
+            task: None,
+            subject: None,
+            detail: "undisturbed warmup produced no samples — no \
+                     baseline to hold the floor against"
+                .into(),
+            after_event: None,
+        }];
+    }
+    let ratio = disturbed_sps / baseline_sps;
+    if ratio < cfg.throughput_floor {
+        return vec![Violation {
+            invariant: INV_THROUGHPUT_FLOOR,
+            task: None,
+            subject: None,
+            detail: format!(
+                "disturbed {disturbed_sps:.2} samples/s is {:.0}% of \
+                 baseline {baseline_sps:.2} (floor {:.0}%)",
+                ratio * 100.0,
+                cfg.throughput_floor * 100.0
+            ),
+            after_event: None,
+        }];
+    }
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{ServiceStats, TaskStats};
+    use crate::weights::SubscriberLag;
+
+    fn task(name: &str) -> TaskStats {
+        TaskStats {
+            name: name.into(),
+            ready: 0,
+            consumed: 0,
+            policy: "fcfs".into(),
+            leased: 0,
+            waiting_consumers: 0,
+            oldest_ready_age_ms: None,
+            lease_granted_rows: 0,
+            lease_done_rows: 0,
+            lease_acked_rows: 0,
+            lease_requeued_rows: 0,
+        }
+    }
+
+    fn stats(tasks: Vec<TaskStats>) -> ServiceStats {
+        ServiceStats {
+            tasks,
+            units: vec![],
+            resident_rows: 0,
+            param_version: 0,
+            closed: false,
+            weights: None,
+            control: None,
+            fleet: None,
+        }
+    }
+
+    // Mutation-style negative tests: each hand-built snapshot carries
+    // one seeded defect, and the matching invariant (and only it) must
+    // trip.
+
+    #[test]
+    fn leaked_lease_trips_conservation() {
+        let mut t = task("rollout");
+        // 10 granted, but the books only account for 8: a lease was
+        // dropped without ack/revoke/requeue — the exact bug sweep and
+        // revoke paths exist to prevent.
+        t.lease_granted_rows = 10;
+        t.lease_done_rows = 4;
+        t.lease_acked_rows = 2;
+        t.lease_requeued_rows = 1;
+        t.leased = 1;
+        let v =
+            check_lease_conservation(&stats(vec![t]), Some("kill-worker@500ms"));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].invariant, INV_LEASE_CONSERVATION);
+        assert_eq!(v[0].task.as_deref(), Some("rollout"));
+        assert_eq!(v[0].after_event.as_deref(), Some("kill-worker@500ms"));
+        assert!(v[0].detail.contains("granted 10"));
+    }
+
+    #[test]
+    fn balanced_books_and_idle_tasks_pass() {
+        let mut busy = task("train");
+        busy.lease_granted_rows = 12;
+        busy.lease_done_rows = 6;
+        busy.lease_acked_rows = 3;
+        busy.lease_requeued_rows = 1;
+        busy.leased = 2;
+        // Idle task (all zeros, e.g. decoded from an old peer) is not
+        // judged.
+        let idle = task("reward");
+        assert!(check_lease_conservation(&stats(vec![busy, idle]), None)
+            .is_empty());
+    }
+
+    #[test]
+    fn double_trained_row_trips_exactly_once() {
+        let mut ledger = ExactlyOnceLedger::new();
+        let first = ledger.observe(
+            &[GlobalIndex(3), GlobalIndex(4)],
+            None,
+        );
+        assert!(first.is_empty());
+        let dup = ledger.observe(&[GlobalIndex(4)], Some("kill-stage@2000ms"));
+        assert_eq!(dup.len(), 1);
+        assert_eq!(dup[0].invariant, INV_EXACTLY_ONCE);
+        assert!(dup[0].detail.contains("index 4"));
+        assert_eq!(dup[0].after_event.as_deref(), Some("kill-stage@2000ms"));
+        assert_eq!(ledger.count(), 2);
+    }
+
+    #[test]
+    fn lost_rows_trip_completion_check() {
+        let mut ledger = ExactlyOnceLedger::new();
+        ledger.observe(&[GlobalIndex(0), GlobalIndex(1)], None);
+        assert!(ledger.check_complete(2).is_empty());
+        let v = ledger.check_complete(5);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("3 rows lost"), "{}", v[0].detail);
+    }
+
+    #[test]
+    fn stuck_subscriber_trips_convergence() {
+        let weights = WeightPlaneStats {
+            published_version: 7,
+            tensors: 2,
+            subscribers: vec![
+                SubscriberLag { id: "w0".into(), version: 7 },
+                SubscriberLag { id: "w1".into(), version: 2 },
+                // Dead worker frozen at an ancient version: skipped
+                // because the supervisor says it is not live.
+                SubscriberLag { id: "w-dead".into(), version: 0 },
+            ],
+            ..WeightPlaneStats::default()
+        };
+        let live = vec!["w0".to_string(), "w1".to_string()];
+        let cfg = InvariantConfig::default();
+        let v = check_weight_convergence(&weights, &live, 5_000, &cfg, None);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].invariant, INV_WEIGHT_CONVERGENCE);
+        assert_eq!(v[0].subject.as_deref(), Some("w1"));
+        // Inside the grace window nothing is judged.
+        assert!(
+            check_weight_convergence(&weights, &live, 100, &cfg, None)
+                .is_empty()
+        );
+    }
+
+    #[test]
+    fn throughput_floor_judges_ratio() {
+        let cfg = InvariantConfig::default();
+        assert!(check_throughput_floor(10.0, 6.0, &cfg).is_empty());
+        let v = check_throughput_floor(10.0, 3.0, &cfg);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].invariant, INV_THROUGHPUT_FLOOR);
+        // No baseline is itself a failure, not a silent pass.
+        assert_eq!(check_throughput_floor(0.0, 5.0, &cfg).len(), 1);
+    }
+
+    #[test]
+    fn violation_display_names_everything() {
+        let v = Violation {
+            invariant: INV_LEASE_CONSERVATION,
+            task: Some("rollout".into()),
+            subject: Some("lease 9".into()),
+            detail: "granted 3 != accounted 2".into(),
+            after_event: Some("kill-unit@750ms".into()),
+        };
+        let s = v.to_string();
+        assert!(s.contains("lease-conservation"));
+        assert!(s.contains("task=rollout"));
+        assert!(s.contains("lease 9"));
+        assert!(s.contains("after kill-unit@750ms"));
+    }
+}

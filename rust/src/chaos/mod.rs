@@ -1,0 +1,40 @@
+//! Preemption-trace-driven chaos harness (`asyncflow chaos`).
+//!
+//! Spot-market preemption is the deployment reality the paper's
+//! elastic/crash-safe machinery exists for: rollout workers, storage
+//! units, and pipeline stages all die without warning and come back as
+//! fresh processes. This module turns that into a repeatable test:
+//!
+//! * [`trace`] — an Ornstein–Uhlenbeck spot-price process mapped
+//!   through per-process-kind preemption thresholds to a deterministic
+//!   (seeded) schedule of SIGKILL events.
+//! * [`supervisor`] — launches a full multi-process run (coordinator +
+//!   re-exec'd workers/units/stages), executes the schedule, respawns
+//!   replacements after a configurable delay, and measures recovery.
+//! * [`invariants`] — pure checkers the supervisor polls between
+//!   events: lease conservation (`granted = done + acked + requeued +
+//!   in-flight`, from the `lease_*_rows` books in `stats`),
+//!   exactly-once row accounting, weight-version convergence after
+//!   each publish, and a throughput floor against the undisturbed
+//!   warmup window. Violations are structured reports naming the
+//!   invariant, the preceding kill event, and the offending
+//!   task/lease/subscriber.
+//!
+//! See DESIGN.md §Chaos harness for the event schedule format, the
+//! invariant definitions, and the supervisor lifecycle.
+
+pub mod invariants;
+pub mod supervisor;
+pub mod trace;
+
+pub use invariants::{
+    check_lease_conservation, check_throughput_floor,
+    check_weight_convergence, ExactlyOnceLedger, InvariantConfig,
+    Violation, INV_EXACTLY_ONCE, INV_LEASE_CONSERVATION,
+    INV_THROUGHPUT_FLOOR, INV_WEIGHT_CONVERGENCE,
+};
+pub use supervisor::{run_chaos, ChaosOptions, ChaosReport, KillRecord};
+pub use trace::{
+    ChaosEvent, ChaosSchedule, KillThresholds, OuParams, OuProcess,
+    ProcessKind,
+};

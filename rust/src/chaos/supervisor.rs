@@ -1,0 +1,1023 @@
+//! The chaos supervisor: launch a full multi-process run, execute a
+//! preemption schedule with SIGKILL, respawn replacements, and check
+//! the invariants live between events.
+//!
+//! Topology (all child processes are re-exec'd `asyncflow`
+//! subcommands, the same pattern `examples/mixed_fleet.rs` uses):
+//!
+//! ```text
+//!   harness process                      children (SIGKILL targets)
+//!   ───────────────                      ──────────────────────────
+//!   Session + TcpJsonlServer   ◄──TCP──  rollout-worker --mock --relay ×W
+//!   feeder thread (prompts)    ◄──TCP──  stage --stage reward --relay ×S
+//!   trainer thread (leased     ◄──TCP──  storage-unit --slot i       ×U
+//!     get_batch + ack)
+//!   publisher thread (weight
+//!     publishes every tick)
+//! ```
+//!
+//! Clients run in `--relay` mode so every payload is replicated on the
+//! coordinator: killing a storage unit degrades the run (slot falls
+//! back to the local replica, re-attaches on respawn) without stranding
+//! rows — which is exactly the availability story the chaos run is
+//! asserting. The supervisor polls `stats` between events and feeds the
+//! pure checkers in [`super::invariants`]; violations carry the label
+//! of the preceding kill event.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::data::MathTaskGen;
+use crate::runtime::{HostTensor, ParamSet};
+use crate::service::{
+    ConsumerSpec, GetBatchSpec, PutRow, ServiceClient, Session,
+    SessionSpec, TcpJsonlServer,
+};
+use crate::transfer_queue::{Column, TaskSpec, Value};
+use crate::util::json::Json;
+
+use super::invariants::{
+    check_lease_conservation, check_throughput_floor,
+    check_weight_convergence, ExactlyOnceLedger, InvariantConfig,
+    Violation,
+};
+use super::trace::{
+    ChaosSchedule, KillThresholds, OuParams, ProcessKind,
+};
+
+/// Everything a chaos run is parameterized by. `exe` is the
+/// `asyncflow` binary to re-exec for children (`current_exe()` from
+/// the CLI, `env!("CARGO_BIN_EXE_asyncflow")` from integration tests).
+#[derive(Debug, Clone)]
+pub struct ChaosOptions {
+    pub exe: PathBuf,
+    pub seed: u64,
+    /// Rollout-worker population target.
+    pub workers: usize,
+    /// Storage-unit processes (session gets the same number of slots).
+    pub units: usize,
+    /// Reward-stage processes.
+    pub stages: usize,
+    /// Undisturbed window before the first kill — the throughput
+    /// baseline is measured over its second half.
+    pub warmup_ms: u64,
+    /// Chaos window the schedule spans.
+    pub horizon_ms: u64,
+    /// Max settle time after the last event for every fed row to train.
+    pub drain_ms: u64,
+    /// Kill → replacement spawn delay.
+    pub respawn_delay_ms: u64,
+    /// Invariant poll / supervision tick cadence.
+    pub poll_ms: u64,
+    /// Worker lease TTL (crash-detection bound) and decode chunk size.
+    pub ttl_ms: u64,
+    pub chunk_tokens: usize,
+    /// Weight publish cadence for the convergence invariant.
+    pub publish_every_ms: u64,
+    /// Minimum scheduled kills (schedule is padded to this, covering
+    /// all three process kinds).
+    pub min_events: usize,
+    /// Per-kind rate limit between kills.
+    pub min_gap_ms: u64,
+    pub ou: OuParams,
+    pub thresholds: KillThresholds,
+    pub invariants: InvariantConfig,
+    /// Explicit schedule override (tests); `None` generates one from
+    /// the OU trace.
+    pub schedule: Option<ChaosSchedule>,
+    /// Recompute the worker population target from observed throughput
+    /// via the planner (`planner::live`).
+    pub elastic: bool,
+    /// Suppress per-event progress lines.
+    pub quiet: bool,
+}
+
+impl ChaosOptions {
+    pub fn new(exe: PathBuf) -> Self {
+        ChaosOptions {
+            exe,
+            seed: 7,
+            workers: 2,
+            units: 1,
+            stages: 1,
+            warmup_ms: 3_000,
+            horizon_ms: 10_000,
+            drain_ms: 20_000,
+            respawn_delay_ms: 600,
+            poll_ms: 150,
+            ttl_ms: 900,
+            chunk_tokens: 8,
+            publish_every_ms: 1_200,
+            min_events: 6,
+            min_gap_ms: 900,
+            ou: OuParams::default(),
+            thresholds: KillThresholds::default(),
+            invariants: InvariantConfig::default(),
+            schedule: None,
+            elastic: false,
+            quiet: false,
+        }
+    }
+
+    /// CI-sized preset: short windows, ≥8 scheduled kills across all
+    /// three process kinds (so ≥6 execute even if a couple of events
+    /// land while their whole population is still respawning).
+    pub fn smoke(exe: PathBuf) -> Self {
+        let mut o = ChaosOptions::new(exe);
+        o.warmup_ms = 2_500;
+        o.horizon_ms = 9_000;
+        o.drain_ms = 25_000;
+        o.min_events = 8;
+        o
+    }
+}
+
+/// One executed kill and how long its population took to recover.
+#[derive(Debug, Clone)]
+pub struct KillRecord {
+    /// Event label (`kill-worker@1500ms`).
+    pub event: String,
+    pub kind: ProcessKind,
+    /// Process name that received SIGKILL.
+    pub victim: String,
+    /// Kill → replacement observed serving. `None` = never recovered
+    /// inside the run (itself surfaced by the drain checks).
+    pub recovered_ms: Option<u64>,
+}
+
+/// The chaos run's verdict + the numbers behind it.
+#[derive(Debug)]
+pub struct ChaosReport {
+    pub seed: u64,
+    pub horizon_ms: u64,
+    /// Kills actually executed (a scheduled event is skipped when its
+    /// whole population is already down awaiting respawn).
+    pub kills: Vec<KillRecord>,
+    pub events_skipped: usize,
+    pub violations: Vec<Violation>,
+    pub rows_fed: usize,
+    pub rows_trained: usize,
+    pub weight_publishes: u64,
+    pub baseline_sps: f64,
+    pub disturbed_sps: f64,
+    /// `disturbed / baseline` (0 when no baseline).
+    pub floor_ratio: f64,
+    /// Worker population target after the elastic recomputation
+    /// (`None` when `elastic` was off).
+    pub elastic_workers: Option<usize>,
+}
+
+impl ChaosReport {
+    pub fn kills_of(&self, kind: ProcessKind) -> usize {
+        self.kills.iter().filter(|k| k.kind == kind).count()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    fn recovery_sorted(&self) -> Vec<u64> {
+        let mut v: Vec<u64> =
+            self.kills.iter().filter_map(|k| k.recovered_ms).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn recovery_p50_ms(&self) -> Option<u64> {
+        let v = self.recovery_sorted();
+        (!v.is_empty()).then(|| v[v.len() / 2])
+    }
+
+    pub fn recovery_p99_ms(&self) -> Option<u64> {
+        let v = self.recovery_sorted();
+        (!v.is_empty()).then(|| v[(v.len() * 99 / 100).min(v.len() - 1)])
+    }
+
+    /// The `BENCH_chaos.json` document CI schema-validates.
+    pub fn to_json(&self) -> Json {
+        let events = Json::obj(vec![
+            ("executed", Json::Num(self.kills.len() as f64)),
+            ("skipped", Json::Num(self.events_skipped as f64)),
+            (
+                "worker",
+                Json::Num(self.kills_of(ProcessKind::Worker) as f64),
+            ),
+            ("unit", Json::Num(self.kills_of(ProcessKind::Unit) as f64)),
+            (
+                "stage",
+                Json::Num(self.kills_of(ProcessKind::Stage) as f64),
+            ),
+        ]);
+        let recovery = Json::obj(vec![
+            (
+                "count",
+                Json::Num(self.recovery_sorted().len() as f64),
+            ),
+            (
+                "p50_ms",
+                self.recovery_p50_ms()
+                    .map_or(Json::Null, |v| Json::Num(v as f64)),
+            ),
+            (
+                "p99_ms",
+                self.recovery_p99_ms()
+                    .map_or(Json::Null, |v| Json::Num(v as f64)),
+            ),
+        ]);
+        let throughput = Json::obj(vec![
+            ("baseline_sps", Json::Num(self.baseline_sps)),
+            ("disturbed_sps", Json::Num(self.disturbed_sps)),
+            ("floor_ratio", Json::Num(self.floor_ratio)),
+        ]);
+        let violations = Json::Arr(
+            self.violations
+                .iter()
+                .map(|v| {
+                    Json::obj(vec![
+                        ("invariant", Json::Str(v.invariant.into())),
+                        (
+                            "task",
+                            v.task.clone().map_or(Json::Null, Json::Str),
+                        ),
+                        (
+                            "subject",
+                            v.subject
+                                .clone()
+                                .map_or(Json::Null, Json::Str),
+                        ),
+                        ("detail", Json::Str(v.detail.clone())),
+                        (
+                            "after_event",
+                            v.after_event
+                                .clone()
+                                .map_or(Json::Null, Json::Str),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("horizon_ms", Json::Num(self.horizon_ms as f64)),
+            ("events", events),
+            ("recovery", recovery),
+            ("throughput", throughput),
+            ("rows_fed", Json::Num(self.rows_fed as f64)),
+            ("rows_trained", Json::Num(self.rows_trained as f64)),
+            (
+                "weight_publishes",
+                Json::Num(self.weight_publishes as f64),
+            ),
+            ("violations", violations),
+        ])
+    }
+}
+
+/// One supervised child slot: a stable identity whose occupant process
+/// changes across kill/respawn generations.
+struct ProcSlot {
+    kind: ProcessKind,
+    /// Unit slot number, or worker/stage ordinal.
+    index: usize,
+    generation: usize,
+    /// Current process name (worker/stage identity on the wire).
+    name: String,
+    child: Option<Child>,
+    spawned_at: Instant,
+    /// When to (re)spawn a replacement, if one is due.
+    respawn_at: Option<Instant>,
+    /// Index into the kill record vec awaiting a recovery timestamp.
+    pending_recovery: Option<usize>,
+    killed_at: Option<Instant>,
+    spawn_attempts: usize,
+}
+
+impl ProcSlot {
+    fn proc_name(kind: ProcessKind, index: usize, generation: usize) -> String {
+        match kind {
+            ProcessKind::Worker => format!("cw{index}.g{generation}"),
+            ProcessKind::Unit => format!("unit{index}.g{generation}"),
+            ProcessKind::Stage => format!("grader{index}.g{generation}"),
+        }
+    }
+}
+
+/// Child-process fleet with kill-on-drop: whatever path `run_chaos`
+/// exits through, no orphan keeps running.
+struct Fleet {
+    exe: PathBuf,
+    addr: String,
+    ttl_ms: u64,
+    chunk_tokens: usize,
+    seed: u64,
+    slots: Vec<ProcSlot>,
+    rr: usize,
+}
+
+impl Fleet {
+    fn new(exe: PathBuf, addr: String, opts: &ChaosOptions) -> Fleet {
+        Fleet {
+            exe,
+            addr,
+            ttl_ms: opts.ttl_ms,
+            chunk_tokens: opts.chunk_tokens,
+            seed: opts.seed,
+            slots: Vec::new(),
+            rr: 0,
+        }
+    }
+
+    fn add(&mut self, kind: ProcessKind, index: usize) -> Result<()> {
+        let mut slot = ProcSlot {
+            kind,
+            index,
+            generation: 0,
+            name: ProcSlot::proc_name(kind, index, 0),
+            child: None,
+            spawned_at: Instant::now(),
+            respawn_at: None,
+            pending_recovery: None,
+            killed_at: None,
+            spawn_attempts: 0,
+        };
+        self.spawn(&mut slot)?;
+        self.slots.push(slot);
+        Ok(())
+    }
+
+    fn spawn(&self, slot: &mut ProcSlot) -> Result<()> {
+        spawn_child(
+            &self.exe,
+            &self.addr,
+            self.ttl_ms,
+            self.chunk_tokens,
+            self.seed,
+            slot,
+        )
+    }
+}
+
+/// Spawn the child for `slot` (free function so [`Fleet::tick`] can
+/// respawn while holding a mutable borrow of its own slot list).
+fn spawn_child(
+    exe: &Path,
+    addr: &str,
+    ttl_ms: u64,
+    chunk_tokens: usize,
+    seed: u64,
+    slot: &mut ProcSlot,
+) -> Result<()> {
+    let mut cmd = Command::new(exe);
+    match slot.kind {
+        ProcessKind::Worker => {
+            cmd.args([
+                "rollout-worker",
+                "--connect",
+                addr,
+                "--mock",
+                "--relay",
+                "--name",
+                &slot.name,
+                "--ttl-ms",
+                &ttl_ms.to_string(),
+                "--chunk-tokens",
+                &chunk_tokens.to_string(),
+                "--seed",
+                &(seed * 1000
+                    + slot.index as u64 * 10
+                    + slot.generation as u64)
+                    .to_string(),
+            ]);
+        }
+        ProcessKind::Unit => {
+            cmd.args([
+                "storage-unit",
+                "--connect",
+                addr,
+                "--slot",
+                &slot.index.to_string(),
+                "--listen",
+                "127.0.0.1:0",
+            ]);
+        }
+        ProcessKind::Stage => {
+            cmd.args([
+                "stage",
+                "--connect",
+                addr,
+                "--stage",
+                "reward",
+                "--relay",
+                "--name",
+                &slot.name,
+                "--lease-ttl-ms",
+                &ttl_ms.to_string(),
+            ]);
+        }
+    }
+    let child = cmd
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .stdin(Stdio::null())
+        .spawn()
+        .with_context(|| {
+            format!("spawning {} ({})", slot.name, slot.kind.name())
+        })?;
+    slot.child = Some(child);
+    slot.spawned_at = Instant::now();
+    slot.respawn_at = None;
+    slot.spawn_attempts += 1;
+    Ok(())
+}
+
+impl Fleet {
+    /// SIGKILL one live instance of `kind`, round-robin. Returns the
+    /// victim's name, or `None` when the whole population is already
+    /// down.
+    fn kill_one(
+        &mut self,
+        kind: ProcessKind,
+        respawn_delay: Duration,
+        record_idx: usize,
+    ) -> Option<String> {
+        let n = self.slots.len();
+        for probe in 0..n {
+            let i = (self.rr + probe) % n;
+            let alive = self.slots[i].kind == kind
+                && matches!(
+                    self.slots[i].child.as_mut().map(|c| c.try_wait()),
+                    Some(Ok(None))
+                );
+            if !alive {
+                continue;
+            }
+            self.rr = i + 1;
+            let slot = &mut self.slots[i];
+            if let Some(mut child) = slot.child.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            let victim = slot.name.clone();
+            slot.generation += 1;
+            slot.name =
+                ProcSlot::proc_name(slot.kind, slot.index, slot.generation);
+            slot.killed_at = Some(Instant::now());
+            slot.respawn_at = Some(Instant::now() + respawn_delay);
+            slot.pending_recovery = Some(record_idx);
+            slot.spawn_attempts = 0;
+            return Some(victim);
+        }
+        None
+    }
+
+    /// Supervision tick: respawn due slots, retry failed spawns (a
+    /// respawned storage unit can lose the attach race against the
+    /// coordinator's lazy detach of its dead predecessor and exit — it
+    /// is retried until the slot frees up), and stamp recoveries.
+    fn tick(
+        &mut self,
+        stats: Option<&crate::service::ServiceStats>,
+        kills: &mut [KillRecord],
+    ) {
+        let now = Instant::now();
+        for slot in &mut self.slots {
+            // Reap and clear children that exited on their own.
+            let exited = match slot.child.as_mut() {
+                Some(c) => !matches!(c.try_wait(), Ok(None)),
+                None => false,
+            };
+            if exited {
+                if let Some(mut c) = slot.child.take() {
+                    let _ = c.wait();
+                }
+                // Unexpected death (or a lost unit attach race):
+                // schedule another spawn, bounded.
+                if slot.respawn_at.is_none() && slot.spawn_attempts < 40 {
+                    slot.respawn_at =
+                        Some(now + Duration::from_millis(300));
+                }
+            }
+            if let Some(at) = slot.respawn_at {
+                if now >= at && slot.child.is_none() {
+                    let _ = spawn_child(
+                        &self.exe,
+                        &self.addr,
+                        self.ttl_ms,
+                        self.chunk_tokens,
+                        self.seed,
+                        slot,
+                    );
+                }
+            }
+            // Recovery: the replacement is observed serving.
+            if let (Some(rec), Some(t0)) =
+                (slot.pending_recovery, slot.killed_at)
+            {
+                let alive = matches!(
+                    slot.child.as_mut().map(|c| c.try_wait()),
+                    Some(Ok(None))
+                );
+                let recovered = alive
+                    && match slot.kind {
+                        ProcessKind::Unit => stats.is_some_and(|s| {
+                            s.units.iter().any(|u| {
+                                u.unit == slot.index
+                                    && u.endpoint.is_some()
+                            })
+                        }),
+                        ProcessKind::Worker => stats.is_some_and(|s| {
+                            s.weights.as_ref().is_some_and(|w| {
+                                w.subscribers
+                                    .iter()
+                                    .any(|sub| sub.id == slot.name)
+                            })
+                        }),
+                        // Stages carry no server-side identity in
+                        // `stats`; serving = replacement alive past one
+                        // tick.
+                        ProcessKind::Stage => true,
+                    };
+                if recovered {
+                    kills[rec].recovered_ms =
+                        Some(t0.elapsed().as_millis() as u64);
+                    slot.pending_recovery = None;
+                    slot.killed_at = None;
+                }
+            }
+        }
+    }
+
+    /// Names of workers alive and past `grace` (stable enough to judge
+    /// their weight-subscriber lag).
+    fn settled_workers(&mut self, grace: Duration) -> Vec<String> {
+        let now = Instant::now();
+        self.slots
+            .iter_mut()
+            .filter(|s| s.kind == ProcessKind::Worker)
+            .filter(|s| {
+                matches!(
+                    s.child.as_mut().map(|c| c.try_wait()),
+                    Some(Ok(None))
+                ) && now.duration_since(s.spawned_at) >= grace
+            })
+            .map(|s| s.name.clone())
+            .collect()
+    }
+
+    fn population(&self, kind: ProcessKind) -> usize {
+        self.slots.iter().filter(|s| s.kind == kind).count()
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for slot in &mut self.slots {
+            if let Some(mut c) = slot.child.take() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+}
+
+/// Violation sink shared with the trainer thread, deduplicated by
+/// (invariant, task, subject) so a persistent imbalance reports once
+/// instead of once per poll.
+#[derive(Default)]
+struct ViolationSink {
+    seen: HashSet<String>,
+    out: Vec<Violation>,
+}
+
+impl ViolationSink {
+    fn push(&mut self, v: Violation) {
+        let key = format!(
+            "{}|{}|{}",
+            v.invariant,
+            v.task.as_deref().unwrap_or(""),
+            v.subject.as_deref().unwrap_or("")
+        );
+        if self.seen.insert(key) {
+            self.out.push(v);
+        }
+    }
+
+    fn extend(&mut self, vs: Vec<Violation>) {
+        for v in vs {
+            self.push(v);
+        }
+    }
+}
+
+/// Run the full chaos harness: bring up the topology, execute the
+/// schedule, check invariants live, drain, and report.
+pub fn run_chaos(opts: &ChaosOptions) -> Result<ChaosReport> {
+    let schedule = match &opts.schedule {
+        // An explicit schedule (tests) runs exactly as given.
+        Some(s) => s.clone(),
+        None => {
+            let mut s = ChaosSchedule::generate(
+                opts.seed,
+                opts.horizon_ms,
+                &opts.ou,
+                &opts.thresholds,
+                opts.min_gap_ms,
+            );
+            s.ensure_floor(opts.min_events, &opts.thresholds);
+            s
+        }
+    };
+
+    // ── Coordinator: in-proc session + TCP server for the children.
+    let spec = SessionSpec {
+        storage_units: opts.units.max(1),
+        tasks: vec![
+            TaskSpec::new("rollout", vec![Column::Prompts]),
+            TaskSpec::new("reward", vec![Column::Responses]),
+            TaskSpec::new(
+                "train",
+                vec![Column::Responses, Column::OldLogp, Column::Rewards],
+            ),
+        ],
+    };
+    let initial = ParamSet::new(
+        0,
+        vec![HostTensor::from_f32(vec![4], &[0.0, 0.0, 0.0, 0.0])?],
+    );
+    let session = Arc::new(Session::init_engines(spec, initial)?);
+    let server = TcpJsonlServer::bind(session.clone(), ("127.0.0.1", 0))?;
+    let addr = format!("127.0.0.1:{}", server.port());
+    let client = ServiceClient::in_proc(session.clone());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_feed = Arc::new(AtomicBool::new(false));
+    let fed = Arc::new(AtomicUsize::new(0));
+    let ledger = Arc::new(Mutex::new(ExactlyOnceLedger::new()));
+    let trainer_violations: Arc<Mutex<Vec<Violation>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let last_publish: Arc<Mutex<Option<Instant>>> =
+        Arc::new(Mutex::new(None));
+    let publishes = Arc::new(AtomicU64::new(0));
+
+    // ── Feeder: keep the rollout queue shallow-but-never-empty so
+    // throughput is steady across the whole run.
+    let feeder = {
+        let session = session.clone();
+        let stop_feed = stop_feed.clone();
+        let fed = fed.clone();
+        let seed = opts.seed;
+        std::thread::spawn(move || {
+            let client = ServiceClient::in_proc(session);
+            let mut gen = MathTaskGen::new(seed ^ 0xfeed, 16);
+            while !stop_feed.load(Ordering::Relaxed) {
+                let ready = client
+                    .stats()
+                    .ok()
+                    .and_then(|s| {
+                        s.tasks
+                            .iter()
+                            .find(|t| t.name == "rollout")
+                            .map(|t| t.ready)
+                    })
+                    .unwrap_or(usize::MAX);
+                if ready < 24 {
+                    let rows: Vec<PutRow> = (0..12)
+                        .map(|_| {
+                            let task = gen.next_task();
+                            PutRow::new(vec![
+                                (
+                                    Column::Prompts,
+                                    Value::I32s(task.prompt_tokens),
+                                ),
+                                (
+                                    Column::Custom("answer".into()),
+                                    Value::Text(task.answer.to_string()),
+                                ),
+                            ])
+                        })
+                        .collect();
+                    let n = rows.len();
+                    if client.put_batch(rows).is_ok() {
+                        fed.fetch_add(n, Ordering::Relaxed);
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(30));
+            }
+        })
+    };
+
+    // ── Trainer: leased consumption + ack, the exactly-once witness.
+    let trainer = {
+        let session = session.clone();
+        let stop = stop.clone();
+        let ledger = ledger.clone();
+        let sink = trainer_violations.clone();
+        let ttl = (opts.ttl_ms * 2).max(1_000);
+        std::thread::spawn(move || {
+            let client = ServiceClient::in_proc(session);
+            let spec = GetBatchSpec {
+                task: "train".into(),
+                group: 0,
+                columns: vec![Column::Responses, Column::Rewards],
+                count: 8,
+                min: 1,
+                timeout_ms: 100,
+                consumer: Some(ConsumerSpec {
+                    id: "chaos-trainer".into(),
+                    ttl_ms: ttl,
+                }),
+            };
+            loop {
+                match client.get_batch_leased_blocking_until(&spec, || {
+                    stop.load(Ordering::Relaxed)
+                }) {
+                    Ok(Some(lb)) => {
+                        let indices = lb.batch.indices.clone();
+                        if lb.ack().is_ok() {
+                            let vs = ledger
+                                .lock()
+                                .unwrap()
+                                .observe(&indices, None);
+                            if !vs.is_empty() {
+                                sink.lock().unwrap().extend(vs);
+                            }
+                        }
+                        // An ack error means the lease TTL lapsed and
+                        // the rows requeued — they will be served
+                        // again, and counting them now would fake a
+                        // duplicate.
+                    }
+                    Ok(None) => break, // aborted or stream closed
+                    Err(_) => {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        })
+    };
+
+    // ── Publisher: version ticks for the convergence invariant.
+    let publisher = {
+        let session = session.clone();
+        let stop = stop.clone();
+        let last_publish = last_publish.clone();
+        let publishes = publishes.clone();
+        let every = Duration::from_millis(opts.publish_every_ms.max(100));
+        std::thread::spawn(move || {
+            let client = ServiceClient::in_proc(session);
+            let mut version = 0u64;
+            let mut next = Instant::now() + every;
+            while !stop.load(Ordering::Relaxed) {
+                if Instant::now() >= next {
+                    version += 1;
+                    let v = version as f32;
+                    let tensor = HostTensor::from_f32(
+                        vec![4],
+                        &[v, -v, v * 0.5, 1.0],
+                    )
+                    .expect("static shape");
+                    if client
+                        .weight_sync_notify(ParamSet::new(
+                            version,
+                            vec![tensor],
+                        ))
+                        .is_ok()
+                    {
+                        *last_publish.lock().unwrap() =
+                            Some(Instant::now());
+                        publishes.fetch_add(1, Ordering::Relaxed);
+                    }
+                    next = Instant::now() + every;
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        })
+    };
+
+    // ── Children.
+    let mut fleet = Fleet::new(opts.exe.clone(), addr.clone(), opts);
+    for i in 0..opts.workers.max(1) {
+        fleet.add(ProcessKind::Worker, i)?;
+    }
+    for i in 0..opts.units.max(1) {
+        fleet.add(ProcessKind::Unit, i)?;
+    }
+    for i in 0..opts.stages.max(1) {
+        fleet.add(ProcessKind::Stage, i)?;
+    }
+
+    let mut sink = ViolationSink::default();
+    let mut kills: Vec<KillRecord> = Vec::new();
+    let mut skipped = 0usize;
+    let grace = Duration::from_millis(opts.invariants.convergence_grace_ms);
+    let poll = Duration::from_millis(opts.poll_ms.max(20));
+    let mut last_event_label: Option<String> = None;
+
+    // One supervision tick: respawns, recoveries, live invariants.
+    let tick = |fleet: &mut Fleet,
+                kills: &mut Vec<KillRecord>,
+                sink: &mut ViolationSink,
+                last_event: Option<&str>| {
+        let stats = client.stats().ok();
+        fleet.tick(stats.as_ref(), kills);
+        if let Some(s) = &stats {
+            sink.extend(check_lease_conservation(s, last_event));
+            if let Some(w) = &s.weights {
+                let since = last_publish
+                    .lock()
+                    .unwrap()
+                    .map(|t| t.elapsed().as_millis() as u64);
+                if let Some(ms) = since {
+                    let live = fleet.settled_workers(grace);
+                    sink.extend(check_weight_convergence(
+                        w,
+                        &live,
+                        ms,
+                        &opts.invariants,
+                        last_event,
+                    ));
+                }
+            }
+        }
+        sink.extend(std::mem::take(
+            &mut *trainer_violations.lock().unwrap(),
+        ));
+    };
+
+    // ── Warmup: undisturbed baseline over the window's second half.
+    let half = Duration::from_millis(opts.warmup_ms / 2);
+    let warm_deadline = Instant::now() + half;
+    while Instant::now() < warm_deadline {
+        tick(&mut fleet, &mut kills, &mut sink, None);
+        std::thread::sleep(poll);
+    }
+    let base_t0 = Instant::now();
+    let base_n0 = ledger.lock().unwrap().count();
+    let warm_deadline = Instant::now() + half;
+    while Instant::now() < warm_deadline {
+        tick(&mut fleet, &mut kills, &mut sink, None);
+        std::thread::sleep(poll);
+    }
+    let baseline_sps = (ledger.lock().unwrap().count() - base_n0) as f64
+        / base_t0.elapsed().as_secs_f64();
+
+    // ── Elastic population: wire the planner to observed throughput.
+    let mut elastic_workers = None;
+    if opts.elastic {
+        let cfg = crate::config::RlConfig {
+            chunk_tokens: opts.chunk_tokens,
+            lease_ttl_ms: opts.ttl_ms,
+            rollout_workers: opts.workers,
+            ..crate::config::RlConfig::default()
+        };
+        let target = crate::planner::live::recommend_workers(
+            &cfg,
+            baseline_sps,
+            fleet.population(ProcessKind::Worker),
+        );
+        let have = fleet.population(ProcessKind::Worker);
+        for i in have..target.min(have + 2) {
+            fleet.add(ProcessKind::Worker, i)?;
+        }
+        elastic_workers = Some(target);
+        if !opts.quiet {
+            crate::log_info!(
+                "chaos",
+                "elastic: planner recommends {target} workers \
+                 (observed {baseline_sps:.1} samples/s, running {have})"
+            );
+        }
+    }
+
+    // ── Chaos phase: execute the schedule.
+    let chaos_t0 = Instant::now();
+    let chaos_n0 = ledger.lock().unwrap().count();
+    for ev in schedule.events.clone() {
+        let due = chaos_t0 + Duration::from_millis(ev.at_ms);
+        while Instant::now() < due {
+            tick(
+                &mut fleet,
+                &mut kills,
+                &mut sink,
+                last_event_label.as_deref(),
+            );
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(poll.min(due - now));
+            }
+        }
+        let label = ev.label();
+        let record_idx = kills.len();
+        kills.push(KillRecord {
+            event: label.clone(),
+            kind: ev.kind,
+            victim: String::new(),
+            recovered_ms: None,
+        });
+        match fleet.kill_one(
+            ev.kind,
+            Duration::from_millis(opts.respawn_delay_ms),
+            record_idx,
+        ) {
+            Some(victim) => {
+                if !opts.quiet {
+                    crate::log_info!(
+                        "chaos",
+                        "{label}: SIGKILL {victim} (spot price {:.2})",
+                        ev.price
+                    );
+                }
+                kills[record_idx].victim = victim;
+                last_event_label = Some(label);
+            }
+            None => {
+                kills.pop();
+                skipped += 1;
+            }
+        }
+    }
+    let horizon_deadline =
+        chaos_t0 + Duration::from_millis(schedule.horizon_ms);
+    while Instant::now() < horizon_deadline {
+        tick(
+            &mut fleet,
+            &mut kills,
+            &mut sink,
+            last_event_label.as_deref(),
+        );
+        std::thread::sleep(poll);
+    }
+    let disturbed_sps = (ledger.lock().unwrap().count() - chaos_n0)
+        as f64
+        / chaos_t0.elapsed().as_secs_f64();
+
+    // ── Drain: stop feeding, let every fed row reach the trainer.
+    stop_feed.store(true, Ordering::Relaxed);
+    let _ = feeder.join();
+    let rows_fed = fed.load(Ordering::Relaxed);
+    let drain_deadline =
+        Instant::now() + Duration::from_millis(opts.drain_ms);
+    while Instant::now() < drain_deadline {
+        if ledger.lock().unwrap().count() >= rows_fed {
+            break;
+        }
+        tick(
+            &mut fleet,
+            &mut kills,
+            &mut sink,
+            last_event_label.as_deref(),
+        );
+        std::thread::sleep(poll);
+    }
+    // Final books, after the graph settled.
+    tick(
+        &mut fleet,
+        &mut kills,
+        &mut sink,
+        last_event_label.as_deref(),
+    );
+    let rows_trained = ledger.lock().unwrap().count();
+    sink.extend(ledger.lock().unwrap().check_complete(rows_fed));
+    sink.extend(check_throughput_floor(
+        baseline_sps,
+        disturbed_sps,
+        &opts.invariants,
+    ));
+
+    // ── Teardown: children die with the Fleet drop; helper threads
+    // stop on the flag.
+    stop.store(true, Ordering::Relaxed);
+    let _ = trainer.join();
+    let _ = publisher.join();
+    drop(fleet);
+    let _ = client.shutdown();
+
+    let floor_ratio = if baseline_sps > 0.0 {
+        disturbed_sps / baseline_sps
+    } else {
+        0.0
+    };
+    Ok(ChaosReport {
+        seed: opts.seed,
+        horizon_ms: schedule.horizon_ms,
+        kills,
+        events_skipped: skipped,
+        violations: sink.out,
+        rows_fed,
+        rows_trained,
+        weight_publishes: publishes.load(Ordering::Relaxed),
+        baseline_sps,
+        disturbed_sps,
+        floor_ratio,
+        elastic_workers,
+    })
+}

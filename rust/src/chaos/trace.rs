@@ -1,0 +1,375 @@
+//! Preemption-trace generation: an Ornstein–Uhlenbeck spot-price
+//! process mapped through per-process-kind preemption thresholds to a
+//! deterministic schedule of kill events.
+//!
+//! The model follows the spot-market framing: a single mean-reverting
+//! "price" path is simulated over the chaos horizon, and each process
+//! kind (rollout worker, storage unit, pipeline stage) carries its own
+//! preemption threshold — when the price is above a kind's threshold
+//! the market "reclaims" one instance of that kind. Lower thresholds
+//! mean cheaper bids and therefore *more* preemptions; the schedule is
+//! fully determined by the seed (the price path consumes randomness,
+//! threshold crossings do not), so a chaos run replays bit-identically
+//! under `--seed`.
+
+use crate::util::rng::Rng;
+
+/// Which population a kill event targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProcessKind {
+    /// Elastic rollout worker (`asyncflow rollout-worker`).
+    Worker,
+    /// Data-plane storage unit (`asyncflow storage-unit`).
+    Unit,
+    /// TCP pipeline stage (`asyncflow stage`).
+    Stage,
+}
+
+impl ProcessKind {
+    pub const ALL: [ProcessKind; 3] =
+        [ProcessKind::Worker, ProcessKind::Unit, ProcessKind::Stage];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ProcessKind::Worker => "worker",
+            ProcessKind::Unit => "unit",
+            ProcessKind::Stage => "stage",
+        }
+    }
+}
+
+/// Ornstein–Uhlenbeck parameters for the spot-price path:
+/// `dx = reversion * (mean - x) * dt + sigma * sqrt(dt) * N(0,1)`,
+/// stepped every `dt_ms` with `dt = dt_ms / 1000`.
+#[derive(Debug, Clone)]
+pub struct OuParams {
+    /// Long-run mean the price reverts to.
+    pub mean: f64,
+    /// Reversion rate (per second): how hard excursions get pulled back.
+    pub reversion: f64,
+    /// Diffusion scale (per sqrt-second).
+    pub sigma: f64,
+    /// Step width of the simulated path, in milliseconds.
+    pub dt_ms: u64,
+    /// Price at t=0.
+    pub start: f64,
+}
+
+impl Default for OuParams {
+    fn default() -> Self {
+        OuParams {
+            mean: 1.0,
+            reversion: 0.6,
+            sigma: 0.55,
+            dt_ms: 250,
+            start: 1.0,
+        }
+    }
+}
+
+/// The discretized OU process (Euler–Maruyama), seeded and
+/// deterministic.
+pub struct OuProcess {
+    params: OuParams,
+    x: f64,
+    rng: Rng,
+}
+
+impl OuProcess {
+    pub fn new(params: OuParams, seed: u64) -> Self {
+        let x = params.start;
+        // Domain-separate from other consumers of the seed ("ou" tag).
+        let mut base = Rng::new(seed);
+        OuProcess { params, x, rng: base.fork(0x6f75) }
+    }
+
+    /// Current price.
+    pub fn price(&self) -> f64 {
+        self.x
+    }
+
+    /// Advance one `dt_ms` step and return the new price.
+    pub fn step(&mut self) -> f64 {
+        let dt = self.params.dt_ms as f64 / 1000.0;
+        let drift = self.params.reversion * (self.params.mean - self.x) * dt;
+        let shock = self.params.sigma * dt.sqrt() * self.rng.normal();
+        self.x += drift + shock;
+        self.x
+    }
+}
+
+/// Per-kind preemption thresholds: an instance of a kind is killed
+/// while the spot price sits above its threshold. Lower threshold ⇒
+/// preempted more often (a cheaper bid).
+#[derive(Debug, Clone)]
+pub struct KillThresholds {
+    pub worker: f64,
+    pub unit: f64,
+    pub stage: f64,
+}
+
+impl Default for KillThresholds {
+    fn default() -> Self {
+        // Workers are the cheapest bid (most churn); storage units the
+        // most protected.
+        KillThresholds { worker: 1.15, unit: 1.55, stage: 1.35 }
+    }
+}
+
+impl KillThresholds {
+    pub fn for_kind(&self, kind: ProcessKind) -> f64 {
+        match kind {
+            ProcessKind::Worker => self.worker,
+            ProcessKind::Unit => self.unit,
+            ProcessKind::Stage => self.stage,
+        }
+    }
+}
+
+/// One scheduled kill: at `at_ms` (relative to chaos-phase start) one
+/// live instance of `kind` receives SIGKILL. The spot price at the
+/// crossing rides along for reports.
+#[derive(Debug, Clone)]
+pub struct ChaosEvent {
+    pub at_ms: u64,
+    pub kind: ProcessKind,
+    pub price: f64,
+}
+
+impl ChaosEvent {
+    /// Stable label used in violation reports ("which event preceded
+    /// this check").
+    pub fn label(&self) -> String {
+        format!("kill-{}@{}ms", self.kind.name(), self.at_ms)
+    }
+}
+
+/// A generated schedule: kill events sorted by time over `horizon_ms`.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosSchedule {
+    pub events: Vec<ChaosEvent>,
+    pub horizon_ms: u64,
+}
+
+impl ChaosSchedule {
+    /// Simulate the price path and emit kill events at threshold
+    /// crossings. `min_gap_ms` rate-limits kills per kind so a long
+    /// excursion above a threshold doesn't machine-gun one population
+    /// (0 = a kill at every step above threshold).
+    pub fn generate(
+        seed: u64,
+        horizon_ms: u64,
+        params: &OuParams,
+        thresholds: &KillThresholds,
+        min_gap_ms: u64,
+    ) -> Self {
+        let mut ou = OuProcess::new(params.clone(), seed);
+        let mut events = Vec::new();
+        // Last kill time per kind, for the rate limit. `None` = never.
+        let mut last: [Option<u64>; 3] = [None; 3];
+        let mut t = params.dt_ms;
+        while t <= horizon_ms {
+            let price = ou.step();
+            for (i, kind) in ProcessKind::ALL.into_iter().enumerate() {
+                if price <= thresholds.for_kind(kind) {
+                    continue;
+                }
+                let ok_gap = match last[i] {
+                    None => true,
+                    Some(prev) => t - prev >= min_gap_ms.max(1),
+                };
+                if ok_gap {
+                    events.push(ChaosEvent { at_ms: t, kind, price });
+                    last[i] = Some(t);
+                }
+            }
+            t += params.dt_ms;
+        }
+        ChaosSchedule { events, horizon_ms }
+    }
+
+    /// Number of scheduled kills targeting `kind`.
+    pub fn kills_of(&self, kind: ProcessKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// Process kinds with at least one scheduled kill.
+    pub fn kinds_covered(&self) -> usize {
+        ProcessKind::ALL
+            .into_iter()
+            .filter(|&k| self.kills_of(k) > 0)
+            .count()
+    }
+
+    /// Pad the schedule (deterministically, no randomness) until it has
+    /// at least `min_total` events AND covers all three process kinds —
+    /// the smoke-run floor. Padded events are placed evenly across the
+    /// horizon and stamped with the kind's own threshold as the price
+    /// (the market price a real crossing would have had).
+    pub fn ensure_floor(
+        &mut self,
+        min_total: usize,
+        thresholds: &KillThresholds,
+    ) {
+        let mut i = 0usize;
+        while self.kinds_covered() < ProcessKind::ALL.len()
+            || self.events.len() < min_total
+        {
+            let kind = ProcessKind::ALL
+                .into_iter()
+                .find(|&k| self.kills_of(k) == 0)
+                .unwrap_or(ProcessKind::ALL[i % ProcessKind::ALL.len()]);
+            let slots = (min_total as u64).max(3) + 1;
+            let at_ms = ((i as u64 % slots) + 1) * self.horizon_ms / slots;
+            self.events.push(ChaosEvent {
+                at_ms: at_ms.max(1),
+                kind,
+                price: thresholds.for_kind(kind),
+            });
+            i += 1;
+        }
+        self.events.sort_by_key(|e| e.at_ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ou_reverts_to_mean_without_noise() {
+        // sigma = 0 makes the process a pure exponential decay toward
+        // the mean: the distance must shrink every step.
+        let params = OuParams {
+            mean: 1.0,
+            reversion: 0.8,
+            sigma: 0.0,
+            dt_ms: 250,
+            start: 5.0,
+        };
+        let mut ou = OuProcess::new(params, 42);
+        let mut dist = (ou.price() - 1.0).abs();
+        for _ in 0..40 {
+            ou.step();
+            let d = (ou.price() - 1.0).abs();
+            assert!(d < dist, "distance to mean must shrink: {d} >= {dist}");
+            dist = d;
+        }
+        assert!(dist < 0.01, "should be at the mean after 10s, got {dist}");
+    }
+
+    #[test]
+    fn ou_long_run_average_tracks_mean() {
+        let params = OuParams {
+            mean: 2.0,
+            reversion: 1.0,
+            sigma: 0.3,
+            dt_ms: 100,
+            start: 2.0,
+        };
+        let mut ou = OuProcess::new(params, 7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += ou.step();
+        }
+        let avg = sum / n as f64;
+        // Stationary mean is `mean`; stationary sd = sigma/sqrt(2k) ≈
+        // 0.21, so the sample average over 2000s is tight around 2.0.
+        assert!(
+            (avg - 2.0).abs() < 0.15,
+            "long-run average {avg} drifted from the OU mean 2.0"
+        );
+    }
+
+    #[test]
+    fn schedule_replays_deterministically_under_fixed_seed() {
+        let params = OuParams::default();
+        let thr = KillThresholds::default();
+        let a = ChaosSchedule::generate(1234, 60_000, &params, &thr, 500);
+        let b = ChaosSchedule::generate(1234, 60_000, &params, &thr, 500);
+        assert_eq!(a.events.len(), b.events.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.at_ms, y.at_ms);
+            assert_eq!(x.kind, y.kind);
+            assert!((x.price - y.price).abs() == 0.0);
+        }
+        let c = ChaosSchedule::generate(999, 60_000, &params, &thr, 500);
+        let same = a.events.len() == c.events.len()
+            && a.events
+                .iter()
+                .zip(&c.events)
+                .all(|(x, y)| x.at_ms == y.at_ms && x.kind == y.kind);
+        assert!(
+            !same || a.events.is_empty(),
+            "different seeds should give different schedules"
+        );
+    }
+
+    #[test]
+    fn kill_density_scales_monotonically_with_threshold() {
+        // Same seed ⇒ same price path (crossings consume no
+        // randomness), so a lower threshold sees a superset of the
+        // steps above it: kill count is monotone non-increasing in the
+        // threshold, and strictly more kills show up at the low end.
+        let params = OuParams::default();
+        let mut counts = Vec::new();
+        for thr in [0.8, 1.0, 1.2, 1.4, 1.8] {
+            let t = KillThresholds { worker: thr, unit: 99.0, stage: 99.0 };
+            let s = ChaosSchedule::generate(7, 120_000, &params, &t, 0);
+            counts.push(s.kills_of(ProcessKind::Worker));
+        }
+        for w in counts.windows(2) {
+            assert!(
+                w[0] >= w[1],
+                "kill density must not increase with threshold: {counts:?}"
+            );
+        }
+        assert!(
+            counts[0] > counts[counts.len() - 1],
+            "0.8 vs 1.8 thresholds should differ in kill count: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn ensure_floor_pads_to_count_and_coverage() {
+        let mut s = ChaosSchedule { events: vec![], horizon_ms: 9_000 };
+        s.ensure_floor(6, &KillThresholds::default());
+        assert!(s.events.len() >= 6);
+        assert_eq!(s.kinds_covered(), 3, "all three kinds represented");
+        assert!(s.events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+        assert!(s.events.iter().all(|e| e.at_ms >= 1
+            && e.at_ms <= s.horizon_ms));
+        // Already-rich schedules are left alone.
+        let before = s.events.len();
+        s.ensure_floor(3, &KillThresholds::default());
+        assert_eq!(s.events.len(), before);
+    }
+
+    #[test]
+    fn min_gap_rate_limits_each_kind() {
+        let params = OuParams {
+            // Start pinned far above every threshold with no noise: the
+            // price stays up a while, so only the gap limits kills.
+            mean: 5.0,
+            reversion: 0.0,
+            sigma: 0.0,
+            dt_ms: 100,
+            start: 5.0,
+        };
+        let thr = KillThresholds { worker: 1.0, unit: 1.0, stage: 1.0 };
+        let s = ChaosSchedule::generate(3, 1_000, &params, &thr, 400);
+        for kind in ProcessKind::ALL {
+            let times: Vec<u64> = s
+                .events
+                .iter()
+                .filter(|e| e.kind == kind)
+                .map(|e| e.at_ms)
+                .collect();
+            assert!(!times.is_empty());
+            for w in times.windows(2) {
+                assert!(w[1] - w[0] >= 400, "gap violated: {times:?}");
+            }
+        }
+    }
+}

@@ -33,8 +33,12 @@
 //! * [`telemetry`] — distributed telemetry plane: cross-process trace
 //!   spans, per-sample lineage, Chrome-trace export, leveled logging.
 //! * [`data`] — synthetic verifiable math workload + tokenizer.
+//! * [`chaos`] — preemption-trace-driven chaos harness: OU spot-price
+//!   kill schedules, a multi-process supervisor, and live invariant
+//!   checkers (lease conservation, exactly-once, weight convergence).
 
 pub mod benchkit;
+pub mod chaos;
 pub mod config;
 
 pub mod coordinator;

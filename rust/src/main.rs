@@ -20,6 +20,10 @@
 //!   frame codec, bypassing the coordinator socket (paper §3.2's
 //!   distributed storage made a real process boundary).
 //! * `simulate` — cluster-scale simulation (Fig. 10 / Table 1 modes).
+//! * `chaos`    — preemption chaos harness: seeded OU spot-price kill
+//!   schedule executed over a live multi-process run, with live
+//!   invariant checks (lease conservation, exactly-once, weight
+//!   convergence, throughput floor) and a `BENCH_chaos.json` report.
 //! * `plan`     — resource planner (paper §4.3).
 //! * `gantt`    — simulated execution timeline (Fig. 11).
 //! * `info`     — artifact bundle + PJRT platform info, or (with
@@ -36,6 +40,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use asyncflow::chaos::{run_chaos, ChaosOptions, ProcessKind};
 use asyncflow::config::{ConfigDoc, RlConfig};
 use asyncflow::coordinator::Trainer;
 use asyncflow::exec::Shutdown;
@@ -111,6 +116,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "stage" => cmd_stage(&flags),
         "storage-unit" => cmd_storage_unit(&flags),
         "simulate" => cmd_simulate(&flags),
+        "chaos" => cmd_chaos(&flags),
         "plan" => cmd_plan(&flags),
         "gantt" => cmd_gantt(&flags),
         "info" => cmd_info(&flags),
@@ -140,13 +146,14 @@ COMMANDS:
              --routing picks the engine-fleet policy over lease grants)
   rollout-worker --connect HOST:PORT [--name ID] [--mock] [--task T]
             [--chunk-tokens N] [--ttl-ms N] [--lease-rows N] [--seed N]
-            [--engine-tags a,b,c]
+            [--engine-tags a,b,c] [--relay]
             (elastic worker: lease prompts, stream chunked generations;
              --engine-tags labels this engine in the fleet registry,
-             e.g. fast-cheap or slow-accurate)
+             e.g. fast-cheap or slow-accurate; --relay routes payloads
+             through the coordinator so nothing strands on a dead unit)
   stage     --connect HOST:PORT --stage {reward|advantage|filter}
             [--task T] [--batch N] [--group-size G] [--survivors K]
-            [--name ID] [--lease-ttl-ms N]
+            [--name ID] [--lease-ttl-ms N] [--relay]
             (attach a pipeline stage to a live run over TCP; a new
              input task is registered mid-run and replays resident
              rows. Batches are consumed under a consumer lease, so
@@ -159,6 +166,16 @@ COMMANDS:
              unattached unit)
   simulate  --devices N --model {7b|32b} --mode {colocated|sequential|streaming|async|substep}
             --iterations N
+  chaos     [--smoke] [--seed N] [--workers N] [--units N] [--stages N]
+            [--horizon-ms N] [--warmup-ms N] [--min-events N]
+            [--respawn-delay-ms N] [--elastic] [--quiet] [--out FILE]
+            (preemption chaos harness: seeded OU spot-price kill
+             schedule over a live multi-process run with live invariant
+             checks — lease conservation, exactly-once, weight
+             convergence, throughput floor. Writes BENCH_chaos.json;
+             exits non-zero on any violation. --elastic recomputes the
+             worker population from observed throughput via the
+             planner)
   plan      --devices N --model {7b|32b}
   gantt     --devices N --model {7b|32b} --mode ... --width N
   info      [--connect HOST:PORT]  (live queue/unit/worker/fleet stats
@@ -311,7 +328,14 @@ fn cmd_rollout_worker(flags: &HashMap<String, String>) -> Result<()> {
     let seed =
         get_usize(flags, "seed", std::process::id() as usize)? as u64;
     let mut sampler = Sampler::new(1.0, 32, seed);
-    let client = ServiceClient::connect(addr.as_str())?;
+    // --relay: route payload bytes through the coordinator instead of
+    // writing directly to storage units. Slower, but nothing is ever
+    // stranded on a dead unit — the mode chaos runs use.
+    let client = if flags.contains_key("relay") {
+        ServiceClient::connect_relay(addr.as_str())?
+    } else {
+        ServiceClient::connect(addr.as_str())?
+    };
     log_info!(
         &name,
         "attached to {addr} (backend={}, chunk={} tokens, ttl={}ms)",
@@ -379,7 +403,11 @@ fn cmd_stage(flags: &HashMap<String, String>) -> Result<()> {
         .get("name")
         .cloned()
         .unwrap_or_else(|| format!("{which}-{}", std::process::id()));
-    let client = ServiceClient::connect(addr.as_str())?;
+    let client = if flags.contains_key("relay") {
+        ServiceClient::connect_relay(addr.as_str())?
+    } else {
+        ServiceClient::connect(addr.as_str())?
+    };
     log_info!(
         &name,
         "attached to {addr} (stage {which}, task {:?}, batch {}, \
@@ -473,6 +501,81 @@ fn cmd_storage_unit(flags: &HashMap<String, String>) -> Result<()> {
         client.push_telemetry(&proc);
     });
     server.join();
+    Ok(())
+}
+
+/// `asyncflow chaos`: preemption-trace-driven chaos harness. Generates
+/// a seeded Ornstein–Uhlenbeck spot-price kill schedule over rollout
+/// workers, storage units, and TCP stages; re-execs the full topology
+/// as child processes (relay mode); executes the schedule with SIGKILL;
+/// and checks lease conservation, exactly-once accounting, weight
+/// convergence, and the throughput floor live between events. Writes
+/// the machine-readable report to `BENCH_chaos.json` (CI gates on it)
+/// and exits non-zero on any violation.
+fn cmd_chaos(flags: &HashMap<String, String>) -> Result<()> {
+    let exe = std::env::current_exe()
+        .context("resolving the asyncflow binary for child processes")?;
+    let mut opts = if flags.contains_key("smoke") {
+        ChaosOptions::smoke(exe)
+    } else {
+        ChaosOptions::new(exe)
+    };
+    opts.seed = get_usize(flags, "seed", opts.seed as usize)? as u64;
+    opts.workers = get_usize(flags, "workers", opts.workers)?;
+    opts.units = get_usize(flags, "units", opts.units)?;
+    opts.stages = get_usize(flags, "stages", opts.stages)?;
+    opts.horizon_ms =
+        get_usize(flags, "horizon-ms", opts.horizon_ms as usize)? as u64;
+    opts.warmup_ms =
+        get_usize(flags, "warmup-ms", opts.warmup_ms as usize)? as u64;
+    opts.min_events = get_usize(flags, "min-events", opts.min_events)?;
+    opts.respawn_delay_ms = get_usize(
+        flags,
+        "respawn-delay-ms",
+        opts.respawn_delay_ms as usize,
+    )? as u64;
+    opts.elastic = flags.contains_key("elastic");
+    opts.quiet = flags.contains_key("quiet");
+    let report = run_chaos(&opts)?;
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_chaos.json".to_string());
+    std::fs::write(&out, report.to_json().to_string_pretty())
+        .with_context(|| format!("writing {out}"))?;
+    let p50 = report
+        .recovery_p50_ms()
+        .map_or_else(|| "-".into(), |v| format!("{v}ms"));
+    let p99 = report
+        .recovery_p99_ms()
+        .map_or_else(|| "-".into(), |v| format!("{v}ms"));
+    println!(
+        "[chaos] seed {}: {} kills ({} worker / {} unit / {} stage, \
+         {} skipped), recovery p50 {p50} p99 {p99}, throughput \
+         {:.1} -> {:.1} samples/s (ratio {:.2}), {}/{} rows trained, \
+         {} violations -> {out}",
+        report.seed,
+        report.kills.len(),
+        report.kills_of(ProcessKind::Worker),
+        report.kills_of(ProcessKind::Unit),
+        report.kills_of(ProcessKind::Stage),
+        report.events_skipped,
+        report.baseline_sps,
+        report.disturbed_sps,
+        report.floor_ratio,
+        report.rows_trained,
+        report.rows_fed,
+        report.violations.len()
+    );
+    for v in &report.violations {
+        log_warn!("chaos", "violation: {v}");
+    }
+    if !report.passed() {
+        bail!(
+            "chaos run tripped {} invariant violation(s)",
+            report.violations.len()
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,194 @@
+//! Bridge between the offline planner and a live run's `RlConfig`.
+//!
+//! The planner (§4.3) reasons about device splits and micro-batches; a
+//! live run is configured by [`RlConfig`] knobs (chunk size, lease TTL,
+//! worker count) plus fleet speed classes. The two drifted apart as each
+//! grew; this module pins them back together:
+//!
+//! * [`request_from_config`] / [`default_cost_model`] — derive a
+//!   [`PlanRequest`] from the live config so both sides plan over the
+//!   same workload shape.
+//! * [`recommend_workers`] — map the plan's rollout split back to a
+//!   rollout-worker population target, used by the chaos supervisor's
+//!   `--elastic` mode to recompute targets from observed throughput.
+//! * [`reconcile`] — consistency audit: does the cost model's predicted
+//!   chunk decode time fit inside the lease renew window (`ttl/3`),
+//!   including the slowest fleet speed class?
+
+use crate::config::RlConfig;
+use crate::fleet::SpeedClass;
+use crate::simulator::Mode;
+
+use super::cost_model::{CostModel, DeviceSpec, LlmSpec};
+use super::search::{plan, PlanRequest};
+
+/// Relative decode-throughput multiplier for a fleet speed class. The
+/// router treats classes as routing hints; the reconciler needs a
+/// number, and these match the coarse 1.5×/1×/0.5× spread the hedging
+/// heuristics assume.
+pub fn speed_factor(class: SpeedClass) -> f64 {
+    match class {
+        SpeedClass::Fast => 1.5,
+        SpeedClass::Standard => 1.0,
+        SpeedClass::Slow => 0.5,
+    }
+}
+
+/// Default hybrid cost model for live-bridge decisions (paper testbed:
+/// Ascend-910B-class devices, the 7B model).
+pub fn default_cost_model() -> CostModel {
+    CostModel::new(DeviceSpec::ascend_910b(), LlmSpec::qwen_7b())
+}
+
+/// Build a planner request from a live config. The device count is the
+/// caller's (a live run knows its fleet; the chaos supervisor maps one
+/// worker process to an 8-device instance). The global batch is kept
+/// micro-batch-feasible — rounded up to a multiple of 8 with a floor of
+/// 32 — so the search space is never empty.
+pub fn request_from_config(cfg: &RlConfig, devices: usize) -> PlanRequest {
+    let mut req = PlanRequest::new(devices);
+    req.mode = Mode::SeparatedAsync;
+    req.global_batch = cfg.global_batch.max(32).next_multiple_of(8);
+    req
+}
+
+/// Rollout-worker population target from the planner, for elastic
+/// supervisors. `observed_sps <= 0` means the run has produced nothing
+/// yet — keep the current population rather than resizing on no signal.
+/// Otherwise run the device-split search and translate the winning
+/// rollout fraction into instance count, clamped to `[1, 2*current+2]`
+/// so one recomputation never more than roughly doubles the fleet.
+pub fn recommend_workers(
+    cfg: &RlConfig,
+    observed_sps: f64,
+    current: usize,
+) -> usize {
+    if observed_sps <= 0.0 || current == 0 {
+        return current.max(1);
+    }
+    let devices = (cfg.rollout_workers * 8).max(32);
+    let req = request_from_config(cfg, devices);
+    let cost = default_cost_model();
+    let p = plan(&req, &cost);
+    let implied = (devices as f64 * p.best.rollout_fraction
+        / p.best.rollout_instance_devices as f64)
+        .round() as usize;
+    implied.clamp(1, current * 2 + 2)
+}
+
+/// Audit a live config against the cost model. Returns human-readable
+/// drift warnings (empty = consistent). The central check: a worker
+/// renews its lease every `ttl/3`, so one chunk's decode time — at the
+/// engine's real batch, scaled by the slowest speed class in play —
+/// must fit inside that window or crashed-looking workers get their
+/// rows requeued mid-decode.
+pub fn reconcile(
+    cfg: &RlConfig,
+    cost: &CostModel,
+    engine_batch: usize,
+) -> Vec<String> {
+    let mut warnings = Vec::new();
+    let chunk_ms = cost.decode_time(1, engine_batch, cfg.chunk_tokens)
+        * 1000.0;
+    let renew_window_ms = cfg.lease_ttl_ms as f64 / 3.0;
+    if chunk_ms > renew_window_ms {
+        warnings.push(format!(
+            "chunk_tokens={} decodes in ~{:.0}ms (batch {}), longer \
+             than the lease renew window lease_ttl_ms/3 = {:.0}ms — \
+             raise lease_ttl_ms or shrink chunk_tokens",
+            cfg.chunk_tokens, chunk_ms, engine_batch, renew_window_ms
+        ));
+    }
+    let slow_ms = chunk_ms / speed_factor(SpeedClass::Slow);
+    if chunk_ms <= renew_window_ms && slow_ms > renew_window_ms {
+        warnings.push(format!(
+            "slow-class engines decode a chunk in ~{slow_ms:.0}ms, \
+             missing the {renew_window_ms:.0}ms renew window — their \
+             leases would expire mid-chunk under fallback/hedge routing"
+        ));
+    }
+    if cfg.global_batch % engine_batch != 0 {
+        warnings.push(format!(
+            "global_batch {} is not a multiple of engine batch {} — \
+             the planner's micro-batch grid cannot cover it",
+            cfg.global_batch, engine_batch
+        ));
+    }
+    warnings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_reconciles_cleanly() {
+        let w = reconcile(&RlConfig::default(), &default_cost_model(), 8);
+        assert!(w.is_empty(), "unexpected drift warnings: {w:?}");
+    }
+
+    #[test]
+    fn short_ttl_trips_renew_window_warning() {
+        let cfg = RlConfig { lease_ttl_ms: 100, ..Default::default() };
+        let w = reconcile(&cfg, &default_cost_model(), 8);
+        assert!(!w.is_empty());
+        assert!(w[0].contains("renew window"), "got: {}", w[0]);
+    }
+
+    #[test]
+    fn slow_class_warns_before_standard_class() {
+        // chunk ≈ 76ms at batch 8 / 8 tokens; renew window 100ms fits
+        // standard (76 <= 100) but not slow (152 > 100).
+        let cfg = RlConfig { lease_ttl_ms: 300, ..Default::default() };
+        let w = reconcile(&cfg, &default_cost_model(), 8);
+        assert_eq!(w.len(), 1, "got: {w:?}");
+        assert!(w[0].contains("slow-class"), "got: {}", w[0]);
+    }
+
+    #[test]
+    fn misaligned_global_batch_flagged() {
+        let cfg = RlConfig { global_batch: 36, ..Default::default() };
+        let w = reconcile(&cfg, &default_cost_model(), 8);
+        assert!(w.iter().any(|m| m.contains("multiple of engine batch")));
+    }
+
+    #[test]
+    fn plan_request_mirrors_config_and_plans() {
+        // Plan-vs-live smoke test: the derived request must always be
+        // feasible for the search (non-empty candidate set) and carry
+        // the config's batch rounded to the micro-batch grid.
+        let cfg = RlConfig { global_batch: 40, ..Default::default() };
+        let req = request_from_config(&cfg, 64);
+        assert_eq!(req.devices, 64);
+        assert_eq!(req.global_batch, 40); // already a multiple of 8
+        let p = plan(&req, &default_cost_model());
+        assert!(p.best.throughput_samples_per_s > 0.0);
+        assert_eq!(req.global_batch % p.best.micro_batch, 0);
+    }
+
+    #[test]
+    fn recommend_workers_gates_and_clamps() {
+        let cfg = RlConfig::default();
+        // No throughput signal: hold the current population.
+        assert_eq!(recommend_workers(&cfg, 0.0, 3), 3);
+        assert_eq!(recommend_workers(&cfg, -1.0, 2), 2);
+        assert_eq!(recommend_workers(&cfg, 0.0, 0), 1);
+        // With signal: positive, clamped, deterministic.
+        let a = recommend_workers(&cfg, 12.0, 2);
+        let b = recommend_workers(&cfg, 12.0, 2);
+        assert_eq!(a, b, "planner-backed target must be deterministic");
+        assert!((1..=6).contains(&a), "target {a} outside [1, 2*2+2]");
+    }
+
+    #[test]
+    fn speed_factors_are_ordered() {
+        assert!(
+            speed_factor(SpeedClass::Fast)
+                > speed_factor(SpeedClass::Standard)
+        );
+        assert!(
+            speed_factor(SpeedClass::Standard)
+                > speed_factor(SpeedClass::Slow)
+        );
+    }
+}

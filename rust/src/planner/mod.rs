@@ -3,9 +3,14 @@
 //! sizes, and micro-batch sizes minimizing end-to-end iteration time.
 
 pub mod cost_model;
+pub mod live;
 pub mod profile;
 pub mod search;
 
 pub use cost_model::{CostModel, DeviceSpec, LlmSpec, MfuProfile};
+pub use live::{
+    default_cost_model, recommend_workers, reconcile,
+    request_from_config, speed_factor,
+};
 pub use profile::{calibrate, Calibration, ProfileReport};
 pub use search::{plan, Plan, PlanCandidate, PlanRequest};

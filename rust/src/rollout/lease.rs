@@ -24,7 +24,9 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::fleet::EngineSpec;
-use crate::transfer_queue::{GlobalIndex, LeaseRegistry, RevokedLease};
+use crate::transfer_queue::{
+    GlobalIndex, LeaseAccounting, LeaseRegistry, RevokedLease,
+};
 
 use super::manager::ChunkRow;
 
@@ -311,6 +313,13 @@ impl LeaseTable {
     /// one prompt stream, and the per-task leased stat).
     pub fn in_flight_for(&self, task: &str) -> usize {
         self.registry.in_flight_for(task)
+    }
+
+    /// Per-task cumulative lease books (see
+    /// [`crate::transfer_queue::LeaseAccounting`]), snapshotted under
+    /// one registry lock acquisition.
+    pub fn accounting(&self) -> HashMap<String, LeaseAccounting> {
+        self.registry.accounting()
     }
 
     /// Per-worker snapshot, sorted by worker name.

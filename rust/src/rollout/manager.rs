@@ -684,6 +684,15 @@ impl RolloutManager {
         self.table.in_flight_for(task)
     }
 
+    /// Per-task cumulative lease books for rollout leases (see
+    /// [`crate::transfer_queue::LeaseAccounting`]).
+    pub fn accounting(
+        &self,
+    ) -> std::collections::HashMap<String, crate::transfer_queue::LeaseAccounting>
+    {
+        self.table.accounting()
+    }
+
     /// Requeue expired leases now — the explicit form of the sweep
     /// every verb performs, for snapshot paths (`stats`) that read
     /// several per-task values and should pay for one sweep, not one

@@ -1016,24 +1016,42 @@ impl Session {
         let st = self.state()?;
         Self::sweep_consumers(&st);
         st.rollout.sweep_now();
+        // Cumulative lease books, merged across the rollout and
+        // consumer registries (each snapshot is atomic under its own
+        // registry lock, so each side's conservation equation holds
+        // exactly; the merged books inherit it).
+        let mut books = st.rollout.accounting();
+        for (task, acct) in st.consumers.accounting() {
+            books.entry(task).or_default().merge(&acct);
+        }
         let tasks = st
             .tq
             .controllers()
             .into_iter()
-            .map(|c| TaskStats {
-                name: c.task.clone(),
-                ready: c.ready_depth(),
-                consumed: c.consumed_count(),
-                policy: c.policy_name().to_string(),
-                // In-flight rows under either lease mechanism: rollout
-                // workers mid-decode plus get_batch consumers that have
-                // not acked yet. The slice of `consumed` that is
-                // neither ready nor durably processed — without it the
-                // occupancy numbers don't add up during rollout.
-                leased: st.rollout.in_flight_for(&c.task)
-                    + st.consumers.in_flight_for(&c.task),
-                waiting_consumers: c.waiting_consumers(),
-                oldest_ready_age_ms: c.oldest_ready_age_ms(),
+            .map(|c| {
+                let acct = books.get(&c.task).copied().unwrap_or_default();
+                TaskStats {
+                    name: c.task.clone(),
+                    ready: c.ready_depth(),
+                    consumed: c.consumed_count(),
+                    policy: c.policy_name().to_string(),
+                    // In-flight rows under either lease mechanism:
+                    // rollout workers mid-decode plus get_batch
+                    // consumers that have not acked yet. The slice of
+                    // `consumed` that is neither ready nor durably
+                    // processed — without it the occupancy numbers
+                    // don't add up during rollout. Reported from the
+                    // same accounting snapshot as the cumulative books
+                    // so the conservation equation holds on every
+                    // stats reply.
+                    leased: acct.in_flight_rows as usize,
+                    waiting_consumers: c.waiting_consumers(),
+                    oldest_ready_age_ms: c.oldest_ready_age_ms(),
+                    lease_granted_rows: acct.granted_rows,
+                    lease_done_rows: acct.done_rows,
+                    lease_acked_rows: acct.acked_rows,
+                    lease_requeued_rows: acct.requeued_rows,
+                }
             })
             .collect();
         let units = st

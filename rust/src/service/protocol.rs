@@ -314,6 +314,18 @@ pub struct TaskStats {
     pub waiting_consumers: usize,
     /// Age of the oldest ready-but-unconsumed row (`None` = none ready).
     pub oldest_ready_age_ms: Option<u64>,
+    /// Cumulative lease books for this task, merged across the rollout
+    /// and consumer lease registries. The chaos harness asserts the
+    /// conservation law `granted == done + acked + requeued + leased`
+    /// on every poll; old servers simply elide the fields (decoded as
+    /// zeros, and a checker treats all-zero books as "not reported").
+    pub lease_granted_rows: u64,
+    /// Rows marked done by their lease owners (outputs committed).
+    pub lease_done_rows: u64,
+    /// Undone rows retired wholesale by explicit `ack_batch`.
+    pub lease_acked_rows: u64,
+    /// Undone rows handed back for requeue (revocation or TTL sweep).
+    pub lease_requeued_rows: u64,
 }
 
 /// Per-storage-unit occupancy, traffic, and placement (load-imbalance
@@ -2114,6 +2126,35 @@ impl ServiceResponse {
                                                 Json::Num(age as f64),
                                             ));
                                         }
+                                        // Lease books: elided when the
+                                        // task has never seen a lease,
+                                        // so old readers and quiet
+                                        // tasks pay nothing.
+                                        if t.lease_granted_rows > 0 {
+                                            for (k, v) in [
+                                                (
+                                                    "lease_granted_rows",
+                                                    t.lease_granted_rows,
+                                                ),
+                                                (
+                                                    "lease_done_rows",
+                                                    t.lease_done_rows,
+                                                ),
+                                                (
+                                                    "lease_acked_rows",
+                                                    t.lease_acked_rows,
+                                                ),
+                                                (
+                                                    "lease_requeued_rows",
+                                                    t.lease_requeued_rows,
+                                                ),
+                                            ] {
+                                                pairs.push((
+                                                    k,
+                                                    Json::Num(v as f64),
+                                                ));
+                                            }
+                                        }
                                         Json::obj(pairs)
                                     })
                                     .collect(),
@@ -2378,6 +2419,15 @@ impl ServiceResponse {
                         None => 0,
                         Some(_) => field_usize(t, "leased")?,
                     };
+                    // Lease books are optional on decode (older peers
+                    // and never-leased tasks elide them; zeros mean
+                    // "not reported").
+                    let opt_u64 = |key: &str| -> Result<u64> {
+                        match t.get(key) {
+                            None => Ok(0),
+                            Some(_) => field_u64(t, key),
+                        }
+                    };
                     Ok(TaskStats {
                         name: field_str(t, "name")?,
                         ready: field_usize(t, "ready")?,
@@ -2386,6 +2436,12 @@ impl ServiceResponse {
                         leased,
                         waiting_consumers,
                         oldest_ready_age_ms,
+                        lease_granted_rows: opt_u64("lease_granted_rows")?,
+                        lease_done_rows: opt_u64("lease_done_rows")?,
+                        lease_acked_rows: opt_u64("lease_acked_rows")?,
+                        lease_requeued_rows: opt_u64(
+                            "lease_requeued_rows",
+                        )?,
                     })
                 })
                 .collect::<Result<_>>()?;
@@ -2744,6 +2800,10 @@ mod tests {
                     leased: 5,
                     waiting_consumers: 2,
                     oldest_ready_age_ms: Some(1234),
+                    lease_granted_rows: 14,
+                    lease_done_rows: 6,
+                    lease_acked_rows: 2,
+                    lease_requeued_rows: 1,
                 },
                 TaskStats {
                     name: "train".into(),
@@ -2753,6 +2813,10 @@ mod tests {
                     leased: 0,
                     waiting_consumers: 1,
                     oldest_ready_age_ms: None,
+                    lease_granted_rows: 0,
+                    lease_done_rows: 0,
+                    lease_acked_rows: 0,
+                    lease_requeued_rows: 0,
                 },
             ],
             units: vec![
@@ -3376,6 +3440,52 @@ mod tests {
             }
             _ => panic!("wrong variant"),
         }
+    }
+
+    #[test]
+    fn task_stats_lease_books_are_optional_on_decode() {
+        // An older peer's task entry without the lease-accounting
+        // fields decodes to all-zero books ("not reported"), and a
+        // never-leased task elides them on encode.
+        let line = "{\"ok\":true,\"stats\":{\"tasks\":[{\
+                    \"name\":\"rollout\",\"ready\":1,\"consumed\":2,\
+                    \"policy\":\"fcfs\"}],\"resident_rows\":1,\
+                    \"param_version\":0,\"closed\":false}}";
+        match ServiceResponse::parse_line(line).unwrap() {
+            ServiceResponse::Stats(s) => {
+                assert_eq!(s.tasks[0].lease_granted_rows, 0);
+                assert_eq!(s.tasks[0].lease_done_rows, 0);
+                assert_eq!(s.tasks[0].lease_acked_rows, 0);
+                assert_eq!(s.tasks[0].lease_requeued_rows, 0);
+            }
+            _ => panic!("wrong variant"),
+        }
+        let quiet = ServiceResponse::Stats(ServiceStats {
+            tasks: vec![TaskStats {
+                name: "idle".into(),
+                ready: 0,
+                consumed: 0,
+                policy: "fcfs".into(),
+                leased: 0,
+                waiting_consumers: 0,
+                oldest_ready_age_ms: None,
+                lease_granted_rows: 0,
+                lease_done_rows: 0,
+                lease_acked_rows: 0,
+                lease_requeued_rows: 0,
+            }],
+            units: vec![],
+            resident_rows: 0,
+            param_version: 0,
+            closed: false,
+            weights: None,
+            control: None,
+            fleet: None,
+        });
+        assert!(
+            !quiet.to_line().unwrap().contains("lease_granted_rows"),
+            "never-leased tasks must elide the books on the wire"
+        );
     }
 
     #[test]

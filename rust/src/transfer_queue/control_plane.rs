@@ -505,9 +505,65 @@ impl<S> LeaseEntry<S> {
     }
 }
 
+/// Cumulative per-task lease-row accounting, maintained under the
+/// registry lock so the books can never be caught mid-update. The
+/// conservation law the chaos harness checks is
+///
+/// ```text
+/// granted_rows == done_rows + acked_rows + requeued_rows + in_flight
+/// ```
+///
+/// Every row enters exactly one lease grant (`granted_rows`) and leaves
+/// it exactly one way: marked done through
+/// [`LeaseRegistry::with_rows`] (`done_rows`), retired undone by an
+/// explicit [`LeaseRegistry::ack`] (`acked_rows` — the owner declared
+/// its outputs durable), or handed back for requeue on revocation or
+/// TTL expiry (`requeued_rows`). Whatever has entered but not yet left
+/// is `in_flight`. Hedged duplicates keep the books balanced because a
+/// duplicated row is granted twice and exits twice (once as done on the
+/// winner, once as done-discard or requeue on the loser).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LeaseAccounting {
+    /// Rows ever granted under a lease for this task.
+    pub granted_rows: u64,
+    /// Rows marked done by their owner (outputs committed).
+    pub done_rows: u64,
+    /// Undone rows retired wholesale by an explicit `ack`.
+    pub acked_rows: u64,
+    /// Undone rows handed back for requeue (revocation or TTL sweep).
+    pub requeued_rows: u64,
+    /// Rows currently leased and not yet done (point-in-time, not
+    /// cumulative) — completes the conservation equation.
+    pub in_flight_rows: u64,
+}
+
+impl LeaseAccounting {
+    /// `granted - (done + acked + requeued + in_flight)`; zero when the
+    /// books balance, nonzero when a row leaked or was double-counted.
+    pub fn imbalance(&self) -> i64 {
+        self.granted_rows as i64
+            - (self.done_rows
+                + self.acked_rows
+                + self.requeued_rows
+                + self.in_flight_rows) as i64
+    }
+
+    /// Merge another task's (or another registry's) books into this one.
+    pub fn merge(&mut self, other: &LeaseAccounting) {
+        self.granted_rows += other.granted_rows;
+        self.done_rows += other.done_rows;
+        self.acked_rows += other.acked_rows;
+        self.requeued_rows += other.requeued_rows;
+        self.in_flight_rows += other.in_flight_rows;
+    }
+}
+
 struct RegistryInner<S> {
     next_id: u64,
     leases: HashMap<LeaseId, LeaseEntry<S>>,
+    /// Cumulative books per task (the `in_flight_rows` field is left
+    /// zero here and filled in at snapshot time).
+    accounting: HashMap<String, LeaseAccounting>,
 }
 
 /// Thread-safe consumer-lease registry — the crash-safety bookkeeping
@@ -538,6 +594,7 @@ impl<S> Default for LeaseRegistry<S> {
             inner: Mutex::new(RegistryInner {
                 next_id: 0,
                 leases: HashMap::new(),
+                accounting: HashMap::new(),
             }),
             expiry_hook: Mutex::new(None),
         }
@@ -585,6 +642,8 @@ impl<S> LeaseRegistry<S> {
             let mut g = self.inner.lock().unwrap();
             g.next_id += 1;
             let id = g.next_id;
+            g.accounting.entry(task.to_string()).or_default().granted_rows +=
+                indices.len() as u64;
             let rows = indices
                 .iter()
                 .map(|idx| (*idx, LeaseRow { state: init(), done: false }))
@@ -642,8 +701,16 @@ impl<S> LeaseRegistry<S> {
         };
         lease.expires_at = Instant::now() + lease.ttl;
         let owner = lease.owner.clone();
+        let task = lease.task.clone();
+        let done_before = lease.rows.values().filter(|r| r.done).count();
         let out = f(&owner, &mut lease.rows)?;
-        if lease.rows.values().all(|r| r.done) {
+        let done_after = lease.rows.values().filter(|r| r.done).count();
+        let retire = lease.rows.values().all(|r| r.done);
+        if done_after > done_before {
+            g.accounting.entry(task).or_default().done_rows +=
+                (done_after - done_before) as u64;
+        }
+        if retire {
             g.leases.remove(&id);
         }
         Ok(out)
@@ -661,9 +728,12 @@ impl<S> LeaseRegistry<S> {
                  requeued"
             );
         };
+        let undone = lease.undone();
+        g.accounting.entry(lease.task.clone()).or_default().acked_rows +=
+            undone.len() as u64;
         Ok(RevokedLease {
             id,
-            rows: lease.undone(),
+            rows: undone,
             owner: lease.owner,
             task: lease.task,
         })
@@ -677,9 +747,12 @@ impl<S> LeaseRegistry<S> {
     pub fn revoke(&self, id: LeaseId) -> Option<RevokedLease> {
         let mut g = self.inner.lock().unwrap();
         let lease = g.leases.remove(&id)?;
+        let undone = lease.undone();
+        g.accounting.entry(lease.task.clone()).or_default().requeued_rows +=
+            undone.len() as u64;
         Some(RevokedLease {
             id,
-            rows: lease.undone(),
+            rows: undone,
             owner: lease.owner,
             task: lease.task,
         })
@@ -701,9 +774,14 @@ impl<S> LeaseRegistry<S> {
         let mut out = Vec::new();
         for id in expired {
             let lease = g.leases.remove(&id).unwrap();
+            let undone = lease.undone();
+            g.accounting
+                .entry(lease.task.clone())
+                .or_default()
+                .requeued_rows += undone.len() as u64;
             let revoked = RevokedLease {
                 id,
-                rows: lease.undone(),
+                rows: undone,
                 owner: lease.owner,
                 task: lease.task,
             };
@@ -751,6 +829,22 @@ impl<S> LeaseRegistry<S> {
             .filter(|l| l.task == task)
             .map(LeaseEntry::in_flight)
             .sum()
+    }
+
+    /// Per-task cumulative lease books with `in_flight_rows` filled in,
+    /// all read under a single lock acquisition — so the conservation
+    /// equation ([`LeaseAccounting::imbalance`]) holds exactly on the
+    /// returned snapshot, never "almost, modulo a racing grant".
+    pub fn accounting(&self) -> HashMap<String, LeaseAccounting> {
+        let g = self.inner.lock().unwrap();
+        let mut out = g.accounting.clone();
+        for lease in g.leases.values() {
+            // A task with live leases always has a books entry (grants
+            // create it), but be defensive.
+            out.entry(lease.task.clone()).or_default().in_flight_rows +=
+                lease.in_flight() as u64;
+        }
+        out
     }
 
     /// Owners with at least one live lease.

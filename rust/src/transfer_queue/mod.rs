@@ -32,7 +32,7 @@ use anyhow::{bail, Result};
 pub use client::{Batch, BatchPoll, StreamDataLoader};
 pub use column::{Column, GlobalIndex, Value};
 pub use control_plane::{
-    BatchMeta, Controller, LeaseId, LeaseRegistry, LeaseRow,
+    BatchMeta, Controller, LeaseAccounting, LeaseId, LeaseRegistry, LeaseRow,
     RequestOutcome, RevokedLease, WakeFn,
 };
 pub use data_plane::{DataPlane, StorageUnit, UnitView, WriteNotification};

@@ -1,0 +1,124 @@
+//! End-to-end chaos harness runs against the real `asyncflow` binary.
+//!
+//! These are the PR's headline tests: a short seeded chaos run with
+//! kills across all three process kinds must finish with zero invariant
+//! violations and every fed row accounted, and a targeted TTL-edge kill
+//! (a worker SIGKILLed inside its lease renew window) must requeue and
+//! retrain its rows without loss or duplication.
+//!
+//! The children are re-exec'd from `CARGO_BIN_EXE_asyncflow`, so these
+//! tests exercise the actual CLI surface (`rollout-worker --relay`,
+//! `storage-unit`, `stage --relay`) over real sockets and real SIGKILL.
+
+use std::path::PathBuf;
+
+use asyncflow::chaos::{
+    run_chaos, ChaosEvent, ChaosOptions, ChaosSchedule, ProcessKind,
+};
+
+fn exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_asyncflow"))
+}
+
+/// The smoke run CI gates on: a seeded schedule with at least six kill
+/// events covering workers, storage units, and stages, zero violations,
+/// and closed books (every fed row trained exactly once).
+#[test]
+fn seeded_chaos_run_passes_all_invariants() {
+    let opts = ChaosOptions::smoke(exe());
+    let report = run_chaos(&opts).expect("chaos run should complete");
+
+    for v in &report.violations {
+        eprintln!("violation: {v}");
+    }
+    assert!(
+        report.passed(),
+        "{} invariant violation(s)",
+        report.violations.len()
+    );
+    assert!(
+        report.kills.len() + report.events_skipped >= 8,
+        "schedule floor: {} executed + {} skipped",
+        report.kills.len(),
+        report.events_skipped
+    );
+    assert!(
+        report.kills.len() >= 6,
+        "too few kills executed: {} (skipped {})",
+        report.kills.len(),
+        report.events_skipped
+    );
+    for kind in ProcessKind::ALL {
+        assert!(
+            report.kills_of(kind) >= 1,
+            "no {} kill executed (schedule covers all kinds)",
+            kind.name()
+        );
+    }
+    // Closed books: the drain ran to completion and the exactly-once
+    // ledger saw every fed row (check_complete would otherwise have
+    // tripped, but assert the headline numbers directly too).
+    assert!(report.rows_fed > 0, "feeder produced nothing");
+    assert_eq!(
+        report.rows_trained, report.rows_fed,
+        "rows lost or duplicated across kills"
+    );
+    assert!(report.weight_publishes > 0, "publisher never published");
+    assert!(
+        report.baseline_sps > 0.0,
+        "undisturbed warmup produced no throughput baseline"
+    );
+}
+
+/// TTL-edge case: SIGKILL a worker moments after the chaos phase
+/// starts, while it holds fresh leases inside its renew window
+/// (renewals happen every `ttl/3`). The lease sweeper must requeue the
+/// dead worker's rows after the TTL, a surviving or respawned worker
+/// must inherit them, and the books must still close — no lost rows, no
+/// double-trains, no conservation gap.
+#[test]
+fn worker_killed_inside_renew_window_loses_nothing() {
+    let mut opts = ChaosOptions::new(exe());
+    opts.seed = 11;
+    opts.workers = 2;
+    opts.units = 1;
+    opts.stages = 1;
+    opts.ttl_ms = 900; // renew window = 300ms; kill lands inside it
+    opts.warmup_ms = 2_000;
+    opts.drain_ms = 20_000;
+    opts.schedule = Some(ChaosSchedule {
+        events: vec![
+            ChaosEvent {
+                at_ms: 150,
+                kind: ProcessKind::Worker,
+                price: 2.0,
+            },
+            // A second kill after the first replacement settles, for a
+            // requeue-then-requeue-again exercise on the same task.
+            ChaosEvent {
+                at_ms: 2_500,
+                kind: ProcessKind::Worker,
+                price: 2.0,
+            },
+        ],
+        horizon_ms: 4_000,
+    });
+    let report = run_chaos(&opts).expect("chaos run should complete");
+
+    for v in &report.violations {
+        eprintln!("violation: {v}");
+    }
+    assert!(
+        report.passed(),
+        "{} invariant violation(s)",
+        report.violations.len()
+    );
+    assert_eq!(report.kills_of(ProcessKind::Worker), 2);
+    assert_eq!(report.kills_of(ProcessKind::Unit), 0);
+    assert_eq!(report.kills_of(ProcessKind::Stage), 0);
+    assert!(report.rows_fed > 0);
+    assert_eq!(
+        report.rows_trained, report.rows_fed,
+        "TTL requeue lost or duplicated rows"
+    );
+}
